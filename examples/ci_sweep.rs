@@ -1,0 +1,85 @@
+//! Decision-boundary sweep — an ASCII rendering of the paper's Fig. 2b:
+//! for each (input length N, network RTT) cell, which device does C-NMT
+//! pick? Shows the Edge Region / Cloud Region split and how it moves
+//! with connection quality, per model.
+//!
+//! ```sh
+//! cargo run --release --offline --example ci_sweep -- [--pair en_zh]
+//! ```
+
+use cnmt::coordinator::{PolicyKind, RouterBuilder};
+use cnmt::corpus::LangPair;
+use cnmt::devices::{Calibration, DeviceKind};
+use cnmt::predictor::N2mRegressor;
+use cnmt::util::Args;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let pair_id = args.str("pair", "");
+    args.reject_unknown()?;
+
+    let cal = Calibration::default_paper();
+    let pairs: Vec<LangPair> = if pair_id.is_empty() {
+        LangPair::ALL.to_vec()
+    } else {
+        vec![LangPair::from_id(&pair_id).ok_or("unknown pair")?]
+    };
+
+    for pair in pairs {
+        let model = pair.model_name();
+        let texe_e = cal.get(DeviceKind::Edge, model)?.texe;
+        let texe_c = cal.get(DeviceKind::Cloud, model)?.texe;
+        let p = pair.params();
+        let n2m = N2mRegressor::from_coeffs(p.gamma, p.delta);
+
+        println!("\n=== {} ({}) — '.' = edge, '#' = cloud ===", pair.id(), model);
+        println!("gamma={:.2}: M ~ {:.2}N{:+.2}", p.gamma, p.gamma, p.delta);
+        print!("{:>8} |", "RTT\\N");
+        for n in (2..=62).step_by(4) {
+            print!("{n:>3}");
+        }
+        println!();
+        println!("{}", "-".repeat(8 + 2 + 16 * 3));
+        for rtt_ms in [0, 10, 20, 40, 60, 80, 120, 160, 240, 320] {
+            let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+                .texe(texe_e, texe_c)
+                .n2m(n2m)
+                .ttx(1.0, rtt_ms as f64 / 1e3)
+                .build()?;
+            router.observe_ttx(0.0, rtt_ms as f64 / 1e3);
+            print!("{rtt_ms:>5} ms |");
+            for n in (2..=62).step_by(4) {
+                let d = router.decide(n);
+                print!(
+                    "{:>3}",
+                    if d.device == DeviceKind::Edge { "." } else { "#" }
+                );
+            }
+            println!();
+        }
+        // Find the crossover at two reference RTTs (the CP means).
+        for rtt_ms in [95.0, 45.0] {
+            let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+                .texe(texe_e, texe_c)
+                .n2m(n2m)
+                .ttx(1.0, rtt_ms / 1e3)
+                .build()?;
+            router.observe_ttx(0.0, rtt_ms / 1e3);
+            let crossover = (1..=62).find(|&n| {
+                router.decide(n).device == DeviceKind::Cloud
+            });
+            match crossover {
+                Some(n) => println!(
+                    "at {rtt_ms:.0} ms RTT: cloud region starts at N = {n}"
+                ),
+                None => println!("at {rtt_ms:.0} ms RTT: pure edge region"),
+            }
+        }
+    }
+    println!(
+        "\nReading: longer inputs and faster networks push requests to the \
+         cloud;\nhigher RTT expands the edge region — exactly the tradeoff \
+         of paper Fig. 2b."
+    );
+    Ok(())
+}

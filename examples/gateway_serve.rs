@@ -1,0 +1,150 @@
+//! End-to-end serving driver (DESIGN.md §9.5): a real gateway serving a
+//! batch of translation requests through the full stack —
+//!
+//!   corpus request stream → C-NMT router (eq. 1/2) → edge/cloud device
+//!   actors, each executing the real AOT artifacts via PJRT → latency /
+//!   throughput report.
+//!
+//! The edge/cloud physics of the paper's testbed are emulated with an
+//! `edge_slowdown` stretch and a replayed RTT trace (DESIGN.md §4); the
+//! router is characterised from *measured* runs at startup, exactly like
+//! `cnmt calibrate`.
+//!
+//! ```sh
+//! make artifacts
+//! cargo run --release --offline --example gateway_serve -- \
+//!     [--model gru_fr_en] [--requests 60] [--edge-slowdown 4] [--rtt-ms 12]
+//! ```
+
+use std::path::PathBuf;
+
+use cnmt::coordinator::gateway::{Gateway, GatewayConfig};
+use cnmt::coordinator::{PolicyKind, RouterBuilder};
+use cnmt::corpus::{CorpusGenerator, LangPair, PrefilterRules};
+use cnmt::devices::DeviceKind;
+use cnmt::net::RttTrace;
+use cnmt::predictor::{N2mRegressor, TexeModel};
+use cnmt::runtime::{Seq2SeqEngine, TranslateOptions};
+use cnmt::util::{Args, Rng};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let model = args.str("model", "gru_fr_en");
+    let n_requests = args.usize("requests", 60)?;
+    let edge_slowdown = args.f64("edge-slowdown", 4.0)?;
+    // Default RTT chosen so the decision boundary falls inside the corpus
+    // length range given the x4 edge handicap (edge wins short requests,
+    // cloud wins long ones); lower it and everything offloads.
+    let rtt_ms = args.f64("rtt-ms", 35.0)?;
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    args.reject_unknown()?;
+
+    let pair = LangPair::from_id(
+        model.trim_start_matches(|c: char| c.is_alphanumeric() == false)
+            .splitn(2, '_')
+            .nth(1)
+            .unwrap_or("fr_en"),
+    )
+    .unwrap_or(LangPair::FrEn);
+
+    // ---- offline phase: measured characterisation (mini `calibrate`) --
+    eprintln!("[1/3] measuring T_exe on the local runtime ({model})...");
+    let engine = Seq2SeqEngine::load(&artifacts, &model)?;
+    let mut rng = Rng::new(42);
+    let mut samples = Vec::new();
+    for _ in 0..2 {
+        engine.translate(&[7u16; 8], TranslateOptions { force_steps: Some(4), ..Default::default() })?;
+    }
+    for _ in 0..24 {
+        let n = 2 + rng.usize(58);
+        let m = 2 + rng.usize(58);
+        let src: Vec<u16> = (0..n).map(|_| 3 + rng.usize(4093) as u16).collect();
+        let tr = engine.translate(
+            &src,
+            TranslateOptions { force_steps: Some(m), ..Default::default() },
+        )?;
+        samples.push((n as f64, m as f64, tr.total_s()));
+    }
+    drop(engine); // the gateway actors load their own engines
+    let base = TexeModel::fit(&samples)?;
+    let texe_edge = TexeModel::from_coeffs(
+        base.alpha_n * edge_slowdown,
+        base.alpha_m * edge_slowdown,
+        base.beta * edge_slowdown,
+    );
+    eprintln!(
+        "    edge plane: aN={:.3}ms aM={:.3}ms b={:.3}ms (r2 {:.3})",
+        texe_edge.alpha_n * 1e3,
+        texe_edge.alpha_m * 1e3,
+        texe_edge.beta * 1e3,
+        base.r2
+    );
+
+    // N→M regressor from the language pair's (synthetic) corpus.
+    let mut gen = CorpusGenerator::new(pair, 7);
+    let fit_pairs = gen.take(5_000);
+    let n2m = N2mRegressor::fit(&fit_pairs, &PrefilterRules::default())?;
+    eprintln!(
+        "    n2m: gamma={:.3} delta={:.3} (r2 {:.3})",
+        n2m.gamma, n2m.delta, n2m.r2
+    );
+
+    // ---- gateway -------------------------------------------------------
+    eprintln!("[2/3] starting gateway (edge x{edge_slowdown}, rtt {rtt_ms} ms)...");
+    let router = RouterBuilder::new(PolicyKind::Cnmt)
+        .texe(texe_edge, base)
+        .n2m(n2m)
+        .ttx(0.3, rtt_ms / 1e3)
+        .build()?;
+    let trace = RttTrace {
+        t: vec![0.0, 1e6],
+        rtt: vec![rtt_ms / 1e3, rtt_ms / 1e3],
+    };
+    let gw = Gateway::start(
+        GatewayConfig {
+            artifacts_dir: artifacts,
+            model: model.clone(),
+            edge_slowdown,
+            trace: Some(trace),
+            max_steps: Some(48),
+        },
+        router,
+    )?;
+
+    // ---- request stream -------------------------------------------------
+    eprintln!("[3/3] serving {n_requests} requests...");
+    let mut stream_gen = CorpusGenerator::new(pair, 99);
+    let t0 = std::time::Instant::now();
+    let (mut edge_n, mut cloud_n) = (0usize, 0usize);
+    for i in 0..n_requests {
+        let p = stream_gen.next_pair();
+        let out = gw.submit(i as u64, &p.src, Some(p.m_real.min(48)))?;
+        match out.device {
+            DeviceKind::Edge => edge_n += 1,
+            DeviceKind::Cloud => cloud_n += 1,
+        }
+        if i < 5 || i + 1 == n_requests {
+            println!(
+                "req {i:>4}: n={:<2} m={:<2} -> {:<5}  exec {:>7.2} ms  tx {:>6.2} ms  total {:>7.2} ms",
+                p.src.len(),
+                out.steps,
+                out.device.id(),
+                out.exec_s * 1e3,
+                out.tx_s * 1e3,
+                out.latency_s * 1e3
+            );
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\n=== gateway report ===");
+    println!(
+        "requests: {n_requests} ({edge_n} edge / {cloud_n} cloud), wall {:.2} s, throughput {:.1} req/s",
+        wall,
+        n_requests as f64 / wall
+    );
+    println!("{}", gw.metrics().to_string_pretty());
+    assert!(edge_n > 0 && cloud_n > 0, "expected mixed routing in this setup");
+    println!("OK: mixed edge/cloud routing verified");
+    Ok(())
+}

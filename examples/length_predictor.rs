@@ -1,0 +1,64 @@
+//! Output-length prediction demo (the paper's §II-B): fit the linear
+//! N→M regressor on each language pair's corpus (with ParaCrawl-style
+//! prefiltering) and show predictions vs ground truth, plus the effect
+//! of skipping the prefilter.
+//!
+//! ```sh
+//! cargo run --release --offline --example length_predictor
+//! ```
+
+use cnmt::corpus::{prefilter, CorpusGenerator, LangPair, PrefilterRules};
+use cnmt::metrics::OnlineStats;
+use cnmt::predictor::N2mRegressor;
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    for pair in LangPair::ALL {
+        let mut gen = CorpusGenerator::new(pair, 2024);
+        let corpus = gen.take(30_000);
+        let rules = PrefilterRules::default();
+        let (_kept, stats) = prefilter(&corpus, &rules);
+
+        let with = N2mRegressor::fit(&corpus, &rules)?;
+        let without = N2mRegressor::fit_raw(&corpus)?;
+        let truth = pair.params();
+
+        println!("=== {} ===", pair.id());
+        println!(
+            "corpus: {} pairs, prefilter dropped {:.1}%",
+            corpus.len(),
+            stats.drop_rate() * 100.0
+        );
+        println!(
+            "truth:          M = {:.3} N + {:.3}",
+            truth.gamma, truth.delta
+        );
+        println!(
+            "fit (filtered): M = {:.3} N + {:.3}   (R2 {:.3}, MSE {:.2})",
+            with.gamma, with.delta, with.r2, with.mse
+        );
+        println!(
+            "fit (raw):      M = {:.3} N + {:.3}   (R2 {:.3}, MSE {:.2})  <- outliers hurt",
+            without.gamma, without.delta, without.r2, without.mse
+        );
+
+        // Held-out accuracy.
+        let mut holdout_gen = CorpusGenerator::new(pair, 777);
+        let mut abs_err = OnlineStats::new();
+        for p in holdout_gen.take(5_000) {
+            if p.outlier {
+                continue;
+            }
+            abs_err.push((with.predict(p.n()) - p.m_real as f64).abs());
+        }
+        println!(
+            "held-out |M̂ - M|: mean {:.2} tokens (max {:.0})",
+            abs_err.mean(),
+            abs_err.max()
+        );
+        for n in [4usize, 12, 24, 48] {
+            println!("  N = {n:>2}  ->  M̂ = {:>5.1}", with.predict(n));
+        }
+        println!();
+    }
+    Ok(())
+}

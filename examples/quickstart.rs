@@ -1,0 +1,41 @@
+//! Quickstart: load an AOT-compiled NMT model and translate a sentence —
+//! the smallest possible use of the public API.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use cnmt::corpus::Tokenizer;
+use cnmt::runtime::{Seq2SeqEngine, TranslateOptions};
+
+fn main() -> Result<(), Box<dyn std::error::Error>> {
+    // 1. Load a model (HLO text + weights, compiled via PJRT).
+    let engine = Seq2SeqEngine::load(std::path::Path::new("artifacts"), "gru_fr_en")?;
+    println!(
+        "loaded {} ({:.1} MB of weights) on the CPU PJRT backend",
+        engine.model_name(),
+        engine.weights_bytes() as f64 / 1e6
+    );
+
+    // 2. Tokenize a (pseudo-word) sentence.
+    let tok = Tokenizer::new(4096);
+    let text = "bado gani pelu bima nade";
+    let src = tok.tokenize(text)?;
+    println!("source: {text}  ->  ids {src:?}");
+
+    // 3. Translate: one encoder pass + greedy autoregressive decoding.
+    let tr = engine.translate(
+        &src,
+        TranslateOptions { max_steps: Some(16), ..Default::default() },
+    )?;
+    let out: Vec<u16> = tr.tokens.iter().map(|&t| t as u16).collect();
+    println!("output: {}", tok.detokenize(&out));
+    println!(
+        "latency: encode {:.2} ms + decode {:.2} ms ({} steps, {:.2} ms/token)",
+        tr.encode_s * 1e3,
+        tr.decode_s * 1e3,
+        tr.steps,
+        tr.decode_s * 1e3 / tr.steps.max(1) as f64
+    );
+    Ok(())
+}

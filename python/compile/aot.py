@@ -1,0 +1,202 @@
+"""AOT compile path (run once by ``make artifacts``; never on request path).
+
+For every model in ``compile.model.make_specs()`` this script:
+
+1. initialises seeded weights and writes them as a raw little-endian
+   binary blob (``artifacts/<model>.weights.bin``);
+2. lowers ``encode`` and ``decode_step`` (with weights as leading HLO
+   *parameters*) to **HLO text** — ``artifacts/<model>.{encode,decode}.hlo.txt``;
+3. records everything the rust runtime needs to drive the greedy decode
+   loop in ``artifacts/manifest.json`` (param order/shape/offset, the
+   decode-input wiring of ``ModelSpec.decode_inputs``, vocab constants).
+
+HLO **text** is the interchange format, NOT a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Weights ship as parameters rather than HLO constants: embedding tables
+alone (4096 x 256 f32) would bloat the decimal-printed HLO text by ~100x
+and dominate parse time at startup.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+SEED = 20220315  # fixed: artifacts are reproducible bit-for-bit
+
+
+def to_hlo_text(lowered) -> str:
+    """Lower a ``jax.jit(...).lower(...)`` result to XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def flatten_params(params: dict):
+    """Deterministic (sorted-name) flattening of a param dict."""
+    names = sorted(params.keys())
+    return names, [params[n] for n in names]
+
+
+def np_dtype_tag(dt) -> str:
+    if dt == np.float32:
+        return "f32"
+    if dt == np.int32:
+        return "i32"
+    raise ValueError(f"unsupported artifact dtype {dt}")
+
+
+def export_model(spec: M.ModelSpec, out_dir: str) -> dict:
+    """Export one model: weights bin + 2 HLO text files. Returns its
+    manifest entry."""
+    key = jax.random.PRNGKey(SEED)
+    # Per-model subkey so adding a model doesn't shift existing weights.
+    key = jax.random.fold_in(key, abs(hash(spec.name)) % (2**31))
+    params = spec.init(key)
+    names, leaves = flatten_params(params)
+
+    # --- weights blob -----------------------------------------------------
+    bin_path = os.path.join(out_dir, f"{spec.name}.weights.bin")
+    offset = 0
+    param_meta = []
+    with open(bin_path, "wb") as f:
+        for name, leaf in zip(names, leaves):
+            arr = np.asarray(leaf)
+            raw = arr.astype("<f4").tobytes() if arr.dtype == np.float32 \
+                else arr.astype("<i4").tobytes()
+            f.write(raw)
+            param_meta.append({
+                "name": name,
+                "shape": list(arr.shape),
+                "dtype": np_dtype_tag(arr.dtype),
+                "offset": offset,
+                "nbytes": len(raw),
+            })
+            offset += len(raw)
+
+    # --- encode HLO -------------------------------------------------------
+    param_sds = [jax.ShapeDtypeStruct(np.asarray(l).shape, l.dtype)
+                 for l in leaves]
+    n_params = len(param_sds)
+
+    def enc_flat(*args):
+        p = dict(zip(names, args[:n_params]))
+        out = spec.encode(p, args[n_params], args[n_params + 1])
+        return out if isinstance(out, tuple) else (out,)
+
+    enc_lowered = jax.jit(enc_flat, keep_unused=True).lower(
+        *param_sds, *M.encode_example_args())
+    enc_text = to_hlo_text(enc_lowered)
+    enc_path = os.path.join(out_dir, f"{spec.name}.encode.hlo.txt")
+    with open(enc_path, "w") as f:
+        f.write(enc_text)
+
+    # --- decode-step HLO --------------------------------------------------
+    def dec_flat(*args):
+        p = dict(zip(names, args[:n_params]))
+        out = spec.decode_step(p, *args[n_params:])
+        return out if isinstance(out, tuple) else (out,)
+
+    dec_args = M.decode_example_args(spec)
+    dec_lowered = jax.jit(dec_flat, keep_unused=True).lower(*param_sds, *dec_args)
+    dec_text = to_hlo_text(dec_lowered)
+    dec_path = os.path.join(out_dir, f"{spec.name}.decode.hlo.txt")
+    with open(dec_path, "w") as f:
+        f.write(dec_text)
+
+    # --- encode output metadata (shapes the rust side must allocate) ------
+    enc_out_shapes = jax.eval_shape(
+        enc_flat, *param_sds, *M.encode_example_args())
+    enc_outputs = [{
+        "shape": list(s.shape),
+        "dtype": np_dtype_tag(np.dtype(s.dtype)),
+    } for s in enc_out_shapes]
+
+    print(f"  {spec.name}: {n_params} params ({offset} bytes), "
+          f"encode {len(enc_text)//1024} KiB, decode {len(dec_text)//1024} KiB",
+          file=sys.stderr)
+
+    return {
+        "name": spec.name,
+        "lang_pair": spec.lang_pair,
+        "arch": spec.arch,
+        "weights_bin": os.path.basename(bin_path),
+        "encode_hlo": os.path.basename(enc_path),
+        "decode_hlo": os.path.basename(dec_path),
+        "params": param_meta,
+        "encode_outputs": enc_outputs,
+        "decode_inputs": [d.to_json() for d in spec.decode_inputs],
+        "n_state": spec.n_state,
+        "weights_sha256": _sha256(bin_path),
+    }
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for artifacts")
+    ap.add_argument("--models", default="",
+                    help="comma-separated subset of model names (default all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    wanted = set(filter(None, args.models.split(",")))
+    # Partial exports (--models) merge into an existing manifest so the
+    # artifacts directory always describes all previously-built models.
+    existing = {}
+    man_path0 = os.path.join(args.out, "manifest.json")
+    if wanted and os.path.exists(man_path0):
+        with open(man_path0) as f:
+            for entry in json.load(f).get("models", []):
+                existing[entry["name"]] = entry
+    entries = []
+    for spec in M.make_specs():
+        if wanted and spec.name not in wanted:
+            if spec.name in existing:
+                entries.append(existing[spec.name])
+            continue
+        print(f"exporting {spec.name} ...", file=sys.stderr)
+        entries.append(export_model(spec, args.out))
+
+    manifest = {
+        "version": 1,
+        "seed": SEED,
+        "n_max": M.N_MAX,
+        "m_max": M.M_MAX,
+        "vocab": M.VOCAB,
+        "pad_id": M.PAD_ID,
+        "bos_id": M.BOS_ID,
+        "eos_id": M.EOS_ID,
+        "models": entries,
+    }
+    man_path = os.path.join(args.out, "manifest.json")
+    with open(man_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {man_path} ({len(entries)} models)", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp reference oracles."""
+
+from compile.kernels.attention import (
+    attention,
+    attention_heads,
+    merge_heads,
+    mha,
+    split_heads,
+)
+from compile.kernels.gru_cell import gru_cell
+from compile.kernels.lstm_cell import lstm_cell
+
+__all__ = [
+    "attention",
+    "attention_heads",
+    "merge_heads",
+    "mha",
+    "split_heads",
+    "gru_cell",
+    "lstm_cell",
+]

@@ -1,0 +1,130 @@
+"""Masked scaled-dot-product attention as a Pallas kernel (L1).
+
+This is the Transformer hot spot the paper identifies (Fig. 1c): per-head
+``softmax(q k^T / sqrt(d) + mask) v``. The kernel fuses score computation,
+masking, a numerically-stable softmax and the value contraction so the
+``[Lq, Lk]`` score matrix never leaves VMEM — at the paper's sequence
+lengths (< 100 tokens) a whole head's scores are 64x64 f32 = 16 KiB, i.e.
+trivially VMEM-resident; the BlockSpec grid iterates over heads, which is
+exactly the HBM<->VMEM schedule a CUDA implementation would express with
+one threadblock per head (DESIGN.md §Hardware-Adaptation).
+
+Lowered with ``interpret=True`` (CPU PJRT cannot run Mosaic custom-calls).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attention_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref):
+    """Pallas body for one head: fused scores+mask+softmax+values.
+
+    Block shapes: q ``[Lq, Dh]``, k/v ``[Lk, Dh]``, mask ``[Lq, Lk]``.
+    """
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], jnp.float32))
+    scores = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    scores = scores + mask_ref[...].astype(jnp.float32)
+    # Numerically-stable softmax, fused (scores never round-trip to HBM).
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - m)
+    w = e / jnp.sum(e, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(w, v, preferred_element_type=jnp.float32).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=())
+def attention(q, k, v, mask):
+    """Single-head masked attention (Pallas). Matches ``ref.attention_ref``.
+
+    Args:
+      q:    ``[Lq, D]`` queries.
+      k:    ``[Lk, D]`` keys.
+      v:    ``[Lk, D]`` values.
+      mask: ``[Lq, Lk]`` additive mask (0 = attend, -1e9 = masked).
+
+    Returns:
+      ``[Lq, D]`` attention output, dtype of ``q``.
+    """
+    lq, d = q.shape
+    return pl.pallas_call(
+        _attention_kernel,
+        out_shape=jax.ShapeDtypeStruct((lq, d), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def attention_heads(q, k, v, mask):
+    """All-heads masked attention in ONE Pallas call, grid over heads.
+
+    Args:
+      q:    ``[H, Lq, Dh]`` per-head queries.
+      k:    ``[H, Lk, Dh]`` per-head keys.
+      v:    ``[H, Lk, Dh]`` per-head values.
+      mask: ``[Lq, Lk]`` additive mask, shared across heads.
+
+    Returns:
+      ``[H, Lq, Dh]``.
+
+    The grid dimension is the head index — on TPU this is exactly the
+    "one threadblock per head" schedule (DESIGN.md §Hardware-Adaptation);
+    on the interpret-mode CPU path it collapses 2·layers·heads separate
+    kernel invocations per decode step into one, which removed ~35% of
+    the per-step dispatch overhead (EXPERIMENTS.md §Perf).
+    """
+    n_heads, lq, dh = q.shape
+    lk = k.shape[1]
+    return pl.pallas_call(
+        _attention_kernel,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((None, lq, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, lk, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((None, lk, dh), lambda h: (h, 0, 0)),
+            pl.BlockSpec((lq, lk), lambda h: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, lq, dh), lambda h: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_heads, lq, dh), q.dtype),
+        interpret=True,
+    )(q, k, v, mask)
+
+
+def split_heads(x, n_heads: int):
+    """``[L, D] -> [H, L, D/H]``."""
+    l, d = x.shape
+    return x.reshape(l, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def merge_heads(x):
+    """``[H, L, Dh] -> [L, H*Dh]``."""
+    h, l, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(l, h * dh)
+
+
+def mha(q, k, v, mask, wq, wk, wv, wo, n_heads: int):
+    """Multi-head attention built on the batched-head Pallas kernel.
+
+    Projections run as plain XLA matmuls (they fuse fine on their own);
+    the attention itself goes through :func:`attention_heads` — a single
+    kernel call with the head index as the grid dimension.
+
+    Args / returns: see ``ref.mha_ref``.
+    """
+    d = q.shape[-1]
+    assert d % n_heads == 0, f"d={d} not divisible by n_heads={n_heads}"
+    qp, kp, vp = q @ wq, k @ wk, v @ wv
+    out = attention_heads(
+        split_heads(qp, n_heads),
+        split_heads(kp, n_heads),
+        split_heads(vp, n_heads),
+        mask,
+    )
+    return merge_heads(out) @ wo

@@ -1,0 +1,125 @@
+"""Fused LSTM cell as a Pallas kernel (L1).
+
+One kernel fuses the two gate matmuls, the bias add, all four gate
+non-linearities and the state update — on a real TPU this keeps the whole
+cell step resident in VMEM (W_ih/W_hh for H=256 are 1 MiB each in f32,
+well under the ~16 MiB VMEM budget) and feeds the MXU with a single
+``[B, I+H] x [I+H, 4H]``-shaped pair of matmuls per step, instead of
+bouncing the 4H-wide gate tensor through HBM between the matmul and the
+element-wise tail as an unfused implementation would.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO ops. Structure (fusion,
+blocking) is what we optimise; see DESIGN.md §8 for the TPU cost model.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _lstm_cell_kernel(x_ref, h_ref, c_ref, w_ih_ref, w_hh_ref, b_ref,
+                      h_out_ref, c_out_ref):
+    """Pallas body: whole cell step in one VMEM-resident block."""
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    # Two MXU matmuls; accumulate in f32 regardless of input dtype.
+    gates = (
+        jnp.dot(x, w_ih_ref[...], preferred_element_type=jnp.float32)
+        + jnp.dot(h, w_hh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...].astype(jnp.float32)
+    )
+    hsz = h.shape[-1]
+    i = jax.nn.sigmoid(gates[..., 0 * hsz : 1 * hsz])
+    f = jax.nn.sigmoid(gates[..., 1 * hsz : 2 * hsz])
+    g = jnp.tanh(gates[..., 2 * hsz : 3 * hsz])
+    o = jax.nn.sigmoid(gates[..., 3 * hsz : 4 * hsz])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def _lstm_cell_pre_kernel(gx_ref, h_ref, c_ref, w_hh_ref, b_ref,
+                          h_out_ref, c_out_ref):
+    """Pallas body when the input projection ``x @ W_ih`` was hoisted out
+    of the recurrence (see :func:`lstm_cell_pre`)."""
+    h = h_ref[...]
+    c = c_ref[...]
+    gates = (
+        gx_ref[...].astype(jnp.float32)
+        + jnp.dot(h, w_hh_ref[...], preferred_element_type=jnp.float32)
+        + b_ref[...].astype(jnp.float32)
+    )
+    hsz = h.shape[-1]
+    i = jax.nn.sigmoid(gates[..., 0 * hsz : 1 * hsz])
+    f = jax.nn.sigmoid(gates[..., 1 * hsz : 2 * hsz])
+    g = jnp.tanh(gates[..., 2 * hsz : 3 * hsz])
+    o = jax.nn.sigmoid(gates[..., 3 * hsz : 4 * hsz])
+    c_new = f * c.astype(jnp.float32) + i * g
+    h_new = o * jnp.tanh(c_new)
+    h_out_ref[...] = h_new.astype(h_out_ref.dtype)
+    c_out_ref[...] = c_new.astype(c_out_ref.dtype)
+
+
+def lstm_cell_pre(gx, h, c, w_hh, b):
+    """LSTM cell step with a *pre-projected* input (perf variant).
+
+    The input projection ``x @ W_ih`` is time-invariant, so an encoder
+    scan can compute it for all T steps as ONE ``[T, I] x [I, 4H]`` GEMM
+    before the recurrence (far better MXU/BLAS efficiency than T GEMVs)
+    and feed each step its ``gx = (x @ W_ih)[t]`` row. Recorded in
+    EXPERIMENTS.md §Perf.
+
+    Args:
+      gx:   ``[B, 4H]`` pre-projected input gates for this step.
+      h:    ``[B, H]`` previous hidden state.
+      c:    ``[B, H]`` previous cell state.
+      w_hh: ``[H, 4H]`` recurrent projection.
+      b:    ``[4H]`` bias.
+
+    Returns:
+      ``(h_new, c_new)``.
+    """
+    bsz, hsz = h.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((bsz, hsz), h.dtype),
+        jax.ShapeDtypeStruct((bsz, hsz), c.dtype),
+    )
+    return pl.pallas_call(
+        _lstm_cell_pre_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(gx, h, c, w_hh, b)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def lstm_cell(x, h, c, w_ih, w_hh, b):
+    """Fused LSTM cell step (Pallas). Same contract as ``ref.lstm_cell_ref``.
+
+    Args:
+      x:    ``[B, I]`` input at this timestep.
+      h:    ``[B, H]`` previous hidden state.
+      c:    ``[B, H]`` previous cell state.
+      w_ih: ``[I, 4H]`` input projection (gate order i,f,g,o).
+      w_hh: ``[H, 4H]`` recurrent projection.
+      b:    ``[4H]`` bias.
+
+    Returns:
+      ``(h_new, c_new)``, dtypes matching ``h``/``c``.
+    """
+    bsz, hsz = h.shape
+    out_shape = (
+        jax.ShapeDtypeStruct((bsz, hsz), h.dtype),
+        jax.ShapeDtypeStruct((bsz, hsz), c.dtype),
+    )
+    return pl.pallas_call(
+        _lstm_cell_kernel,
+        out_shape=out_shape,
+        interpret=True,
+    )(x, h, c, w_ih, w_hh, b)

@@ -1,0 +1,126 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness signal).
+
+Every kernel in this package has a reference implementation here written in
+plain ``jax.numpy``. The pytest suite (``python/tests/test_kernel.py``)
+asserts ``assert_allclose(kernel(...), ref(...))`` over hypothesis-generated
+shape/dtype/value sweeps; the AOT path (``compile/aot.py``) lowers the
+*kernel* versions so that what we test is what ships in the HLO artifacts.
+
+Gate layouts follow the standard cuDNN/PyTorch conventions so the numbers
+are directly comparable with the paper's PyTorch testbed:
+
+* LSTM gate order: ``i, f, g, o`` (input, forget, cell, output).
+* GRU gate order:  ``r, z, n``    (reset, update, new) with the
+  "PyTorch-style" reset applied to the *projected* hidden state
+  ``n = tanh(x W_n + r * (h U_n) + b_n)``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lstm_cell_ref(x, h, c, w_ih, w_hh, b):
+    """One LSTM cell step.
+
+    Args:
+      x:    ``[B, I]`` input at this timestep.
+      h:    ``[B, H]`` previous hidden state.
+      c:    ``[B, H]`` previous cell state.
+      w_ih: ``[I, 4H]`` input projection (gate order i,f,g,o).
+      w_hh: ``[H, 4H]`` recurrent projection.
+      b:    ``[4H]`` bias.
+
+    Returns:
+      ``(h_new [B,H], c_new [B,H])``.
+    """
+    hsz = h.shape[-1]
+    gates = x @ w_ih + h @ w_hh + b
+    i = jax.nn.sigmoid(gates[..., 0 * hsz : 1 * hsz])
+    f = jax.nn.sigmoid(gates[..., 1 * hsz : 2 * hsz])
+    g = jnp.tanh(gates[..., 2 * hsz : 3 * hsz])
+    o = jax.nn.sigmoid(gates[..., 3 * hsz : 4 * hsz])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new
+
+
+def gru_cell_ref(x, h, w_ih, w_hh, b_ih, b_hh):
+    """One GRU cell step (PyTorch convention).
+
+    Args:
+      x:    ``[B, I]`` input.
+      h:    ``[B, H]`` previous hidden.
+      w_ih: ``[I, 3H]`` input projection (gate order r,z,n).
+      w_hh: ``[H, 3H]`` recurrent projection.
+      b_ih: ``[3H]`` input bias.
+      b_hh: ``[3H]`` recurrent bias.
+
+    Returns:
+      ``h_new [B, H]``.
+    """
+    hsz = h.shape[-1]
+    gi = x @ w_ih + b_ih
+    gh = h @ w_hh + b_hh
+    r = jax.nn.sigmoid(gi[..., 0 * hsz : 1 * hsz] + gh[..., 0 * hsz : 1 * hsz])
+    z = jax.nn.sigmoid(gi[..., 1 * hsz : 2 * hsz] + gh[..., 1 * hsz : 2 * hsz])
+    n = jnp.tanh(gi[..., 2 * hsz : 3 * hsz] + r * gh[..., 2 * hsz : 3 * hsz])
+    return (1.0 - z) * n + z * h
+
+
+def attention_ref(q, k, v, mask):
+    """Masked scaled-dot-product attention, one head.
+
+    Args:
+      q:    ``[Lq, D]`` queries.
+      k:    ``[Lk, D]`` keys.
+      v:    ``[Lk, D]`` values.
+      mask: ``[Lq, Lk]`` additive mask (0 where attend, large-negative where
+            masked). ``None`` means no mask.
+
+    Returns:
+      ``[Lq, D]`` attention output.
+    """
+    scale = 1.0 / jnp.sqrt(jnp.asarray(q.shape[-1], q.dtype))
+    scores = (q @ k.T) * scale
+    if mask is not None:
+        scores = scores + mask
+    w = jax.nn.softmax(scores, axis=-1)
+    return w @ v
+
+
+def mha_ref(q, k, v, mask, wq, wk, wv, wo, n_heads):
+    """Multi-head attention with learned projections (reference).
+
+    Args:
+      q, k, v: ``[Lq, D]`` / ``[Lk, D]`` / ``[Lk, D]`` token features.
+      mask:    ``[Lq, Lk]`` additive mask or ``None``.
+      wq/wk/wv/wo: ``[D, D]`` projections.
+      n_heads: number of attention heads; ``D % n_heads == 0``.
+
+    Returns:
+      ``[Lq, D]``.
+    """
+    d = q.shape[-1]
+    dh = d // n_heads
+    qp, kp, vp = q @ wq, k @ wk, v @ wv
+
+    def head(i):
+        sl = slice(i * dh, (i + 1) * dh)
+        return attention_ref(qp[:, sl], kp[:, sl], vp[:, sl], mask)
+
+    heads = [head(i) for i in range(n_heads)]
+    return jnp.concatenate(heads, axis=-1) @ wo
+
+
+def layer_norm_ref(x, gamma, beta, eps=1e-5):
+    """Layer norm over the last axis. ``x [..., D]``, ``gamma/beta [D]``."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ffn_ref(x, w1, b1, w2, b2):
+    """Transformer position-wise FFN: ``relu(x w1 + b1) w2 + b2``."""
+    return jax.nn.relu(x @ w1 + b1) @ w2 + b2

@@ -1,0 +1,640 @@
+"""L2: the three NMT architectures of the paper as JAX encode / decode-step
+function pairs, built on the L1 Pallas kernels.
+
+The paper (Sec. III) evaluates:
+
+* a 2-layer BiLSTM encoder/decoder (OpenNMT-style, Luong attention) on
+  IWSLT'14 DE-EN,
+* a 1-layer GRU encoder/decoder (context-concat, no attention) on
+  OPUS-100 FR-EN,
+* a MarianMT-style Transformer (masked self-attn + cross-attn + FFN,
+  KV-cached autoregressive decoding) on OPUS-100 EN-ZH.
+
+Every model is exposed as two pure functions with **static shapes**
+(batch 1, ``N_MAX = M_MAX = 64``, vocab 4096):
+
+* ``encode(params, tokens i32[1,64], length i32[]) -> (ctx..., state0...)``
+* ``decode_step(params, ctx..., state..., token i32[1])
+     -> (next_token i32[1], state'...)``
+
+so that ``compile/aot.py`` can lower each once to HLO text and the rust
+runtime (`rust/src/runtime/seq2seq.rs`) can drive greedy autoregressive
+decoding token by token — exactly the serial decode loop whose latency the
+paper models as linear in M. Weights are HLO *parameters* (flattened
+pytree), exported separately as binary blobs; see ``aot.py``.
+
+Scaling note (DESIGN.md §4): hidden sizes are scaled down from the paper
+(500 -> 256 for the BiLSTM; MarianMT 6L/512d -> 2L/256d) to keep the
+CPU-PJRT testbed fast; the latency *structure* (encoder O(N) / O(1),
+decoder O(M) serial) is preserved, and absolute scale is handled by device
+calibration in the rust layer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import attention, lstm_cell, gru_cell
+from compile.kernels.gru_cell import gru_cell_pre
+from compile.kernels.lstm_cell import lstm_cell_pre
+
+# ---------------------------------------------------------------------------
+# Shared constants (mirrored in rust/src/runtime/vocabulary.rs)
+# ---------------------------------------------------------------------------
+
+VOCAB = 4096
+N_MAX = 64  # max source length (tokens, incl. EOS)
+M_MAX = 64  # max target length
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+NEG_INF = -1e9
+
+
+def _dense_init(key, shape, scale=None):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype=jnp.float32) * s
+
+
+def length_mask(length, size=N_MAX):
+    """Additive mask ``[1, size]``: 0 for positions < length, -1e9 after."""
+    pos = jnp.arange(size)
+    return jnp.where(pos < length, 0.0, NEG_INF)[None, :].astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Model configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BiLstmConfig:
+    """2-layer BiLSTM enc / 2-layer LSTM dec with Luong dot attention."""
+
+    vocab: int = VOCAB
+    emb: int = 128
+    hidden: int = 256  # per direction
+    layers: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class GruConfig:
+    """1-layer GRU enc / dec, context concatenated to decoder input."""
+
+    vocab: int = VOCAB
+    emb: int = 128
+    hidden: int = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class TransformerConfig:
+    """MarianMT-style transformer (scaled down, see module docstring)."""
+
+    vocab: int = VOCAB
+    d_model: int = 256
+    n_heads: int = 4
+    layers: int = 2
+    ffn: int = 512
+
+
+# ---------------------------------------------------------------------------
+# BiLSTM encoder/decoder (IWSLT'14 DE-EN analog)
+# ---------------------------------------------------------------------------
+
+
+def bilstm_init(key, cfg: BiLstmConfig) -> Dict[str, Any]:
+    """Initialise BiLSTM params as a flat dict of named arrays."""
+    ks = iter(jax.random.split(key, 64))
+    p: Dict[str, Any] = {}
+    p["emb_src"] = _dense_init(next(ks), (cfg.vocab, cfg.emb), 0.05)
+    p["emb_tgt"] = _dense_init(next(ks), (cfg.vocab, cfg.emb), 0.05)
+    h = cfg.hidden
+    # Encoder: cfg.layers layers x {fwd, bwd}.
+    for l in range(cfg.layers):
+        isz = cfg.emb if l == 0 else 2 * h
+        for d in ("fwd", "bwd"):
+            p[f"enc{l}_{d}_w_ih"] = _dense_init(next(ks), (isz, 4 * h))
+            p[f"enc{l}_{d}_w_hh"] = _dense_init(next(ks), (h, 4 * h))
+            p[f"enc{l}_{d}_b"] = jnp.zeros((4 * h,), jnp.float32)
+    # Bridge: final (fwd||bwd) states -> decoder init per layer.
+    for l in range(cfg.layers):
+        p[f"bridge{l}_wh"] = _dense_init(next(ks), (2 * h, h))
+        p[f"bridge{l}_wc"] = _dense_init(next(ks), (2 * h, h))
+    # enc_out [N, 2H] -> attention space [N, H]
+    p["attn_wenc"] = _dense_init(next(ks), (2 * h, h))
+    # Decoder LSTM stack.
+    for l in range(cfg.layers):
+        isz = cfg.emb if l == 0 else h
+        p[f"dec{l}_w_ih"] = _dense_init(next(ks), (isz, 4 * h))
+        p[f"dec{l}_w_hh"] = _dense_init(next(ks), (h, 4 * h))
+        p[f"dec{l}_b"] = jnp.zeros((4 * h,), jnp.float32)
+    # Luong output: tanh([h_top; ctx] W_out) -> logits
+    p["out_w"] = _dense_init(next(ks), (2 * h, h))
+    p["proj_w"] = _dense_init(next(ks), (h, cfg.vocab))
+    p["proj_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+# Scan unroll factor for the recurrent encoders. MEASURED (EXPERIMENTS.md
+# §Perf, single-core CPU-PJRT): unroll=8 *regressed* the BiLSTM encoder
+# 18.9 ms → 22.2 ms (larger loop body, worse i-cache at B=1), so the
+# shipped artifacts use unroll=1. On TPU the tradeoff flips (loop dispatch
+# is costlier, VMEM-resident state amortises) — re-tune when retargeting.
+SCAN_UNROLL = 1
+
+
+def _lstm_scan(xs, mask, h0, c0, w_ih, w_hh, b, reverse=False):
+    """Masked LSTM scan over time. ``xs [T, I]``, ``mask [T]`` (1=valid).
+
+    Padded steps do not update the state (mask gating), so the final state
+    is the state at the last *valid* step regardless of padding.
+    Returns ``(hs [T, H], (h_T, c_T))``.
+    """
+
+    # Perf: the input projection is time-invariant — compute it for all
+    # T steps as one [T, I] x [I, 4H] GEMM instead of T GEMVs inside the
+    # recurrence (EXPERIMENTS.md §Perf; same trick as cuDNN LSTM).
+    gx = xs @ w_ih  # [T, 4H]
+
+    def step(carry, inp):
+        h, c = carry
+        gx_t, m_t = inp
+        h_new, c_new = lstm_cell_pre(gx_t[None, :], h, c, w_hh, b)
+        h = jnp.where(m_t > 0, h_new, h)
+        c = jnp.where(m_t > 0, c_new, c)
+        return (h, c), h[0]
+
+    (h_f, c_f), hs = jax.lax.scan(
+        step, (h0, c0), (gx, mask), reverse=reverse, unroll=SCAN_UNROLL)
+    return hs, (h_f, c_f)
+
+
+def bilstm_encode(p, cfg: BiLstmConfig, tokens, length):
+    """BiLSTM encoder.
+
+    Args:
+      p: params dict from :func:`bilstm_init`.
+      tokens: ``i32[1, N_MAX]`` padded source token ids.
+      length: ``i32[]`` true source length.
+
+    Returns:
+      ``(enc_attn f32[N_MAX, H], h0 f32[L,1,H], c0 f32[L,1,H])`` where
+      ``enc_attn`` is the attention-space projection of the encoder output
+      (used as both K and V by the decoder's Luong attention).
+    """
+    h = cfg.hidden
+    mask = (jnp.arange(N_MAX) < length).astype(jnp.float32)
+    x = p["emb_src"][tokens[0]]  # [N, E]
+    finals = []
+    for l in range(cfg.layers):
+        zeros = jnp.zeros((1, h), jnp.float32)
+        hs_f, (hf, _) = _lstm_scan(
+            x, mask, zeros, zeros,
+            p[f"enc{l}_fwd_w_ih"], p[f"enc{l}_fwd_w_hh"], p[f"enc{l}_fwd_b"])
+        hs_b, (hb, _) = _lstm_scan(
+            x, mask, zeros, zeros,
+            p[f"enc{l}_bwd_w_ih"], p[f"enc{l}_bwd_w_hh"], p[f"enc{l}_bwd_b"],
+            reverse=True)
+        x = jnp.concatenate([hs_f, hs_b], axis=-1)  # [N, 2H]
+        finals.append(jnp.concatenate([hf, hb], axis=-1))  # [1, 2H]
+    enc_attn = x @ p["attn_wenc"]  # [N, H]
+    h0 = jnp.stack([jnp.tanh(finals[l] @ p[f"bridge{l}_wh"])
+                    for l in range(cfg.layers)])
+    c0 = jnp.stack([jnp.tanh(finals[l] @ p[f"bridge{l}_wc"])
+                    for l in range(cfg.layers)])
+    return enc_attn, h0, c0
+
+
+def bilstm_decode_step(p, cfg: BiLstmConfig, enc_attn, length, h, c, token):
+    """One greedy decode step of the BiLSTM decoder.
+
+    Args:
+      enc_attn: ``f32[N_MAX, H]`` from :func:`bilstm_encode`.
+      length:   ``i32[]`` source length (for the attention mask).
+      h, c:     ``f32[L,1,H]`` decoder LSTM state.
+      token:    ``i32[1]`` previous target token.
+
+    Returns:
+      ``(next_token i32[1], h' f32[L,1,H], c' f32[L,1,H])``.
+    """
+    x = p["emb_tgt"][token]  # [1, E]
+    hs, cs = [], []
+    for l in range(cfg.layers):
+        h_l, c_l = lstm_cell(
+            x, h[l], c[l], p[f"dec{l}_w_ih"], p[f"dec{l}_w_hh"], p[f"dec{l}_b"])
+        hs.append(h_l)
+        cs.append(c_l)
+        x = h_l
+    h_top = x  # [1, H]
+    # Luong dot attention over encoder states (L1 Pallas attention kernel).
+    ctx = attention(h_top, enc_attn, enc_attn, length_mask(length))  # [1, H]
+    fused = jnp.tanh(jnp.concatenate([h_top, ctx], axis=-1) @ p["out_w"])
+    logits = fused @ p["proj_w"] + p["proj_b"]  # [1, V]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, jnp.stack(hs), jnp.stack(cs)
+
+
+# ---------------------------------------------------------------------------
+# GRU encoder/decoder (OPUS-100 FR-EN analog)
+# ---------------------------------------------------------------------------
+
+
+def gru_init(key, cfg: GruConfig) -> Dict[str, Any]:
+    """Initialise GRU params as a flat dict of named arrays."""
+    ks = iter(jax.random.split(key, 16))
+    p: Dict[str, Any] = {}
+    p["emb_src"] = _dense_init(next(ks), (cfg.vocab, cfg.emb), 0.05)
+    p["emb_tgt"] = _dense_init(next(ks), (cfg.vocab, cfg.emb), 0.05)
+    h = cfg.hidden
+    p["enc_w_ih"] = _dense_init(next(ks), (cfg.emb, 3 * h))
+    p["enc_w_hh"] = _dense_init(next(ks), (h, 3 * h))
+    p["enc_b_ih"] = jnp.zeros((3 * h,), jnp.float32)
+    p["enc_b_hh"] = jnp.zeros((3 * h,), jnp.float32)
+    # Decoder input = [emb ; ctx]
+    p["dec_w_ih"] = _dense_init(next(ks), (cfg.emb + h, 3 * h))
+    p["dec_w_hh"] = _dense_init(next(ks), (h, 3 * h))
+    p["dec_b_ih"] = jnp.zeros((3 * h,), jnp.float32)
+    p["dec_b_hh"] = jnp.zeros((3 * h,), jnp.float32)
+    p["proj_w"] = _dense_init(next(ks), (h, cfg.vocab))
+    p["proj_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+def gru_encode(p, cfg: GruConfig, tokens, length):
+    """GRU encoder: returns the final hidden state as the context.
+
+    Returns:
+      ``ctx f32[1, H]`` — fixed-size sentence representation.
+    """
+    mask = (jnp.arange(N_MAX) < length).astype(jnp.float32)
+    xs = p["emb_src"][tokens[0]]  # [N, E]
+    h0 = jnp.zeros((1, cfg.hidden), jnp.float32)
+    # Perf: hoist the input projection out of the scan (one GEMM).
+    gi = xs @ p["enc_w_ih"] + p["enc_b_ih"]  # [N, 3H]
+
+    def step(h, inp):
+        gi_t, m_t = inp
+        h_new = gru_cell_pre(gi_t[None, :], h, p["enc_w_hh"], p["enc_b_hh"])
+        h = jnp.where(m_t > 0, h_new, h)
+        return h, ()
+
+    h_f, _ = jax.lax.scan(step, h0, (gi, mask), unroll=SCAN_UNROLL)
+    return (h_f,)
+
+
+def gru_decode_step(p, cfg: GruConfig, ctx, h, token):
+    """One greedy decode step of the GRU decoder.
+
+    Args:
+      ctx:   ``f32[1, H]`` encoder context (constant across steps).
+      h:     ``f32[1, H]`` decoder hidden state.
+      token: ``i32[1]`` previous target token.
+
+    Returns:
+      ``(next_token i32[1], h' f32[1, H])``.
+    """
+    x = jnp.concatenate([p["emb_tgt"][token], ctx], axis=-1)
+    h_new = gru_cell(x, h, p["dec_w_ih"], p["dec_w_hh"],
+                     p["dec_b_ih"], p["dec_b_hh"])
+    logits = h_new @ p["proj_w"] + p["proj_b"]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, h_new
+
+
+# ---------------------------------------------------------------------------
+# Transformer (OPUS-100 EN-ZH / MarianMT analog)
+# ---------------------------------------------------------------------------
+
+
+def _sinusoidal(max_len, d):
+    pos = jnp.arange(max_len)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def transformer_init(key, cfg: TransformerConfig) -> Dict[str, Any]:
+    """Initialise Transformer params as a flat dict of named arrays."""
+    ks = iter(jax.random.split(key, 256))
+    d, f = cfg.d_model, cfg.ffn
+    p: Dict[str, Any] = {}
+    p["emb"] = _dense_init(next(ks), (cfg.vocab, d), 0.05)
+    for side in ("enc", "dec"):
+        for l in range(cfg.layers):
+            pre = f"{side}{l}"
+            for w in ("wq", "wk", "wv", "wo"):
+                p[f"{pre}_self_{w}"] = _dense_init(next(ks), (d, d))
+            if side == "dec":
+                for w in ("wq", "wk", "wv", "wo"):
+                    p[f"{pre}_cross_{w}"] = _dense_init(next(ks), (d, d))
+            p[f"{pre}_ffn_w1"] = _dense_init(next(ks), (d, f))
+            p[f"{pre}_ffn_b1"] = jnp.zeros((f,), jnp.float32)
+            p[f"{pre}_ffn_w2"] = _dense_init(next(ks), (f, d))
+            p[f"{pre}_ffn_b2"] = jnp.zeros((d,), jnp.float32)
+            n_ln = 3 if side == "dec" else 2
+            for i in range(n_ln):
+                p[f"{pre}_ln{i}_g"] = jnp.ones((d,), jnp.float32)
+                p[f"{pre}_ln{i}_b"] = jnp.zeros((d,), jnp.float32)
+    p["proj_w"] = _dense_init(next(ks), (d, cfg.vocab))
+    p["proj_b"] = jnp.zeros((cfg.vocab,), jnp.float32)
+    return p
+
+
+def _ln(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+# Attention-head batching strategy. MEASURED (EXPERIMENTS.md §Perf):
+# the batched-head kernel (one pallas_call, grid over heads — the right
+# TPU schedule, kept in kernels.attention_heads) regressed the
+# interpret-mode CPU decode step 0.80 → 1.13 ms (grid slicing overhead >
+# per-call dispatch at these tiny head sizes), so the CPU artifacts use
+# the per-head loop. Flip for TPU targets.
+BATCHED_HEADS = False
+
+
+def _mha_cached(q, k_cache, v_cache, mask, wq, wo, n_heads):
+    """Multi-head attention where K/V are already projected (KV cache).
+
+    ``q [Lq, D]``, ``k_cache/v_cache [Lk, D]`` (post-projection),
+    ``mask [Lq, Lk]`` additive. Heads run through the L1 Pallas kernels;
+    see ``BATCHED_HEADS`` for the schedule choice.
+    """
+    qp = q @ wq
+    if BATCHED_HEADS:
+        from compile.kernels import attention_heads, merge_heads, split_heads
+
+        out = attention_heads(
+            split_heads(qp, n_heads),
+            split_heads(k_cache, n_heads),
+            split_heads(v_cache, n_heads),
+            mask,
+        )
+        return merge_heads(out) @ wo
+    d = q.shape[-1]
+    dh = d // n_heads
+    outs = []
+    for i in range(n_heads):
+        sl = slice(i * dh, (i + 1) * dh)
+        outs.append(attention(qp[:, sl], k_cache[:, sl], v_cache[:, sl], mask))
+    return jnp.concatenate(outs, axis=-1) @ wo
+
+
+def transformer_encode(p, cfg: TransformerConfig, tokens, length):
+    """Transformer encoder + cross-attention KV precomputation.
+
+    Returns:
+      ``(mem_k f32[L, N_MAX, D], mem_v f32[L, N_MAX, D])`` — the
+      *projected* cross-attention keys/values per decoder layer. Projecting
+      here (once per request) instead of in every decode step removes an
+      O(M·N·D²) redundancy from the serial decode loop.
+    """
+    d = cfg.d_model
+    x = p["emb"][tokens[0]] * jnp.sqrt(jnp.float32(d)) + _sinusoidal(N_MAX, d)
+    attn_mask = jnp.broadcast_to(length_mask(length), (N_MAX, N_MAX))
+    for l in range(cfg.layers):
+        pre = f"enc{l}"
+        sa = _mha_cached(
+            x, x @ p[f"{pre}_self_wk"], x @ p[f"{pre}_self_wv"], attn_mask,
+            p[f"{pre}_self_wq"], p[f"{pre}_self_wo"], cfg.n_heads)
+        x = _ln(x + sa, p[f"{pre}_ln0_g"], p[f"{pre}_ln0_b"])
+        ff = jax.nn.relu(x @ p[f"{pre}_ffn_w1"] + p[f"{pre}_ffn_b1"])
+        ff = ff @ p[f"{pre}_ffn_w2"] + p[f"{pre}_ffn_b2"]
+        x = _ln(x + ff, p[f"{pre}_ln1_g"], p[f"{pre}_ln1_b"])
+    mem_k = jnp.stack([x @ p[f"dec{l}_cross_wk"] for l in range(cfg.layers)])
+    mem_v = jnp.stack([x @ p[f"dec{l}_cross_wv"] for l in range(cfg.layers)])
+    return mem_k, mem_v
+
+
+def transformer_decode_step(p, cfg: TransformerConfig, mem_k, mem_v, length,
+                            cache_k, cache_v, pos, token):
+    """One KV-cached greedy decode step.
+
+    Args:
+      mem_k, mem_v: ``f32[L, N_MAX, D]`` projected cross-attn keys/values.
+      length: ``i32[]`` source length (cross-attn mask).
+      cache_k, cache_v: ``f32[L, M_MAX, D]`` projected self-attn KV cache.
+      pos: ``i32[]`` current decode position (0-based).
+      token: ``i32[1]`` previous target token (BOS at pos 0).
+
+    Returns:
+      ``(next_token i32[1], cache_k', cache_v', pos+1)`` — caches updated
+      at ``pos`` and the position counter advanced, so the rust driver can
+      treat the state tuple generically (``state' = outputs[1..]``).
+    """
+    d = cfg.d_model
+    pe = _sinusoidal(M_MAX, d)
+    x = p["emb"][token] * jnp.sqrt(jnp.float32(d)) + \
+        jax.lax.dynamic_slice(pe, (pos, 0), (1, d))  # [1, D]
+    # Self-attn mask: attend to cache positions <= pos.
+    self_mask = jnp.where(jnp.arange(M_MAX) <= pos, 0.0, NEG_INF)[None, :]
+    cross_mask = length_mask(length)
+    for l in range(cfg.layers):
+        pre = f"dec{l}"
+        # Append this step's projected K/V to the layer cache at `pos`.
+        k_new = x @ p[f"{pre}_self_wk"]  # [1, D]
+        v_new = x @ p[f"{pre}_self_wv"]
+        cache_k = jax.lax.dynamic_update_slice(cache_k, k_new[None], (l, pos, 0))
+        cache_v = jax.lax.dynamic_update_slice(cache_v, v_new[None], (l, pos, 0))
+        sa = _mha_cached(x, cache_k[l], cache_v[l], self_mask,
+                         p[f"{pre}_self_wq"], p[f"{pre}_self_wo"], cfg.n_heads)
+        x = _ln(x + sa, p[f"{pre}_ln0_g"], p[f"{pre}_ln0_b"])
+        ca = _mha_cached(x, mem_k[l], mem_v[l], cross_mask,
+                         p[f"{pre}_cross_wq"], p[f"{pre}_cross_wo"],
+                         cfg.n_heads)
+        x = _ln(x + ca, p[f"{pre}_ln1_g"], p[f"{pre}_ln1_b"])
+        ff = jax.nn.relu(x @ p[f"{pre}_ffn_w1"] + p[f"{pre}_ffn_b1"])
+        ff = ff @ p[f"{pre}_ffn_w2"] + p[f"{pre}_ffn_b2"]
+        x = _ln(x + ff, p[f"{pre}_ln2_g"], p[f"{pre}_ln2_b"])
+    logits = x @ p["proj_w"] + p["proj_b"]
+    nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return nxt, cache_k, cache_v, pos + 1
+
+
+# ---------------------------------------------------------------------------
+# Model registry (consumed by aot.py, the pytest suite and — via the JSON
+# manifest aot.py emits — the rust runtime)
+# ---------------------------------------------------------------------------
+#
+# Runtime contract (rust/src/runtime/seq2seq.rs):
+#
+#   encode  inputs : (weights..., tokens i32[1,N_MAX], length i32[])
+#   encode  outputs: tuple  E = (e_0, ..., e_k)
+#   decode  inputs : (weights..., d_0, ..., d_m, token i32[1])
+#   decode  outputs: (next_token i32[1], s_0', ..., s_j')
+#
+# Each decode input d_i is described by a `DecodeInput` source:
+#   {"kind": "enc",    "idx": i}            — encode output i (constant per
+#                                             request)
+#   {"kind": "length"}                      — the source length scalar
+#   {"kind": "state",  "idx": j, "init": …} — loop state: fed from decode
+#                                             output j+1 on later steps;
+#                                             first step from `init`, which
+#                                             is either {"kind":"enc","idx":i}
+#                                             or {"kind":"zeros","shape":…,
+#                                             "dtype":"f32"|"i32"}
+#   {"kind": "token"}                       — previous target token
+# The rust driver is fully generic over this description.
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeInput:
+    kind: str                      # "enc" | "length" | "state" | "token"
+    idx: int = -1                  # enc-output or state index
+    init: Any = None               # for kind == "state"
+
+    def to_json(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {"kind": self.kind}
+        if self.kind in ("enc", "state"):
+            out["idx"] = self.idx
+        if self.init is not None:
+            out["init"] = self.init
+        return out
+
+
+def _zeros_init(shape, dtype="f32"):
+    return {"kind": "zeros", "shape": list(shape), "dtype": dtype}
+
+
+def _enc_init(idx):
+    return {"kind": "enc", "idx": idx}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Binds a model id to its config, init/encode/decode fns and the
+    decode-loop wiring used by both AOT lowering and the rust runtime."""
+
+    name: str
+    lang_pair: str            # corpus id this model is evaluated on
+    arch: str                 # "bilstm" | "gru" | "transformer"
+    cfg: Any
+    init: Any                 # init(key) -> params dict
+    encode: Any               # encode(p, tokens, length) -> tuple
+    decode_step: Any          # decode_step(p, *decode_inputs_in_order)
+    decode_inputs: Tuple[DecodeInput, ...]
+
+    @property
+    def n_state(self) -> int:
+        return sum(1 for d in self.decode_inputs if d.kind == "state")
+
+
+def _sds(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def make_specs() -> List[ModelSpec]:
+    """The three paper models, in Table-I order."""
+    bi = BiLstmConfig()
+    gr = GruConfig()
+    tr = TransformerConfig()
+    return [
+        ModelSpec(
+            name="bilstm_de_en",
+            lang_pair="de_en",
+            arch="bilstm",
+            cfg=bi,
+            init=lambda key: bilstm_init(key, bi),
+            encode=lambda p, t, n: bilstm_encode(p, bi, t, n),
+            decode_step=lambda p, enc, n, h, c, tok: bilstm_decode_step(
+                p, bi, enc, n, h, c, tok),
+            decode_inputs=(
+                DecodeInput("enc", 0),                       # enc_attn
+                DecodeInput("length"),
+                DecodeInput("state", 0, _enc_init(1)),       # h <- h0
+                DecodeInput("state", 1, _enc_init(2)),       # c <- c0
+                DecodeInput("token"),
+            ),
+        ),
+        ModelSpec(
+            name="gru_fr_en",
+            lang_pair="fr_en",
+            arch="gru",
+            cfg=gr,
+            init=lambda key: gru_init(key, gr),
+            encode=lambda p, t, n: gru_encode(p, gr, t, n),
+            decode_step=lambda p, ctx, h, tok: gru_decode_step(
+                p, gr, ctx, h, tok),
+            decode_inputs=(
+                DecodeInput("enc", 0),                       # ctx
+                DecodeInput("state", 0, _zeros_init((1, gr.hidden))),
+                DecodeInput("token"),
+            ),
+        ),
+        ModelSpec(
+            name="transformer_en_zh",
+            lang_pair="en_zh",
+            arch="transformer",
+            cfg=tr,
+            init=lambda key: transformer_init(key, tr),
+            encode=lambda p, t, n: transformer_encode(p, tr, t, n),
+            decode_step=lambda p, mk, mv, n, ck, cv, pos, tok:
+                transformer_decode_step(p, tr, mk, mv, n, ck, cv, pos, tok),
+            decode_inputs=(
+                DecodeInput("enc", 0),                       # mem_k
+                DecodeInput("enc", 1),                       # mem_v
+                DecodeInput("length"),
+                DecodeInput("state", 0,
+                            _zeros_init((tr.layers, M_MAX, tr.d_model))),
+                DecodeInput("state", 1,
+                            _zeros_init((tr.layers, M_MAX, tr.d_model))),
+                DecodeInput("state", 2, _zeros_init((), "i32")),  # pos
+                DecodeInput("token"),
+            ),
+        ),
+    ]
+
+
+def spec_by_name(name: str) -> ModelSpec:
+    for s in make_specs():
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown model spec: {name}")
+
+
+def encode_example_args() -> Tuple[Any, Any]:
+    """Example (tokens, length) ShapeDtypeStructs for lowering `encode`."""
+    return _sds((1, N_MAX), jnp.int32), _sds((), jnp.int32)
+
+
+def decode_example_args(spec: ModelSpec) -> List[Any]:
+    """ShapeDtypeStructs for each decode input of `spec`, in order.
+
+    Shapes for "enc"-sourced inputs come from `jax.eval_shape` on the
+    encoder; "state" inputs from their init descriptors (zeros shape, or
+    the encoder output they are seeded from).
+    """
+    params = jax.eval_shape(spec.init, jax.random.PRNGKey(0))
+    enc_shapes = jax.eval_shape(
+        spec.encode, params, *encode_example_args())
+    if not isinstance(enc_shapes, (tuple, list)):
+        enc_shapes = (enc_shapes,)
+    args: List[Any] = []
+    for d in spec.decode_inputs:
+        if d.kind == "enc":
+            args.append(_sds(enc_shapes[d.idx].shape, enc_shapes[d.idx].dtype))
+        elif d.kind == "length":
+            args.append(_sds((), jnp.int32))
+        elif d.kind == "token":
+            args.append(_sds((1,), jnp.int32))
+        elif d.kind == "state":
+            if d.init["kind"] == "enc":
+                e = enc_shapes[d.init["idx"]]
+                args.append(_sds(e.shape, e.dtype))
+            else:
+                dt = jnp.int32 if d.init["dtype"] == "i32" else jnp.float32
+                args.append(_sds(tuple(d.init["shape"]), dt))
+        else:
+            raise ValueError(f"bad decode input kind {d.kind}")
+    return args

@@ -1,0 +1,117 @@
+"""AOT path tests: HLO text well-formedness, manifest consistency, weight
+blob layout — the python half of the artifact contract the rust runtime
+relies on (rust/src/runtime/manifest.rs is the other half).
+
+Lowering all three models takes ~minutes, so these tests lower ONE small
+model (the GRU) from scratch and, when `make artifacts` has already run,
+validate the shipped artifacts directory too.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.fixture(scope="module")
+def gru_export(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    spec = M.spec_by_name("gru_fr_en")
+    entry = aot.export_model(spec, out)
+    return out, entry
+
+
+class TestExport:
+    def test_hlo_text_is_parseable_hlo(self, gru_export):
+        out, entry = gru_export
+        for key in ("encode_hlo", "decode_hlo"):
+            path = os.path.join(out, entry[key])
+            text = open(path).read()
+            assert text.startswith("HloModule"), f"{key} missing HloModule header"
+            assert "ENTRY" in text
+            # Parameters present (weights passed as params, not constants).
+            assert "parameter(0)" in text
+
+    def test_weights_blob_matches_manifest(self, gru_export):
+        out, entry = gru_export
+        blob = open(os.path.join(out, entry["weights_bin"]), "rb").read()
+        total = sum(p["nbytes"] for p in entry["params"])
+        assert len(blob) == total
+        # Offsets dense and ordered.
+        expect = 0
+        for p in entry["params"]:
+            assert p["offset"] == expect
+            shape_elems = int(np.prod(p["shape"])) if p["shape"] else 1
+            assert shape_elems * 4 == p["nbytes"]
+            expect += p["nbytes"]
+
+    def test_params_sorted_by_name(self, gru_export):
+        _, entry = gru_export
+        names = [p["name"] for p in entry["params"]]
+        assert names == sorted(names)
+
+    def test_sha256_matches(self, gru_export):
+        out, entry = gru_export
+        import hashlib
+        blob = open(os.path.join(out, entry["weights_bin"]), "rb").read()
+        assert hashlib.sha256(blob).hexdigest() == entry["weights_sha256"]
+
+    def test_decode_wiring_round_trips_registry(self, gru_export):
+        _, entry = gru_export
+        spec = M.spec_by_name("gru_fr_en")
+        assert entry["decode_inputs"] == [d.to_json() for d in spec.decode_inputs]
+        assert entry["n_state"] == spec.n_state
+
+    def test_export_is_deterministic(self, gru_export, tmp_path):
+        out, entry = gru_export
+        entry2 = aot.export_model(M.spec_by_name("gru_fr_en"), str(tmp_path))
+        assert entry2["weights_sha256"] == entry["weights_sha256"]
+        a = open(os.path.join(out, entry["encode_hlo"])).read()
+        b = open(os.path.join(str(tmp_path), entry2["encode_hlo"])).read()
+        assert a == b
+
+
+class TestShippedArtifacts:
+    """Validate artifacts/ when it exists (after `make artifacts`)."""
+
+    def _manifest(self):
+        path = os.path.join(ARTIFACTS, "manifest.json")
+        if not os.path.exists(path):
+            pytest.skip("artifacts not built (run `make artifacts`)")
+        return json.load(open(path))
+
+    def test_manifest_constants(self):
+        man = self._manifest()
+        assert man["n_max"] == M.N_MAX
+        assert man["m_max"] == M.M_MAX
+        assert man["vocab"] == M.VOCAB
+        assert man["eos_id"] == M.EOS_ID
+        assert len(man["models"]) == 3
+
+    def test_all_files_exist_with_right_sizes(self):
+        man = self._manifest()
+        for entry in man["models"]:
+            for key in ("encode_hlo", "decode_hlo", "weights_bin"):
+                path = os.path.join(ARTIFACTS, entry[key])
+                assert os.path.exists(path), path
+            blob_size = os.path.getsize(os.path.join(ARTIFACTS, entry["weights_bin"]))
+            assert blob_size == sum(p["nbytes"] for p in entry["params"])
+
+    def test_models_in_table1_order(self):
+        man = self._manifest()
+        assert [m["name"] for m in man["models"]] == [
+            "bilstm_de_en",
+            "gru_fr_en",
+            "transformer_en_zh",
+        ]

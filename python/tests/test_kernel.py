@@ -1,0 +1,292 @@
+"""Kernel-vs-reference correctness: the CORE L1 signal.
+
+Hypothesis sweeps shapes/dtypes/values for every Pallas kernel and asserts
+``assert_allclose`` against the pure-jnp oracle in ``compile.kernels.ref``.
+These tests run at build time (``make test``); the AOT artifacts embed the
+kernel lowerings, so green here means the HLO the rust runtime executes is
+numerically equivalent to the reference math.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    attention,
+    attention_heads,
+    gru_cell,
+    lstm_cell,
+    merge_heads,
+    mha,
+    split_heads,
+)
+from compile.kernels.gru_cell import gru_cell_pre
+from compile.kernels.lstm_cell import lstm_cell_pre
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+# interpret-mode Pallas is slow; keep example counts tight but meaningful.
+KERNEL_SETTINGS = settings(max_examples=25, deadline=None)
+
+_dims = st.sampled_from([1, 2, 3, 4, 7, 8, 16, 32, 64, 128])
+_small_dims = st.sampled_from([1, 2, 3, 4, 8, 16])
+_seeds = st.integers(min_value=0, max_value=2**31 - 1)
+_dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+class TestLstmCell:
+    @KERNEL_SETTINGS
+    @given(b=_small_dims, i=_dims, h=_dims, seed=_seeds, dtype=_dtypes)
+    def test_matches_ref(self, b, i, h, seed, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _rand(ks[0], (b, i), dtype)
+        hh = _rand(ks[1], (b, h), dtype)
+        cc = _rand(ks[2], (b, h), dtype)
+        w_ih = _rand(ks[3], (i, 4 * h), dtype, 0.1)
+        w_hh = _rand(ks[4], (h, 4 * h), dtype, 0.1)
+        bias = _rand(ks[5], (4 * h,), dtype, 0.1)
+        got_h, got_c = lstm_cell(x, hh, cc, w_ih, w_hh, bias)
+        want_h, want_c = ref.lstm_cell_ref(
+            x.astype(jnp.float32), hh.astype(jnp.float32),
+            cc.astype(jnp.float32), w_ih.astype(jnp.float32),
+            w_hh.astype(jnp.float32), bias.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(got_h, np.float32), np.asarray(want_h), **_tol(dtype))
+        np.testing.assert_allclose(
+            np.asarray(got_c, np.float32), np.asarray(want_c), **_tol(dtype))
+
+    def test_gate_saturation_bounds(self):
+        """|h'| = |o * tanh(c')| <= 1 elementwise, even with saturated gates."""
+        k = jax.random.PRNGKey(0)
+        ks = jax.random.split(k, 6)
+        b, i, h = 2, 8, 16
+        x = _rand(ks[0], (b, i), scale=100.0)  # saturate gates
+        hh = _rand(ks[1], (b, h))
+        cc = _rand(ks[2], (b, h))
+        w_ih = _rand(ks[3], (i, 4 * h))
+        w_hh = _rand(ks[4], (h, 4 * h))
+        bias = _rand(ks[5], (4 * h,))
+        got_h, _ = lstm_cell(x, hh, cc, w_ih, w_hh, bias)
+        assert np.all(np.abs(np.asarray(got_h)) <= 1.0 + 1e-6)
+
+    def test_zero_input_forget_dynamics(self):
+        """With w=0, b=0: i=f=o=0.5, g=0 => c' = 0.5c, h' = 0.5*tanh(0.5c)."""
+        b, i, h = 1, 4, 8
+        x = jnp.zeros((b, i))
+        hh = jnp.zeros((b, h))
+        cc = jnp.ones((b, h))
+        w_ih = jnp.zeros((i, 4 * h))
+        w_hh = jnp.zeros((h, 4 * h))
+        bias = jnp.zeros((4 * h,))
+        got_h, got_c = lstm_cell(x, hh, cc, w_ih, w_hh, bias)
+        np.testing.assert_allclose(np.asarray(got_c), 0.5, rtol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(got_h), 0.5 * np.tanh(0.5), rtol=1e-6)
+
+
+class TestGruCell:
+    @KERNEL_SETTINGS
+    @given(b=_small_dims, i=_dims, h=_dims, seed=_seeds, dtype=_dtypes)
+    def test_matches_ref(self, b, i, h, seed, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _rand(ks[0], (b, i), dtype)
+        hh = _rand(ks[1], (b, h), dtype)
+        w_ih = _rand(ks[2], (i, 3 * h), dtype, 0.1)
+        w_hh = _rand(ks[3], (h, 3 * h), dtype, 0.1)
+        b_ih = _rand(ks[4], (3 * h,), dtype, 0.1)
+        b_hh = _rand(ks[5], (3 * h,), dtype, 0.1)
+        got = gru_cell(x, hh, w_ih, w_hh, b_ih, b_hh)
+        want = ref.gru_cell_ref(
+            x.astype(jnp.float32), hh.astype(jnp.float32),
+            w_ih.astype(jnp.float32), w_hh.astype(jnp.float32),
+            b_ih.astype(jnp.float32), b_hh.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want), **_tol(dtype))
+
+    def test_identity_when_update_gate_saturates(self):
+        """Huge +bias on z => z ~ 1 => h' ~ h (GRU keeps state)."""
+        b, i, h = 1, 4, 8
+        x = jnp.ones((b, i))
+        hh = jnp.linspace(-1, 1, h).reshape(1, h)
+        w_ih = jnp.zeros((i, 3 * h))
+        w_hh = jnp.zeros((h, 3 * h))
+        b_ih = jnp.zeros((3 * h,)).at[h : 2 * h].set(50.0)
+        b_hh = jnp.zeros((3 * h,))
+        got = gru_cell(x, hh, w_ih, w_hh, b_ih, b_hh)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(hh), atol=1e-5)
+
+    def test_convex_combination_bound(self):
+        """h' = (1-z)n + zh with |n|<=1 => |h'| <= max(1, |h|)."""
+        ks = jax.random.split(jax.random.PRNGKey(7), 6)
+        b, i, h = 3, 8, 16
+        x = _rand(ks[0], (b, i))
+        hh = _rand(ks[1], (b, h), scale=0.5)
+        got = gru_cell(
+            x, hh, _rand(ks[2], (i, 3 * h)), _rand(ks[3], (h, 3 * h)),
+            _rand(ks[4], (3 * h,)), _rand(ks[5], (3 * h,)))
+        bound = np.maximum(1.0, np.abs(np.asarray(hh))) + 1e-5
+        assert np.all(np.abs(np.asarray(got)) <= bound)
+
+
+class TestAttention:
+    @KERNEL_SETTINGS
+    @given(lq=_dims, lk=_dims, d=_dims, seed=_seeds, dtype=_dtypes)
+    def test_matches_ref(self, lq, lk, d, seed, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = _rand(ks[0], (lq, d), dtype)
+        k = _rand(ks[1], (lk, d), dtype)
+        v = _rand(ks[2], (lk, d), dtype)
+        # random binary mask, but never a fully-masked row
+        mask_bits = jax.random.bernoulli(ks[3], 0.8, (lq, lk))
+        mask_bits = mask_bits.at[:, 0].set(True)
+        mask = jnp.where(mask_bits, 0.0, -1e9).astype(dtype)
+        got = attention(q, k, v, mask)
+        want = ref.attention_ref(
+            q.astype(jnp.float32), k.astype(jnp.float32),
+            v.astype(jnp.float32), mask.astype(jnp.float32))
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want), **_tol(dtype))
+
+    def test_fully_causal_mask_first_row_copies_v0(self):
+        """Causal mask: first query attends only to k0 => out[0] == v[0]."""
+        lq = lk = 8
+        d = 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q, k, v = (_rand(ks[i], (lq, d)) for i in range(3))
+        causal = jnp.where(
+            jnp.arange(lq)[:, None] >= jnp.arange(lk)[None, :], 0.0, -1e9)
+        got = attention(q, k, v, causal)
+        np.testing.assert_allclose(
+            np.asarray(got)[0], np.asarray(v)[0], rtol=1e-5, atol=1e-5)
+
+    def test_uniform_scores_average_values(self):
+        """q=0 => uniform softmax => output rows are mean of v."""
+        lq, lk, d = 4, 8, 16
+        ks = jax.random.split(jax.random.PRNGKey(2), 2)
+        q = jnp.zeros((lq, d))
+        k = _rand(ks[0], (lk, d))
+        v = _rand(ks[1], (lk, d))
+        got = attention(q, k, v, jnp.zeros((lq, lk)))
+        want = np.tile(np.asarray(v).mean(axis=0), (lq, 1))
+        np.testing.assert_allclose(np.asarray(got), want, rtol=1e-5, atol=1e-5)
+
+    def test_softmax_translation_invariance(self):
+        """Adding a constant to the mask leaves the output unchanged."""
+        lq, lk, d = 4, 8, 8
+        ks = jax.random.split(jax.random.PRNGKey(3), 3)
+        q, k = _rand(ks[0], (lq, d)), _rand(ks[1], (lk, d))
+        v = _rand(ks[2], (lk, d))
+        base = attention(q, k, v, jnp.zeros((lq, lk)))
+        shifted = attention(q, k, v, jnp.full((lq, lk), 3.5))
+        np.testing.assert_allclose(
+            np.asarray(base), np.asarray(shifted), rtol=1e-5, atol=1e-5)
+
+
+class TestPreProjectedVariants:
+    """The perf variants (input projection hoisted out of the recurrence)
+    must be numerically identical to the fused cells."""
+
+    @KERNEL_SETTINGS
+    @given(b=_small_dims, i=_dims, h=_dims, seed=_seeds)
+    def test_lstm_pre_matches_fused(self, b, i, h, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _rand(ks[0], (b, i))
+        hh = _rand(ks[1], (b, h))
+        cc = _rand(ks[2], (b, h))
+        w_ih = _rand(ks[3], (i, 4 * h), scale=0.1)
+        w_hh = _rand(ks[4], (h, 4 * h), scale=0.1)
+        bias = _rand(ks[5], (4 * h,), scale=0.1)
+        fused_h, fused_c = lstm_cell(x, hh, cc, w_ih, w_hh, bias)
+        pre_h, pre_c = lstm_cell_pre(x @ w_ih, hh, cc, w_hh, bias)
+        np.testing.assert_allclose(
+            np.asarray(fused_h), np.asarray(pre_h), rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(fused_c), np.asarray(pre_c), rtol=1e-5, atol=1e-5)
+
+    @KERNEL_SETTINGS
+    @given(b=_small_dims, i=_dims, h=_dims, seed=_seeds)
+    def test_gru_pre_matches_fused(self, b, i, h, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _rand(ks[0], (b, i))
+        hh = _rand(ks[1], (b, h))
+        w_ih = _rand(ks[2], (i, 3 * h), scale=0.1)
+        w_hh = _rand(ks[3], (h, 3 * h), scale=0.1)
+        b_ih = _rand(ks[4], (3 * h,), scale=0.1)
+        b_hh = _rand(ks[5], (3 * h,), scale=0.1)
+        fused = gru_cell(x, hh, w_ih, w_hh, b_ih, b_hh)
+        pre = gru_cell_pre(x @ w_ih + b_ih, hh, w_hh, b_hh)
+        np.testing.assert_allclose(
+            np.asarray(fused), np.asarray(pre), rtol=1e-5, atol=1e-5)
+
+
+class TestBatchedHeads:
+    """attention_heads (grid over heads) vs per-head reference."""
+
+    @KERNEL_SETTINGS
+    @given(
+        lq=_small_dims, lk=_small_dims,
+        n_heads=st.sampled_from([1, 2, 4]),
+        dh=st.sampled_from([4, 8, 16]),
+        seed=_seeds,
+    )
+    def test_matches_per_head(self, lq, lk, n_heads, dh, seed):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = _rand(ks[0], (n_heads, lq, dh))
+        k = _rand(ks[1], (n_heads, lk, dh))
+        v = _rand(ks[2], (n_heads, lk, dh))
+        mask_bits = jax.random.bernoulli(ks[3], 0.85, (lq, lk))
+        mask_bits = mask_bits.at[:, 0].set(True)
+        mask = jnp.where(mask_bits, 0.0, -1e9)
+        got = attention_heads(q, k, v, mask)
+        for hi in range(n_heads):
+            want = ref.attention_ref(q[hi], k[hi], v[hi], mask)
+            np.testing.assert_allclose(
+                np.asarray(got[hi]), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+    def test_split_merge_roundtrip(self):
+        x = jnp.arange(6 * 32, dtype=jnp.float32).reshape(6, 32)
+        back = merge_heads(split_heads(x, 4))
+        np.testing.assert_array_equal(np.asarray(back), np.asarray(x))
+
+
+class TestMha:
+    @KERNEL_SETTINGS
+    @given(
+        lq=_small_dims, lk=_small_dims,
+        n_heads=st.sampled_from([1, 2, 4]),
+        dh=st.sampled_from([4, 8, 16]),
+        seed=_seeds,
+    )
+    def test_matches_ref(self, lq, lk, n_heads, dh, seed):
+        d = n_heads * dh
+        ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+        q = _rand(ks[0], (lq, d))
+        k = _rand(ks[1], (lk, d))
+        v = _rand(ks[2], (lk, d))
+        wq, wk, wv, wo = (_rand(ks[3 + i], (d, d), scale=0.2)
+                          for i in range(4))
+        mask = jnp.zeros((lq, lk))
+        got = mha(q, k, v, mask, wq, wk, wv, wo, n_heads)
+        want = ref.mha_ref(q, k, v, mask, wq, wk, wv, wo, n_heads)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_rejects_bad_head_count(self):
+        d = 12
+        q = jnp.zeros((2, d))
+        w = jnp.eye(d)
+        with pytest.raises(AssertionError):
+            mha(q, q, q, jnp.zeros((2, 2)), w, w, w, w, n_heads=5)

@@ -1,0 +1,195 @@
+"""L2 model tests: shapes, decode-loop semantics, registry contract.
+
+These validate the encode/decode-step functions that get AOT-lowered —
+static shapes, state threading, mask behaviour — plus full greedy decode
+loops run in python that mirror exactly what the rust driver does.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _tokens(ids):
+    """Pad a python list of ids to [1, N_MAX] and return (tokens, length)."""
+    t = np.full((1, M.N_MAX), M.PAD_ID, np.int32)
+    t[0, : len(ids)] = ids
+    return jnp.asarray(t), jnp.asarray(len(ids), jnp.int32)
+
+
+@pytest.fixture(scope="module")
+def specs():
+    return {s.name: s for s in M.make_specs()}
+
+
+@pytest.fixture(scope="module")
+def params(specs):
+    return {
+        name: spec.init(jax.random.PRNGKey(7)) for name, spec in specs.items()
+    }
+
+
+def _decode_inputs_initial(spec, enc_out, length):
+    """Mirror of the rust driver's first-step decode input assembly."""
+    args = []
+    for d in spec.decode_inputs:
+        if d.kind == "enc":
+            args.append(enc_out[d.idx])
+        elif d.kind == "length":
+            args.append(length)
+        elif d.kind == "token":
+            args.append(jnp.asarray([M.BOS_ID], jnp.int32))
+        elif d.kind == "state":
+            if d.init["kind"] == "enc":
+                args.append(enc_out[d.init["idx"]])
+            else:
+                dt = jnp.int32 if d.init["dtype"] == "i32" else jnp.float32
+                args.append(jnp.zeros(tuple(d.init["shape"]), dt))
+    return args
+
+
+def _greedy_decode(spec, p, src_ids, steps):
+    """Run encode + `steps` decode steps, returning emitted tokens."""
+    tokens, length = _tokens(src_ids)
+    enc_out = spec.encode(p, tokens, length)
+    if not isinstance(enc_out, tuple):
+        enc_out = (enc_out,)
+    args = _decode_inputs_initial(spec, enc_out, length)
+    state_pos = [i for i, d in enumerate(spec.decode_inputs)
+                 if d.kind == "state"]
+    token_pos = next(i for i, d in enumerate(spec.decode_inputs)
+                     if d.kind == "token")
+    out_tokens = []
+    for _ in range(steps):
+        outs = spec.decode_step(p, *args)
+        nxt, states = outs[0], outs[1:]
+        out_tokens.append(int(nxt[0]))
+        assert len(states) == len(state_pos), (
+            "decode_step must return exactly its state tensors")
+        for slot, s in zip(state_pos, states):
+            args[slot] = s
+        args[token_pos] = nxt
+    return out_tokens
+
+
+class TestShapes:
+    @pytest.mark.parametrize("name", [
+        "bilstm_de_en", "gru_fr_en", "transformer_en_zh"])
+    def test_encode_shapes_match_eval_shape(self, specs, params, name):
+        spec, p = specs[name], params[name]
+        tokens, length = _tokens([5, 6, 7])
+        got = spec.encode(p, tokens, length)
+        if not isinstance(got, tuple):
+            got = (got,)
+        want = jax.eval_shape(spec.encode, p, *M.encode_example_args())
+        if not isinstance(want, tuple):
+            want = (want,)
+        assert len(got) == len(want)
+        for g, w in zip(got, want):
+            assert g.shape == w.shape, (name, g.shape, w.shape)
+            assert g.dtype == w.dtype
+
+    @pytest.mark.parametrize("name", [
+        "bilstm_de_en", "gru_fr_en", "transformer_en_zh"])
+    def test_decode_example_args_accepted(self, specs, params, name):
+        """decode_step must trace with exactly the manifest's arg shapes."""
+        spec, p = specs[name], params[name]
+        args = [jnp.zeros(a.shape, a.dtype) for a in M.decode_example_args(spec)]
+        outs = spec.decode_step(p, *args)
+        assert outs[0].shape == (1,)
+        assert outs[0].dtype == jnp.int32
+        assert len(outs) == 1 + spec.n_state
+
+
+class TestDecodeLoop:
+    @pytest.mark.parametrize("name", [
+        "bilstm_de_en", "gru_fr_en", "transformer_en_zh"])
+    def test_greedy_decode_deterministic(self, specs, params, name):
+        spec, p = specs[name], params[name]
+        a = _greedy_decode(spec, p, [10, 11, 12, 13], steps=5)
+        b = _greedy_decode(spec, p, [10, 11, 12, 13], steps=5)
+        assert a == b
+        assert all(0 <= t < M.VOCAB for t in a)
+
+    @pytest.mark.parametrize("name", [
+        "bilstm_de_en", "gru_fr_en", "transformer_en_zh"])
+    def test_output_depends_on_input(self, specs, params, name):
+        """Different source sentences should (generically) decode
+        differently — guards against the context being dropped."""
+        spec, p = specs[name], params[name]
+        a = _greedy_decode(spec, p, [10, 11, 12, 13], steps=6)
+        b = _greedy_decode(spec, p, [900, 901, 902, 903, 904, 905], steps=6)
+        assert a != b
+
+    @pytest.mark.parametrize("name", [
+        "bilstm_de_en", "gru_fr_en", "transformer_en_zh"])
+    def test_padding_invariance(self, specs, params, name):
+        """Tokens past `length` must not affect the decode — this is the
+        masking contract the rust driver relies on when it pads."""
+        spec, p = specs[name], params[name]
+        src = [42, 43, 44]
+        tokens_a, length = _tokens(src)
+        tokens_b = tokens_a.at[0, 10:20].set(999)  # garbage in padding
+        enc_a = spec.encode(p, tokens_a, length)
+        enc_b = spec.encode(p, tokens_b, length)
+        if not isinstance(enc_a, tuple):
+            enc_a, enc_b = (enc_a,), (enc_b,)
+        for ea, eb in zip(enc_a, enc_b):
+            if ea.dtype in (jnp.float32, jnp.bfloat16):
+                # BiLSTM enc_attn rows in the padded region differ (they are
+                # masked at attention time); compare only valid rows when the
+                # first axis is the sequence axis.
+                if ea.ndim >= 2 and ea.shape[-2] == M.N_MAX:
+                    ea = ea[..., : len(src), :]
+                    eb = eb[..., : len(src), :]
+                elif ea.ndim >= 2 and ea.shape[0] == M.N_MAX:
+                    ea, eb = ea[: len(src)], eb[: len(src)]
+                np.testing.assert_allclose(
+                    np.asarray(ea), np.asarray(eb), rtol=1e-5, atol=1e-6)
+
+    def test_transformer_pos_advances(self, specs, params):
+        spec, p = specs["transformer_en_zh"], params["transformer_en_zh"]
+        tokens, length = _tokens([9, 8, 7])
+        enc = spec.encode(p, tokens, length)
+        args = _decode_inputs_initial(spec, enc, length)
+        outs = spec.decode_step(p, *args)
+        # state order: cache_k, cache_v, pos
+        assert int(outs[3]) == 1
+        ck = np.asarray(outs[1])
+        # cache slot 0 must be written, slots >0 still zero
+        assert np.abs(ck[:, 0, :]).sum() > 0
+        assert np.abs(ck[:, 1:, :]).sum() == 0
+
+
+class TestRegistry:
+    def test_three_specs_in_table1_order(self):
+        names = [s.name for s in M.make_specs()]
+        assert names == ["bilstm_de_en", "gru_fr_en", "transformer_en_zh"]
+
+    def test_spec_by_name_roundtrip(self):
+        for s in M.make_specs():
+            assert M.spec_by_name(s.name).name == s.name
+        with pytest.raises(KeyError):
+            M.spec_by_name("nope")
+
+    def test_decode_inputs_have_single_token_slot(self):
+        for s in M.make_specs():
+            kinds = [d.kind for d in s.decode_inputs]
+            assert kinds.count("token") == 1
+            assert kinds[-1] == "token", "token is last by convention"
+            # state indices are dense 0..n_state-1
+            idxs = sorted(d.idx for d in s.decode_inputs if d.kind == "state")
+            assert idxs == list(range(s.n_state))
+
+    def test_state_inits_well_formed(self):
+        for s in M.make_specs():
+            for d in s.decode_inputs:
+                if d.kind == "state":
+                    assert d.init["kind"] in ("enc", "zeros")
+                    if d.init["kind"] == "zeros":
+                        assert d.init["dtype"] in ("f32", "i32")

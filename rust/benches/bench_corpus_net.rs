@@ -1,0 +1,62 @@
+//! Substrate benches: corpus generation, prefiltering, trace synthesis
+//! and replay — the per-request costs of the experiment harness itself
+//! (they bound how fast `experiment table1` can go).
+
+use cnmt::corpus::{prefilter, CorpusGenerator, LangPair, PrefilterRules, Tokenizer};
+use cnmt::net::trace::ConnectionProfile;
+use cnmt::net::TraceGenerator;
+use cnmt::util::bench::{bench, bench_throughput, report, BenchConfig};
+use cnmt::util::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+
+    // Corpus generation throughput.
+    for pair in [LangPair::DeEn, LangPair::EnZh] {
+        let mut gen = CorpusGenerator::new(pair, 1);
+        results.push(bench_throughput(
+            &format!("corpus_gen/{}", pair.id()),
+            BenchConfig { warmup_iters: 2, samples: 20, iters_per_sample: 1 },
+            10_000.0,
+            move || gen.take(10_000).len(),
+        ));
+    }
+
+    // Prefiltering throughput.
+    let mut gen = CorpusGenerator::new(LangPair::FrEn, 2);
+    let pairs = gen.take(20_000);
+    results.push(bench_throughput(
+        "prefilter/20k_pairs",
+        BenchConfig { warmup_iters: 2, samples: 20, iters_per_sample: 1 },
+        20_000.0,
+        move || prefilter(&pairs, &PrefilterRules::default()).1.kept,
+    ));
+
+    // Trace synthesis (4h CP1 profile).
+    let mut tg = TraceGenerator::new(3);
+    results.push(bench(
+        "trace_gen/cp1_4h",
+        BenchConfig { warmup_iters: 2, samples: 20, iters_per_sample: 1 },
+        move || tg.profile(ConnectionProfile::Cp1).len(),
+    ));
+
+    // Trace replay lookup (binary search, hot in the truth-table build).
+    let trace = TraceGenerator::new(4).profile(ConnectionProfile::Cp1);
+    let mut rng = Rng::new(5);
+    let times: Vec<f64> = (0..1024).map(|_| rng.uniform(0.0, 14_400.0)).collect();
+    let mut i = 0usize;
+    results.push(bench("trace_rtt_at", BenchConfig::fast(), move || {
+        i = (i + 1) & 1023;
+        trace.rtt_at(times[i])
+    }));
+
+    // Tokenizer round trip.
+    let tok = Tokenizer::new(4096);
+    let mut i2 = 0u16;
+    results.push(bench("tokenizer_word_id_roundtrip", BenchConfig::fast(), move || {
+        i2 = 3 + (i2 + 1) % 4000;
+        tok.id(&tok.word(i2)).unwrap()
+    }));
+
+    report("corpus + net substrates", &results);
+}

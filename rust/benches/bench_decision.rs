@@ -1,0 +1,77 @@
+//! Decision-overhead bench — validates the paper's §II-C claim that "the
+//! C-NMT decision has negligible overheads, as it simply consists of
+//! evaluating (2) and (1)".
+//!
+//! Target: C-NMT decide() well under 1 µs — i.e. 4-6 orders of magnitude
+//! below the millisecond-scale inference it routes.
+
+use cnmt::coordinator::{PolicyKind, RouterBuilder};
+use cnmt::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use cnmt::util::bench::{bench, report, BenchConfig};
+use cnmt::util::Rng;
+
+fn mk_router(policy: PolicyKind) -> cnmt::coordinator::Router {
+    RouterBuilder::new(policy)
+        .texe(
+            TexeModel::from_coeffs(1.8e-3, 4.8e-3, 8e-3),
+            TexeModel::from_coeffs(0.3e-3, 0.8e-3, 33e-3),
+        )
+        .n2m(N2mRegressor::from_coeffs(1.05, 0.4))
+        .ttx(0.3, 0.05)
+        .build()
+        .unwrap()
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(1);
+    let ns: Vec<usize> = (0..1024).map(|_| 1 + rng.usize(61)).collect();
+
+    for policy in [
+        PolicyKind::Cnmt,
+        PolicyKind::Naive { mean_m: 12.3 },
+        PolicyKind::EdgeOnly,
+    ] {
+        let mut router = mk_router(policy);
+        router.observe_ttx(0.0, 0.05);
+        let ns_local = ns.clone();
+        let mut i = 0usize;
+        results.push(bench(
+            &format!("decide/{}", policy.id()),
+            BenchConfig::fast(),
+            move || {
+                i = (i + 1) & 1023;
+                router.decide(ns_local[i]).device
+            },
+        ));
+    }
+
+    // T_tx estimator update (per offloaded request).
+    let mut est = TtxEstimator::new(0.3);
+    let mut t = 0.0f64;
+    results.push(bench("ttx_observe", BenchConfig::fast(), move || {
+        t += 0.1;
+        est.observe(t, 0.05);
+        est.estimate_or(0.0)
+    }));
+
+    // N→M prediction alone.
+    let reg = N2mRegressor::from_coeffs(0.82, 0.6);
+    let ns2 = ns.clone();
+    let mut i = 0usize;
+    results.push(bench("n2m_predict", BenchConfig::fast(), move || {
+        i = (i + 1) & 1023;
+        reg.predict(ns2[i])
+    }));
+
+    report("decision overhead (paper §II-C: negligible)", &results);
+
+    // Hard assertion for the perf gate: decision must be sub-microsecond.
+    let cnmt = &results[0];
+    assert!(
+        cnmt.mean_ns < 1_000.0,
+        "C-NMT decision too slow: {} ns",
+        cnmt.mean_ns
+    );
+    println!("\nPASS: C-NMT decision {:.0} ns < 1 µs", cnmt.mean_ns);
+}

@@ -1,0 +1,65 @@
+//! Predictor-stack benches: OLS fitting (offline characterisation cost)
+//! and the per-request prediction primitives.
+//!
+//! The offline fit is "once-for-all" in the paper, but it reruns per
+//! (device, model) whenever the deployment recalibrates, so its cost on
+//! 10k-sample inputs is worth tracking.
+
+use cnmt::corpus::{CorpusGenerator, LangPair, PrefilterRules};
+use cnmt::predictor::fit::{fit_line, fit_plane};
+use cnmt::predictor::{N2mRegressor, TexeModel};
+use cnmt::util::bench::{bench, bench_throughput, report, BenchConfig};
+use cnmt::util::Rng;
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(2);
+
+    // 10k-sample plane fit (the paper's per-device characterisation).
+    let truth = TexeModel::from_coeffs(1.8e-3, 4.8e-3, 8e-3);
+    let plane_samples: Vec<(f64, f64, f64)> = (0..10_000)
+        .map(|_| {
+            let n = 1.0 + rng.usize(61) as f64;
+            let m = 1.0 + rng.usize(61) as f64;
+            (n, m, truth.estimate(n as usize, m) + rng.normal_ms(0.0, 1e-3))
+        })
+        .collect();
+    let ps = plane_samples.clone();
+    results.push(bench_throughput(
+        "fit_plane/10k_samples",
+        BenchConfig { warmup_iters: 3, samples: 30, iters_per_sample: 1 },
+        10_000.0,
+        move || fit_plane(&ps).unwrap().a,
+    ));
+
+    let line_samples: Vec<(f64, f64)> =
+        plane_samples.iter().map(|&(n, m, _)| (n, m)).collect();
+    let ls = line_samples.clone();
+    results.push(bench_throughput(
+        "fit_line/10k_samples",
+        BenchConfig { warmup_iters: 3, samples: 30, iters_per_sample: 1 },
+        10_000.0,
+        move || fit_line(&ls).unwrap().slope,
+    ));
+
+    // N→M fit including prefiltering (what `characterize` runs).
+    let mut gen = CorpusGenerator::new(LangPair::EnZh, 3);
+    let pairs = gen.take(10_000);
+    results.push(bench_throughput(
+        "n2m_fit_with_prefilter/10k_pairs",
+        BenchConfig { warmup_iters: 2, samples: 20, iters_per_sample: 1 },
+        10_000.0,
+        move || N2mRegressor::fit(&pairs, &PrefilterRules::default()).unwrap().gamma,
+    ));
+
+    // Per-request estimate (hot path of the router).
+    let texe = TexeModel::from_coeffs(1.8e-3, 4.8e-3, 8e-3);
+    let n2m = N2mRegressor::from_coeffs(0.82, 0.6);
+    let mut i = 0usize;
+    results.push(bench("texe_estimate_with_n2m", BenchConfig::fast(), move || {
+        i = (i + 1) & 63;
+        texe.estimate_with_n2m(1 + i, &n2m)
+    }));
+
+    report("predictor stack", &results);
+}

@@ -1,0 +1,76 @@
+//! Real-runtime benches over the PJRT engines: encoder latency, decode
+//! per-step latency, and full translations per model. These are the
+//! numbers `cnmt calibrate` feeds the T_exe fit, and the L2/L1 targets
+//! of the perf pass (EXPERIMENTS.md §Perf).
+//!
+//! Skips (cleanly) if `make artifacts` hasn't run.
+
+use std::path::Path;
+
+use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
+use cnmt::util::bench::{bench, report, BenchConfig, BenchResult};
+
+fn main() {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("SKIP bench_runtime: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let manifest = ArtifactManifest::load(&dir).unwrap();
+    let mut results: Vec<BenchResult> = Vec::new();
+
+    for model in &manifest.models {
+        let engine = Seq2SeqEngine::from_manifest(&manifest, &model.name).unwrap();
+        let short: Vec<u16> = (10..18).collect();
+        let long: Vec<u16> = (100..160).collect();
+
+        // Warmup is handled by BenchConfig; cfg tuned for ms-scale work.
+        let cfg = BenchConfig { warmup_iters: 3, samples: 12, iters_per_sample: 1 };
+
+        let e1 = &engine;
+        let s1 = short.clone();
+        results.push(bench(&format!("{}/encode_n8", model.name), cfg, move || {
+            e1.translate(&s1, TranslateOptions { force_steps: Some(1), ..Default::default() })
+                .unwrap()
+                .encode_s
+        }));
+
+        let e2 = &engine;
+        let l2 = long.clone();
+        results.push(bench(&format!("{}/encode_n60", model.name), cfg, move || {
+            e2.translate(&l2, TranslateOptions { force_steps: Some(1), ..Default::default() })
+                .unwrap()
+                .encode_s
+        }));
+
+        // Decode cost per step: (T(m=33) - T(m=1)) / 32 measured inside
+        // one bench body to cancel encode cost.
+        let e3 = &engine;
+        let s3 = short.clone();
+        results.push(bench(&format!("{}/decode_32steps", model.name), cfg, move || {
+            e3.translate(&s3, TranslateOptions { force_steps: Some(33), ..Default::default() })
+                .unwrap()
+                .decode_s
+        }));
+
+        let e4 = &engine;
+        let s4 = short.clone();
+        results.push(bench(
+            &format!("{}/translate_full_greedy", model.name),
+            BenchConfig { warmup_iters: 1, samples: 6, iters_per_sample: 1 },
+            move || {
+                e4.translate(&s4, TranslateOptions::default()).unwrap().steps
+            },
+        ));
+    }
+
+    report("runtime (real PJRT, CPU)", &results);
+
+    // Per-step summary (the paper's alpha_M analog on this hardware).
+    println!("\nper-decode-step (ms), derived from decode_32steps/33:");
+    for r in &results {
+        if r.name.ends_with("decode_32steps") {
+            println!("  {:<40} {:.3} ms/step", r.name, r.mean_ns / 33.0 / 1e6);
+        }
+    }
+}

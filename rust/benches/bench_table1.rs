@@ -1,0 +1,80 @@
+//! End-to-end Table-I bench: regenerates the paper's headline experiment
+//! at bench scale and times the full pipeline (corpus → characterise →
+//! trace → truth table → 5 policies), per dataset × profile.
+//!
+//! This is the "one bench per paper table" target for Table I; the
+//! bench-scale policy table is printed alongside timings so a change
+//! that shifts *results* is as visible as one that shifts speed.
+
+use cnmt::config::Config;
+use cnmt::coordinator::PolicyKind;
+use cnmt::corpus::LangPair;
+use cnmt::devices::Calibration;
+use cnmt::net::trace::ConnectionProfile;
+use cnmt::sim::{run_all_policies, run_policy, TruthTable};
+use cnmt::util::bench::{bench, bench_throughput, report, BenchConfig};
+
+fn main() {
+    let mut cfg = Config::smoke();
+    cfg.requests = 10_000;
+    cfg.fit_inferences = 2_000;
+    let cal = Calibration::default_paper();
+    let mut results = Vec::new();
+
+    // Truth-table construction (dominated by corpus + device sampling).
+    for pair in LangPair::ALL {
+        let cfg2 = cfg.clone();
+        let cal2 = cal.clone();
+        results.push(bench_throughput(
+            &format!("truth_table/{}", pair.id()),
+            BenchConfig::slow(),
+            cfg.requests as f64,
+            move || {
+                TruthTable::build(&cfg2, pair, ConnectionProfile::Cp1, &cal2).unwrap()
+            },
+        ));
+    }
+
+    // Policy evaluation throughput (requests routed per second).
+    let table =
+        TruthTable::build(&cfg, LangPair::DeEn, ConnectionProfile::Cp1, &cal).unwrap();
+    for policy in [
+        PolicyKind::Cnmt,
+        PolicyKind::Naive { mean_m: 12.0 },
+        PolicyKind::Oracle,
+    ] {
+        let t = table.clone();
+        results.push(bench_throughput(
+            &format!("run_policy/{}", policy.id()),
+            BenchConfig { warmup_iters: 2, samples: 15, iters_per_sample: 1 },
+            cfg.requests as f64,
+            move || run_policy(&t, policy).unwrap().total_s,
+        ));
+    }
+
+    // Full grid end-to-end (what `cnmt experiment table1` does).
+    let cfg3 = cfg.clone();
+    let cal3 = cal.clone();
+    results.push(bench(
+        "table1/full_grid_6cells",
+        BenchConfig { warmup_iters: 1, samples: 5, iters_per_sample: 1 },
+        move || {
+            let mut acc = 0.0;
+            for pair in LangPair::ALL {
+                for profile in ConnectionProfile::ALL {
+                    let t = TruthTable::build(&cfg3, pair, profile, &cal3).unwrap();
+                    for r in run_all_policies(&t).unwrap() {
+                        acc += r.total_s;
+                    }
+                }
+            }
+            acc
+        },
+    ));
+
+    report("table1 end-to-end", &results);
+
+    // Result snapshot at bench scale.
+    let t = cnmt::experiments::table1::run(&cfg, &cal).unwrap();
+    println!("\n{}", cnmt::experiments::table1::render_text(&t));
+}

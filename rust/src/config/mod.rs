@@ -1,0 +1,273 @@
+//! Configuration system.
+//!
+//! Every experiment / serving run is described by a JSON config (defaults
+//! reproduce the paper's setup §III: 100k requests, 10k characterisation
+//! inferences per device, 100 Mbps symmetric link, CP1/CP2 profiles, the
+//! three model/dataset pairs). The `cnmt` CLI reads `--config <path>` and
+//! applies flag overrides on top.
+
+use std::path::{Path, PathBuf};
+
+use crate::corpus::LangPair;
+use crate::net::trace::ConnectionProfile;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Top-level configuration for experiments and the gateway.
+#[derive(Debug, Clone)]
+pub struct Config {
+    /// Master seed: every stochastic component forks from this.
+    pub seed: u64,
+    /// Evaluation request count (paper: 100_000).
+    pub requests: usize,
+    /// Characterisation inferences per device (paper: 10_000).
+    pub fit_inferences: usize,
+    /// Corpus pairs generated for the eval pool.
+    pub eval_pool: usize,
+    /// Language pairs to evaluate (Table I rows).
+    pub pairs: Vec<LangPair>,
+    /// Connection profiles to evaluate (Table I column groups).
+    pub profiles: Vec<ConnectionProfile>,
+    /// Path to a calibration JSON; None = built-in paper defaults.
+    pub calibration: Option<PathBuf>,
+    /// EWMA smoothing for the online T_tx estimator.
+    pub ttx_alpha: f64,
+    /// T_tx prior before any observation (seconds).
+    pub ttx_prior_s: f64,
+    /// Mean request inter-arrival time (seconds) for spreading the
+    /// request stream over the RTT trace timeline.
+    pub mean_interarrival_s: f64,
+    /// Link bandwidth (bits/second, paper: 100 Mbps symmetric).
+    pub bandwidth_bps: f64,
+    /// Artifacts directory (HLO + weights + manifest).
+    pub artifacts_dir: PathBuf,
+    /// Output directory for reports.
+    pub out_dir: PathBuf,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            seed: 20220315,
+            requests: 100_000,
+            fit_inferences: 10_000,
+            eval_pool: 50_000,
+            pairs: LangPair::ALL.to_vec(),
+            profiles: ConnectionProfile::ALL.to_vec(),
+            calibration: None,
+            ttx_alpha: 0.3,
+            ttx_prior_s: 0.05,
+            mean_interarrival_s: 0.14, // ~100k requests over a 4h trace
+            bandwidth_bps: 100e6,
+            artifacts_dir: PathBuf::from("artifacts"),
+            out_dir: PathBuf::from("reports"),
+        }
+    }
+}
+
+impl Config {
+    /// A scaled-down config for tests and smoke runs.
+    pub fn smoke() -> Self {
+        Config {
+            requests: 2_000,
+            fit_inferences: 1_000,
+            eval_pool: 2_000,
+            ..Default::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.requests == 0 {
+            return Err(Error::Config("requests must be > 0".into()));
+        }
+        if self.fit_inferences < 10 {
+            return Err(Error::Config("fit_inferences must be >= 10".into()));
+        }
+        if self.eval_pool == 0 {
+            return Err(Error::Config("eval_pool must be > 0".into()));
+        }
+        if self.pairs.is_empty() || self.profiles.is_empty() {
+            return Err(Error::Config("pairs/profiles must be non-empty".into()));
+        }
+        if !(0.0..=1.0).contains(&self.ttx_alpha) || self.ttx_alpha == 0.0 {
+            return Err(Error::Config(format!("ttx_alpha {} out of (0,1]", self.ttx_alpha)));
+        }
+        if self.bandwidth_bps <= 0.0 || self.mean_interarrival_s <= 0.0 {
+            return Err(Error::Config("bandwidth/interarrival must be positive".into()));
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------ JSON I/O
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("seed", Json::Num(self.seed as f64))
+            .set("requests", Json::Num(self.requests as f64))
+            .set("fit_inferences", Json::Num(self.fit_inferences as f64))
+            .set("eval_pool", Json::Num(self.eval_pool as f64))
+            .set(
+                "pairs",
+                Json::Array(
+                    self.pairs.iter().map(|p| Json::Str(p.id().into())).collect(),
+                ),
+            )
+            .set(
+                "profiles",
+                Json::Array(
+                    self.profiles.iter().map(|p| Json::Str(p.id().into())).collect(),
+                ),
+            )
+            .set(
+                "calibration",
+                self.calibration
+                    .as_ref()
+                    .map(|p| Json::Str(p.display().to_string()))
+                    .unwrap_or(Json::Null),
+            )
+            .set("ttx_alpha", Json::Num(self.ttx_alpha))
+            .set("ttx_prior_s", Json::Num(self.ttx_prior_s))
+            .set("mean_interarrival_s", Json::Num(self.mean_interarrival_s))
+            .set("bandwidth_bps", Json::Num(self.bandwidth_bps))
+            .set(
+                "artifacts_dir",
+                Json::Str(self.artifacts_dir.display().to_string()),
+            )
+            .set("out_dir", Json::Str(self.out_dir.display().to_string()));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Config> {
+        let mut c = Config::default();
+        if let Some(v) = j.get_opt("seed")? {
+            c.seed = v.as_i64()? as u64;
+        }
+        if let Some(v) = j.get_opt("requests")? {
+            c.requests = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("fit_inferences")? {
+            c.fit_inferences = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("eval_pool")? {
+            c.eval_pool = v.as_usize()?;
+        }
+        if let Some(v) = j.get_opt("pairs")? {
+            c.pairs = v
+                .as_array()?
+                .iter()
+                .map(|s| {
+                    let id = s.as_str()?;
+                    LangPair::from_id(id)
+                        .ok_or_else(|| Error::Config(format!("unknown pair `{id}`")))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.get_opt("profiles")? {
+            c.profiles = v
+                .as_array()?
+                .iter()
+                .map(|s| {
+                    let id = s.as_str()?;
+                    ConnectionProfile::from_id(id)
+                        .ok_or_else(|| Error::Config(format!("unknown profile `{id}`")))
+                })
+                .collect::<Result<_>>()?;
+        }
+        if let Some(v) = j.get_opt("calibration")? {
+            c.calibration = Some(PathBuf::from(v.as_str()?));
+        }
+        if let Some(v) = j.get_opt("ttx_alpha")? {
+            c.ttx_alpha = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("ttx_prior_s")? {
+            c.ttx_prior_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("mean_interarrival_s")? {
+            c.mean_interarrival_s = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("bandwidth_bps")? {
+            c.bandwidth_bps = v.as_f64()?;
+        }
+        if let Some(v) = j.get_opt("artifacts_dir")? {
+            c.artifacts_dir = PathBuf::from(v.as_str()?);
+        }
+        if let Some(v) = j.get_opt("out_dir")? {
+            c.out_dir = PathBuf::from(v.as_str()?);
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    pub fn load(path: &Path) -> Result<Config> {
+        Config::from_json(&Json::parse_file(path)?)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let c = Config::default();
+        c.validate().unwrap();
+        assert_eq!(c.requests, 100_000);
+        assert_eq!(c.fit_inferences, 10_000);
+        assert_eq!(c.pairs.len(), 3);
+        assert_eq!(c.profiles.len(), 2);
+        assert!((c.bandwidth_bps - 100e6).abs() < 1.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut c = Config::smoke();
+        c.calibration = Some(PathBuf::from("cal.json"));
+        c.pairs = vec![LangPair::EnZh];
+        let j = c.to_json();
+        let back = Config::from_json(&j).unwrap();
+        assert_eq!(back.requests, c.requests);
+        assert_eq!(back.pairs, c.pairs);
+        assert_eq!(back.calibration, c.calibration);
+        assert_eq!(back.seed, c.seed);
+    }
+
+    #[test]
+    fn partial_json_uses_defaults() {
+        let j = Json::parse(r#"{"requests": 500}"#).unwrap();
+        let c = Config::from_json(&j).unwrap();
+        assert_eq!(c.requests, 500);
+        assert_eq!(c.fit_inferences, 10_000);
+    }
+
+    #[test]
+    fn validation_rejects_bad_configs() {
+        let mut c = Config::default();
+        c.requests = 0;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.ttx_alpha = 1.5;
+        assert!(c.validate().is_err());
+        let mut c = Config::default();
+        c.pairs.clear();
+        assert!(c.validate().is_err());
+        let j = Json::parse(r#"{"pairs": ["xx_yy"]}"#).unwrap();
+        assert!(Config::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cnmt_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cfg.json");
+        let c = Config::smoke();
+        c.save(&path).unwrap();
+        let back = Config::load(&path).unwrap();
+        assert_eq!(back.requests, c.requests);
+        std::fs::remove_file(&path).ok();
+    }
+}

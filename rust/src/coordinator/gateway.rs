@@ -1,0 +1,235 @@
+//! The serving gateway: real PJRT execution behind the C-NMT router.
+//!
+//! Topology mirrors the paper's §II-C deployment: end-nodes send
+//! translation requests to an **edge gateway**, which either serves them
+//! locally or offloads to a **cloud server**. Here both devices are
+//! backed by the same CPU PJRT runtime (DESIGN.md §4), so the physics of
+//! the paper's testbed are reproduced with two knobs:
+//!
+//! * `edge_slowdown` — stretches edge execution time (Jetson-vs-server
+//!   silicon gap) by sleeping the residual after the real execution;
+//! * an [`RttTrace`] replayed against the gateway clock — offloaded
+//!   requests pay the simulated network round trip, and their
+//!   request/response timestamps feed the router's T_tx estimator
+//!   exactly as in the paper.
+//!
+//! Engines are not `Send` (PJRT client is `Rc`-based), so each device is
+//! an **actor**: a dedicated OS thread that owns its engine and serves
+//! jobs from an mpsc queue — one serial execution stream per device, the
+//! same serving discipline the paper's latency model assumes.
+
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::coordinator::request::Outcome;
+use crate::coordinator::router::Router;
+use crate::devices::DeviceKind;
+use crate::metrics::LatencyRecorder;
+use crate::net::RttTrace;
+use crate::runtime::{Seq2SeqEngine, TranslateOptions};
+use crate::{Error, Result};
+
+/// Gateway configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub artifacts_dir: PathBuf,
+    pub model: String,
+    /// Multiplier stretching edge execution (1.0 = no stretch).
+    pub edge_slowdown: f64,
+    /// RTT trace replayed for offloaded requests (None = zero-RTT).
+    pub trace: Option<RttTrace>,
+    /// Cap on decode steps (None = artifact M_MAX).
+    pub max_steps: Option<usize>,
+}
+
+struct Job {
+    src: Vec<u16>,
+    force_steps: Option<usize>,
+    max_steps: Option<usize>,
+    respond: mpsc::Sender<Result<(f64, usize)>>, // (exec_s, steps)
+}
+
+struct DeviceActor {
+    tx: mpsc::Sender<Job>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl DeviceActor {
+    /// Spawn an executor thread owning its own engine.
+    fn spawn(
+        kind: DeviceKind,
+        cfg: &GatewayConfig,
+    ) -> Result<DeviceActor> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let artifacts = cfg.artifacts_dir.clone();
+        let model = cfg.model.clone();
+        let slowdown = if kind == DeviceKind::Edge { cfg.edge_slowdown } else { 1.0 };
+        let handle = std::thread::Builder::new()
+            .name(format!("cnmt-{}", kind.id()))
+            .spawn(move || {
+                let engine = match Seq2SeqEngine::load(&artifacts, &model) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                while let Ok(job) = rx.recv() {
+                    let t0 = Instant::now();
+                    let res = engine.translate(
+                        &job.src,
+                        TranslateOptions {
+                            force_steps: job.force_steps,
+                            max_steps: job.max_steps,
+                        },
+                    );
+                    let reply = res.map(|tr| {
+                        let mut exec_s = t0.elapsed().as_secs_f64();
+                        if slowdown > 1.0 {
+                            let extra = exec_s * (slowdown - 1.0);
+                            std::thread::sleep(std::time::Duration::from_secs_f64(
+                                extra,
+                            ));
+                            exec_s *= slowdown;
+                        }
+                        (exec_s, tr.steps)
+                    });
+                    let _ = job.respond.send(reply);
+                }
+            })
+            .map_err(|e| Error::Serve(format!("spawn {}: {e}", kind.id())))?;
+        ready_rx
+            .recv()
+            .map_err(|_| Error::Serve(format!("{} actor died at startup", kind.id())))??;
+        Ok(DeviceActor { tx, handle: Some(handle) })
+    }
+}
+
+/// The gateway: router + two device actors + metrics.
+pub struct Gateway {
+    router: Mutex<Router>,
+    edge: DeviceActor,
+    cloud: DeviceActor,
+    trace: Option<RttTrace>,
+    start: Instant,
+    recorder: Arc<Mutex<LatencyRecorder>>,
+    max_steps: Option<usize>,
+}
+
+impl Gateway {
+    /// Start both device actors (loads the model twice: one engine per
+    /// device, as in the real two-machine deployment).
+    pub fn start(cfg: GatewayConfig, router: Router) -> Result<Gateway> {
+        let edge = DeviceActor::spawn(DeviceKind::Edge, &cfg)?;
+        let cloud = DeviceActor::spawn(DeviceKind::Cloud, &cfg)?;
+        Ok(Gateway {
+            router: Mutex::new(router),
+            edge,
+            cloud,
+            trace: cfg.trace,
+            start: Instant::now(),
+            recorder: Arc::new(Mutex::new(LatencyRecorder::new())),
+            max_steps: cfg.max_steps,
+        })
+    }
+
+    /// Gateway clock (seconds since start) — also the trace replay time.
+    pub fn now(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn rtt_now(&self) -> f64 {
+        match &self.trace {
+            Some(t) => t.rtt_at(self.now()),
+            None => 0.0,
+        }
+    }
+
+    /// Submit one translation request and wait for its outcome.
+    ///
+    /// `force_steps` pins the decode length (characterisation runs);
+    /// normal requests pass `None` and decode greedily to EOS.
+    pub fn submit(&self, id: u64, src: &[u16], force_steps: Option<usize>) -> Result<Outcome> {
+        let n = src.len();
+        let decision = {
+            let mut r = self.router.lock().unwrap();
+            r.decide(n)
+        };
+        let (actor, device) = match decision.device {
+            DeviceKind::Edge => (&self.edge, DeviceKind::Edge),
+            DeviceKind::Cloud => (&self.cloud, DeviceKind::Cloud),
+        };
+
+        // Offloads pay the simulated network round trip, timestamped.
+        let (tx_s, sent_at) = if device == DeviceKind::Cloud {
+            let rtt = self.rtt_now();
+            std::thread::sleep(std::time::Duration::from_secs_f64(rtt));
+            (rtt, self.now())
+        } else {
+            (0.0, self.now())
+        };
+
+        let (resp_tx, resp_rx) = mpsc::channel();
+        actor
+            .tx
+            .send(Job {
+                src: src.to_vec(),
+                force_steps,
+                max_steps: self.max_steps,
+                respond: resp_tx,
+            })
+            .map_err(|_| Error::Serve(format!("{} actor gone", device.id())))?;
+        let (exec_s, steps) = resp_rx
+            .recv()
+            .map_err(|_| Error::Serve(format!("{} actor dropped reply", device.id())))??;
+
+        if device == DeviceKind::Cloud {
+            // Response timestamp closes the loop for the T_tx estimator.
+            let mut r = self.router.lock().unwrap();
+            r.observe_ttx(sent_at, tx_s);
+        }
+
+        let latency_s = exec_s + tx_s;
+        {
+            let mut rec = self.recorder.lock().unwrap();
+            rec.record(device.id(), latency_s);
+            rec.record("all", latency_s);
+        }
+        Ok(Outcome { id, device, latency_s, exec_s, tx_s, steps })
+    }
+
+    /// Metrics snapshot as JSON.
+    pub fn metrics(&self) -> crate::util::Json {
+        self.recorder.lock().unwrap().to_json()
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.router.lock().unwrap().decisions()
+    }
+}
+
+impl Drop for Gateway {
+    fn drop(&mut self) {
+        // Close the queues; actors exit their recv loops and join.
+        let (t, _r) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.edge.tx, t);
+        let (t, _r) = mpsc::channel();
+        let _ = std::mem::replace(&mut self.cloud.tx, t);
+        if let Some(h) = self.edge.handle.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.cloud.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+// Integration tests live in rust/tests/integration_runtime.rs (they need
+// built artifacts).

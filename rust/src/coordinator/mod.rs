@@ -1,0 +1,24 @@
+//! The C-NMT coordinator — the paper's contribution (L3).
+//!
+//! * [`request`] — request/outcome types shared by the gateway and the
+//!   experiment harness.
+//! * [`policy`] — the mapping policies of Table I: C-NMT (eq. 1/2), the
+//!   Naive CI baseline (constant mean-M estimate), the Oracle lower
+//!   bound, and the two static mappings (GW-only / Server-only).
+//! * [`router`] — the decision engine: per-model T_exe planes + the
+//!   per-language-pair N→M regressor + the online T_tx estimator,
+//!   evaluated per request in O(1) (the paper: "the C-NMT decision has
+//!   negligible overheads").
+//! * [`gateway`] — a thread-per-device serving gateway over the real PJRT
+//!   runtime: end-nodes submit translation requests; the router maps each
+//!   to the edge or cloud executor.
+
+pub mod gateway;
+pub mod multilevel;
+pub mod policy;
+pub mod request;
+pub mod router;
+
+pub use policy::PolicyKind;
+pub use request::{Outcome, Request};
+pub use router::{DecisionTrace, Router, RouterBuilder};

@@ -1,0 +1,210 @@
+//! Multi-level collaborative inference (extension).
+//!
+//! The paper's related work extends CI "to more than two offloading
+//! levels (e.g. end-device, edge gateway and cloud)" (DeePar [8]; CRIME
+//! [11] for RNNs). This module generalises the C-NMT decision rule from
+//! the 2-device eq. 1 to an N-tier hierarchy:
+//!
+//! ```text
+//! d = argmin_i  Σ_{j ≤ i} T̂_tx,j  +  T̂_exe,i (N, M̂)
+//! ```
+//!
+//! where tier 0 is where the request originates (end device) and each
+//! hop `j` pays that link's online-estimated round-trip cost. With two
+//! tiers and zero first-hop cost this reduces exactly to eq. 1 (tested).
+
+use crate::devices::DeviceTimeModel;
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// One tier of the hierarchy.
+#[derive(Debug, Clone)]
+pub struct Tier {
+    pub name: String,
+    /// Fitted execution-time plane for this tier's hardware.
+    pub texe: TexeModel,
+    /// Ground-truth time model (simulation only).
+    pub truth: DeviceTimeModel,
+    /// Estimator for the link *into* this tier (tier 0: unused/zero).
+    pub ttx: TtxEstimator,
+    /// Prior for that link before any observation (seconds).
+    pub ttx_prior_s: f64,
+}
+
+/// The multi-level router.
+#[derive(Debug, Clone)]
+pub struct MultiRouter {
+    tiers: Vec<Tier>,
+    n2m: N2mRegressor,
+    decisions: u64,
+}
+
+/// One decision's estimated totals per tier.
+#[derive(Debug, Clone)]
+pub struct MultiDecision {
+    /// Chosen tier index.
+    pub tier: usize,
+    /// Estimated total latency per tier (seconds).
+    pub totals: Vec<f64>,
+    pub m_est: f64,
+}
+
+impl MultiRouter {
+    pub fn new(tiers: Vec<Tier>, n2m: N2mRegressor) -> Result<MultiRouter> {
+        if tiers.len() < 2 {
+            return Err(Error::Config("multi-level router needs >= 2 tiers".into()));
+        }
+        Ok(MultiRouter { tiers, n2m, decisions: 0 })
+    }
+
+    pub fn tiers(&self) -> &[Tier] {
+        &self.tiers
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Feed a link observation (request/response timestamps on the hop
+    /// into `tier`).
+    pub fn observe_link(&mut self, tier: usize, now_s: f64, rtt_s: f64) {
+        if tier > 0 && tier < self.tiers.len() {
+            self.tiers[tier].ttx.observe(now_s, rtt_s);
+        }
+    }
+
+    /// Generalised eq. 1: argmin over tiers of cumulative-tx + exec.
+    pub fn decide(&mut self, n: usize) -> MultiDecision {
+        self.decisions += 1;
+        let m_est = self.n2m.predict(n);
+        let mut totals = Vec::with_capacity(self.tiers.len());
+        let mut cum_tx = 0.0;
+        for (i, t) in self.tiers.iter().enumerate() {
+            if i > 0 {
+                cum_tx += t.ttx.estimate_or(t.ttx_prior_s);
+            }
+            totals.push(cum_tx + t.texe.estimate(n, m_est));
+        }
+        let tier = totals
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap();
+        MultiDecision { tier, totals, m_est }
+    }
+
+    /// Ground-truth cost of running at `tier` (simulation): sampled exec
+    /// time + the true per-hop link costs.
+    pub fn true_cost(
+        &mut self,
+        tier: usize,
+        n: usize,
+        m: usize,
+        link_rtts: &[f64],
+        rng: &mut Rng,
+    ) -> f64 {
+        let mut cost = 0.0;
+        for (i, _) in self.tiers.iter().enumerate().take(tier + 1).skip(1) {
+            cost += link_rtts[i - 1];
+        }
+        cost + self.tiers[tier].truth.sample(n, m, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::TexeModel;
+
+    fn tier(name: &str, an: f64, am: f64, b: f64, prior: f64) -> Tier {
+        let texe = TexeModel::from_coeffs(an, am, b);
+        Tier {
+            name: name.into(),
+            texe,
+            truth: DeviceTimeModel { texe, noise_frac: 0.0, noise_floor_s: 0.0 },
+            ttx: TtxEstimator::new(0.3),
+            ttx_prior_s: prior,
+        }
+    }
+
+    fn three_tiers() -> MultiRouter {
+        MultiRouter::new(
+            vec![
+                // end device: slow silicon but zero fixed/link cost.
+                tier("end", 4e-3, 10e-3, 1e-3, 0.0),
+                // gateway: 3x faster; cheap WLAN hop.
+                tier("gw", 1.3e-3, 3.3e-3, 8e-3, 0.008),
+                // cloud: 12x faster than end; WAN hop.
+                tier("cloud", 0.3e-3, 0.8e-3, 30e-3, 0.060),
+            ],
+            N2mRegressor::from_coeffs(0.9, 0.5),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn short_stays_on_device_medium_gateway_long_cloud() {
+        let mut r = three_tiers();
+        assert_eq!(r.decide(1).tier, 0, "{:?}", r.decide(1));
+        assert_eq!(r.decide(12).tier, 1, "{:?}", r.decide(12));
+        assert_eq!(r.decide(60).tier, 2, "{:?}", r.decide(60));
+    }
+
+    #[test]
+    fn reduces_to_eq1_with_two_tiers() {
+        // 2-tier multi-router must agree with the pairwise rule.
+        let mut r = MultiRouter::new(
+            vec![
+                tier("edge", 1.8e-3, 4.8e-3, 8e-3, 0.0),
+                tier("cloud", 0.3e-3, 0.8e-3, 33e-3, 0.050),
+            ],
+            N2mRegressor::from_coeffs(1.05, 0.4),
+        )
+        .unwrap();
+        for n in 1..=62 {
+            let d = r.decide(n);
+            let m = 1.05 * n as f64 + 0.4;
+            let te = 1.8e-3 * n as f64 + 4.8e-3 * m + 8e-3;
+            let tc = 0.050 + 0.3e-3 * n as f64 + 0.8e-3 * m + 33e-3;
+            let want = if te <= tc { 0 } else { 1 };
+            assert_eq!(d.tier, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn link_observations_move_the_boundary() {
+        let mut r = three_tiers();
+        let n = 30;
+        let before = r.decide(n).tier;
+        // WAN degrades badly: cloud should lose its region.
+        for i in 0..60 {
+            r.observe_link(2, i as f64, 1.0);
+        }
+        let after = r.decide(n);
+        assert!(after.tier < 2 || before != 2, "{after:?}");
+        assert!(after.totals[2] > after.totals[after.tier]);
+    }
+
+    #[test]
+    fn true_cost_accumulates_hops() {
+        let mut r = three_tiers();
+        let mut rng = Rng::new(1);
+        let links = [0.01, 0.05];
+        let c0 = r.true_cost(0, 10, 10, &links, &mut rng);
+        let c2 = r.true_cost(2, 10, 10, &links, &mut rng);
+        // Tier-2 cost includes both hops.
+        assert!(c2 > 0.06, "c2 {c2}");
+        assert!(c0 < 0.2);
+    }
+
+    #[test]
+    fn rejects_single_tier() {
+        assert!(MultiRouter::new(
+            vec![tier("x", 1e-3, 1e-3, 0.0, 0.0)],
+            N2mRegressor::from_coeffs(1.0, 0.0)
+        )
+        .is_err());
+    }
+}

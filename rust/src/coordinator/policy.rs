@@ -1,0 +1,80 @@
+//! The mapping policies evaluated in Table I.
+
+/// Which strategy decides the target device for each request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum PolicyKind {
+    /// Everything runs on the edge gateway (paper baseline "GW").
+    EdgeOnly,
+    /// Everything is offloaded to the server (paper baseline "Server").
+    CloudOnly,
+    /// Ideal lower bound: always picks the device that *will* be faster,
+    /// including the true (future) network cost — unaffected by any of
+    /// C-NMT's approximations. Only realisable in simulation.
+    Oracle,
+    /// CI with the paper's eq. 1 but a constant output-length estimate
+    /// `M = mean M of the reference dataset` (paper baseline "Naive").
+    Naive {
+        /// Mean output length of the fit split.
+        mean_m: f64,
+    },
+    /// The paper's C-NMT: eq. 1 with eq. 2's `M̂ = γ·N + δ`.
+    Cnmt,
+}
+
+impl PolicyKind {
+    /// Display id used in reports and CLI flags.
+    pub fn id(&self) -> &'static str {
+        match self {
+            PolicyKind::EdgeOnly => "edge_only",
+            PolicyKind::CloudOnly => "cloud_only",
+            PolicyKind::Oracle => "oracle",
+            PolicyKind::Naive { .. } => "naive",
+            PolicyKind::Cnmt => "cnmt",
+        }
+    }
+
+    /// Parse a CLI id (Naive takes its mean separately).
+    pub fn from_id(s: &str, mean_m: f64) -> Option<PolicyKind> {
+        match s {
+            "edge_only" => Some(PolicyKind::EdgeOnly),
+            "cloud_only" => Some(PolicyKind::CloudOnly),
+            "oracle" => Some(PolicyKind::Oracle),
+            "naive" => Some(PolicyKind::Naive { mean_m }),
+            "cnmt" => Some(PolicyKind::Cnmt),
+            _ => None,
+        }
+    }
+
+    /// Does this policy need the router's predictive models?
+    pub fn is_predictive(&self) -> bool {
+        matches!(self, PolicyKind::Naive { .. } | PolicyKind::Cnmt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_roundtrip() {
+        for p in [
+            PolicyKind::EdgeOnly,
+            PolicyKind::CloudOnly,
+            PolicyKind::Oracle,
+            PolicyKind::Naive { mean_m: 12.0 },
+            PolicyKind::Cnmt,
+        ] {
+            let back = PolicyKind::from_id(p.id(), 12.0).unwrap();
+            assert_eq!(back.id(), p.id());
+        }
+        assert!(PolicyKind::from_id("nope", 0.0).is_none());
+    }
+
+    #[test]
+    fn predictive_flags() {
+        assert!(PolicyKind::Cnmt.is_predictive());
+        assert!(PolicyKind::Naive { mean_m: 1.0 }.is_predictive());
+        assert!(!PolicyKind::Oracle.is_predictive());
+        assert!(!PolicyKind::EdgeOnly.is_predictive());
+    }
+}

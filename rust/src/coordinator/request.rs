@@ -1,0 +1,58 @@
+//! Request/outcome types shared by the gateway and the simulator.
+
+use crate::corpus::LangPair;
+use crate::devices::DeviceKind;
+
+/// One translation request as seen by the coordinator.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub pair: LangPair,
+    /// Source token ids (content only; runtime appends EOS).
+    pub src: Vec<u16>,
+    /// Ground-truth output length from the corpus — drives the decode
+    /// step count in simulation/characterisation; *never* visible to the
+    /// router (it only sees N).
+    pub m_real: usize,
+    /// Arrival time on the simulation/serving clock (seconds).
+    pub arrival_s: f64,
+}
+
+impl Request {
+    pub fn n(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// What happened to a request.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub id: u64,
+    /// Where the router sent it.
+    pub device: DeviceKind,
+    /// Total latency charged (exec + network if offloaded), seconds.
+    pub latency_s: f64,
+    /// Execution-only component (seconds).
+    pub exec_s: f64,
+    /// Network component (0 for edge), seconds.
+    pub tx_s: f64,
+    /// Decode steps actually executed (M).
+    pub steps: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn request_n_is_src_len() {
+        let r = Request {
+            id: 1,
+            pair: LangPair::DeEn,
+            src: vec![5, 6, 7],
+            m_real: 4,
+            arrival_s: 0.0,
+        };
+        assert_eq!(r.n(), 3);
+    }
+}

@@ -1,0 +1,318 @@
+//! The C-NMT decision engine (paper eq. 1 + eq. 2).
+//!
+//! Per request the router evaluates, in O(1):
+//!
+//! ```text
+//! M̂        = γ·N + δ                       (N→M regressor, per lang pair)
+//! T̂_exe,e  = αN,e·N + αM,e·M̂ + βe          (edge T_exe plane)
+//! T̂_exe,c  = αN,c·N + αM,c·M̂ + βc          (cloud T_exe plane)
+//! d        = edge  if  T̂_exe,e ≤ T̂_tx + T̂_exe,c  else cloud
+//! ```
+//!
+//! with `T̂_tx` maintained online from timestamped request/response pairs
+//! ([`crate::predictor::TtxEstimator`]). The Naive baseline replaces `M̂`
+//! with the dataset's constant mean; the static policies skip estimation.
+
+use crate::devices::DeviceKind;
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::{Error, Result};
+
+use super::policy::PolicyKind;
+
+/// Everything the router computed for one decision (reported by the
+/// experiment drivers; also useful for debugging the boundary).
+#[derive(Debug, Clone, Copy)]
+pub struct DecisionTrace {
+    pub device: DeviceKind,
+    /// M̂ used (NaN for non-predictive policies).
+    pub m_est: f64,
+    /// Estimated edge execution time (s).
+    pub t_edge_est: f64,
+    /// Estimated cloud execution time, excluding network (s).
+    pub t_cloud_est: f64,
+    /// T_tx estimate used (s).
+    pub ttx_est: f64,
+}
+
+/// The per-(model, language-pair) decision engine.
+#[derive(Debug, Clone)]
+pub struct Router {
+    policy: PolicyKind,
+    texe_edge: TexeModel,
+    texe_cloud: TexeModel,
+    n2m: N2mRegressor,
+    ttx: TtxEstimator,
+    ttx_prior_s: f64,
+    decisions: u64,
+}
+
+/// Builder — makes the wiring explicit at call sites.
+#[derive(Debug, Clone)]
+pub struct RouterBuilder {
+    policy: PolicyKind,
+    texe_edge: Option<TexeModel>,
+    texe_cloud: Option<TexeModel>,
+    n2m: Option<N2mRegressor>,
+    ttx_alpha: f64,
+    ttx_prior_s: f64,
+}
+
+impl RouterBuilder {
+    pub fn new(policy: PolicyKind) -> Self {
+        RouterBuilder {
+            policy,
+            texe_edge: None,
+            texe_cloud: None,
+            n2m: None,
+            ttx_alpha: 0.3,
+            ttx_prior_s: 0.05,
+        }
+    }
+
+    pub fn texe(mut self, edge: TexeModel, cloud: TexeModel) -> Self {
+        self.texe_edge = Some(edge);
+        self.texe_cloud = Some(cloud);
+        self
+    }
+
+    pub fn n2m(mut self, reg: N2mRegressor) -> Self {
+        self.n2m = Some(reg);
+        self
+    }
+
+    pub fn ttx(mut self, alpha: f64, prior_s: f64) -> Self {
+        self.ttx_alpha = alpha;
+        self.ttx_prior_s = prior_s;
+        self
+    }
+
+    pub fn build(self) -> Result<Router> {
+        let needs_models = !matches!(
+            self.policy,
+            PolicyKind::EdgeOnly | PolicyKind::CloudOnly
+        );
+        let texe_edge = match (needs_models, self.texe_edge) {
+            (true, None) => {
+                return Err(Error::Config(format!(
+                    "policy {} needs T_exe models",
+                    self.policy.id()
+                )))
+            }
+            (_, t) => t.unwrap_or_else(|| TexeModel::from_coeffs(0.0, 0.0, 0.0)),
+        };
+        let texe_cloud = self
+            .texe_cloud
+            .unwrap_or_else(|| TexeModel::from_coeffs(0.0, 0.0, 0.0));
+        if matches!(self.policy, PolicyKind::Cnmt) && self.n2m.is_none() {
+            return Err(Error::Config("C-NMT policy needs the N→M regressor".into()));
+        }
+        Ok(Router {
+            policy: self.policy,
+            texe_edge,
+            texe_cloud,
+            n2m: self.n2m.unwrap_or_else(|| N2mRegressor::from_coeffs(1.0, 0.0)),
+            ttx: TtxEstimator::new(self.ttx_alpha),
+            ttx_prior_s: self.ttx_prior_s,
+            decisions: 0,
+        })
+    }
+}
+
+impl Router {
+    pub fn policy(&self) -> PolicyKind {
+        self.policy
+    }
+
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    pub fn n2m(&self) -> &N2mRegressor {
+        &self.n2m
+    }
+
+    /// Feed a timestamped network observation (from an offloaded
+    /// request's request/response timestamps, or a gateway heartbeat).
+    pub fn observe_ttx(&mut self, now_s: f64, rtt_s: f64) {
+        self.ttx.observe(now_s, rtt_s);
+    }
+
+    /// Is the T_tx estimate stale at `now_s`?
+    pub fn ttx_stale(&self, now_s: f64, max_age_s: f64) -> bool {
+        self.ttx.is_stale(now_s, max_age_s)
+    }
+
+    pub fn ttx_estimate(&self) -> f64 {
+        self.ttx.estimate_or(self.ttx_prior_s)
+    }
+
+    /// Decide the target device for a request with source length `n`.
+    ///
+    /// This is the paper's entire runtime overhead: two plane evaluations
+    /// and a comparison (`cnmt bench bench_decision` measures it).
+    pub fn decide(&mut self, n: usize) -> DecisionTrace {
+        self.decisions += 1;
+        let ttx_est = self.ttx.estimate_or(self.ttx_prior_s);
+        match self.policy {
+            PolicyKind::EdgeOnly => DecisionTrace {
+                device: DeviceKind::Edge,
+                m_est: f64::NAN,
+                t_edge_est: f64::NAN,
+                t_cloud_est: f64::NAN,
+                ttx_est,
+            },
+            PolicyKind::CloudOnly => DecisionTrace {
+                device: DeviceKind::Cloud,
+                m_est: f64::NAN,
+                t_edge_est: f64::NAN,
+                t_cloud_est: f64::NAN,
+                ttx_est,
+            },
+            PolicyKind::Oracle => {
+                // The Oracle is resolved by the harness (it needs ground
+                // truth); the router defers.
+                DecisionTrace {
+                    device: DeviceKind::Edge,
+                    m_est: f64::NAN,
+                    t_edge_est: f64::NAN,
+                    t_cloud_est: f64::NAN,
+                    ttx_est,
+                }
+            }
+            PolicyKind::Naive { mean_m } => self.decide_with_m(n, mean_m, ttx_est),
+            PolicyKind::Cnmt => {
+                let m_est = self.n2m.predict(n);
+                self.decide_with_m(n, m_est, ttx_est)
+            }
+        }
+    }
+
+    /// Decide with an externally-supplied output-length estimate — the
+    /// hook the estimator-ablation harness uses to swap in alternative
+    /// N→M estimators ([`crate::predictor::LengthEstimator`]).
+    pub fn decide_given_m(&mut self, n: usize, m_est: f64) -> DecisionTrace {
+        self.decisions += 1;
+        let ttx_est = self.ttx.estimate_or(self.ttx_prior_s);
+        self.decide_with_m(n, m_est, ttx_est)
+    }
+
+    fn decide_with_m(&self, n: usize, m_est: f64, ttx_est: f64) -> DecisionTrace {
+        let t_edge_est = self.texe_edge.estimate(n, m_est);
+        let t_cloud_est = self.texe_cloud.estimate(n, m_est);
+        // Paper eq. 1.
+        let device = if t_edge_est <= ttx_est + t_cloud_est {
+            DeviceKind::Edge
+        } else {
+            DeviceKind::Cloud
+        };
+        DecisionTrace { device, m_est, t_edge_est, t_cloud_est, ttx_est }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::predictor::{N2mRegressor, TexeModel};
+
+    fn mk_router(policy: PolicyKind) -> Router {
+        RouterBuilder::new(policy)
+            // edge 4x slower than cloud
+            .texe(
+                TexeModel::from_coeffs(1e-3, 2e-3, 5e-3),
+                TexeModel::from_coeffs(0.25e-3, 0.5e-3, 2e-3),
+            )
+            .n2m(N2mRegressor::from_coeffs(0.8, 0.5))
+            .ttx(0.3, 0.05)
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn short_inputs_stay_on_edge_long_go_to_cloud() {
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.040);
+        let short = r.decide(3);
+        assert_eq!(short.device, DeviceKind::Edge, "{short:?}");
+        let long = r.decide(60);
+        assert_eq!(long.device, DeviceKind::Cloud, "{long:?}");
+        assert_eq!(r.decisions(), 2);
+    }
+
+    #[test]
+    fn higher_rtt_expands_edge_region() {
+        // The same request flips to edge when the network degrades.
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.010);
+        let n = 30;
+        let fast_net = r.decide(n);
+        assert_eq!(fast_net.device, DeviceKind::Cloud);
+        for i in 0..60 {
+            r.observe_ttx(i as f64, 0.500);
+        }
+        let slow_net = r.decide(n);
+        assert_eq!(slow_net.device, DeviceKind::Edge);
+    }
+
+    #[test]
+    fn cnmt_uses_n2m_naive_uses_mean() {
+        let mut c = mk_router(PolicyKind::Cnmt);
+        let tr = c.decide(20);
+        assert!((tr.m_est - (0.8 * 20.0 + 0.5)).abs() < 1e-12);
+        let mut n = RouterBuilder::new(PolicyKind::Naive { mean_m: 11.5 })
+            .texe(
+                TexeModel::from_coeffs(1e-3, 2e-3, 5e-3),
+                TexeModel::from_coeffs(0.25e-3, 0.5e-3, 2e-3),
+            )
+            .build()
+            .unwrap();
+        let tn = n.decide(20);
+        assert!((tn.m_est - 11.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn static_policies_never_consult_models() {
+        let mut e = RouterBuilder::new(PolicyKind::EdgeOnly).build().unwrap();
+        let mut c = RouterBuilder::new(PolicyKind::CloudOnly).build().unwrap();
+        for n in [1, 10, 62] {
+            assert_eq!(e.decide(n).device, DeviceKind::Edge);
+            assert_eq!(c.decide(n).device, DeviceKind::Cloud);
+        }
+    }
+
+    #[test]
+    fn builder_rejects_missing_models() {
+        assert!(RouterBuilder::new(PolicyKind::Cnmt).build().is_err());
+        let only_texe = RouterBuilder::new(PolicyKind::Cnmt).texe(
+            TexeModel::from_coeffs(0.0, 0.0, 0.0),
+            TexeModel::from_coeffs(0.0, 0.0, 0.0),
+        );
+        assert!(only_texe.build().is_err()); // still no n2m
+        assert!(RouterBuilder::new(PolicyKind::EdgeOnly).build().is_ok());
+    }
+
+    #[test]
+    fn ttx_prior_used_before_observations() {
+        let r = mk_router(PolicyKind::Cnmt);
+        assert!((r.ttx_estimate() - 0.05).abs() < 1e-12);
+        assert!(r.ttx_stale(100.0, 10.0));
+    }
+
+    #[test]
+    fn boundary_monotone_in_n() {
+        // With both planes increasing in N but edge steeper, once the
+        // decision flips to cloud it stays cloud for larger N.
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.030);
+        let mut seen_cloud = false;
+        for n in 1..=62 {
+            let d = r.decide(n).device;
+            if seen_cloud {
+                assert_eq!(d, DeviceKind::Cloud, "flip-back at n={n}");
+            }
+            if d == DeviceKind::Cloud {
+                seen_cloud = true;
+            }
+        }
+        assert!(seen_cloud, "boundary never crossed");
+    }
+}

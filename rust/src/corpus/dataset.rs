@@ -1,0 +1,160 @@
+//! Dataset container: holds generated sentence pairs, provides the
+//! characterisation/evaluation split the paper uses (10k fitting
+//! inferences vs 100k evaluation requests, §III) and summary statistics.
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::synth::{CorpusGenerator, LangPair};
+
+/// One parallel sentence pair.
+///
+/// `src` holds content token ids (EOS/BOS are added by the runtime);
+/// `m_real` is the ground-truth target length the corpus provides — the
+/// quantity the paper's N→M regressor is fitted on, and the number of
+/// decoder steps a request for this pair costs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SentencePair {
+    pub src: Vec<u16>,
+    pub m_real: usize,
+    /// True if this pair was generated as misaligned (ground truth known
+    /// only to the generator; the prefilter must *infer* it).
+    pub outlier: bool,
+}
+
+impl SentencePair {
+    pub fn n(&self) -> usize {
+        self.src.len()
+    }
+}
+
+/// A generated corpus with a fit/eval split.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub pair: LangPair,
+    /// Pairs used for offline characterisation (T_exe fit, γ/δ fit).
+    pub fit: Vec<SentencePair>,
+    /// Pairs used as the evaluation request stream.
+    pub eval: Vec<SentencePair>,
+}
+
+impl Dataset {
+    /// Generate a dataset: `fit_count` characterisation pairs plus
+    /// `eval_count` request pairs (disjoint streams, as in the paper:
+    /// "fitted on the result of 10k inferences per device, with inputs
+    /// not included in the 100k set").
+    pub fn generate(
+        pair: LangPair,
+        fit_count: usize,
+        eval_count: usize,
+        seed: u64,
+    ) -> Dataset {
+        let mut g_fit = CorpusGenerator::new(pair, seed ^ 0xF17);
+        let mut g_eval = CorpusGenerator::new(pair, seed ^ 0xE7A1);
+        Dataset {
+            pair,
+            fit: g_fit.take(fit_count),
+            eval: g_eval.take(eval_count),
+        }
+    }
+
+    /// Mean target length over the *fit* split — what the paper's Naive
+    /// baseline uses as its constant M estimate.
+    pub fn mean_m_fit(&self) -> f64 {
+        if self.fit.is_empty() {
+            return f64::NAN;
+        }
+        self.fit.iter().map(|p| p.m_real as f64).sum::<f64>()
+            / self.fit.len() as f64
+    }
+
+    /// Mean source length over the fit split.
+    pub fn mean_n_fit(&self) -> f64 {
+        if self.fit.is_empty() {
+            return f64::NAN;
+        }
+        self.fit.iter().map(|p| p.n() as f64).sum::<f64>()
+            / self.fit.len() as f64
+    }
+
+    /// (N, M) pairs of the fit split, for regression.
+    pub fn fit_nm(&self) -> Vec<(f64, f64)> {
+        self.fit
+            .iter()
+            .map(|p| (p.n() as f64, p.m_real as f64))
+            .collect()
+    }
+
+    /// Sample `count` eval requests with replacement (request stream for
+    /// experiments larger than the generated eval set).
+    pub fn sample_eval(&self, count: usize, seed: u64) -> Vec<&SentencePair> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| &self.eval[rng.usize(self.eval.len())])
+            .collect()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.fit.is_empty() || self.eval.is_empty() {
+            return Err(Error::Corpus("empty dataset split".into()));
+        }
+        for p in self.fit.iter().chain(self.eval.iter()) {
+            if p.src.is_empty() || p.src.len() > 62 || p.m_real == 0 || p.m_real > 62 {
+                return Err(Error::Corpus(format!(
+                    "pair out of bounds: n={} m={}",
+                    p.src.len(),
+                    p.m_real
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generate_splits_disjoint_streams() {
+        let d = Dataset::generate(LangPair::DeEn, 500, 1000, 42);
+        assert_eq!(d.fit.len(), 500);
+        assert_eq!(d.eval.len(), 1000);
+        d.validate().unwrap();
+        // Streams are seeded differently: first pairs should differ.
+        assert_ne!(d.fit[0], d.eval[0]);
+    }
+
+    #[test]
+    fn mean_m_sane() {
+        let d = Dataset::generate(LangPair::EnZh, 5000, 100, 1);
+        let gamma = LangPair::EnZh.params().gamma;
+        let delta = LangPair::EnZh.params().delta;
+        let expect = gamma * d.mean_n_fit() + delta;
+        // Outliers perturb slightly; tolerance generous.
+        assert!(
+            (d.mean_m_fit() - expect).abs() < 1.5,
+            "mean_m {} expect {expect}",
+            d.mean_m_fit()
+        );
+    }
+
+    #[test]
+    fn sample_eval_with_replacement() {
+        let d = Dataset::generate(LangPair::FrEn, 10, 20, 9);
+        let sample = d.sample_eval(500, 3);
+        assert_eq!(sample.len(), 500);
+        // All samples come from the eval split.
+        for s in sample {
+            assert!(d.eval.iter().any(|p| p == s));
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = Dataset::generate(LangPair::FrEn, 50, 50, 7);
+        let b = Dataset::generate(LangPair::FrEn, 50, 50, 7);
+        assert_eq!(a.fit, b.fit);
+        assert_eq!(a.eval, b.eval);
+    }
+}

@@ -1,0 +1,20 @@
+//! Synthetic parallel corpora — the substrate standing in for IWSLT'14
+//! DE-EN and OPUS-100 FR-EN / EN-ZH (DESIGN.md §4 substitution table).
+//!
+//! C-NMT consumes only the *length statistics* of a corpus: the joint
+//! distribution of source length `N` and target length `M` drives both
+//! the N→M regressor (paper Fig. 3) and the per-request work the router
+//! must place. The generators here reproduce those statistics per language
+//! pair — verbosity slope γ, offset δ, heteroscedastic noise, plus a
+//! configurable fraction of misaligned "outlier" pairs that the
+//! ParaCrawl-style [`prefilter`] must remove before fitting (paper §III).
+
+pub mod dataset;
+pub mod prefilter;
+pub mod synth;
+pub mod tokenizer;
+
+pub use dataset::{Dataset, SentencePair};
+pub use prefilter::{prefilter, PrefilterRules, PrefilterStats};
+pub use synth::{CorpusGenerator, LangPair, LangPairParams};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,183 @@
+//! ParaCrawl-style outlier pre-filtering (paper §III: "when computing γ
+//! and δ, we remove outliers (e.g., wrongly matched sentence pairs)
+//! following the pre-filtering rules described in [21]").
+//!
+//! ParaCrawl's bicleaner hard rules drop pairs that are (a) too short,
+//! (b) too long, or (c) have an implausible length *ratio*. Rule (c) must
+//! be language-pair aware — a legitimate EN→ZH pair routinely has
+//! M/N ≈ 0.6 — so the ratio test is taken relative to the corpus' own
+//! median verbosity rather than an absolute constant.
+
+use super::dataset::SentencePair;
+
+/// Tunable pre-filtering rules.
+#[derive(Debug, Clone, Copy)]
+pub struct PrefilterRules {
+    /// Minimum length (both sides).
+    pub min_len: usize,
+    /// Maximum length (both sides).
+    pub max_len: usize,
+    /// Allowed multiplicative deviation of M from the corpus-median
+    /// verbosity ratio: keep if `M ∈ [ratio·N/dev, ratio·N·dev]` (with an
+    /// additive slack floor for very short sentences).
+    pub max_ratio_dev: f64,
+    /// Additive slack (tokens) applied on top of the ratio band.
+    pub slack: f64,
+}
+
+impl Default for PrefilterRules {
+    fn default() -> Self {
+        PrefilterRules {
+            min_len: 1,
+            max_len: 62,
+            max_ratio_dev: 1.6,
+            slack: 2.0,
+        }
+    }
+}
+
+/// Outcome counts of a pre-filtering pass.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PrefilterStats {
+    pub total: usize,
+    pub kept: usize,
+    pub dropped_len: usize,
+    pub dropped_ratio: usize,
+}
+
+impl PrefilterStats {
+    pub fn drop_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            1.0 - self.kept as f64 / self.total as f64
+        }
+    }
+}
+
+/// Median M/N ratio of a corpus (the language-pair verbosity anchor).
+pub fn median_ratio(pairs: &[SentencePair]) -> f64 {
+    if pairs.is_empty() {
+        return 1.0;
+    }
+    let mut ratios: Vec<f64> = pairs
+        .iter()
+        .map(|p| p.m_real as f64 / p.n() as f64)
+        .collect();
+    ratios.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ratios[ratios.len() / 2]
+}
+
+/// Apply the rules; returns kept pairs (cloned) and stats.
+pub fn prefilter(
+    pairs: &[SentencePair],
+    rules: &PrefilterRules,
+) -> (Vec<SentencePair>, PrefilterStats) {
+    let ratio = median_ratio(pairs);
+    let mut kept = Vec::with_capacity(pairs.len());
+    let mut stats = PrefilterStats { total: pairs.len(), ..Default::default() };
+    for p in pairs {
+        let n = p.n();
+        let m = p.m_real;
+        if n < rules.min_len
+            || n > rules.max_len
+            || m < rules.min_len
+            || m > rules.max_len
+        {
+            stats.dropped_len += 1;
+            continue;
+        }
+        let expected = ratio * n as f64;
+        let lo = expected / rules.max_ratio_dev - rules.slack;
+        let hi = expected * rules.max_ratio_dev + rules.slack;
+        if (m as f64) < lo || (m as f64) > hi {
+            stats.dropped_ratio += 1;
+            continue;
+        }
+        kept.push(p.clone());
+        stats.kept += 1;
+    }
+    (kept, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::synth::{CorpusGenerator, LangPair};
+
+    fn pair(n: usize, m: usize) -> SentencePair {
+        SentencePair { src: vec![5; n], m_real: m, outlier: false }
+    }
+
+    #[test]
+    fn drops_length_violations() {
+        let pairs = vec![pair(1, 70), pair(70, 10), pair(10, 10)];
+        let rules = PrefilterRules { max_len: 62, ..Default::default() };
+        let (kept, stats) = prefilter(&pairs, &rules);
+        assert_eq!(stats.dropped_len, 2);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].n(), 10);
+    }
+
+    #[test]
+    fn ratio_filter_is_verbosity_aware() {
+        // A compact-target corpus (ratio ~0.6): M = 0.6N is fine, M = 2N
+        // is not — even though 2N would pass a naive |ratio|<2.2 rule for
+        // a 1:1 language pair.
+        let mut pairs: Vec<SentencePair> =
+            (5..40).map(|n| pair(n, (n as f64 * 0.6).round() as usize)).collect();
+        pairs.push(pair(20, 40)); // misaligned
+        let (kept, stats) = prefilter(&pairs, &PrefilterRules::default());
+        assert_eq!(stats.dropped_ratio, 1);
+        assert!(kept.iter().all(|p| p.m_real != 40));
+    }
+
+    #[test]
+    fn removes_most_injected_outliers_keeps_most_inliers() {
+        for lp in LangPair::ALL {
+            let mut g = CorpusGenerator::new(lp, 11);
+            let pairs = g.take(20_000);
+            let (kept, stats) = prefilter(&pairs, &PrefilterRules::default());
+            let outliers_in = pairs.iter().filter(|p| p.outlier).count();
+            let outliers_kept = kept.iter().filter(|p| p.outlier).count();
+            let inliers_in = pairs.len() - outliers_in;
+            let inliers_kept = kept.len() - outliers_kept;
+            // Most outliers gone. (An outlier can land inside the
+            // plausible band by chance, so not all.)
+            assert!(
+                (outliers_kept as f64) < 0.45 * outliers_in as f64,
+                "{}: kept {outliers_kept}/{outliers_in} outliers",
+                lp.id()
+            );
+            // Very few legitimate pairs lost.
+            assert!(
+                (inliers_kept as f64) > 0.97 * inliers_in as f64,
+                "{}: kept only {inliers_kept}/{inliers_in} inliers",
+                lp.id()
+            );
+            assert_eq!(stats.kept, kept.len());
+            assert_eq!(
+                stats.total,
+                stats.kept + stats.dropped_len + stats.dropped_ratio
+            );
+        }
+    }
+
+    #[test]
+    fn median_ratio_reflects_verbosity() {
+        let mut g = CorpusGenerator::new(LangPair::EnZh, 5);
+        let pairs = g.take(10_000);
+        let r = median_ratio(&pairs);
+        assert!((0.55..0.80).contains(&r), "EN-ZH median ratio {r}");
+        let mut g = CorpusGenerator::new(LangPair::DeEn, 5);
+        let r = median_ratio(&g.take(10_000));
+        assert!((0.95..1.25).contains(&r), "DE-EN median ratio {r}");
+    }
+
+    #[test]
+    fn empty_input_ok() {
+        let (kept, stats) = prefilter(&[], &PrefilterRules::default());
+        assert!(kept.is_empty());
+        assert_eq!(stats.drop_rate(), 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! Deterministic synthetic tokenizer.
+//!
+//! Maps token ids to pronounceable pseudo-words (and back) so the examples
+//! can print human-readable "sentences" and accept text input. The mapping
+//! is a bijection over the whole vocabulary: id → syllable expansion in a
+//! base-`(consonants × vowels)` positional code.
+
+use crate::{Error, Result};
+
+/// Special token ids shared with the python side (see manifest.json).
+pub const PAD_ID: u16 = 0;
+pub const BOS_ID: u16 = 1;
+pub const EOS_ID: u16 = 2;
+/// First id usable for content words.
+pub const FIRST_CONTENT_ID: u16 = 3;
+
+const CONSONANTS: &[u8] = b"bdfgklmnprstvz";
+const VOWELS: &[u8] = b"aeiou";
+
+/// Bijective id ⇄ pseudo-word codec.
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    vocab: u16,
+}
+
+impl Tokenizer {
+    pub fn new(vocab: u16) -> Self {
+        Tokenizer { vocab }
+    }
+
+    pub fn vocab(&self) -> u16 {
+        self.vocab
+    }
+
+    /// id → pseudo-word. Special ids render as markers.
+    pub fn word(&self, id: u16) -> String {
+        match id {
+            PAD_ID => "<pad>".into(),
+            BOS_ID => "<bos>".into(),
+            EOS_ID => "<eos>".into(),
+            _ => {
+                let base = (CONSONANTS.len() * VOWELS.len()) as u32; // 70
+                let mut x = (id - FIRST_CONTENT_ID) as u32;
+                let mut out = String::new();
+                loop {
+                    let syll = x % base;
+                    out.push(CONSONANTS[(syll as usize) / VOWELS.len()] as char);
+                    out.push(VOWELS[(syll as usize) % VOWELS.len()] as char);
+                    x /= base;
+                    if x == 0 {
+                        break;
+                    }
+                    x -= 1; // bijective numeration
+                }
+                out
+            }
+        }
+    }
+
+    /// pseudo-word → id (inverse of [`word`](Self::word)).
+    pub fn id(&self, word: &str) -> Result<u16> {
+        match word {
+            "<pad>" => return Ok(PAD_ID),
+            "<bos>" => return Ok(BOS_ID),
+            "<eos>" => return Ok(EOS_ID),
+            _ => {}
+        }
+        let bytes = word.as_bytes();
+        if bytes.is_empty() || bytes.len() % 2 != 0 {
+            return Err(Error::Corpus(format!("malformed word `{word}`")));
+        }
+        let base = (CONSONANTS.len() * VOWELS.len()) as u64;
+        let mut x: u64 = 0;
+        let mut mult: u64 = 1;
+        let mut first = true;
+        for chunk in bytes.chunks(2) {
+            let c = CONSONANTS
+                .iter()
+                .position(|&b| b == chunk[0])
+                .ok_or_else(|| Error::Corpus(format!("bad consonant in `{word}`")))?;
+            let v = VOWELS
+                .iter()
+                .position(|&b| b == chunk[1])
+                .ok_or_else(|| Error::Corpus(format!("bad vowel in `{word}`")))?;
+            let syll = (c * VOWELS.len() + v) as u64;
+            if first {
+                x = syll;
+                first = false;
+            } else {
+                x += (syll + 1) * mult;
+            }
+            mult *= base;
+        }
+        let id = x + FIRST_CONTENT_ID as u64;
+        if id >= self.vocab as u64 {
+            return Err(Error::Corpus(format!(
+                "word `{word}` maps to id {id} >= vocab {}",
+                self.vocab
+            )));
+        }
+        Ok(id as u16)
+    }
+
+    /// Render a token id sequence as a sentence.
+    pub fn detokenize(&self, ids: &[u16]) -> String {
+        ids.iter()
+            .map(|&i| self.word(i))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    /// Parse a whitespace-separated sentence into ids.
+    pub fn tokenize(&self, text: &str) -> Result<Vec<u16>> {
+        text.split_whitespace().map(|w| self.id(w)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_whole_vocab() {
+        let t = Tokenizer::new(4096);
+        for id in FIRST_CONTENT_ID..4096 {
+            let w = t.word(id);
+            assert_eq!(t.id(&w).unwrap(), id, "word {w}");
+        }
+    }
+
+    #[test]
+    fn specials() {
+        let t = Tokenizer::new(4096);
+        assert_eq!(t.word(PAD_ID), "<pad>");
+        assert_eq!(t.id("<eos>").unwrap(), EOS_ID);
+    }
+
+    #[test]
+    fn words_distinct() {
+        let t = Tokenizer::new(4096);
+        let mut seen = std::collections::HashSet::new();
+        for id in FIRST_CONTENT_ID..4096 {
+            assert!(seen.insert(t.word(id)), "duplicate word for id {id}");
+        }
+    }
+
+    #[test]
+    fn sentence_roundtrip() {
+        let t = Tokenizer::new(4096);
+        let ids = vec![3u16, 100, 999, 4095];
+        let text = t.detokenize(&ids);
+        assert_eq!(t.tokenize(&text).unwrap(), ids);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let t = Tokenizer::new(4096);
+        assert!(t.id("x").is_err());
+        assert!(t.id("qq").is_err());
+        assert!(t.id("").is_err());
+    }
+}

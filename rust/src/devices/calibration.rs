@@ -1,0 +1,311 @@
+//! Offline device characterisation (the paper's "once-for-all offline
+//! characterisation" that produces the αN, αM, β of eq. 2).
+//!
+//! Two sources of coefficients:
+//!
+//! 1. **Measured** — the `cnmt calibrate` CLI runs real PJRT inferences
+//!    over an (N, M) sweep, measures wall time, fits
+//!    [`crate::predictor::TexeModel`] planes and writes them here; edge
+//!    and cloud are derived from the measured CPU numbers by per-device
+//!    speed scaling (DESIGN.md §4: the edge:cloud ratio is the quantity
+//!    that matters for routing geometry, not the absolute scale).
+//! 2. **Built-in defaults** ([`Calibration::default_paper`]) — paper-shaped
+//!    coefficients (Jetson-TX2-vs-Titan-XP-like ratios, Fig. 2a slopes)
+//!    so every experiment runs out of the box and reproducibly.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::devices::sim::{DeviceKind, SimDevice};
+use crate::predictor::TexeModel;
+use crate::util::{Json, Rng};
+use crate::{Error, Result};
+
+/// Ground-truth latency model for one (device, NMT model) pair: linear
+/// trend + heteroscedastic noise.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeviceTimeModel {
+    /// Linear trend (the "real" plane the router tries to learn).
+    pub texe: TexeModel,
+    /// Multiplicative noise: std = `noise_frac`·mean.
+    pub noise_frac: f64,
+    /// Additive noise floor (seconds).
+    pub noise_floor_s: f64,
+}
+
+impl DeviceTimeModel {
+    pub fn mean(&self, n: usize, m: usize) -> f64 {
+        self.texe.estimate(n, m as f64)
+    }
+
+    /// Sample an execution time (trend + truncated Gaussian noise).
+    pub fn sample(&self, n: usize, m: usize, rng: &mut Rng) -> f64 {
+        let mean = self.mean(n, m);
+        let std = self.noise_frac * mean + self.noise_floor_s;
+        (mean + rng.normal_ms(0.0, std)).max(mean * 0.2).max(1e-6)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("texe", self.texe.to_json())
+            .set("noise_frac", Json::Num(self.noise_frac))
+            .set("noise_floor_s", Json::Num(self.noise_floor_s));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(DeviceTimeModel {
+            texe: TexeModel::from_json(j.get("texe")?)?,
+            noise_frac: j.get("noise_frac")?.as_f64()?,
+            noise_floor_s: j.get("noise_floor_s")?.as_f64()?,
+        })
+    }
+}
+
+/// Full calibration: (device, model) → ground-truth time model.
+#[derive(Debug, Clone, Default)]
+pub struct Calibration {
+    /// Keyed by `"<device_id>/<model_name>"`.
+    entries: BTreeMap<String, DeviceTimeModel>,
+}
+
+fn key(device: DeviceKind, model: &str) -> String {
+    format!("{}/{model}", device.id())
+}
+
+impl Calibration {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn set(&mut self, device: DeviceKind, model: &str, tm: DeviceTimeModel) {
+        self.entries.insert(key(device, model), tm);
+    }
+
+    pub fn get(&self, device: DeviceKind, model: &str) -> Result<&DeviceTimeModel> {
+        self.entries.get(&key(device, model)).ok_or_else(|| {
+            Error::Sim(format!("no calibration for {}/{model}", device.id()))
+        })
+    }
+
+    pub fn models(&self) -> Vec<String> {
+        let mut out: Vec<String> = self
+            .entries
+            .keys()
+            .filter_map(|k| k.split_once('/').map(|(_, m)| m.to_string()))
+            .collect();
+        out.sort();
+        out.dedup();
+        out
+    }
+
+    /// Instantiate a [`SimDevice`] with every model calibrated for `kind`.
+    pub fn build_device(&self, kind: DeviceKind, seed: u64) -> Result<SimDevice> {
+        let mut dev = SimDevice::new(kind, seed);
+        let mut any = false;
+        for (k, tm) in &self.entries {
+            if let Some((d, model)) = k.split_once('/') {
+                if d == kind.id() {
+                    dev = dev.with_model(model, *tm);
+                    any = true;
+                }
+            }
+        }
+        if !any {
+            return Err(Error::Sim(format!("no calibration entries for {}", kind.id())));
+        }
+        Ok(dev)
+    }
+
+    /// Built-in paper-shaped coefficients (seconds). Ratios follow the
+    /// paper's observations: cloud ~4-6× faster; Transformer αN ≈ 0
+    /// (encoder parallel ⇒ ~constant in N) while decode dominates; RNNs
+    /// linear in both N and M; cloud relatively noisier (paper Fig. 2a:
+    /// Titan R²=0.85 vs Jetson 0.99).
+    pub fn default_paper() -> Calibration {
+        let mut c = Calibration::new();
+        let e = DeviceKind::Edge;
+        let cl = DeviceKind::Cloud;
+        let dm = |an: f64, am: f64, b: f64, nf: f64, floor: f64| DeviceTimeModel {
+            texe: TexeModel::from_coeffs(an, am, b),
+            noise_frac: nf,
+            noise_floor_s: floor,
+        };
+        // Absolute scales follow the paper's testbed regime: Jetson-TX2
+        // edge times are comparable to (or above) the WAN RTT, and the
+        // Titan-class server is ~6-10x faster, so the edge/cloud
+        // crossover falls inside the corpus length range under both
+        // connection profiles (paper Fig. 2b).
+        //
+        // The cloud carries a noticeable *fixed* cost (RPC deserialise,
+        // scheduler, kernel-launch train-up — visible as the non-zero
+        // intercept of the Titan series in the paper's Fig. 2a), while
+        // its per-token slopes are ~6-8x below the edge's. That geometry
+        // puts the edge/cloud crossover inside the corpus length range
+        // under both connection profiles (paper Fig. 2b).
+        //
+        // 2-layer BiLSTM (IWSLT'14 DE-EN).
+        c.set(e, "bilstm_de_en", dm(1.80e-3, 4.80e-3, 8.0e-3, 0.04, 0.5e-3));
+        c.set(cl, "bilstm_de_en", dm(0.30e-3, 0.80e-3, 33.0e-3, 0.08, 0.8e-3));
+        // 1-layer GRU (OPUS-100 FR-EN) — lightest model: edge-favoured.
+        c.set(e, "gru_fr_en", dm(1.20e-3, 3.00e-3, 6.0e-3, 0.04, 0.4e-3));
+        c.set(cl, "gru_fr_en", dm(0.22e-3, 0.55e-3, 26.0e-3, 0.08, 0.6e-3));
+        // MarianMT-style Transformer (OPUS-100 EN-ZH): encoder ~free,
+        // serial masked decode dominates — cloud-favoured.
+        c.set(e, "transformer_en_zh", dm(0.15e-3, 11.0e-3, 12.0e-3, 0.04, 0.5e-3));
+        c.set(cl, "transformer_en_zh", dm(0.03e-3, 1.60e-3, 28.0e-3, 0.08, 0.8e-3));
+        c
+    }
+
+    /// Derive edge/cloud calibrations from *measured* samples on the local
+    /// PJRT backend: fit a plane per model, then scale by per-device speed
+    /// factors (edge ≈ local CPU, cloud ≈ `cloud_speedup`× faster).
+    pub fn from_measurements(
+        samples_per_model: &BTreeMap<String, Vec<(f64, f64, f64)>>,
+        edge_slowdown: f64,
+        cloud_speedup: f64,
+    ) -> Result<Calibration> {
+        if edge_slowdown <= 0.0 || cloud_speedup <= 0.0 {
+            return Err(Error::Config("speed factors must be positive".into()));
+        }
+        let mut c = Calibration::new();
+        for (model, samples) in samples_per_model {
+            let base = TexeModel::fit(samples)?;
+            base.validate()?;
+            let scaled = |f: f64| TexeModel {
+                alpha_n: base.alpha_n * f,
+                alpha_m: base.alpha_m * f,
+                beta: base.beta * f,
+                r2: base.r2,
+                mse: base.mse * f * f,
+            };
+            // Residual noise from the fit, carried into the simulation.
+            let resid_std = base.mse.sqrt();
+            let mean_t = samples.iter().map(|s| s.2).sum::<f64>() / samples.len() as f64;
+            let noise_frac = (resid_std / mean_t).clamp(0.01, 0.25);
+            c.set(DeviceKind::Edge, model, DeviceTimeModel {
+                texe: scaled(edge_slowdown),
+                noise_frac,
+                noise_floor_s: 0.2e-3,
+            });
+            c.set(DeviceKind::Cloud, model, DeviceTimeModel {
+                texe: scaled(1.0 / cloud_speedup),
+                // Cloud relatively noisier (shared machine, paper Fig 2a).
+                noise_frac: (noise_frac * 1.8).clamp(0.01, 0.3),
+                noise_floor_s: 0.4e-3,
+            });
+        }
+        Ok(c)
+    }
+
+    // ------------------------------------------------------------ JSON I/O
+
+    pub fn to_json(&self) -> Json {
+        let mut entries = Json::object();
+        for (k, v) in &self.entries {
+            entries.set(k, v.to_json());
+        }
+        let mut root = Json::object();
+        root.set("version", Json::Num(1.0)).set("entries", entries);
+        root
+    }
+
+    pub fn from_json(j: &Json) -> Result<Calibration> {
+        let mut c = Calibration::new();
+        for (k, v) in j.get("entries")?.as_object()? {
+            let (dev, model) = k.split_once('/').ok_or_else(|| {
+                Error::Config(format!("bad calibration key `{k}`"))
+            })?;
+            let kind = DeviceKind::from_id(dev).ok_or_else(|| {
+                Error::Config(format!("bad device id `{dev}`"))
+            })?;
+            c.set(kind, model, DeviceTimeModel::from_json(v)?);
+        }
+        Ok(c)
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Calibration> {
+        Calibration::from_json(&Json::parse_file(path)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn default_paper_covers_all_pairs() {
+        let c = Calibration::default_paper();
+        for dev in DeviceKind::ALL {
+            for model in ["bilstm_de_en", "gru_fr_en", "transformer_en_zh"] {
+                let tm = c.get(dev, model).unwrap();
+                tm.texe.validate().unwrap();
+                assert!(tm.mean(10, 10) > 0.0);
+            }
+        }
+        assert_eq!(c.models().len(), 3);
+    }
+
+    #[test]
+    fn transformer_edge_is_decode_dominated() {
+        // Paper §III: "decoding dominates the total latency of
+        // Transformer-based NMT".
+        let c = Calibration::default_paper();
+        let tm = c.get(DeviceKind::Edge, "transformer_en_zh").unwrap();
+        assert!(tm.texe.alpha_m > 10.0 * tm.texe.alpha_n.max(1e-9));
+    }
+
+    #[test]
+    fn json_roundtrip_via_file() {
+        let c = Calibration::default_paper();
+        let dir = std::env::temp_dir().join("cnmt_cal_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cal.json");
+        c.save(&path).unwrap();
+        let back = Calibration::load(&path).unwrap();
+        for dev in DeviceKind::ALL {
+            for model in c.models() {
+                let a = c.get(dev, &model).unwrap();
+                let b = back.get(dev, &model).unwrap();
+                assert!((a.texe.alpha_m - b.texe.alpha_m).abs() < 1e-15);
+                assert!((a.noise_frac - b.noise_frac).abs() < 1e-15);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn from_measurements_scales_devices() {
+        let mut rng = Rng::new(5);
+        let truth = TexeModel::from_coeffs(2e-3, 6e-3, 20e-3);
+        let mut samples = BTreeMap::new();
+        samples.insert(
+            "gru_fr_en".to_string(),
+            (0..2000)
+                .map(|_| {
+                    let n = rng.range_i64(1, 62) as f64;
+                    let m = rng.range_i64(1, 62) as f64;
+                    (n, m, truth.estimate(n as usize, m) + rng.normal_ms(0.0, 1e-3))
+                })
+                .collect::<Vec<_>>(),
+        );
+        let c = Calibration::from_measurements(&samples, 1.0, 5.0).unwrap();
+        let edge = c.get(DeviceKind::Edge, "gru_fr_en").unwrap();
+        let cloud = c.get(DeviceKind::Cloud, "gru_fr_en").unwrap();
+        assert!((edge.texe.alpha_m / cloud.texe.alpha_m - 5.0).abs() < 0.01);
+        assert!((edge.texe.alpha_m - truth.alpha_m).abs() < 4e-4);
+    }
+
+    #[test]
+    fn from_measurements_rejects_bad_factors() {
+        let samples = BTreeMap::new();
+        assert!(Calibration::from_measurements(&samples, 0.0, 5.0).is_err());
+        assert!(Calibration::from_measurements(&samples, 1.0, -1.0).is_err());
+    }
+}

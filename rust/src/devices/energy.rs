@@ -1,0 +1,92 @@
+//! Gateway-side energy model — the second objective of the CI literature
+//! the paper builds on (its intro: CI "optimizes the latency and energy
+//! consumption"; Neurosurgeon [4] switches between latency and energy
+//! targets). The paper evaluates latency only; this module adds the
+//! energy view as a first-class extension (`cnmt experiment energy`).
+//!
+//! Perspective: the **edge gateway's battery/thermal budget** (the
+//! quantity an embedded deployment cares about). A request costs
+//!
+//! * executed locally:  `E = P_busy · T_exe,edge`
+//! * offloaded:         `E = P_radio · T_tx` (radio active for the round
+//!   trip; the cloud's energy is not the gateway's problem)
+//!
+//! Defaults approximate a Jetson-TX2-class board (≈9 W busy GPU+SoC) and
+//! an active WiFi/LTE radio (≈1.5 W).
+
+/// Edge-gateway power model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EnergyModel {
+    /// Power while running inference locally (W).
+    pub p_busy_w: f64,
+    /// Radio power while a transfer/round trip is in flight (W).
+    pub p_radio_w: f64,
+    /// Idle floor (W) — charged for the request duration regardless of
+    /// placement (board is on either way); included so energy *savings*
+    /// are not overstated.
+    pub p_idle_w: f64,
+}
+
+impl Default for EnergyModel {
+    fn default() -> Self {
+        // Jetson TX2: ~7.5-15 W under GPU load, ~1.9 W idle;
+        // WiFi/LTE active radio ~1-2 W.
+        EnergyModel { p_busy_w: 9.0, p_radio_w: 1.5, p_idle_w: 1.9 }
+    }
+}
+
+impl EnergyModel {
+    /// Gateway energy (J) for a locally-executed request.
+    pub fn local_energy(&self, t_exe_s: f64) -> f64 {
+        (self.p_busy_w + self.p_idle_w) * t_exe_s
+    }
+
+    /// Gateway energy (J) for an offloaded request: radio for the round
+    /// trip, idle while the cloud computes.
+    pub fn offload_energy(&self, t_tx_s: f64, t_cloud_s: f64) -> f64 {
+        (self.p_radio_w + self.p_idle_w) * t_tx_s + self.p_idle_w * t_cloud_s
+    }
+
+    /// Energy-aware placement (the extension policy): offload when the
+    /// gateway-side energy of offloading undercuts local execution,
+    /// using the same estimated quantities as the latency rule.
+    pub fn prefer_offload(
+        &self,
+        t_edge_est: f64,
+        t_cloud_est: f64,
+        t_tx_est: f64,
+    ) -> bool {
+        self.offload_energy(t_tx_est, t_cloud_est) < self.local_energy(t_edge_est)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_scales_with_exec_time() {
+        let e = EnergyModel::default();
+        assert!((e.local_energy(1.0) - 10.9).abs() < 1e-12);
+        assert!(e.local_energy(2.0) > e.local_energy(1.0));
+    }
+
+    #[test]
+    fn offload_cheaper_for_long_requests() {
+        // Long local execution burns busy power; offloading the same
+        // request costs only radio+idle — energy favours the cloud more
+        // aggressively than latency does.
+        let e = EnergyModel::default();
+        let local = e.local_energy(0.5); // 0.5 s on the edge GPU
+        let off = e.offload_energy(0.1, 0.1); // 100 ms RTT, 100 ms cloud
+        assert!(off < local, "offload {off} J vs local {local} J");
+        assert!(e.prefer_offload(0.5, 0.1, 0.1));
+    }
+
+    #[test]
+    fn offload_wasteful_for_tiny_requests_on_slow_net() {
+        let e = EnergyModel::default();
+        // 5 ms local vs a 300 ms round trip: radio energy dominates.
+        assert!(!e.prefer_offload(0.005, 0.001, 0.3));
+    }
+}

@@ -1,0 +1,23 @@
+//! Device substrate: the edge gateway and cloud server.
+//!
+//! The paper's testbed is an NVIDIA Jetson TX2 (edge GW) and a Xeon +
+//! Titan XP server (cloud), both running PyTorch. This environment has
+//! a single CPU PJRT backend, so (DESIGN.md §4) devices appear in two
+//! forms:
+//!
+//! * [`sim::SimDevice`] — ground-truth execution-time models (linear in
+//!   N and M with heteroscedastic noise), with coefficients either from
+//!   [`calibration`] (fitted on real PJRT runs, scaled per device) or
+//!   from the built-in paper-shaped defaults. Used by the 100k-request
+//!   experiment harness.
+//! * `runtime::Seq2SeqEngine` (see [`crate::runtime`]) — real PJRT
+//!   execution, used by the examples, the calibration pass and the
+//!   end-to-end gateway.
+
+pub mod calibration;
+pub mod energy;
+pub mod sim;
+
+pub use calibration::{Calibration, DeviceTimeModel};
+pub use energy::EnergyModel;
+pub use sim::{DeviceKind, SimDevice};

@@ -1,0 +1,156 @@
+//! Simulated inference devices with calibrated latency ground truth.
+
+use std::collections::BTreeMap;
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+use super::calibration::DeviceTimeModel;
+
+/// Which side of the edge/cloud split a device sits on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    /// The edge gateway (paper: Jetson TX2). Local: no network cost.
+    Edge,
+    /// The cloud server (paper: Titan XP). Remote: requests pay T_tx.
+    Cloud,
+}
+
+impl DeviceKind {
+    pub const ALL: [DeviceKind; 2] = [DeviceKind::Edge, DeviceKind::Cloud];
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            DeviceKind::Edge => "edge",
+            DeviceKind::Cloud => "cloud",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<DeviceKind> {
+        match s {
+            "edge" => Some(DeviceKind::Edge),
+            "cloud" => Some(DeviceKind::Cloud),
+            _ => None,
+        }
+    }
+}
+
+/// A simulated device: per-model ground-truth latency models.
+///
+/// `exec_time(model, n, m)` draws the *actual* time a request would take —
+/// linear trend plus noise — which the experiment harness charges, and
+/// which differs from what the router's fitted [`crate::predictor::TexeModel`]
+/// predicts (that mismatch is one of the paper's sources of C-NMT
+/// sub-optimality vs the Oracle).
+#[derive(Debug, Clone)]
+pub struct SimDevice {
+    pub kind: DeviceKind,
+    models: BTreeMap<String, DeviceTimeModel>,
+    rng: Rng,
+}
+
+impl SimDevice {
+    pub fn new(kind: DeviceKind, seed: u64) -> Self {
+        SimDevice {
+            kind,
+            models: BTreeMap::new(),
+            rng: Rng::new(seed ^ (kind as u64 + 1).wrapping_mul(0xDE71CE)),
+        }
+    }
+
+    /// Register the ground-truth time model for `model_name`.
+    pub fn with_model(mut self, model_name: &str, m: DeviceTimeModel) -> Self {
+        self.models.insert(model_name.to_string(), m);
+        self
+    }
+
+    pub fn has_model(&self, model_name: &str) -> bool {
+        self.models.contains_key(model_name)
+    }
+
+    pub fn time_model(&self, model_name: &str) -> Result<&DeviceTimeModel> {
+        self.models.get(model_name).ok_or_else(|| {
+            Error::Sim(format!(
+                "device {} has no time model for `{model_name}`",
+                self.kind.id()
+            ))
+        })
+    }
+
+    /// Deterministic trend component (used by the Oracle-without-noise
+    /// ablation and by tests).
+    pub fn mean_time(&self, model_name: &str, n: usize, m: usize) -> Result<f64> {
+        Ok(self.time_model(model_name)?.mean(n, m))
+    }
+
+    /// Sample the ground-truth execution time for one request.
+    pub fn exec_time(&mut self, model_name: &str, n: usize, m: usize) -> Result<f64> {
+        let tm = *self.time_model(model_name)?;
+        Ok(tm.sample(n, m, &mut self.rng))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::calibration::Calibration;
+    use crate::metrics::OnlineStats;
+
+    #[test]
+    fn exec_time_tracks_trend() {
+        let cal = Calibration::default_paper();
+        let mut dev = cal.build_device(DeviceKind::Edge, 1).unwrap();
+        let mut s = OnlineStats::new();
+        for _ in 0..3000 {
+            s.push(dev.exec_time("gru_fr_en", 20, 18).unwrap());
+        }
+        let trend = dev.mean_time("gru_fr_en", 20, 18).unwrap();
+        assert!(
+            (s.mean() - trend).abs() / trend < 0.02,
+            "mean {} vs trend {trend}",
+            s.mean()
+        );
+        assert!(s.std() > 0.0, "noise must be present");
+        assert!(s.min() > 0.0, "times must be positive");
+    }
+
+    #[test]
+    fn cloud_faster_than_edge_for_long_requests() {
+        // The calibration geometry: the cloud's *slopes* are far below
+        // the edge's, but its fixed cost is higher — so it wins clearly
+        // on medium/long requests while very short ones can favour the
+        // edge even before network costs (paper Fig. 2b edge region).
+        let cal = Calibration::default_paper();
+        let mut edge = cal.build_device(DeviceKind::Edge, 2).unwrap();
+        let mut cloud = cal.build_device(DeviceKind::Cloud, 2).unwrap();
+        for model in ["bilstm_de_en", "gru_fr_en", "transformer_en_zh"] {
+            for (n, m) in [(30, 25), (60, 55)] {
+                let te = edge.mean_time(model, n, m).unwrap();
+                let tc = cloud.mean_time(model, n, m).unwrap();
+                assert!(
+                    tc < te,
+                    "{model} ({n},{m}): cloud {tc} not faster than edge {te}"
+                );
+            }
+            // Per-token slopes strictly lower on the cloud.
+            let e = cal.get(DeviceKind::Edge, model).unwrap().texe;
+            let c = cal.get(DeviceKind::Cloud, model).unwrap().texe;
+            assert!(c.alpha_m < e.alpha_m);
+            assert!(c.alpha_n <= e.alpha_n);
+        }
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let dev = SimDevice::new(DeviceKind::Edge, 3);
+        assert!(dev.mean_time("nope", 1, 1).is_err());
+    }
+
+    #[test]
+    fn kind_ids_roundtrip() {
+        for k in DeviceKind::ALL {
+            assert_eq!(DeviceKind::from_id(k.id()), Some(k));
+        }
+        assert_eq!(DeviceKind::from_id("tpu"), None);
+    }
+}

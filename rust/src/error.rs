@@ -1,0 +1,52 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Unified error for every C-NMT subsystem.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Errors surfaced by the PJRT runtime (`xla` crate).
+    #[error("xla/pjrt: {0}")]
+    Xla(String),
+
+    /// Artifact loading problems (missing files, bad manifest, shape
+    /// mismatches between manifest and weights blob).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Configuration / CLI / JSON parsing and validation.
+    #[error("config: {0}")]
+    Config(String),
+
+    /// Corpus generation / loading.
+    #[error("corpus: {0}")]
+    Corpus(String),
+
+    /// Network trace problems.
+    #[error("net: {0}")]
+    Net(String),
+
+    /// Model fitting (degenerate design matrix, too few samples, ...).
+    #[error("fit: {0}")]
+    Fit(String),
+
+    /// Simulation / experiment harness.
+    #[error("sim: {0}")]
+    Sim(String),
+
+    /// Gateway / serving errors (worker died, queue closed, ...).
+    #[error("serve: {0}")]
+    Serve(String),
+
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;

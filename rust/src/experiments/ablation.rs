@@ -1,0 +1,157 @@
+//! Estimator ablation — the paper's future work ("more advanced output
+//! length estimation methods") made concrete: swap the N→M estimator in
+//! the C-NMT decision and measure the impact on total execution time and
+//! on the gap to the Oracle, per dataset × profile.
+
+use crate::config::Config;
+use crate::coordinator::PolicyKind;
+use crate::corpus::{prefilter, LangPair, PrefilterRules};
+use crate::devices::Calibration;
+use crate::net::trace::ConnectionProfile;
+use crate::predictor::LengthEstimator;
+use crate::sim::{run_policy, run_with_estimator, TruthTable};
+use crate::util::Json;
+use crate::Result;
+
+use super::report::text_table;
+
+/// One (pair, profile) row of the ablation.
+#[derive(Debug, Clone)]
+pub struct AblationRow {
+    pub pair: LangPair,
+    pub profile: ConnectionProfile,
+    /// (estimator id, total_s, % vs oracle, held-out MAE).
+    pub entries: Vec<(String, f64, f64, f64)>,
+}
+
+/// Full ablation result.
+#[derive(Debug, Clone)]
+pub struct Ablation {
+    pub rows: Vec<AblationRow>,
+}
+
+/// Run the ablation over the configured grid.
+pub fn run(cfg: &Config, calibration: &Calibration) -> Result<Ablation> {
+    let mut rows = Vec::new();
+    for &pair in &cfg.pairs {
+        for &profile in &cfg.profiles {
+            let table = TruthTable::build(cfg, pair, profile, calibration)?;
+            let oracle = run_policy(&table, PolicyKind::Oracle)?;
+
+            // Fit the zoo on the same (prefiltered) fit split the linear
+            // regressor was characterised on.
+            let dataset = crate::corpus::Dataset::generate(
+                pair,
+                cfg.fit_inferences,
+                64,
+                cfg.seed
+                    ^ (pair as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+                    ^ (profile as u64 + 1).wrapping_mul(0xBF58476D1CE4E5B9),
+            );
+            let (fit_pairs, _) = prefilter(&dataset.fit, &PrefilterRules::default());
+            let holdout = crate::corpus::CorpusGenerator::new(pair, cfg.seed ^ 0x0A)
+                .take(5_000);
+            let (holdout, _) = prefilter(&holdout, &PrefilterRules::default());
+
+            let mut entries = Vec::new();
+            for est in LengthEstimator::fit_all(&fit_pairs)? {
+                let r = run_with_estimator(&table, &est)?;
+                let vs_oracle = (r.total_s - oracle.total_s) / oracle.total_s * 100.0;
+                entries.push((est.id().to_string(), r.total_s, vs_oracle, est.mae(&holdout)));
+            }
+            rows.push(AblationRow { pair, profile, entries });
+        }
+    }
+    Ok(Ablation { rows })
+}
+
+/// Text rendering.
+pub fn render_text(a: &Ablation) -> String {
+    let mut out = String::from(
+        "Estimator ablation — C-NMT with alternative N→M estimators\n\
+         (% vs Oracle: lower is better; MAE: held-out |M̂−M| tokens)\n",
+    );
+    let mut rows = vec![vec![
+        "cell".to_string(),
+        "estimator".to_string(),
+        "total_s".to_string(),
+        "vs Oracle %".to_string(),
+        "MAE".to_string(),
+    ]];
+    for r in &a.rows {
+        for (id, total, vs, mae) in &r.entries {
+            rows.push(vec![
+                format!("{}/{}", r.pair.id(), r.profile.id()),
+                id.clone(),
+                format!("{total:.1}"),
+                format!("{vs:+.2}"),
+                format!("{mae:.2}"),
+            ]);
+        }
+    }
+    out.push_str(&text_table(&rows));
+    out
+}
+
+/// JSON report.
+pub fn to_json(a: &Ablation) -> Json {
+    let mut rows = Vec::new();
+    for r in &a.rows {
+        let mut o = Json::object();
+        o.set("pair", Json::Str(r.pair.id().into()))
+            .set("profile", Json::Str(r.profile.id().into()));
+        let mut ests = Json::object();
+        for (id, total, vs, mae) in &r.entries {
+            let mut e = Json::object();
+            e.set("total_s", Json::Num(*total))
+                .set("vs_oracle_pct", Json::Num(*vs))
+                .set("mae_tokens", Json::Num(*mae));
+            ests.set(id, e);
+        }
+        o.set("estimators", ests);
+        rows.push(o);
+    }
+    let mut root = Json::object();
+    root.set("rows", Json::Array(rows));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_family_beats_constant() {
+        let mut cfg = Config::smoke();
+        cfg.requests = 3_000;
+        cfg.pairs = vec![LangPair::EnZh];
+        cfg.profiles = vec![ConnectionProfile::Cp1];
+        let a = run(&cfg, &Calibration::default_paper()).unwrap();
+        assert_eq!(a.rows.len(), 1);
+        let entries = &a.rows[0].entries;
+        assert_eq!(entries.len(), 5);
+        let total = |id: &str| {
+            entries.iter().find(|e| e.0 == id).unwrap().1
+        };
+        // The estimators that model the N→M relation must beat the
+        // constant (Naive-like) estimate on the decode-dominated pair.
+        assert!(total("linear") <= total("constant"));
+        assert!(total("bucket") <= total("constant") * 1.005);
+        // MAE ordering: linear-family below constant.
+        let mae = |id: &str| entries.iter().find(|e| e.0 == id).unwrap().3;
+        assert!(mae("linear") < mae("constant"));
+    }
+
+    #[test]
+    fn render_and_json_shape() {
+        let mut cfg = Config::smoke();
+        cfg.requests = 1_000;
+        cfg.pairs = vec![LangPair::FrEn];
+        cfg.profiles = vec![ConnectionProfile::Cp2];
+        let a = run(&cfg, &Calibration::default_paper()).unwrap();
+        let txt = render_text(&a);
+        assert!(txt.contains("quantile"));
+        let j = to_json(&a);
+        assert_eq!(j.get("rows").unwrap().as_array().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,269 @@
+//! Energy-view experiment (extension): gateway-side energy consumption
+//! of every Table-I policy, plus an **energy-aware** C-NMT variant that
+//! uses the same predictive stack (eq. 2's T̂ estimates) but places
+//! requests by the gateway energy rule ([`EnergyModel::prefer_offload`]).
+//!
+//! Headline question: how much latency does the energy-optimal placement
+//! give up, and vice versa — the latency/energy tradeoff the CI
+//! literature (Neurosurgeon etc.) navigates and the paper leaves to
+//! future work.
+
+use crate::config::Config;
+use crate::coordinator::{PolicyKind, RouterBuilder};
+use crate::corpus::LangPair;
+use crate::devices::energy::EnergyModel;
+use crate::devices::{Calibration, DeviceKind};
+use crate::net::trace::ConnectionProfile;
+use crate::sim::TruthTable;
+use crate::util::Json;
+use crate::Result;
+
+use super::report::text_table;
+
+/// Per-policy latency+energy totals for one cell.
+#[derive(Debug, Clone)]
+pub struct EnergyEntry {
+    pub policy: String,
+    pub total_time_s: f64,
+    pub total_energy_j: f64,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+}
+
+/// One (pair, profile) cell.
+#[derive(Debug, Clone)]
+pub struct EnergyCell {
+    pub pair: LangPair,
+    pub profile: ConnectionProfile,
+    pub entries: Vec<EnergyEntry>,
+}
+
+/// Full experiment result.
+#[derive(Debug, Clone)]
+pub struct EnergyReport {
+    pub cells: Vec<EnergyCell>,
+    pub model: EnergyModel,
+}
+
+fn eval(
+    table: &TruthTable,
+    policy_id: &str,
+    energy: &EnergyModel,
+    mut decide: impl FnMut(&crate::sim::harness::RequestTruth) -> DeviceKind,
+) -> EnergyEntry {
+    let mut time = 0.0;
+    let mut joules = 0.0;
+    let (mut edge_count, mut cloud_count) = (0, 0);
+    for rq in &table.requests {
+        match decide(rq) {
+            DeviceKind::Edge => {
+                edge_count += 1;
+                time += rq.t_edge;
+                joules += energy.local_energy(rq.t_edge);
+            }
+            DeviceKind::Cloud => {
+                cloud_count += 1;
+                time += rq.t_tx + rq.t_cloud;
+                joules += energy.offload_energy(rq.t_tx, rq.t_cloud);
+            }
+        }
+    }
+    EnergyEntry {
+        policy: policy_id.to_string(),
+        total_time_s: time,
+        total_energy_j: joules,
+        edge_count,
+        cloud_count,
+    }
+}
+
+/// Run the experiment over the configured grid.
+pub fn run(
+    cfg: &Config,
+    calibration: &Calibration,
+    energy: EnergyModel,
+) -> Result<EnergyReport> {
+    let mut cells = Vec::new();
+    for &pair in &cfg.pairs {
+        for &profile in &cfg.profiles {
+            let table = TruthTable::build(cfg, pair, profile, calibration)?;
+            let ch = table.characterization.clone();
+            let mut entries = Vec::new();
+
+            entries.push(eval(&table, "edge_only", &energy, |_| DeviceKind::Edge));
+            entries.push(eval(&table, "cloud_only", &energy, |_| DeviceKind::Cloud));
+            entries.push(eval(&table, "oracle_latency", &energy, |rq| {
+                if rq.t_edge <= rq.t_tx + rq.t_cloud {
+                    DeviceKind::Edge
+                } else {
+                    DeviceKind::Cloud
+                }
+            }));
+
+            // C-NMT (latency objective), with the online T_tx estimator.
+            let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+                .texe(ch.texe_edge, ch.texe_cloud)
+                .n2m(ch.n2m)
+                .build()?;
+            entries.push(eval(&table, "cnmt_latency", &energy, |rq| {
+                if router.ttx_stale(rq.arrival_s, 60.0) {
+                    router.observe_ttx(rq.arrival_s, rq.rtt);
+                }
+                let d = router.decide(rq.n).device;
+                if d == DeviceKind::Cloud {
+                    router.observe_ttx(rq.arrival_s, rq.rtt);
+                }
+                d
+            }));
+
+            // Energy-aware C-NMT: same predictive stack, energy rule.
+            let mut router_e = RouterBuilder::new(PolicyKind::Cnmt)
+                .texe(ch.texe_edge, ch.texe_cloud)
+                .n2m(ch.n2m)
+                .build()?;
+            entries.push(eval(&table, "cnmt_energy", &energy, |rq| {
+                if router_e.ttx_stale(rq.arrival_s, 60.0) {
+                    router_e.observe_ttx(rq.arrival_s, rq.rtt);
+                }
+                let tr = router_e.decide(rq.n); // estimates
+                let d = if energy.prefer_offload(tr.t_edge_est, tr.t_cloud_est, tr.ttx_est)
+                {
+                    DeviceKind::Cloud
+                } else {
+                    DeviceKind::Edge
+                };
+                if d == DeviceKind::Cloud {
+                    router_e.observe_ttx(rq.arrival_s, rq.rtt);
+                }
+                d
+            }));
+
+            // Energy oracle (lower bound on gateway energy).
+            entries.push(eval(&table, "oracle_energy", &energy, |rq| {
+                if energy.local_energy(rq.t_edge)
+                    <= energy.offload_energy(rq.t_tx, rq.t_cloud)
+                {
+                    DeviceKind::Edge
+                } else {
+                    DeviceKind::Cloud
+                }
+            }));
+
+            cells.push(EnergyCell { pair, profile, entries });
+        }
+    }
+    Ok(EnergyReport { cells, model: energy })
+}
+
+/// Text rendering.
+pub fn render_text(r: &EnergyReport) -> String {
+    let mut out = format!(
+        "Energy view (gateway perspective: busy {:.1} W, radio {:.1} W, idle {:.1} W)\n",
+        r.model.p_busy_w, r.model.p_radio_w, r.model.p_idle_w
+    );
+    let mut rows = vec![vec![
+        "cell".to_string(),
+        "policy".to_string(),
+        "time_s".to_string(),
+        "energy_J".to_string(),
+        "edge/cloud".to_string(),
+    ]];
+    for c in &r.cells {
+        for e in &c.entries {
+            rows.push(vec![
+                format!("{}/{}", c.pair.id(), c.profile.id()),
+                e.policy.clone(),
+                format!("{:.1}", e.total_time_s),
+                format!("{:.1}", e.total_energy_j),
+                format!("{}/{}", e.edge_count, e.cloud_count),
+            ]);
+        }
+    }
+    out.push_str(&text_table(&rows));
+    out
+}
+
+/// JSON report.
+pub fn to_json(r: &EnergyReport) -> Json {
+    let mut cells = Vec::new();
+    for c in &r.cells {
+        let mut o = Json::object();
+        o.set("pair", Json::Str(c.pair.id().into()))
+            .set("profile", Json::Str(c.profile.id().into()));
+        let mut policies = Json::object();
+        for e in &c.entries {
+            let mut p = Json::object();
+            p.set("total_time_s", Json::Num(e.total_time_s))
+                .set("total_energy_j", Json::Num(e.total_energy_j))
+                .set("edge_count", Json::Num(e.edge_count as f64))
+                .set("cloud_count", Json::Num(e.cloud_count as f64));
+            policies.set(&e.policy, p);
+        }
+        o.set("policies", policies);
+        cells.push(o);
+    }
+    let mut root = Json::object();
+    root.set("cells", Json::Array(cells));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke() -> EnergyReport {
+        let mut cfg = Config::smoke();
+        cfg.requests = 3_000;
+        cfg.pairs = vec![LangPair::EnZh];
+        run(&cfg, &Calibration::default_paper(), EnergyModel::default()).unwrap()
+    }
+
+    #[test]
+    fn energy_oracle_lower_bounds_energy() {
+        let r = smoke();
+        for c in &r.cells {
+            let oe = c
+                .entries
+                .iter()
+                .find(|e| e.policy == "oracle_energy")
+                .unwrap()
+                .total_energy_j;
+            for e in &c.entries {
+                assert!(
+                    oe <= e.total_energy_j + 1e-9,
+                    "{}: energy oracle beaten by {}",
+                    c.pair.id(),
+                    e.policy
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn energy_rule_saves_energy_vs_latency_rule() {
+        // The energy-aware variant must consume no more gateway energy
+        // than latency-C-NMT (it optimises exactly that).
+        let r = smoke();
+        for c in &r.cells {
+            let get = |id: &str| c.entries.iter().find(|e| e.policy == id).unwrap();
+            assert!(
+                get("cnmt_energy").total_energy_j
+                    <= get("cnmt_latency").total_energy_j * 1.02,
+                "energy rule didn't save energy"
+            );
+        }
+    }
+
+    #[test]
+    fn edge_only_burns_most_energy_under_load() {
+        // With a 9 W busy GPU vs 1.5 W radio, keeping everything local
+        // must cost more energy than full offload in these workloads.
+        let r = smoke();
+        for c in &r.cells {
+            let get = |id: &str| c.entries.iter().find(|e| e.policy == id).unwrap();
+            assert!(
+                get("edge_only").total_energy_j > get("cloud_only").total_energy_j
+            );
+        }
+    }
+}

@@ -1,0 +1,142 @@
+//! Fig. 4: the two connection profiles (RTT vs simulation time).
+//!
+//! Generates the CP1/CP2 traces used by Table I, writes them as CSV
+//! (re-plottable) and reports summary statistics. The paper's traces are
+//! RIPE Atlas measurement 1437285 / probe 6222 (2018-05-03, 3-7 p.m. and
+//! 7:30-12:30 a.m.); ours are synthetic with the same qualitative
+//! structure (DESIGN.md §4) — CP1 slower on average and burstier.
+
+use std::path::Path;
+
+use crate::metrics::stats::percentile_sorted;
+use crate::net::trace::{ConnectionProfile, RttTrace, TraceGenerator};
+use crate::util::Json;
+use crate::Result;
+
+use super::report::text_table;
+
+/// Stats for one profile.
+#[derive(Debug, Clone)]
+pub struct ProfileStats {
+    pub profile: ConnectionProfile,
+    pub samples: usize,
+    pub duration_s: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub max_ms: f64,
+}
+
+/// Fig. 4 result: stats + the traces themselves.
+pub struct Fig4 {
+    pub stats: Vec<ProfileStats>,
+    pub traces: Vec<(ConnectionProfile, RttTrace)>,
+}
+
+/// Generate both profiles.
+pub fn run(seed: u64) -> Result<Fig4> {
+    let mut stats = Vec::new();
+    let mut traces = Vec::new();
+    for profile in ConnectionProfile::ALL {
+        let trace = TraceGenerator::new(seed ^ 0x4E7).profile(profile);
+        let mut sorted = trace.rtt.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        stats.push(ProfileStats {
+            profile,
+            samples: trace.len(),
+            duration_s: trace.duration(),
+            mean_ms: trace.mean() * 1e3,
+            p50_ms: percentile_sorted(&sorted, 50.0) * 1e3,
+            p95_ms: percentile_sorted(&sorted, 95.0) * 1e3,
+            max_ms: trace.max() * 1e3,
+        });
+        traces.push((profile, trace));
+    }
+    Ok(Fig4 { stats, traces })
+}
+
+/// Write the trace CSVs next to the JSON report.
+pub fn write_traces(f: &Fig4, out_dir: &Path) -> Result<()> {
+    std::fs::create_dir_all(out_dir)?;
+    for (profile, trace) in &f.traces {
+        trace.save_csv(&out_dir.join(format!("fig4_{}.csv", profile.id())))?;
+    }
+    Ok(())
+}
+
+/// Text rendering.
+pub fn render_text(f: &Fig4) -> String {
+    let mut out = "Fig. 4 — connection profiles (synthetic RIPE-Atlas analogs)\n".to_string();
+    let mut rows = vec![vec![
+        "profile".to_string(),
+        "samples".to_string(),
+        "duration_h".to_string(),
+        "mean ms".to_string(),
+        "p50 ms".to_string(),
+        "p95 ms".to_string(),
+        "max ms".to_string(),
+    ]];
+    for s in &f.stats {
+        rows.push(vec![
+            s.profile.id().to_string(),
+            s.samples.to_string(),
+            format!("{:.1}", s.duration_s / 3600.0),
+            format!("{:.1}", s.mean_ms),
+            format!("{:.1}", s.p50_ms),
+            format!("{:.1}", s.p95_ms),
+            format!("{:.1}", s.max_ms),
+        ]);
+    }
+    out.push_str(&text_table(&rows));
+    out.push_str("paper: CP1 = 3-7 p.m. (slower), CP2 = 7:30-12:30 a.m.\n");
+    out
+}
+
+/// JSON report.
+pub fn to_json(f: &Fig4) -> Json {
+    let mut arr = Vec::new();
+    for s in &f.stats {
+        let mut o = Json::object();
+        o.set("profile", Json::Str(s.profile.id().into()))
+            .set("samples", Json::Num(s.samples as f64))
+            .set("duration_s", Json::Num(s.duration_s))
+            .set("mean_ms", Json::Num(s.mean_ms))
+            .set("p50_ms", Json::Num(s.p50_ms))
+            .set("p95_ms", Json::Num(s.p95_ms))
+            .set("max_ms", Json::Num(s.max_ms));
+        arr.push(o);
+    }
+    let mut root = Json::object();
+    root.set("profiles", Json::Array(arr));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cp1_slower_and_burstier() {
+        let f = run(1).unwrap();
+        let cp1 = &f.stats[0];
+        let cp2 = &f.stats[1];
+        assert_eq!(cp1.profile, ConnectionProfile::Cp1);
+        assert!(cp1.mean_ms > cp2.mean_ms);
+        assert!(cp1.max_ms > cp2.max_ms);
+        assert!(cp1.p95_ms > cp2.p95_ms);
+        // Spikes: p95 well above p50 for CP1.
+        assert!(cp1.p95_ms > 1.15 * cp1.p50_ms);
+    }
+
+    #[test]
+    fn csv_written() {
+        let f = run(2).unwrap();
+        let dir = std::env::temp_dir().join("cnmt_fig4_test");
+        write_traces(&f, &dir).unwrap();
+        assert!(dir.join("fig4_cp1.csv").exists());
+        assert!(dir.join("fig4_cp2.csv").exists());
+        let loaded = RttTrace::load_csv(&dir.join("fig4_cp1.csv")).unwrap();
+        assert_eq!(loaded.len(), f.traces[0].1.len());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

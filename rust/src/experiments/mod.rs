@@ -1,0 +1,24 @@
+//! Experiment drivers — one per table/figure in the paper's evaluation
+//! (DESIGN.md §5 experiment index).
+//!
+//! | Paper artifact | Driver | CLI |
+//! |---|---|---|
+//! | Fig. 2a (T vs M linearity) | [`fig2a`] | `cnmt experiment fig2a` |
+//! | Fig. 3 (N→M regressions) | [`fig3`] | `cnmt experiment fig3` |
+//! | Fig. 4 (connection profiles) | [`fig4`] | `cnmt experiment fig4` |
+//! | Table I (policy comparison) | [`table1`] | `cnmt experiment table1` |
+//!
+//! Every driver prints a human-readable table and writes a JSON report
+//! under the configured `out_dir` so EXPERIMENTS.md can quote exact
+//! numbers.
+
+pub mod ablation;
+pub mod energy;
+pub mod fig2a;
+pub mod multilevel;
+pub mod fig3;
+pub mod fig4;
+pub mod report;
+pub mod table1;
+
+pub use report::write_report;

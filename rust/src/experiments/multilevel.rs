@@ -1,0 +1,235 @@
+//! Multi-level CI experiment (extension): does a third offloading level
+//! (end-device → gateway → cloud, as in DeePar [8] / CRIME [11]) help
+//! NMT? Compares the static single-tier mappings, 2-level C-NMT
+//! (gateway↔cloud, the paper's setup, with requests originating on the
+//! end device), 3-level C-NMT, and the 3-level Oracle.
+
+use crate::config::Config;
+use crate::coordinator::multilevel::{MultiRouter, Tier};
+use crate::corpus::{Dataset, LangPair, PrefilterRules};
+use crate::devices::calibration::DeviceTimeModel;
+use crate::net::trace::ConnectionProfile;
+use crate::net::TraceGenerator;
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::util::{Json, Rng};
+use crate::Result;
+
+use super::report::text_table;
+
+/// Per-strategy totals for one language pair.
+#[derive(Debug, Clone)]
+pub struct MlEntry {
+    pub strategy: String,
+    pub total_s: f64,
+    /// Requests per tier (end, gw, cloud).
+    pub mix: [usize; 3],
+}
+
+/// Result over the configured pairs (CP1 WAN trace).
+#[derive(Debug, Clone)]
+pub struct Multilevel {
+    pub rows: Vec<(LangPair, Vec<MlEntry>)>,
+}
+
+/// End-device hardware: slower than the gateway by this factor.
+const END_SLOWDOWN: f64 = 3.0;
+/// WLAN (end→gw) round trip: fast and stable.
+const WLAN_RTT_S: f64 = 0.008;
+
+fn tiers_for(pair: LangPair, cal: &crate::devices::Calibration) -> Result<Vec<Tier>> {
+    let model = pair.model_name();
+    let gw = *cal.get(crate::devices::DeviceKind::Edge, model)?;
+    let cloud = *cal.get(crate::devices::DeviceKind::Cloud, model)?;
+    let end_texe = TexeModel::from_coeffs(
+        gw.texe.alpha_n * END_SLOWDOWN,
+        gw.texe.alpha_m * END_SLOWDOWN,
+        gw.texe.beta * END_SLOWDOWN,
+    );
+    let end = DeviceTimeModel { texe: end_texe, ..gw };
+    let mk = |name: &str, truth: DeviceTimeModel, prior: f64| Tier {
+        name: name.into(),
+        texe: truth.texe, // idealised characterisation (fit ≈ truth)
+        truth,
+        ttx: TtxEstimator::new(0.3),
+        ttx_prior_s: prior,
+    };
+    Ok(vec![
+        mk("end", end, 0.0),
+        mk("gw", gw, WLAN_RTT_S),
+        mk("cloud", cloud, 0.06),
+    ])
+}
+
+/// Run the experiment (CP1 trace for the WAN hop).
+pub fn run(cfg: &Config, cal: &crate::devices::Calibration) -> Result<Multilevel> {
+    let mut rows = Vec::new();
+    for &pair in &cfg.pairs {
+        let seed = cfg.seed ^ (pair as u64 + 1).wrapping_mul(0x3317);
+        let dataset = Dataset::generate(pair, cfg.fit_inferences, cfg.eval_pool, seed);
+        let n2m = N2mRegressor::fit(&dataset.fit, &PrefilterRules::default())?;
+        let wan = TraceGenerator::new(seed ^ 0x4E7).profile(ConnectionProfile::Cp1);
+        let stream = dataset.sample_eval(cfg.requests, seed ^ 0x5A);
+        let mut rng = Rng::new(seed ^ 0x7A9);
+
+        // Pre-sample ground truth once; all strategies share it.
+        struct Truth {
+            n: usize,
+            costs: [f64; 3], // true total latency per tier
+        }
+        let mut router0 = MultiRouter::new(tiers_for(pair, cal)?, n2m)?;
+        let mut t = 0.0f64;
+        let truths: Vec<Truth> = stream
+            .iter()
+            .map(|p| {
+                t += rng.exponential(1.0 / cfg.mean_interarrival_s);
+                let links = [WLAN_RTT_S, wan.rtt_at(t)];
+                let costs = [
+                    router0.true_cost(0, p.n(), p.m_real, &links, &mut rng),
+                    router0.true_cost(1, p.n(), p.m_real, &links, &mut rng),
+                    router0.true_cost(2, p.n(), p.m_real, &links, &mut rng),
+                ];
+                Truth { n: p.n(), costs }
+            })
+            .collect();
+
+        let eval = |name: &str, mut pick: Box<dyn FnMut(&Truth) -> usize>| -> MlEntry {
+            let mut total = 0.0;
+            let mut mix = [0usize; 3];
+            for tr in &truths {
+                let tier = pick(tr);
+                mix[tier] += 1;
+                total += tr.costs[tier];
+            }
+            MlEntry { strategy: name.into(), total_s: total, mix }
+        };
+
+        let mut entries = Vec::new();
+        for (i, name) in ["end_only", "gw_only", "cloud_only"].iter().enumerate() {
+            entries.push(eval(name, Box::new(move |_| i)));
+        }
+        // 2-level C-NMT: requests originate on the end device but may
+        // only run there or in the cloud (no gateway tier).
+        let mut r2 = MultiRouter::new(
+            tiers_for(pair, cal)?.into_iter().enumerate()
+                .filter(|(i, _)| *i != 1)
+                .map(|(_, t)| t)
+                .collect(),
+            n2m,
+        )?;
+        entries.push(eval(
+            "cnmt_2level",
+            Box::new(move |tr| if r2.decide(tr.n).tier == 0 { 0 } else { 2 }),
+        ));
+        // 3-level C-NMT.
+        let mut r3 = MultiRouter::new(tiers_for(pair, cal)?, n2m)?;
+        entries.push(eval("cnmt_3level", Box::new(move |tr| r3.decide(tr.n).tier)));
+        // Oracle over all three tiers.
+        entries.push(eval(
+            "oracle_3level",
+            Box::new(|tr| {
+                tr.costs
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0
+            }),
+        ));
+        rows.push((pair, entries));
+    }
+    Ok(Multilevel { rows })
+}
+
+/// Text rendering.
+pub fn render_text(m: &Multilevel) -> String {
+    let mut out = String::from(
+        "Multi-level CI (end-device / gateway / cloud, CP1 WAN) — extension\n",
+    );
+    let mut rows = vec![vec![
+        "pair".to_string(),
+        "strategy".to_string(),
+        "total_s".to_string(),
+        "end/gw/cloud".to_string(),
+    ]];
+    for (pair, entries) in &m.rows {
+        for e in entries {
+            rows.push(vec![
+                pair.id().to_string(),
+                e.strategy.clone(),
+                format!("{:.1}", e.total_s),
+                format!("{}/{}/{}", e.mix[0], e.mix[1], e.mix[2]),
+            ]);
+        }
+    }
+    out.push_str(&text_table(&rows));
+    out
+}
+
+/// JSON report.
+pub fn to_json(m: &Multilevel) -> Json {
+    let mut rows = Vec::new();
+    for (pair, entries) in &m.rows {
+        let mut o = Json::object();
+        o.set("pair", Json::Str(pair.id().into()));
+        let mut es = Json::object();
+        for e in entries {
+            let mut j = Json::object();
+            j.set("total_s", Json::Num(e.total_s)).set(
+                "mix",
+                Json::Array(e.mix.iter().map(|&x| Json::Num(x as f64)).collect()),
+            );
+            es.set(&e.strategy, j);
+        }
+        o.set("strategies", es);
+        rows.push(o);
+    }
+    let mut root = Json::object();
+    root.set("rows", Json::Array(rows));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::Calibration;
+
+    fn smoke() -> Multilevel {
+        let mut cfg = Config::smoke();
+        cfg.requests = 4_000;
+        cfg.pairs = vec![LangPair::DeEn, LangPair::EnZh];
+        run(&cfg, &Calibration::default_paper()).unwrap()
+    }
+
+    #[test]
+    fn three_levels_dominate_two() {
+        let m = smoke();
+        for (pair, entries) in &m.rows {
+            let get = |id: &str| {
+                entries.iter().find(|e| e.strategy == id).unwrap().total_s
+            };
+            assert!(
+                get("cnmt_3level") <= get("cnmt_2level") * 1.001,
+                "{}: 3-level {} vs 2-level {}",
+                pair.id(),
+                get("cnmt_3level"),
+                get("cnmt_2level")
+            );
+            // And beats every static mapping.
+            for s in ["end_only", "gw_only", "cloud_only"] {
+                assert!(get("cnmt_3level") <= get(s) * 1.001, "{}: vs {s}", pair.id());
+            }
+            // Oracle lower-bounds everything.
+            for e in entries {
+                assert!(get("oracle_3level") <= e.total_s + 1e-9, "{}", e.strategy);
+            }
+        }
+    }
+
+    #[test]
+    fn gateway_tier_actually_used() {
+        let m = smoke();
+        let (_, entries) = &m.rows[0];
+        let three = entries.iter().find(|e| e.strategy == "cnmt_3level").unwrap();
+        assert!(three.mix[1] > 0, "gateway tier unused: {:?}", three.mix);
+    }
+}

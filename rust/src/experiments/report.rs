@@ -1,0 +1,95 @@
+//! Report output helpers (text tables + JSON files).
+
+use std::path::Path;
+
+use crate::util::Json;
+use crate::Result;
+
+/// Write a JSON report to `<out_dir>/<name>.json`, creating the
+/// directory if needed. Returns the path written.
+pub fn write_report(out_dir: &Path, name: &str, body: &Json) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(out_dir)?;
+    let path = out_dir.join(format!("{name}.json"));
+    std::fs::write(&path, body.to_string_pretty())?;
+    Ok(path)
+}
+
+/// Render an aligned text table. `rows` include the header as row 0.
+pub fn text_table(rows: &[Vec<String>]) -> String {
+    if rows.is_empty() {
+        return String::new();
+    }
+    let cols = rows.iter().map(|r| r.len()).max().unwrap();
+    let mut widths = vec![0usize; cols];
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    for (ri, row) in rows.iter().enumerate() {
+        for (i, cell) in row.iter().enumerate() {
+            if i > 0 {
+                out.push_str("  ");
+            }
+            // Left-align first column, right-align the rest.
+            if i == 0 {
+                out.push_str(&format!("{cell:<width$}", width = widths[i]));
+            } else {
+                out.push_str(&format!("{cell:>width$}", width = widths[i]));
+            }
+        }
+        out.push('\n');
+        if ri == 0 {
+            for (i, w) in widths.iter().enumerate() {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                out.push_str(&"-".repeat(*w));
+            }
+            out.push('\n');
+        }
+    }
+    out
+}
+
+/// Format a percentage with sign, paper-style (`-13.55`, `+0.11`).
+pub fn pct(x: f64) -> String {
+    format!("{}{:.2}", if x >= 0.0 { "+" } else { "" }, x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_alignment() {
+        let rows = vec![
+            vec!["name".into(), "x".into()],
+            vec!["longer-name".into(), "12345".into()],
+        ];
+        let t = text_table(&rows);
+        let lines: Vec<&str> = t.lines().collect();
+        assert_eq!(lines.len(), 3);
+        assert!(lines[0].starts_with("name"));
+        assert!(lines[1].starts_with("----"));
+        assert!(lines[2].contains("12345"));
+    }
+
+    #[test]
+    fn pct_formatting() {
+        assert_eq!(pct(-13.551), "-13.55");
+        assert_eq!(pct(0.114), "+0.11");
+        assert_eq!(pct(29.168), "+29.17");
+    }
+
+    #[test]
+    fn write_report_creates_dirs() {
+        let dir = std::env::temp_dir().join("cnmt_report_test/nested");
+        let mut j = Json::object();
+        j.set("x", Json::Num(1.0));
+        let path = write_report(&dir, "t", &j).unwrap();
+        assert!(path.exists());
+        std::fs::remove_dir_all(std::env::temp_dir().join("cnmt_report_test")).ok();
+    }
+}

@@ -1,0 +1,233 @@
+//! Table I: execution-time variation (%) of Naive and C-NMT vs the three
+//! baselines (GW-only, Server-only, Oracle), per dataset × connection
+//! profile — the paper's headline experiment (100k requests each).
+
+use crate::config::Config;
+use crate::corpus::LangPair;
+use crate::devices::Calibration;
+use crate::net::trace::ConnectionProfile;
+use crate::sim::{run_all_policies, PolicyResult, TruthTable};
+use crate::util::Json;
+use crate::Result;
+
+use super::report::{pct, text_table};
+
+/// One dataset×profile cell group of Table I.
+#[derive(Debug, Clone)]
+pub struct Table1Cell {
+    pub pair: LangPair,
+    pub profile: ConnectionProfile,
+    pub results: Vec<PolicyResult>,
+}
+
+impl Table1Cell {
+    pub fn get(&self, id: &str) -> &PolicyResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == id)
+            .unwrap_or_else(|| panic!("missing policy {id}"))
+    }
+
+    /// (% vs GW, % vs Server, % vs Oracle) for `policy`.
+    pub fn vs_baselines(&self, policy: &str) -> (f64, f64, f64) {
+        let p = self.get(policy);
+        (
+            p.vs(self.get("edge_only")),
+            p.vs(self.get("cloud_only")),
+            p.vs(self.get("oracle")),
+        )
+    }
+}
+
+/// Full Table-I result set.
+#[derive(Debug, Clone)]
+pub struct Table1 {
+    pub cells: Vec<Table1Cell>,
+}
+
+impl Table1 {
+    pub fn cell(&self, pair: LangPair, profile: ConnectionProfile) -> &Table1Cell {
+        self.cells
+            .iter()
+            .find(|c| c.pair == pair && c.profile == profile)
+            .unwrap_or_else(|| panic!("missing cell {}/{}", pair.id(), profile.id()))
+    }
+
+    /// Paper headline: the largest total-time reduction C-NMT achieves
+    /// vs any static mapping (the "up to 44%" claim), as a positive %.
+    pub fn headline_vs_static(&self) -> f64 {
+        self.cells
+            .iter()
+            .flat_map(|c| {
+                let (gw, srv, _) = c.vs_baselines("cnmt");
+                [gw, srv]
+            })
+            .fold(0.0, |acc, x| acc.max(-x))
+    }
+
+    /// Largest margin of C-NMT over Naive (the "up to 21%" claim).
+    pub fn headline_vs_naive(&self) -> f64 {
+        self.cells
+            .iter()
+            .map(|c| {
+                let naive = c.get("naive").total_s;
+                let cnmt = c.get("cnmt").total_s;
+                (naive - cnmt) / naive * 100.0
+            })
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+/// Run the Table-I experiment.
+pub fn run(cfg: &Config, calibration: &Calibration) -> Result<Table1> {
+    let mut cells = Vec::new();
+    for &pair in &cfg.pairs {
+        for &profile in &cfg.profiles {
+            let table = TruthTable::build(cfg, pair, profile, calibration)?;
+            let results = run_all_policies(&table)?;
+            cells.push(Table1Cell { pair, profile, results });
+        }
+    }
+    Ok(Table1 { cells })
+}
+
+/// Render the paper-style text table.
+pub fn render_text(t: &Table1) -> String {
+    let mut rows = vec![vec![
+        "Dataset".to_string(),
+        "Strategy".to_string(),
+        "CP1 vs GW".to_string(),
+        "CP1 vs Server".to_string(),
+        "CP1 vs Oracle".to_string(),
+        "CP2 vs GW".to_string(),
+        "CP2 vs Server".to_string(),
+        "CP2 vs Oracle".to_string(),
+    ]];
+    for pair in LangPair::ALL {
+        for strategy in ["naive", "cnmt"] {
+            let mut row = vec![
+                pair.id().to_uppercase().replace('_', "-"),
+                if strategy == "naive" { "Naive" } else { "C-NMT" }.to_string(),
+            ];
+            for profile in ConnectionProfile::ALL {
+                let has = t
+                    .cells
+                    .iter()
+                    .any(|c| c.pair == pair && c.profile == profile);
+                if !has {
+                    row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
+                    continue;
+                }
+                let (gw, srv, or) = t.cell(pair, profile).vs_baselines(strategy);
+                row.push(pct(gw));
+                row.push(pct(srv));
+                row.push(pct(or));
+            }
+            rows.push(row);
+        }
+    }
+    let mut out = text_table(&rows);
+    out.push_str(&format!(
+        "\nheadline: C-NMT vs best static mapping: up to {:.1}% reduction \
+         (paper: up to 44%)\n",
+        t.headline_vs_static()
+    ));
+    out.push_str(&format!(
+        "headline: C-NMT vs Naive:               up to {:.1}% reduction \
+         (paper: up to 21%)\n",
+        t.headline_vs_naive()
+    ));
+    out
+}
+
+/// JSON report (per cell: all policies' raw totals + the derived %s).
+pub fn to_json(t: &Table1) -> Json {
+    let mut cells = Vec::new();
+    for c in &t.cells {
+        let mut o = Json::object();
+        o.set("pair", Json::Str(c.pair.id().into()))
+            .set("profile", Json::Str(c.profile.id().into()));
+        let mut policies = Json::object();
+        for r in &c.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        o.set("policies", policies);
+        let mut derived = Json::object();
+        for strategy in ["naive", "cnmt"] {
+            let (gw, srv, or) = c.vs_baselines(strategy);
+            let mut d = Json::object();
+            d.set("vs_gw_pct", Json::Num(gw))
+                .set("vs_server_pct", Json::Num(srv))
+                .set("vs_oracle_pct", Json::Num(or));
+            derived.set(strategy, d);
+        }
+        o.set("derived", derived);
+        cells.push(o);
+    }
+    let mut root = Json::object();
+    root.set("cells", Json::Array(cells))
+        .set("headline_vs_static_pct", Json::Num(t.headline_vs_static()))
+        .set("headline_vs_naive_pct", Json::Num(t.headline_vs_naive()));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_table1() -> Table1 {
+        let mut cfg = Config::smoke();
+        cfg.requests = 3_000;
+        run(&cfg, &Calibration::default_paper()).unwrap()
+    }
+
+    #[test]
+    fn full_grid_produced() {
+        let t = smoke_table1();
+        assert_eq!(t.cells.len(), 6); // 3 pairs x 2 profiles
+        for c in &t.cells {
+            assert_eq!(c.results.len(), 5);
+        }
+    }
+
+    #[test]
+    fn paper_shape_cnmt_beats_or_ties_static_everywhere() {
+        let t = smoke_table1();
+        for c in &t.cells {
+            let (gw, srv, or) = c.vs_baselines("cnmt");
+            assert!(gw <= 0.5, "{}/{} vs GW {gw}", c.pair.id(), c.profile.id());
+            assert!(srv <= 0.5, "{}/{} vs Server {srv}", c.pair.id(), c.profile.id());
+            assert!(or >= -1e-9, "{}/{} vs Oracle {or}", c.pair.id(), c.profile.id());
+        }
+    }
+
+    #[test]
+    fn paper_shape_cloud_gains_bigger_under_slow_cp1() {
+        // vs-Server reduction should be at least as strong under CP1
+        // (slow net) as the vs-GW reduction is under CP2, qualitatively:
+        // check the specific ordering the paper calls out — C-NMT's
+        // vs-Server margin under CP1 exceeds its vs-Server margin under
+        // CP2 ... for the RNN pairs where the effect is clean.
+        let t = smoke_table1();
+        for pair in [LangPair::DeEn, LangPair::FrEn] {
+            let cp1 = t.cell(pair, ConnectionProfile::Cp1).vs_baselines("cnmt").1;
+            let cp2 = t.cell(pair, ConnectionProfile::Cp2).vs_baselines("cnmt").1;
+            assert!(
+                cp1 <= cp2 + 2.0,
+                "{}: CP1 vs server {cp1} not stronger than CP2 {cp2}",
+                pair.id()
+            );
+        }
+    }
+
+    #[test]
+    fn render_has_all_rows() {
+        let t = smoke_table1();
+        let txt = render_text(&t);
+        assert!(txt.contains("DE-EN"));
+        assert!(txt.contains("C-NMT"));
+        assert!(txt.contains("headline"));
+        let j = to_json(&t);
+        assert_eq!(j.get("cells").unwrap().as_array().unwrap().len(), 6);
+    }
+}

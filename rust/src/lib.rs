@@ -1,0 +1,48 @@
+//! # C-NMT — Collaborative Inference for Neural Machine Translation
+//!
+//! Reproduction of *"C-NMT: A Collaborative Inference Framework for Neural
+//! Machine Translation"* (Chen et al., 2022) as a three-layer
+//! rust + JAX + Pallas serving stack.
+//!
+//! ## Layers
+//!
+//! * **L3 (this crate)** — the paper's contribution: an edge/cloud request
+//!   router ([`coordinator`]) driven by linear execution-time models
+//!   ([`predictor::texe`]), an N→M output-length regressor
+//!   ([`predictor::n2m`]) and an online round-trip-time estimator
+//!   ([`predictor::ttx`]); plus every substrate the evaluation needs:
+//!   synthetic parallel corpora ([`corpus`]), RTT trace generation/replay
+//!   ([`net`]), calibrated device models ([`devices`]), a discrete-event
+//!   experiment harness ([`sim`]) and the experiment drivers
+//!   ([`experiments`]) that regenerate each of the paper's tables/figures.
+//! * **L2/L1 (python, build-time only)** — the three NMT models (BiLSTM,
+//!   GRU, Transformer) with Pallas kernels, AOT-lowered to HLO text and
+//!   executed from the [`runtime`] via the PJRT C API. Python is never on
+//!   the request path.
+//!
+//! ## Quick map (paper concept → module)
+//!
+//! | Paper | Module |
+//! |---|---|
+//! | eq. 1 (edge/cloud decision) | [`coordinator::policy`] |
+//! | eq. 2 (T_exe with N→M estimate) | [`predictor::texe`], [`predictor::n2m`] |
+//! | T_tx timestamp tracking | [`predictor::ttx`] |
+//! | offline characterisation | [`devices::calibration`] |
+//! | RIPE-Atlas connection profiles | [`net::trace`] |
+//! | IWSLT/OPUS corpora | [`corpus`] |
+//! | 100k-request experiment | [`sim`], [`experiments::table1`] |
+
+pub mod config;
+pub mod coordinator;
+pub mod corpus;
+pub mod devices;
+pub mod error;
+pub mod experiments;
+pub mod metrics;
+pub mod net;
+pub mod predictor;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+pub use error::{Error, Result};

@@ -1,0 +1,351 @@
+//! `cnmt` — the C-NMT launcher.
+//!
+//! ```text
+//! cnmt experiment table1|fig2a|fig3|fig4|all [flags]   reproduce the paper
+//! cnmt calibrate [flags]                               real-PJRT device characterisation
+//! cnmt translate --model <name> --ids 5,6,7            one translation through the runtime
+//! cnmt selfcheck                                       load + run every artifact
+//! cnmt help
+//! ```
+//!
+//! Common flags: `--config <json>`, `--seed <u64>`, `--requests <n>`,
+//! `--out <dir>`, `--artifacts <dir>`, `--calibration <json>`.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use cnmt::config::Config;
+use cnmt::corpus::{LangPair, Tokenizer};
+use cnmt::devices::Calibration;
+use cnmt::experiments::{ablation, energy, fig2a, fig3, fig4, multilevel, report, table1};
+use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
+use cnmt::util::{Args, Json};
+use cnmt::{Error, Result};
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.subcommand() {
+        Some("experiment") => cmd_experiment(&args),
+        Some("calibrate") => cmd_calibrate(&args),
+        Some("translate") => cmd_translate(&args),
+        Some("selfcheck") => cmd_selfcheck(&args),
+        Some("help") | None => {
+            print!("{}", HELP);
+            Ok(())
+        }
+        Some(other) => Err(Error::Config(format!(
+            "unknown subcommand `{other}` (try `cnmt help`)"
+        ))),
+    }
+}
+
+const HELP: &str = "\
+cnmt — C-NMT: collaborative inference for neural machine translation
+
+USAGE:
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|all> [flags]
+      --config <json>       load a Config (defaults = paper setup)
+      --requests <n>        evaluation requests (default 100000)
+      --fit <n>             characterisation inferences (default 10000)
+      --seed <u64>          master seed
+      --out <dir>           report directory (default reports/)
+      --calibration <json>  measured calibration (default: built-in)
+      --samples <n>         fig2a/fig3 sample count
+  cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
+      --samples <n>         measured translations per model (default 120)
+      --edge-slowdown <f>   edge = local CPU x f (default 1.0)
+      --cloud-speedup <f>   cloud = local CPU / f (default 5.0)
+      --artifacts <dir>     artifacts directory (default artifacts/)
+      --out <path>          output (default artifacts/calibration.json)
+      --models <a,b>        subset of models
+  cnmt translate --model <name> --ids 5,6,7 [--text \"ba de ga\"]
+  cnmt selfcheck            load + execute every artifact end to end
+";
+
+fn load_config(args: &Args) -> Result<Config> {
+    let mut cfg = match args.str_opt("config") {
+        Some(p) => Config::load(&PathBuf::from(p))?,
+        None => Config::default(),
+    };
+    cfg.requests = args.usize("requests", cfg.requests)?;
+    cfg.fit_inferences = args.usize("fit", cfg.fit_inferences)?;
+    cfg.seed = args.u64("seed", cfg.seed)?;
+    if let Some(out) = args.str_opt("out") {
+        cfg.out_dir = PathBuf::from(out);
+    }
+    if let Some(a) = args.str_opt("artifacts") {
+        cfg.artifacts_dir = PathBuf::from(a);
+    }
+    if let Some(c) = args.str_opt("calibration") {
+        cfg.calibration = Some(PathBuf::from(c));
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+fn load_calibration(cfg: &Config) -> Result<Calibration> {
+    match &cfg.calibration {
+        Some(path) => {
+            eprintln!("using measured calibration: {}", path.display());
+            Calibration::load(path)
+        }
+        None => Ok(Calibration::default_paper()),
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "all".to_string());
+    let cfg = load_config(args)?;
+    let cal = load_calibration(&cfg)?;
+    let samples = args.usize("samples", 30_000)?;
+    args.reject_unknown()?;
+
+    let run_fig2a = |cfg: &Config| -> Result<()> {
+        let f = fig2a::run(LangPair::EnZh, &cal, samples, cfg.seed)?;
+        print!("{}", fig2a::render_text(&f));
+        let p = report::write_report(&cfg.out_dir, "fig2a", &fig2a::to_json(&f))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+    let run_fig3 = |cfg: &Config| -> Result<()> {
+        let f = fig3::run(samples, cfg.seed)?;
+        print!("{}", fig3::render_text(&f));
+        let p = report::write_report(&cfg.out_dir, "fig3", &fig3::to_json(&f))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+    let run_fig4 = |cfg: &Config| -> Result<()> {
+        let f = fig4::run(cfg.seed)?;
+        print!("{}", fig4::render_text(&f));
+        fig4::write_traces(&f, &cfg.out_dir)?;
+        let p = report::write_report(&cfg.out_dir, "fig4", &fig4::to_json(&f))?;
+        eprintln!("wrote {} (+ trace CSVs)\n", p.display());
+        Ok(())
+    };
+    let run_table1 = |cfg: &Config| -> Result<()> {
+        eprintln!(
+            "table1: {} requests x {} pairs x {} profiles (seed {})",
+            cfg.requests,
+            cfg.pairs.len(),
+            cfg.profiles.len(),
+            cfg.seed
+        );
+        let t = table1::run(cfg, &cal)?;
+        print!("{}", table1::render_text(&t));
+        let p = report::write_report(&cfg.out_dir, "table1", &table1::to_json(&t))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
+    let run_ablation = |cfg: &Config| -> Result<()> {
+        eprintln!("ablation: estimator zoo over the Table-I grid...");
+        let a = ablation::run(cfg, &cal)?;
+        print!("{}", ablation::render_text(&a));
+        let p = report::write_report(&cfg.out_dir, "ablation", &ablation::to_json(&a))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
+    let run_energy = |cfg: &Config| -> Result<()> {
+        eprintln!("energy: gateway-energy view of the policy grid...");
+        let e = energy::run(cfg, &cal, cnmt::devices::EnergyModel::default())?;
+        print!("{}", energy::render_text(&e));
+        let p = report::write_report(&cfg.out_dir, "energy", &energy::to_json(&e))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
+    let run_multilevel = |cfg: &Config| -> Result<()> {
+        eprintln!("multilevel: 3-tier CI (end-device/gateway/cloud)...");
+        let m = multilevel::run(cfg, &cal)?;
+        print!("{}", multilevel::render_text(&m));
+        let p = report::write_report(&cfg.out_dir, "multilevel", &multilevel::to_json(&m))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
+    match which.as_str() {
+        "fig2a" => run_fig2a(&cfg),
+        "fig3" => run_fig3(&cfg),
+        "fig4" => run_fig4(&cfg),
+        "table1" => run_table1(&cfg),
+        "ablation" => run_ablation(&cfg),
+        "energy" => run_energy(&cfg),
+        "multilevel" => run_multilevel(&cfg),
+        "all" => {
+            run_fig4(&cfg)?;
+            run_fig3(&cfg)?;
+            run_fig2a(&cfg)?;
+            run_table1(&cfg)?;
+            run_ablation(&cfg)?;
+            run_energy(&cfg)?;
+            run_multilevel(&cfg)
+        }
+        other => Err(Error::Config(format!("unknown experiment `{other}`"))),
+    }
+}
+
+/// Real-PJRT characterisation: measure translations over an (N, M) grid
+/// per model, fit the T_exe planes, derive edge/cloud device models.
+fn cmd_calibrate(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    let out = PathBuf::from(args.str("out", "artifacts/calibration.json"));
+    let samples = args.usize("samples", 120)?;
+    let edge_slowdown = args.f64("edge-slowdown", 1.0)?;
+    let cloud_speedup = args.f64("cloud-speedup", 5.0)?;
+    let models_filter = args.str("models", "");
+    let seed = args.u64("seed", 7)?;
+    args.reject_unknown()?;
+
+    let manifest = ArtifactManifest::load(&artifacts)?;
+    let mut rng = cnmt::util::Rng::new(seed);
+    let mut all_samples = std::collections::BTreeMap::new();
+    for model in &manifest.models {
+        if !models_filter.is_empty()
+            && !models_filter.split(',').any(|m| m == model.name)
+        {
+            continue;
+        }
+        eprintln!("calibrating {} ({samples} translations)...", model.name);
+        let engine = Seq2SeqEngine::from_manifest(&manifest, &model.name)?;
+        // Warm up (first executions pay one-time lazy initialisation).
+        let warm: Vec<u16> = vec![7; 8];
+        for _ in 0..3 {
+            engine.translate(
+                &warm,
+                TranslateOptions { force_steps: Some(4), ..Default::default() },
+            )?;
+        }
+        let mut sm = Vec::with_capacity(samples);
+        for i in 0..samples {
+            let n = 1 + rng.usize(manifest.n_max - 2);
+            let m = 1 + rng.usize(manifest.m_max - 2);
+            let src: Vec<u16> = (0..n).map(|_| 3 + rng.usize(4093) as u16).collect();
+            let tr = engine.translate(
+                &src,
+                TranslateOptions { force_steps: Some(m), ..Default::default() },
+            )?;
+            sm.push((n as f64, m as f64, tr.total_s()));
+            if (i + 1) % 40 == 0 {
+                eprintln!("  {}/{samples}", i + 1);
+            }
+        }
+        all_samples.insert(model.name.clone(), sm);
+    }
+    let cal = Calibration::from_measurements(&all_samples, edge_slowdown, cloud_speedup)?;
+    if let Some(parent) = out.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    cal.save(&out)?;
+    eprintln!("wrote {}", out.display());
+    for model in cal.models() {
+        for dev in cnmt::devices::DeviceKind::ALL {
+            let tm = cal.get(dev, &model)?;
+            eprintln!(
+                "  {}/{}: aN={:.3}ms aM={:.3}ms b={:.3}ms (r2 {:.3})",
+                dev.id(),
+                model,
+                tm.texe.alpha_n * 1e3,
+                tm.texe.alpha_m * 1e3,
+                tm.texe.beta * 1e3,
+                tm.texe.r2,
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_translate(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    let model = args.str_req("model")?;
+    let ids_flag = args.str_opt("ids");
+    let text_flag = args.str_opt("text");
+    let max_steps = args.usize("max-steps", 64)?;
+    args.reject_unknown()?;
+
+    let tok = Tokenizer::new(4096);
+    let src: Vec<u16> = match (ids_flag, text_flag) {
+        (Some(ids), _) => ids
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<u16>()
+                    .map_err(|_| Error::Config(format!("bad token id `{s}`")))
+            })
+            .collect::<Result<_>>()?,
+        (None, Some(text)) => tok.tokenize(&text)?,
+        (None, None) => {
+            return Err(Error::Config("need --ids or --text".into()));
+        }
+    };
+    let engine = Seq2SeqEngine::load(&artifacts, &model)?;
+    let tr = engine.translate(
+        &src,
+        TranslateOptions { max_steps: Some(max_steps), ..Default::default() },
+    )?;
+    println!("source ({} tokens): {}", src.len(), tok.detokenize(&src));
+    let out_u16: Vec<u16> = tr.tokens.iter().map(|&t| t as u16).collect();
+    println!("output ({} steps):  {}", tr.steps, tok.detokenize(&out_u16));
+    println!(
+        "encode {:.2} ms, decode {:.2} ms ({:.2} ms/token)",
+        tr.encode_s * 1e3,
+        tr.decode_s * 1e3,
+        tr.decode_s * 1e3 / tr.steps.max(1) as f64
+    );
+    Ok(())
+}
+
+/// Load + execute every artifact; verifies determinism and reports a
+/// per-model latency sketch. This is the post-`make artifacts` sanity
+/// gate.
+fn cmd_selfcheck(args: &Args) -> Result<()> {
+    let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
+    args.reject_unknown()?;
+    let manifest = ArtifactManifest::load(&artifacts)?;
+    let mut summary = Json::object();
+    for model in &manifest.models {
+        eprintln!("== {}", model.name);
+        let engine = Seq2SeqEngine::from_manifest(&manifest, &model.name)?;
+        let src: Vec<u16> = vec![10, 17, 23, 99, 5];
+        let opts = TranslateOptions { force_steps: Some(8), ..Default::default() };
+        let a = engine.translate(&src, opts)?;
+        let b = engine.translate(&src, opts)?;
+        if a.tokens != b.tokens {
+            return Err(Error::Serve(format!(
+                "{}: nondeterministic decode",
+                model.name
+            )));
+        }
+        let long: Vec<u16> = (100..160).collect();
+        let c = engine.translate(
+            &long,
+            TranslateOptions { force_steps: Some(30), ..Default::default() },
+        )?;
+        eprintln!(
+            "   n=5 m=8: enc {:.2}ms dec {:.2}ms | n=60 m=30: enc {:.2}ms dec {:.2}ms",
+            a.encode_s * 1e3,
+            a.decode_s * 1e3,
+            c.encode_s * 1e3,
+            c.decode_s * 1e3
+        );
+        let mut o = Json::object();
+        o.set("dec_ms_per_step", Json::Num(c.decode_s * 1e3 / 30.0));
+        summary.set(&model.name, o);
+    }
+    println!("selfcheck OK: {}", summary.to_string());
+    Ok(())
+}

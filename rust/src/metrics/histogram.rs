@@ -1,0 +1,166 @@
+//! Log-bucketed latency histogram (HdrHistogram-lite).
+//!
+//! Buckets grow geometrically, giving ~4% relative precision over
+//! microseconds-to-minutes with a few hundred buckets — good enough for
+//! the p50/p95/p99 the gateway and benches report, with O(1) record.
+
+/// Geometric-bucket histogram over positive values (e.g. seconds).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    /// Lower bound of bucket 0.
+    floor: f64,
+    /// Geometric growth factor between bucket boundaries.
+    growth: f64,
+    ln_growth: f64,
+    counts: Vec<u64>,
+    total: u64,
+    underflow: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `floor`: smallest resolvable value; `ceil`: largest; `per_decade`:
+    /// buckets per 10x range (precision ~ 10^(1/per_decade) - 1).
+    pub fn new(floor: f64, ceil: f64, per_decade: usize) -> Self {
+        assert!(floor > 0.0 && ceil > floor && per_decade > 0);
+        let growth = 10f64.powf(1.0 / per_decade as f64);
+        let n = ((ceil / floor).ln() / growth.ln()).ceil() as usize + 1;
+        Histogram {
+            floor,
+            growth,
+            ln_growth: growth.ln(),
+            counts: vec![0; n],
+            total: 0,
+            underflow: 0,
+            sum: 0.0,
+        }
+    }
+
+    /// Default latency histogram: 1µs .. 1000s, ~2.3% precision.
+    pub fn latency() -> Self {
+        Histogram::new(1e-6, 1e3, 100)
+    }
+
+    fn bucket(&self, x: f64) -> Option<usize> {
+        if x < self.floor {
+            return None;
+        }
+        let idx = ((x / self.floor).ln() / self.ln_growth) as usize;
+        Some(idx.min(self.counts.len() - 1))
+    }
+
+    pub fn record(&mut self, x: f64) {
+        self.total += 1;
+        self.sum += x;
+        match self.bucket(x) {
+            Some(i) => self.counts[i] += 1,
+            None => self.underflow += 1,
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile (bucket upper bound), q in [0,1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.total as f64).ceil() as u64;
+        let mut seen = self.underflow;
+        if seen >= target && self.underflow > 0 {
+            return self.floor;
+        }
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return self.floor * self.growth.powi(i as i32 + 1);
+            }
+        }
+        self.floor * self.growth.powi(self.counts.len() as i32)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    pub fn merge(&mut self, other: &Histogram) {
+        assert_eq!(self.counts.len(), other.counts.len(), "histogram shapes differ");
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.underflow += other.underflow;
+        self.sum += other.sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles_bounded_error() {
+        let mut h = Histogram::latency();
+        // 1..=1000 ms uniform
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-3);
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.p50();
+        assert!((0.45..0.58).contains(&p50), "p50 {p50}");
+        let p99 = h.p99();
+        assert!((0.93..1.1).contains(&p99), "p99 {p99}");
+        assert!((h.mean() - 0.5005).abs() < 1e-9);
+    }
+
+    #[test]
+    fn underflow_and_clamp() {
+        let mut h = Histogram::new(1.0, 10.0, 10);
+        h.record(0.01); // underflow
+        h.record(1e9); // clamped to last bucket
+        assert_eq!(h.count(), 2);
+        assert!(h.quantile(0.01) >= 1.0);
+    }
+
+    #[test]
+    fn empty_is_nan() {
+        let h = Histogram::latency();
+        assert!(h.p50().is_nan());
+        assert!(h.mean().is_nan());
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = Histogram::latency();
+        let mut b = Histogram::latency();
+        for i in 1..=100 {
+            a.record(i as f64 * 1e-3);
+            b.record(i as f64 * 1e-2);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), 200);
+        assert!(a.quantile(1.0) >= 0.9);
+    }
+}

@@ -1,0 +1,12 @@
+//! Metrics: online statistics, histograms and latency recording.
+//!
+//! Used by the gateway (per-device latency tracking), the simulator
+//! (per-policy totals for Table I) and the bench harness.
+
+pub mod histogram;
+pub mod recorder;
+pub mod stats;
+
+pub use histogram::Histogram;
+pub use recorder::LatencyRecorder;
+pub use stats::{OnlineStats, Summary};

@@ -1,0 +1,98 @@
+//! Per-label latency recording for the gateway and experiment drivers.
+
+use std::collections::BTreeMap;
+
+use super::{Histogram, OnlineStats};
+use crate::util::Json;
+
+/// Collects latency samples under string labels (e.g. "edge", "cloud",
+/// "decision") and renders a JSON report.
+#[derive(Debug, Default)]
+pub struct LatencyRecorder {
+    series: BTreeMap<String, (OnlineStats, Histogram)>,
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, label: &str, seconds: f64) {
+        let entry = self
+            .series
+            .entry(label.to_string())
+            .or_insert_with(|| (OnlineStats::new(), Histogram::latency()));
+        entry.0.push(seconds);
+        entry.1.record(seconds);
+    }
+
+    pub fn count(&self, label: &str) -> u64 {
+        self.series.get(label).map_or(0, |(s, _)| s.count())
+    }
+
+    pub fn mean(&self, label: &str) -> f64 {
+        self.series.get(label).map_or(f64::NAN, |(s, _)| s.mean())
+    }
+
+    pub fn sum(&self, label: &str) -> f64 {
+        self.series.get(label).map_or(0.0, |(s, _)| s.sum())
+    }
+
+    pub fn p95(&self, label: &str) -> f64 {
+        self.series.get(label).map_or(f64::NAN, |(_, h)| h.p95())
+    }
+
+    pub fn labels(&self) -> Vec<&str> {
+        self.series.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// JSON report: {label: {count, mean, std, min, max, p50, p95, p99}}.
+    pub fn to_json(&self) -> Json {
+        let mut out = Json::object();
+        for (label, (stats, hist)) in &self.series {
+            let s = stats.summary();
+            let mut o = Json::object();
+            o.set("count", Json::Num(s.count as f64))
+                .set("mean_s", Json::Num(s.mean))
+                .set("std_s", Json::Num(s.std))
+                .set("min_s", Json::Num(s.min))
+                .set("max_s", Json::Num(s.max))
+                .set("sum_s", Json::Num(s.sum))
+                .set("p50_s", Json::Num(hist.p50()))
+                .set("p95_s", Json::Num(hist.p95()))
+                .set("p99_s", Json::Num(hist.p99()));
+            out.set(label, o);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_by_label() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=10 {
+            r.record("edge", i as f64 * 0.01);
+        }
+        r.record("cloud", 0.5);
+        assert_eq!(r.count("edge"), 10);
+        assert_eq!(r.count("cloud"), 1);
+        assert!((r.mean("edge") - 0.055).abs() < 1e-12);
+        assert!((r.sum("edge") - 0.55).abs() < 1e-12);
+        assert_eq!(r.count("nope"), 0);
+        assert_eq!(r.labels(), vec!["cloud", "edge"]);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        let mut r = LatencyRecorder::new();
+        r.record("x", 0.1);
+        let j = r.to_json();
+        let x = j.get("x").unwrap();
+        assert_eq!(x.get("count").unwrap().as_i64().unwrap(), 1);
+        assert!(x.get("p95_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

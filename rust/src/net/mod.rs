@@ -1,0 +1,17 @@
+//! Network substrate: RTT connection profiles and the transmission-time
+//! model.
+//!
+//! The paper evaluates with two *real* RIPE-Atlas round-trip-time traces
+//! (meas 1437285, probe 6222, 2018-05-03: 3-7 p.m. = CP1, 7:30-12:30 a.m.
+//! = CP2) replayed over simulation time, plus a constant symmetric
+//! 100 Mbps bandwidth. We have no access to that archive, so
+//! [`trace::TraceGenerator`] synthesises profiles with the same
+//! qualitative structure (CP1 slower on average and burstier than CP2 —
+//! Fig. 4), and [`trace::RttTrace`] replays them (ours or any CSV-loaded
+//! real trace) identically to the paper's setup.
+
+pub mod network;
+pub mod trace;
+
+pub use network::{Network, TxModel};
+pub use trace::{ConnectionProfile, RttTrace, TraceGenerator};

@@ -1,0 +1,113 @@
+//! Transmission-time model (the paper's T_tx).
+//!
+//! §II-B: "we model T_tx as being dominated by the connection's
+//! round-trip time, and roughly [in]dependent of N and M" — tokens are
+//! ~2-byte dictionary indices, so even a 64-token sentence is ≈128 bytes,
+//! negligible at 100 Mbps next to a 40-300 ms RTT. We still model the
+//! bandwidth term exactly (RTT + payload/bandwidth both ways) so the
+//! approximation the *router* makes (RTT-only) is evaluated against a
+//! ground truth that includes it, as in the paper.
+
+use super::trace::RttTrace;
+
+/// Payload accounting for an offloaded translation request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TxModel {
+    /// Bytes per token on the wire (paper: "does not require more than 2
+    /// bytes per word").
+    pub bytes_per_token: f64,
+    /// Fixed protocol overhead per message (headers etc.).
+    pub overhead_bytes: f64,
+    /// Symmetric link bandwidth, bits per second (paper: 100 Mbps).
+    pub bandwidth_bps: f64,
+}
+
+impl Default for TxModel {
+    fn default() -> Self {
+        TxModel {
+            bytes_per_token: 2.0,
+            overhead_bytes: 64.0,
+            bandwidth_bps: 100e6,
+        }
+    }
+}
+
+impl TxModel {
+    /// Serialisation time of a payload of `tokens` tokens (one direction).
+    pub fn payload_time(&self, tokens: usize) -> f64 {
+        let bytes = self.bytes_per_token * tokens as f64 + self.overhead_bytes;
+        bytes * 8.0 / self.bandwidth_bps
+    }
+}
+
+/// The simulated edge↔cloud connection: an RTT trace plus the bandwidth
+/// model. This is the *ground truth* the experiment harness charges an
+/// offloaded request; the router's own T_tx estimator
+/// ([`crate::predictor::ttx`]) only ever observes timestamped samples of
+/// it, exactly like the real system.
+#[derive(Debug, Clone)]
+pub struct Network {
+    trace: RttTrace,
+    pub tx: TxModel,
+}
+
+impl Network {
+    pub fn new(trace: RttTrace, tx: TxModel) -> Self {
+        Network { trace, tx }
+    }
+
+    /// Instantaneous RTT at simulation time `t`.
+    pub fn rtt_at(&self, t: f64) -> f64 {
+        self.trace.rtt_at(t)
+    }
+
+    /// Ground-truth transmission cost of offloading a request with `n`
+    /// input tokens expecting `m` output tokens, starting at time `t`:
+    /// one round trip + request payload up + response payload down.
+    pub fn tx_time(&self, t: f64, n: usize, m: usize) -> f64 {
+        self.trace.rtt_at(t)
+            + self.tx.payload_time(n)
+            + self.tx.payload_time(m)
+    }
+
+    pub fn trace(&self) -> &RttTrace {
+        &self.trace
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn flat_trace(rtt: f64) -> RttTrace {
+        RttTrace { t: vec![0.0, 1e9], rtt: vec![rtt, rtt] }
+    }
+
+    #[test]
+    fn payload_negligible_vs_rtt() {
+        // The paper's premise: payload time ≪ RTT for NMT token payloads.
+        let tx = TxModel::default();
+        let payload = tx.payload_time(64);
+        assert!(payload < 2e-5, "payload {payload}");
+        let net = Network::new(flat_trace(0.040), tx);
+        let total = net.tx_time(0.0, 64, 64);
+        assert!((total - 0.040).abs() / 0.040 < 0.01, "total {total}");
+    }
+
+    #[test]
+    fn tx_time_includes_both_directions() {
+        let tx = TxModel { bytes_per_token: 1000.0, overhead_bytes: 0.0, bandwidth_bps: 8000.0 };
+        // 1000 bytes/token at 1000 bytes/s -> 1 s per token each way.
+        let net = Network::new(flat_trace(0.0), tx);
+        let t = net.tx_time(0.0, 2, 3);
+        assert!((t - 5.0).abs() < 1e-9, "t {t}");
+    }
+
+    #[test]
+    fn rtt_follows_trace() {
+        let tr = RttTrace { t: vec![0.0, 10.0], rtt: vec![0.1, 0.5] };
+        let net = Network::new(tr, TxModel::default());
+        assert!((net.rtt_at(5.0) - 0.1).abs() < 1e-12);
+        assert!((net.rtt_at(9.99) - 0.1).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,321 @@
+//! RTT trace generation, (de)serialisation and replay.
+//!
+//! Synthesis model: a mean-reverting Ornstein-Uhlenbeck process around
+//! the profile's base RTT, plus exponentially-distributed congestion
+//! spikes with geometric decay — the classic shape of consumer-uplink
+//! RTT series (and what the RIPE-Atlas plot in the paper's Fig. 4 shows:
+//! a noisy band with sporadic multi-hundred-ms excursions).
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// The two evaluation connection profiles of the paper (Fig. 4, Table I).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ConnectionProfile {
+    /// "3-7 p.m." — slower on average, burstier (peak traffic hours).
+    Cp1,
+    /// "7:30-12:30 a.m." — faster, calmer.
+    Cp2,
+}
+
+impl ConnectionProfile {
+    pub const ALL: [ConnectionProfile; 2] =
+        [ConnectionProfile::Cp1, ConnectionProfile::Cp2];
+
+    pub fn id(&self) -> &'static str {
+        match self {
+            ConnectionProfile::Cp1 => "cp1",
+            ConnectionProfile::Cp2 => "cp2",
+        }
+    }
+
+    pub fn from_id(s: &str) -> Option<Self> {
+        match s {
+            "cp1" => Some(ConnectionProfile::Cp1),
+            "cp2" => Some(ConnectionProfile::Cp2),
+            _ => None,
+        }
+    }
+
+    /// Synthesis parameters for this profile.
+    pub fn params(&self) -> TraceParams {
+        match self {
+            // Afternoon/evening: congested consumer uplink.
+            ConnectionProfile::Cp1 => TraceParams {
+                base_rtt_s: 0.072,
+                ou_sigma: 0.010,
+                ou_theta: 0.05,
+                spike_rate_per_s: 1.0 / 240.0, // one burst every ~4 min
+                spike_mean_s: 0.220,
+                spike_decay: 0.75,
+                duration_s: 4.0 * 3600.0,
+                sample_period_s: 10.0,
+            },
+            // Morning: quieter network.
+            ConnectionProfile::Cp2 => TraceParams {
+                base_rtt_s: 0.042,
+                ou_sigma: 0.006,
+                ou_theta: 0.08,
+                spike_rate_per_s: 1.0 / 700.0,
+                spike_mean_s: 0.120,
+                spike_decay: 0.70,
+                duration_s: 5.0 * 3600.0,
+                sample_period_s: 10.0,
+            },
+        }
+    }
+}
+
+/// OU + spike trace synthesis parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceParams {
+    /// Long-run mean RTT (seconds).
+    pub base_rtt_s: f64,
+    /// OU noise scale per step.
+    pub ou_sigma: f64,
+    /// OU mean-reversion rate per step.
+    pub ou_theta: f64,
+    /// Poisson rate of congestion spikes (per second).
+    pub spike_rate_per_s: f64,
+    /// Mean spike magnitude (seconds, exponential).
+    pub spike_mean_s: f64,
+    /// Per-step geometric decay of active spike magnitude.
+    pub spike_decay: f64,
+    /// Total trace duration (seconds).
+    pub duration_s: f64,
+    /// Sampling period (seconds).
+    pub sample_period_s: f64,
+}
+
+/// A time series of (timestamp, rtt) samples, replayable by time.
+#[derive(Debug, Clone)]
+pub struct RttTrace {
+    /// Sample timestamps (seconds from trace start), strictly increasing.
+    pub t: Vec<f64>,
+    /// RTT at each timestamp (seconds).
+    pub rtt: Vec<f64>,
+}
+
+impl RttTrace {
+    pub fn duration(&self) -> f64 {
+        self.t.last().copied().unwrap_or(0.0)
+    }
+
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// RTT at simulation time `time_s` (step interpolation: value of the
+    /// latest sample at or before `time_s`; times wrap around the trace
+    /// duration so any length of experiment can be replayed).
+    pub fn rtt_at(&self, time_s: f64) -> f64 {
+        assert!(!self.t.is_empty(), "empty trace");
+        let dur = self.duration();
+        let t = if dur > 0.0 { time_s.rem_euclid(dur) } else { 0.0 };
+        // Binary search for the last sample <= t.
+        match self
+            .t
+            .binary_search_by(|x| x.partial_cmp(&t).unwrap())
+        {
+            Ok(i) => self.rtt[i],
+            Err(0) => self.rtt[0],
+            Err(i) => self.rtt[i - 1],
+        }
+    }
+
+    /// Mean RTT over the whole trace.
+    pub fn mean(&self) -> f64 {
+        if self.rtt.is_empty() {
+            return f64::NAN;
+        }
+        self.rtt.iter().sum::<f64>() / self.rtt.len() as f64
+    }
+
+    /// Max RTT over the whole trace.
+    pub fn max(&self) -> f64 {
+        self.rtt.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Write as a 2-column CSV (`time_s,rtt_s`).
+    pub fn save_csv(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "time_s,rtt_s")?;
+        for (t, r) in self.t.iter().zip(&self.rtt) {
+            writeln!(w, "{t},{r}")?;
+        }
+        Ok(())
+    }
+
+    /// Load from a 2-column CSV (header optional). Accepts real RIPE
+    /// Atlas exports converted to `time_s,rtt_s`.
+    pub fn load_csv(path: &Path) -> Result<RttTrace> {
+        let f = std::fs::File::open(path)?;
+        let reader = std::io::BufReader::new(f);
+        let mut t = Vec::new();
+        let mut rtt = Vec::new();
+        for (lineno, line) in reader.lines().enumerate() {
+            let line = line?;
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut cols = line.split(',');
+            let a = cols.next().unwrap_or("");
+            let b = cols.next().ok_or_else(|| {
+                Error::Net(format!("{}:{}: expected 2 columns", path.display(), lineno + 1))
+            })?;
+            if lineno == 0 && a.parse::<f64>().is_err() {
+                continue; // header
+            }
+            let at: f64 = a.parse().map_err(|_| {
+                Error::Net(format!("{}:{}: bad time `{a}`", path.display(), lineno + 1))
+            })?;
+            let bt: f64 = b.trim().parse().map_err(|_| {
+                Error::Net(format!("{}:{}: bad rtt `{b}`", path.display(), lineno + 1))
+            })?;
+            if let Some(&last) = t.last() {
+                if at <= last {
+                    return Err(Error::Net(format!(
+                        "{}:{}: timestamps not increasing",
+                        path.display(),
+                        lineno + 1
+                    )));
+                }
+            }
+            t.push(at);
+            rtt.push(bt.max(0.0));
+        }
+        if t.is_empty() {
+            return Err(Error::Net(format!("{}: empty trace", path.display())));
+        }
+        Ok(RttTrace { t, rtt })
+    }
+}
+
+/// Synthesises [`RttTrace`]s from [`TraceParams`].
+#[derive(Debug)]
+pub struct TraceGenerator {
+    rng: Rng,
+}
+
+impl TraceGenerator {
+    pub fn new(seed: u64) -> Self {
+        TraceGenerator { rng: Rng::new(seed ^ 0x7EACE) }
+    }
+
+    /// Generate a named profile.
+    pub fn profile(&mut self, p: ConnectionProfile) -> RttTrace {
+        self.generate(&p.params())
+    }
+
+    /// Generate from explicit parameters.
+    pub fn generate(&mut self, p: &TraceParams) -> RttTrace {
+        let steps = (p.duration_s / p.sample_period_s).ceil() as usize;
+        let mut t = Vec::with_capacity(steps);
+        let mut rtt = Vec::with_capacity(steps);
+        let mut ou = 0.0f64; // OU deviation from base
+        let mut spike = 0.0f64; // active spike magnitude
+        let spike_p = p.spike_rate_per_s * p.sample_period_s;
+        for i in 0..steps {
+            ou += p.ou_theta * (0.0 - ou) + p.ou_sigma * self.rng.normal();
+            if self.rng.bool(spike_p.min(1.0)) {
+                spike += self.rng.exponential(1.0 / p.spike_mean_s);
+            }
+            spike *= p.spike_decay;
+            let sample = (p.base_rtt_s + ou + spike).max(0.001);
+            t.push(i as f64 * p.sample_period_s);
+            rtt.push(sample);
+        }
+        RttTrace { t, rtt }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_have_paper_ordering() {
+        // CP1 must be slower on average than CP2 (paper: "the first
+        // connection profile, which is slower on average").
+        let mut g = TraceGenerator::new(1);
+        let cp1 = g.profile(ConnectionProfile::Cp1);
+        let cp2 = g.profile(ConnectionProfile::Cp2);
+        assert!(
+            cp1.mean() > 1.5 * cp2.mean(),
+            "cp1 {} vs cp2 {}",
+            cp1.mean(),
+            cp2.mean()
+        );
+        // Both in a plausible WAN range.
+        assert!((0.02..0.4).contains(&cp1.mean()));
+        assert!((0.01..0.2).contains(&cp2.mean()));
+        // Spikes exist: max well above mean.
+        assert!(cp1.max() > 2.0 * cp1.mean());
+    }
+
+    #[test]
+    fn replay_is_step_interpolated_and_wraps() {
+        let tr = RttTrace { t: vec![0.0, 10.0, 20.0], rtt: vec![0.1, 0.2, 0.3] };
+        assert_eq!(tr.rtt_at(0.0), 0.1);
+        assert_eq!(tr.rtt_at(9.99), 0.1);
+        assert_eq!(tr.rtt_at(10.0), 0.2);
+        assert_eq!(tr.rtt_at(15.0), 0.2);
+        assert_eq!(tr.rtt_at(20.0), 0.1); // wraps: 20 % 20 = 0
+        assert_eq!(tr.rtt_at(25.0), 0.1); // 25 % 20 = 5
+        assert_eq!(tr.rtt_at(39.9), 0.2); // 19.9
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let mut g = TraceGenerator::new(2);
+        let tr = g.profile(ConnectionProfile::Cp2);
+        let dir = std::env::temp_dir().join("cnmt_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cp2.csv");
+        tr.save_csv(&path).unwrap();
+        let loaded = RttTrace::load_csv(&path).unwrap();
+        assert_eq!(loaded.len(), tr.len());
+        for (a, b) in tr.rtt.iter().zip(&loaded.rtt) {
+            assert!((a - b).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_rejects_bad_input() {
+        let dir = std::env::temp_dir().join("cnmt_trace_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.csv");
+        std::fs::write(&path, "time_s,rtt_s\n1.0,0.1\n0.5,0.2\n").unwrap();
+        assert!(RttTrace::load_csv(&path).is_err()); // non-increasing
+        std::fs::write(&path, "").unwrap();
+        assert!(RttTrace::load_csv(&path).is_err()); // empty
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let a = TraceGenerator::new(9).profile(ConnectionProfile::Cp1);
+        let b = TraceGenerator::new(9).profile(ConnectionProfile::Cp1);
+        assert_eq!(a.rtt, b.rtt);
+    }
+
+    #[test]
+    fn duration_matches_params() {
+        let mut g = TraceGenerator::new(3);
+        let p = ConnectionProfile::Cp1.params();
+        let tr = g.generate(&p);
+        let expect = (p.duration_s / p.sample_period_s).ceil() as usize;
+        assert_eq!(tr.len(), expect);
+        assert!((tr.duration() - (expect - 1) as f64 * p.sample_period_s).abs() < 1e-9);
+    }
+}

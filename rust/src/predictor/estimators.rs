@@ -1,0 +1,266 @@
+//! Output-length estimator zoo — the paper's future work ("more advanced
+//! output length estimation methods") implemented and ablated.
+//!
+//! Everything here maps `N → M̂` and can replace the linear regressor in
+//! the C-NMT decision. `cnmt experiment ablation` compares them on the
+//! Table-I harness (EXPERIMENTS.md §Ablations):
+//!
+//! * [`LengthEstimator::Constant`] — the Naive baseline's corpus mean.
+//! * [`LengthEstimator::Linear`] — the paper's `γ·N + δ` (eq. 2).
+//! * [`LengthEstimator::Bucket`] — per-N empirical conditional mean
+//!   (non-parametric; falls back to linear outside observed support).
+//! * [`LengthEstimator::Quantile`] — per-N empirical q-quantile:
+//!   deliberately over-estimates M when the offload penalty is
+//!   asymmetric (mis-keeping a long request at the edge costs more than
+//!   mis-offloading a short one).
+//! * [`LengthEstimator::Poly2`] — degree-2 least squares, tests whether
+//!   any curvature in E[M|N] is worth modelling.
+
+use crate::corpus::SentencePair;
+use crate::{Error, Result};
+
+use super::fit::fit_line;
+use super::n2m::N2mRegressor;
+
+/// A fitted N→M estimator.
+#[derive(Debug, Clone)]
+pub enum LengthEstimator {
+    Constant { mean_m: f64 },
+    Linear(N2mRegressor),
+    Bucket {
+        /// Mean M for N = index + 1 (None where unobserved/sparse).
+        means: Vec<Option<f64>>,
+        fallback: N2mRegressor,
+    },
+    Quantile {
+        /// q-quantile of M for N = index + 1.
+        quantiles: Vec<Option<f64>>,
+        q: f64,
+        fallback: N2mRegressor,
+    },
+    Poly2 { a: f64, b: f64, c: f64 },
+}
+
+/// Minimum samples per N bucket before trusting its empirical statistic.
+const MIN_BUCKET: usize = 20;
+const N_CAP: usize = 64;
+
+impl LengthEstimator {
+    pub fn id(&self) -> &'static str {
+        match self {
+            LengthEstimator::Constant { .. } => "constant",
+            LengthEstimator::Linear(_) => "linear",
+            LengthEstimator::Bucket { .. } => "bucket",
+            LengthEstimator::Quantile { .. } => "quantile",
+            LengthEstimator::Poly2 { .. } => "poly2",
+        }
+    }
+
+    /// Predict the output length for input length `n` (≥ 1.0).
+    pub fn predict(&self, n: usize) -> f64 {
+        let v = match self {
+            LengthEstimator::Constant { mean_m } => *mean_m,
+            LengthEstimator::Linear(reg) => reg.predict(n),
+            LengthEstimator::Bucket { means, fallback } => means
+                .get(n.saturating_sub(1))
+                .copied()
+                .flatten()
+                .unwrap_or_else(|| fallback.predict(n)),
+            LengthEstimator::Quantile { quantiles, fallback, .. } => quantiles
+                .get(n.saturating_sub(1))
+                .copied()
+                .flatten()
+                .unwrap_or_else(|| fallback.predict(n)),
+            LengthEstimator::Poly2 { a, b, c } => {
+                let x = n as f64;
+                a * x * x + b * x + c
+            }
+        };
+        v.max(1.0)
+    }
+
+    // ------------------------------------------------------------ fitting
+
+    pub fn fit_constant(pairs: &[SentencePair]) -> Result<Self> {
+        if pairs.is_empty() {
+            return Err(Error::Fit("constant estimator: empty input".into()));
+        }
+        let mean_m =
+            pairs.iter().map(|p| p.m_real as f64).sum::<f64>() / pairs.len() as f64;
+        Ok(LengthEstimator::Constant { mean_m })
+    }
+
+    pub fn fit_linear(pairs: &[SentencePair]) -> Result<Self> {
+        Ok(LengthEstimator::Linear(N2mRegressor::fit_raw(pairs)?))
+    }
+
+    fn group_by_n(pairs: &[SentencePair]) -> Vec<Vec<f64>> {
+        let mut buckets: Vec<Vec<f64>> = vec![Vec::new(); N_CAP];
+        for p in pairs {
+            if (1..=N_CAP).contains(&p.n()) {
+                buckets[p.n() - 1].push(p.m_real as f64);
+            }
+        }
+        buckets
+    }
+
+    pub fn fit_bucket(pairs: &[SentencePair]) -> Result<Self> {
+        let fallback = N2mRegressor::fit_raw(pairs)?;
+        let means = Self::group_by_n(pairs)
+            .into_iter()
+            .map(|b| {
+                if b.len() >= MIN_BUCKET {
+                    Some(b.iter().sum::<f64>() / b.len() as f64)
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Ok(LengthEstimator::Bucket { means, fallback })
+    }
+
+    pub fn fit_quantile(pairs: &[SentencePair], q: f64) -> Result<Self> {
+        if !(0.0..=1.0).contains(&q) {
+            return Err(Error::Fit(format!("quantile {q} out of [0,1]")));
+        }
+        let fallback = N2mRegressor::fit_raw(pairs)?;
+        let quantiles = Self::group_by_n(pairs)
+            .into_iter()
+            .map(|mut b| {
+                if b.len() >= MIN_BUCKET {
+                    b.sort_by(|a, c| a.partial_cmp(c).unwrap());
+                    let idx = ((b.len() - 1) as f64 * q).round() as usize;
+                    Some(b[idx])
+                } else {
+                    None
+                }
+            })
+            .collect();
+        Ok(LengthEstimator::Quantile { quantiles, q, fallback })
+    }
+
+    /// Degree-2 polynomial least squares via the linear fit on a lifted
+    /// basis (normal equations through [`super::fit::fit_plane`]).
+    pub fn fit_poly2(pairs: &[SentencePair]) -> Result<Self> {
+        let pts: Vec<(f64, f64, f64)> = pairs
+            .iter()
+            .map(|p| {
+                let x = p.n() as f64;
+                (x * x, x, p.m_real as f64)
+            })
+            .collect();
+        let pf = super::fit::fit_plane(&pts)?;
+        Ok(LengthEstimator::Poly2 { a: pf.a, b: pf.b, c: pf.c })
+    }
+
+    /// Fit the full zoo for an ablation run.
+    pub fn fit_all(pairs: &[SentencePair]) -> Result<Vec<LengthEstimator>> {
+        Ok(vec![
+            Self::fit_constant(pairs)?,
+            Self::fit_linear(pairs)?,
+            Self::fit_bucket(pairs)?,
+            Self::fit_quantile(pairs, 0.7)?,
+            Self::fit_poly2(pairs)?,
+        ])
+    }
+
+    /// Mean absolute error on a held-out set.
+    pub fn mae(&self, pairs: &[SentencePair]) -> f64 {
+        if pairs.is_empty() {
+            return f64::NAN;
+        }
+        pairs
+            .iter()
+            .map(|p| (self.predict(p.n()) - p.m_real as f64).abs())
+            .sum::<f64>()
+            / pairs.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{prefilter, CorpusGenerator, LangPair, PrefilterRules};
+
+    fn corpus(pair: LangPair, n: usize, seed: u64) -> Vec<SentencePair> {
+        let raw = CorpusGenerator::new(pair, seed).take(n);
+        prefilter(&raw, &PrefilterRules::default()).0
+    }
+
+    #[test]
+    fn all_estimators_fit_and_predict_in_range() {
+        let pairs = corpus(LangPair::EnZh, 20_000, 1);
+        for est in LengthEstimator::fit_all(&pairs).unwrap() {
+            for n in [1usize, 5, 12, 30, 62, 64] {
+                let m = est.predict(n);
+                assert!(
+                    (1.0..=80.0).contains(&m),
+                    "{}: predict({n}) = {m}",
+                    est.id()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn bucket_beats_constant_and_roughly_matches_linear() {
+        let train = corpus(LangPair::FrEn, 30_000, 2);
+        let test = corpus(LangPair::FrEn, 5_000, 3);
+        let constant = LengthEstimator::fit_constant(&train).unwrap();
+        let linear = LengthEstimator::fit_linear(&train).unwrap();
+        let bucket = LengthEstimator::fit_bucket(&train).unwrap();
+        let (mc, ml, mb) = (constant.mae(&test), linear.mae(&test), bucket.mae(&test));
+        assert!(mb < mc * 0.6, "bucket {mb} vs constant {mc}");
+        assert!(mb < ml * 1.15, "bucket {mb} much worse than linear {ml}");
+    }
+
+    #[test]
+    fn quantile_overestimates_on_average() {
+        let train = corpus(LangPair::DeEn, 30_000, 4);
+        let q70 = LengthEstimator::fit_quantile(&train, 0.7).unwrap();
+        let linear = LengthEstimator::fit_linear(&train).unwrap();
+        // The 0.7-quantile should sit above the conditional mean.
+        let mut above = 0;
+        let mut total = 0;
+        for n in 3..30 {
+            total += 1;
+            if q70.predict(n) > linear.predict(n) {
+                above += 1;
+            }
+        }
+        assert!(above * 10 >= total * 7, "q70 above mean only {above}/{total}");
+    }
+
+    #[test]
+    fn poly2_close_to_linear_on_linear_data() {
+        // The corpus is linear by construction; poly2's curvature term
+        // should come out tiny.
+        let train = corpus(LangPair::FrEn, 30_000, 5);
+        if let LengthEstimator::Poly2 { a, .. } =
+            LengthEstimator::fit_poly2(&train).unwrap()
+        {
+            assert!(a.abs() < 0.01, "curvature {a}");
+        } else {
+            panic!("wrong variant");
+        }
+    }
+
+    #[test]
+    fn sparse_buckets_fall_back_to_linear() {
+        // Tiny corpus: most buckets under MIN_BUCKET, predictions must
+        // still be sane everywhere.
+        let train = corpus(LangPair::EnZh, 200, 6);
+        let bucket = LengthEstimator::fit_bucket(&train).unwrap();
+        for n in 1..=64 {
+            assert!(bucket.predict(n) >= 1.0);
+        }
+    }
+
+    #[test]
+    fn fit_errors_on_degenerate_input() {
+        assert!(LengthEstimator::fit_constant(&[]).is_err());
+        let one = vec![SentencePair { src: vec![5; 4], m_real: 4, outlier: false }];
+        assert!(LengthEstimator::fit_linear(&one).is_err());
+        assert!(LengthEstimator::fit_quantile(&one, 1.5).is_err());
+    }
+}

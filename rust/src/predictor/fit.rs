@@ -1,0 +1,239 @@
+//! Ordinary least squares: 1-D line fit and 2-D plane fit with fit-quality
+//! scores (R², MSE) matching what the paper reports for its regressions
+//! (Fig. 2a, Fig. 3 captions).
+
+use crate::{Error, Result};
+
+/// Result of fitting `y ≈ slope·x + intercept`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LineFit {
+    pub slope: f64,
+    pub intercept: f64,
+    /// Coefficient of determination on the fitting data.
+    pub r2: f64,
+    /// Mean squared error on the fitting data.
+    pub mse: f64,
+    pub n_samples: usize,
+}
+
+impl LineFit {
+    pub fn predict(&self, x: f64) -> f64 {
+        self.slope * x + self.intercept
+    }
+}
+
+/// Fit a line by OLS. Requires ≥ 2 samples and non-degenerate x.
+pub fn fit_line(points: &[(f64, f64)]) -> Result<LineFit> {
+    let n = points.len();
+    if n < 2 {
+        return Err(Error::Fit(format!("line fit needs >= 2 samples, got {n}")));
+    }
+    let nf = n as f64;
+    let (mut sx, mut sy) = (0.0, 0.0);
+    for &(x, y) in points {
+        sx += x;
+        sy += y;
+    }
+    let (mx, my) = (sx / nf, sy / nf);
+    let (mut sxx, mut sxy) = (0.0, 0.0);
+    for &(x, y) in points {
+        sxx += (x - mx) * (x - mx);
+        sxy += (x - mx) * (y - my);
+    }
+    if sxx.abs() < 1e-12 {
+        return Err(Error::Fit("degenerate line fit: constant x".into()));
+    }
+    let slope = sxy / sxx;
+    let intercept = my - slope * mx;
+    let (mut ss_res, mut ss_tot) = (0.0, 0.0);
+    for &(x, y) in points {
+        let e = y - (slope * x + intercept);
+        ss_res += e * e;
+        ss_tot += (y - my) * (y - my);
+    }
+    let r2 = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Ok(LineFit { slope, intercept, r2, mse: ss_res / nf, n_samples: n })
+}
+
+/// Result of fitting `z ≈ a·x + b·y + c`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlaneFit {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    pub r2: f64,
+    pub mse: f64,
+    pub n_samples: usize,
+}
+
+impl PlaneFit {
+    pub fn predict(&self, x: f64, y: f64) -> f64 {
+        self.a * x + self.b * y + self.c
+    }
+}
+
+/// Fit a plane by OLS via the 3×3 normal equations.
+pub fn fit_plane(points: &[(f64, f64, f64)]) -> Result<PlaneFit> {
+    let n = points.len();
+    if n < 3 {
+        return Err(Error::Fit(format!("plane fit needs >= 3 samples, got {n}")));
+    }
+    // Normal equations A^T A w = A^T z with rows [x, y, 1].
+    let mut ata = [[0.0f64; 3]; 3];
+    let mut atz = [0.0f64; 3];
+    for &(x, y, z) in points {
+        let row = [x, y, 1.0];
+        for i in 0..3 {
+            for j in 0..3 {
+                ata[i][j] += row[i] * row[j];
+            }
+            atz[i] += row[i] * z;
+        }
+    }
+    let w = solve3(ata, atz)
+        .ok_or_else(|| Error::Fit("degenerate plane fit (singular normal equations)".into()))?;
+    let (a, b, c) = (w[0], w[1], w[2]);
+    let mz: f64 = points.iter().map(|p| p.2).sum::<f64>() / n as f64;
+    let (mut ss_res, mut ss_tot) = (0.0, 0.0);
+    for &(x, y, z) in points {
+        let e = z - (a * x + b * y + c);
+        ss_res += e * e;
+        ss_tot += (z - mz) * (z - mz);
+    }
+    let r2 = if ss_tot < 1e-12 { 1.0 } else { 1.0 - ss_res / ss_tot };
+    Ok(PlaneFit { a, b, c, r2, mse: ss_res / n as f64, n_samples: n })
+}
+
+/// Solve a 3×3 linear system by Gaussian elimination with partial
+/// pivoting. Returns `None` when singular.
+fn solve3(mut m: [[f64; 3]; 3], mut v: [f64; 3]) -> Option<[f64; 3]> {
+    for col in 0..3 {
+        // Pivot.
+        let piv = (col..3).max_by(|&i, &j| {
+            m[i][col].abs().partial_cmp(&m[j][col].abs()).unwrap()
+        })?;
+        if m[piv][col].abs() < 1e-12 {
+            return None;
+        }
+        m.swap(col, piv);
+        v.swap(col, piv);
+        // Eliminate below.
+        for row in col + 1..3 {
+            let f = m[row][col] / m[col][col];
+            for k in col..3 {
+                m[row][k] -= f * m[col][k];
+            }
+            v[row] -= f * v[col];
+        }
+    }
+    // Back substitution.
+    let mut out = [0.0; 3];
+    for row in (0..3).rev() {
+        let mut acc = v[row];
+        for k in row + 1..3 {
+            acc -= m[row][k] * out[k];
+        }
+        out[row] = acc / m[row][row];
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn line_recovers_planted_coefficients() {
+        let mut rng = Rng::new(1);
+        let pts: Vec<(f64, f64)> = (0..2000)
+            .map(|_| {
+                let x = rng.uniform(0.0, 60.0);
+                (x, 0.82 * x + 0.6 + rng.normal_ms(0.0, 0.5))
+            })
+            .collect();
+        let f = fit_line(&pts).unwrap();
+        assert!((f.slope - 0.82).abs() < 0.01, "slope {}", f.slope);
+        assert!((f.intercept - 0.6).abs() < 0.2, "intercept {}", f.intercept);
+        assert!(f.r2 > 0.99, "r2 {}", f.r2);
+        assert!((f.mse - 0.25).abs() < 0.05, "mse {}", f.mse);
+    }
+
+    #[test]
+    fn line_exact_fit() {
+        let pts: Vec<(f64, f64)> =
+            (0..10).map(|i| (i as f64, 3.0 * i as f64 - 2.0)).collect();
+        let f = fit_line(&pts).unwrap();
+        assert!((f.slope - 3.0).abs() < 1e-10);
+        assert!((f.intercept + 2.0).abs() < 1e-10);
+        assert!((f.r2 - 1.0).abs() < 1e-12);
+        assert!(f.mse < 1e-18);
+        assert!((f.predict(100.0) - 298.0).abs() < 1e-8);
+    }
+
+    #[test]
+    fn line_rejects_degenerate() {
+        assert!(fit_line(&[(1.0, 2.0)]).is_err());
+        assert!(fit_line(&[(1.0, 2.0), (1.0, 3.0), (1.0, 4.0)]).is_err());
+    }
+
+    #[test]
+    fn plane_recovers_planted_coefficients() {
+        let mut rng = Rng::new(2);
+        let pts: Vec<(f64, f64, f64)> = (0..5000)
+            .map(|_| {
+                let x = rng.uniform(1.0, 64.0);
+                let y = rng.uniform(1.0, 64.0);
+                (x, y, 0.0017 * x + 0.0092 * y + 0.031 + rng.normal_ms(0.0, 0.002))
+            })
+            .collect();
+        let f = fit_plane(&pts).unwrap();
+        assert!((f.a - 0.0017).abs() < 2e-4, "a {}", f.a);
+        assert!((f.b - 0.0092).abs() < 2e-4, "b {}", f.b);
+        assert!((f.c - 0.031).abs() < 5e-4, "c {}", f.c);
+        assert!(f.r2 > 0.95, "r2 {}", f.r2);
+    }
+
+    #[test]
+    fn plane_handles_zero_coefficient() {
+        // Transformer-like: T independent of N.
+        let mut rng = Rng::new(3);
+        let pts: Vec<(f64, f64, f64)> = (0..3000)
+            .map(|_| {
+                let x = rng.uniform(1.0, 64.0);
+                let y = rng.uniform(1.0, 64.0);
+                (x, y, 0.012 * y + 0.05 + rng.normal_ms(0.0, 0.001))
+            })
+            .collect();
+        let f = fit_plane(&pts).unwrap();
+        assert!(f.a.abs() < 5e-5, "a {}", f.a);
+        assert!((f.b - 0.012).abs() < 1e-4);
+    }
+
+    #[test]
+    fn plane_rejects_degenerate() {
+        assert!(fit_plane(&[(1.0, 1.0, 1.0), (2.0, 2.0, 2.0)]).is_err());
+        // Collinear x = y.
+        let pts: Vec<(f64, f64, f64)> =
+            (0..50).map(|i| (i as f64, i as f64, i as f64)).collect();
+        assert!(fit_plane(&pts).is_err());
+    }
+
+    #[test]
+    fn solve3_identity() {
+        let m = [[1.0, 0.0, 0.0], [0.0, 1.0, 0.0], [0.0, 0.0, 1.0]];
+        let v = [4.0, 5.0, 6.0];
+        assert_eq!(solve3(m, v).unwrap(), [4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn solve3_needs_pivoting() {
+        // Zero on the diagonal forces a row swap.
+        let m = [[0.0, 1.0, 0.0], [1.0, 0.0, 0.0], [0.0, 0.0, 2.0]];
+        let v = [3.0, 7.0, 8.0];
+        let x = solve3(m, v).unwrap();
+        assert!((x[0] - 7.0).abs() < 1e-12);
+        assert!((x[1] - 3.0).abs() < 1e-12);
+        assert!((x[2] - 4.0).abs() < 1e-12);
+    }
+}

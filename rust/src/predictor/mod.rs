@@ -1,0 +1,22 @@
+//! Prediction stack: everything the C-NMT decision (paper eq. 1/2) needs.
+//!
+//! * [`fit`] — ordinary least squares (line and plane) with R²/MSE, the
+//!   numerical core of the offline characterisation.
+//! * [`n2m`] — the linear N→M output-length regressor (paper §II-B,
+//!   Fig. 3): `M ≈ γ·N + δ`, fitted on prefiltered corpus pairs.
+//! * [`texe`] — per-device linear execution-time model (paper eq. 2):
+//!   `T_exe = αN·N + αM·M + β`, fitted on profiled inferences.
+//! * [`ttx`] — online transmission-time estimator from timestamped
+//!   request/response pairs (paper §II-C).
+
+pub mod estimators;
+pub mod fit;
+pub mod n2m;
+pub mod texe;
+pub mod ttx;
+
+pub use estimators::LengthEstimator;
+pub use fit::{LineFit, PlaneFit};
+pub use n2m::N2mRegressor;
+pub use texe::TexeModel;
+pub use ttx::TtxEstimator;

@@ -1,0 +1,114 @@
+//! The linear N→M output-length regressor (paper §II-B, Fig. 3).
+//!
+//! "it is reasonable to assume that there is a correlation [...] between
+//! the length of an input sentence and the one of its translation" — the
+//! paper fits `M ≈ γ·N + δ` per language pair on *ground-truth* corpus
+//! pairs, after ParaCrawl-style outlier removal, and reports R² ≈ 0.99.
+//! γ and δ depend only on the language pair, not on the device or model.
+
+use crate::corpus::{prefilter, PrefilterRules, SentencePair};
+use crate::Result;
+
+use super::fit::{fit_line, LineFit};
+
+/// Fitted `M = γ·N + δ` regressor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct N2mRegressor {
+    pub gamma: f64,
+    pub delta: f64,
+    /// Fit R² (for Fig. 3 reporting).
+    pub r2: f64,
+    /// Fit MSE (for Fig. 3 reporting).
+    pub mse: f64,
+    pub n_samples: usize,
+}
+
+impl N2mRegressor {
+    /// Fit on prefiltered corpus pairs (applies [`prefilter`] first,
+    /// exactly as the paper does before computing γ and δ).
+    pub fn fit(pairs: &[SentencePair], rules: &PrefilterRules) -> Result<Self> {
+        let (kept, _stats) = prefilter(pairs, rules);
+        Self::fit_raw(&kept)
+    }
+
+    /// Fit directly on (already clean) pairs.
+    pub fn fit_raw(pairs: &[SentencePair]) -> Result<Self> {
+        let pts: Vec<(f64, f64)> = pairs
+            .iter()
+            .map(|p| (p.n() as f64, p.m_real as f64))
+            .collect();
+        let lf: LineFit = fit_line(&pts)?;
+        Ok(N2mRegressor {
+            gamma: lf.slope,
+            delta: lf.intercept,
+            r2: lf.r2,
+            mse: lf.mse,
+            n_samples: lf.n_samples,
+        })
+    }
+
+    /// Construct from known coefficients (tests / config override).
+    pub fn from_coeffs(gamma: f64, delta: f64) -> Self {
+        N2mRegressor { gamma, delta, r2: f64::NAN, mse: f64::NAN, n_samples: 0 }
+    }
+
+    /// Predicted output length for input length `n` (continuous; callers
+    /// round only when they need a token count).
+    pub fn predict(&self, n: usize) -> f64 {
+        (self.gamma * n as f64 + self.delta).max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::{CorpusGenerator, LangPair, PrefilterRules};
+
+    #[test]
+    fn recovers_language_pair_verbosity() {
+        // Paper Fig. 3: R²=0.99 for all three pairs after prefiltering.
+        for lp in LangPair::ALL {
+            let mut g = CorpusGenerator::new(lp, 21);
+            let pairs = g.take(20_000);
+            let reg =
+                N2mRegressor::fit(&pairs, &PrefilterRules::default()).unwrap();
+            let truth = lp.params();
+            assert!(
+                (reg.gamma - truth.gamma).abs() < 0.03,
+                "{}: gamma {} vs {}",
+                lp.id(),
+                reg.gamma,
+                truth.gamma
+            );
+            assert!(
+                (reg.delta - truth.delta).abs() < 0.5,
+                "{}: delta {} vs {}",
+                lp.id(),
+                reg.delta,
+                truth.delta
+            );
+            // Per-pair R² (not the per-N-average R² the paper's Fig. 3
+            // caption quotes — see experiments::fig3::r2_on_means).
+            assert!(reg.r2 > 0.88, "{}: r2 {}", lp.id(), reg.r2);
+        }
+    }
+
+    #[test]
+    fn prefiltering_improves_fit() {
+        // Without outlier removal the fit degrades — this is exactly why
+        // the paper prefilters before computing gamma/delta.
+        let mut g = CorpusGenerator::new(LangPair::EnZh, 22);
+        let pairs = g.take(20_000);
+        let with = N2mRegressor::fit(&pairs, &PrefilterRules::default()).unwrap();
+        let without = N2mRegressor::fit_raw(&pairs).unwrap();
+        assert!(with.r2 > without.r2, "with {} vs without {}", with.r2, without.r2);
+        assert!(with.mse < without.mse);
+    }
+
+    #[test]
+    fn predict_floors_at_one_token() {
+        let reg = N2mRegressor::from_coeffs(0.5, -3.0);
+        assert_eq!(reg.predict(1), 1.0);
+        assert!((reg.predict(20) - 7.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,147 @@
+//! Per-device linear execution-time model (paper eq. 2).
+//!
+//! `T_exe,i = αN,i·N + αM,i·M + βi` for device `i ∈ {edge, cloud}` —
+//! "these parameters can be computed with a once-for-all offline
+//! characterisation". For RNNs αN and αM are both material (serial scans
+//! on both sides); for Transformers on parallel hardware αN ≈ 0 (encoder
+//! ~constant in N) and αM dominates (serial autoregressive decode).
+//!
+//! Combined with the N→M regressor this yields the paper's eq. 2:
+//! `T_exe,i = αN·N + αM·(γ·N + δ) + β`.
+
+use super::fit::{fit_plane, PlaneFit};
+use super::n2m::N2mRegressor;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Fitted execution-time plane for one (device, model) combination.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TexeModel {
+    /// Seconds per input token.
+    pub alpha_n: f64,
+    /// Seconds per output token.
+    pub alpha_m: f64,
+    /// Fixed cost (seconds).
+    pub beta: f64,
+    /// Fit R² on the characterisation data.
+    pub r2: f64,
+    /// Fit MSE on the characterisation data (s²).
+    pub mse: f64,
+}
+
+impl TexeModel {
+    /// Fit from profiled samples `(n, m, t_seconds)`.
+    pub fn fit(samples: &[(f64, f64, f64)]) -> Result<Self> {
+        let pf: PlaneFit = fit_plane(samples)?;
+        Ok(TexeModel { alpha_n: pf.a, alpha_m: pf.b, beta: pf.c, r2: pf.r2, mse: pf.mse })
+    }
+
+    /// Construct from known coefficients.
+    pub fn from_coeffs(alpha_n: f64, alpha_m: f64, beta: f64) -> Self {
+        TexeModel { alpha_n, alpha_m, beta, r2: f64::NAN, mse: f64::NAN }
+    }
+
+    /// Estimate T_exe for known (n, m) — paper's linear model.
+    pub fn estimate(&self, n: usize, m: f64) -> f64 {
+        (self.alpha_n * n as f64 + self.alpha_m * m + self.beta).max(0.0)
+    }
+
+    /// Paper eq. 2: estimate with the N→M regressor filling in M.
+    pub fn estimate_with_n2m(&self, n: usize, n2m: &N2mRegressor) -> f64 {
+        self.estimate(n, n2m.predict(n))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("alpha_n", Json::Num(self.alpha_n))
+            .set("alpha_m", Json::Num(self.alpha_m))
+            .set("beta", Json::Num(self.beta))
+            .set("r2", Json::Num(self.r2))
+            .set("mse", Json::Num(self.mse));
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(TexeModel {
+            alpha_n: j.get("alpha_n")?.as_f64()?,
+            alpha_m: j.get("alpha_m")?.as_f64()?,
+            beta: j.get("beta")?.as_f64()?,
+            r2: j.get_opt("r2")?.map_or(Ok(f64::NAN), |v| v.as_f64())?,
+            mse: j.get_opt("mse")?.map_or(Ok(f64::NAN), |v| v.as_f64())?,
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !self.alpha_n.is_finite() || !self.alpha_m.is_finite() || !self.beta.is_finite() {
+            return Err(Error::Fit("non-finite T_exe coefficients".into()));
+        }
+        if self.alpha_m < 0.0 {
+            // A negative per-output-token cost is always a fitting bug.
+            return Err(Error::Fit(format!(
+                "negative alpha_m {} (decode cannot get cheaper with longer output)",
+                self.alpha_m
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn fit_recovers_rnn_like_plane() {
+        let mut rng = Rng::new(4);
+        let truth = TexeModel::from_coeffs(0.0031, 0.0087, 0.012);
+        let samples: Vec<(f64, f64, f64)> = (0..4000)
+            .map(|_| {
+                let n = rng.range_i64(1, 62) as f64;
+                let m = (0.9 * n + rng.normal_ms(0.0, 2.0)).clamp(1.0, 62.0);
+                let t = truth.estimate(n as usize, m) + rng.normal_ms(0.0, 0.0015);
+                (n, m, t.max(0.0))
+            })
+            .collect();
+        let fit = TexeModel::fit(&samples).unwrap();
+        assert!((fit.alpha_n - truth.alpha_n).abs() < 4e-4, "alpha_n {}", fit.alpha_n);
+        assert!((fit.alpha_m - truth.alpha_m).abs() < 4e-4, "alpha_m {}", fit.alpha_m);
+        assert!((fit.beta - truth.beta).abs() < 2e-3, "beta {}", fit.beta);
+        assert!(fit.r2 > 0.97, "r2 {}", fit.r2);
+        fit.validate().unwrap();
+    }
+
+    #[test]
+    fn eq2_composition() {
+        // estimate_with_n2m must equal estimate(n, gamma*n + delta).
+        let texe = TexeModel::from_coeffs(0.001, 0.010, 0.02);
+        let n2m = N2mRegressor::from_coeffs(0.62, 0.9);
+        for n in [1usize, 10, 30, 62] {
+            let direct = texe.estimate(n, 0.62 * n as f64 + 0.9);
+            assert!((texe.estimate_with_n2m(n, &n2m) - direct).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn estimate_clamps_at_zero() {
+        let texe = TexeModel::from_coeffs(0.0, 0.001, -1.0);
+        assert_eq!(texe.estimate(1, 1.0), 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let t = TexeModel { alpha_n: 1e-3, alpha_m: 2e-3, beta: 0.5, r2: 0.99, mse: 1e-6 };
+        let back = TexeModel::from_json(&t.to_json()).unwrap();
+        assert!((back.alpha_n - t.alpha_n).abs() < 1e-15);
+        assert!((back.alpha_m - t.alpha_m).abs() < 1e-15);
+        assert!((back.beta - t.beta).abs() < 1e-15);
+        assert!((back.r2 - t.r2).abs() < 1e-15);
+    }
+
+    #[test]
+    fn validate_rejects_bad_models() {
+        assert!(TexeModel::from_coeffs(f64::NAN, 0.0, 0.0).validate().is_err());
+        assert!(TexeModel::from_coeffs(0.0, -0.1, 0.0).validate().is_err());
+        assert!(TexeModel::from_coeffs(-1e-6, 0.1, 0.0).validate().is_ok());
+    }
+}

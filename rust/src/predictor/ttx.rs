@@ -1,0 +1,123 @@
+//! Online transmission-time estimation (paper §II-C).
+//!
+//! "As in [11], we attach timestamps to each inference request/response
+//! sent to/from the cloud to obtain a recent estimate of T_tx." The
+//! estimator keeps an exponentially-weighted moving average of observed
+//! round-trip samples, with an explicit notion of *staleness*: if no
+//! offload happened recently the estimate decays toward a configurable
+//! prior weight — this models the paper's remark that sporadic traffic
+//! renders the timestamp mechanism ineffective on end-nodes (and why the
+//! gateway, which aggregates many end-nodes, works).
+
+/// EWMA-based T_tx estimator.
+#[derive(Debug, Clone)]
+pub struct TtxEstimator {
+    /// Smoothing factor per observation (0 < alpha <= 1).
+    alpha: f64,
+    /// Current estimate (seconds); None until first observation.
+    estimate: Option<f64>,
+    /// Time of the most recent observation.
+    last_obs_time: f64,
+    /// Observations seen.
+    count: u64,
+}
+
+impl TtxEstimator {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        TtxEstimator { alpha, estimate: None, last_obs_time: f64::NEG_INFINITY, count: 0 }
+    }
+
+    /// Default smoothing used by the paper-analogous setup.
+    pub fn default_paper() -> Self {
+        TtxEstimator::new(0.3)
+    }
+
+    /// Record a measured round-trip `rtt_s` observed at time `now_s`
+    /// (derived from request/response timestamps).
+    pub fn observe(&mut self, now_s: f64, rtt_s: f64) {
+        let rtt_s = rtt_s.max(0.0);
+        self.estimate = Some(match self.estimate {
+            None => rtt_s,
+            Some(e) => e + self.alpha * (rtt_s - e),
+        });
+        self.last_obs_time = now_s;
+        self.count += 1;
+    }
+
+    /// Current T_tx estimate. `fallback` is used before any observation
+    /// (e.g. a configured prior RTT).
+    pub fn estimate_or(&self, fallback: f64) -> f64 {
+        self.estimate.unwrap_or(fallback)
+    }
+
+    /// Whether the newest observation is older than `max_age_s` at `now_s`.
+    pub fn is_stale(&self, now_s: f64, max_age_s: f64) -> bool {
+        self.count == 0 || now_s - self.last_obs_time > max_age_s
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn last_observation_time(&self) -> f64 {
+        self.last_obs_time
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn first_observation_sets_estimate() {
+        let mut e = TtxEstimator::new(0.3);
+        assert_eq!(e.estimate_or(0.5), 0.5);
+        e.observe(0.0, 0.1);
+        assert!((e.estimate_or(0.5) - 0.1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ewma_converges_to_step_change() {
+        let mut e = TtxEstimator::new(0.3);
+        for i in 0..50 {
+            e.observe(i as f64, 0.04);
+        }
+        assert!((e.estimate_or(0.0) - 0.04).abs() < 1e-6);
+        // RTT jumps to 0.4; estimate should move most of the way within
+        // ~10 observations (1 - 0.7^10 ≈ 0.97).
+        for i in 50..60 {
+            e.observe(i as f64, 0.4);
+        }
+        let est = e.estimate_or(0.0);
+        assert!(est > 0.35 && est < 0.41, "est {est}");
+    }
+
+    #[test]
+    fn tracks_but_smooths_noise() {
+        // Alternating 0.1/0.3 should hover near 0.2, not bounce to rails.
+        let mut e = TtxEstimator::new(0.2);
+        for i in 0..200 {
+            e.observe(i as f64, if i % 2 == 0 { 0.1 } else { 0.3 });
+        }
+        let est = e.estimate_or(0.0);
+        assert!((est - 0.2).abs() < 0.05, "est {est}");
+    }
+
+    #[test]
+    fn staleness() {
+        let mut e = TtxEstimator::new(0.3);
+        assert!(e.is_stale(0.0, 10.0));
+        e.observe(100.0, 0.05);
+        assert!(!e.is_stale(105.0, 10.0));
+        assert!(e.is_stale(111.0, 10.0));
+        assert_eq!(e.count(), 1);
+    }
+
+    #[test]
+    fn negative_samples_clamped() {
+        let mut e = TtxEstimator::new(1.0);
+        e.observe(0.0, -5.0);
+        assert_eq!(e.estimate_or(1.0), 0.0);
+    }
+}

@@ -1,0 +1,111 @@
+//! Thin wrapper over the `xla` crate's PJRT CPU client.
+//!
+//! Loads HLO **text** (see module docs on [`crate::runtime`]) and compiles
+//! it into reusable [`xla::PjRtLoadedExecutable`]s. `PjRtClient` is
+//! internally `Rc`-based (not `Send`), so a [`RuntimeClient`] — and every
+//! engine built from it — must live on a single thread; the gateway
+//! ([`crate::coordinator::gateway`]) therefore runs one executor thread
+//! per device, each owning its own client (which also mirrors the real
+//! deployment: one process per device).
+
+use std::path::Path;
+
+use crate::{Error, Result};
+
+/// A PJRT CPU client plus compile helpers.
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+}
+
+impl RuntimeClient {
+    /// Create a CPU client.
+    pub fn cpu() -> Result<RuntimeClient> {
+        Ok(RuntimeClient { client: xla::PjRtClient::cpu()? })
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    pub fn raw(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load HLO text from `path` and compile it.
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        if !path.exists() {
+            return Err(Error::Artifact(format!(
+                "HLO file missing: {} (run `make artifacts`)",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+
+    /// Upload a host literal to a device buffer.
+    pub fn to_device(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_literal(None, lit)?)
+    }
+
+    /// Build an f32 literal from raw little-endian bytes.
+    pub fn literal_f32(dims: &[usize], bytes: &[u8]) -> Result<xla::Literal> {
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::F32,
+            dims,
+            bytes,
+        )?)
+    }
+
+    /// Build an i32 literal from values.
+    pub fn literal_i32(dims: &[usize], values: &[i32]) -> Result<xla::Literal> {
+        let bytes: Vec<u8> = values.iter().flat_map(|v| v.to_le_bytes()).collect();
+        Ok(xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S32,
+            dims,
+            &bytes,
+        )?)
+    }
+
+    /// Zero-filled literal.
+    pub fn literal_zeros(dims: &[usize], ty: xla::ElementType) -> Result<xla::Literal> {
+        let elems: usize = dims.iter().product::<usize>().max(1);
+        let bytes = vec![0u8; elems * ty.element_size_in_bytes()];
+        Ok(xla::Literal::create_from_shape_and_untyped_data(ty, dims, &bytes)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_client_comes_up() {
+        let c = RuntimeClient::cpu().unwrap();
+        assert!(c.device_count() >= 1);
+        assert!(!c.platform_name().is_empty());
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let lit = RuntimeClient::literal_i32(&[1, 3], &[7, 8, 9]).unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+        let z = RuntimeClient::literal_zeros(&[2, 2], xla::ElementType::F32).unwrap();
+        assert_eq!(z.to_vec::<f32>().unwrap(), vec![0.0; 4]);
+        let bytes: Vec<u8> = [1.5f32, -2.0].iter().flat_map(|v| v.to_le_bytes()).collect();
+        let f = RuntimeClient::literal_f32(&[2], &bytes).unwrap();
+        assert_eq!(f.to_vec::<f32>().unwrap(), vec![1.5, -2.0]);
+    }
+
+    #[test]
+    fn missing_hlo_file_is_artifact_error() {
+        let c = RuntimeClient::cpu().unwrap();
+        let err = c.compile_hlo_file(Path::new("/nonexistent/x.hlo.txt"));
+        assert!(matches!(err, Err(Error::Artifact(_))));
+    }
+}

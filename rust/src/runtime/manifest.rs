@@ -1,0 +1,387 @@
+//! `artifacts/manifest.json` parsing — the contract between the python
+//! AOT path and the rust runtime (see `python/compile/model.py` for the
+//! authoritative description of the decode-input wiring).
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Tensor dtype tags used in the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => Err(Error::Artifact(format!("unknown dtype `{other}`"))),
+        }
+    }
+
+    pub fn size(self) -> usize {
+        4
+    }
+
+    pub fn element_type(self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+}
+
+/// One weight tensor's layout inside the weights blob.
+#[derive(Debug, Clone)]
+pub struct ParamMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub offset: usize,
+    pub nbytes: usize,
+}
+
+/// Shape+dtype of one encoder output.
+#[derive(Debug, Clone)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// How the initial value of a decode-loop state input is produced.
+#[derive(Debug, Clone)]
+pub enum StateInit {
+    /// Seed from encoder output `idx`.
+    FromEncoder(usize),
+    /// Zero tensor of the given shape/dtype.
+    Zeros(Vec<usize>, DType),
+}
+
+/// Source of one decode-step input (python `DecodeInput`).
+#[derive(Debug, Clone)]
+pub enum DecodeInputSpec {
+    /// Encoder output `idx`, constant across decode steps.
+    Encoder(usize),
+    /// The source-length scalar.
+    Length,
+    /// Loop state `idx`: fed from decode output `idx + 1`.
+    State { idx: usize, init: StateInit },
+    /// The previous target token.
+    Token,
+}
+
+/// Everything needed to run one model.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub lang_pair: String,
+    pub arch: String,
+    pub encode_hlo: PathBuf,
+    pub decode_hlo: PathBuf,
+    pub weights_bin: PathBuf,
+    pub weights_sha256: String,
+    pub params: Vec<ParamMeta>,
+    pub encode_outputs: Vec<TensorMeta>,
+    pub decode_inputs: Vec<DecodeInputSpec>,
+    pub n_state: usize,
+}
+
+impl ModelManifest {
+    /// Total bytes the weights blob must have.
+    pub fn weights_len(&self) -> usize {
+        self.params.iter().map(|p| p.nbytes).sum()
+    }
+
+    /// Index (within decode inputs) of the token slot.
+    pub fn token_slot(&self) -> Result<usize> {
+        self.decode_inputs
+            .iter()
+            .position(|d| matches!(d, DecodeInputSpec::Token))
+            .ok_or_else(|| Error::Artifact(format!("{}: no token slot", self.name)))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        // Param layout must be dense and in-order.
+        let mut expect = 0usize;
+        for p in &self.params {
+            if p.offset != expect {
+                return Err(Error::Artifact(format!(
+                    "{}: param {} at offset {} (expected {expect})",
+                    self.name, p.name, p.offset
+                )));
+            }
+            let elems: usize = p.shape.iter().product::<usize>().max(1);
+            if elems * p.dtype.size() != p.nbytes {
+                return Err(Error::Artifact(format!(
+                    "{}: param {} shape/nbytes mismatch",
+                    self.name, p.name
+                )));
+            }
+            expect += p.nbytes;
+        }
+        // State indices dense, one token slot, enc indices in range.
+        let mut state_idx: Vec<usize> = Vec::new();
+        let mut token_slots = 0usize;
+        for d in &self.decode_inputs {
+            match d {
+                DecodeInputSpec::State { idx, init } => {
+                    state_idx.push(*idx);
+                    if let StateInit::FromEncoder(i) = init {
+                        if *i >= self.encode_outputs.len() {
+                            return Err(Error::Artifact(format!(
+                                "{}: state init enc idx {i} out of range",
+                                self.name
+                            )));
+                        }
+                    }
+                }
+                DecodeInputSpec::Encoder(i) => {
+                    if *i >= self.encode_outputs.len() {
+                        return Err(Error::Artifact(format!(
+                            "{}: enc idx {i} out of range",
+                            self.name
+                        )));
+                    }
+                }
+                DecodeInputSpec::Token => token_slots += 1,
+                DecodeInputSpec::Length => {}
+            }
+        }
+        state_idx.sort_unstable();
+        if state_idx != (0..self.n_state).collect::<Vec<_>>() {
+            return Err(Error::Artifact(format!(
+                "{}: state indices not dense: {state_idx:?}",
+                self.name
+            )));
+        }
+        if token_slots != 1 {
+            return Err(Error::Artifact(format!(
+                "{}: expected 1 token slot, got {token_slots}",
+                self.name
+            )));
+        }
+        Ok(())
+    }
+}
+
+/// The whole artifacts directory.
+#[derive(Debug, Clone)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub seed: u64,
+    pub n_max: usize,
+    pub m_max: usize,
+    pub vocab: usize,
+    pub pad_id: i32,
+    pub bos_id: i32,
+    pub eos_id: i32,
+    pub models: Vec<ModelManifest>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<ArtifactManifest> {
+        let models = j
+            .get("models")?
+            .as_array()?
+            .iter()
+            .map(|m| parse_model(dir, m))
+            .collect::<Result<Vec<_>>>()?;
+        let man = ArtifactManifest {
+            dir: dir.to_path_buf(),
+            seed: j.get("seed")?.as_i64()? as u64,
+            n_max: j.get("n_max")?.as_usize()?,
+            m_max: j.get("m_max")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            pad_id: j.get("pad_id")?.as_i64()? as i32,
+            bos_id: j.get("bos_id")?.as_i64()? as i32,
+            eos_id: j.get("eos_id")?.as_i64()? as i32,
+            models,
+        };
+        for m in &man.models {
+            m.validate()?;
+        }
+        Ok(man)
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models
+            .iter()
+            .find(|m| m.name == name)
+            .ok_or_else(|| Error::Artifact(format!("model `{name}` not in manifest")))
+    }
+}
+
+fn parse_tensor_meta(j: &Json) -> Result<TensorMeta> {
+    Ok(TensorMeta {
+        shape: j.get("shape")?.as_shape()?,
+        dtype: DType::parse(j.get("dtype")?.as_str()?)?,
+    })
+}
+
+fn parse_state_init(j: &Json) -> Result<StateInit> {
+    match j.get("kind")?.as_str()? {
+        "enc" => Ok(StateInit::FromEncoder(j.get("idx")?.as_usize()?)),
+        "zeros" => Ok(StateInit::Zeros(
+            j.get("shape")?.as_shape()?,
+            DType::parse(j.get("dtype")?.as_str()?)?,
+        )),
+        other => Err(Error::Artifact(format!("bad state init kind `{other}`"))),
+    }
+}
+
+fn parse_decode_input(j: &Json) -> Result<DecodeInputSpec> {
+    match j.get("kind")?.as_str()? {
+        "enc" => Ok(DecodeInputSpec::Encoder(j.get("idx")?.as_usize()?)),
+        "length" => Ok(DecodeInputSpec::Length),
+        "token" => Ok(DecodeInputSpec::Token),
+        "state" => Ok(DecodeInputSpec::State {
+            idx: j.get("idx")?.as_usize()?,
+            init: parse_state_init(j.get("init")?)?,
+        }),
+        other => Err(Error::Artifact(format!("bad decode input kind `{other}`"))),
+    }
+}
+
+fn parse_model(dir: &Path, j: &Json) -> Result<ModelManifest> {
+    let params = j
+        .get("params")?
+        .as_array()?
+        .iter()
+        .map(|p| {
+            Ok(ParamMeta {
+                name: p.get("name")?.as_str()?.to_string(),
+                shape: p.get("shape")?.as_shape()?,
+                dtype: DType::parse(p.get("dtype")?.as_str()?)?,
+                offset: p.get("offset")?.as_usize()?,
+                nbytes: p.get("nbytes")?.as_usize()?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(ModelManifest {
+        name: j.get("name")?.as_str()?.to_string(),
+        lang_pair: j.get("lang_pair")?.as_str()?.to_string(),
+        arch: j.get("arch")?.as_str()?.to_string(),
+        encode_hlo: dir.join(j.get("encode_hlo")?.as_str()?),
+        decode_hlo: dir.join(j.get("decode_hlo")?.as_str()?),
+        weights_bin: dir.join(j.get("weights_bin")?.as_str()?),
+        weights_sha256: j.get("weights_sha256")?.as_str()?.to_string(),
+        params,
+        encode_outputs: j
+            .get("encode_outputs")?
+            .as_array()?
+            .iter()
+            .map(parse_tensor_meta)
+            .collect::<Result<Vec<_>>>()?,
+        decode_inputs: j
+            .get("decode_inputs")?
+            .as_array()?
+            .iter()
+            .map(parse_decode_input)
+            .collect::<Result<Vec<_>>>()?,
+        n_state: j.get("n_state")?.as_usize()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> Json {
+        Json::parse(
+            r#"{
+              "version": 1, "seed": 1, "n_max": 64, "m_max": 64,
+              "vocab": 4096, "pad_id": 0, "bos_id": 1, "eos_id": 2,
+              "models": [{
+                "name": "toy", "lang_pair": "de_en", "arch": "gru",
+                "encode_hlo": "toy.encode.hlo.txt",
+                "decode_hlo": "toy.decode.hlo.txt",
+                "weights_bin": "toy.weights.bin",
+                "weights_sha256": "x",
+                "params": [
+                  {"name": "a", "shape": [2, 3], "dtype": "f32",
+                   "offset": 0, "nbytes": 24},
+                  {"name": "b", "shape": [], "dtype": "i32",
+                   "offset": 24, "nbytes": 4}
+                ],
+                "encode_outputs": [{"shape": [1, 8], "dtype": "f32"}],
+                "decode_inputs": [
+                  {"kind": "enc", "idx": 0},
+                  {"kind": "length"},
+                  {"kind": "state", "idx": 0,
+                   "init": {"kind": "zeros", "shape": [1, 8], "dtype": "f32"}},
+                  {"kind": "token"}
+                ],
+                "n_state": 1
+              }]
+            }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_and_validates() {
+        let man =
+            ArtifactManifest::from_json(Path::new("/tmp/a"), &mini_manifest_json())
+                .unwrap();
+        assert_eq!(man.models.len(), 1);
+        let m = man.model("toy").unwrap();
+        assert_eq!(m.weights_len(), 28);
+        assert_eq!(m.token_slot().unwrap(), 3);
+        assert_eq!(m.n_state, 1);
+        assert!(man.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_sparse_param_layout() {
+        let mut j = mini_manifest_json();
+        // Corrupt offset of param b.
+        if let Json::Object(root) = &mut j {
+            let models = root.get_mut("models").unwrap();
+            if let Json::Array(ms) = models {
+                if let Json::Object(m) = &mut ms[0] {
+                    if let Json::Array(ps) = m.get_mut("params").unwrap() {
+                        ps[1].set("offset", Json::Num(100.0));
+                    }
+                }
+            }
+        }
+        assert!(ArtifactManifest::from_json(Path::new("/tmp"), &j).is_err());
+    }
+
+    #[test]
+    fn rejects_bad_dtype_and_kind() {
+        assert!(DType::parse("f64").is_err());
+        let bad = Json::parse(r#"{"kind": "wormhole"}"#).unwrap();
+        assert!(parse_decode_input(&bad).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let man = ArtifactManifest::load(&dir).unwrap();
+        assert_eq!(man.models.len(), 3);
+        assert_eq!(man.n_max, 64);
+        for m in &man.models {
+            assert!(m.encode_hlo.exists(), "{:?}", m.encode_hlo);
+            assert!(m.decode_hlo.exists());
+            assert_eq!(
+                std::fs::metadata(&m.weights_bin).unwrap().len() as usize,
+                m.weights_len()
+            );
+        }
+    }
+}

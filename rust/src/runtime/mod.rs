@@ -1,0 +1,22 @@
+//! PJRT runtime: loads the AOT artifacts produced by `python/compile/aot.py`
+//! and drives autoregressive seq2seq inference from rust.
+//!
+//! Python is **never** on the request path: `make artifacts` runs once at
+//! build time; afterwards the `cnmt` binary is self-contained — it parses
+//! `artifacts/manifest.json` ([`manifest`]), memory-maps the weight blobs
+//! onto device buffers ([`weights`]), compiles the HLO text with the PJRT
+//! CPU client ([`client`]) and loops the decode-step executable until EOS
+//! ([`seq2seq`]) — the serial O(M) loop whose latency the paper models.
+//!
+//! HLO **text** is the interchange format (not serialized protos): jax
+//! ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1 rejects;
+//! the text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod client;
+pub mod manifest;
+pub mod seq2seq;
+pub mod weights;
+
+pub use client::RuntimeClient;
+pub use manifest::{ArtifactManifest, DecodeInputSpec, ModelManifest, ParamMeta};
+pub use seq2seq::{Seq2SeqEngine, Translation, TranslateOptions};

@@ -1,0 +1,350 @@
+//! The autoregressive seq2seq engine: encode once, loop decode-step until
+//! EOS — rust-driven, PJRT-executed, python-free.
+//!
+//! This is the request-path embodiment of the paper's cost model: one
+//! encoder execution (O(N) for RNNs, ~O(1) for the Transformer) followed
+//! by M strictly serial decode-step executions. The engine reports the
+//! measured encode/decode split so the calibration pass can fit the
+//! per-device T_exe planes from real runs.
+//!
+//! Perf notes (EXPERIMENTS.md §Perf):
+//! * weights live on device (`execute_b`) — uploaded once, never copied
+//!   into the decode loop;
+//! * loop-carried state (RNN h/c, Transformer KV caches) is fed back as
+//!   device buffers, not round-tripped through host literals;
+//! * only the 4-byte `next_token` is synced to host each step (EOS check).
+
+use std::path::Path;
+use std::time::Instant;
+
+use crate::runtime::client::RuntimeClient;
+use crate::runtime::manifest::{
+    ArtifactManifest, DType, DecodeInputSpec, ModelManifest, StateInit,
+};
+use crate::runtime::weights::{load_device_weights, DeviceWeights};
+use crate::{Error, Result};
+
+/// Options controlling one translation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct TranslateOptions {
+    /// Hard cap on decode steps (defaults to the artifact's M_MAX).
+    pub max_steps: Option<usize>,
+    /// Run exactly this many steps, ignoring EOS — used by the
+    /// characterisation pass and the experiment harness, where the
+    /// ground-truth output length is dictated by the corpus pair
+    /// (DESIGN.md §4: weights are untrained, so EOS timing would
+    /// otherwise be arbitrary; compute cost per step is weight-agnostic).
+    pub force_steps: Option<usize>,
+}
+
+/// Result of one translation.
+#[derive(Debug, Clone)]
+pub struct Translation {
+    /// Emitted target token ids (without BOS; includes EOS if produced).
+    pub tokens: Vec<i32>,
+    /// Decode steps executed (= M, the paper's output length).
+    pub steps: usize,
+    /// Wall time of the encoder execution (seconds).
+    pub encode_s: f64,
+    /// Wall time of the full decode loop (seconds).
+    pub decode_s: f64,
+}
+
+impl Translation {
+    pub fn total_s(&self) -> f64 {
+        self.encode_s + self.decode_s
+    }
+}
+
+/// A loaded model: compiled encode/decode executables + device weights.
+pub struct Seq2SeqEngine {
+    client: RuntimeClient,
+    model: ModelManifest,
+    n_max: usize,
+    m_max: usize,
+    pad_id: i32,
+    bos_id: i32,
+    eos_id: i32,
+    encode_exe: xla::PjRtLoadedExecutable,
+    decode_exe: xla::PjRtLoadedExecutable,
+    weights: DeviceWeights,
+}
+
+impl Seq2SeqEngine {
+    /// Load one model from an artifacts directory.
+    pub fn load(artifacts_dir: &Path, model_name: &str) -> Result<Seq2SeqEngine> {
+        let manifest = ArtifactManifest::load(artifacts_dir)?;
+        Self::from_manifest(&manifest, model_name)
+    }
+
+    /// Load from an already-parsed manifest.
+    pub fn from_manifest(
+        manifest: &ArtifactManifest,
+        model_name: &str,
+    ) -> Result<Seq2SeqEngine> {
+        let model = manifest.model(model_name)?.clone();
+        let client = RuntimeClient::cpu()?;
+        let encode_exe = client.compile_hlo_file(&model.encode_hlo)?;
+        let decode_exe = client.compile_hlo_file(&model.decode_hlo)?;
+        let weights = load_device_weights(&client, &model)?;
+        Ok(Seq2SeqEngine {
+            client,
+            model,
+            n_max: manifest.n_max,
+            m_max: manifest.m_max,
+            pad_id: manifest.pad_id,
+            bos_id: manifest.bos_id,
+            eos_id: manifest.eos_id,
+            encode_exe,
+            decode_exe,
+            weights,
+        })
+    }
+
+    pub fn model_name(&self) -> &str {
+        &self.model.name
+    }
+
+    pub fn n_max(&self) -> usize {
+        self.n_max
+    }
+
+    pub fn m_max(&self) -> usize {
+        self.m_max
+    }
+
+    pub fn eos_id(&self) -> i32 {
+        self.eos_id
+    }
+
+    pub fn weights_bytes(&self) -> usize {
+        self.weights.total_bytes
+    }
+
+    /// Pad + EOS-terminate a source sentence; returns (tokens, length).
+    fn prepare_source(&self, src: &[u16]) -> Result<(Vec<i32>, i32)> {
+        if src.is_empty() {
+            return Err(Error::Serve("empty source sentence".into()));
+        }
+        if src.len() + 1 > self.n_max {
+            return Err(Error::Serve(format!(
+                "source too long: {} tokens (max {})",
+                src.len(),
+                self.n_max - 1
+            )));
+        }
+        let mut toks = vec![self.pad_id; self.n_max];
+        for (i, &t) in src.iter().enumerate() {
+            toks[i] = t as i32;
+        }
+        toks[src.len()] = self.eos_id;
+        Ok((toks, (src.len() + 1) as i32))
+    }
+
+    /// Execute an executable over device buffers and untuple the result.
+    ///
+    /// The CPU PJRT client returns the (return_tuple=True) root as a
+    /// single tuple-shaped buffer; we sync it to host and decompose. The
+    /// per-leaf literals are re-uploaded only for loop-carried state.
+    fn run(
+        exe: &xla::PjRtLoadedExecutable,
+        args: &[&xla::PjRtBuffer],
+        n_outputs: usize,
+    ) -> Result<Vec<xla::Literal>> {
+        let mut out = exe.execute_b(args)?;
+        let replica = out
+            .pop()
+            .ok_or_else(|| Error::Xla("execute returned no replicas".into()))?;
+        if replica.len() == n_outputs && n_outputs != 1 {
+            // Backend already untupled the result.
+            return replica
+                .iter()
+                .map(|b| Ok(b.to_literal_sync()?))
+                .collect();
+        }
+        let first = replica
+            .first()
+            .ok_or_else(|| Error::Xla("execute returned no outputs".into()))?;
+        let lit = first.to_literal_sync()?;
+        // Single-output computations return a plain array; multi-output
+        // ones return a tuple literal to decompose.
+        let leaves = if lit.shape()?.is_tuple() {
+            lit.to_tuple()?
+        } else {
+            vec![lit]
+        };
+        if leaves.len() != n_outputs {
+            return Err(Error::Xla(format!(
+                "expected {n_outputs} outputs, got {}",
+                leaves.len()
+            )));
+        }
+        Ok(leaves)
+    }
+
+    /// Run the encoder; returns (device buffers, host keepalive literals)
+    /// for the encoder outputs.
+    ///
+    /// Lifetime note: `buffer_from_host_literal` copies asynchronously,
+    /// so every uploaded literal must stay alive until a blocking call
+    /// (the next `Self::run`, whose output sync transitively waits on all
+    /// input copies) proves the copy finished. Keepalive vectors thread
+    /// through this file for exactly that reason.
+    fn run_encode(
+        &self,
+        tokens: &[i32],
+        length: i32,
+    ) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+        let tok_lit = RuntimeClient::literal_i32(&[1, self.n_max], tokens)?;
+        let len_lit = RuntimeClient::literal_i32(&[], &[length])?;
+        let tok_buf = self.client.to_device(&tok_lit)?;
+        let len_buf = self.client.to_device(&len_lit)?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            self.weights.buffers.iter().collect();
+        args.push(&tok_buf);
+        args.push(&len_buf);
+        // Blocks until outputs are ready => tok/len copies completed.
+        let leaves = Self::run(
+            &self.encode_exe,
+            &args,
+            self.model.encode_outputs.len(),
+        )?;
+        let bufs = leaves
+            .iter()
+            .map(|l| self.client.to_device(l))
+            .collect::<Result<Vec<_>>>()?;
+        Ok((bufs, leaves))
+    }
+
+    /// Initial decode-state buffers (per manifest wiring) plus their host
+    /// keepalive literals.
+    fn initial_states(
+        &self,
+        enc_outs: &[xla::PjRtBuffer],
+    ) -> Result<(Vec<xla::PjRtBuffer>, Vec<xla::Literal>)> {
+        let mut states: Vec<Option<xla::PjRtBuffer>> =
+            (0..self.model.n_state).map(|_| None).collect();
+        let mut keepalive = Vec::new();
+        for spec in &self.model.decode_inputs {
+            if let DecodeInputSpec::State { idx, init } = spec {
+                let lit = match init {
+                    StateInit::FromEncoder(i) => enc_outs[*i].to_literal_sync()?,
+                    StateInit::Zeros(shape, dt) => {
+                        let ty = match dt {
+                            DType::F32 => xla::ElementType::F32,
+                            DType::I32 => xla::ElementType::S32,
+                        };
+                        RuntimeClient::literal_zeros(shape, ty)?
+                    }
+                };
+                states[*idx] = Some(self.client.to_device(&lit)?);
+                keepalive.push(lit);
+            }
+        }
+        let states = states
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| {
+                s.ok_or_else(|| Error::Artifact(format!("state {i} uninitialised")))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok((states, keepalive))
+    }
+
+    /// Translate a source sentence.
+    pub fn translate(
+        &self,
+        src: &[u16],
+        opts: TranslateOptions,
+    ) -> Result<Translation> {
+        let (tokens, length) = self.prepare_source(src)?;
+
+        let t0 = Instant::now();
+        let (enc_outs, _enc_keepalive) = self.run_encode(&tokens, length)?;
+        let encode_s = t0.elapsed().as_secs_f64();
+
+        let t1 = Instant::now();
+        let (mut states, init_keepalive) = self.initial_states(&enc_outs)?;
+        let len_lit = RuntimeClient::literal_i32(&[], &[length])?;
+        let len_buf = self.client.to_device(&len_lit)?;
+        let bos_lit = RuntimeClient::literal_i32(&[1], &[self.bos_id])?;
+        let mut token_buf = self.client.to_device(&bos_lit)?;
+        // Literals backing the *current* state/token buffers; replaced
+        // only after the next blocking run() proves their copies landed.
+        let mut keepalive: Vec<xla::Literal> = init_keepalive;
+        keepalive.push(bos_lit);
+
+        let max_steps = opts
+            .force_steps
+            .unwrap_or_else(|| opts.max_steps.unwrap_or(self.m_max))
+            .min(self.m_max);
+        let n_outputs = 1 + self.model.n_state;
+        let mut emitted: Vec<i32> = Vec::with_capacity(max_steps);
+
+        for _ in 0..max_steps {
+            // Assemble decode args in manifest order.
+            let mut args: Vec<&xla::PjRtBuffer> =
+                self.weights.buffers.iter().collect();
+            for spec in &self.model.decode_inputs {
+                match spec {
+                    DecodeInputSpec::Encoder(i) => args.push(&enc_outs[*i]),
+                    DecodeInputSpec::Length => args.push(&len_buf),
+                    DecodeInputSpec::State { idx, .. } => args.push(&states[*idx]),
+                    DecodeInputSpec::Token => args.push(&token_buf),
+                }
+            }
+            // Blocks until done => previous keepalive's copies completed.
+            let leaves = Self::run(&self.decode_exe, &args, n_outputs)?;
+            let next_token = leaves[0].to_vec::<i32>()?[0];
+            emitted.push(next_token);
+            // Re-upload states + token for the next iteration.
+            for (i, leaf) in leaves.iter().enumerate().skip(1) {
+                states[i - 1] = self.client.to_device(leaf)?;
+            }
+            token_buf = self.client.to_device(&leaves[0])?;
+            keepalive = leaves;
+            if opts.force_steps.is_none() && next_token == self.eos_id {
+                break;
+            }
+        }
+        // The last uploads may still be in flight; force completion
+        // before dropping their literals.
+        for s in &states {
+            let _ = s.to_literal_sync()?;
+        }
+        let _ = token_buf.to_literal_sync()?;
+        drop(keepalive);
+        let decode_s = t1.elapsed().as_secs_f64();
+
+        Ok(Translation { steps: emitted.len(), tokens: emitted, encode_s, decode_s })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn prepare_source_bounds() {
+        if !have_artifacts() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let eng = Seq2SeqEngine::load(&artifacts_dir(), "gru_fr_en").unwrap();
+        assert!(eng.prepare_source(&[]).is_err());
+        assert!(eng.prepare_source(&vec![5u16; 64]).is_err());
+        let (toks, len) = eng.prepare_source(&[10, 11, 12]).unwrap();
+        assert_eq!(len, 4);
+        assert_eq!(toks[3], eng.eos_id());
+        assert_eq!(toks[4], 0);
+        assert_eq!(toks.len(), 64);
+    }
+}

@@ -1,0 +1,205 @@
+//! Weight-blob loading: raw little-endian binary → device buffers.
+//!
+//! The AOT path exports each model's parameters as one dense blob plus
+//! per-tensor metadata in the manifest (name/shape/dtype/offset). Weights
+//! are uploaded to device buffers **once** at engine construction and
+//! reused by every encode/decode execution (`execute_b`), so the serial
+//! decode loop never re-copies the ~10-25 MB of parameters.
+
+use std::path::Path;
+
+use crate::runtime::manifest::{DType, ModelManifest};
+use crate::runtime::client::RuntimeClient;
+use crate::{Error, Result};
+
+/// Weights resident on device.
+///
+/// `literals` (the host copies) are retained for the lifetime of the
+/// buffers: PJRT's `buffer_from_host_literal` copies **asynchronously**
+/// on a worker thread, so freeing the literal before the copy completes
+/// is a use-after-free (observed as a SIGSEGV inside
+/// `AbstractTfrtCpuBuffer::CopyFromLiteral`).
+pub struct DeviceWeights {
+    pub buffers: Vec<xla::PjRtBuffer>,
+    /// Host backing for `buffers` — must not be dropped early.
+    pub literals: Vec<xla::Literal>,
+    pub total_bytes: usize,
+}
+
+/// Read and validate the raw weights blob for `model`.
+pub fn read_blob(model: &ModelManifest) -> Result<Vec<u8>> {
+    let blob = std::fs::read(&model.weights_bin).map_err(|e| {
+        Error::Artifact(format!(
+            "cannot read weights {}: {e} (run `make artifacts`)",
+            model.weights_bin.display()
+        ))
+    })?;
+    let expect = model.weights_len();
+    if blob.len() != expect {
+        return Err(Error::Artifact(format!(
+            "{}: weights blob is {} bytes, manifest says {expect}",
+            model.name,
+            blob.len()
+        )));
+    }
+    Ok(blob)
+}
+
+/// Slice the blob into per-parameter host literals (manifest order).
+pub fn blob_to_literals(
+    model: &ModelManifest,
+    blob: &[u8],
+) -> Result<Vec<xla::Literal>> {
+    model
+        .params
+        .iter()
+        .map(|p| {
+            let bytes = &blob[p.offset..p.offset + p.nbytes];
+            match p.dtype {
+                DType::F32 => RuntimeClient::literal_f32(&p.shape, bytes),
+                DType::I32 => {
+                    let vals: Vec<i32> = bytes
+                        .chunks_exact(4)
+                        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                        .collect();
+                    RuntimeClient::literal_i32(&p.shape, &vals)
+                }
+            }
+        })
+        .collect()
+}
+
+/// Load `model`'s weights from disk onto the device.
+pub fn load_device_weights(
+    client: &RuntimeClient,
+    model: &ModelManifest,
+) -> Result<DeviceWeights> {
+    let blob = read_blob(model)?;
+    let literals = blob_to_literals(model, &blob)?;
+    let buffers = literals
+        .iter()
+        .map(|l| client.to_device(l))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DeviceWeights { buffers, literals, total_bytes: blob.len() })
+}
+
+/// Sanity check: sha256 of the blob matches the manifest entry.
+/// (Custom implementation — no hash crates in the offline set.)
+pub fn verify_sha256(model: &ModelManifest, blob: &[u8]) -> Result<()> {
+    let got = sha256_hex(blob);
+    if got != model.weights_sha256 {
+        return Err(Error::Artifact(format!(
+            "{}: weights sha256 mismatch (got {got}, manifest {})",
+            model.name, model.weights_sha256
+        )));
+    }
+    Ok(())
+}
+
+/// Minimal SHA-256 (FIPS 180-4), enough to verify artifact integrity.
+pub fn sha256_hex(data: &[u8]) -> String {
+    const K: [u32; 64] = [
+        0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1,
+        0x923f82a4, 0xab1c5ed5, 0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3,
+        0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174, 0xe49b69c1, 0xefbe4786,
+        0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+        0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147,
+        0x06ca6351, 0x14292967, 0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13,
+        0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85, 0xa2bfe8a1, 0xa81a664b,
+        0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+        0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a,
+        0x5b9cca4f, 0x682e6ff3, 0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208,
+        0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+    ];
+    let mut h: [u32; 8] = [
+        0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c,
+        0x1f83d9ab, 0x5be0cd19,
+    ];
+    // Padding.
+    let bitlen = (data.len() as u64).wrapping_mul(8);
+    let mut msg = data.to_vec();
+    msg.push(0x80);
+    while msg.len() % 64 != 56 {
+        msg.push(0);
+    }
+    msg.extend_from_slice(&bitlen.to_be_bytes());
+    // Compression.
+    let mut w = [0u32; 64];
+    for chunk in msg.chunks_exact(64) {
+        for i in 0..16 {
+            w[i] = u32::from_be_bytes(chunk[4 * i..4 * i + 4].try_into().unwrap());
+        }
+        for i in 16..64 {
+            let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+            let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+            w[i] = w[i - 16]
+                .wrapping_add(s0)
+                .wrapping_add(w[i - 7])
+                .wrapping_add(s1);
+        }
+        let (mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut hh) =
+            (h[0], h[1], h[2], h[3], h[4], h[5], h[6], h[7]);
+        for i in 0..64 {
+            let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+            let ch = (e & f) ^ (!e & g);
+            let t1 = hh
+                .wrapping_add(s1)
+                .wrapping_add(ch)
+                .wrapping_add(K[i])
+                .wrapping_add(w[i]);
+            let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+            let maj = (a & b) ^ (a & c) ^ (b & c);
+            let t2 = s0.wrapping_add(maj);
+            hh = g;
+            g = f;
+            f = e;
+            e = d.wrapping_add(t1);
+            d = c;
+            c = b;
+            b = a;
+            a = t1.wrapping_add(t2);
+        }
+        h[0] = h[0].wrapping_add(a);
+        h[1] = h[1].wrapping_add(b);
+        h[2] = h[2].wrapping_add(c);
+        h[3] = h[3].wrapping_add(d);
+        h[4] = h[4].wrapping_add(e);
+        h[5] = h[5].wrapping_add(f);
+        h[6] = h[6].wrapping_add(g);
+        h[7] = h[7].wrapping_add(hh);
+    }
+    h.iter().map(|x| format!("{x:08x}")).collect()
+}
+
+/// Convenience: does the artifacts directory exist with a manifest?
+pub fn artifacts_available(dir: &Path) -> bool {
+    dir.join("manifest.json").exists()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sha256_known_vectors() {
+        // FIPS 180-4 test vectors.
+        assert_eq!(
+            sha256_hex(b""),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            sha256_hex(b"abc"),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            sha256_hex(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq"),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+        // Multi-block input (> 64 bytes).
+        let long = vec![b'a'; 1000];
+        assert_eq!(
+            sha256_hex(&long),
+            "41edece42d63e8d9bf515a9ba6932e1c20cbc9f5a5d134645adb5db1b9737ea3"
+        );
+    }
+}

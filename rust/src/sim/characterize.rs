@@ -1,0 +1,100 @@
+//! Offline characterisation (paper §III: "The T_exe model of (2) is
+//! fitted on the result of 10k inferences per device, with inputs not
+//! included in the 100k set").
+
+use crate::corpus::{Dataset, PrefilterRules};
+use crate::devices::{Calibration, DeviceKind};
+use crate::predictor::{N2mRegressor, TexeModel};
+use crate::Result;
+
+/// Everything the router needs, produced offline.
+#[derive(Debug, Clone)]
+pub struct Characterization {
+    pub texe_edge: TexeModel,
+    pub texe_cloud: TexeModel,
+    pub n2m: N2mRegressor,
+    /// Mean M of the fit split (the Naive baseline's constant estimate).
+    pub mean_m: f64,
+}
+
+/// Run the offline phase for one (dataset, calibration) combination.
+///
+/// For each fit-split pair, both devices "run" the inference (sampling
+/// their ground-truth time models) and the measured `(N, M_real, T)`
+/// triples are plane-fitted per device. The N→M regressor is fitted on
+/// the prefiltered corpus pairs, as in the paper.
+pub fn characterize(
+    dataset: &Dataset,
+    calibration: &Calibration,
+    seed: u64,
+) -> Result<Characterization> {
+    let model = dataset.pair.model_name();
+    let mut edge = calibration.build_device(DeviceKind::Edge, seed ^ 0xED6E)?;
+    let mut cloud = calibration.build_device(DeviceKind::Cloud, seed ^ 0xC10D)?;
+
+    let mut samples_e = Vec::with_capacity(dataset.fit.len());
+    let mut samples_c = Vec::with_capacity(dataset.fit.len());
+    for p in &dataset.fit {
+        let n = p.n();
+        let m = p.m_real;
+        samples_e.push((n as f64, m as f64, edge.exec_time(model, n, m)?));
+        samples_c.push((n as f64, m as f64, cloud.exec_time(model, n, m)?));
+    }
+    let texe_edge = TexeModel::fit(&samples_e)?;
+    let texe_cloud = TexeModel::fit(&samples_c)?;
+    texe_edge.validate()?;
+    texe_cloud.validate()?;
+
+    let n2m = N2mRegressor::fit(&dataset.fit, &PrefilterRules::default())?;
+
+    Ok(Characterization {
+        texe_edge,
+        texe_cloud,
+        n2m,
+        mean_m: dataset.mean_m_fit(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::corpus::LangPair;
+
+    #[test]
+    fn characterisation_recovers_calibration_planes() {
+        let cal = Calibration::default_paper();
+        for pair in LangPair::ALL {
+            let ds = Dataset::generate(pair, 5_000, 100, 33);
+            let ch = characterize(&ds, &cal, 33).unwrap();
+            let truth = cal.get(DeviceKind::Edge, pair.model_name()).unwrap().texe;
+            // The fitted plane should be close to the generating plane.
+            assert!(
+                (ch.texe_edge.alpha_m - truth.alpha_m).abs() / truth.alpha_m < 0.15,
+                "{}: alpha_m {} vs truth {}",
+                pair.id(),
+                ch.texe_edge.alpha_m,
+                truth.alpha_m
+            );
+            assert!(ch.texe_edge.r2 > 0.7, "{}: edge r2 {}", pair.id(), ch.texe_edge.r2);
+            // N→M close to corpus verbosity.
+            assert!(
+                (ch.n2m.gamma - pair.params().gamma).abs() < 0.05,
+                "{}: gamma {}",
+                pair.id(),
+                ch.n2m.gamma
+            );
+            assert!(ch.mean_m > 1.0 && ch.mean_m < 62.0);
+        }
+    }
+
+    #[test]
+    fn rnn_models_keep_alpha_n_transformer_does_not() {
+        let cal = Calibration::default_paper();
+        let ds_rnn = Dataset::generate(LangPair::DeEn, 5_000, 100, 7);
+        let ch_rnn = characterize(&ds_rnn, &cal, 7).unwrap();
+        let ds_tr = Dataset::generate(LangPair::EnZh, 5_000, 100, 7);
+        let ch_tr = characterize(&ds_tr, &cal, 7).unwrap();
+        // Paper: transformer encoder ~constant in N; RNN linear in N.
+        assert!(ch_rnn.texe_edge.alpha_n > 5.0 * ch_tr.texe_edge.alpha_n.abs());
+    }
+}

@@ -1,0 +1,365 @@
+//! The request-stream replay harness.
+
+use crate::config::Config;
+use crate::coordinator::{PolicyKind, RouterBuilder};
+use crate::corpus::{Dataset, LangPair};
+use crate::devices::{Calibration, DeviceKind};
+use crate::net::trace::ConnectionProfile;
+use crate::net::{Network, TraceGenerator, TxModel};
+use crate::util::{Json, Rng};
+use crate::Result;
+
+use super::characterize::{characterize, Characterization};
+
+/// Ground truth for one request: everything any policy could be charged.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestTruth {
+    pub n: usize,
+    pub m_real: usize,
+    /// Arrival time on the simulation clock (seconds).
+    pub arrival_s: f64,
+    /// True edge execution time (seconds).
+    pub t_edge: f64,
+    /// True cloud execution time (seconds).
+    pub t_cloud: f64,
+    /// True network cost if offloaded at arrival (seconds).
+    pub t_tx: f64,
+    /// Instantaneous trace RTT at arrival (what a timestamped offload
+    /// would observe).
+    pub rtt: f64,
+}
+
+/// The shared ground-truth table for one (pair, profile) experiment.
+#[derive(Debug, Clone)]
+pub struct TruthTable {
+    pub pair: LangPair,
+    pub profile: ConnectionProfile,
+    pub requests: Vec<RequestTruth>,
+    pub characterization: Characterization,
+}
+
+impl TruthTable {
+    /// Build the table: generate corpus + trace, characterise offline,
+    /// sample the request stream and both devices' ground-truth times.
+    pub fn build(
+        cfg: &Config,
+        pair: LangPair,
+        profile: ConnectionProfile,
+        calibration: &Calibration,
+    ) -> Result<TruthTable> {
+        let seed = cfg.seed
+            ^ (pair as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+            ^ (profile as u64 + 1).wrapping_mul(0xBF58476D1CE4E5B9);
+        let dataset = Dataset::generate(pair, cfg.fit_inferences, cfg.eval_pool, seed);
+        dataset.validate()?;
+        let characterization = characterize(&dataset, calibration, seed)?;
+
+        let trace = TraceGenerator::new(seed ^ 0x4E7).profile(profile);
+        let network = Network::new(
+            trace,
+            TxModel { bandwidth_bps: cfg.bandwidth_bps, ..Default::default() },
+        );
+
+        let model = pair.model_name();
+        let mut edge = calibration.build_device(DeviceKind::Edge, seed ^ 0xE)?;
+        let mut cloud = calibration.build_device(DeviceKind::Cloud, seed ^ 0xC)?;
+        let mut rng = Rng::new(seed ^ 0x57EA);
+
+        let stream = dataset.sample_eval(cfg.requests, seed ^ 0x5A);
+        let mut requests = Vec::with_capacity(stream.len());
+        let mut t = 0.0f64;
+        for p in stream {
+            t += rng.exponential(1.0 / cfg.mean_interarrival_s);
+            let n = p.n();
+            let m = p.m_real;
+            requests.push(RequestTruth {
+                n,
+                m_real: m,
+                arrival_s: t,
+                t_edge: edge.exec_time(model, n, m)?,
+                t_cloud: cloud.exec_time(model, n, m)?,
+                t_tx: network.tx_time(t, n, m),
+                rtt: network.rtt_at(t),
+            });
+        }
+        Ok(TruthTable { pair, profile, requests, characterization })
+    }
+}
+
+/// Aggregated result of evaluating one policy on a [`TruthTable`].
+#[derive(Debug, Clone)]
+pub struct PolicyResult {
+    pub policy: String,
+    /// Sum of per-request latencies (the paper's "total ex. time").
+    pub total_s: f64,
+    pub mean_latency_s: f64,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+    pub requests: usize,
+    /// Fraction of requests where the policy picked the truly-faster side.
+    pub correct_rate: f64,
+}
+
+impl PolicyResult {
+    /// Percentage change vs a baseline total (negative = faster).
+    pub fn vs(&self, baseline: &PolicyResult) -> f64 {
+        (self.total_s - baseline.total_s) / baseline.total_s * 100.0
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("policy", Json::Str(self.policy.clone()))
+            .set("total_s", Json::Num(self.total_s))
+            .set("mean_latency_s", Json::Num(self.mean_latency_s))
+            .set("edge_count", Json::Num(self.edge_count as f64))
+            .set("cloud_count", Json::Num(self.cloud_count as f64))
+            .set("requests", Json::Num(self.requests as f64))
+            .set("correct_rate", Json::Num(self.correct_rate));
+        o
+    }
+}
+
+/// How long without an offload before the gateway's background traffic
+/// refreshes the T_tx estimate (paper §II-C: the gateway aggregates many
+/// end-nodes and is "almost continuously fed with inference requests").
+const TTX_REFRESH_S: f64 = 60.0;
+
+/// Evaluate one policy over the table.
+pub fn run_policy(table: &TruthTable, policy: PolicyKind) -> Result<PolicyResult> {
+    let ch = &table.characterization;
+    let mut router = RouterBuilder::new(policy)
+        .texe(ch.texe_edge, ch.texe_cloud)
+        .n2m(ch.n2m)
+        .build()?;
+
+    let mut total = 0.0f64;
+    let (mut edge_count, mut cloud_count, mut correct) = (0usize, 0usize, 0usize);
+    for rq in &table.requests {
+        // Gateway heartbeat: aggregated end-node traffic keeps the
+        // estimator fresh even when this policy never offloads.
+        if router.ttx_stale(rq.arrival_s, TTX_REFRESH_S) {
+            router.observe_ttx(rq.arrival_s, rq.rtt);
+        }
+        let device = match policy {
+            PolicyKind::Oracle => {
+                if rq.t_edge <= rq.t_tx + rq.t_cloud {
+                    DeviceKind::Edge
+                } else {
+                    DeviceKind::Cloud
+                }
+            }
+            _ => router.decide(rq.n).device,
+        };
+        let latency = match device {
+            DeviceKind::Edge => {
+                edge_count += 1;
+                rq.t_edge
+            }
+            DeviceKind::Cloud => {
+                cloud_count += 1;
+                // Timestamped offload: the observed round trip refreshes
+                // the estimator (paper §II-C).
+                router.observe_ttx(rq.arrival_s, rq.rtt);
+                rq.t_tx + rq.t_cloud
+            }
+        };
+        let best = rq.t_edge.min(rq.t_tx + rq.t_cloud);
+        if (latency - best).abs() < 1e-12 {
+            correct += 1;
+        }
+        total += latency;
+    }
+    let n = table.requests.len();
+    Ok(PolicyResult {
+        policy: policy.id().to_string(),
+        total_s: total,
+        mean_latency_s: total / n as f64,
+        edge_count,
+        cloud_count,
+        requests: n,
+        correct_rate: correct as f64 / n as f64,
+    })
+}
+
+/// Evaluate the C-NMT decision rule with an arbitrary output-length
+/// estimator (the paper's future-work ablation: "more advanced output
+/// length estimation methods"). Identical loop to [`run_policy`]'s C-NMT
+/// branch, with `est` supplying M̂.
+pub fn run_with_estimator(
+    table: &TruthTable,
+    est: &crate::predictor::LengthEstimator,
+) -> Result<PolicyResult> {
+    let ch = &table.characterization;
+    let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+        .texe(ch.texe_edge, ch.texe_cloud)
+        .n2m(ch.n2m)
+        .build()?;
+    let mut total = 0.0f64;
+    let (mut edge_count, mut cloud_count, mut correct) = (0usize, 0usize, 0usize);
+    for rq in &table.requests {
+        if router.ttx_stale(rq.arrival_s, TTX_REFRESH_S) {
+            router.observe_ttx(rq.arrival_s, rq.rtt);
+        }
+        let device = router.decide_given_m(rq.n, est.predict(rq.n)).device;
+        let latency = match device {
+            DeviceKind::Edge => {
+                edge_count += 1;
+                rq.t_edge
+            }
+            DeviceKind::Cloud => {
+                cloud_count += 1;
+                router.observe_ttx(rq.arrival_s, rq.rtt);
+                rq.t_tx + rq.t_cloud
+            }
+        };
+        if (latency - rq.t_edge.min(rq.t_tx + rq.t_cloud)).abs() < 1e-12 {
+            correct += 1;
+        }
+        total += latency;
+    }
+    let n = table.requests.len();
+    Ok(PolicyResult {
+        policy: format!("cnmt+{}", est.id()),
+        total_s: total,
+        mean_latency_s: total / n as f64,
+        edge_count,
+        cloud_count,
+        requests: n,
+        correct_rate: correct as f64 / n as f64,
+    })
+}
+
+/// Evaluate the full Table-I policy set on one table.
+pub fn run_all_policies(table: &TruthTable) -> Result<Vec<PolicyResult>> {
+    let mean_m = table.characterization.mean_m;
+    [
+        PolicyKind::EdgeOnly,
+        PolicyKind::CloudOnly,
+        PolicyKind::Oracle,
+        PolicyKind::Naive { mean_m },
+        PolicyKind::Cnmt,
+    ]
+    .iter()
+    .map(|&p| run_policy(table, p))
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_table(pair: LangPair, profile: ConnectionProfile) -> TruthTable {
+        let cfg = Config::smoke();
+        let cal = Calibration::default_paper();
+        TruthTable::build(&cfg, pair, profile, &cal).unwrap()
+    }
+
+    #[test]
+    fn truth_table_is_deterministic() {
+        let a = smoke_table(LangPair::FrEn, ConnectionProfile::Cp1);
+        let b = smoke_table(LangPair::FrEn, ConnectionProfile::Cp1);
+        assert_eq!(a.requests.len(), b.requests.len());
+        for (x, y) in a.requests.iter().zip(&b.requests) {
+            assert_eq!(x.n, y.n);
+            assert!((x.t_edge - y.t_edge).abs() < 1e-15);
+            assert!((x.t_tx - y.t_tx).abs() < 1e-15);
+        }
+    }
+
+    #[test]
+    fn oracle_lower_bounds_every_policy() {
+        // THE core invariant of the evaluation.
+        for pair in LangPair::ALL {
+            let table = smoke_table(pair, ConnectionProfile::Cp1);
+            let results = run_all_policies(&table).unwrap();
+            let oracle = results.iter().find(|r| r.policy == "oracle").unwrap();
+            for r in &results {
+                assert!(
+                    oracle.total_s <= r.total_s + 1e-9,
+                    "{}: oracle {} > {} {}",
+                    pair.id(),
+                    oracle.total_s,
+                    r.policy,
+                    r.total_s
+                );
+            }
+            assert!((oracle.correct_rate - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn cnmt_beats_static_mappings_in_smoke_runs() {
+        // The paper's headline: C-NMT reduces total time vs both GW-only
+        // and Server-only, on every dataset/profile.
+        for pair in LangPair::ALL {
+            for profile in ConnectionProfile::ALL {
+                let table = smoke_table(pair, profile);
+                let results = run_all_policies(&table).unwrap();
+                let get = |id: &str| {
+                    results.iter().find(|r| r.policy == id).unwrap().total_s
+                };
+                let cnmt = get("cnmt");
+                assert!(
+                    cnmt < get("edge_only") * 1.001,
+                    "{}/{}: cnmt {} vs edge {}",
+                    pair.id(),
+                    profile.id(),
+                    cnmt,
+                    get("edge_only")
+                );
+                assert!(
+                    cnmt < get("cloud_only") * 1.001,
+                    "{}/{}: cnmt {} vs cloud {}",
+                    pair.id(),
+                    profile.id(),
+                    cnmt,
+                    get("cloud_only")
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn cnmt_at_least_matches_naive_overall() {
+        // Paper: up to 21% better than Naive; never catastrophically
+        // worse. Aggregate over pairs to avoid per-run noise.
+        let mut cnmt_total = 0.0;
+        let mut naive_total = 0.0;
+        for pair in LangPair::ALL {
+            let table = smoke_table(pair, ConnectionProfile::Cp1);
+            let results = run_all_policies(&table).unwrap();
+            cnmt_total += results.iter().find(|r| r.policy == "cnmt").unwrap().total_s;
+            naive_total += results.iter().find(|r| r.policy == "naive").unwrap().total_s;
+        }
+        assert!(
+            cnmt_total <= naive_total * 1.01,
+            "cnmt {cnmt_total} vs naive {naive_total}"
+        );
+    }
+
+    #[test]
+    fn mixed_routing_happens() {
+        // C-NMT must actually split traffic (otherwise it degenerates to
+        // a static policy and the experiment is vacuous).
+        let table = smoke_table(LangPair::DeEn, ConnectionProfile::Cp2);
+        let r = run_policy(&table, PolicyKind::Cnmt).unwrap();
+        assert!(r.edge_count > 0, "no edge traffic");
+        assert!(r.cloud_count > 0, "no cloud traffic");
+        assert_eq!(r.edge_count + r.cloud_count, r.requests);
+    }
+
+    #[test]
+    fn percentage_helper() {
+        let a = PolicyResult {
+            policy: "a".into(),
+            total_s: 80.0,
+            mean_latency_s: 0.0,
+            edge_count: 0,
+            cloud_count: 0,
+            requests: 0,
+            correct_rate: 0.0,
+        };
+        let b = PolicyResult { total_s: 100.0, policy: "b".into(), ..a.clone() };
+        assert!((a.vs(&b) + 20.0).abs() < 1e-12);
+    }
+}

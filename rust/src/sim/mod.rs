@@ -1,0 +1,17 @@
+//! Discrete-event experiment harness — the machinery behind Table I.
+//!
+//! [`characterize`] reproduces the paper's offline phase: 10k profiled
+//! inferences per device → per-device T_exe planes, plus the prefiltered
+//! corpus fit of the N→M regressor. [`harness`] then replays a request
+//! stream (arrivals spread over the RTT trace timeline) under every
+//! policy **on identical ground truth**: for each request the true edge
+//! time, cloud time and network cost are sampled once, and each policy is
+//! charged from the same table — so policy deltas are never noise.
+
+pub mod characterize;
+pub mod harness;
+
+pub use characterize::{characterize, Characterization};
+pub use harness::{
+    run_all_policies, run_policy, run_with_estimator, PolicyResult, TruthTable,
+};

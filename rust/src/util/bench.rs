@@ -1,0 +1,176 @@
+//! Micro-benchmark harness (criterion is not in the offline crate set).
+//!
+//! Used by every target under `rust/benches/`: warmup, timed iterations
+//! with per-iteration sampling, robust summary (mean/p50/p95/min) and an
+//! aligned report table. Deterministic workloads + enough samples give
+//! run-to-run variation of a few percent, which is all the perf pass
+//! needs to rank bottlenecks (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// One benchmark's summary statistics.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items_per_iter: f64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_s(&self) -> f64 {
+        if self.mean_ns == 0.0 {
+            f64::NAN
+        } else {
+            self.items_per_iter * 1e9 / self.mean_ns
+        }
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BenchConfig {
+    pub warmup_iters: usize,
+    pub samples: usize,
+    /// Iterations batched per sample (for very fast functions).
+    pub iters_per_sample: usize,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig { warmup_iters: 20, samples: 60, iters_per_sample: 1 }
+    }
+}
+
+impl BenchConfig {
+    /// For sub-microsecond functions: batch many iterations per sample.
+    pub fn fast() -> Self {
+        BenchConfig { warmup_iters: 1000, samples: 50, iters_per_sample: 10_000 }
+    }
+
+    /// For expensive (>100 ms) end-to-end runs.
+    pub fn slow() -> Self {
+        BenchConfig { warmup_iters: 1, samples: 8, iters_per_sample: 1 }
+    }
+}
+
+/// Run a benchmark. `f` is called `warmup + samples*iters_per_sample`
+/// times; its return value is passed through `std::hint::black_box` so
+/// the compiler cannot elide the work.
+pub fn bench<T, F: FnMut() -> T>(name: &str, cfg: BenchConfig, mut f: F) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        std::hint::black_box(f());
+    }
+    let mut samples_ns = Vec::with_capacity(cfg.samples);
+    for _ in 0..cfg.samples {
+        let t0 = Instant::now();
+        for _ in 0..cfg.iters_per_sample {
+            std::hint::black_box(f());
+        }
+        let dt = t0.elapsed().as_nanos() as f64 / cfg.iters_per_sample as f64;
+        samples_ns.push(dt);
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    BenchResult {
+        name: name.to_string(),
+        samples: n,
+        mean_ns: samples_ns.iter().sum::<f64>() / n as f64,
+        p50_ns: samples_ns[n / 2],
+        p95_ns: samples_ns[((n as f64 * 0.95) as usize).min(n - 1)],
+        min_ns: samples_ns[0],
+        items_per_iter: 1.0,
+    }
+}
+
+/// Like [`bench`] but records an items/iteration count for throughput.
+pub fn bench_throughput<T, F: FnMut() -> T>(
+    name: &str,
+    cfg: BenchConfig,
+    items_per_iter: f64,
+    f: F,
+) -> BenchResult {
+    let mut r = bench(name, cfg, f);
+    r.items_per_iter = items_per_iter;
+    r
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.0} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Print a criterion-style report table for a group of results.
+pub fn report(group: &str, results: &[BenchResult]) {
+    println!("\n== bench group: {group}");
+    println!(
+        "{:<44} {:>12} {:>12} {:>12} {:>14}",
+        "benchmark", "mean", "p50", "p95", "throughput"
+    );
+    println!("{}", "-".repeat(98));
+    for r in results {
+        let thr = if r.items_per_iter > 1.0 {
+            format!("{:.0}/s", r.throughput_per_s())
+        } else {
+            String::from("-")
+        };
+        println!(
+            "{:<44} {:>12} {:>12} {:>12} {:>14}",
+            r.name,
+            fmt_ns(r.mean_ns),
+            fmt_ns(r.p50_ns),
+            fmt_ns(r.p95_ns),
+            thr
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleeps_roughly() {
+        let r = bench(
+            "sleep100us",
+            BenchConfig { warmup_iters: 1, samples: 10, iters_per_sample: 1 },
+            || std::thread::sleep(std::time::Duration::from_micros(100)),
+        );
+        assert!(r.mean_ns > 80_000.0, "mean {}", r.mean_ns);
+        assert!(r.p50_ns <= r.p95_ns);
+        assert!(r.min_ns <= r.p50_ns);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 1,
+            mean_ns: 1e6, // 1 ms per iter
+            p50_ns: 1e6,
+            p95_ns: 1e6,
+            min_ns: 1e6,
+            items_per_iter: 100.0,
+        };
+        assert!((r.throughput_per_s() - 100_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fmt_ranges() {
+        assert_eq!(fmt_ns(500.0), "500 ns");
+        assert_eq!(fmt_ns(2500.0), "2.50 µs");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(2.5e9), "2.500 s");
+    }
+}

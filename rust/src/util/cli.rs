@@ -1,0 +1,187 @@
+//! Tiny command-line argument parser (no `clap` in the offline crate set).
+//!
+//! Supports the subcommand + `--flag value` / `--flag=value` / boolean
+//! `--flag` style used by the `cnmt` binary and the examples. Unknown
+//! flags are an error (catches typos in experiment sweeps).
+
+use std::collections::BTreeMap;
+
+use crate::{Error, Result};
+
+/// Parsed command line: a positional subcommand list plus flag map.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments (e.g. `["experiment", "table1"]`).
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    /// Flags that were consumed by a typed accessor (for unknown-flag
+    /// detection at the end of parsing).
+    seen: std::cell::RefCell<std::collections::BTreeSet<String>>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw args (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare `--` not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else {
+                    // Lookahead: a value unless next is another flag / end.
+                    match it.peek() {
+                        Some(v) if !v.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            out.flags.insert(name.to_string(), v);
+                        }
+                        _ => {
+                            out.flags.insert(name.to_string(), "true".into());
+                        }
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    fn raw(&self, name: &str) -> Option<&str> {
+        let v = self.flags.get(name).map(|s| s.as_str());
+        if v.is_some() {
+            self.seen.borrow_mut().insert(name.to_string());
+        }
+        v
+    }
+
+    /// String flag with default.
+    pub fn str(&self, name: &str, default: &str) -> String {
+        self.raw(name).unwrap_or(default).to_string()
+    }
+
+    /// Optional string flag.
+    pub fn str_opt(&self, name: &str) -> Option<String> {
+        self.raw(name).map(|s| s.to_string())
+    }
+
+    /// Required string flag.
+    pub fn str_req(&self, name: &str) -> Result<String> {
+        self.raw(name)
+            .map(|s| s.to_string())
+            .ok_or_else(|| Error::Config(format!("missing required --{name}")))
+    }
+
+    /// u64 flag with default.
+    pub fn u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.raw(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{name}: `{v}` is not an integer"))
+            }),
+        }
+    }
+
+    /// usize flag with default.
+    pub fn usize(&self, name: &str, default: usize) -> Result<usize> {
+        Ok(self.u64(name, default as u64)? as usize)
+    }
+
+    /// f64 flag with default.
+    pub fn f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.raw(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| {
+                Error::Config(format!("--{name}: `{v}` is not a number"))
+            }),
+        }
+    }
+
+    /// Boolean flag (present, `=true`, or `=1`).
+    pub fn bool(&self, name: &str) -> bool {
+        matches!(self.raw(name), Some("true") | Some("1"))
+    }
+
+    /// Error if any flag was never consumed by an accessor — call last.
+    pub fn reject_unknown(&self) -> Result<()> {
+        let seen = self.seen.borrow();
+        let unknown: Vec<&String> =
+            self.flags.keys().filter(|k| !seen.contains(*k)).collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(Error::Config(format!("unknown flags: {unknown:?}")))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn positional_and_flags() {
+        let a = parse("experiment table1 --requests 1000 --profile=cp1 --fast");
+        assert_eq!(a.subcommand(), Some("experiment"));
+        assert_eq!(a.positional, vec!["experiment", "table1"]);
+        assert_eq!(a.u64("requests", 0).unwrap(), 1000);
+        assert_eq!(a.str("profile", "x"), "cp1");
+        assert!(a.bool("fast"));
+        assert!(!a.bool("slow"));
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let a = parse("run");
+        assert_eq!(a.str("out", "default.json"), "default.json");
+        assert_eq!(a.f64("ratio", 1.5).unwrap(), 1.5);
+        assert!(a.str_req("model").is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse("x --n abc");
+        assert!(a.u64("n", 0).is_err());
+    }
+
+    #[test]
+    fn equals_form_and_flag_before_flag() {
+        let a = parse("cmd --a --b=2 --c 3");
+        assert!(a.bool("a"));
+        assert_eq!(a.u64("b", 0).unwrap(), 2);
+        assert_eq!(a.u64("c", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn reject_unknown_flags() {
+        let a = parse("cmd --known 1 --typo 2");
+        let _ = a.u64("known", 0);
+        assert!(a.reject_unknown().is_err());
+        let b = parse("cmd --known 1");
+        let _ = b.u64("known", 0);
+        assert!(b.reject_unknown().is_ok());
+    }
+
+    #[test]
+    fn negative_number_as_value() {
+        // `--x -3` : `-3` does not start with `--` so it is a value.
+        let a = parse("cmd --x -3");
+        assert_eq!(a.f64("x", 0.0).unwrap(), -3.0);
+    }
+}

@@ -1,0 +1,17 @@
+//! In-crate utility substrates.
+//!
+//! The offline build environment ships no `serde`, `rand`, or `clap`;
+//! per the project's build-every-substrate rule these live here:
+//!
+//! * [`json`] — RFC 8259 parser + writer (manifest, configs, reports).
+//! * [`rng`] — xoshiro256** + the distributions the simulator needs.
+//! * [`cli`] — subcommand + `--flag` argument parsing.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+
+pub use cli::Args;
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,159 @@
+//! Integration tests across the simulation stack: corpus → prefilter →
+//! characterisation → router → harness → Table-I aggregation. No PJRT
+//! needed; everything runs at smoke scale.
+
+use cnmt::config::Config;
+use cnmt::coordinator::PolicyKind;
+use cnmt::corpus::LangPair;
+use cnmt::devices::{Calibration, DeviceKind};
+use cnmt::experiments::{fig2a, fig3, fig4, table1};
+use cnmt::net::trace::ConnectionProfile;
+use cnmt::sim::{run_all_policies, run_policy, TruthTable};
+
+fn smoke_cfg() -> Config {
+    let mut cfg = Config::smoke();
+    cfg.requests = 4_000;
+    cfg
+}
+
+#[test]
+fn full_table1_grid_has_paper_sign_structure() {
+    let t = table1::run(&smoke_cfg(), &Calibration::default_paper()).unwrap();
+    assert_eq!(t.cells.len(), 6);
+    for c in &t.cells {
+        let (gw, srv, or) = c.vs_baselines("cnmt");
+        // C-NMT never loses to a static mapping (beyond noise), never
+        // beats the Oracle.
+        assert!(gw <= 1.0, "{}/{} gw {gw}", c.pair.id(), c.profile.id());
+        assert!(srv <= 1.0, "{}/{} srv {srv}", c.pair.id(), c.profile.id());
+        assert!(or >= -1e-9, "{}/{} oracle {or}", c.pair.id(), c.profile.id());
+        // And it actually mixes devices somewhere in the grid.
+    }
+    let any_mixed = t.cells.iter().any(|c| {
+        let r = c.get("cnmt");
+        r.edge_count > 0 && r.cloud_count > 0
+    });
+    assert!(any_mixed, "C-NMT degenerated to a static mapping everywhere");
+
+    // Headlines in the paper's ballpark ("up to 44%" / "up to 21%"):
+    // generous bands, the point is order-of-magnitude agreement.
+    let h1 = t.headline_vs_static();
+    assert!((15.0..70.0).contains(&h1), "vs-static headline {h1}");
+    let h2 = t.headline_vs_naive();
+    assert!(h2 > 0.0, "C-NMT never beats Naive: {h2}");
+}
+
+#[test]
+fn slower_profile_shifts_traffic_to_edge() {
+    // Paper: "the benefit of C-NMT w.r.t. a cloud based approach is
+    // larger with CP1, which is slower on average" — mechanically, a
+    // slower network must push C-NMT's mix toward the edge.
+    let cfg = smoke_cfg();
+    let cal = Calibration::default_paper();
+    for pair in LangPair::ALL {
+        let t1 = TruthTable::build(&cfg, pair, ConnectionProfile::Cp1, &cal).unwrap();
+        let t2 = TruthTable::build(&cfg, pair, ConnectionProfile::Cp2, &cal).unwrap();
+        let r1 = run_policy(&t1, PolicyKind::Cnmt).unwrap();
+        let r2 = run_policy(&t2, PolicyKind::Cnmt).unwrap();
+        let edge_frac_1 = r1.edge_count as f64 / r1.requests as f64;
+        let edge_frac_2 = r2.edge_count as f64 / r2.requests as f64;
+        assert!(
+            edge_frac_1 >= edge_frac_2 - 0.02,
+            "{}: edge fraction cp1 {edge_frac_1} < cp2 {edge_frac_2}",
+            pair.id()
+        );
+    }
+}
+
+#[test]
+fn transformer_pays_most_for_unknown_m() {
+    // Paper: overhead vs Oracle is larger for EN-ZH (decode-dominated
+    // transformer leans hardest on the N→M estimate).
+    let cfg = smoke_cfg();
+    let cal = Calibration::default_paper();
+    let over = |pair: LangPair| -> f64 {
+        let mut worst: f64 = 0.0;
+        for profile in ConnectionProfile::ALL {
+            let t = TruthTable::build(&cfg, pair, profile, &cal).unwrap();
+            let rs = run_all_policies(&t).unwrap();
+            let oracle = rs.iter().find(|r| r.policy == "oracle").unwrap().total_s;
+            let cnmt = rs.iter().find(|r| r.policy == "cnmt").unwrap().total_s;
+            worst = worst.max((cnmt - oracle) / oracle * 100.0);
+        }
+        worst
+    };
+    let zh = over(LangPair::EnZh);
+    let fr = over(LangPair::FrEn);
+    assert!(
+        zh > fr * 0.8,
+        "transformer overhead {zh}% not the largest (fr {fr}%)"
+    );
+}
+
+#[test]
+fn oracle_correctness_and_counts_consistent() {
+    let cfg = smoke_cfg();
+    let cal = Calibration::default_paper();
+    let t = TruthTable::build(&cfg, LangPair::DeEn, ConnectionProfile::Cp2, &cal).unwrap();
+    for r in run_all_policies(&t).unwrap() {
+        assert_eq!(r.edge_count + r.cloud_count, r.requests);
+        assert_eq!(r.requests, cfg.requests);
+        assert!(r.total_s > 0.0);
+        assert!((0.0..=1.0).contains(&r.correct_rate));
+        if r.policy == "oracle" {
+            assert!((r.correct_rate - 1.0).abs() < 1e-12);
+        }
+    }
+}
+
+#[test]
+fn fig_drivers_produce_reports() {
+    let cal = Calibration::default_paper();
+    let f2 = fig2a::run(LangPair::EnZh, &cal, 2_000, 1).unwrap();
+    assert_eq!(f2.series.len(), 2);
+    let f3 = fig3::run(5_000, 1).unwrap();
+    assert_eq!(f3.panels.len(), 3);
+    let f4 = fig4::run(1).unwrap();
+    assert_eq!(f4.stats.len(), 2);
+    // JSON outputs parse back.
+    for j in [fig2a::to_json(&f2), fig3::to_json(&f3), fig4::to_json(&f4)] {
+        let text = j.to_string_pretty();
+        cnmt::util::Json::parse(&text).unwrap();
+    }
+}
+
+#[test]
+fn measured_calibration_roundtrips_through_harness() {
+    // A calibration written to disk and reloaded must drive the harness
+    // identically (config --calibration path).
+    let cal = Calibration::default_paper();
+    let dir = std::env::temp_dir().join("cnmt_integration_cal");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cal.json");
+    cal.save(&path).unwrap();
+    let loaded = Calibration::load(&path).unwrap();
+    let cfg = smoke_cfg();
+    let a = TruthTable::build(&cfg, LangPair::FrEn, ConnectionProfile::Cp1, &cal).unwrap();
+    let b = TruthTable::build(&cfg, LangPair::FrEn, ConnectionProfile::Cp1, &loaded).unwrap();
+    for (x, y) in a.requests.iter().zip(&b.requests) {
+        assert!((x.t_edge - y.t_edge).abs() < 1e-15);
+        assert!((x.t_cloud - y.t_cloud).abs() < 1e-15);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn devices_honour_calibration_orderings() {
+    let cal = Calibration::default_paper();
+    for pair in LangPair::ALL {
+        let model = pair.model_name();
+        let mut e = cal.build_device(DeviceKind::Edge, 1).unwrap();
+        let mut c = cal.build_device(DeviceKind::Cloud, 1).unwrap();
+        // Execution time grows with m on both devices (statistically).
+        let avg = |dev: &mut cnmt::devices::SimDevice, n: usize, m: usize| {
+            (0..200).map(|_| dev.exec_time(model, n, m).unwrap()).sum::<f64>() / 200.0
+        };
+        assert!(avg(&mut e, 10, 40) > avg(&mut e, 10, 5));
+        assert!(avg(&mut c, 10, 40) > avg(&mut c, 10, 5));
+    }
+}

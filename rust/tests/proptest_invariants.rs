@@ -1,0 +1,295 @@
+//! Property-based tests (hand-rolled: the offline crate set has no
+//! proptest, so properties are checked over seeded random sweeps — many
+//! trials per property, deterministic across runs).
+
+use cnmt::config::Config;
+use cnmt::coordinator::{PolicyKind, RouterBuilder};
+use cnmt::corpus::{prefilter, CorpusGenerator, LangPair, PrefilterRules};
+use cnmt::devices::{Calibration, DeviceKind};
+use cnmt::metrics::{Histogram, OnlineStats};
+use cnmt::net::trace::{ConnectionProfile, TraceGenerator};
+use cnmt::predictor::fit::{fit_line, fit_plane};
+use cnmt::predictor::{N2mRegressor, TexeModel};
+use cnmt::sim::{run_all_policies, TruthTable};
+use cnmt::util::{Json, Rng};
+
+const TRIALS: usize = 60;
+
+#[test]
+fn prop_ols_line_recovers_planted_coefficients() {
+    let mut rng = Rng::new(0x11);
+    for trial in 0..TRIALS {
+        let slope = rng.uniform(-5.0, 5.0);
+        let intercept = rng.uniform(-10.0, 10.0);
+        let noise = rng.uniform(0.0, 0.2);
+        let pts: Vec<(f64, f64)> = (0..500)
+            .map(|_| {
+                let x = rng.uniform(0.0, 50.0);
+                (x, slope * x + intercept + rng.normal_ms(0.0, noise))
+            })
+            .collect();
+        let f = fit_line(&pts).unwrap();
+        assert!(
+            (f.slope - slope).abs() < 0.05 + noise,
+            "trial {trial}: slope {} vs {slope}",
+            f.slope
+        );
+        assert!(
+            (f.intercept - intercept).abs() < 0.5 + 3.0 * noise,
+            "trial {trial}: intercept {} vs {intercept}",
+            f.intercept
+        );
+    }
+}
+
+#[test]
+fn prop_ols_plane_recovers_planted_coefficients() {
+    let mut rng = Rng::new(0x22);
+    for trial in 0..TRIALS {
+        let (a, b) = (rng.uniform(0.0, 0.01), rng.uniform(0.0, 0.02));
+        let c = rng.uniform(0.0, 0.1);
+        let pts: Vec<(f64, f64, f64)> = (0..800)
+            .map(|_| {
+                let x = rng.uniform(1.0, 64.0);
+                let y = rng.uniform(1.0, 64.0);
+                (x, y, a * x + b * y + c + rng.normal_ms(0.0, 1e-3))
+            })
+            .collect();
+        let f = fit_plane(&pts).unwrap();
+        assert!((f.a - a).abs() < 5e-4, "trial {trial}: a {} vs {a}", f.a);
+        assert!((f.b - b).abs() < 5e-4, "trial {trial}: b {} vs {b}", f.b);
+        assert!((f.c - c).abs() < 2e-2, "trial {trial}: c {} vs {c}", f.c);
+    }
+}
+
+#[test]
+fn prop_router_decision_matches_eq1_exactly() {
+    // For random model coefficients and RTTs, the router's choice must
+    // equal a direct evaluation of paper eq. 1 + eq. 2.
+    let mut rng = Rng::new(0x33);
+    for trial in 0..TRIALS * 4 {
+        let te = TexeModel::from_coeffs(
+            rng.uniform(0.0, 5e-3),
+            rng.uniform(0.0, 10e-3),
+            rng.uniform(0.0, 30e-3),
+        );
+        let tc = TexeModel::from_coeffs(
+            rng.uniform(0.0, 1e-3),
+            rng.uniform(0.0, 2e-3),
+            rng.uniform(0.0, 40e-3),
+        );
+        let n2m = N2mRegressor::from_coeffs(rng.uniform(0.4, 1.2), rng.uniform(0.0, 2.0));
+        let rtt = rng.uniform(0.0, 0.3);
+        let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+            .texe(te, tc)
+            .n2m(n2m)
+            .ttx(1.0, rtt) // alpha 1 => estimate == last observation
+            .build()
+            .unwrap();
+        router.observe_ttx(0.0, rtt);
+        let n = 1 + rng.usize(61);
+        let d = router.decide(n);
+        let m_est = n2m.predict(n);
+        let want_edge = te.estimate(n, m_est) <= rtt + tc.estimate(n, m_est);
+        assert_eq!(
+            d.device == DeviceKind::Edge,
+            want_edge,
+            "trial {trial}: n={n} {d:?}"
+        );
+    }
+}
+
+#[test]
+fn prop_edge_region_grows_with_rtt() {
+    // If C-NMT keeps a request at the edge under some RTT, it must also
+    // keep it at the edge under any larger RTT (monotone boundary).
+    let mut rng = Rng::new(0x44);
+    for trial in 0..TRIALS {
+        let te = TexeModel::from_coeffs(2e-3, 5e-3, rng.uniform(0.0, 20e-3));
+        let tc = TexeModel::from_coeffs(0.3e-3, 0.8e-3, rng.uniform(0.0, 40e-3));
+        let n2m = N2mRegressor::from_coeffs(0.8, 0.5);
+        let n = 1 + rng.usize(61);
+        let mut prev_edge = false;
+        for step in 0..20 {
+            let rtt = step as f64 * 0.02;
+            let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+                .texe(te, tc)
+                .n2m(n2m)
+                .ttx(1.0, rtt)
+                .build()
+                .unwrap();
+            router.observe_ttx(0.0, rtt);
+            let edge = router.decide(n).device == DeviceKind::Edge;
+            assert!(
+                edge || !prev_edge,
+                "trial {trial}: edge region shrank with rising RTT at n={n}"
+            );
+            prev_edge = edge;
+        }
+    }
+}
+
+#[test]
+fn prop_prefilter_sound_and_complete_bookkeeping() {
+    let mut rng = Rng::new(0x55);
+    for trial in 0..TRIALS {
+        let pair = *rng.choice(&LangPair::ALL);
+        let mut gen = CorpusGenerator::new(pair, trial as u64);
+        let pairs = gen.take(2_000);
+        let rules = PrefilterRules::default();
+        let (kept, stats) = prefilter(&pairs, &rules);
+        assert_eq!(stats.total, pairs.len());
+        assert_eq!(stats.kept + stats.dropped_len + stats.dropped_ratio, stats.total);
+        assert_eq!(kept.len(), stats.kept);
+        // Soundness: every kept pair satisfies the length rules.
+        for p in &kept {
+            assert!(p.n() >= rules.min_len && p.n() <= rules.max_len);
+            assert!(p.m_real >= rules.min_len && p.m_real <= rules.max_len);
+        }
+        // Kept is a subsequence of the input.
+        let mut it = pairs.iter();
+        for k in &kept {
+            assert!(it.any(|p| p == k), "kept pair not found in order");
+        }
+    }
+}
+
+#[test]
+fn prop_trace_replay_values_come_from_trace() {
+    let mut rng = Rng::new(0x66);
+    for _ in 0..TRIALS {
+        let profile = *rng.choice(&ConnectionProfile::ALL);
+        let trace = TraceGenerator::new(rng.next_u64()).profile(profile);
+        for _ in 0..50 {
+            let t = rng.uniform(0.0, 3.0 * trace.duration());
+            let v = trace.rtt_at(t);
+            assert!(trace.rtt.iter().any(|&r| (r - v).abs() < 1e-12));
+            assert!(v > 0.0);
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_monotone_and_bounded() {
+    let mut rng = Rng::new(0x77);
+    for _ in 0..TRIALS {
+        let mut h = Histogram::latency();
+        let mut max_v: f64 = 0.0;
+        for _ in 0..500 {
+            let v = rng.lognormal(-4.0, 1.5);
+            max_v = max_v.max(v);
+            h.record(v);
+        }
+        let mut prev = 0.0;
+        for q in [0.1, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            assert!(x >= prev, "quantile not monotone at {q}");
+            prev = x;
+        }
+        // p100 within one bucket of the true max.
+        assert!(h.quantile(1.0) >= max_v * 0.95);
+    }
+}
+
+#[test]
+fn prop_online_stats_merge_equals_concat() {
+    let mut rng = Rng::new(0x88);
+    for _ in 0..TRIALS {
+        let n = 10 + rng.usize(500);
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal_ms(5.0, 3.0)).collect();
+        let cut = rng.usize(n);
+        let mut a = OnlineStats::new();
+        let mut b = OnlineStats::new();
+        let mut whole = OnlineStats::new();
+        for (i, &x) in xs.iter().enumerate() {
+            if i < cut { a.push(x) } else { b.push(x) }
+            whole.push(x);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.variance() - whole.variance()).abs() < 1e-7);
+    }
+}
+
+#[test]
+fn prop_json_roundtrip_random_trees() {
+    let mut rng = Rng::new(0x99);
+    fn gen(rng: &mut Rng, depth: usize) -> Json {
+        match if depth == 0 { rng.usize(4) } else { rng.usize(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.bool(0.5)),
+            2 => Json::Num((rng.normal_ms(0.0, 1e6) * 100.0).round() / 100.0),
+            3 => {
+                let n = rng.usize(12);
+                Json::Str((0..n).map(|_| *rng.choice(&['a', 'é', '"', '\\', '\n', '😀', 'z'])).collect())
+            }
+            4 => Json::Array((0..rng.usize(5)).map(|_| gen(rng, depth - 1)).collect()),
+            _ => {
+                let mut o = Json::object();
+                for i in 0..rng.usize(5) {
+                    o.set(&format!("k{i}"), gen(rng, depth - 1));
+                }
+                o
+            }
+        }
+    }
+    for _ in 0..TRIALS * 3 {
+        let v = gen(&mut rng, 3);
+        let compact = Json::parse(&v.to_string()).unwrap();
+        let pretty = Json::parse(&v.to_string_pretty()).unwrap();
+        assert_eq!(compact, v);
+        assert_eq!(pretty, v);
+    }
+}
+
+#[test]
+fn prop_oracle_dominates_across_random_configs() {
+    // The Oracle invariant under randomised scale parameters — the load-
+    // bearing property of the whole evaluation.
+    let mut rng = Rng::new(0xAA);
+    for trial in 0..8 {
+        let mut cfg = Config::smoke();
+        cfg.requests = 800;
+        cfg.fit_inferences = 400;
+        cfg.eval_pool = 800;
+        cfg.seed = rng.next_u64();
+        cfg.mean_interarrival_s = rng.uniform(0.05, 1.0);
+        let pair = *rng.choice(&LangPair::ALL);
+        let profile = *rng.choice(&ConnectionProfile::ALL);
+        let table =
+            TruthTable::build(&cfg, pair, profile, &Calibration::default_paper())
+                .unwrap();
+        let results = run_all_policies(&table).unwrap();
+        let oracle = results.iter().find(|r| r.policy == "oracle").unwrap();
+        for r in &results {
+            assert!(
+                oracle.total_s <= r.total_s + 1e-9,
+                "trial {trial} {}/{}: oracle beaten by {}",
+                pair.id(),
+                profile.id(),
+                r.policy
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_texe_estimates_nonnegative_and_monotone_in_m() {
+    let mut rng = Rng::new(0xBB);
+    for _ in 0..TRIALS {
+        let t = TexeModel::from_coeffs(
+            rng.uniform(-1e-4, 5e-3),
+            rng.uniform(0.0, 10e-3),
+            rng.uniform(-5e-3, 30e-3),
+        );
+        let n = 1 + rng.usize(61);
+        let mut prev = 0.0;
+        for m in 0..64 {
+            let est = t.estimate(n, m as f64);
+            assert!(est >= 0.0);
+            assert!(est + 1e-12 >= prev, "not monotone in m");
+            prev = est;
+        }
+    }
+}
