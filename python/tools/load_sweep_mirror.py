@@ -1,0 +1,589 @@
+#!/usr/bin/env python3
+"""Standalone mirror of `cnmt experiment load` (rust/src/experiments/load.rs).
+
+Why this exists: the load-sweep report checked in under `reports/` must be
+regenerable in environments that have no rust toolchain (and the sweep's
+dynamics need a second, independent implementation to validate against).
+This script re-implements, operation for operation, exactly what the rust
+driver does:
+
+  * `util::rng::Rng`            — xoshiro256** + splitmix64 seeding, the
+                                  exponential / Box-Muller draws (with the
+                                  cached spare normal);
+  * `experiments::load`         — the synthetic workload constants and
+                                  draw order;
+  * `metrics::histogram`        — the geometric-bucket quantiles;
+  * `scheduler::*`              — admission queue, capacity tracker,
+                                  length-bucketed batcher (bounded
+                                  lookahead), two-lane dispatcher;
+  * `coordinator::router`       — eq. 1 with the expected-wait terms and
+                                  the EWMA T_tx estimator + heartbeat;
+  * `sim::harness::run_contended` and the report JSON layout (BTreeMap
+                                  key order, rust f64 `Display` number
+                                  formatting).
+
+Keep this file in lockstep with the rust sources. When both toolchains are
+available, `cnmt experiment load --out reports` and this script must agree
+(bit-for-bit up to libm rounding).
+
+Usage:
+    python3 python/tools/load_sweep_mirror.py [--out reports/load_sweep.json]
+"""
+
+import argparse
+import math
+import os
+
+MASK = (1 << 64) - 1
+
+# ---------------------------------------------------------------- rng (util::rng)
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via splitmix64 (mirror of util::rng::Rng)."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare_normal = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def exponential(self, lam):
+        while True:
+            u = self.f64()
+            if u > 1e-300:
+                break
+        return -math.log(u) / lam
+
+    def normal(self):
+        if self.spare_normal is not None:
+            z, self.spare_normal = self.spare_normal, None
+            return z
+        while True:
+            u1 = self.f64()
+            if u1 > 1e-300:
+                break
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        a = 2.0 * math.pi * u2
+        self.spare_normal = r * math.sin(a)
+        return r * math.cos(a)
+
+    def normal_ms(self, mean, std):
+        return mean + std * self.normal()
+
+
+# ---------------------------------------------------------------- histogram (metrics)
+
+
+def _powi(base, exp):
+    """compiler-rt __powidf2: square-and-multiply, matching f64::powi."""
+    recip = exp < 0
+    if recip:
+        exp = -exp
+    r = 1.0
+    a = base
+    b = exp
+    while True:
+        if b & 1:
+            r *= a
+        b //= 2
+        if b == 0:
+            break
+        a *= a
+    return 1.0 / r if recip else r
+
+
+class Histogram:
+    """Mirror of metrics::Histogram::latency() (1e-6..1e3, 100/decade)."""
+
+    def __init__(self, floor=1e-6, ceil=1e3, per_decade=100):
+        self.floor = floor
+        self.growth = math.pow(10.0, 1.0 / per_decade)
+        self.ln_growth = math.log(self.growth)
+        n = int(math.ceil(math.log(ceil / floor) / self.ln_growth)) + 1
+        self.counts = [0] * n
+        self.total = 0
+        self.underflow = 0
+        self.sum = 0.0
+
+    def record(self, x):
+        self.total += 1
+        self.sum += x
+        if x < self.floor:
+            self.underflow += 1
+            return
+        idx = int(math.log(x / self.floor) / self.ln_growth)
+        self.counts[min(idx, len(self.counts) - 1)] += 1
+
+    def quantile(self, q):
+        if self.total == 0:
+            return float("nan")
+        target = math.ceil(min(max(q, 0.0), 1.0) * self.total)
+        seen = self.underflow
+        if seen >= target and self.underflow > 0:
+            return self.floor
+        for i, c in enumerate(self.counts):
+            seen += c
+            if seen >= target:
+                return self.floor * _powi(self.growth, i + 1)
+        return self.floor * _powi(self.growth, len(self.counts))
+
+
+# ---------------------------------------------------------------- predictor
+
+
+def texe_estimate(plane, n, m):
+    an, am, b = plane
+    return max(an * n + am * m + b, 0.0)
+
+
+def n2m_predict(gamma, delta, n):
+    return max(gamma * n + delta, 1.0)
+
+
+class TtxEstimator:
+    """Mirror of predictor::ttx::TtxEstimator."""
+
+    def __init__(self, alpha):
+        self.alpha = alpha
+        self.estimate = None
+        self.last_obs_time = float("-inf")
+        self.count = 0
+
+    def observe(self, now_s, rtt_s):
+        rtt_s = max(rtt_s, 0.0)
+        if self.estimate is None:
+            self.estimate = rtt_s
+        else:
+            self.estimate = self.estimate + self.alpha * (rtt_s - self.estimate)
+        self.last_obs_time = now_s
+        self.count += 1
+
+    def estimate_or(self, fallback):
+        return fallback if self.estimate is None else self.estimate
+
+    def is_stale(self, now_s, max_age_s):
+        return self.count == 0 or now_s - self.last_obs_time > max_age_s
+
+
+# ---------------------------------------------------------------- workload (experiments::load)
+
+EDGE_PLANE = (1.2e-3, 3.0e-3, 6.0e-3)
+CLOUD_PLANE = (0.22e-3, 0.55e-3, 26.0e-3)
+N2M_GAMMA = 0.95
+N2M_DELTA = 0.8
+RTT_S = 0.042
+MEAN_N = 17.0
+M_NOISE_STD = 2.0
+EXEC_NOISE_STD = 0.05
+N_MAX = 62
+
+
+def _round_half_away(x):
+    """f64::round (half away from zero); python round() is banker's."""
+    return math.floor(x + 0.5) if x >= 0.0 else math.ceil(x - 0.5)
+
+
+class RequestTruth:
+    __slots__ = ("n", "m_real", "arrival_s", "t_edge", "t_cloud", "t_tx", "rtt")
+
+    def __init__(self, n, m_real, arrival_s, t_edge, t_cloud, t_tx, rtt):
+        self.n = n
+        self.m_real = m_real
+        self.arrival_s = arrival_s
+        self.t_edge = t_edge
+        self.t_cloud = t_cloud
+        self.t_tx = t_tx
+        self.rtt = rtt
+
+
+def synth_workload(seed, count, offered_rps):
+    rng = Rng(seed)
+    requests = []
+    t = 0.0
+    sum_m = 0.0
+    for _ in range(count):
+        t += rng.exponential(offered_rps)
+        n = 1 + min(int(rng.exponential(1.0 / MEAN_N)), N_MAX - 1)
+        m_mean = N2M_GAMMA * n + N2M_DELTA
+        m = _round_half_away(m_mean + rng.normal_ms(0.0, M_NOISE_STD))
+        m = int(min(max(m, 1.0), float(N_MAX)))
+        noise_e = max(1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD), 0.2)
+        noise_c = max(1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD), 0.2)
+        requests.append(
+            RequestTruth(
+                n,
+                m,
+                t,
+                texe_estimate(EDGE_PLANE, n, m) * noise_e,
+                texe_estimate(CLOUD_PLANE, n, m) * noise_c,
+                RTT_S,
+                RTT_S,
+            )
+        )
+        sum_m += m
+    mean_m = sum_m / max(count, 1)
+    return requests, mean_m
+
+
+# ---------------------------------------------------------------- scheduler
+
+EDGE, CLOUD = 0, 1
+BUCKET_WIDTH = 8.0
+MAX_BATCH = 8
+LOOKAHEAD = 32
+MAX_QUEUE_DEPTH = 512
+EDGE_WORKERS = 1
+CLOUD_WORKERS = 4
+BATCH_RESIDUAL = 0.15
+TTX_REFRESH_S = 60.0
+
+
+class Lane:
+    def __init__(self, workers):
+        self.items = []  # of (id, payload, n, m_est, est_service_s, arrival_s, bucket)
+        self.free_at = [0.0] * workers
+        self.backlog_est_s = 0.0
+        self.offered = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.peak_depth = 0
+
+    def offer(self, rq):
+        self.offered += 1
+        if len(self.items) >= MAX_QUEUE_DEPTH:
+            self.rejected += 1
+            return False
+        self.items.append(rq)
+        self.admitted += 1
+        self.peak_depth = max(self.peak_depth, len(self.items))
+        self.backlog_est_s += max(rq[4], 0.0)
+        return True
+
+    def earliest_free(self):
+        best_i, best_t = 0, self.free_at[0]
+        for i in range(1, len(self.free_at)):
+            if self.free_at[i] < best_t:
+                best_i, best_t = i, self.free_at[i]
+        return best_i, best_t
+
+    def expected_wait_s(self, now_s):
+        inflight = 0.0
+        for t in self.free_at:
+            if t > now_s:
+                inflight += t - now_s
+        return (inflight + self.backlog_est_s) / len(self.free_at)
+
+
+def form_batch(lane, start_s):
+    items = lane.items
+    head = items.pop(0)
+    bucket = head[6]
+    batch = [head]
+    i = 0
+    scanned = 0
+    while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
+        if i >= len(items):
+            break
+        rq = items[i]
+        if rq[6] == bucket and rq[5] <= start_s:
+            batch.append(rq)
+            del items[i]
+        else:
+            i += 1
+        scanned += 1
+    return batch
+
+
+def drain_lane(lane, device, horizon_s, requests, record, batch_stats):
+    while lane.items:
+        head_arrival = lane.items[0][5]
+        worker, free_s = lane.earliest_free()
+        start_s = max(free_s, head_arrival)
+        if start_s > horizon_s:
+            return
+        batch = form_batch(lane, start_s)
+        est_sum = 0.0
+        mx = 0.0
+        sm = 0.0
+        for rq in batch:
+            est_sum += rq[4]
+            truth = requests[rq[1]]
+            t = truth.t_edge if device == EDGE else truth.t_cloud
+            if t > mx:
+                mx = t
+            sm += t
+        service_s = max(mx + (sm - mx) * BATCH_RESIDUAL, 0.0)
+        done_s = start_s + service_s
+        lane.backlog_est_s = max(lane.backlog_est_s - est_sum, 0.0)
+        lane.free_at[worker] = done_s
+        batch_stats[0] += 1
+        batch_stats[1] += len(batch)
+        for rq in batch:
+            record(rq, device, done_s)
+
+
+# ---------------------------------------------------------------- router + run_contended
+
+EDGE_ONLY, CLOUD_ONLY, CNMT = "edge_only", "cloud_only", "cnmt"
+
+
+def run_contended(requests, mean_m, policy, queue_aware):
+    ttx = TtxEstimator(0.3)
+    ttx_prior = 0.05
+    lanes = [Lane(EDGE_WORKERS), Lane(CLOUD_WORKERS)]
+    hist = Histogram()
+    # OnlineStats mean via Welford, as in metrics::stats.
+    stats_count = 0
+    stats_mean = 0.0
+    counts = [0, 0]
+    completed = [0]
+    last_done = [0.0]
+    batch_stats = [0, 0]
+
+    def record(rq, device, done_s):
+        nonlocal stats_count, stats_mean
+        truth = requests[rq[1]]
+        tx_s = truth.t_tx if device == CLOUD else 0.0
+        latency = (done_s - rq[5]) + tx_s
+        hist.record(latency)
+        stats_count += 1
+        stats_mean += (latency - stats_mean) / stats_count
+        counts[device] += 1
+        completed[0] += 1
+        if done_s + tx_s > last_done[0]:
+            last_done[0] = done_s + tx_s
+
+    rejected = 0
+    for i, truth in enumerate(requests):
+        now = truth.arrival_s
+        for d in (EDGE, CLOUD):
+            drain_lane(lanes[d], d, now, requests, record, batch_stats)
+        if ttx.is_stale(now, TTX_REFRESH_S):
+            ttx.observe(now, truth.rtt)
+        if queue_aware:
+            edge_wait = lanes[EDGE].expected_wait_s(now)
+            cloud_wait = lanes[CLOUD].expected_wait_s(now)
+        else:
+            edge_wait = cloud_wait = 0.0
+        ttx_est = ttx.estimate_or(ttx_prior)
+        if policy == EDGE_ONLY:
+            device = EDGE
+        elif policy == CLOUD_ONLY:
+            device = CLOUD
+        else:
+            m_est_r = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
+            t_e = texe_estimate(EDGE_PLANE, truth.n, m_est_r)
+            t_c = texe_estimate(CLOUD_PLANE, truth.n, m_est_r)
+            device = EDGE if t_e + edge_wait <= ttx_est + t_c + cloud_wait else CLOUD
+        if device == CLOUD:
+            ttx.observe(now, truth.rtt)
+        m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
+        plane = EDGE_PLANE if device == EDGE else CLOUD_PLANE
+        est_service = texe_estimate(plane, truth.n, m_est)
+        bucket = int(max(m_est, 0.0) / BUCKET_WIDTH)
+        rq = (i, i, truth.n, m_est, est_service, now, bucket)
+        if not lanes[device].offer(rq):
+            rejected += 1
+    for d in (EDGE, CLOUD):
+        drain_lane(lanes[d], d, float("inf"), requests, record, batch_stats)
+
+    first_arrival = requests[0].arrival_s if requests else 0.0
+    makespan = max(last_done[0] - first_arrival, 0.0)
+    mean_batch = (
+        batch_stats[1] / batch_stats[0] if batch_stats[0] else float("nan")
+    )
+    return {
+        "policy": policy + ("+queue" if queue_aware else ""),
+        "queue_aware": queue_aware,
+        "offered": float(len(requests)),
+        "completed": float(completed[0]),
+        "rejected": float(rejected),
+        "shed_rate": (rejected / len(requests)) if requests else 0.0,
+        "edge_count": float(counts[EDGE]),
+        "cloud_count": float(counts[CLOUD]),
+        "makespan_s": makespan,
+        "throughput_rps": completed[0] / makespan if makespan > 0.0 else 0.0,
+        "mean_latency_s": stats_mean if stats_count else float("nan"),
+        "p50_s": hist.quantile(0.50),
+        "p95_s": hist.quantile(0.95),
+        "p99_s": hist.quantile(0.99),
+        "mean_batch": mean_batch,
+        "edge_peak_depth": float(lanes[EDGE].peak_depth),
+        "cloud_peak_depth": float(lanes[CLOUD].peak_depth),
+    }
+
+
+# ---------------------------------------------------------------- sweep + json
+
+SEED = 20220315
+REQUESTS_PER_POINT = 20000
+LOADS_RPS = [4.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0]
+CONFIGURATIONS = [
+    (EDGE_ONLY, False),
+    (CLOUD_ONLY, False),
+    (CNMT, False),
+    (CNMT, True),
+]
+
+
+def run_sweep(loads_rps=None, requests_per_point=None):
+    loads_rps = LOADS_RPS if loads_rps is None else loads_rps
+    requests_per_point = (
+        REQUESTS_PER_POINT if requests_per_point is None else requests_per_point
+    )
+    points = []
+    for i, load in enumerate(loads_rps):
+        seed = SEED ^ (((i + 1) * 0x9E3779B97F4A7C15) & MASK)
+        requests, mean_m = synth_workload(seed, requests_per_point, load)
+        policies = {}
+        for policy, aware in CONFIGURATIONS:
+            r = run_contended(requests, mean_m, policy, aware)
+            policies[r["policy"]] = r
+        points.append({"offered_rps": load, "policies": policies})
+    return points
+
+
+def fmt_num(x):
+    """Mirror util::json::write_num (rust f64 Display: no exponent)."""
+    if isinstance(x, bool):
+        return "true" if x else "false"
+    if math.isnan(x) or math.isinf(x):
+        return "null"
+    if x == math.floor(x) and abs(x) < 9.0e15:
+        return str(int(x))
+    s = repr(float(x))
+    if "e" not in s and "E" not in s:
+        return s
+    # Expand exponent notation the way rust's `{}` prints positionally.
+    mant, exp = s.split("e")
+    exp = int(exp)
+    neg = mant.startswith("-")
+    if neg:
+        mant = mant[1:]
+    if "." in mant:
+        intpart, frac = mant.split(".")
+    else:
+        intpart, frac = mant, ""
+    digits = intpart + frac
+    point = len(intpart) + exp
+    if point <= 0:
+        out = "0." + "0" * (-point) + digits
+    elif point >= len(digits):
+        out = digits + "0" * (point - len(digits))
+    else:
+        out = digits[:point] + "." + digits[point:]
+    return ("-" if neg else "") + out
+
+
+def to_json_value(v, indent, depth):
+    pad = " " * (indent * (depth + 1))
+    close_pad = " " * (indent * depth)
+    if isinstance(v, dict):
+        if not v:
+            return "{}"
+        parts = []
+        for k in sorted(v.keys()):  # BTreeMap order
+            parts.append(f'{pad}"{k}": ' + to_json_value(v[k], indent, depth + 1))
+        return "{\n" + ",\n".join(parts) + "\n" + close_pad + "}"
+    if isinstance(v, list):
+        if not v:
+            return "[]"
+        parts = [pad + to_json_value(x, indent, depth + 1) for x in v]
+        return "[\n" + ",\n".join(parts) + "\n" + close_pad + "]"
+    if isinstance(v, str):
+        return '"' + v + '"'
+    return fmt_num(v)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="reports/load_sweep.json")
+    ap.add_argument(
+        "--loads",
+        default=None,
+        help="comma-separated offered loads in r/s (mirrors cnmt --loads)",
+    )
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=REQUESTS_PER_POINT,
+        help="requests per sweep point (mirrors cnmt --load-requests)",
+    )
+    args = ap.parse_args()
+    loads = (
+        [float(s) for s in args.loads.split(",")] if args.loads else LOADS_RPS
+    )
+
+    points = run_sweep(loads, args.requests)
+    last = points[-1]["policies"]
+    headline = last["cnmt"]["p99_s"] / last["cnmt+queue"]["p99_s"]
+
+    root = {
+        "workload": {
+            "edge_plane": list(EDGE_PLANE),
+            "cloud_plane": list(CLOUD_PLANE),
+            "n2m_gamma": N2M_GAMMA,
+            "n2m_delta": N2M_DELTA,
+            "rtt_s": RTT_S,
+            "mean_n": MEAN_N,
+        },
+        "seed": float(SEED),
+        "requests_per_point": float(args.requests),
+        "points": points,
+        "headline_p99_ratio": headline,
+    }
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write(to_json_value(root, 2, 0))
+    print(f"wrote {args.out}")
+
+    # Human-readable summary (matches load::render_text's columns).
+    hdr = f"{'load':>6} {'policy':<12} {'goodput':>8} {'shed%':>6} {'p50ms':>8} {'p99ms':>9} {'batch':>6}"
+    print(hdr)
+    print("-" * len(hdr))
+    for p in points:
+        for name in ("edge_only", "cloud_only", "cnmt", "cnmt+queue"):
+            r = p["policies"][name]
+            print(
+                f"{p['offered_rps']:>6.0f} {name:<12} {r['throughput_rps']:>8.1f} "
+                f"{r['shed_rate'] * 100:>6.1f} {r['p50_s'] * 1e3:>8.1f} "
+                f"{r['p99_s'] * 1e3:>9.1f} {r['mean_batch']:>6.2f}"
+            )
+    print(f"\nheadline: blind/aware p99 ratio at max load = {headline:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,161 @@
+//! Scheduler hot-path bench: enqueue → decide → dispatch, no execution.
+//!
+//! The routing decision was already sub-microsecond (bench_decision);
+//! queue-awareness must keep it that way. This bench measures
+//!
+//! * the queue-aware decision (`decide_loaded` + two `expected_wait_s`),
+//! * the full per-request cycle (wait query → decide → submit →
+//!   dispatch via `run_until` with a no-op executor),
+//! * `submit` against a deliberately deep backlog,
+//!
+//! and asserts the hot path is O(1): per-request cost must not grow
+//! with queue depth, and the whole cycle stays under 1 µs.
+
+use cnmt::coordinator::{PolicyKind, RouterBuilder};
+use cnmt::devices::DeviceKind;
+use cnmt::experiments::load::{CLOUD_PLANE, EDGE_PLANE, N2M_DELTA, N2M_GAMMA, RTT_S};
+use cnmt::predictor::{N2mRegressor, TexeModel};
+use cnmt::scheduler::{
+    BatchExecutor, BatchPolicy, Dispatcher, DispatcherConfig, QueuedRequest,
+};
+use cnmt::util::bench::{bench, report, BenchConfig};
+use cnmt::util::Rng;
+
+struct NoopExec;
+
+impl BatchExecutor for NoopExec {
+    fn execute(&mut self, _d: DeviceKind, batch: &[QueuedRequest], _s: f64) -> f64 {
+        // Tiny but non-zero so workers cycle realistically.
+        1e-7 * batch.len() as f64
+    }
+}
+
+// Same operating point as the load sweep (constants shared with
+// experiments::load so a recalibration cannot desync the perf gate).
+fn edge_plane() -> TexeModel {
+    TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2)
+}
+
+fn mk_router() -> cnmt::coordinator::Router {
+    let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+        .texe(
+            edge_plane(),
+            TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+        )
+        .n2m(N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA))
+        .ttx(0.3, RTT_S)
+        .build()
+        .unwrap();
+    router.observe_ttx(0.0, RTT_S);
+    router
+}
+
+fn rq(id: u64, n: usize, arrival_s: f64) -> QueuedRequest {
+    let m_est = (N2M_GAMMA * n as f64 + N2M_DELTA).max(1.0);
+    QueuedRequest {
+        id,
+        payload: id as usize,
+        n,
+        m_est,
+        est_service_s: edge_plane().estimate(n, m_est),
+        arrival_s,
+        bucket: 0,
+    }
+}
+
+fn main() {
+    let mut results = Vec::new();
+    let mut rng = Rng::new(3);
+    let ns: Vec<usize> = (0..1024).map(|_| 1 + rng.usize(61)).collect();
+
+    // Queue-aware decision alone (two wait queries + eq. 1 + waits).
+    {
+        let mut router = mk_router();
+        let disp = Dispatcher::new(&DispatcherConfig::default());
+        let ns = ns.clone();
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        results.push(bench("decide_loaded/cnmt", BenchConfig::fast(), move || {
+            i = (i + 1) & 1023;
+            t += 1e-4;
+            let ew = disp.expected_wait_s(DeviceKind::Edge, t);
+            let cw = disp.expected_wait_s(DeviceKind::Cloud, t);
+            router.decide_loaded(ns[i], ew, cw).device
+        }));
+    }
+
+    // Full per-request cycle: dispatch backlog → wait query → decide →
+    // submit. The no-op executor keeps queues shallow, so this is the
+    // steady-state (uncongested) hot path.
+    let shallow = {
+        let mut router = mk_router();
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut exec = NoopExec;
+        let ns = ns.clone();
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        bench("enqueue_decide_dispatch/shallow", BenchConfig::fast(), move || {
+            i = (i + 1) & 1023;
+            t += 1e-4;
+            disp.run_until(t, &mut exec, &mut |_c| {});
+            let ew = disp.expected_wait_s(DeviceKind::Edge, t);
+            let cw = disp.expected_wait_s(DeviceKind::Cloud, t);
+            let device = router.decide_loaded(ns[i], ew, cw).device;
+            id += 1;
+            disp.submit(device, rq(id, ns[i], t))
+        })
+    };
+    results.push(shallow.clone());
+
+    // Same submit path against a queue that is already ~600k deep and
+    // never drains (workers pinned): if anything on the hot path scaled
+    // with depth, this would blow up.
+    let deep = {
+        let mut router = mk_router();
+        let cfg = DispatcherConfig {
+            max_queue_depth: 4_000_000,
+            batch: BatchPolicy::default(),
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        for id in 0..600_000u64 {
+            disp.submit(DeviceKind::Edge, rq(id, 1 + (id % 61) as usize, 0.0));
+        }
+        let ns = ns.clone();
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        let mut id = 1_000_000u64;
+        bench("enqueue_decide_dispatch/deep600k", BenchConfig::fast(), move || {
+            i = (i + 1) & 1023;
+            t += 1e-4;
+            let ew = disp.expected_wait_s(DeviceKind::Edge, t);
+            let cw = disp.expected_wait_s(DeviceKind::Cloud, t);
+            let device = router.decide_loaded(ns[i], ew, cw).device;
+            id += 1;
+            disp.submit(device, rq(id, ns[i], t))
+        })
+    };
+    results.push(deep.clone());
+
+    report("scheduler hot path (enqueue→decide→dispatch)", &results);
+
+    // Perf gates. The load-bearing one is *relative* (depth
+    // independence ⇒ O(1)); the absolute bound is deliberately loose so
+    // a noisy shared CI runner cannot flake it.
+    assert!(
+        deep.mean_ns < shallow.mean_ns * 8.0 + 1_000.0,
+        "hot path scales with queue depth: shallow {} ns vs deep {} ns",
+        shallow.mean_ns,
+        deep.mean_ns
+    );
+    assert!(
+        shallow.mean_ns < 5_000.0,
+        "hot path too slow: {} ns",
+        shallow.mean_ns
+    );
+    println!(
+        "\nPASS: hot path {:.0} ns shallow / {:.0} ns at 600k depth (O(1))",
+        shallow.mean_ns, deep.mean_ns
+    );
+}

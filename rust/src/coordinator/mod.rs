@@ -13,6 +13,7 @@
 //!   runtime: end-nodes submit translation requests; the router maps each
 //!   to the edge or cloud executor.
 
+#[cfg(feature = "pjrt")]
 pub mod gateway;
 pub mod multilevel;
 pub mod policy;

@@ -146,11 +146,32 @@ impl Router {
         self.ttx.estimate_or(self.ttx_prior_s)
     }
 
-    /// Decide the target device for a request with source length `n`.
+    /// Decide the target device for a request with source length `n`,
+    /// assuming both devices are idle (the paper's setting).
     ///
     /// This is the paper's entire runtime overhead: two plane evaluations
     /// and a comparison (`cnmt bench bench_decision` measures it).
     pub fn decide(&mut self, n: usize) -> DecisionTrace {
+        self.decide_loaded(n, 0.0, 0.0)
+    }
+
+    /// Queue-aware decision: eq. 1 with an expected queueing-delay term
+    /// on each side (supplied by
+    /// [`crate::scheduler::Dispatcher::expected_wait_s`]):
+    ///
+    /// ```text
+    /// d = edge  if  T̂_exe,e + Ŵ_e ≤ T̂_tx + T̂_exe,c + Ŵ_c  else cloud
+    /// ```
+    ///
+    /// With both waits zero this is exactly [`Router::decide`]. Still
+    /// O(1): the wait estimates are maintained incrementally by the
+    /// scheduler, not computed here.
+    pub fn decide_loaded(
+        &mut self,
+        n: usize,
+        edge_wait_s: f64,
+        cloud_wait_s: f64,
+    ) -> DecisionTrace {
         self.decisions += 1;
         let ttx_est = self.ttx.estimate_or(self.ttx_prior_s);
         match self.policy {
@@ -179,10 +200,12 @@ impl Router {
                     ttx_est,
                 }
             }
-            PolicyKind::Naive { mean_m } => self.decide_with_m(n, mean_m, ttx_est),
+            PolicyKind::Naive { mean_m } => {
+                self.decide_with_m(n, mean_m, ttx_est, edge_wait_s, cloud_wait_s)
+            }
             PolicyKind::Cnmt => {
                 let m_est = self.n2m.predict(n);
-                self.decide_with_m(n, m_est, ttx_est)
+                self.decide_with_m(n, m_est, ttx_est, edge_wait_s, cloud_wait_s)
             }
         }
     }
@@ -193,14 +216,21 @@ impl Router {
     pub fn decide_given_m(&mut self, n: usize, m_est: f64) -> DecisionTrace {
         self.decisions += 1;
         let ttx_est = self.ttx.estimate_or(self.ttx_prior_s);
-        self.decide_with_m(n, m_est, ttx_est)
+        self.decide_with_m(n, m_est, ttx_est, 0.0, 0.0)
     }
 
-    fn decide_with_m(&self, n: usize, m_est: f64, ttx_est: f64) -> DecisionTrace {
+    fn decide_with_m(
+        &self,
+        n: usize,
+        m_est: f64,
+        ttx_est: f64,
+        edge_wait_s: f64,
+        cloud_wait_s: f64,
+    ) -> DecisionTrace {
         let t_edge_est = self.texe_edge.estimate(n, m_est);
         let t_cloud_est = self.texe_cloud.estimate(n, m_est);
-        // Paper eq. 1.
-        let device = if t_edge_est <= ttx_est + t_cloud_est {
+        // Paper eq. 1, plus the expected-wait term on each side.
+        let device = if t_edge_est + edge_wait_s <= ttx_est + t_cloud_est + cloud_wait_s {
             DeviceKind::Edge
         } else {
             DeviceKind::Cloud
@@ -295,6 +325,37 @@ mod tests {
         let r = mk_router(PolicyKind::Cnmt);
         assert!((r.ttx_estimate() - 0.05).abs() < 1e-12);
         assert!(r.ttx_stale(100.0, 10.0));
+    }
+
+    #[test]
+    fn loaded_decision_reduces_to_eq1_when_idle() {
+        let mut a = mk_router(PolicyKind::Cnmt);
+        let mut b = mk_router(PolicyKind::Cnmt);
+        a.observe_ttx(0.0, 0.040);
+        b.observe_ttx(0.0, 0.040);
+        for n in [1usize, 10, 30, 62] {
+            assert_eq!(a.decide(n).device, b.decide_loaded(n, 0.0, 0.0).device);
+        }
+    }
+
+    #[test]
+    fn edge_backlog_diverts_to_cloud_and_back() {
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.040);
+        let n = 3; // firmly edge when idle
+        assert_eq!(r.decide_loaded(n, 0.0, 0.0).device, DeviceKind::Edge);
+        // A big edge backlog flips it to the cloud...
+        assert_eq!(r.decide_loaded(n, 5.0, 0.0).device, DeviceKind::Cloud);
+        // ...and a symmetric cloud backlog flips it back.
+        assert_eq!(r.decide_loaded(n, 5.0, 5.1).device, DeviceKind::Edge);
+    }
+
+    #[test]
+    fn static_policies_ignore_waits() {
+        let mut e = RouterBuilder::new(PolicyKind::EdgeOnly).build().unwrap();
+        let mut c = RouterBuilder::new(PolicyKind::CloudOnly).build().unwrap();
+        assert_eq!(e.decide_loaded(10, 99.0, 0.0).device, DeviceKind::Edge);
+        assert_eq!(c.decide_loaded(10, 0.0, 99.0).device, DeviceKind::Cloud);
     }
 
     #[test]

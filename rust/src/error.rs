@@ -1,47 +1,72 @@
-//! Crate-wide error type.
+//! Crate-wide error type (hand-rolled `Display`/`Error` impls — the
+//! offline crate set has no `thiserror`).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Unified error for every C-NMT subsystem.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Errors surfaced by the PJRT runtime (`xla` crate).
-    #[error("xla/pjrt: {0}")]
     Xla(String),
 
     /// Artifact loading problems (missing files, bad manifest, shape
     /// mismatches between manifest and weights blob).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Configuration / CLI / JSON parsing and validation.
-    #[error("config: {0}")]
     Config(String),
 
     /// Corpus generation / loading.
-    #[error("corpus: {0}")]
     Corpus(String),
 
     /// Network trace problems.
-    #[error("net: {0}")]
     Net(String),
 
     /// Model fitting (degenerate design matrix, too few samples, ...).
-    #[error("fit: {0}")]
     Fit(String),
 
     /// Simulation / experiment harness.
-    #[error("sim: {0}")]
     Sim(String),
 
-    /// Gateway / serving errors (worker died, queue closed, ...).
-    #[error("serve: {0}")]
+    /// Gateway / serving / scheduling errors (worker died, queue
+    /// closed, ...).
     Serve(String),
 
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 }
 
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(m) => write!(f, "xla/pjrt: {m}"),
+            Error::Artifact(m) => write!(f, "artifact: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Corpus(m) => write!(f, "corpus: {m}"),
+            Error::Net(m) => write!(f, "net: {m}"),
+            Error::Fit(m) => write!(f, "fit: {m}"),
+            Error::Sim(m) => write!(f, "sim: {m}"),
+            Error::Serve(m) => write!(f, "serve: {m}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -1,0 +1,416 @@
+//! Load sweep: throughput vs p50/p99 latency per routing policy, under
+//! open-loop Poisson arrivals contending for device capacity.
+//!
+//! This is the first experiment beyond the paper's single-request
+//! setting: it measures what happens when the ROADMAP's "heavy traffic"
+//! regime meets the C-NMT decision. Four configurations are swept over
+//! offered load:
+//!
+//! * `edge_only`, `cloud_only` — the static mappings;
+//! * `cnmt` — the paper's queue-blind eq. 1;
+//! * `cnmt+queue` — eq. 1 plus the scheduler's expected-wait term on
+//!   each side ([`crate::coordinator::Router::decide_loaded`]).
+//!
+//! The expected shape: all four coincide at low load; as offered load
+//! approaches the edge's capacity, the queue-blind router keeps sending
+//! its short-request share to the edge, whose queue grows without bound
+//! (shedding at the admission cap, p99 pinned to the queue drain time),
+//! while the queue-aware router diverts the overflow to the cloud and
+//! keeps the tail bounded — lower p99 at equal-or-better throughput.
+//!
+//! ## Workload
+//!
+//! The sweep uses a self-contained synthetic workload rather than the
+//! corpus pipeline: request lengths are exponential (mean
+//! [`MEAN_N`]), output lengths follow the FR-EN-like linear N→M law, and
+//! ground-truth times are the `gru_fr_en` calibration planes with
+//! multiplicative noise, under a fixed CP2-like RTT. Keeping the
+//! workload closed-form makes every sweep point cheap, independent of
+//! corpus changes, and exactly reproducible by the standalone mirror in
+//! `python/tools/load_sweep_mirror.py` (which regenerates
+//! `reports/load_sweep.json` byte-for-byte modulo libm rounding when no
+//! rust toolchain is available — keep the two in sync when editing any
+//! constant here).
+
+use crate::coordinator::PolicyKind;
+use crate::predictor::{N2mRegressor, TexeModel};
+use crate::sim::harness::RequestTruth;
+use crate::sim::{run_contended, Characterization, ContendedResult, ContentionOpts};
+use crate::util::{Json, Rng};
+use crate::{Error, Result};
+
+use super::report::text_table;
+
+/// Edge ground-truth plane (αN, αM, β) — `gru_fr_en` on the Jetson-like
+/// edge ([`crate::devices::Calibration::default_paper`]).
+pub const EDGE_PLANE: (f64, f64, f64) = (1.2e-3, 3.0e-3, 6.0e-3);
+/// Cloud ground-truth plane (αN, αM, β) — `gru_fr_en` on the
+/// Titan-class server.
+pub const CLOUD_PLANE: (f64, f64, f64) = (0.22e-3, 0.55e-3, 26.0e-3);
+/// FR-EN-like verbosity: M ≈ γ·N + δ.
+pub const N2M_GAMMA: f64 = 0.95;
+pub const N2M_DELTA: f64 = 0.8;
+/// Fixed CP2-like round trip (seconds).
+pub const RTT_S: f64 = 0.042;
+/// Mean source length of the exponential length distribution (tokens).
+pub const MEAN_N: f64 = 17.0;
+/// Std of the additive noise on the N→M law (tokens).
+const M_NOISE_STD: f64 = 2.0;
+/// Std of the multiplicative execution-time noise.
+const EXEC_NOISE_STD: f64 = 0.05;
+/// Length cap (matches the corpus/token budget used elsewhere).
+const N_MAX: usize = 62;
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct LoadConfig {
+    pub seed: u64,
+    /// Requests simulated at each offered-load point.
+    pub requests_per_point: usize,
+    /// Offered loads to sweep (requests/second).
+    pub loads_rps: Vec<f64>,
+    /// Scheduler sizing shared by every configuration (`queue_aware` is
+    /// overridden per configuration).
+    pub opts: ContentionOpts,
+}
+
+impl Default for LoadConfig {
+    fn default() -> Self {
+        LoadConfig {
+            seed: 20220315,
+            requests_per_point: 20_000,
+            loads_rps: vec![4.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0],
+            opts: ContentionOpts::default(),
+        }
+    }
+}
+
+/// All configurations evaluated at one offered load.
+#[derive(Debug, Clone)]
+pub struct LoadCell {
+    pub offered_rps: f64,
+    pub results: Vec<ContendedResult>,
+}
+
+impl LoadCell {
+    pub fn get(&self, policy: &str) -> &ContendedResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing policy {policy}"))
+    }
+}
+
+/// Full sweep result.
+#[derive(Debug, Clone)]
+pub struct LoadSweep {
+    pub cells: Vec<LoadCell>,
+    pub requests_per_point: usize,
+    pub seed: u64,
+}
+
+impl LoadSweep {
+    /// p99 ratio (blind / aware) at the highest swept load — the
+    /// headline "queue-awareness buys an X× shorter tail".
+    pub fn headline_p99_ratio(&self) -> f64 {
+        match self.cells.last() {
+            None => f64::NAN,
+            Some(c) => c.get("cnmt").p99_s / c.get("cnmt+queue").p99_s,
+        }
+    }
+}
+
+/// Generate the synthetic open-loop workload for one sweep point.
+/// Deterministic in `(seed, count, offered_rps)`; mirrored by
+/// `python/tools/load_sweep_mirror.py` — keep the draw order stable.
+pub fn synth_workload(
+    seed: u64,
+    count: usize,
+    offered_rps: f64,
+) -> (Vec<RequestTruth>, Characterization) {
+    let texe_edge = TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2);
+    let texe_cloud = TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2);
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(count);
+    let mut t = 0.0f64;
+    let mut sum_m = 0.0f64;
+    for _ in 0..count {
+        t += rng.exponential(offered_rps);
+        let n = 1 + (rng.exponential(1.0 / MEAN_N) as usize).min(N_MAX - 1);
+        let m_mean = N2M_GAMMA * n as f64 + N2M_DELTA;
+        let m = (m_mean + rng.normal_ms(0.0, M_NOISE_STD))
+            .round()
+            .clamp(1.0, N_MAX as f64) as usize;
+        let noise_e = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        let noise_c = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        requests.push(RequestTruth {
+            n,
+            m_real: m,
+            arrival_s: t,
+            t_edge: texe_edge.estimate(n, m as f64) * noise_e,
+            t_cloud: texe_cloud.estimate(n, m as f64) * noise_c,
+            t_tx: RTT_S,
+            rtt: RTT_S,
+        });
+        sum_m += m as f64;
+    }
+    let ch = Characterization {
+        texe_edge,
+        texe_cloud,
+        n2m: N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA),
+        mean_m: sum_m / count.max(1) as f64,
+    };
+    (requests, ch)
+}
+
+/// The four configurations swept at each load point.
+fn configurations() -> [(PolicyKind, bool); 4] {
+    [
+        (PolicyKind::EdgeOnly, false),
+        (PolicyKind::CloudOnly, false),
+        (PolicyKind::Cnmt, false),
+        (PolicyKind::Cnmt, true),
+    ]
+}
+
+/// Run the full sweep.
+pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("load sweep needs requests_per_point > 0".into()));
+    }
+    if cfg.loads_rps.is_empty() {
+        return Err(Error::Config("load sweep needs at least one offered load".into()));
+    }
+    for &load in &cfg.loads_rps {
+        if !load.is_finite() || load <= 0.0 {
+            return Err(Error::Config(format!(
+                "offered load {load} r/s must be finite and > 0"
+            )));
+        }
+    }
+    let mut cells = Vec::with_capacity(cfg.loads_rps.len());
+    for (i, &offered_rps) in cfg.loads_rps.iter().enumerate() {
+        let seed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
+        let (requests, ch) = synth_workload(seed, cfg.requests_per_point, offered_rps);
+        let mut results = Vec::new();
+        for (policy, queue_aware) in configurations() {
+            let opts = ContentionOpts { queue_aware, ..cfg.opts };
+            results.push(run_contended(&requests, &ch, policy, &opts)?);
+        }
+        cells.push(LoadCell { offered_rps, results });
+    }
+    Ok(LoadSweep {
+        cells,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+    })
+}
+
+/// Render the sweep as an aligned text table.
+pub fn render_text(s: &LoadSweep) -> String {
+    let mut rows = vec![vec![
+        "load r/s".to_string(),
+        "policy".to_string(),
+        "goodput r/s".to_string(),
+        "shed %".to_string(),
+        "p50 ms".to_string(),
+        "p95 ms".to_string(),
+        "p99 ms".to_string(),
+        "batch".to_string(),
+        "edge/cloud".to_string(),
+    ]];
+    for c in &s.cells {
+        for r in &c.results {
+            rows.push(vec![
+                format!("{:.0}", c.offered_rps),
+                r.policy.clone(),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.1}", r.shed_rate() * 100.0),
+                format!("{:.1}", r.p50_s * 1e3),
+                format!("{:.1}", r.p95_s * 1e3),
+                format!("{:.1}", r.p99_s * 1e3),
+                format!("{:.2}", r.mean_batch),
+                format!("{}/{}", r.edge_count, r.cloud_count),
+            ]);
+        }
+    }
+    let mut out = text_table(&rows);
+    out.push_str(&format!(
+        "\nheadline: at {:.0} r/s offered, queue-aware C-NMT's p99 is {:.1}x \
+         shorter than queue-blind C-NMT's\n",
+        s.cells.last().map_or(0.0, |c| c.offered_rps),
+        s.headline_p99_ratio()
+    ));
+    out
+}
+
+/// JSON report (written through [`super::report::write_report`]).
+pub fn to_json(s: &LoadSweep) -> Json {
+    let mut workload = Json::object();
+    let edge_plane = [EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2];
+    let cloud_plane = [CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2];
+    workload
+        .set("edge_plane", Json::from_f64_slice(&edge_plane))
+        .set("cloud_plane", Json::from_f64_slice(&cloud_plane))
+        .set("n2m_gamma", Json::Num(N2M_GAMMA))
+        .set("n2m_delta", Json::Num(N2M_DELTA))
+        .set("rtt_s", Json::Num(RTT_S))
+        .set("mean_n", Json::Num(MEAN_N));
+    let mut points = Vec::new();
+    for c in &s.cells {
+        let mut o = Json::object();
+        o.set("offered_rps", Json::Num(c.offered_rps));
+        let mut policies = Json::object();
+        for r in &c.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        o.set("policies", policies);
+        points.push(o);
+    }
+    let mut root = Json::object();
+    root.set("workload", workload)
+        .set("seed", Json::Num(s.seed as f64))
+        .set("requests_per_point", Json::Num(s.requests_per_point as f64))
+        .set("points", Json::Array(points))
+        .set("headline_p99_ratio", Json::Num(s.headline_p99_ratio()));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::BatchPolicy;
+
+    fn smoke_cfg(loads: Vec<f64>) -> LoadConfig {
+        LoadConfig {
+            requests_per_point: 3_000,
+            loads_rps: loads,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn workload_is_deterministic_and_well_formed() {
+        let (a, cha) = synth_workload(7, 500, 20.0);
+        let (b, _chb) = synth_workload(7, 500, 20.0);
+        assert_eq!(a.len(), 500);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n, y.n);
+            assert_eq!(x.m_real, y.m_real);
+            assert!((x.arrival_s - y.arrival_s).abs() < 1e-15);
+            assert!((x.t_edge - y.t_edge).abs() < 1e-15);
+        }
+        let mut prev = 0.0;
+        for rq in &a {
+            assert!((1..=N_MAX).contains(&rq.n));
+            assert!((1..=N_MAX).contains(&rq.m_real));
+            assert!(rq.arrival_s > prev);
+            assert!(rq.t_edge > 0.0 && rq.t_cloud > 0.0);
+            prev = rq.arrival_s;
+        }
+        assert!(cha.mean_m > 1.0 && cha.mean_m < N_MAX as f64);
+    }
+
+    #[test]
+    fn conservation_and_structure() {
+        let sweep = run(&smoke_cfg(vec![10.0])).unwrap();
+        assert_eq!(sweep.cells.len(), 1);
+        let cell = &sweep.cells[0];
+        assert_eq!(cell.results.len(), 4);
+        for r in &cell.results {
+            assert_eq!(r.offered, 3_000);
+            assert_eq!(r.completed + r.rejected, r.offered);
+            assert_eq!(r.edge_count + r.cloud_count, r.completed);
+            assert!(r.p50_s <= r.p99_s + 1e-12);
+        }
+    }
+
+    #[test]
+    fn policies_coincide_at_low_load() {
+        // With idle queues the wait terms vanish, so queue-aware and
+        // queue-blind C-NMT make (nearly) the same decisions.
+        let sweep = run(&smoke_cfg(vec![2.0])).unwrap();
+        let cell = &sweep.cells[0];
+        let blind = cell.get("cnmt");
+        let aware = cell.get("cnmt+queue");
+        assert_eq!(blind.rejected, 0);
+        assert_eq!(aware.rejected, 0);
+        assert!(
+            (blind.p99_s - aware.p99_s).abs() / blind.p99_s < 0.10,
+            "low-load p99 diverged: blind {} vs aware {}",
+            blind.p99_s,
+            aware.p99_s
+        );
+    }
+
+    #[test]
+    fn queue_aware_dominates_blind_at_high_load() {
+        // THE acceptance property: at high offered load the queue-aware
+        // router has a shorter tail at equal-or-better goodput.
+        let sweep = run(&smoke_cfg(vec![96.0])).unwrap();
+        let cell = &sweep.cells[0];
+        let blind = cell.get("cnmt");
+        let aware = cell.get("cnmt+queue");
+        assert!(
+            aware.p99_s < blind.p99_s,
+            "aware p99 {} not below blind p99 {}",
+            aware.p99_s,
+            blind.p99_s
+        );
+        assert!(
+            aware.throughput_rps >= blind.throughput_rps * 0.999,
+            "aware goodput {} fell below blind {}",
+            aware.throughput_rps,
+            blind.throughput_rps
+        );
+        // And it beats both static mappings on the tail too.
+        assert!(aware.p99_s < cell.get("edge_only").p99_s);
+    }
+
+    #[test]
+    fn batching_extends_the_stable_region() {
+        // At a load beyond the *serial* capacity of both devices
+        // combined, disabling micro-batching must shed more (or tail
+        // harder) than the batched dispatcher.
+        let mut cfg = smoke_cfg(vec![200.0]);
+        let sweep_batched = run(&cfg).unwrap();
+        cfg.opts.dispatcher.batch = BatchPolicy::serial();
+        let sweep_serial = run(&cfg).unwrap();
+        let b = sweep_batched.cells[0].get("cnmt+queue").clone();
+        let s = sweep_serial.cells[0].get("cnmt+queue").clone();
+        assert!(b.mean_batch > 1.2, "batched run never batched: {}", b.mean_batch);
+        assert!(
+            (s.rejected > b.rejected) || (s.p99_s > b.p99_s * 1.5),
+            "serial dispatch not visibly worse: serial(rej {}, p99 {}) \
+             batched(rej {}, p99 {})",
+            s.rejected,
+            s.p99_s,
+            b.rejected,
+            b.p99_s
+        );
+    }
+
+    #[test]
+    fn rejects_degenerate_sweep_configs() {
+        assert!(run(&smoke_cfg(vec![])).is_err());
+        assert!(run(&smoke_cfg(vec![0.0])).is_err());
+        assert!(run(&smoke_cfg(vec![-4.0])).is_err());
+        assert!(run(&smoke_cfg(vec![f64::NAN])).is_err());
+        assert!(run(&smoke_cfg(vec![f64::INFINITY])).is_err());
+        let mut cfg = smoke_cfg(vec![8.0]);
+        cfg.requests_per_point = 0;
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn render_and_json_cover_all_points() {
+        let sweep = run(&smoke_cfg(vec![8.0, 64.0])).unwrap();
+        let txt = render_text(&sweep);
+        assert!(txt.contains("cnmt+queue"));
+        assert!(txt.contains("headline"));
+        let j = to_json(&sweep);
+        assert_eq!(j.get("points").unwrap().as_array().unwrap().len(), 2);
+        let p0 = &j.get("points").unwrap().as_array().unwrap()[0];
+        assert!(p0.get("policies").unwrap().get("cnmt+queue").is_ok());
+    }
+}

@@ -7,17 +7,20 @@
 //! | Fig. 3 (N→M regressions) | [`fig3`] | `cnmt experiment fig3` |
 //! | Fig. 4 (connection profiles) | [`fig4`] | `cnmt experiment fig4` |
 //! | Table I (policy comparison) | [`table1`] | `cnmt experiment table1` |
+//! | — (beyond paper: load sweep) | [`load`] | `cnmt experiment load` |
 //!
 //! Every driver prints a human-readable table and writes a JSON report
-//! under the configured `out_dir` so EXPERIMENTS.md can quote exact
-//! numbers.
+//! through the one shared path ([`report::write_report`] over
+//! [`crate::util::Json`]) under the configured `out_dir`, so
+//! EXPERIMENTS.md can quote exact numbers.
 
 pub mod ablation;
 pub mod energy;
 pub mod fig2a;
-pub mod multilevel;
 pub mod fig3;
 pub mod fig4;
+pub mod load;
+pub mod multilevel;
 pub mod report;
 pub mod table1;
 

@@ -10,15 +10,20 @@
 //!   router ([`coordinator`]) driven by linear execution-time models
 //!   ([`predictor::texe`]), an N→M output-length regressor
 //!   ([`predictor::n2m`]) and an online round-trip-time estimator
-//!   ([`predictor::ttx`]); plus every substrate the evaluation needs:
-//!   synthetic parallel corpora ([`corpus`]), RTT trace generation/replay
-//!   ([`net`]), calibrated device models ([`devices`]), a discrete-event
-//!   experiment harness ([`sim`]) and the experiment drivers
-//!   ([`experiments`]) that regenerate each of the paper's tables/figures.
+//!   ([`predictor::ttx`]); a load-aware scheduling subsystem
+//!   ([`scheduler`]) — per-device admission queues, in-flight capacity
+//!   tracking, length-bucketed micro-batching and a worker-pool
+//!   dispatcher — that lets the routing decision account for contention;
+//!   plus every substrate the evaluation needs: synthetic parallel
+//!   corpora ([`corpus`]), RTT trace generation/replay ([`net`]),
+//!   calibrated device models ([`devices`]), a discrete-event experiment
+//!   harness ([`sim`]) and the experiment drivers ([`experiments`]) that
+//!   regenerate each of the paper's tables/figures.
 //! * **L2/L1 (python, build-time only)** — the three NMT models (BiLSTM,
 //!   GRU, Transformer) with Pallas kernels, AOT-lowered to HLO text and
-//!   executed from the [`runtime`] via the PJRT C API. Python is never on
-//!   the request path.
+//!   executed from the [`runtime`] via the PJRT C API (cargo feature
+//!   `pjrt`; everything else builds dependency-free without it). Python
+//!   is never on the request path.
 //!
 //! ## Quick map (paper concept → module)
 //!
@@ -31,6 +36,8 @@
 //! | RIPE-Atlas connection profiles | [`net::trace`] |
 //! | IWSLT/OPUS corpora | [`corpus`] |
 //! | 100k-request experiment | [`sim`], [`experiments::table1`] |
+//! | queue-aware routing under load (beyond paper) | [`scheduler`], [`coordinator::router`] |
+//! | throughput-vs-latency load sweep (beyond paper) | [`experiments::load`] |
 
 pub mod config;
 pub mod coordinator;
@@ -41,7 +48,9 @@ pub mod experiments;
 pub mod metrics;
 pub mod net;
 pub mod predictor;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
+pub mod scheduler;
 pub mod sim;
 pub mod util;
 

@@ -15,11 +15,18 @@ use std::path::PathBuf;
 use std::process::ExitCode;
 
 use cnmt::config::Config;
-use cnmt::corpus::{LangPair, Tokenizer};
+use cnmt::corpus::LangPair;
+#[cfg(feature = "pjrt")]
+use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
-use cnmt::experiments::{ablation, energy, fig2a, fig3, fig4, multilevel, report, table1};
+use cnmt::experiments::{
+    ablation, energy, fig2a, fig3, fig4, load, multilevel, report, table1,
+};
+#[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
-use cnmt::util::{Args, Json};
+use cnmt::util::Args;
+#[cfg(feature = "pjrt")]
+use cnmt::util::Json;
 use cnmt::{Error, Result};
 
 fn main() -> ExitCode {
@@ -53,7 +60,7 @@ const HELP: &str = "\
 cnmt — C-NMT: collaborative inference for neural machine translation
 
 USAGE:
-  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|all> [flags]
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|all> [flags]
       --config <json>       load a Config (defaults = paper setup)
       --requests <n>        evaluation requests (default 100000)
       --fit <n>             characterisation inferences (default 10000)
@@ -61,7 +68,10 @@ USAGE:
       --out <dir>           report directory (default reports/)
       --calibration <json>  measured calibration (default: built-in)
       --samples <n>         fig2a/fig3 sample count
+      --loads <a,b,..>      load sweep: offered loads in r/s
+      --load-requests <n>   load sweep: requests per point (default 20000)
   cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
+                            (needs the `pjrt` build feature)
       --samples <n>         measured translations per model (default 120)
       --edge-slowdown <f>   edge = local CPU x f (default 1.0)
       --cloud-speedup <f>   cloud = local CPU / f (default 5.0)
@@ -112,6 +122,25 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
     let cal = load_calibration(&cfg)?;
     let samples = args.usize("samples", 30_000)?;
+    // Only the load sweep consumes its flags; on other experiments a
+    // stray `--loads` stays unknown and is rejected below.
+    let load_cfg = if matches!(which.as_str(), "load" | "all") {
+        let mut lc = load::LoadConfig { seed: cfg.seed, ..Default::default() };
+        if let Some(loads) = args.str_opt("loads") {
+            lc.loads_rps = loads
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<f64>().map_err(|_| {
+                        Error::Config(format!("--loads: `{s}` is not a number"))
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        lc.requests_per_point = args.usize("load-requests", lc.requests_per_point)?;
+        Some(lc)
+    } else {
+        None
+    };
     args.reject_unknown()?;
 
     let run_fig2a = |cfg: &Config| -> Result<()> {
@@ -169,6 +198,21 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
 
+    let run_load = |cfg: &Config| -> Result<()> {
+        let load_cfg = load_cfg.as_ref().expect("load_cfg built for load/all");
+        eprintln!(
+            "load: {} requests/point over {} offered loads (seed {})",
+            load_cfg.requests_per_point,
+            load_cfg.loads_rps.len(),
+            load_cfg.seed
+        );
+        let s = load::run(load_cfg)?;
+        print!("{}", load::render_text(&s));
+        let p = report::write_report(&cfg.out_dir, "load_sweep", &load::to_json(&s))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
     let run_multilevel = |cfg: &Config| -> Result<()> {
         eprintln!("multilevel: 3-tier CI (end-device/gateway/cloud)...");
         let m = multilevel::run(cfg, &cal)?;
@@ -186,6 +230,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "ablation" => run_ablation(&cfg),
         "energy" => run_energy(&cfg),
         "multilevel" => run_multilevel(&cfg),
+        "load" => run_load(&cfg),
         "all" => {
             run_fig4(&cfg)?;
             run_fig3(&cfg)?;
@@ -193,14 +238,41 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             run_table1(&cfg)?;
             run_ablation(&cfg)?;
             run_energy(&cfg)?;
-            run_multilevel(&cfg)
+            run_multilevel(&cfg)?;
+            run_load(&cfg)
         }
         other => Err(Error::Config(format!("unknown experiment `{other}`"))),
     }
 }
 
+/// Stubs for the PJRT-backed commands when built without the `pjrt`
+/// feature (the default: the offline environment has no XLA library).
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_unavailable(cmd: &str) -> Result<()> {
+    Err(Error::Config(format!(
+        "`cnmt {cmd}` needs the real PJRT runtime — rebuild with \
+         `--features pjrt`"
+    )))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_calibrate(_args: &Args) -> Result<()> {
+    pjrt_unavailable("calibrate")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_translate(_args: &Args) -> Result<()> {
+    pjrt_unavailable("translate")
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_selfcheck(_args: &Args) -> Result<()> {
+    pjrt_unavailable("selfcheck")
+}
+
 /// Real-PJRT characterisation: measure translations over an (N, M) grid
 /// per model, fit the T_exe planes, derive edge/cloud device models.
+#[cfg(feature = "pjrt")]
 fn cmd_calibrate(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
     let out = PathBuf::from(args.str("out", "artifacts/calibration.json"));
@@ -269,6 +341,7 @@ fn cmd_calibrate(args: &Args) -> Result<()> {
     Ok(())
 }
 
+#[cfg(feature = "pjrt")]
 fn cmd_translate(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
     let model = args.str_req("model")?;
@@ -312,6 +385,7 @@ fn cmd_translate(args: &Args) -> Result<()> {
 /// Load + execute every artifact; verifies determinism and reports a
 /// per-model latency sketch. This is the post-`make artifacts` sanity
 /// gate.
+#[cfg(feature = "pjrt")]
 fn cmd_selfcheck(args: &Args) -> Result<()> {
     let artifacts = PathBuf::from(args.str("artifacts", "artifacts"));
     args.reject_unknown()?;

@@ -1,0 +1,209 @@
+//! Length-bucketed micro-batching.
+//!
+//! NMT inference cost is dominated by the serial O(M) decode loop
+//! ([`crate::runtime`] runs one decode-step executable per output
+//! token). Batching amortises that loop: a batch decodes for
+//! max(M_i) steps regardless of how many sequences ride along, so the
+//! cost of a batch is roughly its *longest* member plus a small
+//! per-member residual (padding waste, wider matmuls) — which is only a
+//! win when members have similar predicted output lengths. Hence
+//! *length-bucketed* batching: requests are bucketed by the
+//! [`crate::predictor::N2mRegressor`] estimate M̂ at admission, and a
+//! batch is formed from same-bucket requests only (CoFormer and the
+//! end-cloud pipeline line of work batch/pipe on the same insight; see
+//! PAPERS.md).
+//!
+//! Formation is **opportunistic**: a batch is assembled only when a
+//! worker is free, from requests that have already arrived — the
+//! scheduler never delays a lone request to wait for companions, so at
+//! low load batching adds zero latency and batches emerge naturally
+//! exactly when queues are non-empty (i.e. when amortisation matters).
+//!
+//! The batcher is the only scheduler component that touches non-head
+//! queue entries. It scans a bounded `lookahead` window for same-bucket
+//! members, so batch formation is O(lookahead·max_batch) — constant per
+//! batch, amortised O(1) per request — and head-of-line order is
+//! preserved for everything it skips.
+
+use super::queue::{AdmissionQueue, QueuedRequest};
+
+/// Bucketing + batch-formation parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Width of one predicted-output-length bucket (tokens).
+    pub bucket_width: f64,
+    /// Maximum requests per micro-batch.
+    pub max_batch: usize,
+    /// How many queue positions past the head the batcher may inspect.
+    pub lookahead: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { bucket_width: 8.0, max_batch: 8, lookahead: 32 }
+    }
+}
+
+impl BatchPolicy {
+    /// Disable batching (every batch is a single request).
+    pub fn serial() -> Self {
+        BatchPolicy { bucket_width: 8.0, max_batch: 1, lookahead: 0 }
+    }
+
+    /// Bucket index for a predicted output length.
+    pub fn bucket_of(&self, m_est: f64) -> usize {
+        assert!(self.bucket_width > 0.0);
+        (m_est.max(0.0) / self.bucket_width) as usize
+    }
+
+    /// Pop the head request plus up to `max_batch - 1` same-bucket
+    /// companions that arrived by `start_s`, scanning at most
+    /// `lookahead` positions. Returns an empty vec on an empty queue.
+    pub fn form_batch(
+        &self,
+        queue: &mut AdmissionQueue,
+        start_s: f64,
+    ) -> Vec<QueuedRequest> {
+        let head = match queue.pop() {
+            Some(h) => h,
+            None => return Vec::new(),
+        };
+        let bucket = head.bucket;
+        let mut batch = Vec::with_capacity(self.max_batch.min(8));
+        batch.push(head);
+        let mut i = 0usize;
+        let mut scanned = 0usize;
+        while batch.len() < self.max_batch && scanned < self.lookahead {
+            match queue.get(i) {
+                None => break,
+                Some(rq) if rq.bucket == bucket && rq.arrival_s <= start_s => {
+                    // Removal shifts the tail left; `i` now points at the
+                    // next candidate already.
+                    let rq = queue.remove(i).expect("indexed element exists");
+                    batch.push(rq);
+                }
+                Some(_) => i += 1,
+            }
+            scanned += 1;
+        }
+        batch
+    }
+}
+
+/// Running batch-size accounting (kept by the dispatcher).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct BatchStats {
+    pub batches: u64,
+    pub requests: u64,
+}
+
+impl BatchStats {
+    pub fn record(&mut self, batch_len: usize) {
+        self.batches += 1;
+        self.requests += batch_len as u64;
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            f64::NAN
+        } else {
+            self.requests as f64 / self.batches as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rq(id: u64, bucket: usize, arrival_s: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            payload: id as usize,
+            n: 10,
+            m_est: bucket as f64 * 8.0 + 1.0,
+            est_service_s: 0.05,
+            arrival_s,
+            bucket,
+        }
+    }
+
+    #[test]
+    fn bucket_of_is_width_quantised() {
+        let p = BatchPolicy::default();
+        assert_eq!(p.bucket_of(0.0), 0);
+        assert_eq!(p.bucket_of(7.9), 0);
+        assert_eq!(p.bucket_of(8.0), 1);
+        assert_eq!(p.bucket_of(63.9), 7);
+        assert_eq!(p.bucket_of(-3.0), 0);
+    }
+
+    #[test]
+    fn batches_same_bucket_only_and_preserves_skipped_order() {
+        let p = BatchPolicy { bucket_width: 8.0, max_batch: 4, lookahead: 32 };
+        let mut q = AdmissionQueue::new(16);
+        for (id, bucket) in [(0, 1), (1, 2), (2, 1), (3, 1), (4, 2)] {
+            q.offer(rq(id, bucket, 0.0));
+        }
+        let b = p.form_batch(&mut q, 1.0);
+        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2, 3]);
+        // Skipped requests keep their order.
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 4);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn respects_max_batch_and_arrival_causality() {
+        let p = BatchPolicy { bucket_width: 8.0, max_batch: 2, lookahead: 32 };
+        let mut q = AdmissionQueue::new(16);
+        q.offer(rq(0, 0, 0.0));
+        q.offer(rq(1, 0, 5.0)); // arrives after the batch start
+        q.offer(rq(2, 0, 0.5));
+        let b = p.form_batch(&mut q, 1.0);
+        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        // id=1 must not be batched (arrival 5.0 > start 1.0); id=2 may.
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn lookahead_bounds_the_scan() {
+        let p = BatchPolicy { bucket_width: 8.0, max_batch: 8, lookahead: 2 };
+        let mut q = AdmissionQueue::new(16);
+        q.offer(rq(0, 0, 0.0));
+        q.offer(rq(1, 1, 0.0));
+        q.offer(rq(2, 1, 0.0));
+        q.offer(rq(3, 0, 0.0)); // same bucket as head but out of window
+        let b = p.form_batch(&mut q, 1.0);
+        assert_eq!(b.len(), 1);
+        assert_eq!(q.depth(), 3);
+    }
+
+    #[test]
+    fn serial_policy_never_batches() {
+        let p = BatchPolicy::serial();
+        let mut q = AdmissionQueue::new(16);
+        q.offer(rq(0, 0, 0.0));
+        q.offer(rq(1, 0, 0.0));
+        assert_eq!(p.form_batch(&mut q, 1.0).len(), 1);
+        assert_eq!(q.depth(), 1);
+    }
+
+    #[test]
+    fn empty_queue_gives_empty_batch() {
+        let p = BatchPolicy::default();
+        let mut q = AdmissionQueue::new(4);
+        assert!(p.form_batch(&mut q, 0.0).is_empty());
+    }
+
+    #[test]
+    fn batch_stats_mean() {
+        let mut s = BatchStats::default();
+        assert!(s.mean_batch_size().is_nan());
+        s.record(1);
+        s.record(3);
+        assert!((s.mean_batch_size() - 2.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,158 @@
+//! Per-device in-flight tracking → expected queueing delay.
+//!
+//! The paper's eq. 1 compares `T_exe,e` against `T_tx + T_exe,c` as if
+//! both devices were idle. Under load the dominant term is often neither
+//! — it is the time a request spends *waiting* behind work that is
+//! already executing or queued. This tracker converts what the scheduler
+//! knows (worker busy-until times plus the [`crate::predictor::TexeModel`]
+//! service estimates of every queued request) into an expected
+//! queueing-delay estimate the router can add to each side of eq. 1:
+//!
+//! ```text
+//! Ŵ_d(t) = ( Σ_workers max(busy_until - t, 0) + Σ_queued T̂_exe ) / workers
+//! ```
+//!
+//! The backlog sum is maintained incrementally (add on admit, subtract
+//! on dispatch), so the estimate is O(workers) — constant for a fixed
+//! pool — not O(queue depth). It deliberately ignores batching
+//! amortisation, making it a mildly conservative (over-)estimate of the
+//! true wait; see `scheduler::batch` for why that bias is benign.
+
+/// In-flight + backlog tracker for one device's worker pool.
+#[derive(Debug, Clone)]
+pub struct CapacityTracker {
+    /// Per-worker busy-until time on the scheduler clock (seconds).
+    free_at_s: Vec<f64>,
+    /// Sum of estimated service times of admitted-but-undispatched
+    /// requests (seconds).
+    backlog_est_s: f64,
+    /// Batches dispatched (for utilisation reporting).
+    dispatches: u64,
+}
+
+impl CapacityTracker {
+    pub fn new(workers: usize) -> Self {
+        assert!(workers > 0, "CapacityTracker needs workers > 0");
+        CapacityTracker {
+            free_at_s: vec![0.0; workers],
+            backlog_est_s: 0.0,
+            dispatches: 0,
+        }
+    }
+
+    pub fn workers(&self) -> usize {
+        self.free_at_s.len()
+    }
+
+    /// A request with service estimate `est_service_s` entered the queue.
+    pub fn on_admit(&mut self, est_service_s: f64) {
+        self.backlog_est_s += est_service_s.max(0.0);
+    }
+
+    /// A batch with summed member estimate `est_sum_s` left the queue for
+    /// worker `worker`, which will be busy until `done_s`.
+    pub fn on_dispatch(&mut self, worker: usize, est_sum_s: f64, done_s: f64) {
+        self.backlog_est_s = (self.backlog_est_s - est_sum_s).max(0.0);
+        self.free_at_s[worker] = done_s;
+        self.dispatches += 1;
+    }
+
+    /// Index and free-time of the worker that frees up first.
+    pub fn earliest_free(&self) -> (usize, f64) {
+        let mut best = (0usize, self.free_at_s[0]);
+        for (i, &t) in self.free_at_s.iter().enumerate().skip(1) {
+            if t < best.1 {
+                best = (i, t);
+            }
+        }
+        best
+    }
+
+    /// Expected queueing delay for a request arriving at `now_s`:
+    /// residual in-flight work plus the estimated backlog, spread over
+    /// the pool.
+    pub fn expected_wait_s(&self, now_s: f64) -> f64 {
+        let inflight: f64 = self
+            .free_at_s
+            .iter()
+            .map(|&t| (t - now_s).max(0.0))
+            .sum();
+        (inflight + self.backlog_est_s) / self.free_at_s.len() as f64
+    }
+
+    /// Current backlog estimate (seconds of serial work).
+    pub fn backlog_est_s(&self) -> f64 {
+        self.backlog_est_s
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.dispatches
+    }
+
+    /// Are all workers idle at `now_s` (ignoring the backlog)?
+    pub fn all_idle(&self, now_s: f64) -> bool {
+        self.free_at_s.iter().all(|&t| t <= now_s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn idle_pool_has_zero_wait() {
+        let t = CapacityTracker::new(4);
+        assert_eq!(t.expected_wait_s(0.0), 0.0);
+        assert!(t.all_idle(0.0));
+        assert_eq!(t.workers(), 4);
+    }
+
+    #[test]
+    fn admit_then_dispatch_round_trips_backlog() {
+        let mut t = CapacityTracker::new(1);
+        t.on_admit(0.3);
+        t.on_admit(0.2);
+        assert!((t.backlog_est_s() - 0.5).abs() < 1e-12);
+        assert!((t.expected_wait_s(0.0) - 0.5).abs() < 1e-12);
+        t.on_dispatch(0, 0.3, 10.3);
+        assert!((t.backlog_est_s() - 0.2).abs() < 1e-12);
+        // At t=10 the worker still owes 0.3 s; backlog adds 0.2 s.
+        assert!((t.expected_wait_s(10.0) - 0.5).abs() < 1e-12);
+        // Residual decays with the clock.
+        assert!((t.expected_wait_s(10.2) - 0.3).abs() < 1e-12);
+        assert!((t.expected_wait_s(11.0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn wait_spreads_over_workers() {
+        let mut t1 = CapacityTracker::new(1);
+        let mut t4 = CapacityTracker::new(4);
+        for t in [&mut t1, &mut t4] {
+            for _ in 0..8 {
+                t.on_admit(0.1);
+            }
+        }
+        assert!((t1.expected_wait_s(0.0) - 0.8).abs() < 1e-12);
+        assert!((t4.expected_wait_s(0.0) - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn earliest_free_picks_minimum() {
+        let mut t = CapacityTracker::new(3);
+        t.on_dispatch(0, 0.0, 5.0);
+        t.on_dispatch(1, 0.0, 2.0);
+        t.on_dispatch(2, 0.0, 9.0);
+        assert_eq!(t.earliest_free(), (1, 2.0));
+        assert_eq!(t.dispatches(), 3);
+        assert!(!t.all_idle(4.0));
+        assert!(t.all_idle(9.0));
+    }
+
+    #[test]
+    fn backlog_never_goes_negative() {
+        let mut t = CapacityTracker::new(1);
+        t.on_admit(0.1);
+        t.on_dispatch(0, 0.2, 1.0); // over-subtract (float drift guard)
+        assert_eq!(t.backlog_est_s(), 0.0);
+    }
+}

@@ -1,0 +1,352 @@
+//! Worker-pool dispatcher: drives the edge/cloud executors from the
+//! admission queues.
+//!
+//! One lane per device: an [`AdmissionQueue`] plus a
+//! [`CapacityTracker`] over a fixed worker pool (the edge gateway is
+//! typically 1 worker — one serial execution stream, the discipline the
+//! paper's latency model assumes — while the cloud server exposes
+//! several). The dispatcher is clock-driven and backend-agnostic: it
+//! owns *when* and *what* to run, a [`BatchExecutor`] owns *how long*
+//! it takes — the simulation backs it with ground-truth tables
+//! ([`crate::sim::harness`]), a live gateway would back it with real
+//! engines.
+//!
+//! The per-request hot path (`expected_wait_s` → route → [`submit`]) is
+//! O(1) for a fixed worker pool: no allocation, no queue scans.
+//! Dispatch itself ([`run_until`]) is amortised O(1) per request via the
+//! bounded-lookahead batcher.
+//!
+//! [`submit`]: Dispatcher::submit
+//! [`run_until`]: Dispatcher::run_until
+
+use crate::devices::DeviceKind;
+
+use super::batch::{BatchPolicy, BatchStats};
+use super::capacity::CapacityTracker;
+use super::queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};
+
+/// Service-time backend: how long a batch runs on a device.
+pub trait BatchExecutor {
+    /// Service seconds for `batch` started at `start_s` on `device`.
+    /// `batch` is non-empty.
+    fn execute(
+        &mut self,
+        device: DeviceKind,
+        batch: &[QueuedRequest],
+        start_s: f64,
+    ) -> f64;
+}
+
+/// Dispatcher sizing parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct DispatcherConfig {
+    /// Edge worker slots (the gateway's serial executor ⇒ usually 1).
+    pub edge_workers: usize,
+    /// Cloud worker slots.
+    pub cloud_workers: usize,
+    /// Per-device admission-queue depth bound.
+    pub max_queue_depth: usize,
+    /// Micro-batching policy (shared by both lanes).
+    pub batch: BatchPolicy,
+}
+
+impl Default for DispatcherConfig {
+    fn default() -> Self {
+        DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 4,
+            max_queue_depth: 512,
+            batch: BatchPolicy::default(),
+        }
+    }
+}
+
+/// One completed request, reported through [`Dispatcher::run_until`].
+#[derive(Debug, Clone, Copy)]
+pub struct Completion {
+    pub request: QueuedRequest,
+    pub device: DeviceKind,
+    /// When its batch started executing.
+    pub start_s: f64,
+    /// When its batch finished (= response time at the device).
+    pub done_s: f64,
+    /// Size of the batch it rode in.
+    pub batch_size: usize,
+}
+
+/// Queue + capacity state for one device (internal to the dispatcher).
+#[derive(Debug, Clone)]
+struct Lane {
+    queue: AdmissionQueue,
+    tracker: CapacityTracker,
+}
+
+impl Lane {
+    fn new(workers: usize, max_depth: usize) -> Self {
+        Lane {
+            queue: AdmissionQueue::new(max_depth),
+            tracker: CapacityTracker::new(workers),
+        }
+    }
+}
+
+/// The two-lane edge/cloud dispatcher.
+#[derive(Debug, Clone)]
+pub struct Dispatcher {
+    edge: Lane,
+    cloud: Lane,
+    policy: BatchPolicy,
+    stats: BatchStats,
+}
+
+impl Dispatcher {
+    pub fn new(cfg: &DispatcherConfig) -> Self {
+        Dispatcher {
+            edge: Lane::new(cfg.edge_workers, cfg.max_queue_depth),
+            cloud: Lane::new(cfg.cloud_workers, cfg.max_queue_depth),
+            policy: cfg.batch,
+            stats: BatchStats::default(),
+        }
+    }
+
+    fn lane(&self, device: DeviceKind) -> &Lane {
+        match device {
+            DeviceKind::Edge => &self.edge,
+            DeviceKind::Cloud => &self.cloud,
+        }
+    }
+
+    fn lane_mut(&mut self, device: DeviceKind) -> &mut Lane {
+        match device {
+            DeviceKind::Edge => &mut self.edge,
+            DeviceKind::Cloud => &mut self.cloud,
+        }
+    }
+
+    /// Expected queueing delay on `device` for a request arriving now —
+    /// the router adds this to each side of eq. 1.
+    pub fn expected_wait_s(&self, device: DeviceKind, now_s: f64) -> f64 {
+        let lane = self.lane(device);
+        lane.tracker.expected_wait_s(now_s)
+    }
+
+    /// Admit a request to `device`'s queue (O(1)). The request's bucket
+    /// is assigned here so queue and batcher always agree on it.
+    pub fn submit(&mut self, device: DeviceKind, mut rq: QueuedRequest) -> Admission {
+        rq.bucket = self.policy.bucket_of(rq.m_est);
+        let lane = self.lane_mut(device);
+        let admission = lane.queue.offer(rq);
+        if admission.is_admitted() {
+            lane.tracker.on_admit(rq.est_service_s);
+        }
+        admission
+    }
+
+    pub fn depth(&self, device: DeviceKind) -> usize {
+        self.lane(device).queue.depth()
+    }
+
+    pub fn queue_stats(&self, device: DeviceKind) -> QueueStats {
+        self.lane(device).queue.stats()
+    }
+
+    pub fn batch_stats(&self) -> BatchStats {
+        self.stats
+    }
+
+    pub fn idle(&self) -> bool {
+        self.edge.queue.is_empty() && self.cloud.queue.is_empty()
+    }
+
+    /// Run every batch (on both lanes) whose start time is ≤
+    /// `horizon_s`; `on_complete` fires once per finished request.
+    /// Drive with `horizon_s = next arrival time` while feeding
+    /// arrivals, then once with `f64::INFINITY` to drain.
+    pub fn run_until<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F)
+    where
+        E: BatchExecutor,
+        F: FnMut(Completion),
+    {
+        drain_lane(
+            DeviceKind::Edge,
+            &mut self.edge,
+            &self.policy,
+            &mut self.stats,
+            horizon_s,
+            exec,
+            on_complete,
+        );
+        drain_lane(
+            DeviceKind::Cloud,
+            &mut self.cloud,
+            &self.policy,
+            &mut self.stats,
+            horizon_s,
+            exec,
+            on_complete,
+        );
+    }
+}
+
+fn drain_lane<E, F>(
+    device: DeviceKind,
+    lane: &mut Lane,
+    policy: &BatchPolicy,
+    stats: &mut BatchStats,
+    horizon_s: f64,
+    exec: &mut E,
+    on_complete: &mut F,
+) where
+    E: BatchExecutor,
+    F: FnMut(Completion),
+{
+    loop {
+        let head_arrival = match lane.queue.peek() {
+            None => return,
+            Some(h) => h.arrival_s,
+        };
+        let (worker, free_s) = lane.tracker.earliest_free();
+        let start_s = free_s.max(head_arrival);
+        if start_s > horizon_s {
+            return;
+        }
+        let batch = policy.form_batch(&mut lane.queue, start_s);
+        debug_assert!(!batch.is_empty());
+        let est_sum: f64 = batch.iter().map(|r| r.est_service_s).sum();
+        let service_s = exec.execute(device, &batch, start_s).max(0.0);
+        let done_s = start_s + service_s;
+        lane.tracker.on_dispatch(worker, est_sum, done_s);
+        stats.record(batch.len());
+        let batch_size = batch.len();
+        for request in batch {
+            on_complete(Completion { request, device, start_s, done_s, batch_size });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Fixed per-request time, batch = max + residual·rest.
+    struct FixedExec {
+        per_request_s: f64,
+        residual: f64,
+    }
+
+    impl BatchExecutor for FixedExec {
+        fn execute(&mut self, _d: DeviceKind, batch: &[QueuedRequest], _s: f64) -> f64 {
+            let each = self.per_request_s;
+            each + self.residual * each * (batch.len() - 1) as f64
+        }
+    }
+
+    fn rq(id: u64, arrival_s: f64, m_est: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            payload: id as usize,
+            n: 10,
+            m_est,
+            est_service_s: 0.1,
+            arrival_s,
+            bucket: 0, // overwritten by submit()
+        }
+    }
+
+    fn collect_completions(
+        disp: &mut Dispatcher,
+        exec: &mut FixedExec,
+        horizon_s: f64,
+    ) -> Vec<Completion> {
+        let mut out = Vec::new();
+        disp.run_until(horizon_s, exec, &mut |c| out.push(c));
+        out
+    }
+
+    #[test]
+    fn lone_request_runs_immediately_without_batching_delay() {
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut exec = FixedExec { per_request_s: 0.1, residual: 0.2 };
+        assert!(disp.submit(DeviceKind::Edge, rq(0, 1.0, 10.0)).is_admitted());
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 1);
+        assert!((done[0].start_s - 1.0).abs() < 1e-12);
+        assert!((done[0].done_s - 1.1).abs() < 1e-12);
+        assert_eq!(done[0].batch_size, 1);
+        assert!(disp.idle());
+    }
+
+    #[test]
+    fn backlog_batches_and_amortises() {
+        // One edge worker, four same-bucket requests arriving together:
+        // they ride one batch and finish far sooner than serially.
+        let cfg = DispatcherConfig { edge_workers: 1, ..Default::default() };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = FixedExec { per_request_s: 0.1, residual: 0.2 };
+        for i in 0..4 {
+            disp.submit(DeviceKind::Edge, rq(i, 0.0, 10.0));
+        }
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 4);
+        assert_eq!(done[0].batch_size, 4);
+        // 0.1 + 3·0.02 = 0.16 ≪ 0.4 serial.
+        assert!((done[0].done_s - 0.16).abs() < 1e-9);
+        assert!((disp.batch_stats().mean_batch_size() - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn horizon_gates_dispatch() {
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut exec = FixedExec { per_request_s: 0.1, residual: 0.0 };
+        disp.submit(DeviceKind::Cloud, rq(0, 5.0, 10.0));
+        assert!(collect_completions(&mut disp, &mut exec, 4.9).is_empty());
+        let done = collect_completions(&mut disp, &mut exec, 5.0);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].device, DeviceKind::Cloud);
+    }
+
+    #[test]
+    fn expected_wait_rises_with_backlog_and_falls_with_workers() {
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 4,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        for i in 0..8 {
+            disp.submit(DeviceKind::Edge, rq(i, 0.0, 10.0));
+            disp.submit(DeviceKind::Cloud, rq(100 + i, 0.0, 10.0));
+        }
+        let we = disp.expected_wait_s(DeviceKind::Edge, 0.0);
+        let wc = disp.expected_wait_s(DeviceKind::Cloud, 0.0);
+        assert!((we - 0.8).abs() < 1e-12, "edge wait {we}");
+        assert!((wc - 0.2).abs() < 1e-12, "cloud wait {wc}");
+    }
+
+    #[test]
+    fn conservation_admitted_equals_completed() {
+        let cfg = DispatcherConfig {
+            max_queue_depth: 16,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = FixedExec { per_request_s: 0.05, residual: 0.1 };
+        let mut completed = 0usize;
+        let mut rejected = 0usize;
+        for i in 0..200u64 {
+            let t = i as f64 * 0.01;
+            disp.run_until(t, &mut exec, &mut |_c| completed += 1);
+            let dev = if i % 3 == 0 { DeviceKind::Edge } else { DeviceKind::Cloud };
+            if !disp.submit(dev, rq(i, t, (i % 40) as f64)).is_admitted() {
+                rejected += 1;
+            }
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut |_c| completed += 1);
+        assert_eq!(completed + rejected, 200);
+        let qs_e = disp.queue_stats(DeviceKind::Edge);
+        let qs_c = disp.queue_stats(DeviceKind::Cloud);
+        assert_eq!(qs_e.offered + qs_c.offered, 200);
+        assert_eq!(qs_e.rejected + qs_c.rejected, rejected as u64);
+        assert!(disp.idle());
+    }
+}

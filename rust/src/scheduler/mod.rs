@@ -1,0 +1,40 @@
+//! Load-aware scheduling: admission queues, capacity tracking,
+//! length-bucketed micro-batching and worker-pool dispatch.
+//!
+//! The paper routes each request in isolation, assuming an idle edge and
+//! an idle cloud (eq. 1). This subsystem supplies everything the router
+//! needs to stay optimal when that assumption breaks under heavy
+//! traffic:
+//!
+//! * [`queue`] — per-device bounded admission queues with arrival
+//!   timestamps and shed/reject accounting;
+//! * [`capacity`] — per-device in-flight tracking that converts queue
+//!   contents into an expected queueing-delay estimate using the
+//!   [`crate::predictor::TexeModel`] planes;
+//! * [`batch`] — length-bucketed micro-batching keyed on the
+//!   [`crate::predictor::N2mRegressor`] estimate M̂, amortising the
+//!   serial O(M) decode loop across compatible requests;
+//! * [`dispatch`] — the two-lane worker-pool dispatcher tying the above
+//!   together behind a backend-agnostic [`BatchExecutor`].
+//!
+//! The queue-aware decision is then eq. 1 with a wait term on each side
+//! ([`crate::coordinator::Router::decide_loaded`]):
+//!
+//! ```text
+//! d = edge  if  T̂_exe,e + Ŵ_e  ≤  T̂_tx + T̂_exe,c + Ŵ_c  else cloud
+//! ```
+//!
+//! [`crate::sim::harness::run_contended`] replays open-loop Poisson
+//! arrivals through this subsystem against ground-truth tables, and
+//! [`crate::experiments::load`] sweeps offered load to produce
+//! throughput-vs-tail-latency curves per policy.
+
+pub mod batch;
+pub mod capacity;
+pub mod dispatch;
+pub mod queue;
+
+pub use batch::{BatchPolicy, BatchStats};
+pub use capacity::CapacityTracker;
+pub use dispatch::{BatchExecutor, Completion, Dispatcher, DispatcherConfig};
+pub use queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};

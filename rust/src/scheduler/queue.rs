@@ -1,0 +1,217 @@
+//! Per-device admission queue: bounded depth, arrival timestamps, and
+//! shed/reject accounting.
+//!
+//! The queue is FIFO in arrival order. Admission control is a hard
+//! depth bound — an open-loop arrival process (millions of end-nodes
+//! don't slow down because the gateway is busy) must shed load somewhere,
+//! and shedding at admission keeps the tail latency of *admitted*
+//! requests bounded instead of letting every request rot in an unbounded
+//! backlog. Rejected requests are counted, never silently dropped.
+//!
+//! All operations are O(1); the batcher ([`crate::scheduler::batch`]) is
+//! the only component that touches non-head elements, under a bounded
+//! lookahead window.
+
+use std::collections::VecDeque;
+
+/// One request as the scheduler sees it. `payload` is an opaque index
+/// into the caller's own request table (ground truth in simulation, the
+/// pending-job slab in a real gateway) so the scheduler never owns
+/// request bodies.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QueuedRequest {
+    pub id: u64,
+    /// Index into the caller's request/ground-truth table.
+    pub payload: usize,
+    /// Source length (tokens).
+    pub n: usize,
+    /// Scheduler-side output-length estimate M̂ (drives length
+    /// bucketing; [`crate::predictor::N2mRegressor`]).
+    pub m_est: f64,
+    /// Estimated service time on the assigned device (seconds), from
+    /// the device's [`crate::predictor::TexeModel`] plane. Drives the
+    /// capacity tracker's backlog estimate.
+    pub est_service_s: f64,
+    /// Arrival time on the scheduler clock (seconds).
+    pub arrival_s: f64,
+    /// Length bucket (assigned by the batch policy at submission).
+    pub bucket: usize,
+}
+
+/// Outcome of offering a request to the queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    /// Admitted; `depth` is the queue depth after insertion.
+    Admitted { depth: usize },
+    /// Shed at admission: the queue was at its depth bound.
+    Rejected,
+}
+
+impl Admission {
+    pub fn is_admitted(&self) -> bool {
+        matches!(self, Admission::Admitted { .. })
+    }
+}
+
+/// Counters the queue maintains (cheap enough to keep always-on).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct QueueStats {
+    /// Requests offered (admitted + rejected).
+    pub offered: u64,
+    pub admitted: u64,
+    /// Requests shed at admission (depth bound hit).
+    pub rejected: u64,
+    /// High-water mark of the queue depth.
+    pub peak_depth: usize,
+}
+
+/// Bounded FIFO admission queue for one device.
+#[derive(Debug, Clone)]
+pub struct AdmissionQueue {
+    items: VecDeque<QueuedRequest>,
+    max_depth: usize,
+    stats: QueueStats,
+}
+
+impl AdmissionQueue {
+    /// `max_depth` is the admission bound (must be > 0).
+    pub fn new(max_depth: usize) -> Self {
+        assert!(max_depth > 0, "AdmissionQueue needs max_depth > 0");
+        AdmissionQueue {
+            items: VecDeque::with_capacity(max_depth.min(1024)),
+            max_depth,
+            stats: QueueStats::default(),
+        }
+    }
+
+    /// Offer a request: O(1) admit-or-shed.
+    pub fn offer(&mut self, rq: QueuedRequest) -> Admission {
+        self.stats.offered += 1;
+        if self.items.len() >= self.max_depth {
+            self.stats.rejected += 1;
+            return Admission::Rejected;
+        }
+        self.items.push_back(rq);
+        self.stats.admitted += 1;
+        let depth = self.items.len();
+        self.stats.peak_depth = self.stats.peak_depth.max(depth);
+        Admission::Admitted { depth }
+    }
+
+    pub fn peek(&self) -> Option<&QueuedRequest> {
+        self.items.front()
+    }
+
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.items.pop_front()
+    }
+
+    /// Element at position `i` from the front (batcher lookahead).
+    pub fn get(&self, i: usize) -> Option<&QueuedRequest> {
+        self.items.get(i)
+    }
+
+    /// Remove the element at position `i` from the front, preserving the
+    /// relative order of the rest. O(i) — callers keep `i` bounded.
+    pub fn remove(&mut self, i: usize) -> Option<QueuedRequest> {
+        self.items.remove(i)
+    }
+
+    pub fn depth(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.max_depth
+    }
+
+    pub fn stats(&self) -> QueueStats {
+        self.stats
+    }
+
+    /// Waiting time of the oldest queued request at `now_s` (0 if empty).
+    pub fn oldest_wait_s(&self, now_s: f64) -> f64 {
+        self.items
+            .front()
+            .map_or(0.0, |rq| (now_s - rq.arrival_s).max(0.0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rq(id: u64, arrival_s: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            payload: id as usize,
+            n: 10,
+            m_est: 10.0,
+            est_service_s: 0.05,
+            arrival_s,
+            bucket: 0,
+        }
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut q = AdmissionQueue::new(8);
+        for i in 0..5 {
+            assert!(q.offer(rq(i, i as f64)).is_admitted());
+        }
+        for i in 0..5 {
+            assert_eq!(q.pop().unwrap().id, i);
+        }
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn depth_bound_sheds_and_counts() {
+        let mut q = AdmissionQueue::new(3);
+        for i in 0..5 {
+            q.offer(rq(i, 0.0));
+        }
+        assert_eq!(q.depth(), 3);
+        let s = q.stats();
+        assert_eq!(s.offered, 5);
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.rejected, 2);
+        assert_eq!(s.peak_depth, 3);
+        // Shedding frees no slots; popping does.
+        q.pop();
+        assert!(q.offer(rq(9, 1.0)).is_admitted());
+    }
+
+    #[test]
+    fn oldest_wait_tracks_head() {
+        let mut q = AdmissionQueue::new(4);
+        assert_eq!(q.oldest_wait_s(10.0), 0.0);
+        q.offer(rq(0, 2.0));
+        q.offer(rq(1, 3.0));
+        assert!((q.oldest_wait_s(10.0) - 8.0).abs() < 1e-12);
+        q.pop();
+        assert!((q.oldest_wait_s(10.0) - 7.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn remove_preserves_relative_order() {
+        let mut q = AdmissionQueue::new(8);
+        for i in 0..4 {
+            q.offer(rq(i, 0.0));
+        }
+        let taken = q.remove(1).unwrap();
+        assert_eq!(taken.id, 1);
+        let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
+        assert_eq!(rest, vec![0, 2, 3]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_depth_rejected_at_construction() {
+        AdmissionQueue::new(0);
+    }
+}

@@ -1,13 +1,27 @@
 //! The request-stream replay harness.
+//!
+//! Two evaluation modes share the same per-request ground truth
+//! ([`RequestTruth`]):
+//!
+//! * [`run_policy`] — the paper's setting: one request at a time, both
+//!   devices idle, latency = execution (+ network).
+//! * [`run_contended`] — open-loop Poisson arrivals flow through the
+//!   [`crate::scheduler`] subsystem, where concurrent requests genuinely
+//!   contend for bounded device capacity: they queue behind each other,
+//!   get micro-batched, and are shed when the admission bound is hit.
 
 use crate::config::Config;
 use crate::coordinator::{PolicyKind, RouterBuilder};
 use crate::corpus::{Dataset, LangPair};
 use crate::devices::{Calibration, DeviceKind};
+use crate::metrics::{Histogram, OnlineStats};
 use crate::net::trace::ConnectionProfile;
 use crate::net::{Network, TraceGenerator, TxModel};
+use crate::scheduler::{
+    BatchExecutor, Completion, Dispatcher, DispatcherConfig, QueuedRequest,
+};
 use crate::util::{Json, Rng};
-use crate::Result;
+use crate::{Error, Result};
 
 use super::characterize::{characterize, Characterization};
 
@@ -226,6 +240,236 @@ pub fn run_with_estimator(
         cloud_count,
         requests: n,
         correct_rate: correct as f64 / n as f64,
+    })
+}
+
+// ---------------------------------------------------------------- contention
+
+/// Options for the open-loop contended evaluation.
+#[derive(Debug, Clone, Copy)]
+pub struct ContentionOpts {
+    /// Worker pools, queue bound and batching policy.
+    pub dispatcher: DispatcherConfig,
+    /// Fraction of a batch's non-critical-path work (Σtᵢ − max tᵢ) that
+    /// still leaks into its service time: 0 = perfect amortisation of
+    /// the serial O(M) decode loop, 1 = no amortisation (serial).
+    pub batch_residual: f64,
+    /// Add the scheduler's expected-wait term to eq. 1
+    /// ([`crate::coordinator::Router::decide_loaded`]); false = the
+    /// paper's queue-blind decision.
+    pub queue_aware: bool,
+}
+
+impl Default for ContentionOpts {
+    fn default() -> Self {
+        ContentionOpts {
+            dispatcher: DispatcherConfig::default(),
+            batch_residual: 0.15,
+            queue_aware: true,
+        }
+    }
+}
+
+/// Ground-truth batch executor: a batch costs its longest member plus
+/// `residual` of the remaining (amortised) work.
+struct TruthExecutor<'a> {
+    requests: &'a [RequestTruth],
+    residual: f64,
+}
+
+impl BatchExecutor for TruthExecutor<'_> {
+    fn execute(&mut self, device: DeviceKind, batch: &[QueuedRequest], _start_s: f64) -> f64 {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for rq in batch {
+            let truth = &self.requests[rq.payload];
+            let t = match device {
+                DeviceKind::Edge => truth.t_edge,
+                DeviceKind::Cloud => truth.t_cloud,
+            };
+            max = max.max(t);
+            sum += t;
+        }
+        max + (sum - max) * self.residual
+    }
+}
+
+/// Aggregated result of one contended open-loop run.
+#[derive(Debug, Clone)]
+pub struct ContendedResult {
+    /// Policy id, with `+queue` appended when queue-aware.
+    pub policy: String,
+    pub queue_aware: bool,
+    /// Requests offered (admitted + shed).
+    pub offered: usize,
+    pub completed: usize,
+    /// Requests shed at admission (queue depth bound).
+    pub rejected: usize,
+    pub edge_count: usize,
+    pub cloud_count: usize,
+    /// Clock time from first arrival to last response (seconds).
+    pub makespan_s: f64,
+    /// Completed requests per second of makespan (goodput).
+    pub throughput_rps: f64,
+    pub mean_latency_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub p99_s: f64,
+    /// Mean micro-batch size actually dispatched.
+    pub mean_batch: f64,
+    pub edge_peak_depth: usize,
+    pub cloud_peak_depth: usize,
+}
+
+impl ContendedResult {
+    pub fn shed_rate(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.rejected as f64 / self.offered as f64
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("policy", Json::Str(self.policy.clone()))
+            .set("queue_aware", Json::Bool(self.queue_aware))
+            .set("offered", Json::Num(self.offered as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("rejected", Json::Num(self.rejected as f64))
+            .set("shed_rate", Json::Num(self.shed_rate()))
+            .set("edge_count", Json::Num(self.edge_count as f64))
+            .set("cloud_count", Json::Num(self.cloud_count as f64))
+            .set("makespan_s", Json::Num(self.makespan_s))
+            .set("throughput_rps", Json::Num(self.throughput_rps))
+            .set("mean_latency_s", Json::Num(self.mean_latency_s))
+            .set("p50_s", Json::Num(self.p50_s))
+            .set("p95_s", Json::Num(self.p95_s))
+            .set("p99_s", Json::Num(self.p99_s))
+            .set("mean_batch", Json::Num(self.mean_batch))
+            .set("edge_peak_depth", Json::Num(self.edge_peak_depth as f64))
+            .set("cloud_peak_depth", Json::Num(self.cloud_peak_depth as f64));
+        o
+    }
+}
+
+/// Replay `requests` (sorted by arrival) open-loop through the
+/// scheduler: each request is routed at its arrival instant using the
+/// policy (queue-aware or blind), admitted to the chosen device's
+/// bounded queue, micro-batched and executed against the ground truth.
+/// Latency = queue wait + batched service (+ recorded network cost when
+/// offloaded). The Oracle is not defined under contention (it would
+/// need the future arrival process) and is rejected.
+pub fn run_contended(
+    requests: &[RequestTruth],
+    ch: &Characterization,
+    policy: PolicyKind,
+    opts: &ContentionOpts,
+) -> Result<ContendedResult> {
+    if matches!(policy, PolicyKind::Oracle) {
+        return Err(Error::Sim(
+            "oracle is undefined under contention (needs future arrivals)".into(),
+        ));
+    }
+    if !(0.0..=1.0).contains(&opts.batch_residual) {
+        return Err(Error::Config(format!(
+            "batch_residual {} out of [0,1]",
+            opts.batch_residual
+        )));
+    }
+    let mut router = RouterBuilder::new(policy)
+        .texe(ch.texe_edge, ch.texe_cloud)
+        .n2m(ch.n2m)
+        .build()?;
+    let mut disp = Dispatcher::new(&opts.dispatcher);
+    let mut exec = TruthExecutor { requests, residual: opts.batch_residual };
+
+    let mut hist = Histogram::latency();
+    let mut stats = OnlineStats::new();
+    let (mut edge_count, mut cloud_count) = (0usize, 0usize);
+    let mut completed = 0usize;
+    let mut last_done_s = 0.0f64;
+    let mut record = |c: Completion| {
+        let truth = &requests[c.request.payload];
+        let tx_s = if c.device == DeviceKind::Cloud { truth.t_tx } else { 0.0 };
+        let latency = (c.done_s - c.request.arrival_s) + tx_s;
+        hist.record(latency);
+        stats.push(latency);
+        match c.device {
+            DeviceKind::Edge => edge_count += 1,
+            DeviceKind::Cloud => cloud_count += 1,
+        }
+        completed += 1;
+        last_done_s = last_done_s.max(c.done_s + tx_s);
+    };
+
+    let mut rejected = 0usize;
+    for (i, rq) in requests.iter().enumerate() {
+        let now = rq.arrival_s;
+        // Execute everything that finishes before this arrival.
+        disp.run_until(now, &mut exec, &mut record);
+        // Gateway heartbeat keeps T_tx fresh (see run_policy).
+        if router.ttx_stale(now, TTX_REFRESH_S) {
+            router.observe_ttx(now, rq.rtt);
+        }
+        let (edge_wait, cloud_wait) = if opts.queue_aware {
+            (
+                disp.expected_wait_s(DeviceKind::Edge, now),
+                disp.expected_wait_s(DeviceKind::Cloud, now),
+            )
+        } else {
+            (0.0, 0.0)
+        };
+        let device = router.decide_loaded(rq.n, edge_wait, cloud_wait).device;
+        if device == DeviceKind::Cloud {
+            router.observe_ttx(now, rq.rtt);
+        }
+        let m_est = ch.n2m.predict(rq.n);
+        let est_service_s = match device {
+            DeviceKind::Edge => ch.texe_edge.estimate(rq.n, m_est),
+            DeviceKind::Cloud => ch.texe_cloud.estimate(rq.n, m_est),
+        };
+        let queued = QueuedRequest {
+            id: i as u64,
+            payload: i,
+            n: rq.n,
+            m_est,
+            est_service_s,
+            arrival_s: now,
+            bucket: 0, // assigned by the dispatcher
+        };
+        if !disp.submit(device, queued).is_admitted() {
+            rejected += 1;
+        }
+    }
+    // Drain: open-loop arrivals have ended; finish the backlog.
+    disp.run_until(f64::INFINITY, &mut exec, &mut record);
+    drop(record);
+
+    let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
+    let makespan_s = (last_done_s - first_arrival_s).max(0.0);
+    let qa_suffix = if opts.queue_aware { "+queue" } else { "" };
+    Ok(ContendedResult {
+        policy: format!("{}{qa_suffix}", policy.id()),
+        queue_aware: opts.queue_aware,
+        offered: requests.len(),
+        completed,
+        rejected,
+        edge_count,
+        cloud_count,
+        makespan_s,
+        throughput_rps: if makespan_s > 0.0 {
+            completed as f64 / makespan_s
+        } else {
+            0.0
+        },
+        mean_latency_s: stats.mean(),
+        p50_s: hist.p50(),
+        p95_s: hist.p95(),
+        p99_s: hist.p99(),
+        mean_batch: disp.batch_stats().mean_batch_size(),
+        edge_peak_depth: disp.queue_stats(DeviceKind::Edge).peak_depth,
+        cloud_peak_depth: disp.queue_stats(DeviceKind::Cloud).peak_depth,
     })
 }
 

@@ -13,5 +13,6 @@ pub mod harness;
 
 pub use characterize::{characterize, Characterization};
 pub use harness::{
-    run_all_policies, run_policy, run_with_estimator, PolicyResult, TruthTable,
+    run_all_policies, run_contended, run_policy, run_with_estimator,
+    ContendedResult, ContentionOpts, PolicyResult, RequestTruth, TruthTable,
 };

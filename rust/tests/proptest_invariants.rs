@@ -6,11 +6,13 @@ use cnmt::config::Config;
 use cnmt::coordinator::{PolicyKind, RouterBuilder};
 use cnmt::corpus::{prefilter, CorpusGenerator, LangPair, PrefilterRules};
 use cnmt::devices::{Calibration, DeviceKind};
+use cnmt::experiments::load::synth_workload;
+use cnmt::metrics::stats::percentile_sorted;
 use cnmt::metrics::{Histogram, OnlineStats};
 use cnmt::net::trace::{ConnectionProfile, TraceGenerator};
 use cnmt::predictor::fit::{fit_line, fit_plane};
-use cnmt::predictor::{N2mRegressor, TexeModel};
-use cnmt::sim::{run_all_policies, TruthTable};
+use cnmt::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use cnmt::sim::{run_all_policies, run_contended, ContentionOpts, TruthTable};
 use cnmt::util::{Json, Rng};
 
 const TRIALS: usize = 60;
@@ -188,6 +190,139 @@ fn prop_histogram_quantiles_monotone_and_bounded() {
         }
         // p100 within one bucket of the true max.
         assert!(h.quantile(1.0) >= max_v * 0.95);
+    }
+}
+
+#[test]
+fn prop_histogram_quantiles_track_exact_percentiles() {
+    // The geometric-bucket quantile must sit within one bucket-growth
+    // factor of the exact order statistic — the precision the queue-wait
+    // tail estimates depend on.
+    let mut rng = Rng::new(0x7A);
+    for trial in 0..TRIALS {
+        let mut h = Histogram::latency();
+        let mut xs: Vec<f64> = (0..2_000)
+            .map(|_| rng.lognormal(-3.0, 1.0))
+            .collect();
+        for &x in &xs {
+            h.record(x);
+        }
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for q in [0.5, 0.9, 0.95, 0.99] {
+            let approx = h.quantile(q);
+            let exact = percentile_sorted(&xs, q * 100.0);
+            let ratio = approx / exact;
+            assert!(
+                (0.9..=1.1).contains(&ratio),
+                "trial {trial} q={q}: approx {approx} vs exact {exact}"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_histogram_empty_and_single_sample() {
+    // Empty histogram: every quantile and the mean are NaN (not 0 — a
+    // zero would silently poison wait estimates).
+    let h = Histogram::latency();
+    for q in [0.0, 0.5, 0.99, 1.0] {
+        assert!(h.quantile(q).is_nan());
+    }
+    assert!(h.mean().is_nan());
+    // Single sample: every quantile lands in that sample's bucket.
+    let mut rng = Rng::new(0x7B);
+    for _ in 0..TRIALS {
+        let v = rng.lognormal(-4.0, 2.0);
+        let mut h = Histogram::latency();
+        h.record(v);
+        for q in [0.01, 0.5, 1.0] {
+            let x = h.quantile(q);
+            assert!(
+                x >= v * 0.95 && x <= v * 1.05,
+                "single sample {v}: quantile({q}) = {x}"
+            );
+        }
+        assert!((h.mean() - v).abs() < 1e-15);
+    }
+}
+
+#[test]
+fn prop_ttx_empty_and_single_sample() {
+    let mut rng = Rng::new(0x7C);
+    for _ in 0..TRIALS {
+        let fallback = rng.uniform(0.0, 1.0);
+        let e = TtxEstimator::new(rng.uniform(0.05, 1.0));
+        // Empty: the configured prior wins, and the estimate is stale.
+        assert_eq!(e.estimate_or(fallback), fallback);
+        assert_eq!(e.count(), 0);
+        assert!(e.is_stale(rng.uniform(0.0, 1e6), 60.0));
+        // Single sample: the estimate is exactly that sample, whatever
+        // the smoothing factor.
+        let mut e = TtxEstimator::new(rng.uniform(0.05, 1.0));
+        let rtt = rng.uniform(0.0, 0.5);
+        e.observe(0.0, rtt);
+        assert!((e.estimate_or(fallback) - rtt).abs() < 1e-15);
+        assert!(!e.is_stale(1.0, 60.0));
+    }
+}
+
+#[test]
+fn prop_ttx_monotone_rtt_keeps_estimate_monotone_and_bounded() {
+    // Feeding a non-decreasing RTT series must produce a non-decreasing
+    // estimate that never leaves [first, last] — the EWMA cannot
+    // overshoot. (The queue-wait estimator leans on this: a degrading
+    // network can only push the boundary monotonically.)
+    let mut rng = Rng::new(0x7D);
+    for trial in 0..TRIALS {
+        let alpha = rng.uniform(0.05, 1.0);
+        let mut e = TtxEstimator::new(alpha);
+        let mut rtt = rng.uniform(0.001, 0.05);
+        let first = rtt;
+        let mut prev_est = f64::NEG_INFINITY;
+        let mut last = rtt;
+        for step in 0..200 {
+            rtt += rng.exponential(1.0 / 0.002); // non-decreasing drift
+            last = rtt;
+            e.observe(step as f64, rtt);
+            let est = e.estimate_or(0.0);
+            assert!(
+                est >= prev_est - 1e-15,
+                "trial {trial}: estimate decreased under rising RTT"
+            );
+            assert!(
+                est >= first - 1e-15 && est <= last + 1e-15,
+                "trial {trial}: estimate {est} left [{first}, {last}]"
+            );
+            prev_est = est;
+        }
+    }
+}
+
+#[test]
+fn prop_contended_run_conserves_requests() {
+    // Open-loop contention: every offered request is either completed or
+    // shed, whatever the load, policy or scheduler sizing.
+    let mut rng = Rng::new(0x7E);
+    for trial in 0..8 {
+        let load = rng.uniform(2.0, 250.0);
+        let (requests, ch) = synth_workload(trial as u64, 1_500, load);
+        for policy in [PolicyKind::Cnmt, PolicyKind::EdgeOnly, PolicyKind::CloudOnly] {
+            let mut opts = ContentionOpts::default();
+            opts.queue_aware = trial % 2 == 0;
+            opts.dispatcher.max_queue_depth = 16 + rng.usize(512);
+            let r = run_contended(&requests, &ch, policy, &opts).unwrap();
+            assert_eq!(
+                r.completed + r.rejected,
+                r.offered,
+                "trial {trial} {}: conservation broken",
+                r.policy
+            );
+            assert_eq!(r.edge_count + r.cloud_count, r.completed);
+            if r.completed > 0 {
+                assert!(r.p50_s <= r.p99_s + 1e-12);
+                assert!(r.makespan_s > 0.0 && r.throughput_rps > 0.0);
+            }
+        }
     }
 }
 
