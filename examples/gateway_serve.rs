@@ -53,7 +53,8 @@ fn main() -> Result<(), Box<dyn std::error::Error>> {
     let mut rng = Rng::new(42);
     let mut samples = Vec::new();
     for _ in 0..2 {
-        engine.translate(&[7u16; 8], TranslateOptions { force_steps: Some(4), ..Default::default() })?;
+        let warm_opts = TranslateOptions { force_steps: Some(4), ..Default::default() };
+        engine.translate(&[7u16; 8], warm_opts)?;
     }
     for _ in 0..24 {
         let n = 2 + rng.usize(58);

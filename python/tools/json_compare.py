@@ -1,0 +1,46 @@
+#!/usr/bin/env python3
+"""Structural JSON comparison for the CI lockstep gates.
+
+Recursively asserts two JSON files have identical structure, identical
+keys, and numerically-close leaves (rel 1e-9 / abs 1e-12 — tight enough
+that only a real semantic divergence between the rust load driver and
+`load_sweep_mirror.py` can trip it, loose enough to absorb libm
+rounding differences between the two toolchains).
+
+Usage:
+    python3 json_compare.py A.json B.json [more_A.json more_B.json ...]
+"""
+
+import json
+import math
+import sys
+
+
+def walk(x, y, path="$"):
+    assert type(x) == type(y), f"{path}: {type(x)} vs {type(y)}"
+    if isinstance(x, dict):
+        assert sorted(x) == sorted(y), f"{path}: keys differ"
+        for k in x:
+            walk(x[k], y[k], f"{path}.{k}")
+    elif isinstance(x, list):
+        assert len(x) == len(y), f"{path}: length differs"
+        for i, (u, v) in enumerate(zip(x, y)):
+            walk(u, v, f"{path}[{i}]")
+    elif isinstance(x, (int, float)) and not isinstance(x, bool):
+        ok = math.isclose(float(x), float(y), rel_tol=1e-9, abs_tol=1e-12)
+        assert ok, f"{path}: {x} vs {y}"
+    else:
+        assert x == y, f"{path}: {x} vs {y}"
+
+
+def main():
+    paths = sys.argv[1:]
+    if len(paths) < 2 or len(paths) % 2 != 0:
+        sys.exit("usage: json_compare.py A.json B.json [A2.json B2.json ...]")
+    for a, b in zip(paths[0::2], paths[1::2]):
+        walk(json.load(open(a)), json.load(open(b)))
+        print(f"match: {a} == {b}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,7 +1,7 @@
 #!/usr/bin/env python3
 """Standalone mirror of `cnmt experiment load` (rust/src/experiments/load.rs).
 
-Why this exists: the load-sweep report checked in under `reports/` must be
+Why this exists: the load-sweep reports checked in under `reports/` must be
 regenerable in environments that have no rust toolchain (and the sweep's
 dynamics need a second, independent implementation to validate against).
 This script re-implements, operation for operation, exactly what the rust
@@ -10,17 +10,26 @@ driver does:
   * `util::rng::Rng`            — xoshiro256** + splitmix64 seeding, the
                                   exponential / Box-Muller draws (with the
                                   cached spare normal);
-  * `experiments::load`         — the synthetic workload constants and
-                                  draw order;
+  * `experiments::load`         — the synthetic workload constants, draw
+                                  order, drift scenario and closed-loop
+                                  sweep;
   * `metrics::histogram`        — the geometric-bucket quantiles;
   * `scheduler::*`              — admission queue, capacity tracker,
                                   length-bucketed batcher (bounded
-                                  lookahead), two-lane dispatcher;
+                                  lookahead), the two-lane dispatcher's
+                                  global event loop (batch starts + a
+                                  pending-completion min-heap), hedged
+                                  dispatch with cancel tokens;
+  * `predictor::rls`            — the forgetting-factor RLS refit of the
+                                  T_exe planes;
   * `coordinator::router`       — eq. 1 with the expected-wait terms and
                                   the EWMA T_tx estimator + heartbeat;
-  * `sim::harness::run_contended` and the report JSON layout (BTreeMap
-                                  key order, rust f64 `Display` number
-                                  formatting).
+  * `sim::harness`              — `run_contended` (open loop, optional
+                                  drift + adaptive v2) and
+                                  `run_closed_loop` (bounded-outstanding
+                                  clients), and the report JSON layout
+                                  (BTreeMap key order, rust f64 `Display`
+                                  number formatting).
 
 Keep this file in lockstep with the rust sources. When both toolchains are
 available, `cnmt experiment load --out reports` and this script must agree
@@ -28,9 +37,12 @@ available, `cnmt experiment load --out reports` and this script must agree
 
 Usage:
     python3 python/tools/load_sweep_mirror.py [--out reports/load_sweep.json]
+    python3 python/tools/load_sweep_mirror.py --closed-loop \
+        [--out reports/closed_loop.json]
 """
 
 import argparse
+import heapq
 import math
 import os
 
@@ -197,6 +209,40 @@ class TtxEstimator:
         return self.count == 0 or now_s - self.last_obs_time > max_age_s
 
 
+class Rls:
+    """Mirror of predictor::rls::RlsPlane (same op order — exact floats)."""
+
+    def __init__(self, plane, lam, prior_var):
+        self.w = [plane[0], plane[1], plane[2]]
+        self.p = [
+            [prior_var, 0.0, 0.0],
+            [0.0, prior_var, 0.0],
+            [0.0, 0.0, prior_var],
+        ]
+        self.lam = lam
+        self.count = 0
+
+    def observe(self, n, m, t):
+        if not (math.isfinite(n) and math.isfinite(m) and math.isfinite(t)):
+            return
+        x = (n, m, 1.0)
+        p = self.p
+        px = [
+            p[0][0] * x[0] + p[0][1] * x[1] + p[0][2] * x[2],
+            p[1][0] * x[0] + p[1][1] * x[1] + p[1][2] * x[2],
+            p[2][0] * x[0] + p[2][1] * x[1] + p[2][2] * x[2],
+        ]
+        denom = self.lam + x[0] * px[0] + x[1] * px[1] + x[2] * px[2]
+        k = [px[0] / denom, px[1] / denom, px[2] / denom]
+        err = t - (x[0] * self.w[0] + x[1] * self.w[1] + x[2] * self.w[2])
+        for i in range(3):
+            self.w[i] += k[i] * err
+        for i in range(3):
+            for j in range(3):
+                p[i][j] = (p[i][j] - k[i] * px[j]) / self.lam
+        self.count += 1
+
+
 # ---------------------------------------------------------------- workload (experiments::load)
 
 EDGE_PLANE = (1.2e-3, 3.0e-3, 6.0e-3)
@@ -208,6 +254,22 @@ MEAN_N = 17.0
 M_NOISE_STD = 2.0
 EXEC_NOISE_STD = 0.05
 N_MAX = 62
+
+# Drift scenario constants (experiments::load).
+DRIFT_LOAD_RPS = 48.0
+DRIFT_FACTOR = 2.5
+DRIFT_START_FRAC = 0.25
+DRIFT_RAMP_S = 10.0
+DRIFT_SEED_TAG = 0xD21F7
+CLOSED_SEED_TAG = 0xC105ED
+
+# AdaptiveOpts::default() (sim::harness).
+ADAPTIVE_DEFAULTS = {
+    "hedge_margin_s": 0.010,
+    "rls_lambda": 0.998,
+    "rls_prior_var": 1.0,
+    "refit_min_obs": 64,
+}
 
 
 def _round_half_away(x):
@@ -253,11 +315,10 @@ def synth_workload(seed, count, offered_rps):
             )
         )
         sum_m += m
-    mean_m = sum_m / max(count, 1)
-    return requests, mean_m
+    return requests
 
 
-# ---------------------------------------------------------------- scheduler
+# ---------------------------------------------------------------- scheduler (v2)
 
 EDGE, CLOUD = 0, 1
 BUCKET_WIDTH = 8.0
@@ -268,13 +329,24 @@ EDGE_WORKERS = 1
 CLOUD_WORKERS = 4
 BATCH_RESIDUAL = 0.15
 TTX_REFRESH_S = 60.0
+TTX_ALPHA = 0.3
+TTX_PRIOR = 0.05
+
+# QueuedRequest tuple indices: (id, payload, n, m_est, est_service_s,
+# arrival_s, bucket).
+SOLO, WIN, LOSS = 0, 1, 2
+QUEUED, RUNNING, DONE = 0, 1, 2
 
 
 class Lane:
+    """AdmissionQueue + CapacityTracker for one device."""
+
     def __init__(self, workers):
-        self.items = []  # of (id, payload, n, m_est, est_service_s, arrival_s, bucket)
+        self.items = []
         self.free_at = [0.0] * workers
         self.backlog_est_s = 0.0
+        # Cancelled-but-unpurged entries: hold no admission slot.
+        self.dead = 0
         self.offered = 0
         self.admitted = 0
         self.rejected = 0
@@ -282,12 +354,12 @@ class Lane:
 
     def offer(self, rq):
         self.offered += 1
-        if len(self.items) >= MAX_QUEUE_DEPTH:
+        if len(self.items) - self.dead >= MAX_QUEUE_DEPTH:
             self.rejected += 1
             return False
         self.items.append(rq)
         self.admitted += 1
-        self.peak_depth = max(self.peak_depth, len(self.items))
+        self.peak_depth = max(self.peak_depth, len(self.items) - self.dead)
         self.backlog_est_s += max(rq[4], 0.0)
         return True
 
@@ -305,157 +377,519 @@ class Lane:
                 inflight += t - now_s
         return (inflight + self.backlog_est_s) / len(self.free_at)
 
-
-def form_batch(lane, start_s):
-    items = lane.items
-    head = items.pop(0)
-    bucket = head[6]
-    batch = [head]
-    i = 0
-    scanned = 0
-    while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
-        if i >= len(items):
-            break
-        rq = items[i]
-        if rq[6] == bucket and rq[5] <= start_s:
-            batch.append(rq)
-            del items[i]
-        else:
-            i += 1
-        scanned += 1
-    return batch
+    def on_cancel(self, est):
+        self.backlog_est_s = max(self.backlog_est_s - max(est, 0.0), 0.0)
 
 
-def drain_lane(lane, device, horizon_s, requests, record, batch_stats):
-    while lane.items:
-        head_arrival = lane.items[0][5]
-        worker, free_s = lane.earliest_free()
-        start_s = max(free_s, head_arrival)
-        if start_s > horizon_s:
+class Dispatcher:
+    """Mirror of scheduler::Dispatcher (global event loop + hedging)."""
+
+    def __init__(self):
+        self.lanes = [Lane(EDGE_WORKERS), Lane(CLOUD_WORKERS)]
+        self.batches = 0
+        self.batch_requests = 0
+        # Pending completion min-heap: (done_s, seq, start_s, batch_size,
+        # device, rq). seq is unique, so comparisons never reach rq.
+        self.pending = []
+        self.seq = 0
+        # id -> [est_edge, est_cloud, state_edge, state_cloud, winner]
+        self.hedges = {}
+        self.cancelled = set()
+        self.hs_hedged = 0
+        self.hs_wins = [0, 0]
+        self.hs_cancelled = 0
+        self.hs_losers = 0
+
+    def submit(self, device, rq):
+        return self.lanes[device].offer(rq)
+
+    def submit_hedged(self, rq, est_edge, est_cloud):
+        edge_rq = rq[:4] + (est_edge,) + rq[5:]
+        cloud_rq = rq[:4] + (est_cloud,) + rq[5:]
+        edge_ok = self.lanes[EDGE].offer(edge_rq)
+        cloud_ok = self.lanes[CLOUD].offer(cloud_rq)
+        if edge_ok and cloud_ok:
+            self.hs_hedged += 1
+            self.hedges[rq[0]] = [est_edge, est_cloud, QUEUED, QUEUED, None]
+            return "hedged"
+        if edge_ok:
+            return "single_edge"
+        if cloud_ok:
+            return "single_cloud"
+        return "rejected"
+
+    def lane_next_start(self, device):
+        lane = self.lanes[device]
+        while True:
+            if not lane.items:
+                return None
+            head = lane.items[0]
+            if head[0] in self.cancelled:
+                lane.items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.cancelled.discard(head[0])
+                continue
+            _w, free_s = lane.earliest_free()
+            return max(free_s, head[5])
+
+    def next_batch_start(self):
+        e = self.lane_next_start(EDGE)
+        c = self.lane_next_start(CLOUD)
+        if e is None and c is None:
+            return None
+        if c is None or (e is not None and e <= c):
+            return (EDGE, e)
+        return (CLOUD, c)
+
+    def next_event_s(self):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return None
+        if ns is None:
+            return nd
+        if nd is None:
+            return ns[1]
+        return min(ns[1], nd)
+
+    def form_batch(self, lane, start_s):
+        items = lane.items
+        while True:
+            if not items:
+                return []
+            if items[0][0] in self.cancelled:
+                self.cancelled.discard(items[0][0])
+                items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+            else:
+                break
+        head = items.pop(0)
+        bucket = head[6]
+        batch = [head]
+        i = 0
+        scanned = 0
+        while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
+            if i >= len(items):
+                break
+            rq = items[i]
+            if rq[0] in self.cancelled:
+                del items[i]
+                lane.dead = max(lane.dead - 1, 0)
+                self.cancelled.discard(rq[0])
+                continue
+            if rq[6] == bucket and rq[5] <= start_s:
+                batch.append(rq)
+                del items[i]
+            else:
+                i += 1
+            scanned += 1
+        return batch
+
+    def dispatch_at(self, device, start_s, exec_fn):
+        lane = self.lanes[device]
+        batch = self.form_batch(lane, start_s)
+        if not batch:
             return
-        batch = form_batch(lane, start_s)
+        for rq in batch:
+            h = self.hedges.get(rq[0])
+            if h is not None:
+                h[2 + device] = RUNNING
         est_sum = 0.0
-        mx = 0.0
-        sm = 0.0
         for rq in batch:
             est_sum += rq[4]
-            truth = requests[rq[1]]
-            t = truth.t_edge if device == EDGE else truth.t_cloud
-            if t > mx:
-                mx = t
-            sm += t
-        service_s = max(mx + (sm - mx) * BATCH_RESIDUAL, 0.0)
+        service_s = max(exec_fn(device, batch, start_s), 0.0)
         done_s = start_s + service_s
+        worker, _free = lane.earliest_free()
         lane.backlog_est_s = max(lane.backlog_est_s - est_sum, 0.0)
         lane.free_at[worker] = done_s
-        batch_stats[0] += 1
-        batch_stats[1] += len(batch)
+        self.batches += 1
+        self.batch_requests += len(batch)
+        bsize = len(batch)
         for rq in batch:
-            record(rq, device, done_s)
+            heapq.heappush(
+                self.pending, (done_s, self.seq, start_s, bsize, device, rq)
+            )
+            self.seq += 1
+
+    def resolve_completion(self, device, rq_id):
+        h = self.hedges.get(rq_id)
+        if h is None:
+            return SOLO
+        h[2 + device] = DONE
+        if h[4] is not None:
+            del self.hedges[rq_id]
+            self.hs_losers += 1
+            return LOSS
+        h[4] = device
+        self.hs_wins[device] += 1
+        twin = 1 - device
+        if h[2 + twin] == QUEUED:
+            self.cancelled.add(rq_id)
+            self.hs_cancelled += 1
+            self.lanes[twin].on_cancel(h[twin])
+            self.lanes[twin].dead += 1
+            del self.hedges[rq_id]
+        return WIN
+
+    def flush_one(self, out):
+        done_s, _seq, start_s, bsize, device, rq = heapq.heappop(self.pending)
+        kind = self.resolve_completion(device, rq[0])
+        out.append((rq, device, start_s, done_s, bsize, kind))
+
+    def step(self, horizon_s, exec_fn, out):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return False
+        completion_first = ns is None or (nd is not None and nd <= ns[1])
+        if completion_first:
+            if nd > horizon_s:
+                return False
+            self.flush_one(out)
+        else:
+            device, start_s = ns
+            if start_s > horizon_s:
+                return False
+            self.dispatch_at(device, start_s, exec_fn)
+        return True
+
+    def run_until(self, horizon_s, exec_fn, out):
+        while self.step(horizon_s, exec_fn, out):
+            pass
 
 
-# ---------------------------------------------------------------- router + run_contended
+# ---------------------------------------------------------------- harness
 
 EDGE_ONLY, CLOUD_ONLY, CNMT = "edge_only", "cloud_only", "cnmt"
 
 
-def run_contended(requests, mean_m, policy, queue_aware):
-    ttx = TtxEstimator(0.3)
-    ttx_prior = 0.05
-    lanes = [Lane(EDGE_WORKERS), Lane(CLOUD_WORKERS)]
-    hist = Histogram()
-    # OnlineStats mean via Welford, as in metrics::stats.
-    stats_count = 0
-    stats_mean = 0.0
-    counts = [0, 0]
-    completed = [0]
-    last_done = [0.0]
-    batch_stats = [0, 0]
+def drift_factor_at(drift, t_s):
+    _device, start_s, ramp_s, factor = drift
+    if t_s <= start_s:
+        return 1.0
+    if ramp_s <= 0.0:
+        return factor
+    frac = min((t_s - start_s) / ramp_s, 1.0)
+    return 1.0 + (factor - 1.0) * frac
 
-    def record(rq, device, done_s):
-        nonlocal stats_count, stats_mean
-        truth = requests[rq[1]]
-        tx_s = truth.t_tx if device == CLOUD else 0.0
+
+def true_service_s(truth, device, start_s, drift):
+    base = truth.t_edge if device == EDGE else truth.t_cloud
+    if drift is not None and drift[0] == device:
+        return base * drift_factor_at(drift, start_s)
+    return base
+
+
+class Acct:
+    """Mirror of sim::harness::Acct (Welford mean, as metrics::stats)."""
+
+    def __init__(self):
+        self.hist = Histogram()
+        self.stats_count = 0
+        self.stats_mean = 0.0
+        self.edge_count = 0
+        self.cloud_count = 0
+        self.completed = 0
+        self.last_done_s = 0.0
+        self.useful_work_s = 0.0
+        self.wasted_work_s = 0.0
+
+    def on_completion(self, comp, t_true_s, tx_s):
+        rq, device, _start_s, done_s, _bsize, kind = comp
+        if kind == LOSS:
+            self.wasted_work_s += t_true_s
+            return False
+        self.useful_work_s += t_true_s
         latency = (done_s - rq[5]) + tx_s
-        hist.record(latency)
-        stats_count += 1
-        stats_mean += (latency - stats_mean) / stats_count
-        counts[device] += 1
-        completed[0] += 1
-        if done_s + tx_s > last_done[0]:
-            last_done[0] = done_s + tx_s
-
-    rejected = 0
-    for i, truth in enumerate(requests):
-        now = truth.arrival_s
-        for d in (EDGE, CLOUD):
-            drain_lane(lanes[d], d, now, requests, record, batch_stats)
-        if ttx.is_stale(now, TTX_REFRESH_S):
-            ttx.observe(now, truth.rtt)
-        if queue_aware:
-            edge_wait = lanes[EDGE].expected_wait_s(now)
-            cloud_wait = lanes[CLOUD].expected_wait_s(now)
+        self.hist.record(latency)
+        self.stats_count += 1
+        self.stats_mean += (latency - self.stats_mean) / self.stats_count
+        if device == EDGE:
+            self.edge_count += 1
         else:
-            edge_wait = cloud_wait = 0.0
-        ttx_est = ttx.estimate_or(ttx_prior)
-        if policy == EDGE_ONLY:
-            device = EDGE
-        elif policy == CLOUD_ONLY:
-            device = CLOUD
-        else:
-            m_est_r = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
-            t_e = texe_estimate(EDGE_PLANE, truth.n, m_est_r)
-            t_c = texe_estimate(CLOUD_PLANE, truth.n, m_est_r)
-            device = EDGE if t_e + edge_wait <= ttx_est + t_c + cloud_wait else CLOUD
-        if device == CLOUD:
-            ttx.observe(now, truth.rtt)
-        m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
-        plane = EDGE_PLANE if device == EDGE else CLOUD_PLANE
-        est_service = texe_estimate(plane, truth.n, m_est)
-        bucket = int(max(m_est, 0.0) / BUCKET_WIDTH)
-        rq = (i, i, truth.n, m_est, est_service, now, bucket)
-        if not lanes[device].offer(rq):
-            rejected += 1
-    for d in (EDGE, CLOUD):
-        drain_lane(lanes[d], d, float("inf"), requests, record, batch_stats)
+            self.cloud_count += 1
+        self.completed += 1
+        if done_s + tx_s > self.last_done_s:
+            self.last_done_s = done_s + tx_s
+        return True
 
-    first_arrival = requests[0].arrival_s if requests else 0.0
-    makespan = max(last_done[0] - first_arrival, 0.0)
+    def process(self, comps, pool, drift, rls, on_result):
+        for comp in comps:
+            rq, device, start_s, _done_s, _bsize, _kind = comp
+            truth = pool[rq[1]]
+            t_true = true_service_s(truth, device, start_s, drift)
+            tx_s = truth.t_tx if device == CLOUD else 0.0
+            is_result = self.on_completion(comp, t_true, tx_s)
+            if rls is not None:
+                rls[device].observe(float(truth.n), float(truth.m_real), t_true)
+            if is_result and on_result is not None:
+                on_result(comp)
+
+
+class RunState:
+    """Everything one contended run carries (router + planes + acct)."""
+
+    def __init__(self, pool, policy, queue_aware, adaptive, drift):
+        self.pool = pool
+        self.policy = policy
+        self.queue_aware = queue_aware
+        self.adaptive = adaptive
+        self.drift = drift
+        self.ttx = TtxEstimator(TTX_ALPHA)
+        self.disp = Dispatcher()
+        self.acct = Acct()
+        self.texe_e = EDGE_PLANE
+        self.texe_c = CLOUD_PLANE
+        if adaptive is not None:
+            self.rls = [
+                Rls(EDGE_PLANE, adaptive["rls_lambda"], adaptive["rls_prior_var"]),
+                Rls(CLOUD_PLANE, adaptive["rls_lambda"], adaptive["rls_prior_var"]),
+            ]
+        else:
+            self.rls = None
+
+    def exec_fn(self, device, batch, start_s):
+        mx = 0.0
+        sm = 0.0
+        for rq in batch:
+            truth = self.pool[rq[1]]
+            t = true_service_s(truth, device, start_s, self.drift)
+            if t > mx:
+                mx = t
+            sm += t
+        return mx + (sm - mx) * BATCH_RESIDUAL
+
+
+def apply_refit(st):
+    if st.adaptive is None:
+        return
+    rls_e, rls_c = st.rls
+    if rls_e.count >= st.adaptive["refit_min_obs"]:
+        st.texe_e = (rls_e.w[0], rls_e.w[1], rls_e.w[2])
+    if rls_c.count >= st.adaptive["refit_min_obs"]:
+        st.texe_c = (rls_c.w[0], rls_c.w[1], rls_c.w[2])
+
+
+def route_and_submit(st, rq_id, truth, now):
+    """Mirror of sim::harness::route_and_submit. Returns admitted."""
+    if st.ttx.is_stale(now, TTX_REFRESH_S):
+        st.ttx.observe(now, truth.rtt)
+    if st.queue_aware:
+        edge_wait = st.disp.lanes[EDGE].expected_wait_s(now)
+        cloud_wait = st.disp.lanes[CLOUD].expected_wait_s(now)
+    else:
+        edge_wait = cloud_wait = 0.0
+    ttx_est = st.ttx.estimate_or(TTX_PRIOR)
+    if st.policy == EDGE_ONLY:
+        device = EDGE
+        t_e = t_c = float("nan")
+    elif st.policy == CLOUD_ONLY:
+        device = CLOUD
+        t_e = t_c = float("nan")
+    else:
+        m_est_r = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
+        t_e = texe_estimate(st.texe_e, truth.n, m_est_r)
+        t_c = texe_estimate(st.texe_c, truth.n, m_est_r)
+        device = EDGE if t_e + edge_wait <= ttx_est + t_c + cloud_wait else CLOUD
+    m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
+    hedge = False
+    if st.adaptive is not None:
+        margin = (t_e + edge_wait) - (ttx_est + t_c + cloud_wait)
+        hedge = (
+            st.adaptive["hedge_margin_s"] > 0.0
+            and math.isfinite(margin)
+            and abs(margin) <= st.adaptive["hedge_margin_s"]
+        )
+    bucket = int(max(m_est, 0.0) / BUCKET_WIDTH)
+    if hedge:
+        est_e = texe_estimate(st.texe_e, truth.n, m_est)
+        est_c = texe_estimate(st.texe_c, truth.n, m_est)
+        rq = (rq_id, rq_id, truth.n, m_est, 0.0, now, bucket)
+        outcome = st.disp.submit_hedged(rq, est_e, est_c)
+        # Only a cloud copy actually in flight refreshes T_tx.
+        if outcome in ("hedged", "single_cloud"):
+            st.ttx.observe(now, truth.rtt)
+        return outcome != "rejected"
+    if device == CLOUD:
+        st.ttx.observe(now, truth.rtt)
+    est = texe_estimate(st.texe_e if device == EDGE else st.texe_c, truth.n, m_est)
+    rq = (rq_id, rq_id, truth.n, m_est, est, now, bucket)
+    return st.disp.submit(device, rq)
+
+
+def policy_label(policy, queue_aware, adaptive):
+    if adaptive is not None:
+        return policy + ("+adaptive" if queue_aware else "+adaptive-blind")
+    if queue_aware:
+        return policy + "+queue"
+    return policy
+
+
+def finish_contended(st, offered, rejected, makespan_s):
+    disp = st.disp
+    acct = st.acct
+    hedged = disp.hs_hedged
+    useful = acct.useful_work_s
+    wasted = acct.wasted_work_s
+    total_work = useful + wasted
     mean_batch = (
-        batch_stats[1] / batch_stats[0] if batch_stats[0] else float("nan")
+        disp.batch_requests / disp.batches if disp.batches else float("nan")
     )
     return {
-        "policy": policy + ("+queue" if queue_aware else ""),
-        "queue_aware": queue_aware,
-        "offered": float(len(requests)),
-        "completed": float(completed[0]),
+        "policy": policy_label(st.policy, st.queue_aware, st.adaptive),
+        "queue_aware": st.queue_aware,
+        "adaptive": st.adaptive is not None,
+        "offered": float(offered),
+        "completed": float(acct.completed),
         "rejected": float(rejected),
-        "shed_rate": (rejected / len(requests)) if requests else 0.0,
-        "edge_count": float(counts[EDGE]),
-        "cloud_count": float(counts[CLOUD]),
-        "makespan_s": makespan,
-        "throughput_rps": completed[0] / makespan if makespan > 0.0 else 0.0,
-        "mean_latency_s": stats_mean if stats_count else float("nan"),
-        "p50_s": hist.quantile(0.50),
-        "p95_s": hist.quantile(0.95),
-        "p99_s": hist.quantile(0.99),
+        "shed_rate": (rejected / offered) if offered else 0.0,
+        "edge_count": float(acct.edge_count),
+        "cloud_count": float(acct.cloud_count),
+        "makespan_s": makespan_s,
+        "throughput_rps": acct.completed / makespan_s if makespan_s > 0.0 else 0.0,
+        "mean_latency_s": acct.stats_mean if acct.stats_count else float("nan"),
+        "p50_s": acct.hist.quantile(0.50),
+        "p95_s": acct.hist.quantile(0.95),
+        "p99_s": acct.hist.quantile(0.99),
         "mean_batch": mean_batch,
-        "edge_peak_depth": float(lanes[EDGE].peak_depth),
-        "cloud_peak_depth": float(lanes[CLOUD].peak_depth),
+        "edge_peak_depth": float(disp.lanes[EDGE].peak_depth),
+        "cloud_peak_depth": float(disp.lanes[CLOUD].peak_depth),
+        "hedged": float(hedged),
+        "hedge_rate": (hedged / offered) if offered else 0.0,
+        "hedge_wins_edge": float(disp.hs_wins[EDGE]),
+        "hedge_wins_cloud": float(disp.hs_wins[CLOUD]),
+        "hedge_cancelled": float(disp.hs_cancelled),
+        "hedge_wasted": float(disp.hs_losers),
+        "useful_work_s": useful,
+        "wasted_work_s": wasted,
+        "wasted_frac": wasted / total_work if total_work > 0.0 else 0.0,
     }
 
 
-# ---------------------------------------------------------------- sweep + json
+def run_contended(pool, policy, queue_aware, adaptive=None, drift=None):
+    st = RunState(pool, policy, queue_aware, adaptive, drift)
+    rejected = 0
+    for i, truth in enumerate(pool):
+        now = truth.arrival_s
+        comps = []
+        st.disp.run_until(now, st.exec_fn, comps)
+        st.acct.process(comps, pool, drift, st.rls, None)
+        if adaptive is not None:
+            apply_refit(st)
+        if not route_and_submit(st, i, truth, now):
+            rejected += 1
+    comps = []
+    st.disp.run_until(float("inf"), st.exec_fn, comps)
+    st.acct.process(comps, pool, drift, st.rls, None)
+    first_arrival = pool[0].arrival_s if pool else 0.0
+    makespan_s = max(st.acct.last_done_s - first_arrival, 0.0)
+    return finish_contended(st, len(pool), rejected, makespan_s)
+
+
+def run_closed_loop(pool, policy, queue_aware, adaptive, clients, think_s, drift=None):
+    total = len(pool)
+    st = RunState(pool, policy, queue_aware, adaptive, drift)
+    ready_s = [0.0] * clients
+    waiting = [False] * clients
+    client_of = [0] * total
+    next_body = 0
+    rejected = 0
+    resolved = [0]
+
+    while resolved[0] < total:
+        t_submit = float("inf")
+        client = -1
+        if next_body < total:
+            for k in range(clients):
+                if not waiting[k] and ready_s[k] < t_submit:
+                    t_submit = ready_s[k]
+                    client = k
+        next_event = st.disp.next_event_s()
+        submit_first = client != -1 and (next_event is None or t_submit <= next_event)
+        if submit_first:
+            body = next_body
+            next_body += 1
+            client_of[body] = client
+            if route_and_submit(st, body, pool[body], t_submit):
+                waiting[client] = True
+            else:
+                rejected += 1
+                resolved[0] += 1
+        else:
+            if next_event is None:
+                break
+            comps = []
+            st.disp.step(next_event, st.exec_fn, comps)
+
+            def on_result(comp):
+                k = client_of[comp[0][1]]
+                # The client only sees the result after the network
+                # transit — the same t_tx the latency metric charges.
+                tx_s = pool[comp[0][1]].t_tx if comp[1] == CLOUD else 0.0
+                waiting[k] = False
+                ready_s[k] = comp[3] + tx_s + think_s
+                resolved[0] += 1
+
+            st.acct.process(comps, pool, drift, st.rls, on_result)
+            if adaptive is not None:
+                apply_refit(st)
+    comps = []
+    st.disp.run_until(float("inf"), st.exec_fn, comps)
+    st.acct.process(comps, pool, drift, st.rls, None)
+    makespan_s = max(st.acct.last_done_s, 0.0)
+    return finish_contended(st, total, rejected, makespan_s)
+
+
+# ---------------------------------------------------------------- sweeps + json
 
 SEED = 20220315
 REQUESTS_PER_POINT = 20000
 LOADS_RPS = [4.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0]
 CONFIGURATIONS = [
-    (EDGE_ONLY, False),
-    (CLOUD_ONLY, False),
-    (CNMT, False),
-    (CNMT, True),
+    (EDGE_ONLY, False, False),
+    (CLOUD_ONLY, False, False),
+    (CNMT, False, False),
+    (CNMT, True, False),
+    (CNMT, True, True),
 ]
+CLOSED_CONFIGURATIONS = [
+    (CLOUD_ONLY, False, False),
+    (CNMT, True, False),
+    (CNMT, True, True),
+]
+DEFAULT_CLIENTS = [1, 2, 4, 8, 16, 32, 64]
+
+
+def run_drift(seed, requests_per_point):
+    pool = synth_workload(seed ^ DRIFT_SEED_TAG, requests_per_point, DRIFT_LOAD_RPS)
+    start_s = (requests_per_point / DRIFT_LOAD_RPS) * DRIFT_START_FRAC
+    spec = (EDGE, start_s, DRIFT_RAMP_S, DRIFT_FACTOR)
+    policies = {}
+    for policy, aware, adaptive in [
+        (CNMT, False, False),
+        (CNMT, True, False),
+        (CNMT, True, True),
+    ]:
+        r = run_contended(
+            pool,
+            policy,
+            aware,
+            ADAPTIVE_DEFAULTS if adaptive else None,
+            spec,
+        )
+        policies[r["policy"]] = r
+    return {
+        "spec": {
+            "device": "edge",
+            "start_s": start_s,
+            "ramp_s": DRIFT_RAMP_S,
+            "factor": DRIFT_FACTOR,
+        },
+        "offered_rps": DRIFT_LOAD_RPS,
+        "policies": policies,
+        "headline_p99_ratio": policies["cnmt+queue"]["p99_s"]
+        / policies["cnmt+adaptive"]["p99_s"],
+    }
 
 
 def run_sweep(loads_rps=None, requests_per_point=None):
@@ -466,12 +900,37 @@ def run_sweep(loads_rps=None, requests_per_point=None):
     points = []
     for i, load in enumerate(loads_rps):
         seed = SEED ^ (((i + 1) * 0x9E3779B97F4A7C15) & MASK)
-        requests, mean_m = synth_workload(seed, requests_per_point, load)
+        pool = synth_workload(seed, requests_per_point, load)
         policies = {}
-        for policy, aware in CONFIGURATIONS:
-            r = run_contended(requests, mean_m, policy, aware)
+        for policy, aware, adaptive in CONFIGURATIONS:
+            r = run_contended(
+                pool, policy, aware, ADAPTIVE_DEFAULTS if adaptive else None
+            )
             policies[r["policy"]] = r
         points.append({"offered_rps": load, "policies": policies})
+    return points
+
+
+def run_closed_sweep(clients_list=None, requests_per_point=None, think_s=0.0):
+    clients_list = DEFAULT_CLIENTS if clients_list is None else clients_list
+    requests_per_point = (
+        REQUESTS_PER_POINT if requests_per_point is None else requests_per_point
+    )
+    pool = synth_workload(SEED ^ CLOSED_SEED_TAG, requests_per_point, 1.0)
+    points = []
+    for clients in clients_list:
+        policies = {}
+        for policy, aware, adaptive in CLOSED_CONFIGURATIONS:
+            r = run_closed_loop(
+                pool,
+                policy,
+                aware,
+                ADAPTIVE_DEFAULTS if adaptive else None,
+                clients,
+                think_s,
+            )
+            policies[r["policy"]] = r
+        points.append({"clients": float(clients), "policies": policies})
     return points
 
 
@@ -527,9 +986,70 @@ def to_json_value(v, indent, depth):
     return fmt_num(v)
 
 
+def write_json(path, root):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    with open(path, "w") as f:
+        f.write(to_json_value(root, 2, 0))
+    print(f"wrote {path}")
+
+
+def summarize_open(points, drift):
+    hdr = (
+        f"{'load':>6} {'policy':<14} {'goodput':>8} {'shed%':>6} {'p50ms':>8} "
+        f"{'p99ms':>9} {'batch':>6} {'hedge%':>7} {'waste%':>7}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    names = ["edge_only", "cloud_only", "cnmt", "cnmt+queue", "cnmt+adaptive"]
+    for p in points:
+        for name in names:
+            r = p["policies"][name]
+            print(
+                f"{p['offered_rps']:>6.0f} {name:<14} {r['throughput_rps']:>8.1f} "
+                f"{r['shed_rate'] * 100:>6.1f} {r['p50_s'] * 1e3:>8.1f} "
+                f"{r['p99_s'] * 1e3:>9.1f} {r['mean_batch']:>6.2f} "
+                f"{r['hedge_rate'] * 100:>7.1f} {r['wasted_frac'] * 100:>7.1f}"
+            )
+    print("\ndrift scenario (edge slows %.1fx at t=%.0fs, %s r/s offered):" % (
+        drift["spec"]["factor"],
+        drift["spec"]["start_s"],
+        fmt_num(drift["offered_rps"]),
+    ))
+    for name in ["cnmt", "cnmt+queue", "cnmt+adaptive"]:
+        r = drift["policies"][name]
+        print(
+            f"{'':>6} {name:<14} {r['throughput_rps']:>8.1f} "
+            f"{r['shed_rate'] * 100:>6.1f} {r['p50_s'] * 1e3:>8.1f} "
+            f"{r['p99_s'] * 1e3:>9.1f} {r['mean_batch']:>6.2f} "
+            f"{r['hedge_rate'] * 100:>7.1f} {r['wasted_frac'] * 100:>7.1f}"
+        )
+    print(
+        "\ndrift headline: static/adaptive p99 ratio = %.1fx"
+        % drift["headline_p99_ratio"]
+    )
+
+
+def summarize_closed(points):
+    hdr = (
+        f"{'K':>4} {'policy':<14} {'goodput':>8} {'mean ms':>8} {'p50ms':>8} "
+        f"{'p99ms':>9} {'batch':>6} {'hedge%':>7}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for p in points:
+        for name in ["cloud_only", "cnmt+queue", "cnmt+adaptive"]:
+            r = p["policies"][name]
+            print(
+                f"{int(p['clients']):>4} {name:<14} {r['throughput_rps']:>8.1f} "
+                f"{r['mean_latency_s'] * 1e3:>8.1f} {r['p50_s'] * 1e3:>8.1f} "
+                f"{r['p99_s'] * 1e3:>9.1f} {r['mean_batch']:>6.2f} "
+                f"{r['hedge_rate'] * 100:>7.1f}"
+            )
+
+
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--out", default="reports/load_sweep.json")
+    ap.add_argument("--out", default=None)
     ap.add_argument(
         "--loads",
         default=None,
@@ -541,15 +1061,45 @@ def main():
         default=REQUESTS_PER_POINT,
         help="requests per sweep point (mirrors cnmt --load-requests)",
     )
-    args = ap.parse_args()
-    loads = (
-        [float(s) for s in args.loads.split(",")] if args.loads else LOADS_RPS
+    ap.add_argument(
+        "--closed-loop",
+        action="store_true",
+        help="closed-loop sweep (mirrors cnmt --closed-loop)",
     )
+    ap.add_argument(
+        "--clients",
+        default=None,
+        help="comma-separated client counts (mirrors cnmt --clients)",
+    )
+    ap.add_argument(
+        "--think-ms",
+        type=float,
+        default=0.0,
+        help="per-client think time in ms (mirrors cnmt --think-ms)",
+    )
+    args = ap.parse_args()
 
+    if args.closed_loop:
+        clients = (
+            [int(s) for s in args.clients.split(",")] if args.clients else None
+        )
+        think_s = args.think_ms / 1e3
+        points = run_closed_sweep(clients, args.requests, think_s)
+        root = {
+            "seed": float(SEED),
+            "requests_per_point": float(args.requests),
+            "think_s": think_s,
+            "points": points,
+        }
+        write_json(args.out or "reports/closed_loop.json", root)
+        summarize_closed(points)
+        return
+
+    loads = [float(s) for s in args.loads.split(",")] if args.loads else LOADS_RPS
     points = run_sweep(loads, args.requests)
+    drift = run_drift(SEED, args.requests)
     last = points[-1]["policies"]
     headline = last["cnmt"]["p99_s"] / last["cnmt+queue"]["p99_s"]
-
     root = {
         "workload": {
             "edge_plane": list(EDGE_PLANE),
@@ -562,26 +1112,11 @@ def main():
         "seed": float(SEED),
         "requests_per_point": float(args.requests),
         "points": points,
+        "drift": drift,
         "headline_p99_ratio": headline,
     }
-
-    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
-    with open(args.out, "w") as f:
-        f.write(to_json_value(root, 2, 0))
-    print(f"wrote {args.out}")
-
-    # Human-readable summary (matches load::render_text's columns).
-    hdr = f"{'load':>6} {'policy':<12} {'goodput':>8} {'shed%':>6} {'p50ms':>8} {'p99ms':>9} {'batch':>6}"
-    print(hdr)
-    print("-" * len(hdr))
-    for p in points:
-        for name in ("edge_only", "cloud_only", "cnmt", "cnmt+queue"):
-            r = p["policies"][name]
-            print(
-                f"{p['offered_rps']:>6.0f} {name:<12} {r['throughput_rps']:>8.1f} "
-                f"{r['shed_rate'] * 100:>6.1f} {r['p50_s'] * 1e3:>8.1f} "
-                f"{r['p99_s'] * 1e3:>9.1f} {r['mean_batch']:>6.2f}"
-            )
+    write_json(args.out or "reports/load_sweep.json", root)
+    summarize_open(points, drift)
     print(f"\nheadline: blind/aware p99 ratio at max load = {headline:.1f}x")
 
 

@@ -76,6 +76,7 @@ impl Config {
         }
     }
 
+    /// Check the configuration for internal consistency.
     pub fn validate(&self) -> Result<()> {
         if self.requests == 0 {
             return Err(Error::Config("requests must be > 0".into()));
@@ -100,6 +101,7 @@ impl Config {
 
     // ------------------------------------------------------------ JSON I/O
 
+    /// Serialise the configuration.
     pub fn to_json(&self) -> Json {
         let mut o = Json::object();
         o.set("seed", Json::Num(self.seed as f64))
@@ -137,6 +139,7 @@ impl Config {
         o
     }
 
+    /// Parse a configuration serialised by [`Config::to_json`].
     pub fn from_json(j: &Json) -> Result<Config> {
         let mut c = Config::default();
         if let Some(v) = j.get_opt("seed")? {
@@ -198,10 +201,12 @@ impl Config {
         Ok(c)
     }
 
+    /// Load a configuration from a JSON file.
     pub fn load(path: &Path) -> Result<Config> {
         Config::from_json(&Json::parse_file(path)?)
     }
 
+    /// Write the configuration to a JSON file.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())

@@ -35,7 +35,9 @@ use crate::{Error, Result};
 /// Gateway configuration.
 #[derive(Debug, Clone)]
 pub struct GatewayConfig {
+    /// Directory holding compiled model artifacts.
     pub artifacts_dir: PathBuf,
+    /// Model name served (must exist in the manifest).
     pub model: String,
     /// Multiplier stretching edge execution (1.0 = no stretch).
     pub edge_slowdown: f64,
@@ -210,6 +212,7 @@ impl Gateway {
         self.recorder.lock().unwrap().to_json()
     }
 
+    /// Routing decisions made so far.
     pub fn decisions(&self) -> u64 {
         self.router.lock().unwrap().decisions()
     }

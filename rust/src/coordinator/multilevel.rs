@@ -21,6 +21,7 @@ use crate::{Error, Result};
 /// One tier of the hierarchy.
 #[derive(Debug, Clone)]
 pub struct Tier {
+    /// Tier name (reports).
     pub name: String,
     /// Fitted execution-time plane for this tier's hardware.
     pub texe: TexeModel,
@@ -47,10 +48,12 @@ pub struct MultiDecision {
     pub tier: usize,
     /// Estimated total latency per tier (seconds).
     pub totals: Vec<f64>,
+    /// M̂ used for the decision.
     pub m_est: f64,
 }
 
 impl MultiRouter {
+    /// Router over ≥ 2 tiers sharing one N→M regressor.
     pub fn new(tiers: Vec<Tier>, n2m: N2mRegressor) -> Result<MultiRouter> {
         if tiers.len() < 2 {
             return Err(Error::Config("multi-level router needs >= 2 tiers".into()));
@@ -58,10 +61,12 @@ impl MultiRouter {
         Ok(MultiRouter { tiers, n2m, decisions: 0 })
     }
 
+    /// The configured tiers.
     pub fn tiers(&self) -> &[Tier] {
         &self.tiers
     }
 
+    /// Routing decisions made so far.
     pub fn decisions(&self) -> u64 {
         self.decisions
     }

@@ -6,7 +6,9 @@ use crate::devices::DeviceKind;
 /// One translation request as seen by the coordinator.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-assigned request id.
     pub id: u64,
+    /// Language pair (selects model + regressor).
     pub pair: LangPair,
     /// Source token ids (content only; runtime appends EOS).
     pub src: Vec<u16>,
@@ -19,6 +21,7 @@ pub struct Request {
 }
 
 impl Request {
+    /// Source length (tokens).
     pub fn n(&self) -> usize {
         self.src.len()
     }
@@ -27,6 +30,7 @@ impl Request {
 /// What happened to a request.
 #[derive(Debug, Clone)]
 pub struct Outcome {
+    /// Id of the request this outcome belongs to.
     pub id: u64,
     /// Where the router sent it.
     pub device: DeviceKind,

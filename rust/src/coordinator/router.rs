@@ -23,6 +23,7 @@ use super::policy::PolicyKind;
 /// experiment drivers; also useful for debugging the boundary).
 #[derive(Debug, Clone, Copy)]
 pub struct DecisionTrace {
+    /// Device the policy picked.
     pub device: DeviceKind,
     /// M̂ used (NaN for non-predictive policies).
     pub m_est: f64,
@@ -32,6 +33,21 @@ pub struct DecisionTrace {
     pub t_cloud_est: f64,
     /// T_tx estimate used (s).
     pub ttx_est: f64,
+}
+
+impl DecisionTrace {
+    /// Signed expected-latency gap between the two sides of the loaded
+    /// eq. 1 — `(T̂_exe,e + Ŵ_e) − (T̂_tx + T̂_exe,c + Ŵ_c)` — with the
+    /// same wait terms that produced this decision. Negative means the
+    /// edge looked faster. NaN for non-predictive policies.
+    ///
+    /// A small `|margin|` means the decision sits inside the model's
+    /// error bar: committing to either device is a coin flip, which is
+    /// exactly when hedged dispatch
+    /// ([`crate::scheduler::Dispatcher::submit_hedged`]) pays off.
+    pub fn loaded_margin_s(&self, edge_wait_s: f64, cloud_wait_s: f64) -> f64 {
+        (self.t_edge_est + edge_wait_s) - (self.ttx_est + self.t_cloud_est + cloud_wait_s)
+    }
 }
 
 /// The per-(model, language-pair) decision engine.
@@ -58,6 +74,7 @@ pub struct RouterBuilder {
 }
 
 impl RouterBuilder {
+    /// Builder for `policy` with default T_tx settings.
     pub fn new(policy: PolicyKind) -> Self {
         RouterBuilder {
             policy,
@@ -69,23 +86,27 @@ impl RouterBuilder {
         }
     }
 
+    /// Set both execution-time planes.
     pub fn texe(mut self, edge: TexeModel, cloud: TexeModel) -> Self {
         self.texe_edge = Some(edge);
         self.texe_cloud = Some(cloud);
         self
     }
 
+    /// Set the N→M regressor.
     pub fn n2m(mut self, reg: N2mRegressor) -> Self {
         self.n2m = Some(reg);
         self
     }
 
+    /// Set the T_tx EWMA smoothing factor and prior.
     pub fn ttx(mut self, alpha: f64, prior_s: f64) -> Self {
         self.ttx_alpha = alpha;
         self.ttx_prior_s = prior_s;
         self
     }
 
+    /// Validate and build the router.
     pub fn build(self) -> Result<Router> {
         let needs_models = !matches!(
             self.policy,
@@ -119,14 +140,17 @@ impl RouterBuilder {
 }
 
 impl Router {
+    /// The policy this router implements.
     pub fn policy(&self) -> PolicyKind {
         self.policy
     }
 
+    /// Decisions made so far.
     pub fn decisions(&self) -> u64 {
         self.decisions
     }
 
+    /// The N→M regressor in use.
     pub fn n2m(&self) -> &N2mRegressor {
         &self.n2m
     }
@@ -137,11 +161,28 @@ impl Router {
         self.ttx.observe(now_s, rtt_s);
     }
 
+    /// Replace both execution-time planes — the online-refit hook. An
+    /// adaptive harness feeds observed completions to a pair of
+    /// [`crate::predictor::RlsPlane`]s and installs their current
+    /// coefficients here, so subsequent decisions use planes that track
+    /// the hardware instead of the offline characterisation.
+    pub fn set_texe(&mut self, edge: TexeModel, cloud: TexeModel) {
+        self.texe_edge = edge;
+        self.texe_cloud = cloud;
+    }
+
+    /// The execution-time planes currently used for decisions
+    /// (`(edge, cloud)`).
+    pub fn texe(&self) -> (&TexeModel, &TexeModel) {
+        (&self.texe_edge, &self.texe_cloud)
+    }
+
     /// Is the T_tx estimate stale at `now_s`?
     pub fn ttx_stale(&self, now_s: f64, max_age_s: f64) -> bool {
         self.ttx.is_stale(now_s, max_age_s)
     }
 
+    /// Current T_tx estimate (prior until observations arrive).
     pub fn ttx_estimate(&self) -> f64 {
         self.ttx.estimate_or(self.ttx_prior_s)
     }
@@ -348,6 +389,41 @@ mod tests {
         assert_eq!(r.decide_loaded(n, 5.0, 0.0).device, DeviceKind::Cloud);
         // ...and a symmetric cloud backlog flips it back.
         assert_eq!(r.decide_loaded(n, 5.0, 5.1).device, DeviceKind::Edge);
+    }
+
+    #[test]
+    fn margin_is_signed_gap_and_zero_at_the_boundary() {
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.040);
+        let tr = r.decide_loaded(10, 0.3, 0.1);
+        let direct = (tr.t_edge_est + 0.3) - (tr.ttx_est + tr.t_cloud_est + 0.1);
+        assert!((tr.loaded_margin_s(0.3, 0.1) - direct).abs() < 1e-15);
+        // The decision agrees with the margin's sign.
+        let edge_picked = tr.device == DeviceKind::Edge;
+        assert_eq!(edge_picked, tr.loaded_margin_s(0.3, 0.1) <= 0.0);
+        // Non-predictive policies expose no margin.
+        let mut e = RouterBuilder::new(PolicyKind::EdgeOnly).build().unwrap();
+        assert!(e.decide(10).loaded_margin_s(0.0, 0.0).is_nan());
+    }
+
+    #[test]
+    fn set_texe_refits_the_decision() {
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.040);
+        let n = 3; // firmly edge under the offline planes
+        assert_eq!(r.decide(n).device, DeviceKind::Edge);
+        // Edge degrades 100x (thermal throttling): refit flips the call.
+        let (edge, cloud) = {
+            let (e, c) = r.texe();
+            (*e, *c)
+        };
+        let slow_edge = TexeModel::from_coeffs(
+            edge.alpha_n * 100.0,
+            edge.alpha_m * 100.0,
+            edge.beta * 100.0,
+        );
+        r.set_texe(slow_edge, cloud);
+        assert_eq!(r.decide(n).device, DeviceKind::Cloud);
     }
 
     #[test]

@@ -15,7 +15,9 @@ use super::synth::{CorpusGenerator, LangPair};
 /// decoder steps a request for this pair costs.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct SentencePair {
+    /// Source token ids.
     pub src: Vec<u16>,
+    /// True output length (tokens).
     pub m_real: usize,
     /// True if this pair was generated as misaligned (ground truth known
     /// only to the generator; the prefilter must *infer* it).
@@ -23,6 +25,7 @@ pub struct SentencePair {
 }
 
 impl SentencePair {
+    /// Source length (tokens).
     pub fn n(&self) -> usize {
         self.src.len()
     }
@@ -31,6 +34,7 @@ impl SentencePair {
 /// A generated corpus with a fit/eval split.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Language pair this dataset was generated for.
     pub pair: LangPair,
     /// Pairs used for offline characterisation (T_exe fit, γ/δ fit).
     pub fit: Vec<SentencePair>,
@@ -94,6 +98,7 @@ impl Dataset {
             .collect()
     }
 
+    /// Check split sizes and length bounds.
     pub fn validate(&self) -> Result<()> {
         if self.fit.is_empty() || self.eval.is_empty() {
             return Err(Error::Corpus("empty dataset split".into()));

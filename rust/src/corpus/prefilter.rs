@@ -39,13 +39,18 @@ impl Default for PrefilterRules {
 /// Outcome counts of a pre-filtering pass.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct PrefilterStats {
+    /// Pairs examined.
     pub total: usize,
+    /// Pairs kept.
     pub kept: usize,
+    /// Pairs dropped by the length bounds.
     pub dropped_len: usize,
+    /// Pairs dropped by the length-ratio rule.
     pub dropped_ratio: usize,
 }
 
 impl PrefilterStats {
+    /// Fraction of pairs dropped.
     pub fn drop_rate(&self) -> f64 {
         if self.total == 0 {
             0.0

@@ -32,8 +32,10 @@ pub enum LangPair {
 }
 
 impl LangPair {
+    /// All three paper language pairs, in report order.
     pub const ALL: [LangPair; 3] = [LangPair::DeEn, LangPair::FrEn, LangPair::EnZh];
 
+    /// Stable string id (used in flags and reports).
     pub fn id(&self) -> &'static str {
         match self {
             LangPair::DeEn => "de_en",
@@ -42,6 +44,7 @@ impl LangPair {
         }
     }
 
+    /// Parse an id produced by [`LangPair::id`].
     pub fn from_id(id: &str) -> Option<LangPair> {
         match id {
             "de_en" => Some(LangPair::DeEn),
@@ -133,6 +136,7 @@ pub struct CorpusGenerator {
 }
 
 impl CorpusGenerator {
+    /// Generator for `pair` seeded with `seed`.
     pub fn new(pair: LangPair, seed: u64) -> Self {
         CorpusGenerator {
             pair,
@@ -150,6 +154,7 @@ impl CorpusGenerator {
         self
     }
 
+    /// The language pair this generator produces.
     pub fn pair(&self) -> LangPair {
         self.pair
     }

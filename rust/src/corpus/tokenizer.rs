@@ -9,7 +9,9 @@ use crate::{Error, Result};
 
 /// Special token ids shared with the python side (see manifest.json).
 pub const PAD_ID: u16 = 0;
+/// Beginning-of-sequence token id.
 pub const BOS_ID: u16 = 1;
+/// End-of-sequence token id.
 pub const EOS_ID: u16 = 2;
 /// First id usable for content words.
 pub const FIRST_CONTENT_ID: u16 = 3;
@@ -24,10 +26,12 @@ pub struct Tokenizer {
 }
 
 impl Tokenizer {
+    /// Tokenizer over a vocabulary of `vocab` ids.
     pub fn new(vocab: u16) -> Self {
         Tokenizer { vocab }
     }
 
+    /// Vocabulary size.
     pub fn vocab(&self) -> u16 {
         self.vocab
     }

@@ -34,6 +34,7 @@ pub struct DeviceTimeModel {
 }
 
 impl DeviceTimeModel {
+    /// Mean (noise-free) execution time at (n, m), in seconds.
     pub fn mean(&self, n: usize, m: usize) -> f64 {
         self.texe.estimate(n, m as f64)
     }
@@ -45,6 +46,7 @@ impl DeviceTimeModel {
         (mean + rng.normal_ms(0.0, std)).max(mean * 0.2).max(1e-6)
     }
 
+    /// Serialise one device/model time model.
     pub fn to_json(&self) -> Json {
         let mut o = Json::object();
         o.set("texe", self.texe.to_json())
@@ -53,6 +55,7 @@ impl DeviceTimeModel {
         o
     }
 
+    /// Parse a model serialised by [`DeviceTimeModel::to_json`].
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(DeviceTimeModel {
             texe: TexeModel::from_json(j.get("texe")?)?,
@@ -74,20 +77,24 @@ fn key(device: DeviceKind, model: &str) -> String {
 }
 
 impl Calibration {
+    /// Empty calibration (fill via [`Calibration::set`]).
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert/replace the time model for (device, model).
     pub fn set(&mut self, device: DeviceKind, model: &str, tm: DeviceTimeModel) {
         self.entries.insert(key(device, model), tm);
     }
 
+    /// Look up the time model for (device, model).
     pub fn get(&self, device: DeviceKind, model: &str) -> Result<&DeviceTimeModel> {
         self.entries.get(&key(device, model)).ok_or_else(|| {
             Error::Sim(format!("no calibration for {}/{model}", device.id()))
         })
     }
 
+    /// Distinct model names present (sorted).
     pub fn models(&self) -> Vec<String> {
         let mut out: Vec<String> = self
             .entries
@@ -200,6 +207,7 @@ impl Calibration {
 
     // ------------------------------------------------------------ JSON I/O
 
+    /// Serialise the full calibration table.
     pub fn to_json(&self) -> Json {
         let mut entries = Json::object();
         for (k, v) in &self.entries {
@@ -210,6 +218,7 @@ impl Calibration {
         root
     }
 
+    /// Parse a table serialised by [`Calibration::to_json`].
     pub fn from_json(j: &Json) -> Result<Calibration> {
         let mut c = Calibration::new();
         for (k, v) in j.get("entries")?.as_object()? {
@@ -224,11 +233,13 @@ impl Calibration {
         Ok(c)
     }
 
+    /// Write the calibration to a JSON file.
     pub fn save(&self, path: &Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())?;
         Ok(())
     }
 
+    /// Load a calibration from a JSON file.
     pub fn load(path: &Path) -> Result<Calibration> {
         Calibration::from_json(&Json::parse_file(path)?)
     }

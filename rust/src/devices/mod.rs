@@ -10,7 +10,8 @@
 //!   [`calibration`] (fitted on real PJRT runs, scaled per device) or
 //!   from the built-in paper-shaped defaults. Used by the 100k-request
 //!   experiment harness.
-//! * `runtime::Seq2SeqEngine` (see [`crate::runtime`]) — real PJRT
+//! * `runtime::Seq2SeqEngine` (see `crate::runtime`, behind the `pjrt`
+//!   cargo feature) — real PJRT
 //!   execution, used by the examples, the calibration pass and the
 //!   end-to-end gateway.
 

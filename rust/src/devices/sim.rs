@@ -17,8 +17,10 @@ pub enum DeviceKind {
 }
 
 impl DeviceKind {
+    /// Both devices, in report order.
     pub const ALL: [DeviceKind; 2] = [DeviceKind::Edge, DeviceKind::Cloud];
 
+    /// Stable string id (`edge` / `cloud`).
     pub fn id(&self) -> &'static str {
         match self {
             DeviceKind::Edge => "edge",
@@ -26,6 +28,7 @@ impl DeviceKind {
         }
     }
 
+    /// Parse an id produced by [`DeviceKind::id`].
     pub fn from_id(s: &str) -> Option<DeviceKind> {
         match s {
             "edge" => Some(DeviceKind::Edge),
@@ -44,12 +47,14 @@ impl DeviceKind {
 /// sub-optimality vs the Oracle).
 #[derive(Debug, Clone)]
 pub struct SimDevice {
+    /// Which device this simulates.
     pub kind: DeviceKind,
     models: BTreeMap<String, DeviceTimeModel>,
     rng: Rng,
 }
 
 impl SimDevice {
+    /// Device with the built-in paper-shaped time models.
     pub fn new(kind: DeviceKind, seed: u64) -> Self {
         SimDevice {
             kind,
@@ -64,10 +69,12 @@ impl SimDevice {
         self
     }
 
+    /// Is a time model registered for `model_name`?
     pub fn has_model(&self, model_name: &str) -> bool {
         self.models.contains_key(model_name)
     }
 
+    /// The ground-truth time model for `model_name`.
     pub fn time_model(&self, model_name: &str) -> Result<&DeviceTimeModel> {
         self.models.get(model_name).ok_or_else(|| {
             Error::Sim(format!(

@@ -32,6 +32,7 @@ pub enum Error {
     /// closed, ...).
     Serve(String),
 
+    /// Filesystem / IO failure (wraps `std::io::Error`).
     Io(std::io::Error),
 }
 

@@ -18,7 +18,9 @@ use super::report::text_table;
 /// One (pair, profile) row of the ablation.
 #[derive(Debug, Clone)]
 pub struct AblationRow {
+    /// Language pair of this row.
     pub pair: LangPair,
+    /// Connection profile of this row.
     pub profile: ConnectionProfile,
     /// (estimator id, total_s, % vs oracle, held-out MAE).
     pub entries: Vec<(String, f64, f64, f64)>,
@@ -27,6 +29,7 @@ pub struct AblationRow {
 /// Full ablation result.
 #[derive(Debug, Clone)]
 pub struct Ablation {
+    /// One row per (pair, profile) grid cell.
     pub rows: Vec<AblationRow>,
 }
 

@@ -23,25 +23,35 @@ use super::report::text_table;
 /// Per-policy latency+energy totals for one cell.
 #[derive(Debug, Clone)]
 pub struct EnergyEntry {
+    /// Policy id.
     pub policy: String,
+    /// Total latency over the stream (seconds).
     pub total_time_s: f64,
+    /// Total gateway energy over the stream (joules).
     pub total_energy_j: f64,
+    /// Requests served at the edge.
     pub edge_count: usize,
+    /// Requests offloaded to the cloud.
     pub cloud_count: usize,
 }
 
 /// One (pair, profile) cell.
 #[derive(Debug, Clone)]
 pub struct EnergyCell {
+    /// Language pair of this cell.
     pub pair: LangPair,
+    /// Connection profile of this cell.
     pub profile: ConnectionProfile,
+    /// One entry per policy.
     pub entries: Vec<EnergyEntry>,
 }
 
 /// Full experiment result.
 #[derive(Debug, Clone)]
 pub struct EnergyReport {
+    /// One cell per (pair, profile).
     pub cells: Vec<EnergyCell>,
+    /// The gateway energy model used.
     pub model: EnergyModel,
 }
 

@@ -7,7 +7,7 @@
 //! T on M. Two modes:
 //!
 //! * simulated devices (default; any model, both devices, fast), and
-//! * `--measured` real PJRT runs through [`crate::runtime::Seq2SeqEngine`]
+//! * `--measured` real PJRT runs through `crate::runtime::Seq2SeqEngine`
 //!   (edge == local CPU), which is what the calibration CLI wraps.
 
 use std::collections::BTreeMap;
@@ -24,19 +24,26 @@ use super::report::text_table;
 /// Per-M statistics for one device.
 #[derive(Debug, Clone)]
 pub struct DeviceSeries {
+    /// Device this series was measured on.
     pub device: DeviceKind,
     /// M → (mean T, std T, count), in seconds.
     pub by_m: BTreeMap<usize, (f64, f64, u64)>,
+    /// R² of the linear T(M) fit.
     pub r2: f64,
+    /// MSE of the fit (ms²).
     pub mse_ms: f64,
+    /// Fitted decode cost per output token (ms).
     pub slope_ms_per_token: f64,
 }
 
 /// Fig. 2a result: one series per device.
 #[derive(Debug, Clone)]
 pub struct Fig2a {
+    /// Language pair profiled.
     pub pair: LangPair,
+    /// Inferences profiled per device.
     pub samples: usize,
+    /// One series per device.
     pub series: Vec<DeviceSeries>,
 }
 

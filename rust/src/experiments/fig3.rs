@@ -18,17 +18,22 @@ use super::report::text_table;
 /// One panel of Fig. 3.
 #[derive(Debug, Clone)]
 pub struct Fig3Panel {
+    /// Language pair of this panel.
     pub pair: LangPair,
+    /// Fitted N→M regressor (the panel's line).
     pub reg: N2mRegressor,
     /// N → (mean M, std M, count) after prefiltering.
     pub by_n: BTreeMap<usize, (f64, f64, u64)>,
+    /// Percentage of pairs removed by prefiltering.
     pub dropped_pct: f64,
 }
 
 /// Full Fig. 3.
 #[derive(Debug, Clone)]
 pub struct Fig3 {
+    /// One panel per language pair.
     pub panels: Vec<Fig3Panel>,
+    /// Corpus pairs sampled per panel.
     pub samples: usize,
 }
 

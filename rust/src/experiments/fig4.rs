@@ -18,18 +18,27 @@ use super::report::text_table;
 /// Stats for one profile.
 #[derive(Debug, Clone)]
 pub struct ProfileStats {
+    /// Profile the trace was generated from.
     pub profile: ConnectionProfile,
+    /// RTT samples in the trace.
     pub samples: usize,
+    /// Trace duration (seconds).
     pub duration_s: f64,
+    /// Mean RTT (ms).
     pub mean_ms: f64,
+    /// Median RTT (ms).
     pub p50_ms: f64,
+    /// 95th-percentile RTT (ms).
     pub p95_ms: f64,
+    /// Maximum RTT (ms).
     pub max_ms: f64,
 }
 
 /// Fig. 4 result: stats + the traces themselves.
 pub struct Fig4 {
+    /// Summary stats per profile.
     pub stats: Vec<ProfileStats>,
+    /// The generated traces (for CSV export).
     pub traces: Vec<(ConnectionProfile, RttTrace)>,
 }
 

@@ -3,15 +3,27 @@
 //!
 //! This is the first experiment beyond the paper's single-request
 //! setting: it measures what happens when the ROADMAP's "heavy traffic"
-//! regime meets the C-NMT decision. Four configurations are swept over
+//! regime meets the C-NMT decision. Five configurations are swept over
 //! offered load:
 //!
 //! * `edge_only`, `cloud_only` — the static mappings;
 //! * `cnmt` — the paper's queue-blind eq. 1;
 //! * `cnmt+queue` — eq. 1 plus the scheduler's expected-wait term on
-//!   each side ([`crate::coordinator::Router::decide_loaded`]).
+//!   each side ([`crate::coordinator::Router::decide_loaded`]);
+//! * `cnmt+adaptive` — scheduler v2: `cnmt+queue` plus hedged dispatch
+//!   inside the decision error bar and RLS online refit of the T_exe
+//!   planes ([`crate::sim::AdaptiveOpts`]).
 //!
-//! The expected shape: all four coincide at low load; as offered load
+//! Alongside the stationary sweep, a **drift scenario** ([`run_drift`])
+//! slows the edge down mid-run: the static routers keep trusting the
+//! stale offline planes while the adaptive router re-learns them from
+//! observed completions — the report's second headline is the drifted
+//! p99 ratio. A **closed-loop sweep** ([`run_closed`],
+//! `--closed-loop`) replaces Poisson arrivals with K
+//! bounded-outstanding clients for serving-benchmark-style
+//! latency–throughput curves.
+//!
+//! The expected shape: all five coincide at low load; as offered load
 //! approaches the edge's capacity, the queue-blind router keeps sending
 //! its short-request share to the edge, whose queue grows without bound
 //! (shedding at the admission cap, p99 pinned to the queue drain time),
@@ -33,9 +45,13 @@
 //! constant here).
 
 use crate::coordinator::PolicyKind;
+use crate::devices::DeviceKind;
 use crate::predictor::{N2mRegressor, TexeModel};
 use crate::sim::harness::RequestTruth;
-use crate::sim::{run_contended, Characterization, ContendedResult, ContentionOpts};
+use crate::sim::{
+    run_closed_loop, run_contended, AdaptiveOpts, Characterization, ContendedResult,
+    ContentionOpts, DriftSpec,
+};
 use crate::util::{Json, Rng};
 use crate::{Error, Result};
 
@@ -49,6 +65,7 @@ pub const EDGE_PLANE: (f64, f64, f64) = (1.2e-3, 3.0e-3, 6.0e-3);
 pub const CLOUD_PLANE: (f64, f64, f64) = (0.22e-3, 0.55e-3, 26.0e-3);
 /// FR-EN-like verbosity: M ≈ γ·N + δ.
 pub const N2M_GAMMA: f64 = 0.95;
+/// FR-EN-like verbosity intercept δ.
 pub const N2M_DELTA: f64 = 0.8;
 /// Fixed CP2-like round trip (seconds).
 pub const RTT_S: f64 = 0.042;
@@ -61,9 +78,26 @@ const EXEC_NOISE_STD: f64 = 0.05;
 /// Length cap (matches the corpus/token budget used elsewhere).
 const N_MAX: usize = 62;
 
+// Drift scenario (mirrored in `python/tools/load_sweep_mirror.py`): the
+// edge slows down mid-run while the offline planes stay stale.
+/// Offered load of the drift scenario (r/s) — inside the pre-drift
+/// stable region, outside the drifted edge's solo capacity.
+pub const DRIFT_LOAD_RPS: f64 = 48.0;
+/// Edge slowdown multiplier once fully drifted.
+pub const DRIFT_FACTOR: f64 = 2.5;
+/// Fraction of the nominal run duration at which the drift starts.
+pub const DRIFT_START_FRAC: f64 = 0.25;
+/// Seconds over which the slowdown ramps in.
+pub const DRIFT_RAMP_S: f64 = 10.0;
+/// Seed tag for the drift workload stream.
+const DRIFT_SEED_TAG: u64 = 0xD21F7;
+/// Seed tag for the closed-loop request pool.
+const CLOSED_SEED_TAG: u64 = 0xC105ED;
+
 /// Sweep configuration.
 #[derive(Debug, Clone)]
 pub struct LoadConfig {
+    /// Master seed of the sweep.
     pub seed: u64,
     /// Requests simulated at each offered-load point.
     pub requests_per_point: usize,
@@ -88,11 +122,14 @@ impl Default for LoadConfig {
 /// All configurations evaluated at one offered load.
 #[derive(Debug, Clone)]
 pub struct LoadCell {
+    /// Offered load at this point (r/s).
     pub offered_rps: f64,
+    /// One result per swept configuration.
     pub results: Vec<ContendedResult>,
 }
 
 impl LoadCell {
+    /// Result for a policy id (panics when absent — report bug).
     pub fn get(&self, policy: &str) -> &ContendedResult {
         self.results
             .iter()
@@ -101,11 +138,58 @@ impl LoadCell {
     }
 }
 
+/// One drift scenario: the same workload replayed under every compared
+/// policy while the edge's ground truth degrades mid-run.
+#[derive(Debug, Clone)]
+pub struct DriftReport {
+    /// The injected drift.
+    pub spec: DriftSpec,
+    /// Offered load of the scenario (r/s).
+    pub offered_rps: f64,
+    /// Per-policy results (same workload, same drift).
+    pub results: Vec<ContendedResult>,
+}
+
+impl DriftReport {
+    /// Result for a policy id (panics when absent — report bug).
+    pub fn get(&self, policy: &str) -> &ContendedResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing drift policy {policy}"))
+    }
+
+    /// p99 ratio (static queue-aware / adaptive) under drift — the
+    /// headline "hedge + refit buys an X× shorter drifted tail".
+    pub fn headline_p99_ratio(&self) -> f64 {
+        self.get("cnmt+queue").p99_s / self.get("cnmt+adaptive").p99_s
+    }
+
+    /// Serialise the scenario for the load-sweep report.
+    pub fn to_json(&self) -> Json {
+        let mut policies = Json::object();
+        for r in &self.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        let mut o = Json::object();
+        o.set("spec", self.spec.to_json())
+            .set("offered_rps", Json::Num(self.offered_rps))
+            .set("policies", policies)
+            .set("headline_p99_ratio", Json::Num(self.headline_p99_ratio()));
+        o
+    }
+}
+
 /// Full sweep result.
 #[derive(Debug, Clone)]
 pub struct LoadSweep {
+    /// One cell per offered load.
     pub cells: Vec<LoadCell>,
+    /// The drift scenario run alongside the stationary sweep.
+    pub drift: DriftReport,
+    /// Requests simulated at each sweep point.
     pub requests_per_point: usize,
+    /// Master seed of the sweep.
     pub seed: u64,
 }
 
@@ -163,17 +247,58 @@ pub fn synth_workload(
     (requests, ch)
 }
 
-/// The four configurations swept at each load point.
-fn configurations() -> [(PolicyKind, bool); 4] {
+/// The five configurations swept at each load point:
+/// `(policy, queue_aware, adaptive)`.
+fn configurations() -> [(PolicyKind, bool, bool); 5] {
     [
-        (PolicyKind::EdgeOnly, false),
-        (PolicyKind::CloudOnly, false),
-        (PolicyKind::Cnmt, false),
-        (PolicyKind::Cnmt, true),
+        (PolicyKind::EdgeOnly, false, false),
+        (PolicyKind::CloudOnly, false, false),
+        (PolicyKind::Cnmt, false, false),
+        (PolicyKind::Cnmt, true, false),
+        (PolicyKind::Cnmt, true, true),
     ]
 }
 
-/// Run the full sweep.
+fn opts_for(base: &ContentionOpts, queue_aware: bool, adaptive: bool) -> ContentionOpts {
+    ContentionOpts {
+        queue_aware,
+        adaptive: if adaptive { Some(AdaptiveOpts::default()) } else { None },
+        ..*base
+    }
+}
+
+/// Run the drift scenario: a fixed-load workload where the edge slows
+/// down by [`DRIFT_FACTOR`] a quarter of the way in. The queue-blind
+/// router, the static queue-aware router and the adaptive v2 (hedge +
+/// RLS refit) replay the identical stream.
+pub fn run_drift(cfg: &LoadConfig) -> Result<DriftReport> {
+    let (requests, ch) = synth_workload(
+        cfg.seed ^ DRIFT_SEED_TAG,
+        cfg.requests_per_point,
+        DRIFT_LOAD_RPS,
+    );
+    let spec = DriftSpec {
+        device: DeviceKind::Edge,
+        start_s: (cfg.requests_per_point as f64 / DRIFT_LOAD_RPS) * DRIFT_START_FRAC,
+        ramp_s: DRIFT_RAMP_S,
+        factor: DRIFT_FACTOR,
+    };
+    let mut results = Vec::new();
+    for (policy, queue_aware, adaptive) in [
+        (PolicyKind::Cnmt, false, false),
+        (PolicyKind::Cnmt, true, false),
+        (PolicyKind::Cnmt, true, true),
+    ] {
+        let opts = ContentionOpts {
+            drift: Some(spec),
+            ..opts_for(&cfg.opts, queue_aware, adaptive)
+        };
+        results.push(run_contended(&requests, &ch, policy, &opts)?);
+    }
+    Ok(DriftReport { spec, offered_rps: DRIFT_LOAD_RPS, results })
+}
+
+/// Run the full sweep (stationary load points + the drift scenario).
 pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
     if cfg.requests_per_point == 0 {
         return Err(Error::Config("load sweep needs requests_per_point > 0".into()));
@@ -193,45 +318,63 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
         let seed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
         let (requests, ch) = synth_workload(seed, cfg.requests_per_point, offered_rps);
         let mut results = Vec::new();
-        for (policy, queue_aware) in configurations() {
-            let opts = ContentionOpts { queue_aware, ..cfg.opts };
+        for (policy, queue_aware, adaptive) in configurations() {
+            let opts = opts_for(&cfg.opts, queue_aware, adaptive);
             results.push(run_contended(&requests, &ch, policy, &opts)?);
         }
         cells.push(LoadCell { offered_rps, results });
     }
+    let drift = run_drift(cfg)?;
     Ok(LoadSweep {
         cells,
+        drift,
         requests_per_point: cfg.requests_per_point,
         seed: cfg.seed,
     })
 }
 
-/// Render the sweep as an aligned text table.
+fn result_row(load_label: String, r: &ContendedResult) -> Vec<String> {
+    vec![
+        load_label,
+        r.policy.clone(),
+        format!("{:.1}", r.throughput_rps),
+        format!("{:.1}", r.shed_rate() * 100.0),
+        format!("{:.1}", r.p50_s * 1e3),
+        format!("{:.1}", r.p95_s * 1e3),
+        format!("{:.1}", r.p99_s * 1e3),
+        format!("{:.2}", r.mean_batch),
+        format!("{:.1}", r.hedge_rate() * 100.0),
+        format!("{:.1}", r.wasted_frac() * 100.0),
+        format!("{}/{}", r.edge_count, r.cloud_count),
+    ]
+}
+
+fn table_header() -> Vec<String> {
+    [
+        "load r/s",
+        "policy",
+        "goodput r/s",
+        "shed %",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "batch",
+        "hedge %",
+        "waste %",
+        "edge/cloud",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect()
+}
+
+/// Render the sweep (stationary points + drift scenario) as aligned
+/// text tables.
 pub fn render_text(s: &LoadSweep) -> String {
-    let mut rows = vec![vec![
-        "load r/s".to_string(),
-        "policy".to_string(),
-        "goodput r/s".to_string(),
-        "shed %".to_string(),
-        "p50 ms".to_string(),
-        "p95 ms".to_string(),
-        "p99 ms".to_string(),
-        "batch".to_string(),
-        "edge/cloud".to_string(),
-    ]];
+    let mut rows = vec![table_header()];
     for c in &s.cells {
         for r in &c.results {
-            rows.push(vec![
-                format!("{:.0}", c.offered_rps),
-                r.policy.clone(),
-                format!("{:.1}", r.throughput_rps),
-                format!("{:.1}", r.shed_rate() * 100.0),
-                format!("{:.1}", r.p50_s * 1e3),
-                format!("{:.1}", r.p95_s * 1e3),
-                format!("{:.1}", r.p99_s * 1e3),
-                format!("{:.2}", r.mean_batch),
-                format!("{}/{}", r.edge_count, r.cloud_count),
-            ]);
+            rows.push(result_row(format!("{:.0}", c.offered_rps), r));
         }
     }
     let mut out = text_table(&rows);
@@ -240,6 +383,27 @@ pub fn render_text(s: &LoadSweep) -> String {
          shorter than queue-blind C-NMT's\n",
         s.cells.last().map_or(0.0, |c| c.offered_rps),
         s.headline_p99_ratio()
+    ));
+
+    let d = &s.drift;
+    out.push_str(&format!(
+        "\ndrift scenario: {} slows {:.1}x from t={:.0}s (ramp {:.0}s) at \
+         {:.0} r/s offered\n",
+        d.spec.device.id(),
+        d.spec.factor,
+        d.spec.start_s,
+        d.spec.ramp_s,
+        d.offered_rps
+    ));
+    let mut drows = vec![table_header()];
+    for r in &d.results {
+        drows.push(result_row(format!("{:.0}", d.offered_rps), r));
+    }
+    out.push_str(&text_table(&drows));
+    out.push_str(&format!(
+        "\ndrift headline: adaptive v2 (hedge + RLS refit) p99 is {:.1}x \
+         shorter than the static queue-aware router's under drift\n",
+        d.headline_p99_ratio()
     ));
     out
 }
@@ -272,7 +436,172 @@ pub fn to_json(s: &LoadSweep) -> Json {
         .set("seed", Json::Num(s.seed as f64))
         .set("requests_per_point", Json::Num(s.requests_per_point as f64))
         .set("points", Json::Array(points))
+        .set("drift", s.drift.to_json())
         .set("headline_p99_ratio", Json::Num(s.headline_p99_ratio()));
+    root
+}
+
+// ---------------------------------------------------------- closed loop
+
+/// Closed-loop sweep configuration (`cnmt experiment load --closed-loop`).
+#[derive(Debug, Clone)]
+pub struct ClosedLoopConfig {
+    /// Master seed for the request pool.
+    pub seed: u64,
+    /// Request bodies submitted per client-count point.
+    pub requests_per_point: usize,
+    /// Client counts to sweep (each = max outstanding requests).
+    pub clients: Vec<usize>,
+    /// Per-client think time between result and next submission (s).
+    pub think_s: f64,
+    /// Scheduler sizing shared by every configuration.
+    pub opts: ContentionOpts,
+}
+
+impl Default for ClosedLoopConfig {
+    fn default() -> Self {
+        ClosedLoopConfig {
+            seed: 20220315,
+            requests_per_point: 20_000,
+            clients: vec![1, 2, 4, 8, 16, 32, 64],
+            think_s: 0.0,
+            opts: ContentionOpts::default(),
+        }
+    }
+}
+
+/// All configurations evaluated at one client count.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopCell {
+    /// Concurrent clients at this point.
+    pub clients: usize,
+    /// Per-policy results.
+    pub results: Vec<ContendedResult>,
+}
+
+impl ClosedLoopCell {
+    /// Result for a policy id (panics when absent — report bug).
+    pub fn get(&self, policy: &str) -> &ContendedResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing policy {policy}"))
+    }
+}
+
+/// Full closed-loop sweep: latency–throughput curves per policy.
+#[derive(Debug, Clone)]
+pub struct ClosedLoopSweep {
+    /// One cell per client count.
+    pub cells: Vec<ClosedLoopCell>,
+    /// Request bodies per point.
+    pub requests_per_point: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Per-client think time (s).
+    pub think_s: f64,
+}
+
+/// The policies traced in the closed-loop curves.
+fn closed_configurations() -> [(PolicyKind, bool, bool); 3] {
+    [
+        (PolicyKind::CloudOnly, false, false),
+        (PolicyKind::Cnmt, true, false),
+        (PolicyKind::Cnmt, true, true),
+    ]
+}
+
+/// Run the closed-loop sweep: the same request pool driven by K
+/// bounded-outstanding clients, K swept over `cfg.clients`.
+pub fn run_closed(cfg: &ClosedLoopConfig) -> Result<ClosedLoopSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("closed loop needs requests_per_point > 0".into()));
+    }
+    if cfg.clients.is_empty() {
+        return Err(Error::Config("closed loop needs at least one client count".into()));
+    }
+    if cfg.clients.iter().any(|&k| k == 0) {
+        return Err(Error::Config("client counts must be > 0".into()));
+    }
+    // Arrival times in the pool are ignored (completions drive arrivals).
+    let (pool, ch) =
+        synth_workload(cfg.seed ^ CLOSED_SEED_TAG, cfg.requests_per_point, 1.0);
+    let mut cells = Vec::with_capacity(cfg.clients.len());
+    for &clients in &cfg.clients {
+        let mut results = Vec::new();
+        for (policy, queue_aware, adaptive) in closed_configurations() {
+            let opts = opts_for(&cfg.opts, queue_aware, adaptive);
+            results.push(run_closed_loop(
+                &pool, &ch, policy, &opts, clients, cfg.think_s,
+            )?);
+        }
+        cells.push(ClosedLoopCell { clients, results });
+    }
+    Ok(ClosedLoopSweep {
+        cells,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        think_s: cfg.think_s,
+    })
+}
+
+/// Render the closed-loop sweep as an aligned text table.
+pub fn render_closed_text(s: &ClosedLoopSweep) -> String {
+    let mut rows = vec![vec![
+        "clients".to_string(),
+        "policy".to_string(),
+        "goodput r/s".to_string(),
+        "mean ms".to_string(),
+        "p50 ms".to_string(),
+        "p95 ms".to_string(),
+        "p99 ms".to_string(),
+        "batch".to_string(),
+        "hedge %".to_string(),
+        "waste %".to_string(),
+    ]];
+    for c in &s.cells {
+        for r in &c.results {
+            rows.push(vec![
+                format!("{}", c.clients),
+                r.policy.clone(),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.1}", r.mean_latency_s * 1e3),
+                format!("{:.1}", r.p50_s * 1e3),
+                format!("{:.1}", r.p95_s * 1e3),
+                format!("{:.1}", r.p99_s * 1e3),
+                format!("{:.2}", r.mean_batch),
+                format!("{:.1}", r.hedge_rate() * 100.0),
+                format!("{:.1}", r.wasted_frac() * 100.0),
+            ]);
+        }
+    }
+    let mut out = text_table(&rows);
+    out.push_str(
+        "\nReading: goodput climbs with clients until the devices saturate, \
+         then extra concurrency only buys latency — the standard serving \
+         latency-throughput curve.\n",
+    );
+    out
+}
+
+/// JSON report for the closed-loop sweep (`closed_loop.json`).
+pub fn closed_to_json(s: &ClosedLoopSweep) -> Json {
+    let mut points = Vec::new();
+    for c in &s.cells {
+        let mut o = Json::object();
+        o.set("clients", Json::Num(c.clients as f64));
+        let mut policies = Json::object();
+        for r in &c.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        o.set("policies", policies);
+        points.push(o);
+    }
+    let mut root = Json::object();
+    root.set("seed", Json::Num(s.seed as f64))
+        .set("requests_per_point", Json::Num(s.requests_per_point as f64))
+        .set("think_s", Json::Num(s.think_s))
+        .set("points", Json::Array(points));
     root
 }
 
@@ -316,12 +645,24 @@ mod tests {
         let sweep = run(&smoke_cfg(vec![10.0])).unwrap();
         assert_eq!(sweep.cells.len(), 1);
         let cell = &sweep.cells[0];
-        assert_eq!(cell.results.len(), 4);
+        assert_eq!(cell.results.len(), 5);
         for r in &cell.results {
             assert_eq!(r.offered, 3_000);
             assert_eq!(r.completed + r.rejected, r.offered);
             assert_eq!(r.edge_count + r.cloud_count, r.completed);
             assert!(r.p50_s <= r.p99_s + 1e-12);
+            // Hedge bookkeeping closes whatever the policy.
+            assert_eq!(r.hedge_wins_edge + r.hedge_wins_cloud, r.hedged);
+            assert_eq!(r.hedge_cancelled + r.hedge_wasted, r.hedged);
+            if !r.adaptive {
+                assert_eq!(r.hedged, 0);
+                assert_eq!(r.wasted_work_s, 0.0);
+            }
+        }
+        // The drift scenario rides along with its three policies.
+        assert_eq!(sweep.drift.results.len(), 3);
+        for r in &sweep.drift.results {
+            assert_eq!(r.completed + r.rejected, r.offered);
         }
     }
 
@@ -407,10 +748,81 @@ mod tests {
         let sweep = run(&smoke_cfg(vec![8.0, 64.0])).unwrap();
         let txt = render_text(&sweep);
         assert!(txt.contains("cnmt+queue"));
+        assert!(txt.contains("cnmt+adaptive"));
         assert!(txt.contains("headline"));
+        assert!(txt.contains("drift"));
         let j = to_json(&sweep);
         assert_eq!(j.get("points").unwrap().as_array().unwrap().len(), 2);
         let p0 = &j.get("points").unwrap().as_array().unwrap()[0];
         assert!(p0.get("policies").unwrap().get("cnmt+queue").is_ok());
+        assert!(p0.get("policies").unwrap().get("cnmt+adaptive").is_ok());
+        let adaptive = p0.get("policies").unwrap().get("cnmt+adaptive").unwrap();
+        assert!(adaptive.get("hedge_rate").is_ok());
+        assert!(adaptive.get("wasted_frac").is_ok());
+        let drift = j.get("drift").unwrap();
+        assert!(drift.get("policies").unwrap().get("cnmt+adaptive").is_ok());
+        assert!(drift.get("headline_p99_ratio").is_ok());
+    }
+
+    #[test]
+    fn adaptive_recovers_under_drift_where_static_misroutes() {
+        // THE acceptance property of scheduler v2: with the edge
+        // drifting 2.5x slower mid-run, hedge + RLS refit must beat the
+        // static queue-aware policy on p99 at equal-or-better goodput.
+        let drift = run_drift(&smoke_cfg(vec![8.0])).unwrap();
+        let stat = drift.get("cnmt+queue");
+        let adapt = drift.get("cnmt+adaptive");
+        assert!(
+            adapt.p99_s < stat.p99_s,
+            "adaptive p99 {} not below static p99 {}",
+            adapt.p99_s,
+            stat.p99_s
+        );
+        assert!(
+            adapt.throughput_rps >= stat.throughput_rps * 0.999,
+            "adaptive goodput {} fell below static {}",
+            adapt.throughput_rps,
+            stat.throughput_rps
+        );
+        // The adaptive run actually exercised the new machinery.
+        assert!(adapt.hedged > 0, "no hedges under drift");
+        assert!(adapt.hedge_rate() <= 1.0);
+    }
+
+    #[test]
+    fn closed_loop_curve_structure_and_saturation() {
+        let cfg = ClosedLoopConfig {
+            requests_per_point: 2_000,
+            clients: vec![1, 16],
+            ..Default::default()
+        };
+        let sweep = run_closed(&cfg).unwrap();
+        assert_eq!(sweep.cells.len(), 2);
+        for cell in &sweep.cells {
+            assert_eq!(cell.results.len(), 3);
+            for r in &cell.results {
+                assert_eq!(r.completed + r.rejected, r.offered);
+                assert_eq!(r.rejected, 0, "closed loop shed at K={}", cell.clients);
+            }
+        }
+        // Concurrency buys throughput on the queue-aware policy.
+        let t1 = sweep.cells[0].get("cnmt+queue").throughput_rps;
+        let t16 = sweep.cells[1].get("cnmt+queue").throughput_rps;
+        assert!(t16 > t1 * 2.0, "K=16 {} r/s vs K=1 {} r/s", t16, t1);
+        let j = closed_to_json(&sweep);
+        assert_eq!(j.get("points").unwrap().as_array().unwrap().len(), 2);
+        let txt = render_closed_text(&sweep);
+        assert!(txt.contains("cnmt+adaptive"));
+    }
+
+    #[test]
+    fn closed_loop_rejects_degenerate_configs() {
+        let mut cfg = ClosedLoopConfig { clients: vec![], ..Default::default() };
+        assert!(run_closed(&cfg).is_err());
+        cfg.clients = vec![0];
+        assert!(run_closed(&cfg).is_err());
+        cfg.clients = vec![1];
+        cfg.requests_per_point = 0;
+        assert!(run_closed(&cfg).is_err());
     }
 }

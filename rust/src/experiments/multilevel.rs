@@ -19,7 +19,9 @@ use super::report::text_table;
 /// Per-strategy totals for one language pair.
 #[derive(Debug, Clone)]
 pub struct MlEntry {
+    /// Routing strategy id.
     pub strategy: String,
+    /// Total latency over the stream (seconds).
     pub total_s: f64,
     /// Requests per tier (end, gw, cloud).
     pub mix: [usize; 3],
@@ -28,6 +30,7 @@ pub struct MlEntry {
 /// Result over the configured pairs (CP1 WAN trace).
 #[derive(Debug, Clone)]
 pub struct Multilevel {
+    /// Per-pair entries, one per strategy.
     pub rows: Vec<(LangPair, Vec<MlEntry>)>,
 }
 

@@ -15,12 +15,16 @@ use super::report::{pct, text_table};
 /// One dataset×profile cell group of Table I.
 #[derive(Debug, Clone)]
 pub struct Table1Cell {
+    /// Language pair of this cell.
     pub pair: LangPair,
+    /// Connection profile of this cell.
     pub profile: ConnectionProfile,
+    /// One result per policy.
     pub results: Vec<PolicyResult>,
 }
 
 impl Table1Cell {
+    /// Result for a policy id (panics when absent — report bug).
     pub fn get(&self, id: &str) -> &PolicyResult {
         self.results
             .iter()
@@ -42,10 +46,12 @@ impl Table1Cell {
 /// Full Table-I result set.
 #[derive(Debug, Clone)]
 pub struct Table1 {
+    /// One cell per (pair, profile).
     pub cells: Vec<Table1Cell>,
 }
 
 impl Table1 {
+    /// The cell for (pair, profile) (panics when absent).
     pub fn cell(&self, pair: LangPair, profile: ConnectionProfile) -> &Table1Cell {
         self.cells
             .iter()

@@ -2,7 +2,9 @@
 //!
 //! Reproduction of *"C-NMT: A Collaborative Inference Framework for Neural
 //! Machine Translation"* (Chen et al., 2022) as a three-layer
-//! rust + JAX + Pallas serving stack.
+//! rust + JAX + Pallas serving stack. Start with the repository
+//! `README.md` for the quickstart and `docs/ARCHITECTURE.md` for the
+//! request lifecycle and module map.
 //!
 //! ## Layers
 //!
@@ -12,16 +14,18 @@
 //!   ([`predictor::n2m`]) and an online round-trip-time estimator
 //!   ([`predictor::ttx`]); a load-aware scheduling subsystem
 //!   ([`scheduler`]) — per-device admission queues, in-flight capacity
-//!   tracking, length-bucketed micro-batching and a worker-pool
-//!   dispatcher — that lets the routing decision account for contention;
-//!   plus every substrate the evaluation needs: synthetic parallel
-//!   corpora ([`corpus`]), RTT trace generation/replay ([`net`]),
-//!   calibrated device models ([`devices`]), a discrete-event experiment
-//!   harness ([`sim`]) and the experiment drivers ([`experiments`]) that
-//!   regenerate each of the paper's tables/figures.
+//!   tracking, length-bucketed micro-batching, a worker-pool dispatcher,
+//!   hedged dispatch with cancel tokens — plus online RLS refit of the
+//!   execution-time planes ([`predictor::rls`]) so routing tracks
+//!   drifting hardware; and every substrate the evaluation needs:
+//!   synthetic parallel corpora ([`corpus`]), RTT trace
+//!   generation/replay ([`net`]), calibrated device models
+//!   ([`devices`]), a discrete-event experiment harness ([`sim`]) and
+//!   the experiment drivers ([`experiments`]) that regenerate each of
+//!   the paper's tables/figures.
 //! * **L2/L1 (python, build-time only)** — the three NMT models (BiLSTM,
 //!   GRU, Transformer) with Pallas kernels, AOT-lowered to HLO text and
-//!   executed from the [`runtime`] via the PJRT C API (cargo feature
+//!   executed from the `runtime` module via the PJRT C API (cargo feature
 //!   `pjrt`; everything else builds dependency-free without it). Python
 //!   is never on the request path.
 //!
@@ -37,7 +41,12 @@
 //! | IWSLT/OPUS corpora | [`corpus`] |
 //! | 100k-request experiment | [`sim`], [`experiments::table1`] |
 //! | queue-aware routing under load (beyond paper) | [`scheduler`], [`coordinator::router`] |
-//! | throughput-vs-latency load sweep (beyond paper) | [`experiments::load`] |
+//! | hedged dispatch + cancel tokens (beyond paper) | [`scheduler::dispatch`] |
+//! | RLS online refit of T_exe (beyond paper) | [`predictor::rls`] |
+//! | throughput-vs-latency load sweep + drift scenario (beyond paper) | [`experiments::load`] |
+//! | closed-loop latency–throughput curves (beyond paper) | [`experiments::load`], [`sim::harness`] |
+
+#![warn(missing_docs)]
 
 pub mod config;
 pub mod coordinator;

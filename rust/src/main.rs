@@ -70,6 +70,10 @@ USAGE:
       --samples <n>         fig2a/fig3 sample count
       --loads <a,b,..>      load sweep: offered loads in r/s
       --load-requests <n>   load sweep: requests per point (default 20000)
+      --closed-loop         load sweep: closed-loop clients instead of
+                            open-loop Poisson arrivals (writes closed_loop.json)
+      --clients <a,b,..>    closed loop: client counts (default 1,2,4,8,16,32,64)
+      --think-ms <f>        closed loop: per-client think time (default 0)
   cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
                             (needs the `pjrt` build feature)
       --samples <n>         measured translations per model (default 120)
@@ -124,22 +128,40 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let samples = args.usize("samples", 30_000)?;
     // Only the load sweep consumes its flags; on other experiments a
     // stray `--loads` stays unknown and is rejected below.
-    let load_cfg = if matches!(which.as_str(), "load" | "all") {
-        let mut lc = load::LoadConfig { seed: cfg.seed, ..Default::default() };
-        if let Some(loads) = args.str_opt("loads") {
-            lc.loads_rps = loads
-                .split(',')
-                .map(|s| {
-                    s.trim().parse::<f64>().map_err(|_| {
-                        Error::Config(format!("--loads: `{s}` is not a number"))
+    let (load_cfg, closed_cfg) = if matches!(which.as_str(), "load" | "all") {
+        let closed = args.bool("closed-loop");
+        if closed {
+            let mut cc = load::ClosedLoopConfig { seed: cfg.seed, ..Default::default() };
+            if let Some(clients) = args.str_opt("clients") {
+                cc.clients = clients
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|_| {
+                            Error::Config(format!("--clients: `{s}` is not an integer"))
+                        })
                     })
-                })
-                .collect::<Result<_>>()?;
+                    .collect::<Result<_>>()?;
+            }
+            cc.think_s = args.f64("think-ms", 0.0)? / 1e3;
+            cc.requests_per_point = args.usize("load-requests", cc.requests_per_point)?;
+            (None, Some(cc))
+        } else {
+            let mut lc = load::LoadConfig { seed: cfg.seed, ..Default::default() };
+            if let Some(loads) = args.str_opt("loads") {
+                lc.loads_rps = loads
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<f64>().map_err(|_| {
+                            Error::Config(format!("--loads: `{s}` is not a number"))
+                        })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+            lc.requests_per_point = args.usize("load-requests", lc.requests_per_point)?;
+            (Some(lc), None)
         }
-        lc.requests_per_point = args.usize("load-requests", lc.requests_per_point)?;
-        Some(lc)
     } else {
-        None
+        (None, None)
     };
     args.reject_unknown()?;
 
@@ -199,6 +221,20 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
 
     let run_load = |cfg: &Config| -> Result<()> {
+        if let Some(closed_cfg) = closed_cfg.as_ref() {
+            eprintln!(
+                "load (closed-loop): {} requests/point over {} client counts (seed {})",
+                closed_cfg.requests_per_point,
+                closed_cfg.clients.len(),
+                closed_cfg.seed
+            );
+            let s = load::run_closed(closed_cfg)?;
+            print!("{}", load::render_closed_text(&s));
+            let p =
+                report::write_report(&cfg.out_dir, "closed_loop", &load::closed_to_json(&s))?;
+            eprintln!("wrote {}\n", p.display());
+            return Ok(());
+        }
         let load_cfg = load_cfg.as_ref().expect("load_cfg built for load/all");
         eprintln!(
             "load: {} requests/point over {} offered loads (seed {})",

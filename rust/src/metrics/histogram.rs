@@ -49,6 +49,7 @@ impl Histogram {
         Some(idx.min(self.counts.len() - 1))
     }
 
+    /// Record one sample.
     pub fn record(&mut self, x: f64) {
         self.total += 1;
         self.sum += x;
@@ -58,14 +59,17 @@ impl Histogram {
         }
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.total
     }
 
+    /// Sum of all samples.
     pub fn sum(&self) -> f64 {
         self.sum
     }
 
+    /// Mean of all samples (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.total == 0 {
             f64::NAN
@@ -93,18 +97,22 @@ impl Histogram {
         self.floor * self.growth.powi(self.counts.len() as i32)
     }
 
+    /// Median (bucket upper bound).
     pub fn p50(&self) -> f64 {
         self.quantile(0.50)
     }
 
+    /// 95th percentile (bucket upper bound).
     pub fn p95(&self) -> f64 {
         self.quantile(0.95)
     }
 
+    /// 99th percentile (bucket upper bound).
     pub fn p99(&self) -> f64 {
         self.quantile(0.99)
     }
 
+    /// Merge another histogram of identical shape.
     pub fn merge(&mut self, other: &Histogram) {
         assert_eq!(self.counts.len(), other.counts.len(), "histogram shapes differ");
         for (a, b) in self.counts.iter_mut().zip(&other.counts) {

@@ -13,10 +13,12 @@ pub struct LatencyRecorder {
 }
 
 impl LatencyRecorder {
+    /// Empty recorder.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Record one latency under `label`.
     pub fn record(&mut self, label: &str, seconds: f64) {
         let entry = self
             .series
@@ -26,22 +28,27 @@ impl LatencyRecorder {
         entry.1.record(seconds);
     }
 
+    /// Samples recorded under `label`.
     pub fn count(&self, label: &str) -> u64 {
         self.series.get(label).map_or(0, |(s, _)| s.count())
     }
 
+    /// Mean latency for `label` (NaN when unseen).
     pub fn mean(&self, label: &str) -> f64 {
         self.series.get(label).map_or(f64::NAN, |(s, _)| s.mean())
     }
 
+    /// Summed latency for `label`.
     pub fn sum(&self, label: &str) -> f64 {
         self.series.get(label).map_or(0.0, |(s, _)| s.sum())
     }
 
+    /// 95th-percentile latency for `label` (NaN when unseen).
     pub fn p95(&self, label: &str) -> f64 {
         self.series.get(label).map_or(f64::NAN, |(_, h)| h.p95())
     }
 
+    /// All labels seen.
     pub fn labels(&self) -> Vec<&str> {
         self.series.keys().map(|s| s.as_str()).collect()
     }

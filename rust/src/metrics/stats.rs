@@ -12,10 +12,12 @@ pub struct OnlineStats {
 }
 
 impl OnlineStats {
+    /// Empty accumulator.
     pub fn new() -> Self {
         OnlineStats { min: f64::INFINITY, max: f64::NEG_INFINITY, ..Default::default() }
     }
 
+    /// Absorb one sample.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         self.sum += x;
@@ -26,6 +28,7 @@ impl OnlineStats {
         self.max = self.max.max(x);
     }
 
+    /// Absorb another accumulator (parallel merge).
     pub fn merge(&mut self, other: &OnlineStats) {
         if other.n == 0 {
             return;
@@ -46,14 +49,17 @@ impl OnlineStats {
         self.max = self.max.max(other.max);
     }
 
+    /// Samples absorbed.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Sum of samples.
     pub fn sum(&self) -> f64 {
         self.sum
     }
 
+    /// Mean (NaN when empty).
     pub fn mean(&self) -> f64 {
         if self.n == 0 {
             f64::NAN
@@ -71,18 +77,22 @@ impl OnlineStats {
         }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.variance().sqrt()
     }
 
+    /// Minimum sample (∞ when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Maximum sample (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.max
     }
 
+    /// Snapshot of all statistics.
     pub fn summary(&self) -> Summary {
         Summary {
             count: self.n,
@@ -98,11 +108,17 @@ impl OnlineStats {
 /// Immutable snapshot of an [`OnlineStats`].
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Summary {
+    /// Samples absorbed.
     pub count: u64,
+    /// Mean.
     pub mean: f64,
+    /// Sample standard deviation.
     pub std: f64,
+    /// Minimum.
     pub min: f64,
+    /// Maximum.
     pub max: f64,
+    /// Sum.
     pub sum: f64,
 }
 

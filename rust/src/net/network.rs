@@ -48,10 +48,12 @@ impl TxModel {
 #[derive(Debug, Clone)]
 pub struct Network {
     trace: RttTrace,
+    /// Payload-size transmission model.
     pub tx: TxModel,
 }
 
 impl Network {
+    /// Network from an RTT trace plus a transmission model.
     pub fn new(trace: RttTrace, tx: TxModel) -> Self {
         Network { trace, tx }
     }
@@ -70,6 +72,7 @@ impl Network {
             + self.tx.payload_time(m)
     }
 
+    /// The underlying RTT trace.
     pub fn trace(&self) -> &RttTrace {
         &self.trace
     }

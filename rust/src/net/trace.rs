@@ -22,9 +22,11 @@ pub enum ConnectionProfile {
 }
 
 impl ConnectionProfile {
+    /// Both paper connection profiles, in report order.
     pub const ALL: [ConnectionProfile; 2] =
         [ConnectionProfile::Cp1, ConnectionProfile::Cp2];
 
+    /// Stable string id (`cp1` / `cp2`).
     pub fn id(&self) -> &'static str {
         match self {
             ConnectionProfile::Cp1 => "cp1",
@@ -32,6 +34,7 @@ impl ConnectionProfile {
         }
     }
 
+    /// Parse an id produced by [`ConnectionProfile::id`].
     pub fn from_id(s: &str) -> Option<Self> {
         match s {
             "cp1" => Some(ConnectionProfile::Cp1),
@@ -100,14 +103,17 @@ pub struct RttTrace {
 }
 
 impl RttTrace {
+    /// Trace duration (seconds).
     pub fn duration(&self) -> f64 {
         self.t.last().copied().unwrap_or(0.0)
     }
 
+    /// Number of RTT samples.
     pub fn len(&self) -> usize {
         self.t.len()
     }
 
+    /// Is the trace empty?
     pub fn is_empty(&self) -> bool {
         self.t.is_empty()
     }
@@ -207,6 +213,7 @@ pub struct TraceGenerator {
 }
 
 impl TraceGenerator {
+    /// Deterministic generator from a seed.
     pub fn new(seed: u64) -> Self {
         TraceGenerator { rng: Rng::new(seed ^ 0x7EACE) }
     }

@@ -25,20 +25,38 @@ use super::n2m::N2mRegressor;
 /// A fitted N→M estimator.
 #[derive(Debug, Clone)]
 pub enum LengthEstimator {
-    Constant { mean_m: f64 },
+    /// The Naive baseline: a single dataset-mean M̂.
+    Constant {
+        /// Mean output length of the fitting pairs.
+        mean_m: f64,
+    },
+    /// The paper's linear regressor (γ·N + δ).
     Linear(N2mRegressor),
+    /// Per-N empirical mean with a linear fallback.
     Bucket {
         /// Mean M for N = index + 1 (None where unobserved/sparse).
         means: Vec<Option<f64>>,
+        /// Linear estimator used where the bucket is empty.
         fallback: N2mRegressor,
     },
+    /// Per-N empirical quantile with a linear fallback.
     Quantile {
         /// q-quantile of M for N = index + 1.
         quantiles: Vec<Option<f64>>,
+        /// The quantile fitted (0 = min, 0.5 = median, 1 = max).
         q: f64,
+        /// Linear estimator used where the bucket is empty.
         fallback: N2mRegressor,
     },
-    Poly2 { a: f64, b: f64, c: f64 },
+    /// Quadratic fit M̂ = a·N² + b·N + c.
+    Poly2 {
+        /// Quadratic coefficient.
+        a: f64,
+        /// Linear coefficient.
+        b: f64,
+        /// Intercept.
+        c: f64,
+    },
 }
 
 /// Minimum samples per N bucket before trusting its empirical statistic.
@@ -46,6 +64,7 @@ const MIN_BUCKET: usize = 20;
 const N_CAP: usize = 64;
 
 impl LengthEstimator {
+    /// Short identifier used in reports.
     pub fn id(&self) -> &'static str {
         match self {
             LengthEstimator::Constant { .. } => "constant",
@@ -81,6 +100,7 @@ impl LengthEstimator {
 
     // ------------------------------------------------------------ fitting
 
+    /// Fit the constant (dataset mean) estimator.
     pub fn fit_constant(pairs: &[SentencePair]) -> Result<Self> {
         if pairs.is_empty() {
             return Err(Error::Fit("constant estimator: empty input".into()));
@@ -90,6 +110,7 @@ impl LengthEstimator {
         Ok(LengthEstimator::Constant { mean_m })
     }
 
+    /// Fit the linear γ/δ estimator on raw pairs.
     pub fn fit_linear(pairs: &[SentencePair]) -> Result<Self> {
         Ok(LengthEstimator::Linear(N2mRegressor::fit_raw(pairs)?))
     }
@@ -104,6 +125,7 @@ impl LengthEstimator {
         buckets
     }
 
+    /// Fit the per-N bucket-mean estimator.
     pub fn fit_bucket(pairs: &[SentencePair]) -> Result<Self> {
         let fallback = N2mRegressor::fit_raw(pairs)?;
         let means = Self::group_by_n(pairs)
@@ -119,6 +141,7 @@ impl LengthEstimator {
         Ok(LengthEstimator::Bucket { means, fallback })
     }
 
+    /// Fit the per-N q-quantile estimator (0 ≤ q ≤ 1).
     pub fn fit_quantile(pairs: &[SentencePair], q: f64) -> Result<Self> {
         if !(0.0..=1.0).contains(&q) {
             return Err(Error::Fit(format!("quantile {q} out of [0,1]")));

@@ -7,16 +7,20 @@ use crate::{Error, Result};
 /// Result of fitting `y ≈ slope·x + intercept`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct LineFit {
+    /// Fitted slope.
     pub slope: f64,
+    /// Fitted intercept.
     pub intercept: f64,
     /// Coefficient of determination on the fitting data.
     pub r2: f64,
     /// Mean squared error on the fitting data.
     pub mse: f64,
+    /// Number of samples fitted.
     pub n_samples: usize,
 }
 
 impl LineFit {
+    /// Evaluate the fitted line at `x`.
     pub fn predict(&self, x: f64) -> f64 {
         self.slope * x + self.intercept
     }
@@ -58,15 +62,22 @@ pub fn fit_line(points: &[(f64, f64)]) -> Result<LineFit> {
 /// Result of fitting `z ≈ a·x + b·y + c`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct PlaneFit {
+    /// Coefficient on x.
     pub a: f64,
+    /// Coefficient on y.
     pub b: f64,
+    /// Intercept.
     pub c: f64,
+    /// Coefficient of determination on the fitting data.
     pub r2: f64,
+    /// Mean squared error on the fitting data.
     pub mse: f64,
+    /// Number of samples fitted.
     pub n_samples: usize,
 }
 
 impl PlaneFit {
+    /// Evaluate the fitted plane at `(x, y)`.
     pub fn predict(&self, x: f64, y: f64) -> f64 {
         self.a * x + self.b * y + self.c
     }

@@ -8,15 +8,20 @@
 //!   `T_exe = αN·N + αM·M + β`, fitted on profiled inferences.
 //! * [`ttx`] — online transmission-time estimator from timestamped
 //!   request/response pairs (paper §II-C).
+//! * [`rls`] — recursive-least-squares online refit of the T_exe planes
+//!   from observed completions, with a forgetting factor (beyond the
+//!   paper: keeps estimates honest under hardware drift).
 
 pub mod estimators;
 pub mod fit;
 pub mod n2m;
+pub mod rls;
 pub mod texe;
 pub mod ttx;
 
 pub use estimators::LengthEstimator;
 pub use fit::{LineFit, PlaneFit};
 pub use n2m::N2mRegressor;
+pub use rls::RlsPlane;
 pub use texe::TexeModel;
 pub use ttx::TtxEstimator;

@@ -14,12 +14,15 @@ use super::fit::{fit_line, LineFit};
 /// Fitted `M = γ·N + δ` regressor.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct N2mRegressor {
+    /// Slope: predicted output tokens per input token.
     pub gamma: f64,
+    /// Intercept (tokens).
     pub delta: f64,
     /// Fit R² (for Fig. 3 reporting).
     pub r2: f64,
     /// Fit MSE (for Fig. 3 reporting).
     pub mse: f64,
+    /// Number of (prefiltered) pairs fitted.
     pub n_samples: usize,
 }
 

@@ -1,0 +1,259 @@
+//! Recursive-least-squares online refit of the T_exe planes.
+//!
+//! The paper fits `T_exe = αN·N + αM·M + β` **once, offline** (eq. 2,
+//! "once-for-all characterisation"). Under drift — thermal throttling, a
+//! noisy neighbour stealing the edge GPU, a cloud autoscaler swap — the
+//! offline plane goes stale, and every estimate built on it (the eq. 1
+//! comparison *and* the scheduler's expected-wait backlog) misroutes.
+//!
+//! [`RlsPlane`] wraps a [`TexeModel`] with exponentially-forgetting
+//! recursive least squares over the regressor `x = [n, m, 1]`: each
+//! observed completion `(n, m, t)` updates the coefficient estimate in
+//! O(1) (a 3×3 covariance update — no refit over history), and a
+//! forgetting factor λ < 1 discounts old samples with time constant
+//! ≈ 1/(1−λ) observations, so the plane tracks drifting hardware. With
+//! λ = 1 and a diffuse prior it converges to the ordinary
+//! least-squares fit ([`crate::predictor::fit::fit_plane`]).
+//!
+//! Update equations (standard RLS; `P` is the scaled parameter
+//! covariance, kept symmetric by construction):
+//!
+//! ```text
+//! k = P·x / (λ + xᵀ·P·x)
+//! w ← w + k·(t − xᵀ·w)
+//! P ← (P − k·(P·x)ᵀ) / λ
+//! ```
+//!
+//! # Example
+//!
+//! ```
+//! use cnmt::predictor::{RlsPlane, TexeModel};
+//!
+//! // Start from an offline fit, then observe a device that is exactly
+//! // 2x slower than the prior believes.
+//! let prior = TexeModel::from_coeffs(0.001, 0.003, 0.006);
+//! let truth = TexeModel::from_coeffs(0.002, 0.006, 0.012);
+//! let mut rls = RlsPlane::new(prior, 0.99, 1.0).unwrap();
+//! for i in 0..400usize {
+//!     let (n, m) = (1 + i % 40, 1 + (i * 7) % 40);
+//!     rls.observe(n as f64, m as f64, truth.estimate(n, m as f64));
+//! }
+//! let refit = rls.model();
+//! assert!((refit.alpha_m - truth.alpha_m).abs() < 1e-4);
+//! ```
+
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::texe::TexeModel;
+
+/// Online (n, m) → T_exe plane: a [`TexeModel`] kept fresh by
+/// exponentially-forgetting recursive least squares.
+#[derive(Debug, Clone, Copy)]
+pub struct RlsPlane {
+    /// Coefficients `[alpha_n, alpha_m, beta]`.
+    w: [f64; 3],
+    /// Scaled parameter covariance (symmetric 3×3).
+    p: [[f64; 3]; 3],
+    lambda: f64,
+    count: u64,
+}
+
+impl RlsPlane {
+    /// Start from an offline-fitted plane. `lambda` ∈ (0, 1] is the
+    /// forgetting factor (1 = never forget); `prior_var` > 0 scales the
+    /// initial covariance — small keeps the offline fit sticky, large
+    /// lets the first observations dominate.
+    pub fn new(init: TexeModel, lambda: f64, prior_var: f64) -> Result<Self> {
+        if !(lambda > 0.0 && lambda <= 1.0) {
+            return Err(Error::Fit(format!(
+                "RLS forgetting factor {lambda} outside (0, 1]"
+            )));
+        }
+        if !(prior_var > 0.0) || !prior_var.is_finite() {
+            return Err(Error::Fit(format!(
+                "RLS prior variance {prior_var} must be finite and > 0"
+            )));
+        }
+        let mut p = [[0.0f64; 3]; 3];
+        p[0][0] = prior_var;
+        p[1][1] = prior_var;
+        p[2][2] = prior_var;
+        Ok(RlsPlane {
+            w: [init.alpha_n, init.alpha_m, init.beta],
+            p,
+            lambda,
+            count: 0,
+        })
+    }
+
+    /// Feed one observed completion: input length `n`, realised output
+    /// length `m`, measured execution seconds `t_s`. O(1).
+    pub fn observe(&mut self, n: f64, m: f64, t_s: f64) {
+        if !(n.is_finite() && m.is_finite() && t_s.is_finite()) {
+            return; // never poison the covariance with NaN/inf
+        }
+        let x = [n, m, 1.0];
+        // px = P·x
+        let mut px = [0.0f64; 3];
+        for i in 0..3 {
+            px[i] = self.p[i][0] * x[0] + self.p[i][1] * x[1] + self.p[i][2] * x[2];
+        }
+        let denom = self.lambda + x[0] * px[0] + x[1] * px[1] + x[2] * px[2];
+        let k = [px[0] / denom, px[1] / denom, px[2] / denom];
+        let err = t_s - (x[0] * self.w[0] + x[1] * self.w[1] + x[2] * self.w[2]);
+        for i in 0..3 {
+            self.w[i] += k[i] * err;
+        }
+        // P ← (P − k·pxᵀ) / λ  (symmetric since k ∝ px).
+        for i in 0..3 {
+            for j in 0..3 {
+                self.p[i][j] = (self.p[i][j] - k[i] * px[j]) / self.lambda;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Current coefficient estimate as a [`TexeModel`] (fit-quality
+    /// fields are NaN — RLS tracks coefficients, not residuals).
+    pub fn model(&self) -> TexeModel {
+        TexeModel::from_coeffs(self.w[0], self.w[1], self.w[2])
+    }
+
+    /// Estimate T_exe at (n, m) from the current coefficients (clamped
+    /// at 0 like [`TexeModel::estimate`]).
+    pub fn estimate(&self, n: usize, m: f64) -> f64 {
+        self.model().estimate(n, m)
+    }
+
+    /// Observations absorbed so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The configured forgetting factor.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Serialise the current coefficients (for refit reporting).
+    pub fn to_json(&self) -> Json {
+        let mut o = self.model().to_json();
+        o.set("lambda", Json::Num(self.lambda))
+            .set("observations", Json::Num(self.count as f64));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn grid_samples(
+        truth: &TexeModel,
+        noise: f64,
+        count: usize,
+        seed: u64,
+    ) -> Vec<(f64, f64, f64)> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                let n = (1 + rng.usize(61)) as f64;
+                let m = (1 + rng.usize(61)) as f64;
+                let t = truth.estimate(n as usize, m) + rng.normal_ms(0.0, noise);
+                (n, m, t.max(0.0))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn converges_to_planted_plane_under_stationary_noise() {
+        let truth = TexeModel::from_coeffs(0.0012, 0.003, 0.006);
+        let prior = TexeModel::from_coeffs(0.0, 0.0, 0.0);
+        let mut rls = RlsPlane::new(prior, 1.0, 1e4).unwrap();
+        for (n, m, t) in grid_samples(&truth, 1e-4, 4000, 11) {
+            rls.observe(n, m, t);
+        }
+        let fit = rls.model();
+        assert!((fit.alpha_n - truth.alpha_n).abs() < 2e-5, "alpha_n {}", fit.alpha_n);
+        assert!((fit.alpha_m - truth.alpha_m).abs() < 2e-5, "alpha_m {}", fit.alpha_m);
+        assert!((fit.beta - truth.beta).abs() < 1e-3, "beta {}", fit.beta);
+        assert_eq!(rls.count(), 4000);
+    }
+
+    #[test]
+    fn forgetting_tracks_a_step_change() {
+        // Plane doubles mid-stream: with lambda < 1 the estimate must
+        // land on the new plane; the prior plane must be forgotten.
+        let before = TexeModel::from_coeffs(0.001, 0.003, 0.006);
+        let after = TexeModel::from_coeffs(0.002, 0.006, 0.012);
+        let mut rls = RlsPlane::new(before, 0.99, 1.0).unwrap();
+        for (n, m, t) in grid_samples(&before, 1e-5, 500, 21) {
+            rls.observe(n, m, t);
+        }
+        for (n, m, t) in grid_samples(&after, 1e-5, 1500, 22) {
+            rls.observe(n, m, t);
+        }
+        let fit = rls.model();
+        assert!(
+            (fit.alpha_m - after.alpha_m).abs() < 2e-4,
+            "alpha_m {} vs {}",
+            fit.alpha_m,
+            after.alpha_m
+        );
+        // Midpoint check: the estimate at a typical operating point is
+        // much closer to the new plane than the old one.
+        let est = rls.estimate(20, 20.0);
+        let (t_new, t_old) = (after.estimate(20, 20.0), before.estimate(20, 20.0));
+        assert!((est - t_new).abs() < 0.2 * (t_new - t_old).abs());
+    }
+
+    #[test]
+    fn no_forgetting_matches_batch_ols_closely() {
+        let truth = TexeModel::from_coeffs(0.0017, 0.0092, 0.031);
+        let samples = grid_samples(&truth, 2e-3, 3000, 31);
+        let mut rls = RlsPlane::new(TexeModel::from_coeffs(0.0, 0.0, 0.0), 1.0, 1e6).unwrap();
+        for &(n, m, t) in &samples {
+            rls.observe(n, m, t);
+        }
+        let ols = crate::predictor::fit::fit_plane(&samples).unwrap();
+        let fit = rls.model();
+        assert!((fit.alpha_n - ols.a).abs() < 1e-5, "{} vs {}", fit.alpha_n, ols.a);
+        assert!((fit.alpha_m - ols.b).abs() < 1e-5, "{} vs {}", fit.alpha_m, ols.b);
+        assert!((fit.beta - ols.c).abs() < 1e-3, "{} vs {}", fit.beta, ols.c);
+    }
+
+    #[test]
+    fn sticky_prior_resists_single_outliers() {
+        let prior = TexeModel::from_coeffs(0.001, 0.003, 0.006);
+        let mut rls = RlsPlane::new(prior, 1.0, 1e-8).unwrap();
+        rls.observe(30.0, 30.0, 100.0); // absurd outlier
+        let fit = rls.model();
+        assert!((fit.alpha_m - prior.alpha_m).abs() < 1e-3, "alpha_m {}", fit.alpha_m);
+    }
+
+    #[test]
+    fn rejects_bad_configuration_and_ignores_non_finite_samples() {
+        let t = TexeModel::from_coeffs(0.0, 0.0, 0.0);
+        assert!(RlsPlane::new(t, 0.0, 1.0).is_err());
+        assert!(RlsPlane::new(t, 1.1, 1.0).is_err());
+        assert!(RlsPlane::new(t, 0.9, 0.0).is_err());
+        assert!(RlsPlane::new(t, 0.9, f64::NAN).is_err());
+        let mut rls = RlsPlane::new(t, 0.99, 1.0).unwrap();
+        rls.observe(f64::NAN, 1.0, 1.0);
+        rls.observe(1.0, f64::INFINITY, 1.0);
+        assert_eq!(rls.count(), 0);
+    }
+
+    #[test]
+    fn json_reports_coefficients_and_count() {
+        let mut rls =
+            RlsPlane::new(TexeModel::from_coeffs(0.001, 0.002, 0.003), 0.98, 1.0).unwrap();
+        rls.observe(10.0, 10.0, 0.05);
+        let j = rls.to_json();
+        assert!((j.get("lambda").unwrap().as_f64().unwrap() - 0.98).abs() < 1e-12);
+        assert!((j.get("observations").unwrap().as_f64().unwrap() - 1.0).abs() < 1e-12);
+        assert!(j.get("alpha_m").is_ok());
+    }
+}

@@ -8,6 +8,18 @@
 //!
 //! Combined with the N→M regressor this yields the paper's eq. 2:
 //! `T_exe,i = αN·N + αM·(γ·N + δ) + β`.
+//!
+//! # Example
+//!
+//! ```
+//! use cnmt::predictor::{N2mRegressor, TexeModel};
+//!
+//! let texe = TexeModel::from_coeffs(0.001, 0.003, 0.006);
+//! let n2m = N2mRegressor::from_coeffs(0.9, 1.0);
+//! // eq. 2: T̂ = αN·N + αM·(γ·N + δ) + β at N = 10.
+//! let direct = 0.001 * 10.0 + 0.003 * (0.9 * 10.0 + 1.0) + 0.006;
+//! assert!((texe.estimate_with_n2m(10, &n2m) - direct).abs() < 1e-12);
+//! ```
 
 use super::fit::{fit_plane, PlaneFit};
 use super::n2m::N2mRegressor;
@@ -51,6 +63,7 @@ impl TexeModel {
         self.estimate(n, n2m.predict(n))
     }
 
+    /// Serialise the plane (calibration files, reports).
     pub fn to_json(&self) -> Json {
         let mut o = Json::object();
         o.set("alpha_n", Json::Num(self.alpha_n))
@@ -61,6 +74,7 @@ impl TexeModel {
         o
     }
 
+    /// Parse a plane serialised by [`TexeModel::to_json`].
     pub fn from_json(j: &Json) -> Result<Self> {
         Ok(TexeModel {
             alpha_n: j.get("alpha_n")?.as_f64()?,
@@ -71,6 +85,7 @@ impl TexeModel {
         })
     }
 
+    /// Sanity-check the coefficients (finite, decode cost ≥ 0).
     pub fn validate(&self) -> Result<()> {
         if !self.alpha_n.is_finite() || !self.alpha_m.is_finite() || !self.beta.is_finite() {
             return Err(Error::Fit("non-finite T_exe coefficients".into()));

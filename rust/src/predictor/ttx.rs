@@ -23,6 +23,7 @@ pub struct TtxEstimator {
 }
 
 impl TtxEstimator {
+    /// EWMA estimator with smoothing factor `alpha` ∈ (0, 1].
     pub fn new(alpha: f64) -> Self {
         assert!(alpha > 0.0 && alpha <= 1.0);
         TtxEstimator { alpha, estimate: None, last_obs_time: f64::NEG_INFINITY, count: 0 }
@@ -56,10 +57,12 @@ impl TtxEstimator {
         self.count == 0 || now_s - self.last_obs_time > max_age_s
     }
 
+    /// Observations absorbed so far.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Clock time of the last observation (−∞ before any).
     pub fn last_observation_time(&self) -> f64 {
         self.last_obs_time
     }

@@ -1,7 +1,7 @@
 //! Length-bucketed micro-batching.
 //!
 //! NMT inference cost is dominated by the serial O(M) decode loop
-//! ([`crate::runtime`] runs one decode-step executable per output
+//! (`crate::runtime` runs one decode-step executable per output
 //! token). Batching amortises that loop: a batch decodes for
 //! max(M_i) steps regardless of how many sequences ride along, so the
 //! cost of a batch is roughly its *longest* member plus a small
@@ -24,6 +24,8 @@
 //! members, so batch formation is O(lookahead·max_batch) — constant per
 //! batch, amortised O(1) per request — and head-of-line order is
 //! preserved for everything it skips.
+
+use std::collections::HashSet;
 
 use super::queue::{AdmissionQueue, QueuedRequest};
 
@@ -64,25 +66,60 @@ impl BatchPolicy {
         queue: &mut AdmissionQueue,
         start_s: f64,
     ) -> Vec<QueuedRequest> {
-        let head = match queue.pop() {
-            Some(h) => h,
-            None => return Vec::new(),
-        };
+        let mut no_cancels = HashSet::new();
+        self.form_batch_filtered(queue, start_s, &mut no_cancels)
+    }
+
+    /// [`form_batch`](BatchPolicy::form_batch) with cancel tokens: any
+    /// queued request whose id is in `cancelled` is purged (removed from
+    /// the queue and from the set, never executed) instead of being
+    /// batched. Purged entries consume no lookahead budget — they are
+    /// deletions, not candidates. Used by the dispatcher to drop the
+    /// losing twin of a hedged request ([`crate::scheduler::Dispatcher::submit_hedged`]).
+    pub fn form_batch_filtered(
+        &self,
+        queue: &mut AdmissionQueue,
+        start_s: f64,
+        cancelled: &mut HashSet<u64>,
+    ) -> Vec<QueuedRequest> {
+        // Purge cancelled heads first so the batch head is live.
+        loop {
+            let head_id = match queue.peek() {
+                None => return Vec::new(),
+                Some(h) => h.id,
+            };
+            if cancelled.contains(&head_id) {
+                queue.pop();
+                queue.unmark_dead();
+                cancelled.remove(&head_id);
+            } else {
+                break;
+            }
+        }
+        let head = queue.pop().expect("peeked head exists");
         let bucket = head.bucket;
         let mut batch = Vec::with_capacity(self.max_batch.min(8));
         batch.push(head);
         let mut i = 0usize;
         let mut scanned = 0usize;
         while batch.len() < self.max_batch && scanned < self.lookahead {
-            match queue.get(i) {
+            let (id, rq_bucket, arrival_s) = match queue.get(i) {
                 None => break,
-                Some(rq) if rq.bucket == bucket && rq.arrival_s <= start_s => {
-                    // Removal shifts the tail left; `i` now points at the
-                    // next candidate already.
-                    let rq = queue.remove(i).expect("indexed element exists");
-                    batch.push(rq);
-                }
-                Some(_) => i += 1,
+                Some(rq) => (rq.id, rq.bucket, rq.arrival_s),
+            };
+            if cancelled.contains(&id) {
+                // Removal shifts the tail left; `i` now points at the
+                // next candidate already.
+                queue.remove(i);
+                queue.unmark_dead();
+                cancelled.remove(&id);
+                continue;
+            }
+            if rq_bucket == bucket && arrival_s <= start_s {
+                let rq = queue.remove(i).expect("indexed element exists");
+                batch.push(rq);
+            } else {
+                i += 1;
             }
             scanned += 1;
         }
@@ -93,16 +130,20 @@ impl BatchPolicy {
 /// Running batch-size accounting (kept by the dispatcher).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BatchStats {
+    /// Batches dispatched.
     pub batches: u64,
+    /// Requests across all batches.
     pub requests: u64,
 }
 
 impl BatchStats {
+    /// Record one dispatched batch of `batch_len` requests.
     pub fn record(&mut self, batch_len: usize) {
         self.batches += 1;
         self.requests += batch_len as u64;
     }
 
+    /// Mean requests per batch (NaN before any batch).
     pub fn mean_batch_size(&self) -> f64 {
         if self.batches == 0 {
             f64::NAN
@@ -196,6 +237,34 @@ mod tests {
         let p = BatchPolicy::default();
         let mut q = AdmissionQueue::new(4);
         assert!(p.form_batch(&mut q, 0.0).is_empty());
+    }
+
+    #[test]
+    fn filtered_formation_purges_cancelled_entries() {
+        let p = BatchPolicy { bucket_width: 8.0, max_batch: 4, lookahead: 32 };
+        let mut q = AdmissionQueue::new(16);
+        for id in 0..5 {
+            q.offer(rq(id, 0, 0.0));
+        }
+        // Cancel the head and one mid-queue entry.
+        let mut cancelled: HashSet<u64> = [0u64, 2u64].into_iter().collect();
+        let b = p.form_batch_filtered(&mut q, 1.0, &mut cancelled);
+        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        // 0 and 2 purged, never executed; 1 heads the batch.
+        assert_eq!(ids, vec![1, 3, 4]);
+        assert!(cancelled.is_empty(), "purged ids must leave the set");
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn cancelled_only_queue_yields_empty_batch() {
+        let p = BatchPolicy::default();
+        let mut q = AdmissionQueue::new(4);
+        q.offer(rq(7, 0, 0.0));
+        let mut cancelled: HashSet<u64> = [7u64].into_iter().collect();
+        assert!(p.form_batch_filtered(&mut q, 1.0, &mut cancelled).is_empty());
+        assert!(q.is_empty());
+        assert!(cancelled.is_empty());
     }
 
     #[test]

@@ -31,6 +31,7 @@ pub struct CapacityTracker {
 }
 
 impl CapacityTracker {
+    /// Tracker over `workers` worker slots (must be > 0).
     pub fn new(workers: usize) -> Self {
         assert!(workers > 0, "CapacityTracker needs workers > 0");
         CapacityTracker {
@@ -40,6 +41,7 @@ impl CapacityTracker {
         }
     }
 
+    /// Number of worker slots.
     pub fn workers(&self) -> usize {
         self.free_at_s.len()
     }
@@ -55,6 +57,14 @@ impl CapacityTracker {
         self.backlog_est_s = (self.backlog_est_s - est_sum_s).max(0.0);
         self.free_at_s[worker] = done_s;
         self.dispatches += 1;
+    }
+
+    /// A queued request with service estimate `est_service_s` was
+    /// cancelled before dispatch (a hedge twin lost the race): reclaim
+    /// its share of the backlog so the expected-wait estimate stops
+    /// charging work that will never run.
+    pub fn on_cancel(&mut self, est_service_s: f64) {
+        self.backlog_est_s = (self.backlog_est_s - est_service_s.max(0.0)).max(0.0);
     }
 
     /// Index and free-time of the worker that frees up first.
@@ -85,6 +95,7 @@ impl CapacityTracker {
         self.backlog_est_s
     }
 
+    /// Batches dispatched so far.
     pub fn dispatches(&self) -> u64 {
         self.dispatches
     }
@@ -153,6 +164,19 @@ mod tests {
         let mut t = CapacityTracker::new(1);
         t.on_admit(0.1);
         t.on_dispatch(0, 0.2, 1.0); // over-subtract (float drift guard)
+        assert_eq!(t.backlog_est_s(), 0.0);
+    }
+
+    #[test]
+    fn cancel_reclaims_backlog_like_dispatch() {
+        let mut t = CapacityTracker::new(2);
+        t.on_admit(0.3);
+        t.on_admit(0.2);
+        t.on_cancel(0.3);
+        assert!((t.backlog_est_s() - 0.2).abs() < 1e-12);
+        assert!((t.expected_wait_s(0.0) - 0.1).abs() < 1e-12);
+        // Over-cancel clamps at zero, like over-dispatch.
+        t.on_cancel(5.0);
         assert_eq!(t.backlog_est_s(), 0.0);
     }
 }

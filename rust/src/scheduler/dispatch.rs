@@ -11,13 +11,37 @@
 //! ([`crate::sim::harness`]), a live gateway would back it with real
 //! engines.
 //!
+//! The dispatcher is a two-queue discrete-event loop: batch *starts*
+//! (earliest ready batch across both lanes, edge winning ties) and batch
+//! *completions* (a min-heap on finish time) are processed in global
+//! simulated-time order, completions first on ties. This ordering is
+//! what makes cross-lane interactions — a hedge winner on one lane
+//! cancelling its twin on the other — causally correct: a twin can only
+//! be cancelled by a completion that actually precedes its dispatch.
+//!
+//! ## Hedged dispatch
+//!
+//! When the router's expected-latency gap between edge and cloud is
+//! inside its error bar, committing to either side is a coin flip;
+//! [`submit_hedged`] instead enqueues a copy on *both* lanes under one
+//! request id. The first copy to **finish** is the request's result
+//! ([`CompletionKind::HedgeWin`]); the twin is cancelled via a cancel
+//! token. A twin still queued is purged without running and its backlog
+//! share reclaimed ([`CapacityTracker::on_cancel`]); a twin already
+//! executing runs to completion as wasted work
+//! ([`CompletionKind::HedgeLoss`]). [`HedgeStats`] counts every outcome.
+//!
 //! The per-request hot path (`expected_wait_s` → route → [`submit`]) is
 //! O(1) for a fixed worker pool: no allocation, no queue scans.
-//! Dispatch itself ([`run_until`]) is amortised O(1) per request via the
-//! bounded-lookahead batcher.
+//! Dispatch itself ([`run_until`]) is amortised O(log inflight) per
+//! request (heap push/pop); cancel tokens are O(1) hash lookups.
 //!
 //! [`submit`]: Dispatcher::submit
+//! [`submit_hedged`]: Dispatcher::submit_hedged
 //! [`run_until`]: Dispatcher::run_until
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet};
 
 use crate::devices::DeviceKind;
 
@@ -61,10 +85,33 @@ impl Default for DispatcherConfig {
     }
 }
 
-/// One completed request, reported through [`Dispatcher::run_until`].
+/// How a completed copy relates to its request (hedging outcome).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CompletionKind {
+    /// The request's only submission: this completion is its result.
+    Solo,
+    /// Hedged, and this copy finished first: the request's result. The
+    /// twin has been cancelled (purged if still queued).
+    HedgeWin,
+    /// Hedged, and the twin already won: this copy's work is wasted.
+    /// Never count it toward goodput.
+    HedgeLoss,
+}
+
+impl CompletionKind {
+    /// Is this completion the request's result (vs duplicated waste)?
+    pub fn is_result(&self) -> bool {
+        !matches!(self, CompletionKind::HedgeLoss)
+    }
+}
+
+/// One completed request copy, reported through [`Dispatcher::run_until`]
+/// in nondecreasing `done_s` order.
 #[derive(Debug, Clone, Copy)]
 pub struct Completion {
+    /// The queued request (hedge twins share `id`/`payload`).
     pub request: QueuedRequest,
+    /// Device the copy ran on.
     pub device: DeviceKind,
     /// When its batch started executing.
     pub start_s: f64,
@@ -72,6 +119,92 @@ pub struct Completion {
     pub done_s: f64,
     /// Size of the batch it rode in.
     pub batch_size: usize,
+    /// Hedging outcome ([`CompletionKind::Solo`] for normal submissions).
+    pub kind: CompletionKind,
+}
+
+/// Hedged-dispatch counters kept by the dispatcher.
+///
+/// Invariants once drained: `wins_edge + wins_cloud == hedged`, and every
+/// hedged request resolves its twin exactly one way —
+/// `cancelled_unrun + losers_run == hedged`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HedgeStats {
+    /// Requests actually duplicated (both copies admitted).
+    pub hedged: u64,
+    /// Hedged requests whose edge copy finished first.
+    pub wins_edge: u64,
+    /// Hedged requests whose cloud copy finished first.
+    pub wins_cloud: u64,
+    /// Losing twins cancelled while still queued (no work wasted).
+    pub cancelled_unrun: u64,
+    /// Losing twins that were already executing and ran to completion
+    /// (wasted work).
+    pub losers_run: u64,
+}
+
+/// Outcome of a hedged submission ([`Dispatcher::submit_hedged`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HedgeOutcome {
+    /// Both copies admitted: the request is racing on both lanes.
+    Hedged,
+    /// Only one lane had room: degraded to a normal submission there.
+    Single(DeviceKind),
+    /// Both lanes full: the request was shed.
+    Rejected,
+}
+
+/// Lifecycle of one hedged copy on its lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CopyState {
+    Queued,
+    Running,
+    Done,
+}
+
+/// Dispatcher-side state of one in-flight hedged request.
+#[derive(Debug, Clone, Copy)]
+struct HedgeEntry {
+    /// Per-lane service estimate (`[edge, cloud]`) — needed to reclaim
+    /// backlog when the queued twin is cancelled.
+    est: [f64; 2],
+    state: [CopyState; 2],
+    winner: Option<DeviceKind>,
+}
+
+/// A dispatched copy waiting for its finish event to fire. Ordered by
+/// `(done_s, seq)` — `seq` makes equal finish times resolve in dispatch
+/// order, deterministically.
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    done_s: f64,
+    seq: u64,
+    start_s: f64,
+    batch_size: usize,
+    device: DeviceKind,
+    request: QueuedRequest,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.done_s == other.done_s && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.done_s
+            .total_cmp(&other.done_s)
+            .then(self.seq.cmp(&other.seq))
+    }
 }
 
 /// Queue + capacity state for one device (internal to the dispatcher).
@@ -88,6 +221,29 @@ impl Lane {
             tracker: CapacityTracker::new(workers),
         }
     }
+
+    /// Admit + account in one step.
+    fn offer(&mut self, rq: QueuedRequest) -> Admission {
+        let admission = self.queue.offer(rq);
+        if admission.is_admitted() {
+            self.tracker.on_admit(rq.est_service_s);
+        }
+        admission
+    }
+}
+
+fn lane_idx(device: DeviceKind) -> usize {
+    match device {
+        DeviceKind::Edge => 0,
+        DeviceKind::Cloud => 1,
+    }
+}
+
+fn other(device: DeviceKind) -> DeviceKind {
+    match device {
+        DeviceKind::Edge => DeviceKind::Cloud,
+        DeviceKind::Cloud => DeviceKind::Edge,
+    }
 }
 
 /// The two-lane edge/cloud dispatcher.
@@ -97,15 +253,30 @@ pub struct Dispatcher {
     cloud: Lane,
     policy: BatchPolicy,
     stats: BatchStats,
+    /// Dispatched copies whose finish events have not fired yet
+    /// (min-heap on finish time).
+    pending: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+    /// In-flight hedged requests, keyed by request id.
+    hedges: HashMap<u64, HedgeEntry>,
+    /// Cancel tokens: ids whose queued copy must be purged, not run.
+    cancelled: HashSet<u64>,
+    hedge_stats: HedgeStats,
 }
 
 impl Dispatcher {
+    /// Build a dispatcher from its sizing parameters.
     pub fn new(cfg: &DispatcherConfig) -> Self {
         Dispatcher {
             edge: Lane::new(cfg.edge_workers, cfg.max_queue_depth),
             cloud: Lane::new(cfg.cloud_workers, cfg.max_queue_depth),
             policy: cfg.batch,
             stats: BatchStats::default(),
+            pending: BinaryHeap::new(),
+            seq: 0,
+            hedges: HashMap::new(),
+            cancelled: HashSet::new(),
+            hedge_stats: HedgeStats::default(),
         }
     }
 
@@ -134,93 +305,289 @@ impl Dispatcher {
     /// is assigned here so queue and batcher always agree on it.
     pub fn submit(&mut self, device: DeviceKind, mut rq: QueuedRequest) -> Admission {
         rq.bucket = self.policy.bucket_of(rq.m_est);
-        let lane = self.lane_mut(device);
-        let admission = lane.queue.offer(rq);
-        if admission.is_admitted() {
-            lane.tracker.on_admit(rq.est_service_s);
-        }
-        admission
+        self.lane_mut(device).offer(rq)
     }
 
+    /// Hedged submission: enqueue a copy of `rq` on *both* lanes, with
+    /// per-lane service estimates (the copies differ only in
+    /// `est_service_s`). First copy to finish wins; the loser is
+    /// cancelled ([`CompletionKind`]). If only one lane admits, the
+    /// request degrades to a normal submission there; if neither does,
+    /// it is shed. O(1).
+    pub fn submit_hedged(
+        &mut self,
+        mut rq: QueuedRequest,
+        edge_est_s: f64,
+        cloud_est_s: f64,
+    ) -> HedgeOutcome {
+        rq.bucket = self.policy.bucket_of(rq.m_est);
+        let mut edge_rq = rq;
+        edge_rq.est_service_s = edge_est_s;
+        let mut cloud_rq = rq;
+        cloud_rq.est_service_s = cloud_est_s;
+        let edge_ok = self.edge.offer(edge_rq).is_admitted();
+        let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
+        match (edge_ok, cloud_ok) {
+            (true, true) => {
+                self.hedge_stats.hedged += 1;
+                self.hedges.insert(
+                    rq.id,
+                    HedgeEntry {
+                        est: [edge_est_s, cloud_est_s],
+                        state: [CopyState::Queued, CopyState::Queued],
+                        winner: None,
+                    },
+                );
+                HedgeOutcome::Hedged
+            }
+            (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
+            (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
+            (false, false) => HedgeOutcome::Rejected,
+        }
+    }
+
+    /// Queue depth on `device` (includes not-yet-purged cancelled twins).
     pub fn depth(&self, device: DeviceKind) -> usize {
         self.lane(device).queue.depth()
     }
 
+    /// Admission counters for `device`'s queue. Hedged submissions offer
+    /// one copy per lane, so `offered` counts copies, not requests.
     pub fn queue_stats(&self, device: DeviceKind) -> QueueStats {
         self.lane(device).queue.stats()
     }
 
+    /// Micro-batch size accounting across both lanes.
     pub fn batch_stats(&self) -> BatchStats {
         self.stats
     }
 
-    pub fn idle(&self) -> bool {
-        self.edge.queue.is_empty() && self.cloud.queue.is_empty()
+    /// Hedged-dispatch outcome counters.
+    pub fn hedge_stats(&self) -> HedgeStats {
+        self.hedge_stats
     }
 
-    /// Run every batch (on both lanes) whose start time is ≤
-    /// `horizon_s`; `on_complete` fires once per finished request.
-    /// Drive with `horizon_s = next arrival time` while feeding
-    /// arrivals, then once with `f64::INFINITY` to drain.
+    /// No queued work and no in-flight batches?
+    pub fn idle(&self) -> bool {
+        self.edge.queue.is_empty() && self.cloud.queue.is_empty() && self.pending.is_empty()
+    }
+
+    /// Time of the next event (batch start or batch completion), if any
+    /// work is queued or in flight. Purges cancelled entries at the
+    /// queue heads as a side effect. External event loops (closed-loop
+    /// clients) interleave their submissions with this clock.
+    pub fn next_event_s(&mut self) -> Option<f64> {
+        let next_start = self.next_batch_start().map(|(_d, s)| s);
+        let next_done = self.pending.peek().map(|p| p.0.done_s);
+        match (next_start, next_done) {
+            (None, None) => None,
+            (Some(s), None) => Some(s),
+            (None, Some(t)) => Some(t),
+            (Some(s), Some(t)) => Some(s.min(t)),
+        }
+    }
+
+    /// Earliest batch start across both lanes (edge wins ties).
+    fn next_batch_start(&mut self) -> Option<(DeviceKind, f64)> {
+        let e = self.lane_next_start(DeviceKind::Edge);
+        let c = self.lane_next_start(DeviceKind::Cloud);
+        match (e, c) {
+            (None, None) => None,
+            (Some(s), None) => Some((DeviceKind::Edge, s)),
+            (None, Some(s)) => Some((DeviceKind::Cloud, s)),
+            (Some(se), Some(sc)) => {
+                if se <= sc {
+                    Some((DeviceKind::Edge, se))
+                } else {
+                    Some((DeviceKind::Cloud, sc))
+                }
+            }
+        }
+    }
+
+    /// Start time of `device`'s next batch (max of head arrival and the
+    /// earliest-free worker), purging cancelled heads on the way.
+    fn lane_next_start(&mut self, device: DeviceKind) -> Option<f64> {
+        loop {
+            let lane = self.lane(device);
+            let (head_id, head_arrival) = match lane.queue.peek() {
+                None => return None,
+                Some(h) => (h.id, h.arrival_s),
+            };
+            if self.cancelled.contains(&head_id) {
+                let queue = &mut self.lane_mut(device).queue;
+                queue.pop();
+                queue.unmark_dead();
+                self.cancelled.remove(&head_id);
+                continue;
+            }
+            let (_worker, free_s) = lane.tracker.earliest_free();
+            return Some(free_s.max(head_arrival));
+        }
+    }
+
+    /// Process the single earliest event — a batch completion or a batch
+    /// start, completions first on ties — if it happens at or before
+    /// `horizon_s`. Returns whether an event was processed;
+    /// `on_complete` fires once per finished copy, in nondecreasing
+    /// finish-time order.
+    pub fn step<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F) -> bool
+    where
+        E: BatchExecutor,
+        F: FnMut(Completion),
+    {
+        let next_start = self.next_batch_start();
+        let next_done = self.pending.peek().map(|p| p.0.done_s);
+        let completion_first = match (next_start, next_done) {
+            (None, None) => return false,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some((_d, s)), Some(t)) => t <= s,
+        };
+        if completion_first {
+            let done_s = next_done.expect("peeked completion exists");
+            if done_s > horizon_s {
+                return false;
+            }
+            self.flush_one(on_complete);
+        } else {
+            let (device, start_s) = next_start.expect("peeked start exists");
+            if start_s > horizon_s {
+                return false;
+            }
+            self.dispatch_at(device, start_s, exec);
+        }
+        true
+    }
+
+    /// Process every event (on both lanes, in global simulated-time
+    /// order) up to and including `horizon_s`; `on_complete` fires once
+    /// per finished copy. Drive with `horizon_s = next arrival time`
+    /// while feeding arrivals, then once with `f64::INFINITY` to drain.
     pub fn run_until<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F)
     where
         E: BatchExecutor,
         F: FnMut(Completion),
     {
-        drain_lane(
-            DeviceKind::Edge,
-            &mut self.edge,
-            &self.policy,
-            &mut self.stats,
-            horizon_s,
-            exec,
-            on_complete,
-        );
-        drain_lane(
-            DeviceKind::Cloud,
-            &mut self.cloud,
-            &self.policy,
-            &mut self.stats,
-            horizon_s,
-            exec,
-            on_complete,
-        );
+        while self.step(horizon_s, exec, on_complete) {}
     }
-}
 
-fn drain_lane<E, F>(
-    device: DeviceKind,
-    lane: &mut Lane,
-    policy: &BatchPolicy,
-    stats: &mut BatchStats,
-    horizon_s: f64,
-    exec: &mut E,
-    on_complete: &mut F,
-) where
-    E: BatchExecutor,
-    F: FnMut(Completion),
-{
-    loop {
-        let head_arrival = match lane.queue.peek() {
-            None => return,
-            Some(h) => h.arrival_s,
+    /// Form + execute one batch on `device` at `start_s`, pushing its
+    /// members onto the pending-completion heap.
+    fn dispatch_at<E>(&mut self, device: DeviceKind, start_s: f64, exec: &mut E)
+    where
+        E: BatchExecutor,
+    {
+        let batch = {
+            let (lane, policy, cancelled) = match device {
+                DeviceKind::Edge => (&mut self.edge, &self.policy, &mut self.cancelled),
+                DeviceKind::Cloud => (&mut self.cloud, &self.policy, &mut self.cancelled),
+            };
+            policy.form_batch_filtered(&mut lane.queue, start_s, cancelled)
         };
-        let (worker, free_s) = lane.tracker.earliest_free();
-        let start_s = free_s.max(head_arrival);
-        if start_s > horizon_s {
+        if batch.is_empty() {
             return;
         }
-        let batch = policy.form_batch(&mut lane.queue, start_s);
-        debug_assert!(!batch.is_empty());
+        // Hedged members are now executing: too late to cancel them.
+        for rq in &batch {
+            if let Some(entry) = self.hedges.get_mut(&rq.id) {
+                entry.state[lane_idx(device)] = CopyState::Running;
+            }
+        }
         let est_sum: f64 = batch.iter().map(|r| r.est_service_s).sum();
         let service_s = exec.execute(device, &batch, start_s).max(0.0);
         let done_s = start_s + service_s;
-        lane.tracker.on_dispatch(worker, est_sum, done_s);
-        stats.record(batch.len());
+        {
+            let lane = self.lane_mut(device);
+            let (worker, _free) = lane.tracker.earliest_free();
+            lane.tracker.on_dispatch(worker, est_sum, done_s);
+        }
+        self.stats.record(batch.len());
         let batch_size = batch.len();
         for request in batch {
-            on_complete(Completion { request, device, start_s, done_s, batch_size });
+            let seq = self.seq;
+            self.seq += 1;
+            self.pending.push(Reverse(Pending {
+                done_s,
+                seq,
+                start_s,
+                batch_size,
+                device,
+                request,
+            }));
         }
+    }
+
+    /// Fire the earliest pending completion event.
+    fn flush_one<F>(&mut self, on_complete: &mut F)
+    where
+        F: FnMut(Completion),
+    {
+        let Reverse(p) = self.pending.pop().expect("pending completion exists");
+        let kind = self.resolve_completion(p.device, p.request.id);
+        on_complete(Completion {
+            request: p.request,
+            device: p.device,
+            start_s: p.start_s,
+            done_s: p.done_s,
+            batch_size: p.batch_size,
+            kind,
+        });
+    }
+
+    /// Classify one finished copy and update the hedge bookkeeping:
+    /// first finisher wins and cancels its twin (reclaiming queued
+    /// capacity); a later finisher is wasted work.
+    fn resolve_completion(&mut self, device: DeviceKind, id: u64) -> CompletionKind {
+        let (kind, cancel_twin) = {
+            let entry = match self.hedges.get_mut(&id) {
+                None => return CompletionKind::Solo,
+                Some(e) => e,
+            };
+            let di = lane_idx(device);
+            entry.state[di] = CopyState::Done;
+            if entry.winner.is_some() {
+                (CompletionKind::HedgeLoss, None)
+            } else {
+                entry.winner = Some(device);
+                let ti = lane_idx(other(device));
+                match entry.state[ti] {
+                    CopyState::Queued => {
+                        (CompletionKind::HedgeWin, Some((other(device), entry.est[ti])))
+                    }
+                    _ => (CompletionKind::HedgeWin, None),
+                }
+            }
+        };
+        match kind {
+            CompletionKind::HedgeLoss => {
+                // Twin already won; the race is fully resolved.
+                self.hedges.remove(&id);
+                self.hedge_stats.losers_run += 1;
+            }
+            CompletionKind::HedgeWin => {
+                match device {
+                    DeviceKind::Edge => self.hedge_stats.wins_edge += 1,
+                    DeviceKind::Cloud => self.hedge_stats.wins_cloud += 1,
+                }
+                if let Some((twin, est)) = cancel_twin {
+                    // Twin still queued: cancel it and reclaim its
+                    // backlog share and admission slot now (the queue
+                    // entry itself is purged lazily at the head / in
+                    // the batcher's lookahead window).
+                    self.cancelled.insert(id);
+                    self.hedge_stats.cancelled_unrun += 1;
+                    let lane = self.lane_mut(twin);
+                    lane.tracker.on_cancel(est);
+                    lane.queue.mark_dead();
+                    self.hedges.remove(&id);
+                }
+                // Twin running: keep the entry so its completion is
+                // classified as a loss.
+            }
+            CompletionKind::Solo => {}
+        }
+        kind
     }
 }
 
@@ -241,6 +608,21 @@ mod tests {
         }
     }
 
+    /// Per-device fixed batch time.
+    struct AsymExec {
+        edge_s: f64,
+        cloud_s: f64,
+    }
+
+    impl BatchExecutor for AsymExec {
+        fn execute(&mut self, d: DeviceKind, _batch: &[QueuedRequest], _s: f64) -> f64 {
+            match d {
+                DeviceKind::Edge => self.edge_s,
+                DeviceKind::Cloud => self.cloud_s,
+            }
+        }
+    }
+
     fn rq(id: u64, arrival_s: f64, m_est: f64) -> QueuedRequest {
         QueuedRequest {
             id,
@@ -253,9 +635,9 @@ mod tests {
         }
     }
 
-    fn collect_completions(
+    fn collect_completions<E: BatchExecutor>(
         disp: &mut Dispatcher,
-        exec: &mut FixedExec,
+        exec: &mut E,
         horizon_s: f64,
     ) -> Vec<Completion> {
         let mut out = Vec::new();
@@ -273,6 +655,7 @@ mod tests {
         assert!((done[0].start_s - 1.0).abs() < 1e-12);
         assert!((done[0].done_s - 1.1).abs() < 1e-12);
         assert_eq!(done[0].batch_size, 1);
+        assert_eq!(done[0].kind, CompletionKind::Solo);
         assert!(disp.idle());
     }
 
@@ -295,14 +678,34 @@ mod tests {
     }
 
     #[test]
-    fn horizon_gates_dispatch() {
+    fn completions_fire_at_finish_time_not_dispatch_time() {
         let mut disp = Dispatcher::new(&DispatcherConfig::default());
         let mut exec = FixedExec { per_request_s: 0.1, residual: 0.0 };
         disp.submit(DeviceKind::Cloud, rq(0, 5.0, 10.0));
         assert!(collect_completions(&mut disp, &mut exec, 4.9).is_empty());
-        let done = collect_completions(&mut disp, &mut exec, 5.0);
+        // At horizon 5.0 the batch starts (worker busy) but its finish
+        // event at 5.1 has not fired yet.
+        assert!(collect_completions(&mut disp, &mut exec, 5.0).is_empty());
+        assert!(disp.expected_wait_s(DeviceKind::Cloud, 5.0) > 0.0);
+        let done = collect_completions(&mut disp, &mut exec, 5.1);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].device, DeviceKind::Cloud);
+        assert!(disp.idle());
+    }
+
+    #[test]
+    fn dispatch_order_is_global_start_time() {
+        // The cloud head arrives before the edge head: cloud dispatches
+        // (and completes) first even though edge is lane 0.
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut exec = FixedExec { per_request_s: 0.01, residual: 0.0 };
+        disp.submit(DeviceKind::Edge, rq(0, 2.0, 10.0));
+        disp.submit(DeviceKind::Cloud, rq(1, 1.0, 10.0));
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].device, DeviceKind::Cloud);
+        assert_eq!(done[1].device, DeviceKind::Edge);
+        assert!(done[0].done_s <= done[1].done_s);
     }
 
     #[test]
@@ -348,5 +751,154 @@ mod tests {
         assert_eq!(qs_e.offered + qs_c.offered, 200);
         assert_eq!(qs_e.rejected + qs_c.rejected, rejected as u64);
         assert!(disp.idle());
+    }
+
+    #[test]
+    fn hedge_winner_cancels_queued_twin() {
+        // Cloud is busy behind a long job, so the hedged cloud copy is
+        // still queued when the edge copy finishes: it must be purged
+        // without running and its backlog share reclaimed.
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 0.1, cloud_s: 5.0 };
+        disp.submit(DeviceKind::Cloud, rq(0, 0.0, 10.0)); // 5 s blocker
+        assert_eq!(
+            disp.submit_hedged(rq(1, 0.1, 10.0), 0.1, 0.1),
+            HedgeOutcome::Hedged
+        );
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        // Blocker + edge win; the cloud twin never executes.
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].kind, CompletionKind::HedgeWin);
+        assert_eq!(done[0].device, DeviceKind::Edge);
+        assert_eq!(done[0].request.id, 1);
+        assert_eq!(done[1].kind, CompletionKind::Solo);
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.hedged, 1);
+        assert_eq!(hs.wins_edge, 1);
+        assert_eq!(hs.cancelled_unrun, 1);
+        assert_eq!(hs.losers_run, 0);
+        assert!(disp.idle());
+        // Backlog fully reclaimed once drained.
+        assert_eq!(disp.expected_wait_s(DeviceKind::Cloud, 100.0), 0.0);
+    }
+
+    #[test]
+    fn hedge_winner_is_first_finisher_not_first_dispatched() {
+        // Both lanes idle: both copies start at t=0 (edge dispatched
+        // first), but the cloud copy finishes sooner — it must win, and
+        // the already-running edge copy completes as wasted work.
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 0.5, cloud_s: 0.1 };
+        assert_eq!(
+            disp.submit_hedged(rq(0, 0.0, 10.0), 0.5, 0.1),
+            HedgeOutcome::Hedged
+        );
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].kind, CompletionKind::HedgeWin);
+        assert_eq!(done[0].device, DeviceKind::Cloud);
+        assert_eq!(done[1].kind, CompletionKind::HedgeLoss);
+        assert_eq!(done[1].device, DeviceKind::Edge);
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.hedged, 1);
+        assert_eq!(hs.wins_cloud, 1);
+        assert_eq!(hs.losers_run, 1);
+        assert_eq!(hs.cancelled_unrun, 0);
+    }
+
+    #[test]
+    fn queued_twin_that_starts_before_winner_finishes_still_races() {
+        // Edge copy starts at 0 and takes 5 s; the cloud twin is queued
+        // behind a 1 s blocker, starts at 1.0 — *before* the edge copy
+        // finishes — so it must not be cancelled, and it wins at 1.1.
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 5.0, cloud_s: 1.0 };
+        // Different bucket (m_est 30 vs 10) so the twin cannot ride the
+        // blocker's batch: it genuinely waits, then starts at 1.0.
+        disp.submit(DeviceKind::Cloud, rq(0, 0.0, 30.0)); // blocker, done 1.0
+        assert_eq!(
+            disp.submit_hedged(rq(1, 0.0, 10.0), 5.0, 1.0),
+            HedgeOutcome::Hedged
+        );
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        let kinds: Vec<(u64, CompletionKind)> =
+            done.iter().map(|c| (c.request.id, c.kind)).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                (0, CompletionKind::Solo),      // blocker finishes at 1.0
+                (1, CompletionKind::HedgeWin),  // cloud twin finishes at 2.0
+                (1, CompletionKind::HedgeLoss), // edge copy finishes at 5.0
+            ]
+        );
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.wins_cloud, 1);
+        assert_eq!(hs.losers_run, 1);
+        assert_eq!(hs.cancelled_unrun, 0);
+    }
+
+    #[test]
+    fn cancelled_twin_frees_its_admission_slot() {
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            max_queue_depth: 3,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 0.1, cloud_s: 10.0 };
+        disp.submit(DeviceKind::Cloud, rq(0, 0.0, 30.0)); // blocker, 10 s
+        disp.submit(DeviceKind::Cloud, rq(1, 0.0, 20.0)); // queued solo
+        assert_eq!(
+            disp.submit_hedged(rq(2, 0.0, 10.0), 0.1, 0.1),
+            HedgeOutcome::Hedged
+        );
+        let mut comps = Vec::new();
+        disp.run_until(0.5, &mut exec, &mut |c| comps.push(c));
+        // Edge copy won at 0.1; the cloud twin sits mid-queue as a
+        // cancelled ghost: physically present, but its admission slot
+        // is released.
+        assert_eq!(disp.hedge_stats().cancelled_unrun, 1);
+        assert_eq!(disp.depth(DeviceKind::Cloud), 2);
+        assert!(disp.submit(DeviceKind::Cloud, rq(3, 0.6, 20.0)).is_admitted());
+        assert!(disp.submit(DeviceKind::Cloud, rq(4, 0.7, 20.0)).is_admitted());
+        // Three live entries now: the bound holds again.
+        assert!(!disp.submit(DeviceKind::Cloud, rq(5, 0.8, 20.0)).is_admitted());
+        disp.run_until(f64::INFINITY, &mut exec, &mut |c| comps.push(c));
+        assert!(disp.idle());
+        let results = comps.iter().filter(|c| c.kind.is_result()).count();
+        assert_eq!(results, 5, "4 solos + 1 hedge winner");
+    }
+
+    #[test]
+    fn hedge_degrades_to_single_when_one_lane_is_full() {
+        let cfg = DispatcherConfig { max_queue_depth: 1, ..Default::default() };
+        let mut disp = Dispatcher::new(&cfg);
+        disp.submit(DeviceKind::Edge, rq(0, 0.0, 10.0)); // fills edge
+        match disp.submit_hedged(rq(1, 0.0, 10.0), 0.1, 0.1) {
+            HedgeOutcome::Single(DeviceKind::Cloud) => {}
+            o => panic!("expected Single(Cloud), got {o:?}"),
+        }
+        assert_eq!(disp.hedge_stats().hedged, 0);
+        // Both lanes full now: the next hedge is shed outright.
+        assert_eq!(
+            disp.submit_hedged(rq(2, 0.0, 10.0), 0.1, 0.1),
+            HedgeOutcome::Rejected
+        );
     }
 }

@@ -15,7 +15,8 @@
 //!   [`crate::predictor::N2mRegressor`] estimate M̂, amortising the
 //!   serial O(M) decode loop across compatible requests;
 //! * [`dispatch`] — the two-lane worker-pool dispatcher tying the above
-//!   together behind a backend-agnostic [`BatchExecutor`].
+//!   together behind a backend-agnostic [`BatchExecutor`], processing
+//!   batch starts and batch completions in global simulated-time order.
 //!
 //! The queue-aware decision is then eq. 1 with a wait term on each side
 //! ([`crate::coordinator::Router::decide_loaded`]):
@@ -24,10 +25,48 @@
 //! d = edge  if  T̂_exe,e + Ŵ_e  ≤  T̂_tx + T̂_exe,c + Ŵ_c  else cloud
 //! ```
 //!
+//! When that comparison lands inside a configurable error bar the
+//! dispatcher can *hedge* — run the request on both lanes and keep the
+//! first finisher ([`Dispatcher::submit_hedged`], cancel tokens, wasted
+//! work accounting in [`HedgeStats`]); and the planes behind the
+//! estimates can be refit online from observed completions
+//! ([`crate::predictor::RlsPlane`]) so the decision tracks drifting
+//! hardware.
+//!
 //! [`crate::sim::harness::run_contended`] replays open-loop Poisson
-//! arrivals through this subsystem against ground-truth tables, and
+//! arrivals through this subsystem against ground-truth tables
+//! (optionally with injected drift), [`crate::sim::harness::run_closed_loop`]
+//! drives it with bounded-outstanding closed-loop clients, and
 //! [`crate::experiments::load`] sweeps offered load to produce
 //! throughput-vs-tail-latency curves per policy.
+//!
+//! # Example
+//!
+//! Submit one request and drain it through a fixed-cost executor:
+//!
+//! ```
+//! use cnmt::devices::DeviceKind;
+//! use cnmt::scheduler::{BatchExecutor, Dispatcher, DispatcherConfig, QueuedRequest};
+//!
+//! struct FixedExec;
+//! impl BatchExecutor for FixedExec {
+//!     fn execute(&mut self, _d: DeviceKind, batch: &[QueuedRequest], _s: f64) -> f64 {
+//!         0.1 * batch.len() as f64
+//!     }
+//! }
+//!
+//! let mut disp = Dispatcher::new(&DispatcherConfig::default());
+//! let rq = QueuedRequest {
+//!     id: 0, payload: 0, n: 10, m_est: 9.0,
+//!     est_service_s: 0.1, arrival_s: 0.0, bucket: 0,
+//! };
+//! assert!(disp.submit(DeviceKind::Edge, rq).is_admitted());
+//! let mut done = Vec::new();
+//! disp.run_until(f64::INFINITY, &mut FixedExec, &mut |c| done.push(c));
+//! assert_eq!(done.len(), 1);
+//! assert!((done[0].done_s - 0.1).abs() < 1e-12);
+//! assert!(disp.idle());
+//! ```
 
 pub mod batch;
 pub mod capacity;
@@ -36,5 +75,8 @@ pub mod queue;
 
 pub use batch::{BatchPolicy, BatchStats};
 pub use capacity::CapacityTracker;
-pub use dispatch::{BatchExecutor, Completion, Dispatcher, DispatcherConfig};
+pub use dispatch::{
+    BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
+    HedgeStats,
+};
 pub use queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};

@@ -20,6 +20,7 @@ use std::collections::VecDeque;
 /// request bodies.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QueuedRequest {
+    /// Caller-assigned request id (hedge twins share it).
     pub id: u64,
     /// Index into the caller's request/ground-truth table.
     pub payload: usize,
@@ -42,12 +43,16 @@ pub struct QueuedRequest {
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Admission {
     /// Admitted; `depth` is the queue depth after insertion.
-    Admitted { depth: usize },
+    Admitted {
+        /// Queue depth right after this insertion.
+        depth: usize,
+    },
     /// Shed at admission: the queue was at its depth bound.
     Rejected,
 }
 
 impl Admission {
+    /// Was the request admitted?
     pub fn is_admitted(&self) -> bool {
         matches!(self, Admission::Admitted { .. })
     }
@@ -58,6 +63,7 @@ impl Admission {
 pub struct QueueStats {
     /// Requests offered (admitted + rejected).
     pub offered: u64,
+    /// Requests admitted.
     pub admitted: u64,
     /// Requests shed at admission (depth bound hit).
     pub rejected: u64,
@@ -70,6 +76,10 @@ pub struct QueueStats {
 pub struct AdmissionQueue {
     items: VecDeque<QueuedRequest>,
     max_depth: usize,
+    /// Entries known to be cancelled (hedge twins that lost) but not
+    /// yet physically removed — they are purged lazily and never run,
+    /// so they must not consume admission slots.
+    dead: usize,
     stats: QueueStats,
 }
 
@@ -80,28 +90,49 @@ impl AdmissionQueue {
         AdmissionQueue {
             items: VecDeque::with_capacity(max_depth.min(1024)),
             max_depth,
+            dead: 0,
             stats: QueueStats::default(),
         }
     }
 
-    /// Offer a request: O(1) admit-or-shed.
+    /// Offer a request: O(1) admit-or-shed. The admission bound counts
+    /// only *live* entries — cancelled twins awaiting lazy purge do not
+    /// occupy slots.
     pub fn offer(&mut self, rq: QueuedRequest) -> Admission {
         self.stats.offered += 1;
-        if self.items.len() >= self.max_depth {
+        if self.live_depth() >= self.max_depth {
             self.stats.rejected += 1;
             return Admission::Rejected;
         }
         self.items.push_back(rq);
         self.stats.admitted += 1;
-        let depth = self.items.len();
+        let depth = self.live_depth();
         self.stats.peak_depth = self.stats.peak_depth.max(depth);
         Admission::Admitted { depth }
     }
 
+    /// A queued entry was cancelled (it will be lazily purged, never
+    /// run): release its admission slot immediately.
+    pub fn mark_dead(&mut self) {
+        self.dead += 1;
+    }
+
+    /// A cancelled entry was physically purged from the queue.
+    pub fn unmark_dead(&mut self) {
+        self.dead = self.dead.saturating_sub(1);
+    }
+
+    /// Entries that still count against the admission bound.
+    pub fn live_depth(&self) -> usize {
+        self.items.len().saturating_sub(self.dead)
+    }
+
+    /// The head request, if any.
     pub fn peek(&self) -> Option<&QueuedRequest> {
         self.items.front()
     }
 
+    /// Remove and return the head request.
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         self.items.pop_front()
     }
@@ -117,18 +148,22 @@ impl AdmissionQueue {
         self.items.remove(i)
     }
 
+    /// Current queue depth.
     pub fn depth(&self) -> usize {
         self.items.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.items.is_empty()
     }
 
+    /// The admission bound.
     pub fn max_depth(&self) -> usize {
         self.max_depth
     }
 
+    /// Counter snapshot.
     pub fn stats(&self) -> QueueStats {
         self.stats
     }
@@ -207,6 +242,24 @@ mod tests {
         assert_eq!(taken.id, 1);
         let rest: Vec<u64> = std::iter::from_fn(|| q.pop()).map(|r| r.id).collect();
         assert_eq!(rest, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn dead_entries_release_admission_slots() {
+        let mut q = AdmissionQueue::new(2);
+        assert!(q.offer(rq(0, 0.0)).is_admitted());
+        assert!(q.offer(rq(1, 0.0)).is_admitted());
+        // Physically full, but one entry is cancelled: a slot frees up.
+        assert!(!q.offer(rq(2, 0.0)).is_admitted());
+        q.mark_dead();
+        assert_eq!(q.live_depth(), 1);
+        assert!(q.offer(rq(3, 0.0)).is_admitted());
+        assert_eq!(q.depth(), 3, "ghost still physically present");
+        assert!(!q.offer(rq(4, 0.0)).is_admitted());
+        // Purging the ghost keeps live accounting consistent.
+        q.pop();
+        q.unmark_dead();
+        assert_eq!(q.live_depth(), q.depth());
     }
 
     #[test]

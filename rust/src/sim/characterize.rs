@@ -10,8 +10,11 @@ use crate::Result;
 /// Everything the router needs, produced offline.
 #[derive(Debug, Clone)]
 pub struct Characterization {
+    /// Edge execution-time plane (eq. 2, fitted offline).
     pub texe_edge: TexeModel,
+    /// Cloud execution-time plane (eq. 2, fitted offline).
     pub texe_cloud: TexeModel,
+    /// The N→M output-length regressor (paper §II-B).
     pub n2m: N2mRegressor,
     /// Mean M of the fit split (the Naive baseline's constant estimate).
     pub mean_m: f64,

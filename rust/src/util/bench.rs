@@ -11,17 +11,24 @@ use std::time::Instant;
 /// One benchmark's summary statistics.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Bench label (reported verbatim).
     pub name: String,
+    /// Samples measured.
     pub samples: usize,
+    /// Mean nanoseconds per iteration.
     pub mean_ns: f64,
+    /// Median nanoseconds per iteration.
     pub p50_ns: f64,
+    /// 95th-percentile nanoseconds per iteration.
     pub p95_ns: f64,
+    /// Fastest observed iteration (ns).
     pub min_ns: f64,
     /// Optional items-per-iteration for throughput reporting.
     pub items_per_iter: f64,
 }
 
 impl BenchResult {
+    /// Iterations (× items) per second at the mean.
     pub fn throughput_per_s(&self) -> f64 {
         if self.mean_ns == 0.0 {
             f64::NAN
@@ -34,7 +41,9 @@ impl BenchResult {
 /// Benchmark configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct BenchConfig {
+    /// Iterations discarded before measuring.
     pub warmup_iters: usize,
+    /// Samples collected.
     pub samples: usize,
     /// Iterations batched per sample (for very fast functions).
     pub iters_per_sample: usize,

@@ -55,6 +55,7 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// First positional argument, if any.
     pub fn subcommand(&self) -> Option<&str> {
         self.positional.first().map(|s| s.as_str())
     }

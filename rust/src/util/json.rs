@@ -19,10 +19,15 @@ use crate::{Error, Result};
 /// A parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// JSON boolean.
     Bool(bool),
+    /// JSON number (always stored as f64).
     Num(f64),
+    /// JSON string.
     Str(String),
+    /// JSON array.
     Array(Vec<Json>),
     /// Object keys are kept sorted (BTreeMap) so output is deterministic.
     Object(BTreeMap<String, Json>),
@@ -31,6 +36,7 @@ pub enum Json {
 impl Json {
     // ---------------------------------------------------------------- typed accessors
 
+    /// The boolean value, or a type error.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             Json::Bool(b) => Ok(*b),
@@ -38,6 +44,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, or a type error.
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             Json::Num(n) => Ok(*n),
@@ -45,6 +52,7 @@ impl Json {
         }
     }
 
+    /// The number as i64 (must be integral), or a type error.
     pub fn as_i64(&self) -> Result<i64> {
         let n = self.as_f64()?;
         if n.fract() != 0.0 || n.abs() > 9.0e15 {
@@ -53,12 +61,14 @@ impl Json {
         Ok(n as i64)
     }
 
+    /// The number as usize (must be integral ≥ 0), or a type error.
     pub fn as_usize(&self) -> Result<usize> {
         let n = self.as_i64()?;
         usize::try_from(n)
             .map_err(|_| Error::Config(format!("expected usize, got {n}")))
     }
 
+    /// The string value, or a type error.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -66,6 +76,7 @@ impl Json {
         }
     }
 
+    /// The array elements, or a type error.
     pub fn as_array(&self) -> Result<&[Json]> {
         match self {
             Json::Array(a) => Ok(a),
@@ -73,6 +84,7 @@ impl Json {
         }
     }
 
+    /// The object map, or a type error.
     pub fn as_object(&self) -> Result<&BTreeMap<String, Json>> {
         match self {
             Json::Object(o) => Ok(o),
@@ -102,6 +114,7 @@ impl Json {
 
     // ---------------------------------------------------------------- constructors
 
+    /// New empty object.
     pub fn object() -> Json {
         Json::Object(BTreeMap::new())
     }
@@ -118,6 +131,7 @@ impl Json {
         self
     }
 
+    /// Array of numbers from a slice.
     pub fn from_f64_slice(xs: &[f64]) -> Json {
         Json::Array(xs.iter().map(|&x| Json::Num(x)).collect())
     }

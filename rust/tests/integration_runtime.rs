@@ -202,7 +202,19 @@ fn calibration_pipeline_smoke_on_real_runtime() {
         eng.translate(&[5u16; 6], TranslateOptions { force_steps: Some(2), ..Default::default() })
             .unwrap();
     }
-    for (n, m) in [(4usize, 4usize), (4, 24), (24, 4), (24, 24), (48, 12), (12, 48), (48, 48), (8, 40), (40, 8), (60, 60)] {
+    let grid = [
+        (4usize, 4usize),
+        (4, 24),
+        (24, 4),
+        (24, 24),
+        (48, 12),
+        (12, 48),
+        (48, 48),
+        (8, 40),
+        (40, 8),
+        (60, 60),
+    ];
+    for (n, m) in grid {
         let src: Vec<u16> = (0..n).map(|k| 60 + k as u16).collect();
         let tr = eng
             .translate(

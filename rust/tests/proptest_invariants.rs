@@ -11,8 +11,10 @@ use cnmt::metrics::stats::percentile_sorted;
 use cnmt::metrics::{Histogram, OnlineStats};
 use cnmt::net::trace::{ConnectionProfile, TraceGenerator};
 use cnmt::predictor::fit::{fit_line, fit_plane};
-use cnmt::predictor::{N2mRegressor, TexeModel, TtxEstimator};
-use cnmt::sim::{run_all_policies, run_contended, ContentionOpts, TruthTable};
+use cnmt::predictor::{N2mRegressor, RlsPlane, TexeModel, TtxEstimator};
+use cnmt::sim::{
+    run_all_policies, run_closed_loop, run_contended, AdaptiveOpts, ContentionOpts, TruthTable,
+};
 use cnmt::util::{Json, Rng};
 
 const TRIALS: usize = 60;
@@ -327,6 +329,118 @@ fn prop_contended_run_conserves_requests() {
 }
 
 #[test]
+fn prop_hedged_dispatch_invariants() {
+    // Across random loads, hedge margins and queue bounds: every hedged
+    // request has exactly one winner, its twin resolves exactly one way
+    // (cancelled unrun XOR ran as waste), wasted work never counts
+    // toward goodput, and logical-request conservation holds.
+    let mut rng = Rng::new(0x8ED6E);
+    for trial in 0..6u64 {
+        let load = rng.uniform(8.0, 160.0);
+        let margin = rng.uniform(0.001, 0.08);
+        let (requests, ch) = synth_workload(100 + trial, 2_000, load);
+        let mut opts = ContentionOpts::default();
+        opts.adaptive = Some(AdaptiveOpts {
+            hedge_margin_s: margin,
+            ..Default::default()
+        });
+        opts.dispatcher.max_queue_depth = 64 + rng.usize(512);
+        let r = run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap();
+        assert_eq!(
+            r.hedge_wins_edge + r.hedge_wins_cloud,
+            r.hedged,
+            "trial {trial}: winners != hedged"
+        );
+        assert_eq!(
+            r.hedge_cancelled + r.hedge_wasted,
+            r.hedged,
+            "trial {trial}: twin fates don't partition the hedges"
+        );
+        assert_eq!(
+            r.completed + r.rejected,
+            r.offered,
+            "trial {trial}: logical-request conservation broken"
+        );
+        assert_eq!(r.edge_count + r.cloud_count, r.completed);
+        // Wasted work is exactly the loser-ran case.
+        assert_eq!(
+            r.hedge_wasted == 0,
+            r.wasted_work_s == 0.0,
+            "trial {trial}: waste accounting out of sync"
+        );
+        assert!(r.wasted_frac() < 1.0, "trial {trial}: all work wasted?");
+    }
+}
+
+#[test]
+fn prop_closed_loop_conserves_and_bounds_outstanding() {
+    // Bounded-outstanding clients: nothing is shed (K ≪ queue bound),
+    // conservation holds, and no queue can ever hold more than K
+    // entries because each client has at most one request in flight.
+    let mut rng = Rng::new(0xC705);
+    for trial in 0..4u64 {
+        let clients = 1 + rng.usize(32);
+        let think_s = rng.uniform(0.0, 0.05);
+        let (pool, ch) = synth_workload(500 + trial, 1_000, 1.0);
+        let opts = ContentionOpts::default();
+        let r =
+            run_closed_loop(&pool, &ch, PolicyKind::Cnmt, &opts, clients, think_s).unwrap();
+        assert_eq!(r.completed + r.rejected, r.offered, "trial {trial}");
+        assert_eq!(r.rejected, 0, "trial {trial}: closed loop shed load");
+        assert!(
+            r.edge_peak_depth <= clients && r.cloud_peak_depth <= clients,
+            "trial {trial}: queue depth {}/{} exceeded {clients} outstanding",
+            r.edge_peak_depth,
+            r.cloud_peak_depth
+        );
+        assert!(r.makespan_s > 0.0 && r.throughput_rps > 0.0, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_rls_refit_converges_to_true_plane() {
+    // RLS under stationary noise must recover a planted T_exe plane,
+    // with and without forgetting — the property the drift scenario's
+    // recovery rests on.
+    let mut rng = Rng::new(0xCC);
+    for trial in 0..12u64 {
+        let truth = TexeModel::from_coeffs(
+            rng.uniform(1e-4, 5e-3),
+            rng.uniform(1e-3, 1e-2),
+            rng.uniform(0.0, 0.05),
+        );
+        let lambda = if trial % 2 == 0 { 1.0 } else { 0.995 };
+        let mut rls =
+            RlsPlane::new(TexeModel::from_coeffs(0.0, 0.0, 0.0), lambda, 1e4).unwrap();
+        for _ in 0..3_000 {
+            let n = (1 + rng.usize(61)) as f64;
+            let m = (1 + rng.usize(61)) as f64;
+            let t = (truth.estimate(n as usize, m) + rng.normal_ms(0.0, 1e-4)).max(0.0);
+            rls.observe(n, m, t);
+        }
+        let fit = rls.model();
+        assert!(
+            (fit.alpha_n - truth.alpha_n).abs() < 5e-4,
+            "trial {trial}: alpha_n {} vs {}",
+            fit.alpha_n,
+            truth.alpha_n
+        );
+        assert!(
+            (fit.alpha_m - truth.alpha_m).abs() < 5e-4,
+            "trial {trial}: alpha_m {} vs {}",
+            fit.alpha_m,
+            truth.alpha_m
+        );
+        assert!(
+            (fit.beta - truth.beta).abs() < 5e-3,
+            "trial {trial}: beta {} vs {}",
+            fit.beta,
+            truth.beta
+        );
+    }
+}
+
+#[test]
 fn prop_online_stats_merge_equals_concat() {
     let mut rng = Rng::new(0x88);
     for _ in 0..TRIALS {
@@ -357,7 +471,8 @@ fn prop_json_roundtrip_random_trees() {
             2 => Json::Num((rng.normal_ms(0.0, 1e6) * 100.0).round() / 100.0),
             3 => {
                 let n = rng.usize(12);
-                Json::Str((0..n).map(|_| *rng.choice(&['a', 'é', '"', '\\', '\n', '😀', 'z'])).collect())
+                let alphabet = ['a', 'é', '"', '\\', '\n', '😀', 'z'];
+                Json::Str((0..n).map(|_| *rng.choice(&alphabet)).collect())
             }
             4 => Json::Array((0..rng.usize(5)).map(|_| gen(rng, depth - 1)).collect()),
             _ => {
