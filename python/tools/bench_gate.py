@@ -1,0 +1,88 @@
+#!/usr/bin/env python3
+"""Perf gate over a rust-native `cnmt bench sched --json` report.
+
+Floors are deliberately generous (a noisy shared CI runner must not
+flake the build); the point is to catch order-of-magnitude regressions
+in the zero-churn dispatcher and the parallel sweep runner:
+
+  * single-thread event-loop throughput ≥ --min-events-per-sec;
+  * dense dispatcher ≥ --min-speedup x the frozen pre-rewrite baseline
+    (`scheduler::baseline`) on both the solo and hedged streams;
+  * the sharded sweep is bit-identical to the serial one and at least
+    --min-sweep-speedup x faster at the bench's thread count.
+
+Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
+       [--min-speedup X] [--min-sweep-speedup X]
+"""
+
+import argparse
+import json
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("report")
+    ap.add_argument("--min-events-per-sec", type=float, default=100_000.0)
+    ap.add_argument("--min-speedup", type=float, default=1.2)
+    ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
+    args = ap.parse_args()
+
+    with open(args.report) as f:
+        b = json.load(f)
+    if b.get("python_proxy"):
+        print("refusing to gate on a python-proxy report; regenerate with "
+              "`cnmt bench sched --json`")
+        sys.exit(1)
+
+    eps_solo = b["event_loop_solo"]["events_per_sec"]
+    eps_hedged = b["event_loop_hedged"]["events_per_sec"]
+    sp_solo = b["speedup"]["event_loop_solo"]
+    sp_hedged = b["speedup"]["event_loop_hedged"]
+    sweep = b["sweep"]
+    print(
+        f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
+        f"speedup vs frozen baseline: solo {sp_solo:.2f}x, hedged "
+        f"{sp_hedged:.2f}x | sweep {sweep['serial_wall_s']:.2f}s → "
+        f"{sweep['parallel_wall_s']:.2f}s at {sweep['threads']:.0f} threads "
+        f"({sweep['speedup']:.2f}x, bit_identical={sweep['bit_identical']})"
+    )
+
+    failures = []
+    if eps_solo < args.min_events_per_sec:
+        failures.append(
+            f"solo events/sec {eps_solo:,.0f} < floor {args.min_events_per_sec:,.0f}"
+        )
+    if sp_solo < args.min_speedup or sp_hedged < args.min_speedup:
+        failures.append(
+            f"speedup vs baseline ({sp_solo:.2f}x / {sp_hedged:.2f}x) below "
+            f"floor {args.min_speedup:.2f}x"
+        )
+    if sweep["bit_identical"] is not True:
+        failures.append("parallel sweep not bit-identical to serial")
+    # The wall-clock floor is a function of available parallelism: a
+    # 1-core runner degenerates to the serial path (speedup ~1.0) with
+    # nothing regressed, so only gate it when the bench actually had
+    # cores to spread over.
+    threads = sweep["threads"]
+    if threads >= 4:
+        sweep_floor = args.min_sweep_speedup
+    elif threads >= 2:
+        sweep_floor = 1.1
+    else:
+        sweep_floor = None
+        print("1 thread available: sweep-speedup floor skipped")
+    if sweep_floor is not None and sweep["speedup"] < sweep_floor:
+        failures.append(
+            f"sweep speedup {sweep['speedup']:.2f}x below floor "
+            f"{sweep_floor:.2f}x at {threads:.0f} threads"
+        )
+    if failures:
+        for f_ in failures:
+            print(f"GATE FAIL: {f_}")
+        sys.exit(1)
+    print("GATE PASS")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,473 @@
+#!/usr/bin/env python3
+"""Scheduler-core differential check + bench seed: pre-change vs dense.
+
+The build container that authored the zero-churn scheduler PR has no
+rust toolchain, so the checked-in `reports/BENCH_sched.json` cannot be
+produced by `cnmt bench sched --json` here. This script seeds that file
+from the lockstep python mirror instead, and its primary output is the
+**equivalence proof**, not the timings:
+
+  * **baseline** — a frozen copy of the pre-change mirror dispatcher
+    (id-keyed hedge dict + cancel-token set, fresh lists per batch),
+    exactly as previously checked in;
+  * **dense**    — the current mirror dispatcher imported from
+    `load_sweep_mirror.py` (slab-style arena with free-list recycling,
+    cancellation as a state flag in the race entry).
+
+Both replay the *identical* pre-generated request stream (solo + hedged
+mix at a load that keeps queues deep), and the script asserts their
+outputs are float-identical (completion count, completion-time
+checksum, hedge counters) before timing them — a second, independent
+confirmation that the rewrite changed data structures, not behaviour.
+
+The python timings are reported for completeness but are
+**interpreter-bound and not representative** of the rust change
+(python allocates boxed objects and hashes small ints regardless of the
+container used, so the rust rewrite's allocation/hashing elimination is
+invisible here — the two implementations measure within ~15% of each
+other either way). The measurement of record for the ≥2x events/sec
+target is `cnmt bench sched --json`, which drives the same stream
+through the dense dispatcher and the frozen rust baseline
+(`scheduler::baseline`) in one binary; the CI `bench` job regenerates
+this report rust-natively on every push and gates on its floors.
+
+`events` counts dispatcher events processed: batch starts + completion
+events — the same definition `cnmt bench sched` uses, so the two
+producers are comparable.
+
+Usage:
+    python3 python/tools/bench_sched_mirror.py \
+        [--requests 40000] [--out reports/BENCH_sched.json]
+"""
+
+import argparse
+import heapq
+import importlib.util
+import json
+import math
+import os
+import time
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def _load_mirror():
+    spec = importlib.util.spec_from_file_location(
+        "load_sweep_mirror", os.path.join(HERE, "load_sweep_mirror.py")
+    )
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+dense = _load_mirror()
+
+EDGE, CLOUD = 0, 1
+SOLO, WIN, LOSS = 0, 1, 2
+QUEUED, RUNNING, DONE = 0, 1, 2
+MAX_QUEUE_DEPTH = dense.MAX_QUEUE_DEPTH
+MAX_BATCH = dense.MAX_BATCH
+LOOKAHEAD = dense.LOOKAHEAD
+EDGE_WORKERS = dense.EDGE_WORKERS
+CLOUD_WORKERS = dense.CLOUD_WORKERS
+
+
+# ------------------------------------------------------------------
+# Frozen pre-change dispatcher (the mirror as previously checked in:
+# list queues with pop(0)/del, hedges dict keyed by request id, cancel
+# tokens in a side set). Kept verbatim so the baseline is the actual
+# pre-PR implementation, not a strawman.
+# ------------------------------------------------------------------
+
+
+class BaselineLane:
+    def __init__(self, workers):
+        self.items = []
+        self.free_at = [0.0] * workers
+        self.backlog_est_s = 0.0
+        self.dead = 0
+        self.offered = 0
+        self.admitted = 0
+        self.rejected = 0
+        self.peak_depth = 0
+
+    def offer(self, rq):
+        self.offered += 1
+        if len(self.items) - self.dead >= MAX_QUEUE_DEPTH:
+            self.rejected += 1
+            return False
+        self.items.append(rq)
+        self.admitted += 1
+        self.peak_depth = max(self.peak_depth, len(self.items) - self.dead)
+        self.backlog_est_s += max(rq[4], 0.0)
+        return True
+
+    def earliest_free(self):
+        best_i, best_t = 0, self.free_at[0]
+        for i in range(1, len(self.free_at)):
+            if self.free_at[i] < best_t:
+                best_i, best_t = i, self.free_at[i]
+        return best_i, best_t
+
+    def expected_wait_s(self, now_s):
+        inflight = 0.0
+        for t in self.free_at:
+            if t > now_s:
+                inflight += t - now_s
+        return (inflight + self.backlog_est_s) / len(self.free_at)
+
+    def on_cancel(self, est):
+        self.backlog_est_s = max(self.backlog_est_s - max(est, 0.0), 0.0)
+
+
+class BaselineDispatcher:
+    def __init__(self):
+        self.lanes = [BaselineLane(EDGE_WORKERS), BaselineLane(CLOUD_WORKERS)]
+        self.batches = 0
+        self.batch_requests = 0
+        self.pending = []
+        self.seq = 0
+        self.hedges = {}
+        self.cancelled = set()
+        self.hs_hedged = 0
+        self.hs_wins = [0, 0]
+        self.hs_cancelled = 0
+        self.hs_losers = 0
+
+    def submit(self, device, rq):
+        return self.lanes[device].offer(rq)
+
+    def submit_hedged(self, rq, est_edge, est_cloud):
+        edge_rq = rq[:4] + (est_edge,) + rq[5:]
+        cloud_rq = rq[:4] + (est_cloud,) + rq[5:]
+        edge_ok = self.lanes[EDGE].offer(edge_rq)
+        cloud_ok = self.lanes[CLOUD].offer(cloud_rq)
+        if edge_ok and cloud_ok:
+            self.hs_hedged += 1
+            self.hedges[rq[0]] = [est_edge, est_cloud, QUEUED, QUEUED, None]
+            return "hedged"
+        if edge_ok:
+            return "single_edge"
+        if cloud_ok:
+            return "single_cloud"
+        return "rejected"
+
+    def lane_next_start(self, device):
+        lane = self.lanes[device]
+        while True:
+            if not lane.items:
+                return None
+            head = lane.items[0]
+            if head[0] in self.cancelled:
+                lane.items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.cancelled.discard(head[0])
+                continue
+            _w, free_s = lane.earliest_free()
+            return max(free_s, head[5])
+
+    def next_batch_start(self):
+        e = self.lane_next_start(EDGE)
+        c = self.lane_next_start(CLOUD)
+        if e is None and c is None:
+            return None
+        if c is None or (e is not None and e <= c):
+            return (EDGE, e)
+        return (CLOUD, c)
+
+    def form_batch(self, lane, start_s):
+        items = lane.items
+        while True:
+            if not items:
+                return []
+            if items[0][0] in self.cancelled:
+                self.cancelled.discard(items[0][0])
+                items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+            else:
+                break
+        head = items.pop(0)
+        bucket = head[6]
+        batch = [head]
+        i = 0
+        scanned = 0
+        while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
+            if i >= len(items):
+                break
+            rq = items[i]
+            if rq[0] in self.cancelled:
+                del items[i]
+                lane.dead = max(lane.dead - 1, 0)
+                self.cancelled.discard(rq[0])
+                continue
+            if rq[6] == bucket and rq[5] <= start_s:
+                batch.append(rq)
+                del items[i]
+            else:
+                i += 1
+            scanned += 1
+        return batch
+
+    def dispatch_at(self, device, start_s, exec_fn):
+        lane = self.lanes[device]
+        batch = self.form_batch(lane, start_s)
+        if not batch:
+            return
+        for rq in batch:
+            h = self.hedges.get(rq[0])
+            if h is not None:
+                h[2 + device] = RUNNING
+        est_sum = 0.0
+        for rq in batch:
+            est_sum += rq[4]
+        service_s = max(exec_fn(device, batch, start_s), 0.0)
+        done_s = start_s + service_s
+        worker, _free = lane.earliest_free()
+        lane.backlog_est_s = max(lane.backlog_est_s - est_sum, 0.0)
+        lane.free_at[worker] = done_s
+        self.batches += 1
+        self.batch_requests += len(batch)
+        bsize = len(batch)
+        for rq in batch:
+            heapq.heappush(
+                self.pending, (done_s, self.seq, start_s, bsize, device, rq)
+            )
+            self.seq += 1
+
+    def resolve_completion(self, device, rq_id):
+        h = self.hedges.get(rq_id)
+        if h is None:
+            return SOLO
+        h[2 + device] = DONE
+        if h[4] is not None:
+            del self.hedges[rq_id]
+            self.hs_losers += 1
+            return LOSS
+        h[4] = device
+        self.hs_wins[device] += 1
+        twin = 1 - device
+        if h[2 + twin] == QUEUED:
+            self.cancelled.add(rq_id)
+            self.hs_cancelled += 1
+            self.lanes[twin].on_cancel(h[twin])
+            self.lanes[twin].dead += 1
+            del self.hedges[rq_id]
+        return WIN
+
+    def flush_one(self, out):
+        done_s, _seq, start_s, bsize, device, rq = heapq.heappop(self.pending)
+        kind = self.resolve_completion(device, rq[0])
+        out.append((rq, device, start_s, done_s, bsize, kind))
+
+    def step(self, horizon_s, exec_fn, out):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return False
+        completion_first = ns is None or (nd is not None and nd <= ns[1])
+        if completion_first:
+            if nd > horizon_s:
+                return False
+            self.flush_one(out)
+        else:
+            device, start_s = ns
+            if start_s > horizon_s:
+                return False
+            self.dispatch_at(device, start_s, exec_fn)
+        return True
+
+    def run_until(self, horizon_s, exec_fn, out):
+        while self.step(horizon_s, exec_fn, out):
+            pass
+
+
+# ------------------------------------------------------------------
+# Shared driver: identical pre-generated stream through either
+# implementation.
+# ------------------------------------------------------------------
+
+
+def gen_stream(requests, offered_rps, hedge_every, seed=0xBE7C5):
+    """Pre-generate (truth, device, hedge, ests, bucket) per request so
+    the timed loop does no RNG or model work — it measures the
+    dispatcher, not the workload generator."""
+    pool = dense.synth_workload(seed, requests, offered_rps)
+    stream = []
+    for i, truth in enumerate(pool):
+        m_est = dense.n2m_predict(dense.N2M_GAMMA, dense.N2M_DELTA, truth.n)
+        est_e = dense.texe_estimate(dense.EDGE_PLANE, truth.n, m_est)
+        est_c = dense.texe_estimate(dense.CLOUD_PLANE, truth.n, m_est)
+        bucket = int(max(m_est, 0.0) / dense.BUCKET_WIDTH)
+        hedged = hedge_every > 0 and i % hedge_every == 0
+        device = EDGE if i % 3 == 0 else CLOUD
+        stream.append(
+            (truth.arrival_s, truth.n, m_est, est_e, est_c, bucket, hedged, device)
+        )
+    return pool, stream
+
+
+def drive(disp, pool, stream, tuple_extra):
+    """Replay the stream; returns (events, wall_s, fingerprint)."""
+
+    def exec_fn(device, batch, start_s):
+        mx = 0.0
+        sm = 0.0
+        for rq in batch:
+            truth = pool[rq[1]]
+            t = truth.t_edge if device == EDGE else truth.t_cloud
+            if t > mx:
+                mx = t
+            sm += t
+        return mx + (sm - mx) * dense.BATCH_RESIDUAL
+
+    out = []
+    completions = [0]
+    checksum = [0.0]
+    results = [0]
+
+    t0 = time.perf_counter()
+    for i, (arrival, n, m_est, est_e, est_c, bucket, hedged, device) in enumerate(
+        stream
+    ):
+        out.clear()
+        disp.run_until(arrival, exec_fn, out)
+        for comp in out:
+            completions[0] += 1
+            checksum[0] += comp[3]
+            if comp[5] != LOSS:
+                results[0] += 1
+        if hedged:
+            rq = (i, i, n, m_est, 0.0, arrival, bucket) + tuple_extra
+            disp.submit_hedged(rq, est_e, est_c)
+        else:
+            est = est_e if device == EDGE else est_c
+            rq = (i, i, n, m_est, est, arrival, bucket) + tuple_extra
+            disp.submit(device, rq)
+    out.clear()
+    disp.run_until(float("inf"), exec_fn, out)
+    for comp in out:
+        completions[0] += 1
+        checksum[0] += comp[3]
+        if comp[5] != LOSS:
+            results[0] += 1
+    wall_s = time.perf_counter() - t0
+
+    events = completions[0] + disp.batches
+    fingerprint = {
+        "completions": completions[0],
+        "results": results[0],
+        "batches": disp.batches,
+        "done_s_checksum": checksum[0],
+        "hedged": disp.hs_hedged,
+        "cancelled": disp.hs_cancelled,
+        "wasted": disp.hs_losers,
+    }
+    return events, wall_s, fingerprint
+
+
+def measure(requests, offered_rps, hedge_every, repeats=3):
+    pool, stream = gen_stream(requests, offered_rps, hedge_every)
+    best = {}
+    fingerprints = {}
+    for name, mk, extra in (
+        ("baseline", BaselineDispatcher, ()),
+        ("dense", dense.Dispatcher, (None,)),
+    ):
+        best_wall = math.inf
+        events = None
+        for _ in range(repeats):
+            disp = mk()
+            ev, wall, fp = drive(disp, pool, stream, extra)
+            fingerprints[name] = fp
+            best_wall = min(best_wall, wall)
+            events = ev
+        best[name] = (events, best_wall)
+    # The rewrite must not change behaviour: identical event counts and
+    # completion-time checksums, or the comparison is meaningless.
+    fb, fd = fingerprints["baseline"], fingerprints["dense"]
+    assert fb == fd, f"implementations diverged: {fb} vs {fd}"
+    return best, fb
+
+
+def section(events, wall_s, requests, offered_rps, hedge_every):
+    eps = events / wall_s
+    return {
+        "requests": float(requests),
+        "offered_rps": offered_rps,
+        "hedge_every": float(hedge_every),
+        "events": float(events),
+        "wall_s": wall_s,
+        "events_per_sec": eps,
+        "ns_per_event": 1e9 / eps,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--requests", type=int, default=40_000)
+    ap.add_argument("--out", default="reports/BENCH_sched.json")
+    args = ap.parse_args()
+
+    scenarios = {
+        # Deep-backlog regime (offered >> drain rate): the head-purge /
+        # mid-queue-removal churn the rewrite eliminates is on the
+        # critical path here. hedge_every = 0 disables hedging.
+        "event_loop_solo": (args.requests, 320.0, 0),
+        # Heavy hedging: arena/cancel/purge bookkeeping on every 3rd
+        # request, same deep-backlog regime.
+        "event_loop_hedged": (args.requests, 320.0, 3),
+    }
+    root = {
+        "schema": "bench_sched/v1",
+        "producer": "python/tools/bench_sched_mirror.py",
+        "python_proxy": True,
+        "note": (
+            "Seeded from the python mirror: the authoring container has no "
+            "rust toolchain. The equivalence fingerprints are the load-"
+            "bearing content (pre-change vs dense dispatcher, identical "
+            "behaviour on identical streams); the python timings are "
+            "interpreter-bound and NOT representative of the rust "
+            "data-structure change. The measurement of record is `cnmt "
+            "bench sched --json` (dense vs the frozen rust baseline in "
+            "scheduler::baseline, same binary, same container), which the "
+            "CI `bench` job regenerates and gates on every push — flip "
+            "this file's provenance to that producer on the first "
+            "toolchain-equipped session (see ROADMAP)."
+        ),
+        "baseline": {
+            "structures": (
+                "pre-change dispatcher: id-keyed hedge dict, cancel-token "
+                "set, per-batch list churn"
+            )
+        },
+        "python_speedup_not_representative": {},
+        "equivalence": {},
+    }
+    for name, (requests, rps, hedge_every) in scenarios.items():
+        best, fp = measure(requests, rps, hedge_every)
+        ev_b, wall_b = best["baseline"]
+        ev_d, wall_d = best["dense"]
+        root[name] = section(ev_d, wall_d, requests, rps, hedge_every)
+        root["baseline"][name] = section(ev_b, wall_b, requests, rps, hedge_every)
+        root["python_speedup_not_representative"][name] = (ev_d / wall_d) / (
+            ev_b / wall_b
+        )
+        root["equivalence"][name] = dict(
+            {k: float(v) for k, v in fp.items() if k != "done_s_checksum"},
+            identical=True,
+        )
+        print(
+            f"{name}: baseline {ev_b / wall_b:,.0f} ev/s → dense "
+            f"{ev_d / wall_d:,.0f} ev/s  (python proxy; behaviour identical, "
+            f"{fp['hedged']} hedges, {fp['cancelled']} cancels)"
+        )
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        json.dump(root, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

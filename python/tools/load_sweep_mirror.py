@@ -14,16 +14,24 @@ driver does:
                                   order, drift scenario and closed-loop
                                   sweep;
   * `metrics::histogram`        — the geometric-bucket quantiles;
-  * `scheduler::*`              — admission queue, capacity tracker,
-                                  length-bucketed batcher (bounded
-                                  lookahead), the two-lane dispatcher's
-                                  global event loop (batch starts + a
-                                  pending-completion min-heap), hedged
-                                  dispatch with cancel tokens;
+  * `scheduler::*`              — admission queue (ring buffer in
+                                  rust, a plain list here), capacity
+                                  tracker, length-bucketed batcher
+                                  (bounded lookahead), the two-lane
+                                  dispatcher's global event loop (batch
+                                  starts + a pending-completion
+                                  min-heap), hedged dispatch with the
+                                  slab-arena race entries (each queued
+                                  copy carries its race's arena index;
+                                  cancellation is a state flag in the
+                                  entry, not a side set of tokens);
   * `predictor::rls`            — the forgetting-factor RLS refit of the
-                                  T_exe planes;
+                                  T_exe planes and of the payload-size →
+                                  T_tx line;
   * `coordinator::router`       — eq. 1 with the expected-wait terms and
-                                  the EWMA T_tx estimator + heartbeat;
+                                  the EWMA T_tx estimator + heartbeat
+                                  (replaced by the refit T_tx line once
+                                  warmed up, in adaptive runs);
   * `sim::harness`              — `run_contended` (open loop, optional
                                   drift + adaptive v2) and
                                   `run_closed_loop` (bounded-outstanding
@@ -209,6 +217,37 @@ class TtxEstimator:
         return self.count == 0 or now_s - self.last_obs_time > max_age_s
 
 
+class Rls2:
+    """Mirror of predictor::rls::RlsLine (2x2 RLS over [x, 1] → t)."""
+
+    def __init__(self, slope, intercept, lam, prior_var):
+        self.w = [slope, intercept]
+        self.p = [[prior_var, 0.0], [0.0, prior_var]]
+        self.lam = lam
+        self.count = 0
+
+    def observe(self, x, t):
+        if not (math.isfinite(x) and math.isfinite(t)):
+            return
+        p = self.p
+        px0 = p[0][0] * x + p[0][1] * 1.0
+        px1 = p[1][0] * x + p[1][1] * 1.0
+        denom = self.lam + x * px0 + 1.0 * px1
+        k0 = px0 / denom
+        k1 = px1 / denom
+        err = t - (x * self.w[0] + 1.0 * self.w[1])
+        self.w[0] += k0 * err
+        self.w[1] += k1 * err
+        p[0][0] = (p[0][0] - k0 * px0) / self.lam
+        p[0][1] = (p[0][1] - k0 * px1) / self.lam
+        p[1][0] = (p[1][0] - k1 * px0) / self.lam
+        p[1][1] = (p[1][1] - k1 * px1) / self.lam
+        self.count += 1
+
+    def estimate(self, x):
+        return max(self.w[0] * x + self.w[1], 0.0)
+
+
 class Rls:
     """Mirror of predictor::rls::RlsPlane (same op order — exact floats)."""
 
@@ -269,6 +308,7 @@ ADAPTIVE_DEFAULTS = {
     "rls_lambda": 0.998,
     "rls_prior_var": 1.0,
     "refit_min_obs": 64,
+    "refit_ttx": True,
 }
 
 
@@ -333,15 +373,20 @@ TTX_ALPHA = 0.3
 TTX_PRIOR = 0.05
 
 # QueuedRequest tuple indices: (id, payload, n, m_est, est_service_s,
-# arrival_s, bucket).
+# arrival_s, bucket, hedge) — `hedge` mirrors the rust slab key: the
+# index of the in-flight race entry in the dispatcher's arena, or None
+# for solo submissions.
 SOLO, WIN, LOSS = 0, 1, 2
-QUEUED, RUNNING, DONE = 0, 1, 2
+QUEUED, RUNNING, DONE, CANCELLED = 0, 1, 2, 3
 
 
 class Lane:
-    """AdmissionQueue + CapacityTracker for one device."""
+    """AdmissionQueue (ring buffer) + CapacityTracker for one device."""
 
     def __init__(self, workers):
+        # A python list mirrors the rust ring buffer's access profile
+        # (O(1) indexing for the batcher's lookahead; head pops are a
+        # C-level memmove).
         self.items = []
         self.free_at = [0.0] * workers
         self.backlog_est_s = 0.0
@@ -352,9 +397,12 @@ class Lane:
         self.rejected = 0
         self.peak_depth = 0
 
+    def has_room(self):
+        return len(self.items) - self.dead < MAX_QUEUE_DEPTH
+
     def offer(self, rq):
         self.offered += 1
-        if len(self.items) - self.dead >= MAX_QUEUE_DEPTH:
+        if not self.has_room():
             self.rejected += 1
             return False
         self.items.append(rq)
@@ -382,7 +430,9 @@ class Lane:
 
 
 class Dispatcher:
-    """Mirror of scheduler::Dispatcher (global event loop + hedging)."""
+    """Mirror of scheduler::Dispatcher (global event loop + hedging on
+    the slab-arena race entries — no id-keyed maps, no cancel-token
+    set)."""
 
     def __init__(self):
         self.lanes = [Lane(EDGE_WORKERS), Lane(CLOUD_WORKERS)]
@@ -392,26 +442,49 @@ class Dispatcher:
         # device, rq). seq is unique, so comparisons never reach rq.
         self.pending = []
         self.seq = 0
-        # id -> [est_edge, est_cloud, state_edge, state_cloud, winner]
-        self.hedges = {}
-        self.cancelled = set()
+        # Hedge arena (mirror of util::slab): entry =
+        # [est_edge, est_cloud, state_edge, state_cloud, winner];
+        # freed slots are recycled through the free list. Python needs
+        # no generation counter — entries are only dereferenced through
+        # live queue records — but the recycling discipline is the same.
+        self.arena = []
+        self.arena_free = []
         self.hs_hedged = 0
         self.hs_wins = [0, 0]
         self.hs_cancelled = 0
         self.hs_losers = 0
 
+    def arena_alloc(self, entry):
+        if self.arena_free:
+            idx = self.arena_free.pop()
+            self.arena[idx] = entry
+            return idx
+        self.arena.append(entry)
+        return len(self.arena) - 1
+
+    def arena_release(self, idx):
+        self.arena[idx] = None
+        self.arena_free.append(idx)
+
     def submit(self, device, rq):
         return self.lanes[device].offer(rq)
 
     def submit_hedged(self, rq, est_edge, est_cloud):
+        # Room is checked up front so the race entry is allocated only
+        # when both copies are guaranteed admission (same predicate
+        # offer() applies).
+        if self.lanes[EDGE].has_room() and self.lanes[CLOUD].has_room():
+            idx = self.arena_alloc([est_edge, est_cloud, QUEUED, QUEUED, None])
+            edge_rq = rq[:4] + (est_edge,) + rq[5:7] + (idx,)
+            cloud_rq = rq[:4] + (est_cloud,) + rq[5:7] + (idx,)
+            self.lanes[EDGE].offer(edge_rq)
+            self.lanes[CLOUD].offer(cloud_rq)
+            self.hs_hedged += 1
+            return "hedged"
         edge_rq = rq[:4] + (est_edge,) + rq[5:]
         cloud_rq = rq[:4] + (est_cloud,) + rq[5:]
         edge_ok = self.lanes[EDGE].offer(edge_rq)
         cloud_ok = self.lanes[CLOUD].offer(cloud_rq)
-        if edge_ok and cloud_ok:
-            self.hs_hedged += 1
-            self.hedges[rq[0]] = [est_edge, est_cloud, QUEUED, QUEUED, None]
-            return "hedged"
         if edge_ok:
             return "single_edge"
         if cloud_ok:
@@ -419,15 +492,19 @@ class Dispatcher:
         return "rejected"
 
     def lane_next_start(self, device):
+        # is_ghost() is inlined in this and the batcher loop: they are
+        # the mirror's hottest paths and python call overhead dominates.
         lane = self.lanes[device]
+        arena = self.arena
         while True:
             if not lane.items:
                 return None
             head = lane.items[0]
-            if head[0] in self.cancelled:
+            hid = head[7]
+            if hid is not None and arena[hid][2 + device] == CANCELLED:
                 lane.items.pop(0)
                 lane.dead = max(lane.dead - 1, 0)
-                self.cancelled.discard(head[0])
+                self.arena_release(hid)
                 continue
             _w, free_s = lane.earliest_free()
             return max(free_s, head[5])
@@ -452,15 +529,18 @@ class Dispatcher:
             return ns[1]
         return min(ns[1], nd)
 
-    def form_batch(self, lane, start_s):
+    def form_batch(self, lane, device, start_s):
         items = lane.items
+        arena = self.arena
         while True:
             if not items:
                 return []
-            if items[0][0] in self.cancelled:
-                self.cancelled.discard(items[0][0])
+            head = items[0]
+            hid = head[7]
+            if hid is not None and arena[hid][2 + device] == CANCELLED:
                 items.pop(0)
                 lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
             else:
                 break
         head = items.pop(0)
@@ -472,10 +552,11 @@ class Dispatcher:
             if i >= len(items):
                 break
             rq = items[i]
-            if rq[0] in self.cancelled:
+            hid = rq[7]
+            if hid is not None and arena[hid][2 + device] == CANCELLED:
                 del items[i]
                 lane.dead = max(lane.dead - 1, 0)
-                self.cancelled.discard(rq[0])
+                self.arena_release(hid)
                 continue
             if rq[6] == bucket and rq[5] <= start_s:
                 batch.append(rq)
@@ -487,13 +568,12 @@ class Dispatcher:
 
     def dispatch_at(self, device, start_s, exec_fn):
         lane = self.lanes[device]
-        batch = self.form_batch(lane, start_s)
+        batch = self.form_batch(lane, device, start_s)
         if not batch:
             return
         for rq in batch:
-            h = self.hedges.get(rq[0])
-            if h is not None:
-                h[2 + device] = RUNNING
+            if rq[7] is not None:
+                self.arena[rq[7]][2 + device] = RUNNING
         est_sum = 0.0
         for rq in batch:
             est_sum += rq[4]
@@ -511,29 +591,30 @@ class Dispatcher:
             )
             self.seq += 1
 
-    def resolve_completion(self, device, rq_id):
-        h = self.hedges.get(rq_id)
-        if h is None:
+    def resolve_completion(self, device, hedge_idx):
+        if hedge_idx is None:
             return SOLO
+        h = self.arena[hedge_idx]
         h[2 + device] = DONE
         if h[4] is not None:
-            del self.hedges[rq_id]
+            self.arena_release(hedge_idx)
             self.hs_losers += 1
             return LOSS
         h[4] = device
         self.hs_wins[device] += 1
         twin = 1 - device
         if h[2 + twin] == QUEUED:
-            self.cancelled.add(rq_id)
+            # Mark the twin cancelled in the race entry itself; the
+            # ghost is purged lazily, which also frees the entry.
+            h[2 + twin] = CANCELLED
             self.hs_cancelled += 1
             self.lanes[twin].on_cancel(h[twin])
             self.lanes[twin].dead += 1
-            del self.hedges[rq_id]
         return WIN
 
     def flush_one(self, out):
         done_s, _seq, start_s, bsize, device, rq = heapq.heappop(self.pending)
-        kind = self.resolve_completion(device, rq[0])
+        kind = self.resolve_completion(device, rq[7])
         out.append((rq, device, start_s, done_s, bsize, kind))
 
     def step(self, horizon_s, exec_fn, out):
@@ -613,15 +694,19 @@ class Acct:
             self.last_done_s = done_s + tx_s
         return True
 
-    def process(self, comps, pool, drift, rls, on_result):
+    def process(self, comps, pool, drift, st, on_result):
         for comp in comps:
             rq, device, start_s, _done_s, _bsize, _kind = comp
             truth = pool[rq[1]]
             t_true = true_service_s(truth, device, start_s, drift)
             tx_s = truth.t_tx if device == CLOUD else 0.0
             is_result = self.on_completion(comp, t_true, tx_s)
-            if rls is not None:
-                rls[device].observe(float(truth.n), float(truth.m_real), t_true)
+            if st.rls is not None:
+                st.rls[device].observe(float(truth.n), float(truth.m_real), t_true)
+                if device == CLOUD and st.adaptive["refit_ttx"]:
+                    # A cloud completion is a timestamped transfer:
+                    # n tokens went out, m came back.
+                    st.rls_ttx.observe(float(truth.n + truth.m_real), truth.t_tx)
             if is_result and on_result is not None:
                 on_result(comp)
 
@@ -645,8 +730,15 @@ class RunState:
                 Rls(EDGE_PLANE, adaptive["rls_lambda"], adaptive["rls_prior_var"]),
                 Rls(CLOUD_PLANE, adaptive["rls_lambda"], adaptive["rls_prior_var"]),
             ]
+            # Payload-size → T_tx refit line (mirror of harness Refit.ttx:
+            # diffuse start at zero, installed once refit_min_obs
+            # transfers are seen).
+            self.rls_ttx = Rls2(
+                0.0, 0.0, adaptive["rls_lambda"], adaptive["rls_prior_var"]
+            )
         else:
             self.rls = None
+            self.rls_ttx = None
 
     def exec_fn(self, device, batch, start_s):
         mx = 0.0
@@ -680,6 +772,7 @@ def route_and_submit(st, rq_id, truth, now):
     else:
         edge_wait = cloud_wait = 0.0
     ttx_est = st.ttx.estimate_or(TTX_PRIOR)
+    m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
     if st.policy == EDGE_ONLY:
         device = EDGE
         t_e = t_c = float("nan")
@@ -687,11 +780,17 @@ def route_and_submit(st, rq_id, truth, now):
         device = CLOUD
         t_e = t_c = float("nan")
     else:
-        m_est_r = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
-        t_e = texe_estimate(st.texe_e, truth.n, m_est_r)
-        t_c = texe_estimate(st.texe_c, truth.n, m_est_r)
+        # Refit T_tx law (Router::set_ttx_line): once warmed up it
+        # replaces the EWMA with a·(N + M̂) + b, clamped at 0.
+        if (
+            st.rls_ttx is not None
+            and st.adaptive["refit_ttx"]
+            and st.rls_ttx.count >= st.adaptive["refit_min_obs"]
+        ):
+            ttx_est = st.rls_ttx.estimate(truth.n + m_est)
+        t_e = texe_estimate(st.texe_e, truth.n, m_est)
+        t_c = texe_estimate(st.texe_c, truth.n, m_est)
         device = EDGE if t_e + edge_wait <= ttx_est + t_c + cloud_wait else CLOUD
-    m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, truth.n)
     hedge = False
     if st.adaptive is not None:
         margin = (t_e + edge_wait) - (ttx_est + t_c + cloud_wait)
@@ -702,18 +801,23 @@ def route_and_submit(st, rq_id, truth, now):
         )
     bucket = int(max(m_est, 0.0) / BUCKET_WIDTH)
     if hedge:
-        est_e = texe_estimate(st.texe_e, truth.n, m_est)
-        est_c = texe_estimate(st.texe_c, truth.n, m_est)
-        rq = (rq_id, rq_id, truth.n, m_est, 0.0, now, bucket)
-        outcome = st.disp.submit_hedged(rq, est_e, est_c)
+        # The trace already evaluated both planes at (n, M̂): the rust
+        # harness reuses those evaluations (same floats as re-evaluating).
+        rq = (rq_id, rq_id, truth.n, m_est, 0.0, now, bucket, None)
+        outcome = st.disp.submit_hedged(rq, t_e, t_c)
         # Only a cloud copy actually in flight refreshes T_tx.
         if outcome in ("hedged", "single_cloud"):
             st.ttx.observe(now, truth.rtt)
         return outcome != "rejected"
     if device == CLOUD:
         st.ttx.observe(now, truth.rtt)
-    est = texe_estimate(st.texe_e if device == EDGE else st.texe_c, truth.n, m_est)
-    rq = (rq_id, rq_id, truth.n, m_est, est, now, bucket)
+    if st.policy == EDGE_ONLY or st.policy == CLOUD_ONLY:
+        est = texe_estimate(
+            st.texe_e if device == EDGE else st.texe_c, truth.n, m_est
+        )
+    else:
+        est = t_e if device == EDGE else t_c
+    rq = (rq_id, rq_id, truth.n, m_est, est, now, bucket, None)
     return st.disp.submit(device, rq)
 
 
@@ -773,14 +877,14 @@ def run_contended(pool, policy, queue_aware, adaptive=None, drift=None):
         now = truth.arrival_s
         comps = []
         st.disp.run_until(now, st.exec_fn, comps)
-        st.acct.process(comps, pool, drift, st.rls, None)
+        st.acct.process(comps, pool, drift, st, None)
         if adaptive is not None:
             apply_refit(st)
         if not route_and_submit(st, i, truth, now):
             rejected += 1
     comps = []
     st.disp.run_until(float("inf"), st.exec_fn, comps)
-    st.acct.process(comps, pool, drift, st.rls, None)
+    st.acct.process(comps, pool, drift, st, None)
     first_arrival = pool[0].arrival_s if pool else 0.0
     makespan_s = max(st.acct.last_done_s - first_arrival, 0.0)
     return finish_contended(st, len(pool), rejected, makespan_s)
@@ -830,12 +934,12 @@ def run_closed_loop(pool, policy, queue_aware, adaptive, clients, think_s, drift
                 ready_s[k] = comp[3] + tx_s + think_s
                 resolved[0] += 1
 
-            st.acct.process(comps, pool, drift, st.rls, on_result)
+            st.acct.process(comps, pool, drift, st, on_result)
             if adaptive is not None:
                 apply_refit(st)
     comps = []
     st.disp.run_until(float("inf"), st.exec_fn, comps)
-    st.acct.process(comps, pool, drift, st.rls, None)
+    st.acct.process(comps, pool, drift, st, None)
     makespan_s = max(st.acct.last_done_s, 0.0)
     return finish_contended(st, total, rejected, makespan_s)
 

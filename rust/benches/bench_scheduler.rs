@@ -60,6 +60,7 @@ fn rq(id: u64, n: usize, arrival_s: f64) -> QueuedRequest {
         est_service_s: edge_plane().estimate(n, m_est),
         arrival_s,
         bucket: 0,
+        hedge: None,
     }
 }
 
@@ -138,6 +139,26 @@ fn main() {
     };
     results.push(deep.clone());
 
+    // Hedged per-request cycle: both-lane admission + slab race entry +
+    // win/cancel resolution on every request — the arena hot path.
+    let hedged = {
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut exec = NoopExec;
+        let ns = ns.clone();
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        bench("enqueue_decide_dispatch/hedged", BenchConfig::fast(), move || {
+            i = (i + 1) & 1023;
+            t += 1e-4;
+            disp.run_until(t, &mut exec, &mut |_c| {});
+            id += 1;
+            let est = edge_plane().estimate(ns[i], 10.0);
+            disp.submit_hedged(rq(id, ns[i], t), est, est)
+        })
+    };
+    results.push(hedged.clone());
+
     report("scheduler hot path (enqueue→decide→dispatch)", &results);
 
     // Perf gates. The load-bearing one is *relative* (depth
@@ -154,8 +175,18 @@ fn main() {
         "hot path too slow: {} ns",
         shallow.mean_ns
     );
+    // Hedging doubles the admission work (two lanes + one arena entry
+    // per request) but must stay the same order of magnitude: the slab
+    // keeps race bookkeeping O(1) with no hashing.
+    assert!(
+        hedged.mean_ns < shallow.mean_ns * 6.0 + 2_000.0,
+        "hedged path disproportionate: {} ns vs solo {} ns",
+        hedged.mean_ns,
+        shallow.mean_ns
+    );
     println!(
-        "\nPASS: hot path {:.0} ns shallow / {:.0} ns at 600k depth (O(1))",
-        shallow.mean_ns, deep.mean_ns
+        "\nPASS: hot path {:.0} ns shallow / {:.0} ns hedged / {:.0} ns at 600k \
+         depth (O(1))",
+        shallow.mean_ns, hedged.mean_ns, deep.mean_ns
     );
 }

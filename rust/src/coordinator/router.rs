@@ -14,7 +14,7 @@
 //! with the dataset's constant mean; the static policies skip estimation.
 
 use crate::devices::DeviceKind;
-use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator, TtxLine};
 use crate::{Error, Result};
 
 use super::policy::PolicyKind;
@@ -58,6 +58,9 @@ pub struct Router {
     texe_cloud: TexeModel,
     n2m: N2mRegressor,
     ttx: TtxEstimator,
+    /// Refit payload-size → T_tx law; overrides the EWMA for decisions
+    /// once installed ([`Router::set_ttx_line`]).
+    ttx_line: Option<TtxLine>,
     ttx_prior_s: f64,
     decisions: u64,
 }
@@ -133,6 +136,7 @@ impl RouterBuilder {
             texe_cloud,
             n2m: self.n2m.unwrap_or_else(|| N2mRegressor::from_coeffs(1.0, 0.0)),
             ttx: TtxEstimator::new(self.ttx_alpha),
+            ttx_line: None,
             ttx_prior_s: self.ttx_prior_s,
             decisions: 0,
         })
@@ -169,6 +173,22 @@ impl Router {
     pub fn set_texe(&mut self, edge: TexeModel, cloud: TexeModel) {
         self.texe_edge = edge;
         self.texe_cloud = cloud;
+    }
+
+    /// Install (or clear) the refit payload-size → T_tx law — the
+    /// network-side twin of [`Router::set_texe`]. While installed,
+    /// predictive decisions estimate `T̂_tx = a·(N + M̂) + b` per request
+    /// instead of reading the size-blind EWMA; an adaptive harness feeds
+    /// observed transfers to a [`crate::predictor::RlsLine`] and keeps
+    /// the law current here once warmed up
+    /// ([`crate::sim::AdaptiveOpts::refit_min_obs`]).
+    pub fn set_ttx_line(&mut self, line: Option<TtxLine>) {
+        self.ttx_line = line;
+    }
+
+    /// The refit T_tx law currently installed, if any.
+    pub fn ttx_line(&self) -> Option<TtxLine> {
+        self.ttx_line
     }
 
     /// The execution-time planes currently used for decisions
@@ -268,6 +288,12 @@ impl Router {
         edge_wait_s: f64,
         cloud_wait_s: f64,
     ) -> DecisionTrace {
+        // Refit T_tx law (when installed) knows the payload size the
+        // EWMA collapses away: N source tokens out, M̂ translation back.
+        let ttx_est = match &self.ttx_line {
+            Some(line) => line.estimate(n as f64 + m_est),
+            None => ttx_est,
+        };
         let t_edge_est = self.texe_edge.estimate(n, m_est);
         let t_cloud_est = self.texe_cloud.estimate(n, m_est);
         // Paper eq. 1, plus the expected-wait term on each side.
@@ -424,6 +450,35 @@ mod tests {
         );
         r.set_texe(slow_edge, cloud);
         assert_eq!(r.decide(n).device, DeviceKind::Cloud);
+    }
+
+    #[test]
+    fn ttx_line_overrides_ewma_and_is_size_aware() {
+        use crate::predictor::TtxLine;
+        let mut r = mk_router(PolicyKind::Cnmt);
+        r.observe_ttx(0.0, 0.040);
+        let n = 30;
+        // EWMA path first.
+        let before = r.decide(n);
+        assert!((before.ttx_est - 0.040).abs() < 1e-12);
+        // Install a law that matches the EWMA at this size: decision
+        // identical, provenance different.
+        let m_est = 0.8 * n as f64 + 0.5;
+        let size = n as f64 + m_est;
+        r.set_ttx_line(Some(TtxLine { slope: 0.0, intercept: 0.040 }));
+        let flat = r.decide(n);
+        assert_eq!(flat.device, before.device);
+        assert!((flat.ttx_est - 0.040).abs() < 1e-12);
+        // A steep size term must raise the estimate for long requests —
+        // and push the long request toward the edge.
+        r.set_ttx_line(Some(TtxLine { slope: 0.010, intercept: 0.040 }));
+        let steep = r.decide(n);
+        assert!((steep.ttx_est - (0.040 + 0.010 * size)).abs() < 1e-12);
+        assert_eq!(steep.device, DeviceKind::Edge, "expensive network ⇒ stay local");
+        // Clearing the law restores the EWMA.
+        r.set_ttx_line(None);
+        assert!(r.ttx_line().is_none());
+        assert!((r.decide(n).ttx_est - 0.040).abs() < 1e-12);
     }
 
     #[test]

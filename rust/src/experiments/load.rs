@@ -52,10 +52,12 @@ use crate::sim::{
     run_closed_loop, run_contended, AdaptiveOpts, Characterization, ContendedResult,
     ContentionOpts, DriftSpec,
 };
+use crate::util::rng::cell_seed;
 use crate::util::{Json, Rng};
 use crate::{Error, Result};
 
 use super::report::text_table;
+use super::runner;
 
 /// Edge ground-truth plane (αN, αM, β) — `gru_fr_en` on the Jetson-like
 /// edge ([`crate::devices::Calibration::default_paper`]).
@@ -106,6 +108,10 @@ pub struct LoadConfig {
     /// Scheduler sizing shared by every configuration (`queue_aware` is
     /// overridden per configuration).
     pub opts: ContentionOpts,
+    /// OS threads to shard sweep cells across
+    /// ([`crate::experiments::runner`]); results are bit-identical at
+    /// any value. 1 = serial (the mirror's mode).
+    pub threads: usize,
 }
 
 impl Default for LoadConfig {
@@ -115,6 +121,7 @@ impl Default for LoadConfig {
             requests_per_point: 20_000,
             loads_rps: vec![4.0, 8.0, 16.0, 32.0, 64.0, 96.0, 128.0],
             opts: ContentionOpts::default(),
+            threads: 1,
         }
     }
 }
@@ -259,6 +266,52 @@ fn configurations() -> [(PolicyKind, bool, bool); 5] {
     ]
 }
 
+/// The three policies compared inside the drift scenario.
+fn drift_configurations() -> [(PolicyKind, bool, bool); 3] {
+    [
+        (PolicyKind::Cnmt, false, false),
+        (PolicyKind::Cnmt, true, false),
+        (PolicyKind::Cnmt, true, true),
+    ]
+}
+
+/// The drift injected alongside the stationary sweep (a function of the
+/// sweep size, so smoke runs drift at the same relative point).
+fn drift_spec_for(cfg: &LoadConfig) -> DriftSpec {
+    DriftSpec {
+        device: DeviceKind::Edge,
+        start_s: (cfg.requests_per_point as f64 / DRIFT_LOAD_RPS) * DRIFT_START_FRAC,
+        ramp_s: DRIFT_RAMP_S,
+        factor: DRIFT_FACTOR,
+    }
+}
+
+/// The deterministic drift workload (regenerable from the seed alone).
+fn drift_workload(cfg: &LoadConfig) -> (Vec<RequestTruth>, Characterization) {
+    synth_workload(
+        cfg.seed ^ DRIFT_SEED_TAG,
+        cfg.requests_per_point,
+        DRIFT_LOAD_RPS,
+    )
+}
+
+/// Run one drift-scenario cell: replay the shared drift workload under
+/// configuration `j`.
+fn run_drift_cell(
+    cfg: &LoadConfig,
+    workload: &(Vec<RequestTruth>, Characterization),
+    spec: DriftSpec,
+    j: usize,
+) -> Result<ContendedResult> {
+    let (requests, ch) = workload;
+    let (policy, queue_aware, adaptive) = drift_configurations()[j];
+    let opts = ContentionOpts {
+        drift: Some(spec),
+        ..opts_for(&cfg.opts, queue_aware, adaptive)
+    };
+    run_contended(requests, ch, policy, &opts)
+}
+
 fn opts_for(base: &ContentionOpts, queue_aware: bool, adaptive: bool) -> ContentionOpts {
     ContentionOpts {
         queue_aware,
@@ -270,35 +323,30 @@ fn opts_for(base: &ContentionOpts, queue_aware: bool, adaptive: bool) -> Content
 /// Run the drift scenario: a fixed-load workload where the edge slows
 /// down by [`DRIFT_FACTOR`] a quarter of the way in. The queue-blind
 /// router, the static queue-aware router and the adaptive v2 (hedge +
-/// RLS refit) replay the identical stream.
+/// RLS refit) replay the identical stream, one cell per policy on the
+/// parallel runner.
 pub fn run_drift(cfg: &LoadConfig) -> Result<DriftReport> {
-    let (requests, ch) = synth_workload(
-        cfg.seed ^ DRIFT_SEED_TAG,
-        cfg.requests_per_point,
-        DRIFT_LOAD_RPS,
-    );
-    let spec = DriftSpec {
-        device: DeviceKind::Edge,
-        start_s: (cfg.requests_per_point as f64 / DRIFT_LOAD_RPS) * DRIFT_START_FRAC,
-        ramp_s: DRIFT_RAMP_S,
-        factor: DRIFT_FACTOR,
-    };
-    let mut results = Vec::new();
-    for (policy, queue_aware, adaptive) in [
-        (PolicyKind::Cnmt, false, false),
-        (PolicyKind::Cnmt, true, false),
-        (PolicyKind::Cnmt, true, true),
-    ] {
-        let opts = ContentionOpts {
-            drift: Some(spec),
-            ..opts_for(&cfg.opts, queue_aware, adaptive)
-        };
-        results.push(run_contended(&requests, &ch, policy, &opts)?);
+    let spec = drift_spec_for(cfg);
+    let workload = drift_workload(cfg);
+    let n_drift = drift_configurations().len();
+    let outcomes = runner::run_cells(cfg.threads, n_drift, |j| {
+        run_drift_cell(cfg, &workload, spec, j)
+    });
+    let mut results = Vec::with_capacity(n_drift);
+    for outcome in outcomes {
+        results.push(outcome?);
     }
     Ok(DriftReport { spec, offered_rps: DRIFT_LOAD_RPS, results })
 }
 
 /// Run the full sweep (stationary load points + the drift scenario).
+///
+/// All (load × configuration) cells and the drift cells are flattened
+/// into one work list and sharded across `cfg.threads` OS threads by
+/// [`crate::experiments::runner::run_cells`]; each cell reseeds from
+/// [`cell_seed`], so the reports are byte-identical at any thread
+/// count (CI diffs 1 vs 4 threads, and both against the python
+/// mirror's serial output).
 pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
     if cfg.requests_per_point == 0 {
         return Err(Error::Config("load sweep needs requests_per_point > 0".into()));
@@ -313,18 +361,56 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
             )));
         }
     }
-    let mut cells = Vec::with_capacity(cfg.loads_rps.len());
-    for (i, &offered_rps) in cfg.loads_rps.iter().enumerate() {
-        let seed = cfg.seed ^ (i as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15);
-        let (requests, ch) = synth_workload(seed, cfg.requests_per_point, offered_rps);
-        let mut results = Vec::new();
-        for (policy, queue_aware, adaptive) in configurations() {
-            let opts = opts_for(&cfg.opts, queue_aware, adaptive);
-            results.push(run_contended(&requests, &ch, policy, &opts)?);
+    let n_cfg = configurations().len();
+    let n_points = cfg.loads_rps.len();
+    let sweep_cells = n_points * n_cfg;
+    let spec = drift_spec_for(cfg);
+    let total_cells = sweep_cells + drift_configurations().len();
+    // Workloads are generated once per point (they are pure functions
+    // of the per-point seed split, so precomputing them serially keeps
+    // the runner's determinism argument intact) and shared read-only by
+    // that point's configuration cells.
+    let workloads: Vec<(Vec<RequestTruth>, Characterization)> = cfg
+        .loads_rps
+        .iter()
+        .enumerate()
+        .map(|(i, &offered_rps)| {
+            synth_workload(cell_seed(cfg.seed, i as u64), cfg.requests_per_point, offered_rps)
+        })
+        .collect();
+    let drift_load = drift_workload(cfg);
+    let outcomes = runner::run_cells(cfg.threads, total_cells, |cell| {
+        if cell < sweep_cells {
+            let (requests, ch) = &workloads[cell / n_cfg];
+            let (policy, queue_aware, adaptive) = configurations()[cell % n_cfg];
+            run_contended(
+                requests,
+                ch,
+                policy,
+                &opts_for(&cfg.opts, queue_aware, adaptive),
+            )
+        } else {
+            run_drift_cell(cfg, &drift_load, spec, cell - sweep_cells)
+        }
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(n_points);
+    for &offered_rps in &cfg.loads_rps {
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per sweep cell")?);
         }
         cells.push(LoadCell { offered_rps, results });
     }
-    let drift = run_drift(cfg)?;
+    let mut drift_results = Vec::with_capacity(drift_configurations().len());
+    for _ in 0..drift_configurations().len() {
+        drift_results.push(outcomes.next().expect("one outcome per drift cell")?);
+    }
+    let drift = DriftReport {
+        spec,
+        offered_rps: DRIFT_LOAD_RPS,
+        results: drift_results,
+    };
     Ok(LoadSweep {
         cells,
         drift,
@@ -456,6 +542,9 @@ pub struct ClosedLoopConfig {
     pub think_s: f64,
     /// Scheduler sizing shared by every configuration.
     pub opts: ContentionOpts,
+    /// OS threads to shard (client count × configuration) cells across;
+    /// results are bit-identical at any value. 1 = serial.
+    pub threads: usize,
 }
 
 impl Default for ClosedLoopConfig {
@@ -466,6 +555,7 @@ impl Default for ClosedLoopConfig {
             clients: vec![1, 2, 4, 8, 16, 32, 64],
             think_s: 0.0,
             opts: ContentionOpts::default(),
+            threads: 1,
         }
     }
 }
@@ -524,16 +614,23 @@ pub fn run_closed(cfg: &ClosedLoopConfig) -> Result<ClosedLoopSweep> {
         return Err(Error::Config("client counts must be > 0".into()));
     }
     // Arrival times in the pool are ignored (completions drive arrivals).
+    // The pool is generated once and shared read-only by every cell.
     let (pool, ch) =
         synth_workload(cfg.seed ^ CLOSED_SEED_TAG, cfg.requests_per_point, 1.0);
+    let n_cfg = closed_configurations().len();
+    let outcomes =
+        runner::run_cells(cfg.threads, cfg.clients.len() * n_cfg, |cell| {
+            let clients = cfg.clients[cell / n_cfg];
+            let (policy, queue_aware, adaptive) = closed_configurations()[cell % n_cfg];
+            let opts = opts_for(&cfg.opts, queue_aware, adaptive);
+            run_closed_loop(&pool, &ch, policy, &opts, clients, cfg.think_s)
+        });
+    let mut outcomes = outcomes.into_iter();
     let mut cells = Vec::with_capacity(cfg.clients.len());
     for &clients in &cfg.clients {
-        let mut results = Vec::new();
-        for (policy, queue_aware, adaptive) in closed_configurations() {
-            let opts = opts_for(&cfg.opts, queue_aware, adaptive);
-            results.push(run_closed_loop(
-                &pool, &ch, policy, &opts, clients, cfg.think_s,
-            )?);
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per closed cell")?);
         }
         cells.push(ClosedLoopCell { clients, results });
     }
@@ -729,6 +826,29 @@ mod tests {
             b.rejected,
             b.p99_s
         );
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        // THE determinism acceptance property: the JSON report (the
+        // exact bytes CI diffs) must not depend on the thread count.
+        let mut cfg = smoke_cfg(vec![8.0, 96.0]);
+        cfg.requests_per_point = 1_200;
+        let serial = to_json(&run(&cfg).unwrap()).to_string_pretty();
+        for threads in [2, 4, 11] {
+            cfg.threads = threads;
+            let parallel = to_json(&run(&cfg).unwrap()).to_string_pretty();
+            assert_eq!(parallel, serial, "{threads}-thread sweep diverged");
+        }
+        let mut ccfg = ClosedLoopConfig {
+            requests_per_point: 600,
+            clients: vec![1, 8],
+            ..Default::default()
+        };
+        let serial = closed_to_json(&run_closed(&ccfg).unwrap()).to_string_pretty();
+        ccfg.threads = 4;
+        let parallel = closed_to_json(&run_closed(&ccfg).unwrap()).to_string_pretty();
+        assert_eq!(parallel, serial, "closed-loop sweep diverged under threads");
     }
 
     #[test]

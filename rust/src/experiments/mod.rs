@@ -22,6 +22,8 @@ pub mod fig4;
 pub mod load;
 pub mod multilevel;
 pub mod report;
+pub mod runner;
 pub mod table1;
 
 pub use report::write_report;
+pub use runner::run_cells;

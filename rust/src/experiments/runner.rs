@@ -1,0 +1,150 @@
+//! Deterministic multi-threaded sweep runner.
+//!
+//! The full-parameter load sweep is embarrassingly parallel — every
+//! (offered load × configuration × scenario) **cell** replays its own
+//! workload through its own dispatcher — yet it ran strictly serially,
+//! so CI's report regeneration and any million-request study were
+//! bottlenecked by the harness, not the modelled hardware. This module
+//! shards cells across OS threads while keeping the output **bit-
+//! identical at any thread count**:
+//!
+//! * every cell derives its RNG stream from a pure per-cell seed split
+//!   ([`crate::util::rng::cell_seed`] — master seed ⊕ (cell+1)·φ64 into
+//!   splitmix64/xoshiro256**), so no cell's randomness depends on which
+//!   thread ran it or in what order;
+//! * cells write results into their own index slot, so assembly order
+//!   is the cell order, not completion order;
+//! * no shared mutable simulation state exists — each cell builds its
+//!   own workload, router, dispatcher and accounting from the seed.
+//!
+//! Scheduling is work-stealing-lite: one shared atomic cursor, each
+//! thread claims the next unclaimed cell when it finishes its current
+//! one. Long cells (high-load points) therefore never convoy behind a
+//! static block partition. The python mirror stays serial and remains
+//! the lockstep cross-check — `--threads N` must (and does) reproduce
+//! its bytes exactly; CI diffs `--threads 1` against `--threads 4`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Threads to use when the caller asks for "all cores".
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Resolve a `--threads` flag: 0 means "all cores", anything else is
+/// taken literally.
+pub fn resolve_threads(requested: usize) -> usize {
+    if requested == 0 {
+        default_threads()
+    } else {
+        requested
+    }
+}
+
+/// Run `cells` independent cells on up to `threads` OS threads and
+/// return their results **in cell order** (index `i` holds `run(i)`).
+///
+/// `run` must be a pure function of the cell index (derive all
+/// randomness from a per-cell seed — see the module docs); under that
+/// contract the result vector is identical for every `threads` value.
+/// A panicking cell propagates the panic to the caller once all threads
+/// have joined (no result is silently dropped).
+pub fn run_cells<T, F>(threads: usize, cells: usize, run: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(cells.max(1));
+    if threads <= 1 {
+        return (0..cells).map(run).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    // One slot per cell; each slot is written by exactly one thread
+    // (whichever claimed the cell), so the per-slot mutexes never
+    // contend beyond their two lock sites.
+    let slots: Vec<Mutex<Option<T>>> = (0..cells).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let cell = cursor.fetch_add(1, Ordering::Relaxed);
+                if cell >= cells {
+                    break;
+                }
+                let result = run(cell);
+                *slots[cell].lock().expect("cell slot poisoned") = Some(result);
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|slot| {
+            slot.into_inner()
+                .expect("cell slot poisoned")
+                .expect("every cell below the cursor ran")
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::cell_seed;
+    use crate::util::Rng;
+
+    #[test]
+    fn results_arrive_in_cell_order() {
+        // Cell i sleeps inversely to i, so completion order is roughly
+        // reversed — results must still land in cell order.
+        let out = run_cells(4, 16, |i| {
+            std::thread::sleep(std::time::Duration::from_millis((16 - i) as u64));
+            i * 10
+        });
+        assert_eq!(out, (0..16).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_count_does_not_change_results() {
+        // The load-bearing property: a seeded per-cell computation is
+        // bit-identical at 1, 2, 3, 8 threads (and with more threads
+        // than cells).
+        let cell = |i: usize| -> Vec<u64> {
+            let mut rng = Rng::new(cell_seed(0xC0FFEE, i as u64));
+            (0..50).map(|_| rng.next_u64()).collect()
+        };
+        let serial = run_cells(1, 11, cell);
+        for threads in [2, 3, 8, 64] {
+            assert_eq!(run_cells(threads, 11, cell), serial, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn zero_and_tiny_cell_counts() {
+        assert!(run_cells(8, 0, |i| i).is_empty());
+        assert_eq!(run_cells(8, 1, |i| i + 7), vec![7]);
+        assert_eq!(run_cells(0, 3, |i| i), vec![0, 1, 2], "0 threads = serial");
+    }
+
+    #[test]
+    fn resolve_threads_maps_zero_to_all_cores() {
+        assert_eq!(resolve_threads(3), 3);
+        let auto = resolve_threads(0);
+        assert!(auto >= 1);
+        assert_eq!(auto, default_threads());
+    }
+
+    // std::thread::scope re-panics with its own payload ("a scoped
+    // thread panicked"), so match on that rather than the cell's text.
+    #[test]
+    #[should_panic(expected = "panicked")]
+    fn cell_panics_propagate() {
+        run_cells(4, 8, |i| {
+            if i == 5 {
+                panic!("cell 5 exploded");
+            }
+            i
+        });
+    }
+}

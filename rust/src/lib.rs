@@ -41,10 +41,13 @@
 //! | IWSLT/OPUS corpora | [`corpus`] |
 //! | 100k-request experiment | [`sim`], [`experiments::table1`] |
 //! | queue-aware routing under load (beyond paper) | [`scheduler`], [`coordinator::router`] |
-//! | hedged dispatch + cancel tokens (beyond paper) | [`scheduler::dispatch`] |
-//! | RLS online refit of T_exe (beyond paper) | [`predictor::rls`] |
+//! | hedged dispatch (beyond paper) | [`scheduler::dispatch`] |
+//! | zero-churn dispatch core: slab arena + ring buffers (beyond paper) | [`scheduler::dispatch`], [`util::slab`], [`util::ring`] |
+//! | frozen pre-rewrite dispatcher (differential + perf baseline) | [`scheduler::baseline`] |
+//! | RLS online refit of T_exe and T_tx (beyond paper) | [`predictor::rls`] |
 //! | throughput-vs-latency load sweep + drift scenario (beyond paper) | [`experiments::load`] |
 //! | closed-loop latency–throughput curves (beyond paper) | [`experiments::load`], [`sim::harness`] |
+//! | deterministic multi-threaded sweep runner (beyond paper) | [`experiments::runner`] |
 
 #![warn(missing_docs)]
 

@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! cnmt experiment table1|fig2a|fig3|fig4|all [flags]   reproduce the paper
+//! cnmt bench sched [--json]                            scheduler perf numbers → BENCH_sched.json
 //! cnmt calibrate [flags]                               real-PJRT device characterisation
 //! cnmt translate --model <name> --ids 5,6,7            one translation through the runtime
 //! cnmt selfcheck                                       load + run every artifact
@@ -20,7 +21,7 @@ use cnmt::corpus::LangPair;
 use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
 use cnmt::experiments::{
-    ablation, energy, fig2a, fig3, fig4, load, multilevel, report, table1,
+    ablation, energy, fig2a, fig3, fig4, load, multilevel, report, runner, table1,
 };
 #[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
@@ -43,6 +44,7 @@ fn run() -> Result<()> {
     let args = Args::from_env()?;
     match args.subcommand() {
         Some("experiment") => cmd_experiment(&args),
+        Some("bench") => cmd_bench(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("translate") => cmd_translate(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
@@ -74,6 +76,17 @@ USAGE:
                             open-loop Poisson arrivals (writes closed_loop.json)
       --clients <a,b,..>    closed loop: client counts (default 1,2,4,8,16,32,64)
       --think-ms <f>        closed loop: per-client think time (default 0)
+      --threads <n>         load sweep: shard cells over n OS threads
+                            (0 = all cores; reports are bit-identical
+                            at any thread count; default 1)
+  cnmt bench sched [flags]  scheduler core benchmark (events/sec,
+                            ns/event, sweep wall-clock at 1 vs N threads)
+      --json                also write the machine-readable report
+      --out <path>          report path (default reports/BENCH_sched.json)
+      --requests <n>        event-loop stream length (default 20000)
+      --sweep-requests <n>  requests/point for the wall-clock sweep
+                            (default 4000)
+      --threads <n>         parallel sweep thread count (0 = all cores)
   cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
                             (needs the `pjrt` build feature)
       --samples <n>         measured translations per model (default 120)
@@ -132,6 +145,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         let closed = args.bool("closed-loop");
         if closed {
             let mut cc = load::ClosedLoopConfig { seed: cfg.seed, ..Default::default() };
+            cc.threads = runner::resolve_threads(args.usize("threads", 1)?);
             if let Some(clients) = args.str_opt("clients") {
                 cc.clients = clients
                     .split(',')
@@ -147,6 +161,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             (None, Some(cc))
         } else {
             let mut lc = load::LoadConfig { seed: cfg.seed, ..Default::default() };
+            lc.threads = runner::resolve_threads(args.usize("threads", 1)?);
             if let Some(loads) = args.str_opt("loads") {
                 lc.loads_rps = loads
                     .split(',')
@@ -279,6 +294,366 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         }
         other => Err(Error::Config(format!("unknown experiment `{other}`"))),
     }
+}
+
+/// Ground-truth executor over a synthetic workload: a batch costs its
+/// longest member plus a residual of the rest (the same cost model the
+/// contended harness charges).
+struct SynthExec<'a> {
+    truths: &'a [cnmt::sim::harness::RequestTruth],
+    residual: f64,
+}
+
+impl cnmt::scheduler::BatchExecutor for SynthExec<'_> {
+    fn execute(
+        &mut self,
+        device: cnmt::devices::DeviceKind,
+        batch: &[cnmt::scheduler::QueuedRequest],
+        _start_s: f64,
+    ) -> f64 {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for rq in batch {
+            let truth = &self.truths[rq.payload];
+            let t = match device {
+                cnmt::devices::DeviceKind::Edge => truth.t_edge,
+                cnmt::devices::DeviceKind::Cloud => truth.t_cloud,
+            };
+            max = max.max(t);
+            sum += t;
+        }
+        max + (sum - max) * self.residual
+    }
+}
+
+/// The dispatcher surface the event-loop bench drives — implemented by
+/// the zero-churn [`cnmt::scheduler::Dispatcher`] and the frozen
+/// pre-rewrite [`cnmt::scheduler::BaselineDispatcher`], so both run the
+/// identical stream in the same binary and the reported speedup is a
+/// same-container measurement.
+trait BenchDispatch {
+    fn drain(&mut self, horizon_s: f64, exec: &mut SynthExec<'_>, completions: &mut u64);
+    fn wait(&self, device: cnmt::devices::DeviceKind, now_s: f64) -> f64;
+    fn put(&mut self, device: cnmt::devices::DeviceKind, rq: cnmt::scheduler::QueuedRequest);
+    fn put_hedged(&mut self, rq: cnmt::scheduler::QueuedRequest, e: f64, c: f64);
+    fn batches(&self) -> u64;
+}
+
+impl BenchDispatch for cnmt::scheduler::Dispatcher {
+    fn drain(&mut self, horizon_s: f64, exec: &mut SynthExec<'_>, completions: &mut u64) {
+        self.run_until(horizon_s, exec, &mut |_c| *completions += 1);
+    }
+    fn wait(&self, device: cnmt::devices::DeviceKind, now_s: f64) -> f64 {
+        self.expected_wait_s(device, now_s)
+    }
+    fn put(&mut self, device: cnmt::devices::DeviceKind, rq: cnmt::scheduler::QueuedRequest) {
+        self.submit(device, rq);
+    }
+    fn put_hedged(&mut self, rq: cnmt::scheduler::QueuedRequest, e: f64, c: f64) {
+        self.submit_hedged(rq, e, c);
+    }
+    fn batches(&self) -> u64 {
+        self.batch_stats().batches
+    }
+}
+
+impl BenchDispatch for cnmt::scheduler::BaselineDispatcher {
+    fn drain(&mut self, horizon_s: f64, exec: &mut SynthExec<'_>, completions: &mut u64) {
+        self.run_until(horizon_s, exec, &mut |_c| *completions += 1);
+    }
+    fn wait(&self, device: cnmt::devices::DeviceKind, now_s: f64) -> f64 {
+        self.expected_wait_s(device, now_s)
+    }
+    fn put(&mut self, device: cnmt::devices::DeviceKind, rq: cnmt::scheduler::QueuedRequest) {
+        self.submit(device, rq);
+    }
+    fn put_hedged(&mut self, rq: cnmt::scheduler::QueuedRequest, e: f64, c: f64) {
+        self.submit_hedged(rq, e, c);
+    }
+    fn batches(&self) -> u64 {
+        self.batch_stats().batches
+    }
+}
+
+/// Drive the full per-request cycle (route → submit → event loop) over
+/// a synthetic stream and count dispatcher events (batch starts +
+/// completion events). `hedge_margin_s` > 0 exercises the hedged path.
+/// Returns `(events, wall_seconds)`.
+fn bench_event_loop<D: BenchDispatch>(
+    disp: &mut D,
+    requests: usize,
+    offered_rps: f64,
+    hedge_margin_s: f64,
+) -> (u64, f64) {
+    use cnmt::coordinator::{PolicyKind, RouterBuilder};
+    use cnmt::devices::DeviceKind;
+    use cnmt::experiments::load::{
+        synth_workload, CLOUD_PLANE, EDGE_PLANE, N2M_DELTA, N2M_GAMMA, RTT_S,
+    };
+    use cnmt::predictor::{N2mRegressor, TexeModel};
+    use cnmt::scheduler::QueuedRequest;
+
+    let (truths, _ch) = synth_workload(0xBE7C5, requests, offered_rps);
+    let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+        .texe(
+            TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2),
+            TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+        )
+        .n2m(N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA))
+        .ttx(0.3, RTT_S)
+        .build()
+        .expect("bench router");
+    router.observe_ttx(0.0, RTT_S);
+    let n2m = N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA);
+    let mut exec = SynthExec { truths: &truths, residual: 0.15 };
+    let mut completions = 0u64;
+    let t0 = std::time::Instant::now();
+    for (i, truth) in truths.iter().enumerate() {
+        let now = truth.arrival_s;
+        disp.drain(now, &mut exec, &mut completions);
+        let edge_wait = disp.wait(DeviceKind::Edge, now);
+        let cloud_wait = disp.wait(DeviceKind::Cloud, now);
+        let trace = router.decide_loaded(truth.n, edge_wait, cloud_wait);
+        let queued = QueuedRequest {
+            id: i as u64,
+            payload: i,
+            n: truth.n,
+            m_est: n2m.predict(truth.n),
+            est_service_s: 0.0,
+            arrival_s: now,
+            bucket: 0,
+            hedge: None,
+        };
+        let margin = trace.loaded_margin_s(edge_wait, cloud_wait);
+        if hedge_margin_s > 0.0 && margin.is_finite() && margin.abs() <= hedge_margin_s {
+            disp.put_hedged(queued, trace.t_edge_est, trace.t_cloud_est);
+        } else {
+            let mut queued = queued;
+            queued.est_service_s = match trace.device {
+                DeviceKind::Edge => trace.t_edge_est,
+                DeviceKind::Cloud => trace.t_cloud_est,
+            };
+            disp.put(trace.device, queued);
+        }
+    }
+    disp.drain(f64::INFINITY, &mut exec, &mut completions);
+    let wall_s = t0.elapsed().as_secs_f64();
+    (completions + disp.batches(), wall_s)
+}
+
+/// Best-of-3 event-loop measurement for one dispatcher implementation.
+fn event_loop_json<D: BenchDispatch>(
+    label: &str,
+    mk: impl Fn() -> D,
+    requests: usize,
+    hedge_margin_s: f64,
+) -> cnmt::util::Json {
+    use cnmt::util::Json;
+    let mut best: Option<(u64, f64)> = None;
+    for _ in 0..3 {
+        let mut disp = mk();
+        let (events, wall_s) = bench_event_loop(&mut disp, requests, 96.0, hedge_margin_s);
+        best = Some(match best {
+            Some((e, w)) if w <= wall_s => (e, w),
+            _ => (events, wall_s),
+        });
+    }
+    let (events, wall_s) = best.expect("three samples taken");
+    let eps = events as f64 / wall_s;
+    eprintln!(
+        "  {label:<18} {events} events in {wall_s:.3} s  →  {eps:.0} events/s \
+         ({:.0} ns/event)",
+        1e9 / eps
+    );
+    let mut o = Json::object();
+    o.set("requests", Json::Num(requests as f64))
+        .set("hedge_margin_s", Json::Num(hedge_margin_s))
+        .set("events", Json::Num(events as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("events_per_sec", Json::Num(eps))
+        .set("ns_per_event", Json::Num(1e9 / eps));
+    o
+}
+
+/// `cnmt bench sched [--json] [--out p] [--requests n] [--sweep-requests n]
+/// [--threads n]` — the scheduler-core perf report behind
+/// `BENCH_sched.json` (events/sec, ns/event, full-sweep wall-clock at 1
+/// vs N threads). CI gates on these numbers; see `.github/workflows`.
+fn cmd_bench(args: &Args) -> Result<()> {
+    use cnmt::util::bench::{bench, BenchConfig};
+    use cnmt::util::Json;
+
+    let which = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "sched".to_string());
+    if which != "sched" {
+        return Err(Error::Config(format!(
+            "unknown bench target `{which}` (try `cnmt bench sched`)"
+        )));
+    }
+    // An explicit --out implies --json: dropping a requested output
+    // path on the floor would be silent data loss.
+    let out_flag = args.str_opt("out");
+    let write_json = args.bool("json") || out_flag.is_some();
+    let out = PathBuf::from(
+        out_flag.unwrap_or_else(|| "reports/BENCH_sched.json".to_string()),
+    );
+    let requests = args.usize("requests", 20_000)?;
+    let sweep_requests = args.usize("sweep-requests", 4_000)?;
+    let threads = runner::resolve_threads(args.usize("threads", 0)?);
+    args.reject_unknown()?;
+
+    use cnmt::scheduler::{BaselineDispatcher, Dispatcher, DispatcherConfig};
+    eprintln!("bench sched: event loop over {requests} requests (dense vs frozen baseline)");
+    let mk_dense = || Dispatcher::new(&DispatcherConfig::default());
+    let mk_base = || BaselineDispatcher::new(&DispatcherConfig::default());
+    let solo = event_loop_json("solo/dense", mk_dense, requests, 0.0);
+    let solo_base = event_loop_json("solo/baseline", mk_base, requests, 0.0);
+    let hedged = event_loop_json("hedged/dense", mk_dense, requests, 0.010);
+    let hedged_base = event_loop_json("hedged/baseline", mk_base, requests, 0.010);
+    let speedup_solo = solo.get("events_per_sec").unwrap().as_f64().unwrap()
+        / solo_base.get("events_per_sec").unwrap().as_f64().unwrap();
+    let speedup_hedged = hedged.get("events_per_sec").unwrap().as_f64().unwrap()
+        / hedged_base.get("events_per_sec").unwrap().as_f64().unwrap();
+    eprintln!(
+        "  speedup vs pre-rewrite baseline: {speedup_solo:.2}x solo, \
+         {speedup_hedged:.2}x hedged"
+    );
+
+    // Hot-path latency: the full steady-state per-request cycle.
+    let hot = {
+        use cnmt::devices::DeviceKind;
+        use cnmt::experiments::load::synth_workload;
+        use cnmt::scheduler::{Dispatcher, DispatcherConfig, QueuedRequest};
+        let (truths, ch) = synth_workload(0xBE7C6, 2_048, 96.0);
+        let mut router = cnmt::coordinator::RouterBuilder::new(
+            cnmt::coordinator::PolicyKind::Cnmt,
+        )
+        .texe(ch.texe_edge, ch.texe_cloud)
+        .n2m(ch.n2m)
+        .build()
+        .expect("bench router");
+        router.observe_ttx(0.0, 0.042);
+        let mut disp = Dispatcher::new(&DispatcherConfig::default());
+        let mut i = 0usize;
+        let mut t = 0.0f64;
+        let mut id = 0u64;
+        bench("enqueue_decide_dispatch", BenchConfig::fast(), move || {
+            // The executor is two words of plain data; rebuilding it per
+            // iteration sidesteps a self-borrow of the moved `truths`.
+            let mut exec = SynthExec { truths: &truths, residual: 0.15 };
+            i = (i + 1) & 2047;
+            t += 1e-4;
+            disp.run_until(t, &mut exec, &mut |_c| {});
+            let ew = disp.expected_wait_s(DeviceKind::Edge, t);
+            let cw = disp.expected_wait_s(DeviceKind::Cloud, t);
+            let trace = router.decide_loaded(truths[i].n, ew, cw);
+            id += 1;
+            disp.submit(
+                trace.device,
+                QueuedRequest {
+                    id,
+                    payload: i,
+                    n: truths[i].n,
+                    m_est: trace.m_est,
+                    est_service_s: match trace.device {
+                        DeviceKind::Edge => trace.t_edge_est,
+                        DeviceKind::Cloud => trace.t_cloud_est,
+                    },
+                    arrival_s: t,
+                    bucket: 0,
+                    hedge: None,
+                },
+            )
+        })
+    };
+    eprintln!(
+        "  hot path {:.0} ns/request (p95 {:.0} ns)",
+        hot.mean_ns, hot.p95_ns
+    );
+
+    // Full-parameter-shaped sweep wall-clock, serial vs sharded.
+    eprintln!("bench sched: sweep wall-clock ({sweep_requests} requests/point)");
+    let mut sweep_cfg = load::LoadConfig {
+        requests_per_point: sweep_requests,
+        ..Default::default()
+    };
+    let t0 = std::time::Instant::now();
+    let serial_sweep = load::run(&sweep_cfg)?;
+    let serial_s = t0.elapsed().as_secs_f64();
+    sweep_cfg.threads = threads;
+    let t0 = std::time::Instant::now();
+    let parallel_sweep = load::run(&sweep_cfg)?;
+    let parallel_s = t0.elapsed().as_secs_f64();
+    // Determinism spot-check rides along with every bench run.
+    let same = load::to_json(&serial_sweep).to_string_pretty()
+        == load::to_json(&parallel_sweep).to_string_pretty();
+    if !same {
+        return Err(Error::Sim(
+            "parallel sweep diverged from serial sweep (determinism bug)".into(),
+        ));
+    }
+    let speedup = serial_s / parallel_s;
+    eprintln!(
+        "  sweep: {:.2} s serial → {:.2} s at {threads} threads  ({speedup:.2}x, \
+         bit-identical)",
+        serial_s, parallel_s
+    );
+
+    // Cell count derived from the actual sweep result (configurations
+    // per point × points + drift cells), not hardcoded.
+    let cells = serial_sweep
+        .cells
+        .iter()
+        .map(|c| c.results.len())
+        .sum::<usize>()
+        + serial_sweep.drift.results.len();
+    let mut sweep = Json::object();
+    sweep
+        .set("requests_per_point", Json::Num(sweep_requests as f64))
+        .set("cells", Json::Num(cells as f64))
+        .set("threads", Json::Num(threads as f64))
+        .set("serial_wall_s", Json::Num(serial_s))
+        .set("parallel_wall_s", Json::Num(parallel_s))
+        .set("speedup", Json::Num(speedup))
+        .set("bit_identical", Json::Bool(same));
+    let mut baseline = Json::object();
+    baseline
+        .set(
+            "structures",
+            Json::Str(
+                "pre-rewrite dispatcher (scheduler::baseline): VecDeque queues, \
+                 id-keyed HashMap hedges + HashSet cancel tokens, per-batch Vec \
+                 allocation, uncached earliest-free scan"
+                    .into(),
+            ),
+        )
+        .set("event_loop_solo", solo_base)
+        .set("event_loop_hedged", hedged_base);
+    let mut speedup = Json::object();
+    speedup
+        .set("event_loop_solo", Json::Num(speedup_solo))
+        .set("event_loop_hedged", Json::Num(speedup_hedged));
+    let mut root = Json::object();
+    root.set("schema", Json::Str("bench_sched/v1".into()))
+        .set("producer", Json::Str("cnmt bench sched".into()))
+        .set("event_loop_solo", solo)
+        .set("event_loop_hedged", hedged)
+        .set("hot_path", hot.to_json())
+        .set("sweep", sweep)
+        .set("baseline", baseline)
+        .set("speedup", speedup);
+    if write_json {
+        let path = report::write_report(
+            out.parent().unwrap_or_else(|| std::path::Path::new(".")),
+            out.file_stem().and_then(|s| s.to_str()).unwrap_or("BENCH_sched"),
+            &root,
+        )?;
+        eprintln!("wrote {}", path.display());
+    }
+    Ok(())
 }
 
 /// Stubs for the PJRT-backed commands when built without the `pjrt`

@@ -6,11 +6,12 @@
 //!   Fig. 3): `M ≈ γ·N + δ`, fitted on prefiltered corpus pairs.
 //! * [`texe`] — per-device linear execution-time model (paper eq. 2):
 //!   `T_exe = αN·N + αM·M + β`, fitted on profiled inferences.
-//! * [`ttx`] — online transmission-time estimator from timestamped
-//!   request/response pairs (paper §II-C).
-//! * [`rls`] — recursive-least-squares online refit of the T_exe planes
-//!   from observed completions, with a forgetting factor (beyond the
-//!   paper: keeps estimates honest under hardware drift).
+//! * [`ttx`] — online transmission-time estimation (paper §II-C): the
+//!   timestamped EWMA plus the payload-size-aware [`TtxLine`] law.
+//! * [`rls`] — recursive-least-squares online refit with a forgetting
+//!   factor (beyond the paper: keeps estimates honest under drift) —
+//!   [`RlsPlane`] for the T_exe planes from observed completions,
+//!   [`RlsLine`] for the size → T_tx law from observed transfers.
 
 pub mod estimators;
 pub mod fit;
@@ -22,6 +23,6 @@ pub mod ttx;
 pub use estimators::LengthEstimator;
 pub use fit::{LineFit, PlaneFit};
 pub use n2m::N2mRegressor;
-pub use rls::RlsPlane;
+pub use rls::{RlsLine, RlsPlane};
 pub use texe::TexeModel;
-pub use ttx::TtxEstimator;
+pub use ttx::{TtxEstimator, TtxLine};

@@ -46,6 +46,7 @@ use crate::util::Json;
 use crate::{Error, Result};
 
 use super::texe::TexeModel;
+use super::ttx::TtxLine;
 
 /// Online (n, m) → T_exe plane: a [`TexeModel`] kept fresh by
 /// exponentially-forgetting recursive least squares.
@@ -140,6 +141,101 @@ impl RlsPlane {
     pub fn to_json(&self) -> Json {
         let mut o = self.model().to_json();
         o.set("lambda", Json::Num(self.lambda))
+            .set("observations", Json::Num(self.count as f64));
+        o
+    }
+}
+
+/// Online scalar line `x → t` (regressor `[x, 1]`): the 2×2 analogue of
+/// [`RlsPlane`], used to refit the payload-size → T_tx law
+/// ([`TtxLine`]) from observed transfers — the ROADMAP follow-on that
+/// retires the plain EWMA once enough offloads have been timed.
+///
+/// Same update equations as the plane (standard forgetting-factor RLS),
+/// O(1) per observation, `Copy`, never poisoned by non-finite samples.
+#[derive(Debug, Clone, Copy)]
+pub struct RlsLine {
+    /// Coefficients `[slope, intercept]`.
+    w: [f64; 2],
+    /// Scaled parameter covariance (symmetric 2×2).
+    p: [[f64; 2]; 2],
+    lambda: f64,
+    count: u64,
+}
+
+impl RlsLine {
+    /// Start from a prior line. `lambda` ∈ (0, 1] is the forgetting
+    /// factor; `prior_var` > 0 scales the initial covariance (small =
+    /// sticky prior, large = data-dominated).
+    pub fn new(init: TtxLine, lambda: f64, prior_var: f64) -> Result<Self> {
+        if !(lambda > 0.0 && lambda <= 1.0) {
+            return Err(Error::Fit(format!(
+                "RLS forgetting factor {lambda} outside (0, 1]"
+            )));
+        }
+        if !(prior_var > 0.0) || !prior_var.is_finite() {
+            return Err(Error::Fit(format!(
+                "RLS prior variance {prior_var} must be finite and > 0"
+            )));
+        }
+        Ok(RlsLine {
+            w: [init.slope, init.intercept],
+            p: [[prior_var, 0.0], [0.0, prior_var]],
+            lambda,
+            count: 0,
+        })
+    }
+
+    /// Feed one observed transfer: payload size `x` (tokens moved) and
+    /// measured transfer seconds `t_s`. O(1).
+    pub fn observe(&mut self, x: f64, t_s: f64) {
+        if !(x.is_finite() && t_s.is_finite()) {
+            return; // never poison the covariance with NaN/inf
+        }
+        let xv = [x, 1.0];
+        let px = [
+            self.p[0][0] * xv[0] + self.p[0][1] * xv[1],
+            self.p[1][0] * xv[0] + self.p[1][1] * xv[1],
+        ];
+        let denom = self.lambda + xv[0] * px[0] + xv[1] * px[1];
+        let k = [px[0] / denom, px[1] / denom];
+        let err = t_s - (xv[0] * self.w[0] + xv[1] * self.w[1]);
+        self.w[0] += k[0] * err;
+        self.w[1] += k[1] * err;
+        for i in 0..2 {
+            for j in 0..2 {
+                self.p[i][j] = (self.p[i][j] - k[i] * px[j]) / self.lambda;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Current coefficient estimate as a [`TtxLine`].
+    pub fn line(&self) -> TtxLine {
+        TtxLine { slope: self.w[0], intercept: self.w[1] }
+    }
+
+    /// Estimated transfer seconds for payload size `x` (clamped at 0).
+    pub fn estimate(&self, x: f64) -> f64 {
+        self.line().estimate(x)
+    }
+
+    /// Observations absorbed so far.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// The configured forgetting factor.
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Serialise the current coefficients (for refit reporting).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("slope", Json::Num(self.w[0]))
+            .set("intercept", Json::Num(self.w[1]))
+            .set("lambda", Json::Num(self.lambda))
             .set("observations", Json::Num(self.count as f64));
         o
     }
@@ -244,6 +340,62 @@ mod tests {
         rls.observe(f64::NAN, 1.0, 1.0);
         rls.observe(1.0, f64::INFINITY, 1.0);
         assert_eq!(rls.count(), 0);
+    }
+
+    #[test]
+    fn line_converges_to_planted_law_and_tracks_steps() {
+        // Stationary: recover a planted bandwidth/latency pair from
+        // noisy transfer timings.
+        let truth = TtxLine { slope: 2e-4, intercept: 0.031 };
+        let mut rls =
+            RlsLine::new(TtxLine { slope: 0.0, intercept: 0.0 }, 1.0, 1e4).unwrap();
+        let mut rng = Rng::new(0x77B1);
+        for _ in 0..4000 {
+            let size = (2 + rng.usize(123)) as f64;
+            let t = (truth.estimate(size) + rng.normal_ms(0.0, 1e-4)).max(0.0);
+            rls.observe(size, t);
+        }
+        let fit = rls.line();
+        assert!((fit.slope - truth.slope).abs() < 1e-5, "slope {}", fit.slope);
+        assert!(
+            (fit.intercept - truth.intercept).abs() < 1e-3,
+            "intercept {}",
+            fit.intercept
+        );
+        // Step change (network degrades 3x): forgetting must re-learn.
+        let after = TtxLine { slope: 6e-4, intercept: 0.093 };
+        let mut rls =
+            RlsLine::new(TtxLine { slope: 0.0, intercept: 0.0 }, 0.99, 1e4).unwrap();
+        for _ in 0..500 {
+            let size = (2 + rng.usize(123)) as f64;
+            rls.observe(size, truth.estimate(size));
+        }
+        for _ in 0..1500 {
+            let size = (2 + rng.usize(123)) as f64;
+            rls.observe(size, after.estimate(size));
+        }
+        let est = rls.estimate(60.0);
+        let (t_new, t_old) = (after.estimate(60.0), truth.estimate(60.0));
+        assert!(
+            (est - t_new).abs() < 0.1 * (t_new - t_old).abs(),
+            "line stuck near the stale law: {est} vs new {t_new}"
+        );
+        assert_eq!(rls.count(), 2000);
+    }
+
+    #[test]
+    fn line_rejects_bad_config_and_ignores_non_finite() {
+        let l = TtxLine { slope: 0.0, intercept: 0.0 };
+        assert!(RlsLine::new(l, 0.0, 1.0).is_err());
+        assert!(RlsLine::new(l, 1.5, 1.0).is_err());
+        assert!(RlsLine::new(l, 0.9, -1.0).is_err());
+        let mut rls = RlsLine::new(l, 0.99, 1.0).unwrap();
+        rls.observe(f64::NAN, 1.0);
+        rls.observe(1.0, f64::INFINITY);
+        assert_eq!(rls.count(), 0);
+        let j = rls.to_json();
+        assert!(j.get("slope").is_ok());
+        assert!(j.get("observations").is_ok());
     }
 
     #[test]

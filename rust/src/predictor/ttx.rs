@@ -9,6 +9,33 @@
 //! renders the timestamp mechanism ineffective on end-nodes (and why the
 //! gateway, which aggregates many end-nodes, works).
 
+/// Payload-size-aware transmission-time law: `T̂_tx = a·size + b`
+/// (size in tokens transferred — source out, translation back).
+///
+/// The plain EWMA ([`TtxEstimator`]) collapses every transfer to one
+/// scalar, so a burst of long offloads inflates the estimate short
+/// requests then pay. This line keeps the size dependence (bandwidth
+/// term `a`, latency floor `b`); the adaptive scheduler refits it
+/// online from observed transfers via [`crate::predictor::RlsLine`] —
+/// the same machinery that refits the T_exe planes — and installs it on
+/// the router ([`crate::coordinator::Router::set_ttx_line`]), replacing
+/// the EWMA once warmed up.
+#[derive(Debug, Clone, Copy)]
+pub struct TtxLine {
+    /// Seconds per transferred token (inverse bandwidth).
+    pub slope: f64,
+    /// Fixed per-transfer cost (propagation + protocol floor), seconds.
+    pub intercept: f64,
+}
+
+impl TtxLine {
+    /// Estimated transfer seconds for a payload of `size_tokens`
+    /// (clamped at 0 like every other latency estimate).
+    pub fn estimate(&self, size_tokens: f64) -> f64 {
+        (self.slope * size_tokens + self.intercept).max(0.0)
+    }
+}
+
 /// EWMA-based T_tx estimator.
 #[derive(Debug, Clone)]
 pub struct TtxEstimator {
@@ -122,5 +149,16 @@ mod tests {
         let mut e = TtxEstimator::new(1.0);
         e.observe(0.0, -5.0);
         assert_eq!(e.estimate_or(1.0), 0.0);
+    }
+
+    #[test]
+    fn line_is_affine_in_size_and_clamped() {
+        let l = TtxLine { slope: 1e-4, intercept: 0.03 };
+        assert!((l.estimate(0.0) - 0.03).abs() < 1e-15);
+        assert!((l.estimate(100.0) - 0.04).abs() < 1e-15);
+        // A (transiently mis-fit) negative line never yields a negative
+        // transfer time.
+        let bad = TtxLine { slope: -1.0, intercept: 0.01 };
+        assert_eq!(bad.estimate(10.0), 0.0);
     }
 }

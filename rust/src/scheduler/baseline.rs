@@ -1,0 +1,608 @@
+//! Frozen **pre-rewrite** dispatcher: the hash-churn implementation the
+//! zero-churn core replaced, kept as a living baseline.
+//!
+//! This is a faithful port of the dispatcher as it stood before the
+//! slab-arena rewrite: `VecDeque` admission queues, in-flight hedge
+//! races in an id-keyed `HashMap`, cancel tokens in a side `HashSet`,
+//! a fresh `Vec` allocated for every formed batch, and an O(workers)
+//! earliest-free scan on every event peek. It exists for two reasons:
+//!
+//! 1. **Differential oracle** — the rewrite must be a pure data-
+//!    structure change: `tests/proptest_invariants.rs` replays random
+//!    solo/hedged streams through both implementations and asserts the
+//!    completion sequences are identical (same ids, devices, kinds and
+//!    bit-equal times). Any future scheduler change that breaks
+//!    equivalence is either a deliberate semantic change (update this
+//!    file in lockstep) or a bug (fix it).
+//! 2. **Perf baseline** — `cnmt bench sched` drives the same stream
+//!    through both in one binary and reports
+//!    `speedup_vs_baseline`; CI gates on it, so the "pre-change
+//!    baseline measured in the same container" in `BENCH_sched.json`
+//!    is reproducible anywhere a toolchain exists.
+//!
+//! Do not "optimise" this module — its slowness is its purpose.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap, HashSet, VecDeque};
+
+use crate::devices::DeviceKind;
+
+use super::batch::{BatchPolicy, BatchStats};
+use super::dispatch::{BatchExecutor, Completion, CompletionKind, HedgeOutcome, HedgeStats};
+use super::queue::{Admission, QueuedRequest};
+
+/// Pre-rewrite bounded FIFO queue (`VecDeque` storage, live-depth
+/// admission bound with lazy-purge dead counting; the stats counters
+/// of the original are dropped — nothing here reads them).
+#[derive(Debug, Clone)]
+struct ChurnQueue {
+    items: VecDeque<QueuedRequest>,
+    max_depth: usize,
+    dead: usize,
+}
+
+impl ChurnQueue {
+    fn new(max_depth: usize) -> Self {
+        assert!(max_depth > 0, "ChurnQueue needs max_depth > 0");
+        ChurnQueue {
+            items: VecDeque::with_capacity(max_depth.min(1024)),
+            max_depth,
+            dead: 0,
+        }
+    }
+
+    fn live_depth(&self) -> usize {
+        self.items.len().saturating_sub(self.dead)
+    }
+
+    fn offer(&mut self, rq: QueuedRequest) -> Admission {
+        if self.live_depth() >= self.max_depth {
+            return Admission::Rejected;
+        }
+        self.items.push_back(rq);
+        Admission::Admitted { depth: self.live_depth() }
+    }
+}
+
+/// Pre-rewrite per-worker tracker (uncached earliest-free scan).
+#[derive(Debug, Clone)]
+struct ChurnTracker {
+    free_at_s: Vec<f64>,
+    backlog_est_s: f64,
+}
+
+impl ChurnTracker {
+    fn new(workers: usize) -> Self {
+        assert!(workers > 0);
+        ChurnTracker { free_at_s: vec![0.0; workers], backlog_est_s: 0.0 }
+    }
+
+    fn on_admit(&mut self, est_service_s: f64) {
+        self.backlog_est_s += est_service_s.max(0.0);
+    }
+
+    fn on_dispatch(&mut self, worker: usize, est_sum_s: f64, done_s: f64) {
+        self.backlog_est_s = (self.backlog_est_s - est_sum_s).max(0.0);
+        self.free_at_s[worker] = done_s;
+    }
+
+    fn on_cancel(&mut self, est_service_s: f64) {
+        self.backlog_est_s = (self.backlog_est_s - est_service_s.max(0.0)).max(0.0);
+    }
+
+    fn earliest_free(&self) -> (usize, f64) {
+        let mut best = (0usize, self.free_at_s[0]);
+        for (i, &t) in self.free_at_s.iter().enumerate().skip(1) {
+            if t < best.1 {
+                best = (i, t);
+            }
+        }
+        best
+    }
+
+    fn expected_wait_s(&self, now_s: f64) -> f64 {
+        let inflight: f64 = self.free_at_s.iter().map(|&t| (t - now_s).max(0.0)).sum();
+        (inflight + self.backlog_est_s) / self.free_at_s.len() as f64
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum CopyState {
+    Queued,
+    Running,
+    Done,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct HedgeEntry {
+    est: [f64; 2],
+    state: [CopyState; 2],
+    winner: Option<DeviceKind>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Pending {
+    done_s: f64,
+    seq: u64,
+    start_s: f64,
+    batch_size: usize,
+    device: DeviceKind,
+    request: QueuedRequest,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.done_s == other.done_s && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.done_s
+            .total_cmp(&other.done_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct Lane {
+    queue: ChurnQueue,
+    tracker: ChurnTracker,
+}
+
+impl Lane {
+    fn offer(&mut self, rq: QueuedRequest) -> Admission {
+        let admission = self.queue.offer(rq);
+        if admission.is_admitted() {
+            self.tracker.on_admit(rq.est_service_s);
+        }
+        admission
+    }
+}
+
+fn lane_idx(device: DeviceKind) -> usize {
+    match device {
+        DeviceKind::Edge => 0,
+        DeviceKind::Cloud => 1,
+    }
+}
+
+fn other(device: DeviceKind) -> DeviceKind {
+    match device {
+        DeviceKind::Edge => DeviceKind::Cloud,
+        DeviceKind::Cloud => DeviceKind::Edge,
+    }
+}
+
+/// The pre-rewrite two-lane dispatcher (see the module docs). Public
+/// API mirrors [`super::Dispatcher`] so benches and differential tests
+/// can drive either.
+#[derive(Debug, Clone)]
+pub struct BaselineDispatcher {
+    edge: Lane,
+    cloud: Lane,
+    policy: BatchPolicy,
+    stats: BatchStats,
+    pending: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+    hedges: HashMap<u64, HedgeEntry>,
+    cancelled: HashSet<u64>,
+    hedge_stats: HedgeStats,
+}
+
+impl BaselineDispatcher {
+    /// Build from the same sizing parameters as the real dispatcher.
+    pub fn new(cfg: &super::DispatcherConfig) -> Self {
+        BaselineDispatcher {
+            edge: Lane {
+                queue: ChurnQueue::new(cfg.max_queue_depth),
+                tracker: ChurnTracker::new(cfg.edge_workers),
+            },
+            cloud: Lane {
+                queue: ChurnQueue::new(cfg.max_queue_depth),
+                tracker: ChurnTracker::new(cfg.cloud_workers),
+            },
+            policy: cfg.batch,
+            stats: BatchStats::default(),
+            pending: BinaryHeap::new(),
+            seq: 0,
+            hedges: HashMap::new(),
+            cancelled: HashSet::new(),
+            hedge_stats: HedgeStats::default(),
+        }
+    }
+
+    fn lane_mut(&mut self, device: DeviceKind) -> &mut Lane {
+        match device {
+            DeviceKind::Edge => &mut self.edge,
+            DeviceKind::Cloud => &mut self.cloud,
+        }
+    }
+
+    /// Expected queueing delay on `device` at `now_s`.
+    pub fn expected_wait_s(&self, device: DeviceKind, now_s: f64) -> f64 {
+        match device {
+            DeviceKind::Edge => self.edge.tracker.expected_wait_s(now_s),
+            DeviceKind::Cloud => self.cloud.tracker.expected_wait_s(now_s),
+        }
+    }
+
+    /// Solo submission (bucket assigned here, as in the old code).
+    pub fn submit(&mut self, device: DeviceKind, mut rq: QueuedRequest) -> Admission {
+        rq.bucket = self.policy.bucket_of(rq.m_est);
+        rq.hedge = None;
+        self.lane_mut(device).offer(rq)
+    }
+
+    /// Hedged submission, id-keyed (the pre-rewrite bookkeeping).
+    pub fn submit_hedged(
+        &mut self,
+        mut rq: QueuedRequest,
+        edge_est_s: f64,
+        cloud_est_s: f64,
+    ) -> HedgeOutcome {
+        rq.bucket = self.policy.bucket_of(rq.m_est);
+        rq.hedge = None;
+        let mut edge_rq = rq;
+        edge_rq.est_service_s = edge_est_s;
+        let mut cloud_rq = rq;
+        cloud_rq.est_service_s = cloud_est_s;
+        let edge_ok = self.edge.offer(edge_rq).is_admitted();
+        let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
+        match (edge_ok, cloud_ok) {
+            (true, true) => {
+                self.hedge_stats.hedged += 1;
+                self.hedges.insert(
+                    rq.id,
+                    HedgeEntry {
+                        est: [edge_est_s, cloud_est_s],
+                        state: [CopyState::Queued, CopyState::Queued],
+                        winner: None,
+                    },
+                );
+                HedgeOutcome::Hedged
+            }
+            (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
+            (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
+            (false, false) => HedgeOutcome::Rejected,
+        }
+    }
+
+    /// Batch-size accounting.
+    pub fn batch_stats(&self) -> BatchStats {
+        self.stats
+    }
+
+    /// Hedge outcome counters.
+    pub fn hedge_stats(&self) -> HedgeStats {
+        self.hedge_stats
+    }
+
+    /// No queued work and no in-flight batches?
+    pub fn idle(&self) -> bool {
+        self.edge.queue.items.is_empty()
+            && self.cloud.queue.items.is_empty()
+            && self.pending.is_empty()
+    }
+
+    fn lane_next_start(&mut self, device: DeviceKind) -> Option<f64> {
+        loop {
+            let lane = match device {
+                DeviceKind::Edge => &self.edge,
+                DeviceKind::Cloud => &self.cloud,
+            };
+            let (head_id, head_arrival) = match lane.queue.items.front() {
+                None => return None,
+                Some(h) => (h.id, h.arrival_s),
+            };
+            if self.cancelled.contains(&head_id) {
+                let lane = self.lane_mut(device);
+                lane.queue.items.pop_front();
+                lane.queue.dead = lane.queue.dead.saturating_sub(1);
+                self.cancelled.remove(&head_id);
+                continue;
+            }
+            let (_worker, free_s) = lane.tracker.earliest_free();
+            return Some(free_s.max(head_arrival));
+        }
+    }
+
+    fn next_batch_start(&mut self) -> Option<(DeviceKind, f64)> {
+        let e = self.lane_next_start(DeviceKind::Edge);
+        let c = self.lane_next_start(DeviceKind::Cloud);
+        match (e, c) {
+            (None, None) => None,
+            (Some(s), None) => Some((DeviceKind::Edge, s)),
+            (None, Some(s)) => Some((DeviceKind::Cloud, s)),
+            (Some(se), Some(sc)) => {
+                if se <= sc {
+                    Some((DeviceKind::Edge, se))
+                } else {
+                    Some((DeviceKind::Cloud, sc))
+                }
+            }
+        }
+    }
+
+    /// Old-style batch formation: fresh `Vec` per batch, cancel tokens
+    /// consulted through the side set.
+    fn form_batch(&mut self, device: DeviceKind, start_s: f64) -> Vec<QueuedRequest> {
+        let (queue, cancelled, policy) = match device {
+            DeviceKind::Edge => (&mut self.edge.queue, &mut self.cancelled, &self.policy),
+            DeviceKind::Cloud => (&mut self.cloud.queue, &mut self.cancelled, &self.policy),
+        };
+        loop {
+            let head_id = match queue.items.front() {
+                None => return Vec::new(),
+                Some(h) => h.id,
+            };
+            if cancelled.contains(&head_id) {
+                queue.items.pop_front();
+                queue.dead = queue.dead.saturating_sub(1);
+                cancelled.remove(&head_id);
+            } else {
+                break;
+            }
+        }
+        let head = queue.items.pop_front().expect("peeked head exists");
+        let bucket = head.bucket;
+        let mut batch = Vec::with_capacity(policy.max_batch.min(8));
+        batch.push(head);
+        let mut i = 0usize;
+        let mut scanned = 0usize;
+        while batch.len() < policy.max_batch && scanned < policy.lookahead {
+            let (id, rq_bucket, arrival_s) = match queue.items.get(i) {
+                None => break,
+                Some(rq) => (rq.id, rq.bucket, rq.arrival_s),
+            };
+            if cancelled.contains(&id) {
+                queue.items.remove(i);
+                queue.dead = queue.dead.saturating_sub(1);
+                cancelled.remove(&id);
+                continue;
+            }
+            if rq_bucket == bucket && arrival_s <= start_s {
+                let rq = queue.items.remove(i).expect("indexed element exists");
+                batch.push(rq);
+            } else {
+                i += 1;
+            }
+            scanned += 1;
+        }
+        batch
+    }
+
+    fn dispatch_at<E>(&mut self, device: DeviceKind, start_s: f64, exec: &mut E)
+    where
+        E: BatchExecutor,
+    {
+        let batch = self.form_batch(device, start_s);
+        if batch.is_empty() {
+            return;
+        }
+        let di = lane_idx(device);
+        for rq in &batch {
+            if let Some(entry) = self.hedges.get_mut(&rq.id) {
+                entry.state[di] = CopyState::Running;
+            }
+        }
+        let est_sum: f64 = batch.iter().map(|r| r.est_service_s).sum();
+        let service_s = exec.execute(device, &batch, start_s).max(0.0);
+        let done_s = start_s + service_s;
+        {
+            let lane = self.lane_mut(device);
+            let (worker, _free) = lane.tracker.earliest_free();
+            lane.tracker.on_dispatch(worker, est_sum, done_s);
+        }
+        self.stats.record(batch.len());
+        let batch_size = batch.len();
+        for request in batch {
+            let seq = self.seq;
+            self.seq += 1;
+            self.pending.push(Reverse(Pending {
+                done_s,
+                seq,
+                start_s,
+                batch_size,
+                device,
+                request,
+            }));
+        }
+    }
+
+    fn resolve_completion(&mut self, device: DeviceKind, id: u64) -> CompletionKind {
+        let (kind, cancel_twin) = {
+            let entry = match self.hedges.get_mut(&id) {
+                None => return CompletionKind::Solo,
+                Some(e) => e,
+            };
+            let di = lane_idx(device);
+            entry.state[di] = CopyState::Done;
+            if entry.winner.is_some() {
+                (CompletionKind::HedgeLoss, None)
+            } else {
+                entry.winner = Some(device);
+                let ti = lane_idx(other(device));
+                match entry.state[ti] {
+                    CopyState::Queued => {
+                        (CompletionKind::HedgeWin, Some((other(device), entry.est[ti])))
+                    }
+                    _ => (CompletionKind::HedgeWin, None),
+                }
+            }
+        };
+        match kind {
+            CompletionKind::HedgeLoss => {
+                self.hedges.remove(&id);
+                self.hedge_stats.losers_run += 1;
+            }
+            CompletionKind::HedgeWin => {
+                match device {
+                    DeviceKind::Edge => self.hedge_stats.wins_edge += 1,
+                    DeviceKind::Cloud => self.hedge_stats.wins_cloud += 1,
+                }
+                if let Some((twin, est)) = cancel_twin {
+                    self.cancelled.insert(id);
+                    self.hedge_stats.cancelled_unrun += 1;
+                    let lane = self.lane_mut(twin);
+                    lane.tracker.on_cancel(est);
+                    lane.queue.dead += 1;
+                    self.hedges.remove(&id);
+                }
+            }
+            CompletionKind::Solo => {}
+        }
+        kind
+    }
+
+    fn flush_one<F>(&mut self, on_complete: &mut F)
+    where
+        F: FnMut(Completion),
+    {
+        let Reverse(p) = self.pending.pop().expect("pending completion exists");
+        let kind = self.resolve_completion(p.device, p.request.id);
+        on_complete(Completion {
+            request: p.request,
+            device: p.device,
+            start_s: p.start_s,
+            done_s: p.done_s,
+            batch_size: p.batch_size,
+            kind,
+        });
+    }
+
+    /// Process the earliest event at or before `horizon_s` (completions
+    /// first on ties).
+    pub fn step<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F) -> bool
+    where
+        E: BatchExecutor,
+        F: FnMut(Completion),
+    {
+        let next_start = self.next_batch_start();
+        let next_done = self.pending.peek().map(|p| p.0.done_s);
+        let completion_first = match (next_start, next_done) {
+            (None, None) => return false,
+            (None, Some(_)) => true,
+            (Some(_), None) => false,
+            (Some((_d, s)), Some(t)) => t <= s,
+        };
+        if completion_first {
+            let done_s = next_done.expect("peeked completion exists");
+            if done_s > horizon_s {
+                return false;
+            }
+            self.flush_one(on_complete);
+        } else {
+            let (device, start_s) = next_start.expect("peeked start exists");
+            if start_s > horizon_s {
+                return false;
+            }
+            self.dispatch_at(device, start_s, exec);
+        }
+        true
+    }
+
+    /// Process every event up to and including `horizon_s`.
+    pub fn run_until<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F)
+    where
+        E: BatchExecutor,
+        F: FnMut(Completion),
+    {
+        while self.step(horizon_s, exec, on_complete) {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Dispatcher, DispatcherConfig};
+    use super::*;
+
+    struct AsymExec {
+        edge_s: f64,
+        cloud_s: f64,
+    }
+
+    impl BatchExecutor for AsymExec {
+        fn execute(&mut self, d: DeviceKind, _b: &[QueuedRequest], _s: f64) -> f64 {
+            match d {
+                DeviceKind::Edge => self.edge_s,
+                DeviceKind::Cloud => self.cloud_s,
+            }
+        }
+    }
+
+    fn rq(id: u64, arrival_s: f64, m_est: f64) -> QueuedRequest {
+        QueuedRequest {
+            id,
+            payload: id as usize,
+            n: 10,
+            m_est,
+            est_service_s: 0.1,
+            arrival_s,
+            bucket: 0,
+            hedge: None,
+        }
+    }
+
+    #[test]
+    fn baseline_matches_dense_on_a_mixed_stream() {
+        // A compact deterministic differential check (the heavy random
+        // version lives in tests/proptest_invariants.rs): same stream,
+        // same completions, bit-equal times.
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            max_queue_depth: 8,
+            ..Default::default()
+        };
+        let mut a = BaselineDispatcher::new(&cfg);
+        let mut b = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 0.03, cloud_s: 0.011 };
+        let mut ca = Vec::new();
+        let mut cb = Vec::new();
+        for i in 0..200u64 {
+            let t = i as f64 * 0.004;
+            a.run_until(t, &mut exec, &mut |c| ca.push(c));
+            b.run_until(t, &mut exec, &mut |c| cb.push(c));
+            let r = rq(i, t, (i % 48) as f64);
+            if i % 4 == 0 {
+                assert_eq!(
+                    a.submit_hedged(r, 0.03, 0.011),
+                    b.submit_hedged(r, 0.03, 0.011)
+                );
+            } else {
+                let d = if i % 2 == 0 { DeviceKind::Edge } else { DeviceKind::Cloud };
+                assert_eq!(
+                    a.submit(d, r).is_admitted(),
+                    b.submit(d, r).is_admitted()
+                );
+            }
+        }
+        a.run_until(f64::INFINITY, &mut exec, &mut |c| ca.push(c));
+        b.run_until(f64::INFINITY, &mut exec, &mut |c| cb.push(c));
+        assert_eq!(ca.len(), cb.len());
+        for (x, y) in ca.iter().zip(&cb) {
+            assert_eq!(x.request.id, y.request.id);
+            assert_eq!(x.device, y.device);
+            assert_eq!(x.kind, y.kind);
+            assert_eq!(x.done_s.to_bits(), y.done_s.to_bits());
+            assert_eq!(x.start_s.to_bits(), y.start_s.to_bits());
+            assert_eq!(x.batch_size, y.batch_size);
+        }
+        let (ha, hb) = (a.hedge_stats(), b.hedge_stats());
+        assert_eq!(ha.hedged, hb.hedged);
+        assert_eq!(ha.wins_edge, hb.wins_edge);
+        assert_eq!(ha.wins_cloud, hb.wins_cloud);
+        assert_eq!(ha.cancelled_unrun, hb.cancelled_unrun);
+        assert_eq!(ha.losers_run, hb.losers_run);
+        assert!(a.idle() && b.idle());
+    }
+}

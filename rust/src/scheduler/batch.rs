@@ -24,8 +24,13 @@
 //! members, so batch formation is O(lookahead·max_batch) — constant per
 //! batch, amortised O(1) per request — and head-of-line order is
 //! preserved for everything it skips.
-
-use std::collections::HashSet;
+//!
+//! Formation writes into a caller-owned scratch buffer
+//! ([`form_batch_into`](BatchPolicy::form_batch_into)) that the
+//! dispatcher reuses across batches, and cancelled hedge twins are
+//! identified by a caller-supplied predicate over the queued record
+//! itself (a generation-checked slab lookup in the dispatcher) — the
+//! hot path allocates nothing and hashes nothing.
 
 use super::queue::{AdmissionQueue, QueuedRequest};
 
@@ -61,58 +66,71 @@ impl BatchPolicy {
     /// Pop the head request plus up to `max_batch - 1` same-bucket
     /// companions that arrived by `start_s`, scanning at most
     /// `lookahead` positions. Returns an empty vec on an empty queue.
+    /// Allocating convenience wrapper over
+    /// [`form_batch_into`](BatchPolicy::form_batch_into) for tests and
+    /// one-off callers; the dispatcher uses the scratch-buffer form.
     pub fn form_batch(
         &self,
         queue: &mut AdmissionQueue,
         start_s: f64,
     ) -> Vec<QueuedRequest> {
-        let mut no_cancels = HashSet::new();
-        self.form_batch_filtered(queue, start_s, &mut no_cancels)
+        let mut batch = Vec::new();
+        self.form_batch_into(queue, start_s, &mut batch, |_rq| false);
+        batch
     }
 
-    /// [`form_batch`](BatchPolicy::form_batch) with cancel tokens: any
-    /// queued request whose id is in `cancelled` is purged (removed from
-    /// the queue and from the set, never executed) instead of being
-    /// batched. Purged entries consume no lookahead budget — they are
-    /// deletions, not candidates. Used by the dispatcher to drop the
-    /// losing twin of a hedged request ([`crate::scheduler::Dispatcher::submit_hedged`]).
-    pub fn form_batch_filtered(
+    /// Form one batch into `batch` (cleared first; its capacity is
+    /// reused across calls so steady-state formation is allocation-free).
+    ///
+    /// `purge` is the cancel-token predicate: it is consulted for the
+    /// head and for every scanned entry, and when it returns `true` the
+    /// entry is a cancelled hedge twin — it is removed from the queue
+    /// (releasing its dead-slot marker), never executed, and consumes no
+    /// lookahead budget (purges are deletions, not candidates). The
+    /// callback owns any bookkeeping on its side (the dispatcher frees
+    /// the twin's slab entry inside it). Used to drop the losing twin of
+    /// a hedged request ([`crate::scheduler::Dispatcher::submit_hedged`]).
+    pub fn form_batch_into<F>(
         &self,
         queue: &mut AdmissionQueue,
         start_s: f64,
-        cancelled: &mut HashSet<u64>,
-    ) -> Vec<QueuedRequest> {
-        // Purge cancelled heads first so the batch head is live.
+        batch: &mut Vec<QueuedRequest>,
+        mut purge: F,
+    ) where
+        F: FnMut(&QueuedRequest) -> bool,
+    {
+        batch.clear();
+        // Purge cancelled heads first so the batch head is live. The
+        // head is copied out (`QueuedRequest: Copy`) so the purge
+        // callback can borrow the dispatcher's arena while we mutate
+        // the queue.
         loop {
-            let head_id = match queue.peek() {
-                None => return Vec::new(),
-                Some(h) => h.id,
+            let head = match queue.peek() {
+                None => return,
+                Some(h) => *h,
             };
-            if cancelled.contains(&head_id) {
+            if purge(&head) {
                 queue.pop();
                 queue.unmark_dead();
-                cancelled.remove(&head_id);
             } else {
                 break;
             }
         }
         let head = queue.pop().expect("peeked head exists");
         let bucket = head.bucket;
-        let mut batch = Vec::with_capacity(self.max_batch.min(8));
         batch.push(head);
         let mut i = 0usize;
         let mut scanned = 0usize;
         while batch.len() < self.max_batch && scanned < self.lookahead {
-            let (id, rq_bucket, arrival_s) = match queue.get(i) {
+            let (candidate, rq_bucket, arrival_s) = match queue.get(i) {
                 None => break,
-                Some(rq) => (rq.id, rq.bucket, rq.arrival_s),
+                Some(rq) => (purge(rq), rq.bucket, rq.arrival_s),
             };
-            if cancelled.contains(&id) {
+            if candidate {
                 // Removal shifts the tail left; `i` now points at the
                 // next candidate already.
                 queue.remove(i);
                 queue.unmark_dead();
-                cancelled.remove(&id);
                 continue;
             }
             if rq_bucket == bucket && arrival_s <= start_s {
@@ -123,7 +141,6 @@ impl BatchPolicy {
             }
             scanned += 1;
         }
-        batch
     }
 }
 
@@ -156,6 +173,7 @@ impl BatchStats {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashSet;
 
     fn rq(id: u64, bucket: usize, arrival_s: f64) -> QueuedRequest {
         QueuedRequest {
@@ -166,6 +184,7 @@ mod tests {
             est_service_s: 0.05,
             arrival_s,
             bucket,
+            hedge: None,
         }
     }
 
@@ -240,20 +259,41 @@ mod tests {
     }
 
     #[test]
-    fn filtered_formation_purges_cancelled_entries() {
+    fn scratch_buffer_is_cleared_and_reused() {
+        let p = BatchPolicy { bucket_width: 8.0, max_batch: 4, lookahead: 32 };
+        let mut q = AdmissionQueue::new(16);
+        let mut batch = vec![rq(99, 0, 0.0)]; // stale content from a prior batch
+        q.offer(rq(0, 0, 0.0));
+        q.offer(rq(1, 0, 0.0));
+        p.form_batch_into(&mut q, 1.0, &mut batch, |_rq| false);
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 1], "stale scratch content leaked into the batch");
+        let cap = batch.capacity();
+        p.form_batch_into(&mut q, 1.0, &mut batch, |_rq| false);
+        assert!(batch.is_empty());
+        assert_eq!(batch.capacity(), cap, "empty formation shrank the scratch");
+    }
+
+    #[test]
+    fn purged_entries_skip_execution_and_lookahead_budget() {
         let p = BatchPolicy { bucket_width: 8.0, max_batch: 4, lookahead: 32 };
         let mut q = AdmissionQueue::new(16);
         for id in 0..5 {
             q.offer(rq(id, 0, 0.0));
         }
-        // Cancel the head and one mid-queue entry.
+        // Cancel the head and one mid-queue entry; the predicate drains
+        // its token set exactly once per purged entry.
         let mut cancelled: HashSet<u64> = [0u64, 2u64].into_iter().collect();
-        let b = p.form_batch_filtered(&mut q, 1.0, &mut cancelled);
-        let ids: Vec<u64> = b.iter().map(|r| r.id).collect();
+        q.mark_dead();
+        q.mark_dead();
+        let mut batch = Vec::new();
+        p.form_batch_into(&mut q, 1.0, &mut batch, |rq| cancelled.remove(&rq.id));
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         // 0 and 2 purged, never executed; 1 heads the batch.
         assert_eq!(ids, vec![1, 3, 4]);
-        assert!(cancelled.is_empty(), "purged ids must leave the set");
+        assert!(cancelled.is_empty(), "purged ids must be consumed exactly once");
         assert!(q.is_empty());
+        assert_eq!(q.live_depth(), 0, "dead markers released on purge");
     }
 
     #[test]
@@ -261,8 +301,11 @@ mod tests {
         let p = BatchPolicy::default();
         let mut q = AdmissionQueue::new(4);
         q.offer(rq(7, 0, 0.0));
+        q.mark_dead();
         let mut cancelled: HashSet<u64> = [7u64].into_iter().collect();
-        assert!(p.form_batch_filtered(&mut q, 1.0, &mut cancelled).is_empty());
+        let mut batch = vec![rq(99, 0, 0.0)];
+        p.form_batch_into(&mut q, 1.0, &mut batch, |rq| cancelled.remove(&rq.id));
+        assert!(batch.is_empty());
         assert!(q.is_empty());
         assert!(cancelled.is_empty());
     }

@@ -14,15 +14,22 @@
 //!
 //! The backlog sum is maintained incrementally (add on admit, subtract
 //! on dispatch), so the estimate is O(workers) — constant for a fixed
-//! pool — not O(queue depth). It deliberately ignores batching
-//! amortisation, making it a mildly conservative (over-)estimate of the
-//! true wait; see `scheduler::batch` for why that bias is benign.
+//! pool — not O(queue depth), and the earliest-free worker is cached
+//! (recomputed once per dispatch, the only operation that changes it)
+//! so the event loop's frequent next-start peeks are O(1). It
+//! deliberately ignores batching amortisation, making it a mildly
+//! conservative (over-)estimate of the true wait; see `scheduler::batch`
+//! for why that bias is benign.
 
 /// In-flight + backlog tracker for one device's worker pool.
 #[derive(Debug, Clone)]
 pub struct CapacityTracker {
     /// Per-worker busy-until time on the scheduler clock (seconds).
     free_at_s: Vec<f64>,
+    /// Index of the worker that frees first (first index among ties);
+    /// only [`on_dispatch`](CapacityTracker::on_dispatch) changes
+    /// `free_at_s`, so the cache is refreshed there and nowhere else.
+    earliest: usize,
     /// Sum of estimated service times of admitted-but-undispatched
     /// requests (seconds).
     backlog_est_s: f64,
@@ -36,6 +43,7 @@ impl CapacityTracker {
         assert!(workers > 0, "CapacityTracker needs workers > 0");
         CapacityTracker {
             free_at_s: vec![0.0; workers],
+            earliest: 0,
             backlog_est_s: 0.0,
             dispatches: 0,
         }
@@ -47,6 +55,7 @@ impl CapacityTracker {
     }
 
     /// A request with service estimate `est_service_s` entered the queue.
+    #[inline]
     pub fn on_admit(&mut self, est_service_s: f64) {
         self.backlog_est_s += est_service_s.max(0.0);
     }
@@ -57,30 +66,37 @@ impl CapacityTracker {
         self.backlog_est_s = (self.backlog_est_s - est_sum_s).max(0.0);
         self.free_at_s[worker] = done_s;
         self.dispatches += 1;
-    }
-
-    /// A queued request with service estimate `est_service_s` was
-    /// cancelled before dispatch (a hedge twin lost the race): reclaim
-    /// its share of the backlog so the expected-wait estimate stops
-    /// charging work that will never run.
-    pub fn on_cancel(&mut self, est_service_s: f64) {
-        self.backlog_est_s = (self.backlog_est_s - est_service_s.max(0.0)).max(0.0);
-    }
-
-    /// Index and free-time of the worker that frees up first.
-    pub fn earliest_free(&self) -> (usize, f64) {
+        // Refresh the earliest-free cache (O(workers), once per batch —
+        // amortised across every O(1) peek the event loop makes).
         let mut best = (0usize, self.free_at_s[0]);
         for (i, &t) in self.free_at_s.iter().enumerate().skip(1) {
             if t < best.1 {
                 best = (i, t);
             }
         }
-        best
+        self.earliest = best.0;
+    }
+
+    /// A queued request with service estimate `est_service_s` was
+    /// cancelled before dispatch (a hedge twin lost the race): reclaim
+    /// its share of the backlog so the expected-wait estimate stops
+    /// charging work that will never run.
+    #[inline]
+    pub fn on_cancel(&mut self, est_service_s: f64) {
+        self.backlog_est_s = (self.backlog_est_s - est_service_s.max(0.0)).max(0.0);
+    }
+
+    /// Index and free-time of the worker that frees up first (cached:
+    /// O(1)).
+    #[inline]
+    pub fn earliest_free(&self) -> (usize, f64) {
+        (self.earliest, self.free_at_s[self.earliest])
     }
 
     /// Expected queueing delay for a request arriving at `now_s`:
     /// residual in-flight work plus the estimated backlog, spread over
     /// the pool.
+    #[inline]
     pub fn expected_wait_s(&self, now_s: f64) -> f64 {
         let inflight: f64 = self
             .free_at_s
@@ -116,6 +132,7 @@ mod tests {
         assert_eq!(t.expected_wait_s(0.0), 0.0);
         assert!(t.all_idle(0.0));
         assert_eq!(t.workers(), 4);
+        assert_eq!(t.earliest_free(), (0, 0.0));
     }
 
     #[test]
@@ -157,6 +174,37 @@ mod tests {
         assert_eq!(t.dispatches(), 3);
         assert!(!t.all_idle(4.0));
         assert!(t.all_idle(9.0));
+    }
+
+    #[test]
+    fn earliest_free_cache_tracks_every_dispatch() {
+        // The cached index must always agree with a shadow scan of the
+        // same dispatch pattern (first index wins ties).
+        let mut t = CapacityTracker::new(4);
+        let mut shadow = vec![0.0f64; 4];
+        let pattern = [
+            (2usize, 7.0f64),
+            (0, 3.0),
+            (1, 3.0),
+            (3, 1.0),
+            (3, 8.0),
+            (0, 2.0),
+            (2, 2.0),
+        ];
+        for &(worker, done_s) in &pattern {
+            t.on_dispatch(worker, 0.0, done_s);
+            shadow[worker] = done_s;
+            let mut best = (0usize, shadow[0]);
+            for (i, &free_s) in shadow.iter().enumerate().skip(1) {
+                if free_s < best.1 {
+                    best = (i, free_s);
+                }
+            }
+            assert_eq!(t.earliest_free(), best);
+        }
+        // Final state by construction: free times are
+        // [2.0, 3.0, 2.0, 8.0] → worker 0 (first of the 2.0 tie).
+        assert_eq!(t.earliest_free(), (0, 2.0));
     }
 
     #[test]

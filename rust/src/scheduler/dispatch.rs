@@ -25,25 +25,41 @@
 //! inside its error bar, committing to either side is a coin flip;
 //! [`submit_hedged`] instead enqueues a copy on *both* lanes under one
 //! request id. The first copy to **finish** is the request's result
-//! ([`CompletionKind::HedgeWin`]); the twin is cancelled via a cancel
-//! token. A twin still queued is purged without running and its backlog
-//! share reclaimed ([`CapacityTracker::on_cancel`]); a twin already
-//! executing runs to completion as wasted work
-//! ([`CompletionKind::HedgeLoss`]). [`HedgeStats`] counts every outcome.
+//! ([`CompletionKind::HedgeWin`]); the twin is cancelled. A twin still
+//! queued is purged without running and its backlog share reclaimed
+//! ([`CapacityTracker::on_cancel`]); a twin already executing runs to
+//! completion as wasted work ([`CompletionKind::HedgeLoss`]).
+//! [`HedgeStats`] counts every outcome.
+//!
+//! ## Zero-churn hot path
+//!
+//! In-flight hedge races live in a generational slab arena
+//! ([`crate::util::Slab`]); each queued copy carries its race's
+//! [`crate::util::SlabKey`], so completion classification and
+//! cancellation are direct, generation-checked array accesses — the old
+//! id-keyed `HashMap`/`HashSet` pair (one to three hashes per
+//! completion, heap churn under load) is gone, and a cancelled twin is
+//! marked *in* its race entry rather than in a side set. Batches form
+//! into a scratch buffer reused across dispatches, the admission queues
+//! sit on ring buffers, and the pending-completion min-heap stores
+//! `Copy` records — once warmed to its peak population the whole
+//! dispatch path performs **zero heap allocations**, asserted by the
+//! counting-allocator test in `tests/alloc_steady_state.rs`.
 //!
 //! The per-request hot path (`expected_wait_s` → route → [`submit`]) is
 //! O(1) for a fixed worker pool: no allocation, no queue scans.
 //! Dispatch itself ([`run_until`]) is amortised O(log inflight) per
-//! request (heap push/pop); cancel tokens are O(1) hash lookups.
+//! request (heap push/pop); cancellation is O(1).
 //!
 //! [`submit`]: Dispatcher::submit
 //! [`submit_hedged`]: Dispatcher::submit_hedged
 //! [`run_until`]: Dispatcher::run_until
 
 use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap, HashSet};
+use std::collections::BinaryHeap;
 
 use crate::devices::DeviceKind;
+use crate::util::{Slab, SlabKey};
 
 use super::batch::{BatchPolicy, BatchStats};
 use super::capacity::CapacityTracker;
@@ -160,9 +176,14 @@ enum CopyState {
     Queued,
     Running,
     Done,
+    /// Cancelled while still queued (its twin won): a ghost awaiting
+    /// lazy purge. Marked here, in the race entry itself — there is no
+    /// side table of cancel tokens to hash into.
+    Cancelled,
 }
 
-/// Dispatcher-side state of one in-flight hedged request.
+/// Dispatcher-side state of one in-flight hedge race (a slab entry;
+/// both queued copies carry its key).
 #[derive(Debug, Clone, Copy)]
 struct HedgeEntry {
     /// Per-lane service estimate (`[edge, cloud]`) — needed to reclaim
@@ -246,6 +267,18 @@ fn other(device: DeviceKind) -> DeviceKind {
     }
 }
 
+/// Is `rq` a cancelled hedge ghost on lane `li`? (Generation-checked
+/// arena lookup; false for solo requests and live copies.)
+fn is_ghost(hedges: &Slab<HedgeEntry>, rq: &QueuedRequest, li: usize) -> bool {
+    match rq.hedge {
+        Some(key) => matches!(
+            hedges.get(key),
+            Some(entry) if entry.state[li] == CopyState::Cancelled
+        ),
+        None => false,
+    }
+}
+
 /// The two-lane edge/cloud dispatcher.
 #[derive(Debug, Clone)]
 pub struct Dispatcher {
@@ -254,13 +287,14 @@ pub struct Dispatcher {
     policy: BatchPolicy,
     stats: BatchStats,
     /// Dispatched copies whose finish events have not fired yet
-    /// (min-heap on finish time).
+    /// (min-heap on finish time; `Copy` entries, capacity reused).
     pending: BinaryHeap<Reverse<Pending>>,
     seq: u64,
-    /// In-flight hedged requests, keyed by request id.
-    hedges: HashMap<u64, HedgeEntry>,
-    /// Cancel tokens: ids whose queued copy must be purged, not run.
-    cancelled: HashSet<u64>,
+    /// In-flight hedge races (slab arena; keys live in the queued
+    /// copies, so no per-completion hashing).
+    hedges: Slab<HedgeEntry>,
+    /// Scratch buffer batches form into (reused across dispatches).
+    scratch: Vec<QueuedRequest>,
     hedge_stats: HedgeStats,
 }
 
@@ -272,10 +306,10 @@ impl Dispatcher {
             cloud: Lane::new(cfg.cloud_workers, cfg.max_queue_depth),
             policy: cfg.batch,
             stats: BatchStats::default(),
-            pending: BinaryHeap::new(),
+            pending: BinaryHeap::with_capacity(64),
             seq: 0,
-            hedges: HashMap::new(),
-            cancelled: HashSet::new(),
+            hedges: Slab::with_capacity(16),
+            scratch: Vec::with_capacity(cfg.batch.max_batch.max(1)),
             hedge_stats: HedgeStats::default(),
         }
     }
@@ -296,15 +330,19 @@ impl Dispatcher {
 
     /// Expected queueing delay on `device` for a request arriving now —
     /// the router adds this to each side of eq. 1.
+    #[inline]
     pub fn expected_wait_s(&self, device: DeviceKind, now_s: f64) -> f64 {
         let lane = self.lane(device);
         lane.tracker.expected_wait_s(now_s)
     }
 
-    /// Admit a request to `device`'s queue (O(1)). The request's bucket
-    /// is assigned here so queue and batcher always agree on it.
+    /// Admit a request to `device`'s queue (O(1), allocation-free once
+    /// warmed). The request's bucket is assigned here so queue and
+    /// batcher always agree on it; the hedge key is dispatcher-owned
+    /// and cleared for solo submissions.
     pub fn submit(&mut self, device: DeviceKind, mut rq: QueuedRequest) -> Admission {
         rq.bucket = self.policy.bucket_of(rq.m_est);
+        rq.hedge = None;
         self.lane_mut(device).offer(rq)
     }
 
@@ -321,6 +359,42 @@ impl Dispatcher {
         cloud_est_s: f64,
     ) -> HedgeOutcome {
         rq.bucket = self.policy.bucket_of(rq.m_est);
+        rq.hedge = None;
+        // Room is checked up front so the race entry is allocated only
+        // when both copies are expected to be admitted (`offer` applies
+        // the same live-depth predicate today).
+        if self.edge.queue.has_room() && self.cloud.queue.has_room() {
+            let key = self.hedges.insert(HedgeEntry {
+                est: [edge_est_s, cloud_est_s],
+                state: [CopyState::Queued, CopyState::Queued],
+                winner: None,
+            });
+            rq.hedge = Some(key);
+            let mut edge_rq = rq;
+            edge_rq.est_service_s = edge_est_s;
+            let mut cloud_rq = rq;
+            cloud_rq.est_service_s = cloud_est_s;
+            let edge_ok = self.edge.offer(edge_rq).is_admitted();
+            let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
+            if edge_ok && cloud_ok {
+                self.hedge_stats.hedged += 1;
+                return HedgeOutcome::Hedged;
+            }
+            // Defensive unwind: unreachable today, but if `offer` ever
+            // grows a shed condition `has_room` doesn't know about, the
+            // race must not half-exist. Freeing the entry makes any
+            // admitted copy's key stale, and a stale key is inert — the
+            // generation check classifies its completion as Solo and it
+            // can never be mistaken for a ghost.
+            self.hedges.remove(key);
+            return match (edge_ok, cloud_ok) {
+                (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
+                (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
+                _ => HedgeOutcome::Rejected,
+            };
+        }
+        // Degraded path: offer both copies anyway (the full lane counts
+        // the rejection, exactly as a solo offer would).
         let mut edge_rq = rq;
         edge_rq.est_service_s = edge_est_s;
         let mut cloud_rq = rq;
@@ -328,21 +402,15 @@ impl Dispatcher {
         let edge_ok = self.edge.offer(edge_rq).is_admitted();
         let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
         match (edge_ok, cloud_ok) {
-            (true, true) => {
-                self.hedge_stats.hedged += 1;
-                self.hedges.insert(
-                    rq.id,
-                    HedgeEntry {
-                        est: [edge_est_s, cloud_est_s],
-                        state: [CopyState::Queued, CopyState::Queued],
-                        winner: None,
-                    },
-                );
-                HedgeOutcome::Hedged
-            }
             (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
             (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
             (false, false) => HedgeOutcome::Rejected,
+            // `offer` rejects whenever `has_room` is false (it is the
+            // same predicate), so both lanes admitting after at least
+            // one reported no room is an internal-invariant breach —
+            // two unkeyed copies of one request would double-count.
+            // Fail loudly rather than corrupt the accounting.
+            (true, true) => unreachable!("offer admitted where has_room denied"),
         }
     }
 
@@ -365,6 +433,13 @@ impl Dispatcher {
     /// Hedged-dispatch outcome counters.
     pub fn hedge_stats(&self) -> HedgeStats {
         self.hedge_stats
+    }
+
+    /// Hedge races whose bookkeeping is still open (both copies pending,
+    /// a loser still running, or a cancelled ghost awaiting purge).
+    /// Zero once the dispatcher is drained — the arena leaks nothing.
+    pub fn hedges_in_flight(&self) -> usize {
+        self.hedges.len()
     }
 
     /// No queued work and no in-flight batches?
@@ -408,21 +483,26 @@ impl Dispatcher {
     /// Start time of `device`'s next batch (max of head arrival and the
     /// earliest-free worker), purging cancelled heads on the way.
     fn lane_next_start(&mut self, device: DeviceKind) -> Option<f64> {
+        let li = lane_idx(device);
+        let (lane, hedges) = match device {
+            DeviceKind::Edge => (&mut self.edge, &mut self.hedges),
+            DeviceKind::Cloud => (&mut self.cloud, &mut self.hedges),
+        };
         loop {
-            let lane = self.lane(device);
-            let (head_id, head_arrival) = match lane.queue.peek() {
+            let head = match lane.queue.peek() {
                 None => return None,
-                Some(h) => (h.id, h.arrival_s),
+                Some(h) => *h,
             };
-            if self.cancelled.contains(&head_id) {
-                let queue = &mut self.lane_mut(device).queue;
-                queue.pop();
-                queue.unmark_dead();
-                self.cancelled.remove(&head_id);
+            if is_ghost(hedges, &head, li) {
+                lane.queue.pop();
+                lane.queue.unmark_dead();
+                // The race is fully resolved once its ghost is gone:
+                // free the arena entry (slot recycled, key goes stale).
+                hedges.remove(head.hedge.expect("ghost carries its key"));
                 continue;
             }
             let (_worker, free_s) = lane.tracker.earliest_free();
-            return Some(free_s.max(head_arrival));
+            return Some(free_s.max(head.arrival_s));
         }
     }
 
@@ -473,25 +553,40 @@ impl Dispatcher {
     }
 
     /// Form + execute one batch on `device` at `start_s`, pushing its
-    /// members onto the pending-completion heap.
+    /// members onto the pending-completion heap. Allocation-free once
+    /// warmed: the batch forms into the reused scratch buffer and ghost
+    /// purges recycle their arena slots.
     fn dispatch_at<E>(&mut self, device: DeviceKind, start_s: f64, exec: &mut E)
     where
         E: BatchExecutor,
     {
-        let batch = {
-            let (lane, policy, cancelled) = match device {
-                DeviceKind::Edge => (&mut self.edge, &self.policy, &mut self.cancelled),
-                DeviceKind::Cloud => (&mut self.cloud, &self.policy, &mut self.cancelled),
+        let li = lane_idx(device);
+        let mut batch = std::mem::take(&mut self.scratch);
+        {
+            let (lane, hedges) = match device {
+                DeviceKind::Edge => (&mut self.edge, &mut self.hedges),
+                DeviceKind::Cloud => (&mut self.cloud, &mut self.hedges),
             };
-            policy.form_batch_filtered(&mut lane.queue, start_s, cancelled)
-        };
+            self.policy
+                .form_batch_into(&mut lane.queue, start_s, &mut batch, |rq| {
+                    if is_ghost(hedges, rq, li) {
+                        hedges.remove(rq.hedge.expect("ghost carries its key"));
+                        true
+                    } else {
+                        false
+                    }
+                });
+        }
         if batch.is_empty() {
+            self.scratch = batch;
             return;
         }
         // Hedged members are now executing: too late to cancel them.
         for rq in &batch {
-            if let Some(entry) = self.hedges.get_mut(&rq.id) {
-                entry.state[lane_idx(device)] = CopyState::Running;
+            if let Some(key) = rq.hedge {
+                if let Some(entry) = self.hedges.get_mut(key) {
+                    entry.state[li] = CopyState::Running;
+                }
             }
         }
         let est_sum: f64 = batch.iter().map(|r| r.est_service_s).sum();
@@ -504,7 +599,7 @@ impl Dispatcher {
         }
         self.stats.record(batch.len());
         let batch_size = batch.len();
-        for request in batch {
+        for request in batch.drain(..) {
             let seq = self.seq;
             self.seq += 1;
             self.pending.push(Reverse(Pending {
@@ -516,6 +611,7 @@ impl Dispatcher {
                 request,
             }));
         }
+        self.scratch = batch;
     }
 
     /// Fire the earliest pending completion event.
@@ -524,7 +620,7 @@ impl Dispatcher {
         F: FnMut(Completion),
     {
         let Reverse(p) = self.pending.pop().expect("pending completion exists");
-        let kind = self.resolve_completion(p.device, p.request.id);
+        let kind = self.resolve_completion(p.device, p.request.hedge);
         on_complete(Completion {
             request: p.request,
             device: p.device,
@@ -537,32 +633,44 @@ impl Dispatcher {
 
     /// Classify one finished copy and update the hedge bookkeeping:
     /// first finisher wins and cancels its twin (reclaiming queued
-    /// capacity); a later finisher is wasted work.
-    fn resolve_completion(&mut self, device: DeviceKind, id: u64) -> CompletionKind {
-        let (kind, cancel_twin) = {
-            let entry = match self.hedges.get_mut(&id) {
-                None => return CompletionKind::Solo,
-                Some(e) => e,
-            };
-            let di = lane_idx(device);
-            entry.state[di] = CopyState::Done;
-            if entry.winner.is_some() {
-                (CompletionKind::HedgeLoss, None)
-            } else {
-                entry.winner = Some(device);
-                let ti = lane_idx(other(device));
-                match entry.state[ti] {
-                    CopyState::Queued => {
-                        (CompletionKind::HedgeWin, Some((other(device), entry.est[ti])))
+    /// capacity); a later finisher is wasted work. All O(1) — one
+    /// generation-checked arena access, no hashing.
+    fn resolve_completion(&mut self, device: DeviceKind, hedge: Option<SlabKey>) -> CompletionKind {
+        let key = match hedge {
+            None => return CompletionKind::Solo,
+            Some(k) => k,
+        };
+        let di = lane_idx(device);
+        let ti = lane_idx(other(device));
+        let (kind, cancel_est) = match self.hedges.get_mut(key) {
+            // Unreachable in practice (a dispatched copy's race entry
+            // outlives it); treat a stale key as a solo completion.
+            None => return CompletionKind::Solo,
+            Some(entry) => {
+                entry.state[di] = CopyState::Done;
+                if entry.winner.is_some() {
+                    (CompletionKind::HedgeLoss, None)
+                } else {
+                    entry.winner = Some(device);
+                    if entry.state[ti] == CopyState::Queued {
+                        // Twin still queued: mark it cancelled in the
+                        // race entry itself. The ghost is purged lazily
+                        // (queue head / batcher lookahead), which also
+                        // frees this entry.
+                        entry.state[ti] = CopyState::Cancelled;
+                        (CompletionKind::HedgeWin, Some(entry.est[ti]))
+                    } else {
+                        // Twin running: keep the entry so its completion
+                        // is classified as a loss.
+                        (CompletionKind::HedgeWin, None)
                     }
-                    _ => (CompletionKind::HedgeWin, None),
                 }
             }
         };
         match kind {
             CompletionKind::HedgeLoss => {
                 // Twin already won; the race is fully resolved.
-                self.hedges.remove(&id);
+                self.hedges.remove(key);
                 self.hedge_stats.losers_run += 1;
             }
             CompletionKind::HedgeWin => {
@@ -570,20 +678,15 @@ impl Dispatcher {
                     DeviceKind::Edge => self.hedge_stats.wins_edge += 1,
                     DeviceKind::Cloud => self.hedge_stats.wins_cloud += 1,
                 }
-                if let Some((twin, est)) = cancel_twin {
-                    // Twin still queued: cancel it and reclaim its
-                    // backlog share and admission slot now (the queue
-                    // entry itself is purged lazily at the head / in
-                    // the batcher's lookahead window).
-                    self.cancelled.insert(id);
+                if let Some(est) = cancel_est {
+                    // Reclaim the cancelled twin's backlog share and
+                    // admission slot now; the entry itself stays until
+                    // the ghost is physically purged.
                     self.hedge_stats.cancelled_unrun += 1;
-                    let lane = self.lane_mut(twin);
+                    let lane = self.lane_mut(other(device));
                     lane.tracker.on_cancel(est);
                     lane.queue.mark_dead();
-                    self.hedges.remove(&id);
                 }
-                // Twin running: keep the entry so its completion is
-                // classified as a loss.
             }
             CompletionKind::Solo => {}
         }
@@ -632,6 +735,7 @@ mod tests {
             est_service_s: 0.1,
             arrival_s,
             bucket: 0, // overwritten by submit()
+            hedge: None,
         }
     }
 
@@ -783,6 +887,7 @@ mod tests {
         assert_eq!(hs.cancelled_unrun, 1);
         assert_eq!(hs.losers_run, 0);
         assert!(disp.idle());
+        assert_eq!(disp.hedges_in_flight(), 0, "drained arena must be empty");
         // Backlog fully reclaimed once drained.
         assert_eq!(disp.expected_wait_s(DeviceKind::Cloud, 100.0), 0.0);
     }
@@ -814,6 +919,7 @@ mod tests {
         assert_eq!(hs.wins_cloud, 1);
         assert_eq!(hs.losers_run, 1);
         assert_eq!(hs.cancelled_unrun, 0);
+        assert_eq!(disp.hedges_in_flight(), 0);
     }
 
     #[test]
@@ -850,6 +956,7 @@ mod tests {
         assert_eq!(hs.wins_cloud, 1);
         assert_eq!(hs.losers_run, 1);
         assert_eq!(hs.cancelled_unrun, 0);
+        assert_eq!(disp.hedges_in_flight(), 0);
     }
 
     #[test]
@@ -881,6 +988,7 @@ mod tests {
         assert!(!disp.submit(DeviceKind::Cloud, rq(5, 0.8, 20.0)).is_admitted());
         disp.run_until(f64::INFINITY, &mut exec, &mut |c| comps.push(c));
         assert!(disp.idle());
+        assert_eq!(disp.hedges_in_flight(), 0, "purged ghost must free its entry");
         let results = comps.iter().filter(|c| c.kind.is_result()).count();
         assert_eq!(results, 5, "4 solos + 1 hedge winner");
     }
@@ -895,10 +1003,50 @@ mod tests {
             o => panic!("expected Single(Cloud), got {o:?}"),
         }
         assert_eq!(disp.hedge_stats().hedged, 0);
+        assert_eq!(disp.hedges_in_flight(), 0, "degraded hedge must not leak");
         // Both lanes full now: the next hedge is shed outright.
         assert_eq!(
             disp.submit_hedged(rq(2, 0.0, 10.0), 0.1, 0.1),
             HedgeOutcome::Rejected
         );
+    }
+
+    #[test]
+    fn recycled_arena_slots_never_confuse_races() {
+        // Run many sequential hedge races through a 1-entry-deep arena:
+        // every race recycles the same physical slot, and the generation
+        // check must keep each resolution tied to its own race.
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = AsymExec { edge_s: 0.01, cloud_s: 0.5 };
+        let mut wins = 0u64;
+        for i in 0..50u64 {
+            let t = i as f64;
+            disp.run_until(t, &mut exec, &mut |c| {
+                if c.kind == CompletionKind::HedgeWin {
+                    wins += 1;
+                }
+            });
+            assert_eq!(
+                disp.submit_hedged(rq(i, t, 10.0), 0.01, 0.5),
+                HedgeOutcome::Hedged
+            );
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut |c| {
+            if c.kind == CompletionKind::HedgeWin {
+                wins += 1;
+            }
+        });
+        assert_eq!(wins, 50, "every race has exactly one winner");
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.hedged, 50);
+        assert_eq!(hs.wins_edge + hs.wins_cloud, 50);
+        assert_eq!(hs.cancelled_unrun + hs.losers_run, 50);
+        assert_eq!(disp.hedges_in_flight(), 0);
+        assert!(disp.idle());
     }
 }

@@ -27,11 +27,20 @@
 //!
 //! When that comparison lands inside a configurable error bar the
 //! dispatcher can *hedge* — run the request on both lanes and keep the
-//! first finisher ([`Dispatcher::submit_hedged`], cancel tokens, wasted
-//! work accounting in [`HedgeStats`]); and the planes behind the
-//! estimates can be refit online from observed completions
-//! ([`crate::predictor::RlsPlane`]) so the decision tracks drifting
-//! hardware.
+//! first finisher ([`Dispatcher::submit_hedged`], wasted work accounting
+//! in [`HedgeStats`]); and the models behind the estimates can be refit
+//! online from observed completions ([`crate::predictor::RlsPlane`] for
+//! the T_exe planes, [`crate::predictor::RlsLine`] for the
+//! payload-size → T_tx law) so the decision tracks drifting hardware
+//! and networks.
+//!
+//! The hot path is **zero-churn**: admission queues sit on ring buffers
+//! ([`crate::util::RingBuffer`]), in-flight hedge races live in a
+//! generational slab arena ([`crate::util::Slab`]) keyed directly from
+//! the queued records, batches form into a reused scratch buffer, and
+//! the pending-completion heap stores `Copy` entries — once warmed, the
+//! steady-state dispatch path performs no heap allocation and no
+//! hashing (asserted by `tests/alloc_steady_state.rs`).
 //!
 //! [`crate::sim::harness::run_contended`] replays open-loop Poisson
 //! arrivals through this subsystem against ground-truth tables
@@ -58,7 +67,7 @@
 //! let mut disp = Dispatcher::new(&DispatcherConfig::default());
 //! let rq = QueuedRequest {
 //!     id: 0, payload: 0, n: 10, m_est: 9.0,
-//!     est_service_s: 0.1, arrival_s: 0.0, bucket: 0,
+//!     est_service_s: 0.1, arrival_s: 0.0, bucket: 0, hedge: None,
 //! };
 //! assert!(disp.submit(DeviceKind::Edge, rq).is_admitted());
 //! let mut done = Vec::new();
@@ -68,11 +77,13 @@
 //! assert!(disp.idle());
 //! ```
 
+pub mod baseline;
 pub mod batch;
 pub mod capacity;
 pub mod dispatch;
 pub mod queue;
 
+pub use baseline::BaselineDispatcher;
 pub use batch::{BatchPolicy, BatchStats};
 pub use capacity::CapacityTracker;
 pub use dispatch::{

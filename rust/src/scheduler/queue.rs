@@ -8,11 +8,15 @@
 //! requests bounded instead of letting every request rot in an unbounded
 //! backlog. Rejected requests are counted, never silently dropped.
 //!
-//! All operations are O(1); the batcher ([`crate::scheduler::batch`]) is
-//! the only component that touches non-head elements, under a bounded
-//! lookahead window.
+//! Storage is a [`RingBuffer`]: O(1) admit/pop with zero steady-state
+//! allocation (the slot array only grows past the all-time peak depth,
+//! so a warmed queue never touches the allocator — asserted by the
+//! counting-allocator test in `tests/alloc_steady_state.rs`). All
+//! head operations are O(1); the batcher ([`crate::scheduler::batch`])
+//! is the only component that touches non-head elements, under a
+//! bounded lookahead window.
 
-use std::collections::VecDeque;
+use crate::util::{RingBuffer, SlabKey};
 
 /// One request as the scheduler sees it. `payload` is an opaque index
 /// into the caller's own request table (ground truth in simulation, the
@@ -37,6 +41,12 @@ pub struct QueuedRequest {
     pub arrival_s: f64,
     /// Length bucket (assigned by the batch policy at submission).
     pub bucket: usize,
+    /// Slab key of the in-flight hedge entry when this copy is half of
+    /// a hedged pair — owned by the dispatcher (`None` for solo
+    /// submissions; callers leave it `None`). Replaces the old id-keyed
+    /// hash lookups on every completion/cancel with a direct,
+    /// generation-checked arena access.
+    pub hedge: Option<SlabKey>,
 }
 
 /// Outcome of offering a request to the queue.
@@ -74,7 +84,7 @@ pub struct QueueStats {
 /// Bounded FIFO admission queue for one device.
 #[derive(Debug, Clone)]
 pub struct AdmissionQueue {
-    items: VecDeque<QueuedRequest>,
+    items: RingBuffer<QueuedRequest>,
     max_depth: usize,
     /// Entries known to be cancelled (hedge twins that lost) but not
     /// yet physically removed — they are purged lazily and never run,
@@ -88,11 +98,18 @@ impl AdmissionQueue {
     pub fn new(max_depth: usize) -> Self {
         assert!(max_depth > 0, "AdmissionQueue needs max_depth > 0");
         AdmissionQueue {
-            items: VecDeque::with_capacity(max_depth.min(1024)),
+            items: RingBuffer::with_capacity(max_depth.min(1024)),
             max_depth,
             dead: 0,
             stats: QueueStats::default(),
         }
+    }
+
+    /// Does the queue have a free admission slot? (Same predicate
+    /// [`offer`](AdmissionQueue::offer) applies — the dispatcher uses it
+    /// to decide hedging atomically across both lanes.)
+    pub fn has_room(&self) -> bool {
+        self.live_depth() < self.max_depth
     }
 
     /// Offer a request: O(1) admit-or-shed. The admission bound counts
@@ -100,7 +117,7 @@ impl AdmissionQueue {
     /// occupy slots.
     pub fn offer(&mut self, rq: QueuedRequest) -> Admission {
         self.stats.offered += 1;
-        if self.live_depth() >= self.max_depth {
+        if !self.has_room() {
             self.stats.rejected += 1;
             return Admission::Rejected;
         }
@@ -128,16 +145,19 @@ impl AdmissionQueue {
     }
 
     /// The head request, if any.
+    #[inline]
     pub fn peek(&self) -> Option<&QueuedRequest> {
         self.items.front()
     }
 
     /// Remove and return the head request.
+    #[inline]
     pub fn pop(&mut self) -> Option<QueuedRequest> {
         self.items.pop_front()
     }
 
     /// Element at position `i` from the front (batcher lookahead).
+    #[inline]
     pub fn get(&self, i: usize) -> Option<&QueuedRequest> {
         self.items.get(i)
     }
@@ -189,6 +209,7 @@ mod tests {
             est_service_s: 0.05,
             arrival_s,
             bucket: 0,
+            hedge: None,
         }
     }
 
@@ -217,7 +238,9 @@ mod tests {
         assert_eq!(s.rejected, 2);
         assert_eq!(s.peak_depth, 3);
         // Shedding frees no slots; popping does.
+        assert!(!q.has_room());
         q.pop();
+        assert!(q.has_room());
         assert!(q.offer(rq(9, 1.0)).is_admitted());
     }
 
@@ -260,6 +283,25 @@ mod tests {
         q.pop();
         q.unmark_dead();
         assert_eq!(q.live_depth(), q.depth());
+    }
+
+    #[test]
+    fn sustained_churn_never_regrows_the_ring() {
+        // Steady state: depth oscillates below the peak, so the ring's
+        // physical capacity must freeze after the first warm cycle.
+        let mut q = AdmissionQueue::new(512);
+        for i in 0..64 {
+            q.offer(rq(i, 0.0));
+        }
+        let mut id = 64u64;
+        for _ in 0..10_000 {
+            q.pop();
+            q.offer(rq(id, 0.0));
+            id += 1;
+        }
+        assert_eq!(q.depth(), 64);
+        // FIFO order survived the churn.
+        assert_eq!(q.peek().unwrap().id, id - 64);
     }
 
     #[test]

@@ -8,6 +8,8 @@
 
 use std::time::Instant;
 
+use super::json::Json;
+
 /// One benchmark's summary statistics.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -35,6 +37,21 @@ impl BenchResult {
         } else {
             self.items_per_iter * 1e9 / self.mean_ns
         }
+    }
+
+    /// Serialise for machine-readable bench reports
+    /// (`cnmt bench sched --json` → `BENCH_sched.json`).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("samples", Json::Num(self.samples as f64))
+            .set("mean_ns", Json::Num(self.mean_ns))
+            .set("p50_ns", Json::Num(self.p50_ns))
+            .set("p95_ns", Json::Num(self.p95_ns))
+            .set("min_ns", Json::Num(self.min_ns))
+            .set("items_per_iter", Json::Num(self.items_per_iter))
+            .set("throughput_per_s", Json::Num(self.throughput_per_s()));
+        o
     }
 }
 
@@ -173,6 +190,24 @@ mod tests {
             items_per_iter: 100.0,
         };
         assert!((r.throughput_per_s() - 100_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn json_carries_all_fields() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: 5,
+            mean_ns: 200.0,
+            p50_ns: 150.0,
+            p95_ns: 400.0,
+            min_ns: 100.0,
+            items_per_iter: 10.0,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").unwrap(), &Json::Str("x".into()));
+        assert!((j.get("mean_ns").unwrap().as_f64().unwrap() - 200.0).abs() < 1e-12);
+        let thr = j.get("throughput_per_s").unwrap().as_f64().unwrap();
+        assert!((thr - 5e7).abs() < 1e-3);
     }
 
     #[test]

@@ -4,14 +4,22 @@
 //! per the project's build-every-substrate rule these live here:
 //!
 //! * [`json`] — RFC 8259 parser + writer (manifest, configs, reports).
-//! * [`rng`] — xoshiro256** + the distributions the simulator needs.
+//! * [`rng`] — xoshiro256** + the distributions the simulator needs,
+//!   plus the per-cell seed splitting the parallel sweep runner uses.
 //! * [`cli`] — subcommand + `--flag` argument parsing.
+//! * [`slab`] — generational slab arena (the scheduler's zero-churn
+//!   hedge table).
+//! * [`ring`] — growable ring buffer (the admission queues' storage).
 
 pub mod bench;
 pub mod cli;
 pub mod json;
+pub mod ring;
 pub mod rng;
+pub mod slab;
 
 pub use cli::Args;
 pub use json::Json;
+pub use ring::RingBuffer;
 pub use rng::Rng;
+pub use slab::{Slab, SlabKey};

@@ -1,0 +1,244 @@
+//! Growable ring buffer backing the admission queues.
+//!
+//! A FIFO over a power-of-two slot array with head/length indices:
+//! `push_back`/`pop_front`/`front` are O(1) with no per-operation
+//! allocation (the array only reallocates when the population exceeds
+//! every previous peak — so in steady state, never). `get`/`remove`
+//! support the batcher's bounded lookahead: `remove(i)` is O(i), closing
+//! the hole by shifting the (short, lookahead-bounded) prefix toward the
+//! back and advancing the head.
+//!
+//! Slots hold `Option<T>` so the buffer is 100% safe code; `take()` on a
+//! slot moves values without cloning.
+
+/// Growable ring buffer (see the module docs).
+#[derive(Debug, Clone)]
+pub struct RingBuffer<T> {
+    /// Slot array; length is always a power of two.
+    slots: Vec<Option<T>>,
+    head: usize,
+    len: usize,
+}
+
+impl<T> RingBuffer<T> {
+    /// Ring with room for at least `capacity` elements before the first
+    /// reallocation (rounded up to a power of two, minimum 4).
+    pub fn with_capacity(capacity: usize) -> Self {
+        let cap = capacity.max(4).next_power_of_two();
+        RingBuffer {
+            slots: (0..cap).map(|_| None).collect(),
+            head: 0,
+            len: 0,
+        }
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.slots.len() - 1
+    }
+
+    #[inline]
+    fn physical(&self, logical: usize) -> usize {
+        (self.head + logical) & self.mask()
+    }
+
+    /// Elements currently buffered.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the buffer empty?
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Physical slot count (the high-water capacity).
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Append at the back; amortised O(1), allocation-free unless the
+    /// population exceeds its previous peak.
+    pub fn push_back(&mut self, value: T) {
+        if self.len == self.slots.len() {
+            self.grow();
+        }
+        let i = self.physical(self.len);
+        debug_assert!(self.slots[i].is_none());
+        self.slots[i] = Some(value);
+        self.len += 1;
+    }
+
+    /// Double the slot array, compacting the live range to the front.
+    fn grow(&mut self) {
+        let old_cap = self.slots.len();
+        let mut slots: Vec<Option<T>> = (0..old_cap * 2).map(|_| None).collect();
+        for (i, slot) in slots.iter_mut().take(self.len).enumerate() {
+            *slot = self.slots[(self.head + i) & (old_cap - 1)].take();
+        }
+        self.slots = slots;
+        self.head = 0;
+    }
+
+    /// The front element, if any.
+    #[inline]
+    pub fn front(&self) -> Option<&T> {
+        if self.len == 0 {
+            None
+        } else {
+            self.slots[self.head].as_ref()
+        }
+    }
+
+    /// Remove and return the front element.
+    #[inline]
+    pub fn pop_front(&mut self) -> Option<T> {
+        if self.len == 0 {
+            return None;
+        }
+        let value = self.slots[self.head].take();
+        debug_assert!(value.is_some());
+        self.head = (self.head + 1) & self.mask();
+        self.len -= 1;
+        value
+    }
+
+    /// Element at logical position `i` from the front.
+    #[inline]
+    pub fn get(&self, i: usize) -> Option<&T> {
+        if i >= self.len {
+            None
+        } else {
+            self.slots[self.physical(i)].as_ref()
+        }
+    }
+
+    /// Remove the element at logical position `i`, preserving the order
+    /// of the rest. O(i): the prefix `[0, i)` shifts one slot toward the
+    /// back and the head advances — callers (the batcher) keep `i`
+    /// bounded by their lookahead window.
+    pub fn remove(&mut self, i: usize) -> Option<T> {
+        if i >= self.len {
+            return None;
+        }
+        let removed = self.slots[self.physical(i)].take();
+        debug_assert!(removed.is_some());
+        let mut j = i;
+        while j > 0 {
+            let src = self.physical(j - 1);
+            let dst = self.physical(j);
+            self.slots[dst] = self.slots[src].take();
+            j -= 1;
+        }
+        self.head = (self.head + 1) & self.mask();
+        self.len -= 1;
+        removed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+    use std::collections::VecDeque;
+
+    #[test]
+    fn fifo_roundtrip_and_wraparound() {
+        let mut r = RingBuffer::with_capacity(4);
+        // Force the head around the physical array several times.
+        for round in 0..10u64 {
+            for i in 0..3 {
+                r.push_back(round * 10 + i);
+            }
+            assert_eq!(r.len(), 3);
+            assert_eq!(r.front(), Some(&(round * 10)));
+            for i in 0..3 {
+                assert_eq!(r.pop_front(), Some(round * 10 + i));
+            }
+            assert!(r.is_empty());
+            assert_eq!(r.pop_front(), None);
+        }
+        assert_eq!(r.capacity(), 4, "peak population 3 never forced growth");
+    }
+
+    #[test]
+    fn growth_preserves_order_across_the_seam() {
+        let mut r = RingBuffer::with_capacity(4);
+        // Wrap the head, then overfill so growth must re-linearise a
+        // buffer whose live range straddles the physical seam.
+        for i in 0..3u32 {
+            r.push_back(i);
+        }
+        r.pop_front();
+        r.pop_front();
+        for i in 3..12u32 {
+            r.push_back(i);
+        }
+        let drained: Vec<u32> = std::iter::from_fn(|| r.pop_front()).collect();
+        assert_eq!(drained, (2..12).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn get_indexes_from_the_front() {
+        let mut r = RingBuffer::with_capacity(4);
+        for i in 0..5u32 {
+            r.push_back(i);
+        }
+        r.pop_front();
+        for (i, want) in (1..5u32).enumerate() {
+            assert_eq!(r.get(i), Some(&want));
+        }
+        assert_eq!(r.get(4), None);
+    }
+
+    #[test]
+    fn remove_mid_preserves_relative_order() {
+        let mut r = RingBuffer::with_capacity(4);
+        for i in 0..6u32 {
+            r.push_back(i);
+        }
+        assert_eq!(r.remove(2), Some(2));
+        assert_eq!(r.remove(0), Some(0));
+        assert_eq!(r.remove(99), None);
+        let rest: Vec<u32> = std::iter::from_fn(|| r.pop_front()).collect();
+        assert_eq!(rest, vec![1, 3, 4, 5]);
+    }
+
+    #[test]
+    fn model_check_against_vecdeque() {
+        // Random op sequences must agree with the std VecDeque model,
+        // including around wrap/growth boundaries.
+        let mut rng = Rng::new(0x51B);
+        for trial in 0..200u64 {
+            let mut ring: RingBuffer<u64> = RingBuffer::with_capacity(1 + rng.usize(8));
+            let mut model: VecDeque<u64> = VecDeque::new();
+            for step in 0..300u64 {
+                match rng.usize(5) {
+                    0 | 1 => {
+                        let v = trial * 1_000 + step;
+                        ring.push_back(v);
+                        model.push_back(v);
+                    }
+                    2 => assert_eq!(ring.pop_front(), model.pop_front()),
+                    3 => {
+                        if !model.is_empty() {
+                            let i = rng.usize(model.len() + 2);
+                            assert_eq!(ring.remove(i), model.remove(i));
+                        }
+                    }
+                    _ => {
+                        let i = rng.usize(model.len().max(1) + 1);
+                        assert_eq!(ring.get(i), model.get(i));
+                    }
+                }
+                assert_eq!(ring.len(), model.len());
+                assert_eq!(ring.front(), model.front());
+            }
+            let a: Vec<u64> = std::iter::from_fn(|| ring.pop_front()).collect();
+            let b: Vec<u64> = std::iter::from_fn(|| model.pop_front()).collect();
+            assert_eq!(a, b, "trial {trial} diverged");
+        }
+    }
+}

@@ -1,0 +1,233 @@
+//! Generational slab arena: stable integer keys, O(1) insert/remove,
+//! zero steady-state allocation.
+//!
+//! The scheduler's hot path used to key its in-flight hedge table on
+//! request ids through a `HashMap` and carry a parallel `HashSet` of
+//! cancel tokens — every hedged request paid two hashes on submit, one
+//! to three on every completion, and the map churned heap nodes under
+//! sustained load. The slab replaces both: entries live in a flat
+//! `Vec`, freed slots are recycled through an in-place free list, and a
+//! per-slot **generation counter** makes recycled slots unforgeable — a
+//! stale [`SlabKey`] held after its entry was removed can never alias a
+//! newer occupant, because the generation embedded in the key no longer
+//! matches the slot's (checked on every access, property-tested in
+//! `tests/proptest_invariants.rs`).
+//!
+//! In steady state (peak population reached once) the slab performs no
+//! heap allocation at all: inserts pop the free list, removals push it.
+//! This is what the counting-allocator test
+//! (`tests/alloc_steady_state.rs`) asserts for the whole dispatch path.
+
+/// Key into a [`Slab`]: slot index plus the generation the slot had
+/// when the entry was inserted. `Copy` and 8 bytes — cheap to embed in
+/// queued-request records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct SlabKey {
+    index: u32,
+    generation: u32,
+}
+
+impl SlabKey {
+    /// Slot index (for debugging/telemetry; not a stable identity on
+    /// its own — only the full key is).
+    pub fn index(&self) -> usize {
+        self.index as usize
+    }
+
+    /// Generation of the slot at insertion time.
+    pub fn generation(&self) -> u32 {
+        self.generation
+    }
+}
+
+/// One arena slot: either an occupant (tagged with its generation) or a
+/// vacancy holding the generation its *next* occupant will get.
+#[derive(Debug, Clone)]
+enum Slot<T> {
+    Vacant { next_generation: u32 },
+    Occupied { generation: u32, value: T },
+}
+
+/// Generational slab arena (see the module docs).
+#[derive(Debug, Clone)]
+pub struct Slab<T> {
+    slots: Vec<Slot<T>>,
+    free: Vec<u32>,
+    len: usize,
+}
+
+impl<T> Default for Slab<T> {
+    fn default() -> Self {
+        Slab::new()
+    }
+}
+
+impl<T> Slab<T> {
+    /// Empty slab (no allocation until the first insert).
+    pub fn new() -> Self {
+        Slab { slots: Vec::new(), free: Vec::new(), len: 0 }
+    }
+
+    /// Empty slab with room for `capacity` entries before reallocating.
+    pub fn with_capacity(capacity: usize) -> Self {
+        Slab {
+            slots: Vec::with_capacity(capacity),
+            free: Vec::with_capacity(capacity),
+            len: 0,
+        }
+    }
+
+    /// Live entries.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Is the slab empty?
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Physical slots (live + vacant) — the high-water mark of the
+    /// population.
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// Insert a value, recycling a vacant slot when one exists
+    /// (allocation-free in steady state). Returns the entry's key.
+    pub fn insert(&mut self, value: T) -> SlabKey {
+        match self.free.pop() {
+            Some(index) => {
+                let slot = &mut self.slots[index as usize];
+                let generation = match *slot {
+                    Slot::Vacant { next_generation } => next_generation,
+                    Slot::Occupied { .. } => unreachable!("free list held a live slot"),
+                };
+                *slot = Slot::Occupied { generation, value };
+                self.len += 1;
+                SlabKey { index, generation }
+            }
+            None => {
+                let index = u32::try_from(self.slots.len())
+                    .expect("slab exceeded u32::MAX slots");
+                self.slots.push(Slot::Occupied { generation: 0, value });
+                self.len += 1;
+                SlabKey { index, generation: 0 }
+            }
+        }
+    }
+
+    /// Shared access; `None` when the key is stale (entry removed, slot
+    /// possibly recycled — the generation check catches both).
+    pub fn get(&self, key: SlabKey) -> Option<&T> {
+        match self.slots.get(key.index as usize) {
+            Some(Slot::Occupied { generation, value }) if *generation == key.generation => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    /// Exclusive access; `None` when the key is stale.
+    pub fn get_mut(&mut self, key: SlabKey) -> Option<&mut T> {
+        match self.slots.get_mut(key.index as usize) {
+            Some(Slot::Occupied { generation, value }) if *generation == key.generation => {
+                Some(value)
+            }
+            _ => None,
+        }
+    }
+
+    /// Remove and return the entry, bumping the slot's generation so
+    /// every outstanding key to it goes stale. `None` when the key
+    /// already is. The slot joins the free list (no deallocation).
+    pub fn remove(&mut self, key: SlabKey) -> Option<T> {
+        let slot = self.slots.get_mut(key.index as usize)?;
+        match slot {
+            Slot::Occupied { generation, .. } if *generation == key.generation => {
+                let vacant =
+                    Slot::Vacant { next_generation: key.generation.wrapping_add(1) };
+                match std::mem::replace(slot, vacant) {
+                    Slot::Occupied { value, .. } => {
+                        self.free.push(key.index);
+                        self.len -= 1;
+                        Some(value)
+                    }
+                    Slot::Vacant { .. } => unreachable!("matched occupied above"),
+                }
+            }
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_get_remove_roundtrip() {
+        let mut s = Slab::new();
+        let a = s.insert("a");
+        let b = s.insert("b");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.get(a), Some(&"a"));
+        assert_eq!(s.get(b), Some(&"b"));
+        assert_eq!(s.remove(a), Some("a"));
+        assert_eq!(s.get(a), None);
+        assert_eq!(s.len(), 1);
+        assert_eq!(s.remove(a), None, "double remove is a no-op");
+        assert_eq!(s.get(b), Some(&"b"));
+    }
+
+    #[test]
+    fn recycled_slot_rejects_stale_key() {
+        let mut s = Slab::new();
+        let old = s.insert(1u64);
+        s.remove(old);
+        let new = s.insert(2u64);
+        // Same physical slot, different generation.
+        assert_eq!(new.index(), old.index());
+        assert_ne!(new.generation(), old.generation());
+        assert_eq!(s.get(old), None, "stale key aliased a recycled slot");
+        assert_eq!(s.get_mut(old), None);
+        assert_eq!(s.remove(old), None);
+        assert_eq!(s.get(new), Some(&2));
+    }
+
+    #[test]
+    fn steady_state_reuses_slots_without_growing() {
+        let mut s: Slab<usize> = Slab::with_capacity(4);
+        for round in 0..100usize {
+            let fresh: Vec<SlabKey> = (0..4).map(|i| s.insert(round * 4 + i)).collect();
+            assert_eq!(s.len(), 4);
+            for (i, &k) in fresh.iter().enumerate() {
+                assert_eq!(s.get(k), Some(&(round * 4 + i)));
+                assert_eq!(s.remove(k), Some(round * 4 + i));
+            }
+            // Population peaked at 4: the arena never grows past it.
+            assert_eq!(s.capacity(), 4);
+            assert!(s.is_empty());
+        }
+    }
+
+    #[test]
+    fn get_mut_mutates_in_place() {
+        let mut s = Slab::new();
+        let k = s.insert(vec![1, 2]);
+        s.get_mut(k).unwrap().push(3);
+        assert_eq!(s.get(k), Some(&vec![1, 2, 3]));
+        assert_eq!(s.remove(k), Some(vec![1, 2, 3]));
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn out_of_range_key_is_stale() {
+        let mut s = Slab::new();
+        let k = s.insert(7);
+        let bogus = SlabKey { index: 999, generation: 0 };
+        assert_eq!(s.get(bogus), None);
+        assert_eq!(s.remove(bogus), None);
+        assert_eq!(s.get(k), Some(&7));
+    }
+}

@@ -1,0 +1,144 @@
+//! Counting-allocator proof that the steady-state dispatch path is
+//! allocation-free.
+//!
+//! A global allocator wrapper counts every `alloc`/`realloc` call. The
+//! test drives the full scheduler cycle (route-shaped submission mix
+//! including hedges, event loop, completions) through one warm-up pass
+//! — which is allowed to allocate while ring buffers, the pending heap,
+//! the hedge arena and the batch scratch grow to their peak populations
+//! — then repeats the *same* traffic pattern and asserts the allocation
+//! counter does not move at all.
+//!
+//! This file deliberately contains exactly one `#[test]`: the harness
+//! runs tests within a binary on multiple threads, and any concurrent
+//! test's allocations would show up in the (process-global) counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use cnmt::devices::DeviceKind;
+use cnmt::scheduler::{
+    BatchExecutor, Dispatcher, DispatcherConfig, QueuedRequest,
+};
+use cnmt::util::Rng;
+
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+/// Deterministic service times so the run is identical across passes.
+struct FixedExec;
+
+impl BatchExecutor for FixedExec {
+    fn execute(&mut self, device: DeviceKind, batch: &[QueuedRequest], _s: f64) -> f64 {
+        let each = match device {
+            DeviceKind::Edge => 9e-3,
+            DeviceKind::Cloud => 4e-3,
+        };
+        each + 0.15 * each * (batch.len() - 1) as f64
+    }
+}
+
+/// One pass of steady-state traffic: a mixed solo/hedged stream at a
+/// rate that keeps queues busy (and sheds a little), with the event
+/// loop drained between arrivals — the exact per-request cycle the
+/// contended harness drives. `t0` offsets the clock so later passes
+/// replay the same *pattern* on a warm dispatcher; the pass ends fully
+/// drained.
+fn drive(
+    disp: &mut Dispatcher,
+    seed: u64,
+    t0: f64,
+    requests: u64,
+    interarrival_s: f64,
+    hedge_every: u64,
+) -> u64 {
+    let mut rng = Rng::new(seed);
+    let mut exec = FixedExec;
+    let mut completions = 0u64;
+    let mut t = t0;
+    for i in 0..requests {
+        t += interarrival_s;
+        disp.run_until(t, &mut exec, &mut |_c| completions += 1);
+        let n = 1 + rng.usize(61);
+        let m_est = 0.95 * n as f64 + 0.8;
+        let rq = QueuedRequest {
+            id: i,
+            payload: n, // payload unused by FixedExec
+            n,
+            m_est,
+            est_service_s: 8e-3,
+            arrival_s: t,
+            bucket: 0,
+            hedge: None,
+        };
+        // Periodic hedges keep the arena, cancel and purge paths hot.
+        if i % hedge_every == 0 {
+            disp.submit_hedged(rq, 9e-3, 4e-3);
+        } else {
+            let device = if i % 3 == 0 { DeviceKind::Edge } else { DeviceKind::Cloud };
+            disp.submit(device, rq);
+        }
+    }
+    disp.run_until(f64::INFINITY, &mut exec, &mut |_c| completions += 1);
+    completions
+}
+
+#[test]
+fn steady_state_dispatch_allocates_nothing() {
+    let cfg = DispatcherConfig {
+        edge_workers: 1,
+        cloud_workers: 2,
+        max_queue_depth: 256,
+        ..Default::default()
+    };
+    let mut disp = Dispatcher::new(&cfg);
+
+    // Warm-up 1: *heavier* traffic than the measured pass (faster
+    // arrivals, more hedges), so every container's peak population —
+    // ring depths incl. ghosts, pending heap, hedge arena, free lists —
+    // strictly dominates what the measured pass can reach.
+    let warm = drive(&mut disp, 0xA110C, 0.0, 6_000, 2.0e-3, 3);
+    assert!(warm > 0, "warm-up produced no completions");
+    // Warm-up 2: the measured pattern itself, once, for belt and
+    // braces (any pattern-specific peak is reached here at the latest).
+    drive(&mut disp, 0xA110C, 1_000.0, 4_000, 2.5e-3, 5);
+
+    // Measured pass: identical pattern, warm dispatcher — the dispatch
+    // path must not touch the allocator at all.
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    let completions = drive(&mut disp, 0xA110C, 2_000.0, 4_000, 2.5e-3, 5);
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+
+    assert!(completions > 0, "measured pass produced no completions");
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state dispatch path allocated {} time(s)",
+        after - before
+    );
+}

@@ -12,10 +12,14 @@ use cnmt::metrics::{Histogram, OnlineStats};
 use cnmt::net::trace::{ConnectionProfile, TraceGenerator};
 use cnmt::predictor::fit::{fit_line, fit_plane};
 use cnmt::predictor::{N2mRegressor, RlsPlane, TexeModel, TtxEstimator};
+use cnmt::scheduler::{
+    BaselineDispatcher, BatchExecutor, CompletionKind, Dispatcher, DispatcherConfig,
+    HedgeOutcome, QueuedRequest,
+};
 use cnmt::sim::{
     run_all_policies, run_closed_loop, run_contended, AdaptiveOpts, ContentionOpts, TruthTable,
 };
-use cnmt::util::{Json, Rng};
+use cnmt::util::{Json, Rng, Slab, SlabKey};
 
 const TRIALS: usize = 60;
 
@@ -436,6 +440,283 @@ fn prop_rls_refit_converges_to_true_plane() {
             "trial {trial}: beta {} vs {}",
             fit.beta,
             truth.beta
+        );
+    }
+}
+
+#[test]
+fn prop_slab_recycled_slots_never_alias_stale_keys() {
+    // The arena's load-bearing safety property: whatever the
+    // insert/remove interleaving, a key whose entry was removed must
+    // never read, mutate or remove a later occupant of the recycled
+    // slot — and live keys must always see exactly their own value.
+    let mut rng = Rng::new(0x51AB);
+    for trial in 0..TRIALS {
+        let mut slab: Slab<u64> = Slab::new();
+        let mut live: Vec<(SlabKey, u64)> = Vec::new();
+        let mut stale: Vec<SlabKey> = Vec::new();
+        let mut inserts = 0usize;
+        let mut next_value = (trial as u64) << 32;
+        for _ in 0..400 {
+            match rng.usize(10) {
+                // Insert-heavy mix keeps slots cycling through reuse.
+                0..=4 => {
+                    let key = slab.insert(next_value);
+                    live.push((key, next_value));
+                    inserts += 1;
+                    next_value += 1;
+                }
+                5..=7 if !live.is_empty() => {
+                    let (key, value) = live.swap_remove(rng.usize(live.len()));
+                    assert_eq!(slab.remove(key), Some(value), "trial {trial}");
+                    stale.push(key);
+                }
+                _ => {}
+            }
+            if !stale.is_empty() {
+                let key = stale[rng.usize(stale.len())];
+                assert_eq!(slab.get(key), None, "trial {trial}: stale key read");
+                assert_eq!(slab.remove(key), None, "trial {trial}: stale key removed");
+            }
+            for &(key, value) in &live {
+                assert_eq!(slab.get(key), Some(&value), "trial {trial}: live key lost");
+            }
+            assert_eq!(slab.len(), live.len(), "trial {trial}: population drifted");
+        }
+        // Slots were genuinely recycled, so the aliasing property was
+        // actually exercised (fewer physical slots than inserts).
+        assert!(
+            stale.is_empty() || slab.capacity() < inserts,
+            "trial {trial}: arena never recycled a slot"
+        );
+    }
+}
+
+/// Deterministic per-device batch times for the dispatcher properties.
+struct PropExec {
+    edge_s: f64,
+    cloud_s: f64,
+}
+
+impl BatchExecutor for PropExec {
+    fn execute(
+        &mut self,
+        d: cnmt::devices::DeviceKind,
+        batch: &[QueuedRequest],
+        _s: f64,
+    ) -> f64 {
+        let each = match d {
+            cnmt::devices::DeviceKind::Edge => self.edge_s,
+            cnmt::devices::DeviceKind::Cloud => self.cloud_s,
+        };
+        each * (1.0 + 0.1 * (batch.len() - 1) as f64)
+    }
+}
+
+#[test]
+fn prop_dense_dispatch_conserves_across_purge_and_cancel() {
+    // Direct-dispatcher conservation under the slab/ring paths: across
+    // random rates, sizes and hedge mixes, every admitted logical
+    // request produces exactly one result completion, twin fates
+    // partition the hedges, ghosts release their admission slots, and a
+    // drained dispatcher leaves an empty arena (nothing leaks).
+    let mut rng = Rng::new(0xD15B);
+    for trial in 0..20u64 {
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1 + rng.usize(4),
+            max_queue_depth: 4 + rng.usize(64),
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = PropExec {
+            edge_s: rng.uniform(1e-3, 2e-2),
+            cloud_s: rng.uniform(1e-3, 2e-2),
+        };
+        let interarrival = rng.uniform(5e-4, 1e-2);
+        let hedge_p = rng.uniform(0.0, 0.6);
+        let requests = 800usize;
+        let mut admitted = 0u64;
+        let mut results = 0u64;
+        let mut losses = 0u64;
+        let mut t = 0.0f64;
+        let mut on_c = |c: cnmt::scheduler::Completion| {
+            if c.kind.is_result() {
+                results += 1;
+            } else {
+                losses += 1;
+            }
+        };
+        for i in 0..requests as u64 {
+            t += interarrival;
+            disp.run_until(t, &mut exec, &mut on_c);
+            let rq = QueuedRequest {
+                id: i,
+                payload: i as usize,
+                n: 1 + rng.usize(61),
+                m_est: rng.uniform(1.0, 60.0),
+                est_service_s: rng.uniform(1e-3, 2e-2),
+                arrival_s: t,
+                bucket: 0,
+                hedge: None,
+            };
+            if rng.bool(hedge_p) {
+                match disp.submit_hedged(rq, exec.edge_s, exec.cloud_s) {
+                    HedgeOutcome::Hedged | HedgeOutcome::Single(_) => admitted += 1,
+                    HedgeOutcome::Rejected => {}
+                }
+            } else {
+                let device = if rng.bool(0.5) {
+                    cnmt::devices::DeviceKind::Edge
+                } else {
+                    cnmt::devices::DeviceKind::Cloud
+                };
+                if disp.submit(device, rq).is_admitted() {
+                    admitted += 1;
+                }
+            }
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut on_c);
+        let hs = disp.hedge_stats();
+        assert_eq!(results, admitted, "trial {trial}: results != admitted requests");
+        assert_eq!(losses, hs.losers_run, "trial {trial}: loss accounting drifted");
+        assert_eq!(
+            hs.wins_edge + hs.wins_cloud,
+            hs.hedged,
+            "trial {trial}: winners != hedged"
+        );
+        assert_eq!(
+            hs.cancelled_unrun + hs.losers_run,
+            hs.hedged,
+            "trial {trial}: twin fates don't partition"
+        );
+        assert!(disp.idle(), "trial {trial}: dispatcher not drained");
+        assert_eq!(
+            disp.hedges_in_flight(),
+            0,
+            "trial {trial}: hedge arena leaked entries"
+        );
+        for device in [cnmt::devices::DeviceKind::Edge, cnmt::devices::DeviceKind::Cloud] {
+            assert_eq!(disp.depth(device), 0, "trial {trial}: ghost left in queue");
+            // All in-flight work charged to the trackers was released
+            // (up to add/sub float dust from interleaved batches).
+            assert!(
+                disp.expected_wait_s(device, t + 1e6) < 1e-9,
+                "trial {trial}: backlog estimate leaked"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_dense_dispatcher_is_bit_equivalent_to_frozen_baseline() {
+    // THE rewrite-correctness oracle: the zero-churn dispatcher must be
+    // a pure data-structure change. Random solo/hedged streams through
+    // the dense implementation and the frozen pre-rewrite baseline
+    // (`scheduler::baseline`) must produce identical completion
+    // sequences — same ids, devices, kinds, batch sizes, and bit-equal
+    // times — and identical hedge statistics.
+    let mut rng = Rng::new(0xD1FF);
+    for trial in 0..12u64 {
+        let cfg = DispatcherConfig {
+            edge_workers: 1 + rng.usize(2),
+            cloud_workers: 1 + rng.usize(4),
+            max_queue_depth: 4 + rng.usize(48),
+            ..Default::default()
+        };
+        let mut dense = Dispatcher::new(&cfg);
+        let mut base = BaselineDispatcher::new(&cfg);
+        let edge_s = rng.uniform(1e-3, 3e-2);
+        let cloud_s = rng.uniform(1e-3, 3e-2);
+        let mut exec = PropExec { edge_s, cloud_s };
+        let interarrival = rng.uniform(5e-4, 8e-3);
+        let hedge_p = rng.uniform(0.0, 0.7);
+        let mut cd: Vec<(u64, cnmt::devices::DeviceKind, CompletionKind, usize, u64, u64)> =
+            Vec::new();
+        let mut cb = cd.clone();
+        let mut t = 0.0f64;
+        for i in 0..600u64 {
+            t += interarrival;
+            dense.run_until(t, &mut exec, &mut |c| {
+                cd.push((
+                    c.request.id,
+                    c.device,
+                    c.kind,
+                    c.batch_size,
+                    c.done_s.to_bits(),
+                    c.start_s.to_bits(),
+                ))
+            });
+            base.run_until(t, &mut exec, &mut |c| {
+                cb.push((
+                    c.request.id,
+                    c.device,
+                    c.kind,
+                    c.batch_size,
+                    c.done_s.to_bits(),
+                    c.start_s.to_bits(),
+                ))
+            });
+            let rq = QueuedRequest {
+                id: i,
+                payload: i as usize,
+                n: 1 + rng.usize(61),
+                m_est: rng.uniform(1.0, 60.0),
+                est_service_s: rng.uniform(1e-3, 2e-2),
+                arrival_s: t,
+                bucket: 0,
+                hedge: None,
+            };
+            if rng.bool(hedge_p) {
+                assert_eq!(
+                    dense.submit_hedged(rq, edge_s, cloud_s),
+                    base.submit_hedged(rq, edge_s, cloud_s),
+                    "trial {trial} @ {i}: admission outcome diverged"
+                );
+            } else {
+                let device = if rng.bool(0.5) {
+                    cnmt::devices::DeviceKind::Edge
+                } else {
+                    cnmt::devices::DeviceKind::Cloud
+                };
+                assert_eq!(
+                    dense.submit(device, rq).is_admitted(),
+                    base.submit(device, rq).is_admitted(),
+                    "trial {trial} @ {i}: admission diverged"
+                );
+            }
+        }
+        dense.run_until(f64::INFINITY, &mut exec, &mut |c| {
+            cd.push((
+                c.request.id,
+                c.device,
+                c.kind,
+                c.batch_size,
+                c.done_s.to_bits(),
+                c.start_s.to_bits(),
+            ))
+        });
+        base.run_until(f64::INFINITY, &mut exec, &mut |c| {
+            cb.push((
+                c.request.id,
+                c.device,
+                c.kind,
+                c.batch_size,
+                c.done_s.to_bits(),
+                c.start_s.to_bits(),
+            ))
+        });
+        assert_eq!(cd, cb, "trial {trial}: completion sequences diverged");
+        let (hd, hb) = (dense.hedge_stats(), base.hedge_stats());
+        assert_eq!(hd.hedged, hb.hedged, "trial {trial}");
+        assert_eq!(hd.wins_edge, hb.wins_edge, "trial {trial}");
+        assert_eq!(hd.wins_cloud, hb.wins_cloud, "trial {trial}");
+        assert_eq!(hd.cancelled_unrun, hb.cancelled_unrun, "trial {trial}");
+        assert_eq!(hd.losers_run, hb.losers_run, "trial {trial}");
+        assert_eq!(
+            dense.batch_stats().batches,
+            base.batch_stats().batches,
+            "trial {trial}: batch counts diverged"
         );
     }
 }
