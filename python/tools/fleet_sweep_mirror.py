@@ -1,0 +1,835 @@
+#!/usr/bin/env python3
+"""Standalone mirror of `cnmt experiment fleet` (rust/src/experiments/fleet.rs).
+
+Why this exists: like `load_sweep_mirror.py`, the fleet-sweep report
+checked in under `reports/` must be regenerable in environments with no
+rust toolchain, and the fleet dynamics need a second, independent
+implementation to validate against. This script re-implements, operation
+for operation, exactly what the rust driver does:
+
+  * `fleet::topology`            — the device specs (tier, speed factor,
+                                   workers, link scale) and the built-in
+                                   presets (1x1 / 4x2 / 8x4 / hetero);
+  * `fleet::select`              — eq. 1 scored over every placement
+                                   (edge: T̂_exe·slow + Ŵ; cloud:
+                                   T̂_tx·link + T̂_exe·slow + Ŵ), arg-min
+                                   with lowest-id ties and the pair
+                                   router's `≤` on the edge/cloud tie;
+  * `scheduler::dispatch`        — the N-lane generalisation of the
+                                   two-lane event loop: one ring-buffer
+                                   queue + capacity tracker per lane,
+                                   lowest lane index winning start-time
+                                   ties, hedge races spanning arbitrary
+                                   lane pairs via arena entries that
+                                   record their two lanes;
+  * `sim::harness::run_fleet`    — the open-loop replay: heartbeat +
+                                   timestamped T_tx observations, blind
+                                   round-robin / seeded-random replica
+                                   baselines, hedged best-edge vs
+                                   best-cloud placement, per-device
+                                   result accounting, link-scaled
+                                   network charging;
+  * `experiments::fleet`         — the shape grid, per-shape workload
+                                   seeding via `util::rng::cell_seed`,
+                                   and the report JSON layout.
+
+On every run the script first re-proves the 1×1 anchor: the fleet path
+on the pair topology must reproduce `load_sweep_mirror.run_contended`
+float-for-float (blind ≡ cnmt, select ≡ cnmt+queue, hedge ≡ the
+adaptive configuration with the RLS refit disabled) — the same
+differential the rust test suite runs against `run_contended`.
+
+Keep this file in lockstep with the rust sources. When both toolchains
+are available, `cnmt experiment fleet --out reports` and this script
+must agree (bit-for-bit up to libm rounding).
+
+Usage:
+    python3 python/tools/fleet_sweep_mirror.py [--out reports/fleet_sweep.json]
+    python3 python/tools/fleet_sweep_mirror.py --shapes 1x1,4x2 --requests 5000
+"""
+
+import argparse
+import heapq
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from load_sweep_mirror import (  # noqa: E402
+    BATCH_RESIDUAL,
+    BUCKET_WIDTH,
+    CLOUD_PLANE,
+    EDGE_PLANE,
+    LOOKAHEAD,
+    MASK,
+    MAX_BATCH,
+    MAX_QUEUE_DEPTH,
+    N2M_DELTA,
+    N2M_GAMMA,
+    SEED,
+    TTX_ALPHA,
+    TTX_PRIOR,
+    TTX_REFRESH_S,
+    Histogram,
+    Rng,
+    TtxEstimator,
+    n2m_predict,
+    run_contended,
+    synth_workload,
+    texe_estimate,
+    to_json_value,
+    write_json,
+)
+
+EDGE, CLOUD = "edge", "cloud"
+QUEUED, RUNNING, DONE, CANCELLED = 0, 1, 2, 3
+SOLO, WIN, LOSS = 0, 1, 2
+
+# experiments::fleet constants.
+REQUESTS_PER_POINT = 20000
+FLEET_HEDGE_MARGIN_S = 0.010
+RANDOM_PICK_TAG = 0xF1E37
+DEFAULT_SHAPES = ["1x1", "4x2", "8x4", "hetero"]
+OFFERED_RPS = {"1x1": 96.0, "4x2": 288.0, "8x4": 576.0, "hetero": 224.0}
+
+
+def cell_seed(master, cell):
+    """Mirror of util::rng::cell_seed."""
+    return (master ^ (((cell + 1) * 0x9E3779B97F4A7C15) & MASK)) & MASK
+
+
+def rng_usize(rng, n):
+    """Mirror of util::rng::Rng::usize (Lemire multiply-shift, debiased)."""
+    threshold = ((1 << 64) - n) % n
+    while True:
+        x = rng.next_u64()
+        m = x * n
+        if (m & MASK) >= threshold:
+            return m >> 64
+
+
+# ---------------------------------------------------------------- topology
+
+
+def device(name, tier, speed, workers, link_scale):
+    return {
+        "name": name,
+        "tier": tier,
+        "speed": speed,
+        "workers": workers,
+        "link_scale": link_scale,
+    }
+
+
+def topo_pair():
+    return {
+        "name": "1x1",
+        "devices": [
+            device("edge0", EDGE, 1.0, 1, 1.0),
+            device("cloud0", CLOUD, 1.0, 4, 1.0),
+        ],
+    }
+
+
+def topo_uniform(edges, clouds):
+    devs = [device(f"edge{i}", EDGE, 1.0, 1, 1.0) for i in range(edges)]
+    devs += [device(f"cloud{i}", CLOUD, 1.0, 4, 1.0) for i in range(clouds)]
+    return {"name": f"{edges}x{clouds}", "devices": devs}
+
+
+def topo_hetero():
+    return {
+        "name": "hetero",
+        "devices": [
+            device("edge0", EDGE, 2.0, 1, 1.0),
+            device("edge1", EDGE, 1.0, 1, 1.0),
+            device("edge2", EDGE, 1.0, 1, 1.0),
+            device("edge3", EDGE, 0.5, 1, 1.0),
+            device("cloud0", CLOUD, 1.0, 4, 1.0),
+            device("cloud1", CLOUD, 0.5, 4, 1.5),
+        ],
+    }
+
+
+def topo_preset(name):
+    if name == "1x1":
+        return topo_pair()
+    if name == "hetero":
+        return topo_hetero()
+    e, _, c = name.partition("x")
+    return topo_uniform(int(e), int(c))
+
+
+# ---------------------------------------------------------------- N-lane dispatcher
+
+
+class FleetLane:
+    """AdmissionQueue + CapacityTracker for one fleet device."""
+
+    def __init__(self, workers):
+        self.items = []
+        self.free_at = [0.0] * workers
+        self.backlog_est_s = 0.0
+        self.dead = 0
+        self.peak_depth = 0
+
+    def has_room(self):
+        return len(self.items) - self.dead < MAX_QUEUE_DEPTH
+
+    def offer(self, rq):
+        if not self.has_room():
+            return False
+        self.items.append(rq)
+        self.peak_depth = max(self.peak_depth, len(self.items) - self.dead)
+        self.backlog_est_s += max(rq[4], 0.0)
+        return True
+
+    def earliest_free(self):
+        best_i, best_t = 0, self.free_at[0]
+        for i in range(1, len(self.free_at)):
+            if self.free_at[i] < best_t:
+                best_i, best_t = i, self.free_at[i]
+        return best_i, best_t
+
+    def expected_wait_s(self, now_s):
+        inflight = 0.0
+        for t in self.free_at:
+            if t > now_s:
+                inflight += t - now_s
+        return (inflight + self.backlog_est_s) / len(self.free_at)
+
+    def on_cancel(self, est):
+        self.backlog_est_s = max(self.backlog_est_s - max(est, 0.0), 0.0)
+
+
+class FleetDispatcher:
+    """Mirror of the N-lane scheduler::Dispatcher. Hedge arena entries
+    record the two lanes they span: [lane_a, lane_b, est_a, est_b,
+    state_a, state_b, winner_side]."""
+
+    def __init__(self, tiers, workers):
+        self.tiers = tiers
+        self.lanes = [FleetLane(w) for w in workers]
+        self.batches = 0
+        self.batch_requests = 0
+        self.pending = []
+        self.seq = 0
+        self.arena = []
+        self.arena_free = []
+        self.hs_hedged = 0
+        self.hs_wins_edge = 0
+        self.hs_wins_cloud = 0
+        self.hs_cancelled = 0
+        self.hs_losers = 0
+
+    def arena_alloc(self, entry):
+        if self.arena_free:
+            idx = self.arena_free.pop()
+            self.arena[idx] = entry
+            return idx
+        self.arena.append(entry)
+        return len(self.arena) - 1
+
+    def arena_release(self, idx):
+        self.arena[idx] = None
+        self.arena_free.append(idx)
+
+    def submit_lane(self, lane, rq):
+        return self.lanes[lane].offer(rq)
+
+    def submit_hedged_lanes(self, rq, lane_a, est_a, lane_b, est_b):
+        if self.lanes[lane_a].has_room() and self.lanes[lane_b].has_room():
+            idx = self.arena_alloc([lane_a, lane_b, est_a, est_b, QUEUED, QUEUED, None])
+            a_rq = rq[:4] + (est_a,) + rq[5:7] + (idx,)
+            b_rq = rq[:4] + (est_b,) + rq[5:7] + (idx,)
+            self.lanes[lane_a].offer(a_rq)
+            self.lanes[lane_b].offer(b_rq)
+            self.hs_hedged += 1
+            return "hedged"
+        a_rq = rq[:4] + (est_a,) + rq[5:]
+        b_rq = rq[:4] + (est_b,) + rq[5:]
+        a_ok = self.lanes[lane_a].offer(a_rq)
+        b_ok = self.lanes[lane_b].offer(b_rq)
+        if a_ok:
+            return ("single", lane_a)
+        if b_ok:
+            return ("single", lane_b)
+        return "rejected"
+
+    def _ghost_side(self, entry, lane):
+        return 4 if entry[0] == lane else 5
+
+    def lane_next_start(self, li):
+        lane = self.lanes[li]
+        arena = self.arena
+        while True:
+            if not lane.items:
+                return None
+            head = lane.items[0]
+            hid = head[7]
+            if hid is not None and arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                lane.items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+                continue
+            _w, free_s = lane.earliest_free()
+            return max(free_s, head[5])
+
+    def next_batch_start(self):
+        best = None
+        for li in range(len(self.lanes)):
+            s = self.lane_next_start(li)
+            if s is None:
+                continue
+            # Strict < keeps the lowest lane index on ties.
+            if best is None or s < best[1]:
+                best = (li, s)
+        return best
+
+    def next_event_s(self):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return None
+        if ns is None:
+            return nd
+        if nd is None:
+            return ns[1]
+        return min(ns[1], nd)
+
+    def form_batch(self, lane, li, start_s):
+        items = lane.items
+        arena = self.arena
+        while True:
+            if not items:
+                return []
+            head = items[0]
+            hid = head[7]
+            if hid is not None and arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+            else:
+                break
+        head = items.pop(0)
+        bucket = head[6]
+        batch = [head]
+        i = 0
+        scanned = 0
+        while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
+            if i >= len(items):
+                break
+            rq = items[i]
+            hid = rq[7]
+            if hid is not None and arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                del items[i]
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+                continue
+            if rq[6] == bucket and rq[5] <= start_s:
+                batch.append(rq)
+                del items[i]
+            else:
+                i += 1
+            scanned += 1
+        return batch
+
+    def dispatch_at(self, li, start_s, exec_fn):
+        lane = self.lanes[li]
+        batch = self.form_batch(lane, li, start_s)
+        if not batch:
+            return
+        for rq in batch:
+            if rq[7] is not None:
+                entry = self.arena[rq[7]]
+                entry[self._ghost_side(entry, li)] = RUNNING
+        est_sum = 0.0
+        for rq in batch:
+            est_sum += rq[4]
+        service_s = max(exec_fn(li, batch, start_s), 0.0)
+        done_s = start_s + service_s
+        worker, _free = lane.earliest_free()
+        lane.backlog_est_s = max(lane.backlog_est_s - est_sum, 0.0)
+        lane.free_at[worker] = done_s
+        self.batches += 1
+        self.batch_requests += len(batch)
+        bsize = len(batch)
+        for rq in batch:
+            heapq.heappush(self.pending, (done_s, self.seq, start_s, bsize, li, rq))
+            self.seq += 1
+
+    def resolve_completion(self, li, hid):
+        if hid is None:
+            return SOLO
+        entry = self.arena[hid]
+        side = 0 if entry[0] == li else 1
+        entry[4 + side] = DONE
+        if entry[6] is not None:
+            self.arena_release(hid)
+            self.hs_losers += 1
+            return LOSS
+        entry[6] = side
+        if self.tiers[li] == EDGE:
+            self.hs_wins_edge += 1
+        else:
+            self.hs_wins_cloud += 1
+        twin = 1 - side
+        if entry[4 + twin] == QUEUED:
+            entry[4 + twin] = CANCELLED
+            self.hs_cancelled += 1
+            twin_lane = entry[twin]
+            self.lanes[twin_lane].on_cancel(entry[2 + twin])
+            self.lanes[twin_lane].dead += 1
+        return WIN
+
+    def flush_one(self, out):
+        done_s, _seq, start_s, bsize, li, rq = heapq.heappop(self.pending)
+        kind = self.resolve_completion(li, rq[7])
+        out.append((rq, li, start_s, done_s, bsize, kind))
+
+    def step(self, horizon_s, exec_fn, out):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return False
+        completion_first = ns is None or (nd is not None and nd <= ns[1])
+        if completion_first:
+            if nd > horizon_s:
+                return False
+            self.flush_one(out)
+        else:
+            li, start_s = ns
+            if start_s > horizon_s:
+                return False
+            self.dispatch_at(li, start_s, exec_fn)
+        return True
+
+    def run_until(self, horizon_s, exec_fn, out):
+        while self.step(horizon_s, exec_fn, out):
+            pass
+
+
+# ---------------------------------------------------------------- fleet harness
+
+
+class FleetState:
+    """Mirror of run_fleet's selector + executor + accounting state."""
+
+    def __init__(self, pool, topo, strategy, hedge_margin_s, pick_seed):
+        self.pool = pool
+        self.strategy = strategy
+        self.hedge_margin_s = hedge_margin_s
+        devs = topo["devices"]
+        self.tiers = [d["tier"] for d in devs]
+        self.slowdown = [1.0 / d["speed"] for d in devs]
+        self.link_scale = [d["link_scale"] for d in devs]
+        self.texe = []
+        for d in devs:
+            base = EDGE_PLANE if d["tier"] == EDGE else CLOUD_PLANE
+            slow = 1.0 / d["speed"]
+            self.texe.append((base[0] * slow, base[1] * slow, base[2] * slow))
+        self.edge_ids = [i for i, t in enumerate(self.tiers) if t == EDGE]
+        self.cloud_ids = [i for i, t in enumerate(self.tiers) if t == CLOUD]
+        self.ttx = TtxEstimator(TTX_ALPHA)
+        self.disp = FleetDispatcher(self.tiers, [d["workers"] for d in devs])
+        self.rr = [0, 0]
+        self.pick_rng = Rng(pick_seed) if strategy == "random" else None
+        # Accounting (mirror of FleetAcct).
+        self.hist = Histogram()
+        self.stats_count = 0
+        self.stats_mean = 0.0
+        self.device_results = [0] * len(devs)
+        self.edge_count = 0
+        self.cloud_count = 0
+        self.completed = 0
+        self.last_done_s = 0.0
+        self.useful_work_s = 0.0
+        self.wasted_work_s = 0.0
+
+    def exec_fn(self, li, batch, _start_s):
+        mx = 0.0
+        sm = 0.0
+        tier = self.tiers[li]
+        slow = self.slowdown[li]
+        for rq in batch:
+            truth = self.pool[rq[1]]
+            base = truth.t_edge if tier == EDGE else truth.t_cloud
+            t = base * slow
+            if t > mx:
+                mx = t
+            sm += t
+        return mx + (sm - mx) * BATCH_RESIDUAL
+
+    def best_of(self, ids, n, m_est, ttx_est, waits):
+        best_d, best_score, best_est = -1, math.inf, math.inf
+        for d in ids:
+            est = texe_estimate(self.texe[d], n, m_est)
+            if self.tiers[d] == EDGE:
+                score = est + waits[d]
+            else:
+                score = ttx_est * self.link_scale[d] + est + waits[d]
+            if score < best_score:
+                best_d, best_score, best_est = d, score, est
+        return best_d, best_score, best_est
+
+    def select(self, n, waits):
+        m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, n)
+        ttx_est = self.ttx.estimate_or(TTX_PRIOR)
+        be = self.best_of(self.edge_ids, n, m_est, ttx_est, waits)
+        bc = self.best_of(self.cloud_ids, n, m_est, ttx_est, waits)
+        best = be if be[1] <= bc[1] else bc
+        return {
+            "device": best[0],
+            "m_est": m_est,
+            "est": best[2],
+            "best_edge": be,
+            "best_cloud": bc,
+        }
+
+    def process(self, comps):
+        for rq, li, _start_s, done_s, _bsize, kind in comps:
+            truth = self.pool[rq[1]]
+            tier = self.tiers[li]
+            base = truth.t_edge if tier == EDGE else truth.t_cloud
+            t_true = base * self.slowdown[li]
+            if kind == LOSS:
+                self.wasted_work_s += t_true
+                continue
+            self.useful_work_s += t_true
+            tx_s = truth.t_tx * self.link_scale[li] if tier == CLOUD else 0.0
+            latency = (done_s - rq[5]) + tx_s
+            self.hist.record(latency)
+            self.stats_count += 1
+            self.stats_mean += (latency - self.stats_mean) / self.stats_count
+            if tier == EDGE:
+                self.edge_count += 1
+            else:
+                self.cloud_count += 1
+            self.device_results[li] += 1
+            self.completed += 1
+            if done_s + tx_s > self.last_done_s:
+                self.last_done_s = done_s + tx_s
+
+
+def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0):
+    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed)
+    n_dev = len(st.tiers)
+    queue_aware = strategy in ("select", "hedge")
+    waits = [0.0] * n_dev
+    rejected = 0
+    for i, truth in enumerate(pool):
+        now = truth.arrival_s
+        comps = []
+        st.disp.run_until(now, st.exec_fn, comps)
+        st.process(comps)
+        if st.ttx.is_stale(now, TTX_REFRESH_S):
+            st.ttx.observe(now, truth.rtt)
+        if queue_aware:
+            for d in range(n_dev):
+                waits[d] = st.disp.lanes[d].expected_wait_s(now)
+        else:
+            for d in range(n_dev):
+                waits[d] = 0.0
+        trace = st.select(truth.n, waits)
+        bucket = int(max(trace["m_est"], 0.0) / BUCKET_WIDTH)
+        rq = (i, i, truth.n, trace["m_est"], 0.0, now, bucket, None)
+        hedge = False
+        if strategy == "hedge":
+            margin = trace["best_edge"][1] - trace["best_cloud"][1]
+            hedge = (
+                hedge_margin_s > 0.0
+                and math.isfinite(margin)
+                and abs(margin) <= hedge_margin_s
+            )
+        if hedge:
+            be, bc = trace["best_edge"], trace["best_cloud"]
+            outcome = st.disp.submit_hedged_lanes(rq, be[0], be[2], bc[0], bc[2])
+            cloud_in_flight = outcome == "hedged" or (
+                isinstance(outcome, tuple) and st.tiers[outcome[1]] == CLOUD
+            )
+            if cloud_in_flight:
+                st.ttx.observe(now, truth.rtt)
+            if outcome == "rejected":
+                rejected += 1
+        else:
+            if strategy in ("select", "hedge"):
+                dev = trace["device"]
+            elif strategy == "static":
+                ti = 0 if st.tiers[trace["device"]] == EDGE else 1
+                ids = st.edge_ids if ti == 0 else st.cloud_ids
+                dev = ids[st.rr[ti] % len(ids)]
+                st.rr[ti] += 1
+            else:  # random
+                ids = st.edge_ids if st.tiers[trace["device"]] == EDGE else st.cloud_ids
+                dev = ids[rng_usize(st.pick_rng, len(ids))]
+            est = (
+                trace["est"]
+                if dev == trace["device"]
+                else texe_estimate(st.texe[dev], truth.n, trace["m_est"])
+            )
+            rq = rq[:4] + (est,) + rq[5:]
+            if st.tiers[dev] == CLOUD:
+                st.ttx.observe(now, truth.rtt)
+            if not st.disp.submit_lane(dev, rq):
+                rejected += 1
+    comps = []
+    st.disp.run_until(float("inf"), st.exec_fn, comps)
+    st.process(comps)
+
+    first_arrival = pool[0].arrival_s if pool else 0.0
+    makespan_s = max(st.last_done_s - first_arrival, 0.0)
+    disp = st.disp
+    offered = len(pool)
+    useful = st.useful_work_s
+    wasted = st.wasted_work_s
+    total_work = useful + wasted
+    label = {
+        "static": "fleet+static",
+        "random": "fleet+random",
+        "select": "fleet+select",
+        "hedge": "fleet+hedge",
+    }[strategy]
+    return {
+        "policy": label,
+        "queue_aware": queue_aware,
+        "offered": float(offered),
+        "completed": float(st.completed),
+        "rejected": float(rejected),
+        "shed_rate": (rejected / offered) if offered else 0.0,
+        "edge_count": float(st.edge_count),
+        "cloud_count": float(st.cloud_count),
+        "makespan_s": makespan_s,
+        "throughput_rps": st.completed / makespan_s if makespan_s > 0.0 else 0.0,
+        "mean_latency_s": st.stats_mean if st.stats_count else float("nan"),
+        "p50_s": st.hist.quantile(0.50),
+        "p95_s": st.hist.quantile(0.95),
+        "p99_s": st.hist.quantile(0.99),
+        "mean_batch": (
+            disp.batch_requests / disp.batches if disp.batches else float("nan")
+        ),
+        "hedged": float(disp.hs_hedged),
+        "hedge_rate": (disp.hs_hedged / offered) if offered else 0.0,
+        "hedge_wins_edge": float(disp.hs_wins_edge),
+        "hedge_wins_cloud": float(disp.hs_wins_cloud),
+        "hedge_cancelled": float(disp.hs_cancelled),
+        "hedge_wasted": float(disp.hs_losers),
+        "useful_work_s": useful,
+        "wasted_work_s": wasted,
+        "wasted_frac": wasted / total_work if total_work > 0.0 else 0.0,
+        "device_results": [float(c) for c in st.device_results],
+        "peak_depths": [float(lane.peak_depth) for lane in disp.lanes],
+    }
+
+
+# ---------------------------------------------------------------- 1x1 anchor check
+
+
+def check_pair_anchor(requests=4000, load=96.0):
+    """Re-prove the 1×1 differential on every run: the fleet path on the
+    pair topology must reproduce the pair mirror float-for-float."""
+    pool = synth_workload(0xF1EE7 + int(load), requests, load)
+    topo = topo_pair()
+    fields = [
+        "offered",
+        "completed",
+        "rejected",
+        "edge_count",
+        "cloud_count",
+        "makespan_s",
+        "throughput_rps",
+        "mean_latency_s",
+        "p50_s",
+        "p95_s",
+        "p99_s",
+        "mean_batch",
+        "hedged",
+        "hedge_wins_edge",
+        "hedge_wins_cloud",
+        "hedge_cancelled",
+        "hedge_wasted",
+        "useful_work_s",
+        "wasted_work_s",
+    ]
+
+    def compare(tag, fleet_r, pair_r):
+        for f in fields:
+            fv, pv = fleet_r[f], pair_r[f]
+            same = (fv == pv) or (math.isnan(fv) and math.isnan(pv))
+            assert same, f"1x1 anchor diverged [{tag}] {f}: fleet {fv} vs pair {pv}"
+        assert fleet_r["peak_depths"] == [
+            pair_r["edge_peak_depth"],
+            pair_r["cloud_peak_depth"],
+        ], f"1x1 anchor diverged [{tag}] peak depths"
+
+    compare("static≡cnmt", run_fleet(pool, topo, "static"), run_contended(pool, "cnmt", False))
+    compare(
+        "random≡cnmt",
+        run_fleet(pool, topo, "random", pick_seed=7),
+        run_contended(pool, "cnmt", False),
+    )
+    compare(
+        "select≡cnmt+queue",
+        run_fleet(pool, topo, "select"),
+        run_contended(pool, "cnmt", True),
+    )
+    no_refit = {
+        "hedge_margin_s": FLEET_HEDGE_MARGIN_S,
+        "rls_lambda": 0.998,
+        "rls_prior_var": 1.0,
+        "refit_min_obs": float("inf"),  # the refit planes never install
+        "refit_ttx": False,
+    }
+    compare(
+        "hedge≡cnmt+adaptive[no-refit]",
+        run_fleet(pool, topo, "hedge"),
+        run_contended(pool, "cnmt", True, no_refit),
+    )
+    print(f"1x1 anchor OK: fleet path ≡ pair path over {requests} requests @ {load:g} r/s")
+
+
+# ---------------------------------------------------------------- sweep + json
+
+STRATEGIES = ["static", "random", "select", "hedge"]
+
+
+def run_sweep(shape_names, requests_per_point, seed=SEED):
+    cells = []
+    for i, name in enumerate(shape_names):
+        topo = topo_preset(name)
+        offered = OFFERED_RPS.get(name)
+        if offered is None:
+            edges = sum(1 for d in topo["devices"] if d["tier"] == EDGE)
+            clouds = len(topo["devices"]) - edges
+            offered = edges * 16.0 + clouds * 112.0
+        workload_seed = cell_seed(seed, i)
+        pool = synth_workload(workload_seed, requests_per_point, offered)
+        policies = {}
+        for strategy in STRATEGIES:
+            r = run_fleet(
+                pool,
+                topo,
+                strategy,
+                FLEET_HEDGE_MARGIN_S,
+                pick_seed=workload_seed ^ RANDOM_PICK_TAG,
+            )
+            policies[r["policy"]] = r
+        cells.append(
+            {"name": topo["name"], "topo": topo, "offered_rps": offered, "policies": policies}
+        )
+    return cells
+
+
+def sweep_to_json(cells, requests_per_point, seed=SEED):
+    shapes = []
+    headline = float("nan")
+    # First 8x4 cell, else the last cell — mirror of FleetSweep::headline_cell.
+    headline_cell = next((c for c in cells if c["name"] == "8x4"), None)
+    if headline_cell is None and cells:
+        headline_cell = cells[-1]
+    for c in cells:
+        edges = sum(1 for d in c["topo"]["devices"] if d["tier"] == EDGE)
+        clouds = len(c["topo"]["devices"]) - edges
+        vs_random = c["policies"]["fleet+random"]["p99_s"] / c["policies"]["fleet+select"]["p99_s"]
+        vs_static = c["policies"]["fleet+static"]["p99_s"] / c["policies"]["fleet+select"]["p99_s"]
+        if c is headline_cell:
+            headline = vs_random
+        shapes.append(
+            {
+                "name": c["name"],
+                "offered_rps": c["offered_rps"],
+                "edges": float(edges),
+                "clouds": float(clouds),
+                "topology": {
+                    "name": c["topo"]["name"],
+                    "devices": [
+                        {
+                            "name": d["name"],
+                            "tier": d["tier"],
+                            "speed": d["speed"],
+                            "workers": float(d["workers"]),
+                            "link_scale": d["link_scale"],
+                        }
+                        for d in c["topo"]["devices"]
+                    ],
+                },
+                "policies": c["policies"],
+                "p99_ratio_vs_random": vs_random,
+                "p99_ratio_vs_static": vs_static,
+            }
+        )
+    return {
+        "seed": float(SEED if seed is None else seed),
+        "requests_per_point": float(requests_per_point),
+        "hedge_margin_s": FLEET_HEDGE_MARGIN_S,
+        "shapes": shapes,
+        "headline_p99_ratio": headline,
+    }
+
+
+def summarize(cells):
+    hdr = (
+        f"{'shape':>7} {'policy':<13} {'goodput':>8} {'shed%':>6} {'p50ms':>8} "
+        f"{'p95ms':>8} {'p99ms':>9} {'batch':>6} {'hedge%':>7} {'waste%':>7} {'edge/cloud':>12}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for c in cells:
+        for label in ["fleet+static", "fleet+random", "fleet+select", "fleet+hedge"]:
+            r = c["policies"][label]
+            print(
+                f"{c['name']:>7} {label:<13} {r['throughput_rps']:>8.1f} "
+                f"{r['shed_rate'] * 100:>6.1f} {r['p50_s'] * 1e3:>8.1f} "
+                f"{r['p95_s'] * 1e3:>8.1f} {r['p99_s'] * 1e3:>9.1f} "
+                f"{r['mean_batch']:>6.2f} {r['hedge_rate'] * 100:>7.1f} "
+                f"{r['wasted_frac'] * 100:>7.1f} "
+                f"{int(r['edge_count'])}/{int(r['cloud_count']):>5}"
+            )
+    for c in cells:
+        sel = c["policies"]["fleet+select"]["p99_s"]
+        rnd = c["policies"]["fleet+random"]["p99_s"]
+        sta = c["policies"]["fleet+static"]["p99_s"]
+        print(
+            f"{c['name']} @ {c['offered_rps']:g} r/s: select p99 {rnd / sel:.1f}x "
+            f"shorter than random, {sta / sel:.1f}x shorter than static"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--shapes",
+        default=None,
+        help="comma-separated presets (mirrors cnmt --shapes; default 1x1,4x2,8x4,hetero)",
+    )
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=REQUESTS_PER_POINT,
+        help="requests per (shape x strategy) cell (mirrors cnmt --fleet-requests)",
+    )
+    ap.add_argument(
+        "--anchor-requests",
+        type=int,
+        default=4000,
+        help="request count of the always-on 1x1 pair-equivalence check (0 skips)",
+    )
+    args = ap.parse_args()
+
+    if args.anchor_requests > 0:
+        check_pair_anchor(args.anchor_requests)
+
+    shape_names = args.shapes.split(",") if args.shapes else DEFAULT_SHAPES
+    cells = run_sweep([s.strip() for s in shape_names], args.requests)
+    root = sweep_to_json(cells, args.requests)
+    write_json(args.out or "reports/fleet_sweep.json", root)
+    summarize(cells)
+    print(
+        "\nheadline: select vs random p99 on the headline shape = "
+        f"{root['headline_p99_ratio']:.1f}x"
+    )
+
+
+if __name__ == "__main__":
+    main()

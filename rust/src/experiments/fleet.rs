@@ -1,0 +1,468 @@
+//! Fleet sweep: routing strategies compared across fleet shapes.
+//!
+//! The load sweep ([`super::load`]) stresses the paper's 1×1 pair; this
+//! sweep generalises the question to fleets: given N edge devices and M
+//! cloud replicas ([`crate::fleet::Topology`]), how much does
+//! **fleet-wide queue-aware placement** buy over blind replica
+//! assignment? Four strategies replay the identical workload per shape:
+//!
+//! * `fleet+static` — tier by idle eq. 1, replica by round-robin;
+//! * `fleet+random` — tier by idle eq. 1, replica drawn uniformly
+//!   (seeded, deterministic);
+//! * `fleet+select` — the tentpole: every placement scored with eq. 1
+//!   plus its expected wait, arg-min wins
+//!   ([`crate::fleet::FleetSelector`]);
+//! * `fleet+hedge` — `fleet+select` plus racing the best edge placement
+//!   against the best cloud placement inside the error bar.
+//!
+//! Shapes swept by default: the `1x1` anchor (bit-identical to the pair
+//! path — the differential tests in `sim::harness` prove it), uniform
+//! `4x2` and `8x4` scale-ups, and a `hetero` mix of device speeds and
+//! link qualities. Offered load scales with each shape's capacity so
+//! every point sits in the contended regime where placement matters.
+//!
+//! Cells (shape × strategy) are sharded across threads by
+//! [`super::runner::run_cells`]; every cell reseeds from the pure split
+//! [`cell_seed`], so `reports/fleet_sweep.json` is **byte-identical at
+//! any thread count**. The standalone mirror
+//! `python/tools/fleet_sweep_mirror.py` regenerates the same bytes with
+//! no rust toolchain — keep the two in lockstep when editing any
+//! constant here.
+
+use crate::fleet::{FleetStrategy, Topology};
+use crate::sim::harness::RequestTruth;
+use crate::sim::{run_fleet, Characterization, FleetOpts, FleetResult};
+use crate::util::rng::cell_seed;
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::load::synth_workload;
+use super::report::text_table;
+use super::runner;
+
+/// Hedge error bar of the `fleet+hedge` configuration (seconds) —
+/// matches the pair sweep's [`crate::sim::AdaptiveOpts`] default.
+pub const FLEET_HEDGE_MARGIN_S: f64 = 0.010;
+/// Seed tag mixed into a shape's workload seed to derive the
+/// `fleet+random` replica-pick stream.
+const RANDOM_PICK_TAG: u64 = 0xF1E37;
+
+/// One swept fleet shape: a topology plus the offered load it is
+/// stressed at.
+#[derive(Debug, Clone)]
+pub struct ShapeSpec {
+    /// The fleet topology.
+    pub topo: Topology,
+    /// Open-loop offered load (r/s), scaled to the shape's capacity.
+    pub offered_rps: f64,
+}
+
+/// Default offered load for a shape: tuned values for the standard
+/// presets (the pair saturates near 100 r/s in the load sweep; the
+/// scale-ups multiply that), a capacity-proportional heuristic for
+/// anything else (an edge worker sustains ~16 r/s batched, a 4-worker
+/// baseline replica ~112 r/s).
+pub fn default_offered_rps(topo: &Topology) -> f64 {
+    match topo.name.as_str() {
+        "1x1" => 96.0,
+        "4x2" => 288.0,
+        "8x4" => 576.0,
+        "hetero" => 224.0,
+        _ => {
+            let (e, c) = topo.shape();
+            e as f64 * 16.0 + c as f64 * 112.0
+        }
+    }
+}
+
+/// The default shape grid: the 1×1 anchor, uniform scale-ups and a
+/// heterogeneous mix, each at its tuned offered load.
+pub fn default_shapes() -> Vec<ShapeSpec> {
+    ["1x1", "4x2", "8x4", "hetero"]
+        .iter()
+        .map(|n| {
+            let topo = Topology::preset(n).expect("built-in preset resolves");
+            let offered_rps = default_offered_rps(&topo);
+            ShapeSpec { topo, offered_rps }
+        })
+        .collect()
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Master seed of the sweep.
+    pub seed: u64,
+    /// Requests simulated at each (shape × strategy) cell.
+    pub requests_per_point: usize,
+    /// Shapes to sweep.
+    pub shapes: Vec<ShapeSpec>,
+    /// Scheduler sizing shared by every cell (`strategy` is overridden
+    /// per cell).
+    pub opts: FleetOpts,
+    /// Hedge error bar for the `fleet+hedge` cells (seconds).
+    pub hedge_margin_s: f64,
+    /// OS threads to shard cells across ([`super::runner`]); results
+    /// are bit-identical at any value. 1 = serial (the mirror's mode).
+    pub threads: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            seed: 20220315,
+            requests_per_point: 20_000,
+            shapes: default_shapes(),
+            opts: FleetOpts::default(),
+            hedge_margin_s: FLEET_HEDGE_MARGIN_S,
+            threads: 1,
+        }
+    }
+}
+
+/// The four strategies evaluated at one shape. `workload_seed` is the
+/// shape's [`cell_seed`] split; the random baseline's replica stream is
+/// derived from it so every cell stays a pure function of the master
+/// seed.
+fn strategies(workload_seed: u64, hedge_margin_s: f64) -> [FleetStrategy; 4] {
+    [
+        FleetStrategy::Static,
+        FleetStrategy::Random { seed: workload_seed ^ RANDOM_PICK_TAG },
+        FleetStrategy::Select,
+        FleetStrategy::Hedged { margin_s: hedge_margin_s },
+    ]
+}
+
+/// All strategies evaluated on one shape.
+#[derive(Debug, Clone)]
+pub struct ShapeCell {
+    /// The swept shape.
+    pub shape: ShapeSpec,
+    /// One result per strategy.
+    pub results: Vec<FleetResult>,
+}
+
+impl ShapeCell {
+    /// Result for a strategy label (panics when absent — report bug).
+    pub fn get(&self, policy: &str) -> &FleetResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing fleet policy {policy}"))
+    }
+
+    /// p99 ratio (random / select) — the shape's headline: how much
+    /// tail the queue-aware arg-min buys over blind random assignment.
+    pub fn p99_vs_random(&self) -> f64 {
+        self.get("fleet+random").p99_s / self.get("fleet+select").p99_s
+    }
+
+    /// p99 ratio (static round-robin / select).
+    pub fn p99_vs_static(&self) -> f64 {
+        self.get("fleet+static").p99_s / self.get("fleet+select").p99_s
+    }
+}
+
+/// Full fleet sweep result.
+#[derive(Debug, Clone)]
+pub struct FleetSweep {
+    /// One cell per shape.
+    pub cells: Vec<ShapeCell>,
+    /// Requests simulated per cell.
+    pub requests_per_point: usize,
+    /// Master seed of the sweep.
+    pub seed: u64,
+    /// Hedge error bar of the `fleet+hedge` cells (seconds).
+    pub hedge_margin_s: f64,
+}
+
+impl FleetSweep {
+    /// The headline shape: `8x4` when swept, else the last shape.
+    fn headline_cell(&self) -> Option<&ShapeCell> {
+        self.cells
+            .iter()
+            .find(|c| c.shape.topo.name == "8x4")
+            .or_else(|| self.cells.last())
+    }
+
+    /// Headline: random / select p99 ratio on the headline shape.
+    pub fn headline_p99_ratio(&self) -> f64 {
+        self.headline_cell().map_or(f64::NAN, |c| c.p99_vs_random())
+    }
+}
+
+/// Run the fleet sweep: every (shape × strategy) cell on the
+/// deterministic parallel runner, each shape replaying one shared
+/// workload seeded from the pure per-shape split of the master seed.
+pub fn run(cfg: &FleetConfig) -> Result<FleetSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("fleet sweep needs requests_per_point > 0".into()));
+    }
+    if cfg.shapes.is_empty() {
+        return Err(Error::Config("fleet sweep needs at least one shape".into()));
+    }
+    if !(cfg.hedge_margin_s >= 0.0) || !cfg.hedge_margin_s.is_finite() {
+        return Err(Error::Config(format!(
+            "fleet hedge margin {} must be finite and >= 0",
+            cfg.hedge_margin_s
+        )));
+    }
+    for s in &cfg.shapes {
+        s.topo.validate()?;
+        if !s.offered_rps.is_finite() || s.offered_rps <= 0.0 {
+            return Err(Error::Config(format!(
+                "shape {}: offered load {} r/s must be finite and > 0",
+                s.topo.name, s.offered_rps
+            )));
+        }
+    }
+    let n_strat = strategies(0, cfg.hedge_margin_s).len();
+    // Workloads are generated once per shape (pure functions of the
+    // per-shape seed split) and shared read-only by that shape's
+    // strategy cells — the same precompute-serially pattern the load
+    // sweep uses to keep the runner's determinism argument intact.
+    let workloads: Vec<(Vec<RequestTruth>, Characterization)> = cfg
+        .shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            synth_workload(cell_seed(cfg.seed, i as u64), cfg.requests_per_point, s.offered_rps)
+        })
+        .collect();
+    let outcomes = runner::run_cells(cfg.threads, cfg.shapes.len() * n_strat, |cell| {
+        let si = cell / n_strat;
+        let strategy = strategies(cell_seed(cfg.seed, si as u64), cfg.hedge_margin_s)
+            [cell % n_strat];
+        let (requests, ch) = &workloads[si];
+        run_fleet(
+            requests,
+            ch,
+            &cfg.shapes[si].topo,
+            &FleetOpts { strategy, ..cfg.opts },
+        )
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(cfg.shapes.len());
+    for shape in &cfg.shapes {
+        let mut results = Vec::with_capacity(n_strat);
+        for _ in 0..n_strat {
+            results.push(outcomes.next().expect("one outcome per fleet cell")?);
+        }
+        cells.push(ShapeCell { shape: shape.clone(), results });
+    }
+    Ok(FleetSweep {
+        cells,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        hedge_margin_s: cfg.hedge_margin_s,
+    })
+}
+
+/// Render the sweep as an aligned text table plus per-shape headlines.
+pub fn render_text(s: &FleetSweep) -> String {
+    let mut rows = vec![[
+        "shape",
+        "policy",
+        "goodput r/s",
+        "shed %",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "batch",
+        "hedge %",
+        "waste %",
+        "edge/cloud",
+    ]
+    .iter()
+    .map(|c| c.to_string())
+    .collect::<Vec<String>>()];
+    for c in &s.cells {
+        for r in &c.results {
+            rows.push(vec![
+                c.shape.topo.name.clone(),
+                r.policy.clone(),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.1}", r.shed_rate() * 100.0),
+                format!("{:.1}", r.p50_s * 1e3),
+                format!("{:.1}", r.p95_s * 1e3),
+                format!("{:.1}", r.p99_s * 1e3),
+                format!("{:.2}", r.mean_batch),
+                format!("{:.1}", r.hedge_rate() * 100.0),
+                format!("{:.1}", r.wasted_frac() * 100.0),
+                format!("{}/{}", r.edge_count, r.cloud_count),
+            ]);
+        }
+    }
+    let mut out = text_table(&rows);
+    for c in &s.cells {
+        out.push_str(&format!(
+            "\n{} @ {:.0} r/s: select p99 is {:.1}x shorter than random, {:.1}x \
+             shorter than static round-robin\n",
+            c.shape.topo.name,
+            c.shape.offered_rps,
+            c.p99_vs_random(),
+            c.p99_vs_static()
+        ));
+    }
+    out.push_str(&format!(
+        "\nheadline: fleet-wide queue-aware selection beats random replica \
+         assignment {:.1}x on p99 at equal goodput\n",
+        s.headline_p99_ratio()
+    ));
+    out
+}
+
+/// JSON report (`fleet_sweep.json`, written through
+/// [`super::report::write_report`]).
+pub fn to_json(s: &FleetSweep) -> Json {
+    let mut shapes = Vec::new();
+    for c in &s.cells {
+        let (edges, clouds) = c.shape.topo.shape();
+        let mut policies = Json::object();
+        for r in &c.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        let mut o = Json::object();
+        o.set("name", Json::Str(c.shape.topo.name.clone()))
+            .set("offered_rps", Json::Num(c.shape.offered_rps))
+            .set("edges", Json::Num(edges as f64))
+            .set("clouds", Json::Num(clouds as f64))
+            .set("topology", c.shape.topo.to_json())
+            .set("policies", policies)
+            .set("p99_ratio_vs_random", Json::Num(c.p99_vs_random()))
+            .set("p99_ratio_vs_static", Json::Num(c.p99_vs_static()));
+        shapes.push(o);
+    }
+    let mut root = Json::object();
+    root.set("seed", Json::Num(s.seed as f64))
+        .set("requests_per_point", Json::Num(s.requests_per_point as f64))
+        .set("hedge_margin_s", Json::Num(s.hedge_margin_s))
+        .set("shapes", Json::Array(shapes))
+        .set("headline_p99_ratio", Json::Num(s.headline_p99_ratio()));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_cfg() -> FleetConfig {
+        FleetConfig {
+            requests_per_point: 2_000,
+            shapes: vec![
+                ShapeSpec { topo: Topology::pair(), offered_rps: 96.0 },
+                ShapeSpec { topo: Topology::uniform(4, 2), offered_rps: 288.0 },
+            ],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn structure_and_conservation() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        assert_eq!(sweep.cells.len(), 2);
+        for cell in &sweep.cells {
+            assert_eq!(cell.results.len(), 4);
+            for r in &cell.results {
+                assert_eq!(r.offered, 2_000, "{}", r.policy);
+                assert_eq!(r.completed + r.rejected, r.offered, "{}", r.policy);
+                assert_eq!(
+                    r.device_results.iter().sum::<usize>(),
+                    r.completed,
+                    "{}",
+                    r.policy
+                );
+                assert_eq!(r.device_results.len(), cell.shape.topo.len());
+                assert!(r.p50_s <= r.p99_s + 1e-12, "{}", r.policy);
+                if r.policy != "fleet+hedge" {
+                    assert_eq!(r.hedged, 0, "{}", r.policy);
+                }
+            }
+            // Every strategy label present exactly once.
+            for label in ["fleet+static", "fleet+random", "fleet+select", "fleet+hedge"] {
+                assert_eq!(
+                    cell.results.iter().filter(|r| r.policy == label).count(),
+                    1,
+                    "{label}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        // The determinism acceptance property: the JSON bytes CI diffs
+        // must not depend on the thread count.
+        let mut cfg = smoke_cfg();
+        cfg.requests_per_point = 800;
+        let serial = to_json(&run(&cfg).unwrap()).to_string_pretty();
+        for threads in [2, 4, 7] {
+            cfg.threads = threads;
+            let parallel = to_json(&run(&cfg).unwrap()).to_string_pretty();
+            assert_eq!(parallel, serial, "{threads}-thread fleet sweep diverged");
+        }
+    }
+
+    #[test]
+    fn select_beats_blind_assignment_on_the_scaled_shapes() {
+        // Smoke-scale version of the acceptance criterion: on 4x2 the
+        // queue-aware arg-min beats both blind baselines on p99 at
+        // equal-or-better goodput.
+        let sweep = run(&smoke_cfg()).unwrap();
+        let cell = &sweep.cells[1];
+        assert_eq!(cell.shape.topo.name, "4x2");
+        let select = cell.get("fleet+select");
+        for blind in [cell.get("fleet+random"), cell.get("fleet+static")] {
+            assert!(
+                select.p99_s < blind.p99_s,
+                "select p99 {} not below {} p99 {}",
+                select.p99_s,
+                blind.policy,
+                blind.p99_s
+            );
+            assert!(
+                select.throughput_rps >= blind.throughput_rps * 0.999,
+                "select goodput {} below {} {}",
+                select.throughput_rps,
+                blind.policy,
+                blind.throughput_rps
+            );
+        }
+        assert!(cell.p99_vs_random() > 1.0);
+        assert!(cell.p99_vs_static() > 1.0);
+    }
+
+    #[test]
+    fn render_and_json_cover_all_shapes() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        let txt = render_text(&sweep);
+        assert!(txt.contains("fleet+select"));
+        assert!(txt.contains("fleet+hedge"));
+        assert!(txt.contains("headline"));
+        let j = to_json(&sweep);
+        let shapes = j.get("shapes").unwrap().as_array().unwrap();
+        assert_eq!(shapes.len(), 2);
+        let s0 = &shapes[0];
+        assert_eq!(s0.get("name").unwrap().as_str().unwrap(), "1x1");
+        assert!(s0.get("policies").unwrap().get("fleet+select").is_ok());
+        assert!(s0.get("topology").unwrap().get("devices").is_ok());
+        assert!(s0.get("p99_ratio_vs_random").is_ok());
+        assert!(j.get("headline_p99_ratio").is_ok());
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let mut cfg = smoke_cfg();
+        cfg.requests_per_point = 0;
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.shapes.clear();
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.shapes[0].offered_rps = -1.0;
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.hedge_margin_s = f64::NAN;
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -8,6 +8,7 @@
 //! | Fig. 4 (connection profiles) | [`fig4`] | `cnmt experiment fig4` |
 //! | Table I (policy comparison) | [`table1`] | `cnmt experiment table1` |
 //! | — (beyond paper: load sweep) | [`load`] | `cnmt experiment load` |
+//! | — (beyond paper: fleet sweep) | [`fleet`] | `cnmt experiment fleet` |
 //!
 //! Every driver prints a human-readable table and writes a JSON report
 //! through the one shared path ([`report::write_report`] over
@@ -19,6 +20,7 @@ pub mod energy;
 pub mod fig2a;
 pub mod fig3;
 pub mod fig4;
+pub mod fleet;
 pub mod load;
 pub mod multilevel;
 pub mod report;

@@ -1,0 +1,39 @@
+//! Fleet subsystem: N-device heterogeneous topologies and fleet-wide
+//! queue-aware placement.
+//!
+//! The paper — and everything in the repo through the scheduler v2 —
+//! pairs *one* edge gateway with *one* cloud server. The north star is a
+//! production-scale system, and production means a fleet: many edge
+//! devices of different speeds sharing a pool of cloud replicas behind
+//! links of different quality. This module supplies the two pieces that
+//! generalise the pair:
+//!
+//! * [`topology`] — the declarative fleet description: an ordered
+//!   [`DeviceSpec`] list (position = [`DeviceId`] = dispatcher lane)
+//!   with per-device tier, speed factor, worker count and link scale;
+//!   built-in presets (`1x1`, `4x2`, `8x4`, `hetero`) plus a JSON spec
+//!   loader.
+//! * [`select`] — eq. 1 extended to fleet scope: every feasible
+//!   placement is scored `T̂_exe,d + Ŵ_d` (edges) or
+//!   `T̂_tx·link_d + T̂_exe,d + Ŵ_d` (cloud replicas) and the arg-min
+//!   wins; the per-tier bests feed hedged dispatch (best edge raced
+//!   against best cloud inside the error bar).
+//!
+//! The scheduler side is the N-lane [`crate::scheduler::Dispatcher`]
+//! (one lane per device, same slab/ring machinery per lane);
+//! [`crate::sim::harness::run_fleet`] replays contended traffic over a
+//! topology, and [`crate::experiments::fleet`] sweeps fleet shapes to
+//! produce `reports/fleet_sweep.json`.
+//!
+//! **The 1×1 anchor:** on [`Topology::pair`] every fleet multiplier is
+//! the identity and the selector's arithmetic matches
+//! [`crate::coordinator::Router::decide_loaded`] operation for
+//! operation, so the fleet path is bit-identical to the classic pair
+//! path — asserted at the decision level (`select` unit tests) and the
+//! full-harness level (`tests/proptest_invariants.rs` differential).
+
+pub mod select;
+pub mod topology;
+
+pub use select::{FleetSelector, FleetStrategy, Placement, PlacementTrace};
+pub use topology::{DeviceId, DeviceSpec, Topology};

@@ -1,0 +1,446 @@
+//! Fleet-scope placement selection: eq. 1 over every feasible device.
+//!
+//! [`crate::coordinator::Router::decide_loaded`] compares exactly two
+//! placements — *the* edge against *the* cloud. The fleet selector
+//! generalises that comparison to N devices: every device `d` gets a
+//! score
+//!
+//! ```text
+//! edge tier:   score_d = T̂_exe,d(n, M̂) + Ŵ_d
+//! cloud tier:  score_d = T̂_tx·link_d + T̂_exe,d(n, M̂) + Ŵ_d
+//! ```
+//!
+//! where `T̂_exe,d` is the tier's calibrated plane scaled by the device's
+//! speed factor, `T̂_tx` the shared network estimate (one gateway EWMA —
+//! the fleet observes the network once, each replica pays its own
+//! `link_d` multiple of it) and `Ŵ_d` the device's expected queueing
+//! delay ([`crate::scheduler::Dispatcher::expected_wait_lane`]). The
+//! decision is the arg-min over all devices; ties resolve to the lowest
+//! device id, and an edge/cloud tie resolves to the edge — exactly the
+//! `≤` of the pair router, so on the 1×1 topology the selector's choice
+//! is **bit-identical** to `decide_loaded` (same float operations in the
+//! same order; the unit tests assert it).
+//!
+//! The trace additionally reports the best placement *per tier*, so the
+//! dispatcher can hedge the best edge placement against the best cloud
+//! placement when the [`PlacementTrace::margin_s`] between them sits
+//! inside the error bar — the fleet generalisation of the pair's hedged
+//! dispatch.
+//!
+//! [`FleetStrategy`] names the routing policies the fleet sweep
+//! compares: blind replica assignment (static round-robin or uniformly
+//! random within the eq. 1 tier) against fleet-wide queue-aware
+//! selection, with and without hedging.
+
+use crate::devices::DeviceKind;
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::Result;
+
+use super::topology::{DeviceId, Topology};
+
+/// One scored placement (a device plus its expected total latency).
+#[derive(Debug, Clone, Copy)]
+pub struct Placement {
+    /// The device.
+    pub device: DeviceId,
+    /// Expected total latency of running there now (seconds): execution
+    /// + expected wait, plus the scaled T̂_tx for cloud replicas.
+    pub score_s: f64,
+    /// The device's execution-time estimate alone (the service estimate
+    /// handed to the dispatcher's capacity tracker).
+    pub est_service_s: f64,
+}
+
+/// Everything the selector computed for one decision.
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementTrace {
+    /// The arg-min placement's device.
+    pub device: DeviceId,
+    /// M̂ used for every plane evaluation.
+    pub m_est: f64,
+    /// The shared (unscaled) T̂_tx estimate used.
+    pub ttx_est: f64,
+    /// The chosen placement's execution-time estimate (service estimate
+    /// for the dispatcher).
+    pub est_service_s: f64,
+    /// Best edge-tier placement.
+    pub best_edge: Placement,
+    /// Best cloud-tier placement.
+    pub best_cloud: Placement,
+}
+
+impl PlacementTrace {
+    /// Signed expected-latency gap between the best edge and the best
+    /// cloud placement — negative means the edge looked faster. The
+    /// fleet analogue of
+    /// [`crate::coordinator::DecisionTrace::loaded_margin_s`]: when
+    /// `|margin|` sits inside the model's error bar, racing the two
+    /// placements ([`crate::scheduler::Dispatcher::submit_hedged_lanes`])
+    /// beats committing to either.
+    pub fn margin_s(&self) -> f64 {
+        self.best_edge.score_s - self.best_cloud.score_s
+    }
+}
+
+/// The routing strategies compared by the fleet sweep
+/// ([`crate::experiments::fleet`]).
+#[derive(Debug, Clone, Copy)]
+pub enum FleetStrategy {
+    /// Tier by idle eq. 1, replica by per-tier round-robin — the
+    /// queue-blind "static assignment" baseline.
+    Static,
+    /// Tier by idle eq. 1, replica drawn uniformly at random within the
+    /// tier (seeded — runs are deterministic).
+    Random {
+        /// Seed of the replica-pick stream.
+        seed: u64,
+    },
+    /// Fleet-wide queue-aware arg-min placement (the tentpole policy).
+    Select,
+    /// [`FleetStrategy::Select`], plus hedging the best edge placement
+    /// against the best cloud placement when `|margin| ≤ margin_s`.
+    Hedged {
+        /// Hedge error bar (seconds); must be finite and ≥ 0 — 0
+        /// disables hedging, degenerating to plain `Select` (the same
+        /// convention as [`crate::sim::AdaptiveOpts::hedge_margin_s`]).
+        margin_s: f64,
+    },
+}
+
+impl FleetStrategy {
+    /// Report label (`fleet+static`, `fleet+random`, `fleet+select`,
+    /// `fleet+hedge`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FleetStrategy::Static => "fleet+static",
+            FleetStrategy::Random { .. } => "fleet+random",
+            FleetStrategy::Select => "fleet+select",
+            FleetStrategy::Hedged { .. } => "fleet+hedge",
+        }
+    }
+
+    /// Does this strategy feed the live expected-wait terms into the
+    /// placement scores? (The blind baselines score as if every queue
+    /// were empty.)
+    pub fn queue_aware(&self) -> bool {
+        matches!(self, FleetStrategy::Select | FleetStrategy::Hedged { .. })
+    }
+}
+
+/// The fleet decision engine: per-device T_exe planes plus the shared
+/// network estimate, scoring every placement in O(devices).
+#[derive(Debug, Clone)]
+pub struct FleetSelector {
+    tier: Vec<DeviceKind>,
+    /// Per-device plane: the tier's calibrated plane × the device's
+    /// slowdown (1/speed).
+    texe: Vec<TexeModel>,
+    link_scale: Vec<f64>,
+    edge_ids: Vec<DeviceId>,
+    cloud_ids: Vec<DeviceId>,
+    n2m: N2mRegressor,
+    ttx: TtxEstimator,
+    ttx_prior_s: f64,
+    decisions: u64,
+}
+
+impl FleetSelector {
+    /// Build the selector for `topo` from the shared characterisation
+    /// (the same planes and regressor the pair router uses; T_tx EWMA at
+    /// the pair router's defaults, α = 0.3 over a 50 ms prior).
+    pub fn new(
+        topo: &Topology,
+        texe_edge: TexeModel,
+        texe_cloud: TexeModel,
+        n2m: N2mRegressor,
+    ) -> Result<FleetSelector> {
+        topo.validate()?;
+        let mut tier = Vec::with_capacity(topo.len());
+        let mut texe = Vec::with_capacity(topo.len());
+        let mut link_scale = Vec::with_capacity(topo.len());
+        for d in &topo.devices {
+            let base = match d.tier {
+                DeviceKind::Edge => &texe_edge,
+                DeviceKind::Cloud => &texe_cloud,
+            };
+            let slow = d.slowdown();
+            tier.push(d.tier);
+            // speed 1.0 ⇒ slow 1.0 ⇒ every coefficient × 1.0 — the
+            // scaled plane is bit-identical to the tier plane.
+            texe.push(TexeModel::from_coeffs(
+                base.alpha_n * slow,
+                base.alpha_m * slow,
+                base.beta * slow,
+            ));
+            link_scale.push(d.link_scale);
+        }
+        Ok(FleetSelector {
+            tier,
+            texe,
+            link_scale,
+            edge_ids: topo.edge_ids(),
+            cloud_ids: topo.cloud_ids(),
+            n2m,
+            ttx: TtxEstimator::new(0.3),
+            ttx_prior_s: 0.05,
+            decisions: 0,
+        })
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.tier.len()
+    }
+
+    /// True when the selector has no devices (unreachable — the
+    /// topology is validated at construction).
+    pub fn is_empty(&self) -> bool {
+        self.tier.is_empty()
+    }
+
+    /// Decisions made so far.
+    pub fn decisions(&self) -> u64 {
+        self.decisions
+    }
+
+    /// Device ids of the edge tier.
+    pub fn edge_ids(&self) -> &[DeviceId] {
+        &self.edge_ids
+    }
+
+    /// Device ids of the cloud tier.
+    pub fn cloud_ids(&self) -> &[DeviceId] {
+        &self.cloud_ids
+    }
+
+    /// Tier of device `d`.
+    pub fn tier(&self, d: DeviceId) -> DeviceKind {
+        self.tier[d]
+    }
+
+    /// Device `d`'s execution-time estimate at `(n, m_est)` — used to
+    /// price a blind replica assignment that overrides the arg-min.
+    pub fn est_service_s(&self, d: DeviceId, n: usize, m_est: f64) -> f64 {
+        self.texe[d].estimate(n, m_est)
+    }
+
+    /// Feed a timestamped network observation (same semantics as
+    /// [`crate::coordinator::Router::observe_ttx`]: the fleet gateway
+    /// observes the network once, shared by every replica).
+    pub fn observe_ttx(&mut self, now_s: f64, rtt_s: f64) {
+        self.ttx.observe(now_s, rtt_s);
+    }
+
+    /// Is the shared T_tx estimate stale at `now_s`?
+    pub fn ttx_stale(&self, now_s: f64, max_age_s: f64) -> bool {
+        self.ttx.is_stale(now_s, max_age_s)
+    }
+
+    /// Score every placement and return the arg-min plus the per-tier
+    /// bests. `waits[d]` is device `d`'s expected queueing delay (all
+    /// zeros = the idle eq. 1, the blind baselines' view). O(devices),
+    /// allocation-free.
+    pub fn select(&mut self, n: usize, waits: &[f64]) -> PlacementTrace {
+        debug_assert_eq!(waits.len(), self.tier.len());
+        self.decisions += 1;
+        let m_est = self.n2m.predict(n);
+        let ttx_est = self.ttx.estimate_or(self.ttx_prior_s);
+        let best_edge = self.best_of(&self.edge_ids, n, m_est, ttx_est, waits);
+        let best_cloud = self.best_of(&self.cloud_ids, n, m_est, ttx_est, waits);
+        // Tie goes to the edge — the pair router's `≤`.
+        let best = if best_edge.score_s <= best_cloud.score_s {
+            best_edge
+        } else {
+            best_cloud
+        };
+        PlacementTrace {
+            device: best.device,
+            m_est,
+            ttx_est,
+            est_service_s: best.est_service_s,
+            best_edge,
+            best_cloud,
+        }
+    }
+
+    /// Best placement within one tier (strict `<` scan ⇒ lowest device
+    /// id wins ties). `ids` is non-empty (topology validated).
+    fn best_of(
+        &self,
+        ids: &[DeviceId],
+        n: usize,
+        m_est: f64,
+        ttx_est: f64,
+        waits: &[f64],
+    ) -> Placement {
+        let mut best = Placement {
+            device: usize::MAX,
+            score_s: f64::INFINITY,
+            est_service_s: f64::INFINITY,
+        };
+        for &d in ids {
+            let est = self.texe[d].estimate(n, m_est);
+            // Same grouping as the pair router's eq. 1 sides:
+            // (T̂_exe + Ŵ) for edges, ((T̂_tx + T̂_exe) + Ŵ) for clouds —
+            // with link_scale 1.0 the product is the identity.
+            let score = match self.tier[d] {
+                DeviceKind::Edge => est + waits[d],
+                DeviceKind::Cloud => ttx_est * self.link_scale[d] + est + waits[d],
+            };
+            if score < best.score_s {
+                best = Placement { device: d, score_s: score, est_service_s: est };
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{PolicyKind, RouterBuilder};
+    use crate::fleet::topology::DeviceSpec;
+
+    fn planes() -> (TexeModel, TexeModel, N2mRegressor) {
+        (
+            TexeModel::from_coeffs(1.2e-3, 3.0e-3, 6.0e-3),
+            TexeModel::from_coeffs(0.22e-3, 0.55e-3, 26.0e-3),
+            N2mRegressor::from_coeffs(0.95, 0.8),
+        )
+    }
+
+    fn selector(topo: &Topology) -> FleetSelector {
+        let (e, c, n2m) = planes();
+        FleetSelector::new(topo, e, c, n2m).unwrap()
+    }
+
+    #[test]
+    fn pair_selection_is_bit_identical_to_decide_loaded() {
+        // THE 1×1 equivalence at the decision level: same device, same
+        // estimates, bit-equal margin, across lengths, RTTs and waits.
+        let (e, c, n2m) = planes();
+        let mut sel = selector(&Topology::pair());
+        let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+            .texe(e, c)
+            .n2m(n2m)
+            .build()
+            .unwrap();
+        let scenarios = [
+            (0.040, 0.0, 0.0),
+            (0.040, 0.3, 0.0),
+            (0.010, 0.0, 0.4),
+            (0.100, 0.05, 0.06),
+        ];
+        for (rtt, ew, cw) in scenarios {
+            sel.observe_ttx(0.0, rtt);
+            router.observe_ttx(0.0, rtt);
+            for n in [1usize, 3, 10, 17, 30, 45, 62] {
+                let ft = sel.select(n, &[ew, cw]);
+                let rt = router.decide_loaded(n, ew, cw);
+                let fleet_edge = ft.device == 0;
+                assert_eq!(
+                    fleet_edge,
+                    rt.device == DeviceKind::Edge,
+                    "n={n} rtt={rtt}: decisions diverged"
+                );
+                assert_eq!(ft.m_est.to_bits(), rt.m_est.to_bits());
+                assert_eq!(ft.ttx_est.to_bits(), rt.ttx_est.to_bits());
+                assert_eq!(ft.best_edge.est_service_s.to_bits(), rt.t_edge_est.to_bits());
+                assert_eq!(ft.best_cloud.est_service_s.to_bits(), rt.t_cloud_est.to_bits());
+                assert_eq!(
+                    ft.margin_s().to_bits(),
+                    rt.loaded_margin_s(ew, cw).to_bits(),
+                    "n={n}: hedge margins diverged"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn argmin_prefers_less_loaded_replica() {
+        let topo = Topology::uniform(1, 3);
+        let mut sel = selector(&topo);
+        sel.observe_ttx(0.0, 0.042);
+        let n = 60; // firmly cloud when idle
+        // All idle: the lowest-id replica wins the tie.
+        let idle = sel.select(n, &[0.0; 4]);
+        assert_eq!(idle.device, 1);
+        // Load replica 1 and 2: the arg-min moves to replica 3.
+        let loaded = sel.select(n, &[0.0, 5.0, 5.0, 0.0]);
+        assert_eq!(loaded.device, 3);
+        // Load every cloud replica enough and the request stays local.
+        let swamped = sel.select(n, &[0.0, 5.0, 5.0, 5.0]);
+        assert_eq!(swamped.device, 0);
+        assert_eq!(sel.decisions(), 3);
+    }
+
+    #[test]
+    fn speed_scaling_shifts_the_boundary() {
+        // A 2× edge keeps requests local that a baseline edge offloads.
+        let fast = Topology {
+            name: "fast-edge".into(),
+            devices: vec![DeviceSpec::edge("e", 2.0), DeviceSpec::cloud("c", 1.0, 1.0)],
+        };
+        let mut base_sel = selector(&Topology::pair());
+        let mut fast_sel = selector(&fast);
+        base_sel.observe_ttx(0.0, 0.042);
+        fast_sel.observe_ttx(0.0, 0.042);
+        let mut flipped = 0;
+        for n in 1..=62 {
+            let b = base_sel.select(n, &[0.0, 0.0]).device;
+            let f = fast_sel.select(n, &[0.0, 0.0]).device;
+            // A faster edge can only expand the edge region.
+            if b == 0 {
+                assert_eq!(f, 0, "n={n}: fast edge offloaded what baseline kept");
+            }
+            if b != 0 && f == 0 {
+                flipped += 1;
+            }
+        }
+        assert!(flipped > 0, "a 2x edge never expanded the edge region");
+    }
+
+    #[test]
+    fn link_scale_penalises_remote_replicas() {
+        // Two equal-speed replicas, one behind a 3× link: the clean one
+        // wins until it is loaded enough.
+        let topo = Topology {
+            name: "links".into(),
+            devices: vec![
+                DeviceSpec::edge("e", 1.0),
+                DeviceSpec::cloud("near", 1.0, 1.0),
+                DeviceSpec::cloud("far", 1.0, 3.0),
+            ],
+        };
+        let mut sel = selector(&topo);
+        sel.observe_ttx(0.0, 0.042);
+        let n = 60;
+        assert_eq!(sel.select(n, &[0.0; 3]).device, 1);
+        // 2·RTT of extra wait on the near replica outweighs the link
+        // penalty (0.042·2 = 84 ms of queue vs 84 ms of extra link).
+        let t = sel.select(n, &[0.0, 0.090, 0.0]);
+        assert_eq!(t.device, 2, "loaded near replica should lose to the far one");
+    }
+
+    #[test]
+    fn strategy_labels_and_awareness() {
+        assert_eq!(FleetStrategy::Static.label(), "fleet+static");
+        assert_eq!(FleetStrategy::Random { seed: 1 }.label(), "fleet+random");
+        assert_eq!(FleetStrategy::Select.label(), "fleet+select");
+        assert_eq!(FleetStrategy::Hedged { margin_s: 0.01 }.label(), "fleet+hedge");
+        assert!(!FleetStrategy::Static.queue_aware());
+        assert!(!FleetStrategy::Random { seed: 1 }.queue_aware());
+        assert!(FleetStrategy::Select.queue_aware());
+        assert!(FleetStrategy::Hedged { margin_s: 0.01 }.queue_aware());
+    }
+
+    #[test]
+    fn selector_rejects_invalid_topologies() {
+        let (e, c, n2m) = planes();
+        let no_cloud = Topology {
+            name: "bad".into(),
+            devices: vec![DeviceSpec::edge("e", 1.0)],
+        };
+        assert!(FleetSelector::new(&no_cloud, e, c, n2m).is_err());
+    }
+}

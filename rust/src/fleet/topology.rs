@@ -1,0 +1,426 @@
+//! Fleet topology: N heterogeneous edge devices × M cloud replicas.
+//!
+//! The paper's testbed is one edge gateway paired with one cloud server;
+//! a production deployment is a *fleet* — many gateways of different
+//! speeds sharing a pool of cloud replicas behind links of different
+//! quality (CoFormer's heterogeneous-edge collaboration and Galaxy's
+//! multi-device serving make the same generalisation; see PAPERS.md).
+//! A [`Topology`] describes that fleet declaratively: one
+//! [`DeviceSpec`] per device, ordered so the device's position **is**
+//! its [`DeviceId`] — and, downstream, its dispatcher lane index
+//! ([`crate::scheduler::Dispatcher::with_lanes`]).
+//!
+//! Speeds are expressed relative to the tier's calibrated baseline: a
+//! device with `speed = 2.0` executes in half the tier's ground-truth
+//! time, `speed = 0.5` in double. Cloud replicas additionally carry a
+//! `link_scale` multiplying the shared T_tx estimate — a replica behind
+//! a worse route costs proportionally more to reach. The 1×1 preset
+//! ([`Topology::pair`]) reproduces the classic pair *exactly* (speeds
+//! and link scales of 1.0 multiply through as identity), which is what
+//! makes the fleet path bit-identical to the pair path on that shape.
+//!
+//! Topologies come from built-in presets ([`Topology::preset`]) or a
+//! JSON spec ([`Topology::load`] / [`Topology::from_json`]).
+
+use std::path::Path;
+
+use crate::devices::DeviceKind;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// Index of a device in its [`Topology`] — also its dispatcher lane.
+pub type DeviceId = usize;
+
+/// One device of the fleet.
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    /// Human-readable name (report labels; e.g. `edge0`, `cloud1`).
+    pub name: String,
+    /// Tier: edge gateway or cloud replica.
+    pub tier: DeviceKind,
+    /// Execution speed relative to the tier's calibrated baseline
+    /// (> 0; 2.0 = twice as fast, 0.5 = half as fast).
+    pub speed: f64,
+    /// Worker slots (serial execution streams) on this device.
+    pub workers: usize,
+    /// Multiplier on the shared T_tx estimate for reaching this device
+    /// (> 0; only meaningful for cloud replicas — edges are local and
+    /// keep 1.0).
+    pub link_scale: f64,
+}
+
+impl DeviceSpec {
+    /// An edge gateway at `speed`, one worker (the paper's serial
+    /// execution stream).
+    pub fn edge(name: &str, speed: f64) -> DeviceSpec {
+        DeviceSpec {
+            name: name.to_string(),
+            tier: DeviceKind::Edge,
+            speed,
+            workers: 1,
+            link_scale: 1.0,
+        }
+    }
+
+    /// A cloud replica at `speed` behind `link_scale`, four workers
+    /// (the pair dispatcher's default cloud pool).
+    pub fn cloud(name: &str, speed: f64, link_scale: f64) -> DeviceSpec {
+        DeviceSpec {
+            name: name.to_string(),
+            tier: DeviceKind::Cloud,
+            speed,
+            workers: 4,
+            link_scale,
+        }
+    }
+
+    /// The ground-truth (and estimate) slowdown this device applies to
+    /// its tier's base execution time: `1 / speed`. Exactly 1.0 for
+    /// `speed = 1.0` — the identity the 1×1 bit-equivalence rests on.
+    pub fn slowdown(&self) -> f64 {
+        1.0 / self.speed
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.speed.is_finite() && self.speed > 0.0) {
+            return Err(Error::Config(format!(
+                "device {}: speed {} must be finite and > 0",
+                self.name, self.speed
+            )));
+        }
+        if self.workers == 0 {
+            return Err(Error::Config(format!(
+                "device {}: needs at least one worker",
+                self.name
+            )));
+        }
+        if !(self.link_scale.is_finite() && self.link_scale > 0.0) {
+            return Err(Error::Config(format!(
+                "device {}: link_scale {} must be finite and > 0",
+                self.name, self.link_scale
+            )));
+        }
+        Ok(())
+    }
+
+    /// Serialise for reports / spec round-trips.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("tier", Json::Str(self.tier.id().to_string()))
+            .set("speed", Json::Num(self.speed))
+            .set("workers", Json::Num(self.workers as f64))
+            .set("link_scale", Json::Num(self.link_scale));
+        o
+    }
+}
+
+/// A fleet shape: the ordered device list (position = [`DeviceId`]).
+#[derive(Debug, Clone)]
+pub struct Topology {
+    /// Shape label used in reports (`1x1`, `4x2`, `hetero`, …).
+    pub name: String,
+    /// The devices, in lane order.
+    pub devices: Vec<DeviceSpec>,
+}
+
+impl Topology {
+    /// The classic paper pair — one baseline edge (1 worker), one
+    /// baseline cloud (4 workers), clean link. The fleet path on this
+    /// topology is bit-identical to the two-lane pair path.
+    pub fn pair() -> Topology {
+        Topology {
+            name: "1x1".to_string(),
+            devices: vec![DeviceSpec::edge("edge0", 1.0), DeviceSpec::cloud("cloud0", 1.0, 1.0)],
+        }
+    }
+
+    /// `edges` baseline edge gateways × `clouds` baseline cloud
+    /// replicas, all at speed 1.0 over clean links.
+    pub fn uniform(edges: usize, clouds: usize) -> Topology {
+        let mut devices = Vec::with_capacity(edges + clouds);
+        for i in 0..edges {
+            devices.push(DeviceSpec::edge(&format!("edge{i}"), 1.0));
+        }
+        for i in 0..clouds {
+            devices.push(DeviceSpec::cloud(&format!("cloud{i}"), 1.0, 1.0));
+        }
+        Topology { name: format!("{edges}x{clouds}"), devices }
+    }
+
+    /// A heterogeneous-speed mix: four edges spanning 4× in speed
+    /// (a fast desktop-class gateway down to a throttled embedded one)
+    /// and two cloud replicas, the second slower *and* behind a worse
+    /// link — the shape where blind replica assignment hurts most.
+    pub fn hetero() -> Topology {
+        Topology {
+            name: "hetero".to_string(),
+            devices: vec![
+                DeviceSpec::edge("edge0", 2.0),
+                DeviceSpec::edge("edge1", 1.0),
+                DeviceSpec::edge("edge2", 1.0),
+                DeviceSpec::edge("edge3", 0.5),
+                DeviceSpec::cloud("cloud0", 1.0, 1.0),
+                DeviceSpec::cloud("cloud1", 0.5, 1.5),
+            ],
+        }
+    }
+
+    /// Resolve a built-in preset by name: `1x1`, `4x2`, `8x4`, `hetero`,
+    /// or any `<e>x<c>` uniform shape.
+    pub fn preset(name: &str) -> Result<Topology> {
+        match name {
+            "1x1" => return Ok(Topology::pair()),
+            "hetero" => return Ok(Topology::hetero()),
+            _ => {}
+        }
+        if let Some((e, c)) = name.split_once('x') {
+            if let (Ok(e), Ok(c)) = (e.parse::<usize>(), c.parse::<usize>()) {
+                if e > 0 && c > 0 {
+                    return Ok(Topology::uniform(e, c));
+                }
+            }
+        }
+        Err(Error::Config(format!(
+            "unknown topology preset `{name}` (try 1x1, 4x2, 8x4, hetero, or <e>x<c>)"
+        )))
+    }
+
+    /// Parse a topology from its JSON spec:
+    ///
+    /// ```json
+    /// { "name": "lab",
+    ///   "devices": [
+    ///     { "name": "edge0", "tier": "edge", "speed": 2.0 },
+    ///     { "name": "cloud0", "tier": "cloud", "workers": 8, "link_scale": 1.2 }
+    ///   ] }
+    /// ```
+    ///
+    /// `speed` defaults to 1.0, `link_scale` to 1.0, and `workers` to
+    /// the tier default (1 edge / 4 cloud).
+    pub fn from_json(j: &Json) -> Result<Topology> {
+        let name = match j.get_opt("name")? {
+            Some(n) => n.as_str()?.to_string(),
+            None => "custom".to_string(),
+        };
+        let mut devices = Vec::new();
+        for (i, d) in j.get("devices")?.as_array()?.iter().enumerate() {
+            let tier = match d.get("tier")?.as_str()? {
+                "edge" => DeviceKind::Edge,
+                "cloud" => DeviceKind::Cloud,
+                other => {
+                    return Err(Error::Config(format!(
+                        "device {i}: tier `{other}` is not edge|cloud"
+                    )))
+                }
+            };
+            let dev_name = match d.get_opt("name")? {
+                Some(n) => n.as_str()?.to_string(),
+                None => format!("{}{i}", tier.id()),
+            };
+            let speed = match d.get_opt("speed")? {
+                Some(s) => s.as_f64()?,
+                None => 1.0,
+            };
+            let workers = match d.get_opt("workers")? {
+                Some(w) => w.as_usize()?,
+                None => match tier {
+                    DeviceKind::Edge => 1,
+                    DeviceKind::Cloud => 4,
+                },
+            };
+            let link_scale = match d.get_opt("link_scale")? {
+                Some(l) => l.as_f64()?,
+                None => 1.0,
+            };
+            devices.push(DeviceSpec { name: dev_name, tier, speed, workers, link_scale });
+        }
+        let topo = Topology { name, devices };
+        topo.validate()?;
+        Ok(topo)
+    }
+
+    /// Load a topology spec from a JSON file.
+    pub fn load(path: &Path) -> Result<Topology> {
+        Topology::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Serialise for reports / spec round-trips.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone())).set(
+            "devices",
+            Json::Array(self.devices.iter().map(|d| d.to_json()).collect()),
+        );
+        o
+    }
+
+    /// Number of devices (dispatcher lanes).
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// True when the topology has no devices (invalid; see
+    /// [`Topology::validate`]).
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Device ids of the edge tier, in lane order.
+    pub fn edge_ids(&self) -> Vec<DeviceId> {
+        self.tier_ids(DeviceKind::Edge)
+    }
+
+    /// Device ids of the cloud tier, in lane order.
+    pub fn cloud_ids(&self) -> Vec<DeviceId> {
+        self.tier_ids(DeviceKind::Cloud)
+    }
+
+    fn tier_ids(&self, tier: DeviceKind) -> Vec<DeviceId> {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_i, d)| d.tier == tier)
+            .map(|(i, _d)| i)
+            .collect()
+    }
+
+    /// `(edge devices, cloud replicas)` counts.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.edge_ids().len(), self.cloud_ids().len())
+    }
+
+    /// A routable fleet needs both tiers populated, and every device
+    /// well-formed.
+    pub fn validate(&self) -> Result<()> {
+        let (edges, clouds) = self.shape();
+        if edges == 0 || clouds == 0 {
+            return Err(Error::Config(format!(
+                "topology {}: needs at least one edge and one cloud (got {edges}x{clouds})",
+                self.name
+            )));
+        }
+        for d in &self.devices {
+            d.validate()?;
+        }
+        Ok(())
+    }
+
+    /// The dispatcher lane list for this fleet (one lane per device, in
+    /// id order).
+    pub fn lane_specs(&self, max_queue_depth: usize) -> Vec<crate::scheduler::LaneSpec> {
+        self.devices
+            .iter()
+            .map(|d| crate::scheduler::LaneSpec {
+                kind: d.tier,
+                workers: d.workers,
+                max_queue_depth,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pair_preset_matches_classic_sizing() {
+        let t = Topology::pair();
+        assert_eq!(t.name, "1x1");
+        assert_eq!(t.shape(), (1, 1));
+        assert_eq!(t.devices[0].tier, DeviceKind::Edge);
+        assert_eq!(t.devices[0].workers, 1);
+        assert_eq!(t.devices[1].tier, DeviceKind::Cloud);
+        assert_eq!(t.devices[1].workers, 4);
+        // Identity multipliers: the bit-equivalence precondition.
+        assert_eq!(t.devices[0].slowdown(), 1.0);
+        assert_eq!(t.devices[1].slowdown(), 1.0);
+        assert_eq!(t.devices[1].link_scale, 1.0);
+        assert!(t.validate().is_ok());
+    }
+
+    #[test]
+    fn uniform_and_named_presets_resolve() {
+        assert_eq!(Topology::preset("4x2").unwrap().shape(), (4, 2));
+        assert_eq!(Topology::preset("8x4").unwrap().shape(), (8, 4));
+        assert_eq!(Topology::preset("1x1").unwrap().shape(), (1, 1));
+        let h = Topology::preset("hetero").unwrap();
+        assert_eq!(h.shape(), (4, 2));
+        assert!(h.devices.iter().any(|d| d.speed != 1.0));
+        assert!(Topology::preset("bogus").is_err());
+        assert!(Topology::preset("0x3").is_err());
+    }
+
+    #[test]
+    fn device_ids_are_lane_order() {
+        let t = Topology::preset("4x2").unwrap();
+        assert_eq!(t.edge_ids(), vec![0, 1, 2, 3]);
+        assert_eq!(t.cloud_ids(), vec![4, 5]);
+        let specs = t.lane_specs(128);
+        assert_eq!(specs.len(), 6);
+        assert_eq!(specs[0].kind, DeviceKind::Edge);
+        assert_eq!(specs[0].workers, 1);
+        assert_eq!(specs[5].kind, DeviceKind::Cloud);
+        assert_eq!(specs[5].workers, 4);
+        assert!(specs.iter().all(|s| s.max_queue_depth == 128));
+    }
+
+    #[test]
+    fn json_spec_round_trips_with_defaults() {
+        let spec = r#"{
+            "name": "lab",
+            "devices": [
+                { "tier": "edge", "speed": 2.0 },
+                { "name": "slowcloud", "tier": "cloud", "link_scale": 1.5 }
+            ]
+        }"#;
+        let t = Topology::from_json(&Json::parse(spec).unwrap()).unwrap();
+        assert_eq!(t.name, "lab");
+        assert_eq!(t.shape(), (1, 1));
+        assert_eq!(t.devices[0].name, "edge0"); // defaulted name
+        assert_eq!(t.devices[0].workers, 1); // edge tier default
+        assert_eq!(t.devices[1].name, "slowcloud");
+        assert_eq!(t.devices[1].workers, 4); // cloud tier default
+        assert!((t.devices[1].link_scale - 1.5).abs() < 1e-15);
+        // Round trip through to_json.
+        let again = Topology::from_json(&t.to_json()).unwrap();
+        assert_eq!(again.name, t.name);
+        assert_eq!(again.devices.len(), t.devices.len());
+        assert_eq!(again.devices[1].name, "slowcloud");
+    }
+
+    #[test]
+    fn validation_rejects_degenerate_fleets() {
+        // No cloud tier.
+        let t = Topology {
+            name: "edges".into(),
+            devices: vec![DeviceSpec::edge("e", 1.0)],
+        };
+        assert!(t.validate().is_err());
+        // Bad speed.
+        let t = Topology {
+            name: "bad".into(),
+            devices: vec![DeviceSpec::edge("e", 0.0), DeviceSpec::cloud("c", 1.0, 1.0)],
+        };
+        assert!(t.validate().is_err());
+        // Bad link.
+        let mut c = DeviceSpec::cloud("c", 1.0, 1.0);
+        c.link_scale = f64::NAN;
+        let t = Topology {
+            name: "bad".into(),
+            devices: vec![DeviceSpec::edge("e", 1.0), c],
+        };
+        assert!(t.validate().is_err());
+        // Zero workers.
+        let mut e = DeviceSpec::edge("e", 1.0);
+        e.workers = 0;
+        let t = Topology {
+            name: "bad".into(),
+            devices: vec![e, DeviceSpec::cloud("c", 1.0, 1.0)],
+        };
+        assert!(t.validate().is_err());
+        let bad_tier = Json::parse(r#"{"devices":[{"tier":"fog"}]}"#).unwrap();
+        assert!(Topology::from_json(&bad_tier).is_err());
+    }
+}

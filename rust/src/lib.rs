@@ -17,7 +17,10 @@
 //!   tracking, length-bucketed micro-batching, a worker-pool dispatcher,
 //!   hedged dispatch with cancel tokens — plus online RLS refit of the
 //!   execution-time planes ([`predictor::rls`]) so routing tracks
-//!   drifting hardware; and every substrate the evaluation needs:
+//!   drifting hardware; a fleet abstraction ([`fleet`]) generalising
+//!   the pair to N heterogeneous edge devices × M cloud replicas with
+//!   fleet-wide queue-aware placement; and every substrate the
+//!   evaluation needs:
 //!   synthetic parallel corpora ([`corpus`]), RTT trace
 //!   generation/replay ([`net`]), calibrated device models
 //!   ([`devices`]), a discrete-event experiment harness ([`sim`]) and
@@ -48,6 +51,9 @@
 //! | throughput-vs-latency load sweep + drift scenario (beyond paper) | [`experiments::load`] |
 //! | closed-loop latency–throughput curves (beyond paper) | [`experiments::load`], [`sim::harness`] |
 //! | deterministic multi-threaded sweep runner (beyond paper) | [`experiments::runner`] |
+//! | N-device fleet topologies + fleet-wide placement (beyond paper) | [`fleet`], [`scheduler::dispatch`] |
+//! | fleet sweep across shapes (beyond paper) | [`experiments::fleet`], [`sim::harness`] |
+//! | multi-tenant fair queueing (beyond paper) | [`scheduler::queue`] |
 
 #![warn(missing_docs)]
 
@@ -57,6 +63,7 @@ pub mod corpus;
 pub mod devices;
 pub mod error;
 pub mod experiments;
+pub mod fleet;
 pub mod metrics;
 pub mod net;
 pub mod predictor;

@@ -21,7 +21,7 @@ use cnmt::corpus::LangPair;
 use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
 use cnmt::experiments::{
-    ablation, energy, fig2a, fig3, fig4, load, multilevel, report, runner, table1,
+    ablation, energy, fig2a, fig3, fig4, fleet, load, multilevel, report, runner, table1,
 };
 #[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
@@ -62,7 +62,7 @@ const HELP: &str = "\
 cnmt — C-NMT: collaborative inference for neural machine translation
 
 USAGE:
-  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|all> [flags]
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|all> [flags]
       --config <json>       load a Config (defaults = paper setup)
       --requests <n>        evaluation requests (default 100000)
       --fit <n>             characterisation inferences (default 10000)
@@ -76,9 +76,16 @@ USAGE:
                             open-loop Poisson arrivals (writes closed_loop.json)
       --clients <a,b,..>    closed loop: client counts (default 1,2,4,8,16,32,64)
       --think-ms <f>        closed loop: per-client think time (default 0)
-      --threads <n>         load sweep: shard cells over n OS threads
+      --threads <n>         load/fleet sweep: shard cells over n OS threads
                             (0 = all cores; reports are bit-identical
                             at any thread count; default 1)
+      --shapes <a,b,..>     fleet sweep: topology presets to sweep
+                            (default 1x1,4x2,8x4,hetero; any <e>x<c> works)
+      --topology <json>     fleet sweep: sweep a custom topology spec
+                            instead of the presets
+      --offered-rps <f>     fleet sweep: offered load for --topology
+                            (default 96)
+      --fleet-requests <n>  fleet sweep: requests per cell (default 20000)
   cnmt bench sched [flags]  scheduler core benchmark (events/sec,
                             ns/event, sweep wall-clock at 1 vs N threads)
       --json                also write the machine-readable report
@@ -178,6 +185,47 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     } else {
         (None, None)
     };
+    let fleet_cfg = if matches!(which.as_str(), "fleet" | "all") {
+        let mut fc = fleet::FleetConfig { seed: cfg.seed, ..Default::default() };
+        fc.threads = runner::resolve_threads(args.usize("threads", 1)?);
+        if let Some(path) = args.str_opt("topology") {
+            if args.str_opt("shapes").is_some() {
+                return Err(Error::Config(
+                    "--topology and --shapes are mutually exclusive (a custom \
+                     spec replaces the preset grid)"
+                        .into(),
+                ));
+            }
+            let topo = cnmt::fleet::Topology::load(&PathBuf::from(path))?;
+            let offered_rps = args.f64("offered-rps", 96.0)?;
+            fc.shapes = vec![fleet::ShapeSpec { topo, offered_rps }];
+        } else {
+            // The presets carry tuned loads; silently dropping an
+            // explicit --offered-rps would sweep at a load the user
+            // never asked for.
+            if args.str_opt("offered-rps").is_some() {
+                return Err(Error::Config(
+                    "--offered-rps only applies with --topology (the preset \
+                     shapes carry tuned offered loads)"
+                        .into(),
+                ));
+            }
+            if let Some(shapes) = args.str_opt("shapes") {
+                fc.shapes = shapes
+                    .split(',')
+                    .map(|s| {
+                        let topo = cnmt::fleet::Topology::preset(s.trim())?;
+                        let offered_rps = fleet::default_offered_rps(&topo);
+                        Ok(fleet::ShapeSpec { topo, offered_rps })
+                    })
+                    .collect::<Result<_>>()?;
+            }
+        }
+        fc.requests_per_point = args.usize("fleet-requests", fc.requests_per_point)?;
+        Some(fc)
+    } else {
+        None
+    };
     args.reject_unknown()?;
 
     let run_fig2a = |cfg: &Config| -> Result<()> {
@@ -264,6 +312,21 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
 
+    let run_fleet_exp = |cfg: &Config| -> Result<()> {
+        let fleet_cfg = fleet_cfg.as_ref().expect("fleet_cfg built for fleet/all");
+        eprintln!(
+            "fleet: {} requests/cell over {} shapes (seed {})",
+            fleet_cfg.requests_per_point,
+            fleet_cfg.shapes.len(),
+            fleet_cfg.seed
+        );
+        let s = fleet::run(fleet_cfg)?;
+        print!("{}", fleet::render_text(&s));
+        let p = report::write_report(&cfg.out_dir, "fleet_sweep", &fleet::to_json(&s))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
     let run_multilevel = |cfg: &Config| -> Result<()> {
         eprintln!("multilevel: 3-tier CI (end-device/gateway/cloud)...");
         let m = multilevel::run(cfg, &cal)?;
@@ -282,6 +345,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "energy" => run_energy(&cfg),
         "multilevel" => run_multilevel(&cfg),
         "load" => run_load(&cfg),
+        "fleet" => run_fleet_exp(&cfg),
         "all" => {
             run_fig4(&cfg)?;
             run_fig3(&cfg)?;
@@ -290,7 +354,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             run_ablation(&cfg)?;
             run_energy(&cfg)?;
             run_multilevel(&cfg)?;
-            run_load(&cfg)
+            run_load(&cfg)?;
+            run_fleet_exp(&cfg)
         }
         other => Err(Error::Config(format!("unknown experiment `{other}`"))),
     }

@@ -472,6 +472,7 @@ impl BaselineDispatcher {
         on_complete(Completion {
             request: p.request,
             device: p.device,
+            lane: lane_idx(p.device),
             start_s: p.start_s,
             done_s: p.done_s,
             batch_size: p.batch_size,

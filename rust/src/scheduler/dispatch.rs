@@ -1,58 +1,74 @@
-//! Worker-pool dispatcher: drives the edge/cloud executors from the
-//! admission queues.
+//! Worker-pool dispatcher: drives device executors from the admission
+//! queues — N lanes, one per fleet device.
 //!
-//! One lane per device: an [`AdmissionQueue`] plus a
-//! [`CapacityTracker`] over a fixed worker pool (the edge gateway is
+//! One **lane** per device: an [`AdmissionQueue`] plus a
+//! [`CapacityTracker`] over a fixed worker pool (an edge gateway is
 //! typically 1 worker — one serial execution stream, the discipline the
-//! paper's latency model assumes — while the cloud server exposes
-//! several). The dispatcher is clock-driven and backend-agnostic: it
-//! owns *when* and *what* to run, a [`BatchExecutor`] owns *how long*
-//! it takes — the simulation backs it with ground-truth tables
-//! ([`crate::sim::harness`]), a live gateway would back it with real
-//! engines.
+//! paper's latency model assumes — while a cloud replica exposes
+//! several). Historically the dispatcher hard-coded two lanes (edge,
+//! cloud); it now holds a `Vec` of lanes indexed by the fleet's device
+//! id ([`crate::fleet::DeviceId`]), so the same event loop serves the
+//! paper's pair and an N-edge × M-replica topology. The classic
+//! edge/cloud surface ([`submit`], [`expected_wait_s`], …) is a thin
+//! mapping onto lanes 0 (edge) and 1 (cloud) of a pair-built dispatcher
+//! — same structures, same arithmetic, bit-identical behaviour (the
+//! differential test against [`crate::scheduler::baseline`] enforces
+//! it).
 //!
-//! The dispatcher is a two-queue discrete-event loop: batch *starts*
-//! (earliest ready batch across both lanes, edge winning ties) and batch
-//! *completions* (a min-heap on finish time) are processed in global
-//! simulated-time order, completions first on ties. This ordering is
-//! what makes cross-lane interactions — a hedge winner on one lane
-//! cancelling its twin on the other — causally correct: a twin can only
-//! be cancelled by a completion that actually precedes its dispatch.
+//! The dispatcher is clock-driven and backend-agnostic: it owns *when*
+//! and *what* to run, an executor owns *how long* it takes — the
+//! simulation backs it with ground-truth tables
+//! ([`crate::sim::harness`]), a live gateway would back it with real
+//! engines. Two executor traits exist: [`BatchExecutor`] (the classic
+//! per-`DeviceKind` surface) and [`LaneExecutor`] (per-lane, what a
+//! heterogeneous fleet needs); every `BatchExecutor` is automatically a
+//! `LaneExecutor` that ignores the lane index.
+//!
+//! The event loop is unchanged by the fleet generalisation: batch
+//! *starts* (earliest ready batch across all lanes, lowest lane index
+//! winning ties — edge before cloud in the pair) and batch *completions*
+//! (a min-heap on finish time) are processed in global simulated-time
+//! order, completions first on ties. This ordering is what makes
+//! cross-lane interactions — a hedge winner on one lane cancelling its
+//! twin on another — causally correct: a twin can only be cancelled by a
+//! completion that actually precedes its dispatch.
 //!
 //! ## Hedged dispatch
 //!
-//! When the router's expected-latency gap between edge and cloud is
-//! inside its error bar, committing to either side is a coin flip;
-//! [`submit_hedged`] instead enqueues a copy on *both* lanes under one
-//! request id. The first copy to **finish** is the request's result
-//! ([`CompletionKind::HedgeWin`]); the twin is cancelled. A twin still
-//! queued is purged without running and its backlog share reclaimed
-//! ([`CapacityTracker::on_cancel`]); a twin already executing runs to
-//! completion as wasted work ([`CompletionKind::HedgeLoss`]).
-//! [`HedgeStats`] counts every outcome.
+//! When the router's expected-latency gap between the two candidate
+//! placements is inside its error bar, committing to either side is a
+//! coin flip; [`submit_hedged_lanes`] instead enqueues a copy on *both*
+//! lanes under one request id (in a fleet: the best edge placement races
+//! the best cloud placement — [`crate::fleet::select`]). The first copy
+//! to **finish** is the request's result ([`CompletionKind::HedgeWin`]);
+//! the twin is cancelled. A twin still queued is purged without running
+//! and its backlog share reclaimed ([`CapacityTracker::on_cancel`]); a
+//! twin already executing runs to completion as wasted work
+//! ([`CompletionKind::HedgeLoss`]). [`HedgeStats`] counts every outcome.
 //!
 //! ## Zero-churn hot path
 //!
 //! In-flight hedge races live in a generational slab arena
 //! ([`crate::util::Slab`]); each queued copy carries its race's
-//! [`crate::util::SlabKey`], so completion classification and
-//! cancellation are direct, generation-checked array accesses — the old
-//! id-keyed `HashMap`/`HashSet` pair (one to three hashes per
-//! completion, heap churn under load) is gone, and a cancelled twin is
-//! marked *in* its race entry rather than in a side set. Batches form
-//! into a scratch buffer reused across dispatches, the admission queues
-//! sit on ring buffers, and the pending-completion min-heap stores
-//! `Copy` records — once warmed to its peak population the whole
+//! [`crate::util::SlabKey`], and the race entry records *which two
+//! lanes* it spans, so completion classification and cancellation are
+//! direct, generation-checked array accesses whatever the fleet size —
+//! no id-keyed `HashMap`, no cancel-token `HashSet`, and a cancelled
+//! twin is marked *in* its race entry rather than in a side set. Batches
+//! form into a scratch buffer reused across dispatches, the admission
+//! queues sit on ring buffers, and the pending-completion min-heap
+//! stores `Copy` records — once warmed to its peak population the whole
 //! dispatch path performs **zero heap allocations**, asserted by the
 //! counting-allocator test in `tests/alloc_steady_state.rs`.
 //!
-//! The per-request hot path (`expected_wait_s` → route → [`submit`]) is
-//! O(1) for a fixed worker pool: no allocation, no queue scans.
-//! Dispatch itself ([`run_until`]) is amortised O(log inflight) per
-//! request (heap push/pop); cancellation is O(1).
+//! The per-request hot path (`expected_wait_lane` → route → [`submit`])
+//! is O(1) for a fixed worker pool: no allocation, no queue scans.
+//! Dispatch itself ([`run_until`]) is amortised O(lanes + log inflight)
+//! per request (lane scan + heap push/pop); cancellation is O(1).
 //!
 //! [`submit`]: Dispatcher::submit
-//! [`submit_hedged`]: Dispatcher::submit_hedged
+//! [`submit_hedged_lanes`]: Dispatcher::submit_hedged_lanes
+//! [`expected_wait_s`]: Dispatcher::expected_wait_s
 //! [`run_until`]: Dispatcher::run_until
 
 use std::cmp::Reverse;
@@ -65,7 +81,9 @@ use super::batch::{BatchPolicy, BatchStats};
 use super::capacity::CapacityTracker;
 use super::queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};
 
-/// Service-time backend: how long a batch runs on a device.
+/// Service-time backend keyed by device *kind*: how long a batch runs on
+/// the edge or the cloud. The classic pair surface; heterogeneous fleets
+/// implement [`LaneExecutor`] instead (every `BatchExecutor` is one).
 pub trait BatchExecutor {
     /// Service seconds for `batch` started at `start_s` on `device`.
     /// `batch` is non-empty.
@@ -77,7 +95,48 @@ pub trait BatchExecutor {
     ) -> f64;
 }
 
-/// Dispatcher sizing parameters.
+/// Service-time backend keyed by *lane* (fleet device id): how long a
+/// batch runs on a specific device of a heterogeneous topology. The
+/// dispatcher's event loop is generic over this trait; the blanket impl
+/// below makes every [`BatchExecutor`] a `LaneExecutor` that ignores the
+/// lane index, so pair-era executors keep working unchanged.
+pub trait LaneExecutor {
+    /// Service seconds for `batch` started at `start_s` on lane `lane`
+    /// (whose tier is `device`). `batch` is non-empty.
+    fn execute_lane(
+        &mut self,
+        lane: usize,
+        device: DeviceKind,
+        batch: &[QueuedRequest],
+        start_s: f64,
+    ) -> f64;
+}
+
+impl<E: BatchExecutor> LaneExecutor for E {
+    fn execute_lane(
+        &mut self,
+        _lane: usize,
+        device: DeviceKind,
+        batch: &[QueuedRequest],
+        start_s: f64,
+    ) -> f64 {
+        self.execute(device, batch, start_s)
+    }
+}
+
+/// Sizing of one dispatcher lane (one fleet device).
+#[derive(Debug, Clone, Copy)]
+pub struct LaneSpec {
+    /// The device's tier (drives [`Completion::device`] and the
+    /// edge/cloud hedge-win accounting).
+    pub kind: DeviceKind,
+    /// Worker slots on this device.
+    pub workers: usize,
+    /// Admission-queue depth bound for this lane.
+    pub max_queue_depth: usize,
+}
+
+/// Dispatcher sizing parameters for the classic edge/cloud pair.
 #[derive(Debug, Clone, Copy)]
 pub struct DispatcherConfig {
     /// Edge worker slots (the gateway's serial executor ⇒ usually 1).
@@ -127,8 +186,11 @@ impl CompletionKind {
 pub struct Completion {
     /// The queued request (hedge twins share `id`/`payload`).
     pub request: QueuedRequest,
-    /// Device the copy ran on.
+    /// Tier of the device the copy ran on.
     pub device: DeviceKind,
+    /// Lane (fleet device id) the copy ran on — 0 = edge, 1 = cloud for
+    /// a pair-built dispatcher.
+    pub lane: usize,
     /// When its batch started executing.
     pub start_s: f64,
     /// When its batch finished (= response time at the device).
@@ -143,14 +205,15 @@ pub struct Completion {
 ///
 /// Invariants once drained: `wins_edge + wins_cloud == hedged`, and every
 /// hedged request resolves its twin exactly one way —
-/// `cancelled_unrun + losers_run == hedged`.
+/// `cancelled_unrun + losers_run == hedged`. In a fleet the per-tier win
+/// counters aggregate over that tier's lanes.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct HedgeStats {
-    /// Requests actually duplicated (both copies admitted).
+    /// Requests actually duplicated on both lanes (both copies admitted).
     pub hedged: u64,
-    /// Hedged requests whose edge copy finished first.
+    /// Hedged requests whose edge-tier copy finished first.
     pub wins_edge: u64,
-    /// Hedged requests whose cloud copy finished first.
+    /// Hedged requests whose cloud-tier copy finished first.
     pub wins_cloud: u64,
     /// Losing twins cancelled while still queued (no work wasted).
     pub cancelled_unrun: u64,
@@ -159,13 +222,26 @@ pub struct HedgeStats {
     pub losers_run: u64,
 }
 
-/// Outcome of a hedged submission ([`Dispatcher::submit_hedged`]).
+/// Outcome of a hedged submission on the classic pair surface
+/// ([`Dispatcher::submit_hedged`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum HedgeOutcome {
     /// Both copies admitted: the request is racing on both lanes.
     Hedged,
     /// Only one lane had room: degraded to a normal submission there.
     Single(DeviceKind),
+    /// Both lanes full: the request was shed.
+    Rejected,
+}
+
+/// Outcome of a hedged submission across an arbitrary lane pair
+/// ([`Dispatcher::submit_hedged_lanes`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaneHedgeOutcome {
+    /// Both copies admitted: the request is racing on both lanes.
+    Hedged,
+    /// Only this lane had room: degraded to a normal submission there.
+    Single(usize),
     /// Both lanes full: the request was shed.
     Rejected,
 }
@@ -183,14 +259,34 @@ enum CopyState {
 }
 
 /// Dispatcher-side state of one in-flight hedge race (a slab entry;
-/// both queued copies carry its key).
+/// both queued copies carry its key). `lanes` records which two lanes
+/// the race spans — `[0, 1]` for the classic pair, any (edge, cloud)
+/// placement pair in a fleet — and `est`/`state` are indexed by *side*
+/// (position in `lanes`), not by lane id.
 #[derive(Debug, Clone, Copy)]
 struct HedgeEntry {
-    /// Per-lane service estimate (`[edge, cloud]`) — needed to reclaim
-    /// backlog when the queued twin is cancelled.
+    /// The two lanes racing (side 0, side 1).
+    lanes: [usize; 2],
+    /// Per-side service estimate — needed to reclaim backlog when the
+    /// queued twin is cancelled.
     est: [f64; 2],
     state: [CopyState; 2],
-    winner: Option<DeviceKind>,
+    /// Winning side (0 or 1), once decided.
+    winner: Option<u8>,
+}
+
+impl HedgeEntry {
+    /// Which side of this race lane `lane` is. A live copy is only ever
+    /// queued on one of the race's two lanes, so the fallback to side 1
+    /// is exact.
+    #[inline]
+    fn side_of(&self, lane: usize) -> usize {
+        if self.lanes[0] == lane {
+            0
+        } else {
+            1
+        }
+    }
 }
 
 /// A dispatched copy waiting for its finish event to fire. Ordered by
@@ -202,7 +298,7 @@ struct Pending {
     seq: u64,
     start_s: f64,
     batch_size: usize,
-    device: DeviceKind,
+    lane: usize,
     request: QueuedRequest,
 }
 
@@ -231,13 +327,15 @@ impl Ord for Pending {
 /// Queue + capacity state for one device (internal to the dispatcher).
 #[derive(Debug, Clone)]
 struct Lane {
+    kind: DeviceKind,
     queue: AdmissionQueue,
     tracker: CapacityTracker,
 }
 
 impl Lane {
-    fn new(workers: usize, max_depth: usize) -> Self {
+    fn new(kind: DeviceKind, workers: usize, max_depth: usize) -> Self {
         Lane {
+            kind,
             queue: AdmissionQueue::new(max_depth),
             tracker: CapacityTracker::new(workers),
         }
@@ -260,30 +358,24 @@ fn lane_idx(device: DeviceKind) -> usize {
     }
 }
 
-fn other(device: DeviceKind) -> DeviceKind {
-    match device {
-        DeviceKind::Edge => DeviceKind::Cloud,
-        DeviceKind::Cloud => DeviceKind::Edge,
-    }
-}
-
-/// Is `rq` a cancelled hedge ghost on lane `li`? (Generation-checked
+/// Is `rq` a cancelled hedge ghost on lane `lane`? (Generation-checked
 /// arena lookup; false for solo requests and live copies.)
-fn is_ghost(hedges: &Slab<HedgeEntry>, rq: &QueuedRequest, li: usize) -> bool {
+fn is_ghost(hedges: &Slab<HedgeEntry>, rq: &QueuedRequest, lane: usize) -> bool {
     match rq.hedge {
         Some(key) => matches!(
             hedges.get(key),
-            Some(entry) if entry.state[li] == CopyState::Cancelled
+            Some(entry) if entry.state[entry.side_of(lane)] == CopyState::Cancelled
         ),
         None => false,
     }
 }
 
-/// The two-lane edge/cloud dispatcher.
+/// The N-lane worker-pool dispatcher (lane 0 = edge, lane 1 = cloud
+/// when built from a [`DispatcherConfig`] pair).
 #[derive(Debug, Clone)]
 pub struct Dispatcher {
-    edge: Lane,
-    cloud: Lane,
+    /// One lane per fleet device, indexed by device id.
+    lanes: Vec<Lane>,
     policy: BatchPolicy,
     stats: BatchStats,
     /// Dispatched copies whose finish events have not fired yet
@@ -299,86 +391,144 @@ pub struct Dispatcher {
 }
 
 impl Dispatcher {
-    /// Build a dispatcher from its sizing parameters.
+    /// Build the classic edge/cloud pair: lane 0 is the edge, lane 1
+    /// the cloud.
     pub fn new(cfg: &DispatcherConfig) -> Self {
+        Dispatcher::with_lanes(
+            &[
+                LaneSpec {
+                    kind: DeviceKind::Edge,
+                    workers: cfg.edge_workers,
+                    max_queue_depth: cfg.max_queue_depth,
+                },
+                LaneSpec {
+                    kind: DeviceKind::Cloud,
+                    workers: cfg.cloud_workers,
+                    max_queue_depth: cfg.max_queue_depth,
+                },
+            ],
+            cfg.batch,
+        )
+    }
+
+    /// Build a fleet dispatcher: one lane per device spec, indexed in
+    /// order (the fleet's device ids). Panics on an empty spec list —
+    /// a dispatcher with no lanes can route nothing.
+    pub fn with_lanes(specs: &[LaneSpec], batch: BatchPolicy) -> Self {
+        assert!(!specs.is_empty(), "Dispatcher needs at least one lane");
         Dispatcher {
-            edge: Lane::new(cfg.edge_workers, cfg.max_queue_depth),
-            cloud: Lane::new(cfg.cloud_workers, cfg.max_queue_depth),
-            policy: cfg.batch,
+            lanes: specs
+                .iter()
+                .map(|s| Lane::new(s.kind, s.workers, s.max_queue_depth))
+                .collect(),
+            policy: batch,
             stats: BatchStats::default(),
             pending: BinaryHeap::with_capacity(64),
             seq: 0,
             hedges: Slab::with_capacity(16),
-            scratch: Vec::with_capacity(cfg.batch.max_batch.max(1)),
+            scratch: Vec::with_capacity(batch.max_batch.max(1)),
             hedge_stats: HedgeStats::default(),
         }
     }
 
-    fn lane(&self, device: DeviceKind) -> &Lane {
-        match device {
-            DeviceKind::Edge => &self.edge,
-            DeviceKind::Cloud => &self.cloud,
-        }
+    /// Number of lanes (fleet devices).
+    pub fn num_lanes(&self) -> usize {
+        self.lanes.len()
     }
 
-    fn lane_mut(&mut self, device: DeviceKind) -> &mut Lane {
-        match device {
-            DeviceKind::Edge => &mut self.edge,
-            DeviceKind::Cloud => &mut self.cloud,
-        }
+    /// Tier of lane `lane`.
+    pub fn lane_kind(&self, lane: usize) -> DeviceKind {
+        self.lanes[lane].kind
     }
 
     /// Expected queueing delay on `device` for a request arriving now —
-    /// the router adds this to each side of eq. 1.
+    /// the router adds this to each side of eq. 1. Pair surface (lane 0
+    /// = edge, lane 1 = cloud).
     #[inline]
     pub fn expected_wait_s(&self, device: DeviceKind, now_s: f64) -> f64 {
-        let lane = self.lane(device);
-        lane.tracker.expected_wait_s(now_s)
+        self.expected_wait_lane(lane_idx(device), now_s)
     }
 
-    /// Admit a request to `device`'s queue (O(1), allocation-free once
-    /// warmed). The request's bucket is assigned here so queue and
+    /// Expected queueing delay on lane `lane` — the fleet selector adds
+    /// this to every candidate placement's score.
+    #[inline]
+    pub fn expected_wait_lane(&self, lane: usize, now_s: f64) -> f64 {
+        self.lanes[lane].tracker.expected_wait_s(now_s)
+    }
+
+    /// Admit a request to `device`'s queue (pair surface).
+    pub fn submit(&mut self, device: DeviceKind, rq: QueuedRequest) -> Admission {
+        self.submit_lane(lane_idx(device), rq)
+    }
+
+    /// Admit a request to lane `lane`'s queue (O(1), allocation-free
+    /// once warmed). The request's bucket is assigned here so queue and
     /// batcher always agree on it; the hedge key is dispatcher-owned
     /// and cleared for solo submissions.
-    pub fn submit(&mut self, device: DeviceKind, mut rq: QueuedRequest) -> Admission {
+    pub fn submit_lane(&mut self, lane: usize, mut rq: QueuedRequest) -> Admission {
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
-        self.lane_mut(device).offer(rq)
+        self.lanes[lane].offer(rq)
     }
 
-    /// Hedged submission: enqueue a copy of `rq` on *both* lanes, with
-    /// per-lane service estimates (the copies differ only in
-    /// `est_service_s`). First copy to finish wins; the loser is
-    /// cancelled ([`CompletionKind`]). If only one lane admits, the
-    /// request degrades to a normal submission there; if neither does,
-    /// it is shed. O(1).
+    /// Hedged submission on the classic pair: race lane 0 (edge) against
+    /// lane 1 (cloud). See [`submit_hedged_lanes`].
+    ///
+    /// [`submit_hedged_lanes`]: Dispatcher::submit_hedged_lanes
     pub fn submit_hedged(
         &mut self,
-        mut rq: QueuedRequest,
+        rq: QueuedRequest,
         edge_est_s: f64,
         cloud_est_s: f64,
     ) -> HedgeOutcome {
+        match self.submit_hedged_lanes(rq, 0, edge_est_s, 1, cloud_est_s) {
+            LaneHedgeOutcome::Hedged => HedgeOutcome::Hedged,
+            LaneHedgeOutcome::Single(lane) => HedgeOutcome::Single(self.lanes[lane].kind),
+            LaneHedgeOutcome::Rejected => HedgeOutcome::Rejected,
+        }
+    }
+
+    /// Hedged submission across an arbitrary lane pair: enqueue a copy
+    /// of `rq` on lane `lane_a` and lane `lane_b`, with per-lane service
+    /// estimates (the copies differ only in `est_service_s`). First copy
+    /// to finish wins; the loser is cancelled ([`CompletionKind`]). If
+    /// only one lane admits, the request degrades to a normal submission
+    /// there; if neither does, it is shed. O(1).
+    ///
+    /// In a fleet this races the best edge placement against the best
+    /// cloud placement ([`crate::fleet::select`]); the lanes must be
+    /// distinct.
+    pub fn submit_hedged_lanes(
+        &mut self,
+        mut rq: QueuedRequest,
+        lane_a: usize,
+        est_a_s: f64,
+        lane_b: usize,
+        est_b_s: f64,
+    ) -> LaneHedgeOutcome {
+        assert!(lane_a != lane_b, "a hedge race needs two distinct lanes");
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
         // Room is checked up front so the race entry is allocated only
         // when both copies are expected to be admitted (`offer` applies
         // the same live-depth predicate today).
-        if self.edge.queue.has_room() && self.cloud.queue.has_room() {
+        if self.lanes[lane_a].queue.has_room() && self.lanes[lane_b].queue.has_room() {
             let key = self.hedges.insert(HedgeEntry {
-                est: [edge_est_s, cloud_est_s],
+                lanes: [lane_a, lane_b],
+                est: [est_a_s, est_b_s],
                 state: [CopyState::Queued, CopyState::Queued],
                 winner: None,
             });
             rq.hedge = Some(key);
-            let mut edge_rq = rq;
-            edge_rq.est_service_s = edge_est_s;
-            let mut cloud_rq = rq;
-            cloud_rq.est_service_s = cloud_est_s;
-            let edge_ok = self.edge.offer(edge_rq).is_admitted();
-            let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
-            if edge_ok && cloud_ok {
+            let mut a_rq = rq;
+            a_rq.est_service_s = est_a_s;
+            let mut b_rq = rq;
+            b_rq.est_service_s = est_b_s;
+            let a_ok = self.lanes[lane_a].offer(a_rq).is_admitted();
+            let b_ok = self.lanes[lane_b].offer(b_rq).is_admitted();
+            if a_ok && b_ok {
                 self.hedge_stats.hedged += 1;
-                return HedgeOutcome::Hedged;
+                return LaneHedgeOutcome::Hedged;
             }
             // Defensive unwind: unreachable today, but if `offer` ever
             // grows a shed condition `has_room` doesn't know about, the
@@ -387,24 +537,24 @@ impl Dispatcher {
             // generation check classifies its completion as Solo and it
             // can never be mistaken for a ghost.
             self.hedges.remove(key);
-            return match (edge_ok, cloud_ok) {
-                (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
-                (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
-                _ => HedgeOutcome::Rejected,
+            return match (a_ok, b_ok) {
+                (true, false) => LaneHedgeOutcome::Single(lane_a),
+                (false, true) => LaneHedgeOutcome::Single(lane_b),
+                _ => LaneHedgeOutcome::Rejected,
             };
         }
         // Degraded path: offer both copies anyway (the full lane counts
         // the rejection, exactly as a solo offer would).
-        let mut edge_rq = rq;
-        edge_rq.est_service_s = edge_est_s;
-        let mut cloud_rq = rq;
-        cloud_rq.est_service_s = cloud_est_s;
-        let edge_ok = self.edge.offer(edge_rq).is_admitted();
-        let cloud_ok = self.cloud.offer(cloud_rq).is_admitted();
-        match (edge_ok, cloud_ok) {
-            (true, false) => HedgeOutcome::Single(DeviceKind::Edge),
-            (false, true) => HedgeOutcome::Single(DeviceKind::Cloud),
-            (false, false) => HedgeOutcome::Rejected,
+        let mut a_rq = rq;
+        a_rq.est_service_s = est_a_s;
+        let mut b_rq = rq;
+        b_rq.est_service_s = est_b_s;
+        let a_ok = self.lanes[lane_a].offer(a_rq).is_admitted();
+        let b_ok = self.lanes[lane_b].offer(b_rq).is_admitted();
+        match (a_ok, b_ok) {
+            (true, false) => LaneHedgeOutcome::Single(lane_a),
+            (false, true) => LaneHedgeOutcome::Single(lane_b),
+            (false, false) => LaneHedgeOutcome::Rejected,
             // `offer` rejects whenever `has_room` is false (it is the
             // same predicate), so both lanes admitting after at least
             // one reported no room is an internal-invariant breach —
@@ -414,18 +564,31 @@ impl Dispatcher {
         }
     }
 
-    /// Queue depth on `device` (includes not-yet-purged cancelled twins).
+    /// Queue depth on `device` (pair surface; includes not-yet-purged
+    /// cancelled twins).
     pub fn depth(&self, device: DeviceKind) -> usize {
-        self.lane(device).queue.depth()
+        self.depth_lane(lane_idx(device))
     }
 
-    /// Admission counters for `device`'s queue. Hedged submissions offer
-    /// one copy per lane, so `offered` counts copies, not requests.
+    /// Queue depth on lane `lane` (includes not-yet-purged cancelled
+    /// twins).
+    pub fn depth_lane(&self, lane: usize) -> usize {
+        self.lanes[lane].queue.depth()
+    }
+
+    /// Admission counters for `device`'s queue (pair surface). Hedged
+    /// submissions offer one copy per lane, so `offered` counts copies,
+    /// not requests.
     pub fn queue_stats(&self, device: DeviceKind) -> QueueStats {
-        self.lane(device).queue.stats()
+        self.queue_stats_lane(lane_idx(device))
     }
 
-    /// Micro-batch size accounting across both lanes.
+    /// Admission counters for lane `lane`'s queue.
+    pub fn queue_stats_lane(&self, lane: usize) -> QueueStats {
+        self.lanes[lane].queue.stats()
+    }
+
+    /// Micro-batch size accounting across all lanes.
     pub fn batch_stats(&self) -> BatchStats {
         self.stats
     }
@@ -444,7 +607,7 @@ impl Dispatcher {
 
     /// No queued work and no in-flight batches?
     pub fn idle(&self) -> bool {
-        self.edge.queue.is_empty() && self.cloud.queue.is_empty() && self.pending.is_empty()
+        self.lanes.iter().all(|l| l.queue.is_empty()) && self.pending.is_empty()
     }
 
     /// Time of the next event (batch start or batch completion), if any
@@ -452,7 +615,7 @@ impl Dispatcher {
     /// queue heads as a side effect. External event loops (closed-loop
     /// clients) interleave their submissions with this clock.
     pub fn next_event_s(&mut self) -> Option<f64> {
-        let next_start = self.next_batch_start().map(|(_d, s)| s);
+        let next_start = self.next_batch_start().map(|(_l, s)| s);
         let next_done = self.pending.peek().map(|p| p.0.done_s);
         match (next_start, next_done) {
             (None, None) => None,
@@ -462,32 +625,26 @@ impl Dispatcher {
         }
     }
 
-    /// Earliest batch start across both lanes (edge wins ties).
-    fn next_batch_start(&mut self) -> Option<(DeviceKind, f64)> {
-        let e = self.lane_next_start(DeviceKind::Edge);
-        let c = self.lane_next_start(DeviceKind::Cloud);
-        match (e, c) {
-            (None, None) => None,
-            (Some(s), None) => Some((DeviceKind::Edge, s)),
-            (None, Some(s)) => Some((DeviceKind::Cloud, s)),
-            (Some(se), Some(sc)) => {
-                if se <= sc {
-                    Some((DeviceKind::Edge, se))
-                } else {
-                    Some((DeviceKind::Cloud, sc))
-                }
+    /// Earliest batch start across all lanes (lowest lane index wins
+    /// ties — the edge before the cloud in the pair).
+    fn next_batch_start(&mut self) -> Option<(usize, f64)> {
+        let mut best: Option<(usize, f64)> = None;
+        for li in 0..self.lanes.len() {
+            if let Some(s) = self.lane_next_start(li) {
+                best = match best {
+                    Some((_bl, bs)) if bs <= s => best,
+                    _ => Some((li, s)),
+                };
             }
         }
+        best
     }
 
-    /// Start time of `device`'s next batch (max of head arrival and the
+    /// Start time of lane `li`'s next batch (max of head arrival and the
     /// earliest-free worker), purging cancelled heads on the way.
-    fn lane_next_start(&mut self, device: DeviceKind) -> Option<f64> {
-        let li = lane_idx(device);
-        let (lane, hedges) = match device {
-            DeviceKind::Edge => (&mut self.edge, &mut self.hedges),
-            DeviceKind::Cloud => (&mut self.cloud, &mut self.hedges),
-        };
+    fn lane_next_start(&mut self, li: usize) -> Option<f64> {
+        let lane = &mut self.lanes[li];
+        let hedges = &mut self.hedges;
         loop {
             let head = match lane.queue.peek() {
                 None => return None,
@@ -513,7 +670,7 @@ impl Dispatcher {
     /// finish-time order.
     pub fn step<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F) -> bool
     where
-        E: BatchExecutor,
+        E: LaneExecutor,
         F: FnMut(Completion),
     {
         let next_start = self.next_batch_start();
@@ -522,7 +679,7 @@ impl Dispatcher {
             (None, None) => return false,
             (None, Some(_)) => true,
             (Some(_), None) => false,
-            (Some((_d, s)), Some(t)) => t <= s,
+            (Some((_l, s)), Some(t)) => t <= s,
         };
         if completion_first {
             let done_s = next_done.expect("peeked completion exists");
@@ -531,42 +688,40 @@ impl Dispatcher {
             }
             self.flush_one(on_complete);
         } else {
-            let (device, start_s) = next_start.expect("peeked start exists");
+            let (lane, start_s) = next_start.expect("peeked start exists");
             if start_s > horizon_s {
                 return false;
             }
-            self.dispatch_at(device, start_s, exec);
+            self.dispatch_at(lane, start_s, exec);
         }
         true
     }
 
-    /// Process every event (on both lanes, in global simulated-time
+    /// Process every event (on all lanes, in global simulated-time
     /// order) up to and including `horizon_s`; `on_complete` fires once
     /// per finished copy. Drive with `horizon_s = next arrival time`
     /// while feeding arrivals, then once with `f64::INFINITY` to drain.
     pub fn run_until<E, F>(&mut self, horizon_s: f64, exec: &mut E, on_complete: &mut F)
     where
-        E: BatchExecutor,
+        E: LaneExecutor,
         F: FnMut(Completion),
     {
         while self.step(horizon_s, exec, on_complete) {}
     }
 
-    /// Form + execute one batch on `device` at `start_s`, pushing its
+    /// Form + execute one batch on lane `li` at `start_s`, pushing its
     /// members onto the pending-completion heap. Allocation-free once
     /// warmed: the batch forms into the reused scratch buffer and ghost
     /// purges recycle their arena slots.
-    fn dispatch_at<E>(&mut self, device: DeviceKind, start_s: f64, exec: &mut E)
+    fn dispatch_at<E>(&mut self, li: usize, start_s: f64, exec: &mut E)
     where
-        E: BatchExecutor,
+        E: LaneExecutor,
     {
-        let li = lane_idx(device);
+        let kind = self.lanes[li].kind;
         let mut batch = std::mem::take(&mut self.scratch);
         {
-            let (lane, hedges) = match device {
-                DeviceKind::Edge => (&mut self.edge, &mut self.hedges),
-                DeviceKind::Cloud => (&mut self.cloud, &mut self.hedges),
-            };
+            let lane = &mut self.lanes[li];
+            let hedges = &mut self.hedges;
             self.policy
                 .form_batch_into(&mut lane.queue, start_s, &mut batch, |rq| {
                     if is_ghost(hedges, rq, li) {
@@ -585,15 +740,16 @@ impl Dispatcher {
         for rq in &batch {
             if let Some(key) = rq.hedge {
                 if let Some(entry) = self.hedges.get_mut(key) {
-                    entry.state[li] = CopyState::Running;
+                    let side = entry.side_of(li);
+                    entry.state[side] = CopyState::Running;
                 }
             }
         }
         let est_sum: f64 = batch.iter().map(|r| r.est_service_s).sum();
-        let service_s = exec.execute(device, &batch, start_s).max(0.0);
+        let service_s = exec.execute_lane(li, kind, &batch, start_s).max(0.0);
         let done_s = start_s + service_s;
         {
-            let lane = self.lane_mut(device);
+            let lane = &mut self.lanes[li];
             let (worker, _free) = lane.tracker.earliest_free();
             lane.tracker.on_dispatch(worker, est_sum, done_s);
         }
@@ -607,7 +763,7 @@ impl Dispatcher {
                 seq,
                 start_s,
                 batch_size,
-                device,
+                lane: li,
                 request,
             }));
         }
@@ -620,10 +776,11 @@ impl Dispatcher {
         F: FnMut(Completion),
     {
         let Reverse(p) = self.pending.pop().expect("pending completion exists");
-        let kind = self.resolve_completion(p.device, p.request.hedge);
+        let kind = self.resolve_completion(p.lane, p.request.hedge);
         on_complete(Completion {
             request: p.request,
-            device: p.device,
+            device: self.lanes[p.lane].kind,
+            lane: p.lane,
             start_s: p.start_s,
             done_s: p.done_s,
             batch_size: p.batch_size,
@@ -635,30 +792,30 @@ impl Dispatcher {
     /// first finisher wins and cancels its twin (reclaiming queued
     /// capacity); a later finisher is wasted work. All O(1) — one
     /// generation-checked arena access, no hashing.
-    fn resolve_completion(&mut self, device: DeviceKind, hedge: Option<SlabKey>) -> CompletionKind {
+    fn resolve_completion(&mut self, lane: usize, hedge: Option<SlabKey>) -> CompletionKind {
         let key = match hedge {
             None => return CompletionKind::Solo,
             Some(k) => k,
         };
-        let di = lane_idx(device);
-        let ti = lane_idx(other(device));
-        let (kind, cancel_est) = match self.hedges.get_mut(key) {
+        let (kind, cancel) = match self.hedges.get_mut(key) {
             // Unreachable in practice (a dispatched copy's race entry
             // outlives it); treat a stale key as a solo completion.
             None => return CompletionKind::Solo,
             Some(entry) => {
-                entry.state[di] = CopyState::Done;
+                let side = entry.side_of(lane);
+                entry.state[side] = CopyState::Done;
                 if entry.winner.is_some() {
                     (CompletionKind::HedgeLoss, None)
                 } else {
-                    entry.winner = Some(device);
-                    if entry.state[ti] == CopyState::Queued {
+                    entry.winner = Some(side as u8);
+                    let twin = 1 - side;
+                    if entry.state[twin] == CopyState::Queued {
                         // Twin still queued: mark it cancelled in the
                         // race entry itself. The ghost is purged lazily
                         // (queue head / batcher lookahead), which also
                         // frees this entry.
-                        entry.state[ti] = CopyState::Cancelled;
-                        (CompletionKind::HedgeWin, Some(entry.est[ti]))
+                        entry.state[twin] = CopyState::Cancelled;
+                        (CompletionKind::HedgeWin, Some((entry.lanes[twin], entry.est[twin])))
                     } else {
                         // Twin running: keep the entry so its completion
                         // is classified as a loss.
@@ -674,16 +831,16 @@ impl Dispatcher {
                 self.hedge_stats.losers_run += 1;
             }
             CompletionKind::HedgeWin => {
-                match device {
+                match self.lanes[lane].kind {
                     DeviceKind::Edge => self.hedge_stats.wins_edge += 1,
                     DeviceKind::Cloud => self.hedge_stats.wins_cloud += 1,
                 }
-                if let Some(est) = cancel_est {
+                if let Some((twin_lane, est)) = cancel {
                     // Reclaim the cancelled twin's backlog share and
                     // admission slot now; the entry itself stays until
                     // the ghost is physically purged.
                     self.hedge_stats.cancelled_unrun += 1;
-                    let lane = self.lane_mut(other(device));
+                    let lane = &mut self.lanes[twin_lane];
                     lane.tracker.on_cancel(est);
                     lane.queue.mark_dead();
                 }
@@ -726,6 +883,23 @@ mod tests {
         }
     }
 
+    /// Per-lane fixed batch time (the fleet executor shape).
+    struct PerLaneExec {
+        lane_s: Vec<f64>,
+    }
+
+    impl LaneExecutor for PerLaneExec {
+        fn execute_lane(
+            &mut self,
+            lane: usize,
+            _d: DeviceKind,
+            _batch: &[QueuedRequest],
+            _s: f64,
+        ) -> f64 {
+            self.lane_s[lane]
+        }
+    }
+
     fn rq(id: u64, arrival_s: f64, m_est: f64) -> QueuedRequest {
         QueuedRequest {
             id,
@@ -739,7 +913,7 @@ mod tests {
         }
     }
 
-    fn collect_completions<E: BatchExecutor>(
+    fn collect_completions<E: LaneExecutor>(
         disp: &mut Dispatcher,
         exec: &mut E,
         horizon_s: f64,
@@ -747,6 +921,20 @@ mod tests {
         let mut out = Vec::new();
         disp.run_until(horizon_s, exec, &mut |c| out.push(c));
         out
+    }
+
+    /// A 1-edge × 3-cloud fleet (4 lanes) used by the fleet-shape tests.
+    fn fleet4() -> Dispatcher {
+        let spec = |kind, workers| LaneSpec { kind, workers, max_queue_depth: 512 };
+        Dispatcher::with_lanes(
+            &[
+                spec(DeviceKind::Edge, 1),
+                spec(DeviceKind::Cloud, 1),
+                spec(DeviceKind::Cloud, 1),
+                spec(DeviceKind::Cloud, 1),
+            ],
+            BatchPolicy::default(),
+        )
     }
 
     #[test]
@@ -760,6 +948,7 @@ mod tests {
         assert!((done[0].done_s - 1.1).abs() < 1e-12);
         assert_eq!(done[0].batch_size, 1);
         assert_eq!(done[0].kind, CompletionKind::Solo);
+        assert_eq!(done[0].lane, 0, "pair edge is lane 0");
         assert!(disp.idle());
     }
 
@@ -794,6 +983,7 @@ mod tests {
         let done = collect_completions(&mut disp, &mut exec, 5.1);
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].device, DeviceKind::Cloud);
+        assert_eq!(done[0].lane, 1, "pair cloud is lane 1");
         assert!(disp.idle());
     }
 
@@ -926,7 +1116,7 @@ mod tests {
     fn queued_twin_that_starts_before_winner_finishes_still_races() {
         // Edge copy starts at 0 and takes 5 s; the cloud twin is queued
         // behind a 1 s blocker, starts at 1.0 — *before* the edge copy
-        // finishes — so it must not be cancelled, and it wins at 1.1.
+        // finishes — so it must not be cancelled, and it wins at 2.0.
         let cfg = DispatcherConfig {
             edge_workers: 1,
             cloud_workers: 1,
@@ -1048,5 +1238,127 @@ mod tests {
         assert_eq!(hs.cancelled_unrun + hs.losers_run, 50);
         assert_eq!(disp.hedges_in_flight(), 0);
         assert!(disp.idle());
+    }
+
+    // ------------------------------------------------------------ fleet lanes
+
+    #[test]
+    fn fleet_lanes_route_independently() {
+        // 4 lanes, distinct service times: every lane runs its own
+        // queue/tracker, completions carry the right lane id and tier.
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![0.4, 0.1, 0.2, 0.3] };
+        for lane in 0..4 {
+            assert!(disp.submit_lane(lane, rq(lane as u64, 0.0, 10.0)).is_admitted());
+        }
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 4);
+        // Finish order follows per-lane service times.
+        let lanes: Vec<usize> = done.iter().map(|c| c.lane).collect();
+        assert_eq!(lanes, vec![1, 2, 3, 0]);
+        assert_eq!(done[3].device, DeviceKind::Edge);
+        assert_eq!(done[0].device, DeviceKind::Cloud);
+        assert!(disp.idle());
+    }
+
+    #[test]
+    fn fleet_tie_break_prefers_lowest_lane_index() {
+        // Equal start times on three idle lanes: dispatch order (hence
+        // seq / completion order at equal finish times) must scan lanes
+        // in index order — the N-lane generalisation of edge-wins-ties.
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![0.1, 0.1, 0.1, 0.1] };
+        for lane in [3usize, 1, 0] {
+            disp.submit_lane(lane, rq(lane as u64, 0.0, 10.0));
+        }
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        let lanes: Vec<usize> = done.iter().map(|c| c.lane).collect();
+        assert_eq!(lanes, vec![0, 1, 3], "lowest lane must dispatch first on ties");
+    }
+
+    #[test]
+    fn fleet_hedge_races_arbitrary_lane_pair() {
+        // Hedge across lanes (0, 3): the race entry records its lane
+        // pair, so a win on lane 3 cancels the queued twin on lane 0.
+        let mut disp = fleet4();
+        // Lane 0 blocked for 5 s; lane 3 fast.
+        let mut exec = PerLaneExec { lane_s: vec![5.0, 0.1, 0.1, 0.2] };
+        disp.submit_lane(0, rq(0, 0.0, 30.0)); // blocker on the edge
+        assert_eq!(
+            disp.submit_hedged_lanes(rq(1, 0.0, 10.0), 0, 5.0, 3, 0.2),
+            LaneHedgeOutcome::Hedged
+        );
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        // Lane-3 copy wins at 0.2; the lane-0 twin (queued behind the
+        // blocker) is purged unrun; the blocker completes solo.
+        let resolved: Vec<(u64, usize, CompletionKind)> =
+            done.iter().map(|c| (c.request.id, c.lane, c.kind)).collect();
+        assert_eq!(
+            resolved,
+            vec![
+                (1, 3, CompletionKind::HedgeWin),
+                (0, 0, CompletionKind::Solo),
+            ]
+        );
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.hedged, 1);
+        assert_eq!(hs.wins_cloud, 1, "lane 3 is cloud tier");
+        assert_eq!(hs.cancelled_unrun, 1);
+        assert_eq!(disp.hedges_in_flight(), 0);
+        assert!(disp.idle());
+        assert_eq!(disp.expected_wait_lane(0, 100.0), 0.0, "twin backlog reclaimed");
+    }
+
+    #[test]
+    fn fleet_conservation_across_many_lanes() {
+        // Random-ish traffic over 4 lanes with hedges on rotating lane
+        // pairs: results == admitted, the arena drains, nothing leaks.
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![0.03, 0.01, 0.02, 0.015] };
+        let mut admitted = 0u64;
+        let mut results = 0u64;
+        let mut on_c = |c: Completion| {
+            if c.kind.is_result() {
+                results += 1;
+            }
+        };
+        for i in 0..400u64 {
+            let t = i as f64 * 0.005;
+            disp.run_until(t, &mut exec, &mut on_c);
+            let rq = rq(i, t, (i % 32) as f64);
+            if i % 5 == 0 {
+                let cloud = 1 + (i as usize / 5) % 3;
+                match disp.submit_hedged_lanes(rq, 0, 0.03, cloud, 0.02) {
+                    LaneHedgeOutcome::Hedged | LaneHedgeOutcome::Single(_) => admitted += 1,
+                    LaneHedgeOutcome::Rejected => {}
+                }
+            } else if disp.submit_lane((i % 4) as usize, rq).is_admitted() {
+                admitted += 1;
+            }
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut on_c);
+        assert_eq!(results, admitted);
+        assert!(disp.idle());
+        assert_eq!(disp.hedges_in_flight(), 0);
+        for lane in 0..4 {
+            assert_eq!(disp.depth_lane(lane), 0);
+            assert!(disp.expected_wait_lane(lane, 1e9) < 1e-9);
+        }
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.wins_edge + hs.wins_cloud, hs.hedged);
+        assert_eq!(hs.cancelled_unrun + hs.losers_run, hs.hedged);
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_lane_list_rejected_at_construction() {
+        Dispatcher::with_lanes(&[], BatchPolicy::default());
+    }
+
+    #[test]
+    #[should_panic]
+    fn hedge_on_same_lane_rejected() {
+        let mut disp = fleet4();
+        disp.submit_hedged_lanes(rq(0, 0.0, 10.0), 2, 0.1, 2, 0.1);
     }
 }

@@ -14,9 +14,14 @@
 //! * [`batch`] — length-bucketed micro-batching keyed on the
 //!   [`crate::predictor::N2mRegressor`] estimate M̂, amortising the
 //!   serial O(M) decode loop across compatible requests;
-//! * [`dispatch`] — the two-lane worker-pool dispatcher tying the above
-//!   together behind a backend-agnostic [`BatchExecutor`], processing
-//!   batch starts and batch completions in global simulated-time order.
+//! * [`dispatch`] — the N-lane worker-pool dispatcher tying the above
+//!   together behind backend-agnostic executors ([`BatchExecutor`] for
+//!   the classic pair, [`LaneExecutor`] for heterogeneous fleets),
+//!   processing batch starts and batch completions in global
+//!   simulated-time order. One lane per fleet device
+//!   ([`crate::fleet::Topology`]); a pair-built dispatcher maps edge to
+//!   lane 0 and cloud to lane 1, bit-identically to the historical
+//!   two-lane implementation.
 //!
 //! The queue-aware decision is then eq. 1 with a wait term on each side
 //! ([`crate::coordinator::Router::decide_loaded`]):
@@ -88,6 +93,8 @@ pub use batch::{BatchPolicy, BatchStats};
 pub use capacity::CapacityTracker;
 pub use dispatch::{
     BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
-    HedgeStats,
+    HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec,
 };
-pub use queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};
+pub use queue::{
+    Admission, AdmissionQueue, FairQueue, QueueStats, QueuedRequest, TenantSpec,
+};

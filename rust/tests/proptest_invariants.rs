@@ -722,6 +722,118 @@ fn prop_dense_dispatcher_is_bit_equivalent_to_frozen_baseline() {
 }
 
 #[test]
+fn prop_fleet_pair_is_bit_equivalent_to_contended_across_random_loads() {
+    // THE fleet-refactor oracle at harness scope: across random offered
+    // loads, the fleet replay on the 1×1 topology must reproduce the
+    // pair replay bit for bit — Static ≡ queue-blind cnmt, Select ≡
+    // cnmt+queue, Hedged ≡ cnmt+adaptive with the RLS refit disabled.
+    use cnmt::fleet::{FleetStrategy, Topology};
+    use cnmt::sim::{run_fleet, ContendedResult, FleetOpts, FleetResult};
+    fn assert_same(tag: &str, f: &FleetResult, p: &ContendedResult) {
+        assert_eq!(f.offered, p.offered, "{tag}");
+        assert_eq!(f.completed, p.completed, "{tag}");
+        assert_eq!(f.rejected, p.rejected, "{tag}");
+        assert_eq!(f.edge_count, p.edge_count, "{tag}");
+        assert_eq!(f.cloud_count, p.cloud_count, "{tag}");
+        assert_eq!(f.makespan_s.to_bits(), p.makespan_s.to_bits(), "{tag}");
+        assert_eq!(f.mean_latency_s.to_bits(), p.mean_latency_s.to_bits(), "{tag}");
+        assert_eq!(f.p50_s.to_bits(), p.p50_s.to_bits(), "{tag}");
+        assert_eq!(f.p99_s.to_bits(), p.p99_s.to_bits(), "{tag}");
+        assert_eq!(f.mean_batch.to_bits(), p.mean_batch.to_bits(), "{tag}");
+        assert_eq!(f.hedged, p.hedged, "{tag}");
+        assert_eq!(f.hedge_cancelled, p.hedge_cancelled, "{tag}");
+        assert_eq!(f.hedge_wasted, p.hedge_wasted, "{tag}");
+        assert_eq!(f.useful_work_s.to_bits(), p.useful_work_s.to_bits(), "{tag}");
+        assert_eq!(f.wasted_work_s.to_bits(), p.wasted_work_s.to_bits(), "{tag}");
+    }
+    let mut rng = Rng::new(0xF1D1FF);
+    let topo = Topology::pair();
+    for trial in 0..4u64 {
+        let load = rng.uniform(8.0, 200.0);
+        let (requests, ch) = synth_workload(900 + trial, 2_000, load);
+        let fleet = |strategy: FleetStrategy| {
+            run_fleet(&requests, &ch, &topo, &FleetOpts { strategy, ..Default::default() })
+                .unwrap()
+        };
+        let pair = |queue_aware: bool, adaptive: Option<AdaptiveOpts>| {
+            let opts = ContentionOpts { queue_aware, adaptive, ..Default::default() };
+            run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap()
+        };
+        assert_same(
+            &format!("trial {trial} static"),
+            &fleet(FleetStrategy::Static),
+            &pair(false, None),
+        );
+        assert_same(
+            &format!("trial {trial} select"),
+            &fleet(FleetStrategy::Select),
+            &pair(true, None),
+        );
+        let no_refit = AdaptiveOpts {
+            hedge_margin_s: 0.010,
+            refit_min_obs: u64::MAX,
+            refit_ttx: false,
+            ..Default::default()
+        };
+        assert_same(
+            &format!("trial {trial} hedge"),
+            &fleet(FleetStrategy::Hedged { margin_s: 0.010 }),
+            &pair(true, Some(no_refit)),
+        );
+    }
+}
+
+#[test]
+fn prop_fleet_runs_conserve_across_random_topologies() {
+    // Random fleet shapes, speeds, links and loads: every strategy
+    // conserves logical requests, per-device results sum to completed,
+    // and the hedge bookkeeping partitions.
+    use cnmt::fleet::{DeviceSpec, FleetStrategy, Topology};
+    use cnmt::sim::{run_fleet, FleetOpts};
+    let mut rng = Rng::new(0xF1EE7C);
+    for trial in 0..6u64 {
+        let edges = 1 + rng.usize(6);
+        let clouds = 1 + rng.usize(3);
+        let mut devices = Vec::new();
+        for i in 0..edges {
+            devices.push(DeviceSpec::edge(&format!("e{i}"), rng.uniform(0.4, 2.5)));
+        }
+        for i in 0..clouds {
+            devices.push(DeviceSpec::cloud(
+                &format!("c{i}"),
+                rng.uniform(0.4, 2.0),
+                rng.uniform(0.8, 2.0),
+            ));
+        }
+        let topo = Topology { name: format!("rand{trial}"), devices };
+        let load = rng.uniform(20.0, 400.0);
+        let (requests, ch) = synth_workload(7_000 + trial, 1_500, load);
+        for strategy in [
+            FleetStrategy::Static,
+            FleetStrategy::Random { seed: trial },
+            FleetStrategy::Select,
+            FleetStrategy::Hedged { margin_s: rng.uniform(0.001, 0.05) },
+        ] {
+            let r = run_fleet(
+                &requests,
+                &ch,
+                &topo,
+                &FleetOpts { strategy, ..Default::default() },
+            )
+            .unwrap();
+            let tag = format!("trial {trial} {}", r.policy);
+            assert_eq!(r.completed + r.rejected, r.offered, "{tag}");
+            assert_eq!(r.edge_count + r.cloud_count, r.completed, "{tag}");
+            assert_eq!(r.device_results.iter().sum::<usize>(), r.completed, "{tag}");
+            assert_eq!(r.device_results.len(), topo.len(), "{tag}");
+            assert_eq!(r.hedge_wins_edge + r.hedge_wins_cloud, r.hedged, "{tag}");
+            assert_eq!(r.hedge_cancelled + r.hedge_wasted, r.hedged, "{tag}");
+            assert!(r.wasted_frac() < 1.0 || r.completed == 0, "{tag}");
+        }
+    }
+}
+
+#[test]
 fn prop_online_stats_merge_equals_concat() {
     let mut rng = Rng::new(0x88);
     for _ in 0..TRIALS {
