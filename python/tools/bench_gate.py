@@ -8,11 +8,15 @@ in the zero-churn dispatcher and the parallel sweep runner:
   * single-thread event-loop throughput ≥ --min-events-per-sec;
   * dense dispatcher ≥ --min-speedup x the frozen pre-rewrite baseline
     (`scheduler::baseline`) on both the solo and hedged streams;
+  * the fleet path (FleetSelector + N-lane surface) on the 1x1 shape
+    runs at ≥ --min-fleet-ratio x the classic pair path's events/sec —
+    the lane generalisation must stay within a few percent, not an
+    order of magnitude;
   * the sharded sweep is bit-identical to the serial one and at least
     --min-sweep-speedup x faster at the bench's thread count.
 
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
-       [--min-speedup X] [--min-sweep-speedup X]
+       [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
 """
 
 import argparse
@@ -25,6 +29,7 @@ def main():
     ap.add_argument("report")
     ap.add_argument("--min-events-per-sec", type=float, default=100_000.0)
     ap.add_argument("--min-speedup", type=float, default=1.2)
+    ap.add_argument("--min-fleet-ratio", type=float, default=0.8)
     ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
     args = ap.parse_args()
 
@@ -39,11 +44,17 @@ def main():
     eps_hedged = b["event_loop_hedged"]["events_per_sec"]
     sp_solo = b["speedup"]["event_loop_solo"]
     sp_hedged = b["speedup"]["event_loop_hedged"]
+    fleet = b["fleet"]
+    fleet_ratio = fleet["ratio_vs_pair_solo"]
     sweep = b["sweep"]
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
         f"speedup vs frozen baseline: solo {sp_solo:.2f}x, hedged "
-        f"{sp_hedged:.2f}x | sweep {sweep['serial_wall_s']:.2f}s → "
+        f"{sp_hedged:.2f}x | fleet 1x1 path "
+        f"{fleet['lane2']['events_per_sec']:,.0f} ev/s "
+        f"({fleet_ratio:.2f}x pair), 4x2 "
+        f"{fleet['lane6']['events_per_sec']:,.0f} ev/s | "
+        f"sweep {sweep['serial_wall_s']:.2f}s → "
         f"{sweep['parallel_wall_s']:.2f}s at {sweep['threads']:.0f} threads "
         f"({sweep['speedup']:.2f}x, bit_identical={sweep['bit_identical']})"
     )
@@ -57,6 +68,11 @@ def main():
         failures.append(
             f"speedup vs baseline ({sp_solo:.2f}x / {sp_hedged:.2f}x) below "
             f"floor {args.min_speedup:.2f}x"
+        )
+    if fleet_ratio < args.min_fleet_ratio:
+        failures.append(
+            f"fleet 1x1 path at {fleet_ratio:.2f}x the pair path, below "
+            f"floor {args.min_fleet_ratio:.2f}x (lane generalisation regressed)"
         )
     if sweep["bit_identical"] is not True:
         failures.append("parallel sweep not bit-identical to serial")

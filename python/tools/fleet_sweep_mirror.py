@@ -57,6 +57,7 @@ import sys
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from load_sweep_mirror import (  # noqa: E402
+    ADAPTIVE_DEFAULTS,
     BATCH_RESIDUAL,
     BUCKET_WIDTH,
     CLOUD_PLANE,
@@ -71,10 +72,14 @@ from load_sweep_mirror import (  # noqa: E402
     TTX_ALPHA,
     TTX_PRIOR,
     TTX_REFRESH_S,
+    HedgeBudget,
     Histogram,
+    Rls,
+    Rls2,
     Rng,
     TtxEstimator,
     n2m_predict,
+    run_closed_loop,
     run_contended,
     synth_workload,
     texe_estimate,
@@ -92,6 +97,24 @@ FLEET_HEDGE_MARGIN_S = 0.010
 RANDOM_PICK_TAG = 0xF1E37
 DEFAULT_SHAPES = ["1x1", "4x2", "8x4", "hetero"]
 OFFERED_RPS = {"1x1": 96.0, "4x2": 288.0, "8x4": 576.0, "hetero": 224.0}
+
+# Closed-loop drift sweep constants (experiments::fleet).
+FLEET_CLOSED_SEED_TAG = 0xFC105ED
+FLEET_CLOSED_DRIFT_FACTOR = 2.5
+FLEET_CLOSED_DRIFT_START_FRAC = 0.25
+FLEET_CLOSED_DRIFT_RAMP_S = 10.0
+FLEET_CLOSED_CLIENTS = [8, 16, 32, 64]
+
+
+def fleet_drift_factor_at(drift, t_s):
+    """Mirror of DriftSpec::factor_at for a lane-pinned fleet spec
+    {lane, start_s, ramp_s, factor}."""
+    if t_s <= drift["start_s"]:
+        return 1.0
+    if drift["ramp_s"] <= 0.0:
+        return drift["factor"]
+    frac = min((t_s - drift["start_s"]) / drift["ramp_s"], 1.0)
+    return 1.0 + (drift["factor"] - 1.0) * frac
 
 
 def cell_seed(master, cell):
@@ -414,12 +437,17 @@ class FleetDispatcher:
 
 
 class FleetState:
-    """Mirror of run_fleet's selector + executor + accounting state."""
+    """Mirror of run_fleet's selector + executor + accounting state,
+    including the per-device refit banks (PlaneBank / LineBank), the
+    waste-budget margin controller and lane-pinned drift."""
 
-    def __init__(self, pool, topo, strategy, hedge_margin_s, pick_seed):
+    def __init__(self, pool, topo, strategy, hedge_margin_s, pick_seed,
+                 adaptive=None, drift=None):
         self.pool = pool
         self.strategy = strategy
         self.hedge_margin_s = hedge_margin_s
+        self.adaptive = adaptive
+        self.drift = drift
         devs = topo["devices"]
         self.tiers = [d["tier"] for d in devs]
         self.slowdown = [1.0 / d["speed"] for d in devs]
@@ -432,9 +460,33 @@ class FleetState:
         self.edge_ids = [i for i, t in enumerate(self.tiers) if t == EDGE]
         self.cloud_ids = [i for i, t in enumerate(self.tiers) if t == CLOUD]
         self.ttx = TtxEstimator(TTX_ALPHA)
+        # Per-device refit T_tx laws ((slope, intercept) once installed).
+        self.ttx_lines = [None] * len(devs)
         self.disp = FleetDispatcher(self.tiers, [d["workers"] for d in devs])
         self.rr = [0, 0]
         self.pick_rng = Rng(pick_seed) if strategy == "random" else None
+        # Per-device refit banks (mirror of FleetRefit: PlaneBank priors
+        # are the selector's scaled planes; LineBank lines start diffuse
+        # at zero, cloud devices only).
+        if adaptive is not None:
+            lam, pv = adaptive["rls_lambda"], adaptive["rls_prior_var"]
+            self.planes = [Rls(self.texe[d], lam, pv) for d in range(len(devs))]
+            self.lines = [
+                Rls2(0.0, 0.0, lam, pv) if t == CLOUD else None for t in self.tiers
+            ]
+        else:
+            self.planes = None
+            self.lines = None
+        # Waste-budget margin controller (FleetOpts::budget_ctl).
+        if (
+            adaptive is not None
+            and strategy == "hedge"
+            and hedge_margin_s > 0.0
+            and adaptive.get("waste_budget", 0.0) > 0.0
+        ):
+            self.ctl = HedgeBudget(adaptive["waste_budget"], hedge_margin_s)
+        else:
+            self.ctl = None
         # Accounting (mirror of FleetAcct).
         self.hist = Histogram()
         self.stats_count = 0
@@ -447,15 +499,20 @@ class FleetState:
         self.useful_work_s = 0.0
         self.wasted_work_s = 0.0
 
-    def exec_fn(self, li, batch, _start_s):
+    def true_service_s(self, truth, li, start_s):
+        """Mirror of fleet_true_service_s (slowdown, then lane-pinned
+        drift)."""
+        base = truth.t_edge if self.tiers[li] == EDGE else truth.t_cloud
+        t = base * self.slowdown[li]
+        if self.drift is not None and self.drift["lane"] == li:
+            t *= fleet_drift_factor_at(self.drift, start_s)
+        return t
+
+    def exec_fn(self, li, batch, start_s):
         mx = 0.0
         sm = 0.0
-        tier = self.tiers[li]
-        slow = self.slowdown[li]
         for rq in batch:
-            truth = self.pool[rq[1]]
-            base = truth.t_edge if tier == EDGE else truth.t_cloud
-            t = base * slow
+            t = self.true_service_s(self.pool[rq[1]], li, start_s)
             if t > mx:
                 mx = t
             sm += t
@@ -468,7 +525,12 @@ class FleetState:
             if self.tiers[d] == EDGE:
                 score = est + waits[d]
             else:
-                score = ttx_est * self.link_scale[d] + est + waits[d]
+                line = self.ttx_lines[d]
+                if line is not None:
+                    net = max(line[0] * (n + m_est) + line[1], 0.0)
+                else:
+                    net = ttx_est * self.link_scale[d]
+                score = net + est + waits[d]
             if score < best_score:
                 best_d, best_score, best_est = d, score, est
         return best_d, best_score, best_est
@@ -487,111 +549,137 @@ class FleetState:
             "best_cloud": bc,
         }
 
-    def process(self, comps):
-        for rq, li, _start_s, done_s, _bsize, kind in comps:
+    def apply_refit(self):
+        """Mirror of apply_fleet_refit: install every warmed per-device
+        plane and per-link T_tx law."""
+        if self.planes is None:
+            return
+        min_obs = self.adaptive["refit_min_obs"]
+        for d in range(len(self.texe)):
+            if self.planes[d].count >= min_obs:
+                w = self.planes[d].w
+                self.texe[d] = (w[0], w[1], w[2])
+            line = self.lines[d]
+            if (
+                self.adaptive["refit_ttx"]
+                and line is not None
+                and line.count >= min_obs
+            ):
+                self.ttx_lines[d] = (line.w[0], line.w[1])
+
+    def process(self, comps, on_result=None):
+        for comp in comps:
+            rq, li, start_s, done_s, _bsize, kind = comp
             truth = self.pool[rq[1]]
             tier = self.tiers[li]
-            base = truth.t_edge if tier == EDGE else truth.t_cloud
-            t_true = base * self.slowdown[li]
+            t_true = self.true_service_s(truth, li, start_s)
+            is_result = kind != LOSS
             if kind == LOSS:
                 self.wasted_work_s += t_true
-                continue
-            self.useful_work_s += t_true
-            tx_s = truth.t_tx * self.link_scale[li] if tier == CLOUD else 0.0
-            latency = (done_s - rq[5]) + tx_s
-            self.hist.record(latency)
-            self.stats_count += 1
-            self.stats_mean += (latency - self.stats_mean) / self.stats_count
-            if tier == EDGE:
-                self.edge_count += 1
+                if self.ctl is not None:
+                    self.ctl.observe(t_true, True)
             else:
-                self.cloud_count += 1
-            self.device_results[li] += 1
-            self.completed += 1
-            if done_s + tx_s > self.last_done_s:
-                self.last_done_s = done_s + tx_s
+                self.useful_work_s += t_true
+                if self.ctl is not None:
+                    self.ctl.observe(t_true, False)
+                tx_s = truth.t_tx * self.link_scale[li] if tier == CLOUD else 0.0
+                latency = (done_s - rq[5]) + tx_s
+                self.hist.record(latency)
+                self.stats_count += 1
+                self.stats_mean += (latency - self.stats_mean) / self.stats_count
+                if tier == EDGE:
+                    self.edge_count += 1
+                else:
+                    self.cloud_count += 1
+                self.completed += 1
+                if done_s + tx_s > self.last_done_s:
+                    self.last_done_s = done_s + tx_s
+            # Per-lane refit feedback — every observed execution counts,
+            # wasted ones included (they are real measurements).
+            if self.planes is not None:
+                self.planes[li].observe(
+                    float(truth.n), float(truth.m_real), t_true
+                )
+                if tier == CLOUD and self.adaptive["refit_ttx"]:
+                    self.lines[li].observe(
+                        float(truth.n + truth.m_real),
+                        truth.t_tx * self.link_scale[li],
+                    )
+            if is_result:
+                self.device_results[li] += 1
+                if on_result is not None:
+                    on_result(comp)
 
 
-def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0):
-    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed)
-    n_dev = len(st.tiers)
-    queue_aware = strategy in ("select", "hedge")
-    waits = [0.0] * n_dev
-    rejected = 0
-    for i, truth in enumerate(pool):
-        now = truth.arrival_s
-        comps = []
-        st.disp.run_until(now, st.exec_fn, comps)
-        st.process(comps)
-        if st.ttx.is_stale(now, TTX_REFRESH_S):
+def fleet_submit(st, i, truth, now, n_dev, waits):
+    """Mirror of fleet_route_and_submit: heartbeat, wait terms, arg-min
+    placement (or blind override), budget-controlled hedging. Returns
+    admitted."""
+    if st.ttx.is_stale(now, TTX_REFRESH_S):
+        st.ttx.observe(now, truth.rtt)
+    queue_aware = st.strategy in ("select", "hedge")
+    if queue_aware:
+        for d in range(n_dev):
+            waits[d] = st.disp.lanes[d].expected_wait_s(now)
+    else:
+        for d in range(n_dev):
+            waits[d] = 0.0
+    trace = st.select(truth.n, waits)
+    bucket = int(max(trace["m_est"], 0.0) / BUCKET_WIDTH)
+    rq = (i, i, truth.n, trace["m_est"], 0.0, now, bucket, None)
+    hedge = False
+    if st.strategy == "hedge":
+        bar = st.ctl.margin_s if st.ctl is not None else st.hedge_margin_s
+        margin = trace["best_edge"][1] - trace["best_cloud"][1]
+        hedge = bar > 0.0 and math.isfinite(margin) and abs(margin) <= bar
+    if hedge:
+        be, bc = trace["best_edge"], trace["best_cloud"]
+        outcome = st.disp.submit_hedged_lanes(rq, be[0], be[2], bc[0], bc[2])
+        cloud_in_flight = outcome == "hedged" or (
+            isinstance(outcome, tuple) and st.tiers[outcome[1]] == CLOUD
+        )
+        if cloud_in_flight:
             st.ttx.observe(now, truth.rtt)
-        if queue_aware:
-            for d in range(n_dev):
-                waits[d] = st.disp.lanes[d].expected_wait_s(now)
-        else:
-            for d in range(n_dev):
-                waits[d] = 0.0
-        trace = st.select(truth.n, waits)
-        bucket = int(max(trace["m_est"], 0.0) / BUCKET_WIDTH)
-        rq = (i, i, truth.n, trace["m_est"], 0.0, now, bucket, None)
-        hedge = False
-        if strategy == "hedge":
-            margin = trace["best_edge"][1] - trace["best_cloud"][1]
-            hedge = (
-                hedge_margin_s > 0.0
-                and math.isfinite(margin)
-                and abs(margin) <= hedge_margin_s
-            )
-        if hedge:
-            be, bc = trace["best_edge"], trace["best_cloud"]
-            outcome = st.disp.submit_hedged_lanes(rq, be[0], be[2], bc[0], bc[2])
-            cloud_in_flight = outcome == "hedged" or (
-                isinstance(outcome, tuple) and st.tiers[outcome[1]] == CLOUD
-            )
-            if cloud_in_flight:
-                st.ttx.observe(now, truth.rtt)
-            if outcome == "rejected":
-                rejected += 1
-        else:
-            if strategy in ("select", "hedge"):
-                dev = trace["device"]
-            elif strategy == "static":
-                ti = 0 if st.tiers[trace["device"]] == EDGE else 1
-                ids = st.edge_ids if ti == 0 else st.cloud_ids
-                dev = ids[st.rr[ti] % len(ids)]
-                st.rr[ti] += 1
-            else:  # random
-                ids = st.edge_ids if st.tiers[trace["device"]] == EDGE else st.cloud_ids
-                dev = ids[rng_usize(st.pick_rng, len(ids))]
-            est = (
-                trace["est"]
-                if dev == trace["device"]
-                else texe_estimate(st.texe[dev], truth.n, trace["m_est"])
-            )
-            rq = rq[:4] + (est,) + rq[5:]
-            if st.tiers[dev] == CLOUD:
-                st.ttx.observe(now, truth.rtt)
-            if not st.disp.submit_lane(dev, rq):
-                rejected += 1
-    comps = []
-    st.disp.run_until(float("inf"), st.exec_fn, comps)
-    st.process(comps)
+        return outcome != "rejected"
+    if st.strategy in ("select", "hedge"):
+        dev = trace["device"]
+    elif st.strategy == "static":
+        ti = 0 if st.tiers[trace["device"]] == EDGE else 1
+        ids = st.edge_ids if ti == 0 else st.cloud_ids
+        dev = ids[st.rr[ti] % len(ids)]
+        st.rr[ti] += 1
+    else:  # random
+        ids = st.edge_ids if st.tiers[trace["device"]] == EDGE else st.cloud_ids
+        dev = ids[rng_usize(st.pick_rng, len(ids))]
+    est = (
+        trace["est"]
+        if dev == trace["device"]
+        else texe_estimate(st.texe[dev], truth.n, trace["m_est"])
+    )
+    rq = rq[:4] + (est,) + rq[5:]
+    if st.tiers[dev] == CLOUD:
+        st.ttx.observe(now, truth.rtt)
+    return st.disp.submit_lane(dev, rq)
 
-    first_arrival = pool[0].arrival_s if pool else 0.0
-    makespan_s = max(st.last_done_s - first_arrival, 0.0)
-    disp = st.disp
-    offered = len(pool)
-    useful = st.useful_work_s
-    wasted = st.wasted_work_s
-    total_work = useful + wasted
+
+def fleet_label(strategy, adaptive):
     label = {
         "static": "fleet+static",
         "random": "fleet+random",
         "select": "fleet+select",
         "hedge": "fleet+hedge",
     }[strategy]
-    return {
-        "policy": label,
+    return label + "+refit" if adaptive is not None else label
+
+
+def finish_fleet(st, offered, rejected, makespan_s):
+    disp = st.disp
+    useful = st.useful_work_s
+    wasted = st.wasted_work_s
+    total_work = useful + wasted
+    queue_aware = st.strategy in ("select", "hedge")
+    out = {
+        "policy": fleet_label(st.strategy, st.adaptive),
         "queue_aware": queue_aware,
         "offered": float(offered),
         "completed": float(st.completed),
@@ -620,6 +708,96 @@ def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_se
         "device_results": [float(c) for c in st.device_results],
         "peak_depths": [float(lane.peak_depth) for lane in disp.lanes],
     }
+    if st.ctl is not None:
+        out["hedge_final_margin_s"] = st.ctl.margin_s
+    return out
+
+
+def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0,
+              adaptive=None, drift=None):
+    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive, drift)
+    n_dev = len(st.tiers)
+    waits = [0.0] * n_dev
+    rejected = 0
+    for i, truth in enumerate(pool):
+        now = truth.arrival_s
+        comps = []
+        st.disp.run_until(now, st.exec_fn, comps)
+        st.process(comps)
+        if adaptive is not None:
+            st.apply_refit()
+        if not fleet_submit(st, i, truth, now, n_dev, waits):
+            rejected += 1
+    comps = []
+    st.disp.run_until(float("inf"), st.exec_fn, comps)
+    st.process(comps)
+
+    first_arrival = pool[0].arrival_s if pool else 0.0
+    makespan_s = max(st.last_done_s - first_arrival, 0.0)
+    return finish_fleet(st, len(pool), rejected, makespan_s)
+
+
+def run_fleet_closed(pool, topo, strategy, clients, think_s=0.0,
+                     hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0,
+                     adaptive=None, drift=None):
+    """Mirror of sim::harness::run_fleet_closed (bounded-outstanding
+    clients driving the N-lane fleet path)."""
+    total = len(pool)
+    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive, drift)
+    n_dev = len(st.tiers)
+    waits = [0.0] * n_dev
+    ready_s = [0.0] * clients
+    waiting = [False] * clients
+    client_of = [0] * total
+    next_body = 0
+    rejected = 0
+    resolved = [0]
+
+    while resolved[0] < total:
+        t_submit = float("inf")
+        client = -1
+        if next_body < total:
+            for k in range(clients):
+                if not waiting[k] and ready_s[k] < t_submit:
+                    t_submit = ready_s[k]
+                    client = k
+        next_event = st.disp.next_event_s()
+        submit_first = client != -1 and (next_event is None or t_submit <= next_event)
+        if submit_first:
+            body = next_body
+            next_body += 1
+            client_of[body] = client
+            if fleet_submit(st, body, pool[body], t_submit, n_dev, waits):
+                waiting[client] = True
+            else:
+                rejected += 1
+                resolved[0] += 1
+        else:
+            if next_event is None:
+                break
+            comps = []
+            st.disp.step(next_event, st.exec_fn, comps)
+
+            def on_result(comp):
+                rq, li, _start_s, done_s, _bsize, _kind = comp
+                k = client_of[rq[1]]
+                tx_s = (
+                    pool[rq[1]].t_tx * st.link_scale[li]
+                    if st.tiers[li] == CLOUD
+                    else 0.0
+                )
+                waiting[k] = False
+                ready_s[k] = done_s + tx_s + think_s
+                resolved[0] += 1
+
+            st.process(comps, on_result)
+            if adaptive is not None:
+                st.apply_refit()
+    comps = []
+    st.disp.run_until(float("inf"), st.exec_fn, comps)
+    st.process(comps)
+    makespan_s = max(st.last_done_s, 0.0)
+    return finish_fleet(st, total, rejected, makespan_s)
 
 
 # ---------------------------------------------------------------- 1x1 anchor check
@@ -627,7 +805,9 @@ def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_se
 
 def check_pair_anchor(requests=4000, load=96.0):
     """Re-prove the 1×1 differential on every run: the fleet path on the
-    pair topology must reproduce the pair mirror float-for-float."""
+    pair topology must reproduce the pair mirror float-for-float — now
+    including the per-device refit banks, the waste-budget hedge
+    controller and the closed-loop client loop."""
     pool = synth_workload(0xF1EE7 + int(load), requests, load)
     topo = topo_pair()
     fields = [
@@ -661,6 +841,9 @@ def check_pair_anchor(requests=4000, load=96.0):
             pair_r["edge_peak_depth"],
             pair_r["cloud_peak_depth"],
         ], f"1x1 anchor diverged [{tag}] peak depths"
+        fm = fleet_r.get("hedge_final_margin_s")
+        pm = pair_r.get("hedge_final_margin_s")
+        assert fm == pm, f"1x1 anchor diverged [{tag}] final margin: {fm} vs {pm}"
 
     compare("static≡cnmt", run_fleet(pool, topo, "static"), run_contended(pool, "cnmt", False))
     compare(
@@ -679,18 +862,74 @@ def check_pair_anchor(requests=4000, load=96.0):
         "rls_prior_var": 1.0,
         "refit_min_obs": float("inf"),  # the refit planes never install
         "refit_ttx": False,
+        "waste_budget": 0.0,  # fixed margin, like the adaptive-less fleet side
     }
     compare(
         "hedge≡cnmt+adaptive[no-refit]",
         run_fleet(pool, topo, "hedge"),
         run_contended(pool, "cnmt", True, no_refit),
     )
-    print(f"1x1 anchor OK: fleet path ≡ pair path over {requests} requests @ {load:g} r/s")
+    # Per-device refit enabled on both sides (hedging off): the
+    # PlaneBank/LineBank arithmetic must match the pair's two planes +
+    # one line exactly.
+    refit_only = dict(ADAPTIVE_DEFAULTS, hedge_margin_s=0.0)
+    compare(
+        "select+refit≡cnmt+adaptive[no-hedge]",
+        run_fleet(pool, topo, "select", adaptive=refit_only),
+        run_contended(pool, "cnmt", True, refit_only),
+    )
+    # Full adaptive stack: refit + budget-controlled hedging, plus a
+    # lane-pinned drift on device 0 ≡ the pair's edge-tier drift.
+    drift_fleet = {"lane": 0, "start_s": 14.0, "ramp_s": 10.0, "factor": 2.5}
+    drift_pair = (0, 14.0, 10.0, 2.5)  # (EDGE, start, ramp, factor)
+    compare(
+        "hedge+refit+budget≡cnmt+adaptive",
+        run_fleet(pool, topo, "hedge", adaptive=ADAPTIVE_DEFAULTS),
+        run_contended(pool, "cnmt", True, ADAPTIVE_DEFAULTS),
+    )
+    compare(
+        "hedge+refit+budget+drift≡cnmt+adaptive+drift",
+        run_fleet(pool, topo, "hedge", adaptive=ADAPTIVE_DEFAULTS, drift=drift_fleet),
+        run_contended(pool, "cnmt", True, ADAPTIVE_DEFAULTS, drift_pair),
+    )
+    # Closed-loop leg: run_fleet_closed ≡ run_closed_loop.
+    closed_pool = pool[: min(len(pool), 2000)]
+    compare(
+        "closed select≡cnmt+queue",
+        run_fleet_closed(closed_pool, topo, "select", 8),
+        run_closed_loop(closed_pool, "cnmt", True, None, 8, 0.0),
+    )
+    compare(
+        "closed hedge+refit+budget≡cnmt+adaptive",
+        run_fleet_closed(closed_pool, topo, "hedge", 8, adaptive=ADAPTIVE_DEFAULTS),
+        run_closed_loop(closed_pool, "cnmt", True, ADAPTIVE_DEFAULTS, 8, 0.0),
+    )
+    print(
+        f"1x1 anchor OK: fleet path ≡ pair path over {requests} requests @ "
+        f"{load:g} r/s (incl. refit, waste budget, drift, closed loop)"
+    )
 
 
 # ---------------------------------------------------------------- sweep + json
 
 STRATEGIES = ["static", "random", "select", "hedge"]
+
+
+def topo_to_json(topo):
+    """Mirror of Topology::to_json."""
+    return {
+        "name": topo["name"],
+        "devices": [
+            {
+                "name": d["name"],
+                "tier": d["tier"],
+                "speed": d["speed"],
+                "workers": float(d["workers"]),
+                "link_scale": d["link_scale"],
+            }
+            for d in topo["devices"]
+        ],
+    }
 
 
 def run_sweep(shape_names, requests_per_point, seed=SEED):
@@ -740,19 +979,7 @@ def sweep_to_json(cells, requests_per_point, seed=SEED):
                 "offered_rps": c["offered_rps"],
                 "edges": float(edges),
                 "clouds": float(clouds),
-                "topology": {
-                    "name": c["topo"]["name"],
-                    "devices": [
-                        {
-                            "name": d["name"],
-                            "tier": d["tier"],
-                            "speed": d["speed"],
-                            "workers": float(d["workers"]),
-                            "link_scale": d["link_scale"],
-                        }
-                        for d in c["topo"]["devices"]
-                    ],
-                },
+                "topology": topo_to_json(c["topo"]),
                 "policies": c["policies"],
                 "p99_ratio_vs_random": vs_random,
                 "p99_ratio_vs_static": vs_static,
@@ -765,6 +992,132 @@ def sweep_to_json(cells, requests_per_point, seed=SEED):
         "shapes": shapes,
         "headline_p99_ratio": headline,
     }
+
+
+# ---------------------------------------------------------------- closed-loop sweep
+
+# (strategy, adaptive) per configuration — mirror of
+# experiments::fleet::closed_configurations.
+CLOSED_CONFIGS = [
+    ("static", None),
+    ("select", None),
+    ("select", ADAPTIVE_DEFAULTS),
+    ("hedge", ADAPTIVE_DEFAULTS),
+]
+
+
+def closed_drift_spec(topo, requests_per_point):
+    """Mirror of experiments::fleet::closed_drift_spec: pin the lead
+    edge gateway, start at a quarter of the nominal run."""
+    lane = next(i for i, d in enumerate(topo["devices"]) if d["tier"] == EDGE)
+    offered = OFFERED_RPS.get(topo["name"])
+    if offered is None:
+        edges = sum(1 for d in topo["devices"] if d["tier"] == EDGE)
+        clouds = len(topo["devices"]) - edges
+        offered = edges * 16.0 + clouds * 112.0
+    return {
+        "device": "edge",
+        "lane": lane,
+        "start_s": (requests_per_point / offered) * FLEET_CLOSED_DRIFT_START_FRAC,
+        "ramp_s": FLEET_CLOSED_DRIFT_RAMP_S,
+        "factor": FLEET_CLOSED_DRIFT_FACTOR,
+    }
+
+
+def run_closed_sweep(clients_list, requests_per_point, think_s=0.0, seed=SEED):
+    topo = topo_hetero()
+    drift = closed_drift_spec(topo, requests_per_point)
+    pool = synth_workload(seed ^ FLEET_CLOSED_SEED_TAG, requests_per_point, 1.0)
+    cells = []
+    for clients in clients_list:
+        policies = {}
+        for strategy, adaptive in CLOSED_CONFIGS:
+            r = run_fleet_closed(
+                pool,
+                topo,
+                strategy,
+                clients,
+                think_s,
+                FLEET_HEDGE_MARGIN_S,
+                0,
+                adaptive,
+                drift,
+            )
+            policies[r["policy"]] = r
+        cells.append({"clients": clients, "policies": policies})
+    return topo, drift, cells
+
+
+def closed_sweep_to_json(topo, drift, cells, requests_per_point, think_s, seed=SEED):
+    points = []
+    for c in cells:
+        ratio = (
+            c["policies"]["fleet+select"]["p99_s"]
+            / c["policies"]["fleet+select+refit"]["p99_s"]
+        )
+        points.append(
+            {
+                "clients": float(c["clients"]),
+                "policies": c["policies"],
+                "p99_ratio_vs_baseline": ratio,
+            }
+        )
+    headline = points[-1]["p99_ratio_vs_baseline"] if points else float("nan")
+    max_waste = 0.0
+    for c in cells:
+        max_waste = max(max_waste, c["policies"]["fleet+hedge+refit"]["wasted_frac"])
+    return {
+        "seed": float(seed),
+        "requests_per_point": float(requests_per_point),
+        "think_s": think_s,
+        "topology": topo_to_json(topo),
+        "drift": {
+            "device": drift["device"],
+            "factor": drift["factor"],
+            "lane": float(drift["lane"]),
+            "ramp_s": drift["ramp_s"],
+            "start_s": drift["start_s"],
+        },
+        "hedge_margin_s": FLEET_HEDGE_MARGIN_S,
+        "waste_budget": ADAPTIVE_DEFAULTS["waste_budget"],
+        "points": points,
+        "headline_p99_ratio": headline,
+        "max_hedge_wasted_frac": max_waste,
+    }
+
+
+def summarize_closed(topo, drift, cells):
+    hdr = (
+        f"{'K':>4} {'policy':<19} {'goodput':>8} {'mean ms':>8} {'p50ms':>8} "
+        f"{'p95ms':>8} {'p99ms':>9} {'batch':>6} {'hedge%':>7} {'waste%':>7} "
+        f"{'edge/cloud':>12}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for c in cells:
+        for strategy, adaptive in CLOSED_CONFIGS:
+            label = fleet_label(strategy, adaptive)
+            r = c["policies"][label]
+            print(
+                f"{c['clients']:>4} {label:<19} {r['throughput_rps']:>8.1f} "
+                f"{r['mean_latency_s'] * 1e3:>8.1f} {r['p50_s'] * 1e3:>8.1f} "
+                f"{r['p95_s'] * 1e3:>8.1f} {r['p99_s'] * 1e3:>9.1f} "
+                f"{r['mean_batch']:>6.2f} {r['hedge_rate'] * 100:>7.1f} "
+                f"{r['wasted_frac'] * 100:>7.1f} "
+                f"{int(r['edge_count'])}/{int(r['cloud_count']):>5}"
+            )
+    name = topo["devices"][drift["lane"]]["name"]
+    print(
+        f"\ndrift: {name} (device {drift['lane']}) slows {drift['factor']:.1f}x "
+        f"from t={drift['start_s']:.0f}s (ramp {drift['ramp_s']:.0f}s)"
+    )
+    for c in cells:
+        sel = c["policies"]["fleet+select"]["p99_s"]
+        refit = c["policies"]["fleet+select+refit"]["p99_s"]
+        print(
+            f"K={c['clients']}: per-device refit p99 {sel / refit:.1f}x shorter "
+            f"than the tier-baseline selector"
+        )
 
 
 def summarize(cells):
@@ -810,6 +1163,24 @@ def main():
         help="requests per (shape x strategy) cell (mirrors cnmt --fleet-requests)",
     )
     ap.add_argument(
+        "--closed-loop",
+        action="store_true",
+        help="the closed-loop drift sweep on the hetero topology "
+        "(mirrors cnmt experiment fleet --closed-loop; writes "
+        "fleet_closed_loop.json)",
+    )
+    ap.add_argument(
+        "--clients",
+        default=None,
+        help="closed loop: comma-separated client counts (default 8,16,32,64)",
+    )
+    ap.add_argument(
+        "--think-ms",
+        type=float,
+        default=0.0,
+        help="closed loop: per-client think time in ms (mirrors cnmt --think-ms)",
+    )
+    ap.add_argument(
         "--anchor-requests",
         type=int,
         default=4000,
@@ -819,6 +1190,25 @@ def main():
 
     if args.anchor_requests > 0:
         check_pair_anchor(args.anchor_requests)
+
+    if args.closed_loop:
+        clients = (
+            [int(s) for s in args.clients.split(",")]
+            if args.clients
+            else FLEET_CLOSED_CLIENTS
+        )
+        think_s = args.think_ms / 1e3
+        topo, drift, cells = run_closed_sweep(clients, args.requests, think_s)
+        root = closed_sweep_to_json(topo, drift, cells, args.requests, think_s)
+        write_json(args.out or "reports/fleet_closed_loop.json", root)
+        summarize_closed(topo, drift, cells)
+        print(
+            "\nheadline: per-device refit vs tier-baseline p99 at max K = "
+            f"{root['headline_p99_ratio']:.1f}x; hedge waste peaks at "
+            f"{root['max_hedge_wasted_frac'] * 100:.1f}% against a "
+            f"{root['waste_budget'] * 100:.0f}% budget"
+        )
+        return
 
     shape_names = args.shapes.split(",") if args.shapes else DEFAULT_SHAPES
     cells = run_sweep([s.strip() for s in shape_names], args.requests)

@@ -309,7 +309,42 @@ ADAPTIVE_DEFAULTS = {
     "rls_prior_var": 1.0,
     "refit_min_obs": 64,
     "refit_ttx": True,
+    "waste_budget": 0.10,
 }
+
+# scheduler::hedge constants (the waste-budget margin controller).
+HEDGE_GAIN = 0.05
+HEDGE_WINDOW_DECAY = 0.998
+HEDGE_MIN_MARGIN_S = 1e-4
+HEDGE_MAX_MARGIN_S = 0.050
+
+
+class HedgeBudget:
+    """Mirror of scheduler::hedge::HedgeBudget (same op order — exact
+    floats): adapts the hedge margin online to cap the wasted-work
+    fraction at the configured budget."""
+
+    def __init__(self, budget_frac, init_margin_s):
+        self.budget = budget_frac
+        self.margin_s = min(max(init_margin_s, HEDGE_MIN_MARGIN_S), HEDGE_MAX_MARGIN_S)
+        self.useful_s = 0.0
+        self.wasted_s = 0.0
+
+    def observe(self, t_s, wasted):
+        if not (math.isfinite(t_s) and t_s >= 0.0):
+            return
+        self.useful_s *= HEDGE_WINDOW_DECAY
+        self.wasted_s *= HEDGE_WINDOW_DECAY
+        if wasted:
+            self.wasted_s += t_s
+        else:
+            self.useful_s += t_s
+        total = self.useful_s + self.wasted_s
+        if total > 0.0:
+            frac = self.wasted_s / total
+            err = (self.budget - frac) / self.budget
+            m = self.margin_s * (1.0 + HEDGE_GAIN * err)
+            self.margin_s = min(max(m, HEDGE_MIN_MARGIN_S), HEDGE_MAX_MARGIN_S)
 
 
 def _round_half_away(x):
@@ -675,12 +710,16 @@ class Acct:
         self.useful_work_s = 0.0
         self.wasted_work_s = 0.0
 
-    def on_completion(self, comp, t_true_s, tx_s):
+    def on_completion(self, comp, t_true_s, tx_s, ctl):
         rq, device, _start_s, done_s, _bsize, kind = comp
         if kind == LOSS:
             self.wasted_work_s += t_true_s
+            if ctl is not None:
+                ctl.observe(t_true_s, True)
             return False
         self.useful_work_s += t_true_s
+        if ctl is not None:
+            ctl.observe(t_true_s, False)
         latency = (done_s - rq[5]) + tx_s
         self.hist.record(latency)
         self.stats_count += 1
@@ -700,7 +739,7 @@ class Acct:
             truth = pool[rq[1]]
             t_true = true_service_s(truth, device, start_s, drift)
             tx_s = truth.t_tx if device == CLOUD else 0.0
-            is_result = self.on_completion(comp, t_true, tx_s)
+            is_result = self.on_completion(comp, t_true, tx_s, st.ctl)
             if st.rls is not None:
                 st.rls[device].observe(float(truth.n), float(truth.m_real), t_true)
                 if device == CLOUD and st.adaptive["refit_ttx"]:
@@ -736,9 +775,16 @@ class RunState:
             self.rls_ttx = Rls2(
                 0.0, 0.0, adaptive["rls_lambda"], adaptive["rls_prior_var"]
             )
+            # Waste-budget margin controller (AdaptiveOpts::budget_ctl):
+            # active when hedging is enabled and a budget is configured.
+            if adaptive["hedge_margin_s"] > 0.0 and adaptive.get("waste_budget", 0.0) > 0.0:
+                self.ctl = HedgeBudget(adaptive["waste_budget"], adaptive["hedge_margin_s"])
+            else:
+                self.ctl = None
         else:
             self.rls = None
             self.rls_ttx = None
+            self.ctl = None
 
     def exec_fn(self, device, batch, start_s):
         mx = 0.0
@@ -793,12 +839,9 @@ def route_and_submit(st, rq_id, truth, now):
         device = EDGE if t_e + edge_wait <= ttx_est + t_c + cloud_wait else CLOUD
     hedge = False
     if st.adaptive is not None:
+        bar = st.ctl.margin_s if st.ctl is not None else st.adaptive["hedge_margin_s"]
         margin = (t_e + edge_wait) - (ttx_est + t_c + cloud_wait)
-        hedge = (
-            st.adaptive["hedge_margin_s"] > 0.0
-            and math.isfinite(margin)
-            and abs(margin) <= st.adaptive["hedge_margin_s"]
-        )
+        hedge = bar > 0.0 and math.isfinite(margin) and abs(margin) <= bar
     bucket = int(max(m_est, 0.0) / BUCKET_WIDTH)
     if hedge:
         # The trace already evaluated both planes at (n, M̂): the rust
@@ -839,7 +882,7 @@ def finish_contended(st, offered, rejected, makespan_s):
     mean_batch = (
         disp.batch_requests / disp.batches if disp.batches else float("nan")
     )
-    return {
+    out = {
         "policy": policy_label(st.policy, st.queue_aware, st.adaptive),
         "queue_aware": st.queue_aware,
         "adaptive": st.adaptive is not None,
@@ -868,6 +911,11 @@ def finish_contended(st, offered, rejected, makespan_s):
         "wasted_work_s": wasted,
         "wasted_frac": wasted / total_work if total_work > 0.0 else 0.0,
     }
+    # Only budget-controlled runs carry the key (legacy rows keep their
+    # schema byte-for-byte) — mirror of ContendedResult::to_json.
+    if st.ctl is not None:
+        out["hedge_final_margin_s"] = st.ctl.margin_s
+    return out
 
 
 def run_contended(pool, policy, queue_aware, adaptive=None, drift=None):

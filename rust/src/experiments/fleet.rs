@@ -21,17 +21,29 @@
 //! link qualities. Offered load scales with each shape's capacity so
 //! every point sits in the contended regime where placement matters.
 //!
-//! Cells (shape × strategy) are sharded across threads by
-//! [`super::runner::run_cells`]; every cell reseeds from the pure split
-//! [`cell_seed`], so `reports/fleet_sweep.json` is **byte-identical at
-//! any thread count**. The standalone mirror
+//! Alongside the open-loop shape sweep, a **closed-loop drift sweep**
+//! ([`run_closed`], `--closed-loop`) drives the `hetero` topology with
+//! K bounded-outstanding clients while its lead edge gateway throttles
+//! 2.5× mid-run (the classic thermal-throttling story, pinned to a
+//! single device), comparing blind assignment, the tier-baseline
+//! selector, per-device RLS refit ([`crate::predictor::PlaneBank`])
+//! and budget-controlled hedging — `reports/fleet_closed_loop.json`.
+//!
+//! Cells (shape × strategy, or client count × configuration) are
+//! sharded across threads by [`super::runner::run_cells`]; every cell
+//! reseeds from the pure split [`cell_seed`], so both reports are
+//! **byte-identical at any thread count**. The standalone mirror
 //! `python/tools/fleet_sweep_mirror.py` regenerates the same bytes with
 //! no rust toolchain — keep the two in lockstep when editing any
 //! constant here.
 
+use crate::devices::DeviceKind;
 use crate::fleet::{FleetStrategy, Topology};
 use crate::sim::harness::RequestTruth;
-use crate::sim::{run_fleet, Characterization, FleetOpts, FleetResult};
+use crate::sim::{
+    run_fleet, run_fleet_closed, AdaptiveOpts, Characterization, DriftSpec, FleetOpts,
+    FleetResult,
+};
 use crate::util::rng::cell_seed;
 use crate::util::Json;
 use crate::{Error, Result};
@@ -46,6 +58,15 @@ pub const FLEET_HEDGE_MARGIN_S: f64 = 0.010;
 /// Seed tag mixed into a shape's workload seed to derive the
 /// `fleet+random` replica-pick stream.
 const RANDOM_PICK_TAG: u64 = 0xF1E37;
+/// Seed tag of the closed-loop fleet request pool.
+const FLEET_CLOSED_SEED_TAG: u64 = 0xFC105ED;
+/// Slowdown of the drifted replica in the closed-loop scenario.
+pub const FLEET_CLOSED_DRIFT_FACTOR: f64 = 2.5;
+/// Fraction of the nominal run duration (requests ÷ the shape's tuned
+/// offered load) at which the drift starts.
+pub const FLEET_CLOSED_DRIFT_START_FRAC: f64 = 0.25;
+/// Seconds over which the drift ramps in.
+pub const FLEET_CLOSED_DRIFT_RAMP_S: f64 = 10.0;
 
 /// One swept fleet shape: a topology plus the offered load it is
 /// stressed at.
@@ -201,7 +222,7 @@ pub fn run(cfg: &FleetConfig) -> Result<FleetSweep> {
     if cfg.shapes.is_empty() {
         return Err(Error::Config("fleet sweep needs at least one shape".into()));
     }
-    if !(cfg.hedge_margin_s >= 0.0) || !cfg.hedge_margin_s.is_finite() {
+    if !(cfg.hedge_margin_s.is_finite() && cfg.hedge_margin_s >= 0.0) {
         return Err(Error::Config(format!(
             "fleet hedge margin {} must be finite and >= 0",
             cfg.hedge_margin_s
@@ -342,6 +363,318 @@ pub fn to_json(s: &FleetSweep) -> Json {
     root
 }
 
+// ------------------------------------------------------------ closed loop
+
+/// Closed-loop fleet sweep configuration
+/// (`cnmt experiment fleet --closed-loop`): K bounded-outstanding
+/// clients drive one topology while one device — its lead edge
+/// gateway — drifts slower mid-run: the adaptation story at fleet
+/// scope. Four configurations replay the identical pool per client
+/// count:
+///
+/// * `fleet+static` — blind round-robin replica assignment;
+/// * `fleet+select` — queue-aware arg-min on the **tier-baseline**
+///   planes (adaptation off: the drifted replica keeps its stale
+///   estimate);
+/// * `fleet+select+refit` — per-device RLS refit
+///   ([`crate::predictor::PlaneBank`]): only the throttled replica's
+///   plane is re-learned, its siblings stay warm;
+/// * `fleet+hedge+refit` — plus best-edge vs best-cloud hedging under
+///   the waste-budget margin controller
+///   ([`crate::scheduler::HedgeBudget`]).
+#[derive(Debug, Clone)]
+pub struct FleetClosedConfig {
+    /// Master seed of the sweep.
+    pub seed: u64,
+    /// Request bodies submitted per (client count × configuration) cell.
+    pub requests_per_point: usize,
+    /// Client counts to sweep (each = max outstanding requests).
+    pub clients: Vec<usize>,
+    /// Per-client think time between result and next submission (s).
+    pub think_s: f64,
+    /// The fleet under test (drift pins its first edge gateway).
+    pub topo: Topology,
+    /// Scheduler sizing shared by every cell (`strategy`, `adaptive`
+    /// and `drift` are overridden per cell).
+    pub opts: FleetOpts,
+    /// Hedge error bar (initial margin of the budget controller) for
+    /// the hedged configuration (seconds).
+    pub hedge_margin_s: f64,
+    /// Adaptive knobs of the refit configurations (budget included).
+    pub adaptive: AdaptiveOpts,
+    /// OS threads to shard cells across; results are bit-identical at
+    /// any value. 1 = serial (the mirror's mode).
+    pub threads: usize,
+}
+
+impl Default for FleetClosedConfig {
+    fn default() -> Self {
+        FleetClosedConfig {
+            seed: 20220315,
+            requests_per_point: 20_000,
+            clients: vec![8, 16, 32, 64],
+            think_s: 0.0,
+            topo: Topology::hetero(),
+            opts: FleetOpts::default(),
+            hedge_margin_s: FLEET_HEDGE_MARGIN_S,
+            adaptive: AdaptiveOpts::default(),
+            threads: 1,
+        }
+    }
+}
+
+/// The drift injected into every closed-loop cell: the topology's lead
+/// edge gateway (`hetero`'s fast desktop-class edge0 — the thermal-
+/// throttling scenario of the pair drift study, now pinned to a single
+/// device) slows by [`FLEET_CLOSED_DRIFT_FACTOR`] a quarter of the way
+/// into the nominal run, ramping over [`FLEET_CLOSED_DRIFT_RAMP_S`]
+/// seconds. The tier-baseline selector keeps believing it is the
+/// fastest edge (and keeps under-pricing its backlog); per-device refit
+/// re-learns exactly that one plane.
+pub fn closed_drift_spec(topo: &Topology, requests_per_point: usize) -> DriftSpec {
+    let lane = topo.edge_ids()[0];
+    let nominal_rps = default_offered_rps(topo);
+    DriftSpec {
+        device: DeviceKind::Edge,
+        lane: Some(lane),
+        start_s: (requests_per_point as f64 / nominal_rps) * FLEET_CLOSED_DRIFT_START_FRAC,
+        ramp_s: FLEET_CLOSED_DRIFT_RAMP_S,
+        factor: FLEET_CLOSED_DRIFT_FACTOR,
+    }
+}
+
+/// The four configurations evaluated at each client count.
+fn closed_configurations(cfg: &FleetClosedConfig) -> [(FleetStrategy, Option<AdaptiveOpts>); 4] {
+    [
+        (FleetStrategy::Static, None),
+        (FleetStrategy::Select, None),
+        (FleetStrategy::Select, Some(cfg.adaptive)),
+        (
+            FleetStrategy::Hedged { margin_s: cfg.hedge_margin_s },
+            Some(cfg.adaptive),
+        ),
+    ]
+}
+
+/// All configurations evaluated at one client count.
+#[derive(Debug, Clone)]
+pub struct FleetClosedCell {
+    /// Concurrent clients at this point.
+    pub clients: usize,
+    /// One result per configuration.
+    pub results: Vec<FleetResult>,
+}
+
+impl FleetClosedCell {
+    /// Result for a policy label (panics when absent — report bug).
+    pub fn get(&self, policy: &str) -> &FleetResult {
+        self.results
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing fleet policy {policy}"))
+    }
+
+    /// p99 ratio (tier-baseline select / per-device refit select) — the
+    /// cell's headline: what re-learning the one throttled replica buys.
+    pub fn p99_vs_baseline(&self) -> f64 {
+        self.get("fleet+select").p99_s / self.get("fleet+select+refit").p99_s
+    }
+}
+
+/// Full closed-loop fleet sweep.
+#[derive(Debug, Clone)]
+pub struct FleetClosedSweep {
+    /// One cell per client count.
+    pub cells: Vec<FleetClosedCell>,
+    /// The swept topology.
+    pub topo: Topology,
+    /// The drift every cell replayed under.
+    pub drift: DriftSpec,
+    /// Request bodies per cell.
+    pub requests_per_point: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Per-client think time (s).
+    pub think_s: f64,
+    /// Hedge error bar (initial controller margin, seconds).
+    pub hedge_margin_s: f64,
+    /// Configured hedge waste budget (fraction of executed work).
+    pub waste_budget: f64,
+}
+
+impl FleetClosedSweep {
+    /// Headline: baseline-select / refit-select p99 ratio at the
+    /// largest client count (the saturated end of the curve).
+    pub fn headline_p99_ratio(&self) -> f64 {
+        self.cells.last().map_or(f64::NAN, |c| c.p99_vs_baseline())
+    }
+
+    /// Worst wasted-work fraction any hedged cell reported — the number
+    /// the budget acceptance criterion gates (≤ budget + 2 pts).
+    pub fn max_hedge_wasted_frac(&self) -> f64 {
+        self.cells
+            .iter()
+            .map(|c| c.get("fleet+hedge+refit").wasted_frac())
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Run the closed-loop fleet sweep: every (client count ×
+/// configuration) cell on the deterministic parallel runner, all cells
+/// replaying one shared drift scenario over one shared pool.
+pub fn run_closed(cfg: &FleetClosedConfig) -> Result<FleetClosedSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("fleet closed loop needs requests_per_point > 0".into()));
+    }
+    if cfg.clients.is_empty() {
+        return Err(Error::Config("fleet closed loop needs at least one client count".into()));
+    }
+    if cfg.clients.iter().any(|&k| k == 0) {
+        return Err(Error::Config("client counts must be > 0".into()));
+    }
+    if !(cfg.hedge_margin_s.is_finite() && cfg.hedge_margin_s >= 0.0) {
+        return Err(Error::Config(format!(
+            "fleet hedge margin {} must be finite and >= 0",
+            cfg.hedge_margin_s
+        )));
+    }
+    cfg.topo.validate()?;
+    let drift = closed_drift_spec(&cfg.topo, cfg.requests_per_point);
+    // Arrival times in the pool are ignored (completions drive
+    // arrivals); one pool shared read-only by every cell.
+    let (pool, ch) = synth_workload(
+        cfg.seed ^ FLEET_CLOSED_SEED_TAG,
+        cfg.requests_per_point,
+        1.0,
+    );
+    let n_cfg = closed_configurations(cfg).len();
+    let outcomes = runner::run_cells(cfg.threads, cfg.clients.len() * n_cfg, |cell| {
+        let clients = cfg.clients[cell / n_cfg];
+        let (strategy, adaptive) = closed_configurations(cfg)[cell % n_cfg];
+        let opts = FleetOpts {
+            strategy,
+            adaptive,
+            drift: Some(drift),
+            ..cfg.opts
+        };
+        run_fleet_closed(&pool, &ch, &cfg.topo, &opts, clients, cfg.think_s)
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(cfg.clients.len());
+    for &clients in &cfg.clients {
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per fleet closed cell")?);
+        }
+        cells.push(FleetClosedCell { clients, results });
+    }
+    Ok(FleetClosedSweep {
+        cells,
+        topo: cfg.topo.clone(),
+        drift,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        think_s: cfg.think_s,
+        hedge_margin_s: cfg.hedge_margin_s,
+        waste_budget: cfg.adaptive.waste_budget,
+    })
+}
+
+/// Render the closed-loop fleet sweep as an aligned text table plus the
+/// drift/budget headlines.
+pub fn render_closed_text(s: &FleetClosedSweep) -> String {
+    let mut rows = vec![[
+        "clients",
+        "policy",
+        "goodput r/s",
+        "mean ms",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "batch",
+        "hedge %",
+        "waste %",
+        "edge/cloud",
+    ]
+    .iter()
+    .map(|c| c.to_string())
+    .collect::<Vec<String>>()];
+    for c in &s.cells {
+        for r in &c.results {
+            rows.push(vec![
+                format!("{}", c.clients),
+                r.policy.clone(),
+                format!("{:.1}", r.throughput_rps),
+                format!("{:.1}", r.mean_latency_s * 1e3),
+                format!("{:.1}", r.p50_s * 1e3),
+                format!("{:.1}", r.p95_s * 1e3),
+                format!("{:.1}", r.p99_s * 1e3),
+                format!("{:.2}", r.mean_batch),
+                format!("{:.1}", r.hedge_rate() * 100.0),
+                format!("{:.1}", r.wasted_frac() * 100.0),
+                format!("{}/{}", r.edge_count, r.cloud_count),
+            ]);
+        }
+    }
+    let mut out = text_table(&rows);
+    out.push_str(&format!(
+        "\ndrift: {} (device {}) slows {:.1}x from t={:.0}s (ramp {:.0}s)\n",
+        s.topo.devices[s.drift.lane.unwrap_or(0)].name,
+        s.drift.lane.unwrap_or(0),
+        s.drift.factor,
+        s.drift.start_s,
+        s.drift.ramp_s
+    ));
+    for c in &s.cells {
+        out.push_str(&format!(
+            "K={}: per-device refit p99 is {:.1}x shorter than the tier-baseline \
+             selector\n",
+            c.clients,
+            c.p99_vs_baseline()
+        ));
+    }
+    out.push_str(&format!(
+        "\nheadline: with one replica drifted {:.1}x slower, per-device refit \
+         cuts fleet+select p99 {:.1}x at K={}; hedge waste peaks at {:.1}% \
+         against a {:.0}% budget\n",
+        s.drift.factor,
+        s.headline_p99_ratio(),
+        s.cells.last().map_or(0, |c| c.clients),
+        s.max_hedge_wasted_frac() * 100.0,
+        s.waste_budget * 100.0
+    ));
+    out
+}
+
+/// JSON report (`fleet_closed_loop.json`, written through
+/// [`super::report::write_report`]).
+pub fn closed_to_json(s: &FleetClosedSweep) -> Json {
+    let mut points = Vec::new();
+    for c in &s.cells {
+        let mut policies = Json::object();
+        for r in &c.results {
+            policies.set(&r.policy, r.to_json());
+        }
+        let mut o = Json::object();
+        o.set("clients", Json::Num(c.clients as f64))
+            .set("policies", policies)
+            .set("p99_ratio_vs_baseline", Json::Num(c.p99_vs_baseline()));
+        points.push(o);
+    }
+    let mut root = Json::object();
+    root.set("seed", Json::Num(s.seed as f64))
+        .set("requests_per_point", Json::Num(s.requests_per_point as f64))
+        .set("think_s", Json::Num(s.think_s))
+        .set("topology", s.topo.to_json())
+        .set("drift", s.drift.to_json())
+        .set("hedge_margin_s", Json::Num(s.hedge_margin_s))
+        .set("waste_budget", Json::Num(s.waste_budget))
+        .set("points", Json::Array(points))
+        .set("headline_p99_ratio", Json::Num(s.headline_p99_ratio()))
+        .set("max_hedge_wasted_frac", Json::Num(s.max_hedge_wasted_frac()));
+    root
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -464,5 +797,87 @@ mod tests {
         let mut cfg = smoke_cfg();
         cfg.hedge_margin_s = f64::NAN;
         assert!(run(&cfg).is_err());
+    }
+
+    fn closed_smoke_cfg() -> FleetClosedConfig {
+        FleetClosedConfig {
+            requests_per_point: 1_200,
+            clients: vec![4, 16],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn closed_structure_labels_and_conservation() {
+        let sweep = run_closed(&closed_smoke_cfg()).unwrap();
+        assert_eq!(sweep.cells.len(), 2);
+        assert_eq!(sweep.topo.name, "hetero");
+        // The drift pins the topology's lead edge gateway.
+        assert_eq!(sweep.drift.lane, Some(0));
+        assert_eq!(sweep.drift.factor, FLEET_CLOSED_DRIFT_FACTOR);
+        for cell in &sweep.cells {
+            assert_eq!(cell.results.len(), 4);
+            for label in [
+                "fleet+static",
+                "fleet+select",
+                "fleet+select+refit",
+                "fleet+hedge+refit",
+            ] {
+                let r = cell.get(label);
+                assert_eq!(r.completed + r.rejected, r.offered, "{label}");
+                assert_eq!(r.offered, 1_200, "{label}");
+                assert_eq!(r.rejected, 0, "{label}: closed loop should not shed");
+                assert_eq!(
+                    r.device_results.iter().sum::<usize>(),
+                    r.completed,
+                    "{label}"
+                );
+            }
+            // Only the hedged configuration hedges, and its controller
+            // reports a final margin.
+            assert_eq!(cell.get("fleet+select+refit").hedged, 0);
+            assert!(cell.get("fleet+hedge+refit").hedge_final_margin_s.is_finite());
+            assert!(cell.get("fleet+select").hedge_final_margin_s.is_nan());
+        }
+        let j = closed_to_json(&sweep);
+        assert_eq!(j.get("points").unwrap().as_array().unwrap().len(), 2);
+        assert!(j.get("drift").unwrap().get("lane").is_ok());
+        assert!(j.get("waste_budget").is_ok());
+        assert!(j.get("max_hedge_wasted_frac").is_ok());
+        let p0 = &j.get("points").unwrap().as_array().unwrap()[0];
+        assert!(p0.get("policies").unwrap().get("fleet+select+refit").is_ok());
+        let hedge = p0.get("policies").unwrap().get("fleet+hedge+refit").unwrap();
+        assert!(hedge.get("hedge_final_margin_s").is_ok());
+        let txt = render_closed_text(&sweep);
+        assert!(txt.contains("fleet+select+refit"));
+        assert!(txt.contains("headline"));
+    }
+
+    #[test]
+    fn closed_sweep_is_bit_identical_across_thread_counts() {
+        let mut cfg = closed_smoke_cfg();
+        cfg.requests_per_point = 600;
+        let serial = closed_to_json(&run_closed(&cfg).unwrap()).to_string_pretty();
+        for threads in [2, 4, 7] {
+            cfg.threads = threads;
+            let parallel = closed_to_json(&run_closed(&cfg).unwrap()).to_string_pretty();
+            assert_eq!(parallel, serial, "{threads}-thread fleet closed sweep diverged");
+        }
+    }
+
+    #[test]
+    fn closed_rejects_degenerate_configs() {
+        let mut cfg = closed_smoke_cfg();
+        cfg.requests_per_point = 0;
+        assert!(run_closed(&cfg).is_err());
+        let mut cfg = closed_smoke_cfg();
+        cfg.clients.clear();
+        assert!(run_closed(&cfg).is_err());
+        let mut cfg = closed_smoke_cfg();
+        cfg.clients = vec![0];
+        assert!(run_closed(&cfg).is_err());
+        let mut cfg = closed_smoke_cfg();
+        cfg.hedge_margin_s = f64::NAN;
+        assert!(run_closed(&cfg).is_err());
     }
 }

@@ -280,6 +280,7 @@ fn drift_configurations() -> [(PolicyKind, bool, bool); 3] {
 fn drift_spec_for(cfg: &LoadConfig) -> DriftSpec {
     DriftSpec {
         device: DeviceKind::Edge,
+        lane: None,
         start_s: (cfg.requests_per_point as f64 / DRIFT_LOAD_RPS) * DRIFT_START_FRAC,
         ramp_s: DRIFT_RAMP_S,
         factor: DRIFT_FACTOR,

@@ -57,7 +57,7 @@ where
     T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let threads = threads.max(1).min(cells.max(1));
+    let threads = threads.clamp(1, cells.max(1));
     if threads <= 1 {
         return (0..cells).map(run).collect();
     }

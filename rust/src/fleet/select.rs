@@ -27,13 +27,21 @@
 //! inside the error bar — the fleet generalisation of the pair's hedged
 //! dispatch.
 //!
+//! The selector is the install point of the **per-device online refit**
+//! ([`crate::predictor::PlaneBank`] / [`crate::predictor::LineBank`]):
+//! [`FleetSelector::set_texe`] replaces one device's plane and
+//! [`FleetSelector::set_ttx_line`] one cloud replica's payload-size →
+//! T̂_tx law, without moving any sibling's score — so one throttling
+//! device can be re-learned in isolation (the isolation test below
+//! asserts bit-identity of every other device's scores).
+//!
 //! [`FleetStrategy`] names the routing policies the fleet sweep
 //! compares: blind replica assignment (static round-robin or uniformly
 //! random within the eq. 1 tier) against fleet-wide queue-aware
 //! selection, with and without hedging.
 
 use crate::devices::DeviceKind;
-use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator};
+use crate::predictor::{N2mRegressor, TexeModel, TtxEstimator, TtxLine};
 use crate::Result;
 
 use super::topology::{DeviceId, Topology};
@@ -133,9 +141,14 @@ impl FleetStrategy {
 pub struct FleetSelector {
     tier: Vec<DeviceKind>,
     /// Per-device plane: the tier's calibrated plane × the device's
-    /// slowdown (1/speed).
+    /// slowdown (1/speed) at construction; replaced per device by the
+    /// online refit once warmed ([`FleetSelector::set_texe`]).
     texe: Vec<TexeModel>,
     link_scale: Vec<f64>,
+    /// Per-device refit T_tx law; while installed, that device's net
+    /// cost is `a·(N + M̂) + b` instead of the link-scaled shared EWMA
+    /// ([`FleetSelector::set_ttx_line`]).
+    ttx_line: Vec<Option<TtxLine>>,
     edge_ids: Vec<DeviceId>,
     cloud_ids: Vec<DeviceId>,
     n2m: N2mRegressor,
@@ -174,10 +187,12 @@ impl FleetSelector {
             ));
             link_scale.push(d.link_scale);
         }
+        let n_dev = topo.len();
         Ok(FleetSelector {
             tier,
             texe,
             link_scale,
+            ttx_line: vec![None; n_dev],
             edge_ids: topo.edge_ids(),
             cloud_ids: topo.cloud_ids(),
             n2m,
@@ -222,6 +237,37 @@ impl FleetSelector {
     /// price a blind replica assignment that overrides the arg-min.
     pub fn est_service_s(&self, d: DeviceId, n: usize, m_est: f64) -> f64 {
         self.texe[d].estimate(n, m_est)
+    }
+
+    /// The per-device T_exe planes currently used for scoring, in
+    /// device-id order (the priors an adaptive harness seeds its
+    /// [`crate::predictor::PlaneBank`] from).
+    pub fn texe_models(&self) -> &[TexeModel] {
+        &self.texe
+    }
+
+    /// Replace device `d`'s T_exe plane — the per-device online-refit
+    /// hook, the fleet analogue of
+    /// [`crate::coordinator::Router::set_texe`]. Only device `d`'s
+    /// scores move; every other device keeps its plane bit-identically
+    /// (the isolation test below asserts it).
+    pub fn set_texe(&mut self, d: DeviceId, model: TexeModel) {
+        self.texe[d] = model;
+    }
+
+    /// Install (or clear) device `d`'s refit payload-size → T_tx law —
+    /// the per-link analogue of
+    /// [`crate::coordinator::Router::set_ttx_line`]. While installed,
+    /// `d`'s network cost is `a·(N + M̂) + b` (the link's own observed
+    /// law, link scale already folded into the observations) instead of
+    /// the link-scaled shared EWMA.
+    pub fn set_ttx_line(&mut self, d: DeviceId, line: Option<TtxLine>) {
+        self.ttx_line[d] = line;
+    }
+
+    /// The refit T_tx law installed on device `d`, if any.
+    pub fn ttx_line(&self, d: DeviceId) -> Option<TtxLine> {
+        self.ttx_line[d]
     }
 
     /// Feed a timestamped network observation (same semantics as
@@ -282,10 +328,19 @@ impl FleetSelector {
             let est = self.texe[d].estimate(n, m_est);
             // Same grouping as the pair router's eq. 1 sides:
             // (T̂_exe + Ŵ) for edges, ((T̂_tx + T̂_exe) + Ŵ) for clouds —
-            // with link_scale 1.0 the product is the identity.
+            // with link_scale 1.0 the product is the identity. A warmed
+            // per-link refit law replaces the link-scaled EWMA with the
+            // size-aware estimate, exactly as the pair router's
+            // `decide_with_m` does when a line is installed.
             let score = match self.tier[d] {
                 DeviceKind::Edge => est + waits[d],
-                DeviceKind::Cloud => ttx_est * self.link_scale[d] + est + waits[d],
+                DeviceKind::Cloud => {
+                    let net = match self.ttx_line[d] {
+                        Some(line) => line.estimate(n as f64 + m_est),
+                        None => ttx_est * self.link_scale[d],
+                    };
+                    net + est + waits[d]
+                }
             };
             if score < best.score_s {
                 best = Placement { device: d, score_s: score, est_service_s: est };
@@ -420,6 +475,105 @@ mod tests {
         // penalty (0.042·2 = 84 ms of queue vs 84 ms of extra link).
         let t = sel.select(n, &[0.0, 0.090, 0.0]);
         assert_eq!(t.device, 2, "loaded near replica should lose to the far one");
+    }
+
+    #[test]
+    fn per_device_refit_moves_only_the_target_device() {
+        // THE isolation property of per-device refit (the reason the
+        // fleet carries a PlaneBank instead of tier-shared planes): after
+        // installing a refit plane and a refit T_tx law on one device,
+        // every other device's score — and any decision that does not
+        // involve the refit device — is bit-identical to before.
+        use crate::predictor::PlaneBank;
+        let topo = Topology::hetero();
+        let mut sel = selector(&topo);
+        sel.observe_ttx(0.0, 0.042);
+        let target = 4usize; // hetero cloud0
+        let others: Vec<usize> = (0..topo.len()).filter(|&d| d != target).collect();
+        // Scores before, per device, over a length sweep (idle waits so
+        // the scores are pure model evaluations).
+        let n_dev = topo.len();
+        let score_of = |sel: &mut FleetSelector, d: usize, n: usize| {
+            // Probe one device by swamping every other with a huge (but
+            // finite — infinities would tie) wait.
+            let mut w = vec![1e12f64; n_dev];
+            w[d] = 0.0;
+            let t = sel.select(n, &w);
+            assert_eq!(t.device, d, "probe did not isolate device {d}");
+            if sel.tier(d) == DeviceKind::Edge {
+                t.best_edge.score_s
+            } else {
+                t.best_cloud.score_s
+            }
+        };
+        let ns = [1usize, 7, 19, 33, 48, 62];
+        let mut before = Vec::new();
+        for &d in &others {
+            for &n in &ns {
+                before.push(score_of(&mut sel, d, n).to_bits());
+            }
+        }
+        // Warm a bank on the target device only (2.5x slower truth) and
+        // install its plane + a refit link law.
+        let mut bank = PlaneBank::new(sel.texe_models(), 0.998, 1.0).unwrap();
+        let truth = TexeModel::from_coeffs(0.55e-3, 1.375e-3, 65.0e-3);
+        for i in 0..400usize {
+            let (n, m) = (1 + i % 40, 1 + (i * 7) % 40);
+            bank.observe(target, n as f64, m as f64, truth.estimate(n, m as f64));
+        }
+        sel.set_texe(target, bank.model(target));
+        sel.set_ttx_line(target, Some(TtxLine { slope: 2e-4, intercept: 0.008 }));
+        // Every other device's scores are bit-identical...
+        let mut after = Vec::new();
+        for &d in &others {
+            for &n in &ns {
+                after.push(score_of(&mut sel, d, n).to_bits());
+            }
+        }
+        assert_eq!(before, after, "refit on device {target} moved another device");
+        // ...while the target's own score genuinely moved.
+        assert_ne!(
+            score_of(&mut sel, target, 33).to_bits(),
+            {
+                let fresh = &mut selector(&topo);
+                fresh.observe_ttx(0.0, 0.042);
+                score_of(fresh, target, 33).to_bits()
+            },
+            "refit never moved the target device"
+        );
+    }
+
+    #[test]
+    fn pair_refit_line_matches_router_ttx_line() {
+        // With the same refit T_tx law installed on the fleet's cloud
+        // device and on the pair router, the 1×1 decision equivalence
+        // must keep holding bit for bit — the line path included.
+        let (e, c, n2m) = planes();
+        let mut sel = selector(&Topology::pair());
+        let mut router = RouterBuilder::new(PolicyKind::Cnmt)
+            .texe(e, c)
+            .n2m(n2m)
+            .build()
+            .unwrap();
+        sel.observe_ttx(0.0, 0.090);
+        router.observe_ttx(0.0, 0.090);
+        let law = TtxLine { slope: 0.2e-3, intercept: 0.008 };
+        sel.set_ttx_line(1, Some(law));
+        router.set_ttx_line(Some(law));
+        for n in [1usize, 3, 10, 17, 30, 45, 62] {
+            let ft = sel.select(n, &[0.0, 0.0]);
+            let rt = router.decide_loaded(n, 0.0, 0.0);
+            assert_eq!(
+                ft.device == 0,
+                rt.device == DeviceKind::Edge,
+                "n={n}: line-path decisions diverged"
+            );
+            assert_eq!(
+                ft.margin_s().to_bits(),
+                rt.loaded_margin_s(0.0, 0.0).to_bits(),
+                "n={n}: line-path margins diverged"
+            );
+        }
     }
 
     #[test]

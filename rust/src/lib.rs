@@ -53,7 +53,10 @@
 //! | deterministic multi-threaded sweep runner (beyond paper) | [`experiments::runner`] |
 //! | N-device fleet topologies + fleet-wide placement (beyond paper) | [`fleet`], [`scheduler::dispatch`] |
 //! | fleet sweep across shapes (beyond paper) | [`experiments::fleet`], [`sim::harness`] |
-//! | multi-tenant fair queueing (beyond paper) | [`scheduler::queue`] |
+//! | per-device refit banks at fleet scope (beyond paper) | [`predictor::bank`], [`fleet::select`] |
+//! | closed-loop fleet drift sweep (beyond paper) | [`experiments::fleet`], [`sim::harness`] |
+//! | self-tuning hedge waste budget (beyond paper) | [`scheduler::hedge`] |
+//! | multi-tenant fair queueing (+ dispatcher front-end) (beyond paper) | [`scheduler::queue`], [`scheduler::dispatch`] |
 
 #![warn(missing_docs)]
 

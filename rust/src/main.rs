@@ -73,8 +73,15 @@ USAGE:
       --loads <a,b,..>      load sweep: offered loads in r/s
       --load-requests <n>   load sweep: requests per point (default 20000)
       --closed-loop         load sweep: closed-loop clients instead of
-                            open-loop Poisson arrivals (writes closed_loop.json)
-      --clients <a,b,..>    closed loop: client counts (default 1,2,4,8,16,32,64)
+                            open-loop Poisson arrivals (writes closed_loop.json);
+                            with `experiment fleet`: the closed-loop drift
+                            sweep — K clients drive the topology while its
+                            lead edge gateway throttles 2.5x mid-run,
+                            comparing tier-baseline vs per-device-refit
+                            selection and budget-controlled hedging
+                            (writes fleet_closed_loop.json)
+      --clients <a,b,..>    closed loop: client counts (default 1,2,4,8,16,32,64;
+                            fleet closed loop: 8,16,32,64)
       --think-ms <f>        closed loop: per-client think time (default 0)
       --threads <n>         load/fleet sweep: shard cells over n OS threads
                             (0 = all cores; reports are bit-identical
@@ -185,7 +192,44 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     } else {
         (None, None)
     };
-    let fleet_cfg = if matches!(which.as_str(), "fleet" | "all") {
+    let fleet_closed = which == "fleet" && args.bool("closed-loop");
+    let fleet_closed_cfg = if fleet_closed {
+        let mut fc = fleet::FleetClosedConfig { seed: cfg.seed, ..Default::default() };
+        fc.threads = runner::resolve_threads(args.usize("threads", 1)?);
+        if args.str_opt("shapes").is_some() {
+            return Err(Error::Config(
+                "--shapes does not apply to the closed-loop fleet sweep (one \
+                 topology per run; use --topology for a custom one)"
+                    .into(),
+            ));
+        }
+        if args.str_opt("offered-rps").is_some() {
+            return Err(Error::Config(
+                "--offered-rps does not apply to the closed-loop fleet sweep \
+                 (arrivals are generated by completions)"
+                    .into(),
+            ));
+        }
+        if let Some(path) = args.str_opt("topology") {
+            fc.topo = cnmt::fleet::Topology::load(&PathBuf::from(path))?;
+        }
+        if let Some(clients) = args.str_opt("clients") {
+            fc.clients = clients
+                .split(',')
+                .map(|s| {
+                    s.trim().parse::<usize>().map_err(|_| {
+                        Error::Config(format!("--clients: `{s}` is not an integer"))
+                    })
+                })
+                .collect::<Result<_>>()?;
+        }
+        fc.think_s = args.f64("think-ms", 0.0)? / 1e3;
+        fc.requests_per_point = args.usize("fleet-requests", fc.requests_per_point)?;
+        Some(fc)
+    } else {
+        None
+    };
+    let fleet_cfg = if matches!(which.as_str(), "fleet" | "all") && !fleet_closed {
         let mut fc = fleet::FleetConfig { seed: cfg.seed, ..Default::default() };
         fc.threads = runner::resolve_threads(args.usize("threads", 1)?);
         if let Some(path) = args.str_opt("topology") {
@@ -313,6 +357,25 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
 
     let run_fleet_exp = |cfg: &Config| -> Result<()> {
+        if let Some(fc) = fleet_closed_cfg.as_ref() {
+            eprintln!(
+                "fleet (closed-loop): {} requests/cell over {} client counts on \
+                 `{}` (seed {})",
+                fc.requests_per_point,
+                fc.clients.len(),
+                fc.topo.name,
+                fc.seed
+            );
+            let s = fleet::run_closed(fc)?;
+            print!("{}", fleet::render_closed_text(&s));
+            let p = report::write_report(
+                &cfg.out_dir,
+                "fleet_closed_loop",
+                &fleet::closed_to_json(&s),
+            )?;
+            eprintln!("wrote {}\n", p.display());
+            return Ok(());
+        }
         let fleet_cfg = fleet_cfg.as_ref().expect("fleet_cfg built for fleet/all");
         eprintln!(
             "fleet: {} requests/cell over {} shapes (seed {})",
@@ -506,6 +569,141 @@ fn bench_event_loop<D: BenchDispatch>(
     (completions + disp.batches(), wall_s)
 }
 
+/// Per-lane ground-truth executor for the fleet event-loop bench
+/// (tier time × the device's slowdown; batch = max + residual·rest).
+/// A deliberate bench-local stand-in, not the harness's
+/// `FleetExecutor`: the bench measures event-loop throughput, so its
+/// cost law only needs to be *plausible*, not in lockstep with the
+/// product/mirror ground truth (no drift, fixed residual).
+struct FleetSynthExec<'a> {
+    truths: &'a [cnmt::sim::harness::RequestTruth],
+    tier: Vec<cnmt::devices::DeviceKind>,
+    slowdown: Vec<f64>,
+    residual: f64,
+}
+
+impl cnmt::scheduler::LaneExecutor for FleetSynthExec<'_> {
+    fn execute_lane(
+        &mut self,
+        lane: usize,
+        _device: cnmt::devices::DeviceKind,
+        batch: &[cnmt::scheduler::QueuedRequest],
+        _start_s: f64,
+    ) -> f64 {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for rq in batch {
+            let truth = &self.truths[rq.payload];
+            let base = match self.tier[lane] {
+                cnmt::devices::DeviceKind::Edge => truth.t_edge,
+                cnmt::devices::DeviceKind::Cloud => truth.t_cloud,
+            };
+            let t = base * self.slowdown[lane];
+            max = max.max(t);
+            sum += t;
+        }
+        max + (sum - max) * self.residual
+    }
+}
+
+/// Drive the fleet path's full per-request cycle (selector arg-min →
+/// submit_lane → N-lane event loop) over a synthetic stream and count
+/// dispatcher events — the same definition [`bench_event_loop`] uses
+/// for the pair path, so the two are directly comparable. Returns
+/// `(events, wall_seconds)`.
+fn bench_fleet_loop(
+    topo: &cnmt::fleet::Topology,
+    requests: usize,
+    offered_rps: f64,
+) -> (u64, f64) {
+    use cnmt::experiments::load::{
+        synth_workload, CLOUD_PLANE, EDGE_PLANE, N2M_DELTA, N2M_GAMMA, RTT_S,
+    };
+    use cnmt::fleet::FleetSelector;
+    use cnmt::predictor::{N2mRegressor, TexeModel};
+    use cnmt::scheduler::{BatchPolicy, Dispatcher, QueuedRequest};
+
+    let (truths, _ch) = synth_workload(0xBE7C5, requests, offered_rps);
+    let mut sel = FleetSelector::new(
+        topo,
+        TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2),
+        TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+        N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA),
+    )
+    .expect("bench fleet selector");
+    sel.observe_ttx(0.0, RTT_S);
+    let n_dev = topo.len();
+    let mut disp = Dispatcher::with_lanes(&topo.lane_specs(512), BatchPolicy::default());
+    let mut exec = FleetSynthExec {
+        truths: &truths,
+        tier: topo.devices.iter().map(|d| d.tier).collect(),
+        slowdown: topo.devices.iter().map(|d| d.slowdown()).collect(),
+        residual: 0.15,
+    };
+    let mut waits = vec![0.0f64; n_dev];
+    let mut completions = 0u64;
+    let t0 = std::time::Instant::now();
+    for (i, truth) in truths.iter().enumerate() {
+        let now = truth.arrival_s;
+        disp.run_until(now, &mut exec, &mut |_c| completions += 1);
+        for (d, w) in waits.iter_mut().enumerate() {
+            *w = disp.expected_wait_lane(d, now);
+        }
+        let trace = sel.select(truth.n, &waits);
+        disp.submit_lane(
+            trace.device,
+            QueuedRequest {
+                id: i as u64,
+                payload: i,
+                n: truth.n,
+                m_est: trace.m_est,
+                est_service_s: trace.est_service_s,
+                arrival_s: now,
+                bucket: 0,
+                hedge: None,
+            },
+        );
+    }
+    disp.run_until(f64::INFINITY, &mut exec, &mut |_c| completions += 1);
+    let wall_s = t0.elapsed().as_secs_f64();
+    (completions + disp.batch_stats().batches, wall_s)
+}
+
+/// Best-of-3 fleet event-loop measurement on one topology.
+fn fleet_loop_json(
+    label: &str,
+    topo: &cnmt::fleet::Topology,
+    requests: usize,
+    offered_rps: f64,
+) -> cnmt::util::Json {
+    use cnmt::util::Json;
+    let mut best: Option<(u64, f64)> = None;
+    for _ in 0..3 {
+        let (events, wall_s) = bench_fleet_loop(topo, requests, offered_rps);
+        best = Some(match best {
+            Some((e, w)) if w <= wall_s => (e, w),
+            _ => (events, wall_s),
+        });
+    }
+    let (events, wall_s) = best.expect("three samples taken");
+    let eps = events as f64 / wall_s;
+    eprintln!(
+        "  {label:<18} {events} events in {wall_s:.3} s  →  {eps:.0} events/s \
+         ({:.0} ns/event)",
+        1e9 / eps
+    );
+    let mut o = Json::object();
+    o.set("topology", Json::Str(topo.name.clone()))
+        .set("lanes", Json::Num(topo.len() as f64))
+        .set("requests", Json::Num(requests as f64))
+        .set("offered_rps", Json::Num(offered_rps))
+        .set("events", Json::Num(events as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("events_per_sec", Json::Num(eps))
+        .set("ns_per_event", Json::Num(1e9 / eps));
+    o
+}
+
 /// Best-of-3 event-loop measurement for one dispatcher implementation.
 fn event_loop_json<D: BenchDispatch>(
     label: &str,
@@ -585,6 +783,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     eprintln!(
         "  speedup vs pre-rewrite baseline: {speedup_solo:.2}x solo, \
          {speedup_hedged:.2}x hedged"
+    );
+
+    // Fleet path: the same per-request cycle through the FleetSelector
+    // + N-lane surface, on the pair shape (lane-generalisation overhead
+    // vs the classic pair path — gated) and a 6-lane scale-up
+    // (informational).
+    eprintln!("bench sched: fleet event loop (selector + N-lane surface)");
+    let topo_pair = cnmt::fleet::Topology::pair();
+    let topo_4x2 = cnmt::fleet::Topology::preset("4x2").expect("built-in preset");
+    let fleet_lane2 = fleet_loop_json("fleet/1x1", &topo_pair, requests, 96.0);
+    let fleet_lane6 = fleet_loop_json("fleet/4x2", &topo_4x2, requests, 288.0);
+    let fleet_ratio = fleet_lane2.get("events_per_sec").unwrap().as_f64().unwrap()
+        / solo.get("events_per_sec").unwrap().as_f64().unwrap();
+    eprintln!(
+        "  fleet 1x1 path runs at {:.2}x the classic pair path's events/sec",
+        fleet_ratio
     );
 
     // Hot-path latency: the full steady-state per-request cycle.
@@ -701,11 +915,17 @@ fn cmd_bench(args: &Args) -> Result<()> {
     speedup
         .set("event_loop_solo", Json::Num(speedup_solo))
         .set("event_loop_hedged", Json::Num(speedup_hedged));
+    let mut fleet_section = Json::object();
+    fleet_section
+        .set("lane2", fleet_lane2)
+        .set("lane6", fleet_lane6)
+        .set("ratio_vs_pair_solo", Json::Num(fleet_ratio));
     let mut root = Json::object();
     root.set("schema", Json::Str("bench_sched/v1".into()))
         .set("producer", Json::Str("cnmt bench sched".into()))
         .set("event_loop_solo", solo)
         .set("event_loop_hedged", hedged)
+        .set("fleet", fleet_section)
         .set("hot_path", hot.to_json())
         .set("sweep", sweep)
         .set("baseline", baseline)

@@ -1,0 +1,216 @@
+//! Per-device banks of online-refit models — the fleet generalisation
+//! of the pair's two [`RlsPlane`]s and single T_tx [`RlsLine`].
+//!
+//! The pair-scope adaptive scheduler (PR 2/3) keeps one refit plane per
+//! *tier*. At fleet scope that sharing is exactly wrong: when one cloud
+//! replica starts throttling, folding its completions into a tier-wide
+//! plane poisons the estimate every healthy sibling is scored with —
+//! the selector then mistrusts the whole tier instead of the one sick
+//! device (the heterogeneity problem CoFormer/Galaxy call out; see
+//! PAPERS.md). A [`PlaneBank`] holds one independently-warmed
+//! [`RlsPlane`] per device, fed by that device's lane completions only,
+//! so a drifting replica is re-learned without moving anyone else's
+//! plane (the isolation test in `fleet::select` asserts other devices'
+//! scores stay bit-identical).
+//!
+//! [`LineBank`] is the network-side twin: one payload-size → T_tx
+//! [`RlsLine`] per *cloud* device, fed by that replica's observed
+//! transfers (which already include its `link_scale` multiple), so a
+//! replica behind a degrading route re-prices itself instead of
+//! inflating the shared EWMA.
+//!
+//! Both banks start from the selector's per-device priors (tier plane ×
+//! the device's slowdown), so on the 1×1 topology the bank's arithmetic
+//! is bit-identical to the pair harness's two planes and one line — the
+//! fleet ≡ pair differential holds with refit enabled on both sides.
+
+use crate::{Error, Result};
+
+use super::rls::{RlsLine, RlsPlane};
+use super::texe::TexeModel;
+use super::ttx::TtxLine;
+
+/// One independently-refit T_exe plane per fleet device.
+#[derive(Debug, Clone)]
+pub struct PlaneBank {
+    planes: Vec<RlsPlane>,
+}
+
+impl PlaneBank {
+    /// One plane per prior, all with the same forgetting factor and
+    /// prior covariance. `priors` are the devices' offline planes (tier
+    /// plane × device slowdown), in device-id order.
+    pub fn new(priors: &[TexeModel], lambda: f64, prior_var: f64) -> Result<PlaneBank> {
+        if priors.is_empty() {
+            return Err(Error::Fit("PlaneBank needs at least one device".into()));
+        }
+        let planes = priors
+            .iter()
+            .map(|&p| RlsPlane::new(p, lambda, prior_var))
+            .collect::<Result<Vec<RlsPlane>>>()?;
+        Ok(PlaneBank { planes })
+    }
+
+    /// Number of devices.
+    pub fn len(&self) -> usize {
+        self.planes.len()
+    }
+
+    /// True when the bank has no devices (rejected at construction).
+    pub fn is_empty(&self) -> bool {
+        self.planes.is_empty()
+    }
+
+    /// Feed one observed completion on device `d`. O(1); only device
+    /// `d`'s plane moves.
+    pub fn observe(&mut self, d: usize, n: f64, m: f64, t_s: f64) {
+        self.planes[d].observe(n, m, t_s);
+    }
+
+    /// Observations absorbed by device `d`'s plane.
+    pub fn count(&self, d: usize) -> u64 {
+        self.planes[d].count()
+    }
+
+    /// Device `d`'s current coefficient estimate.
+    pub fn model(&self, d: usize) -> TexeModel {
+        self.planes[d].model()
+    }
+
+    /// Has device `d`'s plane absorbed at least `min_obs` observations
+    /// (the install threshold, [`crate::sim::AdaptiveOpts::refit_min_obs`])?
+    pub fn warmed(&self, d: usize, min_obs: u64) -> bool {
+        self.planes[d].count() >= min_obs
+    }
+}
+
+/// One payload-size → T_tx refit line per cloud device (`None` for edge
+/// devices — they pay no network cost).
+#[derive(Debug, Clone)]
+pub struct LineBank {
+    lines: Vec<Option<RlsLine>>,
+}
+
+impl LineBank {
+    /// `is_cloud[d]` selects which devices carry a line. Lines start
+    /// diffuse at zero, exactly like the pair harness's T_tx refit line
+    /// — they are only consulted once warmed.
+    pub fn new(is_cloud: &[bool], lambda: f64, prior_var: f64) -> Result<LineBank> {
+        let lines = is_cloud
+            .iter()
+            .map(|&cloud| {
+                if cloud {
+                    RlsLine::new(TtxLine { slope: 0.0, intercept: 0.0 }, lambda, prior_var)
+                        .map(Some)
+                } else {
+                    Ok(None)
+                }
+            })
+            .collect::<Result<Vec<Option<RlsLine>>>>()?;
+        Ok(LineBank { lines })
+    }
+
+    /// Number of devices (cloud and edge alike).
+    pub fn len(&self) -> usize {
+        self.lines.len()
+    }
+
+    /// True when the bank has no devices.
+    pub fn is_empty(&self) -> bool {
+        self.lines.is_empty()
+    }
+
+    /// Feed one observed transfer on device `d`: payload size in tokens
+    /// and measured (link-scaled) transfer seconds. No-op for devices
+    /// without a line.
+    pub fn observe(&mut self, d: usize, size_tokens: f64, t_s: f64) {
+        if let Some(line) = self.lines[d].as_mut() {
+            line.observe(size_tokens, t_s);
+        }
+    }
+
+    /// Transfers absorbed by device `d`'s line (0 for edge devices).
+    pub fn count(&self, d: usize) -> u64 {
+        self.lines[d].as_ref().map_or(0, |l| l.count())
+    }
+
+    /// Device `d`'s current law, if it carries one.
+    pub fn line(&self, d: usize) -> Option<TtxLine> {
+        self.lines[d].as_ref().map(|l| l.line())
+    }
+
+    /// Has device `d`'s line absorbed at least `min_obs` transfers?
+    pub fn warmed(&self, d: usize, min_obs: u64) -> bool {
+        self.lines[d].as_ref().is_some_and(|l| l.count() >= min_obs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn priors() -> Vec<TexeModel> {
+        vec![
+            TexeModel::from_coeffs(1.2e-3, 3.0e-3, 6.0e-3),
+            TexeModel::from_coeffs(0.22e-3, 0.55e-3, 26.0e-3),
+            TexeModel::from_coeffs(0.44e-3, 1.1e-3, 52.0e-3),
+        ]
+    }
+
+    #[test]
+    fn observations_move_only_the_fed_device() {
+        // THE isolation property the fleet refit rests on: feeding one
+        // device leaves every other plane bit-identical to its prior.
+        let ps = priors();
+        let mut bank = PlaneBank::new(&ps, 0.998, 1.0).unwrap();
+        let truth = TexeModel::from_coeffs(1.1e-3, 2.75e-3, 130.0e-3); // 2.5x slower
+        for i in 0..500usize {
+            let (n, m) = (1 + i % 40, 1 + (i * 7) % 40);
+            bank.observe(2, n as f64, m as f64, truth.estimate(n, m as f64));
+        }
+        assert_eq!(bank.count(2), 500);
+        for d in [0usize, 1] {
+            assert_eq!(bank.count(d), 0);
+            let (got, prior) = (bank.model(d), ps[d]);
+            assert_eq!(got.alpha_n.to_bits(), prior.alpha_n.to_bits());
+            assert_eq!(got.alpha_m.to_bits(), prior.alpha_m.to_bits());
+            assert_eq!(got.beta.to_bits(), prior.beta.to_bits());
+        }
+        // The fed device converged toward its drifted truth.
+        let fit = bank.model(2);
+        assert!((fit.alpha_m - truth.alpha_m).abs() < 2e-4, "alpha_m {}", fit.alpha_m);
+        assert!(bank.warmed(2, 64));
+        assert!(!bank.warmed(0, 1));
+    }
+
+    #[test]
+    fn line_bank_skips_edge_devices() {
+        let mut lines = LineBank::new(&[false, true, true], 0.998, 1.0).unwrap();
+        assert_eq!(lines.len(), 3);
+        // Feeding an edge device is inert.
+        lines.observe(0, 30.0, 0.05);
+        assert_eq!(lines.count(0), 0);
+        assert!(lines.line(0).is_none());
+        // Cloud lines learn independently.
+        for _ in 0..200 {
+            lines.observe(1, 40.0, 0.2e-3 * 40.0 + 8e-3);
+        }
+        assert_eq!(lines.count(1), 200);
+        assert_eq!(lines.count(2), 0);
+        assert!(lines.warmed(1, 64));
+        assert!(!lines.warmed(2, 1));
+        let law = lines.line(1).unwrap();
+        assert!((law.estimate(40.0) - (0.2e-3 * 40.0 + 8e-3)).abs() < 1e-4);
+    }
+
+    #[test]
+    fn rejects_degenerate_construction() {
+        assert!(PlaneBank::new(&[], 0.998, 1.0).is_err());
+        assert!(PlaneBank::new(&priors(), 0.0, 1.0).is_err());
+        assert!(LineBank::new(&[true], 1.5, 1.0).is_err());
+        // An all-edge bank is legal — it just never observes anything.
+        let lb = LineBank::new(&[false, false], 0.998, 1.0).unwrap();
+        assert_eq!(lb.len(), 2);
+        assert!(!lb.is_empty());
+    }
+}

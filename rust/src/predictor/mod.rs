@@ -12,7 +12,12 @@
 //!   factor (beyond the paper: keeps estimates honest under drift) —
 //!   [`RlsPlane`] for the T_exe planes from observed completions,
 //!   [`RlsLine`] for the size → T_tx law from observed transfers.
+//! * [`bank`] — per-device banks of the above for fleet scope:
+//!   [`PlaneBank`] (one independently-warmed plane per device) and
+//!   [`LineBank`] (one T_tx law per cloud replica's link), so one
+//!   drifting replica is re-learned without touching its tier siblings.
 
+pub mod bank;
 pub mod estimators;
 pub mod fit;
 pub mod n2m;
@@ -20,6 +25,7 @@ pub mod rls;
 pub mod texe;
 pub mod ttx;
 
+pub use bank::{LineBank, PlaneBank};
 pub use estimators::LengthEstimator;
 pub use fit::{LineFit, PlaneFit};
 pub use n2m::N2mRegressor;

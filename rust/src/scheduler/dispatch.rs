@@ -79,7 +79,15 @@ use crate::util::{Slab, SlabKey};
 
 use super::batch::{BatchPolicy, BatchStats};
 use super::capacity::CapacityTracker;
-use super::queue::{Admission, AdmissionQueue, QueueStats, QueuedRequest};
+use super::queue::{Admission, AdmissionQueue, FairQueue, QueueStats, QueuedRequest, TenantSpec};
+
+/// Live depth the main admission queue is kept at while a fair
+/// front-end is active: deep enough that the batcher's lookahead always
+/// has material, shallow enough that the weighted-fair pop order — not
+/// FIFO arrival order — decides who runs next. (With a deep
+/// pass-through a flood admitted early would still sit in front of a
+/// late-arriving trickle tenant.)
+const FAIR_PASS_DEPTH: usize = 32;
 
 /// Service-time backend keyed by device *kind*: how long a batch runs on
 /// the edge or the cloud. The classic pair surface; heterogeneous fleets
@@ -147,6 +155,16 @@ pub struct DispatcherConfig {
     pub max_queue_depth: usize,
     /// Micro-batching policy (shared by both lanes).
     pub batch: BatchPolicy,
+    /// Optional multi-tenant admission front-end: number of
+    /// equal-weight tenants sharing each lane through a
+    /// [`FairQueue`] (0 = the classic shared FIFO). With N tenants,
+    /// each gets a per-lane quota of `max_queue_depth / N` — a flooding
+    /// tenant sheds its own overflow instead of consuming the shared
+    /// bound — and admitted requests drain into the dispatch queue in
+    /// smooth weighted-round-robin order via
+    /// [`Dispatcher::submit_lane_tenant`]. Solo/hedged submissions
+    /// through the tenant-less entry points bypass the front-end.
+    pub fair_tenants: usize,
 }
 
 impl Default for DispatcherConfig {
@@ -156,6 +174,7 @@ impl Default for DispatcherConfig {
             cloud_workers: 4,
             max_queue_depth: 512,
             batch: BatchPolicy::default(),
+            fair_tenants: 0,
         }
     }
 }
@@ -330,6 +349,11 @@ struct Lane {
     kind: DeviceKind,
     queue: AdmissionQueue,
     tracker: CapacityTracker,
+    /// Multi-tenant admission front-end
+    /// ([`DispatcherConfig::fair_tenants`]); requests admitted here are
+    /// pumped into `queue` in weighted-fair order as dispatch slots
+    /// free up.
+    fair: Option<FairQueue>,
 }
 
 impl Lane {
@@ -338,6 +362,7 @@ impl Lane {
             kind,
             queue: AdmissionQueue::new(max_depth),
             tracker: CapacityTracker::new(workers),
+            fair: None,
         }
     }
 
@@ -348,6 +373,25 @@ impl Lane {
             self.tracker.on_admit(rq.est_service_s);
         }
         admission
+    }
+
+    /// Drain the fair front-end into the dispatch queue (weighted-fair
+    /// order) up to the pass-through depth. Capacity was accounted at
+    /// front-end admission, so the move itself is accounting-neutral.
+    fn pump_fair(&mut self) {
+        let Some(fair) = self.fair.as_mut() else { return };
+        while self.queue.live_depth() < FAIR_PASS_DEPTH && self.queue.has_room() {
+            match fair.pop() {
+                Some((_tenant, rq)) => {
+                    let admitted = self.queue.offer(rq);
+                    debug_assert!(
+                        admitted.is_admitted(),
+                        "pass-through offer below the bound cannot shed"
+                    );
+                }
+                None => return,
+            }
+        }
     }
 }
 
@@ -392,9 +436,10 @@ pub struct Dispatcher {
 
 impl Dispatcher {
     /// Build the classic edge/cloud pair: lane 0 is the edge, lane 1
-    /// the cloud.
+    /// the cloud. `cfg.fair_tenants > 0` additionally enables the
+    /// multi-tenant admission front-end on every lane.
     pub fn new(cfg: &DispatcherConfig) -> Self {
-        Dispatcher::with_lanes(
+        let mut disp = Dispatcher::with_lanes(
             &[
                 LaneSpec {
                     kind: DeviceKind::Edge,
@@ -408,7 +453,26 @@ impl Dispatcher {
                 },
             ],
             cfg.batch,
-        )
+        );
+        if cfg.fair_tenants > 0 {
+            disp.enable_fair_tenants(cfg.fair_tenants);
+        }
+        disp
+    }
+
+    /// Enable the multi-tenant admission front-end on every lane:
+    /// `tenants` equal-weight tenants, each with a per-lane quota of
+    /// `max_queue_depth / tenants` (at least 1). Submissions then go
+    /// through [`Dispatcher::submit_lane_tenant`]; requests drain into
+    /// each lane's dispatch queue in smooth weighted-round-robin order,
+    /// so a flooding tenant sheds its own overflow and can no longer
+    /// push a neighbour's requests behind its backlog.
+    pub fn enable_fair_tenants(&mut self, tenants: usize) {
+        assert!(tenants > 0, "fair front-end needs at least one tenant");
+        for lane in &mut self.lanes {
+            let quota = (lane.queue.max_depth() / tenants).max(1);
+            lane.fair = Some(FairQueue::new(&vec![TenantSpec::with_quota(quota); tenants]));
+        }
     }
 
     /// Build a fleet dispatcher: one lane per device spec, indexed in
@@ -469,6 +533,55 @@ impl Dispatcher {
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
         self.lanes[lane].offer(rq)
+    }
+
+    /// Admit a request to lane `lane` on behalf of `tenant`, through
+    /// the lane's fair front-end when one is enabled
+    /// ([`Dispatcher::enable_fair_tenants`]): admission is bounded by
+    /// the *tenant's own quota* (another tenant's backlog can never
+    /// shed this request), and queued requests reach the dispatch queue
+    /// in smooth weighted-round-robin order. Without a front-end this
+    /// degenerates to [`Dispatcher::submit_lane`] (the tenant id is
+    /// ignored).
+    pub fn submit_lane_tenant(
+        &mut self,
+        lane: usize,
+        tenant: usize,
+        mut rq: QueuedRequest,
+    ) -> Admission {
+        rq.bucket = self.policy.bucket_of(rq.m_est);
+        rq.hedge = None;
+        let l = &mut self.lanes[lane];
+        match l.fair.as_mut() {
+            None => l.offer(rq),
+            Some(fair) => {
+                let admission = fair.offer(tenant, rq);
+                if admission.is_admitted() {
+                    // The capacity view must include front-end backlog:
+                    // account here, not at pass-through (pumping is
+                    // accounting-neutral).
+                    l.tracker.on_admit(rq.est_service_s);
+                    l.pump_fair();
+                }
+                admission
+            }
+        }
+    }
+
+    /// Queued requests still waiting in lane `lane`'s fair front-end
+    /// (0 when the front-end is disabled).
+    pub fn fair_depth_lane(&self, lane: usize) -> usize {
+        self.lanes[lane].fair.as_ref().map_or(0, |f| f.depth())
+    }
+
+    /// Admission counters of `tenant`'s sub-queue on lane `lane`.
+    /// Panics when the fair front-end is not enabled.
+    pub fn fair_stats_lane(&self, lane: usize, tenant: usize) -> QueueStats {
+        self.lanes[lane]
+            .fair
+            .as_ref()
+            .expect("fair front-end not enabled")
+            .stats_of(tenant)
     }
 
     /// Hedged submission on the classic pair: race lane 0 (edge) against
@@ -605,9 +718,13 @@ impl Dispatcher {
         self.hedges.len()
     }
 
-    /// No queued work and no in-flight batches?
+    /// No queued work (dispatch queues and fair front-ends alike) and
+    /// no in-flight batches?
     pub fn idle(&self) -> bool {
-        self.lanes.iter().all(|l| l.queue.is_empty()) && self.pending.is_empty()
+        self.lanes
+            .iter()
+            .all(|l| l.queue.is_empty() && l.fair.as_ref().is_none_or(|f| f.is_empty()))
+            && self.pending.is_empty()
     }
 
     /// Time of the next event (batch start or batch completion), if any
@@ -641,9 +758,11 @@ impl Dispatcher {
     }
 
     /// Start time of lane `li`'s next batch (max of head arrival and the
-    /// earliest-free worker), purging cancelled heads on the way.
+    /// earliest-free worker), pumping the fair front-end and purging
+    /// cancelled heads on the way.
     fn lane_next_start(&mut self, li: usize) -> Option<f64> {
         let lane = &mut self.lanes[li];
+        lane.pump_fair();
         let hedges = &mut self.hedges;
         loop {
             let head = match lane.queue.peek() {
@@ -1347,6 +1466,131 @@ mod tests {
         let hs = disp.hedge_stats();
         assert_eq!(hs.wins_edge + hs.wins_cloud, hs.hedged);
         assert_eq!(hs.cancelled_unrun + hs.losers_run, hs.hedged);
+    }
+
+    // ------------------------------------------------------- fair front-end
+
+    /// Drive a flood (tenant 0, far beyond capacity) plus a trickle
+    /// (tenant 1) through the edge lane; returns (worst trickle
+    /// latency, trickle shed count, flood shed count).
+    fn flood_run(fair_tenants: usize) -> (f64, u64, u64) {
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            fair_tenants,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        // Serial executor (residual 1.0): capacity is 100 r/s whatever
+        // the batching, so a 1000 r/s flood drowns the lane.
+        let mut exec = FixedExec { per_request_s: 0.01, residual: 1.0 };
+        let mut worst_trickle = 0.0f64;
+        let mut trickle_shed = 0u64;
+        let mut flood_shed = 0u64;
+        let mut on_c = |c: Completion| {
+            if c.request.id >= 10_000 {
+                let latency = c.done_s - c.request.arrival_s;
+                if latency > worst_trickle {
+                    worst_trickle = latency;
+                }
+            }
+        };
+        // 500 flood arrivals keep the peak backlog (~450) inside the
+        // 512 shared bound, so the FIFO run sheds nothing and the
+        // comparison is purely about *where* the trickle tenant waits.
+        let mut trickle_i = 0u64;
+        for i in 0..500u64 {
+            let t = i as f64 * 0.001;
+            disp.run_until(t, &mut exec, &mut on_c);
+            // The flood: 1000 r/s of tenant-0 traffic.
+            if !disp.submit_lane_tenant(0, 0, rq(i, t, 10.0)).is_admitted() {
+                flood_shed += 1;
+            }
+            // The trickle: one tenant-1 request every 30 ms.
+            if i % 30 == 15 {
+                let trq = rq(10_000 + trickle_i, t, 10.0);
+                trickle_i += 1;
+                if !disp.submit_lane_tenant(0, 1, trq).is_admitted() {
+                    trickle_shed += 1;
+                }
+            }
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut on_c);
+        assert!(disp.idle());
+        (worst_trickle, trickle_shed, flood_shed)
+    }
+
+    #[test]
+    fn fair_front_end_protects_neighbour_tail_from_a_flood() {
+        // THE multi-tenant acceptance test: a noisy tenant flooding 10x
+        // capacity must no longer inflate a neighbour's tail. Shared
+        // FIFO: the trickle tenant queues behind the whole flood
+        // backlog (seconds of wait). Fair front-end: its requests pass
+        // through its own quota and the WRR pump, bounded by the
+        // pass-through window.
+        let (fifo_worst, fifo_shed, _f0) = flood_run(0);
+        let (fair_worst, fair_shed, fair_flood_shed) = flood_run(2);
+        assert_eq!(fifo_shed, 0, "trickle shed under shared FIFO");
+        assert_eq!(fair_shed, 0, "trickle shed under fair front-end");
+        assert!(
+            fifo_worst > 2.0,
+            "flood never hurt the FIFO trickle tenant (worst {fifo_worst})"
+        );
+        assert!(
+            fair_worst < 1.0,
+            "fair front-end left the trickle tenant waiting {fair_worst}s"
+        );
+        assert!(
+            fair_worst * 3.0 < fifo_worst,
+            "fair front-end bought too little: {fair_worst} vs {fifo_worst}"
+        );
+        // The flooding tenant sheds its own overflow (quota), instead
+        // of consuming the shared bound.
+        assert!(fair_flood_shed > 0, "flood never shed under its quota");
+    }
+
+    #[test]
+    fn fair_front_end_conserves_and_reports_stats() {
+        let cfg = DispatcherConfig {
+            edge_workers: 1,
+            cloud_workers: 1,
+            max_queue_depth: 8,
+            fair_tenants: 2,
+            ..Default::default()
+        };
+        let mut disp = Dispatcher::new(&cfg);
+        let mut exec = FixedExec { per_request_s: 0.01, residual: 1.0 };
+        let mut results = 0u64;
+        let mut admitted = 0u64;
+        for i in 0..40u64 {
+            let t = i as f64 * 0.002;
+            disp.run_until(t, &mut exec, &mut |c| {
+                if c.kind.is_result() {
+                    results += 1;
+                }
+            });
+            let tenant = (i % 2) as usize;
+            let lane = (i % 2) as usize;
+            if disp.submit_lane_tenant(lane, tenant, rq(i, t, 10.0)).is_admitted() {
+                admitted += 1;
+            }
+        }
+        disp.run_until(f64::INFINITY, &mut exec, &mut |c| {
+            if c.kind.is_result() {
+                results += 1;
+            }
+        });
+        assert_eq!(results, admitted, "fair-path conservation broken");
+        assert!(disp.idle());
+        assert_eq!(disp.fair_depth_lane(0), 0);
+        assert_eq!(disp.fair_depth_lane(1), 0);
+        // Quota = max_depth / tenants = 4 per tenant per lane.
+        let s0 = disp.fair_stats_lane(0, 0);
+        assert_eq!(s0.offered, s0.admitted + s0.rejected);
+        // Without a front-end the tenant entry point degenerates to
+        // submit_lane.
+        let mut plain = Dispatcher::new(&DispatcherConfig::default());
+        assert!(plain.submit_lane_tenant(0, 7, rq(0, 0.0, 10.0)).is_admitted());
+        assert_eq!(plain.fair_depth_lane(0), 0);
     }
 
     #[test]

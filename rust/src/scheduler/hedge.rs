@@ -1,0 +1,221 @@
+//! Self-tuning hedge margin: a waste-budget controller.
+//!
+//! Hedged dispatch buys tail latency with duplicated work, priced by
+//! one knob — the error bar around the eq. 1 margin inside which a
+//! request races on both placements. A *fixed* error bar prices that
+//! tradeoff blindly: at low load every hedge loser runs to completion
+//! (idle lanes start both copies immediately), so a margin tuned for
+//! the contended regime burns far more than intended; at high load most
+//! losers are cancelled while queued and the same margin wastes almost
+//! nothing, leaving tail latency on the table.
+//!
+//! [`HedgeBudget`] closes the loop: the operator configures a **waste
+//! budget** — the acceptable fraction of executed work that produces no
+//! result ([`crate::sim::ContendedResult::wasted_frac`]) — and the
+//! controller adapts the margin online to spend exactly that budget,
+//! whatever the load:
+//!
+//! ```text
+//!             ┌────────────── margin_s ──────────────┐
+//!             │                                      ▼
+//!      ┌──────┴──────┐   hedge if |margin| ≤ bar   ┌──────────┐
+//!      │ controller  │ ◀──────── completions ───── │ dispatch │
+//!      └──────┬──────┘   (useful / wasted work)    └──────────┘
+//!             │
+//!   ŵ  = decayed wasted / (useful + wasted)
+//!   err = (budget − ŵ) / budget
+//!   margin ← clamp(margin · (1 + gain·err), min, max)
+//! ```
+//!
+//! Every completion (solo or hedged) feeds the decayed work window, so
+//! ŵ estimates the *recent* wasted-work fraction with time constant
+//! ≈ 1/(1−[`HEDGE_WINDOW_DECAY`]) completions. Under budget the margin
+//! grows multiplicatively (hedge more — the budget is there to be
+//! spent); over budget it shrinks (with ŵ ≤ 1 the shrink factor is
+//! bounded below, so the margin cannot collapse in one step). The
+//! controller is shared verbatim by the pair harness
+//! ([`crate::sim::run_contended`] / [`crate::sim::run_closed_loop`])
+//! and the fleet harness ([`crate::sim::run_fleet`] /
+//! [`crate::sim::run_fleet_closed`]): plain arithmetic, no
+//! transcendentals, deterministic, and mirrored operation-for-operation
+//! by the python lockstep mirrors.
+
+use crate::{Error, Result};
+
+/// Per-observation multiplicative gain of the margin update.
+pub const HEDGE_GAIN: f64 = 0.05;
+/// Per-observation decay of the useful/wasted work window (time
+/// constant ≈ 500 completions).
+pub const HEDGE_WINDOW_DECAY: f64 = 0.998;
+/// Margin floor (seconds): the controller may effectively disable
+/// hedging but keeps a toehold so it can re-expand when waste falls.
+pub const HEDGE_MIN_MARGIN_S: f64 = 1e-4;
+/// Margin ceiling (seconds): beyond this the "error bar" story is
+/// untenable — racing placements that differ by more is not hedging.
+pub const HEDGE_MAX_MARGIN_S: f64 = 0.050;
+
+/// Online margin controller capping the wasted-work fraction
+/// ([`crate::sim::ContendedResult::wasted_frac`]).
+#[derive(Debug, Clone, Copy)]
+pub struct HedgeBudget {
+    budget_frac: f64,
+    margin_s: f64,
+    useful_s: f64,
+    wasted_s: f64,
+}
+
+impl HedgeBudget {
+    /// Controller targeting `budget_frac` of executed work as waste,
+    /// starting from `init_margin_s` (clamped into the margin bounds).
+    /// `budget_frac` must sit in (0, 1) — 0 means "never hedge" (just
+    /// disable hedging instead) and 1 means "all work may be waste".
+    pub fn new(budget_frac: f64, init_margin_s: f64) -> Result<HedgeBudget> {
+        if !(budget_frac.is_finite() && budget_frac > 0.0 && budget_frac < 1.0) {
+            return Err(Error::Config(format!(
+                "hedge waste budget {budget_frac} outside (0, 1)"
+            )));
+        }
+        if !(init_margin_s.is_finite() && init_margin_s > 0.0) {
+            return Err(Error::Config(format!(
+                "hedge initial margin {init_margin_s} must be finite and > 0"
+            )));
+        }
+        Ok(HedgeBudget {
+            budget_frac,
+            margin_s: init_margin_s.clamp(HEDGE_MIN_MARGIN_S, HEDGE_MAX_MARGIN_S),
+            useful_s: 0.0,
+            wasted_s: 0.0,
+        })
+    }
+
+    /// The current hedge error bar (seconds).
+    pub fn margin_s(&self) -> f64 {
+        self.margin_s
+    }
+
+    /// The configured waste budget (fraction of executed work).
+    pub fn budget_frac(&self) -> f64 {
+        self.budget_frac
+    }
+
+    /// The decayed-window wasted-work fraction the controller currently
+    /// sees (0 before any observation).
+    pub fn observed_frac(&self) -> f64 {
+        let total = self.useful_s + self.wasted_s;
+        if total > 0.0 {
+            self.wasted_s / total
+        } else {
+            0.0
+        }
+    }
+
+    /// Feed one completed execution: its true work content `t_s`
+    /// (standalone execution seconds — the same unit the harness's
+    /// waste accounting uses) and whether it was wasted (a hedge loser)
+    /// or useful (a result). Updates the window and adjusts the margin.
+    /// O(1), plain arithmetic.
+    pub fn observe(&mut self, t_s: f64, wasted: bool) {
+        if !(t_s.is_finite() && t_s >= 0.0) {
+            return; // never poison the window
+        }
+        self.useful_s *= HEDGE_WINDOW_DECAY;
+        self.wasted_s *= HEDGE_WINDOW_DECAY;
+        if wasted {
+            self.wasted_s += t_s;
+        } else {
+            self.useful_s += t_s;
+        }
+        let total = self.useful_s + self.wasted_s;
+        if total > 0.0 {
+            let frac = self.wasted_s / total;
+            let err = (self.budget_frac - frac) / self.budget_frac;
+            self.margin_s = (self.margin_s * (1.0 + HEDGE_GAIN * err))
+                .clamp(HEDGE_MIN_MARGIN_S, HEDGE_MAX_MARGIN_S);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn margin_shrinks_over_budget_and_grows_under() {
+        let mut ctl = HedgeBudget::new(0.10, 0.010).unwrap();
+        // All waste: far over budget, the margin must fall.
+        for _ in 0..200 {
+            ctl.observe(0.05, true);
+        }
+        assert!(ctl.margin_s() < 0.010, "margin {} did not shrink", ctl.margin_s());
+        assert!(ctl.observed_frac() > 0.9);
+        // All useful: under budget, the margin re-expands toward the cap.
+        for _ in 0..4000 {
+            ctl.observe(0.05, false);
+        }
+        assert!(
+            ctl.margin_s() > 0.010,
+            "margin {} did not recover",
+            ctl.margin_s()
+        );
+        assert!(ctl.observed_frac() < 0.05);
+    }
+
+    #[test]
+    fn margin_stays_clamped() {
+        let mut ctl = HedgeBudget::new(0.10, 0.010).unwrap();
+        for _ in 0..100_000 {
+            ctl.observe(0.05, false);
+        }
+        assert_eq!(ctl.margin_s(), HEDGE_MAX_MARGIN_S, "no growth past the cap");
+        for _ in 0..100_000 {
+            ctl.observe(0.05, true);
+        }
+        assert_eq!(ctl.margin_s(), HEDGE_MIN_MARGIN_S, "no shrink past the floor");
+        // The floor keeps a toehold: recovery is still possible.
+        for _ in 0..100_000 {
+            ctl.observe(0.05, false);
+        }
+        assert!(ctl.margin_s() > HEDGE_MIN_MARGIN_S);
+    }
+
+    #[test]
+    fn settles_near_the_budget_under_a_responsive_plant() {
+        // Close the loop against a toy plant where hedge propensity is
+        // proportional to the margin: waste per observation ∝ margin.
+        // The controller must settle with the observed fraction inside
+        // a couple of points of the budget.
+        let budget = 0.12;
+        let mut ctl = HedgeBudget::new(budget, 0.001).unwrap();
+        for i in 0..30_000 {
+            // Plant: at margin m, a fraction (m / MAX) of work is wasted.
+            let waste_p = ctl.margin_s() / HEDGE_MAX_MARGIN_S;
+            // Deterministic low-discrepancy dither instead of rng (997
+            // is coprime with 1000, so waste spreads evenly in time).
+            let wasted = ((i * 997) % 1000) as f64 < waste_p * 1000.0;
+            ctl.observe(0.02, wasted);
+        }
+        let w = ctl.observed_frac();
+        assert!(
+            (w - budget).abs() < 0.02,
+            "settled at {w}, budget {budget}"
+        );
+    }
+
+    #[test]
+    fn init_margin_is_clamped_and_bad_configs_rejected() {
+        let ctl = HedgeBudget::new(0.10, 10.0).unwrap();
+        assert_eq!(ctl.margin_s(), HEDGE_MAX_MARGIN_S);
+        assert_eq!(ctl.budget_frac(), 0.10);
+        assert!(HedgeBudget::new(0.0, 0.01).is_err());
+        assert!(HedgeBudget::new(1.0, 0.01).is_err());
+        assert!(HedgeBudget::new(f64::NAN, 0.01).is_err());
+        assert!(HedgeBudget::new(0.1, 0.0).is_err());
+        assert!(HedgeBudget::new(0.1, f64::INFINITY).is_err());
+        // Non-finite observations are ignored.
+        let mut ctl = HedgeBudget::new(0.10, 0.010).unwrap();
+        ctl.observe(f64::NAN, true);
+        ctl.observe(-1.0, true);
+        assert_eq!(ctl.observed_frac(), 0.0);
+        assert_eq!(ctl.margin_s(), 0.010);
+    }
+}

@@ -86,6 +86,7 @@ pub mod baseline;
 pub mod batch;
 pub mod capacity;
 pub mod dispatch;
+pub mod hedge;
 pub mod queue;
 
 pub use baseline::BaselineDispatcher;
@@ -95,6 +96,7 @@ pub use dispatch::{
     BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
     HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec,
 };
+pub use hedge::HedgeBudget;
 pub use queue::{
     Admission, AdmissionQueue, FairQueue, QueueStats, QueuedRequest, TenantSpec,
 };

@@ -313,8 +313,10 @@ fn prop_contended_run_conserves_requests() {
         let load = rng.uniform(2.0, 250.0);
         let (requests, ch) = synth_workload(trial as u64, 1_500, load);
         for policy in [PolicyKind::Cnmt, PolicyKind::EdgeOnly, PolicyKind::CloudOnly] {
-            let mut opts = ContentionOpts::default();
-            opts.queue_aware = trial % 2 == 0;
+            let mut opts = ContentionOpts {
+                queue_aware: trial % 2 == 0,
+                ..Default::default()
+            };
             opts.dispatcher.max_queue_depth = 16 + rng.usize(512);
             let r = run_contended(&requests, &ch, policy, &opts).unwrap();
             assert_eq!(
@@ -343,11 +345,13 @@ fn prop_hedged_dispatch_invariants() {
         let load = rng.uniform(8.0, 160.0);
         let margin = rng.uniform(0.001, 0.08);
         let (requests, ch) = synth_workload(100 + trial, 2_000, load);
-        let mut opts = ContentionOpts::default();
-        opts.adaptive = Some(AdaptiveOpts {
-            hedge_margin_s: margin,
+        let mut opts = ContentionOpts {
+            adaptive: Some(AdaptiveOpts {
+                hedge_margin_s: margin,
+                ..Default::default()
+            }),
             ..Default::default()
-        });
+        };
         opts.dispatcher.max_queue_depth = 64 + rng.usize(512);
         let r = run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap();
         assert_eq!(
@@ -773,6 +777,7 @@ fn prop_fleet_pair_is_bit_equivalent_to_contended_across_random_loads() {
             hedge_margin_s: 0.010,
             refit_min_obs: u64::MAX,
             refit_ttx: false,
+            waste_budget: 0.0, // fixed margin, like the adaptive-less fleet side
             ..Default::default()
         };
         assert_same(
@@ -780,7 +785,103 @@ fn prop_fleet_pair_is_bit_equivalent_to_contended_across_random_loads() {
             &fleet(FleetStrategy::Hedged { margin_s: 0.010 }),
             &pair(true, Some(no_refit)),
         );
+        // Full adaptive stack on both sides: per-device refit + the
+        // waste-budget margin controller.
+        let full = AdaptiveOpts::default();
+        let adaptive_fleet = run_fleet(
+            &requests,
+            &ch,
+            &topo,
+            &FleetOpts {
+                strategy: FleetStrategy::Hedged { margin_s: full.hedge_margin_s },
+                adaptive: Some(full),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_same(
+            &format!("trial {trial} hedge+refit+budget"),
+            &adaptive_fleet,
+            &pair(true, Some(full)),
+        );
     }
+}
+
+#[test]
+fn prop_waste_budget_caps_wasted_frac_across_random_loads() {
+    // THE controller acceptance property: across random offered loads
+    // and budgets, an adaptive run's end-to-end wasted-work fraction
+    // must settle within two points of (or below) the configured
+    // budget — the margin self-tunes instead of burning blindly.
+    let mut rng = Rng::new(0xB4D6E7);
+    for trial in 0..6u64 {
+        let load = rng.uniform(8.0, 160.0);
+        let budget = rng.uniform(0.04, 0.15);
+        let (requests, ch) = synth_workload(4_200 + trial, 4_000, load);
+        let opts = ContentionOpts {
+            adaptive: Some(AdaptiveOpts { waste_budget: budget, ..Default::default() }),
+            ..Default::default()
+        };
+        let r = run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap();
+        assert_eq!(r.completed + r.rejected, r.offered, "trial {trial}");
+        let wf = r.wasted_frac();
+        assert!(
+            wf <= budget + 0.02,
+            "trial {trial}: wasted_frac {wf} blew the {budget} budget at {load} r/s"
+        );
+        // The controller genuinely ran (margin reported, inside bounds).
+        assert!(
+            r.hedge_final_margin_s.is_finite()
+                && r.hedge_final_margin_s >= cnmt::scheduler::hedge::HEDGE_MIN_MARGIN_S
+                && r.hedge_final_margin_s <= cnmt::scheduler::hedge::HEDGE_MAX_MARGIN_S,
+            "trial {trial}: final margin {} out of bounds",
+            r.hedge_final_margin_s
+        );
+    }
+}
+
+#[test]
+fn prop_fleet_drift_moves_only_the_pinned_device_results() {
+    // Lane-pinned drift at fleet scope: with refit on, replaying the
+    // same workload with and without the drift must leave the *other*
+    // devices' planes untouched inside the refit bank — asserted
+    // indirectly here at run scope via conservation, and directly at
+    // selector scope in fleet::select's isolation test. Here we assert
+    // the run-level contract: the drifted run still conserves, labels
+    // carry +refit, and the pinned device genuinely lost traffic
+    // relative to the stationary replay.
+    use cnmt::fleet::Topology;
+    use cnmt::sim::{run_fleet, DriftSpec, FleetOpts};
+    let topo = Topology::hetero();
+    let (requests, ch) = synth_workload(0xD81F8, 4_000, 224.0);
+    let pinned = 4usize; // hetero cloud0
+    let run = |drift: Option<DriftSpec>| {
+        let opts = FleetOpts {
+            adaptive: Some(AdaptiveOpts::default()),
+            drift,
+            ..Default::default()
+        };
+        run_fleet(&requests, &ch, &topo, &opts).unwrap()
+    };
+    let stationary = run(None);
+    let drifted = run(Some(DriftSpec {
+        device: cnmt::devices::DeviceKind::Cloud,
+        lane: Some(pinned),
+        start_s: 4.0,
+        ramp_s: 5.0,
+        factor: 2.5,
+    }));
+    for r in [&stationary, &drifted] {
+        assert_eq!(r.policy, "fleet+select+refit");
+        assert_eq!(r.completed + r.rejected, r.offered);
+        assert_eq!(r.device_results.iter().sum::<usize>(), r.completed);
+    }
+    assert!(
+        drifted.device_results[pinned] < stationary.device_results[pinned],
+        "throttled replica kept its traffic: {} vs {}",
+        drifted.device_results[pinned],
+        stationary.device_results[pinned]
+    );
 }
 
 #[test]
