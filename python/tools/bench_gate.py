@@ -13,10 +13,14 @@ in the zero-churn dispatcher and the parallel sweep runner:
     the lane generalisation must stay within a few percent, not an
     order of magnitude;
   * the sharded sweep is bit-identical to the serial one and at least
-    --min-sweep-speedup x faster at the bench's thread count.
+    --min-sweep-speedup x faster at the bench's thread count;
+  * the flight recorder costs almost nothing: the hedged event loop
+    with a bounded decision-log ring attached runs at
+    ≥ --min-recorder-ratio x the untraced loop's events/sec.
 
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
        [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
+       [--min-recorder-ratio X]
 """
 
 import argparse
@@ -31,6 +35,7 @@ def main():
     ap.add_argument("--min-speedup", type=float, default=1.2)
     ap.add_argument("--min-fleet-ratio", type=float, default=0.8)
     ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
+    ap.add_argument("--min-recorder-ratio", type=float, default=0.9)
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -47,6 +52,7 @@ def main():
     fleet = b["fleet"]
     fleet_ratio = fleet["ratio_vs_pair_solo"]
     sweep = b["sweep"]
+    recorder = b["recorder"]
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
         f"speedup vs frozen baseline: solo {sp_solo:.2f}x, hedged "
@@ -56,7 +62,9 @@ def main():
         f"{fleet['lane6']['events_per_sec']:,.0f} ev/s | "
         f"sweep {sweep['serial_wall_s']:.2f}s → "
         f"{sweep['parallel_wall_s']:.2f}s at {sweep['threads']:.0f} threads "
-        f"({sweep['speedup']:.2f}x, bit_identical={sweep['bit_identical']})"
+        f"({sweep['speedup']:.2f}x, bit_identical={sweep['bit_identical']}) | "
+        f"recorder {recorder['ratio']:.2f}x "
+        f"(ring {recorder['capacity']:.0f})"
     )
 
     failures = []
@@ -76,6 +84,12 @@ def main():
         )
     if sweep["bit_identical"] is not True:
         failures.append("parallel sweep not bit-identical to serial")
+    if recorder["ratio"] < args.min_recorder_ratio:
+        failures.append(
+            f"flight recorder drags the hedged loop to {recorder['ratio']:.2f}x, "
+            f"below floor {args.min_recorder_ratio:.2f}x (decision log is no "
+            "longer near-free)"
+        )
     # The wall-clock floor is a function of available parallelism: a
     # 1-core runner degenerates to the serial path (speedup ~1.0) with
     # nothing regressed, so only gate it when the bench actually had

@@ -442,7 +442,7 @@ class FleetState:
     waste-budget margin controller and lane-pinned drift."""
 
     def __init__(self, pool, topo, strategy, hedge_margin_s, pick_seed,
-                 adaptive=None, drift=None):
+                 adaptive=None, drift=None, telemetry=None):
         self.pool = pool
         self.strategy = strategy
         self.hedge_margin_s = hedge_margin_s
@@ -487,6 +487,19 @@ class FleetState:
             self.ctl = HedgeBudget(adaptive["waste_budget"], hedge_margin_s)
         else:
             self.ctl = None
+        # Observability (mirror of obs::telemetry via FleetOpts.telemetry
+        # — off by default so every legacy report stays byte-identical).
+        if telemetry is not None:
+            self.phases = Phases()
+            self.tel = Telemetry(
+                telemetry,
+                [d["name"] for d in devs],
+                adaptive is not None,
+                self.ctl is not None,
+            )
+        else:
+            self.phases = None
+            self.tel = None
         # Accounting (mirror of FleetAcct).
         self.hist = Histogram()
         self.stats_count = 0
@@ -583,6 +596,15 @@ class FleetState:
                 if self.ctl is not None:
                     self.ctl.observe(t_true, False)
                 tx_s = truth.t_tx * self.link_scale[li] if tier == CLOUD else 0.0
+                if self.phases is not None:
+                    # The four phases partition the latency exactly:
+                    # (start-arrival) + ((done-start)-t_true) + t_true + tx.
+                    self.phases.record(
+                        start_s - rq[5],
+                        (done_s - start_s) - t_true,
+                        t_true,
+                        tx_s,
+                    )
                 latency = (done_s - rq[5]) + tx_s
                 self.hist.record(latency)
                 self.stats_count += 1
@@ -662,6 +684,139 @@ def fleet_submit(st, i, truth, now, n_dev, waits):
     return st.disp.submit_lane(dev, rq)
 
 
+# ---------------------------------------------------------------- observability
+# Mirror of rust/src/obs/telemetry.rs: the per-request latency phase
+# decomposition and the fixed-cadence control-loop gauge sampler. Both
+# only *read* the simulation state, so dynamics are bit-identical with
+# telemetry on or off; both are off by default.
+
+
+class Phases:
+    """Mirror of obs::Phases: four latency-bucketed histograms that
+    partition each result's latency exactly
+    (queue_wait + batch_wait + exec + tx == latency)."""
+
+    KEYS = ("queue_wait", "batch_wait", "exec", "tx")
+
+    def __init__(self):
+        self.hists = {k: Histogram() for k in self.KEYS}
+
+    def record(self, queue_wait_s, batch_wait_s, exec_s, tx_s):
+        self.hists["queue_wait"].record(queue_wait_s)
+        self.hists["batch_wait"].record(batch_wait_s)
+        self.hists["exec"].record(exec_s)
+        self.hists["tx"].record(tx_s)
+
+    @staticmethod
+    def phase_json(h):
+        return {
+            "count": float(h.total),
+            "mean_s": h.sum / h.total if h.total else float("nan"),
+            "p50_s": h.quantile(0.50),
+            "p95_s": h.quantile(0.95),
+            "p99_s": h.quantile(0.99),
+            "sum_s": h.sum,
+        }
+
+    def to_json(self):
+        return {k: self.phase_json(h) for k, h in self.hists.items()}
+
+
+class Telemetry:
+    """Mirror of obs::Telemetry: a fixed-cadence, fixed-capacity sampler
+    of per-device gauges plus the adaptive-control state. The first
+    sample lands at `interval_s`; a due sample with the window full
+    flags `truncated` instead of rotating."""
+
+    def __init__(self, cfg, names, adaptive, controlled):
+        self.interval_s = cfg["interval_s"]
+        self.capacity = max(cfg["capacity"], 1)
+        self.next_s = cfg["interval_s"]
+        self.t_s = []
+        self.devices = [
+            {
+                "name": n,
+                "queue_depth": [],
+                "expected_wait_s": [],
+                "in_flight": [],
+                "plane": [[], [], []] if adaptive else None,
+            }
+            for n in names
+        ]
+        self.hedge_margin_s = [] if controlled else None
+        self.wasted_frac = [] if controlled else None
+        self.truncated = False
+
+    def next_due(self, now_s):
+        if self.next_s > now_s:
+            return None
+        if len(self.t_s) >= self.capacity:
+            self.truncated = True
+            return None
+        t = self.next_s
+        self.next_s += self.interval_s
+        self.t_s.append(t)
+        return t
+
+    def to_json(self):
+        out = {
+            "interval_s": self.interval_s,
+            "samples": float(len(self.t_s)),
+            "truncated": self.truncated,
+            "t_s": list(self.t_s),
+            "devices": [],
+        }
+        for dev in self.devices:
+            o = {
+                "name": dev["name"],
+                "queue_depth": list(dev["queue_depth"]),
+                "expected_wait_s": list(dev["expected_wait_s"]),
+                "in_flight": list(dev["in_flight"]),
+            }
+            if dev["plane"] is not None:
+                o["plane_an"] = list(dev["plane"][0])
+                o["plane_am"] = list(dev["plane"][1])
+                o["plane_b"] = list(dev["plane"][2])
+            out["devices"].append(o)
+        if self.hedge_margin_s is not None:
+            out["hedge_margin_s"] = list(self.hedge_margin_s)
+        if self.wasted_frac is not None:
+            out["wasted_frac"] = list(self.wasted_frac)
+        return out
+
+
+def sample_telemetry(st, now_s):
+    """Mirror of harness::sample_telemetry: claim every cadence point due
+    at or before `now_s` and sample the gauges at the claimed instant."""
+    tel = st.tel
+    if tel is None:
+        return
+    while True:
+        ts = tel.next_due(now_s)
+        if ts is None:
+            break
+        for d, dev in enumerate(tel.devices):
+            lane = st.disp.lanes[d]
+            dev["queue_depth"].append(float(len(lane.items) - lane.dead))
+            dev["expected_wait_s"].append(lane.expected_wait_s(ts))
+            dev["in_flight"].append(
+                float(sum(1 for t in lane.free_at if t > ts))
+            )
+            if dev["plane"] is not None:
+                an, am, b = st.texe[d]
+                dev["plane"][0].append(an)
+                dev["plane"][1].append(am)
+                dev["plane"][2].append(b)
+        if st.ctl is not None:
+            if tel.hedge_margin_s is not None:
+                tel.hedge_margin_s.append(st.ctl.margin_s)
+            if tel.wasted_frac is not None:
+                total = st.ctl.useful_s + st.ctl.wasted_s
+                tel.wasted_frac.append(
+                    st.ctl.wasted_s / total if total > 0.0 else 0.0
+                )
+
+
 def fleet_label(strategy, adaptive):
     label = {
         "static": "fleet+static",
@@ -710,17 +865,26 @@ def finish_fleet(st, offered, rejected, makespan_s):
     }
     if st.ctl is not None:
         out["hedge_final_margin_s"] = st.ctl.margin_s
+    # Observability blocks — telemetry runs only (legacy layout
+    # untouched otherwise).
+    if st.phases is not None:
+        out["phases"] = st.phases.to_json()
+    if st.tel is not None:
+        out["telemetry"] = st.tel.to_json()
     return out
 
 
 def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0,
-              adaptive=None, drift=None):
-    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive, drift)
+              adaptive=None, drift=None, telemetry=None):
+    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive,
+                    drift, telemetry)
     n_dev = len(st.tiers)
     waits = [0.0] * n_dev
     rejected = 0
     for i, truth in enumerate(pool):
         now = truth.arrival_s
+        # Gauges read the pre-arrival dispatcher state.
+        sample_telemetry(st, now)
         comps = []
         st.disp.run_until(now, st.exec_fn, comps)
         st.process(comps)
@@ -731,6 +895,7 @@ def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_se
     comps = []
     st.disp.run_until(float("inf"), st.exec_fn, comps)
     st.process(comps)
+    sample_telemetry(st, st.last_done_s)
 
     first_arrival = pool[0].arrival_s if pool else 0.0
     makespan_s = max(st.last_done_s - first_arrival, 0.0)
@@ -739,11 +904,12 @@ def run_fleet(pool, topo, strategy, hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_se
 
 def run_fleet_closed(pool, topo, strategy, clients, think_s=0.0,
                      hedge_margin_s=FLEET_HEDGE_MARGIN_S, pick_seed=0,
-                     adaptive=None, drift=None):
+                     adaptive=None, drift=None, telemetry=None):
     """Mirror of sim::harness::run_fleet_closed (bounded-outstanding
     clients driving the N-lane fleet path)."""
     total = len(pool)
-    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive, drift)
+    st = FleetState(pool, topo, strategy, hedge_margin_s, pick_seed, adaptive,
+                    drift, telemetry)
     n_dev = len(st.tiers)
     waits = [0.0] * n_dev
     ready_s = [0.0] * clients
@@ -763,6 +929,16 @@ def run_fleet_closed(pool, topo, strategy, clients, think_s=0.0,
                     client = k
         next_event = st.disp.next_event_s()
         submit_first = client != -1 and (next_event is None or t_submit <= next_event)
+        # The next action's instant — a submission or the dispatcher
+        # event — drives the telemetry clock (gauges read the pre-action
+        # dispatcher state).
+        if submit_first:
+            t_act = t_submit
+        else:
+            if next_event is None:
+                break
+            t_act = next_event
+        sample_telemetry(st, t_act)
         if submit_first:
             body = next_body
             next_body += 1
@@ -773,10 +949,8 @@ def run_fleet_closed(pool, topo, strategy, clients, think_s=0.0,
                 rejected += 1
                 resolved[0] += 1
         else:
-            if next_event is None:
-                break
             comps = []
-            st.disp.step(next_event, st.exec_fn, comps)
+            st.disp.step(t_act, st.exec_fn, comps)
 
             def on_result(comp):
                 rq, li, _start_s, done_s, _bsize, _kind = comp
@@ -796,6 +970,7 @@ def run_fleet_closed(pool, topo, strategy, clients, think_s=0.0,
     comps = []
     st.disp.run_until(float("inf"), st.exec_fn, comps)
     st.process(comps)
+    sample_telemetry(st, st.last_done_s)
     makespan_s = max(st.last_done_s, 0.0)
     return finish_fleet(st, total, rejected, makespan_s)
 
@@ -1024,7 +1199,8 @@ def closed_drift_spec(topo, requests_per_point):
     }
 
 
-def run_closed_sweep(clients_list, requests_per_point, think_s=0.0, seed=SEED):
+def run_closed_sweep(clients_list, requests_per_point, think_s=0.0, seed=SEED,
+                     telemetry=None):
     topo = topo_hetero()
     drift = closed_drift_spec(topo, requests_per_point)
     pool = synth_workload(seed ^ FLEET_CLOSED_SEED_TAG, requests_per_point, 1.0)
@@ -1042,6 +1218,7 @@ def run_closed_sweep(clients_list, requests_per_point, think_s=0.0, seed=SEED):
                 0,
                 adaptive,
                 drift,
+                telemetry,
             )
             policies[r["policy"]] = r
         cells.append({"clients": clients, "policies": policies})

@@ -1,0 +1,210 @@
+#!/usr/bin/env python3
+"""Standalone mirror of `cnmt experiment fleet --closed-loop --telemetry`
+(reports/telemetry_drift.json).
+
+The drift-telemetry report is the closed-loop fleet sweep of
+`fleet_sweep_mirror.py` pinned to the contended K=32 point with the
+control-loop sampler switched on: every per-policy block gains a
+`phases` latency decomposition (queue_wait / batch_wait / exec / tx
+histograms that partition each result's latency exactly) and a
+`telemetry` block of fixed-cadence gauge time-series (live queue depth,
+backlog expected-wait, busy workers per device, plus the installed RLS
+plane coefficients, hedge margin and windowed wasted-work fraction on
+the adaptive/controlled configurations). The root gains the sampler
+parameters and a compressed `drift_story`: the throttled device's
+backlog rising under the tier-baseline selector, the refit plane
+stepping toward the drifted truth, the hedge margin settling with its
+windowed waste near the budget.
+
+Telemetry only observes — the sampler reads the pre-action dispatcher
+state and never writes back — so every aggregate in this report is
+bit-identical to the untelemetered `fleet_closed_loop.json` run at the
+same client count. Keep this file in lockstep with
+rust/src/obs/telemetry.rs and rust/src/experiments/fleet.rs (the
+`drift telemetry` section): when both toolchains are available, `cnmt
+experiment fleet --closed-loop --telemetry --out reports` and this
+script must agree bit-for-bit.
+
+Usage:
+    python3 python/tools/telemetry_mirror.py [--out reports/telemetry_drift.json]
+    python3 python/tools/telemetry_mirror.py --requests 4000 --clients 16
+"""
+
+import argparse
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from fleet_sweep_mirror import (  # noqa: E402
+    REQUESTS_PER_POINT,
+    SEED,
+    check_pair_anchor,
+    closed_sweep_to_json,
+    run_closed_sweep,
+    write_json,
+)
+
+# experiments::fleet drift-telemetry constants.
+TELEMETRY_INTERVAL_S = 2.0
+TELEMETRY_CAPACITY = 64
+TELEMETRY_CLIENTS = 32
+
+
+def telemetry_cfg():
+    """Mirror of the TelemetryCfg carried by fleet::telemetry_config."""
+    return {"interval_s": TELEMETRY_INTERVAL_S, "capacity": TELEMETRY_CAPACITY}
+
+
+def _fmax(a, b):
+    """Mirror of f64::max (returns the other operand on NaN)."""
+    if math.isnan(a):
+        return b
+    if math.isnan(b):
+        return a
+    return a if a > b else b
+
+
+def series_story(xs):
+    """Mirror of experiments::fleet::series_story: (first, peak, last)
+    of one gauge series, NaNs when empty."""
+    first = xs[0] if xs else float("nan")
+    peak = float("nan")
+    for x in xs:
+        peak = _fmax(peak, x)
+    last = xs[-1] if xs else float("nan")
+    return first, peak, last
+
+
+def telemetry_story(drift, cells):
+    """Mirror of experiments::fleet::telemetry_story: the compressed
+    drift-story diagnostics read off the last cell's gauge series."""
+    lane = drift["lane"]
+    o = {"drift_lane": float(lane)}
+    if not cells:
+        return o
+    policies = cells[-1]["policies"]
+    # Tier-baseline selector: the stale plane keeps under-pricing the
+    # throttled device, so its sampled backlog climbs.
+    tel = policies["fleet+select"].get("telemetry")
+    if tel is not None:
+        first, peak, last = series_story(tel["devices"][lane]["expected_wait_s"])
+        o["baseline_backlog_first_s"] = first
+        o["baseline_backlog_peak_s"] = peak
+        o["baseline_backlog_last_s"] = last
+    # Per-device refit: the throttled replica's installed plane steps
+    # toward the drifted ground truth.
+    tel = policies["fleet+select+refit"].get("telemetry")
+    if tel is not None and "plane_an" in tel["devices"][lane]:
+        first, _, last = series_story(tel["devices"][lane]["plane_an"])
+        o["refit_plane_an_first"] = first
+        o["refit_plane_an_last"] = last
+        o["refit_plane_an_ratio"] = last / first
+    # Budget-controlled hedging: margin settles, windowed waste pins
+    # near the configured budget.
+    tel = policies["fleet+hedge+refit"].get("telemetry")
+    if tel is not None:
+        if "hedge_margin_s" in tel:
+            _, _, last = series_story(tel["hedge_margin_s"])
+            o["hedge_margin_last_s"] = last
+        if "wasted_frac" in tel:
+            _, _, last = series_story(tel["wasted_frac"])
+            o["wasted_frac_last"] = last
+    return o
+
+
+def telemetry_to_json(topo, drift, cells, requests_per_point, think_s, seed=SEED):
+    """Mirror of experiments::fleet::telemetry_to_json: the closed-loop
+    report plus the sampler parameters and the drift story."""
+    root = closed_sweep_to_json(topo, drift, cells, requests_per_point, think_s, seed)
+    root["telemetry_interval_s"] = TELEMETRY_INTERVAL_S
+    root["telemetry_capacity"] = float(TELEMETRY_CAPACITY)
+    root["drift_story"] = telemetry_story(drift, cells)
+    return root
+
+
+def summarize(drift, cells, story, waste_budget):
+    for c in cells:
+        for label, r in c["policies"].items():
+            tel = r.get("telemetry")
+            if tel is None:
+                continue
+            print(
+                f"K={c['clients']} {label:<19} samples={int(tel['samples']):>3} "
+                f"truncated={tel['truncated']} "
+                f"phase mean q/b/e/t ms="
+                + "/".join(
+                    f"{r['phases'][k]['mean_s'] * 1e3:.2f}"
+                    for k in ("queue_wait", "batch_wait", "exec", "tx")
+                )
+            )
+    if "baseline_backlog_peak_s" in story:
+        print(
+            f"\ntelemetry: throttled device (lane {drift['lane']}) backlog "
+            f"{story['baseline_backlog_first_s'] * 1e3:.1f} ms -> "
+            f"{story['baseline_backlog_peak_s'] * 1e3:.1f} ms peak under the "
+            "tier-baseline selector"
+        )
+    if "refit_plane_an_ratio" in story:
+        print(
+            f"telemetry: refit stepped the throttled plane a_N "
+            f"{story['refit_plane_an_ratio']:.2f}x toward the "
+            f"{drift['factor']:.1f}x drifted truth"
+        )
+    if "hedge_margin_last_s" in story:
+        print(
+            f"telemetry: hedge margin settled at "
+            f"{story['hedge_margin_last_s'] * 1e3:.2f} ms with windowed waste "
+            f"{story['wasted_frac_last'] * 100:.1f}% against the "
+            f"{waste_budget * 100:.0f}% budget"
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=REQUESTS_PER_POINT,
+        help="request bodies per cell (mirrors cnmt --fleet-requests)",
+    )
+    ap.add_argument(
+        "--clients",
+        default=None,
+        help=f"comma-separated client counts (default {TELEMETRY_CLIENTS})",
+    )
+    ap.add_argument(
+        "--think-ms",
+        type=float,
+        default=0.0,
+        help="per-client think time in ms (mirrors cnmt --think-ms)",
+    )
+    ap.add_argument(
+        "--anchor-requests",
+        type=int,
+        default=4000,
+        help="request count of the always-on 1x1 pair-equivalence check (0 skips)",
+    )
+    args = ap.parse_args()
+
+    if args.anchor_requests > 0:
+        check_pair_anchor(args.anchor_requests)
+
+    clients = (
+        [int(s) for s in args.clients.split(",")]
+        if args.clients
+        else [TELEMETRY_CLIENTS]
+    )
+    think_s = args.think_ms / 1e3
+    topo, drift, cells = run_closed_sweep(
+        clients, args.requests, think_s, telemetry=telemetry_cfg()
+    )
+    root = telemetry_to_json(topo, drift, cells, args.requests, think_s)
+    write_json(args.out or "reports/telemetry_drift.json", root)
+    summarize(drift, cells, root["drift_story"], root["waste_budget"])
+
+
+if __name__ == "__main__":
+    main()

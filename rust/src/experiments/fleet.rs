@@ -39,6 +39,7 @@
 
 use crate::devices::DeviceKind;
 use crate::fleet::{FleetStrategy, Topology};
+use crate::obs::TelemetryCfg;
 use crate::sim::harness::RequestTruth;
 use crate::sim::{
     run_fleet, run_fleet_closed, AdaptiveOpts, Characterization, DriftSpec, FleetOpts,
@@ -675,6 +676,142 @@ pub fn closed_to_json(s: &FleetClosedSweep) -> Json {
     root
 }
 
+// ------------------------------------------------------ drift telemetry
+
+/// Telemetry sampling cadence of `telemetry_drift.json` (seconds).
+pub const TELEMETRY_INTERVAL_S: f64 = 2.0;
+/// Telemetry window capacity of `telemetry_drift.json` (samples).
+pub const TELEMETRY_CAPACITY: usize = 64;
+/// The single client count the telemetry report runs at — the contended
+/// mid-point of the closed-loop curve, where the drift story is
+/// sharpest without the static baseline outliving the window by much.
+pub const TELEMETRY_CLIENTS: usize = 32;
+
+/// The closed-loop drift sweep with the control-loop telemetry sampler
+/// switched on (`cnmt experiment fleet --closed-loop --telemetry`):
+/// identical scenario, topology and seed discipline to
+/// [`FleetClosedConfig::default`], but pinned to K =
+/// [`TELEMETRY_CLIENTS`] and carrying a
+/// [`TelemetryCfg`] so every cell's [`FleetResult`] gains the phase
+/// decomposition and per-device gauge series. Telemetry only observes:
+/// every aggregate in the report is bit-identical to the untelemetered
+/// run.
+pub fn telemetry_config(seed: u64) -> FleetClosedConfig {
+    FleetClosedConfig {
+        seed,
+        clients: vec![TELEMETRY_CLIENTS],
+        opts: FleetOpts {
+            telemetry: Some(TelemetryCfg {
+                interval_s: TELEMETRY_INTERVAL_S,
+                capacity: TELEMETRY_CAPACITY,
+            }),
+            ..FleetOpts::default()
+        },
+        ..Default::default()
+    }
+}
+
+/// First, peak and last element of one gauge series (NaNs when empty).
+fn series_story(xs: &[f64]) -> (f64, f64, f64) {
+    let first = xs.first().copied().unwrap_or(f64::NAN);
+    let peak = xs.iter().copied().fold(f64::NAN, f64::max);
+    let last = xs.last().copied().unwrap_or(f64::NAN);
+    (first, peak, last)
+}
+
+/// The compressed drift-story diagnostics of the telemetry report: does
+/// the time-series actually show the scenario? The throttled device's
+/// backlog rising under the tier-baseline selector, the refit plane
+/// coefficients stepping toward the drifted ground truth, and the hedge
+/// margin controller converging with its windowed waste near the
+/// budget. Mirrored element-for-element by
+/// `python/tools/telemetry_mirror.py`.
+pub fn telemetry_story(s: &FleetClosedSweep) -> Json {
+    let mut o = Json::object();
+    let lane = s.drift.lane.unwrap_or(0);
+    o.set("drift_lane", Json::Num(lane as f64));
+    let Some(cell) = s.cells.last() else { return o };
+    // Tier-baseline selector: the stale plane keeps under-pricing the
+    // throttled device, so its sampled backlog climbs.
+    if let Some(tel) = &cell.get("fleet+select").telemetry {
+        let (first, peak, last) = series_story(&tel.devices[lane].expected_wait_s);
+        o.set("baseline_backlog_first_s", Json::Num(first))
+            .set("baseline_backlog_peak_s", Json::Num(peak))
+            .set("baseline_backlog_last_s", Json::Num(last));
+    }
+    // Per-device refit: the throttled replica's installed plane steps
+    // toward the drifted ground truth (≈ drift.factor × the baseline).
+    if let Some(tel) = &cell.get("fleet+select+refit").telemetry {
+        if let Some(plane) = &tel.devices[lane].plane {
+            let (first, _, last) = series_story(&plane[0]);
+            o.set("refit_plane_an_first", Json::Num(first))
+                .set("refit_plane_an_last", Json::Num(last))
+                .set("refit_plane_an_ratio", Json::Num(last / first));
+        }
+    }
+    // Budget-controlled hedging: margin settles, windowed waste pins
+    // near the configured budget.
+    if let Some(tel) = &cell.get("fleet+hedge+refit").telemetry {
+        if let Some(m) = &tel.hedge_margin_s {
+            let (_, _, last) = series_story(m);
+            o.set("hedge_margin_last_s", Json::Num(last));
+        }
+        if let Some(w) = &tel.wasted_frac {
+            let (_, _, last) = series_story(w);
+            o.set("wasted_frac_last", Json::Num(last));
+        }
+    }
+    o
+}
+
+/// JSON report (`telemetry_drift.json`): the closed-loop drift report
+/// augmented with the sampler parameters and the drift-story
+/// diagnostics. Per-policy blocks carry the `phases` and `telemetry`
+/// series (present because the run had telemetry on).
+pub fn telemetry_to_json(s: &FleetClosedSweep) -> Json {
+    let mut root = closed_to_json(s);
+    root.set("telemetry_interval_s", Json::Num(TELEMETRY_INTERVAL_S))
+        .set("telemetry_capacity", Json::Num(TELEMETRY_CAPACITY as f64))
+        .set("drift_story", telemetry_story(s));
+    root
+}
+
+/// Render the telemetry sweep: the closed-loop table plus the
+/// drift-story lines the acceptance criteria gate on.
+pub fn render_telemetry_text(s: &FleetClosedSweep) -> String {
+    let mut out = render_closed_text(s);
+    let story = telemetry_story(s);
+    let get = |k: &str| story.get_opt(k).and_then(|v| v.as_f64().ok());
+    if let (Some(first), Some(peak)) = (
+        get("baseline_backlog_first_s"),
+        get("baseline_backlog_peak_s"),
+    ) {
+        out.push_str(&format!(
+            "\ntelemetry: throttled device backlog {:.1} ms → {:.1} ms peak \
+             under the tier-baseline selector\n",
+            first * 1e3,
+            peak * 1e3
+        ));
+    }
+    if let Some(ratio) = get("refit_plane_an_ratio") {
+        out.push_str(&format!(
+            "telemetry: refit stepped the throttled plane a_N {:.2}x toward \
+             the {:.1}x drifted truth\n",
+            ratio, s.drift.factor
+        ));
+    }
+    if let (Some(m), Some(w)) = (get("hedge_margin_last_s"), get("wasted_frac_last")) {
+        out.push_str(&format!(
+            "telemetry: hedge margin settled at {:.2} ms with windowed waste \
+             {:.1}% against the {:.0}% budget\n",
+            m * 1e3,
+            w * 100.0,
+            s.waste_budget * 100.0
+        ));
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -863,6 +1000,95 @@ mod tests {
             let parallel = closed_to_json(&run_closed(&cfg).unwrap()).to_string_pretty();
             assert_eq!(parallel, serial, "{threads}-thread fleet closed sweep diverged");
         }
+    }
+
+    #[test]
+    fn telemetry_rides_along_without_changing_dynamics() {
+        // The off-by-default guarantee's inverse: switching the sampler
+        // ON must not perturb a single aggregate — recording only
+        // observes.
+        let mut base_cfg = closed_smoke_cfg();
+        base_cfg.requests_per_point = 600;
+        base_cfg.clients = vec![8];
+        let base = run_closed(&base_cfg).unwrap();
+        let mut tel_cfg = base_cfg.clone();
+        tel_cfg.opts.telemetry =
+            Some(TelemetryCfg { interval_s: 0.5, capacity: 256 });
+        let tel = run_closed(&tel_cfg).unwrap();
+        for (a, b) in base.cells[0].results.iter().zip(&tel.cells[0].results) {
+            assert_eq!(a.policy, b.policy);
+            assert!(a.telemetry.is_none() && a.phases.is_none(), "{}", a.policy);
+            assert!(b.telemetry.is_some() && b.phases.is_some(), "{}", b.policy);
+            assert_eq!(a.completed, b.completed, "{}", a.policy);
+            assert_eq!(a.p99_s.to_bits(), b.p99_s.to_bits(), "{}", a.policy);
+            assert_eq!(
+                a.mean_latency_s.to_bits(),
+                b.mean_latency_s.to_bits(),
+                "{}",
+                a.policy
+            );
+            assert_eq!(a.hedged, b.hedged, "{}", a.policy);
+            assert_eq!(
+                a.wasted_work_s.to_bits(),
+                b.wasted_work_s.to_bits(),
+                "{}",
+                a.policy
+            );
+            // The decomposition partitions every result's latency: the
+            // phase sums reassemble the total latency mass exactly.
+            let p = b.phases.as_ref().unwrap();
+            assert_eq!(p.count(), b.completed as u64, "{}", b.policy);
+            let got = p.queue_wait.sum() + p.batch_wait.sum() + p.exec.sum() + p.tx.sum();
+            let want = b.mean_latency_s * b.completed as f64;
+            assert!(
+                (got - want).abs() <= 1e-6 * want.max(1.0),
+                "{}: phase mass {got} vs latency mass {want}",
+                b.policy
+            );
+            // Gauge series all align with the sample clock.
+            let t = b.telemetry.as_ref().unwrap();
+            assert!(t.samples() > 0, "{}", b.policy);
+            for d in &t.devices {
+                assert_eq!(d.queue_depth.len(), t.samples());
+                assert_eq!(d.expected_wait_s.len(), t.samples());
+                assert_eq!(d.in_flight.len(), t.samples());
+            }
+        }
+    }
+
+    #[test]
+    fn telemetry_report_carries_series_and_story() {
+        let mut cfg = telemetry_config(20220315);
+        cfg.requests_per_point = 1_200;
+        cfg.clients = vec![8];
+        let sweep = run_closed(&cfg).unwrap();
+        let j = telemetry_to_json(&sweep);
+        assert_eq!(
+            j.get("telemetry_interval_s").unwrap().as_f64().unwrap(),
+            TELEMETRY_INTERVAL_S
+        );
+        let p0 = &j.get("points").unwrap().as_array().unwrap()[0];
+        for label in ["fleet+select", "fleet+hedge+refit"] {
+            let pol = p0.get("policies").unwrap().get(label).unwrap();
+            assert!(pol.get("phases").is_ok(), "{label}");
+            let tel = pol.get("telemetry").unwrap();
+            assert!(tel.get("t_s").is_ok(), "{label}");
+            assert!(tel.get("devices").is_ok(), "{label}");
+        }
+        // Adaptive cells carry plane series; the hedged cell carries the
+        // controller series.
+        let refit = p0.get("policies").unwrap().get("fleet+select+refit").unwrap();
+        let dev0 = &refit.get("telemetry").unwrap().get("devices").unwrap().as_array().unwrap()[0];
+        assert!(dev0.get("plane_an").is_ok());
+        let hedge = p0.get("policies").unwrap().get("fleet+hedge+refit").unwrap();
+        assert!(hedge.get("telemetry").unwrap().get("hedge_margin_s").is_ok());
+        assert!(hedge.get("telemetry").unwrap().get("wasted_frac").is_ok());
+        let story = j.get("drift_story").unwrap();
+        assert!(story.get("baseline_backlog_peak_s").is_ok());
+        assert!(story.get("refit_plane_an_ratio").is_ok());
+        assert!(story.get("wasted_frac_last").is_ok());
+        let txt = render_telemetry_text(&sweep);
+        assert!(txt.contains("telemetry:"), "{txt}");
     }
 
     #[test]

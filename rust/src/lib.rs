@@ -57,6 +57,8 @@
 //! | closed-loop fleet drift sweep (beyond paper) | [`experiments::fleet`], [`sim::harness`] |
 //! | self-tuning hedge waste budget (beyond paper) | [`scheduler::hedge`] |
 //! | multi-tenant fair queueing (+ dispatcher front-end) (beyond paper) | [`scheduler::queue`], [`scheduler::dispatch`] |
+//! | decision-log flight recorder + offline trace verification (beyond paper) | [`obs::recorder`], [`obs::verify`] |
+//! | latency decomposition + control-loop telemetry (beyond paper) | [`obs::telemetry`], [`sim::harness`] |
 
 #![warn(missing_docs)]
 
@@ -69,6 +71,7 @@ pub mod experiments;
 pub mod fleet;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod predictor;
 #[cfg(feature = "pjrt")]
 pub mod runtime;

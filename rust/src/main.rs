@@ -3,6 +3,7 @@
 //! ```text
 //! cnmt experiment table1|fig2a|fig3|fig4|all [flags]   reproduce the paper
 //! cnmt bench sched [--json]                            scheduler perf numbers → BENCH_sched.json
+//! cnmt trace dump|summary|verify [flags|file]          decision-log flight recorder tooling
 //! cnmt calibrate [flags]                               real-PJRT device characterisation
 //! cnmt translate --model <name> --ids 5,6,7            one translation through the runtime
 //! cnmt selfcheck                                       load + run every artifact
@@ -45,6 +46,7 @@ fn run() -> Result<()> {
     match args.subcommand() {
         Some("experiment") => cmd_experiment(&args),
         Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
         Some("calibrate") => cmd_calibrate(&args),
         Some("translate") => cmd_translate(&args),
         Some("selfcheck") => cmd_selfcheck(&args),
@@ -93,6 +95,11 @@ USAGE:
       --offered-rps <f>     fleet sweep: offered load for --topology
                             (default 96)
       --fleet-requests <n>  fleet sweep: requests per cell (default 20000)
+      --telemetry           fleet closed loop: sample control-loop
+                            telemetry (per-device gauges, phase
+                            decomposition) at a fixed cadence and write
+                            telemetry_drift.json instead of
+                            fleet_closed_loop.json (default K = 32)
   cnmt bench sched [flags]  scheduler core benchmark (events/sec,
                             ns/event, sweep wall-clock at 1 vs N threads)
       --json                also write the machine-readable report
@@ -101,6 +108,17 @@ USAGE:
       --sweep-requests <n>  requests/point for the wall-clock sweep
                             (default 4000)
       --threads <n>         parallel sweep thread count (0 = all cores)
+  cnmt trace dump [flags]   stream a full decision log (JSONL) from a
+                            canned hedged-adaptive contended pair replay
+      --out <path>          trace destination (default trace.jsonl)
+      --requests <n>        replay length (default 2000)
+      --load <f>            offered load in r/s (default 120)
+      --seed <u64>          master seed (default 20220315)
+  cnmt trace summary <file> per-event-tag counts and the trace span
+  cnmt trace verify <file>  offline replay: re-prove conservation,
+                            hedge-fate partitioning, margin control law
+                            and waste-budget compliance from the log
+                            alone (no harness internals)
   cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
                             (needs the `pjrt` build feature)
       --samples <n>         measured translations per model (default 120)
@@ -194,7 +212,14 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
     let fleet_closed = which == "fleet" && args.bool("closed-loop");
     let fleet_closed_cfg = if fleet_closed {
-        let mut fc = fleet::FleetClosedConfig { seed: cfg.seed, ..Default::default() };
+        // --telemetry switches the sweep into the drift-telemetry
+        // configuration: same scenario, control-loop sampler on, pinned
+        // to the contended K=32 point, telemetry_drift.json output.
+        let mut fc = if args.bool("telemetry") {
+            fleet::telemetry_config(cfg.seed)
+        } else {
+            fleet::FleetClosedConfig { seed: cfg.seed, ..Default::default() }
+        };
         fc.threads = runner::resolve_threads(args.usize("threads", 1)?);
         if args.str_opt("shapes").is_some() {
             return Err(Error::Config(
@@ -358,21 +383,32 @@ fn cmd_experiment(args: &Args) -> Result<()> {
 
     let run_fleet_exp = |cfg: &Config| -> Result<()> {
         if let Some(fc) = fleet_closed_cfg.as_ref() {
+            let telemetry = fc.opts.telemetry.is_some();
             eprintln!(
-                "fleet (closed-loop): {} requests/cell over {} client counts on \
+                "fleet (closed-loop{}): {} requests/cell over {} client counts on \
                  `{}` (seed {})",
+                if telemetry { ", telemetry" } else { "" },
                 fc.requests_per_point,
                 fc.clients.len(),
                 fc.topo.name,
                 fc.seed
             );
             let s = fleet::run_closed(fc)?;
-            print!("{}", fleet::render_closed_text(&s));
-            let p = report::write_report(
-                &cfg.out_dir,
-                "fleet_closed_loop",
-                &fleet::closed_to_json(&s),
-            )?;
+            let (name, text, json) = if telemetry {
+                (
+                    "telemetry_drift",
+                    fleet::render_telemetry_text(&s),
+                    fleet::telemetry_to_json(&s),
+                )
+            } else {
+                (
+                    "fleet_closed_loop",
+                    fleet::render_closed_text(&s),
+                    fleet::closed_to_json(&s),
+                )
+            };
+            print!("{text}");
+            let p = report::write_report(&cfg.out_dir, name, &json)?;
             eprintln!("wrote {}\n", p.display());
             return Ok(());
         }
@@ -785,6 +821,25 @@ fn cmd_bench(args: &Args) -> Result<()> {
          {speedup_hedged:.2}x hedged"
     );
 
+    // Flight-recorder overhead: the identical hedged stream with a
+    // bounded ring (no sink) attached to the dispatcher — the per-event
+    // cost of the decision log. CI gates the ratio (bench_gate.py
+    // --min-recorder-ratio).
+    const RECORDER_BENCH_CAPACITY: usize = 4096;
+    let mk_rec = || {
+        let mut d = Dispatcher::new(&DispatcherConfig::default());
+        d.attach_recorder(cnmt::obs::FlightRecorder::new(RECORDER_BENCH_CAPACITY));
+        d
+    };
+    let hedged_rec = event_loop_json("hedged/dense+rec", mk_rec, requests, 0.010);
+    let hedged_eps = hedged.get("events_per_sec").unwrap().as_f64().unwrap();
+    let recorder_ratio =
+        hedged_rec.get("events_per_sec").unwrap().as_f64().unwrap() / hedged_eps;
+    eprintln!(
+        "  flight recorder on the hedged path: {recorder_ratio:.2}x events/sec \
+         (ring capacity {RECORDER_BENCH_CAPACITY}, no sink)"
+    );
+
     // Fleet path: the same per-request cycle through the FleetSelector
     // + N-lane surface, on the pair shape (lane-generalisation overhead
     // vs the classic pair path — gated) and a 6-lane scale-up
@@ -920,6 +975,12 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("lane2", fleet_lane2)
         .set("lane6", fleet_lane6)
         .set("ratio_vs_pair_solo", Json::Num(fleet_ratio));
+    let mut recorder_section = Json::object();
+    recorder_section
+        .set("capacity", Json::Num(RECORDER_BENCH_CAPACITY as f64))
+        .set("disabled_events_per_sec", Json::Num(hedged_eps))
+        .set("enabled", hedged_rec)
+        .set("ratio", Json::Num(recorder_ratio));
     let mut root = Json::object();
     root.set("schema", Json::Str("bench_sched/v1".into()))
         .set("producer", Json::Str("cnmt bench sched".into()))
@@ -929,7 +990,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("hot_path", hot.to_json())
         .set("sweep", sweep)
         .set("baseline", baseline)
-        .set("speedup", speedup);
+        .set("speedup", speedup)
+        .set("recorder", recorder_section);
     if write_json {
         let path = report::write_report(
             out.parent().unwrap_or_else(|| std::path::Path::new(".")),
@@ -939,6 +1001,104 @@ fn cmd_bench(args: &Args) -> Result<()> {
         eprintln!("wrote {}", path.display());
     }
     Ok(())
+}
+
+/// `cnmt trace dump|summary|verify` — decision-log tooling over the
+/// `obs` flight recorder. `dump` streams a complete JSONL trace from a
+/// canned hedged-adaptive contended pair replay (every admission,
+/// placement scoring, batch, dispatch, completion, hedge cancellation,
+/// refit install, margin adjustment and drift tick); `summary` counts a
+/// dumped trace by event tag; `verify` replays it through the offline
+/// checker, re-proving conservation, hedge-fate partitioning, the
+/// margin control law and waste-budget compliance from the log alone.
+fn cmd_trace(args: &Args) -> Result<()> {
+    use cnmt::obs::{summarize_trace, verify_trace, FlightRecorder};
+
+    let action = args
+        .positional
+        .get(1)
+        .cloned()
+        .unwrap_or_else(|| "help".to_string());
+    match action.as_str() {
+        "dump" => {
+            let out = PathBuf::from(args.str("out", "trace.jsonl"));
+            let requests = args.usize("requests", 2_000)?;
+            let load = args.f64("load", 120.0)?;
+            let seed = args.u64("seed", 20220315)?;
+            args.reject_unknown()?;
+            if requests == 0 {
+                return Err(Error::Config("trace dump needs --requests > 0".into()));
+            }
+            if !(load.is_finite() && load > 0.0) {
+                return Err(Error::Config(format!(
+                    "trace dump load {load} must be finite and > 0"
+                )));
+            }
+            use cnmt::experiments::load::synth_workload;
+            let (truths, ch) = synth_workload(seed, requests, load);
+            let opts = cnmt::sim::ContentionOpts {
+                adaptive: Some(cnmt::sim::AdaptiveOpts::default()),
+                ..Default::default()
+            };
+            if let Some(parent) = out.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            let sink = std::io::BufWriter::new(std::fs::File::create(&out)?);
+            // The ring is only a live window; the sink carries the full
+            // stream, which is what the verifier needs.
+            let rec = FlightRecorder::new(4096).with_sink(Box::new(sink));
+            let (res, mut rec) = cnmt::sim::run_contended_traced(
+                &truths,
+                &ch,
+                cnmt::coordinator::PolicyKind::Cnmt,
+                &opts,
+                rec,
+            )?;
+            rec.flush();
+            if !rec.sink_ok() {
+                return Err(Error::Config(format!(
+                    "trace dump: write to {} failed",
+                    out.display()
+                )));
+            }
+            eprintln!(
+                "dumped {} events to {} ({} offered: {} completed, {} shed, \
+                 {} hedged)",
+                rec.total(),
+                out.display(),
+                res.offered,
+                res.completed,
+                res.rejected,
+                res.hedged
+            );
+            Ok(())
+        }
+        "summary" | "verify" => {
+            let path = args.positional.get(2).cloned().ok_or_else(|| {
+                Error::Config(format!("`cnmt trace {action}` needs a trace file"))
+            })?;
+            args.reject_unknown()?;
+            let text = std::fs::read_to_string(&path)?;
+            if action == "summary" {
+                println!("{}", summarize_trace(&text)?.to_string_pretty());
+            } else {
+                let r = verify_trace(&text)?;
+                println!("{}", r.to_json().to_string_pretty());
+                eprintln!(
+                    "trace verify OK: {} events — conservation ({} results for \
+                     {} admitted), hedge-fate partition ({} hedged) and \
+                     waste-budget compliance re-proven offline",
+                    r.events, r.results, r.admitted, r.hedged
+                );
+            }
+            Ok(())
+        }
+        other => Err(Error::Config(format!(
+            "unknown trace action `{other}` (try dump, summary or verify)"
+        ))),
+    }
 }
 
 /// Stubs for the PJRT-backed commands when built without the `pjrt`

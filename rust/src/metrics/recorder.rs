@@ -18,14 +18,21 @@ impl LatencyRecorder {
         Self::default()
     }
 
-    /// Record one latency under `label`.
+    /// Record one latency under `label`. Alloc-free for labels already
+    /// seen: the map is probed by `&str` first, so the owned key is only
+    /// built on a label's first appearance (the BTreeMap `entry` API
+    /// would demand the `String` up front on every call).
     pub fn record(&mut self, label: &str, seconds: f64) {
-        let entry = self
-            .series
-            .entry(label.to_string())
-            .or_insert_with(|| (OnlineStats::new(), Histogram::latency()));
-        entry.0.push(seconds);
-        entry.1.record(seconds);
+        if let Some(entry) = self.series.get_mut(label) {
+            entry.0.push(seconds);
+            entry.1.record(seconds);
+            return;
+        }
+        let mut stats = OnlineStats::new();
+        let mut hist = Histogram::latency();
+        stats.push(seconds);
+        hist.record(seconds);
+        self.series.insert(label.to_string(), (stats, hist));
     }
 
     /// Samples recorded under `label`.

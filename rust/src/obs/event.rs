@@ -1,0 +1,426 @@
+//! The decision-log event taxonomy.
+//!
+//! One [`Event`] is recorded for every decision the scheduling stack
+//! takes about a request — placement scoring, admission/shed, batch
+//! formation, dispatch, completion classification, hedge cancellation —
+//! plus the control-loop actions that change future decisions (refit
+//! installs, hedge-margin adjustments, drift charging). Events are
+//! plain `Copy` data (no strings, no heap) so recording them preserves
+//! the dispatcher's zero-allocation steady state; the sim-time stamp
+//! and a monotonically increasing sequence number are added by the
+//! recorder ([`super::FlightRecorder`]) as a [`Stamped`] envelope.
+//!
+//! The JSONL wire form (one event per line, `{"t":…,"seq":…,"ev":…}`)
+//! is written by [`Stamped::write_jsonl`] and parsed back by
+//! [`Stamped::from_json`]; the offline checker ([`super::verify`])
+//! re-derives the harness's conservation and hedge-fate invariants from
+//! these lines alone.
+
+use std::fmt::Write as _;
+
+use crate::scheduler::CompletionKind;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// One decision-log event (see the module docs for the taxonomy).
+///
+/// Lanes are dispatcher lane indices (pair runs: 0 = edge, 1 = cloud;
+/// fleet runs: the topology's device order — the trace meta line names
+/// each lane's tier).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Event {
+    /// A request copy entered a lane's admission queue. Hedged requests
+    /// admit two copies (two `Admit` events with `hedged: true`).
+    Admit {
+        /// Request id.
+        id: u64,
+        /// Admitting lane.
+        lane: u32,
+        /// Part of a two-lane hedge race?
+        hedged: bool,
+    },
+    /// The request was rejected by admission control (no queue room).
+    Shed {
+        /// Request id.
+        id: u64,
+    },
+    /// The router scored the placements (eq. 1): the best edge and best
+    /// cloud candidate with their scores, the chosen lane, and the
+    /// edge−cloud margin the hedge test inspects.
+    Placement {
+        /// Request id.
+        id: u64,
+        /// Best edge lane.
+        edge_lane: u32,
+        /// Best edge score (seconds; eq. 1 with wait term).
+        edge_score_s: f64,
+        /// Best cloud lane.
+        cloud_lane: u32,
+        /// Best cloud score (seconds; T̂_tx + eq. 1 with wait term).
+        cloud_score_s: f64,
+        /// The lane the placement chose.
+        chosen: u32,
+        /// `edge_score − cloud_score` (the hedge test's margin).
+        margin_s: f64,
+    },
+    /// The batcher closed a batch at the head of a lane's queue.
+    BatchFormed {
+        /// Dispatching lane.
+        lane: u32,
+        /// Requests in the batch.
+        size: u32,
+        /// Batch start time (seconds).
+        start_s: f64,
+    },
+    /// The batch was handed to a worker; `done_s` is the completion
+    /// time the executor charged.
+    DispatchStart {
+        /// Dispatching lane.
+        lane: u32,
+        /// Requests in the batch.
+        size: u32,
+        /// Charged completion time (seconds).
+        done_s: f64,
+    },
+    /// A request copy finished executing and was classified.
+    Complete {
+        /// Request id.
+        id: u64,
+        /// Completing lane.
+        lane: u32,
+        /// Solo result, hedge winner, or hedge loser (wasted work).
+        kind: CompletionKind,
+    },
+    /// A hedge race's queued twin was cancelled before running.
+    HedgeCancel {
+        /// Request id.
+        id: u64,
+        /// Lane whose queued copy died.
+        lane: u32,
+    },
+    /// A warmed RLS model was installed over a lane's prior (first
+    /// installation only — coefficients keep updating afterwards).
+    RefitInstall {
+        /// Lane whose model warmed up.
+        lane: u32,
+        /// `false`: the T_exe plane; `true`: the T_tx line.
+        ttx: bool,
+    },
+    /// The waste-budget controller adjusted the hedge margin. Carries
+    /// the controller's decayed work window so the control law is
+    /// replayable offline.
+    MarginAdjust {
+        /// New margin (seconds).
+        margin_s: f64,
+        /// Decayed useful-work window (seconds).
+        useful_s: f64,
+        /// Decayed wasted-work window (seconds).
+        wasted_s: f64,
+    },
+    /// A completion on a drifting lane was charged at this slowdown
+    /// factor.
+    DriftTick {
+        /// Drifting lane.
+        lane: u32,
+        /// Current slowdown factor (1.0 before onset).
+        factor: f64,
+    },
+}
+
+/// An [`Event`] stamped with its simulation time and sequence number.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stamped {
+    /// Simulation time the event was recorded at (seconds).
+    pub t_s: f64,
+    /// Monotonically increasing per-recorder sequence number.
+    pub seq: u64,
+    /// The event itself.
+    pub ev: Event,
+}
+
+/// `write!` an f64 as JSON: integral values without the trailing `.0`
+/// (like `util::json::write_num`), non-finite values as `null`.
+fn write_f64(out: &mut String, x: f64) {
+    if !x.is_finite() {
+        out.push_str("null");
+    } else if x.fract() == 0.0 && x.abs() < 9.0e15 {
+        let _ = write!(out, "{}", x as i64);
+    } else {
+        let _ = write!(out, "{x}");
+    }
+}
+
+/// Parse a JSON number field that may be `null` (→ NaN).
+fn read_f64(v: &Json, key: &str) -> Result<f64> {
+    match v.get(key)? {
+        Json::Null => Ok(f64::NAN),
+        other => other.as_f64(),
+    }
+}
+
+fn read_u64(v: &Json, key: &str) -> Result<u64> {
+    Ok(v.get(key)?.as_i64()? as u64)
+}
+
+fn read_u32(v: &Json, key: &str) -> Result<u32> {
+    Ok(v.get(key)?.as_i64()? as u32)
+}
+
+impl CompletionKind {
+    fn tag(self) -> &'static str {
+        match self {
+            CompletionKind::Solo => "solo",
+            CompletionKind::HedgeWin => "hedge_win",
+            CompletionKind::HedgeLoss => "hedge_loss",
+        }
+    }
+
+    fn from_tag(tag: &str) -> Result<CompletionKind> {
+        match tag {
+            "solo" => Ok(CompletionKind::Solo),
+            "hedge_win" => Ok(CompletionKind::HedgeWin),
+            "hedge_loss" => Ok(CompletionKind::HedgeLoss),
+            other => Err(Error::Config(format!("unknown completion kind `{other}`"))),
+        }
+    }
+}
+
+impl Event {
+    /// The `"ev"` tag this event serialises under.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Event::Admit { .. } => "admit",
+            Event::Shed { .. } => "shed",
+            Event::Placement { .. } => "placement",
+            Event::BatchFormed { .. } => "batch_formed",
+            Event::DispatchStart { .. } => "dispatch_start",
+            Event::Complete { .. } => "complete",
+            Event::HedgeCancel { .. } => "hedge_cancel",
+            Event::RefitInstall { .. } => "refit_install",
+            Event::MarginAdjust { .. } => "margin_adjust",
+            Event::DriftTick { .. } => "drift_tick",
+        }
+    }
+}
+
+impl Stamped {
+    /// Append this event as one JSONL line (including the trailing
+    /// newline) to `out`. Allocation-free once `out`'s capacity covers
+    /// the longest line.
+    pub fn write_jsonl(&self, out: &mut String) {
+        out.push_str("{\"t\":");
+        write_f64(out, self.t_s);
+        let _ = write!(out, ",\"seq\":{},\"ev\":\"{}\"", self.seq, self.ev.tag());
+        match self.ev {
+            Event::Admit { id, lane, hedged } => {
+                let _ = write!(out, ",\"id\":{id},\"lane\":{lane},\"hedged\":{hedged}");
+            }
+            Event::Shed { id } => {
+                let _ = write!(out, ",\"id\":{id}");
+            }
+            Event::Placement {
+                id,
+                edge_lane,
+                edge_score_s,
+                cloud_lane,
+                cloud_score_s,
+                chosen,
+                margin_s,
+            } => {
+                let _ = write!(out, ",\"id\":{id},\"edge_lane\":{edge_lane},\"edge_score_s\":");
+                write_f64(out, edge_score_s);
+                let _ = write!(out, ",\"cloud_lane\":{cloud_lane},\"cloud_score_s\":");
+                write_f64(out, cloud_score_s);
+                let _ = write!(out, ",\"chosen\":{chosen},\"margin_s\":");
+                write_f64(out, margin_s);
+            }
+            Event::BatchFormed { lane, size, start_s } => {
+                let _ = write!(out, ",\"lane\":{lane},\"size\":{size},\"start_s\":");
+                write_f64(out, start_s);
+            }
+            Event::DispatchStart { lane, size, done_s } => {
+                let _ = write!(out, ",\"lane\":{lane},\"size\":{size},\"done_s\":");
+                write_f64(out, done_s);
+            }
+            Event::Complete { id, lane, kind } => {
+                let _ = write!(out, ",\"id\":{id},\"lane\":{lane},\"kind\":\"{}\"", kind.tag());
+            }
+            Event::HedgeCancel { id, lane } => {
+                let _ = write!(out, ",\"id\":{id},\"lane\":{lane}");
+            }
+            Event::RefitInstall { lane, ttx } => {
+                let _ = write!(out, ",\"lane\":{lane},\"ttx\":{ttx}");
+            }
+            Event::MarginAdjust { margin_s, useful_s, wasted_s } => {
+                out.push_str(",\"margin_s\":");
+                write_f64(out, margin_s);
+                out.push_str(",\"useful_s\":");
+                write_f64(out, useful_s);
+                out.push_str(",\"wasted_s\":");
+                write_f64(out, wasted_s);
+            }
+            Event::DriftTick { lane, factor } => {
+                let _ = write!(out, ",\"lane\":{lane},\"factor\":");
+                write_f64(out, factor);
+            }
+        }
+        out.push_str("}\n");
+    }
+
+    /// Parse one JSONL line's parsed JSON back into a stamped event.
+    pub fn from_json(v: &Json) -> Result<Stamped> {
+        let t_s = read_f64(v, "t")?;
+        let seq = read_u64(v, "seq")?;
+        let ev = match v.get("ev")?.as_str()? {
+            "admit" => Event::Admit {
+                id: read_u64(v, "id")?,
+                lane: read_u32(v, "lane")?,
+                hedged: v.get("hedged")?.as_bool()?,
+            },
+            "shed" => Event::Shed { id: read_u64(v, "id")? },
+            "placement" => Event::Placement {
+                id: read_u64(v, "id")?,
+                edge_lane: read_u32(v, "edge_lane")?,
+                edge_score_s: read_f64(v, "edge_score_s")?,
+                cloud_lane: read_u32(v, "cloud_lane")?,
+                cloud_score_s: read_f64(v, "cloud_score_s")?,
+                chosen: read_u32(v, "chosen")?,
+                margin_s: read_f64(v, "margin_s")?,
+            },
+            "batch_formed" => Event::BatchFormed {
+                lane: read_u32(v, "lane")?,
+                size: read_u32(v, "size")?,
+                start_s: read_f64(v, "start_s")?,
+            },
+            "dispatch_start" => Event::DispatchStart {
+                lane: read_u32(v, "lane")?,
+                size: read_u32(v, "size")?,
+                done_s: read_f64(v, "done_s")?,
+            },
+            "complete" => Event::Complete {
+                id: read_u64(v, "id")?,
+                lane: read_u32(v, "lane")?,
+                kind: CompletionKind::from_tag(v.get("kind")?.as_str()?)?,
+            },
+            "hedge_cancel" => Event::HedgeCancel {
+                id: read_u64(v, "id")?,
+                lane: read_u32(v, "lane")?,
+            },
+            "refit_install" => Event::RefitInstall {
+                lane: read_u32(v, "lane")?,
+                ttx: v.get("ttx")?.as_bool()?,
+            },
+            "margin_adjust" => Event::MarginAdjust {
+                margin_s: read_f64(v, "margin_s")?,
+                useful_s: read_f64(v, "useful_s")?,
+                wasted_s: read_f64(v, "wasted_s")?,
+            },
+            "drift_tick" => Event::DriftTick {
+                lane: read_u32(v, "lane")?,
+                factor: read_f64(v, "factor")?,
+            },
+            other => return Err(Error::Config(format!("unknown event tag `{other}`"))),
+        };
+        Ok(Stamped { t_s, seq, ev })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(ev: Event) {
+        let st = Stamped { t_s: 1.25, seq: 42, ev };
+        let mut line = String::new();
+        st.write_jsonl(&mut line);
+        assert!(line.ends_with('\n'));
+        let parsed = Stamped::from_json(&Json::parse(line.trim_end()).unwrap()).unwrap();
+        assert_eq!(parsed, st);
+    }
+
+    #[test]
+    fn jsonl_roundtrips_every_variant() {
+        roundtrip(Event::Admit { id: 7, lane: 1, hedged: true });
+        roundtrip(Event::Shed { id: 8 });
+        roundtrip(Event::Placement {
+            id: 9,
+            edge_lane: 0,
+            edge_score_s: 0.0123,
+            cloud_lane: 5,
+            cloud_score_s: 0.0456,
+            chosen: 0,
+            margin_s: -0.0333,
+        });
+        roundtrip(Event::BatchFormed { lane: 0, size: 3, start_s: 2.5 });
+        roundtrip(Event::DispatchStart { lane: 0, size: 3, done_s: 2.75 });
+        roundtrip(Event::Complete { id: 9, lane: 0, kind: CompletionKind::HedgeWin });
+        roundtrip(Event::HedgeCancel { id: 9, lane: 5 });
+        roundtrip(Event::RefitInstall { lane: 4, ttx: true });
+        roundtrip(Event::MarginAdjust {
+            margin_s: 0.0101,
+            useful_s: 12.5,
+            wasted_s: 1.25,
+        });
+        roundtrip(Event::DriftTick { lane: 0, factor: 2.5 });
+    }
+
+    #[test]
+    fn float_roundtrip_is_bit_exact() {
+        // Display prints the shortest roundtripping decimal; parsing it
+        // back must reproduce the exact bits (the verify margin-law
+        // replay depends on this).
+        let gnarly = 0.1 + 0.2 + 1e-17;
+        let st = Stamped {
+            t_s: gnarly,
+            seq: 0,
+            ev: Event::MarginAdjust {
+                margin_s: gnarly * 0.05,
+                useful_s: gnarly * 3.0,
+                wasted_s: gnarly / 7.0,
+            },
+        };
+        let mut line = String::new();
+        st.write_jsonl(&mut line);
+        let parsed = Stamped::from_json(&Json::parse(line.trim_end()).unwrap()).unwrap();
+        match (parsed.ev, st.ev) {
+            (
+                Event::MarginAdjust { margin_s: a, useful_s: b, wasted_s: c },
+                Event::MarginAdjust { margin_s: x, useful_s: y, wasted_s: z },
+            ) => {
+                assert_eq!(a.to_bits(), x.to_bits());
+                assert_eq!(b.to_bits(), y.to_bits());
+                assert_eq!(c.to_bits(), z.to_bits());
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(parsed.t_s.to_bits(), st.t_s.to_bits());
+    }
+
+    #[test]
+    fn non_finite_scores_serialise_as_null_and_parse_as_nan() {
+        let st = Stamped {
+            t_s: 0.0,
+            seq: 1,
+            ev: Event::Placement {
+                id: 1,
+                edge_lane: 0,
+                edge_score_s: f64::NAN,
+                cloud_lane: 1,
+                cloud_score_s: f64::INFINITY,
+                chosen: 1,
+                margin_s: f64::NAN,
+            },
+        };
+        let mut line = String::new();
+        st.write_jsonl(&mut line);
+        assert!(line.contains("\"edge_score_s\":null"));
+        let parsed = Stamped::from_json(&Json::parse(line.trim_end()).unwrap()).unwrap();
+        match parsed.ev {
+            Event::Placement { edge_score_s, cloud_score_s, .. } => {
+                assert!(edge_score_s.is_nan());
+                assert!(cloud_score_s.is_nan());
+            }
+            _ => unreachable!(),
+        }
+    }
+}

@@ -1,0 +1,35 @@
+//! Observability: flight recorder, offline trace verification, latency
+//! decomposition, and control-loop telemetry.
+//!
+//! The simulation stack proves aggregate outcomes (p99, goodput, waste),
+//! but the paper's claim is about *decisions* — whether eq. 1/2
+//! estimates place each request well. This module records the decisions
+//! themselves and makes them auditable:
+//!
+//! * [`event`] / [`recorder`] — the structured decision log. Every
+//!   placement scoring, admission, shed, batch, dispatch, completion,
+//!   hedge cancellation, refit install, margin adjustment, and drift
+//!   charge becomes one `Copy` [`Event`] in a preallocated bounded ring
+//!   ([`FlightRecorder`]), preserving the dispatcher's zero-allocation
+//!   steady state. An optional streaming sink upgrades the ring window
+//!   to a complete JSONL trace (`cnmt trace dump`).
+//! * [`verify`] — the offline checker behind `cnmt trace verify`:
+//!   replays a dumped log and re-proves conservation, hedge-fate
+//!   partitioning, the margin control law (bit-exact), and waste-budget
+//!   compliance with no access to harness internals — the stepping
+//!   stone to a live ≡ sim replay differential.
+//! * [`telemetry`] — report-facing, off-by-default instrumentation:
+//!   per-request latency decomposition ([`Phases`]) and fixed-cadence
+//!   control-loop gauge series ([`Telemetry`]), both mirrored
+//!   float-exactly by `python/tools/telemetry_mirror.py` and checked in
+//!   as `reports/telemetry_drift.json`.
+
+pub mod event;
+pub mod recorder;
+pub mod telemetry;
+pub mod verify;
+
+pub use event::{Event, Stamped};
+pub use recorder::{FlightRecorder, TraceMeta};
+pub use telemetry::{DeviceSeries, Phases, Telemetry, TelemetryCfg};
+pub use verify::{parse_trace, summarize_trace, verify_events, verify_trace, VerifyReport};

@@ -1,0 +1,335 @@
+//! Bounded in-memory flight recorder with optional JSONL streaming.
+//!
+//! The recorder owns a preallocated ring of [`Stamped`] events: recording
+//! into a non-full ring is a store plus a sequence increment (no heap
+//! traffic — `Event` is `Copy` and the ring never grows past the bound
+//! chosen at construction). When the ring is full the oldest event is
+//! evicted and the exact `dropped` counter advances, so post-mortem
+//! readers always know how much history the window lost. Attaching a
+//! sink upgrades the recorder to a full streaming trace: every event is
+//! also rendered as one JSONL line (into a reusable line buffer) and
+//! handed to the writer, which is what `cnmt trace dump` uses to produce
+//! logs the offline verifier can replay in their entirety.
+
+use std::io::Write;
+
+use crate::devices::DeviceKind;
+use crate::util::ring::RingBuffer;
+
+use super::event::{Event, Stamped};
+
+/// Run-level context written as the first line of a trace dump; the
+/// offline verifier needs it to name lanes and replay the margin law.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TraceMeta {
+    /// Device tier per lane, in lane order.
+    pub tiers: Vec<DeviceKind>,
+    /// Waste budget fraction of the hedge controller, if one ran.
+    pub waste_budget: Option<f64>,
+    /// The controller's initial (clamped) hedge margin, if one ran.
+    pub init_margin_s: Option<f64>,
+}
+
+impl TraceMeta {
+    /// Render the meta header as one JSONL line.
+    pub fn write_jsonl(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        out.push_str("{\"meta\":{\"tiers\":[");
+        for (i, tier) in self.tiers.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            let _ = write!(out, "\"{}\"", tier.id());
+        }
+        out.push_str("],\"waste_budget\":");
+        match self.waste_budget {
+            Some(b) => {
+                let _ = write!(out, "{b}");
+            }
+            None => out.push_str("null"),
+        }
+        out.push_str(",\"init_margin_s\":");
+        match self.init_margin_s {
+            Some(m) => {
+                let _ = write!(out, "{m}");
+            }
+            None => out.push_str("null"),
+        }
+        out.push_str("}}\n");
+    }
+}
+
+/// Bounded decision-log recorder (see the module docs).
+pub struct FlightRecorder {
+    ring: RingBuffer<Stamped>,
+    /// External bound — the ring's physical capacity is the next power
+    /// of two, so the recorder enforces its own limit.
+    cap: usize,
+    seq: u64,
+    dropped: u64,
+    /// Largest stamp recorded so far: stamps are clamped to be
+    /// non-decreasing, so a producer that learns of an event late (the
+    /// harness accounts a drained completion batch after the dispatcher
+    /// already logged later completions) records it at the time it
+    /// learned, keeping the stream replayable in order.
+    last_t_s: f64,
+    meta: TraceMeta,
+    sink: Option<Box<dyn Write>>,
+    /// Reusable JSONL line buffer so streaming stays alloc-free once
+    /// warm.
+    line: String,
+    sink_err: bool,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FlightRecorder")
+            .field("cap", &self.cap)
+            .field("len", &self.ring.len())
+            .field("seq", &self.seq)
+            .field("dropped", &self.dropped)
+            .field("sink", &self.sink.is_some())
+            .finish()
+    }
+}
+
+impl FlightRecorder {
+    /// Recorder keeping the most recent `capacity` events (minimum 1).
+    pub fn new(capacity: usize) -> Self {
+        let cap = capacity.max(1);
+        FlightRecorder {
+            ring: RingBuffer::with_capacity(cap),
+            cap,
+            seq: 0,
+            dropped: 0,
+            last_t_s: f64::NEG_INFINITY,
+            meta: TraceMeta::default(),
+            sink: None,
+            line: String::with_capacity(256),
+            sink_err: false,
+        }
+    }
+
+    /// Attach a streaming sink: every subsequent event is also written
+    /// as a JSONL line. The meta header (if already set) is written
+    /// immediately.
+    pub fn with_sink(mut self, sink: Box<dyn Write>) -> Self {
+        self.sink = Some(sink);
+        if !self.meta.tiers.is_empty() {
+            let meta = self.meta.clone();
+            self.emit_meta_line(&meta);
+        }
+        self
+    }
+
+    /// Set the run-level context (tiers, controller parameters). Written
+    /// to the sink, when one is attached, before any events.
+    pub fn set_meta(&mut self, meta: TraceMeta) {
+        self.emit_meta_line(&meta);
+        self.meta = meta;
+    }
+
+    fn emit_meta_line(&mut self, meta: &TraceMeta) {
+        if self.sink.is_some() {
+            self.line.clear();
+            meta.write_jsonl(&mut self.line);
+            self.flush_line();
+        }
+    }
+
+    fn flush_line(&mut self) {
+        if let Some(sink) = self.sink.as_mut() {
+            if sink.write_all(self.line.as_bytes()).is_err() {
+                self.sink_err = true;
+            }
+        }
+    }
+
+    /// Record one event at sim time `t_s`. O(1), allocation-free once
+    /// the ring and line buffer are warm. Stamps are clamped to be
+    /// non-decreasing (see `last_t_s`): a producer reporting an event it
+    /// learned of late records it at the later of the event time and the
+    /// newest stamp already in the log.
+    #[inline]
+    pub fn record(&mut self, t_s: f64, ev: Event) {
+        let t_s = t_s.max(self.last_t_s);
+        self.last_t_s = t_s;
+        let st = Stamped { t_s, seq: self.seq, ev };
+        self.seq += 1;
+        if self.sink.is_some() {
+            self.line.clear();
+            st.write_jsonl(&mut self.line);
+            self.flush_line();
+        }
+        if self.ring.len() == self.cap {
+            self.ring.pop_front();
+            self.dropped += 1;
+        }
+        self.ring.push_back(st);
+    }
+
+    /// Events currently held in the ring window.
+    pub fn len(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Is the window empty?
+    pub fn is_empty(&self) -> bool {
+        self.ring.is_empty()
+    }
+
+    /// The window bound this recorder was built with.
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Events evicted from the ring because the window was full.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Total events ever recorded (`len() + dropped()`).
+    pub fn total(&self) -> u64 {
+        self.seq
+    }
+
+    /// Run-level context.
+    pub fn meta(&self) -> &TraceMeta {
+        &self.meta
+    }
+
+    /// Did a sink write fail at any point?
+    pub fn sink_ok(&self) -> bool {
+        !self.sink_err
+    }
+
+    /// Iterate the retained window, oldest first.
+    pub fn events(&self) -> impl Iterator<Item = &Stamped> {
+        (0..self.ring.len()).filter_map(|i| self.ring.get(i))
+    }
+
+    /// Flush the streaming sink, if any.
+    pub fn flush(&mut self) {
+        if let Some(sink) = self.sink.as_mut() {
+            if sink.flush().is_err() {
+                self.sink_err = true;
+            }
+        }
+    }
+
+    /// Render the retained window (meta header first) as JSONL text.
+    /// Note this is only the ring window — use a sink for full traces.
+    pub fn window_jsonl(&self) -> String {
+        let mut out = String::new();
+        self.meta.write_jsonl(&mut out);
+        for st in self.events() {
+            st.write_jsonl(&mut out);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ev(id: u64) -> Event {
+        Event::Shed { id }
+    }
+
+    #[test]
+    fn ring_overflow_truncates_with_exact_dropped_counter() {
+        // Capacity 6 rounds to a physical ring of 8; the recorder must
+        // still cap at 6 and count every eviction.
+        let mut rec = FlightRecorder::new(6);
+        for i in 0..25u64 {
+            rec.record(i as f64 * 0.5, ev(i));
+            assert!(rec.len() <= 6, "window exceeded bound at event {i}");
+        }
+        assert_eq!(rec.len(), 6);
+        assert_eq!(rec.dropped(), 19);
+        assert_eq!(rec.total(), 25);
+        assert_eq!(rec.total(), rec.dropped() + rec.len() as u64);
+        // The window holds exactly the newest 6 events, oldest first,
+        // with contiguous sequence numbers.
+        let seqs: Vec<u64> = rec.events().map(|s| s.seq).collect();
+        assert_eq!(seqs, (19..25).collect::<Vec<u64>>());
+        let ids: Vec<u64> = rec
+            .events()
+            .map(|s| match s.ev {
+                Event::Shed { id } => id,
+                _ => unreachable!(),
+            })
+            .collect();
+        assert_eq!(ids, (19..25).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn capacity_one_keeps_only_the_latest() {
+        let mut rec = FlightRecorder::new(0); // clamps to 1
+        assert_eq!(rec.capacity(), 1);
+        for i in 0..5u64 {
+            rec.record(0.0, ev(i));
+        }
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.dropped(), 4);
+        assert_eq!(rec.events().next().unwrap().seq, 4);
+    }
+
+    #[test]
+    fn stamps_are_clamped_monotone() {
+        // A late report (t=1.0 after t=5.0) is recorded at 5.0 so the
+        // stream stays replayable in order; later times pass through.
+        let mut rec = FlightRecorder::new(8);
+        rec.record(5.0, ev(0));
+        rec.record(1.0, ev(1));
+        rec.record(7.0, ev(2));
+        let ts: Vec<f64> = rec.events().map(|s| s.t_s).collect();
+        assert_eq!(ts, vec![5.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn sink_streams_everything_ring_keeps_window() {
+        use std::cell::RefCell;
+        use std::rc::Rc;
+
+        // Shared Vec<u8> sink so the test can read back what streamed.
+        #[derive(Clone)]
+        struct Shared(Rc<RefCell<Vec<u8>>>);
+        impl std::io::Write for Shared {
+            fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+                self.0.borrow_mut().extend_from_slice(buf);
+                Ok(buf.len())
+            }
+            fn flush(&mut self) -> std::io::Result<()> {
+                Ok(())
+            }
+        }
+
+        let buf = Shared(Rc::new(RefCell::new(Vec::new())));
+        let mut rec = FlightRecorder::new(4).with_sink(Box::new(buf.clone()));
+        rec.set_meta(TraceMeta {
+            tiers: vec![DeviceKind::Edge, DeviceKind::Cloud],
+            waste_budget: Some(0.10),
+            init_margin_s: Some(0.010),
+        });
+        for i in 0..10u64 {
+            rec.record(i as f64, ev(i));
+        }
+        rec.flush();
+        assert!(rec.sink_ok());
+        assert_eq!(rec.len(), 4, "ring truncated to the window");
+        assert_eq!(rec.dropped(), 6);
+        let text = String::from_utf8(buf.0.borrow().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        // Meta header + all 10 events streamed despite the 4-slot ring.
+        assert_eq!(lines.len(), 11);
+        assert!(lines[0].contains("\"meta\""));
+        assert!(lines[0].contains("\"tiers\":[\"edge\",\"cloud\"]"));
+        for (i, line) in lines[1..].iter().enumerate() {
+            let parsed =
+                Stamped::from_json(&crate::util::Json::parse(line).unwrap()).unwrap();
+            assert_eq!(parsed.seq, i as u64);
+        }
+    }
+}

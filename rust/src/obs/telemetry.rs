@@ -1,0 +1,322 @@
+//! Control-loop telemetry: phase decomposition and gauge time-series.
+//!
+//! Two report-facing surfaces, both **off by default** (every legacy
+//! checked-in report stays byte-identical):
+//!
+//! * [`Phases`] — per-request latency decomposition. Each result's
+//!   end-to-end latency is attributed to four exhaustive phases that sum
+//!   to it exactly:
+//!   `queue_wait` (arrival → batch start: the eq. 1 wait term the
+//!   selector *estimates*), `batch_wait` (the extra service time the
+//!   request's batch needs beyond the request's own execution),
+//!   `exec` (the request's own true execution time), and `tx` (the
+//!   network transfer, cloud placements only). Aggregated into the same
+//!   log-bucketed histograms the latency reports use, making the
+//!   expected-wait estimate auditable against realized wait.
+//!
+//! * [`Telemetry`] — a fixed-cadence, fixed-capacity sampler of
+//!   per-device gauges (queue depth, backlog expected-wait, in-flight)
+//!   plus the adaptive-control state (installed RLS plane coefficients,
+//!   hedge margin, windowed wasted-work fraction). Capacity is
+//!   preallocated and never exceeded: when a run outlives the window,
+//!   sampling stops and the series is flagged `truncated` rather than
+//!   growing or rotating — time-series rows must stay aligned for the
+//!   report mirror.
+//!
+//! Both are mirrored float-exactly by `python/tools/telemetry_mirror.py`.
+
+use crate::metrics::Histogram;
+use crate::util::Json;
+
+/// Telemetry sampling parameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TelemetryCfg {
+    /// Sim-time cadence between gauge samples (seconds).
+    pub interval_s: f64,
+    /// Maximum samples retained (series are preallocated to this).
+    pub capacity: usize,
+}
+
+impl Default for TelemetryCfg {
+    fn default() -> Self {
+        TelemetryCfg { interval_s: 2.0, capacity: 64 }
+    }
+}
+
+/// Gauge series for one device (lane), all aligned with
+/// [`Telemetry::t_s`].
+#[derive(Debug, Clone)]
+pub struct DeviceSeries {
+    /// Device name (topology order).
+    pub name: String,
+    /// Queued requests (live entries; cancelled ghosts excluded).
+    pub queue_depth: Vec<f64>,
+    /// Backlog expected-wait at the sample instant (seconds) — the wait
+    /// term the eq. 1 selector would see.
+    pub expected_wait_s: Vec<f64>,
+    /// Batches still executing at the sample instant.
+    pub in_flight: Vec<f64>,
+    /// Installed T_exe plane coefficients `[a_n, a_m, b]`, present on
+    /// adaptive runs: the refit story in three time-series.
+    pub plane: Option<[Vec<f64>; 3]>,
+}
+
+impl DeviceSeries {
+    fn new(name: String, capacity: usize, adaptive: bool) -> Self {
+        DeviceSeries {
+            name,
+            queue_depth: Vec::with_capacity(capacity),
+            expected_wait_s: Vec::with_capacity(capacity),
+            in_flight: Vec::with_capacity(capacity),
+            plane: adaptive.then(|| {
+                [
+                    Vec::with_capacity(capacity),
+                    Vec::with_capacity(capacity),
+                    Vec::with_capacity(capacity),
+                ]
+            }),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("queue_depth", Json::from_f64_slice(&self.queue_depth))
+            .set("expected_wait_s", Json::from_f64_slice(&self.expected_wait_s))
+            .set("in_flight", Json::from_f64_slice(&self.in_flight));
+        if let Some(plane) = &self.plane {
+            o.set("plane_an", Json::from_f64_slice(&plane[0]))
+                .set("plane_am", Json::from_f64_slice(&plane[1]))
+                .set("plane_b", Json::from_f64_slice(&plane[2]));
+        }
+        o
+    }
+}
+
+/// Fixed-cadence control-loop gauge sampler (see the module docs).
+#[derive(Debug, Clone)]
+pub struct Telemetry {
+    /// Sampling cadence (seconds).
+    pub interval_s: f64,
+    capacity: usize,
+    next_s: f64,
+    /// Sample instants; every other series aligns with this.
+    pub t_s: Vec<f64>,
+    /// One gauge bundle per device, in topology order.
+    pub devices: Vec<DeviceSeries>,
+    /// Hedge controller margin per sample (controlled runs only).
+    pub hedge_margin_s: Option<Vec<f64>>,
+    /// Controller's decayed-window wasted-work fraction per sample
+    /// (controlled runs only).
+    pub wasted_frac: Option<Vec<f64>>,
+    truncated: bool,
+}
+
+impl Telemetry {
+    /// Sampler for `names` devices; `adaptive` adds plane-coefficient
+    /// series, `controlled` adds hedge margin + wasted-frac series. The
+    /// first sample lands at `interval_s` (the t=0 state is all zeros).
+    pub fn new(cfg: TelemetryCfg, names: &[String], adaptive: bool, controlled: bool) -> Self {
+        let cap = cfg.capacity.max(1);
+        Telemetry {
+            interval_s: cfg.interval_s,
+            capacity: cap,
+            next_s: cfg.interval_s,
+            t_s: Vec::with_capacity(cap),
+            devices: names
+                .iter()
+                .map(|n| DeviceSeries::new(n.clone(), cap, adaptive))
+                .collect(),
+            hedge_margin_s: controlled.then(|| Vec::with_capacity(cap)),
+            wasted_frac: controlled.then(|| Vec::with_capacity(cap)),
+            truncated: false,
+        }
+    }
+
+    /// If a sample is due at or before `now_s` (and the window has
+    /// room), claim it: the sample instant is pushed onto [`Self::t_s`],
+    /// the cadence advances, and the caller must push one value onto
+    /// every gauge series. Returns the claimed instant. When the window
+    /// is full, a due sample flags `truncated` instead.
+    pub fn next_due(&mut self, now_s: f64) -> Option<f64> {
+        if self.next_s > now_s {
+            return None;
+        }
+        if self.t_s.len() >= self.capacity {
+            self.truncated = true;
+            return None;
+        }
+        let t = self.next_s;
+        self.next_s += self.interval_s;
+        self.t_s.push(t);
+        Some(t)
+    }
+
+    /// Samples taken.
+    pub fn samples(&self) -> usize {
+        self.t_s.len()
+    }
+
+    /// Did the run outlive the sampling window?
+    pub fn truncated(&self) -> bool {
+        self.truncated
+    }
+
+    /// Render the series block for a report.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("interval_s", Json::Num(self.interval_s))
+            .set("samples", Json::Num(self.t_s.len() as f64))
+            .set("truncated", Json::Bool(self.truncated))
+            .set("t_s", Json::from_f64_slice(&self.t_s))
+            .set(
+                "devices",
+                Json::Array(self.devices.iter().map(|d| d.to_json()).collect()),
+            );
+        if let Some(m) = &self.hedge_margin_s {
+            o.set("hedge_margin_s", Json::from_f64_slice(m));
+        }
+        if let Some(w) = &self.wasted_frac {
+            o.set("wasted_frac", Json::from_f64_slice(w));
+        }
+        o
+    }
+}
+
+/// Per-request latency decomposition (see the module docs). The four
+/// phases partition each result's latency exactly:
+/// `queue_wait + batch_wait + exec + tx == latency`.
+#[derive(Debug, Clone)]
+pub struct Phases {
+    /// Arrival → batch start (realized eq. 1 wait term).
+    pub queue_wait: Histogram,
+    /// Batch service time beyond the request's own execution.
+    pub batch_wait: Histogram,
+    /// The request's own true execution time.
+    pub exec: Histogram,
+    /// Network transfer (zero for edge placements).
+    pub tx: Histogram,
+}
+
+impl Default for Phases {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Phases {
+    /// Empty decomposition with the standard latency buckets.
+    pub fn new() -> Self {
+        Phases {
+            queue_wait: Histogram::latency(),
+            batch_wait: Histogram::latency(),
+            exec: Histogram::latency(),
+            tx: Histogram::latency(),
+        }
+    }
+
+    /// Record one result's decomposition.
+    pub fn record(&mut self, queue_wait_s: f64, batch_wait_s: f64, exec_s: f64, tx_s: f64) {
+        self.queue_wait.record(queue_wait_s);
+        self.batch_wait.record(batch_wait_s);
+        self.exec.record(exec_s);
+        self.tx.record(tx_s);
+    }
+
+    /// Results recorded.
+    pub fn count(&self) -> u64 {
+        self.queue_wait.count()
+    }
+
+    fn phase_json(h: &Histogram) -> Json {
+        let mut o = Json::object();
+        o.set("count", Json::Num(h.count() as f64))
+            .set("mean_s", Json::Num(h.mean()))
+            .set("p50_s", Json::Num(h.p50()))
+            .set("p95_s", Json::Num(h.p95()))
+            .set("p99_s", Json::Num(h.p99()))
+            .set("sum_s", Json::Num(h.sum()));
+        o
+    }
+
+    /// Render the decomposition block for a report.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("queue_wait", Self::phase_json(&self.queue_wait))
+            .set("batch_wait", Self::phase_json(&self.batch_wait))
+            .set("exec", Self::phase_json(&self.exec))
+            .set("tx", Self::phase_json(&self.tx));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampler_claims_fixed_cadence_until_capacity() {
+        let cfg = TelemetryCfg { interval_s: 2.0, capacity: 3 };
+        let names = vec!["edge0".to_string(), "cloud0".to_string()];
+        let mut tel = Telemetry::new(cfg, &names, true, true);
+        assert_eq!(tel.devices.len(), 2);
+        assert!(tel.devices[0].plane.is_some());
+        assert!(tel.hedge_margin_s.is_some());
+
+        // Nothing due before the first interval.
+        assert_eq!(tel.next_due(1.9), None);
+        // A big jump claims every elapsed cadence point, one at a time.
+        assert_eq!(tel.next_due(7.0), Some(2.0));
+        assert_eq!(tel.next_due(7.0), Some(4.0));
+        assert_eq!(tel.next_due(7.0), Some(6.0));
+        // Capacity 3 reached: the due sample at 8.0 flags truncation.
+        assert_eq!(tel.next_due(100.0), None);
+        assert!(tel.truncated());
+        assert_eq!(tel.t_s, vec![2.0, 4.0, 6.0]);
+        assert_eq!(tel.samples(), 3);
+    }
+
+    #[test]
+    fn sampler_not_truncated_when_run_ends_inside_window() {
+        let cfg = TelemetryCfg { interval_s: 1.0, capacity: 8 };
+        let names = vec!["d".to_string()];
+        let mut tel = Telemetry::new(cfg, &names, false, false);
+        assert!(tel.devices[0].plane.is_none());
+        assert!(tel.hedge_margin_s.is_none());
+        while let Some(_t) = tel.next_due(3.5) {
+            tel.devices[0].queue_depth.push(0.0);
+            tel.devices[0].expected_wait_s.push(0.0);
+            tel.devices[0].in_flight.push(0.0);
+        }
+        assert_eq!(tel.t_s, vec![1.0, 2.0, 3.0]);
+        assert!(!tel.truncated());
+        let j = tel.to_json();
+        assert_eq!(j.get("samples").unwrap().as_i64().unwrap(), 3);
+        assert!(!j.get("truncated").unwrap().as_bool().unwrap());
+        assert!(j.get_opt("hedge_margin_s").is_none());
+    }
+
+    #[test]
+    fn phases_partition_latency_exactly() {
+        let mut p = Phases::new();
+        // queue + batch + exec + tx must reassemble the latency.
+        let cases = [
+            (0.0, 0.001, 0.010, 0.0),
+            (0.532, 0.0, 0.020, 0.042),
+            (1.25, 0.004, 0.015, 0.042),
+        ];
+        let mut want = 0.0;
+        for (q, b, e, t) in cases {
+            p.record(q, b, e, t);
+            want += q + b + e + t;
+        }
+        assert_eq!(p.count(), 3);
+        let got = p.queue_wait.sum() + p.batch_wait.sum() + p.exec.sum() + p.tx.sum();
+        assert!((got - want).abs() < 1e-12);
+        let j = p.to_json();
+        assert_eq!(
+            j.get("exec").unwrap().get("count").unwrap().as_i64().unwrap(),
+            3
+        );
+    }
+}

@@ -111,6 +111,12 @@ impl CapacityTracker {
         self.backlog_est_s
     }
 
+    /// Workers still executing a batch at `now_s` (the telemetry
+    /// in-flight gauge).
+    pub fn busy_workers(&self, now_s: f64) -> usize {
+        self.free_at_s.iter().filter(|&&t| t > now_s).count()
+    }
+
     /// Batches dispatched so far.
     pub fn dispatches(&self) -> u64 {
         self.dispatches

@@ -75,6 +75,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::devices::DeviceKind;
+use crate::obs::{Event as ObsEvent, FlightRecorder};
 use crate::util::{Slab, SlabKey};
 
 use super::batch::{BatchPolicy, BatchStats};
@@ -416,7 +417,7 @@ fn is_ghost(hedges: &Slab<HedgeEntry>, rq: &QueuedRequest, lane: usize) -> bool 
 
 /// The N-lane worker-pool dispatcher (lane 0 = edge, lane 1 = cloud
 /// when built from a [`DispatcherConfig`] pair).
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct Dispatcher {
     /// One lane per fleet device, indexed by device id.
     lanes: Vec<Lane>,
@@ -432,6 +433,31 @@ pub struct Dispatcher {
     /// Scratch buffer batches form into (reused across dispatches).
     scratch: Vec<QueuedRequest>,
     hedge_stats: HedgeStats,
+    /// Optional decision-log flight recorder ([`Dispatcher::
+    /// attach_recorder`]). One sequence stream covers both the
+    /// dispatcher's own events and the ones the harness records through
+    /// [`Dispatcher::record`].
+    recorder: Option<FlightRecorder>,
+}
+
+impl Clone for Dispatcher {
+    /// Clones everything but the flight recorder (its streaming sink is
+    /// not cloneable, and a cloned dispatcher recording into the
+    /// original's log would interleave two runs): the clone starts
+    /// unrecorded.
+    fn clone(&self) -> Self {
+        Dispatcher {
+            lanes: self.lanes.clone(),
+            policy: self.policy,
+            stats: self.stats,
+            pending: self.pending.clone(),
+            seq: self.seq,
+            hedges: self.hedges.clone(),
+            scratch: Vec::with_capacity(self.scratch.capacity()),
+            hedge_stats: self.hedge_stats,
+            recorder: None,
+        }
+    }
 }
 
 impl Dispatcher {
@@ -492,6 +518,35 @@ impl Dispatcher {
             hedges: Slab::with_capacity(16),
             scratch: Vec::with_capacity(batch.max_batch.max(1)),
             hedge_stats: HedgeStats::default(),
+            recorder: None,
+        }
+    }
+
+    /// Attach a decision-log flight recorder: from here on, every
+    /// admission, shed, batch, dispatch, completion, and hedge
+    /// cancellation is recorded (O(1), allocation-free once the ring is
+    /// warm). Replaces any previous recorder.
+    pub fn attach_recorder(&mut self, rec: FlightRecorder) {
+        self.recorder = Some(rec);
+    }
+
+    /// Detach and return the flight recorder, if one is attached.
+    pub fn take_recorder(&mut self) -> Option<FlightRecorder> {
+        self.recorder.take()
+    }
+
+    /// The attached flight recorder, for callers (the harness) that
+    /// record placement/control events into the same sequence stream.
+    pub fn recorder_mut(&mut self) -> Option<&mut FlightRecorder> {
+        self.recorder.as_mut()
+    }
+
+    /// Record `ev` at sim time `t_s` if a recorder is attached; no-op
+    /// (one branch) otherwise.
+    #[inline]
+    pub fn record(&mut self, t_s: f64, ev: ObsEvent) {
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.record(t_s, ev);
         }
     }
 
@@ -532,7 +587,22 @@ impl Dispatcher {
     pub fn submit_lane(&mut self, lane: usize, mut rq: QueuedRequest) -> Admission {
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
-        self.lanes[lane].offer(rq)
+        let admission = self.lanes[lane].offer(rq);
+        self.record_admission(&rq, lane, admission.is_admitted());
+        admission
+    }
+
+    /// Log one solo admission outcome, when a recorder is attached.
+    #[inline]
+    fn record_admission(&mut self, rq: &QueuedRequest, lane: usize, admitted: bool) {
+        if let Some(rec) = self.recorder.as_mut() {
+            let ev = if admitted {
+                ObsEvent::Admit { id: rq.id, lane: lane as u32, hedged: false }
+            } else {
+                ObsEvent::Shed { id: rq.id }
+            };
+            rec.record(rq.arrival_s, ev);
+        }
     }
 
     /// Admit a request to lane `lane` on behalf of `tenant`, through
@@ -552,7 +622,7 @@ impl Dispatcher {
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
         let l = &mut self.lanes[lane];
-        match l.fair.as_mut() {
+        let admission = match l.fair.as_mut() {
             None => l.offer(rq),
             Some(fair) => {
                 let admission = fair.offer(tenant, rq);
@@ -565,7 +635,9 @@ impl Dispatcher {
                 }
                 admission
             }
-        }
+        };
+        self.record_admission(&rq, lane, admission.is_admitted());
+        admission
     }
 
     /// Queued requests still waiting in lane `lane`'s fair front-end
@@ -641,6 +713,15 @@ impl Dispatcher {
             let b_ok = self.lanes[lane_b].offer(b_rq).is_admitted();
             if a_ok && b_ok {
                 self.hedge_stats.hedged += 1;
+                if let Some(rec) = self.recorder.as_mut() {
+                    let admit = |lane: usize| ObsEvent::Admit {
+                        id: rq.id,
+                        lane: lane as u32,
+                        hedged: true,
+                    };
+                    rec.record(rq.arrival_s, admit(lane_a));
+                    rec.record(rq.arrival_s, admit(lane_b));
+                }
                 return LaneHedgeOutcome::Hedged;
             }
             // Defensive unwind: unreachable today, but if `offer` ever
@@ -650,11 +731,13 @@ impl Dispatcher {
             // generation check classifies its completion as Solo and it
             // can never be mistaken for a ghost.
             self.hedges.remove(key);
-            return match (a_ok, b_ok) {
+            let outcome = match (a_ok, b_ok) {
                 (true, false) => LaneHedgeOutcome::Single(lane_a),
                 (false, true) => LaneHedgeOutcome::Single(lane_b),
                 _ => LaneHedgeOutcome::Rejected,
             };
+            self.record_hedge_degraded(&rq, outcome);
+            return outcome;
         }
         // Degraded path: offer both copies anyway (the full lane counts
         // the rejection, exactly as a solo offer would).
@@ -664,7 +747,7 @@ impl Dispatcher {
         b_rq.est_service_s = est_b_s;
         let a_ok = self.lanes[lane_a].offer(a_rq).is_admitted();
         let b_ok = self.lanes[lane_b].offer(b_rq).is_admitted();
-        match (a_ok, b_ok) {
+        let outcome = match (a_ok, b_ok) {
             (true, false) => LaneHedgeOutcome::Single(lane_a),
             (false, true) => LaneHedgeOutcome::Single(lane_b),
             (false, false) => LaneHedgeOutcome::Rejected,
@@ -674,6 +757,19 @@ impl Dispatcher {
             // two unkeyed copies of one request would double-count.
             // Fail loudly rather than corrupt the accounting.
             (true, true) => unreachable!("offer admitted where has_room denied"),
+        };
+        self.record_hedge_degraded(&rq, outcome);
+        outcome
+    }
+
+    /// Log a hedged submission that degraded to a solo admission or a
+    /// shed (the race never formed, so the request's fate is solo).
+    #[inline]
+    fn record_hedge_degraded(&mut self, rq: &QueuedRequest, outcome: LaneHedgeOutcome) {
+        match outcome {
+            LaneHedgeOutcome::Single(lane) => self.record_admission(rq, lane, true),
+            LaneHedgeOutcome::Rejected => self.record_admission(rq, 0, false),
+            LaneHedgeOutcome::Hedged => {}
         }
     }
 
@@ -687,6 +783,18 @@ impl Dispatcher {
     /// twins).
     pub fn depth_lane(&self, lane: usize) -> usize {
         self.lanes[lane].queue.depth()
+    }
+
+    /// Live queue depth on lane `lane` (cancelled hedge ghosts
+    /// excluded) — the telemetry queue-depth gauge.
+    pub fn live_depth_lane(&self, lane: usize) -> usize {
+        self.lanes[lane].queue.live_depth()
+    }
+
+    /// Workers on lane `lane` still executing a batch at `now_s` — the
+    /// telemetry in-flight gauge.
+    pub fn busy_workers_lane(&self, lane: usize, now_s: f64) -> usize {
+        self.lanes[lane].tracker.busy_workers(now_s)
     }
 
     /// Admission counters for `device`'s queue (pair surface). Hedged
@@ -874,6 +982,16 @@ impl Dispatcher {
         }
         self.stats.record(batch.len());
         let batch_size = batch.len();
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.record(
+                start_s,
+                ObsEvent::BatchFormed { lane: li as u32, size: batch_size as u32, start_s },
+            );
+            rec.record(
+                start_s,
+                ObsEvent::DispatchStart { lane: li as u32, size: batch_size as u32, done_s },
+            );
+        }
         for request in batch.drain(..) {
             let seq = self.seq;
             self.seq += 1;
@@ -895,7 +1013,13 @@ impl Dispatcher {
         F: FnMut(Completion),
     {
         let Reverse(p) = self.pending.pop().expect("pending completion exists");
-        let kind = self.resolve_completion(p.lane, p.request.hedge);
+        let kind = self.resolve_completion(p.lane, p.request.hedge, p.request.id, p.done_s);
+        if let Some(rec) = self.recorder.as_mut() {
+            rec.record(
+                p.done_s,
+                ObsEvent::Complete { id: p.request.id, lane: p.lane as u32, kind },
+            );
+        }
         on_complete(Completion {
             request: p.request,
             device: self.lanes[p.lane].kind,
@@ -911,7 +1035,13 @@ impl Dispatcher {
     /// first finisher wins and cancels its twin (reclaiming queued
     /// capacity); a later finisher is wasted work. All O(1) — one
     /// generation-checked arena access, no hashing.
-    fn resolve_completion(&mut self, lane: usize, hedge: Option<SlabKey>) -> CompletionKind {
+    fn resolve_completion(
+        &mut self,
+        lane: usize,
+        hedge: Option<SlabKey>,
+        id: u64,
+        done_s: f64,
+    ) -> CompletionKind {
         let key = match hedge {
             None => return CompletionKind::Solo,
             Some(k) => k,
@@ -959,9 +1089,17 @@ impl Dispatcher {
                     // admission slot now; the entry itself stays until
                     // the ghost is physically purged.
                     self.hedge_stats.cancelled_unrun += 1;
-                    let lane = &mut self.lanes[twin_lane];
-                    lane.tracker.on_cancel(est);
-                    lane.queue.mark_dead();
+                    {
+                        let lane = &mut self.lanes[twin_lane];
+                        lane.tracker.on_cancel(est);
+                        lane.queue.mark_dead();
+                    }
+                    if let Some(rec) = self.recorder.as_mut() {
+                        rec.record(
+                            done_s,
+                            ObsEvent::HedgeCancel { id, lane: twin_lane as u32 },
+                        );
+                    }
                 }
             }
             CompletionKind::Solo => {}

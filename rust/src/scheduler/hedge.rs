@@ -109,6 +109,18 @@ impl HedgeBudget {
         }
     }
 
+    /// The decayed useful-work window (seconds). Logged with every
+    /// margin adjustment so the offline trace verifier can replay the
+    /// control law and invert the window back to raw work.
+    pub fn useful_s(&self) -> f64 {
+        self.useful_s
+    }
+
+    /// The decayed wasted-work window (seconds); see [`Self::useful_s`].
+    pub fn wasted_s(&self) -> f64 {
+        self.wasted_s
+    }
+
     /// Feed one completed execution: its true work content `t_s`
     /// (standalone execution seconds — the same unit the harness's
     /// waste accounting uses) and whether it was wasted (a hedge loser)

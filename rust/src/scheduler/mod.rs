@@ -96,7 +96,10 @@ pub use dispatch::{
     BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
     HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec,
 };
-pub use hedge::HedgeBudget;
+pub use hedge::{
+    HedgeBudget, HEDGE_GAIN, HEDGE_MAX_MARGIN_S, HEDGE_MIN_MARGIN_S,
+    HEDGE_WINDOW_DECAY,
+};
 pub use queue::{
     Admission, AdmissionQueue, FairQueue, QueueStats, QueuedRequest, TenantSpec,
 };

@@ -13,7 +13,7 @@ pub mod harness;
 
 pub use characterize::{characterize, Characterization};
 pub use harness::{
-    run_all_policies, run_closed_loop, run_contended, run_fleet, run_fleet_closed,
-    run_policy, run_with_estimator, AdaptiveOpts, ContendedResult, ContentionOpts, DriftSpec,
-    FleetOpts, FleetResult, PolicyResult, RequestTruth, TruthTable,
+    run_all_policies, run_closed_loop, run_contended, run_contended_traced, run_fleet,
+    run_fleet_closed, run_policy, run_with_estimator, AdaptiveOpts, ContendedResult,
+    ContentionOpts, DriftSpec, FleetOpts, FleetResult, PolicyResult, RequestTruth, TruthTable,
 };

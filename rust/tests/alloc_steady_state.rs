@@ -7,7 +7,14 @@
 //! — which is allowed to allocate while ring buffers, the pending heap,
 //! the hedge arena and the batch scratch grow to their peak populations
 //! — then repeats the *same* traffic pattern and asserts the allocation
-//! counter does not move at all.
+//! counter does not move at all. The dispatcher carries an attached
+//! [`FlightRecorder`] throughout: the decision log's preallocated ring
+//! (including its wrap-around eviction path) must preserve the
+//! zero-alloc guarantee, event for event.
+//!
+//! The same pass also pins two regression fixes: `LatencyRecorder`'s
+//! hot path (`record` on an already-seen label probes by `&str` and
+//! must not build an owned key), measured under the same counter.
 //!
 //! This file deliberately contains exactly one `#[test]`: the harness
 //! runs tests within a binary on multiple threads, and any concurrent
@@ -17,6 +24,8 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
 use cnmt::devices::DeviceKind;
+use cnmt::metrics::LatencyRecorder;
+use cnmt::obs::FlightRecorder;
 use cnmt::scheduler::{
     BatchExecutor, Dispatcher, DispatcherConfig, QueuedRequest,
 };
@@ -117,6 +126,10 @@ fn steady_state_dispatch_allocates_nothing() {
         ..Default::default()
     };
     let mut disp = Dispatcher::new(&cfg);
+    // The decision log rides along for the whole test: a bounded ring
+    // far smaller than the event volume, so the measured pass runs
+    // entirely in the wrap-around (evict-then-push) regime.
+    disp.attach_recorder(FlightRecorder::new(2_048));
 
     // Warm-up 1: *heavier* traffic than the measured pass (faster
     // arrivals, more hedges), so every container's peak population —
@@ -127,9 +140,13 @@ fn steady_state_dispatch_allocates_nothing() {
     // Warm-up 2: the measured pattern itself, once, for belt and
     // braces (any pattern-specific peak is reached here at the latest).
     drive(&mut disp, 0xA110C, 1_000.0, 4_000, 2.5e-3, 5);
+    let warm_events = disp
+        .recorder_mut()
+        .map(|r| r.total())
+        .expect("recorder still attached");
 
     // Measured pass: identical pattern, warm dispatcher — the dispatch
-    // path must not touch the allocator at all.
+    // path, decision log included, must not touch the allocator at all.
     let before = ALLOC_CALLS.load(Ordering::SeqCst);
     let completions = drive(&mut disp, 0xA110C, 2_000.0, 4_000, 2.5e-3, 5);
     let after = ALLOC_CALLS.load(Ordering::SeqCst);
@@ -141,4 +158,34 @@ fn steady_state_dispatch_allocates_nothing() {
         "steady-state dispatch path allocated {} time(s)",
         after - before
     );
+    // The recorder really was live and overflowing during the measured
+    // pass (events advanced well past the ring bound).
+    let rec = disp.take_recorder().expect("recorder attached");
+    assert!(
+        rec.total() > warm_events,
+        "measured pass recorded no events ({warm_events})"
+    );
+    assert!(rec.dropped() > 0, "ring never wrapped — eviction path untested");
+    assert_eq!(rec.len(), rec.capacity());
+
+    // LatencyRecorder regression (see metrics::recorder): recording
+    // under an already-seen label must not build an owned key. Warm the
+    // map with every label once, then measure the hot path.
+    let mut lat = LatencyRecorder::new();
+    const LABELS: [&str; 3] = ["edge", "cloud", "decision"];
+    for label in LABELS {
+        lat.record(label, 1e-3);
+    }
+    let before = ALLOC_CALLS.load(Ordering::SeqCst);
+    for i in 0..10_000u64 {
+        lat.record(LABELS[(i % 3) as usize], (i % 97) as f64 * 1e-4);
+    }
+    let after = ALLOC_CALLS.load(Ordering::SeqCst);
+    assert_eq!(
+        after - before,
+        0,
+        "LatencyRecorder::record allocated {} time(s) on seen labels",
+        after - before
+    );
+    assert_eq!(lat.count("edge"), 1 + 3_334);
 }

@@ -1,0 +1,163 @@
+//! Decision-log replay differential: the offline trace verifier must
+//! re-derive the contended harness's accounting — admitted, shed,
+//! completed, hedge fates, wasted work, final hedge margin — from the
+//! dumped event stream alone, across random loads, policies and
+//! scheduler sizings. This is `cnmt trace verify`'s guarantee: the
+//! flight recorder's log is a complete, self-consistent account of the
+//! run, not a best-effort annotation.
+
+use cnmt::coordinator::PolicyKind;
+use cnmt::experiments::load::synth_workload;
+use cnmt::obs::{verify_trace, FlightRecorder};
+use cnmt::sim::{run_contended_traced, AdaptiveOpts, ContentionOpts};
+use cnmt::util::Rng;
+
+/// Ring bound comfortably above the event volume of every trial below
+/// (~8 events per request plus margin/refit ticks), so no trial's trace
+/// is truncated — the verifier rejects incomplete windows by design.
+const RING_CAP: usize = 1 << 18;
+
+#[test]
+fn prop_trace_verify_matches_harness_accounting() {
+    let mut rng = Rng::new(0x7ACE);
+    for trial in 0..6u64 {
+        let load = rng.uniform(8.0, 200.0);
+        let adaptive = trial % 2 == 0;
+        let (requests, ch) = synth_workload(300 + trial, 2_000, load);
+        let mut opts = ContentionOpts {
+            queue_aware: true,
+            adaptive: if adaptive {
+                Some(AdaptiveOpts {
+                    hedge_margin_s: rng.uniform(0.002, 0.04),
+                    ..Default::default()
+                })
+            } else {
+                None
+            },
+            ..Default::default()
+        };
+        opts.dispatcher.max_queue_depth = 32 + rng.usize(256);
+
+        let rec = FlightRecorder::new(RING_CAP);
+        let (r, rec) =
+            run_contended_traced(&requests, &ch, PolicyKind::Cnmt, &opts, rec)
+                .unwrap();
+        assert_eq!(
+            rec.dropped(),
+            0,
+            "trial {trial}: ring truncated ({} events) — bump RING_CAP",
+            rec.total()
+        );
+
+        let v = verify_trace(&rec.window_jsonl()).unwrap_or_else(|e| {
+            panic!("trial {trial} ({}): {e}", r.policy)
+        });
+
+        // The replay must land on the harness's own books exactly.
+        assert_eq!(v.offered, r.offered as u64, "trial {trial}: offered");
+        assert_eq!(v.shed, r.rejected as u64, "trial {trial}: shed");
+        assert_eq!(
+            v.admitted,
+            (r.offered - r.rejected) as u64,
+            "trial {trial}: admitted"
+        );
+        assert_eq!(v.results, r.completed as u64, "trial {trial}: results");
+        assert_eq!(v.hedged, r.hedged as u64, "trial {trial}: hedged");
+        assert_eq!(
+            v.hedge_wins,
+            (r.hedge_wins_edge + r.hedge_wins_cloud) as u64,
+            "trial {trial}: hedge wins"
+        );
+        assert_eq!(
+            v.hedge_losses,
+            r.hedge_wasted as u64,
+            "trial {trial}: executed losers"
+        );
+        assert_eq!(
+            v.hedge_cancelled,
+            r.hedge_cancelled as u64,
+            "trial {trial}: cancelled twins"
+        );
+        // One placement scoring per routed (non-shed at scoring time)
+        // arrival; every admit is preceded by a placement.
+        assert!(v.placements >= v.admitted, "trial {trial}: placements");
+
+        if adaptive {
+            // Margin-law replay: the final margin the verifier recomputes
+            // from MarginAdjust events must equal the controller's own
+            // final state, bit for bit.
+            assert_eq!(
+                v.final_margin_s.map(f64::to_bits),
+                Some(r.hedge_final_margin_s.to_bits()),
+                "trial {trial}: final margin diverged"
+            );
+            // The inverted decayed window reconstructs the raw wasted
+            // fraction to float error (each step recovers one
+            // observation's work content up to one rounding).
+            let have = v.reconstructed_wasted_frac.unwrap();
+            let want = r.wasted_frac();
+            assert!(
+                (have - want).abs() < 1e-6,
+                "trial {trial}: reconstructed waste {have} vs harness {want}"
+            );
+        } else {
+            assert_eq!(v.hedged, 0, "trial {trial}: hedges without adaptive");
+            assert!(v.final_margin_s.is_none());
+        }
+    }
+}
+
+#[test]
+fn blind_policies_trace_with_nonfinite_scores() {
+    // EdgeOnly / CloudOnly route without scoring both sides (their
+    // decision traces carry NaN estimates); the verifier must accept
+    // those placements (score checks are gated on finiteness) and still
+    // prove conservation.
+    let (requests, ch) = synth_workload(77, 1_200, 40.0);
+    for policy in [PolicyKind::EdgeOnly, PolicyKind::CloudOnly] {
+        let opts = ContentionOpts::default();
+        let rec = FlightRecorder::new(RING_CAP);
+        let (r, rec) =
+            run_contended_traced(&requests, &ch, policy, &opts, rec).unwrap();
+        assert_eq!(rec.dropped(), 0);
+        let v = verify_trace(&rec.window_jsonl())
+            .unwrap_or_else(|e| panic!("{}: {e}", r.policy));
+        assert_eq!(v.results, r.completed as u64);
+        assert_eq!(v.shed, r.rejected as u64);
+        assert_eq!(v.hedged, 0);
+    }
+}
+
+#[test]
+fn tracing_does_not_perturb_the_run() {
+    // The recorder only observes: a traced run and an untraced run of
+    // the same scenario must produce identical results field for field.
+    use cnmt::sim::run_contended;
+    let (requests, ch) = synth_workload(9, 1_500, 96.0);
+    let opts = ContentionOpts {
+        adaptive: Some(AdaptiveOpts::default()),
+        ..Default::default()
+    };
+    let plain = run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap();
+    let (traced, rec) = run_contended_traced(
+        &requests,
+        &ch,
+        PolicyKind::Cnmt,
+        &opts,
+        FlightRecorder::new(RING_CAP),
+    )
+    .unwrap();
+    assert!(rec.total() > 0);
+    assert_eq!(plain.offered, traced.offered);
+    assert_eq!(plain.completed, traced.completed);
+    assert_eq!(plain.rejected, traced.rejected);
+    assert_eq!(plain.hedged, traced.hedged);
+    assert_eq!(plain.hedge_cancelled, traced.hedge_cancelled);
+    assert_eq!(plain.hedge_wasted, traced.hedge_wasted);
+    assert_eq!(plain.p99_s.to_bits(), traced.p99_s.to_bits());
+    assert_eq!(plain.mean_latency_s.to_bits(), traced.mean_latency_s.to_bits());
+    assert_eq!(
+        plain.hedge_final_margin_s.to_bits(),
+        traced.hedge_final_margin_s.to_bits()
+    );
+}
