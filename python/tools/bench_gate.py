@@ -16,11 +16,16 @@ in the zero-churn dispatcher and the parallel sweep runner:
     --min-sweep-speedup x faster at the bench's thread count;
   * the flight recorder costs almost nothing: the hedged event loop
     with a bounded decision-log ring attached runs at
-    ≥ --min-recorder-ratio x the untraced loop's events/sec.
+    ≥ --min-recorder-ratio x the untraced loop's events/sec;
+  * the binary workload-trace codec (`cnmt::trace`) encodes and
+    decodes at ≥ --min-trace-events records/sec — replaying a
+    million-request trace must stay I/O-trivial next to the
+    simulation itself. A report without the `trace` section fails the
+    gate outright (the bench regressed out of measuring it).
 
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
        [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
-       [--min-recorder-ratio X]
+       [--min-recorder-ratio X] [--min-trace-events N]
 """
 
 import argparse
@@ -36,6 +41,7 @@ def main():
     ap.add_argument("--min-fleet-ratio", type=float, default=0.8)
     ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
     ap.add_argument("--min-recorder-ratio", type=float, default=0.9)
+    ap.add_argument("--min-trace-events", type=float, default=200_000.0)
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -53,6 +59,7 @@ def main():
     fleet_ratio = fleet["ratio_vs_pair_solo"]
     sweep = b["sweep"]
     recorder = b["recorder"]
+    trace = b.get("trace")
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
         f"speedup vs frozen baseline: solo {sp_solo:.2f}x, hedged "
@@ -66,8 +73,27 @@ def main():
         f"recorder {recorder['ratio']:.2f}x "
         f"(ring {recorder['capacity']:.0f})"
     )
+    if trace is not None:
+        print(
+            f"trace codec: encode {trace['encode']['events_per_sec']:,.0f} ev/s, "
+            f"decode {trace['decode']['events_per_sec']:,.0f} ev/s "
+            f"({trace['bytes_per_record']:.2f} B/record)"
+        )
 
     failures = []
+    if trace is None:
+        failures.append(
+            "report has no `trace` section (bench stopped measuring the "
+            "workload-trace codec)"
+        )
+    else:
+        for side in ("encode", "decode"):
+            eps = trace[side]["events_per_sec"]
+            if eps < args.min_trace_events:
+                failures.append(
+                    f"trace {side} {eps:,.0f} records/sec < floor "
+                    f"{args.min_trace_events:,.0f}"
+                )
     if eps_solo < args.min_events_per_sec:
         failures.append(
             f"solo events/sec {eps_solo:,.0f} < floor {args.min_events_per_sec:,.0f}"

@@ -1,0 +1,440 @@
+#!/usr/bin/env python3
+"""Standalone mirror of the binary workload-trace codec (rust/src/trace).
+
+Why this exists: the compressed million-request scenario trace checked
+in under `reports/` must be regenerable in environments that have no
+rust toolchain, and the format needs a second, independent
+implementation to validate against. This script re-implements, byte for
+byte, exactly what the rust side does:
+
+  * `util::rng::Rng`      — xoshiro256** + splitmix64 seeding, the
+                            exponential / Box-Muller draws (cached
+                            spare normal), shared with the sweep
+                            mirrors;
+  * `trace::SynthTrace`   — the µs-quantized synthetic scenario
+                            (Poisson arrivals, correlated n→m lengths,
+                            optional execution noise) in the same draw
+                            order;
+  * `trace::TraceWriter`  — the 96-byte versioned header (magic,
+                            flags, ten f64 characterization fields,
+                            CRC32), LEB128 varint records delta-encoded
+                            in microseconds, 4096-record blocks each
+                            sealed with a zlib CRC32, and the
+                            record-count end marker;
+  * `trace::TraceReader`  — the validating decoder (used by `info` and
+                            by `gen`'s self-check).
+
+`python3 trace_mirror.py gen --out t.ctr` and `cnmt trace record --out
+t.ctr` (same seed/requests/load/noise) must produce identical bytes —
+CI diffs them with `cmp`. A `.gz` destination is compressed
+deterministically (mtime=0, level 9); CI compares the *decompressed*
+bytes, so the gzip container never participates in the contract.
+
+Usage:
+    python3 python/tools/trace_mirror.py gen --out reports/trace_1m.ctr.gz \
+        [--requests 1000000] [--load 96] [--seed 20220315] [--exec-noise 0]
+    python3 python/tools/trace_mirror.py info <file[.gz]>
+"""
+
+import argparse
+import gzip
+import math
+import struct
+import sys
+import zlib
+
+MASK = (1 << 64) - 1
+
+# ------------------------------------------------------------------ rng (util::rng)
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & MASK
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+    return state, (z ^ (z >> 31)) & MASK
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & MASK
+
+
+class Rng:
+    """xoshiro256** seeded via splitmix64 (mirror of util::rng::Rng)."""
+
+    def __init__(self, seed):
+        sm = seed & MASK
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+        self.spare_normal = None
+
+    def next_u64(self):
+        s = self.s
+        result = (_rotl((s[1] * 5) & MASK, 7) * 9) & MASK
+        t = (s[1] << 17) & MASK
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return result
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def exponential(self, lam):
+        while True:
+            u = self.f64()
+            if u > 1e-300:
+                break
+        return -math.log(u) / lam
+
+    def normal(self):
+        if self.spare_normal is not None:
+            z, self.spare_normal = self.spare_normal, None
+            return z
+        while True:
+            u1 = self.f64()
+            if u1 > 1e-300:
+                break
+        u2 = self.f64()
+        r = math.sqrt(-2.0 * math.log(u1))
+        a = 2.0 * math.pi * u2
+        self.spare_normal = r * math.sin(a)
+        return r * math.cos(a)
+
+    def normal_ms(self, mean, std):
+        return mean + std * self.normal()
+
+
+# ------------------------------------------------------------------ format constants
+
+TRACE_MAGIC = b"CNMTRACE"
+TRACE_VERSION = 1
+FLAG_TIMES_EXPLICIT = 1
+HEADER_LEN = 96
+BLOCK_RECORDS = 4096
+
+# Scenario constants (experiments::load / trace::SynthTrace).
+EDGE_PLANE = (1.2e-3, 3.0e-3, 6.0e-3)
+CLOUD_PLANE = (0.22e-3, 0.55e-3, 26.0e-3)
+N2M_GAMMA = 0.95
+N2M_DELTA = 0.8
+RTT_S = 0.042
+MEAN_N = 17.0
+SYNTH_M_NOISE_STD = 2.0
+SYNTH_N_MAX = 62
+
+
+def texe_estimate(plane, n, m):
+    """Mirror of predictor::TexeModel::estimate (max with 0)."""
+    an, am, b = plane
+    return max(an * n + am * m + b, 0.0)
+
+
+def s_to_us(s):
+    """Mirror of trace::s_to_us: (s * 1e6 + 0.5).floor() as u64."""
+    return int(math.floor(s * 1e6 + 0.5))
+
+
+def us_to_s(us):
+    return us * 1e-6
+
+
+def rust_round(x):
+    """f64::round — half away from zero (python round() is banker's).
+
+    For the positive magnitudes this scenario produces, `x - floor(x)`
+    is an exact float operation, so the half-way comparison is exact.
+    """
+    f = math.floor(x)
+    r = x - f
+    if r > 0.5 or (r == 0.5 and x > 0.0):
+        return f + 1
+    if r == 0.5:  # negative half-way: away from zero is downward
+        return f
+    return f if r < 0.5 else f + 1
+
+
+# ------------------------------------------------------------------ synthetic scenario
+
+
+def synth_records(seed, requests, offered_rps, exec_noise_std):
+    """Yield (delta_us, n, m, e_us, c_us, tx_us) in trace::SynthTrace's
+    exact draw order, every duration already on the µs grid."""
+    rng = Rng(seed)
+    rtt_us = s_to_us(RTT_S)
+    last_us = 0
+    cum_us = 0
+    for _ in range(requests):
+        dt = rng.exponential(offered_rps)
+        n = 1 + min(int(rng.exponential(1.0 / MEAN_N)), SYNTH_N_MAX - 1)
+        m_mean = N2M_GAMMA * n + N2M_DELTA
+        m = int(min(max(rust_round(m_mean + rng.normal_ms(0.0, SYNTH_M_NOISE_STD)), 1.0),
+                    float(SYNTH_N_MAX)))
+        if exec_noise_std > 0.0:
+            noise_e = max(1.0 + rng.normal_ms(0.0, exec_noise_std), 0.2)
+            noise_c = max(1.0 + rng.normal_ms(0.0, exec_noise_std), 0.2)
+        else:
+            noise_e = noise_c = 1.0
+        cum_us += s_to_us(dt)
+        e_us = s_to_us(texe_estimate(EDGE_PLANE, n, m) * noise_e)
+        c_us = s_to_us(texe_estimate(CLOUD_PLANE, n, m) * noise_c)
+        yield cum_us - last_us, n, m, e_us, c_us, rtt_us
+        last_us = cum_us
+
+
+# ------------------------------------------------------------------ encoder
+
+
+def put_varint(buf, v):
+    while True:
+        b = v & 0x7F
+        v >>= 7
+        if v == 0:
+            buf.append(b)
+            return
+        buf.append(b | 0x80)
+
+
+def encode_header(flags, mean_m):
+    h = bytearray()
+    h += TRACE_MAGIC
+    h += struct.pack("<H", TRACE_VERSION)
+    h += struct.pack("<H", flags)
+    for f in (*EDGE_PLANE, *CLOUD_PLANE, N2M_GAMMA, N2M_DELTA, mean_m, RTT_S):
+        h += struct.pack("<d", f)
+    h += struct.pack("<I", zlib.crc32(bytes(h)))
+    assert len(h) == HEADER_LEN
+    return bytes(h)
+
+
+def encode_trace(seed, requests, offered_rps, exec_noise_std):
+    """The full .ctr byte stream for the spec (mirror of
+    trace::record_synth: mean_m prepass, then a second streaming
+    generation pass)."""
+    explicit = exec_noise_std > 0.0
+    sum_m = 0
+    for _, _, m, _, _, _ in synth_records(seed, requests, offered_rps, exec_noise_std):
+        sum_m += m
+    mean_m = sum_m / max(requests, 1)
+    out = bytearray(encode_header(FLAG_TIMES_EXPLICIT if explicit else 0, mean_m))
+    block = bytearray()
+    n_in_block = 0
+
+    def flush_block():
+        nonlocal block, n_in_block
+        if n_in_block == 0:
+            return
+        out.extend(struct.pack("<II", n_in_block, len(block)))
+        out.extend(block)
+        out.extend(struct.pack("<I", zlib.crc32(bytes(block))))
+        block = bytearray()
+        n_in_block = 0
+
+    for delta, n, m, e_us, c_us, tx_us in synth_records(
+        seed, requests, offered_rps, exec_noise_std
+    ):
+        put_varint(block, delta)
+        put_varint(block, n)
+        put_varint(block, m)
+        if explicit:
+            put_varint(block, e_us)
+            put_varint(block, c_us)
+            put_varint(block, tx_us)
+        n_in_block += 1
+        if n_in_block >= BLOCK_RECORDS:
+            flush_block()
+    flush_block()
+    payload = struct.pack("<Q", requests)
+    out.extend(struct.pack("<II", 0, len(payload)))
+    out.extend(payload)
+    out.extend(struct.pack("<I", zlib.crc32(payload)))
+    return bytes(out)
+
+
+# ------------------------------------------------------------------ decoder
+
+
+class TraceError(Exception):
+    pass
+
+
+def get_varint(buf, pos):
+    v = 0
+    shift = 0
+    while True:
+        if pos >= len(buf):
+            raise TraceError("varint runs past its block payload")
+        b = buf[pos]
+        pos += 1
+        if shift > 63:
+            raise TraceError("varint overflows u64")
+        v |= (b & 0x7F) << shift
+        if b & 0x80 == 0:
+            return v, pos
+        shift += 7
+
+
+def decode_trace(data):
+    """Validate + decode a .ctr byte stream; returns (header dict,
+    iterator-exhausted record list of (arrival_us, n, m, e_us, c_us,
+    tx_us))."""
+    if len(data) < HEADER_LEN:
+        raise TraceError("truncated trace: incomplete header")
+    hb = data[:HEADER_LEN]
+    if hb[:8] != TRACE_MAGIC:
+        raise TraceError("not a cnmt trace (bad magic)")
+    (stored,) = struct.unpack("<I", hb[92:96])
+    if zlib.crc32(hb[:92]) != stored:
+        raise TraceError("header crc mismatch (corrupted trace)")
+    (version,) = struct.unpack("<H", hb[8:10])
+    if version != TRACE_VERSION:
+        raise TraceError(f"unsupported trace version {version}")
+    (flags,) = struct.unpack("<H", hb[10:12])
+    fields = struct.unpack("<10d", hb[12:92])
+    header = {
+        "version": version,
+        "flags": flags,
+        "edge_plane": fields[0:3],
+        "cloud_plane": fields[3:6],
+        "n2m_gamma": fields[6],
+        "n2m_delta": fields[7],
+        "mean_m": fields[8],
+        "rtt_s": fields[9],
+    }
+    explicit = flags & FLAG_TIMES_EXPLICIT != 0
+    rtt_us = s_to_us(header["rtt_s"])
+    records = []
+    at = HEADER_LEN
+    cum_us = 0
+    while True:
+        if len(data) < at + 8:
+            raise TraceError("truncated trace: incomplete block length prefix")
+        n, ln = struct.unpack("<II", data[at:at + 8])
+        at += 8
+        if len(data) < at + ln + 4:
+            raise TraceError("truncated trace: incomplete block payload")
+        payload = data[at:at + ln]
+        at += ln
+        (stored,) = struct.unpack("<I", data[at:at + 4])
+        at += 4
+        if zlib.crc32(payload) != stored:
+            raise TraceError("block crc mismatch (corrupted trace)")
+        if n == 0:
+            if ln != 8:
+                raise TraceError("malformed end marker")
+            (total,) = struct.unpack("<Q", payload)
+            if total != len(records):
+                raise TraceError(
+                    f"record count mismatch: end marker says {total}, "
+                    f"stream held {len(records)}"
+                )
+            return header, records
+        pos = 0
+        for _ in range(n):
+            delta, pos = get_varint(payload, pos)
+            rn, pos = get_varint(payload, pos)
+            rm, pos = get_varint(payload, pos)
+            cum_us += delta
+            if explicit:
+                e_us, pos = get_varint(payload, pos)
+                c_us, pos = get_varint(payload, pos)
+                tx_us, pos = get_varint(payload, pos)
+            else:
+                e_us = s_to_us(texe_estimate(header["edge_plane"], rn, rm))
+                c_us = s_to_us(texe_estimate(header["cloud_plane"], rn, rm))
+                tx_us = rtt_us
+            records.append((cum_us, rn, rm, e_us, c_us, tx_us))
+        if pos != len(payload):
+            raise TraceError("block payload has trailing bytes")
+
+
+# ------------------------------------------------------------------ commands
+
+
+def read_maybe_gz(path):
+    if path.endswith(".gz"):
+        with gzip.open(path, "rb") as f:
+            return f.read()
+    with open(path, "rb") as f:
+        return f.read()
+
+
+def cmd_gen(args):
+    data = encode_trace(args.seed, args.requests, args.load, args.exec_noise)
+    # Self-check: the bytes we are about to publish must decode cleanly
+    # back to the generator's own stream.
+    header, records = decode_trace(data)
+    assert len(records) == args.requests
+    check = list(
+        synth_records(args.seed, args.requests, args.load, args.exec_noise)
+    )
+    cum = 0
+    for i, ((delta, n, m, e, c, tx), (a_us, rn, rm, re_, rc, rtx)) in enumerate(
+        zip(check, records)
+    ):
+        cum += delta
+        if (cum, n, m, e, c, tx) != (a_us, rn, rm, re_, rc, rtx):
+            raise SystemExit(f"self-check failed at record {i}")
+    if args.out.endswith(".gz"):
+        # filename='' suppresses the FNAME header field and mtime=0 the
+        # timestamp, so the .gz bytes depend only on the trace content.
+        with open(args.out, "wb") as raw:
+            with gzip.GzipFile(
+                filename="", fileobj=raw, mode="wb", compresslevel=9, mtime=0
+            ) as gz:
+                gz.write(data)
+    else:
+        with open(args.out, "wb") as f:
+            f.write(data)
+    mode = "explicit-times" if args.exec_noise > 0.0 else "derived"
+    print(
+        f"wrote {args.out}: {args.requests} records, {len(data)} bytes "
+        f"uncompressed ({mode} mode, seed {args.seed}, {args.load} r/s)"
+    )
+
+
+def cmd_info(args):
+    header, records = decode_trace(read_maybe_gz(args.file))
+    n_rec = len(records)
+    duration_s = us_to_s(records[-1][0]) if records else 0.0
+    mean_n = sum(r[1] for r in records) / max(n_rec, 1)
+    mean_m = sum(r[2] for r in records) / max(n_rec, 1)
+    offered = n_rec / duration_s if duration_s > 0 else 0.0
+    print(
+        f"version {header['version']} "
+        f"({'explicit-times' if header['flags'] & FLAG_TIMES_EXPLICIT else 'derived'} "
+        f"mode)\nrecords {n_rec}\nduration_s {duration_s:.6f}\n"
+        f"offered_rps {offered:.3f}\nmean_n {mean_n:.6f}\nmean_m {mean_m:.6f}"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    g = sub.add_parser("gen", help="generate the synthetic scenario trace")
+    g.add_argument("--out", required=True)
+    g.add_argument("--requests", type=int, default=1_000_000)
+    g.add_argument("--load", type=float, default=96.0)
+    g.add_argument("--seed", type=int, default=20220315)
+    g.add_argument("--exec-noise", type=float, default=0.0)
+    g.set_defaults(fn=cmd_gen)
+    i = sub.add_parser("info", help="validate + summarize a trace")
+    i.add_argument("file")
+    i.set_defaults(fn=cmd_info)
+    args = ap.parse_args()
+    try:
+        args.fn(args)
+    except TraceError as e:
+        print(f"error: trace: {e}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,10 @@ pub enum Error {
     /// closed, ...).
     Serve(String),
 
+    /// Binary workload-trace format problems (bad magic, unsupported
+    /// version, CRC mismatch, truncated stream).
+    Trace(String),
+
     /// Filesystem / IO failure (wraps `std::io::Error`).
     Io(std::io::Error),
 }
@@ -47,6 +51,7 @@ impl fmt::Display for Error {
             Error::Fit(m) => write!(f, "fit: {m}"),
             Error::Sim(m) => write!(f, "sim: {m}"),
             Error::Serve(m) => write!(f, "serve: {m}"),
+            Error::Trace(m) => write!(f, "trace: {m}"),
             Error::Io(e) => write!(f, "io: {e}"),
         }
     }

@@ -42,14 +42,14 @@ use crate::fleet::{FleetStrategy, Topology};
 use crate::obs::TelemetryCfg;
 use crate::sim::harness::RequestTruth;
 use crate::sim::{
-    run_fleet, run_fleet_closed, AdaptiveOpts, Characterization, DriftSpec, FleetOpts,
-    FleetResult,
+    run_fleet, run_fleet_closed, run_fleet_closed_streamed, run_fleet_streamed, AdaptiveOpts,
+    Characterization, DriftSpec, FleetOpts, FleetResult,
 };
 use crate::util::rng::cell_seed;
 use crate::util::Json;
 use crate::{Error, Result};
 
-use super::load::synth_workload;
+use super::load::{synth_characterization, synth_stream, synth_workload};
 use super::report::text_table;
 use super::runner;
 
@@ -259,6 +259,79 @@ pub fn run(cfg: &FleetConfig) -> Result<FleetSweep> {
         run_fleet(
             requests,
             ch,
+            &cfg.shapes[si].topo,
+            &FleetOpts { strategy, ..cfg.opts },
+        )
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(cfg.shapes.len());
+    for shape in &cfg.shapes {
+        let mut results = Vec::with_capacity(n_strat);
+        for _ in 0..n_strat {
+            results.push(outcomes.next().expect("one outcome per fleet cell")?);
+        }
+        cells.push(ShapeCell { shape: shape.clone(), results });
+    }
+    Ok(FleetSweep {
+        cells,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        hedge_margin_s: cfg.hedge_margin_s,
+    })
+}
+
+/// Streaming twin of [`run`]: every cell regenerates its shape's
+/// workload lazily through [`synth_stream`] and replays it with
+/// [`run_fleet_streamed`] — bit-identical report JSON (the
+/// differential tests assert it) in O(outstanding) memory per cell.
+pub fn run_streamed(cfg: &FleetConfig) -> Result<FleetSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("fleet sweep needs requests_per_point > 0".into()));
+    }
+    if cfg.shapes.is_empty() {
+        return Err(Error::Config("fleet sweep needs at least one shape".into()));
+    }
+    if !(cfg.hedge_margin_s.is_finite() && cfg.hedge_margin_s >= 0.0) {
+        return Err(Error::Config(format!(
+            "fleet hedge margin {} must be finite and >= 0",
+            cfg.hedge_margin_s
+        )));
+    }
+    for s in &cfg.shapes {
+        s.topo.validate()?;
+        if !s.offered_rps.is_finite() || s.offered_rps <= 0.0 {
+            return Err(Error::Config(format!(
+                "shape {}: offered load {} r/s must be finite and > 0",
+                s.topo.name, s.offered_rps
+            )));
+        }
+    }
+    let n_strat = strategies(0, cfg.hedge_margin_s).len();
+    let chs: Vec<Characterization> = cfg
+        .shapes
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            synth_characterization(
+                cell_seed(cfg.seed, i as u64),
+                cfg.requests_per_point,
+                s.offered_rps,
+            )
+        })
+        .collect();
+    let outcomes = runner::run_cells(cfg.threads, cfg.shapes.len() * n_strat, |cell| {
+        let si = cell / n_strat;
+        let strategy = strategies(cell_seed(cfg.seed, si as u64), cfg.hedge_margin_s)
+            [cell % n_strat];
+        let arrivals = synth_stream(
+            cell_seed(cfg.seed, si as u64),
+            cfg.requests_per_point,
+            cfg.shapes[si].offered_rps,
+        )
+        .map(Ok);
+        run_fleet_streamed(
+            arrivals,
+            &chs[si],
             &cfg.shapes[si].topo,
             &FleetOpts { strategy, ..cfg.opts },
         )
@@ -559,6 +632,71 @@ pub fn run_closed(cfg: &FleetClosedConfig) -> Result<FleetClosedSweep> {
             ..cfg.opts
         };
         run_fleet_closed(&pool, &ch, &cfg.topo, &opts, clients, cfg.think_s)
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(cfg.clients.len());
+    for &clients in &cfg.clients {
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per fleet closed cell")?);
+        }
+        cells.push(FleetClosedCell { clients, results });
+    }
+    Ok(FleetClosedSweep {
+        cells,
+        topo: cfg.topo.clone(),
+        drift,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        think_s: cfg.think_s,
+        hedge_margin_s: cfg.hedge_margin_s,
+        waste_budget: cfg.adaptive.waste_budget,
+    })
+}
+
+/// Streaming twin of [`run_closed`]: bodies are pulled lazily from
+/// [`synth_stream`] and replayed with [`run_fleet_closed_streamed`] —
+/// bit-identical report JSON in O(clients) memory per cell.
+pub fn run_closed_streamed(cfg: &FleetClosedConfig) -> Result<FleetClosedSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("fleet closed loop needs requests_per_point > 0".into()));
+    }
+    if cfg.clients.is_empty() {
+        return Err(Error::Config("fleet closed loop needs at least one client count".into()));
+    }
+    if cfg.clients.iter().any(|&k| k == 0) {
+        return Err(Error::Config("client counts must be > 0".into()));
+    }
+    if !(cfg.hedge_margin_s.is_finite() && cfg.hedge_margin_s >= 0.0) {
+        return Err(Error::Config(format!(
+            "fleet hedge margin {} must be finite and >= 0",
+            cfg.hedge_margin_s
+        )));
+    }
+    cfg.topo.validate()?;
+    let drift = closed_drift_spec(&cfg.topo, cfg.requests_per_point);
+    let ch = synth_characterization(
+        cfg.seed ^ FLEET_CLOSED_SEED_TAG,
+        cfg.requests_per_point,
+        1.0,
+    );
+    let n_cfg = closed_configurations(cfg).len();
+    let outcomes = runner::run_cells(cfg.threads, cfg.clients.len() * n_cfg, |cell| {
+        let clients = cfg.clients[cell / n_cfg];
+        let (strategy, adaptive) = closed_configurations(cfg)[cell % n_cfg];
+        let opts = FleetOpts {
+            strategy,
+            adaptive,
+            drift: Some(drift),
+            ..cfg.opts
+        };
+        let bodies = synth_stream(
+            cfg.seed ^ FLEET_CLOSED_SEED_TAG,
+            cfg.requests_per_point,
+            1.0,
+        )
+        .map(Ok);
+        run_fleet_closed_streamed(bodies, &ch, &cfg.topo, &opts, clients, cfg.think_s)
     });
     let mut outcomes = outcomes.into_iter();
     let mut cells = Vec::with_capacity(cfg.clients.len());

@@ -49,8 +49,8 @@ use crate::devices::DeviceKind;
 use crate::predictor::{N2mRegressor, TexeModel};
 use crate::sim::harness::RequestTruth;
 use crate::sim::{
-    run_closed_loop, run_contended, AdaptiveOpts, Characterization, ContendedResult,
-    ContentionOpts, DriftSpec,
+    run_closed_loop, run_closed_loop_streamed, run_contended, run_contended_streamed,
+    AdaptiveOpts, Characterization, ContendedResult, ContentionOpts, DriftSpec,
 };
 use crate::util::rng::cell_seed;
 use crate::util::{Json, Rng};
@@ -254,6 +254,58 @@ pub fn synth_workload(
     (requests, ch)
 }
 
+/// Lazy twin of [`synth_workload`]: the identical draw sequence (the
+/// differential tests assert per-request bit-equality), yielded one
+/// request at a time so arbitrarily long workloads stream through
+/// [`run_contended_streamed`] in O(outstanding) memory. Wrap with
+/// `.map(Ok)` to feed the streamed harness entry points.
+pub fn synth_stream(
+    seed: u64,
+    count: usize,
+    offered_rps: f64,
+) -> impl Iterator<Item = RequestTruth> {
+    let texe_edge = TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2);
+    let texe_cloud = TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2);
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0f64;
+    (0..count).map(move |_| {
+        t += rng.exponential(offered_rps);
+        let n = 1 + (rng.exponential(1.0 / MEAN_N) as usize).min(N_MAX - 1);
+        let m_mean = N2M_GAMMA * n as f64 + N2M_DELTA;
+        let m = (m_mean + rng.normal_ms(0.0, M_NOISE_STD))
+            .round()
+            .clamp(1.0, N_MAX as f64) as usize;
+        let noise_e = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        let noise_c = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        RequestTruth {
+            n,
+            m_real: m,
+            arrival_s: t,
+            t_edge: texe_edge.estimate(n, m as f64) * noise_e,
+            t_cloud: texe_cloud.estimate(n, m as f64) * noise_c,
+            t_tx: RTT_S,
+            rtt: RTT_S,
+        }
+    })
+}
+
+/// The [`Characterization`] the materialised [`synth_workload`] returns
+/// for `(seed, count, offered_rps)`, computed by a prepass over the
+/// stream (only `mean_m` depends on the draws — the planes and the N→M
+/// law are constants), so streamed sweeps never materialise the pool.
+pub fn synth_characterization(seed: u64, count: usize, offered_rps: f64) -> Characterization {
+    let mut sum_m = 0.0f64;
+    for truth in synth_stream(seed, count, offered_rps) {
+        sum_m += truth.m_real as f64;
+    }
+    Characterization {
+        texe_edge: TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2),
+        texe_cloud: TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+        n2m: N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA),
+        mean_m: sum_m / count.max(1) as f64,
+    }
+}
+
 /// The five configurations swept at each load point:
 /// `(policy, queue_aware, adaptive)`.
 fn configurations() -> [(PolicyKind, bool, bool); 5] {
@@ -392,6 +444,108 @@ pub fn run(cfg: &LoadConfig) -> Result<LoadSweep> {
             )
         } else {
             run_drift_cell(cfg, &drift_load, spec, cell - sweep_cells)
+        }
+    });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(n_points);
+    for &offered_rps in &cfg.loads_rps {
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per sweep cell")?);
+        }
+        cells.push(LoadCell { offered_rps, results });
+    }
+    let mut drift_results = Vec::with_capacity(drift_configurations().len());
+    for _ in 0..drift_configurations().len() {
+        drift_results.push(outcomes.next().expect("one outcome per drift cell")?);
+    }
+    let drift = DriftReport {
+        spec,
+        offered_rps: DRIFT_LOAD_RPS,
+        results: drift_results,
+    };
+    Ok(LoadSweep {
+        cells,
+        drift,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+    })
+}
+
+/// Streaming twin of [`run`]: the same sweep (same seeds, same cell
+/// order, bit-identical report JSON — the differential tests assert
+/// it), but every cell regenerates its workload lazily through
+/// [`synth_stream`] and replays it with
+/// [`run_contended_streamed`], so peak memory per cell is
+/// O(outstanding) instead of O(`requests_per_point`).
+pub fn run_streamed(cfg: &LoadConfig) -> Result<LoadSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("load sweep needs requests_per_point > 0".into()));
+    }
+    if cfg.loads_rps.is_empty() {
+        return Err(Error::Config("load sweep needs at least one offered load".into()));
+    }
+    for &load in &cfg.loads_rps {
+        if !load.is_finite() || load <= 0.0 {
+            return Err(Error::Config(format!(
+                "offered load {load} r/s must be finite and > 0"
+            )));
+        }
+    }
+    let n_cfg = configurations().len();
+    let n_points = cfg.loads_rps.len();
+    let sweep_cells = n_points * n_cfg;
+    let spec = drift_spec_for(cfg);
+    let total_cells = sweep_cells + drift_configurations().len();
+    // Characterisations are O(1)-sized; a serial prepass per point keeps
+    // the runner's determinism argument intact while the per-request
+    // truths stay lazy inside each cell.
+    let chs: Vec<Characterization> = cfg
+        .loads_rps
+        .iter()
+        .enumerate()
+        .map(|(i, &offered_rps)| {
+            synth_characterization(
+                cell_seed(cfg.seed, i as u64),
+                cfg.requests_per_point,
+                offered_rps,
+            )
+        })
+        .collect();
+    let drift_ch = synth_characterization(
+        cfg.seed ^ DRIFT_SEED_TAG,
+        cfg.requests_per_point,
+        DRIFT_LOAD_RPS,
+    );
+    let outcomes = runner::run_cells(cfg.threads, total_cells, |cell| {
+        if cell < sweep_cells {
+            let point = cell / n_cfg;
+            let (policy, queue_aware, adaptive) = configurations()[cell % n_cfg];
+            let arrivals = synth_stream(
+                cell_seed(cfg.seed, point as u64),
+                cfg.requests_per_point,
+                cfg.loads_rps[point],
+            )
+            .map(Ok);
+            run_contended_streamed(
+                arrivals,
+                &chs[point],
+                policy,
+                &opts_for(&cfg.opts, queue_aware, adaptive),
+            )
+        } else {
+            let (policy, queue_aware, adaptive) = drift_configurations()[cell - sweep_cells];
+            let opts = ContentionOpts {
+                drift: Some(spec),
+                ..opts_for(&cfg.opts, queue_aware, adaptive)
+            };
+            let arrivals = synth_stream(
+                cfg.seed ^ DRIFT_SEED_TAG,
+                cfg.requests_per_point,
+                DRIFT_LOAD_RPS,
+            )
+            .map(Ok);
+            run_contended_streamed(arrivals, &drift_ch, policy, &opts)
         }
     });
     let mut outcomes = outcomes.into_iter();
@@ -626,6 +780,47 @@ pub fn run_closed(cfg: &ClosedLoopConfig) -> Result<ClosedLoopSweep> {
             let opts = opts_for(&cfg.opts, queue_aware, adaptive);
             run_closed_loop(&pool, &ch, policy, &opts, clients, cfg.think_s)
         });
+    let mut outcomes = outcomes.into_iter();
+    let mut cells = Vec::with_capacity(cfg.clients.len());
+    for &clients in &cfg.clients {
+        let mut results = Vec::with_capacity(n_cfg);
+        for _ in 0..n_cfg {
+            results.push(outcomes.next().expect("one outcome per closed cell")?);
+        }
+        cells.push(ClosedLoopCell { clients, results });
+    }
+    Ok(ClosedLoopSweep {
+        cells,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        think_s: cfg.think_s,
+    })
+}
+
+/// Streaming twin of [`run_closed`]: request bodies are pulled lazily
+/// from [`synth_stream`] as clients free up and replayed with
+/// [`run_closed_loop_streamed`] — bit-identical report JSON in
+/// O(clients) memory per cell.
+pub fn run_closed_streamed(cfg: &ClosedLoopConfig) -> Result<ClosedLoopSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("closed loop needs requests_per_point > 0".into()));
+    }
+    if cfg.clients.is_empty() {
+        return Err(Error::Config("closed loop needs at least one client count".into()));
+    }
+    if cfg.clients.iter().any(|&k| k == 0) {
+        return Err(Error::Config("client counts must be > 0".into()));
+    }
+    let ch = synth_characterization(cfg.seed ^ CLOSED_SEED_TAG, cfg.requests_per_point, 1.0);
+    let n_cfg = closed_configurations().len();
+    let outcomes = runner::run_cells(cfg.threads, cfg.clients.len() * n_cfg, |cell| {
+        let clients = cfg.clients[cell / n_cfg];
+        let (policy, queue_aware, adaptive) = closed_configurations()[cell % n_cfg];
+        let opts = opts_for(&cfg.opts, queue_aware, adaptive);
+        let bodies =
+            synth_stream(cfg.seed ^ CLOSED_SEED_TAG, cfg.requests_per_point, 1.0).map(Ok);
+        run_closed_loop_streamed(bodies, &ch, policy, &opts, clients, cfg.think_s)
+    });
     let mut outcomes = outcomes.into_iter();
     let mut cells = Vec::with_capacity(cfg.clients.len());
     for &clients in &cfg.clients {

@@ -59,6 +59,7 @@
 //! | multi-tenant fair queueing (+ dispatcher front-end) (beyond paper) | [`scheduler::queue`], [`scheduler::dispatch`] |
 //! | decision-log flight recorder + offline trace verification (beyond paper) | [`obs::recorder`], [`obs::verify`] |
 //! | latency decomposition + control-loop telemetry (beyond paper) | [`obs::telemetry`], [`sim::harness`] |
+//! | binary workload record/replay + streaming harness (beyond paper) | [`trace`], [`sim::harness`], [`util::json`] |
 
 #![warn(missing_docs)]
 
@@ -77,6 +78,7 @@ pub mod predictor;
 pub mod runtime;
 pub mod scheduler;
 pub mod sim;
+pub mod trace;
 pub mod util;
 
 pub use error::{Error, Result};

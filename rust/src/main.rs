@@ -4,6 +4,8 @@
 //! cnmt experiment table1|fig2a|fig3|fig4|all [flags]   reproduce the paper
 //! cnmt bench sched [--json]                            scheduler perf numbers → BENCH_sched.json
 //! cnmt trace dump|summary|verify [flags|file]          decision-log flight recorder tooling
+//! cnmt trace record|replay|info [flags|file]           binary workload traces (.ctr)
+//! cnmt bench trace [--json]                            trace codec throughput → BENCH_trace.json
 //! cnmt calibrate [flags]                               real-PJRT device characterisation
 //! cnmt translate --model <name> --ids 5,6,7            one translation through the runtime
 //! cnmt selfcheck                                       load + run every artifact
@@ -108,6 +110,11 @@ USAGE:
       --sweep-requests <n>  requests/point for the wall-clock sweep
                             (default 4000)
       --threads <n>         parallel sweep thread count (0 = all cores)
+  cnmt bench trace [flags]  binary trace codec throughput (encode and
+                            decode events/sec over an in-memory stream)
+      --json                also write the machine-readable report
+      --out <path>          report path (default reports/BENCH_trace.json)
+      --requests <n>        records per measurement (default 100000)
   cnmt trace dump [flags]   stream a full decision log (JSONL) from a
                             canned hedged-adaptive contended pair replay
       --out <path>          trace destination (default trace.jsonl)
@@ -119,6 +126,26 @@ USAGE:
                             hedge-fate partitioning, margin control law
                             and waste-budget compliance from the log
                             alone (no harness internals)
+  cnmt trace record [flags] record the synthetic scenario as a compact
+                            binary workload trace (.ctr: versioned
+                            header, varint records, CRC-sealed blocks)
+      --out <path>          trace destination (default trace.ctr)
+      --requests <n>        trace length (default 100000)
+      --load <f>            offered load in r/s (default 96)
+      --seed <u64>          master seed (default 20220315)
+      --exec-noise <f>      execution-noise std; > 0 stores explicit
+                            per-record service times (default 0)
+  cnmt trace replay <file> [flags]  replay a recorded trace through the
+                            contended harness (EdgeOnly, CloudOnly,
+                            C-NMT queue-aware, C-NMT adaptive) and
+                            write a bit-deterministic trace_replay.json
+      --out <dir>           report directory (default reports/)
+      --threads <n>         shard the policy cells over n OS threads
+                            (0 = all cores; the report is bit-identical
+                            at any thread count)
+  cnmt trace info <file>    validate every block CRC + the end marker
+                            and print the trace summary (records, span,
+                            offered load, mean n/m)
   cnmt calibrate [flags]    measure real PJRT latencies, fit T_exe planes
                             (needs the `pjrt` build feature)
       --samples <n>         measured translations per model (default 120)
@@ -774,10 +801,79 @@ fn event_loop_json<D: BenchDispatch>(
     o
 }
 
+/// Records per trace-codec measurement inside `cnmt bench sched`
+/// (the standalone `cnmt bench trace` takes `--requests`).
+const TRACE_BENCH_RECORDS: usize = 100_000;
+
+/// Best-of-3 trace-codec measurement: encode the synthetic scenario to
+/// an in-memory buffer, decode it back, and report both sides in the
+/// same events/sec unit the event-loop benches use. CI gates the
+/// decode rate (`bench_gate.py --min-trace-events`).
+fn trace_codec_json(records: usize) -> Result<cnmt::util::Json> {
+    use cnmt::trace::{record_synth, SynthSpec, TraceReader};
+    use cnmt::util::Json;
+
+    let spec = SynthSpec {
+        seed: 0xBE7C7,
+        requests: records,
+        offered_rps: 96.0,
+        exec_noise_std: 0.0,
+    };
+    let mut bytes = Vec::new();
+    let mut enc_s = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let (_, b) = record_synth(&spec, Vec::new())?;
+        enc_s = enc_s.min(t0.elapsed().as_secs_f64());
+        bytes = b;
+    }
+    let mut dec_s = f64::INFINITY;
+    let mut decoded = 0u64;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        let mut n = 0u64;
+        for rec in TraceReader::open(std::io::Cursor::new(&bytes))? {
+            rec?;
+            n += 1;
+        }
+        dec_s = dec_s.min(t0.elapsed().as_secs_f64());
+        decoded = n;
+    }
+    let side = |events: u64, wall_s: f64| {
+        let eps = events as f64 / wall_s;
+        let mut o = Json::object();
+        o.set("events", Json::Num(events as f64))
+            .set("wall_s", Json::Num(wall_s))
+            .set("events_per_sec", Json::Num(eps))
+            .set("ns_per_event", Json::Num(1e9 / eps));
+        o
+    };
+    eprintln!(
+        "  trace codec: {records} records, {} bytes ({:.2} B/record)  →  \
+         encode {:.0} events/s, decode {:.0} events/s",
+        bytes.len(),
+        bytes.len() as f64 / records.max(1) as f64,
+        records as f64 / enc_s,
+        decoded as f64 / dec_s
+    );
+    let mut o = Json::object();
+    o.set("records", Json::Num(records as f64))
+        .set("bytes", Json::Num(bytes.len() as f64))
+        .set(
+            "bytes_per_record",
+            Json::Num(bytes.len() as f64 / records.max(1) as f64),
+        )
+        .set("encode", side(records as u64, enc_s))
+        .set("decode", side(decoded, dec_s));
+    Ok(o)
+}
+
 /// `cnmt bench sched [--json] [--out p] [--requests n] [--sweep-requests n]
 /// [--threads n]` — the scheduler-core perf report behind
 /// `BENCH_sched.json` (events/sec, ns/event, full-sweep wall-clock at 1
-/// vs N threads). CI gates on these numbers; see `.github/workflows`.
+/// vs N threads) — and `cnmt bench trace [--json]`, the standalone
+/// trace-codec measurement. CI gates on these numbers; see
+/// `.github/workflows`.
 fn cmd_bench(args: &Args) -> Result<()> {
     use cnmt::util::bench::{bench, BenchConfig};
     use cnmt::util::Json;
@@ -787,9 +883,37 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .get(1)
         .cloned()
         .unwrap_or_else(|| "sched".to_string());
+    if which == "trace" {
+        let out_flag = args.str_opt("out");
+        let write_json = args.bool("json") || out_flag.is_some();
+        let out = PathBuf::from(
+            out_flag.unwrap_or_else(|| "reports/BENCH_trace.json".to_string()),
+        );
+        let records = args.usize("requests", TRACE_BENCH_RECORDS)?;
+        args.reject_unknown()?;
+        if records == 0 {
+            return Err(Error::Config("bench trace needs --requests > 0".into()));
+        }
+        eprintln!("bench trace: codec over {records} in-memory records");
+        let section = trace_codec_json(records)?;
+        let mut root = Json::object();
+        root.set("schema", Json::Str("bench_trace/v1".into()))
+            .set("producer", Json::Str("cnmt bench trace".into()))
+            .set("trace", section);
+        if write_json {
+            let path = report::write_report(
+                out.parent().unwrap_or_else(|| std::path::Path::new(".")),
+                out.file_stem().and_then(|s| s.to_str()).unwrap_or("BENCH_trace"),
+                &root,
+            )?;
+            eprintln!("wrote {}", path.display());
+        }
+        return Ok(());
+    }
     if which != "sched" {
         return Err(Error::Config(format!(
-            "unknown bench target `{which}` (try `cnmt bench sched`)"
+            "unknown bench target `{which}` (try `cnmt bench sched` or \
+             `cnmt bench trace`)"
         )));
     }
     // An explicit --out implies --json: dropping a requested output
@@ -908,6 +1032,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         hot.mean_ns, hot.p95_ns
     );
 
+    // Trace codec: encode/decode throughput of the binary workload
+    // trace format, so a replay-heavy CI run can be budgeted.
+    eprintln!("bench sched: trace codec ({TRACE_BENCH_RECORDS} records in memory)");
+    let trace_section = trace_codec_json(TRACE_BENCH_RECORDS)?;
+
     // Full-parameter-shaped sweep wall-clock, serial vs sharded.
     eprintln!("bench sched: sweep wall-clock ({sweep_requests} requests/point)");
     let mut sweep_cfg = load::LoadConfig {
@@ -991,7 +1120,8 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("sweep", sweep)
         .set("baseline", baseline)
         .set("speedup", speedup)
-        .set("recorder", recorder_section);
+        .set("recorder", recorder_section)
+        .set("trace", trace_section);
     if write_json {
         let path = report::write_report(
             out.parent().unwrap_or_else(|| std::path::Path::new(".")),
@@ -1003,14 +1133,22 @@ fn cmd_bench(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `cnmt trace dump|summary|verify` — decision-log tooling over the
-/// `obs` flight recorder. `dump` streams a complete JSONL trace from a
-/// canned hedged-adaptive contended pair replay (every admission,
-/// placement scoring, batch, dispatch, completion, hedge cancellation,
-/// refit install, margin adjustment and drift tick); `summary` counts a
-/// dumped trace by event tag; `verify` replays it through the offline
-/// checker, re-proving conservation, hedge-fate partitioning, the
-/// margin control law and waste-budget compliance from the log alone.
+/// `cnmt trace dump|summary|verify|record|replay|info` — trace tooling.
+///
+/// The first three operate on the `obs` flight recorder's decision log:
+/// `dump` streams a complete JSONL trace from a canned hedged-adaptive
+/// contended pair replay (every admission, placement scoring, batch,
+/// dispatch, completion, hedge cancellation, refit install, margin
+/// adjustment and drift tick); `summary` counts a dumped trace by event
+/// tag; `verify` replays it through the offline checker, re-proving
+/// conservation, hedge-fate partitioning, the margin control law and
+/// waste-budget compliance from the log alone.
+///
+/// The last three operate on binary *workload* traces (`.ctr`,
+/// [`cnmt::trace`]): `record` captures the synthetic scenario once,
+/// `replay` streams it back through the contended harness under four
+/// policies in O(outstanding) memory, and `info` validates + summarizes
+/// a trace file.
 fn cmd_trace(args: &Args) -> Result<()> {
     use cnmt::obs::{summarize_trace, verify_trace, FlightRecorder};
 
@@ -1095,8 +1233,154 @@ fn cmd_trace(args: &Args) -> Result<()> {
             }
             Ok(())
         }
+        "record" => {
+            let out = PathBuf::from(args.str("out", "trace.ctr"));
+            let requests = args.usize("requests", 100_000)?;
+            let load = args.f64("load", 96.0)?;
+            let seed = args.u64("seed", 20220315)?;
+            let exec_noise = args.f64("exec-noise", 0.0)?;
+            args.reject_unknown()?;
+            if requests == 0 {
+                return Err(Error::Config("trace record needs --requests > 0".into()));
+            }
+            if !(load.is_finite() && load > 0.0) {
+                return Err(Error::Config(format!(
+                    "trace record load {load} must be finite and > 0"
+                )));
+            }
+            if !(exec_noise.is_finite() && exec_noise >= 0.0) {
+                return Err(Error::Config(format!(
+                    "trace record exec-noise {exec_noise} must be finite and >= 0"
+                )));
+            }
+            let spec = cnmt::trace::SynthSpec {
+                seed,
+                requests,
+                offered_rps: load,
+                exec_noise_std: exec_noise,
+            };
+            if let Some(parent) = out.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            let sink = std::io::BufWriter::new(std::fs::File::create(&out)?);
+            let (header, sink) = cnmt::trace::record_synth(&spec, sink)?;
+            drop(sink);
+            let bytes = std::fs::metadata(&out)?.len();
+            eprintln!(
+                "recorded {requests} requests to {} ({bytes} bytes, {} mode, \
+                 seed {seed}, {load} r/s offered)",
+                out.display(),
+                if header.times_explicit() { "explicit-times" } else { "derived" }
+            );
+            Ok(())
+        }
+        "replay" => {
+            let path = args.positional.get(2).cloned().ok_or_else(|| {
+                Error::Config("`cnmt trace replay` needs a trace file".into())
+            })?;
+            let out_dir = PathBuf::from(args.str("out", "reports"));
+            let threads = runner::resolve_threads(args.usize("threads", 1)?);
+            args.reject_unknown()?;
+            use cnmt::util::{Json, JsonStream};
+            // One validating pass up front: every block CRC and the end
+            // marker are checked before any cell burns simulation time.
+            let summary = cnmt::trace::summarize(std::io::BufReader::new(
+                std::fs::File::open(&path)?,
+            ))?;
+            eprintln!(
+                "replaying {} records ({:.1} r/s offered) through 4 policy \
+                 cells at {threads} threads",
+                summary.records, summary.offered_rps
+            );
+            use cnmt::coordinator::PolicyKind;
+            let configs: [(PolicyKind, bool, bool); 4] = [
+                (PolicyKind::EdgeOnly, false, false),
+                (PolicyKind::CloudOnly, false, false),
+                (PolicyKind::Cnmt, true, false),
+                (PolicyKind::Cnmt, true, true),
+            ];
+            let path = &path;
+            let outcomes = runner::run_cells(threads, configs.len(), |cell| {
+                let (policy, queue_aware, adaptive) = configs[cell];
+                // Each cell re-opens the file: no shared decode state,
+                // so the cells stay pure functions of the cell index.
+                let reader = cnmt::trace::TraceReader::open(std::io::BufReader::new(
+                    std::fs::File::open(path)?,
+                ))?;
+                let ch = reader.header().characterization();
+                let opts = cnmt::sim::ContentionOpts {
+                    queue_aware,
+                    adaptive: if adaptive {
+                        Some(cnmt::sim::AdaptiveOpts::default())
+                    } else {
+                        None
+                    },
+                    ..Default::default()
+                };
+                cnmt::sim::run_contended_streamed(reader, &ch, policy, &opts)
+            });
+            let mut results = Vec::with_capacity(configs.len());
+            for outcome in outcomes {
+                results.push(outcome?);
+            }
+            for r in &results {
+                eprintln!(
+                    "  {:<18} completed {}/{}  mean {:.1} ms  p99 {:.1} ms",
+                    r.policy,
+                    r.completed,
+                    r.offered,
+                    r.mean_latency_s * 1e3,
+                    r.p99_s * 1e3
+                );
+            }
+            std::fs::create_dir_all(&out_dir)?;
+            let out_path = out_dir.join("trace_replay.json");
+            let mut s = JsonStream::new(std::io::BufWriter::new(std::fs::File::create(
+                &out_path,
+            )?));
+            s.begin_object();
+            s.key("cells");
+            s.begin_array();
+            for r in &results {
+                s.value(&r.to_json());
+            }
+            s.end_array();
+            s.key("producer");
+            s.value(&Json::Str("cnmt trace replay".into()));
+            s.key("records");
+            s.value(&Json::Num(summary.records as f64));
+            s.key("schema");
+            s.value(&Json::Str("trace_replay/v1".into()));
+            s.end_object();
+            s.finish()?;
+            eprintln!("wrote {}", out_path.display());
+            Ok(())
+        }
+        "info" => {
+            let path = args.positional.get(2).cloned().ok_or_else(|| {
+                Error::Config("`cnmt trace info` needs a trace file".into())
+            })?;
+            args.reject_unknown()?;
+            use cnmt::util::Json;
+            let s = cnmt::trace::summarize(std::io::BufReader::new(std::fs::File::open(
+                &path,
+            )?))?;
+            let mut o = Json::object();
+            o.set("records", Json::Num(s.records as f64))
+                .set("version", Json::Num(s.version as f64))
+                .set("times_explicit", Json::Bool(s.times_explicit))
+                .set("duration_s", Json::Num(s.duration_s))
+                .set("offered_rps", Json::Num(s.offered_rps))
+                .set("mean_n", Json::Num(s.mean_n))
+                .set("mean_m", Json::Num(s.mean_m));
+            println!("{}", o.to_string_pretty());
+            Ok(())
+        }
         other => Err(Error::Config(format!(
-            "unknown trace action `{other}` (try dump, summary or verify)"
+            "unknown trace action `{other}` (try dump, summary, verify, \
+             record, replay or info)"
         ))),
     }
 }

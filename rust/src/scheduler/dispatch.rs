@@ -438,6 +438,13 @@ pub struct Dispatcher {
     /// dispatcher's own events and the ones the harness records through
     /// [`Dispatcher::record`].
     recorder: Option<FlightRecorder>,
+    /// Payloads of hedge twins cancelled while still queued — such a
+    /// copy never produces a [`Completion`], so streaming callers that
+    /// refcount outstanding truths drain this instead
+    /// ([`Dispatcher::drain_cancelled_payloads`]). Only populated when
+    /// [`Dispatcher::track_cancelled_payloads`] enabled it.
+    cancelled_payloads: Vec<usize>,
+    track_cancelled: bool,
 }
 
 impl Clone for Dispatcher {
@@ -456,6 +463,8 @@ impl Clone for Dispatcher {
             scratch: Vec::with_capacity(self.scratch.capacity()),
             hedge_stats: self.hedge_stats,
             recorder: None,
+            cancelled_payloads: self.cancelled_payloads.clone(),
+            track_cancelled: self.track_cancelled,
         }
     }
 }
@@ -519,6 +528,8 @@ impl Dispatcher {
             scratch: Vec::with_capacity(batch.max_batch.max(1)),
             hedge_stats: HedgeStats::default(),
             recorder: None,
+            cancelled_payloads: Vec::new(),
+            track_cancelled: false,
         }
     }
 
@@ -533,6 +544,22 @@ impl Dispatcher {
     /// Detach and return the flight recorder, if one is attached.
     pub fn take_recorder(&mut self) -> Option<FlightRecorder> {
         self.recorder.take()
+    }
+
+    /// Enable (or disable) recording of cancelled-while-queued hedge
+    /// twins' payloads. Off by default: the classic materialized
+    /// harness never needs it, and keeping the vector untouched
+    /// preserves the steady-state zero-allocation guarantee.
+    pub fn track_cancelled_payloads(&mut self, on: bool) {
+        self.track_cancelled = on;
+    }
+
+    /// Drain the payloads of hedge twins cancelled while still queued
+    /// since the last drain. A cancelled-queued copy never surfaces as
+    /// a [`Completion`], so a streaming caller releases its truth
+    /// window reference here instead.
+    pub fn drain_cancelled_payloads(&mut self) -> std::vec::Drain<'_, usize> {
+        self.cancelled_payloads.drain(..)
     }
 
     /// The attached flight recorder, for callers (the harness) that
@@ -1013,7 +1040,13 @@ impl Dispatcher {
         F: FnMut(Completion),
     {
         let Reverse(p) = self.pending.pop().expect("pending completion exists");
-        let kind = self.resolve_completion(p.lane, p.request.hedge, p.request.id, p.done_s);
+        let kind = self.resolve_completion(
+            p.lane,
+            p.request.hedge,
+            p.request.id,
+            p.request.payload,
+            p.done_s,
+        );
         if let Some(rec) = self.recorder.as_mut() {
             rec.record(
                 p.done_s,
@@ -1040,6 +1073,7 @@ impl Dispatcher {
         lane: usize,
         hedge: Option<SlabKey>,
         id: u64,
+        payload: usize,
         done_s: f64,
     ) -> CompletionKind {
         let key = match hedge {
@@ -1089,6 +1123,9 @@ impl Dispatcher {
                     // admission slot now; the entry itself stays until
                     // the ghost is physically purged.
                     self.hedge_stats.cancelled_unrun += 1;
+                    if self.track_cancelled {
+                        self.cancelled_payloads.push(payload);
+                    }
                     {
                         let lane = &mut self.lanes[twin_lane];
                         lane.tracker.on_cancel(est);

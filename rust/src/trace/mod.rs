@@ -1,0 +1,844 @@
+//! Compact binary workload-trace format (`.ctr`): record a request
+//! stream once, replay it bit-deterministically through the simulation
+//! harness.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! header (96 bytes):
+//!   0..8    magic  b"CNMTRACE"
+//!   8..10   version u16 (currently 1)
+//!   10..12  flags   u16 (bit 0: TIMES_EXPLICIT)
+//!   12..92  ten f64: edge plane (alpha_n, alpha_m, beta),
+//!           cloud plane (alpha_n, alpha_m, beta),
+//!           n2m gamma, n2m delta, mean_m, rtt_s
+//!   92..96  crc32 of bytes 0..92
+//! blocks, repeated:
+//!   n_records u32 | payload_len u32 | payload | crc32(payload) u32
+//! end marker:
+//!   a block with n_records == 0 whose 8-byte payload is the u64
+//!   total record count
+//! ```
+//!
+//! Each record is a run of unsigned LEB128 varints. Arrival times are
+//! quantized to integer microseconds and delta-encoded against the
+//! previous record. In *derived* mode (the default) a record is just
+//! `[delta_us, n, m]` and the service times are recomputed from the
+//! header's cost planes; with [`FLAG_TIMES_EXPLICIT`] set each record
+//! carries `[delta_us, n, m, t_edge_us, t_cloud_us, t_tx_us]`.
+//!
+//! Every structural defect — bad magic, unsupported version, CRC
+//! mismatch, truncation, record-count mismatch — surfaces as a typed
+//! [`Error::Trace`], never a panic.
+
+use std::io::{Read, Write};
+
+use crate::experiments::load::{CLOUD_PLANE, EDGE_PLANE, MEAN_N, N2M_DELTA, N2M_GAMMA, RTT_S};
+use crate::predictor::{N2mRegressor, TexeModel};
+use crate::sim::{Characterization, RequestTruth};
+use crate::util::Rng;
+use crate::{Error, Result};
+
+/// File magic: the first eight bytes of every trace.
+pub const TRACE_MAGIC: [u8; 8] = *b"CNMTRACE";
+
+/// Format version this build reads and writes.
+pub const TRACE_VERSION: u16 = 1;
+
+/// Header flag bit 0: records carry explicit per-request service
+/// times instead of deriving them from the header's cost planes.
+pub const FLAG_TIMES_EXPLICIT: u16 = 1;
+
+/// Fixed byte length of the trace header.
+pub const HEADER_LEN: usize = 96;
+
+/// Records per CRC-checked block.
+pub const BLOCK_RECORDS: u32 = 4096;
+
+/// Decoder sanity cap on a block's payload length (64 MiB).
+const MAX_BLOCK_PAYLOAD: u32 = 1 << 26;
+
+/// Decoder sanity cap on a block's record count.
+const MAX_BLOCK_RECORDS: u32 = 1 << 22;
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected — compatible with zlib.crc32)
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC_TABLE: [u32; 256] = crc32_table();
+
+/// CRC32-IEEE (the zlib/`crc32` polynomial) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in bytes {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Varints + microsecond quantization
+// ---------------------------------------------------------------------------
+
+fn put_varint(buf: &mut Vec<u8>, mut v: u64) {
+    loop {
+        let b = (v & 0x7F) as u8;
+        v >>= 7;
+        if v == 0 {
+            buf.push(b);
+            return;
+        }
+        buf.push(b | 0x80);
+    }
+}
+
+fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf
+            .get(*pos)
+            .ok_or_else(|| Error::Trace("varint runs past its block payload".into()))?;
+        *pos += 1;
+        if shift > 63 {
+            return Err(Error::Trace("varint overflows u64".into()));
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+    }
+}
+
+/// Quantize a duration in seconds to integer microseconds
+/// (round-half-up). The inverse of [`us_to_s`]: for any count below
+/// ~1e14 µs, `s_to_us(us_to_s(x)) == x`.
+pub fn s_to_us(s: f64) -> u64 {
+    (s * 1e6 + 0.5).floor() as u64
+}
+
+/// Integer microseconds back to seconds.
+pub fn us_to_s(us: u64) -> f64 {
+    us as f64 * 1e-6
+}
+
+// ---------------------------------------------------------------------------
+// Header
+// ---------------------------------------------------------------------------
+
+/// The versioned, CRC-protected trace header: format metadata plus the
+/// workload characterization (cost planes, n→m line, link RTT) needed
+/// to derive service times and to build a [`Characterization`] for the
+/// replay harness.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TraceHeader {
+    /// Format version (must equal [`TRACE_VERSION`] to be readable).
+    pub version: u16,
+    /// Flag bits (see [`FLAG_TIMES_EXPLICIT`]).
+    pub flags: u16,
+    /// Edge-device T_exe plane `(alpha_n, alpha_m, beta)`.
+    pub edge_plane: (f64, f64, f64),
+    /// Cloud-device T_exe plane `(alpha_n, alpha_m, beta)`.
+    pub cloud_plane: (f64, f64, f64),
+    /// n→m regression slope.
+    pub n2m_gamma: f64,
+    /// n→m regression intercept.
+    pub n2m_delta: f64,
+    /// Mean output length over the whole trace (for the Naive router).
+    pub mean_m: f64,
+    /// Link round-trip time in seconds.
+    pub rtt_s: f64,
+}
+
+impl TraceHeader {
+    /// Whether records carry explicit service times.
+    pub fn times_explicit(&self) -> bool {
+        self.flags & FLAG_TIMES_EXPLICIT != 0
+    }
+
+    /// Build the simulation-harness [`Characterization`] this trace
+    /// describes (warm cost models, no fit diagnostics).
+    pub fn characterization(&self) -> Characterization {
+        Characterization {
+            texe_edge: TexeModel::from_coeffs(
+                self.edge_plane.0,
+                self.edge_plane.1,
+                self.edge_plane.2,
+            ),
+            texe_cloud: TexeModel::from_coeffs(
+                self.cloud_plane.0,
+                self.cloud_plane.1,
+                self.cloud_plane.2,
+            ),
+            n2m: N2mRegressor::from_coeffs(self.n2m_gamma, self.n2m_delta),
+            mean_m: self.mean_m,
+        }
+    }
+
+    fn encode(&self) -> [u8; HEADER_LEN] {
+        let mut b = [0u8; HEADER_LEN];
+        b[0..8].copy_from_slice(&TRACE_MAGIC);
+        b[8..10].copy_from_slice(&self.version.to_le_bytes());
+        b[10..12].copy_from_slice(&self.flags.to_le_bytes());
+        let fields = [
+            self.edge_plane.0,
+            self.edge_plane.1,
+            self.edge_plane.2,
+            self.cloud_plane.0,
+            self.cloud_plane.1,
+            self.cloud_plane.2,
+            self.n2m_gamma,
+            self.n2m_delta,
+            self.mean_m,
+            self.rtt_s,
+        ];
+        for (i, f) in fields.iter().enumerate() {
+            b[12 + 8 * i..20 + 8 * i].copy_from_slice(&f.to_le_bytes());
+        }
+        let crc = crc32(&b[..92]);
+        b[92..96].copy_from_slice(&crc.to_le_bytes());
+        b
+    }
+
+    fn decode(b: &[u8; HEADER_LEN]) -> Result<TraceHeader> {
+        if b[0..8] != TRACE_MAGIC {
+            return Err(Error::Trace("not a cnmt trace (bad magic)".into()));
+        }
+        let stored = u32::from_le_bytes([b[92], b[93], b[94], b[95]]);
+        if crc32(&b[..92]) != stored {
+            return Err(Error::Trace("header crc mismatch (corrupted trace)".into()));
+        }
+        let version = u16::from_le_bytes([b[8], b[9]]);
+        if version != TRACE_VERSION {
+            return Err(Error::Trace(format!(
+                "unsupported trace version {version} (this build reads version {TRACE_VERSION})"
+            )));
+        }
+        let flags = u16::from_le_bytes([b[10], b[11]]);
+        if flags & !FLAG_TIMES_EXPLICIT != 0 {
+            return Err(Error::Trace(format!("unknown trace flags {flags:#06x}")));
+        }
+        let mut fields = [0.0f64; 10];
+        for (i, f) in fields.iter_mut().enumerate() {
+            let mut raw = [0u8; 8];
+            raw.copy_from_slice(&b[12 + 8 * i..20 + 8 * i]);
+            *f = f64::from_le_bytes(raw);
+        }
+        Ok(TraceHeader {
+            version,
+            flags,
+            edge_plane: (fields[0], fields[1], fields[2]),
+            cloud_plane: (fields[3], fields[4], fields[5]),
+            n2m_gamma: fields[6],
+            n2m_delta: fields[7],
+            mean_m: fields[8],
+            rtt_s: fields[9],
+        })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Writer
+// ---------------------------------------------------------------------------
+
+/// Streaming trace encoder: push [`RequestTruth`] records in arrival
+/// order, blocks are CRC-sealed and flushed every [`BLOCK_RECORDS`]
+/// records, and [`TraceWriter::finish`] appends the end marker.
+pub struct TraceWriter<W: Write> {
+    w: W,
+    explicit: bool,
+    texe_edge: TexeModel,
+    texe_cloud: TexeModel,
+    rtt_us: u64,
+    buf: Vec<u8>,
+    n_in_block: u32,
+    total: u64,
+    last_us: u64,
+}
+
+impl<W: Write> TraceWriter<W> {
+    /// Write the header and return a writer for the record stream.
+    pub fn create(mut w: W, header: &TraceHeader) -> Result<Self> {
+        if header.version != TRACE_VERSION {
+            return Err(Error::Trace(format!(
+                "cannot write trace version {} (this build writes version {TRACE_VERSION})",
+                header.version
+            )));
+        }
+        w.write_all(&header.encode())?;
+        Ok(TraceWriter {
+            w,
+            explicit: header.times_explicit(),
+            texe_edge: TexeModel::from_coeffs(
+                header.edge_plane.0,
+                header.edge_plane.1,
+                header.edge_plane.2,
+            ),
+            texe_cloud: TexeModel::from_coeffs(
+                header.cloud_plane.0,
+                header.cloud_plane.1,
+                header.cloud_plane.2,
+            ),
+            rtt_us: s_to_us(header.rtt_s),
+            buf: Vec::with_capacity(BLOCK_RECORDS as usize * 8),
+            n_in_block: 0,
+            total: 0,
+            last_us: 0,
+        })
+    }
+
+    /// Append one record. Records must arrive sorted by `arrival_s`;
+    /// in derived mode the record's times must match the header's
+    /// planes exactly after µs quantization (use
+    /// [`FLAG_TIMES_EXPLICIT`] for workloads with execution noise).
+    pub fn push(&mut self, truth: &RequestTruth) -> Result<()> {
+        let arrival_us = s_to_us(truth.arrival_s);
+        let delta = arrival_us.checked_sub(self.last_us).ok_or_else(|| {
+            Error::Trace("records must be pushed in non-decreasing arrival order".into())
+        })?;
+        self.last_us = arrival_us;
+        put_varint(&mut self.buf, delta);
+        put_varint(&mut self.buf, truth.n as u64);
+        put_varint(&mut self.buf, truth.m_real as u64);
+        if self.explicit {
+            put_varint(&mut self.buf, s_to_us(truth.t_edge));
+            put_varint(&mut self.buf, s_to_us(truth.t_cloud));
+            put_varint(&mut self.buf, s_to_us(truth.t_tx));
+        } else {
+            let e_us = s_to_us(self.texe_edge.estimate(truth.n, truth.m_real as f64));
+            let c_us = s_to_us(self.texe_cloud.estimate(truth.n, truth.m_real as f64));
+            if s_to_us(truth.t_edge) != e_us
+                || s_to_us(truth.t_cloud) != c_us
+                || s_to_us(truth.t_tx) != self.rtt_us
+            {
+                return Err(Error::Trace(
+                    "derived-mode record's times do not match the header planes \
+                     (set FLAG_TIMES_EXPLICIT to store per-record times)"
+                        .into(),
+                ));
+            }
+        }
+        self.n_in_block += 1;
+        self.total += 1;
+        if self.n_in_block >= BLOCK_RECORDS {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    fn flush_block(&mut self) -> Result<()> {
+        if self.n_in_block == 0 {
+            return Ok(());
+        }
+        self.w.write_all(&self.n_in_block.to_le_bytes())?;
+        self.w.write_all(&(self.buf.len() as u32).to_le_bytes())?;
+        self.w.write_all(&self.buf)?;
+        self.w.write_all(&crc32(&self.buf).to_le_bytes())?;
+        self.buf.clear();
+        self.n_in_block = 0;
+        Ok(())
+    }
+
+    /// Seal the final block, append the end marker (record count), and
+    /// return the underlying writer.
+    pub fn finish(mut self) -> Result<W> {
+        self.flush_block()?;
+        let payload = self.total.to_le_bytes();
+        self.w.write_all(&0u32.to_le_bytes())?;
+        self.w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        self.w.write_all(&payload)?;
+        self.w.write_all(&crc32(&payload).to_le_bytes())?;
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Reader
+// ---------------------------------------------------------------------------
+
+/// Streaming trace decoder: an `Iterator` over
+/// `Result<RequestTruth>` that validates the header up front, each
+/// block's CRC as it is reached, and the end marker's record count.
+pub struct TraceReader<R: Read> {
+    r: R,
+    header: TraceHeader,
+    explicit: bool,
+    texe_edge: TexeModel,
+    texe_cloud: TexeModel,
+    rtt_us: u64,
+    buf: Vec<u8>,
+    pos: usize,
+    left_in_block: u32,
+    cum_us: u64,
+    seen: u64,
+    done: bool,
+}
+
+impl<R: Read> TraceReader<R> {
+    /// Read and validate the header, returning a record iterator.
+    pub fn open(mut r: R) -> Result<Self> {
+        let mut hb = [0u8; HEADER_LEN];
+        r.read_exact(&mut hb)
+            .map_err(|_| Error::Trace("truncated trace: incomplete header".into()))?;
+        let header = TraceHeader::decode(&hb)?;
+        Ok(TraceReader {
+            r,
+            explicit: header.times_explicit(),
+            texe_edge: TexeModel::from_coeffs(
+                header.edge_plane.0,
+                header.edge_plane.1,
+                header.edge_plane.2,
+            ),
+            texe_cloud: TexeModel::from_coeffs(
+                header.cloud_plane.0,
+                header.cloud_plane.1,
+                header.cloud_plane.2,
+            ),
+            rtt_us: s_to_us(header.rtt_s),
+            header,
+            buf: Vec::new(),
+            pos: 0,
+            left_in_block: 0,
+            cum_us: 0,
+            seen: 0,
+            done: false,
+        })
+    }
+
+    /// The validated header.
+    pub fn header(&self) -> &TraceHeader {
+        &self.header
+    }
+
+    fn read_u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.r
+            .read_exact(&mut b)
+            .map_err(|_| Error::Trace(format!("truncated trace: incomplete {what}")))?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    /// Load the next block into `buf`. Returns `false` when the end
+    /// marker was reached (and its record count verified).
+    fn next_block(&mut self) -> Result<bool> {
+        let n = self.read_u32("block length prefix")?;
+        let len = self.read_u32("block length prefix")?;
+        if len > MAX_BLOCK_PAYLOAD {
+            return Err(Error::Trace(format!(
+                "block payload length {len} exceeds the format bound {MAX_BLOCK_PAYLOAD}"
+            )));
+        }
+        self.buf.resize(len as usize, 0);
+        self.r
+            .read_exact(&mut self.buf)
+            .map_err(|_| Error::Trace("truncated trace: incomplete block payload".into()))?;
+        let stored = self.read_u32("block crc")?;
+        if crc32(&self.buf) != stored {
+            return Err(Error::Trace("block crc mismatch (corrupted trace)".into()));
+        }
+        if n == 0 {
+            if self.buf.len() != 8 {
+                return Err(Error::Trace("malformed end marker".into()));
+            }
+            let mut raw = [0u8; 8];
+            raw.copy_from_slice(&self.buf);
+            let total = u64::from_le_bytes(raw);
+            if total != self.seen {
+                return Err(Error::Trace(format!(
+                    "record count mismatch: end marker says {total}, stream held {}",
+                    self.seen
+                )));
+            }
+            return Ok(false);
+        }
+        if n > MAX_BLOCK_RECORDS {
+            return Err(Error::Trace(format!(
+                "block record count {n} exceeds the format bound {MAX_BLOCK_RECORDS}"
+            )));
+        }
+        self.left_in_block = n;
+        self.pos = 0;
+        Ok(true)
+    }
+
+    fn decode_one(&mut self) -> Result<RequestTruth> {
+        let delta = get_varint(&self.buf, &mut self.pos)?;
+        let n = get_varint(&self.buf, &mut self.pos)? as usize;
+        let m = get_varint(&self.buf, &mut self.pos)? as usize;
+        if n == 0 || m == 0 {
+            return Err(Error::Trace("record has a zero-length sentence".into()));
+        }
+        self.cum_us = self
+            .cum_us
+            .checked_add(delta)
+            .ok_or_else(|| Error::Trace("arrival clock overflows u64 microseconds".into()))?;
+        let (e_us, c_us, tx_us) = if self.explicit {
+            (
+                get_varint(&self.buf, &mut self.pos)?,
+                get_varint(&self.buf, &mut self.pos)?,
+                get_varint(&self.buf, &mut self.pos)?,
+            )
+        } else {
+            (
+                s_to_us(self.texe_edge.estimate(n, m as f64)),
+                s_to_us(self.texe_cloud.estimate(n, m as f64)),
+                self.rtt_us,
+            )
+        };
+        self.left_in_block -= 1;
+        if self.left_in_block == 0 && self.pos != self.buf.len() {
+            return Err(Error::Trace("block payload has trailing bytes".into()));
+        }
+        self.seen += 1;
+        Ok(RequestTruth {
+            n,
+            m_real: m,
+            arrival_s: us_to_s(self.cum_us),
+            t_edge: us_to_s(e_us),
+            t_cloud: us_to_s(c_us),
+            t_tx: us_to_s(tx_us),
+            rtt: us_to_s(tx_us),
+        })
+    }
+}
+
+impl<R: Read> Iterator for TraceReader<R> {
+    type Item = Result<RequestTruth>;
+
+    fn next(&mut self) -> Option<Result<RequestTruth>> {
+        if self.done {
+            return None;
+        }
+        if self.left_in_block == 0 {
+            match self.next_block() {
+                Ok(true) => {}
+                Ok(false) => {
+                    self.done = true;
+                    return None;
+                }
+                Err(e) => {
+                    self.done = true;
+                    return Some(Err(e));
+                }
+            }
+        }
+        match self.decode_one() {
+            Ok(t) => Some(Ok(t)),
+            Err(e) => {
+                self.done = true;
+                Some(Err(e))
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Summary (for `cnmt trace info`)
+// ---------------------------------------------------------------------------
+
+/// Aggregate statistics of a trace, computed in one streaming pass.
+#[derive(Debug, Clone, Copy)]
+pub struct TraceSummary {
+    /// Format version from the header.
+    pub version: u16,
+    /// Whether records carry explicit service times.
+    pub times_explicit: bool,
+    /// Total record count (verified against the end marker).
+    pub records: u64,
+    /// Arrival time of the last record (the first arrives near 0).
+    pub duration_s: f64,
+    /// Empirical offered load, records / duration.
+    pub offered_rps: f64,
+    /// Mean input length over the trace.
+    pub mean_n: f64,
+    /// Mean output length over the trace.
+    pub mean_m: f64,
+}
+
+/// Walk a whole trace, validating every block CRC and the end marker,
+/// and return its summary.
+pub fn summarize<R: Read>(r: R) -> Result<TraceSummary> {
+    let mut reader = TraceReader::open(r)?;
+    let header = *reader.header();
+    let mut records = 0u64;
+    let mut last_arrival_s = 0.0f64;
+    let mut sum_n = 0u64;
+    let mut sum_m = 0u64;
+    for rec in &mut reader {
+        let t = rec?;
+        records += 1;
+        last_arrival_s = t.arrival_s;
+        sum_n += t.n as u64;
+        sum_m += t.m_real as u64;
+    }
+    let denom = records.max(1) as f64;
+    Ok(TraceSummary {
+        version: header.version,
+        times_explicit: header.times_explicit(),
+        records,
+        duration_s: last_arrival_s,
+        offered_rps: if last_arrival_s > 0.0 { records as f64 / last_arrival_s } else { 0.0 },
+        mean_n: sum_n as f64 / denom,
+        mean_m: sum_m as f64 / denom,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic scenario generator (µs-quantized, trace-native)
+// ---------------------------------------------------------------------------
+
+/// Output-length noise std dev of the synthetic scenario (tokens).
+const SYNTH_M_NOISE_STD: f64 = 2.0;
+
+/// Sentence-length cap of the synthetic scenario (tokens).
+const SYNTH_N_MAX: usize = 62;
+
+/// Parameters of the trace-native synthetic scenario used by
+/// `cnmt trace record` and the checked-in CI traces.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SynthSpec {
+    /// Master RNG seed.
+    pub seed: u64,
+    /// Number of requests to generate.
+    pub requests: usize,
+    /// Offered load in requests per second.
+    pub offered_rps: f64,
+    /// Execution-time noise std dev; `0.0` selects derived mode
+    /// (3 varints per record), anything larger selects explicit mode.
+    pub exec_noise_std: f64,
+}
+
+impl Default for SynthSpec {
+    fn default() -> Self {
+        SynthSpec { seed: 20_220_315, requests: 100_000, offered_rps: 96.0, exec_noise_std: 0.0 }
+    }
+}
+
+/// Lazy generator of the synthetic scenario: a xoshiro256** stream of
+/// Poisson arrivals with correlated input/output lengths, every time
+/// quantized to integer microseconds so that the generated stream,
+/// the encoded trace, and the decoded replay are bit-identical.
+pub struct SynthTrace {
+    rng: Rng,
+    remaining: usize,
+    cum_us: u64,
+    offered_rps: f64,
+    noise_std: f64,
+    texe_edge: TexeModel,
+    texe_cloud: TexeModel,
+    rtt_us: u64,
+}
+
+impl SynthTrace {
+    /// Start the generator for `spec`.
+    pub fn new(spec: &SynthSpec) -> Self {
+        SynthTrace {
+            rng: Rng::new(spec.seed),
+            remaining: spec.requests,
+            cum_us: 0,
+            offered_rps: spec.offered_rps,
+            noise_std: spec.exec_noise_std,
+            texe_edge: TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2),
+            texe_cloud: TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+            rtt_us: s_to_us(RTT_S),
+        }
+    }
+}
+
+impl Iterator for SynthTrace {
+    type Item = RequestTruth;
+
+    fn next(&mut self) -> Option<RequestTruth> {
+        if self.remaining == 0 {
+            return None;
+        }
+        self.remaining -= 1;
+        let dt = self.rng.exponential(self.offered_rps);
+        let n = 1 + (self.rng.exponential(1.0 / MEAN_N) as usize).min(SYNTH_N_MAX - 1);
+        let m_mean = N2M_GAMMA * n as f64 + N2M_DELTA;
+        let m = (m_mean + self.rng.normal_ms(0.0, SYNTH_M_NOISE_STD))
+            .round()
+            .clamp(1.0, SYNTH_N_MAX as f64) as usize;
+        let (noise_e, noise_c) = if self.noise_std > 0.0 {
+            (
+                (1.0 + self.rng.normal_ms(0.0, self.noise_std)).max(0.2),
+                (1.0 + self.rng.normal_ms(0.0, self.noise_std)).max(0.2),
+            )
+        } else {
+            (1.0, 1.0)
+        };
+        self.cum_us += s_to_us(dt);
+        let e_us = s_to_us(self.texe_edge.estimate(n, m as f64) * noise_e);
+        let c_us = s_to_us(self.texe_cloud.estimate(n, m as f64) * noise_c);
+        Some(RequestTruth {
+            n,
+            m_real: m,
+            arrival_s: us_to_s(self.cum_us),
+            t_edge: us_to_s(e_us),
+            t_cloud: us_to_s(c_us),
+            t_tx: us_to_s(self.rtt_us),
+            rtt: us_to_s(self.rtt_us),
+        })
+    }
+}
+
+/// Build the header for `spec`: a characterization prepass runs the
+/// full generator once to compute the trace-wide `mean_m` (the replay
+/// harness's Naive router needs it), so record+header stay a pure
+/// function of the spec.
+pub fn synth_header(spec: &SynthSpec) -> TraceHeader {
+    let mut sum_m = 0u64;
+    for t in SynthTrace::new(spec) {
+        sum_m += t.m_real as u64;
+    }
+    TraceHeader {
+        version: TRACE_VERSION,
+        flags: if spec.exec_noise_std > 0.0 { FLAG_TIMES_EXPLICIT } else { 0 },
+        edge_plane: EDGE_PLANE,
+        cloud_plane: CLOUD_PLANE,
+        n2m_gamma: N2M_GAMMA,
+        n2m_delta: N2M_DELTA,
+        mean_m: sum_m as f64 / spec.requests.max(1) as f64,
+        rtt_s: RTT_S,
+    }
+}
+
+/// Record the synthetic scenario for `spec` into `w` (header prepass
+/// plus a second streaming generation pass; peak memory is one block).
+pub fn record_synth<W: Write>(spec: &SynthSpec, w: W) -> Result<(TraceHeader, W)> {
+    let header = synth_header(spec);
+    let mut writer = TraceWriter::create(w, &header)?;
+    for t in SynthTrace::new(spec) {
+        writer.push(&t)?;
+    }
+    let w = writer.finish()?;
+    Ok((header, w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn small_spec() -> SynthSpec {
+        SynthSpec { seed: 7, requests: 300, offered_rps: 80.0, exec_noise_std: 0.0 }
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // The canonical IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+    }
+
+    #[test]
+    fn varint_round_trip() {
+        let vals = [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX];
+        let mut buf = Vec::new();
+        for &v in &vals {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &vals {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+    }
+
+    #[test]
+    fn quantization_round_trips() {
+        for us in [0u64, 1, 41_999, 42_000, 1_000_000_007, 123_456_789_012_345] {
+            assert_eq!(s_to_us(us_to_s(us)), us);
+        }
+    }
+
+    #[test]
+    fn header_round_trip_and_corruption() {
+        let header = synth_header(&small_spec());
+        let bytes = header.encode();
+        assert_eq!(TraceHeader::decode(&bytes).unwrap(), header);
+
+        let mut bad = bytes;
+        bad[20] ^= 0xFF;
+        let err = TraceHeader::decode(&bad).unwrap_err();
+        assert!(matches!(err, Error::Trace(ref m) if m.contains("crc")), "{err}");
+
+        let mut wrong_magic = bytes;
+        wrong_magic[0] = b'X';
+        let err = TraceHeader::decode(&wrong_magic).unwrap_err();
+        assert!(matches!(err, Error::Trace(ref m) if m.contains("magic")), "{err}");
+    }
+
+    #[test]
+    fn synth_record_replay_is_bit_identical() {
+        let spec = small_spec();
+        let (_, bytes) = record_synth(&spec, Vec::new()).unwrap();
+        let decoded: Vec<RequestTruth> = TraceReader::open(Cursor::new(&bytes))
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap();
+        let live: Vec<RequestTruth> = SynthTrace::new(&spec).collect();
+        assert_eq!(decoded.len(), live.len());
+        for (d, l) in decoded.iter().zip(&live) {
+            assert_eq!(d.n, l.n);
+            assert_eq!(d.m_real, l.m_real);
+            assert_eq!(d.arrival_s.to_bits(), l.arrival_s.to_bits());
+            assert_eq!(d.t_edge.to_bits(), l.t_edge.to_bits());
+            assert_eq!(d.t_cloud.to_bits(), l.t_cloud.to_bits());
+            assert_eq!(d.t_tx.to_bits(), l.t_tx.to_bits());
+            assert_eq!(d.rtt.to_bits(), l.rtt.to_bits());
+        }
+    }
+
+    #[test]
+    fn truncated_and_corrupted_blocks_fail_closed() {
+        let (_, bytes) = record_synth(&small_spec(), Vec::new()).unwrap();
+
+        // Chop the end marker off: the reader must report truncation,
+        // not silently yield a short stream.
+        let cut = &bytes[..bytes.len() - 10];
+        let err = TraceReader::open(Cursor::new(cut))
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap_err();
+        assert!(matches!(err, Error::Trace(ref m) if m.contains("truncated")), "{err}");
+
+        // Flip one payload byte: the block CRC must catch it.
+        let mut corrupt = bytes.clone();
+        corrupt[HEADER_LEN + 16] ^= 0x01;
+        let err = TraceReader::open(Cursor::new(&corrupt))
+            .unwrap()
+            .collect::<Result<Vec<_>>>()
+            .unwrap_err();
+        assert!(matches!(err, Error::Trace(ref m) if m.contains("crc")), "{err}");
+    }
+
+    #[test]
+    fn summarize_counts_match() {
+        let spec = small_spec();
+        let (header, bytes) = record_synth(&spec, Vec::new()).unwrap();
+        let s = summarize(Cursor::new(&bytes)).unwrap();
+        assert_eq!(s.records, spec.requests as u64);
+        assert_eq!(s.version, TRACE_VERSION);
+        assert!(!s.times_explicit);
+        assert!((s.mean_m - header.mean_m).abs() < 1e-12);
+        assert!(s.duration_s > 0.0);
+    }
+}

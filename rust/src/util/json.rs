@@ -491,6 +491,135 @@ fn utf8_len(first: u8) -> usize {
     }
 }
 
+// ---------------------------------------------------------------- streaming writer
+
+/// Emit-as-you-go pretty-JSON writer for reports too large to build as
+/// an in-memory [`Json`] tree.
+///
+/// Produces output byte-identical to [`Json::to_string_pretty`] on the
+/// same logical document: 2-space indent, `{}`/`[]` for empty
+/// containers, identical number/string formatting (subtrees are
+/// rendered by the same serializer). Misuse (closing an unopened
+/// container, finishing with open containers) panics — builder use
+/// only, like [`Json::set`]. IO errors are latched so the builder
+/// calls stay infallible; [`JsonStream::finish`] surfaces the first
+/// one.
+pub struct JsonStream<W: std::io::Write> {
+    w: W,
+    err: Option<std::io::Error>,
+    counts: Vec<usize>,
+    pending_key: bool,
+}
+
+impl<W: std::io::Write> JsonStream<W> {
+    /// Wrap a writer; emit exactly one root value before `finish`.
+    pub fn new(w: W) -> Self {
+        JsonStream { w, err: None, counts: Vec::new(), pending_key: false }
+    }
+
+    fn out(&mut self, bytes: &[u8]) {
+        if self.err.is_some() {
+            return;
+        }
+        if let Err(e) = self.w.write_all(bytes) {
+            self.err = Some(e);
+        }
+    }
+
+    /// Comma/newline/indent before an element, unless it is the value
+    /// of a key that already wrote them.
+    fn prelude(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        if let Some(count) = self.counts.last_mut() {
+            let n = *count;
+            *count += 1;
+            let depth = self.counts.len();
+            let mut s = String::with_capacity(2 + 2 * depth);
+            if n > 0 {
+                s.push(',');
+            }
+            s.push('\n');
+            for _ in 0..2 * depth {
+                s.push(' ');
+            }
+            self.out(s.as_bytes());
+        }
+    }
+
+    /// Open an object.
+    pub fn begin_object(&mut self) {
+        self.prelude();
+        self.out(b"{");
+        self.counts.push(0);
+    }
+
+    /// Open an array.
+    pub fn begin_array(&mut self) {
+        self.prelude();
+        self.out(b"[");
+        self.counts.push(0);
+    }
+
+    fn close(&mut self, bracket: u8) {
+        let count = self.counts.pop().expect("JsonStream: close without open");
+        if count == 0 {
+            self.out(&[bracket]);
+            return;
+        }
+        let depth = self.counts.len();
+        let mut s = String::with_capacity(2 + 2 * depth);
+        s.push('\n');
+        for _ in 0..2 * depth {
+            s.push(' ');
+        }
+        s.push(bracket as char);
+        self.out(s.as_bytes());
+    }
+
+    /// Close the innermost object.
+    pub fn end_object(&mut self) {
+        self.close(b'}');
+    }
+
+    /// Close the innermost array.
+    pub fn end_array(&mut self) {
+        self.close(b']');
+    }
+
+    /// Write an object key; the next `value`/`begin_*` call becomes
+    /// its value.
+    pub fn key(&mut self, k: &str) {
+        self.prelude();
+        let mut s = String::new();
+        write_escaped(&mut s, k);
+        s.push_str(": ");
+        self.out(s.as_bytes());
+        self.pending_key = true;
+    }
+
+    /// Write a complete [`Json`] subtree in place.
+    pub fn value(&mut self, v: &Json) {
+        self.prelude();
+        let depth = self.counts.len();
+        let mut s = String::new();
+        v.write(&mut s, Some(2), depth);
+        self.out(s.as_bytes());
+    }
+
+    /// Surface any latched IO error, flush, and return the writer.
+    pub fn finish(mut self) -> std::io::Result<W> {
+        assert!(self.counts.is_empty(), "JsonStream: unclosed container");
+        if let Some(e) = self.err {
+            return Err(e);
+        }
+        self.w.flush()?;
+        Ok(self.w)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -577,5 +706,59 @@ mod tests {
     fn deterministic_key_order() {
         let v = Json::parse(r#"{"b":1,"a":2}"#).unwrap();
         assert_eq!(v.to_string(), r#"{"a":2,"b":1}"#);
+    }
+
+    #[test]
+    fn stream_matches_pretty_tree() {
+        // Build the same document as a tree and through the streaming
+        // writer; the bytes must be identical.
+        let mut inner = Json::object();
+        inner
+            .set("s", Json::Str("a\"b\nc".into()))
+            .set("neg", Json::Num(-3.5))
+            .set("int", Json::Num(42.0));
+        let mut tree = Json::object();
+        tree.set("configs", Json::Array(vec![inner.clone(), Json::Null]))
+            .set("empty_arr", Json::Array(vec![]))
+            .set("empty_obj", Json::object())
+            .set("n", Json::Num(1.0));
+
+        let mut s = JsonStream::new(Vec::new());
+        s.begin_object();
+        s.key("configs");
+        s.begin_array();
+        s.value(&inner);
+        s.value(&Json::Null);
+        s.end_array();
+        s.key("empty_arr");
+        s.begin_array();
+        s.end_array();
+        s.key("empty_obj");
+        s.begin_object();
+        s.end_object();
+        s.key("n");
+        s.value(&Json::Num(1.0));
+        s.end_object();
+        let bytes = s.finish().unwrap();
+
+        assert_eq!(String::from_utf8(bytes).unwrap(), tree.to_string_pretty());
+    }
+
+    #[test]
+    fn stream_root_scalar_and_array() {
+        let mut s = JsonStream::new(Vec::new());
+        s.value(&Json::Num(7.0));
+        assert_eq!(s.finish().unwrap(), b"7");
+
+        let v = Json::Array(vec![Json::Num(1.0), Json::Bool(true)]);
+        let mut s = JsonStream::new(Vec::new());
+        s.begin_array();
+        s.value(&Json::Num(1.0));
+        s.value(&Json::Bool(true));
+        s.end_array();
+        assert_eq!(
+            String::from_utf8(s.finish().unwrap()).unwrap(),
+            v.to_string_pretty()
+        );
     }
 }

@@ -3,7 +3,9 @@
 //! The offline build environment ships no `serde`, `rand`, or `clap`;
 //! per the project's build-every-substrate rule these live here:
 //!
-//! * [`json`] — RFC 8259 parser + writer (manifest, configs, reports).
+//! * [`json`] — RFC 8259 parser + writer (manifest, configs, reports),
+//!   plus a streaming emit-as-you-go pretty writer for reports too
+//!   large to materialize as a tree.
 //! * [`rng`] — xoshiro256** + the distributions the simulator needs,
 //!   plus the per-cell seed splitting the parallel sweep runner uses.
 //! * [`cli`] — subcommand + `--flag` argument parsing.
@@ -19,7 +21,7 @@ pub mod rng;
 pub mod slab;
 
 pub use cli::Args;
-pub use json::Json;
+pub use json::{Json, JsonStream};
 pub use ring::RingBuffer;
 pub use rng::Rng;
 pub use slab::{Slab, SlabKey};

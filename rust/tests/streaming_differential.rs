@@ -1,0 +1,171 @@
+//! Differential proof that the streaming harness changes nothing:
+//! every streamed twin (`run_contended_streamed`,
+//! `run_closed_loop_streamed`, `run_fleet_streamed`,
+//! `run_fleet_closed_streamed` and the experiment-layer sweeps built on
+//! them) must reproduce its materialized original **byte-for-byte** at
+//! the report-JSON level, with the materialized accounting as the
+//! oracle. The `obs` flight recorder rides along on the traced pair to
+//! prove the decision log survives streaming event-for-event, and a
+//! recorded binary trace replays identically to the live generator.
+
+use std::io::Cursor;
+
+use cnmt::coordinator::PolicyKind;
+use cnmt::experiments::{fleet, load};
+use cnmt::obs::FlightRecorder;
+use cnmt::sim::{
+    run_contended, run_contended_streamed, run_contended_streamed_traced, run_contended_traced,
+    AdaptiveOpts, ContentionOpts, RequestTruth,
+};
+use cnmt::trace::{record_synth, SynthSpec, SynthTrace, TraceReader};
+
+fn adaptive_opts() -> ContentionOpts {
+    ContentionOpts {
+        queue_aware: true,
+        adaptive: Some(AdaptiveOpts::default()),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn load_sweep_streamed_is_bit_identical() {
+    let cfg = load::LoadConfig {
+        requests_per_point: 3_000,
+        loads_rps: vec![8.0, 96.0],
+        ..Default::default()
+    };
+    let materialized = load::run(&cfg).expect("materialized sweep");
+    let streamed = load::run_streamed(&cfg).expect("streamed sweep");
+    assert_eq!(
+        load::to_json(&materialized).to_string_pretty(),
+        load::to_json(&streamed).to_string_pretty(),
+        "streamed load sweep diverged from the materialized oracle"
+    );
+    // The streamed cells are pure functions of the cell index too:
+    // sharding them over threads must not move a byte.
+    let sharded_cfg = load::LoadConfig {
+        requests_per_point: 3_000,
+        loads_rps: vec![8.0, 96.0],
+        threads: 4,
+        ..Default::default()
+    };
+    let sharded = load::run_streamed(&sharded_cfg).expect("sharded streamed sweep");
+    assert_eq!(
+        load::to_json(&materialized).to_string_pretty(),
+        load::to_json(&sharded).to_string_pretty(),
+        "streamed load sweep is thread-count dependent"
+    );
+}
+
+#[test]
+fn closed_loop_streamed_is_bit_identical() {
+    let cfg = load::ClosedLoopConfig {
+        requests_per_point: 2_000,
+        clients: vec![1, 8],
+        ..Default::default()
+    };
+    let materialized = load::run_closed(&cfg).expect("materialized closed loop");
+    let streamed = load::run_closed_streamed(&cfg).expect("streamed closed loop");
+    assert_eq!(
+        load::closed_to_json(&materialized).to_string_pretty(),
+        load::closed_to_json(&streamed).to_string_pretty(),
+        "streamed closed loop diverged from the materialized oracle"
+    );
+}
+
+fn smoke_shapes() -> Vec<fleet::ShapeSpec> {
+    ["1x1", "4x2"]
+        .iter()
+        .map(|s| {
+            let topo = cnmt::fleet::Topology::preset(s).expect("built-in preset");
+            let offered_rps = fleet::default_offered_rps(&topo);
+            fleet::ShapeSpec { topo, offered_rps }
+        })
+        .collect()
+}
+
+#[test]
+fn fleet_sweep_streamed_is_bit_identical() {
+    let cfg = fleet::FleetConfig {
+        requests_per_point: 1_500,
+        shapes: smoke_shapes(),
+        ..Default::default()
+    };
+    let materialized = fleet::run(&cfg).expect("materialized fleet sweep");
+    let streamed = fleet::run_streamed(&cfg).expect("streamed fleet sweep");
+    assert_eq!(
+        fleet::to_json(&materialized).to_string_pretty(),
+        fleet::to_json(&streamed).to_string_pretty(),
+        "streamed fleet sweep diverged from the materialized oracle"
+    );
+}
+
+#[test]
+fn fleet_closed_streamed_is_bit_identical() {
+    let cfg = fleet::FleetClosedConfig {
+        requests_per_point: 1_500,
+        clients: vec![8],
+        ..Default::default()
+    };
+    let materialized = fleet::run_closed(&cfg).expect("materialized fleet closed loop");
+    let streamed = fleet::run_closed_streamed(&cfg).expect("streamed fleet closed loop");
+    assert_eq!(
+        fleet::closed_to_json(&materialized).to_string_pretty(),
+        fleet::closed_to_json(&streamed).to_string_pretty(),
+        "streamed fleet closed loop diverged from the materialized oracle"
+    );
+}
+
+#[test]
+fn flight_recorder_event_stream_survives_streaming() {
+    let (truths, ch) = load::synth_workload(777, 4_000, 120.0);
+    let opts = adaptive_opts();
+    let (res_m, rec_m) = run_contended_traced(
+        &truths,
+        &ch,
+        PolicyKind::Cnmt,
+        &opts,
+        FlightRecorder::new(1 << 15),
+    )
+    .expect("materialized traced run");
+    let (res_s, rec_s) = run_contended_streamed_traced(
+        truths.iter().copied().map(Ok),
+        &ch,
+        PolicyKind::Cnmt,
+        &opts,
+        FlightRecorder::new(1 << 15),
+    )
+    .expect("streamed traced run");
+    assert_eq!(
+        res_m.to_json().to_string_pretty(),
+        res_s.to_json().to_string_pretty(),
+        "traced result diverged under streaming"
+    );
+    assert!(rec_m.total() > 0, "recorder saw no events");
+    assert_eq!(rec_m.total(), rec_s.total(), "event counts diverged");
+    assert_eq!(
+        rec_m.window_jsonl(),
+        rec_s.window_jsonl(),
+        "decision-log event stream diverged under streaming"
+    );
+}
+
+#[test]
+fn recorded_trace_replays_identically_to_the_live_generator() {
+    let spec =
+        SynthSpec { seed: 4242, requests: 5_000, offered_rps: 96.0, exec_noise_std: 0.0 };
+    let (header, bytes) = record_synth(&spec, Vec::new()).expect("record");
+    let ch = header.characterization();
+    let live: Vec<RequestTruth> = SynthTrace::new(&spec).collect();
+    let opts = adaptive_opts();
+    let from_live =
+        run_contended(&live, &ch, PolicyKind::Cnmt, &opts).expect("live run");
+    let reader = TraceReader::open(Cursor::new(&bytes)).expect("open trace");
+    let from_trace = run_contended_streamed(reader, &ch, PolicyKind::Cnmt, &opts)
+        .expect("trace replay");
+    assert_eq!(
+        from_live.to_json().to_string_pretty(),
+        from_trace.to_json().to_string_pretty(),
+        "trace replay diverged from the live run"
+    );
+}

@@ -1,0 +1,206 @@
+//! Binary workload-trace format (`cnmt::trace`) round-trip and
+//! fail-closed properties:
+//!
+//! * random explicit-mode workloads and the derived-mode synthetic
+//!   scenario survive write → read → re-write **byte-identically**
+//!   (the encoder is a pure function of the record stream);
+//! * every structural defect — bad magic, unsupported version, flipped
+//!   payload byte, truncation at any boundary, end-marker count
+//!   mismatch — surfaces as a typed [`Error::Trace`], never a panic
+//!   and never a silently short stream.
+
+use std::io::Cursor;
+
+use cnmt::sim::RequestTruth;
+use cnmt::trace::{
+    crc32, record_synth, s_to_us, summarize, us_to_s, SynthSpec, SynthTrace, TraceHeader,
+    TraceReader, TraceWriter, BLOCK_RECORDS, FLAG_TIMES_EXPLICIT, HEADER_LEN, TRACE_VERSION,
+};
+use cnmt::util::Rng;
+use cnmt::{Error, Result};
+
+/// A random explicit-mode workload: arbitrary lengths and service
+/// times, every duration pre-quantized to the µs grid the format
+/// stores (so the truth stream is exactly representable).
+fn random_workload(seed: u64, count: usize) -> Vec<RequestTruth> {
+    let mut rng = Rng::new(seed);
+    let mut cum_us = 0u64;
+    (0..count)
+        .map(|_| {
+            cum_us += rng.usize(30_000) as u64;
+            let tx_us = 1 + rng.usize(90_000) as u64;
+            RequestTruth {
+                n: 1 + rng.usize(61),
+                m_real: 1 + rng.usize(61),
+                arrival_s: us_to_s(cum_us),
+                t_edge: us_to_s(1 + rng.usize(400_000) as u64),
+                t_cloud: us_to_s(1 + rng.usize(80_000) as u64),
+                t_tx: us_to_s(tx_us),
+                rtt: us_to_s(tx_us),
+            }
+        })
+        .collect()
+}
+
+fn explicit_header() -> TraceHeader {
+    TraceHeader {
+        version: TRACE_VERSION,
+        flags: FLAG_TIMES_EXPLICIT,
+        edge_plane: (1.2e-3, 3.0e-3, 6.0e-3),
+        cloud_plane: (0.22e-3, 0.55e-3, 26.0e-3),
+        n2m_gamma: 0.95,
+        n2m_delta: 0.8,
+        mean_m: 17.0,
+        rtt_s: 0.042,
+    }
+}
+
+fn encode(header: &TraceHeader, truths: &[RequestTruth]) -> Vec<u8> {
+    let mut w = TraceWriter::create(Vec::new(), header).expect("create");
+    for t in truths {
+        w.push(t).expect("push");
+    }
+    w.finish().expect("finish")
+}
+
+fn decode(bytes: &[u8]) -> Result<Vec<RequestTruth>> {
+    TraceReader::open(Cursor::new(bytes))?.collect()
+}
+
+fn assert_truths_bit_identical(a: &[RequestTruth], b: &[RequestTruth]) {
+    assert_eq!(a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.n, y.n, "record {i}");
+        assert_eq!(x.m_real, y.m_real, "record {i}");
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "record {i}");
+        assert_eq!(x.t_edge.to_bits(), y.t_edge.to_bits(), "record {i}");
+        assert_eq!(x.t_cloud.to_bits(), y.t_cloud.to_bits(), "record {i}");
+        assert_eq!(x.t_tx.to_bits(), y.t_tx.to_bits(), "record {i}");
+        assert_eq!(x.rtt.to_bits(), y.rtt.to_bits(), "record {i}");
+    }
+}
+
+#[test]
+fn random_explicit_workloads_round_trip_byte_identically() {
+    let header = explicit_header();
+    // Sizes straddle the block boundary: sub-block, exactly one block,
+    // and a multi-block stream with a partial tail.
+    for (seed, count) in [
+        (0xF00D, 1),
+        (0xF00E, 257),
+        (0xF00F, BLOCK_RECORDS as usize),
+        (0xF010, 2 * BLOCK_RECORDS as usize + 777),
+    ] {
+        let truths = random_workload(seed, count);
+        let bytes = encode(&header, &truths);
+        let decoded = decode(&bytes).expect("clean trace decodes");
+        assert_truths_bit_identical(&truths, &decoded);
+        // Re-encoding the decoded stream reproduces the exact bytes:
+        // the format has one canonical encoding per record stream.
+        let reencoded = encode(&header, &decoded);
+        assert_eq!(bytes, reencoded, "seed {seed:#x}: re-encode diverged");
+    }
+}
+
+#[test]
+fn derived_synth_round_trips_and_reencodes() {
+    let spec = SynthSpec { seed: 99, requests: 6_000, offered_rps: 96.0, exec_noise_std: 0.0 };
+    let (header, bytes) = record_synth(&spec, Vec::new()).expect("record");
+    assert!(!header.times_explicit());
+    let decoded = decode(&bytes).expect("decode");
+    let live: Vec<RequestTruth> = SynthTrace::new(&spec).collect();
+    assert_truths_bit_identical(&live, &decoded);
+    assert_eq!(bytes, encode(&header, &decoded), "re-encode diverged");
+    // Noisy specs flip to explicit mode and still round-trip.
+    let noisy = SynthSpec { exec_noise_std: 0.05, ..spec };
+    let (nh, nbytes) = record_synth(&noisy, Vec::new()).expect("record noisy");
+    assert!(nh.times_explicit());
+    let ndecoded = decode(&nbytes).expect("decode noisy");
+    let nlive: Vec<RequestTruth> = SynthTrace::new(&noisy).collect();
+    assert_truths_bit_identical(&nlive, &ndecoded);
+}
+
+#[test]
+fn wrong_version_fails_with_typed_error() {
+    let truths = random_workload(0xBAD0, 50);
+    let mut bytes = encode(&explicit_header(), &truths);
+    // Patch the version and re-seal the header CRC, so the version
+    // check (not the CRC) is what fires.
+    bytes[8..10].copy_from_slice(&2u16.to_le_bytes());
+    let crc = crc32(&bytes[..92]);
+    bytes[92..96].copy_from_slice(&crc.to_le_bytes());
+    let err = TraceReader::open(Cursor::new(&bytes)).err().expect("must fail");
+    assert!(matches!(err, Error::Trace(ref m) if m.contains("version")), "{err}");
+}
+
+#[test]
+fn bad_magic_fails_with_typed_error() {
+    let mut bytes = encode(&explicit_header(), &random_workload(0xBAD1, 50));
+    bytes[0] ^= 0x20;
+    let err = TraceReader::open(Cursor::new(&bytes)).err().expect("must fail");
+    assert!(matches!(err, Error::Trace(ref m) if m.contains("magic")), "{err}");
+}
+
+#[test]
+fn corrupted_block_fails_with_typed_error() {
+    let truths = random_workload(0xBAD2, 500);
+    let mut bytes = encode(&explicit_header(), &truths);
+    bytes[HEADER_LEN + 9] ^= 0x40;
+    let err = decode(&bytes).err().expect("must fail");
+    assert!(matches!(err, Error::Trace(ref m) if m.contains("crc")), "{err}");
+}
+
+#[test]
+fn truncation_at_every_boundary_fails_closed() {
+    let truths = random_workload(0xBAD3, 500);
+    let bytes = encode(&explicit_header(), &truths);
+    // Mid-header, just after the header, mid-block, mid-end-marker.
+    for cut in [HEADER_LEN - 7, HEADER_LEN + 3, HEADER_LEN + 200, bytes.len() - 5] {
+        let err = match TraceReader::open(Cursor::new(&bytes[..cut])) {
+            Err(e) => e,
+            Ok(r) => r
+                .collect::<Result<Vec<_>>>()
+                .err()
+                .unwrap_or_else(|| panic!("cut at {cut} decoded cleanly")),
+        };
+        assert!(
+            matches!(err, Error::Trace(ref m) if m.contains("truncated")),
+            "cut at {cut}: {err}"
+        );
+    }
+}
+
+#[test]
+fn end_marker_count_mismatch_fails_closed() {
+    let truths = random_workload(0xBAD4, 64);
+    let mut bytes = encode(&explicit_header(), &truths);
+    // The end marker is the final block: 4+4 prefix, 8-byte count
+    // payload, 4-byte CRC. Rewrite the count and re-seal its CRC so
+    // only the conservation check can catch the lie.
+    let payload_at = bytes.len() - 12;
+    bytes[payload_at..payload_at + 8].copy_from_slice(&63u64.to_le_bytes());
+    let crc = crc32(&bytes[payload_at..payload_at + 8]);
+    bytes[payload_at + 8..].copy_from_slice(&crc.to_le_bytes());
+    let err = decode(&bytes).err().expect("must fail");
+    assert!(matches!(err, Error::Trace(ref m) if m.contains("count")), "{err}");
+}
+
+#[test]
+fn summarize_agrees_with_the_record_stream() {
+    let spec = SynthSpec { seed: 5, requests: 2_000, offered_rps: 120.0, exec_noise_std: 0.0 };
+    let (header, bytes) = record_synth(&spec, Vec::new()).expect("record");
+    let s = summarize(Cursor::new(&bytes)).expect("summarize");
+    assert_eq!(s.records, 2_000);
+    assert_eq!(s.version, TRACE_VERSION);
+    let live: Vec<RequestTruth> = SynthTrace::new(&spec).collect();
+    let mean_m =
+        live.iter().map(|t| t.m_real as f64).sum::<f64>() / live.len() as f64;
+    assert!((s.mean_m - mean_m).abs() < 1e-12);
+    assert!((s.mean_m - header.mean_m).abs() < 1e-12);
+    assert_eq!(
+        s.duration_s.to_bits(),
+        live.last().expect("non-empty").arrival_s.to_bits()
+    );
+    // µs quantization really is the storage grid.
+    assert_eq!(s_to_us(s.duration_s), s_to_us(live.last().unwrap().arrival_s));
+}
