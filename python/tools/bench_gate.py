@@ -17,6 +17,11 @@ in the zero-churn dispatcher and the parallel sweep runner:
   * the flight recorder costs almost nothing: the hedged event loop
     with a bounded decision-log ring attached runs at
     ≥ --min-recorder-ratio x the untraced loop's events/sec;
+  * the failure machinery costs almost nothing when nothing fails: the
+    fleet loop with deadline timers armed on every admitted request
+    runs at ≥ --min-failover-ratio x the untimed fleet loop's
+    events/sec. A report without the `failover` section fails the gate
+    outright (the bench regressed out of measuring it);
   * the binary workload-trace codec (`cnmt::trace`) encodes and
     decodes at ≥ --min-trace-events records/sec — replaying a
     million-request trace must stay I/O-trivial next to the
@@ -25,7 +30,8 @@ in the zero-churn dispatcher and the parallel sweep runner:
 
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
        [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
-       [--min-recorder-ratio X] [--min-trace-events N]
+       [--min-recorder-ratio X] [--min-failover-ratio X]
+       [--min-trace-events N]
 """
 
 import argparse
@@ -41,6 +47,7 @@ def main():
     ap.add_argument("--min-fleet-ratio", type=float, default=0.8)
     ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
     ap.add_argument("--min-recorder-ratio", type=float, default=0.9)
+    ap.add_argument("--min-failover-ratio", type=float, default=0.9)
     ap.add_argument("--min-trace-events", type=float, default=200_000.0)
     args = ap.parse_args()
 
@@ -59,6 +66,7 @@ def main():
     fleet_ratio = fleet["ratio_vs_pair_solo"]
     sweep = b["sweep"]
     recorder = b["recorder"]
+    failover = b.get("failover")
     trace = b.get("trace")
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
@@ -73,6 +81,13 @@ def main():
         f"recorder {recorder['ratio']:.2f}x "
         f"(ring {recorder['capacity']:.0f})"
     )
+    if failover is not None:
+        print(
+            f"failover-armed fleet loop: "
+            f"{failover['armed']['events_per_sec']:,.0f} ev/s on "
+            f"{failover['armed']['topology']} "
+            f"({failover['ratio']:.2f}x the untimed loop)"
+        )
     if trace is not None:
         print(
             f"trace codec: encode {trace['encode']['events_per_sec']:,.0f} ev/s, "
@@ -115,6 +130,17 @@ def main():
             f"flight recorder drags the hedged loop to {recorder['ratio']:.2f}x, "
             f"below floor {args.min_recorder_ratio:.2f}x (decision log is no "
             "longer near-free)"
+        )
+    if failover is None:
+        failures.append(
+            "report has no `failover` section (bench stopped measuring the "
+            "armed-timer overhead)"
+        )
+    elif failover["ratio"] < args.min_failover_ratio:
+        failures.append(
+            f"deadline timers drag the fleet loop to {failover['ratio']:.2f}x, "
+            f"below floor {args.min_failover_ratio:.2f}x (failover machinery "
+            "is no longer pay-for-use)"
         )
     # The wall-clock floor is a function of available parallelism: a
     # 1-core runner degenerates to the serial path (speedup ~1.0) with

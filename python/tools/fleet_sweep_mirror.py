@@ -196,9 +196,14 @@ class FleetLane:
         self.backlog_est_s = 0.0
         self.dead = 0
         self.peak_depth = 0
+        # Fault-injection hook (mirror of scheduler::LaneHealth): a down
+        # lane refuses admissions and never dispatches. Dormant (False)
+        # unless a FaultSpec drives it, so every legacy report is
+        # byte-identical.
+        self.down = False
 
     def has_room(self):
-        return len(self.items) - self.dead < MAX_QUEUE_DEPTH
+        return not self.down and len(self.items) - self.dead < MAX_QUEUE_DEPTH
 
     def offer(self, rq):
         if not self.has_room():
@@ -245,6 +250,12 @@ class FleetDispatcher:
         self.hs_wins_cloud = 0
         self.hs_cancelled = 0
         self.hs_losers = 0
+        # Deadline-timer hooks (mirror of the rust dispatcher's retry
+        # timers): `armed` is None until a harness with a retry policy
+        # enables it, so the happy path never touches these.
+        self.timers = []
+        self.timer_seq = 0
+        self.armed = None
 
     def arena_alloc(self, entry):
         if self.arena_free:
@@ -285,6 +296,8 @@ class FleetDispatcher:
 
     def lane_next_start(self, li):
         lane = self.lanes[li]
+        if lane.down:
+            return None
         arena = self.arena
         while True:
             if not lane.items:
@@ -363,6 +376,13 @@ class FleetDispatcher:
         batch = self.form_batch(lane, li, start_s)
         if not batch:
             return
+        if self.armed is not None:
+            # A dispatched request is no longer stuck in a queue: its
+            # deadline timer (which only covers queue wait) is disarmed.
+            for rq in batch:
+                ent = self.armed.get(rq[0])
+                if ent is not None and ent[1] == li:
+                    del self.armed[rq[0]]
         for rq in batch:
             if rq[7] is not None:
                 entry = self.arena[rq[7]]
@@ -404,6 +424,12 @@ class FleetDispatcher:
             twin_lane = entry[twin]
             self.lanes[twin_lane].on_cancel(entry[2 + twin])
             self.lanes[twin_lane].dead += 1
+        elif entry[4 + twin] == CANCELLED:
+            # The twin copy was physically destroyed by a lane failure
+            # (never a normal cancel: those only happen at win time):
+            # the race is closed and no lazy ghost purge will ever find
+            # it, so the entry is released here.
+            self.arena_release(hid)
         return WIN
 
     def flush_one(self, out):
@@ -432,6 +458,98 @@ class FleetDispatcher:
         while self.step(horizon_s, exec_fn, out):
             pass
 
+    # ---- failure-injection surface (mirror of the rust dispatcher's
+    # fault/timer API). Every method below is inert unless a harness
+    # with a FaultSpec / retry policy drives it.
+
+    def arm_timeout(self, rid, lane, deadline_s):
+        """Arm a queue-wait deadline timer for a solo request."""
+        self.timer_seq += 1
+        self.armed[rid] = (self.timer_seq, lane)
+        heapq.heappush(self.timers, (deadline_s, self.timer_seq, rid, lane))
+
+    def next_timeout_s(self):
+        """Earliest timer deadline, stale entries included (they pop as
+        no-ops in fire_timeouts — lazy disarm, like the ghost purge)."""
+        return self.timers[0][0] if self.timers else None
+
+    def fire_timeouts(self, now_s):
+        """Pop every timer due at or before now_s; pull each request
+        that is genuinely still queued and return it for requeueing."""
+        fired = []
+        while self.timers and self.timers[0][0] <= now_s:
+            _dl, seq, rid, li = heapq.heappop(self.timers)
+            ent = self.armed.get(rid)
+            if ent is None or ent[0] != seq or ent[1] != li:
+                continue  # stale: dispatched or re-armed elsewhere
+            del self.armed[rid]
+            lane = self.lanes[li]
+            for i, rq in enumerate(lane.items):
+                if rq[0] == rid and rq[7] is None:
+                    del lane.items[i]
+                    lane.on_cancel(rq[4])
+                    fired.append(rq)
+                    break
+        return fired
+
+    def fail_lane(self, li, now_s):
+        """Crash the lane: its queue and in-flight batches are lost
+        (device memory is gone), admissions refuse until recovery.
+        Returns (killed_requests, n_in_flight) in deterministic order:
+        queue FIFO order first, then in-flight by dispatch seq. Hedged
+        copies whose twin is still alive are not killed — the twin
+        carries the request on."""
+        lane = self.lanes[li]
+        lane.down = True
+        killed = []
+
+        def kill_copy(rq):
+            hid = rq[7]
+            if hid is None:
+                if self.armed is not None:
+                    self.armed.pop(rq[0], None)
+                killed.append(rq)
+                return
+            entry = self.arena[hid]
+            side = 0 if entry[0] == li else 1
+            if entry[4 + side] == CANCELLED:
+                # Ghost awaiting lazy purge: result already delivered.
+                self.arena_release(hid)
+                return
+            if entry[6] is not None:
+                # Straggling loser of a decided race: close the entry.
+                self.arena_release(hid)
+                return
+            if entry[4 + 1 - side] == CANCELLED:
+                # Twin died in an earlier lane failure: request lost.
+                self.arena_release(hid)
+                killed.append(rq)
+                return
+            entry[4 + side] = CANCELLED  # twin carries the request on
+        for rq in lane.items:
+            kill_copy(rq)
+        lane.items = []
+        lane.dead = 0
+        lane.backlog_est_s = 0.0
+        dead_pending = sorted(
+            (p for p in self.pending if p[4] == li), key=lambda p: p[1]
+        )
+        if dead_pending:
+            self.pending = [p for p in self.pending if p[4] != li]
+            heapq.heapify(self.pending)
+        for p in dead_pending:
+            kill_copy(p[5])
+        for i in range(len(lane.free_at)):
+            lane.free_at[i] = now_s
+        return killed, len(dead_pending)
+
+    def recover_lane(self, li, now_s):
+        """Bring a crashed lane back: empty queue, idle workers."""
+        lane = self.lanes[li]
+        lane.down = False
+        for i in range(len(lane.free_at)):
+            lane.free_at[i] = max(lane.free_at[i], now_s)
+
 
 # ---------------------------------------------------------------- fleet harness
 
@@ -459,6 +577,11 @@ class FleetState:
             self.texe.append((base[0] * slow, base[1] * slow, base[2] * slow))
         self.edge_ids = [i for i, t in enumerate(self.tiers) if t == EDGE]
         self.cloud_ids = [i for i, t in enumerate(self.tiers) if t == CLOUD]
+        # Device health (mirror of fleet::DeviceHealth): None keeps the
+        # selector health-blind (legacy behaviour, byte-identical); a
+        # list of per-device states excludes non-Up devices (0) from
+        # the placement arg-min.
+        self.health = None
         self.ttx = TtxEstimator(TTX_ALPHA)
         # Per-device refit T_tx laws ((slope, intercept) once installed).
         self.ttx_lines = [None] * len(devs)
@@ -534,6 +657,8 @@ class FleetState:
     def best_of(self, ids, n, m_est, ttx_est, waits):
         best_d, best_score, best_est = -1, math.inf, math.inf
         for d in ids:
+            if self.health is not None and self.health[d] != 0:
+                continue  # Draining/Down: excluded from the arg-min
             est = texe_estimate(self.texe[d], n, m_est)
             if self.tiers[d] == EDGE:
                 score = est + waits[d]
@@ -558,6 +683,7 @@ class FleetState:
             "device": best[0],
             "m_est": m_est,
             "est": best[2],
+            "score": best[1],
             "best_edge": be,
             "best_cloud": bc,
         }

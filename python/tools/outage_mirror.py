@@ -1,0 +1,404 @@
+#!/usr/bin/env python3
+"""Standalone mirror of `cnmt experiment outage` (rust/src/experiments/outage.rs).
+
+The graceful-degradation experiment: the `hetero` fleet takes a mid-run
+crash of its lead edge gateway (device 0, the fastest edge) — down for
+30 s, then recovered — under two configurations sharing identical fault
+physics:
+
+  * `fleet+select`          — today's health-blind arg-min placement.
+    The crash wipes the gateway's queue and in-flight batches (device
+    memory is lost): those admitted requests are **stranded** forever.
+    While the device is down it refuses admissions, but the blind
+    selector keeps scoring it best (empty queue, fastest plane), so a
+    large slice of the offered load sheds at admission for the whole
+    outage window.
+  * `fleet+select+failover` — the same placement with the robustness
+    machinery on: the selector tracks device health (Down devices are
+    excluded from the arg-min), every wiped request is re-routed
+    through the selector after an exponential backoff, queue-wait
+    deadline timers (k x the scored estimate) requeue stragglers, and a
+    bounded retry budget sheds permanent failures. The headline: zero
+    admitted requests lost, bounded p99, goodput recovering after
+    re-admission.
+
+Like the other mirrors this file re-implements the rust driver
+operation for operation — keep it in lockstep with
+`sim::harness::run_fleet_outage` and `experiments::outage`. The CI
+`outage` matrix row diffs the two implementations at smoke and full
+parameters.
+
+Usage:
+    python3 python/tools/outage_mirror.py [--out reports/outage_sweep.json]
+    python3 python/tools/outage_mirror.py --requests 4000
+"""
+
+import argparse
+import heapq
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from fleet_sweep_mirror import (  # noqa: E402
+    CLOUD,
+    EDGE,
+    FLEET_HEDGE_MARGIN_S,
+    FleetState,
+    cell_seed,
+    topo_hetero,
+    topo_to_json,
+)
+from load_sweep_mirror import (  # noqa: E402
+    BUCKET_WIDTH,
+    SEED,
+    TTX_REFRESH_S,
+    synth_workload,
+    write_json,
+)
+
+# experiments::outage constants (mirror of rust/src/experiments/outage.rs).
+OUTAGE_REQUESTS = 20000
+OUTAGE_OFFERED_RPS = 224.0
+OUTAGE_SEED_TAG = 0xFA117
+OUTAGE_START_FRAC = 0.25
+OUTAGE_DURATION_S = 30.0
+GOODPUT_WINDOW_S = 5.0
+
+# RetryPolicy defaults (mirror of scheduler::RetryPolicy::default).
+RETRY_POLICY = {
+    "timeout_mult": 4.0,
+    "min_timeout_s": 0.25,
+    "backoff_base_s": 0.05,
+    "backoff_mult": 2.0,
+    "max_retries": 4,
+}
+
+UP, DRAINING, DOWN = 0, 1, 2
+
+
+def outage_fault_spec(topo, requests, offered_rps):
+    """Mirror of experiments::outage::outage_fault_spec: crash the lead
+    edge gateway a quarter into the nominal run, recover 30 s later."""
+    lane = next(i for i, d in enumerate(topo["devices"]) if d["tier"] == EDGE)
+    start_s = (requests / offered_rps) * OUTAGE_START_FRAC
+    return {
+        "lane": lane,
+        "mode": "crash",
+        "start_s": start_s,
+        "recover_s": start_s + OUTAGE_DURATION_S,
+    }
+
+
+class OutageRun:
+    """One outage replay: run_fleet's open-loop arrival replay plus an
+    event loop interleaving fault transitions, deadline timers and
+    retry-backoff readiness — mirror of sim::harness::run_fleet_outage."""
+
+    def __init__(self, pool, topo, failover, fault, retry):
+        self.pool = pool
+        self.failover = failover
+        self.fault = fault
+        self.retry = retry
+        self.st = FleetState(pool, topo, "select", FLEET_HEDGE_MARGIN_S, 0)
+        if failover:
+            self.st.health = [UP] * len(self.st.tiers)
+            self.st.disp.armed = {}
+        self.waits = [0.0] * len(self.st.tiers)
+        self.retry_heap = []  # (ready_s, retry_seq, id)
+        self.retry_seq = 0
+        self.retries = [0] * len(pool)
+        self.rejected = 0
+        self.stranded = 0
+        self.shed_failed = 0
+        self.killed_in_flight = 0
+        self.timeouts_fired = 0
+        self.retry_dispatches = 0
+        self.failover_reroutes = 0
+        self.curve = []  # completions per GOODPUT_WINDOW_S window
+
+    def process(self, comps):
+        """Dedicated completion accounting: latency is measured from the
+        request's ORIGINAL arrival (pool truth), not the copy's
+        submission time — a retried request pays for its whole chain."""
+        st = self.st
+        for rq, li, start_s, done_s, _bsize, _kind in comps:
+            truth = self.pool[rq[1]]
+            t_true = st.true_service_s(truth, li, start_s)
+            st.useful_work_s += t_true
+            tier = st.tiers[li]
+            tx_s = truth.t_tx * st.link_scale[li] if tier == CLOUD else 0.0
+            latency = (done_s + tx_s) - truth.arrival_s
+            st.hist.record(latency)
+            st.stats_count += 1
+            st.stats_mean += (latency - st.stats_mean) / st.stats_count
+            if tier == EDGE:
+                st.edge_count += 1
+            else:
+                st.cloud_count += 1
+            st.completed += 1
+            if done_s + tx_s > st.last_done_s:
+                st.last_done_s = done_s + tx_s
+            st.device_results[li] += 1
+            wi = int((done_s + tx_s) / GOODPUT_WINDOW_S)
+            while len(self.curve) <= wi:
+                self.curve.append(0)
+            self.curve[wi] += 1
+
+    def submit(self, rid, now):
+        """Route + submit one request copy (initial arrival or retry):
+        the select path of fleet_route_and_submit, plus a queue-wait
+        deadline timer when the retry policy is armed."""
+        st = self.st
+        truth = self.pool[rid]
+        if st.ttx.is_stale(now, TTX_REFRESH_S):
+            st.ttx.observe(now, truth.rtt)
+        for d in range(len(st.tiers)):
+            self.waits[d] = st.disp.lanes[d].expected_wait_s(now)
+        trace = st.select(truth.n, self.waits)
+        dev = trace["device"]
+        if dev < 0:
+            return False  # every device of both tiers unavailable
+        bucket = int(max(trace["m_est"], 0.0) / BUCKET_WIDTH)
+        rq = (rid, rid, truth.n, trace["m_est"], trace["est"], now, bucket, None)
+        if st.tiers[dev] == CLOUD:
+            st.ttx.observe(now, truth.rtt)
+        if not st.disp.submit_lane(dev, rq):
+            return False
+        if self.failover:
+            deadline = now + max(
+                self.retry["timeout_mult"] * trace["score"],
+                self.retry["min_timeout_s"],
+            )
+            st.disp.arm_timeout(rid, dev, deadline)
+        return True
+
+    def schedule_retry(self, rid, now):
+        """Exponential backoff under a bounded retry budget; permanent
+        shedding once the budget is exhausted."""
+        attempt = self.retries[rid] + 1
+        if attempt > self.retry["max_retries"]:
+            self.shed_failed += 1
+            return
+        self.retries[rid] = attempt
+        ready = now + self.retry["backoff_base_s"] * (
+            self.retry["backoff_mult"] ** (attempt - 1)
+        )
+        heapq.heappush(self.retry_heap, (ready, self.retry_seq, rid))
+        self.retry_seq += 1
+
+    def run(self):
+        st = self.st
+        disp = st.disp
+        pool = self.pool
+        fault = self.fault
+        inf = float("inf")
+        transitions = [(fault["start_s"], 0), (fault["recover_s"], 1)]
+        i = 0
+        fi = 0
+        while True:
+            t_arr = pool[i].arrival_s if i < len(pool) else inf
+            t_tr = transitions[fi][0] if fi < len(transitions) else inf
+            t_to = disp.next_timeout_s() if self.failover else None
+            if t_to is None:
+                t_to = inf
+            t_rt = self.retry_heap[0][0] if self.retry_heap else inf
+            t = min(t_tr, t_to, t_rt, t_arr)
+            if t == inf:
+                break
+            comps = []
+            disp.run_until(t, st.exec_fn, comps)
+            self.process(comps)
+            # Fixed tie order: transition, then timeout, then retry,
+            # then arrival (one action per iteration).
+            if t_tr == t:
+                kind = transitions[fi][1]
+                fi += 1
+                if kind == 0:
+                    killed, n_inflight = disp.fail_lane(fault["lane"], t)
+                    self.killed_in_flight += n_inflight
+                    if self.failover:
+                        st.health[fault["lane"]] = DOWN
+                        for rq in killed:
+                            self.failover_reroutes += 1
+                            self.schedule_retry(rq[0], t)
+                    else:
+                        self.stranded += len(killed)
+                else:
+                    disp.recover_lane(fault["lane"], t)
+                    if self.failover:
+                        st.health[fault["lane"]] = UP
+                continue
+            if t_to == t:
+                for rq in disp.fire_timeouts(t):
+                    self.timeouts_fired += 1
+                    self.schedule_retry(rq[0], t)
+                continue
+            if t_rt == t:
+                _ready, _seq, rid = heapq.heappop(self.retry_heap)
+                if self.submit(rid, t):
+                    self.retry_dispatches += 1
+                else:
+                    self.schedule_retry(rid, t)
+                continue
+            if not self.submit(i, t):
+                self.rejected += 1
+            i += 1
+        comps = []
+        disp.run_until(inf, st.exec_fn, comps)
+        self.process(comps)
+        return self.to_json()
+
+    def to_json(self):
+        st = self.st
+        disp = st.disp
+        offered = len(self.pool)
+        admitted = offered - self.rejected
+        lost = self.stranded + self.shed_failed
+        assert st.completed + lost == admitted, (
+            f"conservation violated: {st.completed} completed + {lost} lost "
+            f"!= {admitted} admitted"
+        )
+        first_arrival = self.pool[0].arrival_s if self.pool else 0.0
+        makespan_s = max(st.last_done_s - first_arrival, 0.0)
+        max_attempts = max(self.retries) if self.retries else 0
+        return {
+            "policy": "fleet+select+failover" if self.failover else "fleet+select",
+            "failover": self.failover,
+            "offered": float(offered),
+            "admitted": float(admitted),
+            "completed": float(st.completed),
+            "rejected": float(self.rejected),
+            "shed_rate": (self.rejected / offered) if offered else 0.0,
+            "stranded": float(self.stranded),
+            "shed_failed": float(self.shed_failed),
+            "lost": float(lost),
+            "killed_in_flight": float(self.killed_in_flight),
+            "timeouts_fired": float(self.timeouts_fired),
+            "retry_dispatches": float(self.retry_dispatches),
+            "failover_reroutes": float(self.failover_reroutes),
+            "max_attempts": float(max_attempts),
+            "edge_count": float(st.edge_count),
+            "cloud_count": float(st.cloud_count),
+            "makespan_s": makespan_s,
+            "throughput_rps": (
+                st.completed / makespan_s if makespan_s > 0.0 else 0.0
+            ),
+            "mean_latency_s": (
+                st.stats_mean if st.stats_count else float("nan")
+            ),
+            "p50_s": st.hist.quantile(0.50),
+            "p95_s": st.hist.quantile(0.95),
+            "p99_s": st.hist.quantile(0.99),
+            "mean_batch": (
+                disp.batch_requests / disp.batches
+                if disp.batches
+                else float("nan")
+            ),
+            "useful_work_s": st.useful_work_s,
+            "device_results": [float(c) for c in st.device_results],
+            "peak_depths": [float(lane.peak_depth) for lane in disp.lanes],
+            "goodput_curve": [float(c) for c in self.curve],
+        }
+
+
+def run_outage_sweep(requests, seed=SEED):
+    topo = topo_hetero()
+    fault = outage_fault_spec(topo, requests, OUTAGE_OFFERED_RPS)
+    pool = synth_workload(
+        cell_seed(seed, 0) ^ OUTAGE_SEED_TAG, requests, OUTAGE_OFFERED_RPS
+    )
+    cells = {}
+    for failover in (False, True):
+        r = OutageRun(pool, topo, failover, fault, RETRY_POLICY).run()
+        cells[r["policy"]] = r
+    return topo, fault, cells
+
+
+def outage_to_json(topo, fault, cells, requests, seed=SEED):
+    base = cells["fleet+select"]
+    fo = cells["fleet+select+failover"]
+    return {
+        "seed": float(seed),
+        "requests_per_point": float(requests),
+        "offered_rps": OUTAGE_OFFERED_RPS,
+        "topology": topo_to_json(topo),
+        "fault": {
+            "lane": float(fault["lane"]),
+            "mode": fault["mode"],
+            "start_s": fault["start_s"],
+            "recover_s": fault["recover_s"],
+        },
+        "retry": {
+            "timeout_mult": RETRY_POLICY["timeout_mult"],
+            "min_timeout_s": RETRY_POLICY["min_timeout_s"],
+            "backoff_base_s": RETRY_POLICY["backoff_base_s"],
+            "backoff_mult": RETRY_POLICY["backoff_mult"],
+            "max_retries": float(RETRY_POLICY["max_retries"]),
+        },
+        "goodput_window_s": GOODPUT_WINDOW_S,
+        "policies": cells,
+        "headline_baseline_lost": base["lost"],
+        "headline_baseline_unserved": base["offered"] - base["completed"],
+        "headline_failover_lost": fo["lost"],
+        "headline_failover_p99_s": fo["p99_s"],
+        "headline_completed_ratio": (
+            fo["completed"] / base["completed"]
+            if base["completed"] > 0.0
+            else float("nan")
+        ),
+    }
+
+
+def summarize(topo, fault, cells):
+    hdr = (
+        f"{'policy':<22} {'offered':>8} {'admit':>7} {'done':>7} {'shed%':>6} "
+        f"{'lost':>5} {'retries':>8} {'t/o':>5} {'p50ms':>8} {'p99ms':>9}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for label in ("fleet+select", "fleet+select+failover"):
+        r = cells[label]
+        print(
+            f"{label:<22} {int(r['offered']):>8} {int(r['admitted']):>7} "
+            f"{int(r['completed']):>7} {r['shed_rate'] * 100:>6.1f} "
+            f"{int(r['lost']):>5} {int(r['retry_dispatches']):>8} "
+            f"{int(r['timeouts_fired']):>5} {r['p50_s'] * 1e3:>8.1f} "
+            f"{r['p99_s'] * 1e3:>9.1f}"
+        )
+    name = topo["devices"][fault["lane"]]["name"]
+    base = cells["fleet+select"]
+    fo = cells["fleet+select+failover"]
+    print(
+        f"\nfault: {name} (device {fault['lane']}) crashes at "
+        f"t={fault['start_s']:.1f}s, recovers at t={fault['recover_s']:.1f}s "
+        f"(queue + in-flight wiped)"
+    )
+    print(
+        f"headline: failover loses {int(fo['lost'])} of "
+        f"{int(fo['admitted'])} admitted requests "
+        f"(p99 {fo['p99_s'] * 1e3:.0f} ms) while the blind baseline "
+        f"strands {int(base['stranded'])} and sheds "
+        f"{int(base['rejected'])} at admission during the outage"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=OUTAGE_REQUESTS,
+        help="requests per cell (mirrors cnmt --outage-requests)",
+    )
+    args = ap.parse_args()
+
+    topo, fault, cells = run_outage_sweep(args.requests)
+    root = outage_to_json(topo, fault, cells, args.requests)
+    write_json(args.out or "reports/outage_sweep.json", root)
+    summarize(topo, fault, cells)
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,7 @@
 //! | Table I (policy comparison) | [`table1`] | `cnmt experiment table1` |
 //! | — (beyond paper: load sweep) | [`load`] | `cnmt experiment load` |
 //! | — (beyond paper: fleet sweep) | [`fleet`] | `cnmt experiment fleet` |
+//! | — (beyond paper: outage sweep) | [`outage`] | `cnmt experiment outage` |
 //!
 //! Every driver prints a human-readable table and writes a JSON report
 //! through the one shared path ([`report::write_report`] over
@@ -23,6 +24,7 @@ pub mod fig4;
 pub mod fleet;
 pub mod load;
 pub mod multilevel;
+pub mod outage;
 pub mod report;
 pub mod runner;
 pub mod table1;

@@ -1,0 +1,391 @@
+//! Outage sweep: graceful degradation under a mid-run device crash.
+//!
+//! The fleet sweep ([`super::fleet`]) asks what queue-aware placement
+//! buys when every device is healthy; this experiment asks what happens
+//! when one is **not**. The `hetero` fleet takes a crash of its lead
+//! edge gateway (device 0, the fastest edge) a quarter of the way into
+//! the run — down for [`OUTAGE_DURATION_S`] seconds, queue and
+//! in-flight batches destroyed, then recovered empty — under two
+//! configurations replaying identical fault physics:
+//!
+//! * `fleet+select` — today's health-blind arg-min placement. The
+//!   wiped requests are **stranded** forever, and while the device is
+//!   down the blind selector keeps scoring it best (empty queue,
+//!   fastest plane), so a large slice of the offered load sheds at
+//!   admission for the whole outage window.
+//! * `fleet+select+failover` — the same placement with the robustness
+//!   machinery on ([`crate::sim::run_fleet_outage`] with `failover`):
+//!   health-aware selection, failover re-routing of every wiped
+//!   request, queue-wait deadline timers and a bounded retry budget
+//!   ([`RetryPolicy`]). The headline: zero admitted requests lost,
+//!   bounded p99, goodput recovering after re-admission.
+//!
+//! The two cells are sharded by [`super::runner::run_cells`] and reseed
+//! from the pure split [`cell_seed`], so `outage_sweep.json` is
+//! **byte-identical at any thread count**. The standalone mirror
+//! `python/tools/outage_mirror.py` regenerates the same bytes with no
+//! rust toolchain — keep the two in lockstep when editing any constant
+//! here.
+
+use crate::fleet::Topology;
+use crate::scheduler::RetryPolicy;
+use crate::sim::harness::{RequestTruth, GOODPUT_WINDOW_S};
+use crate::sim::{
+    run_fleet_outage, Characterization, FaultMode, FaultSpec, FleetOpts, OutageResult,
+};
+use crate::util::rng::cell_seed;
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::load::synth_workload;
+use super::runner;
+
+/// Requests replayed per cell at full parameters.
+pub const OUTAGE_REQUESTS: usize = 20_000;
+/// Offered load of the outage scenario (r/s) — the `hetero` shape's
+/// tuned contended operating point ([`super::fleet::default_offered_rps`]).
+pub const OUTAGE_OFFERED_RPS: f64 = 224.0;
+/// Seed tag mixed into the sweep's workload seed split.
+pub const OUTAGE_SEED_TAG: u64 = 0xFA117;
+/// Fraction of the nominal run duration (requests ÷ offered load) at
+/// which the crash strikes.
+pub const OUTAGE_START_FRAC: f64 = 0.25;
+/// Seconds the crashed device stays dark before recovering.
+pub const OUTAGE_DURATION_S: f64 = 30.0;
+
+/// The injected fault: the topology's lead edge gateway (its first
+/// edge device — `hetero`'s fast desktop-class edge0) crashes a
+/// quarter into the nominal run and recovers [`OUTAGE_DURATION_S`]
+/// seconds later, queue and in-flight work destroyed.
+pub fn outage_fault_spec(topo: &Topology, requests: usize, offered_rps: f64) -> FaultSpec {
+    let lane = topo.edge_ids()[0];
+    let start_s = (requests as f64 / offered_rps) * OUTAGE_START_FRAC;
+    FaultSpec {
+        lane,
+        mode: FaultMode::Crash,
+        start_s,
+        recover_s: start_s + OUTAGE_DURATION_S,
+    }
+}
+
+/// Sweep configuration.
+#[derive(Debug, Clone)]
+pub struct OutageConfig {
+    /// Master seed of the sweep.
+    pub seed: u64,
+    /// Requests replayed per cell.
+    pub requests_per_point: usize,
+    /// Offered load (r/s).
+    pub offered_rps: f64,
+    /// The fleet under test (the fault strikes its first edge device).
+    pub topo: Topology,
+    /// Scheduler sizing shared by both cells.
+    pub opts: FleetOpts,
+    /// Deadline/backoff/budget knobs of the failover cell.
+    pub retry: RetryPolicy,
+    /// OS threads to shard the two cells across; results are
+    /// bit-identical at any value. 1 = serial (the mirror's mode).
+    pub threads: usize,
+}
+
+impl Default for OutageConfig {
+    fn default() -> Self {
+        OutageConfig {
+            seed: 20220315,
+            requests_per_point: OUTAGE_REQUESTS,
+            offered_rps: OUTAGE_OFFERED_RPS,
+            topo: Topology::hetero(),
+            opts: FleetOpts::default(),
+            retry: RetryPolicy::default(),
+            threads: 1,
+        }
+    }
+}
+
+/// The full outage sweep: both configurations replayed over one shared
+/// pool under one shared fault.
+#[derive(Debug, Clone)]
+pub struct OutageSweep {
+    /// Blind baseline first, failover second (mirror cell order).
+    pub cells: Vec<OutageResult>,
+    /// The fleet swept.
+    pub topo: Topology,
+    /// The fault both cells replayed under.
+    pub fault: FaultSpec,
+    /// The failover cell's retry policy.
+    pub retry: RetryPolicy,
+    /// Requests per cell.
+    pub requests_per_point: usize,
+    /// Master seed.
+    pub seed: u64,
+    /// Offered load (r/s).
+    pub offered_rps: f64,
+}
+
+impl OutageSweep {
+    /// Result for a policy label (panics when absent — report bug).
+    pub fn get(&self, policy: &str) -> &OutageResult {
+        self.cells
+            .iter()
+            .find(|r| r.policy == policy)
+            .unwrap_or_else(|| panic!("missing outage policy {policy}"))
+    }
+
+    /// The health-blind baseline cell.
+    pub fn baseline(&self) -> &OutageResult {
+        self.get("fleet+select")
+    }
+
+    /// The failover cell.
+    pub fn failover(&self) -> &OutageResult {
+        self.get("fleet+select+failover")
+    }
+
+    /// Headline ratio: failover completions per baseline completion
+    /// (NaN when the baseline completed nothing).
+    pub fn completed_ratio(&self) -> f64 {
+        let base = self.baseline().completed as f64;
+        if base > 0.0 {
+            self.failover().completed as f64 / base
+        } else {
+            f64::NAN
+        }
+    }
+}
+
+/// Build the shared request pool of the sweep (also used by the CLI's
+/// `--trace` leg so the traced replay sees the exact report workload).
+pub fn outage_pool(cfg: &OutageConfig) -> (Vec<RequestTruth>, Characterization) {
+    synth_workload(
+        cell_seed(cfg.seed, 0) ^ OUTAGE_SEED_TAG,
+        cfg.requests_per_point,
+        cfg.offered_rps,
+    )
+}
+
+/// Run the outage sweep: baseline and failover cells on the
+/// deterministic parallel runner, both replaying one shared fault over
+/// one shared pool.
+pub fn run(cfg: &OutageConfig) -> Result<OutageSweep> {
+    if cfg.requests_per_point == 0 {
+        return Err(Error::Config("outage sweep needs requests_per_point > 0".into()));
+    }
+    if !(cfg.offered_rps.is_finite() && cfg.offered_rps > 0.0) {
+        return Err(Error::Config(format!(
+            "outage offered load {} r/s must be finite and > 0",
+            cfg.offered_rps
+        )));
+    }
+    cfg.topo.validate()?;
+    if cfg.topo.edge_ids().is_empty() {
+        return Err(Error::Config(format!(
+            "outage sweep needs an edge device to crash in topology {}",
+            cfg.topo.name
+        )));
+    }
+    cfg.retry.validate()?;
+    let fault = outage_fault_spec(&cfg.topo, cfg.requests_per_point, cfg.offered_rps);
+    let (pool, ch) = outage_pool(cfg);
+    let outcomes = runner::run_cells(cfg.threads, 2, |cell| {
+        run_fleet_outage(
+            &pool,
+            &ch,
+            &cfg.topo,
+            &cfg.opts,
+            &fault,
+            &cfg.retry,
+            cell == 1,
+        )
+    });
+    let cells = outcomes.into_iter().collect::<Result<Vec<_>>>()?;
+    Ok(OutageSweep {
+        cells,
+        topo: cfg.topo.clone(),
+        fault,
+        retry: cfg.retry,
+        requests_per_point: cfg.requests_per_point,
+        seed: cfg.seed,
+        offered_rps: cfg.offered_rps,
+    })
+}
+
+/// Render the sweep as an aligned text summary plus the fault line and
+/// the graceful-degradation headline (mirror of the python
+/// `summarize`).
+pub fn render_text(s: &OutageSweep) -> String {
+    let hdr = format!(
+        "{:<22} {:>8} {:>7} {:>7} {:>6} {:>5} {:>8} {:>5} {:>8} {:>9}",
+        "policy", "offered", "admit", "done", "shed%", "lost", "retries", "t/o", "p50ms", "p99ms"
+    );
+    let mut out = String::new();
+    out.push_str(&hdr);
+    out.push('\n');
+    out.push_str(&"-".repeat(hdr.len()));
+    out.push('\n');
+    for label in ["fleet+select", "fleet+select+failover"] {
+        let r = s.get(label);
+        out.push_str(&format!(
+            "{:<22} {:>8} {:>7} {:>7} {:>6.1} {:>5} {:>8} {:>5} {:>8.1} {:>9.1}\n",
+            label,
+            r.offered,
+            r.admitted,
+            r.completed,
+            r.shed_rate() * 100.0,
+            r.lost(),
+            r.retry_dispatches,
+            r.timeouts_fired,
+            r.p50_s * 1e3,
+            r.p99_s * 1e3,
+        ));
+    }
+    let (base, fo) = (s.baseline(), s.failover());
+    out.push_str(&format!(
+        "\nfault: {} (device {}) crashes at t={:.1}s, recovers at t={:.1}s \
+         (queue + in-flight wiped)\n",
+        s.topo.devices[s.fault.lane].name, s.fault.lane, s.fault.start_s, s.fault.recover_s
+    ));
+    out.push_str(&format!(
+        "headline: failover loses {} of {} admitted requests (p99 {:.0} ms) \
+         while the blind baseline strands {} and sheds {} at admission \
+         during the outage\n",
+        fo.lost(),
+        fo.admitted,
+        fo.p99_s * 1e3,
+        base.stranded,
+        base.rejected
+    ));
+    out
+}
+
+/// JSON report (`outage_sweep.json`, written through
+/// [`super::report::write_report`]) — key order mirrored by
+/// `python/tools/outage_mirror.py`'s `outage_to_json`.
+pub fn to_json(s: &OutageSweep) -> Json {
+    let mut retry = Json::object();
+    retry
+        .set("timeout_mult", Json::Num(s.retry.timeout_mult))
+        .set("min_timeout_s", Json::Num(s.retry.min_timeout_s))
+        .set("backoff_base_s", Json::Num(s.retry.backoff_base_s))
+        .set("backoff_mult", Json::Num(s.retry.backoff_mult))
+        .set("max_retries", Json::Num(s.retry.max_retries as f64));
+    let mut policies = Json::object();
+    for r in &s.cells {
+        policies.set(&r.policy, r.to_json());
+    }
+    let (base, fo) = (s.baseline(), s.failover());
+    let mut root = Json::object();
+    root.set("seed", Json::Num(s.seed as f64))
+        .set("requests_per_point", Json::Num(s.requests_per_point as f64))
+        .set("offered_rps", Json::Num(s.offered_rps))
+        .set("topology", s.topo.to_json())
+        .set("fault", s.fault.to_json())
+        .set("retry", retry)
+        .set("goodput_window_s", Json::Num(GOODPUT_WINDOW_S))
+        .set("policies", policies)
+        .set("headline_baseline_lost", Json::Num(base.lost() as f64))
+        .set(
+            "headline_baseline_unserved",
+            Json::Num(base.offered as f64 - base.completed as f64),
+        )
+        .set("headline_failover_lost", Json::Num(fo.lost() as f64))
+        .set("headline_failover_p99_s", Json::Num(fo.p99_s))
+        .set("headline_completed_ratio", Json::Num(s.completed_ratio()));
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn smoke_cfg() -> OutageConfig {
+        OutageConfig { requests_per_point: 1_500, ..Default::default() }
+    }
+
+    #[test]
+    fn structure_headlines_and_conservation() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        assert_eq!(sweep.cells.len(), 2);
+        assert_eq!(sweep.cells[0].policy, "fleet+select");
+        assert_eq!(sweep.cells[1].policy, "fleet+select+failover");
+        // The fault pins the hetero lead edge gateway, a quarter in.
+        assert_eq!(sweep.fault.lane, 0);
+        assert_eq!(sweep.fault.mode, FaultMode::Crash);
+        let nominal = 1_500.0 / OUTAGE_OFFERED_RPS;
+        assert!((sweep.fault.start_s - nominal * OUTAGE_START_FRAC).abs() < 1e-12);
+        assert_eq!(sweep.fault.recover_s, sweep.fault.start_s + OUTAGE_DURATION_S);
+        for r in &sweep.cells {
+            assert_eq!(r.offered, 1_500, "{}", r.policy);
+            assert_eq!(r.completed + r.lost(), r.admitted, "{}", r.policy);
+            assert_eq!(
+                r.device_results.iter().sum::<usize>(),
+                r.completed,
+                "{}",
+                r.policy
+            );
+            assert_eq!(r.goodput_curve.iter().sum::<usize>(), r.completed, "{}", r.policy);
+        }
+        // The graceful-degradation headline at smoke scale: the blind
+        // baseline loses work, failover loses none and serves more.
+        let (base, fo) = (sweep.baseline(), sweep.failover());
+        assert!(base.lost() > 0, "baseline lost nothing: {base:?}");
+        assert_eq!(fo.lost(), 0, "failover lost requests: {fo:?}");
+        assert!(fo.completed > base.completed);
+        assert!(sweep.completed_ratio() > 1.0);
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        // The determinism acceptance property: the JSON bytes CI diffs
+        // must not depend on the thread count.
+        let mut cfg = smoke_cfg();
+        cfg.requests_per_point = 800;
+        let serial = to_json(&run(&cfg).unwrap()).to_string_pretty();
+        for threads in [2, 4, 7] {
+            cfg.threads = threads;
+            let parallel = to_json(&run(&cfg).unwrap()).to_string_pretty();
+            assert_eq!(parallel, serial, "{threads}-thread outage sweep diverged");
+        }
+    }
+
+    #[test]
+    fn render_and_json_cover_the_schema() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        let txt = render_text(&sweep);
+        assert!(txt.contains("fleet+select+failover"));
+        assert!(txt.contains("fault:"));
+        assert!(txt.contains("headline:"));
+        let j = to_json(&sweep);
+        assert!(j.get("topology").unwrap().get("devices").is_ok());
+        let fault = j.get("fault").unwrap();
+        assert_eq!(fault.get("mode").unwrap().as_str().unwrap(), "crash");
+        let retry = j.get("retry").unwrap();
+        assert_eq!(retry.get("max_retries").unwrap().as_f64().unwrap(), 4.0);
+        for label in ["fleet+select", "fleet+select+failover"] {
+            let pol = j.get("policies").unwrap().get(label).unwrap();
+            assert!(pol.get("goodput_curve").is_ok(), "{label}");
+            assert!(pol.get("failover_reroutes").is_ok(), "{label}");
+        }
+        assert_eq!(j.get("headline_failover_lost").unwrap().as_f64().unwrap(), 0.0);
+        assert!(j.get("headline_completed_ratio").unwrap().as_f64().unwrap() > 1.0);
+        assert!(j.get("goodput_window_s").is_ok());
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let mut cfg = smoke_cfg();
+        cfg.requests_per_point = 0;
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.offered_rps = f64::NAN;
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.retry = RetryPolicy { max_retries: 4, timeout_mult: -1.0, ..Default::default() };
+        assert!(run(&cfg).is_err());
+        let mut cfg = smoke_cfg();
+        cfg.topo = Topology {
+            name: "clouds-only".into(),
+            devices: vec![crate::fleet::DeviceSpec::cloud("c0", 1.0, 1.0)],
+        };
+        assert!(run(&cfg).is_err());
+    }
+}

@@ -35,5 +35,5 @@
 pub mod select;
 pub mod topology;
 
-pub use select::{FleetSelector, FleetStrategy, Placement, PlacementTrace};
+pub use select::{DeviceHealth, FleetSelector, FleetStrategy, Placement, PlacementTrace};
 pub use topology::{DeviceId, DeviceSpec, Topology};

@@ -135,6 +135,26 @@ impl FleetStrategy {
     }
 }
 
+/// Health of one fleet device, as the selector sees it.
+///
+/// The state machine is driven by fault injection
+/// ([`crate::sim::FaultSpec`] → [`FleetSelector::set_health`]):
+/// `Up → Down` when the device crashes, `Down → Up` on recovery, with
+/// `Draining` as the administrative half-way point (no new placements,
+/// existing queue keeps running — a planned decommission rather than a
+/// crash). Only `Up` devices participate in the placement arg-min; a
+/// fleet whose devices are all `Up` scores bit-identically to a
+/// health-blind selector.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DeviceHealth {
+    /// Serving: eligible for placement.
+    Up,
+    /// No new placements; already-queued work keeps running.
+    Draining,
+    /// Crashed: excluded from the arg-min until recovery.
+    Down,
+}
+
 /// The fleet decision engine: per-device T_exe planes plus the shared
 /// network estimate, scoring every placement in O(devices).
 #[derive(Debug, Clone)]
@@ -155,6 +175,10 @@ pub struct FleetSelector {
     ttx: TtxEstimator,
     ttx_prior_s: f64,
     decisions: u64,
+    /// Per-device health ([`FleetSelector::set_health`]); all
+    /// [`DeviceHealth::Up`] at construction, in which case scoring is
+    /// bit-identical to the pre-health selector.
+    health: Vec<DeviceHealth>,
 }
 
 impl FleetSelector {
@@ -199,7 +223,21 @@ impl FleetSelector {
             ttx: TtxEstimator::new(0.3),
             ttx_prior_s: 0.05,
             decisions: 0,
+            health: vec![DeviceHealth::Up; n_dev],
         })
+    }
+
+    /// Set device `d`'s health state. Non-`Up` devices are excluded
+    /// from the placement arg-min ([`FleetSelector::select`]); flipping
+    /// a device back to [`DeviceHealth::Up`] re-admits it with its
+    /// plane, link law and refit state untouched.
+    pub fn set_health(&mut self, d: DeviceId, health: DeviceHealth) {
+        self.health[d] = health;
+    }
+
+    /// Device `d`'s current health state.
+    pub fn health(&self, d: DeviceId) -> DeviceHealth {
+        self.health[d]
     }
 
     /// Number of devices.
@@ -285,7 +323,10 @@ impl FleetSelector {
     /// Score every placement and return the arg-min plus the per-tier
     /// bests. `waits[d]` is device `d`'s expected queueing delay (all
     /// zeros = the idle eq. 1, the blind baselines' view). O(devices),
-    /// allocation-free.
+    /// allocation-free. Non-[`DeviceHealth::Up`] devices are skipped;
+    /// when *every* device of both tiers is unavailable the returned
+    /// trace carries the sentinel `device == usize::MAX` with an
+    /// infinite score — callers must treat it as "no placement".
     pub fn select(&mut self, n: usize, waits: &[f64]) -> PlacementTrace {
         debug_assert_eq!(waits.len(), self.tier.len());
         self.decisions += 1;
@@ -325,6 +366,12 @@ impl FleetSelector {
             est_service_s: f64::INFINITY,
         };
         for &d in ids {
+            if self.health[d] != DeviceHealth::Up {
+                // Draining/Down: excluded from the arg-min. With every
+                // device Up this branch never fires and the scan is
+                // operation-for-operation the health-blind one.
+                continue;
+            }
             let est = self.texe[d].estimate(n, m_est);
             // Same grouping as the pair router's eq. 1 sides:
             // (T̂_exe + Ŵ) for edges, ((T̂_tx + T̂_exe) + Ŵ) for clouds —
@@ -586,6 +633,78 @@ mod tests {
         assert!(!FleetStrategy::Random { seed: 1 }.queue_aware());
         assert!(FleetStrategy::Select.queue_aware());
         assert!(FleetStrategy::Hedged { margin_s: 0.01 }.queue_aware());
+    }
+
+    #[test]
+    fn down_devices_are_excluded_until_recovery() {
+        let topo = Topology::uniform(2, 2); // edges 0,1; clouds 2,3
+        let mut sel = selector(&topo);
+        sel.observe_ttx(0.0, 0.042);
+        let n = 5; // firmly edge when idle; lowest id wins the tie
+        assert_eq!(sel.select(n, &[0.0; 4]).device, 0);
+        // Crash edge 0: the arg-min moves to its sibling without the
+        // scores of any other device changing.
+        sel.set_health(0, DeviceHealth::Down);
+        assert_eq!(sel.health(0), DeviceHealth::Down);
+        let t = sel.select(n, &[0.0; 4]);
+        assert_eq!(t.device, 1, "down device must not win placement");
+        // Draining is excluded exactly like Down.
+        sel.set_health(1, DeviceHealth::Draining);
+        let t = sel.select(n, &[0.0; 4]);
+        assert_ne!(t.device, 0);
+        assert_ne!(t.device, 1, "draining device must not win placement");
+        // A whole tier down: the other tier serves.
+        sel.set_health(1, DeviceHealth::Up);
+        let big = 62; // firmly cloud when idle
+        sel.set_health(2, DeviceHealth::Down);
+        sel.set_health(3, DeviceHealth::Down);
+        let t = sel.select(big, &[0.0; 4]);
+        assert!(t.best_cloud.score_s.is_infinite());
+        assert_eq!(t.best_cloud.device, usize::MAX);
+        assert!(t.device == 0 || t.device == 1);
+        // Every device down: the sentinel trace.
+        sel.set_health(0, DeviceHealth::Down);
+        sel.set_health(1, DeviceHealth::Down);
+        let t = sel.select(big, &[0.0; 4]);
+        assert_eq!(t.device, usize::MAX, "no placement when all devices are down");
+        // Recovery re-admits with scores bit-identical to a fresh
+        // selector fed the same observations.
+        for d in 0..4 {
+            sel.set_health(d, DeviceHealth::Up);
+        }
+        let mut fresh = selector(&topo);
+        fresh.observe_ttx(0.0, 0.042);
+        let a = sel.select(big, &[0.0; 4]);
+        let b = fresh.select(big, &[0.0; 4]);
+        assert_eq!(a.device, b.device);
+        assert_eq!(a.best_edge.score_s.to_bits(), b.best_edge.score_s.to_bits());
+        assert_eq!(a.best_cloud.score_s.to_bits(), b.best_cloud.score_s.to_bits());
+    }
+
+    #[test]
+    fn all_up_health_is_bit_identical_to_health_blind_scoring() {
+        // The health gate must be invisible while every device is Up —
+        // this is what keeps every legacy report byte-identical.
+        let topo = Topology::hetero();
+        let mut sel = selector(&topo);
+        sel.observe_ttx(0.0, 0.042);
+        let mut witness = selector(&topo);
+        witness.observe_ttx(0.0, 0.042);
+        // Round-trip one device through Down and back before comparing.
+        sel.set_health(3, DeviceHealth::Down);
+        let _ = sel.select(10, &[0.0; 6]);
+        sel.set_health(3, DeviceHealth::Up);
+        let _ = witness.select(10, &[0.0; 6]);
+        let n_dev = topo.len();
+        for n in [1usize, 9, 23, 41, 62] {
+            let w: Vec<f64> = (0..n_dev).map(|d| d as f64 * 0.01).collect();
+            let a = sel.select(n, &w);
+            let b = witness.select(n, &w);
+            assert_eq!(a.device, b.device);
+            assert_eq!(a.best_edge.score_s.to_bits(), b.best_edge.score_s.to_bits());
+            assert_eq!(a.best_cloud.score_s.to_bits(), b.best_cloud.score_s.to_bits());
+            assert_eq!(a.est_service_s.to_bits(), b.est_service_s.to_bits());
+        }
     }
 
     #[test]

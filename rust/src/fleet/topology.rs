@@ -423,4 +423,51 @@ mod tests {
         let bad_tier = Json::parse(r#"{"devices":[{"tier":"fog"}]}"#).unwrap();
         assert!(Topology::from_json(&bad_tier).is_err());
     }
+
+    /// A malformed spec file must never produce a routable fleet: every
+    /// degenerate field the validator guards is also rejected when it
+    /// arrives through the JSON front door (`--topology` on the CLI).
+    #[test]
+    fn json_spec_fails_closed() {
+        let parse = |s: &str| Topology::from_json(&Json::parse(s).unwrap());
+        // Missing the devices key entirely.
+        assert!(parse(r#"{"name":"x"}"#).is_err());
+        // Present but empty — no tiers to route between.
+        assert!(parse(r#"{"devices":[]}"#).is_err());
+        // One tier only.
+        assert!(parse(r#"{"devices":[{"tier":"edge"}]}"#).is_err());
+        assert!(parse(r#"{"devices":[{"tier":"cloud"}]}"#).is_err());
+        // Degenerate numerics through the spec, not the struct.
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge","speed":0.0},{"tier":"cloud"}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge","speed":-2.0},{"tier":"cloud"}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge","workers":0},{"tier":"cloud"}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge"},{"tier":"cloud","link_scale":0.0}]}"#
+        )
+        .is_err());
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge"},{"tier":"cloud","link_scale":-1.0}]}"#
+        )
+        .is_err());
+        // Wrong shapes: devices not an array, speed not a number.
+        assert!(parse(r#"{"devices":{"tier":"edge"}}"#).is_err());
+        assert!(parse(
+            r#"{"devices":[{"tier":"edge","speed":"fast"},{"tier":"cloud"}]}"#
+        )
+        .is_err());
+        // The minimal well-formed spec still parses (the guard is not
+        // over-broad).
+        let ok = parse(r#"{"devices":[{"tier":"edge"},{"tier":"cloud"}]}"#).unwrap();
+        assert_eq!(ok.shape(), (1, 1));
+        assert_eq!(ok.name, "custom");
+    }
 }

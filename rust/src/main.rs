@@ -24,7 +24,8 @@ use cnmt::corpus::LangPair;
 use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
 use cnmt::experiments::{
-    ablation, energy, fig2a, fig3, fig4, fleet, load, multilevel, report, runner, table1,
+    ablation, energy, fig2a, fig3, fig4, fleet, load, multilevel, outage, report, runner,
+    table1,
 };
 #[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
@@ -66,7 +67,7 @@ const HELP: &str = "\
 cnmt — C-NMT: collaborative inference for neural machine translation
 
 USAGE:
-  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|all> [flags]
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|outage|all> [flags]
       --config <json>       load a Config (defaults = paper setup)
       --requests <n>        evaluation requests (default 100000)
       --fit <n>             characterisation inferences (default 10000)
@@ -102,6 +103,14 @@ USAGE:
                             decomposition) at a fixed cadence and write
                             telemetry_drift.json instead of
                             fleet_closed_loop.json (default K = 32)
+      --outage-requests <n> outage sweep: requests per cell (default 20000);
+                            the sweep crashes the lead edge gateway
+                            mid-run and compares the health-blind
+                            baseline against deadline-timer failover
+                            (writes outage_sweep.json; --threads applies)
+      --trace <path>        outage sweep only: additionally stream the
+                            failover cell's full decision log (JSONL)
+                            to <path> for `cnmt trace verify`
   cnmt bench sched [flags]  scheduler core benchmark (events/sec,
                             ns/event, sweep wall-clock at 1 vs N threads)
       --json                also write the machine-readable report
@@ -322,6 +331,17 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     } else {
         None
     };
+    let outage_cfg = if matches!(which.as_str(), "outage" | "all") {
+        let mut oc = outage::OutageConfig { seed: cfg.seed, ..Default::default() };
+        oc.threads = runner::resolve_threads(args.usize("threads", 1)?);
+        oc.requests_per_point = args.usize("outage-requests", oc.requests_per_point)?;
+        Some(oc)
+    } else {
+        None
+    };
+    // The decision-log leg only exists on the dedicated outage run; on
+    // `all` a stray --trace stays unknown and is rejected below.
+    let outage_trace = if which == "outage" { args.str_opt("trace") } else { None };
     args.reject_unknown()?;
 
     let run_fig2a = |cfg: &Config| -> Result<()> {
@@ -453,6 +473,56 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
 
+    let run_outage = |cfg: &Config| -> Result<()> {
+        let oc = outage_cfg.as_ref().expect("outage_cfg built for outage/all");
+        eprintln!(
+            "outage: {} requests/cell, mid-run edge-gateway crash on `{}` \
+             (baseline vs failover, seed {})",
+            oc.requests_per_point, oc.topo.name, oc.seed
+        );
+        let s = outage::run(oc)?;
+        print!("{}", outage::render_text(&s));
+        let p = report::write_report(&cfg.out_dir, "outage_sweep", &outage::to_json(&s))?;
+        eprintln!("wrote {}\n", p.display());
+        if let Some(trace_path) = outage_trace.as_deref() {
+            let out = PathBuf::from(trace_path);
+            if let Some(parent) = out.parent() {
+                if !parent.as_os_str().is_empty() {
+                    std::fs::create_dir_all(parent)?;
+                }
+            }
+            let sink = std::io::BufWriter::new(std::fs::File::create(&out)?);
+            // The ring is only a live window; the sink carries the full
+            // stream, which is what the offline verifier needs.
+            let rec = cnmt::obs::FlightRecorder::new(4096).with_sink(Box::new(sink));
+            let (pool, ch) = outage::outage_pool(oc);
+            let fault =
+                outage::outage_fault_spec(&oc.topo, oc.requests_per_point, oc.offered_rps);
+            let (res, mut rec) = cnmt::sim::run_fleet_outage_traced(
+                &pool, &ch, &oc.topo, &oc.opts, &fault, &oc.retry, true, rec,
+            )?;
+            rec.flush();
+            if !rec.sink_ok() {
+                return Err(Error::Config(format!(
+                    "outage trace: write to {} failed",
+                    out.display()
+                )));
+            }
+            eprintln!(
+                "dumped {} failover-cell events to {} ({} admitted: {} completed, \
+                 {} reroutes, {} retries, {} timeouts)\n",
+                rec.total(),
+                out.display(),
+                res.admitted,
+                res.completed,
+                res.failover_reroutes,
+                res.retry_dispatches,
+                res.timeouts_fired
+            );
+        }
+        Ok(())
+    };
+
     let run_multilevel = |cfg: &Config| -> Result<()> {
         eprintln!("multilevel: 3-tier CI (end-device/gateway/cloud)...");
         let m = multilevel::run(cfg, &cal)?;
@@ -472,6 +542,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "multilevel" => run_multilevel(&cfg),
         "load" => run_load(&cfg),
         "fleet" => run_fleet_exp(&cfg),
+        "outage" => run_outage(&cfg),
         "all" => {
             run_fig4(&cfg)?;
             run_fig3(&cfg)?;
@@ -481,7 +552,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             run_energy(&cfg)?;
             run_multilevel(&cfg)?;
             run_load(&cfg)?;
-            run_fleet_exp(&cfg)
+            run_fleet_exp(&cfg)?;
+            run_outage(&cfg)
         }
         other => Err(Error::Config(format!("unknown experiment `{other}`"))),
     }
@@ -767,6 +839,141 @@ fn fleet_loop_json(
     o
 }
 
+/// The fleet event-loop cycle of [`bench_fleet_loop`] with the failure
+/// machinery armed: deadline timers enabled, one `arm_timeout` per
+/// admitted request (deadline = the default [`RetryPolicy`] over the
+/// scored estimate) and a due-timer sweep + selector re-route before
+/// every arrival — the exact per-request overhead the outage harness
+/// pays. No fault is injected, so timers almost never fire and the
+/// measured delta is the bookkeeping cost itself (heap push + armed-map
+/// insert + lazy disarm), which CI gates as a ratio against the untimed
+/// loop (bench_gate.py --min-failover-ratio).
+///
+/// [`RetryPolicy`]: cnmt::scheduler::RetryPolicy
+fn bench_fleet_failover_loop(
+    topo: &cnmt::fleet::Topology,
+    requests: usize,
+    offered_rps: f64,
+) -> (u64, f64) {
+    use cnmt::experiments::load::{
+        synth_workload, CLOUD_PLANE, EDGE_PLANE, N2M_DELTA, N2M_GAMMA, RTT_S,
+    };
+    use cnmt::fleet::FleetSelector;
+    use cnmt::predictor::{N2mRegressor, TexeModel};
+    use cnmt::scheduler::{BatchPolicy, Dispatcher, QueuedRequest, RetryPolicy};
+
+    let (truths, _ch) = synth_workload(0xBE7C5, requests, offered_rps);
+    let retry = RetryPolicy::default();
+    let mut sel = FleetSelector::new(
+        topo,
+        TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2),
+        TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2),
+        N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA),
+    )
+    .expect("bench fleet selector");
+    sel.observe_ttx(0.0, RTT_S);
+    let n_dev = topo.len();
+    let mut disp = Dispatcher::with_lanes(&topo.lane_specs(512), BatchPolicy::default());
+    disp.enable_timers();
+    let mut exec = FleetSynthExec {
+        truths: &truths,
+        tier: topo.devices.iter().map(|d| d.tier).collect(),
+        slowdown: topo.devices.iter().map(|d| d.slowdown()).collect(),
+        residual: 0.15,
+    };
+    let mut waits = vec![0.0f64; n_dev];
+    let mut fired = Vec::new();
+    let mut completions = 0u64;
+    let t0 = std::time::Instant::now();
+    for (i, truth) in truths.iter().enumerate() {
+        let now = truth.arrival_s;
+        disp.fire_timeouts(now, &mut fired);
+        disp.run_until(now, &mut exec, &mut |_c| completions += 1);
+        // Re-route anything a deadline pulled out (rare without a
+        // fault, but the path has to be live to be measured).
+        while let Some(rq) = fired.pop() {
+            let id = rq.id;
+            for (d, w) in waits.iter_mut().enumerate() {
+                *w = disp.expected_wait_lane(d, now);
+            }
+            let trace = sel.select(rq.n, &waits);
+            let admitted = disp.submit_lane(
+                trace.device,
+                QueuedRequest { est_service_s: trace.est_service_s, ..rq },
+            );
+            if admitted.is_admitted() {
+                disp.arm_timeout(
+                    id,
+                    trace.device,
+                    now + retry.deadline_after(trace.est_service_s),
+                );
+            }
+        }
+        for (d, w) in waits.iter_mut().enumerate() {
+            *w = disp.expected_wait_lane(d, now);
+        }
+        let trace = sel.select(truth.n, &waits);
+        let admitted = disp.submit_lane(
+            trace.device,
+            QueuedRequest {
+                id: i as u64,
+                payload: i,
+                n: truth.n,
+                m_est: trace.m_est,
+                est_service_s: trace.est_service_s,
+                arrival_s: now,
+                bucket: 0,
+                hedge: None,
+            },
+        );
+        if admitted.is_admitted() {
+            disp.arm_timeout(
+                i as u64,
+                trace.device,
+                now + retry.deadline_after(trace.est_service_s),
+            );
+        }
+    }
+    disp.run_until(f64::INFINITY, &mut exec, &mut |_c| completions += 1);
+    let wall_s = t0.elapsed().as_secs_f64();
+    (completions + disp.batch_stats().batches, wall_s)
+}
+
+/// Best-of-3 failover-armed fleet event-loop measurement.
+fn fleet_failover_json(
+    label: &str,
+    topo: &cnmt::fleet::Topology,
+    requests: usize,
+    offered_rps: f64,
+) -> cnmt::util::Json {
+    use cnmt::util::Json;
+    let mut best: Option<(u64, f64)> = None;
+    for _ in 0..3 {
+        let (events, wall_s) = bench_fleet_failover_loop(topo, requests, offered_rps);
+        best = Some(match best {
+            Some((e, w)) if w <= wall_s => (e, w),
+            _ => (events, wall_s),
+        });
+    }
+    let (events, wall_s) = best.expect("three samples taken");
+    let eps = events as f64 / wall_s;
+    eprintln!(
+        "  {label:<18} {events} events in {wall_s:.3} s  →  {eps:.0} events/s \
+         ({:.0} ns/event)",
+        1e9 / eps
+    );
+    let mut o = Json::object();
+    o.set("topology", Json::Str(topo.name.clone()))
+        .set("lanes", Json::Num(topo.len() as f64))
+        .set("requests", Json::Num(requests as f64))
+        .set("offered_rps", Json::Num(offered_rps))
+        .set("events", Json::Num(events as f64))
+        .set("wall_s", Json::Num(wall_s))
+        .set("events_per_sec", Json::Num(eps))
+        .set("ns_per_event", Json::Num(1e9 / eps));
+    o
+}
+
 /// Best-of-3 event-loop measurement for one dispatcher implementation.
 fn event_loop_json<D: BenchDispatch>(
     label: &str,
@@ -980,6 +1187,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
         fleet_ratio
     );
 
+    // Failover overhead: the identical fleet cycle on the outage
+    // topology with the failure machinery armed — deadline timer per
+    // admitted request + due-timer sweep per arrival. CI gates the
+    // ratio (bench_gate.py --min-failover-ratio).
+    eprintln!("bench sched: failover-armed fleet loop (deadline timers, hetero)");
+    let topo_hetero = cnmt::fleet::Topology::hetero();
+    let fleet_hetero = fleet_loop_json("fleet/hetero", &topo_hetero, requests, 224.0);
+    let failover_hetero =
+        fleet_failover_json("failover/hetero", &topo_hetero, requests, 224.0);
+    let failover_ratio = failover_hetero
+        .get("events_per_sec")
+        .unwrap()
+        .as_f64()
+        .unwrap()
+        / fleet_hetero.get("events_per_sec").unwrap().as_f64().unwrap();
+    eprintln!(
+        "  timers armed on every request cost {:.2}x events/sec vs the untimed \
+         loop",
+        failover_ratio
+    );
+
     // Hot-path latency: the full steady-state per-request cycle.
     let hot = {
         use cnmt::devices::DeviceKind;
@@ -1104,6 +1332,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("lane2", fleet_lane2)
         .set("lane6", fleet_lane6)
         .set("ratio_vs_pair_solo", Json::Num(fleet_ratio));
+    let mut failover_section = Json::object();
+    failover_section
+        .set("untimed", fleet_hetero)
+        .set("armed", failover_hetero)
+        .set("ratio", Json::Num(failover_ratio));
     let mut recorder_section = Json::object();
     recorder_section
         .set("capacity", Json::Num(RECORDER_BENCH_CAPACITY as f64))
@@ -1116,6 +1349,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("event_loop_solo", solo)
         .set("event_loop_hedged", hedged)
         .set("fleet", fleet_section)
+        .set("failover", failover_section)
         .set("hot_path", hot.to_json())
         .set("sweep", sweep)
         .set("baseline", baseline)

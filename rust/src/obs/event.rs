@@ -125,6 +125,47 @@ pub enum Event {
         /// Current slowdown factor (1.0 before onset).
         factor: f64,
     },
+    /// A device crashed ([`crate::scheduler::Dispatcher::fail_lane`]):
+    /// its queue and in-flight batches are lost and admissions refuse
+    /// until the matching [`Event::DeviceUp`].
+    DeviceDown {
+        /// The crashed lane.
+        lane: u32,
+    },
+    /// A crashed device recovered
+    /// ([`crate::scheduler::Dispatcher::recover_lane`]): empty queue,
+    /// idle workers, admissions accepted again.
+    DeviceUp {
+        /// The recovered lane.
+        lane: u32,
+    },
+    /// A queue-wait deadline timer fired: the request was still queued
+    /// at its deadline and was pulled out for requeueing
+    /// ([`crate::scheduler::Dispatcher::fire_timeouts`]).
+    TimeoutFired {
+        /// Request id.
+        id: u64,
+        /// Lane the request was stuck on.
+        lane: u32,
+    },
+    /// A timed-out or failed-over request was re-admitted after its
+    /// backoff (`attempt` = 1-based retry count of its chain).
+    RetryDispatched {
+        /// Request id.
+        id: u64,
+        /// Lane the retry was placed on.
+        lane: u32,
+        /// 1-based attempt number within the retry budget.
+        attempt: u32,
+    },
+    /// A dead lane's request (queued or in-flight at the crash) was
+    /// handed back to the selector for re-routing.
+    FailoverReroute {
+        /// Request id.
+        id: u64,
+        /// The lane that died with the request on it.
+        from_lane: u32,
+    },
 }
 
 /// An [`Event`] stamped with its simulation time and sequence number.
@@ -199,6 +240,11 @@ impl Event {
             Event::RefitInstall { .. } => "refit_install",
             Event::MarginAdjust { .. } => "margin_adjust",
             Event::DriftTick { .. } => "drift_tick",
+            Event::DeviceDown { .. } => "device_down",
+            Event::DeviceUp { .. } => "device_up",
+            Event::TimeoutFired { .. } => "timeout_fired",
+            Event::RetryDispatched { .. } => "retry_dispatched",
+            Event::FailoverReroute { .. } => "failover_reroute",
         }
     }
 }
@@ -263,6 +309,18 @@ impl Stamped {
                 let _ = write!(out, ",\"lane\":{lane},\"factor\":");
                 write_f64(out, factor);
             }
+            Event::DeviceDown { lane } | Event::DeviceUp { lane } => {
+                let _ = write!(out, ",\"lane\":{lane}");
+            }
+            Event::TimeoutFired { id, lane } => {
+                let _ = write!(out, ",\"id\":{id},\"lane\":{lane}");
+            }
+            Event::RetryDispatched { id, lane, attempt } => {
+                let _ = write!(out, ",\"id\":{id},\"lane\":{lane},\"attempt\":{attempt}");
+            }
+            Event::FailoverReroute { id, from_lane } => {
+                let _ = write!(out, ",\"id\":{id},\"from_lane\":{from_lane}");
+            }
         }
         out.push_str("}\n");
     }
@@ -319,6 +377,21 @@ impl Stamped {
                 lane: read_u32(v, "lane")?,
                 factor: read_f64(v, "factor")?,
             },
+            "device_down" => Event::DeviceDown { lane: read_u32(v, "lane")? },
+            "device_up" => Event::DeviceUp { lane: read_u32(v, "lane")? },
+            "timeout_fired" => Event::TimeoutFired {
+                id: read_u64(v, "id")?,
+                lane: read_u32(v, "lane")?,
+            },
+            "retry_dispatched" => Event::RetryDispatched {
+                id: read_u64(v, "id")?,
+                lane: read_u32(v, "lane")?,
+                attempt: read_u32(v, "attempt")?,
+            },
+            "failover_reroute" => Event::FailoverReroute {
+                id: read_u64(v, "id")?,
+                from_lane: read_u32(v, "from_lane")?,
+            },
             other => return Err(Error::Config(format!("unknown event tag `{other}`"))),
         };
         Ok(Stamped { t_s, seq, ev })
@@ -362,6 +435,11 @@ mod tests {
             wasted_s: 1.25,
         });
         roundtrip(Event::DriftTick { lane: 0, factor: 2.5 });
+        roundtrip(Event::DeviceDown { lane: 2 });
+        roundtrip(Event::DeviceUp { lane: 2 });
+        roundtrip(Event::TimeoutFired { id: 11, lane: 3 });
+        roundtrip(Event::RetryDispatched { id: 11, lane: 4, attempt: 2 });
+        roundtrip(Event::FailoverReroute { id: 12, from_lane: 2 });
     }
 
     #[test]

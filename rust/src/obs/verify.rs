@@ -5,11 +5,21 @@
 //! or `Acct` internals:
 //!
 //! * **Conservation** — every offered request is shed or admitted; every
-//!   admitted request produces exactly one result; batch membership
-//!   equals completion count.
+//!   admitted request produces exactly one result, is still in flight at
+//!   the end of the trace, or (retry chains only) was terminally shed
+//!   after exhausting its retry budget; batch membership covers every
+//!   completion. Retry chains (requests named by `TimeoutFired` /
+//!   `RetryDispatched` / `FailoverReroute` events) may admit many times
+//!   but are counted **once**, with fate precedence completed >
+//!   in-flight > shed.
 //! * **Hedge-fate partitioning** — every hedged request admits exactly
 //!   two copies on distinct lanes and resolves as exactly one win plus
-//!   exactly one loss-or-cancellation, on the admitted lanes.
+//!   exactly one loss-or-cancellation, on the admitted lanes. A pair
+//!   whose winner is logged but whose loser's resolution fell off the
+//!   tail of the dump (or was destroyed by a device fault) is reported
+//!   as an *open race*, not an error.
+//! * **Failure discipline** — no lane admits between its `DeviceDown`
+//!   and `DeviceUp` events.
 //! * **Control-law replay** — the hedge margin trajectory in the
 //!   `MarginAdjust` stream is recomputed step by step from the meta
 //!   header's budget and initial margin; every event's margin must match
@@ -18,9 +28,12 @@
 //!   the raw useful/wasted work totals, re-deriving waste-budget
 //!   compliance without trusting any aggregate.
 //!
-//! The checker demands a complete trace (sequence numbers contiguous
-//! from zero): a ring window that dropped events cannot prove
-//! conservation, and is rejected with the dropped-prefix size.
+//! The checker demands a trace that is complete *from the start*
+//! (sequence numbers contiguous from zero): a ring window that dropped
+//! leading events cannot prove conservation, and is rejected with the
+//! dropped-prefix size. A dump cut short at the **tail** is
+//! indistinguishable from a run that ended with work outstanding, so
+//! unresolved requests are tallied as `in_flight` rather than rejected.
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
@@ -81,6 +94,27 @@ pub struct VerifyReport {
     pub drift_ticks: u64,
     /// Largest drift slowdown factor seen.
     pub max_drift_factor: f64,
+    /// Admitted requests with no result by the end of the trace (still
+    /// queued, running, or waiting out a retry backoff).
+    pub in_flight: u64,
+    /// Hedge races whose winner is logged but whose loser's resolution
+    /// is missing (tail truncation or a device fault destroyed it).
+    pub open_races: u64,
+    /// Distinct requests that went through the timeout/failover retry
+    /// machinery (each chain counted once everywhere else).
+    pub retried: u64,
+    /// Retry chains terminally shed after exhausting their budget.
+    pub shed_failed: u64,
+    /// Queue-deadline timers that fired.
+    pub timeouts_fired: u64,
+    /// Retry re-admissions dispatched.
+    pub retry_dispatches: u64,
+    /// Requests re-routed off a dead lane.
+    pub failover_reroutes: u64,
+    /// Device crash events.
+    pub device_down: u64,
+    /// Device recovery events.
+    pub device_up: u64,
 }
 
 impl VerifyReport {
@@ -113,24 +147,37 @@ impl VerifyReport {
             .set("waste_budget", opt(self.waste_budget))
             .set("refits", Json::Num(self.refits as f64))
             .set("drift_ticks", Json::Num(self.drift_ticks as f64))
-            .set("max_drift_factor", Json::Num(self.max_drift_factor));
+            .set("max_drift_factor", Json::Num(self.max_drift_factor))
+            .set("in_flight", Json::Num(self.in_flight as f64))
+            .set("open_races", Json::Num(self.open_races as f64))
+            .set("retried", Json::Num(self.retried as f64))
+            .set("shed_failed", Json::Num(self.shed_failed as f64))
+            .set("timeouts_fired", Json::Num(self.timeouts_fired as f64))
+            .set("retry_dispatches", Json::Num(self.retry_dispatches as f64))
+            .set("failover_reroutes", Json::Num(self.failover_reroutes as f64))
+            .set("device_down", Json::Num(self.device_down as f64))
+            .set("device_up", Json::Num(self.device_up as f64));
         o
     }
 }
 
-/// Per-request fate accumulated while scanning.
+/// Per-request fate accumulated while scanning. Retry chains may cycle
+/// through many admissions; the lane arrays only capture the first two
+/// (enough for the strict non-retried checks).
 #[derive(Debug, Clone, Copy, Default)]
 struct IdState {
-    admits: u8,
+    admits: u32,
     admit_lanes: [u32; 2],
     hedged: bool,
-    shed: bool,
-    wins: u8,
-    solos: u8,
-    losses: u8,
-    cancels: u8,
+    sheds: u32,
+    wins: u32,
+    solos: u32,
+    losses: u32,
+    cancels: u32,
     resolve_lanes: [u32; 2],
-    resolves: u8,
+    resolves: u32,
+    /// Copies destroyed by a timeout pull or a lane failure.
+    kills: u32,
 }
 
 /// Parse a JSONL trace into its meta header and event list. Lines are
@@ -232,32 +279,60 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
         }
     }
 
+    // --- Pass 0: which ids went through the retry machinery? -------------
+    // A retry chain re-admits under the same id, so the strict
+    // once-per-request caps below must not apply to it. The retry events
+    // name the chain explicitly.
+    let mut retried_ids: std::collections::HashSet<u64> =
+        std::collections::HashSet::new();
+    for st in events {
+        match st.ev {
+            Event::TimeoutFired { id, .. }
+            | Event::RetryDispatched { id, .. }
+            | Event::FailoverReroute { id, .. } => {
+                retried_ids.insert(id);
+            }
+            _ => {}
+        }
+    }
+
     // --- Pass 1: per-id fates and global tallies. -----------------------
     let mut ids: HashMap<u64, IdState> = HashMap::new();
+    let mut down_lanes: std::collections::HashSet<u32> =
+        std::collections::HashSet::new();
     let mut dispatch_batches = 0u64;
     let mut dispatched_requests = 0u64;
     for st in events {
         match st.ev {
             Event::Admit { id, lane, hedged } => {
+                if down_lanes.contains(&lane) {
+                    return Err(fail(format!(
+                        "request {id} admitted on lane {lane} while it was down"
+                    )));
+                }
+                let retried = retried_ids.contains(&id);
                 let s = ids.entry(id).or_default();
-                if s.shed {
+                if s.sheds > 0 && !retried {
                     return Err(fail(format!("request {id} admitted after shed")));
                 }
-                if s.admits >= 2 {
+                if s.admits >= 2 && !retried {
                     return Err(fail(format!("request {id} admitted 3+ times")));
                 }
-                s.admit_lanes[s.admits as usize] = lane;
+                if s.admits < 2 {
+                    s.admit_lanes[s.admits as usize] = lane;
+                }
                 s.admits += 1;
                 s.hedged |= hedged;
             }
             Event::Shed { id } => {
+                let retried = retried_ids.contains(&id);
                 let s = ids.entry(id).or_default();
-                if s.admits > 0 || s.shed {
+                if (s.admits > 0 || s.sheds > 0) && !retried {
                     return Err(fail(format!(
                         "request {id} shed after admit or shed twice"
                     )));
                 }
-                s.shed = true;
+                s.sheds += 1;
             }
             Event::Placement {
                 id,
@@ -303,11 +378,14 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                 dispatched_requests += size as u64;
             }
             Event::Complete { id, lane, kind } => {
+                let retried = retried_ids.contains(&id);
                 let s = ids.entry(id).or_default();
-                if s.resolves >= 2 {
+                if s.resolves >= 2 && !retried {
                     return Err(fail(format!("request {id} resolved 3+ times")));
                 }
-                s.resolve_lanes[s.resolves as usize] = lane;
+                if s.resolves < 2 {
+                    s.resolve_lanes[s.resolves as usize] = lane;
+                }
                 s.resolves += 1;
                 match kind {
                     CompletionKind::Solo => s.solos += 1,
@@ -316,11 +394,14 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                 }
             }
             Event::HedgeCancel { id, lane } => {
+                let retried = retried_ids.contains(&id);
                 let s = ids.entry(id).or_default();
-                if s.resolves >= 2 {
+                if s.resolves >= 2 && !retried {
                     return Err(fail(format!("request {id} resolved 3+ times")));
                 }
-                s.resolve_lanes[s.resolves as usize] = lane;
+                if s.resolves < 2 {
+                    s.resolve_lanes[s.resolves as usize] = lane;
+                }
                 s.resolves += 1;
                 s.cancels += 1;
             }
@@ -331,13 +412,77 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                     report.max_drift_factor = factor;
                 }
             }
+            Event::DeviceDown { lane } => {
+                report.device_down += 1;
+                down_lanes.insert(lane);
+            }
+            Event::DeviceUp { lane } => {
+                report.device_up += 1;
+                down_lanes.remove(&lane);
+            }
+            Event::TimeoutFired { id, .. } => {
+                report.timeouts_fired += 1;
+                ids.entry(id).or_default().kills += 1;
+            }
+            Event::RetryDispatched { .. } => report.retry_dispatches += 1,
+            Event::FailoverReroute { id, .. } => {
+                report.failover_reroutes += 1;
+                ids.entry(id).or_default().kills += 1;
+            }
             Event::MarginAdjust { .. } => {}
         }
     }
 
     // --- Pass 2: per-id invariants. --------------------------------------
     for (&id, s) in &ids {
-        if s.shed {
+        if retried_ids.contains(&id) {
+            // A retry chain: many admits under one id, counted once.
+            // Fate precedence: completed > in-flight > shed — a chain is
+            // terminally shed only if it never completed and nothing of
+            // it remains in the system.
+            report.retried += 1;
+            if s.admits == 0 {
+                if s.sheds > 0 {
+                    report.shed += 1;
+                    continue;
+                }
+                return Err(fail(format!(
+                    "retry events for request {id} that was never admitted \
+                     or shed"
+                )));
+            }
+            report.admitted += 1;
+            if s.hedged {
+                report.hedged += 1;
+            }
+            let done = s.wins + s.solos;
+            if done > 1 {
+                return Err(fail(format!(
+                    "retried request {id} produced {done} results, want at \
+                     most one per chain"
+                )));
+            }
+            report.completed_solo += s.solos as u64;
+            report.hedge_wins += s.wins as u64;
+            report.hedge_losses += s.losses as u64;
+            report.hedge_cancelled += s.cancels as u64;
+            if done == 0 {
+                // Copies admitted minus copies resolved or destroyed: a
+                // positive balance means part of the chain is still in
+                // the dispatcher; a zero balance with a shed on record is
+                // the budget-exhausted terminal shed, and a zero balance
+                // without one is a chain waiting out its retry backoff.
+                let balance =
+                    s.admits as i64 - s.resolves as i64 - s.kills as i64;
+                if balance > 0 || s.sheds == 0 {
+                    report.in_flight += 1;
+                } else {
+                    report.shed_failed += 1;
+                }
+            }
+            continue;
+        }
+        if s.sheds > 0 {
             report.shed += 1;
             if s.resolves > 0 {
                 return Err(fail(format!("shed request {id} has completions")));
@@ -353,8 +498,16 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
         if s.hedged {
             // Hedge-fate partition: two admits on distinct lanes; exactly
             // one winner plus exactly one executed loser or cancellation,
-            // each on one of the admitted lanes, on distinct lanes.
+            // each on one of the admitted lanes, on distinct lanes. A
+            // pair with no resolutions (or only the loser's) is still in
+            // flight; a winner whose loser resolution is missing is an
+            // open race (tail truncation, or a fault destroyed the
+            // loser's copy).
             report.hedged += 1;
+            if s.admits == 1 && s.resolves == 0 {
+                report.in_flight += 1;
+                continue;
+            }
             if s.admits != 2 {
                 return Err(fail(format!(
                     "hedged request {id} admitted {} times, want 2",
@@ -367,12 +520,32 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                     s.admit_lanes[0]
                 )));
             }
-            if s.wins != 1 || s.solos != 0 || s.losses + s.cancels != 1 {
+            if s.solos != 0 || s.wins > 1 || s.losses + s.cancels > 1 {
                 return Err(fail(format!(
                     "hedged request {id} fates: wins={} solos={} losses={} \
                      cancels={}, want exactly one win and one loss-or-cancel",
                     s.wins, s.solos, s.losses, s.cancels
                 )));
+            }
+            report.hedge_losses += s.losses as u64;
+            report.hedge_cancelled += s.cancels as u64;
+            if s.wins == 0 {
+                report.in_flight += 1;
+                continue;
+            }
+            report.hedge_wins += 1;
+            if s.losses + s.cancels == 0 {
+                for lane in s.resolve_lanes.iter().take(s.resolves as usize) {
+                    if *lane != s.admit_lanes[0] && *lane != s.admit_lanes[1] {
+                        return Err(fail(format!(
+                            "hedged request {id} resolved on lane {lane}, \
+                             admitted on {}/{}",
+                            s.admit_lanes[0], s.admit_lanes[1]
+                        )));
+                    }
+                }
+                report.open_races += 1;
+                continue;
             }
             if s.resolve_lanes[0] == s.resolve_lanes[1] {
                 return Err(fail(format!(
@@ -389,15 +562,16 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                     )));
                 }
             }
-            report.hedge_wins += 1;
-            report.hedge_losses += s.losses as u64;
-            report.hedge_cancelled += s.cancels as u64;
         } else {
             if s.admits != 1 {
                 return Err(fail(format!(
                     "solo request {id} admitted {} times",
                     s.admits
                 )));
+            }
+            if s.resolves == 0 {
+                report.in_flight += 1;
+                continue;
             }
             if s.solos != 1 || s.wins + s.losses + s.cancels != 0 {
                 return Err(fail(format!(
@@ -418,12 +592,15 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
     report.offered = report.admitted + report.shed;
     report.results = report.completed_solo + report.hedge_wins;
 
-    // Conservation: one result per admitted request, and everything the
-    // batcher dispatched came back.
-    if report.results != report.admitted {
+    // Conservation: every admitted request (retry chains counted once)
+    // is accounted for exactly once — a result, still in flight, or a
+    // budget-exhausted terminal shed.
+    if report.results + report.in_flight + report.shed_failed != report.admitted
+    {
         return Err(fail(format!(
-            "conservation: {} results for {} admitted requests",
-            report.results, report.admitted
+            "conservation: {} results + {} in flight + {} shed for {} \
+             admitted requests",
+            report.results, report.in_flight, report.shed_failed, report.admitted
         )));
     }
     let executions =
@@ -440,7 +617,16 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
             dispatched_requests
         )));
     }
-    if report.batched_requests != executions {
+    // With faults, retries, or outstanding work, dispatched copies may
+    // have been destroyed before completing — membership then bounds the
+    // execution count instead of equalling it.
+    let relaxed = report.in_flight > 0
+        || report.open_races > 0
+        || report.retried > 0
+        || report.device_down > 0;
+    if report.batched_requests != executions
+        && !(relaxed && report.batched_requests > executions)
+    {
         return Err(fail(format!(
             "batch accounting: {} requests dispatched, {} executed",
             report.batched_requests, executions
@@ -715,6 +901,131 @@ mod tests {
         }
         let err = verify_trace(&rec.window_jsonl()).unwrap_err();
         assert!(format!("{err}").contains("margin-law"), "{err}");
+    }
+
+    #[test]
+    fn retry_chain_counts_once_in_conservation() {
+        // id 5 is admitted on lane 0, killed by the lane-0 outage,
+        // re-routed to lane 1 and completes there: one admitted request,
+        // one result, despite two Admit events.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        let mut t = 0.0;
+        let mut tick = |rec: &mut FlightRecorder, ev| {
+            rec.record(t, ev);
+            t += 0.001;
+        };
+        tick(&mut rec, Event::Admit { id: 5, lane: 0, hedged: false });
+        tick(&mut rec, Event::DeviceDown { lane: 0 });
+        tick(&mut rec, Event::FailoverReroute { id: 5, from_lane: 0 });
+        tick(&mut rec, Event::Admit { id: 5, lane: 1, hedged: false });
+        tick(&mut rec, Event::RetryDispatched { id: 5, lane: 1, attempt: 1 });
+        tick(&mut rec, Event::BatchFormed { lane: 1, size: 1, start_s: 0.005 });
+        tick(&mut rec, Event::DispatchStart { lane: 1, size: 1, done_s: 0.02 });
+        tick(
+            &mut rec,
+            Event::Complete { id: 5, lane: 1, kind: CompletionKind::Solo },
+        );
+        tick(&mut rec, Event::DeviceUp { lane: 0 });
+        let r = verify_trace(&rec.window_jsonl()).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert_eq!(r.results, 1);
+        assert_eq!(r.retried, 1);
+        assert_eq!(r.failover_reroutes, 1);
+        assert_eq!(r.retry_dispatches, 1);
+        assert_eq!(r.device_down, 1);
+        assert_eq!(r.device_up, 1);
+        assert_eq!(r.in_flight, 0);
+        assert_eq!(r.shed_failed, 0);
+    }
+
+    #[test]
+    fn truncated_tail_counts_open_race_and_in_flight() {
+        // A hedged winner whose loser's cancellation fell off the end of
+        // the dump, plus a solo request with no completion yet: both are
+        // outstanding work, not inconsistencies.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        let mut t = 0.0;
+        let mut tick = |rec: &mut FlightRecorder, ev| {
+            rec.record(t, ev);
+            t += 0.001;
+        };
+        tick(&mut rec, Event::Admit { id: 1, lane: 0, hedged: true });
+        tick(&mut rec, Event::Admit { id: 1, lane: 1, hedged: true });
+        tick(&mut rec, Event::Admit { id: 2, lane: 0, hedged: false });
+        tick(&mut rec, Event::BatchFormed { lane: 0, size: 2, start_s: 0.003 });
+        tick(&mut rec, Event::DispatchStart { lane: 0, size: 2, done_s: 0.02 });
+        tick(
+            &mut rec,
+            Event::Complete { id: 1, lane: 0, kind: CompletionKind::HedgeWin },
+        );
+        // ...the HedgeCancel for id 1 lane 1 and the Complete for id 2
+        // were cut off the tail of the stream.
+        let r = verify_trace(&rec.window_jsonl()).unwrap();
+        assert_eq!(r.admitted, 2);
+        assert_eq!(r.results, 1);
+        assert_eq!(r.open_races, 1);
+        assert_eq!(r.in_flight, 1);
+        assert_eq!(r.hedge_wins, 1);
+        assert_eq!(r.hedge_cancelled, 0);
+    }
+
+    #[test]
+    fn exhausted_retry_budget_counts_as_terminal_shed() {
+        // id 7 is admitted, pulled by a queue-deadline timer, and its
+        // retry budget runs out: the harness logs the terminal shed.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(0.0, Event::Admit { id: 7, lane: 0, hedged: false });
+        rec.record(0.5, Event::TimeoutFired { id: 7, lane: 0 });
+        rec.record(0.6, Event::Shed { id: 7 });
+        let r = verify_trace(&rec.window_jsonl()).unwrap();
+        assert_eq!(r.admitted, 1);
+        assert_eq!(r.results, 0);
+        assert_eq!(r.shed_failed, 1);
+        assert_eq!(r.in_flight, 0);
+        assert_eq!(r.timeouts_fired, 1);
+
+        // Same chain still waiting out its backoff (no shed yet): it is
+        // in flight, not shed.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(0.0, Event::Admit { id: 7, lane: 0, hedged: false });
+        rec.record(0.5, Event::TimeoutFired { id: 7, lane: 0 });
+        let r = verify_trace(&rec.window_jsonl()).unwrap();
+        assert_eq!(r.in_flight, 1);
+        assert_eq!(r.shed_failed, 0);
+    }
+
+    #[test]
+    fn admit_on_a_down_lane_is_rejected() {
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(0.0, Event::DeviceDown { lane: 0 });
+        rec.record(0.1, Event::Admit { id: 1, lane: 0, hedged: false });
+        let err = verify_trace(&rec.window_jsonl()).unwrap_err();
+        assert!(format!("{err}").contains("while it was down"), "{err}");
+
+        // After recovery the lane admits again.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(0.0, Event::DeviceDown { lane: 0 });
+        rec.record(0.1, Event::DeviceUp { lane: 0 });
+        rec.record(0.2, Event::Admit { id: 1, lane: 0, hedged: false });
+        rec.record(
+            0.3,
+            Event::BatchFormed { lane: 0, size: 1, start_s: 0.3 },
+        );
+        rec.record(
+            0.4,
+            Event::DispatchStart { lane: 0, size: 1, done_s: 0.5 },
+        );
+        rec.record(
+            0.5,
+            Event::Complete { id: 1, lane: 0, kind: CompletionKind::Solo },
+        );
+        verify_trace(&rec.window_jsonl()).unwrap();
     }
 
     #[test]

@@ -126,6 +126,37 @@ impl CapacityTracker {
     pub fn all_idle(&self, now_s: f64) -> bool {
         self.free_at_s.iter().all(|&t| t <= now_s)
     }
+
+    /// Hard reset after a device crash ([`crate::sim::FaultSpec`]): the
+    /// device's memory is gone, so every in-flight batch and all queued
+    /// backlog vanish — all workers read as free at `now_s`.
+    pub fn reset_at(&mut self, now_s: f64) {
+        for t in &mut self.free_at_s {
+            *t = now_s;
+        }
+        self.backlog_est_s = 0.0;
+        self.earliest = 0;
+    }
+
+    /// Clamp every worker's busy-until time to at least `now_s` — used
+    /// when a crashed device recovers: it comes back idle *now*, never
+    /// owing phantom work from before the outage. Refreshes the
+    /// earliest-free cache (first index among ties, like
+    /// [`CapacityTracker::on_dispatch`]).
+    pub fn advance_to(&mut self, now_s: f64) {
+        for t in &mut self.free_at_s {
+            if *t < now_s {
+                *t = now_s;
+            }
+        }
+        let mut best = (0usize, self.free_at_s[0]);
+        for (i, &t) in self.free_at_s.iter().enumerate().skip(1) {
+            if t < best.1 {
+                best = (i, t);
+            }
+        }
+        self.earliest = best.0;
+    }
 }
 
 #[cfg(test)]
@@ -219,6 +250,37 @@ mod tests {
         t.on_admit(0.1);
         t.on_dispatch(0, 0.2, 1.0); // over-subtract (float drift guard)
         assert_eq!(t.backlog_est_s(), 0.0);
+    }
+
+    #[test]
+    fn reset_at_wipes_inflight_and_backlog() {
+        let mut t = CapacityTracker::new(2);
+        t.on_admit(0.4);
+        t.on_dispatch(1, 0.1, 9.0);
+        t.reset_at(3.0);
+        assert_eq!(t.backlog_est_s(), 0.0);
+        assert_eq!(t.earliest_free(), (0, 3.0));
+        assert!(t.all_idle(3.0));
+        assert_eq!(t.expected_wait_s(3.0), 0.0);
+    }
+
+    #[test]
+    fn advance_to_clamps_without_phantom_work() {
+        let mut t = CapacityTracker::new(3);
+        t.on_dispatch(0, 0.0, 5.0);
+        t.on_dispatch(1, 0.0, 2.0);
+        // Recovery at t=4: worker 1's stale 2.0 is clamped forward, the
+        // still-future 5.0 is untouched, and the cache re-picks the
+        // first minimum (worker 1 at 4.0 ties worker 2 — index 1 wins
+        // only if it is first; here worker 2 also clamps to 4.0, so the
+        // first min is worker 1).
+        t.advance_to(4.0);
+        assert_eq!(t.earliest_free(), (1, 4.0));
+        assert!((t.expected_wait_s(4.0) - (1.0 / 3.0)).abs() < 1e-12);
+        // Clamping past everything makes the pool idle with earliest 0.
+        t.advance_to(9.0);
+        assert_eq!(t.earliest_free(), (0, 9.0));
+        assert!(t.all_idle(9.0));
     }
 
     #[test]

@@ -180,6 +180,71 @@ impl Default for DispatcherConfig {
     }
 }
 
+/// Timeout / requeue policy for failover-aware dispatch
+/// ([`crate::sim::harness::run_fleet_outage`]).
+///
+/// Each solo submission arms a queue-wait deadline of
+/// `max(timeout_mult × score, min_timeout_s)` where `score` is the
+/// selector's winning placement score (estimated wait + service). A
+/// fired timeout — or a copy killed by [`Dispatcher::fail_lane`] —
+/// requeues through the selector after an exponential backoff of
+/// `backoff_base_s × backoff_mult^(attempt-1)`; once a request has
+/// burned `max_retries` re-dispatch attempts it is shed permanently.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryPolicy {
+    /// Deadline as a multiple of the scored placement estimate.
+    pub timeout_mult: f64,
+    /// Deadline floor (s) so near-zero estimates don't thrash.
+    pub min_timeout_s: f64,
+    /// First-retry backoff delay (s).
+    pub backoff_base_s: f64,
+    /// Backoff growth factor per additional attempt.
+    pub backoff_mult: f64,
+    /// Re-dispatch budget per request before it is shed permanently.
+    pub max_retries: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            timeout_mult: 4.0,
+            min_timeout_s: 0.25,
+            backoff_base_s: 0.05,
+            backoff_mult: 2.0,
+            max_retries: 4,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// Structural sanity: multipliers and delays finite and positive.
+    pub fn validate(&self) -> crate::Result<()> {
+        for (name, v) in [
+            ("timeout_mult", self.timeout_mult),
+            ("min_timeout_s", self.min_timeout_s),
+            ("backoff_base_s", self.backoff_base_s),
+            ("backoff_mult", self.backoff_mult),
+        ] {
+            if !(v.is_finite() && v > 0.0) {
+                return Err(crate::Error::Config(format!(
+                    "retry {name} {v} must be finite and > 0"
+                )));
+            }
+        }
+        Ok(())
+    }
+
+    /// The queue-wait deadline armed for a placement scored `score_s`.
+    pub fn deadline_after(&self, score_s: f64) -> f64 {
+        (self.timeout_mult * score_s).max(self.min_timeout_s)
+    }
+
+    /// Backoff delay before re-dispatch attempt `attempt` (1-based).
+    pub fn backoff_s(&self, attempt: u32) -> f64 {
+        self.backoff_base_s * self.backoff_mult.powi(attempt as i32 - 1)
+    }
+}
+
 /// How a completed copy relates to its request (hedging outcome).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CompletionKind {
@@ -344,6 +409,43 @@ impl Ord for Pending {
     }
 }
 
+/// One armed queue-wait deadline timer ([`Dispatcher::arm_timeout`]).
+/// Ordered by `(deadline_s, seq)` so equal deadlines fire in arming
+/// order, deterministically. Entries are lazily stale: dispatching or
+/// re-arming a request leaves its old heap entry behind, and
+/// [`Dispatcher::fire_timeouts`] discards entries whose `(seq, lane)`
+/// no longer match the armed table — the same lazy-invalidations idiom
+/// as the hedge ghost purge.
+#[derive(Debug, Clone, Copy)]
+struct TimerEntry {
+    deadline_s: f64,
+    seq: u64,
+    id: u64,
+    lane: usize,
+}
+
+impl PartialEq for TimerEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.deadline_s == other.deadline_s && self.seq == other.seq
+    }
+}
+
+impl Eq for TimerEntry {}
+
+impl PartialOrd for TimerEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for TimerEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.deadline_s
+            .total_cmp(&other.deadline_s)
+            .then(self.seq.cmp(&other.seq))
+    }
+}
+
 /// Queue + capacity state for one device (internal to the dispatcher).
 #[derive(Debug, Clone)]
 struct Lane {
@@ -355,6 +457,12 @@ struct Lane {
     /// pumped into `queue` in weighted-fair order as dispatch slots
     /// free up.
     fair: Option<FairQueue>,
+    /// Fault-injection state ([`Dispatcher::fail_lane`]): a down lane
+    /// refuses admissions and never dispatches until
+    /// [`Dispatcher::recover_lane`]. Always `false` unless a
+    /// [`crate::sim::FaultSpec`] drives it, so the happy path is
+    /// untouched.
+    down: bool,
 }
 
 impl Lane {
@@ -364,11 +472,23 @@ impl Lane {
             queue: AdmissionQueue::new(max_depth),
             tracker: CapacityTracker::new(workers),
             fair: None,
+            down: false,
         }
     }
 
-    /// Admit + account in one step.
+    /// Does this lane accept admissions right now? (The queue-room
+    /// predicate, gated on device health.)
+    fn has_room(&self) -> bool {
+        !self.down && self.queue.has_room()
+    }
+
+    /// Admit + account in one step. A down lane refuses outright — the
+    /// caller sees the same [`Admission::Rejected`] a full queue
+    /// produces.
     fn offer(&mut self, rq: QueuedRequest) -> Admission {
+        if self.down {
+            return Admission::Rejected;
+        }
         let admission = self.queue.offer(rq);
         if admission.is_admitted() {
             self.tracker.on_admit(rq.est_service_s);
@@ -445,6 +565,19 @@ pub struct Dispatcher {
     /// [`Dispatcher::track_cancelled_payloads`] enabled it.
     cancelled_payloads: Vec<usize>,
     track_cancelled: bool,
+    /// Armed queue-wait deadline timers, earliest first. Entries can be
+    /// stale ([`TimerEntry`]); the heap stays empty unless
+    /// [`Dispatcher::enable_timers`] was called and timers were armed.
+    timers: BinaryHeap<Reverse<TimerEntry>>,
+    /// Monotonic timer generation: each arming gets a fresh value so
+    /// stale heap entries are recognisable.
+    timer_seq: u64,
+    /// Armed-timer table: request id → `(timer seq, lane)` of its live
+    /// timer. `None` until [`Dispatcher::enable_timers`] — the happy
+    /// path (every legacy harness) never touches timer state, so
+    /// behaviour and report bytes are unchanged when no retry policy is
+    /// configured.
+    armed: Option<std::collections::HashMap<u64, (u64, usize)>>,
 }
 
 impl Clone for Dispatcher {
@@ -465,6 +598,9 @@ impl Clone for Dispatcher {
             recorder: None,
             cancelled_payloads: self.cancelled_payloads.clone(),
             track_cancelled: self.track_cancelled,
+            timers: self.timers.clone(),
+            timer_seq: self.timer_seq,
+            armed: self.armed.clone(),
         }
     }
 }
@@ -530,6 +666,9 @@ impl Dispatcher {
             recorder: None,
             cancelled_payloads: Vec::new(),
             track_cancelled: false,
+            timers: BinaryHeap::new(),
+            timer_seq: 0,
+            armed: None,
         }
     }
 
@@ -724,7 +863,7 @@ impl Dispatcher {
         // Room is checked up front so the race entry is allocated only
         // when both copies are expected to be admitted (`offer` applies
         // the same live-depth predicate today).
-        if self.lanes[lane_a].queue.has_room() && self.lanes[lane_b].queue.has_room() {
+        if self.lanes[lane_a].has_room() && self.lanes[lane_b].has_room() {
             let key = self.hedges.insert(HedgeEntry {
                 lanes: [lane_a, lane_b],
                 est: [est_a_s, est_b_s],
@@ -897,6 +1036,12 @@ impl Dispatcher {
     /// cancelled heads on the way.
     fn lane_next_start(&mut self, li: usize) -> Option<f64> {
         let lane = &mut self.lanes[li];
+        if lane.down {
+            // A crashed device dispatches nothing (its queue was wiped
+            // at failure and offers refuse while down, so this is
+            // belt-and-braces for the window between fail and drain).
+            return None;
+        }
         lane.pump_fair();
         let hedges = &mut self.hedges;
         loop {
@@ -990,6 +1135,19 @@ impl Dispatcher {
             self.scratch = batch;
             return;
         }
+        if let Some(armed) = self.armed.as_mut() {
+            // A dispatched request is no longer stuck in a queue: its
+            // deadline timer (which covers queue wait only) is
+            // disarmed. The heap entry goes stale and is discarded when
+            // it pops.
+            for rq in &batch {
+                if let Some(&(_seq, lane)) = armed.get(&rq.id) {
+                    if lane == li {
+                        armed.remove(&rq.id);
+                    }
+                }
+            }
+        }
         // Hedged members are now executing: too late to cancel them.
         for rq in &batch {
             if let Some(key) = rq.hedge {
@@ -1080,7 +1238,7 @@ impl Dispatcher {
             None => return CompletionKind::Solo,
             Some(k) => k,
         };
-        let (kind, cancel) = match self.hedges.get_mut(key) {
+        let (kind, cancel, twin_destroyed) = match self.hedges.get_mut(key) {
             // Unreachable in practice (a dispatched copy's race entry
             // outlives it); treat a stale key as a solo completion.
             None => return CompletionKind::Solo,
@@ -1088,25 +1246,40 @@ impl Dispatcher {
                 let side = entry.side_of(lane);
                 entry.state[side] = CopyState::Done;
                 if entry.winner.is_some() {
-                    (CompletionKind::HedgeLoss, None)
+                    (CompletionKind::HedgeLoss, None, false)
                 } else {
                     entry.winner = Some(side as u8);
                     let twin = 1 - side;
-                    if entry.state[twin] == CopyState::Queued {
-                        // Twin still queued: mark it cancelled in the
-                        // race entry itself. The ghost is purged lazily
-                        // (queue head / batcher lookahead), which also
-                        // frees this entry.
-                        entry.state[twin] = CopyState::Cancelled;
-                        (CompletionKind::HedgeWin, Some((entry.lanes[twin], entry.est[twin])))
-                    } else {
-                        // Twin running: keep the entry so its completion
-                        // is classified as a loss.
-                        (CompletionKind::HedgeWin, None)
+                    match entry.state[twin] {
+                        CopyState::Queued => {
+                            // Twin still queued: mark it cancelled in
+                            // the race entry itself. The ghost is purged
+                            // lazily (queue head / batcher lookahead),
+                            // which also frees this entry.
+                            entry.state[twin] = CopyState::Cancelled;
+                            (
+                                CompletionKind::HedgeWin,
+                                Some((entry.lanes[twin], entry.est[twin])),
+                                false,
+                            )
+                        }
+                        // The twin copy was physically destroyed by a
+                        // lane failure ([`Dispatcher::fail_lane`]) —
+                        // never a normal cancel, those only happen here
+                        // at win time. The race is closed and no lazy
+                        // ghost purge will ever find the twin, so the
+                        // entry is released below.
+                        CopyState::Cancelled => (CompletionKind::HedgeWin, None, true),
+                        // Twin running: keep the entry so its
+                        // completion is classified as a loss.
+                        _ => (CompletionKind::HedgeWin, None, false),
                     }
                 }
             }
         };
+        if twin_destroyed {
+            self.hedges.remove(key);
+        }
         match kind {
             CompletionKind::HedgeLoss => {
                 // Twin already won; the race is fully resolved.
@@ -1142,6 +1315,197 @@ impl Dispatcher {
             CompletionKind::Solo => {}
         }
         kind
+    }
+
+    // ------------------------------------------- failure injection & timers
+
+    /// Enable per-request queue-wait deadline timers
+    /// ([`Dispatcher::arm_timeout`]). Off by default: without this call
+    /// the dispatcher carries no timer state at all, so every legacy
+    /// harness behaves — and reports — identically. Idempotent.
+    pub fn enable_timers(&mut self) {
+        if self.armed.is_none() {
+            self.armed = Some(std::collections::HashMap::new());
+        }
+    }
+
+    /// Arm (or re-arm) a queue-wait deadline timer for the solo request
+    /// `id` just admitted on `lane`: if it is still queued there when
+    /// `deadline_s` arrives, [`Dispatcher::fire_timeouts`] pulls it out
+    /// for the caller to requeue elsewhere. Re-arming supersedes any
+    /// previous timer for the same id (the old heap entry goes stale).
+    /// Panics unless [`Dispatcher::enable_timers`] was called.
+    pub fn arm_timeout(&mut self, id: u64, lane: usize, deadline_s: f64) {
+        self.timer_seq += 1;
+        let seq = self.timer_seq;
+        self.armed
+            .as_mut()
+            .expect("arm_timeout requires enable_timers")
+            .insert(id, (seq, lane));
+        self.timers.push(Reverse(TimerEntry { deadline_s, seq, id, lane }));
+    }
+
+    /// Earliest timer deadline, stale entries included (they pop as
+    /// no-ops in [`Dispatcher::fire_timeouts`] — lazy disarm, like the
+    /// hedge ghost purge). `None` when no timers are armed.
+    pub fn next_timeout_s(&self) -> Option<f64> {
+        self.timers.peek().map(|t| t.0.deadline_s)
+    }
+
+    /// Pop every timer due at or before `now_s`. Each one whose request
+    /// is genuinely still queued on its armed lane is pulled from the
+    /// queue (its backlog share reclaimed, a
+    /// [`TimeoutFired`](ObsEvent::TimeoutFired) event recorded) and
+    /// appended to `fired` for the caller to requeue with backoff;
+    /// stale entries — the request dispatched or was re-armed — are
+    /// discarded silently.
+    pub fn fire_timeouts(&mut self, now_s: f64, fired: &mut Vec<QueuedRequest>) {
+        loop {
+            let head = match self.timers.peek() {
+                Some(&Reverse(t)) if t.deadline_s <= now_s => t,
+                _ => break,
+            };
+            self.timers.pop();
+            let live = matches!(
+                self.armed.as_ref().and_then(|a| a.get(&head.id)),
+                Some(&(seq, lane)) if seq == head.seq && lane == head.lane
+            );
+            if !live {
+                continue; // stale: dispatched or re-armed elsewhere
+            }
+            if let Some(armed) = self.armed.as_mut() {
+                armed.remove(&head.id);
+            }
+            let mut pulled = None;
+            {
+                let lane = &mut self.lanes[head.lane];
+                for i in 0..lane.queue.depth() {
+                    let rq = *lane.queue.get(i).expect("index below queue depth");
+                    if rq.id == head.id && rq.hedge.is_none() {
+                        lane.queue.remove(i);
+                        lane.tracker.on_cancel(rq.est_service_s);
+                        pulled = Some(rq);
+                        break;
+                    }
+                }
+            }
+            if let Some(rq) = pulled {
+                self.record(
+                    now_s,
+                    ObsEvent::TimeoutFired { id: head.id, lane: head.lane as u32 },
+                );
+                fired.push(rq);
+            }
+        }
+    }
+
+    /// Crash lane `li` at `now_s`: its queue and in-flight batches are
+    /// lost (device memory is gone) and admissions refuse until
+    /// [`Dispatcher::recover_lane`]. Requests whose only live copy died
+    /// are appended to `killed` in deterministic order — queued copies
+    /// in FIFO order first, then in-flight copies in dispatch order —
+    /// for the caller to re-route; hedged copies whose twin is still
+    /// alive are *not* killed (the twin carries the request on).
+    /// Records a [`DeviceDown`](ObsEvent::DeviceDown) event and returns
+    /// the number of in-flight copies destroyed.
+    pub fn fail_lane(
+        &mut self,
+        li: usize,
+        now_s: f64,
+        killed: &mut Vec<QueuedRequest>,
+    ) -> usize {
+        self.lanes[li].down = true;
+        // Queued copies die first, in FIFO order (the wipe also resets
+        // the queue's dead-ghost count: ghosts are resolved here, not
+        // lazily).
+        let mut wiped = Vec::new();
+        self.lanes[li].queue.wipe_into(&mut wiped);
+        for rq in wiped {
+            self.kill_copy(li, rq, killed);
+        }
+        // Then in-flight copies, in dispatch order: drain the pending
+        // heap, keep the survivors, sort the dead by dispatch seq.
+        let mut survivors = Vec::with_capacity(self.pending.len());
+        let mut dead = Vec::new();
+        for Reverse(p) in std::mem::take(&mut self.pending).into_vec() {
+            if p.lane == li {
+                dead.push(p);
+            } else {
+                survivors.push(Reverse(p));
+            }
+        }
+        self.pending = BinaryHeap::from(survivors);
+        dead.sort_by_key(|p| p.seq);
+        let n_inflight = dead.len();
+        for p in &dead {
+            self.kill_copy(li, p.request, killed);
+        }
+        self.lanes[li].tracker.reset_at(now_s);
+        self.record(now_s, ObsEvent::DeviceDown { lane: li as u32 });
+        n_inflight
+    }
+
+    /// Bring a crashed lane back at `now_s`: empty queue, idle workers
+    /// (busy-until times are clamped forward so the device never owes
+    /// phantom work from before the outage). Records a
+    /// [`DeviceUp`](ObsEvent::DeviceUp) event.
+    pub fn recover_lane(&mut self, li: usize, now_s: f64) {
+        {
+            let lane = &mut self.lanes[li];
+            lane.down = false;
+            lane.tracker.advance_to(now_s);
+        }
+        self.record(now_s, ObsEvent::DeviceUp { lane: li as u32 });
+    }
+
+    /// Is lane `lane` currently crashed ([`Dispatcher::fail_lane`])?
+    pub fn lane_down(&self, lane: usize) -> bool {
+        self.lanes[lane].down
+    }
+
+    /// Classify one copy destroyed by [`Dispatcher::fail_lane`] on lane
+    /// `li`. A solo copy is the request's only incarnation: disarm its
+    /// timer and report it killed. A hedged copy depends on the race
+    /// state — a cancelled ghost or a decided race's straggler just
+    /// closes the arena entry; a copy whose twin already died in an
+    /// earlier failure is the end of its request; a copy whose twin is
+    /// still alive hands the request over to the twin.
+    fn kill_copy(&mut self, li: usize, rq: QueuedRequest, killed: &mut Vec<QueuedRequest>) {
+        let Some(key) = rq.hedge else {
+            if let Some(armed) = self.armed.as_mut() {
+                armed.remove(&rq.id);
+            }
+            killed.push(rq);
+            return;
+        };
+        let entry = match self.hedges.get(key) {
+            Some(e) => *e,
+            // Stale key (defensive — a live copy's entry outlives it).
+            None => return,
+        };
+        let side = entry.side_of(li);
+        if entry.state[side] == CopyState::Cancelled {
+            // Ghost awaiting lazy purge: its result was already
+            // delivered by the twin.
+            self.hedges.remove(key);
+            return;
+        }
+        if entry.winner.is_some() {
+            // Straggling loser of a decided race: close the entry.
+            self.hedges.remove(key);
+            return;
+        }
+        if entry.state[1 - side] == CopyState::Cancelled {
+            // The twin was destroyed by an earlier lane failure: this
+            // copy was the request's last incarnation.
+            self.hedges.remove(key);
+            killed.push(rq);
+            return;
+        }
+        // Twin still queued or running: it carries the request on.
+        if let Some(e) = self.hedges.get_mut(key) {
+            e.state[side] = CopyState::Cancelled;
+        }
     }
 }
 
@@ -1779,5 +2143,173 @@ mod tests {
     fn hedge_on_same_lane_rejected() {
         let mut disp = fleet4();
         disp.submit_hedged_lanes(rq(0, 0.0, 10.0), 2, 0.1, 2, 0.1);
+    }
+
+    // ------------------------------------- failure injection & timers
+
+    #[test]
+    fn timeout_pulls_a_stuck_request_for_requeue() {
+        let mut disp = fleet4();
+        disp.enable_timers();
+        let mut exec = FixedExec { per_request_s: 1.0, residual: 0.0 };
+        // rq 1 occupies lane 0's single worker until t=1.0; rq 2 (a
+        // different length bucket, so it never joins the batch) is stuck
+        // behind it.
+        assert!(disp.submit_lane(0, rq(1, 0.0, 0.0)).is_admitted());
+        assert!(disp.submit_lane(0, rq(2, 0.0, 10.0)).is_admitted());
+        let done = collect_completions(&mut disp, &mut exec, 0.0);
+        assert!(done.is_empty(), "nothing finishes at t=0");
+        disp.arm_timeout(2, 0, 0.5);
+        assert_eq!(disp.next_timeout_s(), Some(0.5));
+        let mut fired = Vec::new();
+        disp.fire_timeouts(0.5, &mut fired);
+        assert_eq!(fired.len(), 1, "the stuck request times out");
+        assert_eq!(fired[0].id, 2);
+        assert_eq!(disp.next_timeout_s(), None);
+        // Only rq 1 remains; the timed-out request left the queue and
+        // reclaimed its backlog share.
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].request.id, 1);
+        assert!(disp.idle());
+    }
+
+    #[test]
+    fn dispatched_request_leaves_a_stale_timer() {
+        let mut disp = fleet4();
+        disp.enable_timers();
+        let mut exec = FixedExec { per_request_s: 0.1, residual: 0.0 };
+        assert!(disp.submit_lane(0, rq(7, 0.0, 10.0)).is_admitted());
+        disp.arm_timeout(7, 0, 2.0);
+        // The request dispatches (and completes) long before its
+        // deadline; the heap entry left behind must pop as a no-op.
+        let done = collect_completions(&mut disp, &mut exec, 1.0);
+        assert_eq!(done.len(), 1);
+        let mut fired = Vec::new();
+        disp.fire_timeouts(2.0, &mut fired);
+        assert!(fired.is_empty(), "a dispatched request never times out");
+    }
+
+    #[test]
+    fn fail_lane_kills_queued_and_in_flight_solo_requests() {
+        let mut disp = fleet4();
+        let mut exec = FixedExec { per_request_s: 1.0, residual: 0.0 };
+        // rq 1 dispatches at t=0 (in flight until 1.0); rq 2 and rq 3
+        // queue behind it in a different bucket.
+        assert!(disp.submit_lane(0, rq(1, 0.0, 0.0)).is_admitted());
+        assert!(disp.submit_lane(0, rq(2, 0.0, 10.0)).is_admitted());
+        assert!(disp.submit_lane(0, rq(3, 0.0, 10.0)).is_admitted());
+        let _ = collect_completions(&mut disp, &mut exec, 0.0);
+        let mut killed = Vec::new();
+        let n_inflight = disp.fail_lane(0, 0.5, &mut killed);
+        assert_eq!(n_inflight, 1, "rq 1's batch was in flight");
+        // Deterministic order: queued FIFO first, then in-flight.
+        assert_eq!(
+            killed.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![2, 3, 1]
+        );
+        assert!(disp.lane_down(0));
+        // While down: admissions refuse, the lane never dispatches, and
+        // its expected wait reads idle (the dead queue was wiped).
+        assert!(!disp.submit_lane(0, rq(4, 0.6, 0.0)).is_admitted());
+        assert_eq!(disp.expected_wait_lane(0, 0.5), 0.0);
+        assert!(collect_completions(&mut disp, &mut exec, f64::INFINITY).is_empty());
+        // After recovery the lane serves again, idle from `now`.
+        disp.recover_lane(0, 30.5);
+        assert!(!disp.lane_down(0));
+        assert!(disp.submit_lane(0, rq(5, 30.5, 0.0)).is_admitted());
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 1);
+        assert!((done[0].start_s - 30.5).abs() < 1e-12, "no phantom busy time");
+        assert!(disp.idle());
+    }
+
+    #[test]
+    fn fail_lane_spares_hedged_copies_whose_twin_is_alive() {
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![1.0, 0.5, 0.5, 0.5] };
+        // Occupy lane 1 so the hedged copy there stays queued a while.
+        assert!(disp.submit_lane(1, rq(1, 0.0, 0.0)).is_admitted());
+        let out = disp.submit_hedged_lanes(rq(2, 0.0, 10.0), 0, 1.0, 1, 0.5);
+        assert_eq!(out, LaneHedgeOutcome::Hedged);
+        // Crash lane 0 before anything dispatches there at t=0: the
+        // copy on lane 0 dies, but its twin on lane 1 is alive — the
+        // request is NOT killed.
+        let mut killed = Vec::new();
+        let n_inflight = disp.fail_lane(0, 0.0, &mut killed);
+        assert_eq!(n_inflight, 0);
+        assert!(killed.is_empty(), "twin carries the request on");
+        // The surviving twin completes as the race winner and the
+        // arena entry is released (the destroyed copy can never be
+        // lazily purged).
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        let wins: Vec<_> =
+            done.iter().filter(|c| c.kind == CompletionKind::HedgeWin).collect();
+        assert_eq!(wins.len(), 1);
+        assert_eq!(wins[0].request.id, 2);
+        assert_eq!(wins[0].lane, 1);
+        assert_eq!(disp.hedges_in_flight(), 0, "arena leaks nothing");
+    }
+
+    #[test]
+    fn fail_lane_closes_a_decided_race_straggler() {
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![0.2, 5.0, 0.5, 0.5] };
+        let out = disp.submit_hedged_lanes(rq(9, 0.0, 10.0), 0, 0.2, 1, 5.0);
+        assert_eq!(out, LaneHedgeOutcome::Hedged);
+        // Both copies dispatch at t=0; lane 0 wins at 0.2, lane 1's
+        // loser is still running until 5.0.
+        let done = collect_completions(&mut disp, &mut exec, 0.3);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].kind, CompletionKind::HedgeWin);
+        // Crash lane 1: the straggling loser is destroyed. The request
+        // already has its result, so nothing is killed, and the race
+        // entry closes without a loss completion.
+        let mut killed = Vec::new();
+        let n_inflight = disp.fail_lane(1, 0.3, &mut killed);
+        assert_eq!(n_inflight, 1);
+        assert!(killed.is_empty());
+        assert!(collect_completions(&mut disp, &mut exec, f64::INFINITY).is_empty());
+        assert_eq!(disp.hedges_in_flight(), 0);
+        let hs = disp.hedge_stats();
+        assert_eq!(hs.hedged, 1);
+        assert_eq!(hs.wins_edge, 1);
+        assert_eq!(hs.losers_run, 0, "the destroyed loser never completed");
+    }
+
+    #[test]
+    fn double_fault_kills_the_request_once() {
+        let mut disp = fleet4();
+        let mut exec = PerLaneExec { lane_s: vec![1.0, 1.0, 0.5, 0.5] };
+        // Park head-of-line blockers so the hedged copies stay queued.
+        assert!(disp.submit_lane(0, rq(1, 0.0, 0.0)).is_admitted());
+        assert!(disp.submit_lane(1, rq(2, 0.0, 0.0)).is_admitted());
+        let _ = collect_completions(&mut disp, &mut exec, 0.0);
+        let out = disp.submit_hedged_lanes(rq(3, 0.0, 10.0), 0, 1.0, 1, 1.0);
+        assert_eq!(out, LaneHedgeOutcome::Hedged);
+        let mut killed = Vec::new();
+        disp.fail_lane(0, 0.1, &mut killed);
+        // First fault: the in-flight blocker dies; the hedged copy's
+        // twin survives, so rq 3 is not killed yet.
+        assert_eq!(killed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![1]);
+        killed.clear();
+        disp.fail_lane(1, 0.2, &mut killed);
+        // Second fault ends rq 3 exactly once (queued copy, FIFO-first)
+        // plus lane 1's in-flight blocker.
+        assert_eq!(killed.iter().map(|r| r.id).collect::<Vec<_>>(), vec![3, 2]);
+        assert_eq!(disp.hedges_in_flight(), 0);
+    }
+
+    #[test]
+    fn down_lane_degrades_hedging_to_the_healthy_lane() {
+        let mut disp = fleet4();
+        let mut killed = Vec::new();
+        disp.fail_lane(0, 0.0, &mut killed);
+        let out = disp.submit_hedged_lanes(rq(1, 0.0, 10.0), 0, 0.1, 1, 0.1);
+        assert_eq!(out, LaneHedgeOutcome::Single(1), "no race with a dead lane");
+        let mut exec = FixedExec { per_request_s: 0.1, residual: 0.0 };
+        let done = collect_completions(&mut disp, &mut exec, f64::INFINITY);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].kind, CompletionKind::Solo);
     }
 }

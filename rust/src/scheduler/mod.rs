@@ -94,7 +94,7 @@ pub use batch::{BatchPolicy, BatchStats};
 pub use capacity::CapacityTracker;
 pub use dispatch::{
     BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
-    HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec,
+    HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec, RetryPolicy,
 };
 pub use hedge::{
     HedgeBudget, HEDGE_GAIN, HEDGE_MAX_MARGIN_S, HEDGE_MIN_MARGIN_S,

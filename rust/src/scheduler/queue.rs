@@ -168,6 +168,18 @@ impl AdmissionQueue {
         self.items.remove(i)
     }
 
+    /// Drain every queued entry (live and dead alike) into `out` in
+    /// FIFO order and reset the dead count — the queue contents are
+    /// gone, as when the device crashes ([`crate::sim::FaultSpec`]).
+    /// Counters (`stats`) survive: the crash loses requests, not
+    /// history.
+    pub fn wipe_into(&mut self, out: &mut Vec<QueuedRequest>) {
+        while let Some(rq) = self.items.pop_front() {
+            out.push(rq);
+        }
+        self.dead = 0;
+    }
+
     /// Current queue depth.
     pub fn depth(&self) -> usize {
         self.items.len()

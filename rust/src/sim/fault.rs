@@ -1,0 +1,320 @@
+//! Declarative failure injection — the fault twin of
+//! [`super::harness::DriftSpec`].
+//!
+//! A [`FaultSpec`] names one device of a [`crate::fleet::Topology`] and
+//! a window `[start_s, recover_s)` during which something goes wrong
+//! with it:
+//!
+//! * [`FaultMode::Crash`] — the device goes dark: its queue and
+//!   in-flight batches are destroyed, admissions refuse, and at
+//!   `recover_s` it comes back empty and idle
+//!   ([`crate::scheduler::Dispatcher::fail_lane`] /
+//!   [`crate::scheduler::Dispatcher::recover_lane`]).
+//! * [`FaultMode::Slow`] — a fail-slow device: ground-truth execution
+//!   times are multiplied by `factor` while the window is open. Unlike
+//!   drift, which the online refit is meant to learn, a slow fault is a
+//!   transient the timeout/retry machinery has to ride out.
+//! * [`FaultMode::Link`] — the device's network path degrades: the
+//!   ground-truth transfer cost is multiplied by `factor` (cloud
+//!   replicas only — edges are local).
+//!
+//! Specs are plain data, JSON-loadable like [`crate::fleet::Topology`]
+//! (`FaultSpec::load` / [`FaultSpec::from_json`]) so an outage scenario
+//! can live next to its topology file. The scheduler reacts to a fault
+//! only through what it can observe — timeouts firing, completions
+//! slowing, a lane refusing admissions — never by reading the spec.
+
+use std::path::Path;
+
+use crate::fleet::Topology;
+use crate::util::Json;
+use crate::{Error, Result};
+
+/// What goes wrong during the fault window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultMode {
+    /// Hard outage: queue and in-flight work destroyed, admissions
+    /// refused, clean empty recovery.
+    Crash,
+    /// Fail-slow: ground-truth execution times multiplied by `factor`
+    /// (> 1 = slower) while the fault is active.
+    Slow {
+        /// Execution-time multiplier during the window.
+        factor: f64,
+    },
+    /// Degraded network path: ground-truth transfer cost multiplied by
+    /// `factor` while the fault is active (cloud replicas only).
+    Link {
+        /// Transfer-cost multiplier during the window.
+        factor: f64,
+    },
+}
+
+impl FaultMode {
+    /// The JSON `mode` tag.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            FaultMode::Crash => "crash",
+            FaultMode::Slow { .. } => "slow",
+            FaultMode::Link { .. } => "link",
+        }
+    }
+}
+
+/// One injected fault: a device, a mode, and the window it is broken.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Device id / dispatcher lane the fault strikes.
+    pub lane: usize,
+    /// What goes wrong.
+    pub mode: FaultMode,
+    /// Clock time the fault begins (s).
+    pub start_s: f64,
+    /// Clock time the device recovers (s; `f64::INFINITY` = never).
+    pub recover_s: f64,
+}
+
+impl FaultSpec {
+    /// Is the fault window open at clock time `t_s`?
+    pub fn active_at(&self, t_s: f64) -> bool {
+        t_s >= self.start_s && t_s < self.recover_s
+    }
+
+    /// The execution-time multiplier this fault applies to `lane` at
+    /// `t_s` (1.0 when inactive, another lane, or not a slow fault).
+    pub fn exec_factor_at(&self, lane: usize, t_s: f64) -> f64 {
+        match self.mode {
+            FaultMode::Slow { factor } if lane == self.lane && self.active_at(t_s) => factor,
+            _ => 1.0,
+        }
+    }
+
+    /// The transfer-cost multiplier this fault applies to `lane` at
+    /// `t_s` (1.0 when inactive, another lane, or not a link fault).
+    pub fn link_factor_at(&self, lane: usize, t_s: f64) -> f64 {
+        match self.mode {
+            FaultMode::Link { factor } if lane == self.lane && self.active_at(t_s) => factor,
+            _ => 1.0,
+        }
+    }
+
+    /// Structural validation (window ordering, factor sanity). Use
+    /// [`FaultSpec::validate_for`] when the target topology is known.
+    pub fn validate(&self) -> Result<()> {
+        if !self.start_s.is_finite() || self.start_s < 0.0 {
+            return Err(Error::Config(format!(
+                "fault start_s {} must be finite and >= 0",
+                self.start_s
+            )));
+        }
+        if self.recover_s.is_nan() || self.recover_s <= self.start_s {
+            return Err(Error::Config(format!(
+                "fault recover_s {} must be > start_s {} (inf = never)",
+                self.recover_s, self.start_s
+            )));
+        }
+        match self.mode {
+            FaultMode::Crash => {}
+            FaultMode::Slow { factor } | FaultMode::Link { factor } => {
+                if !(factor.is_finite() && factor > 0.0) {
+                    return Err(Error::Config(format!(
+                        "fault factor {factor} must be finite and > 0"
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate against the topology the fault will be injected into:
+    /// the lane must exist, and link faults only make sense on cloud
+    /// replicas (edges have no network path to degrade).
+    pub fn validate_for(&self, topo: &Topology) -> Result<()> {
+        self.validate()?;
+        if self.lane >= topo.len() {
+            return Err(Error::Config(format!(
+                "fault lane {} out of range for topology {} ({} devices)",
+                self.lane,
+                topo.name,
+                topo.len()
+            )));
+        }
+        if matches!(self.mode, FaultMode::Link { .. })
+            && topo.devices[self.lane].tier != crate::devices::DeviceKind::Cloud
+        {
+            return Err(Error::Config(format!(
+                "link fault on lane {} ({}): only cloud replicas have a \
+                 link to degrade",
+                self.lane, topo.devices[self.lane].name
+            )));
+        }
+        Ok(())
+    }
+
+    /// Parse a fault from its JSON spec:
+    ///
+    /// ```json
+    /// { "lane": 0, "mode": "crash", "start_s": 22.3, "recover_s": 52.3 }
+    /// ```
+    ///
+    /// `slow` and `link` modes carry a `factor` key; `recover_s` may be
+    /// omitted (the fault never clears).
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        let lane = j.get("lane")?.as_usize()?;
+        let start_s = j.get("start_s")?.as_f64()?;
+        let recover_s = match j.get_opt("recover_s")? {
+            Some(r) => match r {
+                Json::Null => f64::INFINITY,
+                other => other.as_f64()?,
+            },
+            None => f64::INFINITY,
+        };
+        let mode = match j.get("mode")?.as_str()? {
+            "crash" => FaultMode::Crash,
+            "slow" => FaultMode::Slow { factor: j.get("factor")?.as_f64()? },
+            "link" => FaultMode::Link { factor: j.get("factor")?.as_f64()? },
+            other => {
+                return Err(Error::Config(format!(
+                    "fault mode `{other}` is not crash|slow|link"
+                )))
+            }
+        };
+        let spec = FaultSpec { lane, mode, start_s, recover_s };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a fault spec from a JSON file.
+    pub fn load(path: &Path) -> Result<FaultSpec> {
+        FaultSpec::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Serialise for reports / spec round-trips (`recover_s` becomes
+    /// `null` when the fault never clears; `factor` only appears for
+    /// slow/link modes).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("lane", Json::Num(self.lane as f64))
+            .set("mode", Json::Str(self.tag().to_string()))
+            .set("start_s", Json::Num(self.start_s));
+        if self.recover_s.is_finite() {
+            o.set("recover_s", Json::Num(self.recover_s));
+        } else {
+            o.set("recover_s", Json::Null);
+        }
+        match self.mode {
+            FaultMode::Crash => {}
+            FaultMode::Slow { factor } | FaultMode::Link { factor } => {
+                o.set("factor", Json::Num(factor));
+            }
+        }
+        o
+    }
+
+    /// The JSON `mode` tag (forwarded from [`FaultMode::tag`]).
+    pub fn tag(&self) -> &'static str {
+        self.mode.tag()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn crash_spec_round_trips_bit_exact() {
+        let spec = FaultSpec {
+            lane: 0,
+            mode: FaultMode::Crash,
+            start_s: 22.321428571428573,
+            recover_s: 52.32142857142857,
+        };
+        spec.validate().unwrap();
+        let again = FaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(again, spec);
+        assert_eq!(again.start_s.to_bits(), spec.start_s.to_bits());
+        assert_eq!(again.recover_s.to_bits(), spec.recover_s.to_bits());
+    }
+
+    #[test]
+    fn slow_and_link_factors_gate_on_window_and_lane() {
+        let slow = FaultSpec {
+            lane: 3,
+            mode: FaultMode::Slow { factor: 4.0 },
+            start_s: 10.0,
+            recover_s: 20.0,
+        };
+        assert_eq!(slow.exec_factor_at(3, 9.99), 1.0);
+        assert_eq!(slow.exec_factor_at(3, 10.0), 4.0);
+        assert_eq!(slow.exec_factor_at(3, 19.99), 4.0);
+        assert_eq!(slow.exec_factor_at(3, 20.0), 1.0); // half-open window
+        assert_eq!(slow.exec_factor_at(2, 15.0), 1.0); // other lane
+        assert_eq!(slow.link_factor_at(3, 15.0), 1.0); // wrong knob
+
+        let link = FaultSpec {
+            lane: 5,
+            mode: FaultMode::Link { factor: 8.0 },
+            start_s: 0.0,
+            recover_s: f64::INFINITY,
+        };
+        assert_eq!(link.link_factor_at(5, 1e9), 8.0); // never recovers
+        assert_eq!(link.exec_factor_at(5, 1e9), 1.0);
+    }
+
+    #[test]
+    fn json_defaults_and_permanent_faults() {
+        let j = Json::parse(r#"{"lane": 1, "mode": "crash", "start_s": 5}"#).unwrap();
+        let spec = FaultSpec::from_json(&j).unwrap();
+        assert_eq!(spec.recover_s, f64::INFINITY);
+        assert!(spec.active_at(1e12));
+        // Round trip: the permanent fault serialises recover_s as null.
+        let again = FaultSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(again, spec);
+
+        let j = Json::parse(
+            r#"{"lane": 5, "mode": "slow", "factor": 2.5, "start_s": 1, "recover_s": 2}"#,
+        )
+        .unwrap();
+        let spec = FaultSpec::from_json(&j).unwrap();
+        assert_eq!(spec.mode, FaultMode::Slow { factor: 2.5 });
+    }
+
+    #[test]
+    fn malformed_specs_fail_closed() {
+        for bad in [
+            r#"{"lane": 0, "mode": "crash", "start_s": -1}"#,
+            r#"{"lane": 0, "mode": "crash", "start_s": 10, "recover_s": 10}"#,
+            r#"{"lane": 0, "mode": "crash", "start_s": 10, "recover_s": 5}"#,
+            r#"{"lane": 0, "mode": "slow", "factor": 0, "start_s": 0}"#,
+            r#"{"lane": 0, "mode": "slow", "start_s": 0}"#,
+            r#"{"lane": 0, "mode": "gone", "start_s": 0}"#,
+            r#"{"mode": "crash", "start_s": 0}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FaultSpec::from_json(&j).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn topology_validation_scopes_link_faults_to_cloud() {
+        let topo = Topology::hetero(); // lanes 0-3 edge, 4-5 cloud
+        let crash = FaultSpec {
+            lane: 0,
+            mode: FaultMode::Crash,
+            start_s: 1.0,
+            recover_s: 2.0,
+        };
+        crash.validate_for(&topo).unwrap();
+        let link_on_edge = FaultSpec {
+            lane: 0,
+            mode: FaultMode::Link { factor: 2.0 },
+            start_s: 1.0,
+            recover_s: 2.0,
+        };
+        assert!(link_on_edge.validate_for(&topo).is_err());
+        let link_on_cloud = FaultSpec { lane: 5, ..link_on_edge };
+        link_on_cloud.validate_for(&topo).unwrap();
+        let out_of_range = FaultSpec { lane: 6, ..crash };
+        assert!(out_of_range.validate_for(&topo).is_err());
+    }
+}

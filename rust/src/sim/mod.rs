@@ -9,13 +9,16 @@
 //! charged from the same table — so policy deltas are never noise.
 
 pub mod characterize;
+pub mod fault;
 pub mod harness;
 
 pub use characterize::{characterize, Characterization};
+pub use fault::{FaultMode, FaultSpec};
 pub use harness::{
     run_all_policies, run_closed_loop, run_closed_loop_streamed, run_contended,
     run_contended_streamed, run_contended_streamed_traced, run_contended_traced, run_fleet,
-    run_fleet_closed, run_fleet_closed_streamed, run_fleet_streamed, run_policy,
-    run_with_estimator, AdaptiveOpts, ContendedResult, ContentionOpts, DriftSpec, FleetOpts,
-    FleetResult, PolicyResult, RequestTruth, TruthTable,
+    run_fleet_closed, run_fleet_closed_streamed, run_fleet_outage, run_fleet_outage_traced,
+    run_fleet_streamed, run_policy, run_with_estimator, AdaptiveOpts, ContendedResult,
+    ContentionOpts, DriftSpec, FleetOpts, FleetResult, OutageResult, PolicyResult, RequestTruth,
+    RetryPolicy, TruthTable,
 };
