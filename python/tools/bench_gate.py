@@ -22,6 +22,11 @@ in the zero-churn dispatcher and the parallel sweep runner:
     runs at ≥ --min-failover-ratio x the untimed fleet loop's
     events/sec. A report without the `failover` section fails the gate
     outright (the bench regressed out of measuring it);
+  * self-diagnosis costs almost nothing: the hedged event loop with
+    the online anomaly detector tapping every completion's execution
+    residual runs at ≥ --min-detect-ratio x the untapped loop's
+    events/sec. A report without the `detector` section fails the
+    gate outright (the bench regressed out of measuring it);
   * the binary workload-trace codec (`cnmt::trace`) encodes and
     decodes at ≥ --min-trace-events records/sec — replaying a
     million-request trace must stay I/O-trivial next to the
@@ -31,7 +36,7 @@ in the zero-churn dispatcher and the parallel sweep runner:
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
        [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
        [--min-recorder-ratio X] [--min-failover-ratio X]
-       [--min-trace-events N]
+       [--min-detect-ratio X] [--min-trace-events N]
 """
 
 import argparse
@@ -48,6 +53,7 @@ def main():
     ap.add_argument("--min-sweep-speedup", type=float, default=1.5)
     ap.add_argument("--min-recorder-ratio", type=float, default=0.9)
     ap.add_argument("--min-failover-ratio", type=float, default=0.9)
+    ap.add_argument("--min-detect-ratio", type=float, default=0.9)
     ap.add_argument("--min-trace-events", type=float, default=200_000.0)
     args = ap.parse_args()
 
@@ -67,6 +73,7 @@ def main():
     sweep = b["sweep"]
     recorder = b["recorder"]
     failover = b.get("failover")
+    detector = b.get("detector")
     trace = b.get("trace")
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
@@ -87,6 +94,12 @@ def main():
             f"{failover['armed']['events_per_sec']:,.0f} ev/s on "
             f"{failover['armed']['topology']} "
             f"({failover['ratio']:.2f}x the untimed loop)"
+        )
+    if detector is not None:
+        print(
+            f"detector-tapped hedged loop: "
+            f"{detector['enabled']['events_per_sec']:,.0f} ev/s "
+            f"({detector['ratio']:.2f}x the untapped loop)"
         )
     if trace is not None:
         print(
@@ -141,6 +154,17 @@ def main():
             f"deadline timers drag the fleet loop to {failover['ratio']:.2f}x, "
             f"below floor {args.min_failover_ratio:.2f}x (failover machinery "
             "is no longer pay-for-use)"
+        )
+    if detector is None:
+        failures.append(
+            "report has no `detector` section (bench stopped measuring the "
+            "anomaly-detector overhead)"
+        )
+    elif detector["ratio"] < args.min_detect_ratio:
+        failures.append(
+            f"anomaly detector drags the hedged loop to {detector['ratio']:.2f}x, "
+            f"below floor {args.min_detect_ratio:.2f}x (self-diagnosis is no "
+            "longer near-free)"
         )
     # The wall-clock floor is a function of available parallelism: a
     # 1-core runner degenerates to the serial path (speedup ~1.0) with

@@ -1,0 +1,763 @@
+#!/usr/bin/env python3
+"""Standalone mirror of `cnmt experiment detect` (rust/src/experiments/detect.rs).
+
+The detection-quality evaluation: five scenarios replay the outage pool
+on the `hetero` fleet — failover armed, telemetry sampling on, the
+online anomaly detector attached — and the alert stream is scored
+against the injected ground truth:
+
+  * `twin`  — fault-free. Zero alerts is an invariant, not a score.
+  * `crash` — the checked-in outage fault (lead edge gateway down 30 s).
+  * `slow`  — the same lane fail-slows x4 (execution-residual CUSUM).
+  * `link`  — the first cloud replica's transfer degrades x8.
+  * `surge` — post-onset arrivals compressed x2.5 (multi-lane gauge
+    breach, blamed on no single device).
+
+This file re-implements the rust detector, blame ledger and experiment
+driver float-for-float — keep it in lockstep with `obs::detect`,
+`obs::attribute` and `experiments::detect`. The CI `detect` matrix row
+diffs the two implementations at smoke and full parameters.
+
+Usage:
+    python3 python/tools/detect_mirror.py [--out reports/detect_eval.json]
+    python3 python/tools/detect_mirror.py --requests 2000
+    python3 python/tools/detect_mirror.py --off-check   # observation-only proof
+"""
+
+import argparse
+import math
+import os
+import struct
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from fleet_sweep_mirror import (  # noqa: E402
+    CLOUD,
+    cell_seed,
+    topo_hetero,
+    topo_to_json,
+)
+from load_sweep_mirror import (  # noqa: E402
+    SEED,
+    RequestTruth,
+    synth_workload,
+    to_json_value,
+    write_json,
+)
+from outage_mirror import (  # noqa: E402
+    GOODPUT_WINDOW_S,
+    OUTAGE_OFFERED_RPS,
+    OUTAGE_REQUESTS,
+    OUTAGE_SEED_TAG,
+    RETRY_POLICY,
+    TELEMETRY_CFG,
+    OutageRun,
+    fault_to_json,
+    outage_fault_spec,
+)
+
+# experiments::detect constants.
+SLOW_FACTOR = 4.0
+LINK_FACTOR = 8.0
+SURGE_RATE = 2.5
+SCENARIOS = ["twin", "crash", "slow", "link", "surge"]
+
+# DetectCfg defaults (mirror of obs::DetectCfg::default).
+DETECT_CFG = {
+    "warmup": 64,
+    "cusum_k": 3.0,
+    "cusum_h": 25.0,
+    "sigma_floor": 0.25,
+    "clear_after": 8,
+    "gauge_warmup": 8,
+    "gauge_lambda": 0.25,
+    "gauge_l": 8.0,
+    "surge_lanes": 2,
+    "surge_clear": 3,
+}
+
+# Gauge sigma floors (obs::detect::DEPTH_FLOOR / WAIT_FLOOR).
+DEPTH_FLOOR = 1.0
+WAIT_FLOOR = 0.05
+
+# AlertKind tags (obs::event::AlertKind::tag).
+DEVICE_SLOWDOWN = "device_slowdown"
+LINK_DEGRADATION = "link_degradation"
+DEVICE_CRASH = "device_crash"
+LOAD_SURGE = "load_surge"
+
+SURGE_NONE = 2**32 - 1  # u32::MAX lane sentinel
+
+
+class Chart:
+    """One-sided CUSUM chart over standardized log residuals (mirror of
+    obs::detect::Chart)."""
+
+    __slots__ = ("seen", "mean", "m2", "mu", "sigma", "s", "calm", "alerted")
+
+    def __init__(self):
+        self.seen = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+        self.mu = 0.0
+        self.sigma = 0.0
+        self.s = 0.0
+        self.calm = 0
+        self.alerted = False
+
+    def observe(self, x, cfg):
+        """Returns None, ("raise", score) or ("clear",)."""
+        self.seen += 1
+        if self.seen <= cfg["warmup"]:
+            d = x - self.mean
+            self.mean += d / self.seen
+            self.m2 += d * (x - self.mean)
+            if self.seen == cfg["warmup"]:
+                self.mu = self.mean
+                var = self.m2 / max(cfg["warmup"] - 1, 1)
+                self.sigma = max(math.sqrt(var), cfg["sigma_floor"])
+            return None
+        z = (x - self.mu) / self.sigma
+        self.s = max(self.s + z - cfg["cusum_k"], 0.0)
+        if not self.alerted:
+            if self.s > cfg["cusum_h"]:
+                self.alerted = True
+                self.calm = 0
+                return ("raise", self.s)
+        elif z <= cfg["cusum_k"]:
+            self.calm += 1
+            if self.calm >= cfg["clear_after"]:
+                self.alerted = False
+                self.s = 0.0
+                self.calm = 0
+                return ("clear",)
+        else:
+            self.calm = 0
+        return None
+
+
+class Gauge:
+    """EWMA control chart over one gauge stream (mirror of
+    obs::detect::Gauge)."""
+
+    __slots__ = ("floor", "seen", "mean", "m2", "limit", "z")
+
+    def __init__(self, floor):
+        self.floor = floor
+        self.seen = 0
+        self.mean = 0.0
+        self.m2 = 0.0
+        self.limit = float("inf")
+        self.z = 0.0
+
+    def observe(self, x, cfg):
+        self.seen += 1
+        if self.seen <= cfg["gauge_warmup"]:
+            d = x - self.mean
+            self.mean += d / self.seen
+            self.m2 += d * (x - self.mean)
+            if self.seen == cfg["gauge_warmup"]:
+                var = self.m2 / max(cfg["gauge_warmup"] - 1, 1)
+                sigma = max(math.sqrt(var), self.floor)
+                sigma_z = sigma * math.sqrt(
+                    cfg["gauge_lambda"] / (2.0 - cfg["gauge_lambda"])
+                )
+                self.limit = self.mean + cfg["gauge_l"] * sigma_z
+                self.z = self.mean
+            return False
+        self.z = cfg["gauge_lambda"] * x + (1.0 - cfg["gauge_lambda"]) * self.z
+        return self.z > self.limit
+
+
+class Detector:
+    """Mirror of obs::detect::Detector — see that module's docs for the
+    alert taxonomy and the collateral-absorption rules."""
+
+    def __init__(self, tiers, cfg):
+        n = len(tiers)
+        self.cfg = cfg
+        self.cloud = [t == CLOUD for t in tiers]
+        self.exec = [Chart() for _ in range(n)]
+        self.tx = [Chart() for _ in range(n)]
+        self.depth = [Gauge(DEPTH_FLOOR) for _ in range(n)]
+        self.wait = [Gauge(WAIT_FLOOR) for _ in range(n)]
+        self.crash_active = [False] * n
+        self.device_alerts = 0
+        self.surge_active = False
+        self.surge_blocked = False
+        self.surge_breach = 0
+        self.surge_first = SURGE_NONE
+        self.surge_calm = 0
+        self.log = []  # {t_s, lane, kind, score, raised} in detection order
+        self.raised = 0
+        self.cleared = 0
+        self.timeouts_seen = 0
+        self.reroutes_seen = 0
+
+    def emit(self, t_s, lane, kind, score, raised):
+        if raised:
+            self.raised += 1
+        else:
+            self.cleared += 1
+        self.log.append(
+            {"t_s": t_s, "lane": lane, "kind": kind, "score": score, "raised": raised}
+        )
+
+    def other_device_alert(self, lane):
+        own = (
+            int(self.exec[lane].alerted)
+            + int(self.tx[lane].alerted)
+            + int(self.crash_active[lane])
+        )
+        return self.device_alerts > own
+
+    def device_alert_cleared(self):
+        self.device_alerts -= 1
+        self.surge_blocked = True
+
+    def observe_exec(self, lane, t_s, obs_s, est_s):
+        if self.crash_active[lane]:
+            self.crash_active[lane] = False
+            self.emit(t_s, lane, DEVICE_CRASH, 0.0, False)
+            self.device_alert_cleared()
+        if not (obs_s > 0.0 and est_s > 0.0) or self.other_device_alert(lane):
+            return
+        x = math.log(obs_s / est_s)
+        step = self.exec[lane].observe(x, self.cfg)
+        if step is not None:
+            if step[0] == "raise":
+                self.device_alerts += 1
+                self.emit(t_s, lane, DEVICE_SLOWDOWN, step[1], True)
+            else:
+                self.emit(t_s, lane, DEVICE_SLOWDOWN, 0.0, False)
+                self.device_alert_cleared()
+
+    def observe_tx(self, lane, t_s, tx_s, tokens):
+        if (
+            not self.cloud[lane]
+            or not (tx_s > 0.0 and tokens > 0.0)
+            or self.other_device_alert(lane)
+        ):
+            return
+        x = math.log(tx_s / tokens)
+        step = self.tx[lane].observe(x, self.cfg)
+        if step is not None:
+            if step[0] == "raise":
+                self.device_alerts += 1
+                self.emit(t_s, lane, LINK_DEGRADATION, step[1], True)
+            else:
+                self.emit(t_s, lane, LINK_DEGRADATION, 0.0, False)
+                self.device_alert_cleared()
+
+    def observe_reroute(self, lane, t_s):
+        self.reroutes_seen += 1
+        if not self.crash_active[lane]:
+            self.crash_active[lane] = True
+            self.device_alerts += 1
+            self.emit(t_s, lane, DEVICE_CRASH, 1.0, True)
+
+    def observe_timeout(self, _t_s):
+        self.timeouts_seen += 1
+
+    def observe_gauge(self, lane, depth, wait_s):
+        d = self.depth[lane].observe(depth, self.cfg)
+        w = self.wait[lane].observe(wait_s, self.cfg)
+        if d or w:
+            self.surge_breach += 1
+            if lane < self.surge_first:
+                self.surge_first = lane
+
+    def commit_sample(self, t_s):
+        breach = self.surge_breach
+        first = self.surge_first
+        self.surge_breach = 0
+        self.surge_first = SURGE_NONE
+        if self.surge_active:
+            if breach == 0:
+                self.surge_calm += 1
+                if self.surge_calm >= self.cfg["surge_clear"]:
+                    self.surge_active = False
+                    self.surge_calm = 0
+                    self.emit(t_s, 0, LOAD_SURGE, 0.0, False)
+            else:
+                self.surge_calm = 0
+            return
+        if breach == 0:
+            self.surge_blocked = False
+            return
+        if (
+            breach >= self.cfg["surge_lanes"]
+            and self.device_alerts == 0
+            and not self.surge_blocked
+        ):
+            self.surge_active = True
+            self.surge_calm = 0
+            self.emit(t_s, first, LOAD_SURGE, float(breach), True)
+
+
+class BlameLedger:
+    """Mirror of obs::attribute::BlameLedger: submit/kill/complete marks
+    into exact per-chain blame decompositions."""
+
+    def __init__(self):
+        self.open = {}  # id -> [enq instants, kill (instant, was_timeout)]
+        self.done = []
+
+    def attempt_start(self, rid, t_s):
+        self.open.setdefault(rid, ([], []))[0].append(t_s)
+
+    def attempt_killed(self, rid, t_s, was_timeout):
+        self.open.setdefault(rid, ([], []))[1].append((t_s, was_timeout))
+
+    def complete(self, rid, start_s, done_s, exec_s, tx_s):
+        enq, kill = self.open.pop(rid, ([], []))
+        queue_wasted_s = 0.0
+        retry_wait_s = 0.0
+        timeout_kills = 0
+        crash_kills = 0
+        for i, (k, was_timeout) in enumerate(kill):
+            queue_wasted_s += k - enq[i]
+            retry_wait_s += enq[i + 1] - k
+            if was_timeout:
+                timeout_kills += 1
+            else:
+                crash_kills += 1
+        last_enq = enq[-1] if enq else start_s
+        queue_s = start_s - last_enq
+        batch_wait_s = (done_s - start_s) - exec_s
+        total_s = (
+            queue_wasted_s + retry_wait_s + queue_s + batch_wait_s + exec_s + tx_s
+        )
+        self.done.append(
+            {
+                "id": rid,
+                "attempts": len(enq),
+                "timeout_kills": timeout_kills,
+                "crash_kills": crash_kills,
+                "enq_s": enq,
+                "kill_s": [t for t, _ in kill],
+                "start_s": start_s,
+                "done_s": done_s,
+                "queue_wasted_s": queue_wasted_s,
+                "retry_wait_s": retry_wait_s,
+                "queue_s": queue_s,
+                "batch_wait_s": batch_wait_s,
+                "exec_s": exec_s,
+                "tx_s": tx_s,
+                "total_s": total_s,
+            }
+        )
+
+
+def _bits(x):
+    return struct.pack("<d", x)
+
+
+def verify_blame(chains):
+    """Mirror of obs::verify::verify_blame: recompute every segment from
+    the raw chain marks and demand bit-equality on the refold."""
+    for c in chains:
+        rid = c["id"]
+        assert c["attempts"] >= 1 and len(c["enq_s"]) == c["attempts"], rid
+        assert len(c["kill_s"]) + 1 == len(c["enq_s"]), rid
+        assert c["timeout_kills"] + c["crash_kills"] == len(c["kill_s"]), rid
+        for i, k in enumerate(c["kill_s"]):
+            assert c["enq_s"][i] <= k <= c["enq_s"][i + 1], rid
+        assert c["enq_s"][-1] <= c["start_s"] <= c["done_s"], rid
+        qw = 0.0
+        rw = 0.0
+        for i, k in enumerate(c["kill_s"]):
+            qw += k - c["enq_s"][i]
+            rw += c["enq_s"][i + 1] - k
+        q = c["start_s"] - c["enq_s"][-1]
+        bw = (c["done_s"] - c["start_s"]) - c["exec_s"]
+        total = qw + rw + q + bw + c["exec_s"] + c["tx_s"]
+        for got, want in (
+            (c["queue_wasted_s"], qw),
+            (c["retry_wait_s"], rw),
+            (c["queue_s"], q),
+            (c["batch_wait_s"], bw),
+            (c["total_s"], total),
+        ):
+            assert _bits(got) == _bits(want), f"chain {rid}: blame refold diverged"
+
+
+def score_alerts(alerts, expect, onset_s):
+    """Mirror of obs::attribute::score_alerts: expect is (kind, lane) or
+    None for a fault-free run (every raise false)."""
+    detected = False
+    latency = float("nan")
+    correct = False
+    false_alerts = 0
+    for a in alerts:
+        if not a["raised"]:
+            continue
+        if expect is not None and a["kind"] == expect[0] and a["t_s"] >= onset_s:
+            if not detected:
+                detected = True
+                latency = a["t_s"] - onset_s
+                correct = a["lane"] == expect[1]
+        else:
+            false_alerts += 1
+    return {
+        "detected": detected,
+        "detection_latency_s": latency,
+        "correct_lane": correct,
+        "false_alerts": false_alerts,
+    }
+
+
+def compress_arrivals(pool, onset_s, rate):
+    """Mirror of experiments::detect::compress_arrivals: post-onset
+    inter-arrival gaps shrink x`rate`, same request bodies."""
+    out = []
+    for r in pool:
+        a = r.arrival_s
+        if a > onset_s:
+            a = onset_s + (r.arrival_s - onset_s) / rate
+        out.append(RequestTruth(r.n, r.m_real, a, r.t_edge, r.t_cloud, r.t_tx, r.rtt))
+    return out
+
+
+def run_detect_eval(requests, seed=SEED):
+    """Run the five-scenario evaluation (mirror of
+    experiments::detect::run, serial cell order)."""
+    topo = topo_hetero()
+    tiers = [d["tier"] for d in topo["devices"]]
+    crash = outage_fault_spec(topo, requests, OUTAGE_OFFERED_RPS)
+    onset_s = crash["start_s"]
+    slow = {
+        "lane": crash["lane"],
+        "mode": "slow",
+        "factor": SLOW_FACTOR,
+        "start_s": crash["start_s"],
+        "recover_s": crash["recover_s"],
+    }
+    link_lane = next(
+        i for i, d in enumerate(topo["devices"]) if d["tier"] == CLOUD
+    )
+    link = {
+        "lane": link_lane,
+        "mode": "link",
+        "factor": LINK_FACTOR,
+        "start_s": crash["start_s"],
+        "recover_s": crash["recover_s"],
+    }
+    pool = synth_workload(
+        cell_seed(seed, 0) ^ OUTAGE_SEED_TAG, requests, OUTAGE_OFFERED_RPS
+    )
+    surge_pool = compress_arrivals(pool, onset_s, SURGE_RATE)
+    faults = [None, crash, slow, link, None]
+    expects = {
+        "twin": (None, False, 0.0),
+        "crash": ((DEVICE_CRASH, crash["lane"]), True, onset_s),
+        "slow": ((DEVICE_SLOWDOWN, slow["lane"]), True, onset_s),
+        "link": ((LINK_DEGRADATION, link["lane"]), True, onset_s),
+        "surge": ((LOAD_SURGE, 0), False, onset_s),
+    }
+    scenarios = []
+    for cell, name in enumerate(SCENARIOS):
+        reqs = surge_pool if name == "surge" else pool
+        det = Detector(tiers, dict(DETECT_CFG))
+        blame = BlameLedger()
+        run = OutageRun(
+            reqs,
+            topo,
+            True,
+            faults[cell],
+            RETRY_POLICY,
+            telemetry=dict(TELEMETRY_CFG),
+            detector=det,
+            blame=blame,
+        )
+        result = run.run()
+        verify_blame(blame.done)
+        expect, lane_attributable, onset = expects[name]
+        scenarios.append(
+            {
+                "name": name,
+                "fault": faults[cell],
+                "expect": expect,
+                "lane_attributable": lane_attributable,
+                "onset_s": onset,
+                "result": result,
+                "alerts": det.log,
+                "raised": det.raised,
+                "cleared": det.cleared,
+                "score": score_alerts(det.log, expect, onset),
+                "blame": blame.done,
+            }
+        )
+    twin = scenarios[0]
+    if twin["raised"] != 0:
+        raise RuntimeError(
+            f"detect eval: fault-free twin raised {twin['raised']} alert(s) — "
+            "the detector is mistuned for this operating point"
+        )
+    return topo, scenarios
+
+
+def detected_count(scenarios):
+    return sum(
+        1 for s in scenarios if s["expect"] is not None and s["score"]["detected"]
+    )
+
+
+def false_alert_count(scenarios):
+    return sum(s["score"]["false_alerts"] for s in scenarios)
+
+
+def max_detection_latency_s(scenarios):
+    """Fold NAN f64::max over detected latencies (NaN when none)."""
+    lat = [
+        s["score"]["detection_latency_s"]
+        for s in scenarios
+        if s["score"]["detected"]
+    ]
+    return max(lat) if lat else float("nan")
+
+
+def attribution_accuracy(scenarios):
+    faulted = [s for s in scenarios if s["expect"] is not None]
+    if not faulted:
+        return float("nan")
+    good = sum(
+        1
+        for s in faulted
+        if s["score"]["detected"]
+        and (not s["lane_attributable"] or s["score"]["correct_lane"])
+    )
+    return good / len(faulted)
+
+
+def alert_to_json(a):
+    return {
+        "t_s": a["t_s"],
+        "lane": float(a["lane"]),
+        "kind": a["kind"],
+        "raised": a["raised"],
+        "score": a["score"],
+    }
+
+
+def chain_to_json(c):
+    return {
+        "id": float(c["id"]),
+        "attempts": float(c["attempts"]),
+        "timeout_kills": float(c["timeout_kills"]),
+        "crash_kills": float(c["crash_kills"]),
+        "queue_wasted_s": c["queue_wasted_s"],
+        "retry_wait_s": c["retry_wait_s"],
+        "queue_s": c["queue_s"],
+        "batch_wait_s": c["batch_wait_s"],
+        "exec_s": c["exec_s"],
+        "tx_s": c["tx_s"],
+        "total_s": c["total_s"],
+    }
+
+
+def blame_to_json(chains):
+    """Per-segment sums accumulated in completion order (the rust fold
+    order), plus the retried chains in full."""
+    sums = [0.0] * 7
+    attempts = 0
+    timeout_kills = 0
+    crash_kills = 0
+    retried = []
+    for c in chains:
+        attempts += c["attempts"]
+        timeout_kills += c["timeout_kills"]
+        crash_kills += c["crash_kills"]
+        for slot, key in enumerate(
+            (
+                "queue_wasted_s",
+                "retry_wait_s",
+                "queue_s",
+                "batch_wait_s",
+                "exec_s",
+                "tx_s",
+                "total_s",
+            )
+        ):
+            sums[slot] += c[key]
+        if c["attempts"] > 1:
+            retried.append(chain_to_json(c))
+    return {
+        "chains": float(len(chains)),
+        "attempts": float(attempts),
+        "timeout_kills": float(timeout_kills),
+        "crash_kills": float(crash_kills),
+        "queue_wasted_s": sums[0],
+        "retry_wait_s": sums[1],
+        "queue_s": sums[2],
+        "batch_wait_s": sums[3],
+        "exec_s": sums[4],
+        "tx_s": sums[5],
+        "total_s": sums[6],
+        "retried": retried,
+    }
+
+
+def score_to_json(s):
+    return {
+        "detected": s["detected"],
+        # NaN renders as null (write_num) — matches the rust Json::Null.
+        "detection_latency_s": s["detection_latency_s"],
+        "correct_lane": s["correct_lane"],
+        "false_alerts": float(s["false_alerts"]),
+    }
+
+
+def detect_to_json(topo, scenarios, requests, seed=SEED):
+    scen = {}
+    for s in scenarios:
+        scen[s["name"]] = {
+            # Python None has no renderer; NaN renders null like rust's
+            # Json::Null for the absent fault/expect.
+            "fault": (
+                fault_to_json(s["fault"])
+                if s["fault"] is not None
+                else float("nan")
+            ),
+            "expect": (
+                {"kind": s["expect"][0], "lane": float(s["expect"][1])}
+                if s["expect"] is not None
+                else float("nan")
+            ),
+            "lane_attributable": s["lane_attributable"],
+            "onset_s": s["onset_s"],
+            "result": s["result"],
+            "alerts": [alert_to_json(a) for a in s["alerts"]],
+            "score": score_to_json(s["score"]),
+            "blame": blame_to_json(s["blame"]),
+        }
+    return {
+        "seed": float(seed),
+        "requests_per_point": float(requests),
+        "offered_rps": OUTAGE_OFFERED_RPS,
+        "topology": topo_to_json(topo),
+        "detect": {
+            "warmup": float(DETECT_CFG["warmup"]),
+            "cusum_k": DETECT_CFG["cusum_k"],
+            "cusum_h": DETECT_CFG["cusum_h"],
+            "sigma_floor": DETECT_CFG["sigma_floor"],
+            "clear_after": float(DETECT_CFG["clear_after"]),
+            "gauge_warmup": float(DETECT_CFG["gauge_warmup"]),
+            "gauge_lambda": DETECT_CFG["gauge_lambda"],
+            "gauge_l": DETECT_CFG["gauge_l"],
+            "surge_lanes": float(DETECT_CFG["surge_lanes"]),
+            "surge_clear": float(DETECT_CFG["surge_clear"]),
+        },
+        "retry": {
+            "timeout_mult": RETRY_POLICY["timeout_mult"],
+            "min_timeout_s": RETRY_POLICY["min_timeout_s"],
+            "backoff_base_s": RETRY_POLICY["backoff_base_s"],
+            "backoff_mult": RETRY_POLICY["backoff_mult"],
+            "max_retries": float(RETRY_POLICY["max_retries"]),
+        },
+        "telemetry_interval_s": TELEMETRY_CFG["interval_s"],
+        "slow_factor": SLOW_FACTOR,
+        "link_factor": LINK_FACTOR,
+        "surge_rate": SURGE_RATE,
+        "goodput_window_s": GOODPUT_WINDOW_S,
+        "scenarios": scen,
+        "headline_detected": float(detected_count(scenarios)),
+        "headline_false_alerts": float(false_alert_count(scenarios)),
+        "headline_max_detection_latency_s": max_detection_latency_s(scenarios),
+        "headline_attribution_accuracy": attribution_accuracy(scenarios),
+    }
+
+
+def summarize(scenarios):
+    hdr = (
+        f"{'scenario':<8} {'expected':>16} {'raised':>7} {'clears':>7} "
+        f"{'latency_s':>9} {'lane':>5} {'false':>6} {'chains':>7}"
+    )
+    print(hdr)
+    print("-" * len(hdr))
+    for s in scenarios:
+        expected = s["expect"][0] if s["expect"] is not None else "-"
+        sc = s["score"]
+        latency = f"{sc['detection_latency_s']:.3f}" if sc["detected"] else "-"
+        if sc["detected"] and s["lane_attributable"]:
+            lane = "ok" if sc["correct_lane"] else "WRONG"
+        else:
+            lane = "-"
+        print(
+            f"{s['name']:<8} {expected:>16} {s['raised']:>7} {s['cleared']:>7} "
+            f"{latency:>9} {lane:>5} {sc['false_alerts']:>6} "
+            f"{len(s['blame']):>7}"
+        )
+    faulted = sum(1 for s in scenarios if s["expect"] is not None)
+    print(
+        f"\nheadline: {detected_count(scenarios)}/{faulted} faults detected "
+        f"(worst latency {max_detection_latency_s(scenarios):.3f}s), "
+        f"attribution accuracy {attribution_accuracy(scenarios) * 100:.0f}%, "
+        f"{false_alert_count(scenarios)} false alert(s), twin quiescent"
+    )
+
+
+def run_off_check(requests, seed=SEED):
+    """Observation-only proof: the crash replay's scheduling outcome is
+    identical with the detector + blame ledger attached and detached."""
+    topo = topo_hetero()
+    tiers = [d["tier"] for d in topo["devices"]]
+    fault = outage_fault_spec(topo, requests, OUTAGE_OFFERED_RPS)
+    pool = synth_workload(
+        cell_seed(seed, 0) ^ OUTAGE_SEED_TAG, requests, OUTAGE_OFFERED_RPS
+    )
+    attached = OutageRun(
+        pool,
+        topo,
+        True,
+        fault,
+        RETRY_POLICY,
+        telemetry=dict(TELEMETRY_CFG),
+        detector=Detector(tiers, dict(DETECT_CFG)),
+        blame=BlameLedger(),
+    ).run()
+    detached = OutageRun(
+        pool, topo, True, fault, RETRY_POLICY, telemetry=dict(TELEMETRY_CFG)
+    ).run()
+    a = to_json_value(attached, 2, 0)
+    d = to_json_value(detached, 2, 0)
+    if a != d:
+        raise RuntimeError(
+            "detection is not observation-only: attached/detached outage "
+            "replays diverged"
+        )
+    print(
+        f"off-check ok: {requests} requests, detector-attached replay "
+        "byte-identical with detection off"
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None)
+    ap.add_argument(
+        "--requests",
+        type=int,
+        default=OUTAGE_REQUESTS,
+        help="requests per scenario (mirrors cnmt --detect-requests)",
+    )
+    ap.add_argument(
+        "--off-check",
+        action="store_true",
+        help="skip the eval; prove the detector is observation-only "
+        "(attached vs detached crash replays byte-identical)",
+    )
+    args = ap.parse_args()
+
+    if args.off_check:
+        run_off_check(args.requests)
+        return
+    topo, scenarios = run_detect_eval(args.requests)
+    root = detect_to_json(topo, scenarios, args.requests)
+    write_json(args.out or "reports/detect_eval.json", root)
+    summarize(scenarios)
+
+
+if __name__ == "__main__":
+    main()

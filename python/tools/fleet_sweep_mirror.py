@@ -256,6 +256,9 @@ class FleetDispatcher:
         self.timers = []
         self.timer_seq = 0
         self.armed = None
+        # Anomaly-detector tap (mirror of dispatcher.detector): fed one
+        # exec residual per completion from flush_one. None = detached.
+        self.detector = None
 
     def arena_alloc(self, entry):
         if self.arena_free:
@@ -435,6 +438,8 @@ class FleetDispatcher:
     def flush_one(self, out):
         done_s, _seq, start_s, bsize, li, rq = heapq.heappop(self.pending)
         kind = self.resolve_completion(li, rq[7])
+        if self.detector is not None:
+            self.detector.observe_exec(li, done_s, done_s - start_s, rq[4])
         out.append((rq, li, start_s, done_s, bsize, kind))
 
     def step(self, horizon_s, exec_fn, out):

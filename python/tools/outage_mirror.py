@@ -45,11 +45,13 @@ from fleet_sweep_mirror import (  # noqa: E402
     EDGE,
     FLEET_HEDGE_MARGIN_S,
     FleetState,
+    Telemetry,
     cell_seed,
     topo_hetero,
     topo_to_json,
 )
 from load_sweep_mirror import (  # noqa: E402
+    BATCH_RESIDUAL,
     BUCKET_WIDTH,
     SEED,
     TTX_REFRESH_S,
@@ -76,6 +78,58 @@ RETRY_POLICY = {
 
 UP, DRAINING, DOWN = 0, 1, 2
 
+# TelemetryCfg defaults (mirror of obs::TelemetryCfg::default) — the
+# gauge cadence used by `--telemetry` and the detection eval.
+TELEMETRY_CFG = {"interval_s": 2.0, "capacity": 64}
+
+
+def neutral_fault():
+    """Mirror of harness::neutral_fault: a x1.0 slow fault on lane 0
+    with an infinite window — the fault-free twin's spec (exact no-op
+    factors, identical control flow)."""
+    return {
+        "lane": 0,
+        "mode": "slow",
+        "factor": 1.0,
+        "start_s": 0.0,
+        "recover_s": float("inf"),
+    }
+
+
+def fault_active_at(fault, t):
+    """Half-open [start_s, recover_s) window (FaultSpec::active_at)."""
+    return fault["start_s"] <= t < fault["recover_s"]
+
+
+def exec_factor_at(fault, lane, t):
+    """FaultSpec::exec_factor_at: slow faults scale the faulted lane's
+    execution inside the window; every other (mode, lane, t) is 1."""
+    if fault["mode"] == "slow" and fault["lane"] == lane and fault_active_at(fault, t):
+        return fault["factor"]
+    return 1.0
+
+
+def link_factor_at(fault, lane, t):
+    """FaultSpec::link_factor_at: link faults scale the faulted cloud
+    lane's transfer inside the window; everything else is 1."""
+    if fault["mode"] == "link" and fault["lane"] == lane and fault_active_at(fault, t):
+        return fault["factor"]
+    return 1.0
+
+
+def fault_to_json(fault):
+    """Mirror of FaultSpec::to_json: recover_s renders null when the
+    window never closes; factor only exists for slow/link modes."""
+    out = {
+        "lane": float(fault["lane"]),
+        "mode": fault["mode"],
+        "start_s": fault["start_s"],
+        "recover_s": fault["recover_s"],  # inf renders as null (write_num)
+    }
+    if fault["mode"] in ("slow", "link"):
+        out["factor"] = fault["factor"]
+    return out
+
 
 def outage_fault_spec(topo, requests, offered_rps):
     """Mirror of experiments::outage::outage_fault_spec: crash the lead
@@ -95,15 +149,30 @@ class OutageRun:
     event loop interleaving fault transitions, deadline timers and
     retry-backoff readiness — mirror of sim::harness::run_fleet_outage."""
 
-    def __init__(self, pool, topo, failover, fault, retry):
+    def __init__(
+        self, pool, topo, failover, fault, retry,
+        telemetry=None, detector=None, blame=None,
+    ):
         self.pool = pool
         self.failover = failover
-        self.fault = fault
+        self.fault = fault if fault is not None else neutral_fault()
         self.retry = retry
         self.st = FleetState(pool, topo, "select", FLEET_HEDGE_MARGIN_S, 0)
         if failover:
             self.st.health = [UP] * len(self.st.tiers)
             self.st.disp.armed = {}
+        # Observation-only attachments (mirror of run_fleet_outage_detect):
+        # gauge sampler, anomaly detector, blame ledger. All default to
+        # None so the legacy replay stays operation-identical.
+        self.det = detector
+        self.blame = blame
+        if detector is not None:
+            self.st.disp.detector = detector
+        self.tel = (
+            Telemetry(telemetry, [d["name"] for d in topo["devices"]], False, False)
+            if telemetry is not None
+            else None
+        )
         self.waits = [0.0] * len(self.st.tiers)
         self.retry_heap = []  # (ready_s, retry_seq, id)
         self.retry_seq = 0
@@ -122,12 +191,19 @@ class OutageRun:
         request's ORIGINAL arrival (pool truth), not the copy's
         submission time — a retried request pays for its whole chain."""
         st = self.st
+        fault = self.fault
         for rq, li, start_s, done_s, _bsize, _kind in comps:
             truth = self.pool[rq[1]]
-            t_true = st.true_service_s(truth, li, start_s)
+            t_true = st.true_service_s(truth, li, start_s) * exec_factor_at(
+                fault, li, start_s
+            )
             st.useful_work_s += t_true
             tier = st.tiers[li]
-            tx_s = truth.t_tx * st.link_scale[li] if tier == CLOUD else 0.0
+            tx_s = (
+                truth.t_tx * st.link_scale[li] * link_factor_at(fault, li, done_s)
+                if tier == CLOUD
+                else 0.0
+            )
             latency = (done_s + tx_s) - truth.arrival_s
             st.hist.record(latency)
             st.stats_count += 1
@@ -144,6 +220,73 @@ class OutageRun:
             while len(self.curve) <= wi:
                 self.curve.append(0)
             self.curve[wi] += 1
+
+    def exec_fn(self, li, batch, start_s):
+        """Mirror of harness::OutageExecutor: the fleet's true batch
+        service time with the fault's window-gated execution factor
+        applied per request (x1.0 exact outside slow windows)."""
+        st = self.st
+        f = exec_factor_at(self.fault, li, start_s)
+        mx = 0.0
+        sm = 0.0
+        for rq in batch:
+            t = st.true_service_s(self.pool[rq[1]], li, start_s) * f
+            if t > mx:
+                mx = t
+            sm += t
+        return mx + (sm - mx) * BATCH_RESIDUAL
+
+    def detect_taps(self, comps):
+        """Mirror of harness::outage_detect_taps: transfer residuals on
+        cloud completions feed the detector; the blame ledger closes
+        every completed chain."""
+        det, blame = self.det, self.blame
+        if det is None and blame is None:
+            return
+        st = self.st
+        fault = self.fault
+        for rq, li, start_s, done_s, _bsize, _kind in comps:
+            truth = self.pool[rq[1]]
+            t_true = st.true_service_s(truth, li, start_s) * exec_factor_at(
+                fault, li, start_s
+            )
+            if st.tiers[li] == CLOUD:
+                tx_s = (
+                    truth.t_tx * st.link_scale[li] * link_factor_at(fault, li, done_s)
+                )
+                if det is not None:
+                    det.observe_tx(li, done_s + tx_s, tx_s, truth.n + rq[3])
+            else:
+                tx_s = 0.0
+            if blame is not None:
+                blame.complete(rq[0], start_s, done_s, t_true, tx_s)
+
+    def sample_telemetry(self, now_s):
+        """Mirror of harness::outage_sample_telemetry: claim every
+        cadence point due at or before `now_s`; the same gauge reads
+        feed the detector's surge charts."""
+        tel = self.tel
+        if tel is None:
+            return
+        disp = self.st.disp
+        det = self.det
+        while True:
+            ts = tel.next_due(now_s)
+            if ts is None:
+                break
+            for d, dev in enumerate(tel.devices):
+                lane = disp.lanes[d]
+                depth = float(len(lane.items) - lane.dead)
+                wait = lane.expected_wait_s(ts)
+                dev["queue_depth"].append(depth)
+                dev["expected_wait_s"].append(wait)
+                dev["in_flight"].append(
+                    float(sum(1 for t in lane.free_at if t > ts))
+                )
+                if det is not None:
+                    det.observe_gauge(d, depth, wait)
+            if det is not None:
+                det.commit_sample(ts)
 
     def submit(self, rid, now):
         """Route + submit one request copy (initial arrival or retry):
@@ -193,9 +336,11 @@ class OutageRun:
         pool = self.pool
         fault = self.fault
         inf = float("inf")
+        # Crash transitions only: slow/link faults act purely through
+        # their window-gated factors — no lane state to flip.
         transitions = [(fault["start_s"], 0), (fault["recover_s"], 1)]
         i = 0
-        fi = 0
+        fi = 0 if fault["mode"] == "crash" else len(transitions)
         while True:
             t_arr = pool[i].arrival_s if i < len(pool) else inf
             t_tr = transitions[fi][0] if fi < len(transitions) else inf
@@ -207,8 +352,10 @@ class OutageRun:
             if t == inf:
                 break
             comps = []
-            disp.run_until(t, st.exec_fn, comps)
+            disp.run_until(t, self.exec_fn, comps)
             self.process(comps)
+            self.detect_taps(comps)
+            self.sample_telemetry(t)
             # Fixed tie order: transition, then timeout, then retry,
             # then arrival (one action per iteration).
             if t_tr == t:
@@ -221,6 +368,10 @@ class OutageRun:
                         st.health[fault["lane"]] = DOWN
                         for rq in killed:
                             self.failover_reroutes += 1
+                            if self.det is not None:
+                                self.det.observe_reroute(fault["lane"], t)
+                            if self.blame is not None:
+                                self.blame.attempt_killed(rq[0], t, False)
                             self.schedule_retry(rq[0], t)
                     else:
                         self.stranded += len(killed)
@@ -232,21 +383,32 @@ class OutageRun:
             if t_to == t:
                 for rq in disp.fire_timeouts(t):
                     self.timeouts_fired += 1
+                    if self.det is not None:
+                        self.det.observe_timeout(t)
+                    if self.blame is not None:
+                        self.blame.attempt_killed(rq[0], t, True)
                     self.schedule_retry(rq[0], t)
                 continue
             if t_rt == t:
                 _ready, _seq, rid = heapq.heappop(self.retry_heap)
                 if self.submit(rid, t):
                     self.retry_dispatches += 1
+                    if self.blame is not None:
+                        self.blame.attempt_start(rid, t)
                 else:
                     self.schedule_retry(rid, t)
                 continue
-            if not self.submit(i, t):
+            if self.submit(i, t):
+                if self.blame is not None:
+                    self.blame.attempt_start(i, t)
+            else:
                 self.rejected += 1
             i += 1
         comps = []
-        disp.run_until(inf, st.exec_fn, comps)
+        disp.run_until(inf, self.exec_fn, comps)
         self.process(comps)
+        self.detect_taps(comps)
+        self.sample_telemetry(st.last_done_s)
         return self.to_json()
 
     def to_json(self):
@@ -262,7 +424,7 @@ class OutageRun:
         first_arrival = self.pool[0].arrival_s if self.pool else 0.0
         makespan_s = max(st.last_done_s - first_arrival, 0.0)
         max_attempts = max(self.retries) if self.retries else 0
-        return {
+        out = {
             "policy": "fleet+select+failover" if self.failover else "fleet+select",
             "failover": self.failover,
             "offered": float(offered),
@@ -300,17 +462,23 @@ class OutageRun:
             "peak_depths": [float(lane.peak_depth) for lane in disp.lanes],
             "goodput_curve": [float(c) for c in self.curve],
         }
+        if self.tel is not None:
+            out["telemetry"] = self.tel.to_json()
+        return out
 
 
-def run_outage_sweep(requests, seed=SEED):
+def run_outage_sweep(requests, seed=SEED, telemetry=False):
     topo = topo_hetero()
     fault = outage_fault_spec(topo, requests, OUTAGE_OFFERED_RPS)
     pool = synth_workload(
         cell_seed(seed, 0) ^ OUTAGE_SEED_TAG, requests, OUTAGE_OFFERED_RPS
     )
+    tel = dict(TELEMETRY_CFG) if telemetry else None
     cells = {}
     for failover in (False, True):
-        r = OutageRun(pool, topo, failover, fault, RETRY_POLICY).run()
+        r = OutageRun(
+            pool, topo, failover, fault, RETRY_POLICY, telemetry=tel
+        ).run()
         cells[r["policy"]] = r
     return topo, fault, cells
 
@@ -392,9 +560,16 @@ def main():
         default=OUTAGE_REQUESTS,
         help="requests per cell (mirrors cnmt --outage-requests)",
     )
+    ap.add_argument(
+        "--telemetry",
+        action="store_true",
+        help="sample per-device gauges at the default cadence and add a "
+        "`telemetry` block per policy (mirrors cnmt experiment outage "
+        "--telemetry)",
+    )
     args = ap.parse_args()
 
-    topo, fault, cells = run_outage_sweep(args.requests)
+    topo, fault, cells = run_outage_sweep(args.requests, telemetry=args.telemetry)
     root = outage_to_json(topo, fault, cells, args.requests)
     write_json(args.out or "reports/outage_sweep.json", root)
     summarize(topo, fault, cells)

@@ -10,6 +10,7 @@
 //! | — (beyond paper: load sweep) | [`load`] | `cnmt experiment load` |
 //! | — (beyond paper: fleet sweep) | [`fleet`] | `cnmt experiment fleet` |
 //! | — (beyond paper: outage sweep) | [`outage`] | `cnmt experiment outage` |
+//! | — (beyond paper: detection quality) | [`detect`] | `cnmt experiment detect` |
 //!
 //! Every driver prints a human-readable table and writes a JSON report
 //! through the one shared path ([`report::write_report`] over
@@ -17,6 +18,7 @@
 //! EXPERIMENTS.md can quote exact numbers.
 
 pub mod ablation;
+pub mod detect;
 pub mod energy;
 pub mod fig2a;
 pub mod fig3;

@@ -24,8 +24,8 @@ use cnmt::corpus::LangPair;
 use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
 use cnmt::experiments::{
-    ablation, energy, fig2a, fig3, fig4, fleet, load, multilevel, outage, report, runner,
-    table1,
+    ablation, detect, energy, fig2a, fig3, fig4, fleet, load, multilevel, outage, report,
+    runner, table1,
 };
 #[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
@@ -67,7 +67,7 @@ const HELP: &str = "\
 cnmt — C-NMT: collaborative inference for neural machine translation
 
 USAGE:
-  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|outage|all> [flags]
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|outage|detect|all> [flags]
       --config <json>       load a Config (defaults = paper setup)
       --requests <n>        evaluation requests (default 100000)
       --fit <n>             characterisation inferences (default 10000)
@@ -111,6 +111,16 @@ USAGE:
       --trace <path>        outage sweep only: additionally stream the
                             failover cell's full decision log (JSONL)
                             to <path> for `cnmt trace verify`
+                            (with `experiment outage`, --telemetry
+                            samples control-loop gauges in both cells
+                            and adds a `telemetry` block per policy)
+      --detect-requests <n> detection eval: requests per scenario
+                            (default 20000); five scenarios (fault-free
+                            twin, crash, fail-slow, link degradation,
+                            load surge) replay under the online
+                            detector and are scored against the
+                            injected spec (writes detect_eval.json;
+                            --threads applies)
   cnmt bench sched [flags]  scheduler core benchmark (events/sec,
                             ns/event, sweep wall-clock at 1 vs N threads)
       --json                also write the machine-readable report
@@ -130,11 +140,17 @@ USAGE:
       --requests <n>        replay length (default 2000)
       --load <f>            offered load in r/s (default 120)
       --seed <u64>          master seed (default 20220315)
-  cnmt trace summary <file> per-event-tag counts and the trace span
+  cnmt trace summary <file> per-event-tag counts, the trace span, and
+                            recorder health (dropped prefix, ring
+                            evictions, sink status) from the trailer
   cnmt trace verify <file>  offline replay: re-prove conservation,
                             hedge-fate partitioning, margin control law
                             and waste-budget compliance from the log
-                            alone (no harness internals)
+                            alone (no harness internals); fails on a
+                            truncated ring window or unhealthy trailer
+      --allow-truncated     verify a truncated window anyway (local
+                            checks + tallies only; conservation needs
+                            the full stream)
   cnmt trace record [flags] record the synthetic scenario as a compact
                             binary workload trace (.ctr: versioned
                             header, varint records, CRC-sealed blocks)
@@ -335,7 +351,24 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         let mut oc = outage::OutageConfig { seed: cfg.seed, ..Default::default() };
         oc.threads = runner::resolve_threads(args.usize("threads", 1)?);
         oc.requests_per_point = args.usize("outage-requests", oc.requests_per_point)?;
+        // Opt-in gauge sampling (satellite of the detection work): off
+        // by default so the checked-in outage_sweep.json bytes never
+        // move. Only the dedicated run consumes the flag — on `all` it
+        // stays unknown and is rejected below.
+        if which == "outage" && args.bool("telemetry") {
+            oc.opts.telemetry = Some(cnmt::obs::TelemetryCfg::default());
+        }
         Some(oc)
+    } else {
+        None
+    };
+    let detect_cfg = if matches!(which.as_str(), "detect" | "all") {
+        let mut dc = detect::DetectConfig::default();
+        dc.base.seed = cfg.seed;
+        dc.base.threads = runner::resolve_threads(args.usize("threads", 1)?);
+        dc.base.requests_per_point =
+            args.usize("detect-requests", dc.base.requests_per_point)?;
+        Some(dc)
     } else {
         None
     };
@@ -501,7 +534,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             let (res, mut rec) = cnmt::sim::run_fleet_outage_traced(
                 &pool, &ch, &oc.topo, &oc.opts, &fault, &oc.retry, true, rec,
             )?;
-            rec.flush();
+            // finish() appends the health trailer before the flush.
+            rec.finish();
             if !rec.sink_ok() {
                 return Err(Error::Config(format!(
                     "outage trace: write to {} failed",
@@ -520,6 +554,20 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 res.timeouts_fired
             );
         }
+        Ok(())
+    };
+
+    let run_detect = |cfg: &Config| -> Result<()> {
+        let dc = detect_cfg.as_ref().expect("detect_cfg built for detect/all");
+        eprintln!(
+            "detect: {} requests/scenario, 5 scenarios (twin/crash/slow/link/\
+             surge) on `{}` under the online detector (seed {})",
+            dc.base.requests_per_point, dc.base.topo.name, dc.base.seed
+        );
+        let e = detect::run(dc)?;
+        print!("{}", detect::render_text(&e));
+        let p = report::write_report(&cfg.out_dir, "detect_eval", &detect::to_json(&e))?;
+        eprintln!("wrote {}\n", p.display());
         Ok(())
     };
 
@@ -543,6 +591,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         "load" => run_load(&cfg),
         "fleet" => run_fleet_exp(&cfg),
         "outage" => run_outage(&cfg),
+        "detect" => run_detect(&cfg),
         "all" => {
             run_fig4(&cfg)?;
             run_fig3(&cfg)?;
@@ -553,7 +602,8 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             run_multilevel(&cfg)?;
             run_load(&cfg)?;
             run_fleet_exp(&cfg)?;
-            run_outage(&cfg)
+            run_outage(&cfg)?;
+            run_detect(&cfg)
         }
         other => Err(Error::Config(format!("unknown experiment `{other}`"))),
     }
@@ -1171,6 +1221,27 @@ fn cmd_bench(args: &Args) -> Result<()> {
          (ring capacity {RECORDER_BENCH_CAPACITY}, no sink)"
     );
 
+    // Detector overhead: the identical hedged stream with the online
+    // anomaly detector tapping every completion's execution residual —
+    // the steady-state cost of self-diagnosis. CI gates the ratio
+    // (bench_gate.py --min-detect-ratio).
+    let mk_det = || {
+        use cnmt::devices::DeviceKind;
+        let mut d = Dispatcher::new(&DispatcherConfig::default());
+        d.attach_detector(cnmt::obs::Detector::new(
+            &[DeviceKind::Edge, DeviceKind::Cloud],
+            cnmt::obs::DetectCfg::default(),
+        ));
+        d
+    };
+    let hedged_det = event_loop_json("hedged/dense+det", mk_det, requests, 0.010);
+    let detect_ratio =
+        hedged_det.get("events_per_sec").unwrap().as_f64().unwrap() / hedged_eps;
+    eprintln!(
+        "  anomaly detector on the hedged path: {detect_ratio:.2}x events/sec \
+         (CUSUM residual charts, no recorder)"
+    );
+
     // Fleet path: the same per-request cycle through the FleetSelector
     // + N-lane surface, on the pair shape (lane-generalisation overhead
     // vs the classic pair path — gated) and a 6-lane scale-up
@@ -1343,6 +1414,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("disabled_events_per_sec", Json::Num(hedged_eps))
         .set("enabled", hedged_rec)
         .set("ratio", Json::Num(recorder_ratio));
+    let mut detector_section = Json::object();
+    detector_section
+        .set("disabled_events_per_sec", Json::Num(hedged_eps))
+        .set("enabled", hedged_det)
+        .set("ratio", Json::Num(detect_ratio));
     let mut root = Json::object();
     root.set("schema", Json::Str("bench_sched/v1".into()))
         .set("producer", Json::Str("cnmt bench sched".into()))
@@ -1355,6 +1431,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("baseline", baseline)
         .set("speedup", speedup)
         .set("recorder", recorder_section)
+        .set("detector", detector_section)
         .set("trace", trace_section);
     if write_json {
         let path = report::write_report(
@@ -1428,7 +1505,9 @@ fn cmd_trace(args: &Args) -> Result<()> {
                 &opts,
                 rec,
             )?;
-            rec.flush();
+            // finish() appends the health trailer (event count, ring
+            // evictions, sink status) before the final flush.
+            rec.finish();
             if !rec.sink_ok() {
                 return Err(Error::Config(format!(
                     "trace dump: write to {} failed",
@@ -1451,19 +1530,35 @@ fn cmd_trace(args: &Args) -> Result<()> {
             let path = args.positional.get(2).cloned().ok_or_else(|| {
                 Error::Config(format!("`cnmt trace {action}` needs a trace file"))
             })?;
+            // Only verify downgrades truncation; on summary the flag
+            // stays unknown and is rejected below.
+            let allow_truncated =
+                action == "verify" && args.bool("allow-truncated");
             args.reject_unknown()?;
             let text = std::fs::read_to_string(&path)?;
             if action == "summary" {
                 println!("{}", summarize_trace(&text)?.to_string_pretty());
             } else {
-                let r = verify_trace(&text)?;
+                let r = if allow_truncated {
+                    cnmt::obs::verify_trace_allow_truncated(&text)?
+                } else {
+                    verify_trace(&text)?
+                };
                 println!("{}", r.to_json().to_string_pretty());
-                eprintln!(
-                    "trace verify OK: {} events — conservation ({} results for \
-                     {} admitted), hedge-fate partition ({} hedged) and \
-                     waste-budget compliance re-proven offline",
-                    r.events, r.results, r.admitted, r.hedged
-                );
+                if r.dropped_prefix > 0 {
+                    eprintln!(
+                        "trace verify OK (truncated window: {} leading events \
+                         dropped — local checks and tallies only)",
+                        r.dropped_prefix
+                    );
+                } else {
+                    eprintln!(
+                        "trace verify OK: {} events — conservation ({} results for \
+                         {} admitted), hedge-fate partition ({} hedged) and \
+                         waste-budget compliance re-proven offline",
+                        r.events, r.results, r.admitted, r.hedged
+                    );
+                }
             }
             Ok(())
         }

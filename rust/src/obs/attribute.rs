@@ -1,0 +1,299 @@
+//! Root-cause attribution support: per-request *blame* decomposition
+//! across retry/failover chains, and alert-vs-ground-truth scoring.
+//!
+//! PR 6's phase decomposition partitions a single attempt's latency
+//! exactly (queue → batch-wait → exec → tx). PR 8 added retry and
+//! failover chains, where one admitted request can burn several
+//! attempts before completing. [`BlameLedger`] extends the partition
+//! across the whole chain: every second between first admission and
+//! final delivery lands in exactly one named segment, so a latency
+//! regression can be blamed on the queue, the retry policy, a sick
+//! device, or the link — not just "the chain was slow".
+//!
+//! For an admitted request the chain is
+//!
+//! ```text
+//! enq_0 … kill_0   enq_1 … kill_1   …   enq_n … start … done (+ tx)
+//! \__________/ \__/                      \___/ \____________/
+//!  queue_wasted retry_wait                queue  batch_wait+exec, tx
+//! ```
+//!
+//! * `queue_wasted_s` — time buried in queues on attempts that were
+//!   later killed (deadline timeout or lane crash),
+//! * `retry_wait_s`  — backoff gaps between a kill and the next
+//!   attempt's admission,
+//! * `queue_s`       — the final attempt's admission-to-dispatch wait,
+//! * `batch_wait_s`  — dispatch-to-completion time beyond the true
+//!   compute cost (micro-batch queueing inside the lane),
+//! * `exec_s`        — the true compute cost,
+//! * `tx_s`          — payload transfer (cloud lanes).
+//!
+//! [`BlameChain::total_s`] is the **left-fold** of those segments in
+//! that order; `obs::verify::verify_blame` recomputes every segment
+//! from the raw chain marks and re-folds, demanding bit-equality —
+//! the blame partition is an invariant, not a summary statistic.
+//!
+//! The ledger lives harness-side (it keyes on request ids across
+//! attempts, which the dispatcher deliberately does not track) and is
+//! observation-only, like everything in `obs`.
+
+use std::collections::HashMap;
+
+use super::detect::AlertRec;
+use super::event::AlertKind;
+
+/// In-flight chain marks for one admitted request.
+#[derive(Debug, Clone, Default)]
+struct ChainMarks {
+    /// Admission instant of each attempt, in order.
+    enq: Vec<f64>,
+    /// Kill instant of each killed attempt (`true` = deadline timeout,
+    /// `false` = lane crash / failover kill).
+    kill: Vec<(f64, bool)>,
+}
+
+/// The finished blame decomposition of one request chain.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlameChain {
+    /// Request id.
+    pub id: u64,
+    /// Attempts admitted (killed attempts + the one that completed).
+    pub attempts: u32,
+    /// Killed attempts that died to a deadline timeout.
+    pub timeout_kills: u32,
+    /// Killed attempts that died with their lane.
+    pub crash_kills: u32,
+    /// Raw chain marks, for exact re-verification: admission instants
+    /// per attempt and kill instants per killed attempt.
+    pub enq_s: Vec<f64>,
+    pub kill_s: Vec<f64>,
+    /// Final attempt dispatch / completion instants.
+    pub start_s: f64,
+    pub done_s: f64,
+    /// Queue time buried in killed attempts.
+    pub queue_wasted_s: f64,
+    /// Backoff gaps between kills and re-admissions.
+    pub retry_wait_s: f64,
+    /// Final attempt's admission-to-dispatch wait.
+    pub queue_s: f64,
+    /// Final attempt's in-lane wait beyond the true compute cost.
+    pub batch_wait_s: f64,
+    /// True compute cost of the completing attempt.
+    pub exec_s: f64,
+    /// Payload transfer time (0 for edge lanes).
+    pub tx_s: f64,
+    /// Left-fold of the six segments, in documented order.
+    pub total_s: f64,
+}
+
+/// Fold the six blame segments in their canonical order. `verify_blame`
+/// re-runs this exact fold; keep the order in sync with the module docs.
+pub fn fold_total(
+    queue_wasted_s: f64,
+    retry_wait_s: f64,
+    queue_s: f64,
+    batch_wait_s: f64,
+    exec_s: f64,
+    tx_s: f64,
+) -> f64 {
+    queue_wasted_s + retry_wait_s + queue_s + batch_wait_s + exec_s + tx_s
+}
+
+/// Harness-side collector that turns submit/kill/complete marks into
+/// [`BlameChain`]s.
+#[derive(Debug, Clone, Default)]
+pub struct BlameLedger {
+    open: HashMap<u64, ChainMarks>,
+    done: Vec<BlameChain>,
+}
+
+impl BlameLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// An attempt of request `id` was admitted at `t_s` (first or
+    /// retried).
+    pub fn attempt_start(&mut self, id: u64, t_s: f64) {
+        self.open.entry(id).or_default().enq.push(t_s);
+    }
+
+    /// The latest attempt of `id` was killed at `t_s` (`was_timeout`
+    /// false means the lane died under it).
+    pub fn attempt_killed(&mut self, id: u64, t_s: f64, was_timeout: bool) {
+        self.open.entry(id).or_default().kill.push((t_s, was_timeout));
+    }
+
+    /// The surviving attempt completed: `exec_s` is its true compute
+    /// cost, `tx_s` the transfer charge (0 off-cloud). Finalizes the
+    /// chain.
+    pub fn complete(&mut self, id: u64, start_s: f64, done_s: f64, exec_s: f64, tx_s: f64) {
+        let marks = self.open.remove(&id).unwrap_or_default();
+        debug_assert_eq!(
+            marks.enq.len(),
+            marks.kill.len() + 1,
+            "blame chain {id}: every non-final attempt must have a kill mark"
+        );
+        let mut queue_wasted_s = 0.0;
+        let mut retry_wait_s = 0.0;
+        let mut timeout_kills = 0u32;
+        let mut crash_kills = 0u32;
+        for (i, &(kill, was_timeout)) in marks.kill.iter().enumerate() {
+            queue_wasted_s += kill - marks.enq[i];
+            retry_wait_s += marks.enq[i + 1] - kill;
+            if was_timeout {
+                timeout_kills += 1;
+            } else {
+                crash_kills += 1;
+            }
+        }
+        let last_enq = marks.enq.last().copied().unwrap_or(start_s);
+        let queue_s = start_s - last_enq;
+        let batch_wait_s = (done_s - start_s) - exec_s;
+        let total_s = fold_total(queue_wasted_s, retry_wait_s, queue_s, batch_wait_s, exec_s, tx_s);
+        self.done.push(BlameChain {
+            id,
+            attempts: marks.enq.len() as u32,
+            timeout_kills,
+            crash_kills,
+            enq_s: marks.enq,
+            kill_s: marks.kill.iter().map(|&(t, _)| t).collect(),
+            start_s,
+            done_s,
+            queue_wasted_s,
+            retry_wait_s,
+            queue_s,
+            batch_wait_s,
+            exec_s,
+            tx_s,
+            total_s,
+        });
+    }
+
+    /// Finished chains, in completion order.
+    pub fn chains(&self) -> &[BlameChain] {
+        &self.done
+    }
+
+    /// Chains still open (admitted, not yet completed) — stranded or
+    /// in flight when the run ended.
+    pub fn open_chains(&self) -> usize {
+        self.open.len()
+    }
+
+    /// Consume the ledger, yielding the finished chains.
+    pub fn into_chains(self) -> Vec<BlameChain> {
+        self.done
+    }
+}
+
+/// How one scenario's alert stream compares to its injected ground
+/// truth (the experiment scorer; also reused by tests).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlertScore {
+    /// A raise of the expected kind was observed at/after fault onset.
+    pub detected: bool,
+    /// Onset-to-first-matching-raise latency (`NaN` when undetected).
+    pub detection_latency_s: f64,
+    /// The first matching raise named the faulted lane.
+    pub correct_lane: bool,
+    /// Raises that do not match the expected kind+window (all raises,
+    /// for a fault-free run).
+    pub false_alerts: u32,
+}
+
+/// Score an alert stream against an injected fault: `expect` is the
+/// fault's kind + lane, `onset_s` its start. `expect = None` means a
+/// fault-free run, where *every* raise is false.
+pub fn score_alerts(alerts: &[AlertRec], expect: Option<(AlertKind, u32)>, onset_s: f64) -> AlertScore {
+    let mut score = AlertScore {
+        detected: false,
+        detection_latency_s: f64::NAN,
+        correct_lane: false,
+        false_alerts: 0,
+    };
+    for a in alerts.iter().filter(|a| a.raised) {
+        match expect {
+            Some((kind, lane)) if a.kind == kind && a.t_s >= onset_s => {
+                if !score.detected {
+                    score.detected = true;
+                    score.detection_latency_s = a.t_s - onset_s;
+                    score.correct_lane = a.lane == lane;
+                }
+            }
+            _ => score.false_alerts += 1,
+        }
+    }
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_attempt_chain_partitions_exactly() {
+        let mut led = BlameLedger::new();
+        led.attempt_start(7, 1.0);
+        led.complete(7, 1.25, 1.40, 0.10, 0.02);
+        let c = &led.chains()[0];
+        assert_eq!(c.attempts, 1);
+        assert_eq!(c.queue_wasted_s, 0.0);
+        assert_eq!(c.retry_wait_s, 0.0);
+        assert_eq!(c.queue_s, 1.25 - 1.0);
+        assert_eq!(c.exec_s, 0.10);
+        assert_eq!(c.batch_wait_s, (1.40 - 1.25) - 0.10);
+        assert_eq!(
+            c.total_s,
+            fold_total(0.0, 0.0, c.queue_s, c.batch_wait_s, c.exec_s, c.tx_s)
+        );
+    }
+
+    #[test]
+    fn retried_chain_accumulates_waste_and_backoff() {
+        let mut led = BlameLedger::new();
+        led.attempt_start(3, 10.0);
+        led.attempt_killed(3, 10.5, true); // timeout at 10.5
+        led.attempt_start(3, 10.6); // backoff 0.1
+        led.attempt_killed(3, 11.0, false); // lane died at 11.0
+        led.attempt_start(3, 11.2); // backoff 0.2
+        led.complete(3, 11.5, 11.8, 0.25, 0.0);
+        let c = &led.chains()[0];
+        assert_eq!(c.attempts, 3);
+        assert_eq!(c.timeout_kills, 1);
+        assert_eq!(c.crash_kills, 1);
+        assert_eq!(c.queue_wasted_s, (10.5 - 10.0) + (11.0 - 10.6));
+        assert_eq!(c.retry_wait_s, (10.6 - 10.5) + (11.2 - 11.0));
+        assert_eq!(c.queue_s, 11.5 - 11.2);
+        assert_eq!(
+            c.total_s,
+            fold_total(
+                c.queue_wasted_s,
+                c.retry_wait_s,
+                c.queue_s,
+                c.batch_wait_s,
+                c.exec_s,
+                c.tx_s
+            )
+        );
+        assert_eq!(led.open_chains(), 0);
+    }
+
+    #[test]
+    fn scoring_matches_kind_lane_and_window() {
+        let alerts = [
+            AlertRec { t_s: 9.0, lane: 2, kind: AlertKind::LoadSurge, score: 2.0, raised: true },
+            AlertRec { t_s: 12.0, lane: 0, kind: AlertKind::DeviceCrash, score: 1.0, raised: true },
+            AlertRec { t_s: 40.0, lane: 0, kind: AlertKind::DeviceCrash, score: 0.0, raised: false },
+        ];
+        let s = score_alerts(&alerts, Some((AlertKind::DeviceCrash, 0)), 11.5);
+        assert!(s.detected);
+        assert_eq!(s.detection_latency_s, 0.5);
+        assert!(s.correct_lane);
+        assert_eq!(s.false_alerts, 1, "the surge raise is off-spec");
+        // Fault-free: every raise is false, clears are ignored.
+        let s = score_alerts(&alerts, None, 0.0);
+        assert!(!s.detected);
+        assert_eq!(s.false_alerts, 2);
+    }
+}

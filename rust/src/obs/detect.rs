@@ -1,0 +1,637 @@
+//! Online anomaly detection over the scheduler's own observables.
+//!
+//! The routing story rests on predicted latencies (the T̂_exe planes
+//! and the payload→T̂_tx line), so the most valuable live signal is how
+//! wrong those predictions are, per device, right now. [`Detector`]
+//! watches exactly what the scheduler can see — no fault-spec ground
+//! truth — and turns sustained shifts into typed
+//! [`Event::AlertRaised`] / [`Event::AlertCleared`] records:
+//!
+//! * **Execution residuals** (every completion, tapped by
+//!   [`crate::scheduler::Dispatcher`]): `x = ln(observed batch service
+//!   / installed per-request estimate)`. Each lane runs a one-sided
+//!   CUSUM control chart over the standardized residual: the first
+//!   [`DetectCfg::warmup`] observations freeze a Welford baseline
+//!   `(μ, σ)`, then `s ← max(0, s + z − k)` with `z = (x − μ)/σ`
+//!   raises [`AlertKind::DeviceSlowdown`] at `s > h`.
+//! * **Transfer residuals** (cloud completions, tapped by the harness
+//!   accounting): `x = ln(tx_s / tokens)` — the per-token transfer
+//!   time. Same chart, raising [`AlertKind::LinkDegradation`]: a link
+//!   fault moves this stream while the execution stream stays in
+//!   control.
+//! * **Kill evidence**: a failover reroute means the lane destroyed
+//!   admitted copies — definitive [`AlertKind::DeviceCrash`] evidence,
+//!   raised on the first kill and cleared by the lane's first
+//!   completion after recovery. Deadline timeouts are tallied as
+//!   corroborating evidence but never raise on their own.
+//! * **Gauge streams** (telemetry-cadence samples): per-lane EWMA
+//!   control charts over queue depth and expected wait. A simultaneous
+//!   breach on [`DetectCfg::surge_lanes`]+ lanes with every residual
+//!   chart in control is [`AlertKind::LoadSurge`] — the fleet is
+//!   drowning, no single device is to blame.
+//!
+//! **Collateral absorption** (the root-cause half, with
+//! [`super::attribute`]): while a device-level alert is active, the
+//! other lanes' residual charts hold and surge raises are suppressed —
+//! the load they absorb from the sick lane is attributed to the root
+//! cause, not re-alerted as a second anomaly. After a device alert
+//! clears, surges stay blocked until the gauges produce one fully calm
+//! sample (queues draining back down are aftermath, not a surge).
+//!
+//! The detector is **observation-only** (it never influences routing;
+//! every checked-in report is byte-identical with it detached) and
+//! allocation-free while quiescent: charts are preallocated per lane
+//! and the pending-event/alert buffers only grow when an alert
+//! actually fires. It is mirrored float-exactly by
+//! `python/tools/detect_mirror.py`.
+
+use crate::devices::DeviceKind;
+
+pub use super::event::AlertKind;
+use super::event::Event;
+
+/// Detector tuning. The defaults are deliberately conservative: the
+/// quiescence property (zero alerts on stationary fault-free workloads,
+/// enforced by tests and the fault-free twin of
+/// `reports/detect_eval.json`) outranks detection latency, and the
+/// injected faults are order-of-magnitude shifts that still detect in
+/// well under a second of simulated time.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DetectCfg {
+    /// Residual observations per chart before the baseline freezes.
+    pub warmup: u32,
+    /// CUSUM slack `k` (σ units): drift below this never accumulates.
+    /// Sized above the residual drift a pure load surge induces through
+    /// larger micro-batches (z ≲ 3 at the evaluated operating points),
+    /// so congestion reads as a surge — not as a per-device fault —
+    /// while the injected order-of-magnitude faults (z ≈ 4–8) still
+    /// accumulate within a second.
+    pub cusum_k: f64,
+    /// CUSUM decision threshold `h` (σ units).
+    pub cusum_h: f64,
+    /// Baseline σ floor (log-residual units) — a suspiciously tight
+    /// warmup must not turn the chart into a hair trigger.
+    pub sigma_floor: f64,
+    /// Consecutive in-control observations that retire a residual
+    /// alert (the chart then resets).
+    pub clear_after: u32,
+    /// Gauge samples per chart before its baseline freezes.
+    pub gauge_warmup: u32,
+    /// EWMA smoothing weight λ for the gauge charts.
+    pub gauge_lambda: f64,
+    /// Gauge control limit `L` (units of the EWMA's σ·√(λ/(2−λ))).
+    pub gauge_l: f64,
+    /// Lanes that must breach in the same sample to call a load surge.
+    pub surge_lanes: u32,
+    /// Consecutive all-calm samples that retire a surge alert.
+    pub surge_clear: u32,
+}
+
+impl Default for DetectCfg {
+    fn default() -> Self {
+        DetectCfg {
+            warmup: 64,
+            cusum_k: 3.0,
+            cusum_h: 25.0,
+            sigma_floor: 0.25,
+            clear_after: 8,
+            gauge_warmup: 8,
+            gauge_lambda: 0.25,
+            gauge_l: 8.0,
+            surge_lanes: 2,
+            surge_clear: 3,
+        }
+    }
+}
+
+/// One raised or cleared alert, in detection order — the experiment
+/// scorer's view (the flight recorder gets the same transitions as
+/// events).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AlertRec {
+    /// Sim time of the transition.
+    pub t_s: f64,
+    /// Attributed lane.
+    pub lane: u32,
+    /// Root-cause classification.
+    pub kind: AlertKind,
+    /// Detector statistic at a raise (0 for clears).
+    pub score: f64,
+    /// `true` = raised, `false` = cleared.
+    pub raised: bool,
+}
+
+/// What a chart observation did.
+enum Step {
+    None,
+    Raise(f64),
+    Clear,
+}
+
+/// One-sided CUSUM chart over standardized log residuals.
+#[derive(Debug, Clone, Copy, Default)]
+struct Chart {
+    seen: u32,
+    mean: f64,
+    m2: f64,
+    mu: f64,
+    sigma: f64,
+    s: f64,
+    calm: u32,
+    alerted: bool,
+}
+
+impl Chart {
+    fn observe(&mut self, x: f64, cfg: &DetectCfg) -> Step {
+        self.seen += 1;
+        if self.seen <= cfg.warmup {
+            // Welford warmup; the baseline freezes at the boundary so a
+            // later anomaly can never contaminate its own yardstick.
+            let d = x - self.mean;
+            self.mean += d / self.seen as f64;
+            self.m2 += d * (x - self.mean);
+            if self.seen == cfg.warmup {
+                self.mu = self.mean;
+                let var = self.m2 / (cfg.warmup - 1).max(1) as f64;
+                self.sigma = var.sqrt().max(cfg.sigma_floor);
+            }
+            return Step::None;
+        }
+        let z = (x - self.mu) / self.sigma;
+        self.s = (self.s + z - cfg.cusum_k).max(0.0);
+        if !self.alerted {
+            if self.s > cfg.cusum_h {
+                self.alerted = true;
+                self.calm = 0;
+                return Step::Raise(self.s);
+            }
+        } else if z <= cfg.cusum_k {
+            self.calm += 1;
+            if self.calm >= cfg.clear_after {
+                self.alerted = false;
+                self.s = 0.0;
+                self.calm = 0;
+                return Step::Clear;
+            }
+        } else {
+            self.calm = 0;
+        }
+        Step::None
+    }
+}
+
+/// EWMA control chart over one gauge stream.
+#[derive(Debug, Clone, Copy)]
+struct Gauge {
+    floor: f64,
+    seen: u32,
+    mean: f64,
+    m2: f64,
+    limit: f64,
+    z: f64,
+}
+
+impl Gauge {
+    fn new(floor: f64) -> Self {
+        Gauge { floor, seen: 0, mean: 0.0, m2: 0.0, limit: f64::INFINITY, z: 0.0 }
+    }
+
+    /// Feed one sample; returns whether the smoothed gauge is above its
+    /// control limit.
+    fn observe(&mut self, x: f64, cfg: &DetectCfg) -> bool {
+        self.seen += 1;
+        if self.seen <= cfg.gauge_warmup {
+            let d = x - self.mean;
+            self.mean += d / self.seen as f64;
+            self.m2 += d * (x - self.mean);
+            if self.seen == cfg.gauge_warmup {
+                let var = self.m2 / (cfg.gauge_warmup - 1).max(1) as f64;
+                let sigma = var.sqrt().max(self.floor);
+                let sigma_z = sigma * (cfg.gauge_lambda / (2.0 - cfg.gauge_lambda)).sqrt();
+                self.limit = self.mean + cfg.gauge_l * sigma_z;
+                self.z = self.mean;
+            }
+            return false;
+        }
+        self.z = cfg.gauge_lambda * x + (1.0 - cfg.gauge_lambda) * self.z;
+        self.z > self.limit
+    }
+}
+
+/// σ floor of the queue-depth gauge charts (requests).
+const DEPTH_FLOOR: f64 = 1.0;
+/// σ floor of the expected-wait gauge charts (seconds).
+const WAIT_FLOOR: f64 = 0.05;
+
+/// The per-fleet detector bank (see the module docs).
+#[derive(Debug, Clone)]
+pub struct Detector {
+    cfg: DetectCfg,
+    cloud: Vec<bool>,
+    exec: Vec<Chart>,
+    tx: Vec<Chart>,
+    depth: Vec<Gauge>,
+    wait: Vec<Gauge>,
+    crash_active: Vec<bool>,
+    /// Active device-level alerts (crash + slowdown + link), fleet-wide.
+    device_alerts: u32,
+    surge_active: bool,
+    surge_blocked: bool,
+    surge_breach: u32,
+    surge_first: u32,
+    surge_calm: u32,
+    /// Raised-but-undrained alert events (FIFO; `head` indexes the next
+    /// to pop, the vec is reset whenever it drains empty).
+    pending: Vec<Event>,
+    head: usize,
+    log: Vec<AlertRec>,
+    raised: u64,
+    cleared: u64,
+    timeouts_seen: u64,
+    reroutes_seen: u64,
+}
+
+impl Detector {
+    /// Detector bank for one fleet (`tiers` in lane order).
+    pub fn new(tiers: &[DeviceKind], cfg: DetectCfg) -> Self {
+        let n = tiers.len();
+        Detector {
+            cfg,
+            cloud: tiers.iter().map(|t| *t == DeviceKind::Cloud).collect(),
+            exec: vec![Chart::default(); n],
+            tx: vec![Chart::default(); n],
+            depth: vec![Gauge::new(DEPTH_FLOOR); n],
+            wait: vec![Gauge::new(WAIT_FLOOR); n],
+            crash_active: vec![false; n],
+            device_alerts: 0,
+            surge_active: false,
+            surge_blocked: false,
+            surge_breach: 0,
+            surge_first: u32::MAX,
+            surge_calm: 0,
+            pending: Vec::with_capacity(8),
+            head: 0,
+            log: Vec::with_capacity(16),
+            raised: 0,
+            cleared: 0,
+            timeouts_seen: 0,
+            reroutes_seen: 0,
+        }
+    }
+
+    /// The configured tuning.
+    pub fn cfg(&self) -> &DetectCfg {
+        &self.cfg
+    }
+
+    /// Lanes covered.
+    pub fn num_lanes(&self) -> usize {
+        self.exec.len()
+    }
+
+    fn emit(&mut self, t_s: f64, lane: u32, kind: AlertKind, score: f64, raise: bool) {
+        if raise {
+            self.raised += 1;
+            self.pending.push(Event::AlertRaised { lane, kind, score });
+        } else {
+            self.cleared += 1;
+            self.pending.push(Event::AlertCleared { lane, kind });
+        }
+        self.log.push(AlertRec { t_s, lane, kind, score, raised: raise });
+    }
+
+    /// Is a device-level alert active on a lane other than `lane`?
+    /// (Its collateral is absorbed: see the module docs.)
+    fn other_device_alert(&self, lane: usize) -> bool {
+        let own = self.exec[lane].alerted as u32
+            + self.tx[lane].alerted as u32
+            + self.crash_active[lane] as u32;
+        self.device_alerts > own
+    }
+
+    fn device_alert_cleared(&mut self) {
+        self.device_alerts -= 1;
+        // Queues draining after the root cause healed must not read as
+        // a fresh surge.
+        self.surge_blocked = true;
+    }
+
+    /// One execution-residual observation: `obs_s` is the completed
+    /// batch's service time, `est_s` the request's installed per-request
+    /// estimate. Also the lane-liveness signal that retires a crash
+    /// alert.
+    pub fn observe_exec(&mut self, lane: u32, t_s: f64, obs_s: f64, est_s: f64) {
+        let li = lane as usize;
+        if self.crash_active[li] {
+            // The lane completed work: it is serving again.
+            self.crash_active[li] = false;
+            self.emit(t_s, lane, AlertKind::DeviceCrash, 0.0, false);
+            self.device_alert_cleared();
+        }
+        if !(obs_s > 0.0 && est_s > 0.0) || self.other_device_alert(li) {
+            return;
+        }
+        let x = (obs_s / est_s).ln();
+        match self.exec[li].observe(x, &self.cfg) {
+            Step::Raise(score) => {
+                self.device_alerts += 1;
+                self.emit(t_s, lane, AlertKind::DeviceSlowdown, score, true);
+            }
+            Step::Clear => {
+                self.emit(t_s, lane, AlertKind::DeviceSlowdown, 0.0, false);
+                self.device_alert_cleared();
+            }
+            Step::None => {}
+        }
+    }
+
+    /// One transfer-residual observation (cloud completions): `tx_s`
+    /// the realized transfer time, `tokens` the request's size proxy
+    /// (`n + m̂`).
+    pub fn observe_tx(&mut self, lane: u32, t_s: f64, tx_s: f64, tokens: f64) {
+        let li = lane as usize;
+        if !self.cloud[li]
+            || !(tx_s > 0.0 && tokens > 0.0)
+            || self.other_device_alert(li)
+        {
+            return;
+        }
+        let x = (tx_s / tokens).ln();
+        match self.tx[li].observe(x, &self.cfg) {
+            Step::Raise(score) => {
+                self.device_alerts += 1;
+                self.emit(t_s, lane, AlertKind::LinkDegradation, score, true);
+            }
+            Step::Clear => {
+                self.emit(t_s, lane, AlertKind::LinkDegradation, 0.0, false);
+                self.device_alert_cleared();
+            }
+            Step::None => {}
+        }
+    }
+
+    /// A failover reroute off `lane`: the lane destroyed an admitted
+    /// copy — definitive crash evidence.
+    pub fn observe_reroute(&mut self, lane: u32, t_s: f64) {
+        self.reroutes_seen += 1;
+        let li = lane as usize;
+        if !self.crash_active[li] {
+            self.crash_active[li] = true;
+            self.device_alerts += 1;
+            self.emit(t_s, lane, AlertKind::DeviceCrash, 1.0, true);
+        }
+    }
+
+    /// A queue-deadline timeout fired: tallied as corroborating
+    /// evidence (a crashed lane starves its queue), never a raise on
+    /// its own — healthy queues time out too under transient load.
+    pub fn observe_timeout(&mut self, _t_s: f64) {
+        self.timeouts_seen += 1;
+    }
+
+    /// One lane's gauges for the current telemetry sample. Call for
+    /// every lane, then [`Detector::commit_sample`].
+    pub fn observe_gauge(&mut self, lane: u32, depth: f64, wait_s: f64) {
+        let li = lane as usize;
+        let d = self.depth[li].observe(depth, &self.cfg);
+        let w = self.wait[li].observe(wait_s, &self.cfg);
+        if d || w {
+            self.surge_breach += 1;
+            if lane < self.surge_first {
+                self.surge_first = lane;
+            }
+        }
+    }
+
+    /// Close the current telemetry sample: decide surge raises/clears
+    /// from this sample's breach count.
+    pub fn commit_sample(&mut self, t_s: f64) {
+        let breach = self.surge_breach;
+        let first = self.surge_first;
+        self.surge_breach = 0;
+        self.surge_first = u32::MAX;
+        if self.surge_active {
+            if breach == 0 {
+                self.surge_calm += 1;
+                if self.surge_calm >= self.cfg.surge_clear {
+                    self.surge_active = false;
+                    self.surge_calm = 0;
+                    self.emit(t_s, 0, AlertKind::LoadSurge, 0.0, false);
+                }
+            } else {
+                self.surge_calm = 0;
+            }
+            return;
+        }
+        if breach == 0 {
+            self.surge_blocked = false;
+            return;
+        }
+        if breach >= self.cfg.surge_lanes
+            && self.device_alerts == 0
+            && !self.surge_blocked
+        {
+            self.surge_active = true;
+            self.surge_calm = 0;
+            self.emit(t_s, first, AlertKind::LoadSurge, breach as f64, true);
+        }
+    }
+
+    /// Drain one pending alert event (FIFO) for the flight recorder.
+    pub fn pop_event(&mut self) -> Option<Event> {
+        if self.head < self.pending.len() {
+            let ev = self.pending[self.head];
+            self.head += 1;
+            if self.head == self.pending.len() {
+                self.pending.clear();
+                self.head = 0;
+            }
+            Some(ev)
+        } else {
+            None
+        }
+    }
+
+    /// Every raise/clear transition, in detection order.
+    pub fn alerts(&self) -> &[AlertRec] {
+        &self.log
+    }
+
+    /// Alerts raised.
+    pub fn raised(&self) -> u64 {
+        self.raised
+    }
+
+    /// Alerts cleared.
+    pub fn cleared(&self) -> u64 {
+        self.cleared
+    }
+
+    /// Alerts still active (raised and never cleared).
+    pub fn active(&self) -> u64 {
+        self.raised - self.cleared
+    }
+
+    /// Deadline timeouts tallied as corroborating evidence.
+    pub fn timeouts_seen(&self) -> u64 {
+        self.timeouts_seen
+    }
+
+    /// Failover reroutes observed (kill evidence).
+    pub fn reroutes_seen(&self) -> u64 {
+        self.reroutes_seen
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> Detector {
+        Detector::new(&[DeviceKind::Edge, DeviceKind::Cloud], DetectCfg::default())
+    }
+
+    /// Drive a chart with a stationary stream: alternating small
+    /// residuals around a fixed level.
+    fn feed_stationary(det: &mut Detector, lane: u32, n: u32, scale: f64) {
+        for i in 0..n {
+            let obs = scale * (1.0 + 0.1 * ((i % 7) as f64 - 3.0) / 3.0);
+            det.observe_exec(lane, i as f64 * 0.01, obs, scale);
+        }
+    }
+
+    #[test]
+    fn stationary_stream_stays_quiet() {
+        let mut det = pair();
+        feed_stationary(&mut det, 0, 5_000, 0.02);
+        feed_stationary(&mut det, 1, 5_000, 0.05);
+        assert_eq!(det.raised(), 0);
+        assert!(det.pop_event().is_none());
+    }
+
+    #[test]
+    fn sustained_exec_shift_raises_then_clears() {
+        let mut det = pair();
+        feed_stationary(&mut det, 0, 200, 0.02);
+        // 4x slowdown: the standardized log residual jumps ~ln 4 / σ.
+        for i in 0..50 {
+            det.observe_exec(0, 10.0 + i as f64 * 0.01, 0.08, 0.02);
+        }
+        assert_eq!(det.raised(), 1);
+        let raise = det.alerts()[0];
+        assert!(raise.raised);
+        assert_eq!(raise.kind, AlertKind::DeviceSlowdown);
+        assert_eq!(raise.lane, 0);
+        // Recovery: enough in-control observations retire the alert.
+        for i in 0..50 {
+            det.observe_exec(0, 20.0 + i as f64 * 0.01, 0.02, 0.02);
+        }
+        assert_eq!(det.cleared(), 1);
+        assert_eq!(det.active(), 0);
+        // The pending buffer drains the raise then the clear.
+        assert!(matches!(
+            det.pop_event(),
+            Some(Event::AlertRaised { lane: 0, kind: AlertKind::DeviceSlowdown, .. })
+        ));
+        assert!(matches!(
+            det.pop_event(),
+            Some(Event::AlertCleared { lane: 0, kind: AlertKind::DeviceSlowdown })
+        ));
+        assert!(det.pop_event().is_none());
+    }
+
+    #[test]
+    fn reroute_raises_crash_once_and_completion_clears_it() {
+        let mut det = pair();
+        det.observe_reroute(0, 5.0);
+        det.observe_reroute(0, 5.0);
+        det.observe_reroute(0, 5.0);
+        assert_eq!(det.raised(), 1, "kill burst must dedupe to one alert");
+        assert_eq!(det.alerts()[0].kind, AlertKind::DeviceCrash);
+        // First completion on the lane after recovery retires it.
+        det.observe_exec(0, 40.0, 0.02, 0.02);
+        assert_eq!(det.cleared(), 1);
+        assert_eq!(det.active(), 0);
+        assert_eq!(det.reroutes_seen(), 3);
+    }
+
+    #[test]
+    fn collateral_lanes_hold_while_a_device_alert_is_active() {
+        let mut det = pair();
+        feed_stationary(&mut det, 1, 200, 0.05);
+        det.observe_reroute(0, 5.0);
+        // Lane 1 now sees a big shift (the load lane 0 shed onto it) —
+        // absorbed by the active crash alert, not re-alerted.
+        for i in 0..200 {
+            det.observe_exec(1, 5.0 + i as f64 * 0.01, 0.25, 0.05);
+        }
+        assert_eq!(det.raised(), 1);
+    }
+
+    #[test]
+    fn tx_shift_raises_link_degradation_on_cloud_lanes_only() {
+        let mut det = pair();
+        for i in 0..100 {
+            det.observe_tx(1, i as f64 * 0.01, 0.042, 96.0);
+            det.observe_tx(0, i as f64 * 0.01, 0.042, 96.0); // edge: ignored
+        }
+        for i in 0..40 {
+            det.observe_tx(1, 10.0 + i as f64 * 0.01, 8.0 * 0.042, 96.0);
+        }
+        assert_eq!(det.raised(), 1);
+        assert_eq!(det.alerts()[0].kind, AlertKind::LinkDegradation);
+        assert_eq!(det.alerts()[0].lane, 1);
+    }
+
+    #[test]
+    fn multi_lane_gauge_breach_raises_one_surge() {
+        let mut det = pair();
+        for _ in 0..8 {
+            det.observe_gauge(0, 3.0, 0.02);
+            det.observe_gauge(1, 3.0, 0.02);
+            det.commit_sample(0.0);
+        }
+        // Both lanes' queues explode: one fleet-level surge alert.
+        for i in 0..10 {
+            det.observe_gauge(0, 300.0, 2.0);
+            det.observe_gauge(1, 300.0, 2.0);
+            det.commit_sample(16.0 + 2.0 * i as f64);
+        }
+        assert_eq!(det.raised(), 1);
+        assert_eq!(det.alerts()[0].kind, AlertKind::LoadSurge);
+        // Calm samples retire it.
+        for i in 0..20 {
+            det.observe_gauge(0, 3.0, 0.02);
+            det.observe_gauge(1, 3.0, 0.02);
+            det.commit_sample(40.0 + 2.0 * i as f64);
+        }
+        assert_eq!(det.cleared(), 1);
+    }
+
+    #[test]
+    fn surge_is_suppressed_while_a_device_alert_is_active() {
+        let mut det = pair();
+        for _ in 0..8 {
+            det.observe_gauge(0, 3.0, 0.02);
+            det.observe_gauge(1, 3.0, 0.02);
+            det.commit_sample(0.0);
+        }
+        det.observe_reroute(0, 16.0);
+        for i in 0..10 {
+            det.observe_gauge(0, 300.0, 2.0);
+            det.observe_gauge(1, 300.0, 2.0);
+            det.commit_sample(16.0 + 2.0 * i as f64);
+        }
+        // Only the crash alert; the gauge breach is its collateral.
+        assert_eq!(det.raised(), 1);
+        assert_eq!(det.alerts()[0].kind, AlertKind::DeviceCrash);
+        // Clear the crash; surges stay blocked until a calm sample.
+        det.observe_exec(0, 50.0, 0.02, 0.02);
+        for i in 0..3 {
+            det.observe_gauge(0, 300.0, 2.0);
+            det.observe_gauge(1, 300.0, 2.0);
+            det.commit_sample(50.0 + 2.0 * i as f64);
+        }
+        assert_eq!(det.raised(), 1, "draining queues are aftermath, not a surge");
+    }
+}

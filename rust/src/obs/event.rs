@@ -166,6 +166,73 @@ pub enum Event {
         /// The lane that died with the request on it.
         from_lane: u32,
     },
+    /// The online anomaly detector ([`crate::obs::detect::Detector`])
+    /// crossed a decision threshold: a change-point in a lane's
+    /// prediction-residual or gauge streams, classified by the root-cause
+    /// attributor.
+    AlertRaised {
+        /// Lane the alert attributes the anomaly to (for
+        /// [`AlertKind::LoadSurge`]: the lowest breaching lane of a
+        /// fleet-wide surge).
+        lane: u32,
+        /// Root-cause classification.
+        kind: AlertKind,
+        /// Detector statistic at the crossing (CUSUM score in σ units;
+        /// crash evidence counts kills).
+        score: f64,
+    },
+    /// A previously raised alert's evidence returned in-control and the
+    /// detector retired it.
+    AlertCleared {
+        /// The alerted lane.
+        lane: u32,
+        /// The retired alert's classification.
+        kind: AlertKind,
+    },
+}
+
+/// Root-cause classification attached to [`Event::AlertRaised`] /
+/// [`Event::AlertCleared`] (see [`crate::obs::attribute`] for the
+/// decision rules).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AlertKind {
+    /// The lane's execution residuals shifted up (its T̂_exe plane is
+    /// now optimistic): a throttled / degraded device.
+    DeviceSlowdown,
+    /// A cloud lane's per-token transfer residuals shifted up while its
+    /// execution residuals stayed in control: the link degraded, not
+    /// the device.
+    LinkDegradation,
+    /// The lane destroyed queued/in-flight copies (failover reroutes):
+    /// a crash, not a slowdown.
+    DeviceCrash,
+    /// Queue-depth / expected-wait gauges breached on several lanes at
+    /// once with every residual chart in control: the offered load
+    /// surged, no device is to blame.
+    LoadSurge,
+}
+
+impl AlertKind {
+    /// The wire tag this kind serialises under.
+    pub fn tag(self) -> &'static str {
+        match self {
+            AlertKind::DeviceSlowdown => "device_slowdown",
+            AlertKind::LinkDegradation => "link_degradation",
+            AlertKind::DeviceCrash => "device_crash",
+            AlertKind::LoadSurge => "load_surge",
+        }
+    }
+
+    /// Parse a wire tag back (fail-closed on unknown kinds).
+    pub fn from_tag(tag: &str) -> Result<AlertKind> {
+        match tag {
+            "device_slowdown" => Ok(AlertKind::DeviceSlowdown),
+            "link_degradation" => Ok(AlertKind::LinkDegradation),
+            "device_crash" => Ok(AlertKind::DeviceCrash),
+            "load_surge" => Ok(AlertKind::LoadSurge),
+            other => Err(Error::Config(format!("unknown alert kind `{other}`"))),
+        }
+    }
 }
 
 /// An [`Event`] stamped with its simulation time and sequence number.
@@ -245,8 +312,32 @@ impl Event {
             Event::TimeoutFired { .. } => "timeout_fired",
             Event::RetryDispatched { .. } => "retry_dispatched",
             Event::FailoverReroute { .. } => "failover_reroute",
+            Event::AlertRaised { .. } => "alert_raised",
+            Event::AlertCleared { .. } => "alert_cleared",
         }
     }
+}
+
+/// Fail-closed field check for the alert events: exactly the expected
+/// keys, nothing extra, nothing missing. (The legacy taxonomy predates
+/// this check; new event families must not inherit its leniency.)
+fn check_keys(v: &Json, tag: &str, want: &[&str]) -> Result<()> {
+    let obj = v.as_object()?;
+    for key in obj.keys() {
+        if !want.contains(&key.as_str()) {
+            return Err(Error::Config(format!(
+                "event `{tag}`: unknown field `{key}`"
+            )));
+        }
+    }
+    for want in want {
+        if !obj.contains_key(*want) {
+            return Err(Error::Config(format!(
+                "event `{tag}`: missing field `{want}`"
+            )));
+        }
+    }
+    Ok(())
 }
 
 impl Stamped {
@@ -321,6 +412,13 @@ impl Stamped {
             Event::FailoverReroute { id, from_lane } => {
                 let _ = write!(out, ",\"id\":{id},\"from_lane\":{from_lane}");
             }
+            Event::AlertRaised { lane, kind, score } => {
+                let _ = write!(out, ",\"lane\":{lane},\"kind\":\"{}\",\"score\":", kind.tag());
+                write_f64(out, score);
+            }
+            Event::AlertCleared { lane, kind } => {
+                let _ = write!(out, ",\"lane\":{lane},\"kind\":\"{}\"", kind.tag());
+            }
         }
         out.push_str("}\n");
     }
@@ -392,6 +490,21 @@ impl Stamped {
                 id: read_u64(v, "id")?,
                 from_lane: read_u32(v, "from_lane")?,
             },
+            "alert_raised" => {
+                check_keys(v, "alert_raised", &["t", "seq", "ev", "lane", "kind", "score"])?;
+                Event::AlertRaised {
+                    lane: read_u32(v, "lane")?,
+                    kind: AlertKind::from_tag(v.get("kind")?.as_str()?)?,
+                    score: read_f64(v, "score")?,
+                }
+            }
+            "alert_cleared" => {
+                check_keys(v, "alert_cleared", &["t", "seq", "ev", "lane", "kind"])?;
+                Event::AlertCleared {
+                    lane: read_u32(v, "lane")?,
+                    kind: AlertKind::from_tag(v.get("kind")?.as_str()?)?,
+                }
+            }
             other => return Err(Error::Config(format!("unknown event tag `{other}`"))),
         };
         Ok(Stamped { t_s, seq, ev })
@@ -440,6 +553,57 @@ mod tests {
         roundtrip(Event::TimeoutFired { id: 11, lane: 3 });
         roundtrip(Event::RetryDispatched { id: 11, lane: 4, attempt: 2 });
         roundtrip(Event::FailoverReroute { id: 12, from_lane: 2 });
+        for kind in [
+            AlertKind::DeviceSlowdown,
+            AlertKind::LinkDegradation,
+            AlertKind::DeviceCrash,
+            AlertKind::LoadSurge,
+        ] {
+            roundtrip(Event::AlertRaised { lane: 3, kind, score: 13.25 });
+            roundtrip(Event::AlertCleared { lane: 3, kind });
+        }
+    }
+
+    #[test]
+    fn alert_events_fail_closed_on_malformed_lines() {
+        // Unknown fields, missing fields, and unknown kinds are all
+        // rejected — the new event family must not silently tolerate a
+        // writer drifting away from the parser.
+        let malformed = [
+            // unknown extra field
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_raised\",\"lane\":0,\
+             \"kind\":\"device_crash\",\"score\":1,\"bogus\":2}",
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_cleared\",\"lane\":0,\
+             \"kind\":\"device_crash\",\"score\":1}",
+            // missing field
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_raised\",\"lane\":0,\
+             \"kind\":\"device_crash\"}",
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_raised\",\"kind\":\
+             \"device_crash\",\"score\":1}",
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_cleared\",\"lane\":0}",
+            // unknown kind
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_raised\",\"lane\":0,\
+             \"kind\":\"gremlins\",\"score\":1}",
+            "{\"t\":1,\"seq\":0,\"ev\":\"alert_cleared\",\"lane\":0,\
+             \"kind\":\"\"}",
+        ];
+        for line in malformed {
+            let v = Json::parse(line).unwrap();
+            assert!(Stamped::from_json(&v).is_err(), "accepted: {line}");
+        }
+    }
+
+    #[test]
+    fn alert_kind_tags_roundtrip() {
+        for kind in [
+            AlertKind::DeviceSlowdown,
+            AlertKind::LinkDegradation,
+            AlertKind::DeviceCrash,
+            AlertKind::LoadSurge,
+        ] {
+            assert_eq!(AlertKind::from_tag(kind.tag()).unwrap(), kind);
+        }
+        assert!(AlertKind::from_tag("device crash").is_err());
     }
 
     #[test]

@@ -23,13 +23,28 @@
 //!   control-loop gauge series ([`Telemetry`]), both mirrored
 //!   float-exactly by `python/tools/telemetry_mirror.py` and checked in
 //!   as `reports/telemetry_drift.json`.
+//! * [`detect`] / [`attribute`] — the analysis half: online CUSUM/EWMA
+//!   change-point detectors over per-device prediction residuals and
+//!   gauge streams ([`Detector`]), emitting typed
+//!   [`Event::AlertRaised`]/[`Event::AlertCleared`] transitions into
+//!   the flight recorder, plus root-cause scoring and the per-request
+//!   blame decomposition across retry/failover chains
+//!   ([`BlameLedger`]), scored against injected ground truth by
+//!   `cnmt experiment detect`.
 
+pub mod attribute;
+pub mod detect;
 pub mod event;
 pub mod recorder;
 pub mod telemetry;
 pub mod verify;
 
-pub use event::{Event, Stamped};
+pub use attribute::{score_alerts, AlertScore, BlameChain, BlameLedger};
+pub use detect::{AlertRec, DetectCfg, Detector};
+pub use event::{AlertKind, Event, Stamped};
 pub use recorder::{FlightRecorder, TraceMeta};
 pub use telemetry::{DeviceSeries, Phases, Telemetry, TelemetryCfg};
-pub use verify::{parse_trace, summarize_trace, verify_events, verify_trace, VerifyReport};
+pub use verify::{
+    parse_trace, parse_trace_full, summarize_trace, verify_blame, verify_events,
+    verify_trace, verify_trace_allow_truncated, TraceTrailer, VerifyReport,
+};

@@ -217,14 +217,45 @@ impl FlightRecorder {
         }
     }
 
-    /// Render the retained window (meta header first) as JSONL text.
-    /// Note this is only the ring window — use a sink for full traces.
+    /// Render the health trailer — total events recorded, ring
+    /// evictions, and sink status — as one JSONL line. In a streamed
+    /// trace ring evictions do **not** mean lost lines (the sink saw
+    /// every event); in a ring-window render they do, and the verifier
+    /// refuses the window unless told otherwise.
+    fn write_trailer_line(&self, out: &mut String) {
+        use std::fmt::Write as _;
+        let _ = write!(
+            out,
+            "{{\"trailer\":{{\"events\":{},\"ring_dropped\":{},\"sink_ok\":{}}}}}\n",
+            self.seq,
+            self.dropped,
+            self.sink_ok()
+        );
+    }
+
+    /// Close out a streamed trace: write the health trailer line and
+    /// flush. Call once, after the last event — `cnmt trace summary`
+    /// surfaces the trailer and `cnmt trace verify` fails a trace whose
+    /// trailer admits a broken sink.
+    pub fn finish(&mut self) {
+        if self.sink.is_some() {
+            self.line.clear();
+            self.write_trailer_line(&mut self.line);
+            self.flush_line();
+        }
+        self.flush();
+    }
+
+    /// Render the retained window (meta header first, health trailer
+    /// last) as JSONL text. Note this is only the ring window — use a
+    /// sink for full traces.
     pub fn window_jsonl(&self) -> String {
         let mut out = String::new();
         self.meta.write_jsonl(&mut out);
         for st in self.events() {
             st.write_jsonl(&mut out);
         }
+        self.write_trailer_line(&mut out);
         out
     }
 }
@@ -286,6 +317,20 @@ mod tests {
         rec.record(7.0, ev(2));
         let ts: Vec<f64> = rec.events().map(|s| s.t_s).collect();
         assert_eq!(ts, vec![5.0, 5.0, 7.0]);
+    }
+
+    #[test]
+    fn window_render_ends_with_health_trailer() {
+        let mut rec = FlightRecorder::new(2);
+        for i in 0..5u64 {
+            rec.record(i as f64, ev(i));
+        }
+        let text = rec.window_jsonl();
+        let last = text.lines().last().unwrap();
+        assert_eq!(
+            last,
+            "{\"trailer\":{\"events\":5,\"ring_dropped\":3,\"sink_ok\":true}}"
+        );
     }
 
     #[test]

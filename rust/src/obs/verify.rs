@@ -45,7 +45,8 @@ use crate::scheduler::{
 use crate::util::Json;
 use crate::{Error, Result};
 
-use super::event::{Event, Stamped};
+use super::attribute::{fold_total, BlameChain};
+use super::event::{AlertKind, Event, Stamped};
 use super::recorder::TraceMeta;
 
 /// What the offline replay re-derived from a trace.
@@ -115,6 +116,20 @@ pub struct VerifyReport {
     pub device_down: u64,
     /// Device recovery events.
     pub device_up: u64,
+    /// Detector alerts raised.
+    pub alerts_raised: u64,
+    /// Detector alerts cleared (each must pair with an active raise on
+    /// the same lane and kind).
+    pub alerts_cleared: u64,
+    /// Leading events dropped from the window (0 for a complete trace;
+    /// non-zero only under [`verify_trace_allow_truncated`]).
+    pub dropped_prefix: u64,
+    /// Ring evictions reported by the health trailer (`None` on dumps
+    /// without one).
+    pub ring_dropped: Option<u64>,
+    /// Sink health reported by the trailer (`None` on dumps without
+    /// one).
+    pub sink_ok: Option<bool>,
 }
 
 impl VerifyReport {
@@ -156,7 +171,24 @@ impl VerifyReport {
             .set("retry_dispatches", Json::Num(self.retry_dispatches as f64))
             .set("failover_reroutes", Json::Num(self.failover_reroutes as f64))
             .set("device_down", Json::Num(self.device_down as f64))
-            .set("device_up", Json::Num(self.device_up as f64));
+            .set("device_up", Json::Num(self.device_up as f64))
+            .set("alerts_raised", Json::Num(self.alerts_raised as f64))
+            .set("alerts_cleared", Json::Num(self.alerts_cleared as f64))
+            .set("dropped_prefix", Json::Num(self.dropped_prefix as f64))
+            .set(
+                "ring_dropped",
+                match self.ring_dropped {
+                    Some(n) => Json::Num(n as f64),
+                    None => Json::Null,
+                },
+            )
+            .set(
+                "sink_ok",
+                match self.sink_ok {
+                    Some(b) => Json::Bool(b),
+                    None => Json::Null,
+                },
+            );
         o
     }
 }
@@ -180,12 +212,38 @@ struct IdState {
     kills: u32,
 }
 
+/// The recorder-health trailer line of a trace dump
+/// (`{"trailer":{...}}`): how many events were ever recorded, how many
+/// the bounded ring evicted, and whether every sink write succeeded.
+/// Ring evictions do **not** imply missing lines in a streamed dump —
+/// the sink saw every event — but in a ring-window render they do.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceTrailer {
+    /// Total events recorded over the run (`FlightRecorder::total`).
+    pub events: u64,
+    /// Events evicted from the bounded ring
+    /// (`FlightRecorder::dropped`).
+    pub ring_dropped: u64,
+    /// Whether every sink write succeeded
+    /// (`FlightRecorder::sink_ok`).
+    pub sink_ok: bool,
+}
+
 /// Parse a JSONL trace into its meta header and event list. Lines are
 /// independent JSON documents; the meta header may appear anywhere but
-/// conventionally leads.
+/// conventionally leads. Drops the health trailer — use
+/// [`parse_trace_full`] to keep it.
 pub fn parse_trace(text: &str) -> Result<(TraceMeta, Vec<Stamped>)> {
+    let (meta, events, _trailer) = parse_trace_full(text)?;
+    Ok((meta, events))
+}
+
+/// [`parse_trace`], also returning the health trailer when the dump has
+/// one (`None` on older dumps).
+pub fn parse_trace_full(text: &str) -> Result<(TraceMeta, Vec<Stamped>, Option<TraceTrailer>)> {
     let mut meta = TraceMeta::default();
     let mut seen_meta = false;
+    let mut trailer = None;
     let mut events = Vec::new();
     for (lineno, line) in text.lines().enumerate() {
         let line = line.trim();
@@ -195,7 +253,21 @@ pub fn parse_trace(text: &str) -> Result<(TraceMeta, Vec<Stamped>)> {
         let v = Json::parse(line).map_err(|e| {
             Error::Config(format!("trace line {}: {e}", lineno + 1))
         })?;
-        if let Some(m) = v.get_opt("meta") {
+        if let Ok(Some(tr)) = v.get_opt("trailer") {
+            if trailer.is_some() {
+                return Err(Error::Config(format!(
+                    "trace line {}: duplicate trailer",
+                    lineno + 1
+                )));
+            }
+            trailer = Some(TraceTrailer {
+                events: tr.get("events")?.as_i64()? as u64,
+                ring_dropped: tr.get("ring_dropped")?.as_i64()? as u64,
+                sink_ok: tr.get("sink_ok")?.as_bool()?,
+            });
+            continue;
+        }
+        if let Ok(Some(m)) = v.get_opt("meta") {
             if seen_meta {
                 return Err(Error::Config(format!(
                     "trace line {}: duplicate meta header",
@@ -238,34 +310,94 @@ fn fail(msg: String) -> Error {
 }
 
 /// Replay a dumped trace and re-prove the accounting invariants (see
-/// the module docs). Returns the re-derived counts on success.
+/// the module docs). Returns the re-derived counts on success. A
+/// truncated window or an unhealthy trailer is an error — see
+/// [`verify_trace_allow_truncated`] for the relaxed mode.
 pub fn verify_trace(text: &str) -> Result<VerifyReport> {
-    let (meta, events) = parse_trace(text)?;
-    verify_events(&meta, &events)
+    let (meta, events, trailer) = parse_trace_full(text)?;
+    verify_events_full(&meta, &events, trailer.as_ref(), false)
 }
 
-/// [`verify_trace`] over already-parsed events.
+/// [`verify_trace`], accepting a ring-window render whose prefix was
+/// evicted (and a trailer reporting lost tail lines). Conservation and
+/// replay proofs need the full history, so a truncated window only gets
+/// the local checks: interior seq contiguity, monotone time, and the
+/// simple tallies. `dropped_prefix` in the report says how much is
+/// missing.
+pub fn verify_trace_allow_truncated(text: &str) -> Result<VerifyReport> {
+    let (meta, events, trailer) = parse_trace_full(text)?;
+    verify_events_full(&meta, &events, trailer.as_ref(), true)
+}
+
+/// [`verify_trace`] over already-parsed events (strict mode, no
+/// trailer).
 pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyReport> {
+    verify_events_full(meta, events, None, false)
+}
+
+/// [`verify_trace`] over already-parsed events plus the optional health
+/// trailer. `allow_truncated` downgrades *incompleteness* (evicted
+/// prefix, lost tail, failed sink writes) from error to relaxed
+/// verification; *inconsistency* (a trailer claiming fewer events than
+/// the dump holds) is always an error.
+pub fn verify_events_full(
+    meta: &TraceMeta,
+    events: &[Stamped],
+    trailer: Option<&TraceTrailer>,
+    allow_truncated: bool,
+) -> Result<VerifyReport> {
     let mut report = VerifyReport {
         events: events.len() as u64,
         max_drift_factor: 1.0,
         ..VerifyReport::default()
     };
 
-    // A complete trace is a prerequisite for conservation proofs.
-    if let Some(first) = events.first() {
-        if first.seq != 0 {
-            return Err(fail(format!(
-                "trace is a truncated window ({} leading events dropped); \
-                 conservation needs a full streamed dump",
-                first.seq
-            )));
+    if let Some(tr) = trailer {
+        report.ring_dropped = Some(tr.ring_dropped);
+        report.sink_ok = Some(tr.sink_ok);
+        if !tr.sink_ok && !allow_truncated {
+            return Err(fail(
+                "trailer reports failed sink writes; the dump may be \
+                 missing events (pass --allow-truncated to verify what \
+                 survived)"
+                    .into(),
+            ));
+        }
+        if let Some(last) = events.last() {
+            let expect = last.seq + 1;
+            if tr.events < expect {
+                // More lines than the recorder claims to have produced:
+                // never legitimate, regardless of mode.
+                return Err(fail(format!(
+                    "trailer claims {} events but the dump reaches seq {}",
+                    tr.events, last.seq
+                )));
+            }
+            if tr.events > expect && !allow_truncated {
+                return Err(fail(format!(
+                    "trailer claims {} events but the dump ends at seq {} \
+                     ({} tail lines lost)",
+                    tr.events,
+                    last.seq,
+                    tr.events - expect
+                )));
+            }
         }
     }
+
+    // A complete trace is a prerequisite for conservation proofs.
+    let first_seq = events.first().map(|f| f.seq).unwrap_or(0);
+    if first_seq != 0 && !allow_truncated {
+        return Err(fail(format!(
+            "trace is a truncated window ({first_seq} leading events \
+             dropped); conservation needs a full streamed dump"
+        )));
+    }
     for (i, st) in events.iter().enumerate() {
-        if st.seq != i as u64 {
+        if st.seq != first_seq + i as u64 {
             return Err(fail(format!(
-                "sequence gap at index {i}: expected seq {i}, found {}",
+                "sequence gap at index {i}: expected seq {}, found {}",
+                first_seq + i as u64,
                 st.seq
             )));
         }
@@ -277,6 +409,37 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
                 events[i - 1].t_s
             )));
         }
+    }
+    if first_seq != 0 {
+        // Relaxed path: the prefix is gone, so per-id fates and
+        // conservation cannot be proven. Tally what each surviving line
+        // says on its own and stop there.
+        report.dropped_prefix = first_seq;
+        for st in events {
+            match st.ev {
+                Event::Placement { .. } => report.placements += 1,
+                Event::BatchFormed { size, .. } => {
+                    report.batches += 1;
+                    report.batched_requests += size as u64;
+                }
+                Event::RefitInstall { .. } => report.refits += 1,
+                Event::DriftTick { factor, .. } => {
+                    report.drift_ticks += 1;
+                    if factor > report.max_drift_factor {
+                        report.max_drift_factor = factor;
+                    }
+                }
+                Event::DeviceDown { .. } => report.device_down += 1,
+                Event::DeviceUp { .. } => report.device_up += 1,
+                Event::TimeoutFired { .. } => report.timeouts_fired += 1,
+                Event::RetryDispatched { .. } => report.retry_dispatches += 1,
+                Event::FailoverReroute { .. } => report.failover_reroutes += 1,
+                Event::AlertRaised { .. } => report.alerts_raised += 1,
+                Event::AlertCleared { .. } => report.alerts_cleared += 1,
+                _ => {}
+            }
+        }
+        return Ok(report);
     }
 
     // --- Pass 0: which ids went through the retry machinery? -------------
@@ -299,6 +462,8 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
     // --- Pass 1: per-id fates and global tallies. -----------------------
     let mut ids: HashMap<u64, IdState> = HashMap::new();
     let mut down_lanes: std::collections::HashSet<u32> =
+        std::collections::HashSet::new();
+    let mut active_alerts: std::collections::HashSet<(u32, AlertKind)> =
         std::collections::HashSet::new();
     let mut dispatch_batches = 0u64;
     let mut dispatched_requests = 0u64;
@@ -428,6 +593,28 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
             Event::FailoverReroute { id, .. } => {
                 report.failover_reroutes += 1;
                 ids.entry(id).or_default().kills += 1;
+            }
+            Event::AlertRaised { lane, kind, .. } => {
+                // Alerts are edge-triggered: a lane/kind pair may hold
+                // at most one active alert at a time.
+                if !active_alerts.insert((lane, kind)) {
+                    return Err(fail(format!(
+                        "{} alert raised twice on lane {lane} without an \
+                         intervening clear",
+                        kind.tag()
+                    )));
+                }
+                report.alerts_raised += 1;
+            }
+            Event::AlertCleared { lane, kind } => {
+                if !active_alerts.remove(&(lane, kind)) {
+                    return Err(fail(format!(
+                        "{} alert cleared on lane {lane} with no active \
+                         raise",
+                        kind.tag()
+                    )));
+                }
+                report.alerts_cleared += 1;
             }
             Event::MarginAdjust { .. } => {}
         }
@@ -708,7 +895,7 @@ pub fn verify_events(meta: &TraceMeta, events: &[Stamped]) -> Result<VerifyRepor
 /// `cnmt trace summary`). Unlike [`verify_trace`], this accepts
 /// truncated windows.
 pub fn summarize_trace(text: &str) -> Result<Json> {
-    let (meta, events) = parse_trace(text)?;
+    let (meta, events, trailer) = parse_trace_full(text)?;
     let mut counts: HashMap<&'static str, u64> = HashMap::new();
     for st in &events {
         *counts.entry(st.ev.tag()).or_insert(0) += 1;
@@ -745,8 +932,146 @@ pub fn summarize_trace(text: &str) -> Result<Json> {
         .set(
             "t_end_s",
             events.last().map_or(Json::Null, |s| Json::Num(s.t_s)),
+        )
+        .set(
+            "dropped_prefix",
+            events.first().map_or(Json::Null, |s| Json::Num(s.seq as f64)),
+        )
+        .set(
+            "ring_dropped",
+            trailer.map_or(Json::Null, |t| Json::Num(t.ring_dropped as f64)),
+        )
+        .set(
+            "sink_ok",
+            trailer.map_or(Json::Null, |t| Json::Bool(t.sink_ok)),
         );
     Ok(o)
+}
+
+fn blame_fail(id: u64, msg: String) -> Error {
+    Error::Config(format!("blame verify failed: chain {id}: {msg}"))
+}
+
+/// Re-prove the blame-partition invariant for a batch of finished
+/// chains: marks are monotone, every segment is non-negative, each
+/// segment recomputes **bit-identically** from the raw chain marks (same
+/// accumulation order as [`super::BlameLedger::complete`]), and
+/// `total_s` is exactly the canonical left-fold of the six segments.
+/// The partition is exact by construction; this catches any ledger or
+/// serialisation drift that would quietly break it.
+pub fn verify_blame(chains: &[BlameChain]) -> Result<()> {
+    for c in chains {
+        let id = c.id;
+        if c.attempts == 0 || c.enq_s.len() != c.attempts as usize {
+            return Err(blame_fail(
+                id,
+                format!(
+                    "{} attempts but {} admission marks",
+                    c.attempts,
+                    c.enq_s.len()
+                ),
+            ));
+        }
+        if c.kill_s.len() + 1 != c.enq_s.len() {
+            return Err(blame_fail(
+                id,
+                format!(
+                    "{} kill marks for {} admissions, want one fewer",
+                    c.kill_s.len(),
+                    c.enq_s.len()
+                ),
+            ));
+        }
+        if c.timeout_kills + c.crash_kills != c.kill_s.len() as u32 {
+            return Err(blame_fail(
+                id,
+                format!(
+                    "kill kinds ({} timeout + {} crash) don't cover {} kills",
+                    c.timeout_kills,
+                    c.crash_kills,
+                    c.kill_s.len()
+                ),
+            ));
+        }
+        // Mark order: enq_i ≤ kill_i ≤ enq_{i+1}, then
+        // enq_last ≤ start ≤ done, and a non-negative compute cost
+        // inside the dispatch window.
+        for (i, &kill) in c.kill_s.iter().enumerate() {
+            if !(c.enq_s[i] <= kill && kill <= c.enq_s[i + 1]) {
+                return Err(blame_fail(
+                    id,
+                    format!(
+                        "attempt {i} marks out of order: enq {} kill {kill} \
+                         next enq {}",
+                        c.enq_s[i],
+                        c.enq_s[i + 1]
+                    ),
+                ));
+            }
+        }
+        let last_enq = *c.enq_s.last().unwrap();
+        if !(last_enq <= c.start_s && c.start_s <= c.done_s) {
+            return Err(blame_fail(
+                id,
+                format!(
+                    "final attempt marks out of order: enq {last_enq} start \
+                     {} done {}",
+                    c.start_s, c.done_s
+                ),
+            ));
+        }
+        if !(c.exec_s >= 0.0 && c.exec_s <= c.done_s - c.start_s) {
+            return Err(blame_fail(
+                id,
+                format!(
+                    "exec {} outside the dispatch window {}..{}",
+                    c.exec_s, c.start_s, c.done_s
+                ),
+            ));
+        }
+        if !(c.tx_s >= 0.0) {
+            return Err(blame_fail(id, format!("negative tx {}", c.tx_s)));
+        }
+        // Recompute every segment from the raw marks in the ledger's
+        // exact accumulation order and demand bit-equality.
+        let mut queue_wasted_s = 0.0;
+        let mut retry_wait_s = 0.0;
+        for (i, &kill) in c.kill_s.iter().enumerate() {
+            queue_wasted_s += kill - c.enq_s[i];
+            retry_wait_s += c.enq_s[i + 1] - kill;
+        }
+        let queue_s = c.start_s - last_enq;
+        let batch_wait_s = (c.done_s - c.start_s) - c.exec_s;
+        let want = [
+            ("queue_wasted_s", queue_wasted_s, c.queue_wasted_s),
+            ("retry_wait_s", retry_wait_s, c.retry_wait_s),
+            ("queue_s", queue_s, c.queue_s),
+            ("batch_wait_s", batch_wait_s, c.batch_wait_s),
+        ];
+        for (name, want, got) in want {
+            if want.to_bits() != got.to_bits() {
+                return Err(blame_fail(
+                    id,
+                    format!("{name} {got} ≠ recomputed {want}"),
+                ));
+            }
+        }
+        let total = fold_total(
+            queue_wasted_s,
+            retry_wait_s,
+            queue_s,
+            batch_wait_s,
+            c.exec_s,
+            c.tx_s,
+        );
+        if total.to_bits() != c.total_s.to_bits() {
+            return Err(blame_fail(
+                id,
+                format!("total {} ≠ re-folded {total}", c.total_s),
+            ));
+        }
+    }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -1036,5 +1361,134 @@ mod tests {
         assert_eq!(by.get("admit").unwrap().as_i64().unwrap(), 3);
         assert_eq!(by.get("complete").unwrap().as_i64().unwrap(), 2);
         assert_eq!(j.get("tiers").unwrap().as_str().unwrap(), "edge,cloud");
+        // The health trailer surfaces in the summary without counting
+        // as an event.
+        assert_eq!(j.get("dropped_prefix").unwrap().as_i64().unwrap(), 0);
+        assert_eq!(j.get("ring_dropped").unwrap().as_i64().unwrap(), 0);
+        assert!(j.get("sink_ok").unwrap().as_bool().unwrap());
+    }
+
+    #[test]
+    fn trailer_health_lands_in_the_report() {
+        let r = verify_trace(&consistent_trace()).unwrap();
+        assert_eq!(r.ring_dropped, Some(0));
+        assert_eq!(r.sink_ok, Some(true));
+        assert_eq!(r.dropped_prefix, 0);
+    }
+
+    #[test]
+    fn truncated_window_verifies_in_relaxed_mode() {
+        let mut rec = FlightRecorder::new(2);
+        rec.set_meta(meta());
+        for i in 0..5u64 {
+            rec.record(i as f64, Event::Shed { id: i });
+        }
+        let text = rec.window_jsonl();
+        assert!(verify_trace(&text).is_err());
+        let r = verify_trace_allow_truncated(&text).unwrap();
+        assert_eq!(r.events, 2);
+        assert_eq!(r.dropped_prefix, 3);
+        assert_eq!(r.ring_dropped, Some(3));
+        // Relaxed mode still rejects interior gaps.
+        let gapped: String = text
+            .lines()
+            .filter(|l| !l.contains("\"seq\":3"))
+            .map(|l| format!("{l}\n"))
+            .collect();
+        assert!(verify_trace_allow_truncated(&gapped).is_err());
+    }
+
+    #[test]
+    fn unhealthy_trailer_fails_closed() {
+        // Failed sink writes: strict verify refuses, relaxed proceeds.
+        let text = consistent_trace().replace("\"sink_ok\":true", "\"sink_ok\":false");
+        let err = verify_trace(&text).unwrap_err();
+        assert!(format!("{err}").contains("sink"), "{err}");
+        let r = verify_trace_allow_truncated(&text).unwrap();
+        assert_eq!(r.sink_ok, Some(false));
+
+        // Trailer claims more events than the dump holds (lost tail):
+        // strict refuses, relaxed proceeds.
+        let text = consistent_trace().replace("\"events\":10", "\"events\":12");
+        let err = verify_trace(&text).unwrap_err();
+        assert!(format!("{err}").contains("tail"), "{err}");
+        verify_trace_allow_truncated(&text).unwrap();
+
+        // Trailer claims fewer events than the dump holds: inconsistent
+        // in any mode.
+        let text = consistent_trace().replace("\"events\":10", "\"events\":9");
+        assert!(verify_trace(&text).is_err());
+        assert!(verify_trace_allow_truncated(&text).is_err());
+    }
+
+    #[test]
+    fn alert_transitions_must_pair_per_lane_and_kind() {
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(
+            0.0,
+            Event::AlertRaised { lane: 0, kind: AlertKind::DeviceSlowdown, score: 30.0 },
+        );
+        // A different kind on the same lane may overlap.
+        rec.record(
+            0.1,
+            Event::AlertRaised { lane: 0, kind: AlertKind::DeviceCrash, score: 1.0 },
+        );
+        rec.record(0.2, Event::AlertCleared { lane: 0, kind: AlertKind::DeviceCrash });
+        rec.record(
+            0.3,
+            Event::AlertCleared { lane: 0, kind: AlertKind::DeviceSlowdown },
+        );
+        let r = verify_trace(&rec.window_jsonl()).unwrap();
+        assert_eq!(r.alerts_raised, 2);
+        assert_eq!(r.alerts_cleared, 2);
+
+        // Doubled raise without an intervening clear.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(
+            0.0,
+            Event::AlertRaised { lane: 1, kind: AlertKind::LoadSurge, score: 2.0 },
+        );
+        rec.record(
+            0.1,
+            Event::AlertRaised { lane: 1, kind: AlertKind::LoadSurge, score: 3.0 },
+        );
+        let err = verify_trace(&rec.window_jsonl()).unwrap_err();
+        assert!(format!("{err}").contains("raised twice"), "{err}");
+
+        // Clear with no active raise.
+        let mut rec = FlightRecorder::new(64);
+        rec.set_meta(meta());
+        rec.record(0.0, Event::AlertCleared { lane: 2, kind: AlertKind::LinkDegradation });
+        let err = verify_trace(&rec.window_jsonl()).unwrap_err();
+        assert!(format!("{err}").contains("no active raise"), "{err}");
+    }
+
+    #[test]
+    fn blame_chains_reverify_bit_exactly() {
+        use crate::obs::BlameLedger;
+        let mut led = BlameLedger::new();
+        led.attempt_start(1, 0.125);
+        led.complete(1, 0.375, 0.5, 0.0625, 0.03125);
+        led.attempt_start(2, 10.1);
+        led.attempt_killed(2, 10.7, true);
+        led.attempt_start(2, 10.9);
+        led.attempt_killed(2, 11.3, false);
+        led.attempt_start(2, 11.45);
+        led.complete(2, 11.6, 11.9, 0.2, 0.0);
+        let chains = led.into_chains();
+        verify_blame(&chains).unwrap();
+
+        // Any bit of drift in a stored segment or the fold is caught.
+        let mut bad = chains.clone();
+        bad[1].total_s += 1e-12;
+        assert!(verify_blame(&bad).is_err());
+        let mut bad = chains.clone();
+        bad[0].queue_wasted_s = 1e-9;
+        assert!(verify_blame(&bad).is_err());
+        let mut bad = chains;
+        bad[1].kill_s[0] = 12.0; // after the next admission
+        assert!(verify_blame(&bad).is_err());
     }
 }

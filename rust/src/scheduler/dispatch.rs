@@ -75,7 +75,7 @@ use std::cmp::Reverse;
 use std::collections::BinaryHeap;
 
 use crate::devices::DeviceKind;
-use crate::obs::{Event as ObsEvent, FlightRecorder};
+use crate::obs::{Detector, Event as ObsEvent, FlightRecorder};
 use crate::util::{Slab, SlabKey};
 
 use super::batch::{BatchPolicy, BatchStats};
@@ -578,6 +578,12 @@ pub struct Dispatcher {
     /// behaviour and report bytes are unchanged when no retry policy is
     /// configured.
     armed: Option<std::collections::HashMap<u64, (u64, usize)>>,
+    /// Optional online anomaly detector ([`Dispatcher::
+    /// attach_detector`]). Observation-only: it taps every completion's
+    /// execution residual and drains its alert events into the attached
+    /// recorder, but never influences routing. `None` (the default)
+    /// keeps the completion path branch-identical to an undetected run.
+    detector: Option<Detector>,
 }
 
 impl Clone for Dispatcher {
@@ -601,6 +607,9 @@ impl Clone for Dispatcher {
             timers: self.timers.clone(),
             timer_seq: self.timer_seq,
             armed: self.armed.clone(),
+            // Like the recorder: a clone observing into a copied alert
+            // log would double-count; the clone starts undetected.
+            detector: None,
         }
     }
 }
@@ -669,6 +678,7 @@ impl Dispatcher {
             timers: BinaryHeap::new(),
             timer_seq: 0,
             armed: None,
+            detector: None,
         }
     }
 
@@ -705,6 +715,41 @@ impl Dispatcher {
     /// record placement/control events into the same sequence stream.
     pub fn recorder_mut(&mut self) -> Option<&mut FlightRecorder> {
         self.recorder.as_mut()
+    }
+
+    /// Attach an online anomaly detector: from here on, every
+    /// completion feeds its lane's execution-residual chart, and any
+    /// alert transitions are drained into the attached recorder (if
+    /// any) at the observation instant. Observation-only — routing is
+    /// untouched. Replaces any previous detector.
+    pub fn attach_detector(&mut self, det: Detector) {
+        assert_eq!(
+            det.num_lanes(),
+            self.lanes.len(),
+            "detector must cover every dispatcher lane"
+        );
+        self.detector = Some(det);
+    }
+
+    /// Detach and return the anomaly detector, if one is attached.
+    pub fn take_detector(&mut self) -> Option<Detector> {
+        self.detector.take()
+    }
+
+    /// The attached detector, for harness-side taps (transfer
+    /// residuals, reroute/timeout evidence, gauge samples).
+    pub fn detector_mut(&mut self) -> Option<&mut Detector> {
+        self.detector.as_mut()
+    }
+
+    /// Drain any alert events the detector has pending into the flight
+    /// recorder at time `t_s`. Harness taps that feed the detector
+    /// directly call this afterwards so raises land in the decision log
+    /// next to the observation that triggered them.
+    pub fn drain_alerts(&mut self, t_s: f64) {
+        while let Some(ev) = self.detector.as_mut().and_then(|d| d.pop_event()) {
+            self.record(t_s, ev);
+        }
     }
 
     /// Record `ev` at sim time `t_s` if a recorder is attached; no-op
@@ -1210,6 +1255,15 @@ impl Dispatcher {
                 p.done_s,
                 ObsEvent::Complete { id: p.request.id, lane: p.lane as u32, kind },
             );
+        }
+        if let Some(det) = self.detector.as_mut() {
+            det.observe_exec(
+                p.lane as u32,
+                p.done_s,
+                p.done_s - p.start_s,
+                p.request.est_service_s,
+            );
+            self.drain_alerts(p.done_s);
         }
         on_complete(Completion {
             request: p.request,

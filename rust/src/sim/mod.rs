@@ -17,8 +17,8 @@ pub use fault::{FaultMode, FaultSpec};
 pub use harness::{
     run_all_policies, run_closed_loop, run_closed_loop_streamed, run_contended,
     run_contended_streamed, run_contended_streamed_traced, run_contended_traced, run_fleet,
-    run_fleet_closed, run_fleet_closed_streamed, run_fleet_outage, run_fleet_outage_traced,
-    run_fleet_streamed, run_policy, run_with_estimator, AdaptiveOpts, ContendedResult,
-    ContentionOpts, DriftSpec, FleetOpts, FleetResult, OutageResult, PolicyResult, RequestTruth,
-    RetryPolicy, TruthTable,
+    run_fleet_closed, run_fleet_closed_streamed, run_fleet_outage, run_fleet_outage_detect,
+    run_fleet_outage_traced, run_fleet_streamed, run_policy, run_with_estimator, AdaptiveOpts,
+    ContendedResult, ContentionOpts, DetectRunOut, DriftSpec, FleetOpts, FleetResult,
+    OutageResult, PolicyResult, RequestTruth, RetryPolicy, TruthTable,
 };

@@ -157,3 +157,64 @@ fn devices_honour_calibration_orderings() {
         assert!(avg(&mut c, 10, 40) > avg(&mut c, 10, 5));
     }
 }
+
+#[test]
+fn traced_detect_run_records_paired_alert_events() {
+    // A crash-fault detect run with a flight recorder attached must put
+    // the AlertRaised/AlertCleared events on the wire, and the offline
+    // verifier must replay the whole window — including the alert
+    // pairing invariant — and agree with the live detector's tallies.
+    use cnmt::experiments::load::synth_workload;
+    use cnmt::experiments::outage::outage_fault_spec;
+    use cnmt::fleet::Topology;
+    use cnmt::obs::{
+        verify_blame, verify_trace, AlertKind, DetectCfg, Detector, FlightRecorder,
+        TelemetryCfg,
+    };
+    use cnmt::scheduler::RetryPolicy;
+    use cnmt::sim::{run_fleet_outage_detect, FleetOpts};
+
+    let topo = Topology::hetero();
+    let tiers: Vec<_> = topo.devices.iter().map(|d| d.tier).collect();
+    let opts = FleetOpts {
+        telemetry: Some(TelemetryCfg::default()),
+        ..Default::default()
+    };
+    let retry = RetryPolicy::default();
+    let (pool, ch) = synth_workload(0xA1E27, 2_000, 224.0);
+    let fault = outage_fault_spec(&topo, 2_000, 224.0);
+    let det = Detector::new(&tiers, DetectCfg::default());
+    let rec = FlightRecorder::new(1 << 16);
+    let (out, rec) = run_fleet_outage_detect(
+        &pool,
+        &ch,
+        &topo,
+        &opts,
+        Some(&fault),
+        &retry,
+        det,
+        Some(rec),
+    )
+    .unwrap();
+    let rec = rec.unwrap();
+    assert_eq!(rec.dropped(), 0, "ring truncated — bump the capacity");
+
+    // The crash must be seen, attributed to the faulted lane, and the
+    // blame partition must hold on every chain (including the retried
+    // ones the crash produced).
+    assert!(out.raised >= 1, "crash went undetected");
+    assert!(out
+        .alerts
+        .iter()
+        .any(|a| a.raised && a.kind == AlertKind::DeviceCrash && a.lane == fault.lane as u32));
+    verify_blame(&out.blame).unwrap();
+    assert!(out.blame.iter().any(|c| c.attempts > 1));
+
+    // Offline replay of the window agrees with the live tallies.
+    let v = verify_trace(&rec.window_jsonl()).unwrap();
+    assert_eq!(v.alerts_raised, out.raised);
+    assert_eq!(v.alerts_cleared, out.cleared);
+    assert_eq!(v.dropped_prefix, 0);
+    assert_eq!(v.ring_dropped, Some(0));
+    assert_eq!(v.sink_ok, Some(true));
+}

@@ -1037,3 +1037,48 @@ fn prop_texe_estimates_nonnegative_and_monotone_in_m() {
         }
     }
 }
+
+#[test]
+fn prop_detector_quiescent_on_stationary_fault_free_workloads() {
+    // Detection-quality floor: on a fault-free stationary workload the
+    // online detector must raise NOTHING, across seeds and operating
+    // points (idle → the tuned contended load). A single false raise
+    // here is a mistuned chart, and the blame partition must re-verify
+    // bit-exactly on every completed chain while it stays quiet.
+    use cnmt::fleet::Topology;
+    use cnmt::obs::{verify_blame, DetectCfg, Detector, TelemetryCfg};
+    use cnmt::scheduler::RetryPolicy;
+    use cnmt::sim::{run_fleet_outage_detect, FleetOpts};
+    let topo = Topology::hetero();
+    let tiers: Vec<_> = topo.devices.iter().map(|d| d.tier).collect();
+    let opts = FleetOpts {
+        telemetry: Some(TelemetryCfg::default()),
+        ..Default::default()
+    };
+    let retry = RetryPolicy::default();
+    for trial in 0..9u64 {
+        for load in [96.0, 160.0, 224.0] {
+            let (pool, ch) = synth_workload(0xDE7EC7 + trial * 131, 2_000, load);
+            let det = Detector::new(&tiers, DetectCfg::default());
+            let (out, _rec) = run_fleet_outage_detect(
+                &pool, &ch, &topo, &opts, None, &retry, det, None,
+            )
+            .unwrap();
+            assert_eq!(
+                out.raised, 0,
+                "trial {trial} load {load}: false alert(s) {:?}",
+                out.alerts
+            );
+            assert!(out.alerts.is_empty());
+            assert_eq!(out.cleared, 0);
+            verify_blame(&out.blame).unwrap();
+            // Fault-free failover run: nothing strands, every chain is
+            // a clean single attempt.
+            assert_eq!(out.result.stranded, 0, "trial {trial} load {load}");
+            assert!(
+                out.blame.iter().all(|c| c.attempts == 1),
+                "trial {trial} load {load}: retries without a fault"
+            );
+        }
+    }
+}
