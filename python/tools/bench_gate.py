@@ -31,12 +31,18 @@ in the zero-churn dispatcher and the parallel sweep runner:
     decodes at ≥ --min-trace-events records/sec — replaying a
     million-request trace must stay I/O-trivial next to the
     simulation itself. A report without the `trace` section fails the
+    gate outright (the bench regressed out of measuring it);
+  * service classes cost almost nothing: the scenario replay with the
+    fair EDF front-end, class-aware hedge bar and batch-aware waits
+    runs at ≥ --min-scenario-ratio x the class-blind FIFO replay's
+    requests/sec. A report without the `scenario` section fails the
     gate outright (the bench regressed out of measuring it).
 
 Usage: python3 bench_gate.py BENCH_sched.json [--min-events-per-sec N]
        [--min-speedup X] [--min-fleet-ratio X] [--min-sweep-speedup X]
        [--min-recorder-ratio X] [--min-failover-ratio X]
        [--min-detect-ratio X] [--min-trace-events N]
+       [--min-scenario-ratio X]
 """
 
 import argparse
@@ -55,6 +61,7 @@ def main():
     ap.add_argument("--min-failover-ratio", type=float, default=0.9)
     ap.add_argument("--min-detect-ratio", type=float, default=0.9)
     ap.add_argument("--min-trace-events", type=float, default=200_000.0)
+    ap.add_argument("--min-scenario-ratio", type=float, default=0.9)
     args = ap.parse_args()
 
     with open(args.report) as f:
@@ -75,6 +82,7 @@ def main():
     failover = b.get("failover")
     detector = b.get("detector")
     trace = b.get("trace")
+    scenario = b.get("scenario")
     print(
         f"events/sec: solo {eps_solo:,.0f}, hedged {eps_hedged:,.0f} | "
         f"speedup vs frozen baseline: solo {sp_solo:.2f}x, hedged "
@@ -106,6 +114,13 @@ def main():
             f"trace codec: encode {trace['encode']['events_per_sec']:,.0f} ev/s, "
             f"decode {trace['decode']['events_per_sec']:,.0f} ev/s "
             f"({trace['bytes_per_record']:.2f} B/record)"
+        )
+    if scenario is not None:
+        print(
+            f"scenario replay: edf "
+            f"{scenario['edf']['requests_per_sec']:,.0f} req/s vs fifo "
+            f"{scenario['fifo']['requests_per_sec']:,.0f} req/s "
+            f"({scenario['ratio']:.2f}x)"
         )
 
     failures = []
@@ -165,6 +180,18 @@ def main():
             f"anomaly detector drags the hedged loop to {detector['ratio']:.2f}x, "
             f"below floor {args.min_detect_ratio:.2f}x (self-diagnosis is no "
             "longer near-free)"
+        )
+    if scenario is None:
+        failures.append(
+            "report has no `scenario` section (bench stopped measuring the "
+            "service-class overhead)"
+        )
+    elif scenario["ratio"] < args.min_scenario_ratio:
+        failures.append(
+            f"service classes drag the scenario replay to "
+            f"{scenario['ratio']:.2f}x the class-blind loop, below floor "
+            f"{args.min_scenario_ratio:.2f}x (EDF front-end is no longer "
+            "pay-for-use)"
         )
     # The wall-clock floor is a function of available parallelism: a
     # 1-core runner degenerates to the serial path (speedup ~1.0) with

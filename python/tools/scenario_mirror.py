@@ -1,0 +1,1128 @@
+#!/usr/bin/env python3
+"""Pure-python float-exact mirror of `cnmt experiment scenario`.
+
+Replays one declarative scenario spec (SLO service classes, diurnal +
+flash-crowd load shape, correlated drift, fault timeline) under the
+class-blind FIFO baseline and the EDF + class-aware-hedging treatment,
+and writes the same `scenario_sweep.json` the rust driver produces —
+byte-for-byte.
+
+Mirrored rust surfaces (same op order — exact floats):
+
+  * `experiments::load::synth_shaped_workload` — non-homogeneous
+    Poisson arrivals over `LoadShape::rate` (sinusoid + spikes), the
+    classic per-request draw sequence;
+  * `sim::scenario::run_scenario_engine` — class tagging (largest
+    deficit), the per-arrival event loop, hedge-bar scaling, per-class
+    accounting and conservation;
+  * `scheduler::queue::FairQueue` — smooth weighted round-robin with
+    per-tenant quotas and the EDF within-tenant extraction;
+  * `scheduler::dispatch` — the fair front-end pump (pass-through
+    depth 32), hedged submissions across arbitrary lane pairs, lazy
+    ghost purge, batching, completion resolution;
+  * `scheduler::capacity::BatchCost` — the opt-in batch-aware wait
+    discount (per-batch-size EWMA ratio, warmup 16, floor 0.125);
+  * `experiments::scenario` — the two-discipline sweep, the headline
+    ratios, and the report JSON layout.
+
+Keep this file in lockstep with the rust sources. When both toolchains
+are available, `cnmt experiment scenario --out reports` and this script
+must agree (bit-for-bit up to libm rounding).
+
+Usage:
+    python3 python/tools/scenario_mirror.py [--out reports/scenario_sweep.json]
+    python3 python/tools/scenario_mirror.py --spec examples/scenarios/slo_mix.json
+    python3 python/tools/scenario_mirror.py --requests 2500   # smoke
+"""
+
+import argparse
+import heapq
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from load_sweep_mirror import (  # noqa: E402
+    EXEC_NOISE_STD,
+    LOOKAHEAD,
+    M_NOISE_STD,
+    MAX_BATCH,
+    MAX_QUEUE_DEPTH,
+    MEAN_N,
+    N2M_DELTA,
+    N2M_GAMMA,
+    N_MAX,
+    RTT_S,
+    TTX_ALPHA,
+    TTX_PRIOR,
+    TTX_REFRESH_S,
+    BATCH_RESIDUAL,
+    BUCKET_WIDTH,
+    CLOUD_PLANE,
+    EDGE_PLANE,
+    HedgeBudget,
+    Histogram,
+    RequestTruth,
+    Rng,
+    TtxEstimator,
+    _round_half_away,
+    n2m_predict,
+    texe_estimate,
+    write_json,
+)
+from fleet_sweep_mirror import (  # noqa: E402
+    CLOUD,
+    EDGE,
+    Phases,
+    fleet_drift_factor_at,
+    topo_preset,
+)
+
+# Copy-state / completion-kind tags (scheduler::dispatch mirror).
+QUEUED, RUNNING, DONE, CANCELLED = 0, 1, 2, 3
+SOLO, WIN, LOSS = 0, 1, 2
+
+# scheduler::dispatch::FAIR_PASS_DEPTH.
+FAIR_PASS_DEPTH = 32
+
+# scheduler::capacity batch-aware model constants.
+BATCH_COST_BINS = 8
+BATCH_COST_ALPHA = 0.1
+BATCH_COST_MIN_OBS = 16
+BATCH_COST_MIN_DISCOUNT = 0.125
+
+
+# ---------------------------------------------------------------- spec
+
+def default_spec():
+    """Mirror of experiments::scenario::default_scenario_spec (kept in
+    lockstep with examples/scenarios/slo_mix.json)."""
+    return {
+        "name": "slo_mix",
+        "topology": "hetero",
+        "seed": 20220315,
+        "requests": 20000,
+        "load": {
+            "base_rps": 260.0,
+            "period_s": 30.0,
+            "amplitude": 0.4,
+            "spikes": [{"start_s": 25.0, "duration_s": 12.0, "factor": 2.8}],
+        },
+        "classes": [
+            {"name": "interactive", "deadline_s": 0.5, "share": 0.2,
+             "weight": 12.0, "quota": 512, "hedge_scale": 2.0},
+            {"name": "batch", "deadline_s": 2.0, "share": 0.25,
+             "weight": 3.0, "quota": 512, "hedge_scale": 1.0},
+            {"name": "background", "deadline_s": 30.0, "share": 0.55,
+             "weight": 1.0, "quota": 512, "hedge_scale": 0.0},
+        ],
+        "scheduling": "edf",
+        "hedge": {"margin_s": 0.012, "waste_budget": 0.08, "class_aware": True},
+        "drifts": [
+            {"device": "cloud", "lane": None, "start_s": 40.0,
+             "ramp_s": 15.0, "factor": 1.5},
+        ],
+        "faults": [
+            {"lane": 0, "mode": "slow", "factor": 2.5,
+             "start_s": 30.0, "recover_s": 45.0},
+        ],
+        "batch_aware_wait": True,
+    }
+
+
+def load_spec(path):
+    """Parse a spec file into the normalized dict shape (defaults filled
+    the way ScenarioSpec::from_json fills them)."""
+    with open(path) as f:
+        j = json.load(f)
+    load = j["load"]
+    spec = {
+        "name": j["name"],
+        "topology": j["topology"],
+        "seed": int(j["seed"]),
+        "requests": int(j["requests"]),
+        "load": {
+            "base_rps": float(load["base_rps"]),
+            "period_s": float(load.get("period_s", 60.0)),
+            "amplitude": float(load.get("amplitude", 0.0)),
+            "spikes": [
+                {"start_s": float(s["start_s"]),
+                 "duration_s": float(s["duration_s"]),
+                 "factor": float(s["factor"])}
+                for s in load.get("spikes", [])
+            ],
+        },
+        "classes": [
+            {"name": c["name"],
+             "deadline_s": float(c["deadline_s"]),
+             "share": float(c["share"]),
+             "weight": float(c.get("weight", 1.0)),
+             "quota": int(c["quota"]),
+             "hedge_scale": float(c.get("hedge_scale", 1.0))}
+            for c in j["classes"]
+        ],
+        "scheduling": j["scheduling"],
+        "hedge": None,
+        "drifts": [
+            {"device": d["device"],
+             "lane": int(d["lane"]) if d.get("lane") is not None else None,
+             "start_s": float(d["start_s"]),
+             "ramp_s": float(d["ramp_s"]),
+             "factor": float(d["factor"])}
+            for d in j.get("drifts", [])
+        ],
+        "faults": [
+            {"lane": int(f["lane"]), "mode": f["mode"],
+             "factor": float(f["factor"]),
+             "start_s": float(f["start_s"]),
+             "recover_s": float(f["recover_s"])}
+            for f in j.get("faults", [])
+        ],
+        "batch_aware_wait": bool(j.get("batch_aware_wait", False)),
+    }
+    if j.get("hedge") is not None:
+        h = j["hedge"]
+        spec["hedge"] = {
+            "margin_s": float(h["margin_s"]),
+            "waste_budget": float(h.get("waste_budget", 0.0)),
+            "class_aware": bool(h.get("class_aware", False)),
+        }
+    return spec
+
+
+def spec_to_json(spec):
+    """Mirror of ScenarioSpec::to_json (keys are sorted at write time,
+    so insertion order is irrelevant; `hedge` appears only when set,
+    a drift's `lane` only when pinned)."""
+    out = {
+        "name": spec["name"],
+        "topology": spec["topology"],
+        "seed": float(spec["seed"]),
+        "requests": float(spec["requests"]),
+        "load": {
+            "base_rps": spec["load"]["base_rps"],
+            "period_s": spec["load"]["period_s"],
+            "amplitude": spec["load"]["amplitude"],
+            "spikes": [
+                {"start_s": s["start_s"], "duration_s": s["duration_s"],
+                 "factor": s["factor"]}
+                for s in spec["load"]["spikes"]
+            ],
+        },
+        "classes": [
+            {"name": c["name"], "deadline_s": c["deadline_s"],
+             "share": c["share"], "weight": c["weight"],
+             "quota": float(c["quota"]), "hedge_scale": c["hedge_scale"]}
+            for c in spec["classes"]
+        ],
+        "scheduling": spec["scheduling"],
+        "drifts": [],
+        "faults": [],
+        "batch_aware_wait": spec["batch_aware_wait"],
+    }
+    if spec["hedge"] is not None:
+        out["hedge"] = {
+            "margin_s": spec["hedge"]["margin_s"],
+            "waste_budget": spec["hedge"]["waste_budget"],
+            "class_aware": spec["hedge"]["class_aware"],
+        }
+    for d in spec["drifts"]:
+        dj = {"device": d["device"], "start_s": d["start_s"],
+              "ramp_s": d["ramp_s"], "factor": d["factor"]}
+        if d["lane"] is not None:
+            dj["lane"] = float(d["lane"])
+        out["drifts"].append(dj)
+    for f in spec["faults"]:
+        fj = {"lane": float(f["lane"]), "mode": f["mode"],
+              "start_s": f["start_s"]}
+        fj["recover_s"] = f["recover_s"] if math.isfinite(f["recover_s"]) else float("nan")
+        fj["factor"] = f["factor"]
+        out["faults"].append(fj)
+    return out
+
+
+def baseline_variant(spec):
+    """Class-blind FIFO baseline: scheduling + class-aware scaling off,
+    everything else identical."""
+    s = dict(spec)
+    s["scheduling"] = "fifo"
+    if s["hedge"] is not None:
+        h = dict(s["hedge"])
+        h["class_aware"] = False
+        s["hedge"] = h
+    return s
+
+
+def treatment_variant(spec):
+    s = dict(spec)
+    s["scheduling"] = "edf"
+    return s
+
+
+def interactive_class(spec):
+    """Smallest SLO, lowest index on ties."""
+    best = 0
+    for k, c in enumerate(spec["classes"]):
+        if c["deadline_s"] < spec["classes"][best]["deadline_s"]:
+            best = k
+    return best
+
+
+# ---------------------------------------------------------------- workload
+
+def shape_rate(shape, t_s):
+    """Mirror of LoadShape::rate."""
+    r = shape["base_rps"]
+    if shape["amplitude"] > 0.0:
+        r *= 1.0 + shape["amplitude"] * math.sin(
+            2.0 * math.pi * t_s / shape["period_s"]
+        )
+    for s in shape["spikes"]:
+        if s["start_s"] <= t_s < s["start_s"] + s["duration_s"]:
+            r *= s["factor"]
+    return r
+
+
+def synth_shaped_workload(seed, count, shape):
+    """Mirror of experiments::load::synth_shaped_workload — identical
+    draw sequence to synth_workload, with the inter-arrival rate read
+    from the shape at the current clock."""
+    rng = Rng(seed)
+    requests = []
+    t = 0.0
+    for _ in range(count):
+        t += rng.exponential(shape_rate(shape, t))
+        n = 1 + min(int(rng.exponential(1.0 / MEAN_N)), N_MAX - 1)
+        m_mean = N2M_GAMMA * n + N2M_DELTA
+        m = _round_half_away(m_mean + rng.normal_ms(0.0, M_NOISE_STD))
+        m = int(min(max(m, 1.0), float(N_MAX)))
+        noise_e = max(1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD), 0.2)
+        noise_c = max(1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD), 0.2)
+        requests.append(
+            RequestTruth(
+                n,
+                m,
+                t,
+                texe_estimate(EDGE_PLANE, n, m) * noise_e,
+                texe_estimate(CLOUD_PLANE, n, m) * noise_c,
+                RTT_S,
+                RTT_S,
+            )
+        )
+    return requests
+
+
+# ---------------------------------------------------------------- ground truth
+
+def fault_exec_factor_at(f, lane, t_s):
+    """Mirror of FaultSpec::exec_factor_at (slow faults only in v1)."""
+    if f["mode"] == "slow" and lane == f["lane"] \
+            and f["start_s"] <= t_s < f["recover_s"]:
+        return f["factor"]
+    return 1.0
+
+
+def fault_link_factor_at(f, lane, t_s):
+    """Mirror of FaultSpec::link_factor_at."""
+    if f["mode"] == "link" and lane == f["lane"] \
+            and f["start_s"] <= t_s < f["recover_s"]:
+        return f["factor"]
+    return 1.0
+
+
+def drift_applies_to(d, tier, lane):
+    """Mirror of DriftSpec::applies_to."""
+    if d["lane"] is not None:
+        return d["lane"] == lane
+    return d["device"] == tier
+
+
+# ---------------------------------------------------------------- scheduler
+
+class BatchCost:
+    """Mirror of scheduler::capacity::BatchCost."""
+
+    def __init__(self):
+        self.ratio = [1.0] * BATCH_COST_BINS
+        self.obs = [0] * BATCH_COST_BINS
+        self.mean_size = 1.0
+        self.total_obs = 0
+
+    def observe(self, size, est_sum_s, service_s):
+        if size == 0 or not (est_sum_s > 0.0) or not math.isfinite(service_s) \
+                or service_s < 0.0:
+            return
+        r = min(max(service_s / est_sum_s, 0.0), 4.0)
+        b = min(size, BATCH_COST_BINS) - 1
+        if self.obs[b] == 0:
+            self.ratio[b] = r
+        else:
+            self.ratio[b] += BATCH_COST_ALPHA * (r - self.ratio[b])
+        self.obs[b] += 1
+        if self.total_obs == 0:
+            self.mean_size = float(size)
+        else:
+            self.mean_size += BATCH_COST_ALPHA * (size - self.mean_size)
+        self.total_obs += 1
+
+    def discount(self):
+        if self.total_obs < BATCH_COST_MIN_OBS:
+            return 1.0
+        b = int(min(max(_round_half_away(self.mean_size), 1.0),
+                    float(BATCH_COST_BINS))) - 1
+        if self.obs[b] == 0:
+            return 1.0
+        return min(max(self.ratio[b], BATCH_COST_MIN_DISCOUNT), 1.0)
+
+
+class FairTenant:
+    __slots__ = ("items", "deadlines", "weight", "quota", "credit")
+
+    def __init__(self, weight, quota):
+        self.items = []
+        self.deadlines = []
+        self.weight = weight
+        self.quota = quota
+        self.credit = 0.0
+
+
+class FairQueue:
+    """Mirror of scheduler::queue::FairQueue in EDF mode (the engine
+    only builds the front-end for the EDF discipline)."""
+
+    def __init__(self, tenants):
+        self.lanes = [FairTenant(w, q) for (w, q) in tenants]
+
+    def offer_deadline(self, tenant, rq, deadline_s):
+        lane = self.lanes[tenant]
+        if len(lane.items) >= lane.quota:
+            return False
+        lane.items.append(rq)
+        lane.deadlines.append(deadline_s)
+        return True
+
+    def pop(self):
+        total = 0.0
+        for lane in self.lanes:
+            if lane.items:
+                total += lane.weight
+        if total == 0.0:
+            return None
+        winner = None
+        best = -math.inf
+        for i, lane in enumerate(self.lanes):
+            if not lane.items:
+                continue
+            lane.credit += lane.weight
+            if lane.credit > best:
+                best = lane.credit
+                winner = i
+        lane = self.lanes[winner]
+        lane.credit -= total
+        # Earliest deadline wins; strict < keeps arrival order on ties.
+        best_i = 0
+        best_d = lane.deadlines[0]
+        for i in range(1, len(lane.items)):
+            d = lane.deadlines[i]
+            if d < best_d:
+                best_d = d
+                best_i = i
+        del lane.deadlines[best_i]
+        return lane.items.pop(best_i)
+
+
+class ScenLane:
+    """AdmissionQueue + CapacityTracker (+ optional FairQueue front-end
+    and BatchCost model) for one scenario device."""
+
+    def __init__(self, workers, batch_aware):
+        self.items = []
+        self.dead = 0
+        self.peak_depth = 0
+        self.free_at = [0.0] * workers
+        self.backlog_est_s = 0.0
+        self.cost = BatchCost() if batch_aware else None
+        self.fair = None
+        self.down = False
+
+    def queue_has_room(self):
+        return len(self.items) - self.dead < MAX_QUEUE_DEPTH
+
+    def has_room(self):
+        return not self.down and self.queue_has_room()
+
+    def queue_offer(self, rq):
+        """AdmissionQueue::offer — no capacity accounting (the fair pump
+        uses this directly; pumping is accounting-neutral)."""
+        if not self.queue_has_room():
+            return False
+        self.items.append(rq)
+        self.peak_depth = max(self.peak_depth, len(self.items) - self.dead)
+        return True
+
+    def offer(self, rq):
+        """Lane::offer — admit + account in one step."""
+        if self.down:
+            return False
+        if not self.queue_offer(rq):
+            return False
+        self.backlog_est_s += max(rq[4], 0.0)
+        return True
+
+    def on_admit(self, est):
+        self.backlog_est_s += max(est, 0.0)
+
+    def on_cancel(self, est):
+        self.backlog_est_s = max(self.backlog_est_s - max(est, 0.0), 0.0)
+
+    def pump_fair(self):
+        """Drain the fair front-end into the dispatch queue up to the
+        pass-through depth (capacity was accounted at front-end
+        admission)."""
+        if self.fair is None:
+            return
+        while len(self.items) - self.dead < FAIR_PASS_DEPTH \
+                and self.queue_has_room():
+            rq = self.fair.pop()
+            if rq is None:
+                return
+            self.queue_offer(rq)
+
+    def earliest_free(self):
+        best_i, best_t = 0, self.free_at[0]
+        for i in range(1, len(self.free_at)):
+            if self.free_at[i] < best_t:
+                best_i, best_t = i, self.free_at[i]
+        return best_i, best_t
+
+    def expected_wait_s(self, now_s):
+        inflight = 0.0
+        for t in self.free_at:
+            if t > now_s:
+                inflight += t - now_s
+        if self.cost is not None:
+            return (inflight + self.backlog_est_s * self.cost.discount()) \
+                / len(self.free_at)
+        return (inflight + self.backlog_est_s) / len(self.free_at)
+
+
+def bucket_of(m_est):
+    """Mirror of BatchPolicy::bucket_of."""
+    return int(max(m_est, 0.0) / BUCKET_WIDTH)
+
+
+class ScenDispatcher:
+    """Mirror of the N-lane scheduler::Dispatcher with the fair EDF
+    front-end and the batch-aware capacity model. QueuedRequest tuples:
+    (id, payload, n, m_est, est_service_s, arrival_s, bucket, hedge)."""
+
+    def __init__(self, tiers, workers, batch_aware):
+        self.tiers = tiers
+        self.lanes = [ScenLane(w, batch_aware) for w in workers]
+        self.batches = 0
+        self.batch_requests = 0
+        self.pending = []
+        self.seq = 0
+        self.arena = []
+        self.arena_free = []
+        self.hs_hedged = 0
+        self.hs_wins_edge = 0
+        self.hs_wins_cloud = 0
+        self.hs_cancelled = 0
+        self.hs_losers = 0
+
+    def enable_fair_tenants(self, tenants):
+        for lane in self.lanes:
+            lane.fair = FairQueue(tenants)
+
+    def arena_alloc(self, entry):
+        if self.arena_free:
+            idx = self.arena_free.pop()
+            self.arena[idx] = entry
+            return idx
+        self.arena.append(entry)
+        return len(self.arena) - 1
+
+    def arena_release(self, idx):
+        self.arena[idx] = None
+        self.arena_free.append(idx)
+
+    def submit_lane(self, lane, rq):
+        rq = rq[:6] + (bucket_of(rq[3]), None)
+        return self.lanes[lane].offer(rq)
+
+    def submit_lane_tenant_deadline(self, lane, tenant, rq, deadline_s):
+        rq = rq[:6] + (bucket_of(rq[3]), None)
+        l = self.lanes[lane]
+        if l.fair is None:
+            return l.offer(rq)
+        admitted = l.fair.offer_deadline(tenant, rq, deadline_s)
+        if admitted:
+            # The capacity view must include front-end backlog: account
+            # here, not at pass-through.
+            l.on_admit(rq[4])
+            l.pump_fair()
+        return admitted
+
+    def submit_hedged_lanes(self, rq, lane_a, est_a, lane_b, est_b):
+        rq = rq[:6] + (bucket_of(rq[3]), None)
+        if self.lanes[lane_a].has_room() and self.lanes[lane_b].has_room():
+            idx = self.arena_alloc(
+                [lane_a, lane_b, est_a, est_b, QUEUED, QUEUED, None]
+            )
+            a_rq = rq[:4] + (est_a,) + rq[5:7] + (idx,)
+            b_rq = rq[:4] + (est_b,) + rq[5:7] + (idx,)
+            self.lanes[lane_a].offer(a_rq)
+            self.lanes[lane_b].offer(b_rq)
+            self.hs_hedged += 1
+            return "hedged"
+        a_rq = rq[:4] + (est_a,) + rq[5:]
+        b_rq = rq[:4] + (est_b,) + rq[5:]
+        a_ok = self.lanes[lane_a].offer(a_rq)
+        b_ok = self.lanes[lane_b].offer(b_rq)
+        if a_ok:
+            return ("single", lane_a)
+        if b_ok:
+            return ("single", lane_b)
+        return "rejected"
+
+    def _ghost_side(self, entry, lane):
+        return 4 if entry[0] == lane else 5
+
+    def lane_next_start(self, li):
+        lane = self.lanes[li]
+        if lane.down:
+            return None
+        lane.pump_fair()
+        arena = self.arena
+        while True:
+            if not lane.items:
+                return None
+            head = lane.items[0]
+            hid = head[7]
+            if hid is not None and \
+                    arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                lane.items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+                continue
+            _w, free_s = lane.earliest_free()
+            return max(free_s, head[5])
+
+    def next_batch_start(self):
+        best = None
+        for li in range(len(self.lanes)):
+            s = self.lane_next_start(li)
+            if s is None:
+                continue
+            # Strict < keeps the lowest lane index on ties.
+            if best is None or s < best[1]:
+                best = (li, s)
+        return best
+
+    def expected_wait_lane(self, lane, now_s):
+        return self.lanes[lane].expected_wait_s(now_s)
+
+    def form_batch(self, lane, li, start_s):
+        items = lane.items
+        arena = self.arena
+        while True:
+            if not items:
+                return []
+            head = items[0]
+            hid = head[7]
+            if hid is not None and \
+                    arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                items.pop(0)
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+            else:
+                break
+        head = items.pop(0)
+        bucket = head[6]
+        batch = [head]
+        i = 0
+        scanned = 0
+        while len(batch) < MAX_BATCH and scanned < LOOKAHEAD:
+            if i >= len(items):
+                break
+            rq = items[i]
+            hid = rq[7]
+            if hid is not None and \
+                    arena[hid][self._ghost_side(arena[hid], li)] == CANCELLED:
+                del items[i]
+                lane.dead = max(lane.dead - 1, 0)
+                self.arena_release(hid)
+                continue
+            if rq[6] == bucket and rq[5] <= start_s:
+                batch.append(rq)
+                del items[i]
+            else:
+                i += 1
+            scanned += 1
+        return batch
+
+    def dispatch_at(self, li, start_s, exec_fn):
+        lane = self.lanes[li]
+        batch = self.form_batch(lane, li, start_s)
+        if not batch:
+            return
+        for rq in batch:
+            if rq[7] is not None:
+                entry = self.arena[rq[7]]
+                entry[self._ghost_side(entry, li)] = RUNNING
+        est_sum = 0.0
+        for rq in batch:
+            est_sum += rq[4]
+        service_s = max(exec_fn(li, batch, start_s), 0.0)
+        done_s = start_s + service_s
+        worker, _free = lane.earliest_free()
+        lane.backlog_est_s = max(lane.backlog_est_s - est_sum, 0.0)
+        lane.free_at[worker] = done_s
+        if lane.cost is not None:
+            lane.cost.observe(len(batch), est_sum, service_s)
+        self.batches += 1
+        self.batch_requests += len(batch)
+        bsize = len(batch)
+        for rq in batch:
+            heapq.heappush(self.pending, (done_s, self.seq, start_s, bsize, li, rq))
+            self.seq += 1
+
+    def resolve_completion(self, li, hid):
+        if hid is None:
+            return SOLO
+        entry = self.arena[hid]
+        side = 0 if entry[0] == li else 1
+        entry[4 + side] = DONE
+        if entry[6] is not None:
+            self.arena_release(hid)
+            self.hs_losers += 1
+            return LOSS
+        entry[6] = side
+        if self.tiers[li] == EDGE:
+            self.hs_wins_edge += 1
+        else:
+            self.hs_wins_cloud += 1
+        twin = 1 - side
+        if entry[4 + twin] == QUEUED:
+            entry[4 + twin] = CANCELLED
+            self.hs_cancelled += 1
+            twin_lane = entry[twin]
+            self.lanes[twin_lane].on_cancel(entry[2 + twin])
+            self.lanes[twin_lane].dead += 1
+        return WIN
+
+    def flush_one(self, out):
+        done_s, _seq, start_s, bsize, li, rq = heapq.heappop(self.pending)
+        kind = self.resolve_completion(li, rq[7])
+        out.append((rq, li, start_s, done_s, bsize, kind))
+
+    def step(self, horizon_s, exec_fn, out):
+        ns = self.next_batch_start()
+        nd = self.pending[0][0] if self.pending else None
+        if ns is None and nd is None:
+            return False
+        completion_first = ns is None or (nd is not None and nd <= ns[1])
+        if completion_first:
+            if nd > horizon_s:
+                return False
+            self.flush_one(out)
+        else:
+            li, start_s = ns
+            if start_s > horizon_s:
+                return False
+            self.dispatch_at(li, start_s, exec_fn)
+        return True
+
+    def run_until(self, horizon_s, exec_fn, out):
+        while self.step(horizon_s, exec_fn, out):
+            pass
+
+
+# ---------------------------------------------------------------- engine
+
+class ClassAssigner:
+    """Mirror of sim::scenario::ClassAssigner (largest deficit)."""
+
+    def __init__(self, shares):
+        self.shares = shares
+        self.assigned = [0] * len(shares)
+        self.seen = 0
+
+    def next(self):
+        target = float(self.seen + 1)
+        best = 0
+        best_deficit = self.shares[0] * target - self.assigned[0]
+        for k in range(1, len(self.shares)):
+            deficit = self.shares[k] * target - self.assigned[k]
+            if deficit > best_deficit:
+                best = k
+                best_deficit = deficit
+        self.assigned[best] += 1
+        self.seen += 1
+        return best
+
+
+class OnlineStats:
+    """Mirror of metrics::OnlineStats (Welford)."""
+
+    def __init__(self):
+        self.n = 0
+        self.mean = 0.0
+        self.sum = 0.0
+        self.m2 = 0.0
+
+    def push(self, x):
+        self.n += 1
+        self.sum += x
+        d = x - self.mean
+        self.mean += d / self.n
+        self.m2 += d * (x - self.mean)
+
+    def mean_value(self):
+        return self.mean if self.n else float("nan")
+
+
+class ScenSelector:
+    """FleetSelector with no health/refit surface — the scenario engine
+    runs Select with the shared T_tx estimator only."""
+
+    def __init__(self, topo):
+        devs = topo["devices"]
+        self.tiers = [d["tier"] for d in devs]
+        self.link_scale = [d["link_scale"] for d in devs]
+        self.texe = []
+        for d in devs:
+            base = EDGE_PLANE if d["tier"] == EDGE else CLOUD_PLANE
+            slow = 1.0 / d["speed"]
+            self.texe.append((base[0] * slow, base[1] * slow, base[2] * slow))
+        self.edge_ids = [i for i, t in enumerate(self.tiers) if t == EDGE]
+        self.cloud_ids = [i for i, t in enumerate(self.tiers) if t == CLOUD]
+        self.ttx = TtxEstimator(TTX_ALPHA)
+
+    def best_of(self, ids, n, m_est, ttx_est, waits):
+        best_d, best_score, best_est = -1, math.inf, math.inf
+        for d in ids:
+            est = texe_estimate(self.texe[d], n, m_est)
+            if self.tiers[d] == EDGE:
+                score = est + waits[d]
+            else:
+                score = ttx_est * self.link_scale[d] + est + waits[d]
+            if score < best_score:
+                best_d, best_score, best_est = d, score, est
+        return best_d, best_score, best_est
+
+    def select(self, n, waits):
+        m_est = n2m_predict(N2M_GAMMA, N2M_DELTA, n)
+        ttx_est = self.ttx.estimate_or(TTX_PRIOR)
+        be = self.best_of(self.edge_ids, n, m_est, ttx_est, waits)
+        bc = self.best_of(self.cloud_ids, n, m_est, ttx_est, waits)
+        best = be if be[1] <= bc[1] else bc
+        return {
+            "device": best[0],
+            "m_est": m_est,
+            "est": best[2],
+            "best_edge": be,
+            "best_cloud": bc,
+        }
+
+
+def run_scenario_engine(requests, topo, spec):
+    """Mirror of sim::scenario::run_scenario_engine (recorder off)."""
+    devs = topo["devices"]
+    n_dev = len(devs)
+    tiers = [d["tier"] for d in devs]
+    slowdown = [1.0 / d["speed"] for d in devs]
+    link_scale = [d["link_scale"] for d in devs]
+    drifts = spec["drifts"]
+    faults = spec["faults"]
+    classes = spec["classes"]
+    k_classes = len(classes)
+
+    sel = ScenSelector(topo)
+    disp = ScenDispatcher(
+        tiers, [d["workers"] for d in devs], spec["batch_aware_wait"]
+    )
+    if spec["scheduling"] == "edf":
+        disp.enable_fair_tenants([(c["weight"], c["quota"]) for c in classes])
+    hedge = spec["hedge"]
+    ctl = None
+    if hedge is not None and hedge["waste_budget"] > 0.0:
+        ctl = HedgeBudget(hedge["waste_budget"], hedge["margin_s"])
+
+    def true_service_s(truth, lane, start_s):
+        base = truth.t_edge if tiers[lane] == EDGE else truth.t_cloud
+        t = base * slowdown[lane]
+        for d in drifts:
+            if drift_applies_to(d, tiers[lane], lane):
+                t *= fleet_drift_factor_at(d, start_s)
+        for f in faults:
+            t *= fault_exec_factor_at(f, lane, start_s)
+        return t
+
+    def exec_fn(li, batch, start_s):
+        mx = 0.0
+        sm = 0.0
+        for rq in batch:
+            t = true_service_s(requests[rq[1]], li, start_s)
+            if t > mx:
+                mx = t
+            sm += t
+        return mx + (sm - mx) * BATCH_RESIDUAL
+
+    # Accounting (mirror of ScenarioAcct).
+    hist = Histogram()
+    stats = OnlineStats()
+    edge_count = cloud_count = completed = 0
+    last_done_s = 0.0
+    useful_work_s = wasted_work_s = 0.0
+    device_results = [0] * n_dev
+    class_hist = [Histogram() for _ in range(k_classes)]
+    class_stats = [OnlineStats() for _ in range(k_classes)]
+    class_completed = [0] * k_classes
+    class_within = [0] * k_classes
+    class_phases = [Phases() for _ in range(k_classes)]
+
+    assigner = ClassAssigner([c["share"] for c in classes])
+    class_of = [0] * len(requests)
+    class_offered = [0] * k_classes
+    class_shed = [0] * k_classes
+    class_hedged = [0] * k_classes
+    waits = [0.0] * n_dev
+    rejected = 0
+    comps = []
+
+    def process(batch):
+        nonlocal edge_count, cloud_count, completed, last_done_s
+        nonlocal useful_work_s, wasted_work_s
+        for (rq, li, start_s, done_s, _bsize, kind) in batch:
+            truth = requests[rq[1]]
+            t_true = true_service_s(truth, li, start_s)
+            if tiers[li] == EDGE:
+                tx_s = 0.0
+            else:
+                tx_s = truth.t_tx * link_scale[li]
+                # A response transfers at completion time: it pays the
+                # link state the fault timeline says is live *then*.
+                for f in faults:
+                    tx_s *= fault_link_factor_at(f, li, done_s)
+            if kind == LOSS:
+                wasted_work_s += t_true
+                if ctl is not None:
+                    ctl.observe(t_true, True)
+                continue
+            useful_work_s += t_true
+            if ctl is not None:
+                ctl.observe(t_true, False)
+            k = class_of[rq[1]]
+            class_phases[k].record(
+                start_s - rq[5],
+                (done_s - start_s) - t_true,
+                t_true,
+                tx_s,
+            )
+            latency = (done_s - rq[5]) + tx_s
+            hist.record(latency)
+            stats.push(latency)
+            class_hist[k].record(latency)
+            class_stats[k].push(latency)
+            class_completed[k] += 1
+            if latency <= classes[k]["deadline_s"]:
+                class_within[k] += 1
+            if tiers[li] == EDGE:
+                edge_count += 1
+            else:
+                cloud_count += 1
+            completed += 1
+            device_results[li] += 1
+            last_done_s = max(last_done_s, done_s + tx_s)
+
+    for i, rq in enumerate(requests):
+        now = rq.arrival_s
+        comps.clear()
+        disp.run_until(now, exec_fn, comps)
+        process(comps)
+        klass = assigner.next()
+        class_of[i] = klass
+        class_offered[klass] += 1
+        # Gateway heartbeat keeps the shared T_tx fresh.
+        if sel.ttx.is_stale(now, TTX_REFRESH_S):
+            sel.ttx.observe(now, rq.rtt)
+        for d in range(n_dev):
+            waits[d] = disp.expected_wait_lane(d, now)
+        trace = sel.select(rq.n, waits)
+        queued = (i, i, rq.n, trace["m_est"], 0.0, now, 0, None)
+        do_hedge = False
+        if hedge is not None:
+            bar = ctl.margin_s if ctl is not None else hedge["margin_s"]
+            if hedge["class_aware"]:
+                bar = bar * classes[klass]["hedge_scale"]
+            margin = trace["best_edge"][1] - trace["best_cloud"][1]
+            do_hedge = bar > 0.0 and math.isfinite(margin) and abs(margin) <= bar
+        if do_hedge:
+            outcome = disp.submit_hedged_lanes(
+                queued,
+                trace["best_edge"][0],
+                trace["best_edge"][2],
+                trace["best_cloud"][0],
+                trace["best_cloud"][2],
+            )
+            if outcome == "hedged":
+                cloud_in_flight = True
+            elif outcome == "rejected":
+                cloud_in_flight = False
+            else:
+                cloud_in_flight = tiers[outcome[1]] == CLOUD
+            if cloud_in_flight:
+                sel.ttx.observe(now, rq.rtt)
+            if outcome == "hedged":
+                class_hedged[klass] += 1
+                copies = 2
+            elif outcome == "rejected":
+                copies = 0
+            else:
+                copies = 1
+        else:
+            queued = queued[:4] + (trace["est"],) + queued[5:]
+            if tiers[trace["device"]] == CLOUD:
+                sel.ttx.observe(now, rq.rtt)
+            if spec["scheduling"] == "edf":
+                admitted = disp.submit_lane_tenant_deadline(
+                    trace["device"], klass, queued,
+                    now + classes[klass]["deadline_s"],
+                )
+            else:
+                admitted = disp.submit_lane(trace["device"], queued)
+            copies = 1 if admitted else 0
+        if copies == 0:
+            rejected += 1
+            class_shed[klass] += 1
+
+    # Drain: open-loop arrivals have ended; finish the backlog.
+    comps.clear()
+    disp.run_until(math.inf, exec_fn, comps)
+    process(comps)
+    for k in range(k_classes):
+        assert class_offered[k] == class_shed[k] + class_completed[k], \
+            f"class `{classes[k]['name']}` leaked requests"
+
+    first_arrival_s = requests[0].arrival_s if requests else 0.0
+    makespan_s = max(last_done_s - first_arrival_s, 0.0)
+    class_rows = []
+    for k, c in enumerate(classes):
+        attainment = class_within[k] / class_offered[k] \
+            if class_offered[k] else 0.0
+        class_rows.append({
+            "name": c["name"],
+            "deadline_s": c["deadline_s"],
+            "offered": float(class_offered[k]),
+            "shed": float(class_shed[k]),
+            "completed": float(class_completed[k]),
+            "within_deadline": float(class_within[k]),
+            "attainment": attainment,
+            "hedged": float(class_hedged[k]),
+            "mean_latency_s": class_stats[k].mean_value(),
+            "p50_s": class_hist[k].quantile(0.50),
+            "p95_s": class_hist[k].quantile(0.95),
+            "p99_s": class_hist[k].quantile(0.99),
+            "phases": class_phases[k].to_json(),
+        })
+    result = {
+        "scenario": spec["name"],
+        "scheduling": spec["scheduling"],
+        "offered": float(len(requests)),
+        "completed": float(completed),
+        "rejected": float(rejected),
+        "edge_count": float(edge_count),
+        "cloud_count": float(cloud_count),
+        "makespan_s": makespan_s,
+        "throughput_rps": completed / makespan_s if makespan_s > 0.0 else 0.0,
+        "mean_latency_s": stats.mean_value(),
+        "p50_s": hist.quantile(0.50),
+        "p95_s": hist.quantile(0.95),
+        "p99_s": hist.quantile(0.99),
+        "mean_batch": disp.batch_requests / disp.batches
+        if disp.batches else float("nan"),
+        "hedged": float(disp.hs_hedged),
+        "hedge_wins_edge": float(disp.hs_wins_edge),
+        "hedge_wins_cloud": float(disp.hs_wins_cloud),
+        "hedge_cancelled": float(disp.hs_cancelled),
+        "hedge_wasted": float(disp.hs_losers),
+        "useful_work_s": useful_work_s,
+        "wasted_work_s": wasted_work_s,
+        "device_results": [float(c) for c in device_results],
+        "peak_depths": [float(l.peak_depth) for l in disp.lanes],
+        "classes": class_rows,
+    }
+    if ctl is not None and math.isfinite(ctl.margin_s):
+        result["hedge_final_margin_s"] = ctl.margin_s
+    return result
+
+
+# ---------------------------------------------------------------- driver
+
+def run_sweep(spec):
+    """Mirror of experiments::scenario::run — one workload, two
+    discipline cells."""
+    topo = topo_preset(spec["topology"])
+    requests = synth_shaped_workload(spec["seed"], spec["requests"], spec["load"])
+    results = [
+        run_scenario_engine(requests, topo, baseline_variant(spec)),
+        run_scenario_engine(requests, topo, treatment_variant(spec)),
+    ]
+    return results
+
+
+def sweep_to_json(spec, results):
+    """Mirror of experiments::scenario::to_json."""
+    k = interactive_class(spec)
+    by_tag = {r["scheduling"]: r for r in results}
+    fifo = by_tag["fifo"]["classes"][k]
+    edf = by_tag["edf"]["classes"][k]
+    fifo_missed = fifo["offered"] - fifo["within_deadline"]
+    edf_missed = edf["offered"] - edf["within_deadline"]
+    return {
+        "spec": spec_to_json(spec),
+        "interactive_class": spec["classes"][k]["name"],
+        "disciplines": {r["scheduling"]: r for r in results},
+        "headline_interactive_attainment": edf["attainment"],
+        "headline_fifo_attainment": fifo["attainment"],
+        "headline_miss_ratio": fifo_missed / max(edf_missed, 1.0),
+        "headline_goodput_ratio":
+            by_tag["edf"]["throughput_rps"] / by_tag["fifo"]["throughput_rps"],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--out", default="reports/scenario_sweep.json")
+    ap.add_argument("--spec", default=None,
+                    help="scenario spec JSON (default: built-in slo_mix)")
+    ap.add_argument("--requests", type=int, default=None,
+                    help="override the spec's request count (smoke runs)")
+    args = ap.parse_args()
+
+    spec = load_spec(args.spec) if args.spec else default_spec()
+    if args.requests is not None:
+        spec["requests"] = args.requests
+    results = run_sweep(spec)
+    root = sweep_to_json(spec, results)
+    k = interactive_class(spec)
+    for r in results:
+        c = r["classes"][k]
+        print(
+            f"  {r['scheduling']:>4}: {spec['classes'][k]['name']} attainment "
+            f"{c['attainment'] * 100.0:.1f}% "
+            f"(shed {int(c['shed'])}), goodput {r['throughput_rps']:.1f} r/s"
+        )
+    print(
+        f"  miss ratio {root['headline_miss_ratio']:.2f}x, "
+        f"goodput ratio {root['headline_goodput_ratio']:.3f}x"
+    )
+    write_json(args.out, root)
+
+
+if __name__ == "__main__":
+    main()

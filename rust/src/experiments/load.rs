@@ -50,7 +50,7 @@ use crate::predictor::{N2mRegressor, TexeModel};
 use crate::sim::harness::RequestTruth;
 use crate::sim::{
     run_closed_loop, run_closed_loop_streamed, run_contended, run_contended_streamed,
-    AdaptiveOpts, Characterization, ContendedResult, ContentionOpts, DriftSpec,
+    AdaptiveOpts, Characterization, ContendedResult, ContentionOpts, DriftSpec, LoadShape,
 };
 use crate::util::rng::cell_seed;
 use crate::util::{Json, Rng};
@@ -227,6 +227,57 @@ pub fn synth_workload(
     let mut sum_m = 0.0f64;
     for _ in 0..count {
         t += rng.exponential(offered_rps);
+        let n = 1 + (rng.exponential(1.0 / MEAN_N) as usize).min(N_MAX - 1);
+        let m_mean = N2M_GAMMA * n as f64 + N2M_DELTA;
+        let m = (m_mean + rng.normal_ms(0.0, M_NOISE_STD))
+            .round()
+            .clamp(1.0, N_MAX as f64) as usize;
+        let noise_e = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        let noise_c = (1.0 + rng.normal_ms(0.0, EXEC_NOISE_STD)).max(0.2);
+        requests.push(RequestTruth {
+            n,
+            m_real: m,
+            arrival_s: t,
+            t_edge: texe_edge.estimate(n, m as f64) * noise_e,
+            t_cloud: texe_cloud.estimate(n, m as f64) * noise_c,
+            t_tx: RTT_S,
+            rtt: RTT_S,
+        });
+        sum_m += m as f64;
+    }
+    let ch = Characterization {
+        texe_edge,
+        texe_cloud,
+        n2m: N2mRegressor::from_coeffs(N2M_GAMMA, N2M_DELTA),
+        mean_m: sum_m / count.max(1) as f64,
+    };
+    (requests, ch)
+}
+
+/// [`synth_workload`] under a time-varying offered rate: the inter-
+/// arrival gap after clock time `t` is drawn at the *instantaneous*
+/// rate `shape.rate(t)` (a non-homogeneous Poisson process by
+/// per-arrival thinning-free rate lookup), while every per-request draw
+/// (length, verbosity, execution noise) keeps [`synth_workload`]'s
+/// exact order — so a flat shape (amplitude 0, no spikes) reproduces
+/// `synth_workload(seed, count, base_rps)` bit for bit, and the
+/// scenario mirror (`python/tools/scenario_mirror.py`) replays the
+/// stream with the same arithmetic. The shape must be validated
+/// (rate > 0 everywhere); [`crate::sim::ScenarioSpec`] loaders enforce
+/// that.
+pub fn synth_shaped_workload(
+    seed: u64,
+    count: usize,
+    shape: &LoadShape,
+) -> (Vec<RequestTruth>, Characterization) {
+    let texe_edge = TexeModel::from_coeffs(EDGE_PLANE.0, EDGE_PLANE.1, EDGE_PLANE.2);
+    let texe_cloud = TexeModel::from_coeffs(CLOUD_PLANE.0, CLOUD_PLANE.1, CLOUD_PLANE.2);
+    let mut rng = Rng::new(seed);
+    let mut requests = Vec::with_capacity(count);
+    let mut t = 0.0f64;
+    let mut sum_m = 0.0f64;
+    for _ in 0..count {
+        t += rng.exponential(shape.rate(t));
         let n = 1 + (rng.exponential(1.0 / MEAN_N) as usize).min(N_MAX - 1);
         let m_mean = N2M_GAMMA * n as f64 + N2M_DELTA;
         let m = (m_mean + rng.normal_ms(0.0, M_NOISE_STD))
@@ -902,6 +953,7 @@ pub fn closed_to_json(s: &ClosedLoopSweep) -> Json {
 mod tests {
     use super::*;
     use crate::scheduler::BatchPolicy;
+    use crate::sim::Spike;
 
     fn smoke_cfg(loads: Vec<f64>) -> LoadConfig {
         LoadConfig {
@@ -931,6 +983,62 @@ mod tests {
             prev = rq.arrival_s;
         }
         assert!(cha.mean_m > 1.0 && cha.mean_m < N_MAX as f64);
+    }
+
+    #[test]
+    fn flat_shape_reproduces_the_poisson_workload_bit_for_bit() {
+        // With amplitude 0 and no spikes the shaped generator must be
+        // indistinguishable from the classic one — same seed, same
+        // draw order, same bits (the scenario engine's pay-for-use
+        // anchor).
+        let shape = LoadShape {
+            base_rps: 20.0,
+            period_s: 60.0,
+            amplitude: 0.0,
+            spikes: vec![],
+        };
+        let (a, cha) = synth_shaped_workload(7, 500, &shape);
+        let (b, chb) = synth_workload(7, 500, 20.0);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.n, y.n);
+            assert_eq!(x.m_real, y.m_real);
+            assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits());
+            assert_eq!(x.t_edge.to_bits(), y.t_edge.to_bits());
+            assert_eq!(x.t_cloud.to_bits(), y.t_cloud.to_bits());
+        }
+        assert_eq!(cha.mean_m.to_bits(), chb.mean_m.to_bits());
+    }
+
+    #[test]
+    fn shaped_workload_tracks_the_rate_profile() {
+        // A 10x flash crowd puts ~10x the arrivals-per-second inside
+        // its window compared to the surrounding flat load.
+        let shape = LoadShape {
+            base_rps: 40.0,
+            period_s: 60.0,
+            amplitude: 0.0,
+            spikes: vec![Spike { start_s: 5.0, duration_s: 5.0, factor: 10.0 }],
+        };
+        let (reqs, _ch) = synth_shaped_workload(11, 4_000, &shape);
+        let in_spike = reqs
+            .iter()
+            .filter(|r| r.arrival_s >= 5.0 && r.arrival_s < 10.0)
+            .count();
+        let before = reqs.iter().filter(|r| r.arrival_s < 5.0).count();
+        // Window rates: before ≈ 40/s over 5s = 200, spike ≈ 400/s over
+        // 5s = 2000. Allow generous noise either side.
+        assert!(before > 100 && before < 320, "pre-spike count {before}");
+        assert!(in_spike > 1_400, "in-spike count {in_spike}");
+        assert!(
+            in_spike as f64 > 5.0 * before as f64,
+            "spike window not visibly denser: {in_spike} vs {before}"
+        );
+        let mut prev = 0.0;
+        for r in &reqs {
+            assert!(r.arrival_s > prev);
+            prev = r.arrival_s;
+        }
     }
 
     #[test]

@@ -11,6 +11,7 @@
 //! | — (beyond paper: fleet sweep) | [`fleet`] | `cnmt experiment fleet` |
 //! | — (beyond paper: outage sweep) | [`outage`] | `cnmt experiment outage` |
 //! | — (beyond paper: detection quality) | [`detect`] | `cnmt experiment detect` |
+//! | — (beyond paper: SLO scenario) | [`scenario`] | `cnmt experiment scenario` |
 //!
 //! Every driver prints a human-readable table and writes a JSON report
 //! through the one shared path ([`report::write_report`] over
@@ -29,6 +30,7 @@ pub mod multilevel;
 pub mod outage;
 pub mod report;
 pub mod runner;
+pub mod scenario;
 pub mod table1;
 
 pub use report::write_report;

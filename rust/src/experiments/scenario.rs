@@ -1,0 +1,538 @@
+//! Scenario experiment: one declarative [`ScenarioSpec`] replayed under
+//! the class-blind FIFO baseline and the EDF + class-aware-hedging
+//! treatment, on the identical shaped workload (`cnmt experiment
+//! scenario`).
+//!
+//! This is the report-facing driver over
+//! [`crate::sim::run_scenario_engine`]: the spec (JSON-loadable like a
+//! [`crate::fleet::Topology`]) names a topology preset, a time-varying
+//! [`LoadShape`] (diurnal sinusoid + flash-crowd spikes), SLO service
+//! classes, a hedge shape, and a drift/fault timeline. The driver
+//! generates the workload once
+//! ([`super::load::synth_shaped_workload`] — a non-homogeneous Poisson
+//! arrival process over the classic per-request draws) and replays it
+//! twice:
+//!
+//! * **fifo** — class-blind: arrival-order lane queues, the hedge bar
+//!   (if any) applied uniformly. What a scheduler that cannot see
+//!   service classes does under the same storm.
+//! * **edf** — the treatment: earliest-deadline-first within per-class
+//!   quotas of the fair front-end, and the hedge waste budget spent
+//!   class-aware (interactive first).
+//!
+//! The headline is per-class SLO attainment on the **offered** basis
+//! (shed requests count as misses): EDF + class-aware hedging holds the
+//! interactive class's attainment under a flash crowd + fault window
+//! where FIFO misses a multiple of it, at equal-or-better goodput.
+//!
+//! Both cells run on the deterministic parallel runner
+//! ([`crate::experiments::runner`]); the report JSON is byte-identical
+//! at any thread count, and `python/tools/scenario_mirror.py`
+//! regenerates `reports/scenario_sweep.json` float-exactly with no rust
+//! toolchain.
+
+use crate::devices::DeviceKind;
+use crate::sim::{
+    run_scenario_engine, ClassSpec, DriftSpec, FaultMode, FaultSpec, FleetOpts, HedgeShape,
+    LoadShape, ScenarioResult, ScenarioSpec, Scheduling, Spike,
+};
+use crate::util::Json;
+use crate::Result;
+
+use super::load::synth_shaped_workload;
+use super::report::text_table;
+use super::runner;
+
+/// Scenario experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ScenarioConfig {
+    /// The declarative scenario (defaults to
+    /// [`default_scenario_spec`], the checked-in
+    /// `examples/scenarios/slo_mix.json`).
+    pub spec: ScenarioSpec,
+    /// Fleet sizing shared by both disciplines (strategy must stay
+    /// `Select`; hedging comes from the spec).
+    pub opts: FleetOpts,
+    /// OS threads to shard the two discipline cells across; results
+    /// are bit-identical at any value. 1 = serial (the mirror's mode).
+    pub threads: usize,
+}
+
+impl Default for ScenarioConfig {
+    fn default() -> Self {
+        ScenarioConfig {
+            spec: default_scenario_spec(),
+            opts: FleetOpts::default(),
+            threads: 1,
+        }
+    }
+}
+
+/// The default scenario — kept in lockstep with
+/// `examples/scenarios/slo_mix.json` (a unit test diffs the two): the
+/// hetero fleet under a diurnal sinusoid, a 2.8x flash crowd, a
+/// correlated cloud-tier drift, and a fail-slow fault on the fast edge
+/// that lands while the crowd's backlog is still draining, carrying
+/// three SLO classes. A background-heavy mix (55% of traffic with a
+/// 30 s SLO) is what gives EDF room to protect the 0.5 s interactive
+/// class where FIFO cannot.
+pub fn default_scenario_spec() -> ScenarioSpec {
+    ScenarioSpec {
+        name: "slo_mix".to_string(),
+        topology: "hetero".to_string(),
+        seed: 20220315,
+        requests: 20_000,
+        load: LoadShape {
+            base_rps: 260.0,
+            period_s: 30.0,
+            amplitude: 0.4,
+            spikes: vec![Spike { start_s: 25.0, duration_s: 12.0, factor: 2.8 }],
+        },
+        classes: vec![
+            ClassSpec {
+                name: "interactive".to_string(),
+                deadline_s: 0.5,
+                share: 0.2,
+                weight: 12.0,
+                quota: 512,
+                hedge_scale: 2.0,
+            },
+            ClassSpec {
+                name: "batch".to_string(),
+                deadline_s: 2.0,
+                share: 0.25,
+                weight: 3.0,
+                quota: 512,
+                hedge_scale: 1.0,
+            },
+            ClassSpec {
+                name: "background".to_string(),
+                deadline_s: 30.0,
+                share: 0.55,
+                weight: 1.0,
+                quota: 512,
+                hedge_scale: 0.0,
+            },
+        ],
+        scheduling: Scheduling::Edf,
+        hedge: Some(HedgeShape {
+            margin_s: 0.012,
+            waste_budget: 0.08,
+            class_aware: true,
+        }),
+        drifts: vec![DriftSpec {
+            device: DeviceKind::Cloud,
+            lane: None,
+            start_s: 40.0,
+            ramp_s: 15.0,
+            factor: 1.5,
+        }],
+        faults: vec![FaultSpec {
+            lane: 0,
+            mode: FaultMode::Slow { factor: 2.5 },
+            start_s: 30.0,
+            recover_s: 45.0,
+        }],
+        batch_aware_wait: true,
+    }
+}
+
+/// The class-blind baseline variant of a spec: FIFO lane queues and a
+/// uniform hedge bar (class-aware scaling off) — everything else, and
+/// the workload, identical.
+fn baseline_variant(spec: &ScenarioSpec) -> ScenarioSpec {
+    let mut s = spec.clone();
+    s.scheduling = Scheduling::Fifo;
+    s.hedge = s.hedge.map(|h| HedgeShape { class_aware: false, ..h });
+    s
+}
+
+/// The treatment variant: EDF-within-quota plus the spec's hedge shape
+/// as written (class-aware when the spec says so).
+fn treatment_variant(spec: &ScenarioSpec) -> ScenarioSpec {
+    let mut s = spec.clone();
+    s.scheduling = Scheduling::Edf;
+    s
+}
+
+/// Index of the spec's most latency-sensitive class (smallest SLO,
+/// lowest index on ties) — the headline class.
+fn interactive_class(spec: &ScenarioSpec) -> usize {
+    let mut best = 0usize;
+    for (k, c) in spec.classes.iter().enumerate() {
+        if c.deadline_s < spec.classes[best].deadline_s {
+            best = k;
+        }
+    }
+    best
+}
+
+/// Full scenario sweep: one result per discipline over one workload.
+#[derive(Debug, Clone)]
+pub struct ScenarioSweep {
+    /// The scenario as configured (before per-cell discipline
+    /// overrides).
+    pub spec: ScenarioSpec,
+    /// `[fifo baseline, edf treatment]` results.
+    pub results: Vec<ScenarioResult>,
+}
+
+impl ScenarioSweep {
+    /// Result for a discipline tag (panics when absent — report bug).
+    pub fn get(&self, scheduling: &str) -> &ScenarioResult {
+        self.results
+            .iter()
+            .find(|r| r.scheduling == scheduling)
+            .unwrap_or_else(|| panic!("missing discipline {scheduling}"))
+    }
+
+    /// The headline class's label.
+    pub fn interactive_name(&self) -> &str {
+        &self.spec.classes[interactive_class(&self.spec)].name
+    }
+
+    /// Interactive SLO attainment under EDF + class-aware hedging
+    /// (offered basis).
+    pub fn headline_interactive_attainment(&self) -> f64 {
+        self.get("edf").classes[interactive_class(&self.spec)].attainment()
+    }
+
+    /// Interactive SLO attainment under the class-blind FIFO baseline.
+    pub fn headline_fifo_attainment(&self) -> f64 {
+        self.get("fifo").classes[interactive_class(&self.spec)].attainment()
+    }
+
+    /// Interactive miss ratio (FIFO misses / EDF misses, offered
+    /// basis) — the headline "class-awareness misses Nx less". The
+    /// denominator is floored at one miss so a perfect EDF run reports
+    /// a finite ratio.
+    pub fn headline_miss_ratio(&self) -> f64 {
+        let k = interactive_class(&self.spec);
+        let fifo = &self.get("fifo").classes[k];
+        let edf = &self.get("edf").classes[k];
+        let fifo_missed = fifo.offered - fifo.within_deadline;
+        let edf_missed = edf.offered - edf.within_deadline;
+        fifo_missed as f64 / edf_missed.max(1) as f64
+    }
+
+    /// Goodput ratio (EDF / FIFO) — the "at equal-or-better goodput"
+    /// half of the headline.
+    pub fn headline_goodput_ratio(&self) -> f64 {
+        self.get("edf").throughput_rps / self.get("fifo").throughput_rps
+    }
+}
+
+/// Run the scenario experiment: generate the shaped workload once from
+/// the spec, then replay it under both disciplines, one runner cell
+/// each.
+pub fn run(cfg: &ScenarioConfig) -> Result<ScenarioSweep> {
+    let topo = cfg.spec.topology()?;
+    cfg.spec.validate_for(&topo)?;
+    let (requests, ch) =
+        synth_shaped_workload(cfg.spec.seed, cfg.spec.requests, &cfg.spec.load);
+    let variants = [baseline_variant(&cfg.spec), treatment_variant(&cfg.spec)];
+    let outcomes = runner::run_cells(cfg.threads, variants.len(), |cell| {
+        run_scenario_engine(&requests, &ch, &topo, &cfg.opts, &variants[cell], None)
+            .map(|(result, _rec)| result)
+    });
+    let mut results = Vec::with_capacity(variants.len());
+    for outcome in outcomes {
+        results.push(outcome?);
+    }
+    Ok(ScenarioSweep { spec: cfg.spec.clone(), results })
+}
+
+/// Render the sweep as aligned text tables plus the headline.
+pub fn render_text(s: &ScenarioSweep) -> String {
+    let mut out = format!(
+        "scenario `{}` on {}: {} requests, base {:.0} r/s (amplitude {:.2}, \
+         {} spike(s)), {} drift(s), {} fault(s)\n\n",
+        s.spec.name,
+        s.spec.topology,
+        s.spec.requests,
+        s.spec.load.base_rps,
+        s.spec.load.amplitude,
+        s.spec.load.spikes.len(),
+        s.spec.drifts.len(),
+        s.spec.faults.len(),
+    );
+    let mut rows = vec![[
+        "discipline",
+        "class",
+        "offered",
+        "shed",
+        "attain %",
+        "mean ms",
+        "p50 ms",
+        "p95 ms",
+        "p99 ms",
+        "hedged",
+    ]
+    .iter()
+    .map(|h| h.to_string())
+    .collect::<Vec<_>>()];
+    for r in &s.results {
+        for c in &r.classes {
+            rows.push(vec![
+                r.scheduling.clone(),
+                c.name.clone(),
+                format!("{}", c.offered),
+                format!("{}", c.shed),
+                format!("{:.1}", c.attainment() * 100.0),
+                format!("{:.1}", c.mean_latency_s * 1e3),
+                format!("{:.1}", c.p50_s * 1e3),
+                format!("{:.1}", c.p95_s * 1e3),
+                format!("{:.1}", c.p99_s * 1e3),
+                format!("{}", c.hedged),
+            ]);
+        }
+    }
+    out.push_str(&text_table(&rows));
+    let mut totals = vec![[
+        "discipline",
+        "goodput r/s",
+        "completed",
+        "rejected",
+        "p50 ms",
+        "p99 ms",
+        "batch",
+        "hedged",
+        "waste s",
+    ]
+    .iter()
+    .map(|h| h.to_string())
+    .collect::<Vec<_>>()];
+    for r in &s.results {
+        totals.push(vec![
+            r.scheduling.clone(),
+            format!("{:.1}", r.throughput_rps),
+            format!("{}", r.completed),
+            format!("{}", r.rejected),
+            format!("{:.1}", r.p50_s * 1e3),
+            format!("{:.1}", r.p99_s * 1e3),
+            format!("{:.2}", r.mean_batch),
+            format!("{}", r.hedged),
+            format!("{:.2}", r.wasted_work_s),
+        ]);
+    }
+    out.push('\n');
+    out.push_str(&text_table(&totals));
+    out.push_str(&format!(
+        "\nheadline: EDF + class-aware hedging holds `{}` SLO attainment at \
+         {:.1}% vs FIFO's {:.1}% ({:.1}x fewer misses) at {:.2}x goodput\n",
+        s.interactive_name(),
+        s.headline_interactive_attainment() * 100.0,
+        s.headline_fifo_attainment() * 100.0,
+        s.headline_miss_ratio(),
+        s.headline_goodput_ratio(),
+    ));
+    out
+}
+
+/// JSON report (written through [`super::report::write_report`] as
+/// `scenario_sweep.json`).
+pub fn to_json(s: &ScenarioSweep) -> Json {
+    let mut disciplines = Json::object();
+    for r in &s.results {
+        disciplines.set(&r.scheduling, r.to_json());
+    }
+    let mut root = Json::object();
+    root.set("spec", s.spec.to_json())
+        .set(
+            "interactive_class",
+            Json::Str(s.interactive_name().to_string()),
+        )
+        .set("disciplines", disciplines)
+        .set(
+            "headline_interactive_attainment",
+            Json::Num(s.headline_interactive_attainment()),
+        )
+        .set(
+            "headline_fifo_attainment",
+            Json::Num(s.headline_fifo_attainment()),
+        )
+        .set("headline_miss_ratio", Json::Num(s.headline_miss_ratio()))
+        .set(
+            "headline_goodput_ratio",
+            Json::Num(s.headline_goodput_ratio()),
+        );
+    root
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fleet::FleetStrategy;
+    use std::path::Path;
+
+    /// A compressed storm: the same structure as the default spec with
+    /// times shrunk so a few-thousand-request smoke run still crosses
+    /// the spike, the drift ramp, and the fault window.
+    fn smoke_spec() -> ScenarioSpec {
+        ScenarioSpec {
+            name: "smoke".to_string(),
+            topology: "hetero".to_string(),
+            seed: 42,
+            requests: 2_500,
+            load: LoadShape {
+                base_rps: 170.0,
+                period_s: 8.0,
+                amplitude: 0.4,
+                spikes: vec![Spike { start_s: 4.0, duration_s: 3.0, factor: 2.5 }],
+            },
+            classes: vec![
+                ClassSpec {
+                    name: "interactive".to_string(),
+                    deadline_s: 0.3,
+                    share: 0.5,
+                    weight: 4.0,
+                    quota: 96,
+                    hedge_scale: 2.0,
+                },
+                ClassSpec {
+                    name: "batch".to_string(),
+                    deadline_s: 1.5,
+                    share: 0.3,
+                    weight: 2.0,
+                    quota: 96,
+                    hedge_scale: 1.0,
+                },
+                ClassSpec {
+                    name: "background".to_string(),
+                    deadline_s: 6.0,
+                    share: 0.2,
+                    weight: 1.0,
+                    quota: 96,
+                    hedge_scale: 0.0,
+                },
+            ],
+            scheduling: Scheduling::Edf,
+            hedge: Some(HedgeShape {
+                margin_s: 0.012,
+                waste_budget: 0.08,
+                class_aware: true,
+            }),
+            drifts: vec![DriftSpec {
+                device: DeviceKind::Cloud,
+                lane: None,
+                start_s: 6.0,
+                ramp_s: 3.0,
+                factor: 1.5,
+            }],
+            faults: vec![FaultSpec {
+                lane: 0,
+                mode: FaultMode::Slow { factor: 3.0 },
+                start_s: 8.0,
+                recover_s: 12.0,
+            }],
+            batch_aware_wait: true,
+        }
+    }
+
+    fn smoke_cfg() -> ScenarioConfig {
+        ScenarioConfig { spec: smoke_spec(), ..Default::default() }
+    }
+
+    #[test]
+    fn default_spec_matches_the_checked_in_asset() {
+        // The JSON asset is the public face of the default scenario;
+        // the rust constructor must never drift from it.
+        let asset = ScenarioSpec::load(Path::new("../examples/scenarios/slo_mix.json"))
+            .expect("examples/scenarios/slo_mix.json loads");
+        assert_eq!(
+            asset.to_json().to_string_pretty(),
+            default_scenario_spec().to_json().to_string_pretty(),
+            "examples/scenarios/slo_mix.json drifted from default_scenario_spec()"
+        );
+    }
+
+    #[test]
+    fn sweep_structure_and_conservation() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        assert_eq!(sweep.results.len(), 2);
+        assert_eq!(sweep.results[0].scheduling, "fifo");
+        assert_eq!(sweep.results[1].scheduling, "edf");
+        for r in &sweep.results {
+            assert_eq!(r.offered, 2_500);
+            assert_eq!(r.completed + r.rejected, r.offered);
+            assert_eq!(r.edge_count + r.cloud_count, r.completed);
+            assert_eq!(r.device_results.iter().sum::<usize>(), r.completed);
+            assert_eq!(r.classes.len(), 3);
+            let mut offered = 0usize;
+            for c in &r.classes {
+                assert_eq!(c.offered, c.shed + c.completed);
+                assert!(c.within_deadline <= c.completed);
+                offered += c.offered;
+            }
+            assert_eq!(offered, r.offered);
+        }
+    }
+
+    #[test]
+    fn edf_holds_the_interactive_class_at_least_as_well_as_fifo() {
+        // The acceptance property at smoke scale: under the compressed
+        // storm, class-aware scheduling can only help the tightest SLO,
+        // and it must not buy that help with goodput.
+        let sweep = run(&smoke_cfg()).unwrap();
+        assert_eq!(sweep.interactive_name(), "interactive");
+        let edf = sweep.headline_interactive_attainment();
+        let fifo = sweep.headline_fifo_attainment();
+        assert!(
+            edf >= fifo,
+            "EDF interactive attainment {edf} below FIFO {fifo}"
+        );
+        assert!(
+            sweep.headline_goodput_ratio() >= 0.98,
+            "EDF goodput fell {}x below FIFO",
+            sweep.headline_goodput_ratio()
+        );
+    }
+
+    #[test]
+    fn sweep_is_bit_identical_across_thread_counts() {
+        let mut cfg = smoke_cfg();
+        cfg.spec.requests = 1_200;
+        let serial = to_json(&run(&cfg).unwrap()).to_string_pretty();
+        for threads in [2, 4, 7] {
+            cfg.threads = threads;
+            let parallel = to_json(&run(&cfg).unwrap()).to_string_pretty();
+            assert_eq!(parallel, serial, "{threads}-thread sweep diverged");
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_configs() {
+        let mut cfg = smoke_cfg();
+        cfg.spec.topology = "not-a-preset".to_string();
+        assert!(run(&cfg).is_err());
+
+        let mut cfg = smoke_cfg();
+        cfg.spec.faults[0].lane = 99;
+        assert!(run(&cfg).is_err());
+
+        let mut cfg = smoke_cfg();
+        cfg.opts.strategy = FleetStrategy::Hedged { margin_s: 0.01 };
+        assert!(run(&cfg).is_err());
+    }
+
+    #[test]
+    fn render_and_json_cover_both_disciplines() {
+        let sweep = run(&smoke_cfg()).unwrap();
+        let txt = render_text(&sweep);
+        assert!(txt.contains("fifo"));
+        assert!(txt.contains("edf"));
+        assert!(txt.contains("interactive"));
+        assert!(txt.contains("headline"));
+        let j = to_json(&sweep);
+        assert!(j.get("spec").is_ok());
+        let d = j.get("disciplines").unwrap();
+        for tag in ["fifo", "edf"] {
+            let r = d.get(tag).unwrap();
+            assert!(r.get("classes").is_ok());
+            assert!(r.get("throughput_rps").is_ok());
+        }
+        assert!(j.get("headline_interactive_attainment").is_ok());
+        assert!(j.get("headline_miss_ratio").is_ok());
+        assert!(j.get("headline_goodput_ratio").is_ok());
+    }
+}

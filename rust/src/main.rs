@@ -25,7 +25,7 @@ use cnmt::corpus::Tokenizer;
 use cnmt::devices::Calibration;
 use cnmt::experiments::{
     ablation, detect, energy, fig2a, fig3, fig4, fleet, load, multilevel, outage, report,
-    runner, table1,
+    runner, scenario, table1,
 };
 #[cfg(feature = "pjrt")]
 use cnmt::runtime::{ArtifactManifest, Seq2SeqEngine, TranslateOptions};
@@ -67,16 +67,21 @@ const HELP: &str = "\
 cnmt — C-NMT: collaborative inference for neural machine translation
 
 USAGE:
-  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|outage|detect|all> [flags]
+  cnmt experiment <table1|fig2a|fig3|fig4|ablation|energy|multilevel|load|fleet|outage|detect|scenario|all> [flags]
       --config <json>       load a Config (defaults = paper setup)
-      --requests <n>        evaluation requests (default 100000)
+      --requests <n>        requests per experiment: table1 evaluation
+                            requests (default 100000), requests/point of
+                            the load/fleet/outage/detect sweeps (default
+                            20000 each), scenario request count (default:
+                            from the spec). The legacy per-sweep
+                            spellings (--load-requests etc.) still work
+                            and win when both are given.
       --fit <n>             characterisation inferences (default 10000)
       --seed <u64>          master seed
       --out <dir>           report directory (default reports/)
       --calibration <json>  measured calibration (default: built-in)
       --samples <n>         fig2a/fig3 sample count
       --loads <a,b,..>      load sweep: offered loads in r/s
-      --load-requests <n>   load sweep: requests per point (default 20000)
       --closed-loop         load sweep: closed-loop clients instead of
                             open-loop Poisson arrivals (writes closed_loop.json);
                             with `experiment fleet`: the closed-loop drift
@@ -97,30 +102,33 @@ USAGE:
                             instead of the presets
       --offered-rps <f>     fleet sweep: offered load for --topology
                             (default 96)
-      --fleet-requests <n>  fleet sweep: requests per cell (default 20000)
       --telemetry           fleet closed loop: sample control-loop
                             telemetry (per-device gauges, phase
                             decomposition) at a fixed cadence and write
                             telemetry_drift.json instead of
                             fleet_closed_loop.json (default K = 32)
-      --outage-requests <n> outage sweep: requests per cell (default 20000);
-                            the sweep crashes the lead edge gateway
-                            mid-run and compares the health-blind
-                            baseline against deadline-timer failover
-                            (writes outage_sweep.json; --threads applies)
-      --trace <path>        outage sweep only: additionally stream the
+      --trace <path>        outage sweep only (crashes the lead edge
+                            gateway mid-run, health-blind baseline vs
+                            deadline-timer failover, writes
+                            outage_sweep.json): additionally stream the
                             failover cell's full decision log (JSONL)
                             to <path> for `cnmt trace verify`
                             (with `experiment outage`, --telemetry
                             samples control-loop gauges in both cells
-                            and adds a `telemetry` block per policy)
-      --detect-requests <n> detection eval: requests per scenario
-                            (default 20000); five scenarios (fault-free
-                            twin, crash, fail-slow, link degradation,
-                            load surge) replay under the online
-                            detector and are scored against the
-                            injected spec (writes detect_eval.json;
-                            --threads applies)
+                            and adds a `telemetry` block per policy;
+                            `experiment detect` scores five fault
+                            scenarios under the online detector and
+                            writes detect_eval.json)
+      --scenario <json>     replay a declarative ScenarioSpec
+                            (time-varying load, SLO service classes,
+                            drift/fault timeline) as a class-blind FIFO
+                            baseline vs EDF + class-aware hedging
+                            comparison, writing scenario_sweep.json.
+                            Accepted by every experiment subcommand
+                            (the scenario rides along after it);
+                            `experiment scenario` runs it standalone
+                            with the checked-in default spec
+                            examples/scenarios/slo_mix.json
   cnmt bench sched [flags]  scheduler core benchmark (events/sec,
                             ns/event, sweep wall-clock at 1 vs N threads)
       --json                also write the machine-readable report
@@ -204,6 +212,16 @@ fn load_config(args: &Args) -> Result<Config> {
     Ok(cfg)
 }
 
+/// Per-sweep request count under the unified `--requests` flag. The
+/// legacy per-experiment spellings (`--load-requests`,
+/// `--fleet-requests`, `--outage-requests`, `--detect-requests`) remain
+/// hidden aliases and — being the more specific name — win when both
+/// are given.
+fn sweep_requests(args: &Args, legacy: &str, default: usize) -> Result<usize> {
+    let unified = args.usize("requests", default)?;
+    args.usize(legacy, unified)
+}
+
 fn load_calibration(cfg: &Config) -> Result<Calibration> {
     match &cfg.calibration {
         Some(path) => {
@@ -241,7 +259,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     .collect::<Result<_>>()?;
             }
             cc.think_s = args.f64("think-ms", 0.0)? / 1e3;
-            cc.requests_per_point = args.usize("load-requests", cc.requests_per_point)?;
+            cc.requests_per_point = sweep_requests(args, "load-requests", cc.requests_per_point)?;
             (None, Some(cc))
         } else {
             let mut lc = load::LoadConfig { seed: cfg.seed, ..Default::default() };
@@ -256,7 +274,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     })
                     .collect::<Result<_>>()?;
             }
-            lc.requests_per_point = args.usize("load-requests", lc.requests_per_point)?;
+            lc.requests_per_point = sweep_requests(args, "load-requests", lc.requests_per_point)?;
             (Some(lc), None)
         }
     } else {
@@ -301,7 +319,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                 .collect::<Result<_>>()?;
         }
         fc.think_s = args.f64("think-ms", 0.0)? / 1e3;
-        fc.requests_per_point = args.usize("fleet-requests", fc.requests_per_point)?;
+        fc.requests_per_point = sweep_requests(args, "fleet-requests", fc.requests_per_point)?;
         Some(fc)
     } else {
         None
@@ -342,7 +360,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
                     .collect::<Result<_>>()?;
             }
         }
-        fc.requests_per_point = args.usize("fleet-requests", fc.requests_per_point)?;
+        fc.requests_per_point = sweep_requests(args, "fleet-requests", fc.requests_per_point)?;
         Some(fc)
     } else {
         None
@@ -350,7 +368,7 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     let outage_cfg = if matches!(which.as_str(), "outage" | "all") {
         let mut oc = outage::OutageConfig { seed: cfg.seed, ..Default::default() };
         oc.threads = runner::resolve_threads(args.usize("threads", 1)?);
-        oc.requests_per_point = args.usize("outage-requests", oc.requests_per_point)?;
+        oc.requests_per_point = sweep_requests(args, "outage-requests", oc.requests_per_point)?;
         // Opt-in gauge sampling (satellite of the detection work): off
         // by default so the checked-in outage_sweep.json bytes never
         // move. Only the dedicated run consumes the flag — on `all` it
@@ -367,8 +385,28 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         dc.base.seed = cfg.seed;
         dc.base.threads = runner::resolve_threads(args.usize("threads", 1)?);
         dc.base.requests_per_point =
-            args.usize("detect-requests", dc.base.requests_per_point)?;
+            sweep_requests(args, "detect-requests", dc.base.requests_per_point)?;
         Some(dc)
+    } else {
+        None
+    };
+    // `--scenario spec.json` is accepted by every experiment subcommand:
+    // the named spec replays (fifo baseline vs edf) after the requested
+    // experiment; `cnmt experiment scenario` runs it standalone with the
+    // checked-in default spec when the flag is absent.
+    let scenario_path = args.str_opt("scenario");
+    let scenario_cfg = if matches!(which.as_str(), "scenario" | "all") || scenario_path.is_some()
+    {
+        let mut sc = scenario::ScenarioConfig::default();
+        if let Some(path) = scenario_path.as_deref() {
+            sc.spec = cnmt::sim::ScenarioSpec::load(&PathBuf::from(path))?;
+        }
+        sc.threads = runner::resolve_threads(args.usize("threads", 1)?);
+        // The unified --requests overrides the spec's request count
+        // like every other sweep; the seed stays the spec's (a scenario
+        // is a named, reproducible artifact).
+        sc.spec.requests = args.usize("requests", sc.spec.requests)?;
+        Some(sc)
     } else {
         None
     };
@@ -571,6 +609,21 @@ fn cmd_experiment(args: &Args) -> Result<()> {
         Ok(())
     };
 
+    let run_scenario_exp = |cfg: &Config| -> Result<()> {
+        let sc = scenario_cfg.as_ref().expect("scenario_cfg built when requested");
+        eprintln!(
+            "scenario `{}`: {} requests on `{}` (fifo baseline vs edf + \
+             class-aware hedging, seed {})",
+            sc.spec.name, sc.spec.requests, sc.spec.topology, sc.spec.seed
+        );
+        let s = scenario::run(sc)?;
+        print!("{}", scenario::render_text(&s));
+        let p =
+            report::write_report(&cfg.out_dir, "scenario_sweep", &scenario::to_json(&s))?;
+        eprintln!("wrote {}\n", p.display());
+        Ok(())
+    };
+
     let run_multilevel = |cfg: &Config| -> Result<()> {
         eprintln!("multilevel: 3-tier CI (end-device/gateway/cloud)...");
         let m = multilevel::run(cfg, &cal)?;
@@ -581,17 +634,18 @@ fn cmd_experiment(args: &Args) -> Result<()> {
     };
 
     match which.as_str() {
-        "fig2a" => run_fig2a(&cfg),
-        "fig3" => run_fig3(&cfg),
-        "fig4" => run_fig4(&cfg),
-        "table1" => run_table1(&cfg),
-        "ablation" => run_ablation(&cfg),
-        "energy" => run_energy(&cfg),
-        "multilevel" => run_multilevel(&cfg),
-        "load" => run_load(&cfg),
-        "fleet" => run_fleet_exp(&cfg),
-        "outage" => run_outage(&cfg),
-        "detect" => run_detect(&cfg),
+        "fig2a" => run_fig2a(&cfg)?,
+        "fig3" => run_fig3(&cfg)?,
+        "fig4" => run_fig4(&cfg)?,
+        "table1" => run_table1(&cfg)?,
+        "ablation" => run_ablation(&cfg)?,
+        "energy" => run_energy(&cfg)?,
+        "multilevel" => run_multilevel(&cfg)?,
+        "load" => run_load(&cfg)?,
+        "fleet" => run_fleet_exp(&cfg)?,
+        "outage" => run_outage(&cfg)?,
+        "detect" => run_detect(&cfg)?,
+        "scenario" => run_scenario_exp(&cfg)?,
         "all" => {
             run_fig4(&cfg)?;
             run_fig3(&cfg)?;
@@ -603,10 +657,16 @@ fn cmd_experiment(args: &Args) -> Result<()> {
             run_load(&cfg)?;
             run_fleet_exp(&cfg)?;
             run_outage(&cfg)?;
-            run_detect(&cfg)
+            run_detect(&cfg)?;
+            run_scenario_exp(&cfg)?;
         }
-        other => Err(Error::Config(format!("unknown experiment `{other}`"))),
+        other => return Err(Error::Config(format!("unknown experiment `{other}`"))),
     }
+    // A --scenario passed to another subcommand rides along after it.
+    if !matches!(which.as_str(), "scenario" | "all") && scenario_cfg.is_some() {
+        run_scenario_exp(&cfg)?;
+    }
+    Ok(())
 }
 
 /// Ground-truth executor over a synthetic workload: a batch costs its
@@ -1279,6 +1339,66 @@ fn cmd_bench(args: &Args) -> Result<()> {
         failover_ratio
     );
 
+    // Scenario replay: the full SLO-class engine (fair EDF front-end,
+    // class-aware hedge bar, batch-aware waits) vs the identical storm
+    // through class-blind FIFO lanes — the pay-for-use cost of the
+    // service-class machinery on the default scenario. CI gates the
+    // ratio (bench_gate.py --min-scenario-ratio).
+    eprintln!("bench sched: scenario replay (SLO classes, fifo vs edf)");
+    let (scenario_fifo, scenario_edf, scenario_ratio) = {
+        use cnmt::experiments::load::synth_shaped_workload;
+        use cnmt::experiments::scenario::default_scenario_spec;
+        use cnmt::sim::{
+            run_scenario_engine, FleetOpts, HedgeShape, ScenarioSpec, Scheduling,
+        };
+        let mut spec = default_scenario_spec();
+        spec.requests = requests;
+        let topo = spec.topology()?;
+        spec.validate_for(&topo)?;
+        let (truths, ch) = synth_shaped_workload(spec.seed, spec.requests, &spec.load);
+        let opts = FleetOpts::default();
+        let mut fifo_spec = spec.clone();
+        fifo_spec.scheduling = Scheduling::Fifo;
+        fifo_spec.hedge =
+            fifo_spec.hedge.map(|h| HedgeShape { class_aware: false, ..h });
+        let mut measure = |label: &str, s: &ScenarioSpec| -> Result<Json> {
+            let mut best: Option<(usize, f64)> = None;
+            for _ in 0..3 {
+                let t0 = std::time::Instant::now();
+                let (res, _rec) =
+                    run_scenario_engine(&truths, &ch, &topo, &opts, s, None)?;
+                let wall_s = t0.elapsed().as_secs_f64();
+                best = Some(match best {
+                    Some((c, w)) if w <= wall_s => (c, w),
+                    _ => (res.completed, wall_s),
+                });
+            }
+            let (completed, wall_s) = best.expect("three samples taken");
+            let rps = truths.len() as f64 / wall_s;
+            eprintln!(
+                "  {label:<18} {} requests in {wall_s:.3} s  →  {rps:.0} \
+                 requests/s",
+                truths.len()
+            );
+            let mut o = Json::object();
+            o.set("scheduling", Json::Str(s.scheduling.tag().to_string()))
+                .set("requests", Json::Num(truths.len() as f64))
+                .set("completed", Json::Num(completed as f64))
+                .set("wall_s", Json::Num(wall_s))
+                .set("requests_per_sec", Json::Num(rps));
+            Ok(o)
+        };
+        let fifo = measure("scenario/fifo", &fifo_spec)?;
+        let edf = measure("scenario/edf", &spec)?;
+        let ratio = edf.get("requests_per_sec").unwrap().as_f64().unwrap()
+            / fifo.get("requests_per_sec").unwrap().as_f64().unwrap();
+        eprintln!(
+            "  EDF + class machinery runs at {ratio:.2}x the class-blind FIFO \
+             replay's requests/sec"
+        );
+        (fifo, edf, ratio)
+    };
+
     // Hot-path latency: the full steady-state per-request cycle.
     let hot = {
         use cnmt::devices::DeviceKind;
@@ -1419,6 +1539,11 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("disabled_events_per_sec", Json::Num(hedged_eps))
         .set("enabled", hedged_det)
         .set("ratio", Json::Num(detect_ratio));
+    let mut scenario_section = Json::object();
+    scenario_section
+        .set("fifo", scenario_fifo)
+        .set("edf", scenario_edf)
+        .set("ratio", Json::Num(scenario_ratio));
     let mut root = Json::object();
     root.set("schema", Json::Str("bench_sched/v1".into()))
         .set("producer", Json::Str("cnmt bench sched".into()))
@@ -1432,6 +1557,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
         .set("speedup", speedup)
         .set("recorder", recorder_section)
         .set("detector", detector_section)
+        .set("scenario", scenario_section)
         .set("trace", trace_section);
     if write_json {
         let path = report::write_report(

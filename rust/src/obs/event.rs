@@ -189,6 +189,17 @@ pub enum Event {
         /// The retired alert's classification.
         kind: AlertKind,
     },
+    /// A scenario run tagged an admitted request with its SLO service
+    /// class ([`crate::sim::scenario`]): `class` indexes the scenario
+    /// spec's class list. Recorded once per request, right after its
+    /// admission events, so per-class conservation and attainment are
+    /// re-derivable from the log alone.
+    ClassTag {
+        /// Request id.
+        id: u64,
+        /// Service-class index into the scenario spec's class list.
+        class: u32,
+    },
 }
 
 /// Root-cause classification attached to [`Event::AlertRaised`] /
@@ -314,6 +325,7 @@ impl Event {
             Event::FailoverReroute { .. } => "failover_reroute",
             Event::AlertRaised { .. } => "alert_raised",
             Event::AlertCleared { .. } => "alert_cleared",
+            Event::ClassTag { .. } => "class_tag",
         }
     }
 }
@@ -419,6 +431,9 @@ impl Stamped {
             Event::AlertCleared { lane, kind } => {
                 let _ = write!(out, ",\"lane\":{lane},\"kind\":\"{}\"", kind.tag());
             }
+            Event::ClassTag { id, class } => {
+                let _ = write!(out, ",\"id\":{id},\"class\":{class}");
+            }
         }
         out.push_str("}\n");
     }
@@ -505,6 +520,13 @@ impl Stamped {
                     kind: AlertKind::from_tag(v.get("kind")?.as_str()?)?,
                 }
             }
+            "class_tag" => {
+                check_keys(v, "class_tag", &["t", "seq", "ev", "id", "class"])?;
+                Event::ClassTag {
+                    id: read_u64(v, "id")?,
+                    class: read_u32(v, "class")?,
+                }
+            }
             other => return Err(Error::Config(format!("unknown event tag `{other}`"))),
         };
         Ok(Stamped { t_s, seq, ev })
@@ -561,6 +583,22 @@ mod tests {
         ] {
             roundtrip(Event::AlertRaised { lane: 3, kind, score: 13.25 });
             roundtrip(Event::AlertCleared { lane: 3, kind });
+        }
+        roundtrip(Event::ClassTag { id: 13, class: 2 });
+    }
+
+    #[test]
+    fn class_tag_fails_closed_on_malformed_lines() {
+        let malformed = [
+            // unknown extra field
+            "{\"t\":1,\"seq\":0,\"ev\":\"class_tag\",\"id\":0,\"class\":1,\"lane\":2}",
+            // missing field
+            "{\"t\":1,\"seq\":0,\"ev\":\"class_tag\",\"id\":0}",
+            "{\"t\":1,\"seq\":0,\"ev\":\"class_tag\",\"class\":1}",
+        ];
+        for line in malformed {
+            let v = Json::parse(line).unwrap();
+            assert!(Stamped::from_json(&v).is_err(), "accepted: {line}");
         }
     }
 

@@ -43,7 +43,7 @@ pub use attribute::{score_alerts, AlertScore, BlameChain, BlameLedger};
 pub use detect::{AlertRec, DetectCfg, Detector};
 pub use event::{AlertKind, Event, Stamped};
 pub use recorder::{FlightRecorder, TraceMeta};
-pub use telemetry::{DeviceSeries, Phases, Telemetry, TelemetryCfg};
+pub use telemetry::{ClassPhases, DeviceSeries, Phases, Telemetry, TelemetryCfg};
 pub use verify::{
     parse_trace, parse_trace_full, summarize_trace, verify_blame, verify_events,
     verify_trace, verify_trace_allow_truncated, TraceTrailer, VerifyReport,

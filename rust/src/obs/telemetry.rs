@@ -250,6 +250,54 @@ impl Phases {
     }
 }
 
+/// Per-service-class latency phase decomposition: one [`Phases`] per
+/// SLO class of a scenario run ([`crate::sim::scenario`]), so a report
+/// can show *where* each class's latency goes — e.g. interactive
+/// traffic dominated by queue wait under a flash crowd while batch
+/// traffic eats the batch-amortisation slack.
+#[derive(Debug, Clone)]
+pub struct ClassPhases {
+    names: Vec<String>,
+    phases: Vec<Phases>,
+}
+
+impl ClassPhases {
+    /// One empty decomposition per class name.
+    pub fn new(names: &[String]) -> Self {
+        ClassPhases {
+            names: names.to_vec(),
+            phases: names.iter().map(|_| Phases::new()).collect(),
+        }
+    }
+
+    /// Record one result's decomposition under its class index.
+    pub fn record(
+        &mut self,
+        class: usize,
+        queue_wait_s: f64,
+        batch_wait_s: f64,
+        exec_s: f64,
+        tx_s: f64,
+    ) {
+        self.phases[class].record(queue_wait_s, batch_wait_s, exec_s, tx_s);
+    }
+
+    /// The decomposition of one class.
+    pub fn class(&self, class: usize) -> &Phases {
+        &self.phases[class]
+    }
+
+    /// Render as an object keyed by class name (sorted by the JSON
+    /// layer, like every report object).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        for (name, p) in self.names.iter().zip(&self.phases) {
+            o.set(name, p.to_json());
+        }
+        o
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -16,10 +16,89 @@
 //! on dispatch), so the estimate is O(workers) — constant for a fixed
 //! pool — not O(queue depth), and the earliest-free worker is cached
 //! (recomputed once per dispatch, the only operation that changes it)
-//! so the event loop's frequent next-start peeks are O(1). It
-//! deliberately ignores batching amortisation, making it a mildly
+//! so the event loop's frequent next-start peeks are O(1). By default
+//! it deliberately ignores batching amortisation, making it a mildly
 //! conservative (over-)estimate of the true wait; see `scheduler::batch`
-//! for why that bias is benign.
+//! for why that bias is benign. When the estimate becomes load-bearing
+//! (deadline-ordered scenario runs), the opt-in **batch-aware model**
+//! ([`CapacityTracker::enable_batch_aware`]) fits a per-batch-size cost
+//! ratio online — observed batch service time over the batch's summed
+//! serial estimates — and discounts the backlog term by the warmed
+//! ratio of the typical dispatched batch size, so backlog is no longer
+//! priced as serial work (carried ROADMAP item). Off (the default) the
+//! tracker carries no model state and every estimate is bit-identical
+//! to the serial formula above.
+
+/// Batch-size bins of the amortisation model (sizes 1..=8; larger
+/// batches share the last bin — the dispatcher's default `max_batch`).
+pub const BATCH_COST_BINS: usize = 8;
+/// EWMA step of both the per-bin ratio fits and the typical-size fit.
+pub const BATCH_COST_ALPHA: f64 = 0.1;
+/// Dispatches the model must observe before it discounts anything.
+pub const BATCH_COST_MIN_OBS: u64 = 16;
+/// Floor of the backlog discount — amortisation never claims more than
+/// an 8× speedup, so a wildly optimistic early fit cannot zero the
+/// wait term and re-create the queue-blind pathology.
+pub const BATCH_COST_MIN_DISCOUNT: f64 = 0.125;
+
+/// Online per-batch-size amortisation fit (see the module docs). One
+/// EWMA ratio per batch-size bin plus an EWMA of the dispatched batch
+/// size; the backlog discount reads the typical size's warmed bin.
+#[derive(Debug, Clone)]
+struct BatchCost {
+    /// `ratio[k]` ≈ E[service / Σ member estimates | batch size k+1].
+    ratio: [f64; BATCH_COST_BINS],
+    obs: [u64; BATCH_COST_BINS],
+    /// EWMA of dispatched batch sizes — picks the bin the discount reads.
+    mean_size: f64,
+    total_obs: u64,
+}
+
+impl BatchCost {
+    fn new() -> Self {
+        BatchCost {
+            ratio: [1.0; BATCH_COST_BINS],
+            obs: [0; BATCH_COST_BINS],
+            mean_size: 1.0,
+            total_obs: 0,
+        }
+    }
+
+    fn observe(&mut self, size: usize, est_sum_s: f64, service_s: f64) {
+        if size == 0 || !(est_sum_s > 0.0) || !service_s.is_finite() || service_s < 0.0 {
+            return;
+        }
+        // Bound the sample so one mispriced batch cannot wreck the fit.
+        let r = (service_s / est_sum_s).clamp(0.0, 4.0);
+        let b = size.min(BATCH_COST_BINS) - 1;
+        if self.obs[b] == 0 {
+            self.ratio[b] = r;
+        } else {
+            self.ratio[b] += BATCH_COST_ALPHA * (r - self.ratio[b]);
+        }
+        self.obs[b] += 1;
+        if self.total_obs == 0 {
+            self.mean_size = size as f64;
+        } else {
+            self.mean_size += BATCH_COST_ALPHA * (size as f64 - self.mean_size);
+        }
+        self.total_obs += 1;
+    }
+
+    /// Multiplier applied to the serial backlog sum: 1.0 until warmed,
+    /// then the typical batch size's fitted ratio, floored so the wait
+    /// term never vanishes entirely.
+    fn discount(&self) -> f64 {
+        if self.total_obs < BATCH_COST_MIN_OBS {
+            return 1.0;
+        }
+        let b = (self.mean_size.round() as usize).clamp(1, BATCH_COST_BINS) - 1;
+        if self.obs[b] == 0 {
+            return 1.0;
+        }
+        self.ratio[b].clamp(BATCH_COST_MIN_DISCOUNT, 1.0)
+    }
+}
 
 /// In-flight + backlog tracker for one device's worker pool.
 #[derive(Debug, Clone)]
@@ -35,6 +114,10 @@ pub struct CapacityTracker {
     backlog_est_s: f64,
     /// Batches dispatched (for utilisation reporting).
     dispatches: u64,
+    /// Opt-in amortisation model ([`CapacityTracker::
+    /// enable_batch_aware`]); `None` (the default) keeps the serial
+    /// pricing and the pre-model struct behaviour exactly.
+    cost: Option<BatchCost>,
 }
 
 impl CapacityTracker {
@@ -46,6 +129,41 @@ impl CapacityTracker {
             earliest: 0,
             backlog_est_s: 0.0,
             dispatches: 0,
+            cost: None,
+        }
+    }
+
+    /// Turn on the per-batch-size amortisation model (see module docs).
+    /// Until [`BATCH_COST_MIN_OBS`] batches have been observed via
+    /// [`CapacityTracker::observe_batch`] the wait estimate is unchanged.
+    pub fn enable_batch_aware(&mut self) {
+        if self.cost.is_none() {
+            self.cost = Some(BatchCost::new());
+        }
+    }
+
+    /// Is the amortisation model active?
+    pub fn batch_aware(&self) -> bool {
+        self.cost.is_some()
+    }
+
+    /// Feed the model one dispatched batch: its size, the sum of its
+    /// members' serial service estimates, and the service time the
+    /// executor actually charged. No-op unless
+    /// [`CapacityTracker::enable_batch_aware`] was called.
+    #[inline]
+    pub fn observe_batch(&mut self, size: usize, est_sum_s: f64, service_s: f64) {
+        if let Some(cost) = &mut self.cost {
+            cost.observe(size, est_sum_s, service_s);
+        }
+    }
+
+    /// Multiplier the wait estimate applies to the serial backlog sum
+    /// (1.0 when the model is off or not yet warmed).
+    pub fn backlog_discount(&self) -> f64 {
+        match &self.cost {
+            Some(cost) => cost.discount(),
+            None => 1.0,
         }
     }
 
@@ -103,7 +221,15 @@ impl CapacityTracker {
             .iter()
             .map(|&t| (t - now_s).max(0.0))
             .sum();
-        (inflight + self.backlog_est_s) / self.free_at_s.len() as f64
+        // The disabled path keeps the exact pre-model expression (no
+        // ×1.0 detour) so legacy runs stay bit-identical by structure,
+        // not by accident of float identities.
+        match &self.cost {
+            Some(cost) => {
+                (inflight + self.backlog_est_s * cost.discount()) / self.free_at_s.len() as f64
+            }
+            None => (inflight + self.backlog_est_s) / self.free_at_s.len() as f64,
+        }
     }
 
     /// Current backlog estimate (seconds of serial work).
@@ -281,6 +407,90 @@ mod tests {
         t.advance_to(9.0);
         assert_eq!(t.earliest_free(), (0, 9.0));
         assert!(t.all_idle(9.0));
+    }
+
+    #[test]
+    fn batch_aware_off_is_bit_identical() {
+        // The model must be strictly pay-for-use: a tracker that never
+        // enables it prices backlog serially, and observe_batch is a
+        // no-op rather than silently arming anything.
+        let mut plain = CapacityTracker::new(2);
+        let mut poked = CapacityTracker::new(2);
+        for t in [&mut plain, &mut poked] {
+            for _ in 0..6 {
+                t.on_admit(0.25);
+            }
+            t.on_dispatch(0, 0.5, 1.5);
+        }
+        for _ in 0..200 {
+            poked.observe_batch(8, 1.0, 0.2);
+        }
+        assert!(!poked.batch_aware());
+        assert_eq!(poked.backlog_discount(), 1.0);
+        assert_eq!(
+            plain.expected_wait_s(0.7).to_bits(),
+            poked.expected_wait_s(0.7).to_bits()
+        );
+    }
+
+    #[test]
+    fn batch_aware_warms_up_before_discounting() {
+        let mut t = CapacityTracker::new(1);
+        t.enable_batch_aware();
+        assert!(t.batch_aware());
+        t.on_admit(1.0);
+        // Below the warmup threshold nothing changes even though every
+        // sample says batching halves the work.
+        for _ in 0..(BATCH_COST_MIN_OBS - 1) {
+            t.observe_batch(4, 1.0, 0.5);
+        }
+        assert_eq!(t.backlog_discount(), 1.0);
+        assert!((t.expected_wait_s(0.0) - 1.0).abs() < 1e-12);
+        // One more observation crosses the threshold; the EWMA saw only
+        // 0.5 ratios, so the discount is exactly 0.5 and the backlog
+        // term is repriced.
+        t.observe_batch(4, 1.0, 0.5);
+        assert!((t.backlog_discount() - 0.5).abs() < 1e-12);
+        assert!((t.expected_wait_s(0.0) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn batch_aware_discount_is_clamped_both_ways() {
+        // Ratios above 1 (estimates too optimistic) must never inflate
+        // the wait beyond the serial price...
+        let mut hi = CapacityTracker::new(1);
+        hi.enable_batch_aware();
+        for _ in 0..BATCH_COST_MIN_OBS {
+            hi.observe_batch(2, 1.0, 3.0);
+        }
+        assert_eq!(hi.backlog_discount(), 1.0);
+        // ...and absurdly small ratios are floored so the wait term
+        // cannot vanish.
+        let mut lo = CapacityTracker::new(1);
+        lo.enable_batch_aware();
+        for _ in 0..BATCH_COST_MIN_OBS {
+            lo.observe_batch(8, 1.0, 0.001);
+        }
+        assert_eq!(lo.backlog_discount(), BATCH_COST_MIN_DISCOUNT);
+    }
+
+    #[test]
+    fn batch_aware_reads_typical_size_bin() {
+        let mut t = CapacityTracker::new(1);
+        t.enable_batch_aware();
+        // Size-1 batches have ratio 1.0; size-4 batches run at 0.4.
+        // After a long run of size-4 dispatches the typical size is 4,
+        // so the discount reads the size-4 bin, not the stale size-1 one.
+        t.observe_batch(1, 1.0, 1.0);
+        for _ in 0..64 {
+            t.observe_batch(4, 1.0, 0.4);
+        }
+        assert!((t.backlog_discount() - 0.4).abs() < 1e-9);
+        // Degenerate samples are ignored outright.
+        t.observe_batch(0, 1.0, 0.4);
+        t.observe_batch(4, 0.0, 0.4);
+        t.observe_batch(4, 1.0, f64::NAN);
+        assert!((t.backlog_discount() - 0.4).abs() < 1e-9);
     }
 
     #[test]

@@ -655,6 +655,35 @@ impl Dispatcher {
         }
     }
 
+    /// Enable the multi-tenant admission front-end with explicit
+    /// per-tenant specs (weight + quota each), optionally ordering each
+    /// tenant's sub-queue earliest-deadline-first
+    /// ([`FairQueue::new_edf`]). The scenario engine maps SLO service
+    /// classes onto tenants through this;
+    /// [`Dispatcher::enable_fair_tenants`] remains the equal-share FIFO
+    /// shorthand and is unchanged.
+    pub fn enable_fair_tenants_spec(&mut self, specs: &[TenantSpec], edf: bool) {
+        assert!(!specs.is_empty(), "fair front-end needs at least one tenant");
+        for lane in &mut self.lanes {
+            lane.fair = Some(if edf {
+                FairQueue::new_edf(specs)
+            } else {
+                FairQueue::new(specs)
+            });
+        }
+    }
+
+    /// Turn on the per-batch-size amortisation model in every lane's
+    /// capacity tracker ([`CapacityTracker::enable_batch_aware`]):
+    /// dispatched batches feed the online fit and the expected-wait
+    /// estimate stops pricing backlog as serial work once warmed. Off
+    /// by default; legacy runs never touch it.
+    pub fn enable_batch_aware_wait(&mut self) {
+        for lane in &mut self.lanes {
+            lane.tracker.enable_batch_aware();
+        }
+    }
+
     /// Build a fleet dispatcher: one lane per device spec, indexed in
     /// order (the fleet's device ids). Panics on an empty spec list —
     /// a dispatcher with no lanes can route nothing.
@@ -828,7 +857,22 @@ impl Dispatcher {
         &mut self,
         lane: usize,
         tenant: usize,
+        rq: QueuedRequest,
+    ) -> Admission {
+        self.submit_lane_tenant_deadline(lane, tenant, rq, f64::INFINITY)
+    }
+
+    /// [`Dispatcher::submit_lane_tenant`] with an absolute deadline tag:
+    /// an EDF front-end ([`Dispatcher::enable_fair_tenants_spec`]) pops
+    /// the earliest deadline within the tenant's share; FIFO front-ends
+    /// ignore the tag (the `INFINITY` sentinel used by the plain path
+    /// also sorts behind every real deadline, so mixing is safe).
+    pub fn submit_lane_tenant_deadline(
+        &mut self,
+        lane: usize,
+        tenant: usize,
         mut rq: QueuedRequest,
+        deadline_s: f64,
     ) -> Admission {
         rq.bucket = self.policy.bucket_of(rq.m_est);
         rq.hedge = None;
@@ -836,7 +880,7 @@ impl Dispatcher {
         let admission = match l.fair.as_mut() {
             None => l.offer(rq),
             Some(fair) => {
-                let admission = fair.offer(tenant, rq);
+                let admission = fair.offer_deadline(tenant, rq, deadline_s);
                 if admission.is_admitted() {
                     // The capacity view must include front-end backlog:
                     // account here, not at pass-through (pumping is
@@ -1209,6 +1253,9 @@ impl Dispatcher {
             let lane = &mut self.lanes[li];
             let (worker, _free) = lane.tracker.earliest_free();
             lane.tracker.on_dispatch(worker, est_sum, done_s);
+            // Feeds the opt-in amortisation fit; a no-op unless
+            // `enable_batch_aware_wait` armed this lane's tracker.
+            lane.tracker.observe_batch(batch.len(), est_sum, service_s);
         }
         self.stats.record(batch.len());
         let batch_size = batch.len();

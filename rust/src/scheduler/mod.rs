@@ -91,7 +91,10 @@ pub mod queue;
 
 pub use baseline::BaselineDispatcher;
 pub use batch::{BatchPolicy, BatchStats};
-pub use capacity::CapacityTracker;
+pub use capacity::{
+    CapacityTracker, BATCH_COST_ALPHA, BATCH_COST_BINS, BATCH_COST_MIN_DISCOUNT,
+    BATCH_COST_MIN_OBS,
+};
 pub use dispatch::{
     BatchExecutor, Completion, CompletionKind, Dispatcher, DispatcherConfig, HedgeOutcome,
     HedgeStats, LaneExecutor, LaneHedgeOutcome, LaneSpec, RetryPolicy,

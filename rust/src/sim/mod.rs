@@ -7,10 +7,17 @@
 //! policy **on identical ground truth**: for each request the true edge
 //! time, cloud time and network cost are sampled once, and each policy is
 //! charged from the same table — so policy deltas are never noise.
+//!
+//! [`scenario`] is the unified front door: every public `run_*` entry
+//! point in [`harness`] is a thin wrapper over one [`scenario::RunSpec`]
+//! dispatch, and a declarative [`scenario::ScenarioSpec`] (time-varying
+//! load, SLO service classes, drift and fault timelines) drives the
+//! scenario engine behind `cnmt experiment scenario`.
 
 pub mod characterize;
 pub mod fault;
 pub mod harness;
+pub mod scenario;
 
 pub use characterize::{characterize, Characterization};
 pub use fault::{FaultMode, FaultSpec};
@@ -21,4 +28,9 @@ pub use harness::{
     run_fleet_outage_traced, run_fleet_streamed, run_policy, run_with_estimator, AdaptiveOpts,
     ContendedResult, ContentionOpts, DetectRunOut, DriftSpec, FleetOpts, FleetResult,
     OutageResult, PolicyResult, RequestTruth, RetryPolicy, TruthTable,
+};
+pub use scenario::{
+    run_scenario, run_scenario_engine, ClassAssigner, ClassOutcome, ClassSpec, EmptyStream,
+    HedgeShape, LoadShape, RunSpec, ScenarioMode, ScenarioOutage, ScenarioOutcome,
+    ScenarioResult, ScenarioScope, ScenarioSource, ScenarioSpec, Scheduling, Spike,
 };

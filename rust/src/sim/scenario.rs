@@ -1,0 +1,2223 @@
+//! The declarative scenario layer: one JSON [`ScenarioSpec`] composing
+//! time-varying offered load, correlated multi-device drift, fault
+//! sequences and latency-SLO service classes — plus the unified
+//! [`run_scenario`] facade every public `run_*` harness entry point is
+//! a thin wrapper over.
+//!
+//! Two pieces live here:
+//!
+//! * **The facade** — [`RunSpec`] names a harness configuration
+//!   (pair/fleet scope, open/closed loop, outage/detect machinery,
+//!   optional recorder and detector) and [`run_scenario`] dispatches it
+//!   to the single core implementation each legacy signature used to
+//!   own. The wrappers in [`super::harness`] are proven bit-identical
+//!   to the cores by the differential tests below — the refactor is an
+//!   API collapse, not a behaviour change.
+//! * **The scenario engine** — [`run_scenario_engine`] replays a
+//!   workload over a fleet topology under a [`ScenarioSpec`]: every
+//!   request is tagged with a service class (interactive / batch /
+//!   background shares via the deterministic [`ClassAssigner`]),
+//!   scheduled FIFO (class-blind baseline) or earliest-deadline-first
+//!   within per-class [`crate::scheduler::FairQueue`] quotas, optionally
+//!   hedged with a class-scaled error bar (spending the waste budget on
+//!   interactive traffic first), and charged ground truth scaled by any
+//!   number of concurrent [`DriftSpec`]s and [`FaultSpec`]s. The result
+//!   carries per-class SLO-attainment alongside the classic fleet
+//!   aggregates, mirrored float-exactly by
+//!   `python/tools/scenario_mirror.py`.
+//!
+//! Loading is **fail-closed** like [`crate::fleet::Topology::load`]:
+//! unknown keys anywhere in the spec, crash faults (v1 composes
+//! slow/link only — crash + failover stays with `cnmt experiment
+//! outage`), overlapping same-lane fault windows, and share vectors
+//! that do not sum to 1 are all rejected at parse time.
+
+use std::path::Path;
+
+use crate::coordinator::PolicyKind;
+use crate::devices::DeviceKind;
+use crate::fleet::{FleetSelector, FleetStrategy, Topology};
+use crate::metrics::{Histogram, OnlineStats};
+use crate::obs::{ClassPhases, Detector, Event as ObsEvent, FlightRecorder, Phases, TraceMeta};
+use crate::scheduler::{
+    Completion, CompletionKind, Dispatcher, HedgeBudget, LaneExecutor, LaneHedgeOutcome,
+    QueuedRequest, RetryPolicy, TenantSpec,
+};
+use crate::util::Json;
+use crate::{Error, Result};
+
+use super::characterize::Characterization;
+use super::fault::{FaultMode, FaultSpec};
+use super::harness::{
+    run_closed_loop_core, run_closed_loop_streamed_core, run_contended_impl,
+    run_contended_streamed_impl, run_fleet_closed_core, run_fleet_closed_streamed_core,
+    run_fleet_core, run_fleet_outage_detect_core, run_fleet_outage_impl,
+    run_fleet_streamed_core, ContendedResult, ContentionOpts, DetectRunOut, DriftSpec,
+    FleetOpts, FleetResult, OutageResult, RequestTruth,
+};
+
+/// Gateway heartbeat cadence for the shared T_tx estimate (seconds) —
+/// the same constant the harness replay loops use (private there; the
+/// engine keeps its own copy so the arithmetic stays identical).
+const TTX_REFRESH_S: f64 = 60.0;
+
+// ------------------------------------------------------------------ spec
+
+/// Time-varying offered load: a base rate modulated by an optional
+/// diurnal sinusoid and any number of multiplicative flash-crowd
+/// spikes.
+#[derive(Debug, Clone)]
+pub struct LoadShape {
+    /// Base offered rate (requests/second).
+    pub base_rps: f64,
+    /// Sinusoid period (seconds); only read when `amplitude > 0`.
+    pub period_s: f64,
+    /// Sinusoid amplitude as a fraction of the base rate, in `[0, 1)`
+    /// (0 = flat load).
+    pub amplitude: f64,
+    /// Flash-crowd windows, each multiplying the instantaneous rate.
+    pub spikes: Vec<Spike>,
+}
+
+/// One flash-crowd window: the offered rate is multiplied by `factor`
+/// while `t ∈ [start_s, start_s + duration_s)`.
+#[derive(Debug, Clone, Copy)]
+pub struct Spike {
+    /// Window start (seconds).
+    pub start_s: f64,
+    /// Window length (seconds).
+    pub duration_s: f64,
+    /// Rate multiplier while open.
+    pub factor: f64,
+}
+
+impl LoadShape {
+    /// Instantaneous offered rate at clock time `t_s` (requests/s):
+    /// `base · (1 + amplitude·sin(2πt/period)) · Π active spike factors`.
+    pub fn rate(&self, t_s: f64) -> f64 {
+        let mut r = self.base_rps;
+        if self.amplitude > 0.0 {
+            r *= 1.0 + self.amplitude * (2.0 * std::f64::consts::PI * t_s / self.period_s).sin();
+        }
+        for s in &self.spikes {
+            if t_s >= s.start_s && t_s < s.start_s + s.duration_s {
+                r *= s.factor;
+            }
+        }
+        r
+    }
+
+    fn validate(&self) -> Result<()> {
+        if !(self.base_rps.is_finite() && self.base_rps > 0.0) {
+            return Err(Error::Config(format!(
+                "scenario load: base_rps {} must be finite and > 0",
+                self.base_rps
+            )));
+        }
+        if !(self.amplitude >= 0.0 && self.amplitude < 1.0) {
+            return Err(Error::Config(format!(
+                "scenario load: amplitude {} must be in [0, 1)",
+                self.amplitude
+            )));
+        }
+        if self.amplitude > 0.0 && !(self.period_s.is_finite() && self.period_s > 0.0) {
+            return Err(Error::Config(format!(
+                "scenario load: period_s {} must be finite and > 0",
+                self.period_s
+            )));
+        }
+        for (i, s) in self.spikes.iter().enumerate() {
+            if !(s.start_s.is_finite() && s.start_s >= 0.0)
+                || !(s.duration_s.is_finite() && s.duration_s > 0.0)
+                || !(s.factor.is_finite() && s.factor > 0.0)
+            {
+                return Err(Error::Config(format!(
+                    "scenario load: spike {i} needs start_s >= 0, duration_s > 0, factor > 0"
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// One service class: a latency SLO plus its share of the offered
+/// stream and its scheduling/hedging knobs.
+#[derive(Debug, Clone)]
+pub struct ClassSpec {
+    /// Class label (`interactive`, `batch`, …) — report key.
+    pub name: String,
+    /// Latency SLO (seconds): a request meets its deadline when
+    /// end-to-end latency ≤ this.
+    pub deadline_s: f64,
+    /// Fraction of offered requests in this class; shares sum to 1.
+    pub share: f64,
+    /// Weighted-round-robin weight of the class's fair-queue tenant.
+    pub weight: f64,
+    /// Per-lane queued-depth quota of the class's fair-queue tenant.
+    pub quota: usize,
+    /// Class-aware hedging: this class's hedge error bar is the global
+    /// bar × this scale (interactive > 1 spends the waste budget first;
+    /// 0 never hedges the class).
+    pub hedge_scale: f64,
+}
+
+/// How admitted requests are ordered for dispatch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scheduling {
+    /// Class-blind arrival order (the baseline): requests go straight
+    /// to the per-lane queues.
+    Fifo,
+    /// Earliest-deadline-first within per-class quotas of the fair
+    /// front-end ([`crate::scheduler::FairQueue::new_edf`]).
+    Edf,
+}
+
+impl Scheduling {
+    /// The JSON tag / report label.
+    pub fn tag(&self) -> &'static str {
+        match self {
+            Scheduling::Fifo => "fifo",
+            Scheduling::Edf => "edf",
+        }
+    }
+}
+
+/// Hedged-dispatch shape for a scenario run.
+#[derive(Debug, Clone, Copy)]
+pub struct HedgeShape {
+    /// Hedge error bar (seconds); 0 disables hedging.
+    pub margin_s: f64,
+    /// Wasted-work budget handed to [`HedgeBudget`] (fraction in
+    /// `(0, 1)`); 0 runs the fixed margin with no controller.
+    pub waste_budget: f64,
+    /// Scale each class's bar by its `hedge_scale` (class-aware
+    /// hedging) instead of one global bar.
+    pub class_aware: bool,
+}
+
+/// A declarative scenario: workload shape, service classes, scheduling
+/// discipline, hedging, and the drift/fault timeline — everything one
+/// `cnmt experiment scenario` cell needs, loadable from JSON like
+/// [`Topology::load`].
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    /// Scenario label — report key.
+    pub name: String,
+    /// Topology preset name ([`Topology::preset`]).
+    pub topology: String,
+    /// Master seed of the synthetic workload.
+    pub seed: u64,
+    /// Requests offered over the run.
+    pub requests: usize,
+    /// Time-varying offered load.
+    pub load: LoadShape,
+    /// Service classes; shares sum to 1.
+    pub classes: Vec<ClassSpec>,
+    /// Dispatch ordering discipline.
+    pub scheduling: Scheduling,
+    /// Hedged dispatch (None = never hedge).
+    pub hedge: Option<HedgeShape>,
+    /// Concurrent drifts, each scoped by tier or pinned lane.
+    pub drifts: Vec<DriftSpec>,
+    /// Fault timeline (slow/link only; non-overlapping per lane).
+    pub faults: Vec<FaultSpec>,
+    /// Feed observed batch-cost ratios back into the expected-wait
+    /// estimate ([`crate::scheduler::CapacityTracker`] batch-aware
+    /// mode).
+    pub batch_aware_wait: bool,
+}
+
+/// Reject any key of `j` outside `allowed` — the fail-closed loader
+/// discipline ([`crate::obs::event`]'s `check_keys`, applied to specs).
+fn check_spec_keys(j: &Json, what: &str, allowed: &[&str]) -> Result<()> {
+    for k in j.as_object()?.keys() {
+        if !allowed.contains(&k.as_str()) {
+            return Err(Error::Config(format!(
+                "scenario {what}: unknown key `{k}`"
+            )));
+        }
+    }
+    Ok(())
+}
+
+impl ScenarioSpec {
+    /// Parse a scenario from its JSON spec. Fails closed: unknown keys
+    /// at the root or in any sub-object, crash faults, overlapping
+    /// same-lane fault windows, and malformed class shares are all
+    /// errors.
+    pub fn from_json(j: &Json) -> Result<ScenarioSpec> {
+        check_spec_keys(
+            j,
+            "spec",
+            &[
+                "name", "topology", "seed", "requests", "load", "classes", "scheduling",
+                "hedge", "drifts", "faults", "batch_aware_wait",
+            ],
+        )?;
+        let load_j = j.get("load")?;
+        check_spec_keys(load_j, "load", &["base_rps", "period_s", "amplitude", "spikes"])?;
+        let mut spikes = Vec::new();
+        if let Some(arr) = load_j.get_opt("spikes")? {
+            for s in arr.as_array()? {
+                check_spec_keys(s, "spike", &["start_s", "duration_s", "factor"])?;
+                spikes.push(Spike {
+                    start_s: s.get("start_s")?.as_f64()?,
+                    duration_s: s.get("duration_s")?.as_f64()?,
+                    factor: s.get("factor")?.as_f64()?,
+                });
+            }
+        }
+        let load = LoadShape {
+            base_rps: load_j.get("base_rps")?.as_f64()?,
+            period_s: match load_j.get_opt("period_s")? {
+                Some(p) => p.as_f64()?,
+                None => 60.0,
+            },
+            amplitude: match load_j.get_opt("amplitude")? {
+                Some(a) => a.as_f64()?,
+                None => 0.0,
+            },
+            spikes,
+        };
+        let mut classes = Vec::new();
+        for c in j.get("classes")?.as_array()? {
+            check_spec_keys(
+                c,
+                "class",
+                &["name", "deadline_s", "share", "weight", "quota", "hedge_scale"],
+            )?;
+            classes.push(ClassSpec {
+                name: c.get("name")?.as_str()?.to_string(),
+                deadline_s: c.get("deadline_s")?.as_f64()?,
+                share: c.get("share")?.as_f64()?,
+                weight: match c.get_opt("weight")? {
+                    Some(w) => w.as_f64()?,
+                    None => 1.0,
+                },
+                quota: c.get("quota")?.as_usize()?,
+                hedge_scale: match c.get_opt("hedge_scale")? {
+                    Some(h) => h.as_f64()?,
+                    None => 1.0,
+                },
+            });
+        }
+        let scheduling = match j.get("scheduling")?.as_str()? {
+            "fifo" => Scheduling::Fifo,
+            "edf" => Scheduling::Edf,
+            other => {
+                return Err(Error::Config(format!(
+                    "scenario scheduling `{other}` is not fifo|edf"
+                )))
+            }
+        };
+        let hedge = match j.get_opt("hedge")? {
+            Some(Json::Null) | None => None,
+            Some(h) => {
+                check_spec_keys(h, "hedge", &["margin_s", "waste_budget", "class_aware"])?;
+                Some(HedgeShape {
+                    margin_s: h.get("margin_s")?.as_f64()?,
+                    waste_budget: match h.get_opt("waste_budget")? {
+                        Some(b) => b.as_f64()?,
+                        None => 0.0,
+                    },
+                    class_aware: match h.get_opt("class_aware")? {
+                        Some(c) => c.as_bool()?,
+                        None => false,
+                    },
+                })
+            }
+        };
+        let mut drifts = Vec::new();
+        if let Some(arr) = j.get_opt("drifts")? {
+            for d in arr.as_array()? {
+                // DriftSpec::from_json is lenient about extras; the
+                // scenario loader is not.
+                check_spec_keys(d, "drift", &["device", "lane", "start_s", "ramp_s", "factor"])?;
+                drifts.push(DriftSpec::from_json(d)?);
+            }
+        }
+        let mut faults = Vec::new();
+        if let Some(arr) = j.get_opt("faults")? {
+            for f in arr.as_array()? {
+                check_spec_keys(f, "fault", &["lane", "mode", "start_s", "recover_s", "factor"])?;
+                faults.push(FaultSpec::from_json(f)?);
+            }
+        }
+        let spec = ScenarioSpec {
+            name: j.get("name")?.as_str()?.to_string(),
+            topology: j.get("topology")?.as_str()?.to_string(),
+            seed: j.get("seed")?.as_i64()? as u64,
+            requests: j.get("requests")?.as_usize()?,
+            load,
+            classes,
+            scheduling,
+            hedge,
+            drifts,
+            faults,
+            batch_aware_wait: match j.get_opt("batch_aware_wait")? {
+                Some(b) => b.as_bool()?,
+                None => false,
+            },
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Load a scenario spec from a JSON file.
+    pub fn load(path: &Path) -> Result<ScenarioSpec> {
+        ScenarioSpec::from_json(&Json::parse_file(path)?)
+    }
+
+    /// Serialise for reports / spec round-trips.
+    pub fn to_json(&self) -> Json {
+        let mut load = Json::object();
+        load.set("base_rps", Json::Num(self.load.base_rps))
+            .set("period_s", Json::Num(self.load.period_s))
+            .set("amplitude", Json::Num(self.load.amplitude))
+            .set(
+                "spikes",
+                Json::Array(
+                    self.load
+                        .spikes
+                        .iter()
+                        .map(|s| {
+                            let mut o = Json::object();
+                            o.set("start_s", Json::Num(s.start_s))
+                                .set("duration_s", Json::Num(s.duration_s))
+                                .set("factor", Json::Num(s.factor));
+                            o
+                        })
+                        .collect(),
+                ),
+            );
+        let classes = Json::Array(
+            self.classes
+                .iter()
+                .map(|c| {
+                    let mut o = Json::object();
+                    o.set("name", Json::Str(c.name.clone()))
+                        .set("deadline_s", Json::Num(c.deadline_s))
+                        .set("share", Json::Num(c.share))
+                        .set("weight", Json::Num(c.weight))
+                        .set("quota", Json::Num(c.quota as f64))
+                        .set("hedge_scale", Json::Num(c.hedge_scale));
+                    o
+                })
+                .collect(),
+        );
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("topology", Json::Str(self.topology.clone()))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("requests", Json::Num(self.requests as f64))
+            .set("load", load)
+            .set("classes", classes)
+            .set("scheduling", Json::Str(self.scheduling.tag().to_string()));
+        if let Some(h) = &self.hedge {
+            let mut hj = Json::object();
+            hj.set("margin_s", Json::Num(h.margin_s))
+                .set("waste_budget", Json::Num(h.waste_budget))
+                .set("class_aware", Json::Bool(h.class_aware));
+            o.set("hedge", hj);
+        }
+        o.set(
+            "drifts",
+            Json::Array(self.drifts.iter().map(|d| d.to_json()).collect()),
+        )
+        .set(
+            "faults",
+            Json::Array(self.faults.iter().map(|f| f.to_json()).collect()),
+        )
+        .set("batch_aware_wait", Json::Bool(self.batch_aware_wait));
+        o
+    }
+
+    /// Structural validation (everything not needing the topology).
+    pub fn validate(&self) -> Result<()> {
+        if self.name.is_empty() {
+            return Err(Error::Config("scenario needs a non-empty name".into()));
+        }
+        if self.requests == 0 {
+            return Err(Error::Config("scenario needs requests > 0".into()));
+        }
+        self.load.validate()?;
+        if self.classes.is_empty() {
+            return Err(Error::Config("scenario needs at least one class".into()));
+        }
+        let mut share_sum = 0.0f64;
+        for (i, c) in self.classes.iter().enumerate() {
+            if c.name.is_empty() {
+                return Err(Error::Config(format!("scenario class {i}: empty name")));
+            }
+            if self.classes.iter().take(i).any(|o| o.name == c.name) {
+                return Err(Error::Config(format!(
+                    "scenario class `{}` appears twice",
+                    c.name
+                )));
+            }
+            if !(c.deadline_s.is_finite() && c.deadline_s > 0.0) {
+                return Err(Error::Config(format!(
+                    "scenario class `{}`: deadline_s {} must be finite and > 0",
+                    c.name, c.deadline_s
+                )));
+            }
+            if !(c.share.is_finite() && c.share > 0.0) {
+                return Err(Error::Config(format!(
+                    "scenario class `{}`: share {} must be finite and > 0",
+                    c.name, c.share
+                )));
+            }
+            if !(c.weight.is_finite() && c.weight > 0.0) {
+                return Err(Error::Config(format!(
+                    "scenario class `{}`: weight {} must be finite and > 0",
+                    c.name, c.weight
+                )));
+            }
+            if c.quota == 0 {
+                return Err(Error::Config(format!(
+                    "scenario class `{}`: quota must be >= 1",
+                    c.name
+                )));
+            }
+            if !(c.hedge_scale.is_finite() && c.hedge_scale >= 0.0) {
+                return Err(Error::Config(format!(
+                    "scenario class `{}`: hedge_scale {} must be finite and >= 0",
+                    c.name, c.hedge_scale
+                )));
+            }
+            share_sum += c.share;
+        }
+        if (share_sum - 1.0).abs() > 1e-9 {
+            return Err(Error::Config(format!(
+                "scenario class shares sum to {share_sum}, need 1"
+            )));
+        }
+        if let Some(h) = &self.hedge {
+            if !(h.margin_s.is_finite() && h.margin_s >= 0.0) {
+                return Err(Error::Config(format!(
+                    "scenario hedge: margin_s {} must be finite and >= 0",
+                    h.margin_s
+                )));
+            }
+            if !(h.waste_budget >= 0.0 && h.waste_budget < 1.0) {
+                return Err(Error::Config(format!(
+                    "scenario hedge: waste_budget {} must be in [0, 1)",
+                    h.waste_budget
+                )));
+            }
+        }
+        for f in &self.faults {
+            f.validate()?;
+            if matches!(f.mode, FaultMode::Crash) {
+                return Err(Error::Config(
+                    "scenario faults compose slow|link only (crash + failover \
+                     lives in `cnmt experiment outage`)"
+                        .into(),
+                ));
+            }
+        }
+        for (i, a) in self.faults.iter().enumerate() {
+            for b in self.faults.iter().skip(i + 1) {
+                if a.lane == b.lane && a.start_s < b.recover_s && b.start_s < a.recover_s {
+                    return Err(Error::Config(format!(
+                        "scenario faults on lane {} overlap: [{}, {}) and [{}, {})",
+                        a.lane, a.start_s, a.recover_s, b.start_s, b.recover_s
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Validate against the topology the scenario will run over.
+    pub fn validate_for(&self, topo: &Topology) -> Result<()> {
+        self.validate()?;
+        for f in &self.faults {
+            f.validate_for(topo)?;
+        }
+        for (i, d) in self.drifts.iter().enumerate() {
+            if let Some(lane) = d.lane {
+                if lane >= topo.len() {
+                    return Err(Error::Config(format!(
+                        "scenario drift {i}: lane {lane} out of range for topology {} \
+                         ({} devices)",
+                        topo.name,
+                        topo.len()
+                    )));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Resolve the spec's topology preset.
+    pub fn topology(&self) -> Result<Topology> {
+        Topology::preset(&self.topology)
+    }
+}
+
+/// Deterministic share-tracking class assignment: request `i` joins the
+/// class with the largest share deficit `share·(i+1) − assigned`
+/// (lowest index on ties), so every prefix of the stream matches the
+/// share vector to within one request — and the Python mirror can
+/// replay the exact sequence with the same integer arithmetic.
+#[derive(Debug, Clone)]
+pub struct ClassAssigner {
+    shares: Vec<f64>,
+    assigned: Vec<u64>,
+    seen: u64,
+}
+
+impl ClassAssigner {
+    /// Build the assigner from the spec's class shares.
+    pub fn new(classes: &[ClassSpec]) -> ClassAssigner {
+        ClassAssigner {
+            shares: classes.iter().map(|c| c.share).collect(),
+            assigned: vec![0; classes.len()],
+            seen: 0,
+        }
+    }
+
+    /// The class of the next request.
+    pub fn next(&mut self) -> usize {
+        let target = (self.seen + 1) as f64;
+        let mut best = 0usize;
+        let mut best_deficit = self.shares[0] * target - self.assigned[0] as f64;
+        for k in 1..self.shares.len() {
+            let deficit = self.shares[k] * target - self.assigned[k] as f64;
+            if deficit > best_deficit {
+                best = k;
+                best_deficit = deficit;
+            }
+        }
+        self.assigned[best] += 1;
+        self.seen += 1;
+        best
+    }
+}
+
+// ---------------------------------------------------------------- facade
+
+/// How the workload drives the harness.
+#[derive(Debug, Clone, Copy)]
+pub enum ScenarioMode {
+    /// Open-loop: requests arrive at their trace timestamps.
+    Open,
+    /// Closed-loop: `clients` bounded-outstanding clients with
+    /// `think_s` seconds of think time.
+    Closed {
+        /// Concurrent clients.
+        clients: usize,
+        /// Think time between a result and the next submission (s).
+        think_s: f64,
+    },
+}
+
+/// What the workload runs against.
+#[derive(Clone, Copy)]
+pub enum ScenarioScope<'a> {
+    /// The classic edge/cloud pair under one routing policy.
+    Pair {
+        /// Routing policy.
+        policy: PolicyKind,
+        /// Pair harness options.
+        opts: &'a ContentionOpts,
+    },
+    /// An N-device fleet topology.
+    Fleet {
+        /// The fleet shape.
+        topo: &'a Topology,
+        /// Fleet harness options.
+        opts: &'a FleetOpts,
+    },
+}
+
+/// Failure-injection machinery attached to a fleet run.
+#[derive(Clone, Copy)]
+pub enum ScenarioOutage<'a> {
+    /// No outage machinery.
+    Off,
+    /// One injected fault with retry/failover handling.
+    Failover {
+        /// The injected fault.
+        fault: &'a FaultSpec,
+        /// Timeout/backoff/budget policy.
+        retry: &'a RetryPolicy,
+        /// Health-tracking failover on, or the health-blind baseline.
+        failover: bool,
+    },
+    /// Failover armed plus an online anomaly detector
+    /// (observation-only).
+    Detect {
+        /// The injected fault (None = fault-free twin).
+        fault: Option<&'a FaultSpec>,
+        /// Timeout/backoff/budget policy.
+        retry: &'a RetryPolicy,
+    },
+}
+
+/// One harness configuration for [`run_scenario`] — the product every
+/// legacy `run_*` signature is a point of.
+pub struct RunSpec<'a> {
+    /// Pair or fleet scope.
+    pub scope: ScenarioScope<'a>,
+    /// Open- or closed-loop drive.
+    pub mode: ScenarioMode,
+    /// Outage machinery (fleet only).
+    pub outage: ScenarioOutage<'a>,
+    /// Declarative scenario overlay (fleet + open + pool only).
+    pub scenario: Option<&'a ScenarioSpec>,
+    /// Decision-log flight recorder to attach.
+    pub rec: Option<FlightRecorder>,
+    /// Online anomaly detector (detect outage mode only).
+    pub det: Option<Detector>,
+}
+
+impl<'a> RunSpec<'a> {
+    fn base(scope: ScenarioScope<'a>) -> RunSpec<'a> {
+        RunSpec {
+            scope,
+            mode: ScenarioMode::Open,
+            outage: ScenarioOutage::Off,
+            scenario: None,
+            rec: None,
+            det: None,
+        }
+    }
+
+    /// Open-loop pair replay ([`super::harness::run_contended`]).
+    pub fn contended(policy: PolicyKind, opts: &'a ContentionOpts) -> RunSpec<'a> {
+        RunSpec::base(ScenarioScope::Pair { policy, opts })
+    }
+
+    /// Traced open-loop pair replay.
+    pub fn contended_traced(
+        policy: PolicyKind,
+        opts: &'a ContentionOpts,
+        rec: FlightRecorder,
+    ) -> RunSpec<'a> {
+        RunSpec { rec: Some(rec), ..RunSpec::base(ScenarioScope::Pair { policy, opts }) }
+    }
+
+    /// Closed-loop pair run ([`super::harness::run_closed_loop`]).
+    pub fn closed_loop(
+        policy: PolicyKind,
+        opts: &'a ContentionOpts,
+        clients: usize,
+        think_s: f64,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            mode: ScenarioMode::Closed { clients, think_s },
+            ..RunSpec::base(ScenarioScope::Pair { policy, opts })
+        }
+    }
+
+    /// Open-loop fleet replay ([`super::harness::run_fleet`]).
+    pub fn fleet(topo: &'a Topology, opts: &'a FleetOpts) -> RunSpec<'a> {
+        RunSpec::base(ScenarioScope::Fleet { topo, opts })
+    }
+
+    /// Closed-loop fleet run ([`super::harness::run_fleet_closed`]).
+    pub fn fleet_closed(
+        topo: &'a Topology,
+        opts: &'a FleetOpts,
+        clients: usize,
+        think_s: f64,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            mode: ScenarioMode::Closed { clients, think_s },
+            ..RunSpec::base(ScenarioScope::Fleet { topo, opts })
+        }
+    }
+
+    /// Outage replay ([`super::harness::run_fleet_outage`]).
+    pub fn fleet_outage(
+        topo: &'a Topology,
+        opts: &'a FleetOpts,
+        fault: &'a FaultSpec,
+        retry: &'a RetryPolicy,
+        failover: bool,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            outage: ScenarioOutage::Failover { fault, retry, failover },
+            ..RunSpec::base(ScenarioScope::Fleet { topo, opts })
+        }
+    }
+
+    /// Traced outage replay.
+    #[allow(clippy::too_many_arguments)]
+    pub fn fleet_outage_traced(
+        topo: &'a Topology,
+        opts: &'a FleetOpts,
+        fault: &'a FaultSpec,
+        retry: &'a RetryPolicy,
+        failover: bool,
+        rec: FlightRecorder,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            outage: ScenarioOutage::Failover { fault, retry, failover },
+            rec: Some(rec),
+            ..RunSpec::base(ScenarioScope::Fleet { topo, opts })
+        }
+    }
+
+    /// Detection replay ([`super::harness::run_fleet_outage_detect`]).
+    pub fn fleet_outage_detect(
+        topo: &'a Topology,
+        opts: &'a FleetOpts,
+        fault: Option<&'a FaultSpec>,
+        retry: &'a RetryPolicy,
+        det: Detector,
+        rec: Option<FlightRecorder>,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            outage: ScenarioOutage::Detect { fault, retry },
+            rec,
+            det: Some(det),
+            ..RunSpec::base(ScenarioScope::Fleet { topo, opts })
+        }
+    }
+
+    /// Declarative scenario run (the engine).
+    pub fn scenario(
+        topo: &'a Topology,
+        opts: &'a FleetOpts,
+        spec: &'a ScenarioSpec,
+        rec: Option<FlightRecorder>,
+    ) -> RunSpec<'a> {
+        RunSpec {
+            scenario: Some(spec),
+            rec,
+            ..RunSpec::base(ScenarioScope::Fleet { topo, opts })
+        }
+    }
+}
+
+/// The never-yielding stream type pool-sourced runs pin the facade's
+/// iterator parameter to.
+pub type EmptyStream = std::iter::Empty<Result<RequestTruth>>;
+
+/// Where the workload comes from: a materialised pool or a lazy stream.
+pub enum ScenarioSource<'a, I = EmptyStream>
+where
+    I: Iterator<Item = Result<RequestTruth>>,
+{
+    /// A materialised, arrival-sorted pool.
+    Pool(&'a [RequestTruth]),
+    /// A lazy arrival/body stream (O(outstanding) memory).
+    Stream(I),
+}
+
+impl<'a> ScenarioSource<'a, EmptyStream> {
+    /// A pool source (pins the stream parameter so callers need no
+    /// turbofish).
+    pub fn pool(requests: &'a [RequestTruth]) -> ScenarioSource<'a, EmptyStream> {
+        ScenarioSource::Pool(requests)
+    }
+}
+
+impl<I> ScenarioSource<'static, I>
+where
+    I: Iterator<Item = Result<RequestTruth>>,
+{
+    /// A stream source.
+    pub fn stream(arrivals: I) -> ScenarioSource<'static, I> {
+        ScenarioSource::Stream(arrivals)
+    }
+}
+
+/// What [`run_scenario`] returns — one variant per result shape.
+#[derive(Debug)]
+pub enum ScenarioOutcome {
+    /// Pair result ([`ContendedResult`]).
+    Contended(ContendedResult),
+    /// Pair result plus the round-tripped recorder.
+    ContendedTraced(ContendedResult, FlightRecorder),
+    /// Fleet result ([`FleetResult`]).
+    Fleet(FleetResult),
+    /// Outage result ([`OutageResult`]).
+    Outage(OutageResult),
+    /// Outage result plus the round-tripped recorder.
+    OutageTraced(OutageResult, FlightRecorder),
+    /// Detection output plus the recorder, when one was attached.
+    Detect(DetectRunOut, Option<FlightRecorder>),
+    /// Scenario-engine result plus the recorder, when one was attached.
+    Scenario(ScenarioResult, Option<FlightRecorder>),
+}
+
+impl ScenarioOutcome {
+    /// Unwrap a [`ScenarioOutcome::Contended`].
+    pub fn expect_contended(self) -> ContendedResult {
+        match self {
+            ScenarioOutcome::Contended(r) => r,
+            _ => panic!("run_scenario returned a non-contended outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::ContendedTraced`].
+    pub fn expect_contended_traced(self) -> (ContendedResult, FlightRecorder) {
+        match self {
+            ScenarioOutcome::ContendedTraced(r, rec) => (r, rec),
+            _ => panic!("run_scenario returned a non-traced-contended outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::Fleet`].
+    pub fn expect_fleet(self) -> FleetResult {
+        match self {
+            ScenarioOutcome::Fleet(r) => r,
+            _ => panic!("run_scenario returned a non-fleet outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::Outage`].
+    pub fn expect_outage(self) -> OutageResult {
+        match self {
+            ScenarioOutcome::Outage(r) => r,
+            _ => panic!("run_scenario returned a non-outage outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::OutageTraced`].
+    pub fn expect_outage_traced(self) -> (OutageResult, FlightRecorder) {
+        match self {
+            ScenarioOutcome::OutageTraced(r, rec) => (r, rec),
+            _ => panic!("run_scenario returned a non-traced-outage outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::Detect`].
+    pub fn expect_detect(self) -> (DetectRunOut, Option<FlightRecorder>) {
+        match self {
+            ScenarioOutcome::Detect(out, rec) => (out, rec),
+            _ => panic!("run_scenario returned a non-detect outcome"),
+        }
+    }
+
+    /// Unwrap a [`ScenarioOutcome::Scenario`].
+    pub fn expect_scenario(self) -> (ScenarioResult, Option<FlightRecorder>) {
+        match self {
+            ScenarioOutcome::Scenario(r, rec) => (r, rec),
+            _ => panic!("run_scenario returned a non-scenario outcome"),
+        }
+    }
+}
+
+/// The unified harness entry point: dispatch one [`RunSpec`] over one
+/// workload source to the core implementation it names. Every public
+/// `run_*` wrapper in [`super::harness`] routes through here and is
+/// bit-identical to the pre-collapse signature (the differential tests
+/// below prove it per wrapper). Invalid combinations — outage machinery
+/// on the pair, a recorder on a closed loop, a scenario overlay
+/// anywhere but an open-loop fleet pool — fail closed with a config
+/// error.
+pub fn run_scenario<'a, I>(
+    source: ScenarioSource<'a, I>,
+    ch: &Characterization,
+    spec: RunSpec<'_>,
+) -> Result<ScenarioOutcome>
+where
+    I: Iterator<Item = Result<RequestTruth>>,
+{
+    let RunSpec { scope, mode, outage, scenario, rec, det } = spec;
+    if let Some(sc) = scenario {
+        let ScenarioScope::Fleet { topo, opts } = scope else {
+            return Err(Error::Config("a scenario spec needs a fleet scope".into()));
+        };
+        if !matches!(mode, ScenarioMode::Open) {
+            return Err(Error::Config("scenario replay is open-loop".into()));
+        }
+        if !matches!(outage, ScenarioOutage::Off) {
+            return Err(Error::Config(
+                "scenario replay carries its own fault timeline; outage \
+                 machinery does not compose"
+                    .into(),
+            ));
+        }
+        if det.is_some() {
+            return Err(Error::Config(
+                "scenario replay does not take a detector".into(),
+            ));
+        }
+        let ScenarioSource::Pool(requests) = source else {
+            return Err(Error::Config(
+                "scenario replay needs a materialised pool".into(),
+            ));
+        };
+        let (result, rec) = run_scenario_engine(requests, ch, topo, opts, sc, rec)?;
+        return Ok(ScenarioOutcome::Scenario(result, rec));
+    }
+    match scope {
+        ScenarioScope::Pair { policy, opts } => {
+            if !matches!(outage, ScenarioOutage::Off) {
+                return Err(Error::Config(
+                    "outage injection needs a fleet scope".into(),
+                ));
+            }
+            if det.is_some() {
+                return Err(Error::Config(
+                    "a detector needs the detect outage mode".into(),
+                ));
+            }
+            match (mode, source) {
+                (ScenarioMode::Open, ScenarioSource::Pool(requests)) => {
+                    let traced = rec.is_some();
+                    let (r, rec) = run_contended_impl(requests, ch, policy, opts, rec)?;
+                    Ok(if traced {
+                        ScenarioOutcome::ContendedTraced(
+                            r,
+                            rec.expect("recorder was attached"),
+                        )
+                    } else {
+                        ScenarioOutcome::Contended(r)
+                    })
+                }
+                (ScenarioMode::Open, ScenarioSource::Stream(arrivals)) => {
+                    let traced = rec.is_some();
+                    let (r, rec) =
+                        run_contended_streamed_impl(arrivals, ch, policy, opts, rec)?;
+                    Ok(if traced {
+                        ScenarioOutcome::ContendedTraced(
+                            r,
+                            rec.expect("recorder was attached"),
+                        )
+                    } else {
+                        ScenarioOutcome::Contended(r)
+                    })
+                }
+                (ScenarioMode::Closed { clients, think_s }, ScenarioSource::Pool(pool)) => {
+                    if rec.is_some() {
+                        return Err(Error::Config(
+                            "closed-loop runs do not take a flight recorder".into(),
+                        ));
+                    }
+                    Ok(ScenarioOutcome::Contended(run_closed_loop_core(
+                        pool, ch, policy, opts, clients, think_s,
+                    )?))
+                }
+                (ScenarioMode::Closed { clients, think_s }, ScenarioSource::Stream(bodies)) => {
+                    if rec.is_some() {
+                        return Err(Error::Config(
+                            "closed-loop runs do not take a flight recorder".into(),
+                        ));
+                    }
+                    Ok(ScenarioOutcome::Contended(run_closed_loop_streamed_core(
+                        bodies, ch, policy, opts, clients, think_s,
+                    )?))
+                }
+            }
+        }
+        ScenarioScope::Fleet { topo, opts } => match outage {
+            ScenarioOutage::Off => {
+                if det.is_some() {
+                    return Err(Error::Config(
+                        "a detector needs the detect outage mode".into(),
+                    ));
+                }
+                if rec.is_some() {
+                    return Err(Error::Config(
+                        "plain fleet runs do not take a flight recorder (use the \
+                         outage or scenario entry points)"
+                            .into(),
+                    ));
+                }
+                match (mode, source) {
+                    (ScenarioMode::Open, ScenarioSource::Pool(requests)) => Ok(
+                        ScenarioOutcome::Fleet(run_fleet_core(requests, ch, topo, opts)?),
+                    ),
+                    (ScenarioMode::Open, ScenarioSource::Stream(arrivals)) => {
+                        Ok(ScenarioOutcome::Fleet(run_fleet_streamed_core(
+                            arrivals, ch, topo, opts,
+                        )?))
+                    }
+                    (
+                        ScenarioMode::Closed { clients, think_s },
+                        ScenarioSource::Pool(pool),
+                    ) => Ok(ScenarioOutcome::Fleet(run_fleet_closed_core(
+                        pool, ch, topo, opts, clients, think_s,
+                    )?)),
+                    (
+                        ScenarioMode::Closed { clients, think_s },
+                        ScenarioSource::Stream(bodies),
+                    ) => Ok(ScenarioOutcome::Fleet(run_fleet_closed_streamed_core(
+                        bodies, ch, topo, opts, clients, think_s,
+                    )?)),
+                }
+            }
+            ScenarioOutage::Failover { fault, retry, failover } => {
+                if det.is_some() {
+                    return Err(Error::Config(
+                        "a detector needs the detect outage mode".into(),
+                    ));
+                }
+                match (mode, source) {
+                    (ScenarioMode::Open, ScenarioSource::Pool(requests)) => {
+                        let traced = rec.is_some();
+                        let (r, rec, _det) = run_fleet_outage_impl(
+                            requests, ch, topo, opts, fault, retry, failover, rec, None,
+                            None,
+                        )?;
+                        Ok(if traced {
+                            ScenarioOutcome::OutageTraced(
+                                r,
+                                rec.expect("recorder round-trips through the dispatcher"),
+                            )
+                        } else {
+                            ScenarioOutcome::Outage(r)
+                        })
+                    }
+                    _ => Err(Error::Config(
+                        "outage replay is open-loop over a materialised pool".into(),
+                    )),
+                }
+            }
+            ScenarioOutage::Detect { fault, retry } => {
+                let Some(det) = det else {
+                    return Err(Error::Config(
+                        "the detect outage mode needs a detector".into(),
+                    ));
+                };
+                match (mode, source) {
+                    (ScenarioMode::Open, ScenarioSource::Pool(requests)) => {
+                        let (out, rec) = run_fleet_outage_detect_core(
+                            requests, ch, topo, opts, fault, retry, det, rec,
+                        )?;
+                        Ok(ScenarioOutcome::Detect(out, rec))
+                    }
+                    _ => Err(Error::Config(
+                        "detection replay is open-loop over a materialised pool".into(),
+                    )),
+                }
+            }
+        },
+    }
+}
+
+// ---------------------------------------------------------------- engine
+
+/// True execution seconds of one request copy on scenario device
+/// `lane` for a batch starting at `start_s`: the device's tier time ×
+/// its slowdown × every applicable drift factor × every slow-fault
+/// factor — [`super::harness`]'s fleet charging generalised to
+/// concurrent drifts and a fault timeline.
+fn scenario_true_service_s(
+    truth: &RequestTruth,
+    tier: &[DeviceKind],
+    slowdown: &[f64],
+    lane: usize,
+    start_s: f64,
+    drifts: &[DriftSpec],
+    faults: &[FaultSpec],
+) -> f64 {
+    let base = match tier[lane] {
+        DeviceKind::Edge => truth.t_edge,
+        DeviceKind::Cloud => truth.t_cloud,
+    };
+    let mut t = base * slowdown[lane];
+    for d in drifts {
+        if d.applies_to(tier[lane], lane) {
+            t *= d.factor_at(start_s);
+        }
+    }
+    for f in faults {
+        t *= f.exec_factor_at(lane, start_s);
+    }
+    t
+}
+
+/// The scenario ground-truth executor: fleet batching semantics
+/// (critical path + residual serial cost) over the scenario charging.
+struct ScenarioExecutor<'a> {
+    requests: &'a [RequestTruth],
+    tier: &'a [DeviceKind],
+    slowdown: &'a [f64],
+    residual: f64,
+    drifts: &'a [DriftSpec],
+    faults: &'a [FaultSpec],
+}
+
+impl LaneExecutor for ScenarioExecutor<'_> {
+    fn execute_lane(
+        &mut self,
+        lane: usize,
+        _device: DeviceKind,
+        batch: &[QueuedRequest],
+        start_s: f64,
+    ) -> f64 {
+        let mut max = 0.0f64;
+        let mut sum = 0.0f64;
+        for rq in batch {
+            let truth = &self.requests[rq.payload];
+            let t = scenario_true_service_s(
+                truth,
+                self.tier,
+                self.slowdown,
+                lane,
+                start_s,
+                self.drifts,
+                self.faults,
+            );
+            max = max.max(t);
+            sum += t;
+        }
+        max + (sum - max) * self.residual
+    }
+}
+
+/// Per-class outcome of one scenario run: the SLO ledger.
+#[derive(Debug, Clone)]
+pub struct ClassOutcome {
+    /// Class label.
+    pub name: String,
+    /// The class's latency SLO (seconds).
+    pub deadline_s: f64,
+    /// Requests assigned to the class.
+    pub offered: usize,
+    /// Requests shed at admission.
+    pub shed: usize,
+    /// Requests that got a result.
+    pub completed: usize,
+    /// Completions within the SLO.
+    pub within_deadline: usize,
+    /// Requests duplicated on two lanes.
+    pub hedged: usize,
+    /// Mean end-to-end latency of completions (seconds).
+    pub mean_latency_s: f64,
+    /// Median latency (seconds).
+    pub p50_s: f64,
+    /// 95th-percentile latency (seconds).
+    pub p95_s: f64,
+    /// 99th-percentile latency (seconds).
+    pub p99_s: f64,
+    /// Latency phase decomposition of the class's completions.
+    pub phases: Phases,
+}
+
+impl ClassOutcome {
+    /// SLO attainment on the **offered** basis: shed requests count as
+    /// misses, so shedding a class cannot inflate its attainment.
+    pub fn attainment(&self) -> f64 {
+        if self.offered == 0 {
+            0.0
+        } else {
+            self.within_deadline as f64 / self.offered as f64
+        }
+    }
+
+    /// Serialise for the scenario report.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("name", Json::Str(self.name.clone()))
+            .set("deadline_s", Json::Num(self.deadline_s))
+            .set("offered", Json::Num(self.offered as f64))
+            .set("shed", Json::Num(self.shed as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("within_deadline", Json::Num(self.within_deadline as f64))
+            .set("attainment", Json::Num(self.attainment()))
+            .set("hedged", Json::Num(self.hedged as f64))
+            .set("mean_latency_s", Json::Num(self.mean_latency_s))
+            .set("p50_s", Json::Num(self.p50_s))
+            .set("p95_s", Json::Num(self.p95_s))
+            .set("p99_s", Json::Num(self.p99_s))
+            .set("phases", self.phases.to_json());
+        o
+    }
+}
+
+/// Aggregated result of one scenario replay: the classic fleet
+/// aggregates plus the per-class SLO ledger.
+#[derive(Debug, Clone)]
+pub struct ScenarioResult {
+    /// Scenario label (spec name).
+    pub scenario: String,
+    /// Scheduling discipline label (`fifo` | `edf`).
+    pub scheduling: String,
+    /// Logical requests offered.
+    pub offered: usize,
+    /// Logical requests that got a result.
+    pub completed: usize,
+    /// Requests shed at admission.
+    pub rejected: usize,
+    /// Results served by the edge tier.
+    pub edge_count: usize,
+    /// Results served by the cloud tier.
+    pub cloud_count: usize,
+    /// Clock time from first arrival to last response (seconds).
+    pub makespan_s: f64,
+    /// Completed requests per second of makespan (goodput).
+    pub throughput_rps: f64,
+    /// Mean end-to-end latency of completed requests (seconds).
+    pub mean_latency_s: f64,
+    /// Median latency (seconds).
+    pub p50_s: f64,
+    /// 95th-percentile latency (seconds).
+    pub p95_s: f64,
+    /// 99th-percentile latency (seconds).
+    pub p99_s: f64,
+    /// Mean micro-batch size actually dispatched.
+    pub mean_batch: f64,
+    /// Requests duplicated on two lanes (both copies admitted).
+    pub hedged: usize,
+    /// Hedged requests won by an edge-tier copy.
+    pub hedge_wins_edge: usize,
+    /// Hedged requests won by a cloud-tier copy.
+    pub hedge_wins_cloud: usize,
+    /// Losing twins cancelled while still queued.
+    pub hedge_cancelled: usize,
+    /// Losing twins that ran to completion (wasted work).
+    pub hedge_wasted: usize,
+    /// Serial work content of result-producing executions (seconds).
+    pub useful_work_s: f64,
+    /// Serial work content burnt by hedge losers that ran anyway.
+    pub wasted_work_s: f64,
+    /// Final hedge error bar of the waste-budget controller (seconds);
+    /// NaN when the run used a fixed margin or never hedged.
+    pub hedge_final_margin_s: f64,
+    /// Results served per device, indexed by device id.
+    pub device_results: Vec<usize>,
+    /// Per-device queue-depth high-water marks, indexed by device id.
+    pub peak_depths: Vec<usize>,
+    /// Per-class SLO ledger, in spec class order.
+    pub classes: Vec<ClassOutcome>,
+}
+
+impl ScenarioResult {
+    /// Serialise for the scenario report (superset of the fleet row
+    /// schema, plus the per-class ledger).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::object();
+        o.set("scenario", Json::Str(self.scenario.clone()))
+            .set("scheduling", Json::Str(self.scheduling.clone()))
+            .set("offered", Json::Num(self.offered as f64))
+            .set("completed", Json::Num(self.completed as f64))
+            .set("rejected", Json::Num(self.rejected as f64))
+            .set("edge_count", Json::Num(self.edge_count as f64))
+            .set("cloud_count", Json::Num(self.cloud_count as f64))
+            .set("makespan_s", Json::Num(self.makespan_s))
+            .set("throughput_rps", Json::Num(self.throughput_rps))
+            .set("mean_latency_s", Json::Num(self.mean_latency_s))
+            .set("p50_s", Json::Num(self.p50_s))
+            .set("p95_s", Json::Num(self.p95_s))
+            .set("p99_s", Json::Num(self.p99_s))
+            .set("mean_batch", Json::Num(self.mean_batch))
+            .set("hedged", Json::Num(self.hedged as f64))
+            .set("hedge_wins_edge", Json::Num(self.hedge_wins_edge as f64))
+            .set("hedge_wins_cloud", Json::Num(self.hedge_wins_cloud as f64))
+            .set("hedge_cancelled", Json::Num(self.hedge_cancelled as f64))
+            .set("hedge_wasted", Json::Num(self.hedge_wasted as f64))
+            .set("useful_work_s", Json::Num(self.useful_work_s))
+            .set("wasted_work_s", Json::Num(self.wasted_work_s))
+            .set(
+                "device_results",
+                Json::Array(
+                    self.device_results.iter().map(|&c| Json::Num(c as f64)).collect(),
+                ),
+            )
+            .set(
+                "peak_depths",
+                Json::Array(self.peak_depths.iter().map(|&d| Json::Num(d as f64)).collect()),
+            );
+        if self.hedge_final_margin_s.is_finite() {
+            o.set("hedge_final_margin_s", Json::Num(self.hedge_final_margin_s));
+        }
+        o.set(
+            "classes",
+            Json::Array(self.classes.iter().map(|c| c.to_json()).collect()),
+        );
+        o
+    }
+}
+
+/// Scenario-side accounting: the fleet ledger split per class.
+struct ScenarioAcct {
+    hist: Histogram,
+    stats: OnlineStats,
+    edge_count: usize,
+    cloud_count: usize,
+    completed: usize,
+    last_done_s: f64,
+    useful_work_s: f64,
+    wasted_work_s: f64,
+    device_results: Vec<usize>,
+    class_hist: Vec<Histogram>,
+    class_stats: Vec<OnlineStats>,
+    class_completed: Vec<usize>,
+    class_within: Vec<usize>,
+    phases: ClassPhases,
+}
+
+impl ScenarioAcct {
+    fn new(devices: usize, class_names: &[String]) -> ScenarioAcct {
+        let k = class_names.len();
+        ScenarioAcct {
+            hist: Histogram::latency(),
+            stats: OnlineStats::new(),
+            edge_count: 0,
+            cloud_count: 0,
+            completed: 0,
+            last_done_s: 0.0,
+            useful_work_s: 0.0,
+            wasted_work_s: 0.0,
+            device_results: vec![0; devices],
+            class_hist: (0..k).map(|_| Histogram::latency()).collect(),
+            class_stats: (0..k).map(|_| OnlineStats::new()).collect(),
+            class_completed: vec![0; k],
+            class_within: vec![0; k],
+            phases: ClassPhases::new(class_names),
+        }
+    }
+
+    /// Account a drained batch of completions — the scenario analogue
+    /// of the harness accounting (hedge-loss waste, budget-controller
+    /// feedback, margin events, phase decomposition), split per class.
+    #[allow(clippy::too_many_arguments)]
+    fn process(
+        &mut self,
+        comps: &[Completion],
+        requests: &[RequestTruth],
+        class_of: &[usize],
+        spec: &ScenarioSpec,
+        tier: &[DeviceKind],
+        slowdown: &[f64],
+        link_scale: &[f64],
+        ctl: &mut Option<HedgeBudget>,
+        mut rec: Option<&mut FlightRecorder>,
+    ) {
+        for c in comps {
+            let truth = &requests[c.request.payload];
+            let t_true = scenario_true_service_s(
+                truth,
+                tier,
+                slowdown,
+                c.lane,
+                c.start_s,
+                &spec.drifts,
+                &spec.faults,
+            );
+            let mut tx_s = match tier[c.lane] {
+                DeviceKind::Edge => 0.0,
+                DeviceKind::Cloud => truth.t_tx * link_scale[c.lane],
+            };
+            if tier[c.lane] == DeviceKind::Cloud {
+                // A response transfers at completion time: it pays the
+                // link state the fault timeline says is live *then*.
+                for f in &spec.faults {
+                    tx_s *= f.link_factor_at(c.lane, c.done_s);
+                }
+            }
+            if let Some(rec) = rec.as_deref_mut() {
+                for d in &spec.drifts {
+                    if d.applies_to(tier[c.lane], c.lane) {
+                        let factor = d.factor_at(c.start_s);
+                        if factor != 1.0 {
+                            rec.record(
+                                c.done_s,
+                                ObsEvent::DriftTick { lane: c.lane as u32, factor },
+                            );
+                        }
+                    }
+                }
+            }
+            if c.kind == CompletionKind::HedgeLoss {
+                self.wasted_work_s += t_true;
+                if let Some(ctl) = ctl.as_mut() {
+                    ctl.observe(t_true, true);
+                    if let Some(rec) = rec.as_deref_mut() {
+                        rec.record(
+                            c.done_s,
+                            ObsEvent::MarginAdjust {
+                                margin_s: ctl.margin_s(),
+                                useful_s: ctl.useful_s(),
+                                wasted_s: ctl.wasted_s(),
+                            },
+                        );
+                    }
+                }
+                continue;
+            }
+            self.useful_work_s += t_true;
+            if let Some(ctl) = ctl.as_mut() {
+                ctl.observe(t_true, false);
+                if let Some(rec) = rec.as_deref_mut() {
+                    rec.record(
+                        c.done_s,
+                        ObsEvent::MarginAdjust {
+                            margin_s: ctl.margin_s(),
+                            useful_s: ctl.useful_s(),
+                            wasted_s: ctl.wasted_s(),
+                        },
+                    );
+                }
+            }
+            let k = class_of[c.request.payload];
+            // The four phases partition the latency below exactly:
+            // (start - arrival) + ((done - start) - t_true) + t_true + tx.
+            self.phases.record(
+                k,
+                c.start_s - c.request.arrival_s,
+                (c.done_s - c.start_s) - t_true,
+                t_true,
+                tx_s,
+            );
+            let latency = (c.done_s - c.request.arrival_s) + tx_s;
+            self.hist.record(latency);
+            self.stats.push(latency);
+            self.class_hist[k].record(latency);
+            self.class_stats[k].push(latency);
+            self.class_completed[k] += 1;
+            if latency <= spec.classes[k].deadline_s {
+                self.class_within[k] += 1;
+            }
+            match tier[c.lane] {
+                DeviceKind::Edge => self.edge_count += 1,
+                DeviceKind::Cloud => self.cloud_count += 1,
+            }
+            self.completed += 1;
+            self.device_results[c.lane] += 1;
+            self.last_done_s = self.last_done_s.max(c.done_s + tx_s);
+        }
+    }
+}
+
+/// Replay `requests` (sorted by arrival) over `topo` under the
+/// scenario spec: class tagging, FIFO or EDF-within-quota scheduling,
+/// class-aware hedging, multi-drift/multi-fault ground truth. The
+/// request stream itself is generated by
+/// [`crate::experiments::scenario`] from the spec's [`LoadShape`]; the
+/// engine only replays it.
+///
+/// Hedged copies take an express lane: they race the best edge against
+/// the best cloud placement directly in the lane queues, bypassing the
+/// EDF front-end in both disciplines (a hedge is already a latency
+/// splurge — making it wait in the fair queue would defeat it).
+///
+/// Per-class conservation is asserted: every class's
+/// `offered == shed + completed` (the v1 fault vocabulary — slow and
+/// link — cannot strand admitted requests).
+pub fn run_scenario_engine(
+    requests: &[RequestTruth],
+    ch: &Characterization,
+    topo: &Topology,
+    opts: &FleetOpts,
+    spec: &ScenarioSpec,
+    rec: Option<FlightRecorder>,
+) -> Result<(ScenarioResult, Option<FlightRecorder>)> {
+    if !matches!(opts.strategy, FleetStrategy::Select) {
+        return Err(Error::Config(
+            "scenario replay supports the select strategy only (hedging via \
+             the spec's hedge block)"
+                .into(),
+        ));
+    }
+    if opts.adaptive.is_some() {
+        return Err(Error::Config(
+            "scenario replay does not compose with adaptive opts".into(),
+        ));
+    }
+    if opts.drift.is_some() {
+        return Err(Error::Config(
+            "scenario replay takes drift from the spec's drifts list".into(),
+        ));
+    }
+    if opts.telemetry.is_some() {
+        return Err(Error::Config(
+            "scenario replay does not compose with telemetry opts".into(),
+        ));
+    }
+    if opts.max_queue_depth == 0 {
+        return Err(Error::Config("max_queue_depth must be >= 1".into()));
+    }
+    if !(opts.batch_residual.is_finite()
+        && (0.0..=1.0).contains(&opts.batch_residual))
+    {
+        return Err(Error::Config(format!(
+            "batch_residual {} must be in [0, 1]",
+            opts.batch_residual
+        )));
+    }
+    spec.validate_for(topo)?;
+
+    let mut sel = FleetSelector::new(topo, ch.texe_edge, ch.texe_cloud, ch.n2m)?;
+    let n_dev = topo.len();
+    let tier: Vec<DeviceKind> = topo.devices.iter().map(|d| d.tier).collect();
+    let slowdown: Vec<f64> = topo.devices.iter().map(|d| d.slowdown()).collect();
+    let link_scale: Vec<f64> = topo.devices.iter().map(|d| d.link_scale).collect();
+    let mut disp = Dispatcher::with_lanes(&topo.lane_specs(opts.max_queue_depth), opts.batch);
+    if spec.scheduling == Scheduling::Edf {
+        let tenants: Vec<TenantSpec> = spec
+            .classes
+            .iter()
+            .map(|c| TenantSpec { weight: c.weight, quota: c.quota })
+            .collect();
+        disp.enable_fair_tenants_spec(&tenants, true);
+    }
+    if spec.batch_aware_wait {
+        disp.enable_batch_aware_wait();
+    }
+    let mut ctl = match &spec.hedge {
+        Some(h) if h.waste_budget > 0.0 => Some(HedgeBudget::new(h.waste_budget, h.margin_s)?),
+        _ => None,
+    };
+    if let Some(mut rec) = rec {
+        rec.set_meta(TraceMeta {
+            tiers: tier.clone(),
+            waste_budget: ctl.as_ref().map(|c| c.budget_frac()),
+            init_margin_s: ctl
+                .as_ref()
+                .and_then(|_| spec.hedge.as_ref().map(|h| h.margin_s)),
+        });
+        disp.attach_recorder(rec);
+    }
+    let mut exec = ScenarioExecutor {
+        requests,
+        tier: &tier,
+        slowdown: &slowdown,
+        residual: opts.batch_residual,
+        drifts: &spec.drifts,
+        faults: &spec.faults,
+    };
+    let class_names: Vec<String> = spec.classes.iter().map(|c| c.name.clone()).collect();
+    let mut acct = ScenarioAcct::new(n_dev, &class_names);
+    let mut assigner = ClassAssigner::new(&spec.classes);
+    let mut class_of = vec![0usize; requests.len()];
+    let mut class_offered = vec![0usize; spec.classes.len()];
+    let mut class_shed = vec![0usize; spec.classes.len()];
+    let mut class_hedged = vec![0usize; spec.classes.len()];
+    let mut waits = vec![0.0f64; n_dev];
+    let mut rejected = 0usize;
+    let mut comps: Vec<Completion> = Vec::new();
+
+    for (i, rq) in requests.iter().enumerate() {
+        let now = rq.arrival_s;
+        comps.clear();
+        disp.run_until(now, &mut exec, &mut |c| comps.push(c));
+        acct.process(
+            &comps,
+            requests,
+            &class_of,
+            spec,
+            &tier,
+            &slowdown,
+            &link_scale,
+            &mut ctl,
+            disp.recorder_mut(),
+        );
+        let class = assigner.next();
+        class_of[i] = class;
+        class_offered[class] += 1;
+        // Gateway heartbeat keeps the shared T_tx fresh.
+        if sel.ttx_stale(now, TTX_REFRESH_S) {
+            sel.observe_ttx(now, rq.rtt);
+        }
+        for (d, w) in waits.iter_mut().enumerate() {
+            *w = disp.expected_wait_lane(d, now);
+        }
+        let trace = sel.select(rq.n, &waits);
+        disp.record(
+            now,
+            ObsEvent::Placement {
+                id: i as u64,
+                edge_lane: trace.best_edge.device as u32,
+                edge_score_s: trace.best_edge.score_s,
+                cloud_lane: trace.best_cloud.device as u32,
+                cloud_score_s: trace.best_cloud.score_s,
+                chosen: trace.device as u32,
+                margin_s: trace.best_edge.score_s - trace.best_cloud.score_s,
+            },
+        );
+        disp.record(now, ObsEvent::ClassTag { id: i as u64, class: class as u32 });
+        let mut queued = QueuedRequest {
+            id: i as u64,
+            payload: i,
+            n: rq.n,
+            m_est: trace.m_est,
+            est_service_s: 0.0,
+            arrival_s: now,
+            bucket: 0,
+            hedge: None,
+        };
+        let hedge = match &spec.hedge {
+            Some(h) => {
+                let bar = match &ctl {
+                    Some(c) => c.margin_s(),
+                    None => h.margin_s,
+                };
+                let bar = if h.class_aware {
+                    bar * spec.classes[class].hedge_scale
+                } else {
+                    bar
+                };
+                let margin = trace.margin_s();
+                bar > 0.0 && margin.is_finite() && margin.abs() <= bar
+            }
+            None => false,
+        };
+        let copies = if hedge {
+            let outcome = disp.submit_hedged_lanes(
+                queued,
+                trace.best_edge.device,
+                trace.best_edge.est_service_s,
+                trace.best_cloud.device,
+                trace.best_cloud.est_service_s,
+            );
+            let cloud_in_flight = match outcome {
+                LaneHedgeOutcome::Hedged => true,
+                LaneHedgeOutcome::Single(l) => tier[l] == DeviceKind::Cloud,
+                LaneHedgeOutcome::Rejected => false,
+            };
+            if cloud_in_flight {
+                sel.observe_ttx(now, rq.rtt);
+            }
+            match outcome {
+                LaneHedgeOutcome::Hedged => {
+                    class_hedged[class] += 1;
+                    2
+                }
+                LaneHedgeOutcome::Single(_) => 1,
+                LaneHedgeOutcome::Rejected => 0,
+            }
+        } else {
+            queued.est_service_s = trace.est_service_s;
+            if tier[trace.device] == DeviceKind::Cloud {
+                sel.observe_ttx(now, rq.rtt);
+            }
+            let admitted = match spec.scheduling {
+                Scheduling::Edf => disp.submit_lane_tenant_deadline(
+                    trace.device,
+                    class,
+                    queued,
+                    now + spec.classes[class].deadline_s,
+                ),
+                Scheduling::Fifo => disp.submit_lane(trace.device, queued),
+            };
+            u8::from(admitted.is_admitted())
+        };
+        if copies == 0 {
+            rejected += 1;
+            class_shed[class] += 1;
+        }
+    }
+    // Drain: open-loop arrivals have ended; finish the backlog.
+    comps.clear();
+    disp.run_until(f64::INFINITY, &mut exec, &mut |c| comps.push(c));
+    acct.process(
+        &comps,
+        requests,
+        &class_of,
+        spec,
+        &tier,
+        &slowdown,
+        &link_scale,
+        &mut ctl,
+        disp.recorder_mut(),
+    );
+    // Per-class conservation: slow/link faults cannot strand admitted
+    // requests, so every class's ledger closes exactly.
+    for k in 0..spec.classes.len() {
+        assert_eq!(
+            class_offered[k],
+            class_shed[k] + acct.class_completed[k],
+            "class `{}` leaked requests",
+            spec.classes[k].name
+        );
+    }
+
+    let first_arrival_s = requests.first().map_or(0.0, |r| r.arrival_s);
+    let makespan_s = (acct.last_done_s - first_arrival_s).max(0.0);
+    let hs = disp.hedge_stats();
+    let classes = spec
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(k, c)| ClassOutcome {
+            name: c.name.clone(),
+            deadline_s: c.deadline_s,
+            offered: class_offered[k],
+            shed: class_shed[k],
+            completed: acct.class_completed[k],
+            within_deadline: acct.class_within[k],
+            hedged: class_hedged[k],
+            mean_latency_s: acct.class_stats[k].mean(),
+            p50_s: acct.class_hist[k].p50(),
+            p95_s: acct.class_hist[k].p95(),
+            p99_s: acct.class_hist[k].p99(),
+            phases: acct.phases.class(k).clone(),
+        })
+        .collect();
+    let result = ScenarioResult {
+        scenario: spec.name.clone(),
+        scheduling: spec.scheduling.tag().to_string(),
+        offered: requests.len(),
+        completed: acct.completed,
+        rejected,
+        edge_count: acct.edge_count,
+        cloud_count: acct.cloud_count,
+        makespan_s,
+        throughput_rps: if makespan_s > 0.0 {
+            acct.completed as f64 / makespan_s
+        } else {
+            0.0
+        },
+        mean_latency_s: acct.stats.mean(),
+        p50_s: acct.hist.p50(),
+        p95_s: acct.hist.p95(),
+        p99_s: acct.hist.p99(),
+        mean_batch: disp.batch_stats().mean_batch_size(),
+        hedged: hs.hedged as usize,
+        hedge_wins_edge: hs.wins_edge as usize,
+        hedge_wins_cloud: hs.wins_cloud as usize,
+        hedge_cancelled: hs.cancelled_unrun as usize,
+        hedge_wasted: hs.losers_run as usize,
+        useful_work_s: acct.useful_work_s,
+        wasted_work_s: acct.wasted_work_s,
+        hedge_final_margin_s: ctl.as_ref().map_or(f64::NAN, |c| c.margin_s()),
+        device_results: acct.device_results,
+        peak_depths: (0..n_dev).map(|d| disp.queue_stats_lane(d).peak_depth).collect(),
+        classes,
+    };
+    let mut rec = disp.take_recorder();
+    if let Some(rec) = rec.as_mut() {
+        rec.flush();
+    }
+    Ok((result, rec))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiments::load::{synth_stream, synth_workload};
+    use crate::obs::{DetectCfg, Detector};
+    use crate::sim::harness::{
+        run_closed_loop, run_closed_loop_streamed, run_contended, run_contended_streamed,
+        run_fleet, run_fleet_closed, run_fleet_closed_streamed, run_fleet_outage,
+        run_fleet_outage_detect, run_fleet_streamed,
+    };
+
+    fn spec_json() -> String {
+        r#"{
+            "name": "diurnal-flash",
+            "topology": "hetero",
+            "seed": 42,
+            "requests": 400,
+            "load": {
+                "base_rps": 60.0,
+                "period_s": 40.0,
+                "amplitude": 0.5,
+                "spikes": [ { "start_s": 2.0, "duration_s": 1.5, "factor": 3.0 } ]
+            },
+            "classes": [
+                { "name": "interactive", "deadline_s": 0.25, "share": 0.5,
+                  "weight": 4.0, "quota": 64, "hedge_scale": 2.0 },
+                { "name": "batch", "deadline_s": 1.0, "share": 0.3,
+                  "weight": 2.0, "quota": 64, "hedge_scale": 1.0 },
+                { "name": "background", "deadline_s": 4.0, "share": 0.2,
+                  "weight": 1.0, "quota": 64, "hedge_scale": 0.0 }
+            ],
+            "scheduling": "edf",
+            "hedge": { "margin_s": 0.02, "waste_budget": 0.1, "class_aware": true },
+            "drifts": [ { "device": "cloud", "lane": 5, "start_s": 1.0,
+                          "ramp_s": 2.0, "factor": 1.5 } ],
+            "faults": [ { "lane": 4, "mode": "slow", "start_s": 1.0,
+                          "recover_s": 3.0, "factor": 2.0 } ],
+            "batch_aware_wait": true
+        }"#
+        .to_string()
+    }
+
+    #[test]
+    fn spec_round_trips_through_json() {
+        let spec = ScenarioSpec::from_json(&Json::parse(&spec_json()).unwrap()).unwrap();
+        assert_eq!(spec.name, "diurnal-flash");
+        assert_eq!(spec.classes.len(), 3);
+        assert_eq!(spec.scheduling, Scheduling::Edf);
+        assert!(spec.batch_aware_wait);
+        let again = ScenarioSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(spec.to_json().to_string(), again.to_json().to_string());
+    }
+
+    #[test]
+    fn loader_fails_closed() {
+        let base = spec_json();
+        // Every mutation of a valid spec must be rejected, not ignored.
+        let bad = [
+            base.replacen("\"name\"", "\"nmae\"", 1),
+            base.replacen("\"base_rps\"", "\"bsae_rps\"", 1),
+            base.replacen("\"duration_s\"", "\"duration\"", 1),
+            base.replacen("\"deadline_s\"", "\"deadline\"", 1),
+            base.replacen("\"class_aware\"", "\"classaware\"", 1),
+            base.replacen("\"ramp_s\"", "\"ramp\"", 1),
+            base.replacen("\"recover_s\": 3.0", "\"recovers\": 3.0", 1),
+            base.replacen("\"mode\": \"slow\"", "\"mode\": \"crash\"", 1),
+            base.replacen("\"share\": 0.5", "\"share\": 0.6", 1),
+            base.replacen("\"amplitude\": 0.5", "\"amplitude\": 1.0", 1),
+            base.replacen("\"quota\": 64, \"hedge_scale\": 0.0", "\"quota\": 0, \"hedge_scale\": 0.0", 1),
+            base.replacen("\"edf\"", "\"lifo\"", 1),
+        ];
+        for (i, b) in bad.iter().enumerate() {
+            let j = Json::parse(b).unwrap();
+            assert!(ScenarioSpec::from_json(&j).is_err(), "case {i} accepted");
+        }
+        // Overlapping same-lane fault windows are rejected.
+        let overlap = base.replacen(
+            "\"faults\": [ { \"lane\": 4, \"mode\": \"slow\", \"start_s\": 1.0,\n                          \"recover_s\": 3.0, \"factor\": 2.0 } ]",
+            "\"faults\": [ { \"lane\": 4, \"mode\": \"slow\", \"start_s\": 1.0, \"recover_s\": 3.0, \"factor\": 2.0 }, { \"lane\": 4, \"mode\": \"slow\", \"start_s\": 2.5, \"recover_s\": 4.0, \"factor\": 3.0 } ]",
+            1,
+        );
+        assert_ne!(overlap, base, "replacen must have matched");
+        let j = Json::parse(&overlap).unwrap();
+        assert!(ScenarioSpec::from_json(&j).is_err(), "overlap accepted");
+    }
+
+    #[test]
+    fn class_assigner_tracks_shares_within_one() {
+        let spec = ScenarioSpec::from_json(&Json::parse(&spec_json()).unwrap()).unwrap();
+        let mut assigner = ClassAssigner::new(&spec.classes);
+        let mut counts = [0usize; 3];
+        for _ in 0..1000 {
+            counts[assigner.next()] += 1;
+        }
+        assert!((counts[0] as f64 - 500.0).abs() <= 1.0, "{counts:?}");
+        assert!((counts[1] as f64 - 300.0).abs() <= 1.0, "{counts:?}");
+        assert!((counts[2] as f64 - 200.0).abs() <= 1.0, "{counts:?}");
+        // Deterministic: a fresh assigner replays the same sequence.
+        let mut a = ClassAssigner::new(&spec.classes);
+        let mut b = ClassAssigner::new(&spec.classes);
+        for _ in 0..100 {
+            assert_eq!(a.next(), b.next());
+        }
+    }
+
+    #[test]
+    fn load_shape_rate_composes_exactly() {
+        let shape = LoadShape {
+            base_rps: 10.0,
+            period_s: 100.0,
+            amplitude: 0.5,
+            spikes: vec![Spike { start_s: 20.0, duration_s: 10.0, factor: 3.0 }],
+        };
+        // t = 25: sin(2π·25/100) = sin(π/2) = 1 → 10·1.5, spiked ×3.
+        let expected = 10.0 * (1.0 + 0.5 * (2.0 * std::f64::consts::PI * 25.0 / 100.0).sin());
+        assert_eq!(shape.rate(25.0).to_bits(), (expected * 3.0).to_bits());
+        // Outside the spike window the sinusoid alone applies.
+        let expected = 10.0 * (1.0 + 0.5 * (2.0 * std::f64::consts::PI * 35.0 / 100.0).sin());
+        assert_eq!(shape.rate(35.0).to_bits(), expected.to_bits());
+        // Flat shape: rate is exactly the base everywhere.
+        let flat = LoadShape { base_rps: 7.0, period_s: 60.0, amplitude: 0.0, spikes: vec![] };
+        assert_eq!(flat.rate(123.0).to_bits(), 7.0f64.to_bits());
+    }
+
+    // ------------------------------------------------ wrapper differentials
+    //
+    // Each public `run_*` signature is a thin wrapper over the facade;
+    // these prove wrapper ≡ core bit-for-bit on a real workload (the
+    // serialised result includes every float).
+
+    #[test]
+    fn contended_wrappers_are_bit_identical_to_cores() {
+        let (requests, ch) = synth_workload(7, 300, 80.0);
+        let opts = ContentionOpts::default();
+        let a = run_contended(&requests, &ch, PolicyKind::Cnmt, &opts).unwrap();
+        let (b, _) = run_contended_impl(&requests, &ch, PolicyKind::Cnmt, &opts, None).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let a = run_contended_streamed(
+            synth_stream(7, 300, 80.0).map(Ok),
+            &ch,
+            PolicyKind::Cnmt,
+            &opts,
+        )
+        .unwrap();
+        let (b, _) = run_contended_streamed_impl(
+            synth_stream(7, 300, 80.0).map(Ok),
+            &ch,
+            PolicyKind::Cnmt,
+            &opts,
+            None,
+        )
+        .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn closed_loop_wrappers_are_bit_identical_to_cores() {
+        let (pool, ch) = synth_workload(11, 250, 60.0);
+        let opts = ContentionOpts::default();
+        let a = run_closed_loop(&pool, &ch, PolicyKind::Cnmt, &opts, 8, 0.01).unwrap();
+        let b = run_closed_loop_core(&pool, &ch, PolicyKind::Cnmt, &opts, 8, 0.01).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let a = run_closed_loop_streamed(
+            synth_stream(11, 250, 60.0).map(Ok),
+            &ch,
+            PolicyKind::Cnmt,
+            &opts,
+            8,
+            0.01,
+        )
+        .unwrap();
+        let b = run_closed_loop_streamed_core(
+            synth_stream(11, 250, 60.0).map(Ok),
+            &ch,
+            PolicyKind::Cnmt,
+            &opts,
+            8,
+            0.01,
+        )
+        .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn fleet_wrappers_are_bit_identical_to_cores() {
+        let (requests, ch) = synth_workload(13, 300, 120.0);
+        let topo = Topology::hetero();
+        let opts = FleetOpts::default();
+        let a = run_fleet(&requests, &ch, &topo, &opts).unwrap();
+        let b = run_fleet_core(&requests, &ch, &topo, &opts).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let a = run_fleet_streamed(synth_stream(13, 300, 120.0).map(Ok), &ch, &topo, &opts)
+            .unwrap();
+        let b = run_fleet_streamed_core(synth_stream(13, 300, 120.0).map(Ok), &ch, &topo, &opts)
+            .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let a = run_fleet_closed(&requests, &ch, &topo, &opts, 6, 0.02).unwrap();
+        let b = run_fleet_closed_core(&requests, &ch, &topo, &opts, 6, 0.02).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let a = run_fleet_closed_streamed(
+            synth_stream(13, 300, 120.0).map(Ok),
+            &ch,
+            &topo,
+            &opts,
+            6,
+            0.02,
+        )
+        .unwrap();
+        let b = run_fleet_closed_streamed_core(
+            synth_stream(13, 300, 120.0).map(Ok),
+            &ch,
+            &topo,
+            &opts,
+            6,
+            0.02,
+        )
+        .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    }
+
+    #[test]
+    fn outage_wrappers_are_bit_identical_to_cores() {
+        let (requests, ch) = synth_workload(17, 300, 120.0);
+        let topo = Topology::hetero();
+        let opts = FleetOpts::default();
+        let fault = FaultSpec {
+            lane: 0,
+            mode: FaultMode::Crash,
+            start_s: 0.5,
+            recover_s: 1.5,
+        };
+        let retry = RetryPolicy::default();
+        let a = run_fleet_outage(&requests, &ch, &topo, &opts, &fault, &retry, true).unwrap();
+        let (b, _, _) = run_fleet_outage_impl(
+            &requests, &ch, &topo, &opts, &fault, &retry, true, None, None, None,
+        )
+        .unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+        let tiers: Vec<DeviceKind> = topo.devices.iter().map(|d| d.tier).collect();
+        let (a, _) = run_fleet_outage_detect(
+            &requests,
+            &ch,
+            &topo,
+            &opts,
+            Some(&fault),
+            &retry,
+            Detector::new(&tiers, DetectCfg::default()),
+            None,
+        )
+        .unwrap();
+        let (b, _) = run_fleet_outage_detect_core(
+            &requests,
+            &ch,
+            &topo,
+            &opts,
+            Some(&fault),
+            &retry,
+            Detector::new(&tiers, DetectCfg::default()),
+            None,
+        )
+        .unwrap();
+        assert_eq!(a.result.to_json().to_string(), b.result.to_json().to_string());
+        assert_eq!(a.raised, b.raised);
+        assert_eq!(a.cleared, b.cleared);
+        assert_eq!(a.alerts.len(), b.alerts.len());
+        assert_eq!(a.blame.len(), b.blame.len());
+    }
+
+    // ------------------------------------------------------- engine tests
+
+    fn engine_spec(scheduling: Scheduling) -> ScenarioSpec {
+        let mut spec =
+            ScenarioSpec::from_json(&Json::parse(&spec_json()).unwrap()).unwrap();
+        spec.scheduling = scheduling;
+        spec
+    }
+
+    #[test]
+    fn scenario_engine_conserves_per_class() {
+        let (requests, ch) = synth_workload(42, 400, 150.0);
+        let topo = Topology::hetero();
+        let opts = FleetOpts::default();
+        let spec = engine_spec(Scheduling::Edf);
+        let outcome = run_scenario(
+            ScenarioSource::pool(&requests),
+            &ch,
+            RunSpec::scenario(&topo, &opts, &spec, None),
+        )
+        .unwrap();
+        let (r, rec) = outcome.expect_scenario();
+        assert!(rec.is_none());
+        assert_eq!(r.scheduling, "edf");
+        assert_eq!(r.offered, 400);
+        assert_eq!(r.completed + r.rejected, r.offered);
+        assert_eq!(r.device_results.iter().sum::<usize>(), r.completed);
+        assert_eq!(r.edge_count + r.cloud_count, r.completed);
+        let mut offered = 0;
+        for c in &r.classes {
+            assert_eq!(c.offered, c.shed + c.completed, "class {}", c.name);
+            assert!(c.within_deadline <= c.completed);
+            assert!((0.0..=1.0).contains(&c.attainment()));
+            assert_eq!(c.phases.count(), c.completed as u64);
+            offered += c.offered;
+        }
+        assert_eq!(offered, r.offered);
+        // Shares: 50/30/20 of 400, within one request each.
+        assert!((r.classes[0].offered as f64 - 200.0).abs() <= 1.0);
+        assert!((r.classes[1].offered as f64 - 120.0).abs() <= 1.0);
+        assert!((r.classes[2].offered as f64 - 80.0).abs() <= 1.0);
+        // The report schema carries the ledger.
+        let j = r.to_json();
+        assert!(j.get("classes").is_ok());
+        assert!(j.get("throughput_rps").is_ok());
+    }
+
+    #[test]
+    fn fifo_baseline_runs_the_same_workload_class_blind() {
+        let (requests, ch) = synth_workload(42, 400, 150.0);
+        let topo = Topology::hetero();
+        let opts = FleetOpts::default();
+        let fifo = engine_spec(Scheduling::Fifo);
+        let edf = engine_spec(Scheduling::Edf);
+        let (rf, _) = run_scenario(
+            ScenarioSource::pool(&requests),
+            &ch,
+            RunSpec::scenario(&topo, &opts, &fifo, None),
+        )
+        .unwrap()
+        .expect_scenario();
+        let (re, _) = run_scenario(
+            ScenarioSource::pool(&requests),
+            &ch,
+            RunSpec::scenario(&topo, &opts, &edf, None),
+        )
+        .unwrap()
+        .expect_scenario();
+        assert_eq!(rf.scheduling, "fifo");
+        assert_eq!(re.scheduling, "edf");
+        // Same workload, same class tagging: the offered ledgers match.
+        for (a, b) in rf.classes.iter().zip(&re.classes) {
+            assert_eq!(a.offered, b.offered);
+            assert_eq!(a.name, b.name);
+        }
+        // Both conserve.
+        assert_eq!(rf.completed + rf.rejected, rf.offered);
+        assert_eq!(re.completed + re.rejected, re.offered);
+    }
+
+    #[test]
+    fn scenario_engine_rejects_bad_composition() {
+        let (requests, ch) = synth_workload(3, 50, 40.0);
+        let topo = Topology::hetero();
+        let spec = engine_spec(Scheduling::Edf);
+        let hedged = FleetOpts {
+            strategy: FleetStrategy::Hedged { margin_s: 0.01 },
+            ..FleetOpts::default()
+        };
+        assert!(run_scenario_engine(&requests, &ch, &topo, &hedged, &spec, None).is_err());
+        let drifted = FleetOpts {
+            drift: Some(DriftSpec {
+                device: DeviceKind::Edge,
+                lane: None,
+                start_s: 0.0,
+                ramp_s: 0.0,
+                factor: 2.0,
+            }),
+            ..FleetOpts::default()
+        };
+        assert!(run_scenario_engine(&requests, &ch, &topo, &drifted, &spec, None).is_err());
+        // A fault lane outside the topology fails validate_for.
+        let mut bad = engine_spec(Scheduling::Edf);
+        bad.faults[0].lane = 99;
+        assert!(
+            run_scenario_engine(&requests, &ch, &topo, &FleetOpts::default(), &bad, None)
+                .is_err()
+        );
+    }
+
+    #[test]
+    fn facade_rejects_invalid_combinations() {
+        let (requests, ch) = synth_workload(3, 50, 40.0);
+        let copts = ContentionOpts::default();
+        let topo = Topology::hetero();
+        let fopts = FleetOpts::default();
+        let spec = engine_spec(Scheduling::Edf);
+        // Scenario overlay needs a fleet scope.
+        let rs = RunSpec {
+            scenario: Some(&spec),
+            ..RunSpec::contended(PolicyKind::Cnmt, &copts)
+        };
+        assert!(run_scenario(ScenarioSource::pool(&requests), &ch, rs).is_err());
+        // Scenario overlay is open-loop.
+        let rs = RunSpec {
+            scenario: Some(&spec),
+            ..RunSpec::fleet_closed(&topo, &fopts, 4, 0.0)
+        };
+        assert!(run_scenario(ScenarioSource::pool(&requests), &ch, rs).is_err());
+        // Detect mode without a detector fails closed.
+        let retry = RetryPolicy::default();
+        let rs = RunSpec {
+            det: None,
+            ..RunSpec::fleet(&topo, &fopts)
+        };
+        let rs = RunSpec {
+            outage: ScenarioOutage::Detect { fault: None, retry: &retry },
+            ..rs
+        };
+        assert!(run_scenario(ScenarioSource::pool(&requests), &ch, rs).is_err());
+    }
+
+    #[test]
+    fn traced_scenario_records_class_tags() {
+        let (requests, ch) = synth_workload(5, 120, 100.0);
+        let topo = Topology::hetero();
+        let opts = FleetOpts::default();
+        let spec = engine_spec(Scheduling::Edf);
+        let rec = FlightRecorder::new(4096);
+        let (r, rec) = run_scenario(
+            ScenarioSource::pool(&requests),
+            &ch,
+            RunSpec::scenario(&topo, &opts, &spec, Some(rec)),
+        )
+        .unwrap()
+        .expect_scenario();
+        let rec = rec.expect("recorder round-trips");
+        let tags = rec
+            .events()
+            .filter(|s| matches!(s.ev, ObsEvent::ClassTag { .. }))
+            .count();
+        assert!(tags > 0, "no class tags recorded");
+        assert_eq!(r.offered, 120);
+    }
+}
